@@ -1,0 +1,83 @@
+//! Calibration harness: simulator vs paper anchor rows.
+//! Run: cargo run --offline --example dbg_sim
+use plx::layout::{validate, Job, Kernel, Layout};
+use plx::model::arch::preset;
+use plx::sim::{evaluate, Outcome, A100};
+use plx::topo::Cluster;
+
+struct Anchor {
+    arch: &'static str,
+    gpus: usize,
+    gbs: usize,
+    mb: usize,
+    tp: usize,
+    pp: usize,
+    ckpt: bool,
+    kernel: Kernel,
+    sp: bool,
+    paper_mfu: f64, // percent
+}
+
+const A: &[Anchor] = &[
+    // Table 4: 13B/2k @ 64 GPUs
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 1, pp: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 70.57 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 2, tp: 2, pp: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 63.05 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 1, pp: 2, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 60.26 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 2, pp: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 59.82 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 1, pp: 2, ckpt: false, kernel: Kernel::Flash2, sp: false, paper_mfu: 55.53 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 2, pp: 2, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 53.69 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 4, tp: 1, pp: 1, ckpt: true, kernel: Kernel::Flash2, sp: false, paper_mfu: 51.04 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 2, pp: 2, ckpt: false, kernel: Kernel::Fused, sp: false, paper_mfu: 43.13 },
+    Anchor { arch: "llama13b", gpus: 64, gbs: 2048, mb: 1, tp: 2, pp: 2, ckpt: false, kernel: Kernel::Torch, sp: false, paper_mfu: 37.89 },
+    // Table 5: 13B/8k @ 128 GPUs
+    Anchor { arch: "llama13b-8k", gpus: 128, gbs: 512, mb: 1, tp: 2, pp: 2, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 59.41 },
+    Anchor { arch: "llama13b-8k", gpus: 128, gbs: 512, mb: 1, tp: 2, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 56.61 },
+    Anchor { arch: "llama13b-8k", gpus: 128, gbs: 512, mb: 1, tp: 4, pp: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 51.21 },
+    Anchor { arch: "llama13b-8k", gpus: 128, gbs: 512, mb: 1, tp: 2, pp: 4, ckpt: false, kernel: Kernel::Flash2, sp: false, paper_mfu: 49.88 },
+    // Table 6: 30B/2k @ 256 GPUs
+    Anchor { arch: "llama30b", gpus: 256, gbs: 2048, mb: 1, tp: 2, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 49.22 },
+    Anchor { arch: "llama30b", gpus: 256, gbs: 2048, mb: 1, tp: 1, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 46.76 },
+    Anchor { arch: "llama30b", gpus: 256, gbs: 2048, mb: 1, tp: 2, pp: 4, ckpt: false, kernel: Kernel::Flash2, sp: false, paper_mfu: 45.16 },
+    // Table 8: 65B/2k @ 128 GPUs
+    Anchor { arch: "llama65b", gpus: 128, gbs: 2048, mb: 1, tp: 2, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 55.26 },
+    Anchor { arch: "llama65b", gpus: 128, gbs: 2048, mb: 1, tp: 2, pp: 8, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 55.10 },
+    Anchor { arch: "llama65b", gpus: 128, gbs: 2048, mb: 2, tp: 4, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 52.88 },
+    Anchor { arch: "llama65b", gpus: 128, gbs: 2048, mb: 1, tp: 4, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 50.60 },
+    Anchor { arch: "llama65b", gpus: 128, gbs: 2048, mb: 2, tp: 8, pp: 2, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 43.28 },
+    // SP sweeps @ 64/32 GPUs (Tables 10-14)
+    Anchor { arch: "llama13b", gpus: 32, gbs: 2048, mb: 1, tp: 1, pp: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 69.66 },
+    Anchor { arch: "llama13b-8k", gpus: 64, gbs: 512, mb: 1, tp: 2, pp: 2, ckpt: false, kernel: Kernel::Flash2Rms, sp: true, paper_mfu: 62.78 },
+    Anchor { arch: "llama30b", gpus: 64, gbs: 2048, mb: 1, tp: 1, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: false, paper_mfu: 61.98 },
+    Anchor { arch: "llama30b-8k", gpus: 64, gbs: 512, mb: 1, tp: 4, pp: 2, ckpt: false, kernel: Kernel::Flash2Rms, sp: true, paper_mfu: 60.22 },
+    Anchor { arch: "llama65b", gpus: 64, gbs: 2048, mb: 1, tp: 2, pp: 4, ckpt: false, kernel: Kernel::Flash2Rms, sp: true, paper_mfu: 59.62 },
+    Anchor { arch: "llama65b", gpus: 64, gbs: 2048, mb: 1, tp: 2, pp: 8, ckpt: false, kernel: Kernel::Flash2Rms, sp: true, paper_mfu: 58.44 },
+    Anchor { arch: "llama65b", gpus: 64, gbs: 2048, mb: 1, tp: 8, pp: 8, ckpt: false, kernel: Kernel::Flash2Rms, sp: true, paper_mfu: 43.52 },
+];
+
+fn main() {
+    let mut sum_abs = 0.0;
+    let mut n = 0;
+    println!("{:<14} {:>4} (mb,tp,pp,ck,sp) {:<24} {:>7} {:>7} {:>6}", "model", "gpus", "kernel", "paper", "sim", "delta");
+    for a in A {
+        let job = Job::new(preset(a.arch).unwrap(), Cluster::dgx_a100(a.gpus / 8), a.gbs);
+        let l = Layout { tp: a.tp, pp: a.pp, mb: a.mb, ckpt: a.ckpt, kernel: a.kernel, sp: a.sp };
+        let line = format!(
+            "{:<14} {:>4} ({},{},{},{},{}) {:<24}",
+            a.arch, a.gpus, a.mb, a.tp, a.pp, a.ckpt as u8, a.sp as u8, a.kernel.label()
+        );
+        match validate(&job, &l) {
+            Ok(v) => match evaluate(&job, &v, &A100) {
+                Outcome::Ok { mfu, .. } => {
+                    let sim = 100.0 * mfu;
+                    let d = sim - a.paper_mfu;
+                    sum_abs += d.abs();
+                    n += 1;
+                    println!("{line} {:>7.2} {:>7.2} {:>+6.2}", a.paper_mfu, sim, d);
+                }
+                o => println!("{line} {:>7.2} {:>7}", a.paper_mfu, o.status_label()),
+            },
+            Err(e) => println!("{line} INVALID: {e}"),
+        }
+    }
+    println!("\nmean |delta| over {n} runnable anchors: {:.2} MFU points", sum_abs / n as f64);
+}

@@ -1,0 +1,61 @@
+//! Memory planner: for a model + cluster, print the per-GPU memory
+//! breakdown of every (tp, pp) option at mb=1 and show where the OOM
+//! frontier lies — the "can I fit this?" question every Table 1 row
+//! answers empirically, answered analytically.
+//!
+//! Run: `cargo run --release --example memory_planner [model] [nodes]`
+
+use plx::layout::{validate, Job, Kernel, Layout};
+use plx::model::arch::preset;
+use plx::sim::{evaluate, memory, Outcome, A100};
+use plx::topo::Cluster;
+use plx::util::table;
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "llama65b".into());
+    let nodes: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let arch = preset(&model).unwrap_or_else(|| {
+        eprintln!("unknown model '{model}'");
+        std::process::exit(1);
+    });
+    let job = Job::new(arch, Cluster::dgx_a100(nodes), Job::paper_gbs(&arch));
+    println!(
+        "memory frontier: {} on {} GPUs, FA2+RMS, mb=1, no ckpt\n",
+        arch.name, job.cluster.gpus
+    );
+
+    let mut rows = Vec::new();
+    for tp in [1usize, 2, 4, 8] {
+        for pp in [1usize, 2, 4, 8] {
+            let l = Layout { tp, pp, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false };
+            let Ok(v) = validate(&job, &l) else { continue };
+            let mem = memory::per_gpu_memory(&job, &v, &A100);
+            let verdict = match evaluate(&job, &v, &A100) {
+                Outcome::Ok { mfu, .. } => format!("fits, {:.2}% MFU", 100.0 * mfu),
+                Outcome::Oom { .. } => "OOM".into(),
+                Outcome::KernelUnavailable => "kernel unavail.".into(),
+            };
+            rows.push(vec![
+                format!("tp{tp}"),
+                format!("pp{pp}"),
+                format!("{:.1}", mem.weights / 1e9),
+                format!("{:.1}", mem.grads / 1e9),
+                format!("{:.1}", mem.optimizer / 1e9),
+                format!("{:.1}", mem.activations / 1e9),
+                format!("{:.1}", mem.total() / 1e9),
+                verdict,
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        table::render(
+            &["tp", "pp", "weights", "grads", "optim", "acts", "total GB", "verdict"],
+            &rows
+        )
+    );
+    println!("\n(budget: 80 GB/GPU; optimizer is ZeRO-1-sharded over dp)");
+}

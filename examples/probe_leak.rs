@@ -1,0 +1,41 @@
+use plx::runtime::{Engine, Manifest, StageRuntime, StageInput};
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for line in s.lines() {
+        if let Some(v) = line.strip_prefix("VmRSS:") {
+            return v.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap() / 1024.0;
+        }
+    }
+    0.0
+}
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "buffers".into());
+    let root = plx::artifacts_root();
+    let m = Manifest::load(&root.join("e2e100m/pp2_mb1")).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let stage = StageRuntime::load(&engine, &m, 1).unwrap();
+    let flat = plx::coordinator::init::init_flat_params(&m, 1);
+    let base = stage.base_offset();
+    let sf = &flat[base..base + stage.info.param_elems];
+    eprintln!("after compile: {:.0} MB", rss_mb());
+    match which.as_str() {
+        "buffers" => {
+            for i in 0..12 {
+                let b = stage.param_buffers(sf).unwrap();
+                std::hint::black_box(b.len());
+                eprintln!("iter {i}: {:.0} MB", rss_mb());
+            }
+        }
+        "bwd" => {
+            let params = stage.param_buffers(sf).unwrap();
+            let h = vec![0.01f32; stage.act_elems()];
+            let t = vec![1i32; stage.tok_elems()];
+            for i in 0..12 {
+                let out = stage.backward(&params, &StageInput::Hidden(&h), None, Some(&t)).unwrap();
+                std::hint::black_box(out.grads.len());
+                eprintln!("iter {i}: {:.0} MB", rss_mb());
+            }
+        }
+        _ => {}
+    }
+}

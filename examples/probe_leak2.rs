@@ -1,0 +1,23 @@
+use plx::coordinator::collective::Group;
+use plx::coordinator::zero::Zero1;
+use plx::runtime::{Engine, Manifest};
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines().find_map(|l| l.strip_prefix("VmRSS:").map(|v| v.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap() / 1024.0)).unwrap_or(0.0)
+}
+fn main() {
+    let root = plx::artifacts_root();
+    let m = Manifest::load(&root.join("e2e100m/pp2_mb1")).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let elems = m.stages[1].param_elems;
+    let params: Vec<f32> = vec![0.1; elems];
+    let grads: Vec<f32> = vec![0.01; elems];
+    let mut z = Zero1::new(&engine, &root.join("adamw_chunk.hlo.txt"), m.optimizer_chunk, &params, 0, 1).unwrap();
+    let g = Group::new(1);
+    let mut out = params.clone();
+    eprintln!("setup: {:.0} MB (shard elems {})", rss_mb(), elems);
+    for i in 0..10 {
+        z.step(&g, &grads, 0.5, 1e-3, &mut out).unwrap();
+        eprintln!("iter {i}: {:.0} MB", rss_mb());
+    }
+}

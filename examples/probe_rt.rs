@@ -1,0 +1,22 @@
+use plx::runtime::{Engine, Manifest, StageRuntime, StageInput};
+use std::time::Instant;
+fn main() {
+    let root = plx::artifacts_root();
+    let m = Manifest::load(&root.join("e2e100m/pp2_mb1")).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let t0 = Instant::now();
+    let stage = StageRuntime::load(&engine, &m, 1).unwrap();
+    eprintln!("compile stage1: {:?}", t0.elapsed());
+    let flat = plx::coordinator::init::init_flat_params(&m, 1);
+    let t0 = Instant::now();
+    let base = stage.base_offset();
+    let params = stage.param_buffers(&flat[base..base + stage.info.param_elems]).unwrap();
+    eprintln!("param buffers: {:?}", t0.elapsed());
+    let h = vec![0.01f32; stage.act_elems()];
+    let targets = vec![1i32; stage.tok_elems()];
+    for i in 0..3 {
+        let t0 = Instant::now();
+        let out = stage.backward(&params, &StageInput::Hidden(&h), None, Some(&targets)).unwrap();
+        eprintln!("bwd {i}: {:?} (loss {:?})", t0.elapsed(), out.loss);
+    }
+}

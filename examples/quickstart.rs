@@ -1,0 +1,74 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. ask the planner for the paper's recommended layout for a model;
+//! 2. simulate it on the A100 cluster model (step time, MFU, memory);
+//! 3. train a real (tiny) model for a few steps through the full
+//!    Rust + PJRT + AOT-artifact stack.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (step 3 requires `make artifacts`.)
+
+use anyhow::Result;
+use plx::coordinator::{train, TrainerConfig};
+use plx::layout::Job;
+use plx::model::arch::preset;
+use plx::planner::plan_by_rules;
+use plx::sim::{evaluate, Outcome, A100};
+use plx::topo::Cluster;
+
+fn main() -> Result<()> {
+    // --- 1. plan a layout the way the paper's §5 recommends. -----------
+    let arch = preset("llama13b").unwrap();
+    let job = Job::new(arch, Cluster::dgx_a100(8), Job::paper_gbs(&arch));
+    let plan = plan_by_rules(&job, &A100)?;
+    println!(
+        "planned layout for {} on {} GPUs: {} kernel={} sp={}",
+        arch.name,
+        job.cluster.gpus,
+        plan.v.layout.annotation(),
+        plan.v.layout.kernel.label(),
+        plan.v.layout.sp,
+    );
+
+    // --- 2. simulate it. ------------------------------------------------
+    match evaluate(&job, &plan.v, &A100) {
+        Outcome::Ok { step_time_s, mfu, mem, .. } => println!(
+            "simulated: {:.2}% MFU, {step_time_s:.2} s/step, {:.1} GB/GPU peak",
+            100.0 * mfu,
+            mem.total() / 1e9
+        ),
+        other => println!("simulated: {}", other.status_label()),
+    }
+
+    // --- 3. train a real model through the whole stack. -----------------
+    let artifacts = plx::artifacts_root();
+    if !artifacts.join("tiny/pp2_mb2/manifest.json").exists() {
+        println!("(skipping live training: run `make artifacts` first)");
+        return Ok(());
+    }
+    let cfg = TrainerConfig {
+        model: "tiny".into(),
+        pp: 2,
+        mb: 2,
+        dp: 1,
+        num_micro: 2,
+        steps: 10,
+        lr: 3e-3,
+        warmup_steps: 2,
+        seed: 7,
+        noise: 0.05,
+        log_every: 0,
+        artifacts,
+        save_checkpoint: None,
+        resume_from: None,
+        schedule: Default::default(),
+    };
+    let report = train(&cfg)?;
+    println!(
+        "live pipeline-parallel training (tiny, pp=2): loss {:.3} -> {:.3} over {} steps",
+        report.log.first_loss().unwrap(),
+        report.log.final_loss().unwrap(),
+        report.log.records.len()
+    );
+    Ok(())
+}

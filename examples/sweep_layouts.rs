@@ -1,0 +1,47 @@
+//! Reproduce the paper's central experiment: the training-efficiency
+//! sweep. Runs the 13B/2k preset (Appendix Table 4), prints the ranked
+//! table, and distills the paper's four §5 recommendations from the data.
+//!
+//! Run: `cargo run --release --example sweep_layouts [preset]`
+
+use plx::layout::Kernel;
+use plx::sim::A100;
+use plx::sweep::{by_name, report, run};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "13b-2k".into());
+    let preset = by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown preset '{name}' — try: plx sweep --list");
+        std::process::exit(1);
+    });
+    let result = run(&preset, &A100);
+    print!("{}", report::render(&result, preset.sps.len() > 1));
+
+    // Distill the recommendations, exactly as §5 states them.
+    println!("\ndistilled insights from this sweep:");
+    let best = result.best().unwrap();
+    println!(
+        "  1. best layout uses micro-batch size {} (paper: use mb=1)",
+        best.layout().mb
+    );
+    println!(
+        "  2. best layout {} activation checkpointing (paper: avoid it)",
+        if best.layout().ckpt { "USES" } else { "avoids" }
+    );
+    let best_no_rms = result.best_where(|r| r.layout().kernel != Kernel::Flash2Rms);
+    if let (Some(b), Some(nr)) = (result.best(), best_no_rms) {
+        println!(
+            "  3. RMSNorm kernel is worth {:+.1} MFU points at the optimum",
+            100.0 * (b.outcome.mfu().unwrap() - nr.outcome.mfu().unwrap())
+        );
+    }
+    let pp_heavy = result.best_where(|r| r.layout().pp > r.layout().tp);
+    let tp_heavy = result.best_where(|r| r.layout().tp > r.layout().pp);
+    if let (Some(p), Some(t)) = (pp_heavy, tp_heavy) {
+        println!(
+            "  4. best PP-heavy {:.2}% vs best TP-heavy {:.2}% (paper: prefer PP)",
+            100.0 * p.outcome.mfu().unwrap(),
+            100.0 * t.outcome.mfu().unwrap()
+        );
+    }
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust (L3).
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact layout (per model config / pipeline split / micro-batch size):
+
+    artifacts/<config>/pp<P>_mb<M>/
+        stage<i>_fwd.hlo.txt
+        stage<i>_bwd.hlo.txt
+        manifest.json          # shapes, flat param order, offsets
+    artifacts/adamw_chunk.hlo.txt   # shared, model-independent
+
+`make artifacts` builds the default set (tiny pp1/pp2 for tests, demo20m
+and e2e100m for the examples); anything else:
+
+    python -m compile.aot --config e2e100m --pp 4 --mb 2 --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import optimizer as O
+from compile import stages as S
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True, so the
+    Rust side always unwraps a tuple — uniform across 1-output and N-output
+    artifacts)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: pathlib.Path) -> dict:
+    """jit + lower + write; returns a manifest stub with output shapes."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    out_info = lowered.out_info
+    # out_info is a pytree (here: tuple) of ShapeDtypeStruct.
+    outs = jax.tree_util.tree_leaves(out_info)
+    return {
+        "file": path.name,
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs],
+    }
+
+
+def _shape_entry(name, shape, offset):
+    size = 1
+    for d in shape:
+        size *= d
+    return {"name": name, "shape": list(shape), "size": size, "offset": offset}
+
+
+def build_model_artifacts(cfg: M.ModelConfig, pp: int, mb: int,
+                          out_dir: pathlib.Path) -> dict:
+    """Lower all pipeline-stage artifacts for (cfg, pp, mb) + manifest."""
+    specs = S.split_stages(cfg, pp)
+    subdir = out_dir / cfg.name / f"pp{pp}_mb{mb}"
+    stages_manifest = []
+    # Global flat parameter layout: stages concatenated in order. The Rust
+    # coordinator's ZeRO-1 store and the optimizer chunks index into this.
+    global_offset = 0
+    for spec in specs:
+        fwd = S.make_stage_fwd(cfg, spec)
+        bwd = S.make_stage_bwd(cfg, spec)
+        fwd_args = S.stage_example_args(cfg, spec, mb, "fwd")
+        bwd_args = S.stage_example_args(cfg, spec, mb, "bwd")
+        print(f"  lowering {cfg.name} pp{pp} mb{mb} stage{spec.index} "
+              f"(layers {spec.start_layer}..{spec.end_layer})", flush=True)
+        fwd_info = lower_to_file(fwd, fwd_args, subdir / f"stage{spec.index}_fwd.hlo.txt")
+        bwd_info = lower_to_file(bwd, bwd_args, subdir / f"stage{spec.index}_bwd.hlo.txt")
+
+        params = []
+        for name, shape in S.stage_param_shapes(cfg, spec):
+            params.append(_shape_entry(name, shape, global_offset))
+            global_offset += params[-1]["size"]
+
+        stages_manifest.append({
+            "index": spec.index,
+            "start_layer": spec.start_layer,
+            "end_layer": spec.end_layer,
+            "has_embed": spec.has_embed,
+            "has_head": spec.has_head,
+            "fwd": fwd_info,
+            "bwd": bwd_info,
+            "params": params,
+            "param_elems": sum(p["size"] for p in params),
+        })
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "ffn": cfg.ffn,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "kernels": cfg.kernels,
+            "param_count": cfg.param_count(),
+        },
+        "pp": pp,
+        "mb": mb,
+        "total_param_elems": global_offset,
+        "optimizer_chunk": O.CHUNK,
+        "stages": stages_manifest,
+    }
+    assert global_offset == cfg.param_count(), (
+        f"flat layout {global_offset} != param_count {cfg.param_count()}")
+    (subdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def build_optimizer_artifact(out_dir: pathlib.Path) -> None:
+    update, example_args = O.make_adamw_chunk()
+    print("  lowering adamw_chunk", flush=True)
+    lower_to_file(lambda *a: update(*a), example_args(), out_dir / "adamw_chunk.hlo.txt")
+
+
+DEFAULT_BUILDS = [
+    ("tiny", 1, 2),
+    ("tiny", 2, 2),
+    ("tiny", 4, 1),
+    ("demo20m", 2, 1),
+    ("e2e100m", 2, 1),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", choices=sorted(M.RUNNABLE_CONFIGS), default=None,
+                    help="lower one (config, pp, mb) instead of the default set")
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--mb", type=int, default=1)
+    ap.add_argument("--kernels", choices=["pallas", "ref"], default="pallas")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir).resolve()
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    build_optimizer_artifact(out_dir)
+    builds = ([(args.config, args.pp, args.mb)] if args.config else DEFAULT_BUILDS)
+    for name, pp, mb in builds:
+        cfg = M.RUNNABLE_CONFIGS[name]
+        if args.kernels != cfg.kernels:
+            cfg = M.ModelConfig(**{**cfg.__dict__, "kernels": args.kernels})
+        build_model_artifacts(cfg, pp, mb, out_dir)
+    print(f"artifacts written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+Public surface:
+  flash_attention.flash_attention — tiled online-softmax attention (FA2 analog)
+  rmsnorm.rmsnorm                 — fused RMSNorm (the paper's "RMSNorm kernel")
+  swiglu.swiglu                   — fused SwiGLU gate
+  rope.rope                       — fused rotary embeddings
+  ref.*                           — pure-jnp oracles for all of the above
+"""
+
+from compile.kernels.flash_attention import flash_attention, vmem_footprint_bytes
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.rope import rope
+from compile.kernels.swiglu import swiglu
+
+__all__ = ["flash_attention", "rmsnorm", "rope", "swiglu", "vmem_footprint_bytes"]

@@ -1,0 +1,254 @@
+"""Pallas FlashAttention-2-style kernel (L1 hot spot).
+
+This is the paper's FLASHATTENTION-2 re-thought for a TPU-style memory
+hierarchy rather than ported from CUDA (DESIGN.md §Hardware-Adaptation):
+
+* the CUDA threadblock-per-Q-tile schedule becomes a Pallas ``grid`` over
+  ``(batch*heads, q_blocks, k_blocks)`` with ``BlockSpec`` index maps
+  expressing the HBM->VMEM streaming schedule;
+* the SRAM-resident online-softmax state ``(m, l, acc)`` of FA2 lives in
+  VMEM scratch that persists across the (sequential, innermost) k-block
+  grid dimension;
+* matmuls are shaped ``(block_q, d) @ (d, block_k)`` so the MXU systolic
+  array sees well-formed tiles; defaults ``block_q = block_k = 128`` align
+  with the 128x128 MXU.
+
+The algorithmic content matches Dao 2023: tiling + online softmax, never
+materializing the O(s^2) score matrix — which is exactly the memory
+behaviour the paper's layout study depends on. ``interpret=True`` is
+mandatory on this image (real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute).
+
+Causal masking skips fully-masked k-blocks (the FA2 "block skipping"
+optimization), so the causal kernel does ~half the work of the full one.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scratch,
+    l_scratch,
+    acc_scratch,
+    *,
+    causal: bool,
+    sm_scale: float,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    """One (bh, q_block, k_block) grid step of the online-softmax recurrence."""
+    q_idx = pl.program_id(1)
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    # Causal block skipping: a k-block whose first row starts beyond the last
+    # query of this q-block contributes nothing; skip the matmuls entirely.
+    q_last = (q_idx + 1) * block_q - 1
+    k_first = k_idx * block_k
+    should_run = jnp.logical_or(jnp.logical_not(causal), k_first <= q_last)
+
+    @pl.when(should_run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)  # (block_k, d)
+
+        # (block_q, d) @ (d, block_k) — MXU-shaped tile.
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * sm_scale
+
+        if causal:
+            row = q_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            col = k_idx * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(row >= col, s, NEG_INF)
+
+        m_prev = m_scratch[...]  # (block_q, 1)
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_cur)
+
+        # FA2 recurrence: rescale previous partial sums once per k-block.
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.exp(s - m_next)
+        l_next = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+        acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scratch[...] = m_next
+        l_scratch[...] = l_next
+
+    @pl.when(k_idx == num_k_blocks - 1)
+    def _finalize():
+        l = l_scratch[...]
+        # Rows that saw only -inf (cannot happen for causal with k<=q, but be
+        # safe for padded shapes): avoid 0/0.
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def _flash_attention_fwd_impl(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    sm_scale: float | None,
+    interpret: bool,
+) -> jax.Array:
+    batch, heads, seq, head_dim = q.shape
+    if k.shape != q.shape or v.shape != q.shape:
+        raise ValueError(f"q/k/v shapes must match, got {q.shape}, {k.shape}, {v.shape}")
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    if seq % block_q or seq % block_k:
+        raise ValueError(f"seq={seq} not divisible by blocks ({block_q}, {block_k})")
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    bh = batch * heads
+    q3 = q.reshape(bh, seq, head_dim)
+    k3 = k.reshape(bh, seq, head_dim)
+    v3 = v.reshape(bh, seq, head_dim)
+
+    num_q = seq // block_q
+    num_k = seq // block_k
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=num_k,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, num_q, num_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),        # m: running row max
+            pltpu.VMEM((block_q, 1), jnp.float32),        # l: running row sum
+            pltpu.VMEM((block_q, head_dim), jnp.float32),  # acc: unnormalized out
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(batch, heads, seq, head_dim)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash_attention(causal: bool, block_q: int, block_k: int,
+                          sm_scale: float | None, interpret: bool):
+    """Build the custom-VJP flash attention for one static config.
+
+    Forward: the Pallas kernel. Backward: recompute-based — re-derives the
+    attention weights from the saved (q, k, v) and pulls the cotangent
+    through the reference formulation. This mirrors FlashAttention's own
+    design point (the paper, §2: "selective activation recomputation during
+    the backward pass"): nothing O(s^2) is saved between fwd and bwd.
+    """
+    from compile.kernels import ref  # local import to avoid cycle at module load
+
+    def ref_fwd(q, k, v):
+        if sm_scale is not None:
+            d = q.shape[-1]
+            q = q * (sm_scale * math.sqrt(d))
+        return ref.attention(q, k, v, causal=causal)
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return _flash_attention_fwd_impl(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            sm_scale=sm_scale, interpret=interpret,
+        )
+
+    def fa_fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def fa_bwd(res, dy):
+        q, k, v = res
+        _, pullback = jax.vjp(ref_fwd, q, k, v)
+        return pullback(dy)
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled online-softmax attention (differentiable).
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``; ``seq`` must be divisible
+        by the (clamped) block sizes.
+      causal: lower-triangular masking with whole-block skipping.
+      block_q, block_k: VMEM tile sizes; clamped to ``seq``.
+      sm_scale: softmax scale, default ``1/sqrt(head_dim)``.
+      interpret: must stay True on CPU-only images (Mosaic unavailable).
+
+    Returns:
+      ``(batch, heads, seq, head_dim)``, same dtype as ``q``.
+    """
+    # Validate eagerly (same checks as the impl) so errors surface before
+    # the custom_vjp wrapper swallows the traceback.
+    batch, heads, seq, head_dim = q.shape
+    if k.shape != q.shape or v.shape != q.shape:
+        raise ValueError(f"q/k/v shapes must match, got {q.shape}, {k.shape}, {v.shape}")
+    bq, bk = min(block_q, seq), min(block_k, seq)
+    if seq % bq or seq % bk:
+        raise ValueError(f"seq={seq} not divisible by blocks ({bq}, {bk})")
+    return _make_flash_attention(causal, block_q, block_k, sm_scale, interpret)(q, k, v)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes resident per grid step (DESIGN.md §Perf, L1).
+
+    q + k + v + o tiles plus the f32 online-softmax scratch (m, l, acc).
+    """
+    tiles = (block_q + 2 * block_k + block_q) * head_dim * dtype_bytes
+    scratch = (block_q * 2 + block_q * head_dim) * 4
+    return tiles + scratch

@@ -1,0 +1,76 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package must match its oracle here to float32 tolerance
+under pytest (python/tests/test_kernels.py). These are deliberately the most
+naive possible implementations: materialize the full attention matrix, no
+fusion, no tiling — the paper's "torch" baseline, numerically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Naive scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      ``(batch, heads, seq, head_dim)`` attention output.
+
+    This materializes the full ``(seq, seq)`` score matrix — the O(s^2)
+    activation cost that FlashAttention removes, and exactly what the
+    paper's memory model charges the "torch" kernel for.
+    """
+    head_dim = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(head_dim).astype(q.dtype)
+    if causal:
+        seq_q, seq_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool), k=seq_k - seq_q)
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """Root-mean-square layer norm (Zhang & Sennrich 2019), unfused.
+
+    ``x``: (..., hidden); ``weight``: (hidden,).
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    normed = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """SwiGLU gating (Shazeer 2020): silu(gate) * up, elementwise."""
+    return (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def rope_cos_sin(seq: int, head_dim: int, *, base: float = 10000.0, dtype=jnp.float32):
+    """Rotary-embedding cos/sin tables of shape ``(seq, head_dim // 2)``."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+def rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Apply rotary position embeddings (Su et al. 2022).
+
+    ``x``: (batch, heads, seq, head_dim) with even head_dim, rotated pairwise
+    over (even, odd) feature pairs. ``cos``/``sin``: (seq, head_dim // 2).
+    """
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    # interleave back: (..., d/2, 2) -> (..., d)
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)

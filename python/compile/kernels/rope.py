@@ -1,0 +1,110 @@
+"""Pallas rotary-position-embedding kernel.
+
+Applies the RoPE rotation (Su et al. 2022) to a ``(batch, heads, seq, d)``
+tensor in VMEM tiles of ``(block_seq, d)`` per head, streaming the
+``(block_seq, d/2)`` cos/sin tables alongside — one fused pass instead of
+the four elementwise ops (two muls, add, sub) of the unfused form.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)        # (block_seq, d)
+    c = cos_ref[...].astype(jnp.float32)    # (block_seq, d/2)
+    s = sin_ref[...].astype(jnp.float32)
+    block_seq, d = x.shape
+    xp = x.reshape(block_seq, d // 2, 2)
+    x1 = xp[..., 0]
+    x2 = xp[..., 1]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    o_ref[0] = jnp.stack([r1, r2], axis=-1).reshape(block_seq, d).astype(o_ref.dtype)
+
+
+def _rope_impl(
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    block_seq: int,
+    interpret: bool,
+) -> jax.Array:
+    batch, heads, seq, d = x.shape
+    if d % 2:
+        raise ValueError(f"head_dim must be even, got {d}")
+    if cos.shape != (seq, d // 2) or sin.shape != (seq, d // 2):
+        raise ValueError(f"cos/sin must be ({seq}, {d // 2}), got {cos.shape}, {sin.shape}")
+    block_seq = min(block_seq, seq)
+    if seq % block_seq:
+        raise ValueError(f"seq={seq} not divisible by block_seq={block_seq}")
+
+    bh = batch * heads
+    x3 = x.reshape(bh, seq, d)
+    out = pl.pallas_call(
+        _rope_kernel,
+        grid=(bh, seq // block_seq),
+        in_specs=[
+            pl.BlockSpec((1, block_seq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((block_seq, d // 2), lambda b, i: (i, 0)),
+            pl.BlockSpec((block_seq, d // 2), lambda b, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_seq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), x.dtype),
+        interpret=interpret,
+    )(x3, cos, sin)
+    return out.reshape(batch, heads, seq, d)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_rope(block_seq: int, interpret: bool):
+    """Custom-VJP wrapper. The backward of a rotation is the inverse
+    rotation applied to the cotangent (cos/sin tables are constants)."""
+    from compile.kernels import ref
+
+    @jax.custom_vjp
+    def rp(x, cos, sin):
+        return _rope_impl(x, cos, sin, block_seq=block_seq, interpret=interpret)
+
+    def rp_fwd(x, cos, sin):
+        return rp(x, cos, sin), (cos, sin)
+
+    def rp_bwd(res, dy):
+        cos, sin = res
+        # d/dx of the rotation is rotation by -theta: reuse ref.rope with -sin.
+        dx = ref.rope(dy, cos, -sin)
+        return dx, jnp.zeros_like(cos), jnp.zeros_like(sin)
+
+    rp.defvjp(rp_fwd, rp_bwd)
+    return rp
+
+
+def rope(
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    block_seq: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply rotary embeddings (differentiable in ``x``).
+
+    Args:
+      x: ``(batch, heads, seq, head_dim)``, even ``head_dim``.
+      cos, sin: ``(seq, head_dim // 2)`` tables (see ``ref.rope_cos_sin``).
+
+    Returns:
+      rotated tensor, same shape/dtype as ``x``.
+    """
+    batch, heads, seq, d = x.shape
+    if d % 2:
+        raise ValueError(f"head_dim must be even, got {d}")
+    if cos.shape != (seq, d // 2) or sin.shape != (seq, d // 2):
+        raise ValueError(f"cos/sin must be ({seq}, {d // 2}), got {cos.shape}, {sin.shape}")
+    return _make_rope(block_seq, interpret)(x, cos, sin)

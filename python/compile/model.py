@@ -1,0 +1,230 @@
+"""L2: LLaMA-architecture transformer in JAX, calling the L1 Pallas kernels.
+
+This is the compute graph the paper trains (pre-norm, RMSNorm, SwiGLU,
+rotary embeddings — Touvron et al. 2023), parameterized so the same code
+expresses the paper's 13B/30B/65B shapes (used analytically by the Rust
+simulator) and the small models we actually train end-to-end on CPU PJRT.
+
+Everything here is build-time only: ``aot.py`` lowers the jitted functions
+to HLO text once, and the Rust coordinator executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels as K
+from compile.kernels import ref as R
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + lowering knobs for one LLaMA variant."""
+
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    ffn: int            # SwiGLU inner dim
+    vocab: int
+    seq: int
+    norm_eps: float = 1e-5
+    rope_base: float = 10000.0
+    # "pallas" routes attention/rmsnorm/swiglu/rope through the L1 kernels
+    # (the production lowering); "ref" uses the pure-jnp oracles (tests).
+    kernels: str = "pallas"
+    block_q: int = 128
+    block_k: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        """Exact parameter count (embedding + blocks + final norm + head)."""
+        per_layer = (
+            2 * self.hidden                       # two norms
+            + 4 * self.hidden * self.hidden       # wq wk wv wo
+            + 3 * self.hidden * self.ffn          # gate, up, down
+        )
+        return (
+            self.vocab * self.hidden              # embedding
+            + self.layers * per_layer
+            + self.hidden                         # final norm
+            + self.hidden * self.vocab            # lm head (untied)
+        )
+
+
+# --------------------------------------------------------------- presets
+
+def _llama(name, layers, hidden, heads, ffn, vocab, seq):
+    return ModelConfig(name=name, layers=layers, hidden=hidden, heads=heads,
+                       ffn=ffn, vocab=vocab, seq=seq)
+
+
+#: Paper model shapes (Table 1 context; vocab 128k per §3). Used by the Rust
+#: simulator for FLOP/memory math — never lowered to HLO on this image.
+PAPER_CONFIGS = {
+    "llama13b": _llama("llama13b", 40, 5120, 40, 13824, 131072, 2048),
+    "llama13b-8k": _llama("llama13b-8k", 40, 5120, 40, 13824, 131072, 8192),
+    "llama30b": _llama("llama30b", 60, 6656, 52, 17920, 131072, 2048),
+    "llama30b-8k": _llama("llama30b-8k", 60, 6656, 52, 17920, 131072, 8192),
+    "llama65b": _llama("llama65b", 80, 8192, 64, 22016, 131072, 2048),
+}
+
+#: Configs small enough to AOT-compile and train for real on CPU PJRT.
+RUNNABLE_CONFIGS = {
+    # ~102M params: the E2E validation model (system prompt: ~100M).
+    "e2e100m": ModelConfig(
+        name="e2e100m", layers=12, hidden=768, heads=12, ffn=2048,
+        vocab=16384, seq=128, block_q=128, block_k=128,
+    ),
+    # ~19M: medium demo.
+    "demo20m": ModelConfig(
+        name="demo20m", layers=6, hidden=384, heads=6, ffn=1024,
+        vocab=8192, seq=128, block_q=64, block_k=64,
+    ),
+    # Tiny: cargo/pytest integration fixture; compiles in seconds.
+    "tiny": ModelConfig(
+        name="tiny", layers=4, hidden=64, heads=4, ffn=128,
+        vocab=256, seq=32, block_q=32, block_k=32,
+    ),
+}
+
+ALL_CONFIGS = {**PAPER_CONFIGS, **RUNNABLE_CONFIGS}
+
+
+# --------------------------------------------------------------- params
+
+LAYER_KEYS = ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down")
+
+
+def layer_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    h, f = cfg.hidden, cfg.ffn
+    return {
+        "attn_norm": (h,),
+        "wq": (h, h),
+        "wk": (h, h),
+        "wv": (h, h),
+        "wo": (h, h),
+        "mlp_norm": (h,),
+        "w_gate": (h, f),
+        "w_up": (h, f),
+        "w_down": (f, h),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    """GPT-2-style init: N(0, 0.02), residual-out projections scaled by
+    1/sqrt(2*layers)."""
+    std = 0.02
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.layers)
+    keys = jax.random.split(key, cfg.layers + 2)
+
+    def norm_init(shape):
+        return jnp.ones(shape, jnp.float32)
+
+    def w(key, shape, scale=1.0):
+        return (std * scale) * jax.random.normal(key, shape, jnp.float32)
+
+    layers = []
+    shapes = layer_shapes(cfg)
+    for li in range(cfg.layers):
+        sub = jax.random.split(keys[li], len(LAYER_KEYS))
+        layer = {}
+        for i, name in enumerate(LAYER_KEYS):
+            shape = shapes[name]
+            if name.endswith("norm"):
+                layer[name] = norm_init(shape)
+            elif name in ("wo", "w_down"):
+                layer[name] = w(sub[i], shape, resid_scale)
+            else:
+                layer[name] = w(sub[i], shape)
+        layers.append(layer)
+
+    return {
+        "embed": w(keys[-2], (cfg.vocab, cfg.hidden)),
+        "layers": layers,
+        "final_norm": norm_init((cfg.hidden,)),
+        "lm_head": w(keys[-1], (cfg.hidden, cfg.vocab)),
+    }
+
+
+# --------------------------------------------------------------- forward
+
+def _rmsnorm(cfg: ModelConfig, x, w):
+    if cfg.kernels == "pallas":
+        return K.rmsnorm(x, w, eps=cfg.norm_eps)
+    return R.rmsnorm(x, w, eps=cfg.norm_eps)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    if cfg.kernels == "pallas":
+        return K.flash_attention(q, k, v, causal=True,
+                                 block_q=cfg.block_q, block_k=cfg.block_k)
+    return R.attention(q, k, v, causal=True)
+
+
+def _swiglu(cfg: ModelConfig, g, u):
+    if cfg.kernels == "pallas":
+        return K.swiglu(g, u)
+    return R.swiglu(g, u)
+
+
+def _rope(cfg: ModelConfig, x, cos, sin):
+    if cfg.kernels == "pallas":
+        return K.rope(x, cos, sin, block_seq=min(cfg.block_q, x.shape[2]))
+    return R.rope(x, cos, sin)
+
+
+def decoder_block(cfg: ModelConfig, p: dict[str, Any], h: jax.Array,
+                  cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """One pre-norm LLaMA block. ``h``: (batch, seq, hidden)."""
+    b, s, d = h.shape
+    nh, hd = cfg.heads, cfg.head_dim
+
+    x = _rmsnorm(cfg, h, p["attn_norm"])
+    q = (x @ p["wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    q = _rope(cfg, q, cos, sin)
+    k = _rope(cfg, k, cos, sin)
+    attn = _attention(cfg, q, k, v)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    h = h + attn @ p["wo"]
+
+    x = _rmsnorm(cfg, h, p["mlp_norm"])
+    h = h + _swiglu(cfg, x @ p["w_gate"], x @ p["w_up"]) @ p["w_down"]
+    return h
+
+
+def rope_tables(cfg: ModelConfig):
+    return R.rope_cos_sin(cfg.seq, cfg.head_dim, base=cfg.rope_base)
+
+
+def forward(cfg: ModelConfig, params: dict[str, Any], tokens: jax.Array) -> jax.Array:
+    """Full-model logits: tokens (batch, seq) int32 -> (batch, seq, vocab)."""
+    cos, sin = rope_tables(cfg)
+    h = params["embed"][tokens]
+    for p in params["layers"]:
+        h = decoder_block(cfg, p, h, cos, sin)
+    h = _rmsnorm(cfg, h, params["final_norm"])
+    return h @ params["lm_head"]
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy; logits (b, s, V), targets (b, s) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(cfg: ModelConfig, params: dict[str, Any], tokens: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    return cross_entropy(forward(cfg, params, tokens), targets)

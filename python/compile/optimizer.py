@@ -1,0 +1,61 @@
+"""AdamW update kernel for the Rust ZeRO-1 coordinator.
+
+The paper trains with AdamW + ZeRO-1 (optimizer states sharded over the
+data-parallel ranks). On the Rust side every rank owns a contiguous shard
+of the flat fp32 master parameter vector and its Adam moments; the shard is
+updated in fixed-size chunks by this single HLO artifact, which keeps the
+artifact independent of both model size and DP degree:
+
+    adamw_chunk(p[C], g[C], m[C], v[C], lr[], step[]) -> (p', m', v')
+
+Chunks beyond the parameter count are zero-padded by the coordinator
+(gradients are zero there, so padding cells stay put modulo weight decay on
+exact zeros, which is also zero).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: Flat parameter chunk size every optimizer call operates on.
+CHUNK = 1 << 20  # 1M elements: fewer PJRT dispatches per ZeRO-1 step (§Perf L3)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def make_adamw_chunk(opt: AdamWConfig = AdamWConfig(), chunk: int = CHUNK):
+    """Build the chunk-update function (hyperparams baked into the HLO)."""
+
+    def update(p, g, m, v, lr, step):
+        m2 = opt.beta1 * m + (1.0 - opt.beta1) * g
+        v2 = opt.beta2 * v + (1.0 - opt.beta2) * g * g
+        # Bias correction; step is the 1-based global step as f32.
+        mhat = m2 / (1.0 - opt.beta1 ** step)
+        vhat = v2 / (1.0 - opt.beta2 ** step)
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p)
+        return p2, m2, v2
+
+    def example_args():
+        f32 = jnp.float32
+        vec = jax.ShapeDtypeStruct((chunk,), f32)
+        scalar = jax.ShapeDtypeStruct((), f32)
+        return (vec, vec, vec, vec, scalar, scalar)
+
+    return update, example_args
+
+
+def reference_adamw_flat(p, g, m, v, step, lr,
+                         opt: AdamWConfig = AdamWConfig()):
+    """Flat-vector oracle used by python/tests/test_optimizer.py and by the
+    Rust ZeRO-1 equivalence test (via the generated artifact)."""
+    upd, _ = make_adamw_chunk(opt)
+    return upd(p, g, m, v, jnp.float32(lr), jnp.float32(step))

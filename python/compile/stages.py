@@ -1,0 +1,219 @@
+"""Pipeline-stage split of the L2 model for the Rust 1F1B coordinator.
+
+A pipeline stage is a contiguous chunk of decoder layers; stage 0 also owns
+the embedding, the last stage owns the final norm + LM head + loss. Each
+stage is lowered to two HLO artifacts with *flat positional* signatures
+(PJRT has no pytrees):
+
+  stage s, 0 < s < pp-1 (middle):
+    fwd(p_0..p_k, h_in)            -> h_out
+    bwd(p_0..p_k, h_in, dh_out)    -> (dh_in, g_0..g_k)
+  stage 0 (embedding):
+    fwd(p..., tokens)              -> h_out
+    bwd(p..., tokens, dh_out)      -> (g...,)            # no dx for int tokens
+  stage pp-1 (head):
+    fwd(p..., h_in, targets)       -> loss               # scalar
+    bwd(p..., h_in, targets)       -> (loss, dh_in, g...)
+  pp == 1 (single stage, embed + head):
+    fwd(p..., tokens, targets)     -> loss
+    bwd(p..., tokens, targets)     -> (loss, g...)
+
+Backward **recomputes** the stage forward internally via ``jax.vjp`` — i.e.
+per-stage activation checkpointing: the coordinator only ever ships the
+stage *inputs* between the fwd and bwd phases of 1F1B, never residuals.
+This is the "checkpointing=every_stage" design point; the paper's
+checkpointing ablation is modeled in the Rust simulator, while FlashAttention's
+own internal recomputation is inherited from the L1 kernel's custom VJP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One pipeline stage: layers [start, end) plus optional embed/head."""
+
+    index: int
+    num_stages: int
+    start_layer: int
+    end_layer: int
+
+    @property
+    def has_embed(self) -> bool:
+        return self.index == 0
+
+    @property
+    def has_head(self) -> bool:
+        return self.index == self.num_stages - 1
+
+
+def split_stages(cfg: M.ModelConfig, pp: int) -> list[StageSpec]:
+    """Evenly split ``cfg.layers`` into ``pp`` contiguous stages.
+
+    Layers must divide evenly (the paper's sweeps only use layouts where
+    they do; the Rust layout validator enforces the same rule).
+    """
+    if pp < 1:
+        raise ValueError(f"pp must be >= 1, got {pp}")
+    if cfg.layers % pp:
+        raise ValueError(f"layers={cfg.layers} not divisible by pp={pp}")
+    per = cfg.layers // pp
+    return [StageSpec(i, pp, i * per, (i + 1) * per) for i in range(pp)]
+
+
+def stage_param_names(cfg: M.ModelConfig, spec: StageSpec) -> list[str]:
+    """Deterministic flat parameter order for one stage (manifest order)."""
+    names = []
+    if spec.has_embed:
+        names.append("embed")
+    for li in range(spec.start_layer, spec.end_layer):
+        for k in M.LAYER_KEYS:
+            names.append(f"layers.{li}.{k}")
+    if spec.has_head:
+        names += ["final_norm", "lm_head"]
+    return names
+
+
+def stage_param_shapes(cfg: M.ModelConfig, spec: StageSpec) -> list[tuple[str, tuple[int, ...]]]:
+    shapes = M.layer_shapes(cfg)
+    out = []
+    for name in stage_param_names(cfg, spec):
+        if name == "embed":
+            out.append((name, (cfg.vocab, cfg.hidden)))
+        elif name == "final_norm":
+            out.append((name, (cfg.hidden,)))
+        elif name == "lm_head":
+            out.append((name, (cfg.hidden, cfg.vocab)))
+        else:
+            out.append((name, shapes[name.split(".")[-1]]))
+    return out
+
+
+def extract_stage_params(params: dict[str, Any], cfg: M.ModelConfig,
+                         spec: StageSpec) -> list[jax.Array]:
+    """Pull this stage's tensors out of the full param pytree, flat order."""
+    flat = []
+    for name in stage_param_names(cfg, spec):
+        if name in ("embed", "final_norm", "lm_head"):
+            flat.append(params[name])
+        else:
+            _, li, key = name.split(".")
+            flat.append(params["layers"][int(li)][key])
+    return flat
+
+
+def _stage_apply(cfg: M.ModelConfig, spec: StageSpec,
+                 flat_params: list[jax.Array], x: jax.Array,
+                 targets: jax.Array | None):
+    """Shared forward body over flat params."""
+    cos, sin = M.rope_tables(cfg)
+    names = stage_param_names(cfg, spec)
+    byname = dict(zip(names, flat_params))
+
+    if spec.has_embed:
+        h = byname["embed"][x]           # x: (mb, seq) int32
+    else:
+        h = x                             # x: (mb, seq, hidden) f32
+
+    for li in range(spec.start_layer, spec.end_layer):
+        p = {k: byname[f"layers.{li}.{k}"] for k in M.LAYER_KEYS}
+        h = M.decoder_block(cfg, p, h, cos, sin)
+
+    if spec.has_head:
+        h = M._rmsnorm(cfg, h, byname["final_norm"])
+        logits = h @ byname["lm_head"]
+        return M.cross_entropy(logits, targets)
+    return h
+
+
+def make_stage_fwd(cfg: M.ModelConfig, spec: StageSpec) -> Callable:
+    """Positional fwd: (p_0..p_k, x[, targets]) -> h_out | loss."""
+    n = len(stage_param_names(cfg, spec))
+
+    if spec.has_head:
+        def fwd(*args):
+            flat, x, targets = list(args[:n]), args[n], args[n + 1]
+            return (_stage_apply(cfg, spec, flat, x, targets),)
+    else:
+        def fwd(*args):
+            flat, x = list(args[:n]), args[n]
+            return (_stage_apply(cfg, spec, flat, x, None),)
+    return fwd
+
+
+def make_stage_bwd(cfg: M.ModelConfig, spec: StageSpec) -> Callable:
+    """Positional bwd with internal recompute (see module docstring)."""
+    n = len(stage_param_names(cfg, spec))
+
+    if spec.has_embed and spec.has_head:
+        # pp == 1: (p..., tokens, targets) -> (loss, g...). No dx — the
+        # input is integer tokens, which have no (useful) cotangent.
+        def bwd(*args):
+            flat, x, targets = list(args[:n]), args[n], args[n + 1]
+
+            def f(flat):
+                return _stage_apply(cfg, spec, flat, x, targets)
+
+            loss, pullback = jax.vjp(f, flat)
+            (gflat,) = pullback(jnp.float32(1.0))
+            return (loss, *gflat)
+    elif spec.has_head:
+        # (p..., h_in, targets) -> (loss, dh_in, g...)
+        def bwd(*args):
+            flat, x, targets = list(args[:n]), args[n], args[n + 1]
+
+            def f(flat, x):
+                return _stage_apply(cfg, spec, flat, x, targets)
+
+            loss, pullback = jax.vjp(f, flat, x)
+            gflat, dx = pullback(jnp.float32(1.0))
+            return (loss, dx, *gflat)
+    elif spec.has_embed:
+        # (p..., tokens, dh_out) -> (g...,)
+        def bwd(*args):
+            flat, x, dy = list(args[:n]), args[n], args[n + 1]
+
+            def f(flat):
+                return _stage_apply(cfg, spec, flat, x, None)
+
+            _, pullback = jax.vjp(f, flat)
+            (gflat,) = pullback(dy)
+            return tuple(gflat)
+    else:
+        # (p..., h_in, dh_out) -> (dh_in, g...)
+        def bwd(*args):
+            flat, x, dy = list(args[:n]), args[n], args[n + 1]
+
+            def f(flat, x):
+                return _stage_apply(cfg, spec, flat, x, None)
+
+            _, pullback = jax.vjp(f, flat, x)
+            gflat, dx = pullback(dy)
+            return (dx, *gflat)
+    return bwd
+
+
+def stage_example_args(cfg: M.ModelConfig, spec: StageSpec, mb: int,
+                       kind: str) -> tuple:
+    """ShapeDtypeStructs to drive ``jax.jit(...).lower`` for one artifact."""
+    f32, i32 = jnp.float32, jnp.int32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s in stage_param_shapes(cfg, spec)]
+    hidden = jax.ShapeDtypeStruct((mb, cfg.seq, cfg.hidden), f32)
+    tokens = jax.ShapeDtypeStruct((mb, cfg.seq), i32)
+
+    x = tokens if spec.has_embed else hidden
+    if kind == "fwd":
+        extra = (tokens,) if spec.has_head else ()
+        return (*params, x, *extra)
+    if kind == "bwd":
+        extra = (tokens,) if spec.has_head else (hidden,)
+        return (*params, x, *extra)
+    raise ValueError(kind)

@@ -1,0 +1,332 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/blocks; fixed cases pin the paper-relevant
+configurations (head_dim 128, long sequences, causal masking).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, rmsnorm, rope, swiglu
+from compile.kernels import ref
+from compile.kernels.flash_attention import vmem_footprint_bytes
+
+jax.config.update("jax_enable_x64", False)
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def assert_close(got, want, dtype=jnp.float32):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        atol=ATOL[dtype],
+        rtol=RTOL[dtype],
+    )
+
+
+# ---------------------------------------------------------------- attention
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("seq,block", [(128, 128), (256, 64), (512, 128)])
+    def test_matches_oracle(self, causal, seq, block):
+        q, k, v = (
+            _rand(kk, (2, 4, seq, 64), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(seq + causal), 3)
+        )
+        got = flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+        assert_close(got, ref.attention(q, k, v, causal=causal))
+
+    def test_paper_head_dim_128(self):
+        """The LLAMA models in the paper all use head_dim 128."""
+        q, k, v = (
+            _rand(kk, (1, 2, 256, 128), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(7), 3)
+        )
+        got = flash_attention(q, k, v, causal=True)
+        assert_close(got, ref.attention(q, k, v, causal=True))
+
+    def test_rectangular_blocks(self):
+        q, k, v = (
+            _rand(kk, (1, 1, 256, 32), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(3), 3)
+        )
+        got = flash_attention(q, k, v, causal=True, block_q=128, block_k=32)
+        assert_close(got, ref.attention(q, k, v, causal=True))
+
+    def test_custom_scale(self):
+        q, k, v = (
+            _rand(kk, (1, 2, 128, 16), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(11), 3)
+        )
+        got = flash_attention(q, k, v, causal=False, sm_scale=0.5, block_q=64, block_k=64)
+        d = q.shape[-1]
+        want = ref.attention(q * (0.5 * np.sqrt(d)), k, v, causal=False)
+        assert_close(got, want)
+
+    def test_block_larger_than_seq_clamps(self):
+        q, k, v = (
+            _rand(kk, (1, 1, 64, 16), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(5), 3)
+        )
+        got = flash_attention(q, k, v, causal=True, block_q=512, block_k=512)
+        assert_close(got, ref.attention(q, k, v, causal=True))
+
+    def test_shape_mismatch_raises(self):
+        q = jnp.zeros((1, 1, 64, 16))
+        k = jnp.zeros((1, 1, 64, 8))
+        with pytest.raises(ValueError):
+            flash_attention(q, k, q)
+        with pytest.raises(ValueError):
+            flash_attention(q, jnp.zeros_like(q), jnp.zeros_like(q), block_q=48)
+
+    def test_numerical_stability_large_logits(self):
+        """Online softmax must survive logits far outside exp() range."""
+        q = 60.0 * jnp.ones((1, 1, 128, 32), jnp.float32)
+        k = 60.0 * jnp.ones((1, 1, 128, 32), jnp.float32)
+        v = _rand(jax.random.PRNGKey(0), (1, 1, 128, 32), jnp.float32)
+        got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+        assert bool(jnp.isfinite(got).all())
+        assert_close(got, ref.attention(q, k, v, causal=False))
+
+    def test_causal_first_row_attends_only_self(self):
+        q, k, v = (
+            _rand(kk, (1, 1, 128, 16), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(13), 3)
+        )
+        got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        assert_close(got[0, 0, 0], v[0, 0, 0])
+
+    def test_permutation_invariance_noncausal(self):
+        """Non-causal attention is invariant to permuting k/v rows together."""
+        q, k, v = (
+            _rand(kk, (1, 1, 128, 16), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(17), 3)
+        )
+        perm = jax.random.permutation(jax.random.PRNGKey(1), 128)
+        a = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+        b = flash_attention(q, k[:, :, perm], v[:, :, perm], causal=False, block_q=64, block_k=64)
+        assert_close(a, b)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 3),
+        heads=st.integers(1, 4),
+        seq_pow=st.integers(5, 8),
+        dim=st.sampled_from([8, 16, 32, 64]),
+        block_pow=st.integers(4, 7),
+        causal=st.booleans(),
+    )
+    def test_hypothesis_shape_sweep(self, batch, heads, seq_pow, dim, block_pow, causal):
+        seq = 2 ** seq_pow
+        block = min(2 ** block_pow, seq)
+        key = jax.random.PRNGKey(seq * dim + block)
+        q, k, v = (_rand(kk, (batch, heads, seq, dim), jnp.float32) for kk in jax.random.split(key, 3))
+        got = flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+        assert_close(got, ref.attention(q, k, v, causal=causal))
+
+    def test_vmem_footprint_within_budget(self):
+        """Default 128x128 blocks at head_dim 128 must fit VMEM (16 MiB/core)."""
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2 ** 20
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("rows,hidden,block", [(128, 512, 128), (96, 64, 32), (1, 256, 128)])
+    def test_matches_oracle(self, rows, hidden, block):
+        key = jax.random.PRNGKey(rows + hidden)
+        x = _rand(key, (rows, hidden), jnp.float32)
+        w = 1.0 + 0.1 * _rand(jax.random.PRNGKey(1), (hidden,), jnp.float32)
+        got = rmsnorm(x, w, block_rows=block)
+        assert_close(got, ref.rmsnorm(x, w))
+
+    def test_3d_input(self):
+        x = _rand(jax.random.PRNGKey(0), (4, 32, 128), jnp.float32)
+        w = jnp.ones((128,), jnp.float32)
+        assert_close(rmsnorm(x, w), ref.rmsnorm(x, w))
+
+    def test_non_multiple_rows_padded(self):
+        x = _rand(jax.random.PRNGKey(2), (100, 64), jnp.float32)
+        w = jnp.ones((64,), jnp.float32)
+        assert_close(rmsnorm(x, w, block_rows=32), ref.rmsnorm(x, w))
+
+    def test_unit_scale_output_has_unit_rms(self):
+        x = 5.0 * _rand(jax.random.PRNGKey(3), (64, 256), jnp.float32)
+        out = rmsnorm(x, jnp.ones((256,), jnp.float32))
+        rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=-1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+    def test_scale_equivariance(self):
+        """rmsnorm(c*x) == rmsnorm(x) for c > 0 (scale invariance)."""
+        x = _rand(jax.random.PRNGKey(4), (32, 128), jnp.float32)
+        w = jnp.ones((128,), jnp.float32)
+        assert_close(rmsnorm(3.7 * x, w), rmsnorm(x, w))
+
+    def test_weight_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            rmsnorm(jnp.zeros((4, 8)), jnp.zeros((4,)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 200),
+        hidden=st.sampled_from([32, 64, 128, 256]),
+        block=st.sampled_from([8, 32, 128]),
+    )
+    def test_hypothesis_sweep(self, rows, hidden, block):
+        x = _rand(jax.random.PRNGKey(rows), (rows, hidden), jnp.float32)
+        w = 1.0 + 0.05 * _rand(jax.random.PRNGKey(hidden), (hidden,), jnp.float32)
+        assert_close(rmsnorm(x, w, block_rows=block), ref.rmsnorm(x, w))
+
+
+# ---------------------------------------------------------------- swiglu
+
+class TestSwiGLU:
+    def test_matches_oracle(self):
+        g = _rand(jax.random.PRNGKey(0), (64, 512), jnp.float32)
+        u = _rand(jax.random.PRNGKey(1), (64, 512), jnp.float32)
+        assert_close(swiglu(g, u), ref.swiglu(g, u))
+
+    def test_3d(self):
+        g = _rand(jax.random.PRNGKey(2), (2, 33, 96), jnp.float32)
+        u = _rand(jax.random.PRNGKey(3), (2, 33, 96), jnp.float32)
+        assert_close(swiglu(g, u, block_rows=16), ref.swiglu(g, u))
+
+    def test_zero_gate_is_zero(self):
+        u = _rand(jax.random.PRNGKey(4), (8, 16), jnp.float32)
+        out = swiglu(jnp.zeros_like(u), u)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            swiglu(jnp.zeros((2, 4)), jnp.zeros((2, 5)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows=st.integers(1, 100), inner=st.sampled_from([16, 64, 256]))
+    def test_hypothesis_sweep(self, rows, inner):
+        g = _rand(jax.random.PRNGKey(rows), (rows, inner), jnp.float32)
+        u = _rand(jax.random.PRNGKey(inner), (rows, inner), jnp.float32)
+        assert_close(swiglu(g, u, block_rows=32), ref.swiglu(g, u))
+
+
+# ---------------------------------------------------------------- rope
+
+class TestRope:
+    @pytest.mark.parametrize("seq,dim", [(128, 64), (256, 32), (64, 128)])
+    def test_matches_oracle(self, seq, dim):
+        x = _rand(jax.random.PRNGKey(seq), (2, 3, seq, dim), jnp.float32)
+        cos, sin = ref.rope_cos_sin(seq, dim)
+        got = rope(x, cos, sin, block_seq=min(64, seq))
+        assert_close(got, ref.rope(x, cos, sin))
+
+    def test_norm_preserving(self):
+        """Rotation preserves the L2 norm of every (even, odd) pair."""
+        x = _rand(jax.random.PRNGKey(9), (1, 2, 128, 64), jnp.float32)
+        cos, sin = ref.rope_cos_sin(128, 64)
+        out = rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_position_zero_identity(self):
+        """cos(0)=1, sin(0)=0 — position 0 must be unrotated."""
+        x = _rand(jax.random.PRNGKey(10), (1, 1, 64, 32), jnp.float32)
+        cos, sin = ref.rope_cos_sin(64, 32)
+        out = rope(x, cos, sin)
+        assert_close(out[:, :, 0], x[:, :, 0])
+
+    def test_odd_head_dim_raises(self):
+        with pytest.raises(ValueError):
+            rope(jnp.zeros((1, 1, 8, 7)), jnp.zeros((8, 3)), jnp.zeros((8, 3)))
+
+    def test_bad_table_shape_raises(self):
+        with pytest.raises(ValueError):
+            rope(jnp.zeros((1, 1, 8, 4)), jnp.zeros((8, 3)), jnp.zeros((8, 3)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seq_pow=st.integers(4, 8),
+        dim=st.sampled_from([8, 16, 32, 64]),
+        heads=st.integers(1, 4),
+    )
+    def test_hypothesis_sweep(self, seq_pow, dim, heads):
+        seq = 2 ** seq_pow
+        x = _rand(jax.random.PRNGKey(seq + dim), (1, heads, seq, dim), jnp.float32)
+        cos, sin = ref.rope_cos_sin(seq, dim)
+        got = rope(x, cos, sin, block_seq=min(32, seq))
+        assert_close(got, ref.rope(x, cos, sin))
+
+
+# ------------------------------------------------- gradient path (bwd compile)
+
+class TestKernelGradients:
+    """The kernels sit inside the L2 fwd/bwd graph, so jax.grad must trace
+    through them (interpret mode supplies the VJPs)."""
+
+    def test_attention_grad_matches_ref(self):
+        q, k, v = (
+            _rand(kk, (1, 2, 128, 16), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(21), 3)
+        )
+
+        def loss_pallas(q, k, v):
+            return jnp.sum(flash_attention(q, k, v, causal=True, block_q=64, block_k=64) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.attention(q, k, v, causal=True) ** 2)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gp, gr):
+            assert_close(a, b)
+
+    def test_rmsnorm_grad_matches_ref(self):
+        x = _rand(jax.random.PRNGKey(22), (16, 64), jnp.float32)
+        w = 1.0 + 0.1 * _rand(jax.random.PRNGKey(23), (64,), jnp.float32)
+        gp = jax.grad(lambda x, w: jnp.sum(rmsnorm(x, w) ** 2), argnums=(0, 1))(x, w)
+        gr = jax.grad(lambda x, w: jnp.sum(ref.rmsnorm(x, w) ** 2), argnums=(0, 1))(x, w)
+        for a, b in zip(gp, gr):
+            assert_close(a, b)
+
+    def test_swiglu_grad_matches_ref(self):
+        g = _rand(jax.random.PRNGKey(24), (8, 32), jnp.float32)
+        u = _rand(jax.random.PRNGKey(25), (8, 32), jnp.float32)
+        gp = jax.grad(lambda g, u: jnp.sum(swiglu(g, u) ** 2), argnums=(0, 1))(g, u)
+        gr = jax.grad(lambda g, u: jnp.sum(ref.swiglu(g, u) ** 2), argnums=(0, 1))(g, u)
+        for a, b in zip(gp, gr):
+            assert_close(a, b)
+
+    def test_rope_grad_matches_ref(self):
+        x = _rand(jax.random.PRNGKey(26), (1, 2, 64, 16), jnp.float32)
+        cos, sin = ref.rope_cos_sin(64, 16)
+        gp = jax.grad(lambda x: jnp.sum(rope(x, cos, sin) ** 2))(x)
+        gr = jax.grad(lambda x: jnp.sum(ref.rope(x, cos, sin) ** 2))(x)
+        assert_close(gp, gr)
+
+    def test_grads_finite_after_jit(self):
+        """The full fwd+bwd must survive jax.jit — this is the exact path
+        aot.py lowers to HLO."""
+        q, k, v = (
+            _rand(kk, (1, 1, 64, 16), jnp.float32)
+            for kk in jax.random.split(jax.random.PRNGKey(27), 3)
+        )
+
+        @jax.jit
+        def step(q, k, v):
+            return jax.grad(
+                lambda q: jnp.sum(flash_attention(q, k, v, causal=True, block_q=32, block_k=32))
+            )(q)
+
+        g = step(q, k, v)
+        assert bool(jnp.isfinite(g).all())

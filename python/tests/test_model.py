@@ -1,0 +1,117 @@
+"""L2 model correctness: shapes, kernel-vs-ref equivalence, loss behaviour."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.RUNNABLE_CONFIGS["tiny"]
+
+
+def _data(cfg, batch=2, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    tokens = jax.random.randint(k1, (batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(k2, (batch, cfg.seq), 0, cfg.vocab)
+    return tokens, targets
+
+
+class TestConfig:
+    def test_param_count_formula_matches_init(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(0))
+        total = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        assert total == CFG.param_count()
+
+    def test_paper_configs_param_counts(self):
+        """Sanity: paper shapes land in the advertised parameter range
+        (the paper's "13B/30B/65B" include the 128k-token vocabulary)."""
+        c13 = M.PAPER_CONFIGS["llama13b"].param_count()
+        c30 = M.PAPER_CONFIGS["llama30b"].param_count()
+        c65 = M.PAPER_CONFIGS["llama65b"].param_count()
+        assert 13e9 < c13 < 15e9
+        assert 30e9 < c30 < 36e9
+        assert 64e9 < c65 < 69e9
+        assert c13 < c30 < c65
+
+    def test_e2e_model_is_about_100m(self):
+        n = M.RUNNABLE_CONFIGS["e2e100m"].param_count()
+        assert 90e6 < n < 130e6
+
+    def test_head_dim(self):
+        assert CFG.head_dim * CFG.heads == CFG.hidden
+
+
+class TestForward:
+    def test_logits_shape(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(0))
+        tokens, _ = _data(CFG)
+        logits = M.forward(CFG, params, tokens)
+        assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+    def test_pallas_vs_ref_kernels_forward(self):
+        """The production (pallas) lowering must equal the ref lowering."""
+        ref_cfg = dataclasses.replace(CFG, kernels="ref")
+        params = M.init_params(CFG, jax.random.PRNGKey(1))
+        tokens, _ = _data(CFG, seed=1)
+        lp = M.forward(CFG, params, tokens)
+        lr = M.forward(ref_cfg, params, tokens)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), atol=3e-5, rtol=3e-5)
+
+    def test_pallas_vs_ref_kernels_grad(self):
+        ref_cfg = dataclasses.replace(CFG, kernels="ref")
+        params = M.init_params(CFG, jax.random.PRNGKey(2))
+        tokens, targets = _data(CFG, seed=2)
+        gp = jax.grad(lambda p: M.loss_fn(CFG, p, tokens, targets))(params)
+        gr = jax.grad(lambda p: M.loss_fn(ref_cfg, p, tokens, targets))(params)
+        for a, b in zip(jax.tree_util.tree_leaves(gp), jax.tree_util.tree_leaves(gr)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=5e-4)
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        params = M.init_params(CFG, jax.random.PRNGKey(3))
+        tokens, _ = _data(CFG, batch=1, seed=3)
+        cut = CFG.seq // 2
+        logits_a = M.forward(CFG, params, tokens)
+        tokens_b = tokens.at[0, cut:].set((tokens[0, cut:] + 1) % CFG.vocab)
+        logits_b = M.forward(CFG, params, tokens_b)
+        np.testing.assert_allclose(
+            np.asarray(logits_a[0, :cut]), np.asarray(logits_b[0, :cut]),
+            atol=1e-5, rtol=1e-5,
+        )
+
+
+class TestLoss:
+    def test_initial_loss_near_log_vocab(self):
+        """Random init => near-uniform predictive distribution."""
+        params = M.init_params(CFG, jax.random.PRNGKey(4))
+        tokens, targets = _data(CFG, seed=4)
+        loss = M.loss_fn(CFG, params, tokens, targets)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_loss_decreases_under_sgd(self):
+        """Five plain-SGD steps on one batch must reduce the loss."""
+        params = M.init_params(CFG, jax.random.PRNGKey(5))
+        tokens, targets = _data(CFG, seed=5)
+        lf = jax.jit(lambda p: M.loss_fn(CFG, p, tokens, targets))
+        gf = jax.jit(jax.grad(lambda p: M.loss_fn(CFG, p, tokens, targets)))
+        l0 = float(lf(params))
+        for _ in range(5):
+            g = gf(params)
+            params = jax.tree_util.tree_map(lambda p, g: p - 0.5 * g, params, g)
+        assert float(lf(params)) < l0
+
+    def test_perfect_prediction_low_loss(self):
+        logits = jnp.full((1, 4, 8), -30.0)
+        targets = jnp.array([[1, 2, 3, 4]], jnp.int32)
+        logits = logits.at[0, jnp.arange(4), targets[0]].set(30.0)
+        assert float(M.cross_entropy(logits, targets)) < 1e-3
+
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((2, 8, 16))
+        targets = jnp.zeros((2, 8), jnp.int32)
+        np.testing.assert_allclose(float(M.cross_entropy(logits, targets)),
+                                   np.log(16.0), rtol=1e-6)

@@ -1,0 +1,95 @@
+"""AdamW chunk kernel: algebraic properties + oracle equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optimizer as O
+
+
+def _state(n=64, seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = jax.random.normal(k[0], (n,), jnp.float32)
+    g = jax.random.normal(k[1], (n,), jnp.float32)
+    m = 0.1 * jax.random.normal(k[2], (n,), jnp.float32)
+    v = jnp.abs(0.1 * jax.random.normal(k[3], (n,), jnp.float32))
+    return p, g, m, v
+
+
+class TestAdamW:
+    def test_zero_grad_pure_decay(self):
+        """With g=0, m=v=0, the update is pure weight decay."""
+        opt = O.AdamWConfig(weight_decay=0.1)
+        upd, _ = O.make_adamw_chunk(opt, chunk=8)
+        p = jnp.ones((8,), jnp.float32)
+        z = jnp.zeros((8,), jnp.float32)
+        p2, m2, v2 = upd(p, z, z, z, jnp.float32(0.01), jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(p2), 1.0 - 0.01 * 0.1, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(m2), 0.0)
+        np.testing.assert_allclose(np.asarray(v2), 0.0)
+
+    def test_first_step_bias_correction(self):
+        """At step 1 with zero state, mhat == g and vhat == g^2 exactly."""
+        opt = O.AdamWConfig(weight_decay=0.0, eps=0.0)
+        upd, _ = O.make_adamw_chunk(opt, chunk=4)
+        p = jnp.zeros((4,), jnp.float32)
+        g = jnp.array([1.0, -2.0, 3.0, -4.0], jnp.float32)
+        z = jnp.zeros((4,), jnp.float32)
+        p2, _, _ = upd(p, g, z, z, jnp.float32(0.1), jnp.float32(1.0))
+        # p2 = -lr * g / |g| = -lr * sign(g)
+        np.testing.assert_allclose(np.asarray(p2), -0.1 * np.sign(g), rtol=1e-5)
+
+    def test_update_is_bounded(self):
+        """|Δp| <= lr * (1/(1-eps-ish) + wd * |p|) — Adam's bounded-update property."""
+        p, g, m, v = _state(256, seed=1)
+        upd, _ = O.make_adamw_chunk(O.AdamWConfig(), chunk=256)
+        p2, _, _ = upd(p, g, m, v, jnp.float32(0.01), jnp.float32(5.0))
+        delta = np.abs(np.asarray(p2 - p))
+        bound = 0.01 * (5.0 + 0.1 * np.abs(np.asarray(p)))
+        assert (delta <= bound + 1e-6).all()
+
+    def test_moments_are_ema(self):
+        p, g, m, v = _state(32, seed=2)
+        opt = O.AdamWConfig(beta1=0.9, beta2=0.95)
+        upd, _ = O.make_adamw_chunk(opt, chunk=32)
+        _, m2, v2 = upd(p, g, m, v, jnp.float32(0.0), jnp.float32(3.0))
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(0.9 * m + 0.1 * g), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(0.95 * v + 0.05 * g * g), rtol=1e-6)
+
+    def test_lr_zero_keeps_params(self):
+        p, g, m, v = _state(16, seed=3)
+        upd, _ = O.make_adamw_chunk(O.AdamWConfig(), chunk=16)
+        p2, _, _ = upd(p, g, m, v, jnp.float32(0.0), jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(p))
+
+    def test_chunked_equals_whole(self):
+        """Updating two half-chunks must equal one full update — the
+        property the Rust coordinator's chunk loop relies on."""
+        p, g, m, v = _state(128, seed=4)
+        upd64, _ = O.make_adamw_chunk(O.AdamWConfig(), chunk=64)
+        upd128, _ = O.make_adamw_chunk(O.AdamWConfig(), chunk=128)
+        lr, t = jnp.float32(0.003), jnp.float32(7.0)
+        whole = upd128(p, g, m, v, lr, t)
+        lo = upd64(p[:64], g[:64], m[:64], v[:64], lr, t)
+        hi = upd64(p[64:], g[64:], m[64:], v[64:], lr, t)
+        for w, l, h in zip(whole, lo, hi):
+            np.testing.assert_allclose(np.asarray(w), np.concatenate([l, h]), rtol=1e-6)
+
+    def test_reference_flat_wraps_update(self):
+        p, g, m, v = _state(32, seed=5)
+        got = O.reference_adamw_flat(p, g, m, v, step=2.0, lr=0.01)
+        upd, _ = O.make_adamw_chunk(O.AdamWConfig(), chunk=32)
+        want = upd(p, g, m, v, jnp.float32(0.01), jnp.float32(2.0))
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_training_quadratic_converges(self):
+        """Minimize ||p||^2 with AdamW: p must approach 0."""
+        upd, _ = O.make_adamw_chunk(O.AdamWConfig(weight_decay=0.0), chunk=8)
+        p = jnp.full((8,), 5.0, jnp.float32)
+        m = v = jnp.zeros_like(p)
+        for t in range(1, 301):
+            g = 2.0 * p
+            p, m, v = upd(p, g, m, v, jnp.float32(0.05), jnp.float32(t))
+        assert float(jnp.abs(p).max()) < 0.1

@@ -1,0 +1,121 @@
+"""Pipeline-stage split: composed stages must equal the monolithic model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import stages as S
+
+CFG = M.RUNNABLE_CONFIGS["tiny"]
+
+
+def _setup(pp, seed=0, batch=2):
+    params = M.init_params(CFG, jax.random.PRNGKey(seed))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 100))
+    tokens = jax.random.randint(k1, (batch, CFG.seq), 0, CFG.vocab)
+    targets = jax.random.randint(k2, (batch, CFG.seq), 0, CFG.vocab)
+    specs = S.split_stages(CFG, pp)
+    flat = [S.extract_stage_params(params, CFG, s) for s in specs]
+    return params, tokens, targets, specs, flat
+
+
+class TestSplit:
+    def test_even_split(self):
+        specs = S.split_stages(CFG, 2)
+        assert [(s.start_layer, s.end_layer) for s in specs] == [(0, 2), (2, 4)]
+        assert specs[0].has_embed and not specs[0].has_head
+        assert specs[1].has_head and not specs[1].has_embed
+
+    def test_pp1_single_stage_owns_everything(self):
+        (spec,) = S.split_stages(CFG, 1)
+        assert spec.has_embed and spec.has_head
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            S.split_stages(CFG, 3)
+
+    def test_param_name_order_is_deterministic_and_complete(self):
+        specs = S.split_stages(CFG, 2)
+        names = [n for s in specs for n in S.stage_param_names(CFG, s)]
+        assert names[0] == "embed"
+        assert names[-2:] == ["final_norm", "lm_head"]
+        assert len(names) == len(set(names))
+        # total element count must equal param_count
+        total = sum(
+            int(np.prod(shape)) if shape else 1
+            for s in specs
+            for _, shape in S.stage_param_shapes(CFG, s)
+        )
+        assert total == CFG.param_count()
+
+
+@pytest.mark.parametrize("pp", [1, 2, 4])
+class TestComposition:
+    def test_forward_composition_matches_monolith(self, pp):
+        params, tokens, targets, specs, flat = _setup(pp)
+        x = tokens
+        for i, spec in enumerate(specs[:-1]):
+            (x,) = S.make_stage_fwd(CFG, spec)(*flat[i], x)
+        (loss,) = S.make_stage_fwd(CFG, specs[-1])(*flat[-1], x, targets)
+        want = M.loss_fn(CFG, params, tokens, targets)
+        np.testing.assert_allclose(float(loss), float(want), rtol=1e-6)
+
+    def test_backward_chain_matches_monolith_grads(self, pp):
+        params, tokens, targets, specs, flat = _setup(pp, seed=1)
+        # forward: record stage inputs
+        inputs = [tokens]
+        x = tokens
+        for i, spec in enumerate(specs[:-1]):
+            (x,) = S.make_stage_fwd(CFG, spec)(*flat[i], x)
+            inputs.append(x)
+        # backward chain
+        grads = [None] * pp
+        if pp == 1:
+            # pp==1 stage has embed+head: bwd returns (loss, g...).
+            out = S.make_stage_bwd(CFG, specs[0])(*flat[0], tokens, targets)
+            loss = out[0]
+            grads[0] = out[1:]
+        else:
+            out = S.make_stage_bwd(CFG, specs[-1])(*flat[-1], inputs[-1], targets)
+            loss, dy = out[0], out[1]
+            grads[-1] = out[2:]
+            for i in range(pp - 2, 0, -1):
+                out = S.make_stage_bwd(CFG, specs[i])(*flat[i], inputs[i], dy)
+                dy = out[0]
+                grads[i] = out[1:]
+            grads[0] = S.make_stage_bwd(CFG, specs[0])(*flat[0], tokens, dy)
+
+        gref_tree = jax.grad(lambda p: M.loss_fn(CFG, p, tokens, targets))(params)
+        for i, spec in enumerate(specs):
+            gref = S.extract_stage_params(gref_tree, CFG, spec)
+            got = grads[i]
+            assert len(got) == len(gref)
+            for a, b in zip(got, gref):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+class TestExampleArgs:
+    def test_fwd_args_shapes(self):
+        specs = S.split_stages(CFG, 2)
+        args0 = S.stage_example_args(CFG, specs[0], 2, "fwd")
+        n0 = len(S.stage_param_names(CFG, specs[0]))
+        assert len(args0) == n0 + 1
+        assert args0[-1].shape == (2, CFG.seq)  # tokens
+        args1 = S.stage_example_args(CFG, specs[1], 2, "fwd")
+        assert args1[-2].shape == (2, CFG.seq, CFG.hidden)
+        assert args1[-1].shape == (2, CFG.seq)  # targets
+
+    def test_bwd_args_shapes(self):
+        specs = S.split_stages(CFG, 2)
+        args0 = S.stage_example_args(CFG, specs[0], 2, "bwd")
+        assert args0[-1].shape == (2, CFG.seq, CFG.hidden)  # dh
+        args1 = S.stage_example_args(CFG, specs[1], 2, "bwd")
+        assert args1[-1].shape == (2, CFG.seq)  # targets
+
+    def test_bad_kind_raises(self):
+        specs = S.split_stages(CFG, 2)
+        with pytest.raises(ValueError):
+            S.stage_example_args(CFG, specs[0], 2, "jvp")

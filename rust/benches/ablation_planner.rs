@@ -1,0 +1,68 @@
+//! Ablation — the paper's §5 distilled recommendations (planner rules) vs
+//! exhaustive search: how much MFU do the rules leave on the table, and
+//! how much cheaper are they?
+
+use plx::layout::Job;
+use plx::model::arch::preset;
+use plx::planner::{plan_by_rules, plan_exhaustive};
+use plx::sim::A100;
+use plx::topo::Cluster;
+use plx::util::bench::{bench, section};
+
+fn main() {
+    section("planner rules vs exhaustive search");
+    println!(
+        "{:<14} {:>6} {:>14} {:>14} {:>8}  {:<16} {:<16}",
+        "model", "nodes", "rules MFU", "best MFU", "gap", "rules layout", "best layout"
+    );
+    let cases = [
+        ("llama13b", 4),
+        ("llama13b", 8),
+        ("llama13b-8k", 8),
+        ("llama13b-8k", 16),
+        ("llama30b", 8),
+        ("llama30b", 32),
+        ("llama30b-8k", 8),
+        ("llama30b-8k", 16),
+        ("llama65b", 8),
+        ("llama65b", 16),
+    ];
+    let mut worst_gap = 0.0f64;
+    for (model, nodes) in cases {
+        let arch = preset(model).unwrap();
+        let job = Job::new(arch, Cluster::dgx_a100(nodes), Job::paper_gbs(&arch));
+        let rules = plan_by_rules(&job, &A100);
+        let best = plan_exhaustive(&job, &A100);
+        match (rules, best) {
+            (Ok(r), Ok(b)) => {
+                let gap = b.predicted_mfu - r.predicted_mfu;
+                worst_gap = worst_gap.max(gap);
+                println!(
+                    "{:<14} {:>6} {:>13.2}% {:>13.2}% {:>7.2}%  {:<16} {:<16}",
+                    model,
+                    nodes,
+                    100.0 * r.predicted_mfu,
+                    100.0 * b.predicted_mfu,
+                    100.0 * gap,
+                    r.v.layout.annotation(),
+                    b.v.layout.annotation(),
+                );
+            }
+            _ => println!("{model:<14} {nodes:>6} infeasible"),
+        }
+    }
+    println!(
+        "\nworst rules-vs-exhaustive gap: {:.2} MFU points (paper's pitch: rules ≈ sweep)",
+        100.0 * worst_gap
+    );
+
+    section("timing: rules are the point — they skip the sweep");
+    let arch = preset("llama65b").unwrap();
+    let job = Job::new(arch, Cluster::dgx_a100(16), 2048);
+    bench("plan_by_rules(65B)", 2, 20, || {
+        std::hint::black_box(plan_by_rules(&job, &A100).unwrap());
+    });
+    bench("plan_exhaustive(65B)", 2, 20, || {
+        std::hint::black_box(plan_exhaustive(&job, &A100).unwrap());
+    });
+}

@@ -1,0 +1,38 @@
+//! Ablation — ZeRO stages (the paper's Limitations/future work: "Using
+//! different ZeRO stages or FSDP might enable even more efficient
+//! configurations due to the saved memory"). For each model we count how
+//! many layouts of the main sweep become memory-feasible under
+//! ZeRO-2/ZeRO-3 that OOM under the paper's ZeRO-1.
+
+use plx::layout::enumerate;
+use plx::sim::memory::{fits_with_zero, ZeroStage};
+use plx::sim::A100;
+use plx::sweep::main_presets;
+use plx::util::bench::section;
+
+fn main() {
+    section("ZeRO-stage ablation: additional feasible layouts vs ZeRO-1");
+    println!(
+        "{:<10} {:>8} {:>8} {:>8} {:>10} {:>10}",
+        "preset", "zero1", "zero2", "zero3", "+z2", "+z3"
+    );
+    for p in main_presets() {
+        let job = p.job();
+        let layouts = enumerate(&job, &p.tps, &p.pps, &p.mbs, &p.ckpts, &p.kernels, &p.sps);
+        let count = |stage| {
+            layouts
+                .iter()
+                .filter(|v| fits_with_zero(&job, v, &A100, stage))
+                .count()
+        };
+        let z1 = count(ZeroStage::Zero1);
+        let z2 = count(ZeroStage::Zero2);
+        let z3 = count(ZeroStage::Zero3);
+        println!(
+            "{:<10} {:>8} {:>8} {:>8} {:>+10} {:>+10}",
+            p.name, z1, z2, z3, z2 as i64 - z1 as i64, z3 as i64 - z1 as i64
+        );
+    }
+    println!("\n(feasibility only: higher stages add collectives this simulator");
+    println!(" does not charge — the memory question is what the paper poses.)");
+}

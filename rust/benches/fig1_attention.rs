@@ -1,0 +1,55 @@
+//! Figure 1 — MFU by attention-kernel implementation, per model, at each
+//! kernel's optimal 3D layout. Paper values printed alongside for shape
+//! comparison (who wins, by roughly what factor).
+
+use plx::sim::A100;
+use plx::sweep::figures::figure1;
+use plx::util::bench::{bench, section};
+
+/// Paper Figure 1 bars (percent MFU, read from Figure 1 / Appendix B).
+const PAPER: &[(&str, &str, f64)] = &[
+    ("13b-2k", "torch", 37.89),
+    ("13b-2k", "fused", 43.13),
+    ("13b-2k", "flash_attn1.0.8", 55.71),
+    ("13b-2k", "flash_attn2", 55.53),
+    ("13b-2k", "flash_attn2 + RMS kern.", 70.57),
+    ("13b-8k", "flash_attn1.0.8", 44.03),
+    ("13b-8k", "flash_attn2", 49.88),
+    ("13b-8k", "flash_attn2 + RMS kern.", 59.41),
+    ("30b-2k", "flash_attn1.0.8", 42.80),
+    ("30b-2k", "flash_attn2", 45.16),
+    ("30b-2k", "flash_attn2 + RMS kern.", 49.22),
+    ("30b-8k", "flash_attn1.0.8", 36.58),
+    ("30b-8k", "flash_attn2", 40.43),
+    ("30b-8k", "flash_attn2 + RMS kern.", 51.40),
+    ("65b-2k", "flash_attn1.0.8", 41.11),
+    ("65b-2k", "flash_attn2", 49.71),
+    ("65b-2k", "flash_attn2 + RMS kern.", 55.26),
+];
+
+fn main() {
+    section("Figure 1: attention kernels (sim vs paper)");
+    let (points, rendered) = figure1(&A100);
+    println!("{rendered}");
+
+    println!("{:<10} {:<26} {:>8} {:>8} {:>7}", "model", "kernel", "paper", "sim", "delta");
+    for (model, kernel, paper) in PAPER {
+        let sim = points
+            .iter()
+            .find(|p| p.model == *model && p.series == *kernel)
+            .and_then(|p| p.mfu)
+            .map(|m| 100.0 * m);
+        match sim {
+            Some(s) => println!(
+                "{model:<10} {kernel:<26} {paper:>8.2} {s:>8.2} {:>+7.2}",
+                s - paper
+            ),
+            None => println!("{model:<10} {kernel:<26} {paper:>8.2}      OOM"),
+        }
+    }
+
+    section("timing");
+    bench("figure1 full generation", 1, 5, || {
+        std::hint::black_box(figure1(&A100));
+    });
+}

@@ -1,0 +1,44 @@
+//! Figure 4 — MFU across (TP, PP) combinations at mb=1, no checkpointing,
+//! FA2 + RMSNorm kernel. The paper's finding: prefer PP over TP.
+
+use plx::sim::A100;
+use plx::sweep::figures::figure4;
+use plx::util::bench::{bench, section};
+
+/// Paper Figure 4 points (percent MFU) — 65B panel (Appendix B.6).
+const PAPER_65B: &[(usize, usize, f64)] = &[
+    (2, 4, 55.26),
+    (2, 8, 55.10),
+    (4, 4, 50.60),
+    (4, 2, 50.30),
+    (4, 8, 47.32),
+    (8, 2, 40.64),
+    (8, 4, 39.19),
+    (8, 8, 35.95),
+];
+
+fn main() {
+    section("Figure 4: TP vs PP (sim vs paper)");
+    let (points, rendered) = figure4(&A100);
+    println!("{rendered}");
+
+    println!("65B panel:");
+    println!("{:>4} {:>4} {:>8} {:>8} {:>7}", "tp", "pp", "paper", "sim", "delta");
+    for (tp, pp, paper) in PAPER_65B {
+        let sim = points
+            .iter()
+            .find(|p| p.model == "65b-2k" && p.series == format!("tp{tp}/pp{pp}"))
+            .and_then(|p| p.mfu)
+            .map(|m| 100.0 * m);
+        match sim {
+            Some(s) => println!("{tp:>4} {pp:>4} {paper:>8.2} {s:>8.2} {:>+7.2}", s - paper),
+            None => println!("{tp:>4} {pp:>4} {paper:>8.2}      OOM"),
+        }
+    }
+    println!("\npaper claim: (2,8) ≈ (2,4) > (4,4) > (8,2) — favor pipeline over tensor parallelism.");
+
+    section("timing");
+    bench("figure4 full generation", 1, 5, || {
+        std::hint::black_box(figure4(&A100));
+    });
+}

@@ -1,0 +1,48 @@
+//! Figure 5 — best MFU with vs without sequence parallelism (SP sweep,
+//! FA2 + RMSNorm, no checkpointing). Paper: SP pays off above 30B / 2k.
+
+use plx::sim::A100;
+use plx::sweep::figures::figure5;
+use plx::util::bench::{bench, section};
+
+/// Paper Figure 5 bars (percent MFU).
+const PAPER: &[(&str, f64, f64)] = &[
+    // (preset, with SP, without SP)
+    ("sp-13b-2k", 69.45, 69.66),
+    ("sp-13b-8k", 62.78, 62.76),
+    ("sp-30b-2k", 61.47, 61.98),
+    ("sp-30b-8k", 60.22, 54.15),
+    ("sp-65b-2k", 59.62, 57.42),
+];
+
+fn main() {
+    section("Figure 5: sequence parallelism (sim vs paper)");
+    let (points, rendered) = figure5(&A100);
+    println!("{rendered}");
+
+    println!(
+        "{:<11} {:>10} {:>10} {:>10} {:>10}",
+        "preset", "paper-sp", "sim-sp", "paper-no", "sim-no"
+    );
+    for (preset, p_sp, p_no) in PAPER {
+        let get = |series: &str| {
+            points
+                .iter()
+                .find(|p| p.model == *preset && p.series == series)
+                .and_then(|p| p.mfu)
+                .map(|m| 100.0 * m)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "{preset:<11} {p_sp:>10.2} {:>10.2} {p_no:>10.2} {:>10.2}",
+            get("sequence parallel"),
+            get("no sequence parallel")
+        );
+    }
+    println!("\npaper claim: SP gives 2-6 points on 30B-8k/65B, a wash at or below 13B/2k.");
+
+    section("timing");
+    bench("figure5 full generation", 1, 5, || {
+        std::hint::black_box(figure5(&A100));
+    });
+}

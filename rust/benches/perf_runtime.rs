@@ -1,0 +1,103 @@
+//! §Perf L3 — real-runtime hot path: PJRT stage execution, parameter
+//! literal building, optimizer chunk updates, collectives.
+//!
+//! Requires `make artifacts` (tiny config); skips gracefully otherwise.
+
+use plx::coordinator::collective::Group;
+use plx::coordinator::{train, TrainerConfig};
+use plx::runtime::{Engine, FwdOut, Manifest, StageInput, StageRuntime};
+use plx::util::bench::{bench, section};
+
+fn main() {
+    let root = plx::artifacts_root();
+    let tiny = root.join("tiny/pp1_mb2");
+    if !tiny.join("manifest.json").exists() {
+        eprintln!("perf_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+
+    section("PJRT stage execution (tiny, pp1 mb2)");
+    let manifest = Manifest::load(&tiny).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let stage = StageRuntime::load(&engine, &manifest, 0).unwrap();
+    let flat = plx::coordinator::init::init_flat_params(&manifest, 1);
+    let base = stage.base_offset();
+    let stage_flat = &flat[base..base + stage.info.param_elems];
+    let params = stage.param_buffers(stage_flat).unwrap();
+    let tokens: Vec<i32> = (0..stage.tok_elems() as i32)
+        .map(|i| i % manifest.model.vocab as i32)
+        .collect();
+    let targets = tokens.clone();
+
+    bench("stage fwd (loss)", 2, 20, || {
+        let out = stage
+            .forward(&params, &StageInput::Tokens(&tokens), Some(&targets))
+            .unwrap();
+        let FwdOut::Loss(l) = out else { panic!("expected loss") };
+        std::hint::black_box(l);
+    });
+    bench("stage bwd (recompute + grads)", 2, 20, || {
+        let out = stage
+            .backward(&params, &StageInput::Tokens(&tokens), None, Some(&targets))
+            .unwrap();
+        std::hint::black_box(out.grads.len());
+    });
+    bench("param buffer rebuild (once per step)", 2, 50, || {
+        std::hint::black_box(stage.param_buffers(stage_flat).unwrap().len());
+    });
+
+    section("optimizer chunk (adamw artifact)");
+    let adamw = engine.load(&root.join("adamw_chunk.hlo.txt")).unwrap();
+    let chunk = manifest.optimizer_chunk;
+    let zeros = vec![0.1f32; chunk];
+    bench("adamw_chunk (64k elems)", 2, 20, || {
+        let args = [
+            plx::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap(),
+            plx::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap(),
+            plx::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap(),
+            plx::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap(),
+            plx::runtime::literal::f32_scalar(1e-3),
+            plx::runtime::literal::f32_scalar(2.0),
+        ];
+        std::hint::black_box(adamw.run(&args).unwrap().len());
+    });
+
+    section("collectives (4 ranks, 1M f32)");
+    let g = Group::new(4);
+    bench("all_reduce 1M f32 x4 ranks", 1, 10, || {
+        std::thread::scope(|s| {
+            for r in 0..4 {
+                let g = &g;
+                s.spawn(move || {
+                    let mut buf = vec![r as f32; 1 << 20];
+                    g.all_reduce_sum(r, &mut buf);
+                    std::hint::black_box(buf[0]);
+                });
+            }
+        });
+    });
+
+    section("end-to-end training step (tiny, dp2 x pp2)");
+    if root.join("tiny/pp2_mb2/manifest.json").exists() {
+        let cfg = TrainerConfig {
+            model: "tiny".into(),
+            pp: 2,
+            mb: 2,
+            dp: 2,
+            num_micro: 2,
+            steps: 4,
+            lr: 1e-3,
+            warmup_steps: 0,
+            seed: 1,
+            noise: 0.1,
+            log_every: 0,
+            artifacts: root.clone(),
+            save_checkpoint: None,
+            resume_from: None,
+            schedule: Default::default(),
+        };
+        bench("train 4 steps (tiny dp2/pp2, incl. compile)", 0, 3, || {
+            std::hint::black_box(train(&cfg).unwrap().log.records.len());
+        });
+    }
+}

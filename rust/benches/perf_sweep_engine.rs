@@ -1,0 +1,53 @@
+//! §Perf L3 — sweep-engine throughput: layouts evaluated per second and
+//! end-to-end regeneration latency for the largest appendix table.
+//! DESIGN.md §Perf target: full Table 4 grid in < 50 ms.
+
+use plx::layout::{enumerate, Job, Kernel};
+use plx::model::arch::preset;
+use plx::sim::{evaluate, A100};
+use plx::sweep::{main_presets, run};
+use plx::topo::Cluster;
+use plx::util::bench::{bench, section};
+
+fn main() {
+    section("sweep engine throughput");
+    let p4 = main_presets().into_iter().next().unwrap(); // Table 4 preset
+    let m = bench("table4 sweep (enumerate+evaluate+sort)", 3, 50, || {
+        let result = run(&p4, &A100);
+        std::hint::black_box(result.sorted().len());
+    });
+    println!(
+        "-> full Table 4 grid in {:.3} ms (target < 50 ms)",
+        m.mean.as_secs_f64() * 1e3
+    );
+
+    // Raw evaluate() throughput on a fixed large layout set.
+    let arch = preset("llama65b").unwrap();
+    let job = Job::new(arch, Cluster::dgx_a100(16), 2048);
+    let layouts = enumerate(
+        &job,
+        &[1, 2, 4, 8],
+        &[1, 2, 4, 8],
+        &[1, 2, 4],
+        &[false, true],
+        &Kernel::ALL,
+        &[false, true],
+    );
+    println!("fixed layout set: {} layouts", layouts.len());
+    let m = bench("evaluate() over 65B layout set", 3, 50, || {
+        for v in &layouts {
+            std::hint::black_box(evaluate(&job, v, &A100));
+        }
+    });
+    println!(
+        "-> {:.0} layout evaluations / second",
+        layouts.len() as f64 / m.mean.as_secs_f64()
+    );
+
+    section("all-presets regeneration");
+    bench("all 10 appendix sweeps", 1, 10, || {
+        for preset in main_presets() {
+            std::hint::black_box(run(&preset, &A100).count_ok());
+        }
+    });
+}

@@ -1,0 +1,44 @@
+//! Table 2 — end-to-end SOTA comparison: our best simulated configs vs
+//! the published MPT / Megatron-LM / Meta-LLAMA numbers (external rows
+//! recomputed per Appendix A where the paper did so).
+
+use plx::sim::A100;
+use plx::sweep::table2;
+use plx::util::bench::{bench, section};
+
+fn main() {
+    section("Table 2: end-to-end training efficiency");
+    print!("{}", table2::render(&A100));
+
+    // The paper's claim: SOTA in 5 of 5 groups.
+    let rows = table2::rows(&A100);
+    let ours = |name: &str| rows.iter().find(|r| r.system == name).map(|r| r.mfu).unwrap_or(0.0);
+    let group_wins: &[(&str, &[&str])] = &[
+        ("plx LLAMA 13B (ours)", &["MPT 13B", "Megatron-LM 18B†"]),
+        ("plx LLAMA 13B 8k (ours)", &["MPT 13B 8k"]),
+        ("plx LLAMA 30B (ours)", &["MPT 30B", "Megatron-DeepSpeed 22B", "Megatron-LM 39B†"]),
+        ("plx LLAMA 30B 8k (ours)", &["MPT 30B 8k"]),
+        ("plx LLAMA 65B (ours)", &["MPT 70B", "LLAMA 65B by Meta†", "Megatron-LM 76B†"]),
+    ];
+    let mut wins = 0;
+    println!();
+    for (our_name, baselines) in group_wins {
+        let our_mfu = ours(our_name);
+        let best_baseline = baselines.iter().map(|b| ours(b)).fold(f64::MIN, f64::max);
+        let won = our_mfu > best_baseline;
+        wins += won as usize;
+        println!(
+            "group {:<28} ours {:>6.2}%  best baseline {:>6.2}%  -> {}",
+            our_name,
+            100.0 * our_mfu,
+            100.0 * best_baseline,
+            if won { "WIN" } else { "loss" }
+        );
+    }
+    println!("\nSOTA in {wins} of {} groups (paper: 5 of 5)", group_wins.len());
+
+    section("timing");
+    bench("table2 full generation", 1, 5, || {
+        std::hint::black_box(table2::rows(&A100));
+    });
+}

@@ -1,0 +1,100 @@
+//! Appendix Tables 4–8 and 10–14 — full sweeps, with agreement statistics
+//! against the paper's published rows: best-layout match, OOM-frontier
+//! agreement, and rank correlation of the runnable rows we share.
+
+use plx::layout::Kernel;
+use plx::sim::A100;
+use plx::sweep::{main_presets, report, run, seqpar_presets};
+use plx::util::bench::{bench, section};
+
+/// A few published rows per table for rank-correlation checks:
+/// (preset, mb, tp, pp, ckpt, kernel, sp, paper_mfu%).
+const PAPER_ROWS: &[(&str, usize, usize, usize, bool, &str, bool, f64)] = &[
+    ("13b-2k", 1, 1, 1, false, "flash2rms", false, 70.57),
+    ("13b-2k", 2, 2, 1, false, "flash2rms", false, 63.05),
+    ("13b-2k", 1, 1, 2, false, "flash2rms", false, 60.26),
+    ("13b-2k", 1, 2, 1, false, "flash2rms", false, 59.82),
+    ("13b-2k", 1, 1, 2, false, "flash2", false, 55.53),
+    ("13b-2k", 1, 2, 2, false, "flash2rms", false, 53.69),
+    ("13b-2k", 2, 1, 1, true, "flash2", false, 51.02),
+    ("13b-2k", 1, 2, 2, false, "fused", false, 43.13),
+    ("13b-2k", 1, 2, 2, false, "torch", false, 37.89),
+    ("65b-2k", 1, 2, 4, false, "flash2rms", false, 55.26),
+    ("65b-2k", 1, 2, 8, false, "flash2rms", false, 55.10),
+    ("65b-2k", 2, 4, 4, false, "flash2rms", false, 52.88),
+    ("65b-2k", 1, 4, 4, false, "flash2rms", false, 50.60),
+    ("65b-2k", 2, 8, 2, false, "flash2rms", false, 43.28),
+    ("65b-2k", 1, 8, 8, true, "flash2", false, 18.42),
+];
+
+fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    let rx = ranks(xs);
+    let ry = ranks(ys);
+    let n = xs.len() as f64;
+    let d2: f64 = rx.iter().zip(&ry).map(|(a, b)| (a - b) * (a - b)).sum();
+    1.0 - 6.0 * d2 / (n * (n * n - 1.0))
+}
+
+fn main() {
+    section("Appendix tables: full sweeps");
+    for preset in main_presets().into_iter().chain(seqpar_presets()) {
+        let result = run(&preset, &A100);
+        println!(
+            "{:<10} ({}) -> {} rows: {} runnable, {} OOM; best {}",
+            preset.name,
+            preset.paper_table,
+            result.rows.len(),
+            result.count_ok(),
+            result.count_oom(),
+            result
+                .best()
+                .map(|b| format!(
+                    "{} @ {:.2}% MFU",
+                    b.layout().annotation(),
+                    100.0 * b.outcome.mfu().unwrap()
+                ))
+                .unwrap_or_else(|| "none".into()),
+        );
+    }
+
+    section("rank correlation vs published rows");
+    for table in ["13b-2k", "65b-2k"] {
+        let preset = main_presets().into_iter().find(|p| p.name == table).unwrap();
+        let result = run(&preset, &A100);
+        let mut paper = Vec::new();
+        let mut sim = Vec::new();
+        for (t, mb, tp, pp, ckpt, kernel, sp, pmfu) in PAPER_ROWS.iter().filter(|r| r.0 == table) {
+            let _ = t;
+            let k = Kernel::parse(kernel).unwrap();
+            let found = result.rows.iter().find(|r| {
+                let l = r.layout();
+                l.mb == *mb && l.tp == *tp && l.pp == *pp && l.ckpt == *ckpt && l.kernel == k && l.sp == *sp
+            });
+            if let Some(row) = found {
+                if let Some(m) = row.outcome.mfu() {
+                    paper.push(*pmfu);
+                    sim.push(100.0 * m);
+                }
+            }
+        }
+        let rho = spearman(&paper, &sim);
+        println!("{table}: Spearman rho = {rho:.3} over {} shared runnable rows", paper.len());
+    }
+
+    section("timing: full appendix regeneration");
+    bench("all 10 sweeps + render", 1, 3, || {
+        for preset in main_presets().into_iter().chain(seqpar_presets()) {
+            let result = run(&preset, &A100);
+            std::hint::black_box(report::render(&result, true));
+        }
+    });
+}

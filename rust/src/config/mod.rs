@@ -1,0 +1,216 @@
+//! Config system (S16): JSON config files + CLI overrides, Megatron-style.
+//!
+//! A run config names a model preset, a cluster, the batch arithmetic and
+//! layout, plus trainer hyperparameters. Files are JSON (parsed with the
+//! in-house `util::json` — serde is unavailable offline); every field can
+//! be overridden from the CLI (`plx train --config cfg.json --steps 50`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TrainerConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Full run configuration (superset of `TrainerConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    pub pp: usize,
+    pub mb: usize,
+    pub dp: usize,
+    pub num_micro: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    pub noise: f64,
+    pub log_every: usize,
+    pub artifacts: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            pp: 1,
+            mb: 2,
+            dp: 1,
+            num_micro: 2,
+            steps: 10,
+            lr: 3e-3,
+            warmup_steps: 5,
+            seed: 42,
+            noise: 0.05,
+            log_every: 1,
+            artifacts: crate::artifacts_root(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let mut c = RunConfig::default();
+        c.apply_json(&j)?;
+        Ok(c)
+    }
+
+    fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "model" => self.model = val.as_str().context("model")?.to_string(),
+                "pp" => self.pp = val.as_usize().context("pp")?,
+                "mb" => self.mb = val.as_usize().context("mb")?,
+                "dp" => self.dp = val.as_usize().context("dp")?,
+                "num_micro" => self.num_micro = val.as_usize().context("num_micro")?,
+                "steps" => self.steps = val.as_usize().context("steps")?,
+                "lr" => self.lr = val.as_f64().context("lr")?,
+                "warmup_steps" => self.warmup_steps = val.as_usize().context("warmup_steps")?,
+                "seed" => self.seed = val.as_u64().context("seed")?,
+                "noise" => self.noise = val.as_f64().context("noise")?,
+                "log_every" => self.log_every = val.as_usize().context("log_every")?,
+                "artifacts" => self.artifacts = PathBuf::from(val.as_str().context("artifacts")?),
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` CLI overrides.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        self.pp = args.get_usize("pp", self.pp).map_err(anyhow::Error::msg)?;
+        self.mb = args.get_usize("mb", self.mb).map_err(anyhow::Error::msg)?;
+        self.dp = args.get_usize("dp", self.dp).map_err(anyhow::Error::msg)?;
+        self.num_micro = args
+            .get_usize("num-micro", self.num_micro)
+            .map_err(anyhow::Error::msg)?;
+        self.steps = args.get_usize("steps", self.steps).map_err(anyhow::Error::msg)?;
+        self.lr = args.get_f64("lr", self.lr).map_err(anyhow::Error::msg)?;
+        self.warmup_steps = args
+            .get_usize("warmup", self.warmup_steps)
+            .map_err(anyhow::Error::msg)?;
+        self.seed = args.get_usize("seed", self.seed as usize).map_err(anyhow::Error::msg)? as u64;
+        self.noise = args.get_f64("noise", self.noise).map_err(anyhow::Error::msg)?;
+        self.log_every = args
+            .get_usize("log-every", self.log_every)
+            .map_err(anyhow::Error::msg)?;
+        if let Some(a) = args.get("artifacts") {
+            self.artifacts = PathBuf::from(a);
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.pp == 0 || self.dp == 0 || self.mb == 0 || self.num_micro == 0 {
+            bail!("pp/dp/mb/num_micro must be positive");
+        }
+        if self.steps == 0 {
+            bail!("steps must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.noise) {
+            bail!("noise must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    pub fn to_trainer(&self) -> TrainerConfig {
+        TrainerConfig {
+            model: self.model.clone(),
+            pp: self.pp,
+            mb: self.mb,
+            dp: self.dp,
+            num_micro: self.num_micro,
+            steps: self.steps,
+            lr: self.lr as f32,
+            warmup_steps: self.warmup_steps,
+            seed: self.seed,
+            noise: self.noise,
+            log_every: self.log_every,
+            artifacts: self.artifacts.clone(),
+            save_checkpoint: None,
+            resume_from: None,
+            schedule: Default::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::{Args, Spec};
+
+    const SPEC: Spec = Spec {
+        options: &[
+            "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed", "noise",
+            "log-every", "artifacts", "config",
+        ],
+        flags: &[],
+    };
+
+    #[test]
+    fn json_roundtrip() {
+        let dir = std::env::temp_dir().join("plx_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"model": "e2e100m", "pp": 2, "steps": 100, "lr": 0.001}"#).unwrap();
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.model, "e2e100m");
+        assert_eq!(c.pp, 2);
+        assert_eq!(c.steps, 100);
+        assert_eq!(c.lr, 0.001);
+        // untouched keys keep defaults
+        assert_eq!(c.mb, RunConfig::default().mb);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let dir = std::env::temp_dir().join("plx_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"modle": "typo"}"#).unwrap();
+        assert!(RunConfig::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let mut c = RunConfig::default();
+        let argv: Vec<String> = ["--steps", "77", "--model", "demo20m", "--lr", "0.01"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &SPEC).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.steps, 77);
+        assert_eq!(c.model, "demo20m");
+        assert_eq!(c.lr, 0.01);
+    }
+
+    #[test]
+    fn validation_catches_zeroes() {
+        let mut c = RunConfig::default();
+        c.pp = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.noise = 1.5;
+        assert!(c.validate().is_err());
+        assert!(RunConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn trainer_conversion_preserves_fields() {
+        let c = RunConfig { steps: 9, dp: 2, ..Default::default() };
+        let t = c.to_trainer();
+        assert_eq!(t.steps, 9);
+        assert_eq!(t.dp, 2);
+        assert_eq!(t.global_batch(), 2 * c.mb * c.num_micro);
+    }
+}

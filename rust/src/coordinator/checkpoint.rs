@@ -1,0 +1,205 @@
+//! Training checkpoints: save/restore the flat parameter vector and
+//! trainer position so runs survive restarts (a framework necessity the
+//! paper's 10-step benchmark protocol sidesteps, but any adopter needs).
+//!
+//! Format: a small self-describing binary file —
+//! `PLXCKPT1` magic, a JSON header (model name, step, param count,
+//! seed), then the raw little-endian f32 parameter payload. The header
+//! is validated against the live manifest on load so a checkpoint can
+//! never be restored into the wrong architecture.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"PLXCKPT1";
+
+/// Everything needed to resume a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: usize,
+    pub seed: u64,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Serialize to `path` (atomic: write to a temp file, then rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = format!(
+            r#"{{"model": "{}", "step": {}, "seed": {}, "param_elems": {}}}"#,
+            self.model,
+            self.step,
+            self.seed,
+            self.params.len()
+        );
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            // Safe: f32 -> bytes reinterpretation of a contiguous slice.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    self.params.as_ptr() as *const u8,
+                    self.params.len() * 4,
+                )
+            };
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path).context("renaming checkpoint into place")?;
+        Ok(())
+    }
+
+    /// Load and validate structure (magic, header, payload length).
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).context("reading magic")?;
+        if &magic != MAGIC {
+            bail!("{} is not a plx checkpoint", path.display());
+        }
+        let mut len = [0u8; 8];
+        f.read_exact(&mut len)?;
+        let hlen = u64::from_le_bytes(len) as usize;
+        if hlen > 1 << 20 {
+            bail!("implausible header length {hlen}");
+        }
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf).context("header utf8")?)
+            .context("parsing checkpoint header")?;
+        let model = header
+            .get("model")
+            .as_str()
+            .context("header: model")?
+            .to_string();
+        let step = header.get("step").as_usize().context("header: step")?;
+        let seed = header.get("seed").as_u64().context("header: seed")?;
+        let elems = header
+            .get("param_elems")
+            .as_usize()
+            .context("header: param_elems")?;
+
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        if payload.len() != elems * 4 {
+            bail!(
+                "checkpoint payload {} bytes, header promises {}",
+                payload.len(),
+                elems * 4
+            );
+        }
+        let mut params = vec![0.0f32; elems];
+        // Safe: byte slice -> f32 copy with explicit length check above.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                payload.as_ptr(),
+                params.as_mut_ptr() as *mut u8,
+                payload.len(),
+            );
+        }
+        Ok(Checkpoint { model, step, seed, params })
+    }
+
+    /// Guard against restoring into the wrong architecture/build.
+    pub fn validate_against(&self, manifest: &Manifest) -> Result<()> {
+        if self.model != manifest.model.name {
+            bail!(
+                "checkpoint is for model '{}', artifacts are '{}'",
+                self.model,
+                manifest.model.name
+            );
+        }
+        if self.params.len() != manifest.total_param_elems {
+            bail!(
+                "checkpoint has {} params, manifest wants {}",
+                self.params.len(),
+                manifest.total_param_elems
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt(n: usize) -> Checkpoint {
+        Checkpoint {
+            model: "tiny".into(),
+            step: 17,
+            seed: 42,
+            params: (0..n).map(|i| (i as f32 * 0.1).sin()).collect(),
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("plx_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let c = ckpt(1000);
+        let p = tmp("roundtrip.ckpt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let p = tmp("garbage.ckpt");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let c = ckpt(100);
+        let p = tmp("trunc.ckpt");
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 40]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn validate_against_manifest() {
+        let Some(m) = crate::artifacts_root()
+            .join("tiny/pp2_mb2")
+            .join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&crate::artifacts_root().join("tiny/pp2_mb2")).unwrap())
+        else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut c = ckpt(m.total_param_elems);
+        assert!(c.validate_against(&m).is_ok());
+        c.model = "llama65b".into();
+        assert!(c.validate_against(&m).is_err());
+        c.model = "tiny".into();
+        c.params.pop();
+        assert!(c.validate_against(&m).is_err());
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_tmp() {
+        let c = ckpt(10);
+        let p = tmp("atomic.ckpt");
+        c.save(&p).unwrap();
+        assert!(!p.with_extension("tmp").exists());
+    }
+}

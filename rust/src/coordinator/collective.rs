@@ -1,0 +1,350 @@
+//! In-process collectives (S11): the NCCL substitute.
+//!
+//! Worker threads (one per simulated rank) synchronize through a shared
+//! [`Group`]: rank-ordered accumulation makes every collective
+//! **deterministic** (floating-point reduction order is fixed), unlike
+//! real NCCL — useful for the pipeline-vs-monolith equivalence tests.
+//!
+//! Supported: all-reduce (sum/mean), all-gather, reduce-scatter,
+//! broadcast, barrier. Latency/bandwidth of the real fabric is modeled in
+//! `sim::cluster`, not here — these collectives are about *dataflow
+//! fidelity* for the real training runtime.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Accumulate,
+    Read,
+}
+
+struct State {
+    buf: Vec<f32>,
+    phase: Phase,
+    arrived: usize,
+    read: usize,
+}
+
+/// One collective group of `n` ranks over f32 buffers.
+pub struct Group {
+    n: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Group {
+    /// Create a group for `n` ranks; `max_elems` caps buffer reuse size.
+    pub fn new(n: usize) -> Arc<Group> {
+        assert!(n > 0);
+        Arc::new(Group {
+            n,
+            state: Mutex::new(State {
+                buf: Vec::new(),
+                phase: Phase::Accumulate,
+                arrived: 0,
+                read: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.n
+    }
+
+    /// Deterministic (rank-ordered) all-reduce sum, in place.
+    /// Every rank must pass a buffer of identical length.
+    pub fn all_reduce_sum(&self, rank: usize, buf: &mut [f32]) {
+        assert!(rank < self.n);
+        if self.n == 1 {
+            return;
+        }
+        // Phase 1: accumulate in rank order.
+        {
+            let mut st = self.state.lock().unwrap();
+            while st.phase != Phase::Accumulate || st.arrived != rank {
+                st = self.cv.wait(st).unwrap();
+            }
+            if rank == 0 {
+                st.buf.clear();
+                st.buf.extend_from_slice(buf);
+            } else {
+                assert_eq!(st.buf.len(), buf.len(), "all_reduce length mismatch");
+                for (acc, x) in st.buf.iter_mut().zip(buf.iter()) {
+                    *acc += *x;
+                }
+            }
+            st.arrived += 1;
+            if st.arrived == self.n {
+                st.phase = Phase::Read;
+                st.read = 0;
+            }
+            self.cv.notify_all();
+        }
+        // Phase 2: read back.
+        let mut st = self.state.lock().unwrap();
+        while st.phase != Phase::Read {
+            st = self.cv.wait(st).unwrap();
+        }
+        buf.copy_from_slice(&st.buf);
+        st.read += 1;
+        if st.read == self.n {
+            st.phase = Phase::Accumulate;
+            st.arrived = 0;
+        }
+        self.cv.notify_all();
+    }
+
+    /// All-reduce then divide by the group size (gradient averaging).
+    pub fn all_reduce_mean(&self, rank: usize, buf: &mut [f32]) {
+        self.all_reduce_sum(rank, buf);
+        let inv = 1.0 / self.n as f32;
+        for x in buf.iter_mut() {
+            *x *= inv;
+        }
+    }
+
+    /// All-gather equal-size shards: `out.len() == shard.len() * n`.
+    pub fn all_gather(&self, rank: usize, shard: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), shard.len() * self.n, "all_gather size");
+        if self.n == 1 {
+            out.copy_from_slice(shard);
+            return;
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            while st.phase != Phase::Accumulate || st.arrived != rank {
+                st = self.cv.wait(st).unwrap();
+            }
+            if rank == 0 {
+                st.buf.clear();
+                st.buf.resize(out.len(), 0.0);
+            }
+            let lo = rank * shard.len();
+            st.buf[lo..lo + shard.len()].copy_from_slice(shard);
+            st.arrived += 1;
+            if st.arrived == self.n {
+                st.phase = Phase::Read;
+                st.read = 0;
+            }
+            self.cv.notify_all();
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.phase != Phase::Read {
+            st = self.cv.wait(st).unwrap();
+        }
+        out.copy_from_slice(&st.buf);
+        st.read += 1;
+        if st.read == self.n {
+            st.phase = Phase::Accumulate;
+            st.arrived = 0;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Reduce-scatter (sum): each rank contributes the full buffer and
+    /// receives its `len/n` shard (ZeRO-1's gradient reduction pattern).
+    pub fn reduce_scatter_sum(&self, rank: usize, buf: &[f32], shard_out: &mut [f32]) {
+        assert_eq!(buf.len() % self.n, 0, "reduce_scatter length");
+        let shard_len = buf.len() / self.n;
+        assert_eq!(shard_out.len(), shard_len);
+        if self.n == 1 {
+            shard_out.copy_from_slice(buf);
+            return;
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            while st.phase != Phase::Accumulate || st.arrived != rank {
+                st = self.cv.wait(st).unwrap();
+            }
+            if rank == 0 {
+                st.buf.clear();
+                st.buf.extend_from_slice(buf);
+            } else {
+                for (acc, x) in st.buf.iter_mut().zip(buf.iter()) {
+                    *acc += *x;
+                }
+            }
+            st.arrived += 1;
+            if st.arrived == self.n {
+                st.phase = Phase::Read;
+                st.read = 0;
+            }
+            self.cv.notify_all();
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.phase != Phase::Read {
+            st = self.cv.wait(st).unwrap();
+        }
+        let lo = rank * shard_len;
+        shard_out.copy_from_slice(&st.buf[lo..lo + shard_len]);
+        st.read += 1;
+        if st.read == self.n {
+            st.phase = Phase::Accumulate;
+            st.arrived = 0;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Broadcast from `root` (in place on every rank).
+    pub fn broadcast(&self, rank: usize, root: usize, buf: &mut [f32]) {
+        if self.n == 1 {
+            return;
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            while st.phase != Phase::Accumulate || st.arrived != rank {
+                st = self.cv.wait(st).unwrap();
+            }
+            if rank == root {
+                st.buf.clear();
+                st.buf.extend_from_slice(buf);
+            }
+            st.arrived += 1;
+            if st.arrived == self.n {
+                st.phase = Phase::Read;
+                st.read = 0;
+            }
+            self.cv.notify_all();
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.phase != Phase::Read {
+            st = self.cv.wait(st).unwrap();
+        }
+        if rank != root {
+            buf.copy_from_slice(&st.buf);
+        }
+        st.read += 1;
+        if st.read == self.n {
+            st.phase = Phase::Accumulate;
+            st.arrived = 0;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Barrier: all ranks must arrive before any returns.
+    pub fn barrier(&self, rank: usize) {
+        let mut empty: [f32; 0] = [];
+        // Reuse broadcast's two-phase protocol with an empty payload.
+        self.broadcast(rank, 0, &mut empty);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_ranks<F: Fn(usize) + Sync>(n: usize, f: F) {
+        thread::scope(|s| {
+            for r in 0..n {
+                let f = &f;
+                s.spawn(move || f(r));
+            }
+        });
+    }
+
+    #[test]
+    fn all_reduce_sums_deterministically() {
+        let g = Group::new(4);
+        let results: Mutex<Vec<Vec<f32>>> = Mutex::new(vec![]);
+        run_ranks(4, |r| {
+            let mut buf = vec![r as f32 + 1.0; 8];
+            g.all_reduce_sum(r, &mut buf);
+            results.lock().unwrap().push(buf);
+        });
+        for buf in results.lock().unwrap().iter() {
+            assert!(buf.iter().all(|&x| x == 10.0)); // 1+2+3+4
+        }
+    }
+
+    #[test]
+    fn all_reduce_mean_averages() {
+        let g = Group::new(2);
+        run_ranks(2, |r| {
+            let mut buf = vec![if r == 0 { 0.0 } else { 2.0 }; 4];
+            g.all_reduce_mean(r, &mut buf);
+            assert!(buf.iter().all(|&x| x == 1.0));
+        });
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let g = Group::new(3);
+        run_ranks(3, |r| {
+            let shard = vec![r as f32; 2];
+            let mut out = vec![-1.0; 6];
+            g.all_gather(r, &shard, &mut out);
+            assert_eq!(out, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_gives_each_rank_its_shard() {
+        let g = Group::new(2);
+        run_ranks(2, |r| {
+            let buf: Vec<f32> = (0..4).map(|i| (i + r) as f32).collect();
+            let mut shard = vec![0.0; 2];
+            g.reduce_scatter_sum(r, &buf, &mut shard);
+            // sum of [0,1,2,3] and [1,2,3,4] = [1,3,5,7]
+            if r == 0 {
+                assert_eq!(shard, vec![1.0, 3.0]);
+            } else {
+                assert_eq!(shard, vec![5.0, 7.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let g = Group::new(3);
+        run_ranks(3, |r| {
+            let mut buf = if r == 2 { vec![9.0; 4] } else { vec![0.0; 4] };
+            g.broadcast(r, 2, &mut buf);
+            assert!(buf.iter().all(|&x| x == 9.0));
+        });
+    }
+
+    #[test]
+    fn repeated_collectives_do_not_deadlock() {
+        let g = Group::new(4);
+        run_ranks(4, |r| {
+            for i in 0..50 {
+                let mut buf = vec![r as f32 + i as f32; 16];
+                g.all_reduce_sum(r, &mut buf);
+                g.barrier(r);
+            }
+        });
+    }
+
+    #[test]
+    fn single_rank_group_is_identity() {
+        let g = Group::new(1);
+        let mut buf = vec![3.0; 4];
+        g.all_reduce_sum(0, &mut buf);
+        assert_eq!(buf, vec![3.0; 4]);
+        let mut out = vec![0.0; 4];
+        g.all_gather(0, &buf, &mut out);
+        assert_eq!(out, buf);
+    }
+
+    #[test]
+    fn reduction_order_is_rank_order() {
+        // With f32, ((a+b)+c) != (a+(b+c)) in general; verify the result
+        // equals the rank-0-first ordering every time.
+        let g = Group::new(3);
+        let vals = [1.0e-8f32, 1.0, -1.0];
+        let expected = ((vals[0] + vals[1]) + vals[2]); // rank order
+        for _ in 0..10 {
+            let got = Mutex::new(0.0f32);
+            run_ranks(3, |r| {
+                let mut buf = vec![vals[r]];
+                g.all_reduce_sum(r, &mut buf);
+                if r == 0 {
+                    *got.lock().unwrap() = buf[0];
+                }
+            });
+            assert_eq!(*got.lock().unwrap(), expected);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Deterministic parameter initialization for the flat fp32 store.
+//!
+//! Matches the *distributions* of `python/compile/model.py::init_params`
+//! (N(0, 0.02), residual projections scaled by 1/sqrt(2·layers), norms at
+//! 1.0) without needing JAX's RNG: training starts from scratch in Rust,
+//! so bit-equality with Python is not required — only a healthy init.
+
+use crate::runtime::artifact::Manifest;
+use crate::util::prng::Rng;
+
+const INIT_STD: f64 = 0.02;
+
+/// Build the full flat parameter vector described by the manifest.
+pub fn init_flat_params(manifest: &Manifest, seed: u64) -> Vec<f32> {
+    let mut flat = vec![0.0f32; manifest.total_param_elems];
+    let resid_scale = 1.0 / (2.0 * manifest.model.layers as f64).sqrt();
+    for stage in &manifest.stages {
+        for p in &stage.params {
+            let dst = &mut flat[p.offset..p.offset + p.size];
+            let leaf = p.name.rsplit('.').next().unwrap_or(&p.name);
+            if leaf.ends_with("norm") || leaf == "final_norm" {
+                dst.fill(1.0);
+                continue;
+            }
+            let scale = if leaf == "wo" || leaf == "w_down" {
+                INIT_STD * resid_scale
+            } else {
+                INIT_STD
+            };
+            // Seed per parameter so layout changes don't reshuffle others.
+            let mut rng = Rng::new(seed ^ hash_name(&p.name));
+            for x in dst.iter_mut() {
+                *x = (rng.normal() * scale) as f32;
+            }
+        }
+    }
+    flat
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn tiny_manifest() -> Option<Manifest> {
+        let d = crate::artifacts_root().join("tiny/pp2_mb2");
+        d.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&d).unwrap())
+    }
+
+    #[test]
+    fn init_statistics_match_spec() {
+        let Some(m) = tiny_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let flat = init_flat_params(&m, 7);
+        assert_eq!(flat.len(), m.total_param_elems);
+
+        for stage in &m.stages {
+            for p in &stage.params {
+                let vals = &flat[p.offset..p.offset + p.size];
+                let leaf = p.name.rsplit('.').next().unwrap();
+                if leaf.ends_with("norm") {
+                    assert!(vals.iter().all(|&v| v == 1.0), "{} must init to 1", p.name);
+                } else {
+                    let mean: f64 = vals.iter().map(|&v| v as f64).sum::<f64>() / vals.len() as f64;
+                    let std: f64 = (vals.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>()
+                        / vals.len() as f64)
+                        .sqrt();
+                    assert!(mean.abs() < 0.01, "{}: mean {mean}", p.name);
+                    assert!(std > 1e-4 && std < 0.05, "{}: std {std}", p.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let Some(m) = tiny_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(init_flat_params(&m, 1), init_flat_params(&m, 1));
+        assert_ne!(init_flat_params(&m, 1), init_flat_params(&m, 2));
+    }
+}

@@ -1,0 +1,220 @@
+//! 1F1B (PipeDream-flush) schedule generator (S12).
+//!
+//! Produces, for each pipeline stage, the ordered list of forward/backward
+//! micro-batch operations. Both the real trainer and the analytic
+//! simulator agree on this schedule; the paper's §2 "PipeDream" and §4.3's
+//! pipeline-bubble discussion are about exactly this ordering.
+//!
+//! Properties (proved by tests below):
+//! * every stage runs each micro-batch exactly once fwd and once bwd;
+//! * the in-flight activation count on stage `p` never exceeds
+//!   `min(pp - p, m)` (the 1F1B memory bound);
+//! * the global op order is deadlock-free given FIFO channels
+//!   (simulated execution test).
+
+/// One scheduled operation on a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Forward of micro-batch `i`.
+    Fwd(usize),
+    /// Backward of micro-batch `i`.
+    Bwd(usize),
+}
+
+/// The 1F1B schedule for stage `p` of `pp` with `m` micro-batches.
+pub fn one_f1b(p: usize, pp: usize, m: usize) -> Vec<Op> {
+    assert!(p < pp, "stage {p} out of range for pp={pp}");
+    let warmup = (pp - 1 - p).min(m);
+    let mut ops = Vec::with_capacity(2 * m);
+    for i in 0..warmup {
+        ops.push(Op::Fwd(i));
+    }
+    // Steady state: one forward, one backward.
+    for i in warmup..m {
+        ops.push(Op::Fwd(i));
+        ops.push(Op::Bwd(i - warmup));
+    }
+    // Drain remaining backwards.
+    for i in (m - warmup.min(m))..m {
+        ops.push(Op::Bwd(i));
+    }
+    ops
+}
+
+/// GPipe-style baseline (all forwards then all backwards) — the
+/// "naive schedule" comparator (S21). Larger bubble & activation memory.
+pub fn gpipe(p: usize, pp: usize, m: usize) -> Vec<Op> {
+    assert!(p < pp);
+    let mut ops = Vec::with_capacity(2 * m);
+    for i in 0..m {
+        ops.push(Op::Fwd(i));
+    }
+    for i in (0..m).rev() {
+        ops.push(Op::Bwd(i));
+    }
+    ops
+}
+
+/// Peak number of in-flight activations (fwd done, bwd not yet) a
+/// schedule holds on one stage.
+pub fn peak_in_flight(ops: &[Op]) -> usize {
+    let mut live = 0usize;
+    let mut peak = 0usize;
+    for op in ops {
+        match op {
+            Op::Fwd(_) => {
+                live += 1;
+                peak = peak.max(live);
+            }
+            Op::Bwd(_) => live -= 1,
+        }
+    }
+    peak
+}
+
+/// Simulate schedule execution across stages with FIFO dependencies and
+/// report the number of "time slots" used (unit-time ops, infinite
+/// channels). Used to verify deadlock freedom and bubble size.
+pub fn simulate_slots(pp: usize, m: usize, sched: impl Fn(usize) -> Vec<Op>) -> Option<usize> {
+    // ready_fwd[p][i]: fwd of micro i on stage p has its input available.
+    // fwd input: stage 0 always; stage p>0 after fwd(i) on p-1.
+    // bwd input: stage pp-1 after its own fwd(i); stage p after bwd(i) on p+1
+    //            (and its own fwd(i)).
+    let scheds: Vec<Vec<Op>> = (0..pp).map(&sched).collect();
+    let mut pos = vec![0usize; pp]; // next op index per stage
+    let mut fwd_done = vec![vec![false; m]; pp];
+    let mut bwd_done = vec![vec![false; m]; pp];
+    let mut slots = 0usize;
+    let total: usize = scheds.iter().map(|s| s.len()).sum();
+    let mut completed = 0usize;
+
+    while completed < total {
+        let mut progressed = false;
+        let mut fired: Vec<(usize, Op)> = Vec::new();
+        // Each slot: every stage may fire its next op if deps are met.
+        for p in 0..pp {
+            if pos[p] >= scheds[p].len() {
+                continue;
+            }
+            let op = scheds[p][pos[p]];
+            let ready = match op {
+                Op::Fwd(i) => p == 0 || fwd_done[p - 1][i],
+                Op::Bwd(i) => {
+                    fwd_done[p][i] && (p == pp - 1 || bwd_done[p + 1][i])
+                }
+            };
+            if ready {
+                fired.push((p, op));
+                pos[p] += 1;
+                progressed = true;
+                completed += 1;
+            }
+        }
+        // Commit completions after the slot (ops in a slot are concurrent).
+        for (p, op) in fired {
+            match op {
+                Op::Fwd(i) => fwd_done[p][i] = true,
+                Op::Bwd(i) => bwd_done[p][i] = true,
+            }
+        }
+        if !progressed {
+            return None; // deadlock
+        }
+        slots += 1;
+    }
+    Some(slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn every_micro_exactly_once_each_direction() {
+        for pp in 1..=8 {
+            for m in 1..=16 {
+                for p in 0..pp {
+                    let ops = one_f1b(p, pp, m);
+                    assert_eq!(ops.len(), 2 * m);
+                    for i in 0..m {
+                        assert_eq!(ops.iter().filter(|o| **o == Op::Fwd(i)).count(), 1);
+                        assert_eq!(ops.iter().filter(|o| **o == Op::Bwd(i)).count(), 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwd_precedes_bwd_per_micro() {
+        for pp in 1..=6 {
+            for p in 0..pp {
+                let ops = one_f1b(p, pp, 8);
+                for i in 0..8 {
+                    let fpos = ops.iter().position(|o| *o == Op::Fwd(i)).unwrap();
+                    let bpos = ops.iter().position(|o| *o == Op::Bwd(i)).unwrap();
+                    assert!(fpos < bpos);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_bounded_by_stage_depth() {
+        // The whole point of 1F1B (paper §2): stage p keeps at most
+        // pp - p in-flight micro-batches, vs GPipe's m.
+        for pp in 1..=8usize {
+            for m in 1..=32usize {
+                for p in 0..pp {
+                    let bound = (pp - p).min(m);
+                    assert!(
+                        peak_in_flight(&one_f1b(p, pp, m)) <= bound,
+                        "pp={pp} m={m} p={p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpipe_holds_all_micros() {
+        assert_eq!(peak_in_flight(&gpipe(0, 4, 16)), 16);
+        assert_eq!(peak_in_flight(&one_f1b(0, 4, 16)), 4);
+    }
+
+    #[test]
+    fn deadlock_free_and_bubble_matches_formula() {
+        for pp in 1..=6usize {
+            for m in pp..=24 {
+                let slots = simulate_slots(pp, m, |p| one_f1b(p, pp, m)).expect("deadlock");
+                // ideal 1F1B makespan (unit fwd == unit bwd): 2m + 2(pp-1)
+                assert_eq!(slots, 2 * m + 2 * (pp - 1), "pp={pp} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn gpipe_is_never_faster() {
+        for pp in 2..=5usize {
+            for m in pp..=16 {
+                let f1b = simulate_slots(pp, m, |p| one_f1b(p, pp, m)).unwrap();
+                let gp = simulate_slots(pp, m, |p| gpipe(p, pp, m)).unwrap();
+                assert!(gp >= f1b, "pp={pp} m={m}: gpipe {gp} < 1f1b {f1b}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_shapes() {
+        prop::check_cases(0x1F1B, 128, |rng| {
+            let pp = rng.range(1, 9);
+            let m = rng.range(1, 33);
+            let p = rng.range(0, pp);
+            let ops = one_f1b(p, pp, m);
+            assert_eq!(ops.len(), 2 * m);
+            assert!(peak_in_flight(&ops) <= (pp - p).min(m).max(1));
+            assert!(simulate_slots(pp, m, |p| one_f1b(p, pp, m)).is_some());
+        });
+    }
+}

@@ -1,0 +1,413 @@
+//! The distributed trainer (S15): DP × PP over PJRT CPU workers.
+//!
+//! One OS thread per simulated rank `(d, p)` — each owns its own PJRT
+//! client and compiled stage executables (exactly like a NCCL rank owns
+//! its CUDA context; the `xla` crate's client is `Rc`-based and
+//! thread-local anyway). Dataflow:
+//!
+//! * pipeline edges: mpsc channels carrying activation / cotangent
+//!   buffers between stages `(d, p) -> (d, p±1)`;
+//! * gradient reduction + ZeRO-1: deterministic collectives over the
+//!   per-stage DP [`Group`]s;
+//! * schedule: true 1F1B from [`pipeline::one_f1b`] (backward recomputes
+//!   the stage forward, so only stage inputs are kept in flight);
+//! * head-stage forward is a store-only no-op: the loss comes out of the
+//!   backward artifact, avoiding a redundant forward execution.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::collective::Group;
+use crate::coordinator::init::init_flat_params;
+use crate::coordinator::pipeline::{gpipe, one_f1b, Op};
+use crate::coordinator::zero::Zero1;
+use crate::data::SyntheticCorpus;
+use crate::metrics::{StepRecord, TrainLog};
+use crate::runtime::{Engine, FwdOut, Manifest, StageInput, StageRuntime};
+
+/// Pipeline schedule flavour (S21: GPipe is the naive baseline — same
+/// gradients by construction, larger activation footprint and bubble).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    #[default]
+    OneF1B,
+    GPipe,
+}
+
+/// Everything needed to launch a training run.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Model/config name under the artifacts root (e.g. "tiny", "e2e100m").
+    pub model: String,
+    pub pp: usize,
+    pub mb: usize,
+    pub dp: usize,
+    /// Gradient-accumulation micro-batches per replica per step.
+    pub num_micro: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    /// Markov-corpus noise (0 = fully learnable chain).
+    pub noise: f64,
+    /// Print a log line every N steps (0 = silent).
+    pub log_every: usize,
+    pub artifacts: PathBuf,
+    /// Save a checkpoint of the final parameters here (optional).
+    pub save_checkpoint: Option<PathBuf>,
+    /// Initialize parameters from this checkpoint instead of random init.
+    pub resume_from: Option<PathBuf>,
+    /// Pipeline schedule (1F1B default; GPipe as the naive baseline).
+    pub schedule: Schedule,
+}
+
+impl TrainerConfig {
+    pub fn global_batch(&self) -> usize {
+        self.dp * self.mb * self.num_micro
+    }
+
+    /// Linear warmup then constant.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.warmup_steps == 0 || step >= self.warmup_steps {
+            self.lr
+        } else {
+            self.lr * (step + 1) as f32 / self.warmup_steps as f32
+        }
+    }
+}
+
+/// Outcome of a run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub log: TrainLog,
+    pub entropy_floor: f64,
+    pub global_batch: usize,
+    pub seq: usize,
+}
+
+enum Up {
+    /// (step, dp_rank, mean micro loss)
+    Loss(usize, usize, f64),
+    /// Final stage parameters from the dp=0 worker (stage index, data).
+    Params(usize, Vec<f32>),
+    Error(String),
+}
+
+/// Run distributed training per the config. Blocks until finished.
+pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
+    let manifest = Manifest::locate(&cfg.artifacts, &cfg.model, cfg.pp, cfg.mb)?;
+    if manifest.pp != cfg.pp || manifest.mb != cfg.mb {
+        bail!("manifest pp/mb mismatch");
+    }
+    let adamw_path = cfg.artifacts.join("adamw_chunk.hlo.txt");
+    if !adamw_path.exists() {
+        bail!("missing {} — run make artifacts", adamw_path.display());
+    }
+    let seq = manifest.model.seq;
+    let vocab = manifest.model.vocab;
+
+    // Shared initial parameters (every DP replica starts identical),
+    // either random or restored from a checkpoint.
+    let init = Arc::new(match &cfg.resume_from {
+        Some(path) => {
+            let ckpt = crate::coordinator::checkpoint::Checkpoint::load(path)?;
+            ckpt.validate_against(&manifest)?;
+            ckpt.params
+        }
+        None => init_flat_params(&manifest, cfg.seed),
+    });
+    let corpus = SyntheticCorpus::new(vocab, cfg.seed ^ 0xDA7A, cfg.noise);
+    let entropy_floor = corpus.entropy_floor();
+
+    // DP collective group per pipeline stage.
+    let dp_groups: Vec<Arc<Group>> = (0..cfg.pp).map(|_| Group::new(cfg.dp)).collect();
+
+    // Pipeline channels per replica: fwd p->p+1, bwd p+1->p.
+    struct Chans {
+        fwd_in: Option<mpsc::Receiver<Vec<f32>>>,
+        fwd_out: Option<mpsc::Sender<Vec<f32>>>,
+        bwd_in: Option<mpsc::Receiver<Vec<f32>>>,
+        bwd_out: Option<mpsc::Sender<Vec<f32>>>,
+    }
+    let mut chan_grid: Vec<Vec<Chans>> = Vec::with_capacity(cfg.dp);
+    for _ in 0..cfg.dp {
+        let mut row: Vec<Chans> = (0..cfg.pp)
+            .map(|_| Chans { fwd_in: None, fwd_out: None, bwd_in: None, bwd_out: None })
+            .collect();
+        for p in 0..cfg.pp.saturating_sub(1) {
+            let (ftx, frx) = mpsc::channel::<Vec<f32>>();
+            let (btx, brx) = mpsc::channel::<Vec<f32>>();
+            row[p].fwd_out = Some(ftx);
+            row[p + 1].fwd_in = Some(frx);
+            row[p + 1].bwd_out = Some(btx);
+            row[p].bwd_in = Some(brx);
+        }
+        chan_grid.push(row);
+    }
+
+    let (up_tx, up_rx) = mpsc::channel::<Up>();
+    let first_error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        // Spawn workers (reverse so channel receivers are moved correctly).
+        for d in (0..cfg.dp).rev() {
+            let mut row = chan_grid.pop().unwrap();
+            for p in (0..cfg.pp).rev() {
+                let chans = row.pop().unwrap();
+                let manifest = manifest.clone();
+                let cfg = cfg.clone();
+                let init = init.clone();
+                let corpus = corpus.clone();
+                let group = dp_groups[p].clone();
+                let adamw_path = adamw_path.clone();
+                let up = up_tx.clone();
+                let err_slot = first_error.clone();
+                scope.spawn(move || {
+                    let result = worker(
+                        d, p, &cfg, &manifest, &adamw_path, &init, &corpus, &group, chans.fwd_in,
+                        chans.fwd_out, chans.bwd_in, chans.bwd_out, &up,
+                    );
+                    if let Err(e) = result {
+                        let msg = format!("worker (d={d}, p={p}): {e:#}");
+                        let _ = up.send(Up::Error(msg.clone()));
+                        err_slot.lock().unwrap().get_or_insert(msg);
+                    }
+                });
+            }
+        }
+        drop(up_tx);
+        Ok(())
+    })?;
+
+    // Workers have joined; drain metrics.
+    let mut per_step: Vec<Vec<f64>> = vec![Vec::new(); cfg.steps];
+    let mut first_err: Option<String> = first_error.lock().unwrap().clone();
+    let mut final_params: Vec<Option<Vec<f32>>> = vec![None; cfg.pp];
+    for msg in up_rx.iter() {
+        match msg {
+            Up::Loss(step, _d, loss) => {
+                if step < cfg.steps {
+                    per_step[step].push(loss);
+                }
+            }
+            Up::Params(stage, p) => final_params[stage] = Some(p),
+            Up::Error(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        bail!("training failed: {e}");
+    }
+
+    if let Some(path) = &cfg.save_checkpoint {
+        let mut flat = Vec::with_capacity(manifest.total_param_elems);
+        for (i, p) in final_params.into_iter().enumerate() {
+            let p = p.with_context(|| format!("no final params from stage {i}"))?;
+            flat.extend_from_slice(&p);
+        }
+        ensure_len(flat.len(), manifest.total_param_elems)?;
+        crate::coordinator::checkpoint::Checkpoint {
+            model: cfg.model.clone(),
+            step: cfg.steps,
+            seed: cfg.seed,
+            params: flat,
+        }
+        .save(path)?;
+    }
+
+    let total = t0.elapsed();
+    let per_step_time = total / cfg.steps.max(1) as u32;
+    let tokens_per_step = cfg.global_batch() * seq;
+    let mut log = TrainLog::default();
+    for (step, losses) in per_step.iter().enumerate() {
+        if losses.len() != cfg.dp {
+            bail!("step {step}: got {} loss reports, expected {}", losses.len(), cfg.dp);
+        }
+        let mean = losses.iter().sum::<f64>() / losses.len() as f64;
+        log.push(StepRecord {
+            step,
+            loss: mean,
+            step_time: per_step_time,
+            tokens: tokens_per_step,
+        });
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("step {step:>5}  loss {mean:.4}");
+        }
+    }
+    Ok(TrainReport { log, entropy_floor, global_batch: cfg.global_batch(), seq })
+}
+
+/// Body of one rank. See module docs for the protocol.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    d: usize,
+    p: usize,
+    cfg: &TrainerConfig,
+    manifest: &Manifest,
+    adamw_path: &std::path::Path,
+    init: &Arc<Vec<f32>>,
+    corpus: &SyntheticCorpus,
+    group: &Arc<Group>,
+    fwd_in: Option<mpsc::Receiver<Vec<f32>>>,
+    fwd_out: Option<mpsc::Sender<Vec<f32>>>,
+    bwd_in: Option<mpsc::Receiver<Vec<f32>>>,
+    bwd_out: Option<mpsc::Sender<Vec<f32>>>,
+    up: &mpsc::Sender<Up>,
+) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let stage = StageRuntime::load(&engine, manifest, p)?;
+    let info = &stage.info;
+    let base = stage.base_offset();
+    let elems = info.param_elems;
+
+    // Local full copy of this stage's parameters.
+    let mut params: Vec<f32> = init[base..base + elems].to_vec();
+    let mut zero = Zero1::new(
+        &engine,
+        adamw_path,
+        manifest.optimizer_chunk,
+        &params,
+        d,
+        cfg.dp,
+    )?;
+
+    let m = cfg.num_micro;
+    let ops = match cfg.schedule {
+        Schedule::OneF1B => one_f1b(p, cfg.pp, m),
+        Schedule::GPipe => gpipe(p, cfg.pp, m),
+    };
+    let is_head = info.has_head;
+    let is_embed = info.has_embed;
+
+    let _ = base;
+    for step in 0..cfg.steps {
+        // Upload parameters to device buffers ONCE per optimizer step;
+        // every micro-batch's fwd/bwd reuses them (§Perf L3: this turned
+        // ~200 MB of per-execute host->device literal copies into one
+        // upload per step).
+        let param_lits = stage.param_buffers(&params)?;
+        let mut grad_accum = vec![0.0f32; elems];
+        let mut saved: Vec<Option<Vec<f32>>> = vec![None; m];
+        let mut loss_sum = 0.0f64;
+
+        for op in &ops {
+            match *op {
+                Op::Fwd(i) => {
+                    if is_embed {
+                        // Tokens regenerated locally; stash for backward.
+                        if !is_head {
+                            let batch = corpus.batch(d, step, i, cfg.mb, manifest.model.seq);
+                            let input = StageInput::Tokens(&batch.tokens);
+                            match stage.forward(&param_lits, &input, None)? {
+                                FwdOut::Hidden(h) => {
+                                    fwd_out
+                                        .as_ref()
+                                        .ok_or_else(|| anyhow!("missing fwd_out"))?
+                                        .send(h)
+                                        .map_err(|_| anyhow!("fwd channel closed"))?;
+                                }
+                                FwdOut::Loss(_) => bail!("embed stage returned loss"),
+                            }
+                            saved[i] = Some(Vec::new()); // tokens regenerable
+                        } else {
+                            // pp == 1: single stage; forward is skipped,
+                            // backward computes loss directly.
+                            saved[i] = Some(Vec::new());
+                        }
+                    } else {
+                        let h = fwd_in
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("missing fwd_in"))?
+                            .recv()
+                            .map_err(|_| anyhow!("fwd channel closed"))?;
+                        if is_head {
+                            // Store-only: loss comes out of backward.
+                            saved[i] = Some(h);
+                        } else {
+                            let input = StageInput::Hidden(&h);
+                            match stage.forward(&param_lits, &input, None)? {
+                                FwdOut::Hidden(out) => {
+                                    fwd_out
+                                        .as_ref()
+                                        .ok_or_else(|| anyhow!("missing fwd_out"))?
+                                        .send(out)
+                                        .map_err(|_| anyhow!("fwd channel closed"))?;
+                                }
+                                FwdOut::Loss(_) => bail!("mid stage returned loss"),
+                            }
+                            saved[i] = Some(h);
+                        }
+                    }
+                }
+                Op::Bwd(i) => {
+                    let stored = saved[i].take().ok_or_else(|| anyhow!("bwd before fwd"))?;
+                    let out = if is_head {
+                        let batch = corpus.batch(d, step, i, cfg.mb, manifest.model.seq);
+                        if is_embed {
+                            // pp == 1 single stage.
+                            let input = StageInput::Tokens(&batch.tokens);
+                            stage.backward(&param_lits, &input, None, Some(&batch.targets))?
+                        } else {
+                            let input = StageInput::Hidden(&stored);
+                            stage.backward(&param_lits, &input, None, Some(&batch.targets))?
+                        }
+                    } else if is_embed {
+                        let batch = corpus.batch(d, step, i, cfg.mb, manifest.model.seq);
+                        let dy = bwd_in
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("missing bwd_in"))?
+                            .recv()
+                            .map_err(|_| anyhow!("bwd channel closed"))?;
+                        let input = StageInput::Tokens(&batch.tokens);
+                        stage.backward(&param_lits, &input, Some(&dy), None)?
+                    } else {
+                        let dy = bwd_in
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("missing bwd_in"))?
+                            .recv()
+                            .map_err(|_| anyhow!("bwd channel closed"))?;
+                        let input = StageInput::Hidden(&stored);
+                        stage.backward(&param_lits, &input, Some(&dy), None)?
+                    };
+                    if let Some(loss) = out.loss {
+                        loss_sum += loss as f64;
+                    }
+                    if let (Some(dx), Some(tx)) = (out.dx, bwd_out.as_ref()) {
+                        tx.send(dx).map_err(|_| anyhow!("bwd channel closed"))?;
+                    }
+                    for (a, g) in grad_accum.iter_mut().zip(out.grads.iter()) {
+                        *a += *g;
+                    }
+                }
+            }
+        }
+
+        // ZeRO-1 update: mean over micro-batches and DP replicas.
+        let scale = 1.0 / (m as f32 * cfg.dp as f32);
+        zero.step(group, &grad_accum, scale, cfg.lr_at(step), &mut params)
+            .context("zero1 step")?;
+
+        if is_head {
+            let _ = up.send(Up::Loss(step, d, loss_sum / m as f64));
+        }
+    }
+    // The dp=0 replica ships its final stage parameters up for optional
+    // checkpointing (stages concatenate to the full flat vector).
+    if d == 0 {
+        let _ = up.send(Up::Params(p, params));
+    }
+    Ok(())
+}
+
+fn ensure_len(got: usize, want: usize) -> Result<()> {
+    if got != want {
+        bail!("assembled checkpoint has {got} params, manifest wants {want}");
+    }
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! ZeRO-1 sharded AdamW coordinator (S13) — the paper's optimizer setup
+//! (§3: "We use ZeRO-1 to shard the optimizer states across all data
+//! parallel ranks").
+//!
+//! Each data-parallel rank owns `1/dp` of its pipeline stage's flat fp32
+//! parameter range plus the Adam moments for that shard. A step is:
+//!
+//! 1. `reduce_scatter(grads)` over the DP group — each rank receives the
+//!    summed gradient of its own shard only;
+//! 2. shard update through the AOT-compiled `adamw_chunk` HLO artifact
+//!    (fixed 64k-element chunks, zero-padded tail);
+//! 3. `all_gather(params)` to rebuild the full stage parameters.
+//!
+//! Memory accounting note: this is why the simulator charges
+//! `12·N/(tp·pp·dp)` bytes for optimizer state.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::collective::Group;
+use crate::runtime::client::{Engine, Executable};
+
+/// Per-rank ZeRO-1 state for one pipeline stage's parameter range.
+pub struct Zero1 {
+    /// This rank's index within the DP group.
+    rank: usize,
+    /// DP group width.
+    dp: usize,
+    /// Padded shard length (equal across ranks; stage_elems rounded up).
+    shard_len: usize,
+    /// Unpadded stage parameter count.
+    stage_elems: usize,
+    /// fp32 master shard.
+    master: Vec<f32>,
+    /// Adam first/second moments for the shard.
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// The AOT adamw chunk executable + its chunk length.
+    adamw: Rc<Executable>,
+    /// PJRT client handle for staging chunk buffers (the `execute_b`
+    /// path: the crate's literal-based `execute` leaks its internal
+    /// transfer buffers — EXPERIMENTS.md §Perf L3 item 5).
+    client: xla::PjRtClient,
+    chunk: usize,
+    /// Steps taken (1-based in the update formula).
+    step: u64,
+}
+
+impl Zero1 {
+    /// Initialize from the full stage parameter slice (identical on every
+    /// DP rank — e.g. broadcast beforehand).
+    pub fn new(
+        engine: &Engine,
+        adamw_path: &std::path::Path,
+        chunk: usize,
+        stage_params: &[f32],
+        rank: usize,
+        dp: usize,
+    ) -> Result<Zero1> {
+        ensure!(rank < dp, "rank {rank} out of dp {dp}");
+        let stage_elems = stage_params.len();
+        // Shard length: divisible by dp AND padded to the chunk size so the
+        // optimizer artifact can run whole chunks.
+        let per = stage_elems.div_ceil(dp);
+        let shard_len = per.div_ceil(chunk) * chunk;
+        let lo = (rank * shard_len).min(stage_elems);
+        let hi = ((rank + 1) * shard_len).min(stage_elems);
+        let mut master = vec![0.0f32; shard_len];
+        master[..hi - lo].copy_from_slice(&stage_params[lo..hi]);
+        let adamw = engine
+            .load(adamw_path)
+            .context("loading adamw_chunk artifact")?;
+        let client = engine.raw_client();
+        Ok(Zero1 {
+            rank,
+            dp,
+            shard_len,
+            stage_elems,
+            master,
+            m: vec![0.0; shard_len],
+            v: vec![0.0; shard_len],
+            adamw,
+            client,
+            chunk,
+            step: 0,
+        })
+    }
+
+    pub fn padded_len(&self) -> usize {
+        self.shard_len * self.dp
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard_len
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step
+    }
+
+    /// One ZeRO-1 step.
+    ///
+    /// * `grads` — this rank's local (summed over micro-batches) gradient
+    ///   for the full stage range, length `stage_elems`.
+    /// * `grad_scale` — e.g. `1/(num_micro · dp)` for mean-of-means.
+    /// * `params_out` — full stage params, updated in place (all-gathered).
+    /// * `group` — the DP collective group (width == dp).
+    pub fn step(
+        &mut self,
+        group: &Group,
+        grads: &[f32],
+        grad_scale: f32,
+        lr: f32,
+        params_out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(grads.len() == self.stage_elems, "grad length");
+        ensure!(params_out.len() == self.stage_elems, "param length");
+        ensure!(group.world() == self.dp, "group width");
+        self.step += 1;
+
+        // 1. Reduce-scatter the (padded) gradient: our shard arrives summed.
+        let padded = self.padded_len();
+        let mut gpad = vec![0.0f32; padded];
+        gpad[..self.stage_elems].copy_from_slice(grads);
+        let mut gshard = vec![0.0f32; self.shard_len];
+        group.reduce_scatter_sum(self.rank, &gpad, &mut gshard);
+        for g in gshard.iter_mut() {
+            *g *= grad_scale;
+        }
+
+        // 2. AdamW on the shard, one AOT chunk at a time (device buffers:
+        // the literal-based execute path leaks transfer buffers).
+        let lr_buf = self.client.buffer_from_host_buffer(&[lr], &[], None)?;
+        let t_buf = self
+            .client
+            .buffer_from_host_buffer(&[self.step as f32], &[], None)?;
+        for c in (0..self.shard_len).step_by(self.chunk) {
+            let hi = c + self.chunk;
+            let dims = [self.chunk];
+            let p_buf = self.client.buffer_from_host_buffer(&self.master[c..hi], &dims, None)?;
+            let g_buf = self.client.buffer_from_host_buffer(&gshard[c..hi], &dims, None)?;
+            let m_buf = self.client.buffer_from_host_buffer(&self.m[c..hi], &dims, None)?;
+            let v_buf = self.client.buffer_from_host_buffer(&self.v[c..hi], &dims, None)?;
+            let out = self
+                .adamw
+                .run_b(&[&p_buf, &g_buf, &m_buf, &v_buf, &lr_buf, &t_buf])?;
+            ensure!(out.len() == 3, "adamw artifact arity");
+            crate::runtime::literal::copy_f32_into(&out[0], &mut self.master[c..hi])?;
+            crate::runtime::literal::copy_f32_into(&out[1], &mut self.m[c..hi])?;
+            crate::runtime::literal::copy_f32_into(&out[2], &mut self.v[c..hi])?;
+        }
+
+        // 3. All-gather the updated shards into the full stage parameters.
+        let mut full = vec![0.0f32; padded];
+        group.all_gather(self.rank, &self.master, &mut full);
+        params_out.copy_from_slice(&full[..self.stage_elems]);
+        Ok(())
+    }
+}
+
+// NOTE on Clone of Literal: the xla crate's Literal implements Clone by
+// copying host memory; lr/step scalars are 4 bytes, so cloning per chunk
+// is free compared to the update itself.

@@ -1,0 +1,122 @@
+//! Byte-level text corpus (the "tiny real corpus" alternative to the
+//! synthetic Markov stream): tokenizes a UTF-8 file as raw bytes
+//! (vocab <= 256) and serves deterministic micro-batches by the same
+//! `(replica, step, micro)` addressing contract as `SyntheticCorpus`,
+//! so the trainer's stage-0/stage-N regeneration trick still works.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::synthetic::Batch;
+
+/// A byte-tokenized corpus held in memory.
+#[derive(Debug, Clone)]
+pub struct ByteCorpus {
+    bytes: Vec<u8>,
+    vocab: usize,
+}
+
+impl ByteCorpus {
+    /// Load a text file. `vocab` must be >= 256 for byte coverage (the
+    /// model's vocabulary can be larger; extra ids are simply unused).
+    pub fn load(path: &Path, vocab: usize) -> Result<ByteCorpus> {
+        if vocab < 256 {
+            bail!("byte corpus needs vocab >= 256, got {vocab}");
+        }
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading corpus {}", path.display()))?;
+        Self::from_bytes(bytes, vocab)
+    }
+
+    pub fn from_bytes(bytes: Vec<u8>, vocab: usize) -> Result<ByteCorpus> {
+        if bytes.len() < 2 {
+            bail!("corpus too small ({} bytes)", bytes.len());
+        }
+        if vocab < 256 {
+            bail!("byte corpus needs vocab >= 256");
+        }
+        Ok(ByteCorpus { bytes, vocab })
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Deterministic batch for `(replica, step, micro)`: rows are windows
+    /// into the byte stream at strided, wrapping offsets (disjoint across
+    /// replicas within a step).
+    pub fn batch(&self, replica: usize, step: usize, micro: usize, mb: usize, seq: usize) -> Batch {
+        let n = self.bytes.len();
+        let mut tokens = Vec::with_capacity(mb * seq);
+        let mut targets = Vec::with_capacity(mb * seq);
+        for row in 0..mb {
+            // Golden-ratio stride scrambles row starts without an RNG.
+            let idx = (replica
+                .wrapping_mul(0x9E37)
+                .wrapping_add(step.wrapping_mul(0x85EB))
+                .wrapping_add(micro.wrapping_mul(0xC2B3))
+                .wrapping_add(row.wrapping_mul(0x27D4)))
+                % n;
+            for k in 0..seq {
+                tokens.push(self.bytes[(idx + k) % n] as i32);
+                targets.push(self.bytes[(idx + k + 1) % n] as i32);
+            }
+        }
+        Batch { tokens, targets, mb, seq }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> ByteCorpus {
+        ByteCorpus::from_bytes(
+            b"the quick brown fox jumps over the lazy dog. ".repeat(20).to_vec(),
+            256,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_addressable() {
+        let c = corpus();
+        assert_eq!(c.batch(0, 1, 2, 2, 16), c.batch(0, 1, 2, 2, 16));
+        assert_ne!(c.batch(0, 1, 2, 2, 16).tokens, c.batch(1, 1, 2, 2, 16).tokens);
+    }
+
+    #[test]
+    fn targets_shift_tokens_by_one() {
+        let c = corpus();
+        let b = c.batch(0, 0, 0, 1, 32);
+        for i in 0..31 {
+            assert_eq!(b.tokens[i + 1], b.targets[i]);
+        }
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        let c = corpus();
+        let b = c.batch(3, 7, 1, 4, 64);
+        assert!(b.tokens.iter().all(|&t| (0..256).contains(&t)));
+        assert_eq!(b.tokens.len(), 4 * 64);
+    }
+
+    #[test]
+    fn wrapping_never_panics() {
+        let c = ByteCorpus::from_bytes(b"abc".to_vec(), 256).unwrap();
+        let b = c.batch(9, 999, 99, 2, 128); // seq much longer than corpus
+        assert_eq!(b.tokens.len(), 2 * 128);
+    }
+
+    #[test]
+    fn rejects_small_vocab_and_empty() {
+        assert!(ByteCorpus::from_bytes(b"abc".to_vec(), 100).is_err());
+        assert!(ByteCorpus::from_bytes(vec![], 256).is_err());
+    }
+}

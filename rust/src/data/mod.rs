@@ -1,0 +1,15 @@
+//! Data pipeline (S14): deterministic synthetic corpora + batching.
+//!
+//! Training data is generated, not loaded: a seeded Markov-chain token
+//! stream with controllable entropy, so (a) the LM has real structure to
+//! learn (the E2E loss curve drops well below `ln V`), and (b) any worker
+//! can regenerate any micro-batch from `(seed, replica, step, micro)`
+//! alone — stage 0 (tokens) and the head stage (targets) never need to
+//! communicate inputs, mirroring how real frameworks feed the first and
+//! last pipeline stages from the same sharded dataset.
+
+pub mod corpus;
+pub mod synthetic;
+
+pub use corpus::ByteCorpus;
+pub use synthetic::{Batch, SyntheticCorpus};

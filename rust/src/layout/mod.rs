@@ -1,0 +1,298 @@
+//! Training layouts (S8): the sweep domain of the paper.
+//!
+//! A [`Layout`] is one point of Table 1's Cartesian product: (TP, PP,
+//! micro-batch size, activation checkpointing, kernel implementation,
+//! sequence parallelism). [`validate`] encodes the feasibility rules the
+//! paper applies implicitly (head divisibility, layer divisibility, batch
+//! arithmetic, node-local tensor parallelism).
+
+use anyhow::{bail, Result};
+
+use crate::model::LlamaArch;
+use crate::topo::{Cluster, Topology};
+
+/// Attention/kernel implementation (Figure 1's x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kernel {
+    /// Naive PyTorch attention (materializes the score matrix).
+    Torch,
+    /// Megatron-LM fused softmax kernel (max 2048 tokens — §4.1).
+    Fused,
+    /// FlashAttention 1.0.8.
+    Flash1,
+    /// FlashAttention-2.
+    Flash2,
+    /// FlashAttention-2 + the fused RMSNorm kernel.
+    Flash2Rms,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 5] =
+        [Kernel::Torch, Kernel::Fused, Kernel::Flash1, Kernel::Flash2, Kernel::Flash2Rms];
+
+    /// Paper table spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Torch => "torch",
+            Kernel::Fused => "fused",
+            Kernel::Flash1 => "flash_attn1.0.8",
+            Kernel::Flash2 => "flash_attn2",
+            Kernel::Flash2Rms => "flash_attn2 + RMS kern.",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "torch" => Some(Kernel::Torch),
+            "fused" => Some(Kernel::Fused),
+            "flash1" | "flash_attn1.0.8" => Some(Kernel::Flash1),
+            "flash2" | "flash_attn2" => Some(Kernel::Flash2),
+            "flash2rms" | "flash_attn2+rms" | "flash_attn2 + RMS kern." => Some(Kernel::Flash2Rms),
+            _ => None,
+        }
+    }
+
+    /// Does the attention kernel avoid materializing the O(s²) matrix?
+    pub fn is_flash(&self) -> bool {
+        matches!(self, Kernel::Flash1 | Kernel::Flash2 | Kernel::Flash2Rms)
+    }
+
+    pub fn has_rms_kernel(&self) -> bool {
+        matches!(self, Kernel::Flash2Rms)
+    }
+}
+
+/// One candidate training configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Layout {
+    pub tp: usize,
+    pub pp: usize,
+    /// Micro-batch size per model replica.
+    pub mb: usize,
+    /// Full (`every_layer`) activation checkpointing.
+    pub ckpt: bool,
+    pub kernel: Kernel,
+    /// Sequence parallelism (Korthikanti et al.) — only effective with tp>1.
+    pub sp: bool,
+}
+
+impl Layout {
+    /// Paper-style annotation `(mb, tp, pp)` used in Figures 1–5.
+    pub fn annotation(&self) -> String {
+        format!("({}, {}, {})", self.mb, self.tp, self.pp)
+    }
+}
+
+/// Global-batch training job: the fixed quantities of one sweep row.
+#[derive(Debug, Clone, Copy)]
+pub struct Job {
+    pub arch: LlamaArch,
+    pub cluster: Cluster,
+    /// Global batch size in sequences (paper: 2048 @ 2k seq, 512 @ 8k seq).
+    pub gbs: usize,
+}
+
+impl Job {
+    pub fn new(arch: LlamaArch, cluster: Cluster, gbs: usize) -> Job {
+        Job { arch, cluster, gbs }
+    }
+
+    /// Paper defaults: GBS 2048 for 2k-seq models, 512 for 8k.
+    pub fn paper_gbs(arch: &LlamaArch) -> usize {
+        if arch.seq >= 8192 {
+            512
+        } else {
+            2048
+        }
+    }
+}
+
+/// A layout validated against a job: derived quantities attached.
+#[derive(Debug, Clone, Copy)]
+pub struct ValidLayout {
+    pub layout: Layout,
+    pub topo: Topology,
+    /// Gradient-accumulation micro-steps per pipeline per global step.
+    pub num_micro: usize,
+}
+
+/// Check every feasibility rule; returns derived topology + accumulation.
+pub fn validate(job: &Job, l: &Layout) -> Result<ValidLayout> {
+    if l.mb == 0 {
+        bail!("micro-batch size must be positive");
+    }
+    if l.kernel == Kernel::Fused && job.arch.seq > 2048 {
+        // §4.1: "the kernel from Megatron-LM failed to operate with an 8k
+        // sequence length" / fused kernel limit of 2048 tokens.
+        bail!("fused softmax kernel supports at most 2048 tokens");
+    }
+    if job.arch.heads % l.tp != 0 {
+        // §4.2: "tensor parallelism could not be increased because the
+        // model has 52 attention heads, not divisible by 8".
+        bail!("attention heads {} not divisible by tp {}", job.arch.heads, l.tp);
+    }
+    if job.arch.layers % l.pp != 0 {
+        bail!("layers {} not divisible by pp {}", job.arch.layers, l.pp);
+    }
+    let topo = Topology::derive(job.cluster, l.tp, l.pp)?;
+    if topo.tp_crosses_node() {
+        bail!("tp {} exceeds gpus per node {}", l.tp, job.cluster.gpus_per_node);
+    }
+    let replica_batch = topo.dp * l.mb;
+    if job.gbs % replica_batch != 0 {
+        bail!(
+            "global batch {} not divisible by dp*mb = {}",
+            job.gbs,
+            replica_batch
+        );
+    }
+    let num_micro = job.gbs / replica_batch;
+    if l.sp && l.tp == 1 {
+        // Legal but a no-op; keep it representable (Figure 5 includes
+        // tp=1 rows where SP "shows no effect").
+    }
+    Ok(ValidLayout {
+        layout: *l,
+        topo,
+        num_micro,
+    })
+}
+
+/// Enumerate the Cartesian product of the given option sets, keeping only
+/// layouts valid for `job` (Table 1 semantics).
+pub fn enumerate(
+    job: &Job,
+    tps: &[usize],
+    pps: &[usize],
+    mbs: &[usize],
+    ckpts: &[bool],
+    kernels: &[Kernel],
+    sps: &[bool],
+) -> Vec<ValidLayout> {
+    let mut out = Vec::new();
+    for &tp in tps {
+        for &pp in pps {
+            for &mb in mbs {
+                for &ckpt in ckpts {
+                    for &kernel in kernels {
+                        for &sp in sps {
+                            // Paper: RMSNorm kernel + checkpointing errored
+                            // (Table 1 caption) — that combination is
+                            // omitted from all sweeps.
+                            if ckpt && kernel == Kernel::Flash2Rms {
+                                continue;
+                            }
+                            let l = Layout { tp, pp, mb, ckpt, kernel, sp };
+                            if let Ok(v) = validate(job, &l) {
+                                out.push(v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::preset;
+    use crate::util::prop;
+
+    fn job13b() -> Job {
+        Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048)
+    }
+
+    #[test]
+    fn paper_example_derivation() {
+        let j = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(16), 2048);
+        let l = Layout { tp: 4, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        let v = validate(&j, &l).unwrap();
+        assert_eq!(v.topo.dp, 16);
+        assert_eq!(v.num_micro, 2048 / 16);
+    }
+
+    #[test]
+    fn heads_divisibility_rejects_tp8_for_30b() {
+        // §4.2: 52 heads not divisible by 8.
+        let j = Job::new(preset("llama30b").unwrap(), Cluster::dgx_a100(32), 2048);
+        let l = Layout { tp: 8, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        assert!(validate(&j, &l).is_err());
+        let l4 = Layout { tp: 4, ..l };
+        assert!(validate(&j, &l4).is_ok());
+    }
+
+    #[test]
+    fn fused_kernel_rejects_8k() {
+        let j = Job::new(preset("llama13b-8k").unwrap(), Cluster::dgx_a100(16), 512);
+        let l = Layout { tp: 1, pp: 1, mb: 1, ckpt: true, kernel: Kernel::Fused, sp: false };
+        assert!(validate(&j, &l).is_err());
+    }
+
+    #[test]
+    fn gbs_divisibility() {
+        let j = job13b(); // 64 GPUs, gbs 2048
+        // dp = 64, mb=3 -> 192 does not divide 2048.
+        let l = Layout { tp: 1, pp: 1, mb: 3, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        assert!(validate(&j, &l).is_err());
+    }
+
+    #[test]
+    fn enumerate_matches_table1_size_for_13b() {
+        // Table 1 row 1: TP {1,2} × PP {1,2} × MB {1,2,4,8} × ckpt {y,n},
+        // RMS kernel {y,n} minus (ckpt ∧ RMS).
+        let j = job13b();
+        let v = enumerate(
+            &j,
+            &[1, 2],
+            &[1, 2],
+            &[1, 2, 4, 8],
+            &[true, false],
+            &[Kernel::Flash2, Kernel::Flash2Rms],
+            &[false],
+        );
+        // All combinations are arithmetically valid on 64 GPUs; ckpt+RMS
+        // combinations are omitted: 2*2*4 * (2*2 - 1) = 48.
+        assert_eq!(v.len(), 48);
+    }
+
+    #[test]
+    fn enumerated_layouts_always_valid_property() {
+        prop::check_cases(0xBEEF, 64, |rng| {
+            let archs = ["llama13b", "llama30b", "llama65b"];
+            let arch = preset(archs[rng.range(0, archs.len())]).unwrap();
+            let nodes = 1 << rng.range(0, 6);
+            let j = Job::new(arch, Cluster::dgx_a100(nodes), 2048);
+            let v = enumerate(
+                &j,
+                &[1, 2, 4, 8],
+                &[1, 2, 4, 8],
+                &[1, 2, 4],
+                &[false, true],
+                &Kernel::ALL,
+                &[false, true],
+            );
+            for vl in &v {
+                // world partitioning exact
+                assert_eq!(vl.topo.dp * vl.layout.tp * vl.layout.pp, j.cluster.gpus);
+                // gbs arithmetic exact
+                assert_eq!(vl.num_micro * vl.topo.dp * vl.layout.mb, j.gbs);
+                // divisibility rules hold
+                assert_eq!(arch.heads % vl.layout.tp, 0);
+                assert_eq!(arch.layers % vl.layout.pp, 0);
+                // excluded combination never appears
+                assert!(!(vl.layout.ckpt && vl.layout.kernel == Kernel::Flash2Rms));
+            }
+        });
+    }
+
+    #[test]
+    fn kernel_parse_roundtrip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.label()), Some(k));
+        }
+        assert!(Kernel::parse("einstein").is_none());
+    }
+}

@@ -1,0 +1,55 @@
+//! # plx — Parallelization Layout eXplorer
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *“Efficient
+//! Parallelization Layouts for Large-Scale Distributed Model Training”*
+//! (Hagemann et al., 2023): a Megatron-style distributed-training framework
+//! whose first-class feature is the paper's contribution — a **training
+//! efficiency sweep** over 3D-parallel layouts (tensor/pipeline/data
+//! parallelism, micro-batch size, activation checkpointing, attention
+//! kernels, sequence parallelism) reporting Model FLOPs Utilization and
+//! memory feasibility, plus the distilled layout recommendations as an
+//! executable planner.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`runtime`] — PJRT CPU client; loads HLO-text artifacts AOT-lowered by
+//!   `python/compile/aot.py` (L2 JAX model calling L1 Pallas kernels).
+//! * [`coordinator`] — real DP×PP training: 1F1B pipeline schedule,
+//!   in-process collectives, ZeRO-1 sharded AdamW, gradient accumulation.
+//! * [`sim`] — the A100-cluster analytical model that reproduces every
+//!   table and figure of the paper's evaluation.
+//! * [`sweep`] / [`planner`] — the Cartesian sweep engine and the paper's
+//!   §5 recommendations as code.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod layout;
+pub mod metrics;
+pub mod model;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod sweep;
+pub mod topo;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Root of the AOT artifact tree (`$PLX_ARTIFACTS` or `./artifacts`).
+pub fn artifacts_root() -> PathBuf {
+    std::env::var_os("PLX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            // Walk up from CWD so tests/benches work from target dirs too.
+            let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = dir.join("artifacts");
+                if cand.is_dir() {
+                    return cand;
+                }
+                if !dir.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+}

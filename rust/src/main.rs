@@ -1,0 +1,289 @@
+//! `plx` — the launcher.
+//!
+//! ```text
+//! plx train  [--config cfg.json] [--model tiny --pp 2 --dp 2 --steps 20 ...]
+//! plx sweep  --preset 13b-2k [--csv out.csv]     # one appendix table
+//! plx sweep  --all                               # every sweep preset
+//! plx table  <2|3|4..8|10..14>                   # reproduce a paper table
+//! plx figure <1..5>                              # reproduce a paper figure
+//! plx plan   --model llama65b --nodes 8          # §5 recommendations as code
+//! plx predict-mem --model llama30b --nodes 8 --tp 2 --pp 4 [--mb 1 ...]
+//! plx presets                                    # list models & sweeps
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use plx::config::RunConfig;
+use plx::coordinator::train;
+use plx::layout::{validate, Job, Kernel, Layout};
+use plx::model::arch::{preset, PRESETS};
+use plx::planner::{plan_by_rules, plan_exhaustive};
+use plx::sim::{evaluate, memory, Outcome, A100};
+use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2};
+use plx::topo::Cluster;
+use plx::util::cli::{Args, Spec};
+use plx::util::table;
+
+const SPEC: Spec = Spec {
+    options: &[
+        "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
+        "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
+        "loss-csv", "save", "resume",
+    ],
+    flags: &["all", "ckpt", "sp", "exhaustive", "help", "list"],
+};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("plx: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &SPEC).map_err(anyhow::Error::msg)?;
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "plan" => cmd_plan(&args),
+        "predict-mem" => cmd_predict_mem(&args),
+        "presets" => cmd_presets(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+plx — Parallelization Layout eXplorer
+  (reproduction of 'Efficient Parallelization Layouts for Large-Scale
+   Distributed Model Training', Hagemann et al. 2023)
+
+USAGE:
+  plx train  [--config cfg.json] [--model M --pp P --mb B --dp D
+              --num-micro K --steps N --lr F --seed S --loss-csv FILE
+              --save ckpt.plx --resume ckpt.plx]
+  plx sweep  --preset NAME [--csv FILE] | --all | --list
+  plx table  N            N in {2, 3, 4..8, 10..14}
+  plx figure N            N in {1..5}
+  plx plan   --model M --nodes K [--gbs G] [--exhaustive]
+  plx predict-mem --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
+                  [--sp] [--kernel flash2rms]
+  plx presets
+
+Artifacts for `plx train` come from `make artifacts`
+(python -m compile.aot). See README.md.
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    let mut tcfg = cfg.to_trainer();
+    tcfg.save_checkpoint = args.get("save").map(std::path::PathBuf::from);
+    tcfg.resume_from = args.get("resume").map(std::path::PathBuf::from);
+    eprintln!(
+        "plx train: {} pp={} dp={} mb={} micro={} (GBS {}) steps={}",
+        cfg.model, cfg.pp, cfg.dp, cfg.mb, cfg.num_micro,
+        cfg.dp * cfg.mb * cfg.num_micro, cfg.steps
+    );
+    let report = train(&tcfg)?;
+    let log = &report.log;
+    println!(
+        "trained {} steps: loss {:.4} -> {:.4} (corpus entropy floor {:.4})",
+        log.records.len(),
+        log.first_loss().unwrap_or(f64::NAN),
+        log.final_loss().unwrap_or(f64::NAN),
+        report.entropy_floor
+    );
+    println!(
+        "throughput: {:.0} tokens/s ({} tokens/step)",
+        log.steady_tokens_per_sec(),
+        report.global_batch * report.seq
+    );
+    if let Some(path) = args.get("loss-csv") {
+        std::fs::write(path, log.to_csv())?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    if args.flag("list") {
+        for p in main_presets().into_iter().chain(seqpar_presets()) {
+            println!(
+                "{:<10} {:>3} GPUs  gbs {:>4}  {} (reproduces {})",
+                p.name, p.gpus, p.gbs, p.arch, p.paper_table
+            );
+        }
+        return Ok(());
+    }
+    let presets = if args.flag("all") {
+        main_presets().into_iter().chain(seqpar_presets()).collect()
+    } else {
+        let name = args
+            .get("preset")
+            .context("need --preset NAME, --all, or --list")?;
+        vec![by_name(name).with_context(|| format!("unknown preset '{name}'"))?]
+    };
+    for p in presets {
+        let result = plx::sweep::run(&p, &A100);
+        let with_sp = p.sps.len() > 1;
+        print!("{}", report::render(&result, with_sp));
+        if let Some(csv) = args.get("csv") {
+            std::fs::write(csv, report::to_csv(&result))?;
+            println!("csv written to {csv}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional()
+        .get(1)
+        .context("usage: plx table N")?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("table number must be an integer"))?;
+    match n {
+        2 => print!("{}", table2::render(&A100)),
+        3 => print!("{}", figures::table3(&A100)),
+        4..=8 | 10..=14 => {
+            let p = for_table(n).unwrap();
+            let result = plx::sweep::run(&p, &A100);
+            print!("{}", report::render(&result, n >= 10));
+        }
+        _ => bail!("no such paper table: {n} (valid: 2, 3, 4..8, 10..14)"),
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional()
+        .get(1)
+        .context("usage: plx figure N")?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("figure number must be an integer"))?;
+    let rendered = match n {
+        1 => figures::figure1(&A100).1,
+        2 => figures::figure2(&A100).1,
+        3 => figures::figure3(&A100).1,
+        4 => figures::figure4(&A100).1,
+        5 => figures::figure5(&A100).1,
+        _ => bail!("no such paper figure: {n} (valid: 1..5)"),
+    };
+    print!("{rendered}");
+    Ok(())
+}
+
+fn job_from_args(args: &Args) -> Result<Job> {
+    let model = args.get("model").context("need --model")?;
+    let arch = preset(model).with_context(|| format!("unknown model '{model}'"))?;
+    let nodes = args.get_usize("nodes", 8).map_err(anyhow::Error::msg)?;
+    let gbs = args
+        .get_usize("gbs", Job::paper_gbs(&arch))
+        .map_err(anyhow::Error::msg)?;
+    Ok(Job::new(arch, Cluster::dgx_a100(nodes), gbs))
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let plan = if args.flag("exhaustive") {
+        plan_exhaustive(&job, &A100)?
+    } else {
+        plan_by_rules(&job, &A100)?
+    };
+    let l = plan.v.layout;
+    println!(
+        "plan for {} on {} GPUs (gbs {}):",
+        job.arch.name, job.cluster.gpus, job.gbs
+    );
+    println!(
+        "  mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={}",
+        l.mb, l.tp, l.pp, plan.v.topo.dp, l.ckpt, l.kernel.label(), l.sp
+    );
+    println!(
+        "  predicted: {:.2}% MFU, {:.2}s/step, {} micro-batches/step",
+        100.0 * plan.predicted_mfu,
+        plan.predicted_step_s,
+        plan.v.num_micro
+    );
+    Ok(())
+}
+
+fn cmd_predict_mem(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let kernel = match args.get("kernel") {
+        Some(k) => Kernel::parse(k).with_context(|| format!("unknown kernel '{k}'"))?,
+        None => Kernel::Flash2Rms,
+    };
+    let l = Layout {
+        tp: args.get_usize("tp", 1).map_err(anyhow::Error::msg)?,
+        pp: args.get_usize("pp", 1).map_err(anyhow::Error::msg)?,
+        mb: args.get_usize("mb", 1).map_err(anyhow::Error::msg)?,
+        ckpt: args.flag("ckpt"),
+        kernel,
+        sp: args.flag("sp"),
+    };
+    let v = validate(&job, &l)?;
+    let mem = memory::per_gpu_memory(&job, &v, &A100);
+    let gb = 1e9;
+    let rows = vec![
+        vec!["weights (bf16)".to_string(), format!("{:.2}", mem.weights / gb)],
+        vec!["gradients (bf16)".to_string(), format!("{:.2}", mem.grads / gb)],
+        vec!["optimizer (ZeRO-1 fp32)".to_string(), format!("{:.2}", mem.optimizer / gb)],
+        vec!["activations".to_string(), format!("{:.2}", mem.activations / gb)],
+        vec!["logits".to_string(), format!("{:.2}", mem.logits / gb)],
+        vec!["workspace".to_string(), format!("{:.2}", mem.workspace / gb)],
+        vec!["TOTAL".to_string(), format!("{:.2}", mem.total() / gb)],
+        vec!["budget (A100-80GB)".to_string(), "80.00".to_string()],
+    ];
+    println!(
+        "memory prediction: {} {} dp={}",
+        job.arch.name, l.annotation(), v.topo.dp
+    );
+    print!("{}", table::render(&["component", "GB/GPU"], &rows));
+    match evaluate(&job, &v, &A100) {
+        Outcome::Ok { mfu, step_time_s, .. } => {
+            println!("fits. predicted {:.2}% MFU, {step_time_s:.2}s/step", 100.0 * mfu)
+        }
+        Outcome::Oom { required, budget } => println!(
+            "OOM: needs {:.1} GB of {:.1} GB",
+            required / gb,
+            budget / gb
+        ),
+        Outcome::KernelUnavailable => println!("kernel unavailable for this layout"),
+    }
+    Ok(())
+}
+
+fn cmd_presets() -> Result<()> {
+    println!("model presets:");
+    for (name, a) in PRESETS {
+        println!(
+            "  {:<12} layers {:>3}  hidden {:>5}  heads {:>3}  seq {:>5}  params {:>6.2}B",
+            name,
+            a.layers,
+            a.hidden,
+            a.heads,
+            a.seq,
+            a.param_count() as f64 / 1e9
+        );
+    }
+    println!("\nsweep presets (plx sweep --preset NAME):");
+    for p in main_presets().into_iter().chain(seqpar_presets()) {
+        println!("  {:<10} -> {}", p.name, p.paper_table);
+    }
+    Ok(())
+}

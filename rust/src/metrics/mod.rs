@@ -1,0 +1,138 @@
+//! Training metrics (part of S15): loss curve, throughput, CSV export.
+
+use std::time::Duration;
+
+/// One logged training step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Mean loss over the global batch (averaged over DP replicas).
+    pub loss: f64,
+    pub step_time: Duration,
+    pub tokens: usize,
+}
+
+impl StepRecord {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.step_time.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Accumulating log with summary statistics.
+#[derive(Debug, Default, Clone)]
+pub struct TrainLog {
+    pub records: Vec<StepRecord>,
+}
+
+impl TrainLog {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn first_loss(&self) -> Option<f64> {
+        self.records.first().map(|r| r.loss)
+    }
+
+    /// Mean tokens/sec over all steps but the first (warm-up / compile).
+    pub fn steady_tokens_per_sec(&self) -> f64 {
+        let steady: Vec<_> = self.records.iter().skip(1).collect();
+        if steady.is_empty() {
+            return self.records.first().map(|r| r.tokens_per_sec()).unwrap_or(0.0);
+        }
+        let tokens: usize = steady.iter().map(|r| r.tokens).sum();
+        let time: f64 = steady.iter().map(|r| r.step_time.as_secs_f64()).sum();
+        tokens as f64 / time.max(1e-12)
+    }
+
+    /// Mean step time excluding the first step — the paper's measurement
+    /// protocol (§3: "exclude the first step … report the mean of the
+    /// last 9").
+    pub fn mean_step_time_paper_protocol(&self) -> Option<Duration> {
+        let steady: Vec<_> = self.records.iter().skip(1).collect();
+        if steady.is_empty() {
+            return None;
+        }
+        let total: f64 = steady.iter().map(|r| r.step_time.as_secs_f64()).sum();
+        Some(Duration::from_secs_f64(total / steady.len() as f64))
+    }
+
+    /// Loss-curve CSV: `step,loss,step_time_s,tokens_per_sec`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss,step_time_s,tokens_per_sec\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.4},{:.1}\n",
+                r.step,
+                r.loss,
+                r.step_time.as_secs_f64(),
+                r.tokens_per_sec()
+            ));
+        }
+        out
+    }
+
+    /// Is the loss trending down? (first-k mean vs last-k mean)
+    pub fn improved(&self, k: usize) -> bool {
+        if self.records.len() < 2 * k {
+            return false;
+        }
+        let head: f64 =
+            self.records[..k].iter().map(|r| r.loss).sum::<f64>() / k as f64;
+        let tail: f64 = self.records[self.records.len() - k..]
+            .iter()
+            .map(|r| r.loss)
+            .sum::<f64>()
+            / k as f64;
+        tail < head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64, secs: f64) -> StepRecord {
+        StepRecord { step, loss, step_time: Duration::from_secs_f64(secs), tokens: 1000 }
+    }
+
+    #[test]
+    fn throughput_excludes_first_step() {
+        let mut log = TrainLog::default();
+        log.push(rec(0, 5.0, 10.0)); // slow compile step
+        log.push(rec(1, 4.0, 1.0));
+        log.push(rec(2, 3.0, 1.0));
+        assert!((log.steady_tokens_per_sec() - 1000.0).abs() < 1e-9);
+        assert_eq!(
+            log.mean_step_time_paper_protocol().unwrap(),
+            Duration::from_secs(1)
+        );
+    }
+
+    #[test]
+    fn improvement_detection() {
+        let mut log = TrainLog::default();
+        for i in 0..10 {
+            log.push(rec(i, 10.0 - i as f64, 1.0));
+        }
+        assert!(log.improved(3));
+        let mut flat = TrainLog::default();
+        for i in 0..10 {
+            flat.push(rec(i, 5.0, 1.0));
+        }
+        assert!(!flat.improved(3));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = TrainLog::default();
+        log.push(rec(0, 1.5, 2.0));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("1.500000"));
+    }
+}

@@ -1,0 +1,179 @@
+//! LLaMA architecture shapes + exact parameter/FLOP accounting.
+//!
+//! Mirrors `python/compile/model.py::ModelConfig`; the paper's 13B/30B/65B
+//! shapes are from Touvron et al. 2023 with the paper's 128k vocabulary
+//! (§3). These constants feed the MFU formula (Appendix A.1) and the
+//! memory model, so they must match the Python side exactly — see
+//! `rust/tests/manifest_consistency.rs`.
+
+/// One LLaMA-family architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlamaArch {
+    pub name: &'static str,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// SwiGLU inner dimension.
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Training sequence length.
+    pub seq: usize,
+}
+
+impl LlamaArch {
+    pub const fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Exact parameter count — embedding + per-layer (2 norms, 4 attention
+    /// mats, 3 SwiGLU mats) + final norm + untied LM head. Must equal
+    /// `ModelConfig.param_count()` on the Python side.
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let per_layer = 2 * h + 4 * h * h + 3 * h * f;
+        (self.vocab as u64) * h + (self.layers as u64) * per_layer + h + h * (self.vocab as u64)
+    }
+
+    /// "Model FLOPs" per token, PaLM/Chowdhery-style (Appendix A.1):
+    /// `6N + 12·L·H·Q·T` where H·Q = hidden. This counts only the *model's*
+    /// useful FLOPs — recomputation from activation checkpointing does NOT
+    /// count (which is exactly why checkpointing lowers MFU).
+    pub fn model_flops_per_token(&self) -> f64 {
+        let n = self.param_count() as f64;
+        let attn = 12.0 * self.layers as f64 * self.hidden as f64 * self.seq as f64;
+        6.0 * n + attn
+    }
+
+    /// Total model FLOPs for a batch of `tokens` tokens.
+    pub fn model_flops(&self, tokens: u64) -> f64 {
+        self.model_flops_per_token() * tokens as f64
+    }
+
+    /// Forward-pass matmul FLOPs for ONE transformer layer over a
+    /// `(b, s)` micro-batch — used by the step-time model. 2·m·n·k per
+    /// matmul; attention score/context matmuls add 2·2·b·a·s²·q = 4·b·s²·h.
+    pub fn layer_fwd_flops(&self, batch: usize, seq: usize) -> f64 {
+        let b = batch as f64;
+        let s = seq as f64;
+        let h = self.hidden as f64;
+        let f = self.ffn as f64;
+        let qkvo = 4.0 * 2.0 * b * s * h * h; // wq wk wv wo
+        let attn = 4.0 * b * s * s * h; // scores + context
+        let mlp = 3.0 * 2.0 * b * s * h * f; // gate, up, down
+        qkvo + attn + mlp
+    }
+
+    /// Forward FLOPs of the embedding + LM head + loss for one micro-batch.
+    pub fn head_fwd_flops(&self, batch: usize, seq: usize) -> f64 {
+        // LM head matmul dominates; embedding lookup is bandwidth-bound.
+        2.0 * batch as f64 * seq as f64 * self.hidden as f64 * self.vocab as f64
+    }
+
+    /// Attention-score activation elements (the O(s²) term FlashAttention
+    /// never materializes): `a · s² ` per sequence per layer.
+    pub fn attn_matrix_elems(&self, batch: usize, seq: usize) -> u64 {
+        (batch * self.heads * seq * seq) as u64
+    }
+}
+
+/// Named presets (paper models + runnable CPU models).
+pub type ModelPreset = (&'static str, LlamaArch);
+
+/// All architectures known to the CLI / sweep presets.
+pub const PRESETS: &[ModelPreset] = &[
+    (
+        "llama13b",
+        LlamaArch { name: "llama13b", layers: 40, hidden: 5120, heads: 40, ffn: 13824, vocab: 131072, seq: 2048 },
+    ),
+    (
+        "llama13b-8k",
+        LlamaArch { name: "llama13b-8k", layers: 40, hidden: 5120, heads: 40, ffn: 13824, vocab: 131072, seq: 8192 },
+    ),
+    (
+        "llama30b",
+        LlamaArch { name: "llama30b", layers: 60, hidden: 6656, heads: 52, ffn: 17920, vocab: 131072, seq: 2048 },
+    ),
+    (
+        "llama30b-8k",
+        LlamaArch { name: "llama30b-8k", layers: 60, hidden: 6656, heads: 52, ffn: 17920, vocab: 131072, seq: 8192 },
+    ),
+    (
+        "llama65b",
+        LlamaArch { name: "llama65b", layers: 80, hidden: 8192, heads: 64, ffn: 22016, vocab: 131072, seq: 2048 },
+    ),
+    (
+        "e2e100m",
+        LlamaArch { name: "e2e100m", layers: 12, hidden: 768, heads: 12, ffn: 2048, vocab: 16384, seq: 128 },
+    ),
+    (
+        "demo20m",
+        LlamaArch { name: "demo20m", layers: 6, hidden: 384, heads: 6, ffn: 1024, vocab: 8192, seq: 128 },
+    ),
+    (
+        "tiny",
+        LlamaArch { name: "tiny", layers: 4, hidden: 64, heads: 4, ffn: 128, vocab: 256, seq: 32 },
+    ),
+];
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Option<LlamaArch> {
+    PRESETS.iter().find(|(n, _)| *n == name).map(|(_, a)| *a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_param_counts_in_range() {
+        let c13 = preset("llama13b").unwrap().param_count() as f64;
+        let c30 = preset("llama30b").unwrap().param_count() as f64;
+        let c65 = preset("llama65b").unwrap().param_count() as f64;
+        assert!(c13 > 13e9 && c13 < 15e9, "{c13}");
+        assert!(c30 > 30e9 && c30 < 36e9, "{c30}");
+        assert!(c65 > 64e9 && c65 < 69e9, "{c65}");
+    }
+
+    #[test]
+    fn e2e_is_about_100m() {
+        let n = preset("e2e100m").unwrap().param_count() as f64;
+        assert!(n > 90e6 && n < 130e6, "{n}");
+    }
+
+    #[test]
+    fn head_dim_is_128_for_paper_models() {
+        for name in ["llama13b", "llama65b"] {
+            assert_eq!(preset(name).unwrap().head_dim(), 128);
+        }
+    }
+
+    #[test]
+    fn model_flops_dominated_by_6n() {
+        let a = preset("llama13b").unwrap();
+        let per_tok = a.model_flops_per_token();
+        let six_n = 6.0 * a.param_count() as f64;
+        assert!(per_tok > six_n);
+        assert!(per_tok < 1.2 * six_n, "attention term should be small at 2k");
+    }
+
+    #[test]
+    fn flops_scale_with_batch_and_seq() {
+        let a = preset("tiny").unwrap();
+        assert!(a.layer_fwd_flops(2, 32) > a.layer_fwd_flops(1, 32));
+        let f1 = a.layer_fwd_flops(1, 32);
+        let f2 = a.layer_fwd_flops(1, 64);
+        assert!(f2 > 2.0 * f1, "attention makes seq scaling superlinear");
+    }
+
+    #[test]
+    fn attn_matrix_is_quadratic_in_seq() {
+        let a = preset("tiny").unwrap();
+        assert_eq!(a.attn_matrix_elems(1, 64), 4 * a.attn_matrix_elems(1, 32));
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(preset("gpt5").is_none());
+    }
+}

@@ -1,0 +1,6 @@
+//! Model architecture math (S1): the single source of truth for parameter
+//! counts and FLOP counts used by both the simulator and the MFU metric.
+
+pub mod arch;
+
+pub use arch::{LlamaArch, ModelPreset, PRESETS};

@@ -1,0 +1,262 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` (L2)
+//! and the Rust coordinator (L3).
+//!
+//! A manifest describes one AOT build of a model: the pipeline split, the
+//! flat parameter layout (name/shape/size/offset into the global fp32
+//! parameter vector), and the fwd/bwd HLO files per stage.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model architecture facts recorded by aot.py (mirrors `ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactModel {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub kernels: String,
+    pub param_count: usize,
+}
+
+/// One tensor in the flat parameter layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Element count (product of shape).
+    pub size: usize,
+    /// Offset (in elements) into the global flat fp32 parameter vector.
+    pub offset: usize,
+}
+
+/// One pipeline stage: which layers it owns and its two HLO artifacts.
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    pub index: usize,
+    pub start_layer: usize,
+    pub end_layer: usize,
+    pub has_embed: bool,
+    pub has_head: bool,
+    pub fwd_file: PathBuf,
+    pub bwd_file: PathBuf,
+    pub params: Vec<ParamInfo>,
+    pub param_elems: usize,
+}
+
+/// Parsed `manifest.json` for one (config, pp, mb) artifact build.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ArtifactModel,
+    pub pp: usize,
+    pub mb: usize,
+    pub total_param_elems: usize,
+    pub optimizer_chunk: usize,
+    pub stages: Vec<StageInfo>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .as_usize()
+        .with_context(|| format!("manifest: missing/invalid '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .as_str()
+        .with_context(|| format!("manifest: missing/invalid '{key}'"))?
+        .to_string())
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .as_bool()
+        .with_context(|| format!("manifest: missing/invalid '{key}'"))
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let cj = j.get("config");
+        let model = ArtifactModel {
+            name: req_str(cj, "name")?,
+            layers: req_usize(cj, "layers")?,
+            hidden: req_usize(cj, "hidden")?,
+            heads: req_usize(cj, "heads")?,
+            ffn: req_usize(cj, "ffn")?,
+            vocab: req_usize(cj, "vocab")?,
+            seq: req_usize(cj, "seq")?,
+            kernels: req_str(cj, "kernels")?,
+            param_count: req_usize(cj, "param_count")?,
+        };
+
+        let stages_json = j
+            .get("stages")
+            .as_arr()
+            .context("manifest: 'stages' must be an array")?;
+        let mut stages = Vec::with_capacity(stages_json.len());
+        for sj in stages_json {
+            let params_json = sj
+                .get("params")
+                .as_arr()
+                .context("manifest: stage 'params' must be an array")?;
+            let mut params = Vec::with_capacity(params_json.len());
+            for pj in params_json {
+                let shape: Vec<usize> = pj
+                    .get("shape")
+                    .as_arr()
+                    .context("param shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("param dim"))
+                    .collect::<Result<_>>()?;
+                params.push(ParamInfo {
+                    name: req_str(pj, "name")?,
+                    size: req_usize(pj, "size")?,
+                    offset: req_usize(pj, "offset")?,
+                    shape,
+                });
+            }
+            stages.push(StageInfo {
+                index: req_usize(sj, "index")?,
+                start_layer: req_usize(sj, "start_layer")?,
+                end_layer: req_usize(sj, "end_layer")?,
+                has_embed: req_bool(sj, "has_embed")?,
+                has_head: req_bool(sj, "has_head")?,
+                fwd_file: dir.join(req_str(sj.get("fwd"), "file")?),
+                bwd_file: dir.join(req_str(sj.get("bwd"), "file")?),
+                param_elems: req_usize(sj, "param_elems")?,
+                params,
+            });
+        }
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            pp: req_usize(&j, "pp")?,
+            mb: req_usize(&j, "mb")?,
+            total_param_elems: req_usize(&j, "total_param_elems")?,
+            optimizer_chunk: req_usize(&j, "optimizer_chunk")?,
+            stages,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Conventional artifact directory: `<root>/<config>/pp<P>_mb<M>`.
+    pub fn locate(root: &Path, config: &str, pp: usize, mb: usize) -> Result<Manifest> {
+        let dir = root.join(config).join(format!("pp{pp}_mb{mb}"));
+        if !dir.join("manifest.json").exists() {
+            bail!(
+                "no artifacts at {} — run: cd python && python -m compile.aot \
+                 --config {config} --pp {pp} --mb {mb} --out-dir ../artifacts",
+                dir.display()
+            );
+        }
+        Manifest::load(&dir)
+    }
+
+    /// Internal consistency: offsets dense and ascending, stage count == pp,
+    /// files exist, parameter totals agree.
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.len() != self.pp {
+            bail!("manifest: {} stages but pp={}", self.stages.len(), self.pp);
+        }
+        let mut expected_offset = 0usize;
+        for st in &self.stages {
+            let mut sum = 0usize;
+            for p in &st.params {
+                let prod: usize = p.shape.iter().product::<usize>().max(1);
+                if prod != p.size {
+                    bail!("param {}: shape {:?} product != size {}", p.name, p.shape, p.size);
+                }
+                if p.offset != expected_offset {
+                    bail!(
+                        "param {}: offset {} != expected {} (layout must be dense)",
+                        p.name,
+                        p.offset,
+                        expected_offset
+                    );
+                }
+                expected_offset += p.size;
+                sum += p.size;
+            }
+            if sum != st.param_elems {
+                bail!("stage {}: param_elems {} != sum {}", st.index, st.param_elems, sum);
+            }
+            for f in [&st.fwd_file, &st.bwd_file] {
+                if !f.exists() {
+                    bail!("missing artifact file {}", f.display());
+                }
+            }
+        }
+        if expected_offset != self.total_param_elems {
+            bail!(
+                "total_param_elems {} != layout end {}",
+                self.total_param_elems,
+                expected_offset
+            );
+        }
+        if self.total_param_elems != self.model.param_count {
+            bail!(
+                "param_count {} != flat layout {}",
+                self.model.param_count,
+                self.total_param_elems
+            );
+        }
+        Ok(())
+    }
+
+    /// Stage input activation element count (mb * seq * hidden).
+    pub fn activation_elems(&self) -> usize {
+        self.mb * self.model.seq * self.model.hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests against real artifacts require `make artifacts`; they are
+    /// guarded so `cargo test` degrades gracefully before the build.
+    fn tiny_dir() -> Option<PathBuf> {
+        let d = crate::artifacts_root().join("tiny/pp2_mb2");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(dir) = tiny_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.name, "tiny");
+        assert_eq!(m.pp, 2);
+        assert_eq!(m.mb, 2);
+        assert_eq!(m.stages.len(), 2);
+        assert!(m.stages[0].has_embed && !m.stages[0].has_head);
+        assert!(m.stages[1].has_head && !m.stages[1].has_embed);
+        // flat layout covers every parameter exactly once
+        let total: usize = m.stages.iter().map(|s| s.param_elems).sum();
+        assert_eq!(total, m.model.param_count);
+    }
+
+    #[test]
+    fn locate_reports_helpful_error() {
+        let err = Manifest::locate(Path::new("/nonexistent"), "tiny", 1, 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("compile.aot"), "{msg}");
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT engine: one CPU client + a compile cache of loaded executables.
+//!
+//! `Engine` is deliberately **thread-local** (`PjRtClient` is `Rc`-based):
+//! every coordinator worker thread creates its own `Engine`, exactly like
+//! every rank in a real NCCL job owns its own CUDA context. Executables are
+//! cached by artifact path so re-loading a stage is free within a thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// XLA compilation is memory-hungry on this image (the 0.5.1 CPU backend
+/// can transiently use >10 GB per module); serializing compiles across
+/// worker threads keeps the process peak at one module's worth instead
+/// of `dp·pp` modules' worth (§Perf L3 — this fixed an OOM kill of the
+/// 100M-parameter E2E run on the 35 GB host).
+static COMPILE_LOCK: Mutex<()> = Mutex::new(());
+
+/// A compiled artifact plus execution helpers.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Run with the given inputs and decompose the (always-tuple) result.
+    ///
+    /// aot.py lowers everything with `return_tuple=True`, so a single
+    /// `to_tuple()` uniformly yields the output literals.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Run with pre-staged device buffers (the hot path: parameters are
+    /// uploaded once per optimizer step, not once per micro-batch —
+    /// EXPERIMENTS.md §Perf L3).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}
+
+/// Thread-local PJRT CPU engine with an executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact, compile it, and cache the executable.
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = {
+            let _guard = COMPILE_LOCK.lock().unwrap();
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?
+        };
+        let exe = Rc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of cached executables (used by tests and metrics).
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// A cloneable handle to the underlying PJRT client (Rc-based).
+    pub fn raw_client(&self) -> xla::PjRtClient {
+        self.client.clone()
+    }
+
+    /// Stage an f32 tensor on the device (host->device copy happens once;
+    /// subsequent `run_b` calls reuse the buffer).
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("staging f32 buffer")
+    }
+
+    /// Stage an i32 tensor on the device.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("staging i32 buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal::{f32_scalar, scalar_f32, to_f32_vec};
+
+    fn adamw_path() -> Option<PathBuf> {
+        let p = crate::artifacts_root().join("adamw_chunk.hlo.txt");
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.load(Path::new("/nope/nothing.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn adamw_artifact_runs_and_caches() {
+        let Some(path) = adamw_path() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let e = Engine::cpu().unwrap();
+        let exe = e.load(&path).unwrap();
+        assert_eq!(e.cached(), 1);
+        // Second load hits the cache (same Rc).
+        let exe2 = e.load(&path).unwrap();
+        assert!(Rc::ptr_eq(&exe, &exe2));
+
+        // p=1, g=0, m=v=0, lr=0.01, step=1  =>  pure weight decay 0.1.
+        // Chunk size comes from the artifact build (optimizer.CHUNK).
+        let chunk = crate::runtime::artifact::Manifest::locate(
+            &crate::artifacts_root(), "tiny", 1, 2,
+        )
+        .map(|m| m.optimizer_chunk)
+        .unwrap_or(1 << 20);
+        let ones = vec![1.0f32; chunk];
+        let zeros = vec![0.0f32; chunk];
+        let p = crate::runtime::literal::f32_literal(&ones, &[chunk]).unwrap();
+        let g = crate::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap();
+        let m = crate::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap();
+        let v = crate::runtime::literal::f32_literal(&zeros, &[chunk]).unwrap();
+        let out = exe
+            .run(&[p, g, m, v, f32_scalar(0.01), f32_scalar(1.0)])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let p2 = to_f32_vec(&out[0]).unwrap();
+        assert!((p2[0] - (1.0 - 0.01 * 0.1)).abs() < 1e-6, "p2[0]={}", p2[0]);
+        assert!((scalar_f32(&f32_scalar(5.0)).unwrap() - 5.0).abs() < 1e-9);
+    }
+}

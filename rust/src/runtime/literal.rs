@@ -1,0 +1,102 @@
+//! Host<->device literal helpers over the `xla` crate.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let elems: usize = shape.iter().product::<usize>().max(1);
+    if elems != data.len() {
+        bail!("shape {:?} wants {} elems, slice has {}", shape, elems, data.len());
+    }
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshape f32 literal")
+}
+
+/// Build a rank-0 f32 scalar literal.
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Build an i32 literal of the given shape (token/target batches).
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let elems: usize = shape.iter().product::<usize>().max(1);
+    if elems != data.len() {
+        bail!("shape {:?} wants {} elems, slice has {}", shape, elems, data.len());
+    }
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshape i32 literal")
+}
+
+/// Copy a literal's f32 payload out to a Vec.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal -> Vec<f32>")
+}
+
+/// Copy a literal's f32 payload into an existing slice (no allocation).
+pub fn copy_f32_into(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    if lit.element_count() != dst.len() {
+        bail!(
+            "literal has {} elems, destination {}",
+            lit.element_count(),
+            dst.len()
+        );
+    }
+    lit.copy_raw_to(dst).context("literal copy_raw_to")
+}
+
+/// Extract the scalar f32 from a rank-0 literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("scalar literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn copy_into_no_alloc() {
+        let data = vec![7.0f32; 8];
+        let lit = f32_literal(&data, &[8]).unwrap();
+        let mut dst = vec![0.0f32; 8];
+        copy_f32_into(&lit, &mut dst).unwrap();
+        assert_eq!(dst, data);
+        let mut small = vec![0.0f32; 4];
+        assert!(copy_f32_into(&lit, &mut small).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, 2, 3, 4];
+        let lit = i32_literal(&data, &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = f32_scalar(2.5);
+        assert_eq!(scalar_f32(&lit).unwrap(), 2.5);
+    }
+}

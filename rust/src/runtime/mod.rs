@@ -1,0 +1,16 @@
+//! L3↔L2 bridge: load and execute AOT-compiled XLA artifacts via PJRT.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); this
+//! module is the entire runtime interface to the compiled model —
+//! `Engine` (PJRT CPU client + compile cache), `Manifest` (the artifact
+//! contract), and `StageRuntime` (typed fwd/bwd execution of one pipeline
+//! stage). Start-to-finish pattern adapted from /opt/xla-example/load_hlo.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+pub mod stage;
+
+pub use artifact::{ArtifactModel, Manifest, ParamInfo, StageInfo};
+pub use client::{Engine, Executable};
+pub use stage::{BwdOut, FwdOut, StageInput, StageRuntime};

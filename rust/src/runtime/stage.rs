@@ -1,0 +1,252 @@
+//! Stage runtime: typed execution of one pipeline stage's fwd/bwd artifacts.
+//!
+//! Mirrors the signatures documented in `python/compile/stages.py`:
+//!
+//! | stage kind       | fwd                          | bwd                              |
+//! |------------------|------------------------------|----------------------------------|
+//! | embed (first)    | (p…, tokens) -> h            | (p…, tokens, dh) -> (g…)         |
+//! | mid              | (p…, h) -> h'                | (p…, h, dh') -> (dh, g…)         |
+//! | head (last)      | (p…, h, targets) -> loss     | (p…, h, targets) -> (loss, dh, g…) |
+//! | single (pp == 1) | (p…, tokens, targets) -> loss| (p…, tokens, targets) -> (loss, g…) |
+//!
+//! Backward recomputes the stage forward internally (per-stage activation
+//! checkpointing), so only stage *inputs* cross the wire in 1F1B.
+
+use std::rc::Rc;
+
+use anyhow::{bail, ensure, Context, Result};
+use xla::{Literal, PjRtBuffer};
+
+use super::artifact::{Manifest, StageInfo};
+use super::client::{Engine, Executable};
+use super::literal as lit;
+
+/// Input to a stage: token ids for the first stage, hidden states otherwise.
+pub enum StageInput<'a> {
+    Tokens(&'a [i32]),
+    Hidden(&'a [f32]),
+}
+
+/// Forward output: hidden activations, or the scalar loss on the last stage.
+pub enum FwdOut {
+    Hidden(Vec<f32>),
+    Loss(f32),
+}
+
+/// Backward output: upstream cotangent (if any), flat stage grads, loss (if
+/// computed here).
+pub struct BwdOut {
+    pub loss: Option<f32>,
+    pub dx: Option<Vec<f32>>,
+    /// Stage-local gradients, dense in the stage's manifest param order —
+    /// i.e. exactly the `[base, base+param_elems)` slice of the global
+    /// flat gradient vector.
+    pub grads: Vec<f32>,
+}
+
+/// A loaded, ready-to-run pipeline stage.
+pub struct StageRuntime {
+    pub info: StageInfo,
+    fwd: Rc<Executable>,
+    bwd: Rc<Executable>,
+    client: xla::PjRtClient,
+    mb: usize,
+    seq: usize,
+    hidden: usize,
+}
+
+impl StageRuntime {
+    /// Compile (or fetch from the engine cache) stage `index` of `manifest`.
+    pub fn load(engine: &Engine, manifest: &Manifest, index: usize) -> Result<StageRuntime> {
+        let info = manifest
+            .stages
+            .get(index)
+            .with_context(|| format!("stage {index} out of range"))?
+            .clone();
+        let fwd = engine.load(&info.fwd_file)?;
+        let bwd = engine.load(&info.bwd_file)?;
+        Ok(StageRuntime {
+            info,
+            fwd,
+            bwd,
+            client: engine.raw_client(),
+            mb: manifest.mb,
+            seq: manifest.model.seq,
+            hidden: manifest.model.hidden,
+        })
+    }
+
+    /// Elements in this stage's input/output activation tensor.
+    pub fn act_elems(&self) -> usize {
+        self.mb * self.seq * self.hidden
+    }
+
+    /// Elements in a token/target batch.
+    pub fn tok_elems(&self) -> usize {
+        self.mb * self.seq
+    }
+
+    /// Global flat-vector offset of this stage's first parameter.
+    pub fn base_offset(&self) -> usize {
+        self.info.params.first().map(|p| p.offset).unwrap_or(0)
+    }
+
+    /// Build per-parameter literals from the *global* flat fp32 vector.
+    /// Call once per optimizer step; fwd/bwd borrow the result.
+    pub fn param_literals(&self, flat_global: &[f32]) -> Result<Vec<Literal>> {
+        let mut out = Vec::with_capacity(self.info.params.len());
+        for p in &self.info.params {
+            ensure!(
+                p.offset + p.size <= flat_global.len(),
+                "param {} [{}..{}) outside flat vector of {}",
+                p.name,
+                p.offset,
+                p.offset + p.size,
+                flat_global.len()
+            );
+            out.push(lit::f32_literal(
+                &flat_global[p.offset..p.offset + p.size],
+                &p.shape,
+            )?);
+        }
+        Ok(out)
+    }
+
+    /// Stage this stage's parameters as persistent device buffers from a
+    /// *stage-local* flat slice (length `param_elems`). Upload happens
+    /// once per optimizer step; fwd/bwd reuse the buffers (§Perf L3).
+    pub fn param_buffers(&self, stage_flat: &[f32]) -> Result<Vec<PjRtBuffer>> {
+        ensure!(
+            stage_flat.len() == self.info.param_elems,
+            "stage flat len {} != {}",
+            stage_flat.len(),
+            self.info.param_elems
+        );
+        let base = self.base_offset();
+        let mut out = Vec::with_capacity(self.info.params.len());
+        for p in &self.info.params {
+            let lo = p.offset - base;
+            out.push(
+                self.client
+                    .buffer_from_host_buffer(&stage_flat[lo..lo + p.size], &p.shape, None)
+                    .with_context(|| format!("staging param {}", p.name))?,
+            );
+        }
+        Ok(out)
+    }
+
+    fn input_buffer(&self, input: &StageInput) -> Result<PjRtBuffer> {
+        match input {
+            StageInput::Tokens(t) => {
+                ensure!(self.info.has_embed, "stage {} takes hidden, not tokens", self.info.index);
+                ensure!(t.len() == self.tok_elems(), "tokens len {} != {}", t.len(), self.tok_elems());
+                Ok(self.client.buffer_from_host_buffer(t, &[self.mb, self.seq], None)?)
+            }
+            StageInput::Hidden(h) => {
+                ensure!(!self.info.has_embed, "stage {} takes tokens, not hidden", self.info.index);
+                ensure!(h.len() == self.act_elems(), "hidden len {} != {}", h.len(), self.act_elems());
+                Ok(self
+                    .client
+                    .buffer_from_host_buffer(h, &[self.mb, self.seq, self.hidden], None)?)
+            }
+        }
+    }
+
+    /// Run the stage forward. `targets` is required iff this is the head.
+    pub fn forward(
+        &self,
+        params: &[PjRtBuffer],
+        input: &StageInput,
+        targets: Option<&[i32]>,
+    ) -> Result<FwdOut> {
+        ensure!(params.len() == self.info.params.len(), "wrong param count");
+        let mut extra: Vec<PjRtBuffer> = vec![self.input_buffer(input)?];
+        if self.info.has_head {
+            let t = targets.context("head stage forward needs targets")?;
+            ensure!(t.len() == self.tok_elems(), "targets len");
+            extra.push(self.client.buffer_from_host_buffer(t, &[self.mb, self.seq], None)?);
+        } else {
+            ensure!(targets.is_none(), "non-head stage got targets");
+        }
+        let args: Vec<&PjRtBuffer> = params.iter().chain(extra.iter()).collect();
+        let out = self.fwd.run_b(&args)?;
+        ensure!(out.len() == 1, "stage fwd should return 1 value, got {}", out.len());
+        if self.info.has_head {
+            Ok(FwdOut::Loss(lit::scalar_f32(&out[0])?))
+        } else {
+            Ok(FwdOut::Hidden(lit::to_f32_vec(&out[0])?))
+        }
+    }
+
+    /// Run the stage backward (recompute + vjp).
+    ///
+    /// * head stage: pass `targets`, no `dy`.
+    /// * other stages: pass `dy` (cotangent of this stage's output).
+    pub fn backward(
+        &self,
+        params: &[PjRtBuffer],
+        input: &StageInput,
+        dy: Option<&[f32]>,
+        targets: Option<&[i32]>,
+    ) -> Result<BwdOut> {
+        ensure!(params.len() == self.info.params.len(), "wrong param count");
+        let mut extra: Vec<PjRtBuffer> = vec![self.input_buffer(input)?];
+        if self.info.has_head {
+            let t = targets.context("head stage backward needs targets")?;
+            extra.push(self.client.buffer_from_host_buffer(t, &[self.mb, self.seq], None)?);
+            ensure!(dy.is_none(), "head stage derives dy from the loss");
+        } else {
+            let d = dy.context("non-head stage backward needs dy")?;
+            ensure!(d.len() == self.act_elems(), "dy len {} != {}", d.len(), self.act_elems());
+            extra.push(self.client.buffer_from_host_buffer(
+                d,
+                &[self.mb, self.seq, self.hidden],
+                None,
+            )?);
+        }
+        let args: Vec<&PjRtBuffer> = params.iter().chain(extra.iter()).collect();
+        let out = self.bwd.run_b(&args)?;
+
+        let nparams = self.info.params.len();
+        let (loss, dx, grad_lits): (Option<f32>, Option<Vec<f32>>, &[Literal]) =
+            match (self.info.has_embed, self.info.has_head) {
+                (true, true) => {
+                    // (loss, g...)
+                    ensure!(out.len() == 1 + nparams, "pp1 bwd arity {}", out.len());
+                    (Some(lit::scalar_f32(&out[0])?), None, &out[1..])
+                }
+                (false, true) => {
+                    // (loss, dh, g...)
+                    ensure!(out.len() == 2 + nparams, "head bwd arity {}", out.len());
+                    (
+                        Some(lit::scalar_f32(&out[0])?),
+                        Some(lit::to_f32_vec(&out[1])?),
+                        &out[2..],
+                    )
+                }
+                (true, false) => {
+                    // (g...)
+                    ensure!(out.len() == nparams, "embed bwd arity {}", out.len());
+                    (None, None, &out[..])
+                }
+                (false, false) => {
+                    // (dh, g...)
+                    ensure!(out.len() == 1 + nparams, "mid bwd arity {}", out.len());
+                    (None, Some(lit::to_f32_vec(&out[0])?), &out[1..])
+                }
+            };
+
+        // Flatten grads into the stage's dense layout.
+        let mut grads = vec![0.0f32; self.info.param_elems];
+        let base = self.base_offset();
+        for (p, g) in self.info.params.iter().zip(grad_lits) {
+            let lo = p.offset - base;
+            lit::copy_f32_into(g, &mut grads[lo..lo + p.size])
+                .with_context(|| format!("grad for {}", p.name))?;
+        }
+        if grads.iter().any(|x| !x.is_finite()) {
+            bail!("non-finite gradient from stage {}", self.info.index);
+        }
+        Ok(BwdOut { loss, dx, grads })
+    }
+}

@@ -1,0 +1,110 @@
+//! Hardware model (S7 numbers): NVIDIA DGX-A100 constants from §3 of the
+//! paper plus public datasheets. All simulator formulas draw peak rates
+//! and capacities from here so "what if H100?" is a one-struct change.
+
+/// Accelerator + fabric constants.
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    /// Peak dense bf16 matmul throughput per GPU (A100: 312 TFLOP/s).
+    pub peak_matmul_flops: f64,
+    /// HBM capacity per GPU in bytes (A100-80GB).
+    pub hbm_bytes: f64,
+    /// Achievable HBM bandwidth (A100: ~2.0 TB/s peak, ~1.6 effective).
+    pub hbm_bw: f64,
+    /// Per-direction NVLink bandwidth inside a node (NVLink3: 600 GB/s
+    /// aggregate, ~250 GB/s achievable per collective direction).
+    pub nvlink_bw: f64,
+    /// Per-GPU InfiniBand bandwidth across nodes (HDR 200 Gb/s => 25 GB/s).
+    pub ib_bw: f64,
+    /// Fixed latency per collective operation (launch + rendezvous).
+    pub coll_latency_s: f64,
+    /// Fixed CPU-side launch overhead per fused kernel region.
+    pub launch_overhead_s: f64,
+    /// Memory reserved by CUDA context / NCCL / framework + fragmentation.
+    pub workspace_bytes: f64,
+}
+
+/// The paper's testbed: DGX A100-80GB nodes, NVLink3 + HDR InfiniBand.
+pub const A100: Hardware = Hardware {
+    peak_matmul_flops: 312e12,
+    hbm_bytes: 80.0 * 1e9,
+    hbm_bw: 1.55e12,
+    nvlink_bw: 250e9,
+    ib_bw: 25e9,
+    coll_latency_s: 20e-6,
+    launch_overhead_s: 4.5e-6,
+    workspace_bytes: 5.0 * 1e9,
+};
+
+/// H100 SXM for the "future work" ablation (989 TFLOP/s bf16, 3.35 TB/s).
+pub const H100: Hardware = Hardware {
+    peak_matmul_flops: 989.4e12,
+    hbm_bytes: 80.0 * 1e9,
+    hbm_bw: 2.6e12,
+    nvlink_bw: 450e9,
+    ib_bw: 50e9,
+    coll_latency_s: 20e-6,
+    launch_overhead_s: 4.5e-6,
+    workspace_bytes: 5.0 * 1e9,
+};
+
+/// Ring all-reduce time for `bytes` over `n` ranks at `bw` bytes/s.
+pub fn allreduce_time(bytes: f64, n: usize, bw: f64, latency: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2.0 * (n as f64 - 1.0);
+    latency * (n as f64).log2().max(1.0) + steps / n as f64 * bytes / bw
+}
+
+/// Reduce-scatter or all-gather: half an all-reduce.
+pub fn rs_or_ag_time(bytes: f64, n: usize, bw: f64, latency: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = n as f64 - 1.0;
+    latency * (n as f64).log2().max(1.0) + steps / n as f64 * bytes / bw
+}
+
+/// Point-to-point transfer time.
+pub fn p2p_time(bytes: f64, bw: f64, latency: f64) -> f64 {
+    latency + bytes / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_monotone_in_bytes_and_ranks() {
+        let t1 = allreduce_time(1e9, 8, 250e9, 20e-6);
+        let t2 = allreduce_time(2e9, 8, 250e9, 20e-6);
+        assert!(t2 > t1);
+        // 2(n-1)/n grows with n at fixed bytes
+        let t8 = allreduce_time(1e9, 8, 250e9, 0.0);
+        let t64 = allreduce_time(1e9, 64, 250e9, 0.0);
+        assert!(t64 > t8);
+        // asymptote: 2 * bytes / bw
+        assert!(t64 < 2.0 * 1e9 / 250e9 * 1.01);
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        assert_eq!(allreduce_time(1e9, 1, 250e9, 20e-6), 0.0);
+        assert_eq!(rs_or_ag_time(1e9, 1, 250e9, 20e-6), 0.0);
+    }
+
+    #[test]
+    fn rs_is_half_allreduce_asymptotically() {
+        let ar = allreduce_time(8e9, 64, 250e9, 0.0);
+        let rs = rs_or_ag_time(8e9, 64, 250e9, 0.0);
+        assert!((ar / rs - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn a100_constants_sane() {
+        assert_eq!(A100.peak_matmul_flops, 312e12);
+        assert_eq!(A100.hbm_bytes, 80e9);
+        assert!(A100.nvlink_bw > A100.ib_bw);
+    }
+}

@@ -1,0 +1,135 @@
+//! Model FLOPs Utilization (S2) — the paper's metric, Appendix A.1.
+//!
+//! `MFU = tokens_per_second / (peak_matmul_throughput / model_flops_per_token)`
+//!
+//! Model FLOPs count only the model's useful work (`6N + 12·L·h·s` per
+//! token); recomputation and communication burn wall time without adding
+//! model FLOPs, which is how checkpointing and bad layouts show up as
+//! lower MFU. Also implements Appendix A.3's Megatron back-calculation
+//! used for Table 2's external baselines.
+
+use crate::model::LlamaArch;
+
+/// MFU from a measured/simulated step time.
+///
+/// * `gbs` — global batch size in sequences
+/// * `world` — number of GPUs
+/// * `peak` — per-GPU peak matmul FLOP/s (A100: 312e12)
+pub fn mfu(arch: &LlamaArch, gbs: usize, world: usize, peak: f64, step_time_s: f64) -> f64 {
+    let tokens_per_second = (gbs * arch.seq) as f64 / step_time_s;
+    let theoretical_peak_matmul = peak * world as f64;
+    let theoretical_peak_tokens = theoretical_peak_matmul / arch.model_flops_per_token();
+    tokens_per_second / theoretical_peak_tokens
+}
+
+/// Inverse: the step time a given MFU implies (used for anchor tests).
+pub fn step_time_for_mfu(arch: &LlamaArch, gbs: usize, world: usize, peak: f64, mfu: f64) -> f64 {
+    let tokens = (gbs * arch.seq) as f64;
+    tokens * arch.model_flops_per_token() / (peak * world as f64 * mfu)
+}
+
+/// Appendix A.3: back-calculate MFU from Megatron-LM's published
+/// "achieved TFLOPs per GPU" numbers. Megatron's end-to-end time formula
+/// is `8·T·P / (n·X)`, i.e. their achieved-TFLOPs metric already includes
+/// the 8TP/6TP recompute factor; step time follows, MFU from there.
+pub struct MegatronPub {
+    pub params: f64,
+    pub layers: usize,
+    pub hidden: usize,
+    pub seq: usize,
+    pub gbs: usize,
+    pub gpus: usize,
+    pub achieved_tflops_per_gpu: f64,
+}
+
+pub fn megatron_mfu(m: &MegatronPub, peak: f64) -> f64 {
+    // Step time = 8 * gbs*seq * P / (n * X)
+    let tokens = (m.gbs * m.seq) as f64;
+    let step_time = 8.0 * tokens * m.params / (m.gpus as f64 * m.achieved_tflops_per_gpu);
+    let tokens_per_second = tokens / step_time;
+    let attn_flops = 12.0 * m.layers as f64 * m.hidden as f64 * m.seq as f64;
+    let model_flops = 6.0 * m.params + attn_flops;
+    let theoretical_peak_tokens = peak * m.gpus as f64 / model_flops;
+    tokens_per_second / theoretical_peak_tokens
+}
+
+/// Appendix A.2: LLAMA 65B MFU from Meta's published tokens/sec/GPU.
+pub fn llama_meta_mfu(tokens_per_sec_per_gpu: f64, params: f64, layers: usize,
+                      hidden: usize, seq: usize, peak: f64) -> f64 {
+    let model_flops = 6.0 * params + 12.0 * layers as f64 * hidden as f64 * seq as f64;
+    tokens_per_sec_per_gpu * model_flops / peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::preset;
+
+    const PEAK: f64 = 312e12;
+
+    #[test]
+    fn paper_anchor_13b_70_57() {
+        // Table 4 row 1: 26.54 s step on 64 GPUs => 70.57 MFU.
+        let a = preset("llama13b").unwrap();
+        let m = mfu(&a, 2048, 64, PEAK, 26.54);
+        assert!((m - 0.7057).abs() < 0.02, "mfu {m}");
+    }
+
+    #[test]
+    fn roundtrip_step_time() {
+        let a = preset("llama30b").unwrap();
+        let t = step_time_for_mfu(&a, 2048, 256, PEAK, 0.4922);
+        let m = mfu(&a, 2048, 256, PEAK, t);
+        assert!((m - 0.4922).abs() < 1e-12);
+    }
+
+    #[test]
+    fn appendix_a3_megatron_18b() {
+        // Appendix A.3: Megatron-LM 18B at 135 achieved TFLOPs => 34.24%.
+        let m = megatron_mfu(
+            &MegatronPub {
+                params: 18.4e9,
+                layers: 40,
+                hidden: 6144,
+                seq: 2048,
+                gbs: 1024,
+                gpus: 256,
+                achieved_tflops_per_gpu: 135e12,
+            },
+            PEAK,
+        );
+        assert!((m - 0.3424).abs() < 0.005, "mfu {m}");
+    }
+
+    #[test]
+    fn appendix_a3_megatron_76b() {
+        let m = megatron_mfu(
+            &MegatronPub {
+                params: 76.1e9,
+                layers: 60,
+                hidden: 10240,
+                seq: 2048,
+                gbs: 1792,
+                gpus: 1024,
+                achieved_tflops_per_gpu: 140e12,
+            },
+            PEAK,
+        );
+        assert!((m - 0.3476).abs() < 0.005, "mfu {m}");
+    }
+
+    #[test]
+    fn appendix_a2_llama_meta() {
+        // "around 380 tokens/sec/GPU" for 65B on 2048 A100s => 49.46%.
+        let m = llama_meta_mfu(380.0, 65.2e9, 80, 8192, 2048, PEAK);
+        assert!((m - 0.4946).abs() < 0.01, "mfu {m}");
+    }
+
+    #[test]
+    fn mfu_inversely_proportional_to_step_time() {
+        let a = preset("llama13b").unwrap();
+        let m1 = mfu(&a, 2048, 64, PEAK, 30.0);
+        let m2 = mfu(&a, 2048, 64, PEAK, 60.0);
+        assert!((m1 / m2 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! Analytical A100-cluster simulator (S2–S6): the substrate standing in
+//! for the paper's 64–256-GPU testbed (see DESIGN.md §Substitutions).
+//!
+//! Entry point: [`evaluate`] — one layout in, one [`Outcome`] out, exactly
+//! the quantities a row of the paper's Appendix B/C tables reports: step
+//! time + MFU, or OOM, or "Kernel unavail.".
+
+pub mod cluster;
+pub mod kernels;
+pub mod memory;
+pub mod mfu;
+pub mod step_time;
+
+pub use cluster::{Hardware, A100, H100};
+pub use memory::MemoryBreakdown;
+pub use step_time::StepBreakdown;
+
+use crate::layout::{Job, ValidLayout};
+
+/// Result of simulating one training configuration.
+#[derive(Debug, Clone, Copy)]
+pub enum Outcome {
+    /// The run completes: step time (s), MFU, and the breakdowns.
+    Ok {
+        step_time_s: f64,
+        mfu: f64,
+        mem: MemoryBreakdown,
+        step: StepBreakdown,
+    },
+    /// Out of memory: predicted requirement in bytes.
+    Oom { required: f64, budget: f64 },
+    /// The kernel doesn't support this configuration (fused softmax TP
+    /// constraints — the paper's "Kernel unavail." rows).
+    KernelUnavailable,
+}
+
+impl Outcome {
+    pub fn mfu(&self) -> Option<f64> {
+        match self {
+            Outcome::Ok { mfu, .. } => Some(*mfu),
+            _ => None,
+        }
+    }
+
+    pub fn step_time(&self) -> Option<f64> {
+        match self {
+            Outcome::Ok { step_time_s, .. } => Some(*step_time_s),
+            _ => None,
+        }
+    }
+
+    pub fn is_oom(&self) -> bool {
+        matches!(self, Outcome::Oom { .. })
+    }
+
+    /// Paper table cell for the status column.
+    pub fn status_label(&self) -> String {
+        match self {
+            Outcome::Ok { .. } => "ok".to_string(),
+            Outcome::Oom { .. } => "OOM Error".to_string(),
+            Outcome::KernelUnavailable => "Kernel unavail.".to_string(),
+        }
+    }
+}
+
+/// Simulate one validated layout on the given hardware.
+pub fn evaluate(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
+    if !kernels::kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb) {
+        return Outcome::KernelUnavailable;
+    }
+    let mem = memory::per_gpu_memory(job, v, hw);
+    if mem.total() > hw.hbm_bytes {
+        return Outcome::Oom { required: mem.total(), budget: hw.hbm_bytes };
+    }
+    let step = step_time::step_time(job, v, hw);
+    let t = step.total();
+    let m = mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t);
+    Outcome::Ok { step_time_s: t, mfu: m, mem, step }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{validate, Job, Kernel, Layout};
+    use crate::model::arch::preset;
+    use crate::topo::Cluster;
+
+    fn eval13(tp: usize, pp: usize, mb: usize, ckpt: bool, k: Kernel) -> Outcome {
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let v = validate(&job, &Layout { tp, pp, mb, ckpt, kernel: k, sp: false }).unwrap();
+        evaluate(&job, &v, &A100)
+    }
+
+    #[test]
+    fn headline_anchor_70_percent() {
+        // The paper's headline: 13B @ (1,1,1) FA2+RMS = 70.57 MFU.
+        let m = eval13(1, 1, 1, false, Kernel::Flash2Rms).mfu().unwrap();
+        assert!(m > 0.63 && m < 0.78, "mfu {m}");
+    }
+
+    #[test]
+    fn oom_rows_reported() {
+        assert!(eval13(1, 1, 1, false, Kernel::Flash2).is_oom());
+        assert_eq!(eval13(1, 1, 1, false, Kernel::Flash2).status_label(), "OOM Error");
+    }
+
+    #[test]
+    fn kernel_unavailable_rows() {
+        let job = Job::new(preset("llama30b").unwrap(), Cluster::dgx_a100(32), 2048);
+        let v = validate(
+            &job,
+            &Layout { tp: 4, pp: 4, mb: 1, ckpt: false, kernel: Kernel::Fused, sp: false },
+        )
+        .unwrap();
+        assert!(matches!(evaluate(&job, &v, &A100), Outcome::KernelUnavailable));
+    }
+
+    #[test]
+    fn mfu_never_exceeds_one() {
+        for tp in [1, 2] {
+            for pp in [1, 2] {
+                for mb in [1, 2, 4] {
+                    for ckpt in [false, true] {
+                        for k in Kernel::ALL {
+                            if ckpt && k == Kernel::Flash2Rms {
+                                continue;
+                            }
+                            if let Outcome::Ok { mfu, step_time_s, .. } = eval13(tp, pp, mb, ckpt, k) {
+                                assert!(mfu > 0.0 && mfu < 1.0, "mfu {mfu}");
+                                assert!(step_time_s > 0.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

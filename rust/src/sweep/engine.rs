@@ -1,0 +1,166 @@
+//! Sweep engine (S9): Cartesian-product evaluation + paper-style ranking.
+
+use crate::layout::{enumerate, Job, Layout, ValidLayout};
+use crate::sim::{evaluate, Hardware, Outcome};
+use crate::sweep::presets::SweepPreset;
+
+/// One evaluated sweep row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub v: ValidLayout,
+    pub outcome: Outcome,
+}
+
+impl Row {
+    pub fn layout(&self) -> &Layout {
+        &self.v.layout
+    }
+}
+
+/// Full sweep result for one preset.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub preset_name: String,
+    pub job: Job,
+    pub rows: Vec<Row>,
+}
+
+impl SweepResult {
+    /// Rows sorted the way the paper prints tables: runnable rows by MFU
+    /// descending, then OOM rows, then kernel-unavailable rows.
+    pub fn sorted(&self) -> Vec<&Row> {
+        let mut rows: Vec<&Row> = self.rows.iter().collect();
+        rows.sort_by(|a, b| {
+            let key = |r: &Row| match r.outcome {
+                Outcome::Ok { mfu, .. } => (0, -mfu),
+                Outcome::Oom { .. } => (1, 0.0),
+                Outcome::KernelUnavailable => (2, 0.0),
+            };
+            key(a).partial_cmp(&key(b)).unwrap()
+        });
+        rows
+    }
+
+    /// Best runnable row, optionally filtered.
+    pub fn best_where<F: Fn(&Row) -> bool>(&self, f: F) -> Option<&Row> {
+        self.rows
+            .iter()
+            .filter(|r| f(r) && r.outcome.mfu().is_some())
+            .max_by(|a, b| {
+                a.outcome
+                    .mfu()
+                    .partial_cmp(&b.outcome.mfu())
+                    .unwrap()
+            })
+    }
+
+    pub fn best(&self) -> Option<&Row> {
+        self.best_where(|_| true)
+    }
+
+    pub fn count_ok(&self) -> usize {
+        self.rows.iter().filter(|r| r.outcome.mfu().is_some()).count()
+    }
+
+    pub fn count_oom(&self) -> usize {
+        self.rows.iter().filter(|r| r.outcome.is_oom()).count()
+    }
+}
+
+/// Run one preset on the given hardware model.
+pub fn run(preset: &SweepPreset, hw: &Hardware) -> SweepResult {
+    let job = preset.job();
+    let layouts = enumerate(
+        &job,
+        &preset.tps,
+        &preset.pps,
+        &preset.mbs,
+        &preset.ckpts,
+        &preset.kernels,
+        &preset.sps,
+    );
+    let rows = layouts
+        .into_iter()
+        .map(|v| Row { outcome: evaluate(&job, &v, hw), v })
+        .collect();
+    SweepResult { preset_name: preset.name.to_string(), job, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Kernel;
+    use crate::sim::A100;
+    use crate::sweep::presets::{main_presets, seqpar_presets};
+
+    #[test]
+    fn main_sweep_13b_best_is_rms_mb1_no_ckpt() {
+        // The paper's headline row: best 13B/2k layout is
+        // (mb=1, tp=1, pp=1), FA2+RMS, no checkpointing, 70.57 MFU.
+        let r = run(&main_presets()[0], &A100);
+        let best = r.best().unwrap();
+        assert_eq!(best.layout().mb, 1);
+        assert!(!best.layout().ckpt);
+        assert_eq!(best.layout().kernel, Kernel::Flash2Rms);
+        let mfu = best.outcome.mfu().unwrap();
+        assert!(mfu > 0.60 && mfu < 0.78, "mfu {mfu}");
+    }
+
+    #[test]
+    fn sweeps_have_oom_rows_like_the_paper() {
+        for p in main_presets() {
+            let r = run(&p, &A100);
+            assert!(r.count_ok() > 0, "{} has no runnable rows", p.name);
+            assert!(r.count_oom() > 0, "{} has no OOM rows", p.name);
+        }
+    }
+
+    #[test]
+    fn sorted_puts_ok_first_oom_later() {
+        let r = run(&main_presets()[0], &A100);
+        let sorted = r.sorted();
+        let first_oom = sorted.iter().position(|r| r.outcome.is_oom());
+        let last_ok = sorted
+            .iter()
+            .rposition(|r| r.outcome.mfu().is_some());
+        if let (Some(fo), Some(lo)) = (first_oom, last_ok) {
+            assert!(lo < fo, "runnable rows must precede OOM rows");
+        }
+        // MFU monotone over the runnable prefix.
+        let mfus: Vec<f64> = sorted.iter().filter_map(|r| r.outcome.mfu()).collect();
+        for w in mfus.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn seqpar_sweep_65b_prefers_sp() {
+        // §4.5: for 65B, sequence parallelism wins (59.62 vs 57.42-ish).
+        let p = seqpar_presets().into_iter().find(|p| p.name == "sp-65b-2k").unwrap();
+        let r = run(&p, &A100);
+        let best_sp = r.best_where(|row| row.layout().sp).unwrap().outcome.mfu().unwrap();
+        let best_nosp = r.best_where(|row| !row.layout().sp).unwrap().outcome.mfu().unwrap();
+        assert!(best_sp >= best_nosp, "sp {best_sp} < nosp {best_nosp}");
+    }
+
+    #[test]
+    fn mb1_beats_larger_micro_batches_everywhere() {
+        // §4.3 / Figure 3: micro-batch size 1 achieves the best MFU for
+        // every model type.
+        for p in main_presets() {
+            let r = run(&p, &A100);
+            let best = r.best().unwrap();
+            assert_eq!(best.layout().mb, 1, "{}: best mb != 1", p.name);
+        }
+    }
+
+    #[test]
+    fn no_ckpt_beats_ckpt_at_optimum() {
+        // §4.2 / Figure 2: best layouts avoid activation checkpointing.
+        for p in main_presets() {
+            let r = run(&p, &A100);
+            let best = r.best().unwrap();
+            assert!(!best.layout().ckpt, "{}: best uses ckpt", p.name);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Figure/Table generators: the exact series the paper's evaluation plots.
+//!
+//! Each `figure_N` returns the data series (and a rendered table); the
+//! benches print them next to the paper's published values so the *shape*
+//! (ordering, winners, deltas) can be compared directly.
+
+use crate::layout::Kernel;
+use crate::sim::{Hardware, Outcome};
+use crate::sweep::engine::{run, Row, SweepResult};
+use crate::sweep::presets::{main_presets, seqpar_presets};
+use crate::util::table;
+
+/// A labeled (configuration, MFU) point in a figure.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub model: String,
+    pub series: String,
+    /// Paper-style `(mb, tp, pp)` annotation of the optimal layout.
+    pub annotation: String,
+    pub mfu: Option<f64>,
+}
+
+fn best_point(r: &SweepResult, series: &str, f: impl Fn(&Row) -> bool) -> Point {
+    match r.best_where(f) {
+        Some(row) => Point {
+            model: r.preset_name.clone(),
+            series: series.to_string(),
+            annotation: row.layout().annotation(),
+            mfu: row.outcome.mfu(),
+        },
+        None => Point {
+            model: r.preset_name.clone(),
+            series: series.to_string(),
+            annotation: "—".into(),
+            mfu: None,
+        },
+    }
+}
+
+fn render_points(title: &str, points: &[Point]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.model.clone(),
+                p.series.clone(),
+                p.mfu.map(table::pct).unwrap_or_else(|| "OOM".into()),
+                p.annotation.clone(),
+            ]
+        })
+        .collect();
+    format!("# {title}\n{}", table::render(&["model", "series", "MFU", "(mb, tp, pp)"], &rows))
+}
+
+/// Figure 1: best MFU per attention implementation per model.
+pub fn figure1(hw: &Hardware) -> (Vec<Point>, String) {
+    let mut points = Vec::new();
+    for preset in main_presets() {
+        let r = run(&preset, hw);
+        for k in Kernel::ALL {
+            if !preset.kernels.contains(&k) {
+                continue;
+            }
+            points.push(best_point(&r, k.label(), |row| row.layout().kernel == k));
+        }
+    }
+    let rendered = render_points("Figure 1 — MFU by attention kernel (optimal 3D layout each)", &points);
+    (points, rendered)
+}
+
+/// Figure 2: best MFU with vs without activation checkpointing
+/// (RMSNorm-kernel rows excluded, as in the paper).
+pub fn figure2(hw: &Hardware) -> (Vec<Point>, String) {
+    let mut points = Vec::new();
+    for preset in main_presets() {
+        let r = run(&preset, hw);
+        let no_rms = |row: &Row| row.layout().kernel != Kernel::Flash2Rms;
+        points.push(best_point(&r, "no checkpointing", |row| no_rms(row) && !row.layout().ckpt));
+        points.push(best_point(&r, "every layer", |row| no_rms(row) && row.layout().ckpt));
+    }
+    let rendered = render_points(
+        "Figure 2 — activation checkpointing (no RMSNorm kernel rows)",
+        &points,
+    );
+    (points, rendered)
+}
+
+/// Figure 3: best MFU at each fixed micro-batch size (no RMS kernel).
+pub fn figure3(hw: &Hardware) -> (Vec<Point>, String) {
+    let mut points = Vec::new();
+    for preset in main_presets() {
+        let r = run(&preset, hw);
+        for mb in &preset.mbs {
+            let mb = *mb;
+            points.push(best_point(&r, &format!("mb={mb}"), |row| {
+                row.layout().mb == mb && row.layout().kernel != Kernel::Flash2Rms
+            }));
+        }
+    }
+    let rendered = render_points("Figure 3 — best MFU at fixed micro-batch size", &points);
+    (points, rendered)
+}
+
+/// Figure 4: MFU for each (tp, pp) pair with mb=1, no ckpt, FA2+RMS.
+pub fn figure4(hw: &Hardware) -> (Vec<Point>, String) {
+    let mut points = Vec::new();
+    for preset in main_presets() {
+        // Paper shows 13B-8k, 30B-2k, 65B (enough parallel options).
+        if preset.name == "13b-2k" || preset.name == "30b-8k" {
+            continue;
+        }
+        let r = run(&preset, hw);
+        for &tp in &preset.tps {
+            for &pp in &preset.pps {
+                let p = best_point(&r, &format!("tp{tp}/pp{pp}"), |row| {
+                    let l = row.layout();
+                    l.tp == tp && l.pp == pp && l.mb == 1 && !l.ckpt && l.kernel == Kernel::Flash2Rms
+                });
+                points.push(p);
+            }
+        }
+    }
+    let rendered = render_points(
+        "Figure 4 — TP vs PP at mb=1, no ckpt, FA2+RMS (OOM rows excluded in paper)",
+        &points,
+    );
+    (points, rendered)
+}
+
+/// Figure 5: best MFU with vs without sequence parallelism (SP sweeps).
+pub fn figure5(hw: &Hardware) -> (Vec<Point>, String) {
+    let mut points = Vec::new();
+    for preset in seqpar_presets() {
+        let r = run(&preset, hw);
+        points.push(best_point(&r, "sequence parallel", |row| row.layout().sp));
+        points.push(best_point(&r, "no sequence parallel", |row| !row.layout().sp));
+    }
+    let rendered = render_points("Figure 5 — sequence parallelism (FA2+RMS, no ckpt)", &points);
+    (points, rendered)
+}
+
+/// Table 3 (B.1): the best end-to-end configuration per model, from the
+/// SP sweeps (the paper's Table 3 draws from those runs).
+pub fn table3(hw: &Hardware) -> String {
+    let mut rows = Vec::new();
+    for preset in seqpar_presets() {
+        let r = run(&preset, hw);
+        if let Some(best) = r.best() {
+            if let Outcome::Ok { step_time_s, mfu, .. } = best.outcome {
+                let l = best.layout();
+                rows.push(vec![
+                    r.job.arch.name.to_string(),
+                    r.job.cluster.gpus.to_string(),
+                    table::secs(step_time_s),
+                    table::pct(mfu),
+                    l.mb.to_string(),
+                    l.tp.to_string(),
+                    l.pp.to_string(),
+                    if l.sp { "True" } else { "False" }.to_string(),
+                ]);
+            }
+        }
+    }
+    format!(
+        "# Table 3 (B.1) — best configurations per model\n{}",
+        table::render(
+            &["Model", "GPUs", "Step Time", "MFU", "MB Size", "TP size", "PP Size", "Seq Par"],
+            &rows
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::A100;
+
+    #[test]
+    fn figure1_kernel_ordering_holds_per_model() {
+        // Paper Figure 1: torch <= fused <= FA1 <= FA2 <= FA2+RMS per
+        // model, over the kernels each sweep actually includes. (The
+        // fused kernel's best layout can be handicapped by its TP
+        // availability constraints on 30B — compare it only on 13B, as
+        // the paper's Figure 1 bars do.)
+        let (points, _) = figure1(&A100);
+        let get = |model: &str, s: &str| {
+            points
+                .iter()
+                .find(|p| p.model == model && p.series == s)
+                .and_then(|p| p.mfu)
+        };
+        // 13B/2k: all five kernels.
+        let torch = get("13b-2k", "torch").unwrap();
+        let fused = get("13b-2k", "fused").unwrap();
+        let f1 = get("13b-2k", "flash_attn1.0.8").unwrap();
+        let f2 = get("13b-2k", "flash_attn2").unwrap();
+        let rms = get("13b-2k", "flash_attn2 + RMS kern.").unwrap();
+        assert!(
+            torch <= fused && fused <= f1 && f1 <= f2 && f2 <= rms,
+            "13b-2k: {torch} {fused} {f1} {f2} {rms}"
+        );
+        // Flash family ordering on every model.
+        for model in ["13b-2k", "13b-8k", "30b-2k", "30b-8k", "65b-2k"] {
+            let f1 = get(model, "flash_attn1.0.8").unwrap();
+            let f2 = get(model, "flash_attn2").unwrap();
+            let rms = get(model, "flash_attn2 + RMS kern.").unwrap();
+            assert!(f1 <= f2 && f2 <= rms, "{model}: {f1} {f2} {rms}");
+        }
+    }
+
+    #[test]
+    fn figure2_no_ckpt_wins() {
+        let (points, _) = figure2(&A100);
+        for model in ["13b-2k", "30b-2k", "65b-2k"] {
+            let no = points.iter().find(|p| p.model == model && p.series == "no checkpointing").unwrap();
+            let yes = points.iter().find(|p| p.model == model && p.series == "every layer").unwrap();
+            if let (Some(a), Some(b)) = (no.mfu, yes.mfu) {
+                assert!(a > b, "{model}: no-ckpt {a} <= ckpt {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn figure3_mb1_wins() {
+        let (points, _) = figure3(&A100);
+        for model in ["13b-2k", "65b-2k"] {
+            let mfus: Vec<(String, f64)> = points
+                .iter()
+                .filter(|p| p.model == model)
+                .filter_map(|p| p.mfu.map(|m| (p.series.clone(), m)))
+                .collect();
+            let best = mfus.iter().cloned().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+            assert_eq!(best.0, "mb=1", "{model}: {mfus:?}");
+        }
+    }
+
+    #[test]
+    fn figure5_sp_helps_large_models_only() {
+        // §4.5: SP matters >30B or >2k seq; for 13B-2k top configs use
+        // tp=1 so SP is a wash.
+        let (points, _) = figure5(&A100);
+        let sp65 = points.iter().find(|p| p.model == "sp-65b-2k" && p.series == "sequence parallel").unwrap().mfu.unwrap();
+        let no65 = points.iter().find(|p| p.model == "sp-65b-2k" && p.series == "no sequence parallel").unwrap().mfu.unwrap();
+        assert!(sp65 >= no65);
+        let sp13 = points.iter().find(|p| p.model == "sp-13b-2k" && p.series == "sequence parallel").unwrap().mfu.unwrap();
+        let no13 = points.iter().find(|p| p.model == "sp-13b-2k" && p.series == "no sequence parallel").unwrap().mfu.unwrap();
+        assert!((sp13 - no13).abs() < 0.02, "13B should be a wash: {sp13} vs {no13}");
+    }
+
+    #[test]
+    fn table3_has_all_models() {
+        let t = table3(&A100);
+        for m in ["llama13b", "llama30b", "llama65b"] {
+            assert!(t.contains(m), "{t}");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Training-efficiency sweep (S9): the paper's experimental apparatus.
+//!
+//! * [`presets`] — the exact search spaces of Tables 1 and 9
+//! * [`engine`] — Cartesian evaluation over the simulator
+//! * [`report`] — appendix-style tables (4–8, 10–14) + CSV
+//! * [`figures`] — Figures 1–5 and Table 3 data series
+//! * [`table2`] — the end-to-end SOTA comparison (with Appendix A
+//!   recomputation of external baselines)
+
+pub mod engine;
+pub mod figures;
+pub mod presets;
+pub mod report;
+pub mod table2;
+
+pub use engine::{run, Row, SweepResult};
+pub use presets::{by_name, for_table, main_presets, seqpar_presets, SweepPreset};

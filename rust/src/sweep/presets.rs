@@ -1,0 +1,191 @@
+//! Sweep presets (S9): the exact search spaces of the paper's Table 1
+//! (main sweep) and Table 9 (sequence-parallelism sweep), one preset per
+//! appendix table.
+
+use crate::layout::{Job, Kernel};
+use crate::model::arch::preset as arch_preset;
+use crate::topo::Cluster;
+
+/// One sweep definition: a job plus the option sets to product over.
+#[derive(Debug, Clone)]
+pub struct SweepPreset {
+    pub name: &'static str,
+    /// Which appendix table this regenerates.
+    pub paper_table: &'static str,
+    pub arch: &'static str,
+    pub gpus: usize,
+    pub gbs: usize,
+    pub tps: Vec<usize>,
+    pub pps: Vec<usize>,
+    pub mbs: Vec<usize>,
+    pub ckpts: Vec<bool>,
+    pub kernels: Vec<Kernel>,
+    pub sps: Vec<bool>,
+}
+
+impl SweepPreset {
+    pub fn job(&self) -> Job {
+        let arch = arch_preset(self.arch).expect("unknown arch in preset");
+        Job::new(arch, Cluster::dgx_a100(self.gpus / 8), self.gbs)
+    }
+}
+
+use Kernel::*;
+
+/// Main-sweep presets (Table 1 rows -> appendix Tables 4–8).
+pub fn main_presets() -> Vec<SweepPreset> {
+    vec![
+        SweepPreset {
+            name: "13b-2k",
+            paper_table: "Table 4 (B.2)",
+            arch: "llama13b",
+            gpus: 64,
+            gbs: 2048,
+            tps: vec![1, 2],
+            pps: vec![1, 2],
+            mbs: vec![1, 2, 4, 8],
+            ckpts: vec![false, true],
+            kernels: vec![Torch, Fused, Flash1, Flash2, Flash2Rms],
+            sps: vec![false],
+        },
+        SweepPreset {
+            name: "13b-8k",
+            paper_table: "Table 5 (B.3)",
+            arch: "llama13b-8k",
+            gpus: 128,
+            gbs: 512,
+            tps: vec![1, 2, 4],
+            pps: vec![1, 2, 4],
+            mbs: vec![1, 2, 4],
+            ckpts: vec![false, true],
+            kernels: vec![Torch, Flash1, Flash2, Flash2Rms],
+            sps: vec![false],
+        },
+        SweepPreset {
+            name: "30b-2k",
+            paper_table: "Table 6 (B.4)",
+            arch: "llama30b",
+            gpus: 256,
+            gbs: 2048,
+            tps: vec![1, 2, 4],
+            pps: vec![1, 2, 4],
+            mbs: vec![1, 2, 4],
+            ckpts: vec![false, true],
+            // §4.1: "Given the poor performance of pure PyTorch attention
+            // … we excluded it for larger models."
+            kernels: vec![Fused, Flash1, Flash2, Flash2Rms],
+            sps: vec![false],
+        },
+        SweepPreset {
+            name: "30b-8k",
+            paper_table: "Table 7 (B.5)",
+            arch: "llama30b-8k",
+            gpus: 128,
+            gbs: 512,
+            tps: vec![2, 4],
+            pps: vec![2, 4, 8, 16],
+            mbs: vec![1, 2, 4],
+            ckpts: vec![false, true],
+            kernels: vec![Flash1, Flash2, Flash2Rms],
+            sps: vec![false],
+        },
+        SweepPreset {
+            name: "65b-2k",
+            paper_table: "Table 8 (B.6)",
+            arch: "llama65b",
+            gpus: 128,
+            gbs: 2048,
+            tps: vec![2, 4, 8],
+            pps: vec![2, 4, 8],
+            mbs: vec![1, 2, 4],
+            ckpts: vec![false, true],
+            kernels: vec![Flash1, Flash2, Flash2Rms],
+            sps: vec![false],
+        },
+    ]
+}
+
+/// Sequence-parallel presets (Table 9 -> appendix Tables 10–14).
+/// All use FA2 + RMSNorm kernel, no checkpointing (Table 9 caption).
+pub fn seqpar_presets() -> Vec<SweepPreset> {
+    let base = |name, table, arch, gpus, gbs, tps: Vec<usize>, pps: Vec<usize>, mbs: Vec<usize>| SweepPreset {
+        name,
+        paper_table: table,
+        arch,
+        gpus,
+        gbs,
+        tps,
+        pps,
+        mbs,
+        ckpts: vec![false],
+        kernels: vec![Flash2Rms],
+        sps: vec![false, true],
+    };
+    vec![
+        base("sp-13b-2k", "Table 10 (C.2)", "llama13b", 32, 2048,
+             vec![1, 2], vec![1, 2], vec![1, 2, 4, 8]),
+        base("sp-13b-8k", "Table 11 (C.3)", "llama13b-8k", 64, 512,
+             vec![1, 2, 4, 8], vec![1, 2, 4], vec![1, 2, 4]),
+        base("sp-30b-2k", "Table 12 (C.4)", "llama30b", 64, 2048,
+             vec![1, 2, 4], vec![1, 2, 4], vec![1, 2, 4]),
+        base("sp-30b-8k", "Table 13 (C.5)", "llama30b-8k", 64, 512,
+             vec![2, 4], vec![2, 4, 8, 16], vec![1, 2, 4]),
+        base("sp-65b-2k", "Table 14 (C.6)", "llama65b", 64, 2048,
+             vec![2, 4, 8], vec![2, 4, 8], vec![1, 2, 4]),
+    ]
+}
+
+/// All presets by name.
+pub fn by_name(name: &str) -> Option<SweepPreset> {
+    main_presets()
+        .into_iter()
+        .chain(seqpar_presets())
+        .find(|p| p.name == name)
+}
+
+/// Preset for a numbered paper table (4–8 main, 10–14 SP).
+pub fn for_table(table: usize) -> Option<SweepPreset> {
+    match table {
+        4..=8 => main_presets().into_iter().nth(table - 4),
+        10..=14 => seqpar_presets().into_iter().nth(table - 10),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_have_valid_archs_and_worlds() {
+        for p in main_presets().into_iter().chain(seqpar_presets()) {
+            let job = p.job();
+            assert_eq!(job.cluster.gpus, p.gpus);
+            assert_eq!(job.gbs, p.gbs, "{}", p.name);
+            // paper rule: 8k models use gbs 512
+            if job.arch.seq >= 8192 {
+                assert_eq!(p.gbs, 512);
+            } else {
+                assert_eq!(p.gbs, 2048);
+            }
+        }
+    }
+
+    #[test]
+    fn table_lookup() {
+        assert_eq!(for_table(4).unwrap().name, "13b-2k");
+        assert_eq!(for_table(8).unwrap().name, "65b-2k");
+        assert_eq!(for_table(10).unwrap().name, "sp-13b-2k");
+        assert_eq!(for_table(14).unwrap().name, "sp-65b-2k");
+        assert!(for_table(9).is_none());
+        assert!(for_table(99).is_none());
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in main_presets().into_iter().chain(seqpar_presets()) {
+            assert_eq!(by_name(p.name).unwrap().name, p.name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,116 @@
+//! Paper-style table rendering for sweep results.
+
+use crate::sim::Outcome;
+use crate::sweep::engine::SweepResult;
+use crate::util::table;
+
+/// Render an appendix-style table (Tables 4–8 / 10–14 format):
+/// `Step Time | MFU | Activation | Kernel | MB | TP | PP [| Seq Par]`.
+pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
+    let mut headers = vec!["Step Time", "MFU", "Activation", "Kernel", "MB", "TP", "PP"];
+    if with_sp_column {
+        headers.push("Seq Parallel");
+    }
+    let rows: Vec<Vec<String>> = result
+        .sorted()
+        .iter()
+        .map(|r| {
+            let l = r.layout();
+            let (st, mfu) = match r.outcome {
+                Outcome::Ok { step_time_s, mfu, .. } => {
+                    (table::secs(step_time_s), table::pct(mfu))
+                }
+                Outcome::Oom { .. } => ("OOM Error".into(), String::new()),
+                Outcome::KernelUnavailable => ("Kernel unavail.".into(), String::new()),
+            };
+            let mut row = vec![
+                st,
+                mfu,
+                if l.ckpt { "every_layer" } else { "disabled" }.to_string(),
+                l.kernel.label().to_string(),
+                l.mb.to_string(),
+                l.tp.to_string(),
+                l.pp.to_string(),
+            ];
+            if with_sp_column {
+                row.push(if l.sp { "True" } else { "False" }.to_string());
+            }
+            row
+        })
+        .collect();
+    let mut out = format!(
+        "# {} — {} on {} GPUs, GBS {} (reproduces {})\n",
+        result.preset_name,
+        result.job.arch.name,
+        result.job.cluster.gpus,
+        result.job.gbs,
+        result.preset_name,
+    );
+    out.push_str(&table::render(&headers, &rows));
+    out.push_str(&format!(
+        "\n{} runnable, {} OOM, {} kernel-unavailable of {} configs\n",
+        result.count_ok(),
+        result.count_oom(),
+        result.rows.len() - result.count_ok() - result.count_oom(),
+        result.rows.len()
+    ));
+    out
+}
+
+/// CSV form (for plotting / EXPERIMENTS.md appendices).
+pub fn to_csv(result: &SweepResult) -> String {
+    let headers = [
+        "step_time_s", "mfu", "ckpt", "kernel", "mb", "tp", "pp", "sp", "status",
+    ];
+    let rows: Vec<Vec<String>> = result
+        .sorted()
+        .iter()
+        .map(|r| {
+            let l = r.layout();
+            let (st, mfu) = match r.outcome {
+                Outcome::Ok { step_time_s, mfu, .. } => {
+                    (format!("{step_time_s:.4}"), format!("{mfu:.4}"))
+                }
+                _ => (String::new(), String::new()),
+            };
+            vec![
+                st,
+                mfu,
+                l.ckpt.to_string(),
+                l.kernel.label().to_string(),
+                l.mb.to_string(),
+                l.tp.to_string(),
+                l.pp.to_string(),
+                l.sp.to_string(),
+                r.outcome.status_label(),
+            ]
+        })
+        .collect();
+    table::to_csv(&headers, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::A100;
+    use crate::sweep::engine::run;
+    use crate::sweep::presets::main_presets;
+
+    #[test]
+    fn renders_paper_shaped_table() {
+        let r = run(&main_presets()[0], &A100);
+        let t = render(&r, false);
+        assert!(t.contains("Step Time"));
+        assert!(t.contains("flash_attn2 + RMS kern."));
+        assert!(t.contains("OOM Error"));
+        assert!(t.contains("every_layer"));
+        assert!(t.contains("disabled"));
+    }
+
+    #[test]
+    fn csv_rows_match_result_count() {
+        let r = run(&main_presets()[0], &A100);
+        let csv = to_csv(&r);
+        assert_eq!(csv.lines().count(), r.rows.len() + 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Table 2 — end-to-end SOTA comparison.
+//!
+//! Our rows come from the simulator's best configurations; the external
+//! baselines are the paper's published numbers, with the Megatron-LM and
+//! Meta-LLAMA rows *recomputed* from their published throughput via the
+//! Appendix A.2/A.3 formulas (implemented in `sim::mfu`) rather than
+//! copied — reproducing the paper's own derivation.
+
+use crate::sim::mfu::{llama_meta_mfu, megatron_mfu, MegatronPub};
+use crate::sim::Hardware;
+use crate::sweep::engine::run;
+use crate::sweep::presets::seqpar_presets;
+use crate::util::table;
+
+/// One comparison row.
+#[derive(Debug, Clone)]
+pub struct CompRow {
+    pub system: String,
+    pub gpus: usize,
+    pub seq: usize,
+    pub gbs: usize,
+    pub mfu: f64,
+    /// Paper's published value for the same row (for EXPERIMENTS.md).
+    pub paper_mfu: Option<f64>,
+}
+
+/// Build all Table 2 rows: ours (simulated best) + external baselines.
+pub fn rows(hw: &Hardware) -> Vec<CompRow> {
+    let mut out = Vec::new();
+
+    // --- ours: best config per model from the SP sweeps (64/32 GPUs). ---
+    let paper_ours = [
+        ("sp-13b-2k", "plx LLAMA 13B (ours)", 0.7057),
+        ("sp-13b-8k", "plx LLAMA 13B 8k (ours)", 0.6278),
+        ("sp-30b-2k", "plx LLAMA 30B (ours)", 0.6198),
+        ("sp-30b-8k", "plx LLAMA 30B 8k (ours)", 0.6022),
+        ("sp-65b-2k", "plx LLAMA 65B (ours)", 0.5962),
+    ];
+    for (preset_name, label, paper) in paper_ours {
+        let preset = seqpar_presets().into_iter().find(|p| p.name == preset_name).unwrap();
+        let r = run(&preset, hw);
+        if let Some(best) = r.best() {
+            out.push(CompRow {
+                system: label.to_string(),
+                gpus: r.job.cluster.gpus,
+                seq: r.job.arch.seq,
+                gbs: r.job.gbs,
+                mfu: best.outcome.mfu().unwrap(),
+                paper_mfu: Some(paper),
+            });
+        }
+    }
+
+    // --- external baselines, as the paper reports/derives them. ---
+    let peak = 312e12;
+    out.push(CompRow {
+        system: "MPT 13B".into(),
+        gpus: 64, seq: 2048, gbs: 2048,
+        mfu: 0.525, paper_mfu: Some(0.525), // published by MosaicML
+    });
+    out.push(CompRow {
+        system: "Megatron-LM 18B†".into(),
+        gpus: 256, seq: 2048, gbs: 1024,
+        mfu: megatron_mfu(&MegatronPub {
+            params: 18.4e9, layers: 40, hidden: 6144, seq: 2048,
+            gbs: 1024, gpus: 256, achieved_tflops_per_gpu: 135e12,
+        }, peak),
+        paper_mfu: Some(0.3424),
+    });
+    out.push(CompRow {
+        system: "MPT 13B 8k".into(),
+        gpus: 8, seq: 8192, gbs: 120,
+        mfu: 0.528, paper_mfu: Some(0.528),
+    });
+    out.push(CompRow {
+        system: "MPT 30B".into(),
+        gpus: 64, seq: 2048, gbs: 3072,
+        mfu: 0.529, paper_mfu: Some(0.529),
+    });
+    out.push(CompRow {
+        system: "Megatron-DeepSpeed 22B".into(),
+        gpus: 8, seq: 2048, gbs: 4,
+        mfu: 0.415, paper_mfu: Some(0.415),
+    });
+    out.push(CompRow {
+        system: "Megatron-LM 39B†".into(),
+        gpus: 512, seq: 2048, gbs: 1536,
+        mfu: megatron_mfu(&MegatronPub {
+            params: 39.1e9, layers: 48, hidden: 8192, seq: 2048,
+            gbs: 1536, gpus: 512, achieved_tflops_per_gpu: 138e12,
+        }, peak),
+        paper_mfu: Some(0.3456),
+    });
+    out.push(CompRow {
+        system: "MPT 30B 8k".into(),
+        gpus: 8, seq: 8192, gbs: 168,
+        mfu: 0.426, paper_mfu: Some(0.426),
+    });
+    out.push(CompRow {
+        system: "MPT 70B".into(),
+        gpus: 64, seq: 2048, gbs: 2048,
+        mfu: 0.533, paper_mfu: Some(0.533),
+    });
+    out.push(CompRow {
+        system: "LLAMA 65B by Meta†".into(),
+        gpus: 2048, seq: 2048, gbs: 2048,
+        mfu: llama_meta_mfu(380.0, 65.2e9, 80, 8192, 2048, peak),
+        paper_mfu: Some(0.494),
+    });
+    out.push(CompRow {
+        system: "Megatron-LM 76B†".into(),
+        gpus: 1024, seq: 2048, gbs: 1792,
+        mfu: megatron_mfu(&MegatronPub {
+            params: 76.1e9, layers: 60, hidden: 10240, seq: 2048,
+            gbs: 1792, gpus: 1024, achieved_tflops_per_gpu: 140e12,
+        }, peak),
+        paper_mfu: Some(0.3476),
+    });
+    out
+}
+
+/// Rendered Table 2.
+pub fn render(hw: &Hardware) -> String {
+    let rows = rows(hw);
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.system.clone(),
+                r.gpus.to_string(),
+                r.seq.to_string(),
+                r.gbs.to_string(),
+                table::pct(r.mfu),
+                r.paper_mfu.map(table::pct).unwrap_or_default(),
+            ]
+        })
+        .collect();
+    format!(
+        "# Table 2 — end-to-end training efficiency († = recomputed per Appendix A)\n{}",
+        table::render(&["System", "GPUs", "Seq Len", "Batch", "MFU (sim/derived)", "MFU (paper)"], &cells)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::A100;
+
+    #[test]
+    fn ours_beat_baselines_in_each_group() {
+        // Table 2's claim: SOTA in 5 of 5 groups.
+        let rows = rows(&A100);
+        let get = |s: &str| rows.iter().find(|r| r.system.contains(s)).unwrap().mfu;
+        assert!(get("plx LLAMA 13B (ours)") > get("MPT 13B"));
+        assert!(get("plx LLAMA 13B (ours)") > get("Megatron-LM 18B"));
+        assert!(get("plx LLAMA 30B (ours)") > get("MPT 30B"));
+        assert!(get("plx LLAMA 65B (ours)") > get("MPT 70B"));
+        assert!(get("plx LLAMA 65B (ours)") > get("LLAMA 65B by Meta"));
+    }
+
+    #[test]
+    fn derived_rows_match_paper_appendix() {
+        let rows = rows(&A100);
+        for r in &rows {
+            if r.system.contains('†') {
+                let paper = r.paper_mfu.unwrap();
+                assert!((r.mfu - paper).abs() < 0.01, "{}: {} vs {}", r.system, r.mfu, paper);
+            }
+        }
+    }
+
+    #[test]
+    fn our_simulated_mfu_close_to_paper() {
+        // Shape-fidelity: within 8 MFU points of the paper's measurement.
+        for r in rows(&A100) {
+            if r.system.starts_with("plx") {
+                let paper = r.paper_mfu.unwrap();
+                assert!((r.mfu - paper).abs() < 0.08, "{}: {} vs {}", r.system, r.mfu, paper);
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_dagger_note() {
+        assert!(render(&A100).contains("Appendix A"));
+    }
+}

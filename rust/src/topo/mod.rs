@@ -1,0 +1,161 @@
+//! Cluster topology (S7): GPU counts, node boundaries, and the rank map
+//! shared by the simulator and the (real) coordinator.
+//!
+//! Rank order follows Megatron-LM: tensor-parallel innermost (so TP groups
+//! stay inside a node and use NVLink), then pipeline, then data parallel.
+
+use anyhow::{bail, Result};
+
+/// Physical cluster shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cluster {
+    pub gpus: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Cluster {
+    pub fn new(gpus: usize, gpus_per_node: usize) -> Result<Cluster> {
+        if gpus == 0 || gpus_per_node == 0 {
+            bail!("cluster sizes must be positive");
+        }
+        if gpus % gpus_per_node != 0 && gpus > gpus_per_node {
+            bail!("gpus {gpus} not a multiple of gpus_per_node {gpus_per_node}");
+        }
+        Ok(Cluster { gpus, gpus_per_node })
+    }
+
+    /// DGX-A100 style node (the paper's testbed).
+    pub fn dgx_a100(nodes: usize) -> Cluster {
+        Cluster { gpus: nodes * 8, gpus_per_node: 8 }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.gpus.div_ceil(self.gpus_per_node)
+    }
+}
+
+/// A 3D process grid over a cluster: `dp × pp × tp == gpus`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub cluster: Cluster,
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+/// Coordinates of one rank in the process grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankCoord {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+impl Topology {
+    /// Build a topology, deriving `dp` from the world size.
+    pub fn derive(cluster: Cluster, tp: usize, pp: usize) -> Result<Topology> {
+        if tp == 0 || pp == 0 {
+            bail!("tp/pp must be positive");
+        }
+        let model_parallel = tp * pp;
+        if cluster.gpus % model_parallel != 0 {
+            bail!(
+                "world size {} not divisible by tp*pp = {}",
+                cluster.gpus,
+                model_parallel
+            );
+        }
+        Ok(Topology {
+            cluster,
+            dp: cluster.gpus / model_parallel,
+            pp,
+            tp,
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.dp * self.pp * self.tp
+    }
+
+    /// Megatron rank order: tp fastest, then pp, then dp.
+    pub fn rank_of(&self, c: RankCoord) -> usize {
+        debug_assert!(c.tp < self.tp && c.pp < self.pp && c.dp < self.dp);
+        (c.dp * self.pp + c.pp) * self.tp + c.tp
+    }
+
+    pub fn coord_of(&self, rank: usize) -> RankCoord {
+        let tp = rank % self.tp;
+        let pp = (rank / self.tp) % self.pp;
+        let dp = rank / (self.tp * self.pp);
+        RankCoord { dp, pp, tp }
+    }
+
+    /// Does this TP group span multiple nodes? (Paper keeps TP ≤ 8 so it
+    /// never does on DGX; the comm model penalizes it if it would.)
+    pub fn tp_crosses_node(&self) -> bool {
+        self.tp > self.cluster.gpus_per_node
+    }
+
+    /// Is the pipeline p2p edge between consecutive stages cross-node?
+    /// With tp innermost, consecutive pp ranks are `tp` GPUs apart.
+    pub fn pp_crosses_node(&self) -> bool {
+        self.tp * self.pp > self.cluster.gpus_per_node
+    }
+
+    /// Gradient all-reduce group size per parameter shard (the DP width).
+    pub fn grad_allreduce_width(&self) -> usize {
+        self.dp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn derive_matches_paper_example() {
+        // §3: 128 GPUs, tp=4, pp=2 -> dp=16.
+        let t = Topology::derive(Cluster::dgx_a100(16), 4, 2).unwrap();
+        assert_eq!(t.dp, 16);
+        assert_eq!(t.world(), 128);
+    }
+
+    #[test]
+    fn indivisible_world_rejected() {
+        assert!(Topology::derive(Cluster::dgx_a100(1), 3, 1).is_err());
+    }
+
+    #[test]
+    fn rank_map_roundtrip_property() {
+        prop::check(0xA11CE, |rng| {
+            let tp = 1 << rng.range(0, 4);
+            let pp = 1 << rng.range(0, 4);
+            let dp = 1 << rng.range(0, 4);
+            let gpus = tp * pp * dp;
+            let cluster = Cluster { gpus, gpus_per_node: 8.min(gpus) };
+            let t = Topology { cluster, dp, pp, tp };
+            for rank in 0..t.world() {
+                let c = t.coord_of(rank);
+                assert_eq!(t.rank_of(c), rank, "coord {c:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn tp_stays_in_node_up_to_8() {
+        let t = Topology::derive(Cluster::dgx_a100(8), 8, 1).unwrap();
+        assert!(!t.tp_crosses_node());
+        let t = Topology::derive(Cluster { gpus: 16, gpus_per_node: 8 }, 16, 1).unwrap();
+        assert!(t.tp_crosses_node());
+    }
+
+    #[test]
+    fn pp_edge_crossing() {
+        // tp=8 fills the node => pp neighbours are on different nodes.
+        let t = Topology::derive(Cluster::dgx_a100(4), 8, 2).unwrap();
+        assert!(t.pp_crosses_node());
+        let t = Topology::derive(Cluster::dgx_a100(4), 2, 2).unwrap();
+        assert!(!t.pp_crosses_node());
+    }
+}

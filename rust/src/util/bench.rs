@@ -1,0 +1,68 @@
+//! Minimal benchmark harness (substrate: criterion is unavailable
+//! offline). `cargo bench` runs each `[[bench]]` binary with
+//! `harness = false`; these helpers provide warm-up, repetition, and
+//! robust statistics.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let m = Measurement {
+        name: name.to_string(),
+        iters: times.len(),
+        mean: total / times.len() as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    println!(
+        "bench {:<40} {:>10.3?} mean  {:>10.3?} min  {:>10.3?} max  ({} iters)",
+        m.name, m.mean, m.min, m.max, m.iters
+    );
+    m
+}
+
+/// Print a section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("noop", 1, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.iters, 10);
+        assert!(m.min <= m.mean && m.mean <= m.max);
+        assert!(m.per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (substrate: clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Unknown flags are an error (catches typos in launch scripts).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags/options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative spec: which names are value-taking options vs bare flags.
+pub struct Spec {
+    pub options: &'static [&'static str],
+    pub flags: &'static [&'static str],
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `spec`.
+    pub fn parse(argv: &[String], spec: &Spec) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                if spec.flags.contains(&key) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key.to_string());
+                } else if spec.options.contains(&key) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    out.opts.insert(key.to_string(), val);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: Spec = Spec {
+        options: &["model", "steps", "lr"],
+        flags: &["verbose", "dry-run"],
+    };
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &argv(&["train", "--model", "tiny", "--steps=10", "--verbose", "extra"]),
+            &SPEC,
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["train".to_string(), "extra".to_string()]);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&[]), &SPEC).unwrap();
+        assert_eq!(a.get_usize("steps", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("lr", 0.1).unwrap(), 0.1);
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&argv(&["--nope"]), &SPEC).is_err());
+        assert!(Args::parse(&argv(&["--model"]), &SPEC).is_err());
+        assert!(Args::parse(&argv(&["--verbose=1"]), &SPEC).is_err());
+        let a = Args::parse(&argv(&["--steps", "abc"]), &SPEC).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+}

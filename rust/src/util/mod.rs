@@ -1,0 +1,9 @@
+//! In-house substrates replacing crates unavailable on the offline image
+//! (serde_json, clap, rand, proptest): see DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,85 @@
+//! Minimal property-testing harness (substrate: proptest is unavailable
+//! offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the harness runs it for
+//! `cases` seeds and reports the first failing seed, which makes failures
+//! reproducible (`check_seeded`). Shrinking is out of scope — failing
+//! seeds plus the generator code are small enough to debug directly.
+
+use super::prng::Rng;
+
+/// Default number of cases per property (tuned for CI latency).
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`.
+/// Panics with the failing seed embedded in the message.
+pub fn check_cases<F: FnMut(&mut Rng)>(base_seed: u64, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check<F: FnMut(&mut Rng)>(base_seed: u64, prop: F) {
+    check_cases(base_seed, DEFAULT_CASES, prop);
+}
+
+/// Re-run a single failing seed (paste from the failure message).
+pub fn check_seeded<F: FnOnce(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_cases(1, 50, |_rng| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check_cases(2, 50, |rng| {
+                let v = rng.below(10);
+                assert!(v < 5, "v={v} too big");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed"), "msg: {msg}");
+    }
+
+    #[test]
+    fn seeds_differ_across_cases() {
+        let mut first: Option<u64> = None;
+        let mut all_same = true;
+        check_cases(3, 10, |rng| {
+            let v = rng.next_u64();
+            match first {
+                None => first = Some(v),
+                Some(f) if f != v => all_same = false,
+                _ => {}
+            }
+        });
+        assert!(!all_same);
+    }
+}

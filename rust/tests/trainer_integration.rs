@@ -1,0 +1,178 @@
+//! Integration: the full DP×PP trainer over real PJRT artifacts.
+//!
+//! These tests require `make artifacts` (tiny configs) and exercise the
+//! complete L3 stack: manifest loading, stage execution, 1F1B pipeline,
+//! deterministic collectives, ZeRO-1 sharded AdamW.
+
+use plx::coordinator::{train, TrainerConfig};
+
+fn artifacts_ready(config: &str, pp: usize, mb: usize) -> bool {
+    plx::artifacts_root()
+        .join(config)
+        .join(format!("pp{pp}_mb{mb}"))
+        .join("manifest.json")
+        .exists()
+}
+
+fn cfg(pp: usize, mb: usize, dp: usize) -> TrainerConfig {
+    TrainerConfig {
+        model: "tiny".into(),
+        pp,
+        mb,
+        dp,
+        num_micro: 2,
+        steps: 8,
+        lr: 3e-3,
+        warmup_steps: 2,
+        seed: 17,
+        noise: 0.05,
+        log_every: 0,
+        artifacts: plx::artifacts_root(),
+        save_checkpoint: None,
+        resume_from: None,
+        schedule: Default::default(),
+    }
+}
+
+#[test]
+fn single_rank_training_reduces_loss() {
+    if !artifacts_ready("tiny", 1, 2) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut c = cfg(1, 2, 1);
+    c.steps = 12;
+    let report = train(&c).unwrap();
+    let first = report.log.first_loss().unwrap();
+    let last = report.log.final_loss().unwrap();
+    // Random init => loss ≈ ln(256) ≈ 5.55; must drop measurably.
+    assert!((first - (256f64).ln()).abs() < 0.7, "first loss {first}");
+    assert!(last < first - 0.3, "loss {first} -> {last}");
+}
+
+#[test]
+fn pipeline_parallel_matches_single_stage() {
+    // pp=2 must produce the SAME loss trajectory as pp=1 (deterministic
+    // data, deterministic collectives, same init): pipeline parallelism
+    // is an execution layout, not a different algorithm.
+    if !artifacts_ready("tiny", 1, 2) || !artifacts_ready("tiny", 2, 2) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let r1 = train(&cfg(1, 2, 1)).unwrap();
+    let r2 = train(&cfg(2, 2, 1)).unwrap();
+    let l1: Vec<f64> = r1.log.records.iter().map(|r| r.loss).collect();
+    let l2: Vec<f64> = r2.log.records.iter().map(|r| r.loss).collect();
+    assert_eq!(l1.len(), l2.len());
+    for (a, b) in l1.iter().zip(&l2) {
+        assert!(
+            (a - b).abs() < 5e-3,
+            "pp1 {l1:?}\npp2 {l2:?}"
+        );
+    }
+}
+
+#[test]
+fn data_parallel_two_replicas_trains() {
+    if !artifacts_ready("tiny", 2, 2) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let report = train(&cfg(2, 2, 2)).unwrap();
+    assert_eq!(report.global_batch, 2 * 2 * 2);
+    assert!(report.log.final_loss().unwrap() < report.log.first_loss().unwrap());
+}
+
+#[test]
+fn four_stage_pipeline_runs() {
+    if !artifacts_ready("tiny", 4, 1) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut c = cfg(4, 1, 1);
+    c.num_micro = 6; // deeper pipeline, more micro-batches in flight
+    c.steps = 4;
+    let report = train(&c).unwrap();
+    assert_eq!(report.log.records.len(), 4);
+    assert!(report.log.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn deterministic_across_runs() {
+    if !artifacts_ready("tiny", 2, 2) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut c = cfg(2, 2, 2);
+    c.steps = 4;
+    let a = train(&c).unwrap();
+    let b = train(&c).unwrap();
+    for (x, y) in a.log.records.iter().zip(&b.log.records) {
+        assert_eq!(x.loss, y.loss, "training must be bit-deterministic");
+    }
+}
+
+#[test]
+fn checkpoint_save_and_resume_continue_training() {
+    if !artifacts_ready("tiny", 2, 2) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = std::env::temp_dir().join("plx_trainer_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("tiny.plxckpt");
+
+    // Phase 1: train and save.
+    let mut c1 = cfg(2, 2, 1);
+    c1.steps = 6;
+    c1.save_checkpoint = Some(ckpt.clone());
+    let r1 = train(&c1).unwrap();
+    let loss_after_phase1 = r1.log.final_loss().unwrap();
+    assert!(ckpt.exists());
+
+    // The checkpoint restores into the right architecture only.
+    let loaded = plx::coordinator::checkpoint::Checkpoint::load(&ckpt).unwrap();
+    assert_eq!(loaded.model, "tiny");
+    assert_eq!(loaded.step, 6);
+
+    // Phase 2: resume; the first resumed loss must be at (or below) the
+    // level phase 1 reached — not back at ln(V) ≈ 5.55.
+    let mut c2 = cfg(2, 2, 1);
+    c2.steps = 3;
+    c2.resume_from = Some(ckpt);
+    let r2 = train(&c2).unwrap();
+    let first_resumed = r2.log.first_loss().unwrap();
+    assert!(
+        first_resumed < loss_after_phase1 + 0.35,
+        "resume lost progress: phase1 end {loss_after_phase1}, resumed start {first_resumed}"
+    );
+    assert!(first_resumed < 5.0, "resumed loss {first_resumed} looks like a fresh init");
+}
+
+#[test]
+fn gpipe_schedule_produces_identical_losses() {
+    // S21 baseline: GPipe reorders micro-batch execution but the summed
+    // gradients are identical, so the loss trajectory must match 1F1B
+    // bit-for-bit (the schedules differ only in memory/bubble).
+    if !artifacts_ready("tiny", 2, 2) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut a = cfg(2, 2, 1);
+    a.steps = 4;
+    let mut b = a.clone();
+    b.schedule = plx::coordinator::trainer::Schedule::GPipe;
+    let ra = train(&a).unwrap();
+    let rb = train(&b).unwrap();
+    for (x, y) in ra.log.records.iter().zip(&rb.log.records) {
+        assert_eq!(x.loss, y.loss, "1F1B vs GPipe must agree exactly");
+    }
+}
+
+#[test]
+fn missing_artifacts_reports_helpfully() {
+    let mut c = cfg(1, 2, 1);
+    c.model = "nonexistent-model".into();
+    let err = train(&c).unwrap_err();
+    assert!(format!("{err:#}").contains("compile.aot"));
+}
