@@ -1,28 +1,88 @@
-//! §Perf L3 — sweep-engine throughput: layouts evaluated per second and
+//! §Perf L3 — sweep-engine throughput: layouts evaluated per second,
+//! serial vs parallel (`--jobs`) speedup, cache effectiveness, and
 //! end-to-end regeneration latency for the largest appendix table.
-//! DESIGN.md §Perf target: full Table 4 grid in < 50 ms.
+//! DESIGN target: full Table 4 grid in < 50 ms; parallel ≥ 2x serial on a
+//! 4-core runner for the 13b-2k preset (cold cache both sides).
 
 use plx::layout::{enumerate, Job, Kernel};
-use plx::model::arch::preset;
-use plx::sim::{evaluate, A100};
-use plx::sweep::{main_presets, run};
+use plx::sim::{cache, evaluate, A100};
+use plx::sweep::{main_presets, run, run_jobs};
 use plx::topo::Cluster;
 use plx::util::bench::{bench, section};
+use plx::util::pool;
 
 fn main() {
+    let jobs = pool::effective_jobs();
     section("sweep engine throughput");
     let p4 = main_presets().into_iter().next().unwrap(); // Table 4 preset
     let m = bench("table4 sweep (enumerate+evaluate+sort)", 3, 50, || {
+        cache::clear();
         let result = run(&p4, &A100);
         std::hint::black_box(result.sorted().len());
     });
     println!(
-        "-> full Table 4 grid in {:.3} ms (target < 50 ms)",
+        "-> full Table 4 grid in {:.3} ms cold (target < 50 ms)",
         m.mean.as_secs_f64() * 1e3
     );
 
-    // Raw evaluate() throughput on a fixed large layout set.
-    let arch = preset("llama65b").unwrap();
+    section(&format!("serial vs parallel (machine reports {jobs} hardware threads)"));
+    let serial = bench("13b-2k sweep --jobs 1 (cold cache)", 3, 50, || {
+        cache::clear();
+        std::hint::black_box(run_jobs(&p4, &A100, 1).rows.len());
+    });
+    let parallel = bench(
+        &format!("13b-2k sweep --jobs {jobs} (cold cache)"),
+        3,
+        50,
+        || {
+            cache::clear();
+            std::hint::black_box(run_jobs(&p4, &A100, jobs).rows.len());
+        },
+    );
+    let speedup = serial.mean.as_secs_f64() / parallel.mean.as_secs_f64();
+    println!("-> parallel speedup on 13b-2k: {speedup:.2}x (acceptance: >= 2x on 4 cores)");
+
+    // The bigger, more realistic unit: all ten appendix sweeps in one go
+    // (what `plx sweep --all`, table 2, table 3 and figure 5 each pay).
+    let all_serial = bench("all 10 appendix sweeps --jobs 1 (cold)", 1, 10, || {
+        cache::clear();
+        for preset in main_presets().into_iter().chain(plx::sweep::seqpar_presets()) {
+            std::hint::black_box(run_jobs(&preset, &A100, 1).count_ok());
+        }
+    });
+    let all_parallel = bench(
+        &format!("all 10 appendix sweeps --jobs {jobs} (cold)"),
+        1,
+        10,
+        || {
+            cache::clear();
+            for preset in main_presets().into_iter().chain(plx::sweep::seqpar_presets()) {
+                std::hint::black_box(run_jobs(&preset, &A100, jobs).count_ok());
+            }
+        },
+    );
+    println!(
+        "-> all-sweeps speedup: {:.2}x",
+        all_serial.mean.as_secs_f64() / all_parallel.mean.as_secs_f64()
+    );
+
+    section("evaluation cache");
+    cache::clear();
+    let cold = bench("13b-2k sweep (cold cache)", 0, 1, || {
+        std::hint::black_box(run_jobs(&p4, &A100, 1).rows.len());
+    });
+    let warm = bench("13b-2k sweep (warm cache)", 3, 50, || {
+        std::hint::black_box(run_jobs(&p4, &A100, 1).rows.len());
+    });
+    let (hits, misses) = cache::stats();
+    println!(
+        "-> warm/cold: {:.1}x faster; {} cached outcomes, {hits} hits / {misses} misses",
+        cold.mean.as_secs_f64() / warm.mean.as_secs_f64().max(1e-12),
+        cache::len()
+    );
+
+    // Raw evaluate() throughput on a fixed large layout set (uncached).
+    let arch = plx::model::arch::preset("llama65b").unwrap();
     let job = Job::new(arch, Cluster::dgx_a100(16), 2048);
     let layouts = enumerate(
         &job,
@@ -33,7 +93,7 @@ fn main() {
         &Kernel::ALL,
         &[false, true],
     );
-    println!("fixed layout set: {} layouts", layouts.len());
+    println!("\nfixed layout set: {} layouts", layouts.len());
     let m = bench("evaluate() over 65B layout set", 3, 50, || {
         for v in &layouts {
             std::hint::black_box(evaluate(&job, v, &A100));
@@ -43,11 +103,4 @@ fn main() {
         "-> {:.0} layout evaluations / second",
         layouts.len() as f64 / m.mean.as_secs_f64()
     );
-
-    section("all-presets regeneration");
-    bench("all 10 appendix sweeps", 1, 10, || {
-        for preset in main_presets() {
-            std::hint::black_box(run(&preset, &A100).count_ok());
-        }
-    });
 }

@@ -334,7 +334,7 @@ mod tests {
         // equals the rank-0-first ordering every time.
         let g = Group::new(3);
         let vals = [1.0e-8f32, 1.0, -1.0];
-        let expected = ((vals[0] + vals[1]) + vals[2]); // rank order
+        let expected = (vals[0] + vals[1]) + vals[2]; // rank order
         for _ in 0..10 {
             let got = Mutex::new(0.0f32);
             run_ranks(3, |r| {

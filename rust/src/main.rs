@@ -30,7 +30,7 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
-        "loss-csv", "save", "resume",
+        "loss-csv", "save", "resume", "jobs",
     ],
     flags: &["all", "ckpt", "sp", "exhaustive", "help", "list"],
 };
@@ -45,6 +45,12 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &SPEC).map_err(anyhow::Error::msg)?;
+    // `--jobs N` steers every parallel path (sweep/table/figure/plan):
+    // 1 = serial, 0/auto = all hardware threads. Output bytes are
+    // identical for any value (sweep::engine's determinism guarantee).
+    if let Some(jobs) = args.get_jobs().map_err(anyhow::Error::msg)? {
+        plx::util::pool::configure_jobs(jobs);
+    }
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -77,6 +83,11 @@ USAGE:
   plx predict-mem --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
                   [--sp] [--kernel flash2rms]
   plx presets
+
+OPTIONS (all sweep/table/figure/plan commands):
+  --jobs N   evaluate layouts on N worker threads (1 = serial,
+             0 or 'auto' = all hardware threads; default auto).
+             Output is byte-identical for every N.
 
 Artifacts for `plx train` come from `make artifacts`
 (python -m compile.aot). See README.md.

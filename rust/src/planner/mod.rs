@@ -19,7 +19,8 @@
 use anyhow::{bail, Result};
 
 use crate::layout::{validate, Job, Kernel, Layout, ValidLayout};
-use crate::sim::{evaluate, memory, Hardware, Outcome};
+use crate::sim::cache::evaluate_cached;
+use crate::sim::{memory, Hardware, Outcome};
 
 /// A planned layout with its predicted performance.
 #[derive(Debug, Clone, Copy)]
@@ -74,7 +75,7 @@ pub fn plan_by_rules(job: &Job, hw: &Hardware) -> Result<Plan> {
                 if !memory::fits(job, &v, hw) {
                     continue;
                 }
-                if let Outcome::Ok { mfu, step_time_s, .. } = evaluate(job, &v, hw) {
+                if let Outcome::Ok { mfu, step_time_s, .. } = evaluate_cached(job, &v, hw) {
                     feasible.push(Plan { v, predicted_mfu: mfu, predicted_step_s: step_time_s });
                     current_degree = degree;
                 }
@@ -91,7 +92,7 @@ pub fn plan_by_rules(job: &Job, hw: &Hardware) -> Result<Plan> {
     for (tp, pp) in mp_candidates(job.cluster.gpus.min(64)) {
         let l = Layout { tp, pp, mb: 1, ckpt: true, kernel: Kernel::Flash2, sp: sp_default };
         let Ok(v) = validate(job, &l) else { continue };
-        if let Outcome::Ok { mfu, step_time_s, .. } = evaluate(job, &v, hw) {
+        if let Outcome::Ok { mfu, step_time_s, .. } = evaluate_cached(job, &v, hw) {
             return Ok(Plan { v, predicted_mfu: mfu, predicted_step_s: step_time_s });
         }
     }
@@ -99,6 +100,13 @@ pub fn plan_by_rules(job: &Job, hw: &Hardware) -> Result<Plan> {
 }
 
 /// Ground truth: exhaustive argmax over the full option space.
+///
+/// The candidate grid goes through the same parallel, pruned, cached
+/// evaluator as the sweep engine (`sweep::engine::evaluate_layouts`), so a
+/// `plan --exhaustive` right after a sweep of the same job is nearly free,
+/// and a cold run uses every core. The argmax scans rows in enumeration
+/// order with a strict `>`, exactly like the historical serial loop, so
+/// tie-breaking is unchanged.
 pub fn plan_exhaustive(job: &Job, hw: &Hardware) -> Result<Plan> {
     let tps: Vec<usize> = (0..4).map(|i| 1 << i).collect();
     let pps: Vec<usize> = (0..6).map(|i| 1 << i).collect();
@@ -111,11 +119,12 @@ pub fn plan_exhaustive(job: &Job, hw: &Hardware) -> Result<Plan> {
         &Kernel::ALL,
         &[false, true],
     );
+    let rows = crate::sweep::engine::evaluate_layouts(job, layouts, hw, 0);
     let mut best: Option<Plan> = None;
-    for v in layouts {
-        if let Outcome::Ok { mfu, step_time_s, .. } = evaluate(job, &v, hw) {
+    for row in rows {
+        if let Outcome::Ok { mfu, step_time_s, .. } = row.outcome {
             if best.map(|b| mfu > b.predicted_mfu).unwrap_or(true) {
-                best = Some(Plan { v, predicted_mfu: mfu, predicted_step_s: step_time_s });
+                best = Some(Plan { v: row.v, predicted_mfu: mfu, predicted_step_s: step_time_s });
             }
         }
     }

@@ -1,0 +1,183 @@
+//! Process-wide evaluation cache for the analytical simulator.
+//!
+//! Every downstream consumer — the sweep engine, the exhaustive planner,
+//! and the figure/table generators — evaluates heavily overlapping layout
+//! sets (e.g. `plx table 2`, Table 3, and Figure 5 all re-run the five SP
+//! sweeps). [`evaluate_cached`] memoizes [`super::evaluate`] keyed by the
+//! complete analytic input: architecture shape, cluster shape, global
+//! batch, hardware constants (bit-patterns), and the layout. Hits return
+//! the stored [`Outcome`] verbatim, so cached and uncached paths are
+//! bit-identical — `evaluate` is a pure function of the key.
+//!
+//! The map is sharded to keep lock contention negligible when the
+//! work-stealing pool evaluates layouts in parallel (`util::pool`).
+//!
+//! Caveat: the `PLX_CAL_*` calibration overrides (see `sim::kernels::cal`)
+//! are read from the environment inside `evaluate`; they are part of the
+//! function but not of the key. The calibration harness sweeps them across
+//! *processes*, never within one, so this is safe in practice — call
+//! [`clear`] if a test ever mutates them mid-process.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::layout::{Job, Layout, ValidLayout};
+use crate::sim::cluster::Hardware;
+use crate::sim::{evaluate, Outcome};
+
+const SHARDS: usize = 16;
+
+/// Everything `evaluate` reads, as a hashable value.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Key {
+    // Architecture shape (name is display-only; the numbers decide).
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    ffn: usize,
+    vocab: usize,
+    seq: usize,
+    // Cluster + batch.
+    gpus: usize,
+    gpus_per_node: usize,
+    gbs: usize,
+    // Hardware constants, by bit pattern (f64 is not Hash/Eq).
+    hw_bits: [u64; 8],
+    layout: Layout,
+}
+
+impl Key {
+    fn new(job: &Job, layout: &Layout, hw: &Hardware) -> Key {
+        Key {
+            layers: job.arch.layers,
+            hidden: job.arch.hidden,
+            heads: job.arch.heads,
+            ffn: job.arch.ffn,
+            vocab: job.arch.vocab,
+            seq: job.arch.seq,
+            gpus: job.cluster.gpus,
+            gpus_per_node: job.cluster.gpus_per_node,
+            gbs: job.gbs,
+            hw_bits: [
+                hw.peak_matmul_flops.to_bits(),
+                hw.hbm_bytes.to_bits(),
+                hw.hbm_bw.to_bits(),
+                hw.nvlink_bw.to_bits(),
+                hw.ib_bw.to_bits(),
+                hw.coll_latency_s.to_bits(),
+                hw.launch_overhead_s.to_bits(),
+                hw.workspace_bytes.to_bits(),
+            ],
+            layout: *layout,
+        }
+    }
+
+    fn shard(&self) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+}
+
+struct Cache {
+    shards: Vec<Mutex<HashMap<Key, Outcome>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+fn cache() -> &'static Cache {
+    static CACHE: OnceLock<Cache> = OnceLock::new();
+    CACHE.get_or_init(|| Cache {
+        shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        hits: AtomicU64::new(0),
+        misses: AtomicU64::new(0),
+    })
+}
+
+/// Memoized [`evaluate`]: same inputs, same `Outcome`, computed once.
+pub fn evaluate_cached(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
+    let c = cache();
+    let key = Key::new(job, &v.layout, hw);
+    let shard = key.shard();
+    if let Some(out) = c.shards[shard].lock().unwrap().get(&key) {
+        c.hits.fetch_add(1, Ordering::Relaxed);
+        return *out;
+    }
+    // Compute outside the lock: misses of the same key may race, but the
+    // function is pure so last-write-wins is harmless.
+    let out = evaluate(job, v, hw);
+    c.misses.fetch_add(1, Ordering::Relaxed);
+    c.shards[shard].lock().unwrap().insert(key, out);
+    out
+}
+
+/// (hits, misses) since process start or the last [`clear`].
+pub fn stats() -> (u64, u64) {
+    let c = cache();
+    (c.hits.load(Ordering::Relaxed), c.misses.load(Ordering::Relaxed))
+}
+
+/// Cached entry count across all shards.
+pub fn len() -> usize {
+    cache().shards.iter().map(|s| s.lock().unwrap().len()).sum()
+}
+
+/// Drop every cached outcome and reset the counters (used by the
+/// sweep-engine benches to measure cold paths; unit tests avoid it
+/// because the cache and counters are process-global).
+pub fn clear() {
+    let c = cache();
+    for s in &c.shards {
+        s.lock().unwrap().clear();
+    }
+    c.hits.store(0, Ordering::Relaxed);
+    c.misses.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{validate, Kernel};
+    use crate::model::arch::preset;
+    use crate::sim::{A100, H100};
+    use crate::topo::Cluster;
+
+    fn sample() -> (Job, ValidLayout) {
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let l = Layout { tp: 2, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        let v = validate(&job, &l).unwrap();
+        (job, v)
+    }
+
+    #[test]
+    fn hit_returns_identical_outcome() {
+        let (job, v) = sample();
+        let fresh = evaluate(&job, &v, &A100);
+        let first = evaluate_cached(&job, &v, &A100);
+        let second = evaluate_cached(&job, &v, &A100);
+        assert_eq!(first, fresh);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn distinct_hardware_is_distinct_key() {
+        let (job, v) = sample();
+        let a = evaluate_cached(&job, &v, &A100);
+        let h = evaluate_cached(&job, &v, &H100);
+        // H100 is ~3x faster at the same layout: outcomes must differ.
+        assert_ne!(a.step_time(), h.step_time());
+    }
+
+    #[test]
+    fn stats_count_hits_after_warm() {
+        let (job, v) = sample();
+        evaluate_cached(&job, &v, &A100);
+        let (h0, _) = stats();
+        evaluate_cached(&job, &v, &A100);
+        let (h1, _) = stats();
+        assert!(h1 > h0);
+        assert!(len() > 0);
+    }
+}

@@ -139,6 +139,17 @@ pub fn fits(job: &Job, v: &ValidLayout, hw: &Hardware) -> bool {
     per_gpu_memory(job, v, hw).total() <= hw.hbm_bytes
 }
 
+/// Cheap lower bound on [`per_gpu_memory`]'s total: parameter-derived
+/// state (bf16 weights + grads, ZeRO-1 fp32 optimizer shard) plus the
+/// fixed workspace — everything except the activation/logit terms, which
+/// are always non-negative. The sweep engine's pre-pruning pass uses this
+/// to resolve hopeless layouts on the coordinating thread without
+/// dispatching them to the worker pool (`sweep::engine`).
+pub fn model_state_bytes(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    let shard = job.arch.param_count() as f64 / (v.layout.tp * v.layout.pp) as f64;
+    2.0 * shard + 2.0 * shard + 12.0 * shard / v.topo.dp as f64 + hw.workspace_bytes
+}
+
 // ------------------------------------------------------------------
 // ZeRO-stage ablation (the paper's Limitations/future-work question:
 // "Using different ZeRO stages or FSDP might enable even more efficient
@@ -276,6 +287,30 @@ mod tests {
         let (job, v) = v13(layout(1, 1, 1, false, Kernel::Flash2, false));
         assert!(!fits_with_zero(&job, &v, &A100, ZeroStage::Zero1));
         assert!(fits_with_zero(&job, &v, &A100, ZeroStage::Zero3));
+    }
+
+    #[test]
+    fn model_state_bound_never_exceeds_total() {
+        // The pre-pruning bound must be sound for every enumerable layout:
+        // pruning on it can only skip layouts whose full evaluation would
+        // report OOM anyway.
+        use crate::layout::enumerate;
+        let job = Job::new(preset("llama65b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let layouts = enumerate(
+            &job,
+            &[1, 2, 4, 8],
+            &[1, 2, 4, 8],
+            &[1, 2, 4],
+            &[false, true],
+            &Kernel::ALL,
+            &[false, true],
+        );
+        assert!(!layouts.is_empty());
+        for v in &layouts {
+            let bound = model_state_bytes(&job, v, &A100);
+            let total = per_gpu_memory(&job, v, &A100).total();
+            assert!(bound <= total, "{:?}: bound {bound} > total {total}", v.layout);
+        }
     }
 
     #[test]

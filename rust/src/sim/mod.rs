@@ -5,6 +5,7 @@
 //! the quantities a row of the paper's Appendix B/C tables reports: step
 //! time + MFU, or OOM, or "Kernel unavail.".
 
+pub mod cache;
 pub mod cluster;
 pub mod kernels;
 pub mod memory;
@@ -18,7 +19,11 @@ pub use step_time::StepBreakdown;
 use crate::layout::{Job, ValidLayout};
 
 /// Result of simulating one training configuration.
-#[derive(Debug, Clone, Copy)]
+///
+/// `PartialEq` compares the raw f64 payloads bit-for-bit (modulo the usual
+/// float semantics) — the parallel sweep engine's equivalence tests rely
+/// on serial and parallel evaluation producing `==` outcomes.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Outcome {
     /// The run completes: step time (s), MFU, and the breakdowns.
     Ok {

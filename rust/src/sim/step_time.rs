@@ -11,7 +11,7 @@ use crate::sim::cluster::{allreduce_time, p2p_time, Hardware};
 use crate::sim::kernels::{dense_matmul_eff, perf};
 
 /// Wall-time breakdown of one global step.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StepBreakdown {
     /// Compute time summed over the steady-state schedule (slowest stage).
     pub compute: f64,

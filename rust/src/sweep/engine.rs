@@ -1,8 +1,23 @@
 //! Sweep engine (S9): Cartesian-product evaluation + paper-style ranking.
+//!
+//! Evaluation is **parallel, pruned, and cached** while staying
+//! bit-identical to a serial sweep:
+//!
+//! * every layout's outcome comes from [`crate::sim::cache::evaluate_cached`]
+//!   — a pure memoization of `sim::evaluate`, shared with the planner and
+//!   the figure/table generators;
+//! * a pre-pruning pass resolves layouts whose parameter-state lower bound
+//!   ([`crate::sim::memory::model_state_bytes`]) already overflows HBM on
+//!   the coordinating thread (their full evaluation short-circuits to OOM
+//!   without touching the step-time model), and dispatches only plausible
+//!   layouts to the work-stealing pool ([`crate::util::pool`]);
+//! * results are scattered back by enumeration index, so row order — and
+//!   therefore every rendered table and CSV — is independent of `--jobs`.
 
 use crate::layout::{enumerate, Job, Layout, ValidLayout};
-use crate::sim::{evaluate, Hardware, Outcome};
+use crate::sim::{cache, memory, Hardware, Outcome};
 use crate::sweep::presets::SweepPreset;
+use crate::util::pool;
 
 /// One evaluated sweep row.
 #[derive(Debug, Clone)]
@@ -67,8 +82,16 @@ impl SweepResult {
     }
 }
 
-/// Run one preset on the given hardware model.
+/// Run one preset on the given hardware model, with the process-default
+/// parallelism (`--jobs` / `PLX_JOBS` / hardware threads).
 pub fn run(preset: &SweepPreset, hw: &Hardware) -> SweepResult {
+    run_jobs(preset, hw, 0)
+}
+
+/// Run one preset with an explicit job count: `0` = auto, `1` = serial on
+/// the calling thread, `>1` = the shared work-stealing pool. The returned
+/// rows are identical (same outcomes, same order) for every `jobs` value.
+pub fn run_jobs(preset: &SweepPreset, hw: &Hardware, jobs: usize) -> SweepResult {
     let job = preset.job();
     let layouts = enumerate(
         &job,
@@ -79,11 +102,58 @@ pub fn run(preset: &SweepPreset, hw: &Hardware) -> SweepResult {
         &preset.kernels,
         &preset.sps,
     );
-    let rows = layouts
-        .into_iter()
-        .map(|v| Row { outcome: evaluate(&job, &v, hw), v })
-        .collect();
+    let rows = evaluate_layouts(&job, layouts, hw, jobs);
     SweepResult { preset_name: preset.name.to_string(), job, rows }
+}
+
+/// Evaluate a layout list into rows, preserving input order.
+///
+/// Shared by the sweep engine and `planner::plan_exhaustive`. The
+/// pre-pruning pass keeps cheap, guaranteed-OOM layouts off the pool:
+/// when the parameter-state lower bound alone exceeds the HBM budget,
+/// `evaluate` is guaranteed to stop at its memory check (never reaching
+/// the step-time model), so running it inline costs a handful of flops
+/// and saves a task dispatch. All outcomes flow through the shared
+/// evaluation cache either way, so the result is bit-identical to the
+/// serial path by construction.
+pub fn evaluate_layouts(
+    job: &Job,
+    layouts: Vec<ValidLayout>,
+    hw: &Hardware,
+    jobs: usize,
+) -> Vec<Row> {
+    let jobs = if jobs == 0 { pool::effective_jobs() } else { jobs };
+    if jobs <= 1 || layouts.len() <= 1 {
+        return layouts
+            .into_iter()
+            .map(|v| Row { outcome: cache::evaluate_cached(job, &v, hw), v })
+            .collect();
+    }
+
+    // Pre-pruning: settle hopeless rows inline, queue the rest.
+    let n = layouts.len();
+    let mut slots: Vec<Option<Row>> = (0..n).map(|_| None).collect();
+    let mut plausible: Vec<(usize, ValidLayout)> = Vec::with_capacity(n);
+    for (i, v) in layouts.into_iter().enumerate() {
+        if memory::model_state_bytes(job, &v, hw) > hw.hbm_bytes {
+            slots[i] = Some(Row { outcome: cache::evaluate_cached(job, &v, hw), v });
+        } else {
+            plausible.push((i, v));
+        }
+    }
+
+    let job_copy = *job;
+    let hw_copy = *hw;
+    let computed = pool::map_jobs(plausible, jobs, move |_idx, (i, v)| {
+        (*i, Row { outcome: cache::evaluate_cached(&job_copy, v, &hw_copy), v: *v })
+    });
+    for (i, row) in computed {
+        slots[i] = Some(row);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every layout evaluates to exactly one row"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -92,6 +162,17 @@ mod tests {
     use crate::layout::Kernel;
     use crate::sim::A100;
     use crate::sweep::presets::{main_presets, seqpar_presets};
+    use crate::util::prop;
+
+    /// Rows must agree layout-for-layout and outcome-for-outcome.
+    fn assert_rows_identical(a: &SweepResult, b: &SweepResult) {
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.v.layout, y.v.layout, "row order diverged");
+            assert_eq!(x.v.num_micro, y.v.num_micro);
+            assert_eq!(x.outcome, y.outcome, "outcome diverged at {:?}", x.v.layout);
+        }
+    }
 
     #[test]
     fn main_sweep_13b_best_is_rms_mb1_no_ckpt() {
@@ -152,6 +233,99 @@ mod tests {
             let best = r.best().unwrap();
             assert_eq!(best.layout().mb, 1, "{}: best mb != 1", p.name);
         }
+    }
+
+    #[test]
+    fn parallel_cold_matches_serial_for_every_paper_preset() {
+        // Run the parallel path FIRST: for presets no other test has
+        // touched, it evaluates cold through the pool; the serial pass
+        // then re-derives every row (warm or not, the cache is keyed by
+        // the full analytic input, so an index-scatter bug in the
+        // parallel assembly cannot hide behind it).
+        for p in main_presets().into_iter().chain(seqpar_presets()) {
+            let par = run_jobs(&p, &A100, 4);
+            let ser = run_jobs(&p, &A100, 1);
+            assert_rows_identical(&ser, &par);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_property_random_subspaces() {
+        // Satellite requirement: identical `SweepResult` rows and
+        // ordering for `--jobs 1` vs `--jobs N` across random presets.
+        let base = main_presets();
+        prop::check_cases(0x50EE9, 24, |rng| {
+            let src = &base[rng.range(0, base.len())];
+            // True random subsets (not prefixes), so subspaces that drop
+            // the leading options — e.g. {tp=4,8} or {mb=4} alone — are
+            // exercised too; guaranteed non-empty.
+            let pick = |rng: &mut crate::util::prng::Rng, opts: &[usize]| {
+                let mut v: Vec<usize> = opts.iter().copied().filter(|_| rng.bool()).collect();
+                if v.is_empty() {
+                    v.push(opts[rng.range(0, opts.len())]);
+                }
+                v
+            };
+            let preset = SweepPreset {
+                name: src.name,
+                paper_table: src.paper_table,
+                arch: src.arch,
+                gpus: src.gpus,
+                gbs: src.gbs,
+                tps: pick(&mut *rng, &src.tps),
+                pps: pick(&mut *rng, &src.pps),
+                mbs: pick(&mut *rng, &src.mbs),
+                ckpts: src.ckpts.clone(),
+                kernels: src.kernels.clone(),
+                sps: src.sps.clone(),
+            };
+            let jobs = rng.range(2, 9);
+            let par = run_jobs(&preset, &A100, jobs);
+            let ser = run_jobs(&preset, &A100, 1);
+            assert_rows_identical(&ser, &par);
+        });
+    }
+
+    #[test]
+    fn rendered_reports_are_byte_identical_across_jobs() {
+        // The user-visible guarantee: `plx sweep --jobs N` output bytes.
+        let p = &main_presets()[0];
+        let ser = crate::sweep::report::render(&run_jobs(p, &A100, 1), false);
+        let par = crate::sweep::report::render(&run_jobs(p, &A100, 6), false);
+        assert_eq!(ser, par);
+        let csv_ser = crate::sweep::report::to_csv(&run_jobs(p, &A100, 1));
+        let csv_par = crate::sweep::report::to_csv(&run_jobs(p, &A100, 3));
+        assert_eq!(csv_ser, csv_par);
+    }
+
+    #[test]
+    fn pruned_rows_report_full_oom_numbers() {
+        // Pre-pruned layouts must still carry the exact `required` bytes
+        // the full memory model reports (the paper tables print them).
+        let p = &main_presets()[0];
+        let job = p.job();
+        let r = run_jobs(p, &A100, 4);
+        for row in &r.rows {
+            if let Outcome::Oom { required, budget } = row.outcome {
+                let mem = crate::sim::memory::per_gpu_memory(&job, &row.v, &A100);
+                assert_eq!(required, mem.total(), "{:?}", row.v.layout);
+                assert_eq!(budget, A100.hbm_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn evaluation_cache_is_shared_across_engine_calls() {
+        // Counters are process-global and tests run concurrently, so only
+        // monotone assertions are safe here: a repeated identical sweep
+        // must add at least its own row count in hits.
+        let p = &main_presets()[0];
+        let rows = run_jobs(p, &A100, 1).rows.len() as u64; // warm
+        let (h0, _) = crate::sim::cache::stats();
+        let _ = run_jobs(p, &A100, 1); // identical sweep: all hits
+        let (h1, _) = crate::sim::cache::stats();
+        assert!(h1 - h0 >= rows, "second sweep should hit the cache for every row");
+        assert!(crate::sim::cache::len() > 0);
     }
 
     #[test]

@@ -88,6 +88,20 @@ impl Args {
         }
     }
 
+    /// Parse the conventional `--jobs` option: a positive integer, or
+    /// `auto`/`0` for "use every hardware thread" (returned as `Some(0)`
+    /// so callers can distinguish "explicitly auto" from "not given").
+    pub fn get_jobs(&self) -> Result<Option<usize>, String> {
+        match self.get("jobs") {
+            None => Ok(None),
+            Some("auto") | Some("0") => Ok(Some(0)),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--jobs expects a positive integer or 'auto', got '{v}'")),
+        }
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -98,7 +112,7 @@ mod tests {
     use super::*;
 
     const SPEC: Spec = Spec {
-        options: &["model", "steps", "lr"],
+        options: &["model", "steps", "lr", "jobs"],
         flags: &["verbose", "dry-run"],
     };
 
@@ -126,6 +140,18 @@ mod tests {
         assert_eq!(a.get_usize("steps", 42).unwrap(), 42);
         assert_eq!(a.get_f64("lr", 0.1).unwrap(), 0.1);
         assert_eq!(a.get_or("model", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn jobs_option_parses_auto_and_integers() {
+        let parse = |argv: &[&str]| Args::parse(&self::argv(argv), &SPEC).unwrap();
+        assert_eq!(parse(&[]).get_jobs().unwrap(), None);
+        assert_eq!(parse(&["--jobs", "4"]).get_jobs().unwrap(), Some(4));
+        assert_eq!(parse(&["--jobs=1"]).get_jobs().unwrap(), Some(1));
+        assert_eq!(parse(&["--jobs", "auto"]).get_jobs().unwrap(), Some(0));
+        assert_eq!(parse(&["--jobs", "0"]).get_jobs().unwrap(), Some(0));
+        assert!(parse(&["--jobs", "many"]).get_jobs().is_err());
+        assert!(parse(&["--jobs", "-2"]).get_jobs().is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod table;

@@ -5,7 +5,7 @@ use plx::layout::{Job, Kernel};
 use plx::model::arch::preset;
 use plx::planner::{plan_by_rules, plan_exhaustive};
 use plx::sim::{Outcome, A100, H100};
-use plx::sweep::{figures, main_presets, run, seqpar_presets, table2};
+use plx::sweep::{figures, main_presets, report, run, run_jobs, seqpar_presets, table2};
 use plx::topo::Cluster;
 
 #[test]
@@ -161,6 +161,53 @@ fn table2_recomputed_baselines_match_appendix_a() {
     ] {
         let r = rows.iter().find(|r| r.system == name).unwrap();
         assert!((r.mfu - expect).abs() < 0.01, "{name}: {} vs {expect}", r.mfu);
+    }
+}
+
+#[test]
+fn table2_matches_checked_in_golden() {
+    // The fixture pins the exact bytes of `plx table 2` (CI diffs the CLI
+    // output against it too, so sweep/simulator regressions fail fast).
+    // Re-bless after an intentional recalibration with either
+    //   PLX_UPDATE_GOLDEN=1 cargo test -q table2_matches_checked_in_golden
+    // or `python3 tools/gen_golden.py` (the no-toolchain mirror).
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/table2.txt");
+    let rendered = table2::render(&A100);
+    if std::env::var_os("PLX_UPDATE_GOLDEN").is_some() {
+        std::fs::write(&path, &rendered).unwrap();
+        eprintln!("golden fixture re-blessed: {}", path.display());
+        return;
+    }
+    let golden = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {}: {e}", path.display()));
+    assert_eq!(
+        rendered, golden,
+        "`plx table 2` diverged from tests/golden/table2.txt; if the change \
+         is an intentional recalibration, re-bless with PLX_UPDATE_GOLDEN=1"
+    );
+}
+
+#[test]
+fn sweep_all_output_is_byte_identical_across_jobs() {
+    // Acceptance criterion: `plx sweep --all --jobs N` produces
+    // byte-identical output to `--jobs 1`. Render every preset's report
+    // (and CSV) both ways and compare the bytes.
+    for p in main_presets().into_iter().chain(seqpar_presets()) {
+        let with_sp = p.sps.len() > 1;
+        let serial = run_jobs(&p, &A100, 1);
+        let parallel = run_jobs(&p, &A100, 8);
+        assert_eq!(
+            report::render(&serial, with_sp),
+            report::render(&parallel, with_sp),
+            "{}: rendered report differs between --jobs 1 and --jobs 8",
+            p.name
+        );
+        assert_eq!(
+            report::to_csv(&serial),
+            report::to_csv(&parallel),
+            "{}: CSV differs between --jobs 1 and --jobs 8",
+            p.name
+        );
     }
 }
 

@@ -1,0 +1,251 @@
+//! Vendored minimal subset of the `anyhow` API.
+//!
+//! The build environment for this repository is fully offline (no crates.io
+//! access), so the real `anyhow` crate cannot be fetched. This crate
+//! implements exactly the surface plx uses — `Error`, `Result`, `Context`,
+//! `anyhow!` / `bail!` / `ensure!` — with the same semantics:
+//!
+//! * `Error` carries a context chain; `{}` prints the outermost message,
+//!   `{:#}` prints the whole chain separated by `": "`, and `{:?}` prints
+//!   the message plus a `Caused by:` list (what `unwrap()` shows).
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   `Error`, preserving its `source()` chain.
+//! * `.context(..)` / `.with_context(..)` work on both `Result` and
+//!   `Option` and on results that already carry an `anyhow::Error`.
+//!
+//! Swapping back to the real crate is a one-line change in rust/Cargo.toml.
+
+use std::fmt::{self, Debug, Display};
+
+/// Drop-in replacement for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirror of `anyhow::Error::msg`).
+    pub fn msg<M: Display + Send + Sync + 'static>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(err: &E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    fn push_context(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// Iterate the context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does NOT
+// implement `std::error::Error` (same as the real anyhow), which is what
+// makes this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+mod ext {
+    /// Anything that can become an `Error` when context is attached.
+    /// Implemented for std errors and for `Error` itself; the split mirrors
+    /// anyhow's `ext::StdError` coherence trick.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Mirror of `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Attach a context message to the error, if any.
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().push_context(context.to_string()))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Mirror of `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Mirror of `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Mirror of `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("inner")
+            .context("outer")
+            .unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("file missing"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err::<(), _>(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", inner().unwrap_err()), "file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("need a value").unwrap_err();
+        assert_eq!(format!("{e}"), "need a value");
+        assert_eq!(Some(3).with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_and_root_cause() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("seven is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "seven is right out");
+        let chained = f(12).map_err(|e| e.push_context("calling f".into())).unwrap_err();
+        assert_eq!(chained.root_cause(), "x too big: 12");
+        assert_eq!(chained.chain().count(), 2);
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+}

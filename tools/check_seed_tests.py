@@ -1,0 +1,594 @@
+"""Evaluate the Rust test-suite's numeric assertions against tools/pysim.py.
+
+This is the no-toolchain cross-check: every sim/sweep/planner assertion
+from the Rust `#[test]`s is re-stated here against the Python mirror of
+the simulator. A failure here predicts a failure in `cargo test`.
+
+Run: python3 tools/check_seed_tests.py
+"""
+
+import math
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from pysim import *  # noqa: F401,F403
+
+PASS = []
+FAIL = []
+
+
+def check(name, fn):
+    try:
+        fn()
+        PASS.append(name)
+    except Exception as e:  # noqa: BLE001
+        FAIL.append((name, f"{type(e).__name__}: {e}"))
+
+
+def eval13(tp, pp, mb, ckpt, k):
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    v = validate(job, Layout(tp, pp, mb, ckpt, k, False))
+    return evaluate(job, v, A100)
+
+
+# ------------------------------------------------------------- sim/mod tests
+
+def t_headline_anchor():
+    m = eval13(1, 1, 1, False, FLASH2RMS).mfu_opt()
+    assert m is not None and 0.63 < m < 0.78, f"mfu {m}"
+
+
+def t_oom_rows_reported():
+    assert eval13(1, 1, 1, False, FLASH2).is_oom()
+    assert eval13(1, 1, 1, False, FLASH2).status_label() == "OOM Error"
+
+
+def t_kernel_unavailable_rows():
+    job = Job(preset("llama30b"), Cluster.dgx_a100(32), 2048)
+    v = validate(job, Layout(4, 4, 1, False, FUSED, False))
+    assert evaluate(job, v, A100).kind == "unavail"
+
+
+def t_mfu_never_exceeds_one():
+    for tp in [1, 2]:
+        for pp in [1, 2]:
+            for mb in [1, 2, 4]:
+                for ckpt in [False, True]:
+                    for k in ALL_KERNELS:
+                        if ckpt and k == FLASH2RMS:
+                            continue
+                        o = eval13(tp, pp, mb, ckpt, k)
+                        if o.kind == "ok":
+                            assert 0.0 < o.mfu < 1.0, f"mfu {o.mfu}"
+                            assert o.step_time_s > 0.0
+
+
+# ------------------------------------------------------------- memory tests
+
+def v13(l):
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    return job, validate(job, l)
+
+
+def t_mem_anchor_13b_rms_fits_plain_flash2_ooms():
+    job, v = v13(Layout(1, 1, 1, False, FLASH2RMS, False))
+    assert fits(job, v, A100), per_gpu_memory(job, v, A100)
+    job, v = v13(Layout(1, 1, 1, False, FLASH2, False))
+    assert not fits(job, v, A100), per_gpu_memory(job, v, A100)
+
+
+def t_mem_anchor_13b_mb2_needs_tp2():
+    job, v = v13(Layout(1, 1, 2, False, FLASH2RMS, False))
+    assert not fits(job, v, A100)
+    job, v = v13(Layout(2, 1, 2, False, FLASH2RMS, False))
+    assert fits(job, v, A100)
+
+
+def t_mem_ckpt_reduces():
+    job, v_no = v13(Layout(1, 1, 1, False, FLASH2, False))
+    _, v_ck = v13(Layout(1, 1, 1, True, FLASH2, False))
+    m_no = per_gpu_memory(job, v_no, A100)
+    m_ck = per_gpu_memory(job, v_ck, A100)
+    assert m_ck.activations < m_no.activations / 2.0
+
+
+def t_mem_flash_removes_quadratic():
+    job, v_t = v13(Layout(2, 2, 1, False, TORCH, False))
+    _, v_f = v13(Layout(2, 2, 1, False, FLASH2, False))
+    t = act_bytes_per_layer(job, v_t)
+    f = act_bytes_per_layer(job, v_f)
+    assert t > 2.0 * f, f"torch {t} vs flash {f}"
+
+
+def t_mem_sp_shrinks():
+    job, v_nosp = v13(Layout(2, 2, 1, False, FLASH2, False))
+    _, v_sp = v13(Layout(2, 2, 1, False, FLASH2, True))
+    assert act_bytes_per_layer(job, v_sp) < act_bytes_per_layer(job, v_nosp)
+
+
+def t_mem_decreases_with_mp():
+    job, v1 = v13(Layout(1, 2, 1, False, FLASH2, False))
+    _, v2 = v13(Layout(2, 2, 1, False, FLASH2, False))
+    assert per_gpu_memory(job, v2, A100).total() < per_gpu_memory(job, v1, A100).total()
+
+
+def t_mem_65b_needs_mp8():
+    job = Job(preset("llama65b"), Cluster.dgx_a100(16), 2048)
+    ok = validate(job, Layout(2, 4, 1, False, FLASH2RMS, False))
+    assert fits(job, ok, A100), per_gpu_memory(job, ok, A100)
+    bad = validate(job, Layout(2, 2, 1, False, FLASH2RMS, False))
+    assert not fits(job, bad, A100), per_gpu_memory(job, bad, A100)
+
+
+def t_mem_zero1_scales_with_dp():
+    job, v = v13(Layout(2, 2, 1, False, FLASH2, False))
+    m = per_gpu_memory(job, v, A100)
+    n = float(preset("llama13b").param_count())
+    assert abs(m.optimizer - 12.0 * n / 4.0 / 16.0) / m.optimizer < 1e-9
+
+
+def t_mem_model_state_bound_sound():
+    # New in this PR: cheap bound must never exceed the full total.
+    job = Job(preset("llama65b"), Cluster.dgx_a100(8), 2048)
+    for v in enumerate_layouts(job, [1, 2, 4, 8], [1, 2, 4, 8], [1, 2, 4],
+                               [False, True], ALL_KERNELS, [False, True]):
+        b = model_state_bytes(job, v, A100)
+        t = per_gpu_memory(job, v, A100).total()
+        assert b <= t, f"{v.layout}: bound {b} > total {t}"
+
+
+# ------------------------------------------------------------- step_time tests
+
+def st13(tp, pp, mb, ckpt, k):
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    v = validate(job, Layout(tp, pp, mb, ckpt, k, False))
+    return step_time(job, v, A100)
+
+
+def t_st_anchor_26s():
+    t = st13(1, 1, 1, False, FLASH2RMS).total()
+    assert 22.0 < t < 31.0, f"step time {t}"
+
+
+def t_st_ckpt_quarter():
+    plain = st13(2, 2, 1, False, FLASH2).total()
+    ckpt = st13(2, 2, 1, True, FLASH2).total()
+    ratio = ckpt / plain
+    assert 1.15 < ratio < 1.45, f"ratio {ratio}"
+
+
+def t_st_torch_slower():
+    assert st13(2, 2, 1, False, TORCH).total() > st13(2, 2, 1, False, FLASH2).total()
+
+
+def t_st_tp_comm_pp_bubble():
+    t_tp = st13(2, 1, 1, False, FLASH2)
+    assert t_tp.tp_comm > 0.0 and t_tp.bubble == 0.0
+    t_pp = st13(1, 2, 1, False, FLASH2)
+    assert t_pp.tp_comm == 0.0 and t_pp.bubble > 0.0 and t_pp.pp_comm > 0.0
+
+
+def t_st_pp_beats_tp():
+    tp2 = st13(2, 1, 1, False, FLASH2RMS).total()
+    pp2 = st13(1, 2, 1, False, FLASH2RMS).total()
+    assert pp2 < tp2, f"pp2={pp2} tp2={tp2}"
+
+
+def t_st_mb2_close():
+    t1 = st13(2, 2, 1, False, FLASH2).total()
+    t2 = st13(2, 2, 2, False, FLASH2).total()
+    rel = abs(t2 - t1) / t1
+    assert rel < 0.15, f"mb1 {t1} vs mb2 {t2} rel {rel}"
+
+
+# ------------------------------------------------------------- mfu tests
+
+def t_mfu_anchor_70_57():
+    a = preset("llama13b")
+    m = mfu(a, 2048, 64, 312e12, 26.54)
+    assert abs(m - 0.7057) < 0.02, f"mfu {m}"
+
+
+def t_mfu_megatron_18b():
+    m = megatron_mfu(18.4e9, 40, 6144, 2048, 1024, 256, 135e12, 312e12)
+    assert abs(m - 0.3424) < 0.005, f"mfu {m}"
+
+
+def t_mfu_megatron_76b():
+    m = megatron_mfu(76.1e9, 60, 10240, 2048, 1792, 1024, 140e12, 312e12)
+    assert abs(m - 0.3476) < 0.005, f"mfu {m}"
+
+
+def t_mfu_llama_meta():
+    m = llama_meta_mfu(380.0, 65.2e9, 80, 8192, 2048, 312e12)
+    assert abs(m - 0.4946) < 0.01, f"mfu {m}"
+
+
+# ------------------------------------------------------------- layout tests
+
+def t_layout_table1_size():
+    j = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    v = enumerate_layouts(j, [1, 2], [1, 2], [1, 2, 4, 8], [True, False],
+                          [FLASH2, FLASH2RMS], [False])
+    assert len(v) == 48, len(v)
+
+
+def t_layout_heads_divisibility():
+    j = Job(preset("llama30b"), Cluster.dgx_a100(32), 2048)
+    try:
+        validate(j, Layout(8, 2, 1, False, FLASH2, False))
+        raise AssertionError("tp=8 should be rejected for 52 heads")
+    except ValueError:
+        pass
+    validate(j, Layout(4, 2, 1, False, FLASH2, False))
+
+
+# ------------------------------------------------------------- engine tests
+
+def t_engine_13b_best():
+    r = run(main_presets()[0], A100)
+    best = r.best()
+    assert best.layout().mb == 1, best.layout()
+    assert not best.layout().ckpt
+    assert best.layout().kernel == FLASH2RMS
+    m = best.outcome.mfu
+    assert 0.60 < m < 0.78, f"mfu {m}"
+
+
+def t_engine_oom_rows_everywhere():
+    for p in main_presets():
+        r = run(p, A100)
+        assert r.count_ok() > 0, f"{p.name} no runnable"
+        assert r.count_oom() > 0, f"{p.name} no OOM"
+
+
+def t_engine_sorted():
+    r = run(main_presets()[0], A100)
+    s = r.sorted()
+    first_oom = next((i for i, x in enumerate(s) if x.outcome.is_oom()), None)
+    last_ok = None
+    for i, x in enumerate(s):
+        if x.outcome.mfu_opt() is not None:
+            last_ok = i
+    if first_oom is not None and last_ok is not None:
+        assert last_ok < first_oom
+    mfus = [x.outcome.mfu for x in s if x.outcome.mfu_opt() is not None]
+    for a, b in zip(mfus, mfus[1:]):
+        assert a >= b
+
+
+def t_engine_seqpar_65b_prefers_sp():
+    p = next(q for q in seqpar_presets() if q.name == "sp-65b-2k")
+    r = run(p, A100)
+    best_sp = r.best_where(lambda row: row.layout().sp).outcome.mfu
+    best_nosp = r.best_where(lambda row: not row.layout().sp).outcome.mfu
+    assert best_sp >= best_nosp, f"sp {best_sp} < nosp {best_nosp}"
+
+
+def t_engine_mb1_wins_everywhere():
+    for p in main_presets():
+        r = run(p, A100)
+        assert r.best().layout().mb == 1, f"{p.name}: best mb != 1"
+
+
+def t_engine_no_ckpt_wins():
+    for p in main_presets():
+        r = run(p, A100)
+        assert not r.best().layout().ckpt, f"{p.name}: best uses ckpt"
+
+
+# ------------------------------------------------------------- figures tests
+
+def t_fig1_ordering():
+    points = figure1(A100)
+
+    def get(model, s):
+        for p in points:
+            if p.model == model and p.series == s:
+                return p.mfu
+        return None
+
+    torch = get("13b-2k", TORCH)
+    fused = get("13b-2k", FUSED)
+    f1 = get("13b-2k", FLASH1)
+    f2 = get("13b-2k", FLASH2)
+    rms = get("13b-2k", FLASH2RMS)
+    assert torch <= fused <= f1 <= f2 <= rms, (torch, fused, f1, f2, rms)
+    for model in ["13b-2k", "13b-8k", "30b-2k", "30b-8k", "65b-2k"]:
+        f1 = get(model, FLASH1)
+        f2 = get(model, FLASH2)
+        rms = get(model, FLASH2RMS)
+        assert f1 <= f2 <= rms, f"{model}: {f1} {f2} {rms}"
+
+
+def t_fig2_no_ckpt_wins():
+    points = figure2(A100)
+    for model in ["13b-2k", "30b-2k", "65b-2k"]:
+        no = next(p for p in points if p.model == model and p.series == "no checkpointing")
+        yes = next(p for p in points if p.model == model and p.series == "every layer")
+        if no.mfu is not None and yes.mfu is not None:
+            assert no.mfu > yes.mfu, f"{model}: {no.mfu} <= {yes.mfu}"
+
+
+def t_fig3_mb1_wins():
+    points = figure3(A100)
+    for model in ["13b-2k", "65b-2k"]:
+        mfus = [(p.series, p.mfu) for p in points if p.model == model and p.mfu is not None]
+        best = max(mfus, key=lambda x: x[1])
+        assert best[0] == "mb=1", f"{model}: {mfus}"
+
+
+def t_fig5_sp_large_models_only():
+    points = figure5(A100)
+
+    def get(model, s):
+        return next(p for p in points if p.model == model and p.series == s).mfu
+
+    sp65 = get("sp-65b-2k", "sequence parallel")
+    no65 = get("sp-65b-2k", "no sequence parallel")
+    assert sp65 >= no65
+    sp13 = get("sp-13b-2k", "sequence parallel")
+    no13 = get("sp-13b-2k", "no sequence parallel")
+    assert abs(sp13 - no13) < 0.02, f"13B should be a wash: {sp13} vs {no13}"
+
+
+def t_table3_has_all_models():
+    names = table3(A100)
+    for m in ["llama13b", "llama30b", "llama65b"]:
+        assert any(m in n for n in names), names
+
+
+# ------------------------------------------------------------- table2 tests
+
+def t_table2_ours_beat_baselines():
+    rows = table2_rows(A100)
+
+    def get(s):
+        return next(r for r in rows if s in r[0])[4]
+
+    assert get("plx LLAMA 13B (ours)") > get("MPT 13B")
+    assert get("plx LLAMA 13B (ours)") > get("Megatron-LM 18B")
+    assert get("plx LLAMA 30B (ours)") > get("MPT 30B")
+    assert get("plx LLAMA 65B (ours)") > get("MPT 70B")
+    assert get("plx LLAMA 65B (ours)") > get("LLAMA 65B by Meta")
+
+
+def t_table2_derived_match_paper():
+    for r in table2_rows(A100):
+        if "†" in r[0]:
+            assert abs(r[4] - r[5]) < 0.01, f"{r[0]}: {r[4]} vs {r[5]}"
+
+
+def t_table2_ours_close_to_paper():
+    for r in table2_rows(A100):
+        if r[0].startswith("plx"):
+            assert abs(r[4] - r[5]) < 0.08, f"{r[0]}: {r[4]} vs {r[5]}"
+
+
+# ------------------------------------------------------------- planner tests
+
+def pjob(name, nodes):
+    arch = preset(name)
+    return Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+
+
+def t_planner_13b_headline():
+    p = plan_by_rules(pjob("llama13b", 8), A100)
+    assert p.v.layout.mb == 1 and p.v.layout.tp == 1 and p.v.layout.pp == 1
+    assert not p.v.layout.ckpt and p.v.layout.kernel == FLASH2RMS
+
+
+def t_planner_65b_mp_and_sp():
+    p = plan_by_rules(pjob("llama65b", 8), A100)
+    assert p.v.layout.mb == 1
+    assert p.v.layout.tp * p.v.layout.pp >= 4, p.v.layout
+    assert p.v.layout.sp
+    assert not p.v.layout.ckpt
+
+
+def t_planner_rules_near_exhaustive():
+    for name, nodes in [("llama13b", 8), ("llama30b", 8), ("llama65b", 8)]:
+        j = pjob(name, nodes)
+        rules = plan_by_rules(j, A100)
+        best = plan_exhaustive(j, A100)
+        assert rules.predicted_mfu >= best.predicted_mfu - 0.05, (
+            f"{name}: rules {rules.predicted_mfu} vs best {best.predicted_mfu} "
+            f"({rules.v.layout} vs {best.v.layout})")
+
+
+def t_planner_plans_feasible():
+    for name, nodes in [("llama13b", 4), ("llama30b-8k", 8), ("llama65b", 16)]:
+        j = pjob(name, nodes)
+        p = plan_by_rules(j, A100)
+        assert fits(j, p.v, A100)
+        assert p.predicted_mfu > 0.2, f"{name}: {p.predicted_mfu}"
+
+
+def t_planner_impossible_job():
+    arch = preset("llama65b")
+    j = Job(arch, Cluster(1, 1), 2048)
+    try:
+        plan_by_rules(j, A100)
+        raise AssertionError("should be infeasible")
+    except ValueError:
+        pass
+
+
+# ------------------------------------------------------------- sweep_golden
+
+def t_golden_headline_numbers_shape():
+    expect_order = ["sp-13b-2k", "sp-13b-8k", "sp-30b-2k", "sp-30b-8k", "sp-65b-2k"]
+    mfus = []
+    for name in expect_order:
+        p = next(q for q in seqpar_presets() if q.name == name)
+        r = run(p, A100)
+        mfus.append(r.best().outcome.mfu)
+    assert all(0.50 <= m < 0.78 for m in mfus), mfus
+    assert mfus[0] > mfus[4], f"13B must beat 65B: {mfus}"
+
+
+def t_golden_best_rows_table3():
+    def chk(preset_name, mb, tp, pp):
+        p = next(q for q in seqpar_presets() if q.name == preset_name)
+        r = run(p, A100)
+        b = r.best()
+        got = (b.layout().mb, b.layout().tp, b.layout().pp)
+        assert got == (mb, tp, pp), f"{preset_name}: got {got}"
+
+    chk("sp-13b-2k", 1, 1, 1)
+    chk("sp-65b-2k", 1, 2, 4)
+
+
+def t_golden_oom_frontier_13b():
+    p = main_presets()[0]
+    r = run(p, A100)
+
+    def outcome(mb, tp, pp, ckpt, k):
+        for row in r.rows:
+            l = row.layout()
+            if (l.mb == mb and l.tp == tp and l.pp == pp and l.ckpt == ckpt
+                    and l.kernel == k and not l.sp):
+                return row.outcome
+        raise AssertionError("row not found")
+
+    assert outcome(1, 1, 1, False, FLASH2RMS).mfu_opt() is not None
+    assert outcome(1, 1, 1, False, FLASH2).is_oom()
+    for tp in [1, 2]:
+        for pp in [1, 2]:
+            for k in [FLASH2, TORCH]:
+                assert outcome(8, tp, pp, False, k).is_oom(), \
+                    f"mb8 ({tp},{pp}) {k} should OOM"
+    assert outcome(4, 1, 1, True, FLASH2).mfu_opt() is not None
+    assert outcome(1, 2, 2, False, FLASH2).mfu_opt() is not None
+
+
+def t_golden_ckpt_penalty_band():
+    for p in main_presets():
+        r = run(p, A100)
+        no = r.best_where(lambda row: not row.layout().ckpt and row.layout().kernel == FLASH2)
+        yes = r.best_where(lambda row: row.layout().ckpt and row.layout().kernel == FLASH2)
+        if no is not None and yes is not None:
+            ratio = yes.outcome.mfu / no.outcome.mfu
+            assert 0.70 <= ratio < 1.0, f"{p.name}: ratio {ratio}"
+
+
+def t_golden_figure4_pp_over_tp_65b():
+    points = figure4(A100)
+
+    def get(tp, pp):
+        for p in points:
+            if p.model == "65b-2k" and p.series == f"tp{tp}/pp{pp}":
+                return p.mfu
+        return None
+
+    pp_heavy = get(2, 8)
+    tp_heavy = get(8, 2)
+    assert pp_heavy is not None and tp_heavy is not None
+    assert pp_heavy > tp_heavy, f"pp-heavy {pp_heavy} <= tp-heavy {tp_heavy}"
+
+
+def t_golden_planner_recover():
+    for model, nodes in [("llama13b", 8), ("llama30b", 32), ("llama65b", 16)]:
+        arch = preset(model)
+        job = Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+        rules = plan_by_rules(job, A100)
+        best = plan_exhaustive(job, A100)
+        assert rules.predicted_mfu >= best.predicted_mfu - 0.05, (
+            f"{model}@{nodes}: {rules.predicted_mfu} vs {best.predicted_mfu}")
+
+
+def t_golden_h100():
+    p = main_presets()[0]
+    a100 = run(p, A100)
+    h100 = run(p, H100)
+    best_a = a100.best()
+    best_h = h100.best()
+    assert best_a.layout().mb == best_h.layout().mb
+    assert not best_h.layout().ckpt
+    ta = best_a.outcome.step_time_s
+    th = None
+    for r in h100.rows:
+        if r.layout() == best_a.layout():
+            th = r.outcome.step_time_opt()
+    if th is not None:
+        assert th < ta, f"H100 step {th} should beat A100 {ta}"
+
+
+def t_golden_consistent_counts():
+    for p in main_presets() + seqpar_presets():
+        r = run(p, A100)
+        ok = r.count_ok()
+        oom = r.count_oom()
+        unavail = sum(1 for row in r.rows if row.outcome.kind == "unavail")
+        assert ok + oom + unavail == len(r.rows), p.name
+        assert ok > 0, f"{p.name} must have runnable layouts"
+
+
+CHECKS = [
+    ("sim::headline_anchor_70_percent", t_headline_anchor),
+    ("sim::oom_rows_reported", t_oom_rows_reported),
+    ("sim::kernel_unavailable_rows", t_kernel_unavailable_rows),
+    ("sim::mfu_never_exceeds_one", t_mfu_never_exceeds_one),
+    ("memory::paper_anchor_13b_rms_fits_plain_flash2_ooms", t_mem_anchor_13b_rms_fits_plain_flash2_ooms),
+    ("memory::paper_anchor_13b_mb2_needs_tp2", t_mem_anchor_13b_mb2_needs_tp2),
+    ("memory::checkpointing_reduces_activation_memory", t_mem_ckpt_reduces),
+    ("memory::flash_removes_quadratic_term", t_mem_flash_removes_quadratic),
+    ("memory::sequence_parallelism_shrinks_serial_part", t_mem_sp_shrinks),
+    ("memory::memory_decreases_with_model_parallelism", t_mem_decreases_with_mp),
+    ("memory::paper_anchor_65b_needs_model_parallelism_8", t_mem_65b_needs_mp8),
+    ("memory::zero1_scales_with_dp", t_mem_zero1_scales_with_dp),
+    ("memory::model_state_bound_sound (new)", t_mem_model_state_bound_sound),
+    ("step_time::anchor_13b_step_time_about_26s", t_st_anchor_26s),
+    ("step_time::checkpointing_costs_about_a_quarter", t_st_ckpt_quarter),
+    ("step_time::torch_slower_than_flash", t_st_torch_slower),
+    ("step_time::tp_adds_comm_pp_adds_bubble", t_st_tp_comm_pp_bubble),
+    ("step_time::pp_beats_tp_at_equal_degree_13b", t_st_pp_beats_tp),
+    ("step_time::larger_micro_batch_amortizes_nothing", t_st_mb2_close),
+    ("mfu::paper_anchor_13b_70_57", t_mfu_anchor_70_57),
+    ("mfu::appendix_a3_megatron_18b", t_mfu_megatron_18b),
+    ("mfu::appendix_a3_megatron_76b", t_mfu_megatron_76b),
+    ("mfu::appendix_a2_llama_meta", t_mfu_llama_meta),
+    ("layout::enumerate_matches_table1_size_for_13b", t_layout_table1_size),
+    ("layout::heads_divisibility_rejects_tp8_for_30b", t_layout_heads_divisibility),
+    ("engine::main_sweep_13b_best_is_rms_mb1_no_ckpt", t_engine_13b_best),
+    ("engine::sweeps_have_oom_rows_like_the_paper", t_engine_oom_rows_everywhere),
+    ("engine::sorted_puts_ok_first_oom_later", t_engine_sorted),
+    ("engine::seqpar_sweep_65b_prefers_sp", t_engine_seqpar_65b_prefers_sp),
+    ("engine::mb1_beats_larger_micro_batches_everywhere", t_engine_mb1_wins_everywhere),
+    ("engine::no_ckpt_beats_ckpt_at_optimum", t_engine_no_ckpt_wins),
+    ("figures::figure1_kernel_ordering_holds_per_model", t_fig1_ordering),
+    ("figures::figure2_no_ckpt_wins", t_fig2_no_ckpt_wins),
+    ("figures::figure3_mb1_wins", t_fig3_mb1_wins),
+    ("figures::figure5_sp_helps_large_models_only", t_fig5_sp_large_models_only),
+    ("figures::table3_has_all_models", t_table3_has_all_models),
+    ("table2::ours_beat_baselines_in_each_group", t_table2_ours_beat_baselines),
+    ("table2::derived_rows_match_paper_appendix", t_table2_derived_match_paper),
+    ("table2::our_simulated_mfu_close_to_paper", t_table2_ours_close_to_paper),
+    ("planner::rules_plan_13b_matches_paper_headline", t_planner_13b_headline),
+    ("planner::rules_plan_65b_uses_model_parallelism_and_sp", t_planner_65b_mp_and_sp),
+    ("planner::rules_within_a_few_points_of_exhaustive", t_planner_rules_near_exhaustive),
+    ("planner::plans_are_feasible", t_planner_plans_feasible),
+    ("planner::impossible_job_errors", t_planner_impossible_job),
+    ("sweep_golden::headline_numbers_shape", t_golden_headline_numbers_shape),
+    ("sweep_golden::best_rows_match_paper_table3_layouts", t_golden_best_rows_table3),
+    ("sweep_golden::oom_frontier_shape_13b", t_golden_oom_frontier_13b),
+    ("sweep_golden::checkpointing_mfu_penalty_about_a_quarter", t_golden_ckpt_penalty_band),
+    ("sweep_golden::figure4_pp_over_tp_on_65b", t_golden_figure4_pp_over_tp_65b),
+    ("sweep_golden::planner_rules_recover_optimum_within_tolerance", t_golden_planner_recover),
+    ("sweep_golden::h100_changes_absolute_but_not_relative_story", t_golden_h100),
+    ("sweep_golden::table2_recomputed_baselines_match_appendix_a", t_table2_derived_match_paper),
+    ("sweep_golden::every_preset_produces_consistent_counts", t_golden_consistent_counts),
+]
+
+
+def main():
+    for name, fn in CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS)} / {len(CHECKS)}")
+    for name, msg in FAIL:
+        print(f"FAIL {name}\n     {msg}")
+    return 1 if FAIL else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,932 @@
+"""Python mirror of the plx analytical simulator (rust/src/{model,sim,layout,topo,sweep,planner}).
+
+Purpose: cross-validation of the Rust implementation in environments
+without a Rust toolchain, and generation of the checked-in golden fixture
+for `plx table 2` (see tools/gen_golden.py and rust/tests/golden/).
+
+Every arithmetic expression is transcribed from the Rust source with the
+SAME association order, integer/float conversion points, and truncating
+integer divisions, so that IEEE-754 f64 results are bit-identical (modulo
+libm pow/log, which are correctly rounded on glibc >= 2.28).
+
+Rust source of truth:
+  rust/src/model/arch.rs      -> LlamaArch / PRESETS
+  rust/src/sim/cluster.rs     -> Hardware / A100 / H100 / collective times
+  rust/src/sim/kernels.rs     -> KernelPerf / dense_matmul_eff / availability
+  rust/src/sim/memory.rs      -> act_bytes_per_layer / per_gpu_memory
+  rust/src/sim/step_time.rs   -> stage_micro_time / step_time
+  rust/src/sim/mfu.rs         -> mfu / megatron_mfu / llama_meta_mfu
+  rust/src/layout/mod.rs      -> validate / enumerate
+  rust/src/topo/mod.rs        -> Cluster / Topology
+  rust/src/sweep/presets.rs   -> main_presets / seqpar_presets
+  rust/src/sweep/engine.rs    -> run / sorted / best_where
+  rust/src/sweep/report.rs    -> render / to_csv
+  rust/src/sweep/table2.rs    -> rows / render
+  rust/src/sweep/figures.rs   -> figure1..5 / table3
+  rust/src/planner/mod.rs     -> plan_by_rules / plan_exhaustive
+  rust/src/util/table.rs      -> render / pct / secs
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+# ---------------------------------------------------------------- model/arch
+
+@dataclass(frozen=True)
+class LlamaArch:
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    ffn: int
+    vocab: int
+    seq: int
+
+    def head_dim(self):
+        return self.hidden // self.heads
+
+    def param_count(self):
+        h = self.hidden
+        f = self.ffn
+        per_layer = 2 * h + 4 * h * h + 3 * h * f
+        return self.vocab * h + self.layers * per_layer + h + h * self.vocab
+
+    def model_flops_per_token(self):
+        n = float(self.param_count())
+        attn = 12.0 * float(self.layers) * float(self.hidden) * float(self.seq)
+        return 6.0 * n + attn
+
+    def layer_fwd_flops(self, batch, seq):
+        b = float(batch)
+        s = float(seq)
+        h = float(self.hidden)
+        f = float(self.ffn)
+        qkvo = 4.0 * 2.0 * b * s * h * h
+        attn = 4.0 * b * s * s * h
+        mlp = 3.0 * 2.0 * b * s * h * f
+        return qkvo + attn + mlp
+
+    def head_fwd_flops(self, batch, seq):
+        return 2.0 * float(batch) * float(seq) * float(self.hidden) * float(self.vocab)
+
+
+PRESETS = {
+    "llama13b": LlamaArch("llama13b", 40, 5120, 40, 13824, 131072, 2048),
+    "llama13b-8k": LlamaArch("llama13b-8k", 40, 5120, 40, 13824, 131072, 8192),
+    "llama30b": LlamaArch("llama30b", 60, 6656, 52, 17920, 131072, 2048),
+    "llama30b-8k": LlamaArch("llama30b-8k", 60, 6656, 52, 17920, 131072, 8192),
+    "llama65b": LlamaArch("llama65b", 80, 8192, 64, 22016, 131072, 2048),
+    "e2e100m": LlamaArch("e2e100m", 12, 768, 12, 2048, 16384, 128),
+    "demo20m": LlamaArch("demo20m", 6, 384, 6, 1024, 8192, 128),
+    "tiny": LlamaArch("tiny", 4, 64, 4, 128, 256, 32),
+}
+
+
+def preset(name):
+    return PRESETS.get(name)
+
+# ---------------------------------------------------------------- sim/cluster
+
+@dataclass(frozen=True)
+class Hardware:
+    peak_matmul_flops: float
+    hbm_bytes: float
+    hbm_bw: float
+    nvlink_bw: float
+    ib_bw: float
+    coll_latency_s: float
+    launch_overhead_s: float
+    workspace_bytes: float
+
+
+A100 = Hardware(312e12, 80.0 * 1e9, 1.55e12, 250e9, 25e9, 20e-6, 4.5e-6, 5.0 * 1e9)
+H100 = Hardware(989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9)
+
+
+def allreduce_time(bytes_, n, bw, latency):
+    if n <= 1:
+        return 0.0
+    steps = 2.0 * (float(n) - 1.0)
+    return latency * max(math.log2(float(n)), 1.0) + steps / float(n) * bytes_ / bw
+
+
+def rs_or_ag_time(bytes_, n, bw, latency):
+    if n <= 1:
+        return 0.0
+    steps = float(n) - 1.0
+    return latency * max(math.log2(float(n)), 1.0) + steps / float(n) * bytes_ / bw
+
+
+def p2p_time(bytes_, bw, latency):
+    return latency + bytes_ / bw
+
+# ---------------------------------------------------------------- sim/kernels
+
+TORCH, FUSED, FLASH1, FLASH2, FLASH2RMS = (
+    "torch", "fused", "flash_attn1.0.8", "flash_attn2", "flash_attn2 + RMS kern.")
+ALL_KERNELS = [TORCH, FUSED, FLASH1, FLASH2, FLASH2RMS]
+
+
+def is_flash(k):
+    return k in (FLASH1, FLASH2, FLASH2RMS)
+
+
+def has_rms_kernel(k):
+    return k == FLASH2RMS
+
+
+@dataclass(frozen=True)
+class KernelPerf:
+    attn_matmul_eff: float
+    softmax_bytes_per_score: float
+    norm_bytes_per_elem: float
+
+
+KERNEL_PERF = {
+    TORCH: KernelPerf(0.15, 12.0, 80.0),
+    FUSED: KernelPerf(0.22, 4.0, 80.0),
+    FLASH1: KernelPerf(0.42, 0.0, 80.0),
+    FLASH2: KernelPerf(0.65, 0.0, 80.0),
+    FLASH2RMS: KernelPerf(0.65, 0.0, 7.0),
+}
+
+
+def dense_matmul_eff(tp, mb, seq, hidden):
+    base = 0.74
+    seq_comp = math.sqrt(float(seq) / 2048.0)
+    mb_comp = math.pow(float(mb), 0.12)
+    shape = math.pow(
+        min(float(hidden) / float(tp) / 5120.0 * seq_comp * mb_comp, 1.0), 0.22)
+    return base * shape
+
+
+def kernel_available(k, heads, tp, mb):
+    if k == FUSED:
+        return (mb * heads // tp) % 4 == 0
+    return True
+
+# ---------------------------------------------------------------- topo
+
+@dataclass(frozen=True)
+class Cluster:
+    gpus: int
+    gpus_per_node: int
+
+    @staticmethod
+    def dgx_a100(nodes):
+        return Cluster(nodes * 8, 8)
+
+    def nodes(self):
+        return -(-self.gpus // self.gpus_per_node)
+
+
+@dataclass(frozen=True)
+class Topology:
+    cluster: Cluster
+    dp: int
+    pp: int
+    tp: int
+
+    @staticmethod
+    def derive(cluster, tp, pp):
+        if tp == 0 or pp == 0:
+            raise ValueError("tp/pp must be positive")
+        model_parallel = tp * pp
+        if cluster.gpus % model_parallel != 0:
+            raise ValueError("world not divisible")
+        return Topology(cluster, cluster.gpus // model_parallel, pp, tp)
+
+    def world(self):
+        return self.dp * self.pp * self.tp
+
+    def tp_crosses_node(self):
+        return self.tp > self.cluster.gpus_per_node
+
+    def pp_crosses_node(self):
+        return self.tp * self.pp > self.cluster.gpus_per_node
+
+# ---------------------------------------------------------------- layout
+
+@dataclass(frozen=True)
+class Layout:
+    tp: int
+    pp: int
+    mb: int
+    ckpt: bool
+    kernel: str
+    sp: bool
+
+    def annotation(self):
+        return f"({self.mb}, {self.tp}, {self.pp})"
+
+
+@dataclass(frozen=True)
+class Job:
+    arch: LlamaArch
+    cluster: Cluster
+    gbs: int
+
+    @staticmethod
+    def paper_gbs(arch):
+        return 512 if arch.seq >= 8192 else 2048
+
+
+@dataclass(frozen=True)
+class ValidLayout:
+    layout: Layout
+    topo: Topology
+    num_micro: int
+
+
+def validate(job, l):
+    if l.mb == 0:
+        raise ValueError("mb positive")
+    if l.kernel == FUSED and job.arch.seq > 2048:
+        raise ValueError("fused kernel max 2048 tokens")
+    if job.arch.heads % l.tp != 0:
+        raise ValueError("heads not divisible by tp")
+    if job.arch.layers % l.pp != 0:
+        raise ValueError("layers not divisible by pp")
+    topo = Topology.derive(job.cluster, l.tp, l.pp)
+    if topo.tp_crosses_node():
+        raise ValueError("tp exceeds gpus per node")
+    replica_batch = topo.dp * l.mb
+    if job.gbs % replica_batch != 0:
+        raise ValueError("gbs not divisible")
+    num_micro = job.gbs // replica_batch
+    return ValidLayout(l, topo, num_micro)
+
+
+def enumerate_layouts(job, tps, pps, mbs, ckpts, kernels, sps):
+    out = []
+    for tp in tps:
+        for pp in pps:
+            for mb in mbs:
+                for ckpt in ckpts:
+                    for kernel in kernels:
+                        for sp in sps:
+                            if ckpt and kernel == FLASH2RMS:
+                                continue
+                            l = Layout(tp, pp, mb, ckpt, kernel, sp)
+                            try:
+                                out.append(validate(job, l))
+                            except ValueError:
+                                pass
+    return out
+
+# ---------------------------------------------------------------- sim/memory
+
+ACT_TP_PART = 24.0
+ACT_SERIAL_PART = 10.0
+ACT_RMS_SAVING = 8.0
+ACT_CKPT_INPUT = 2.0
+ATTN_SCORE_BYTES = 5.0
+ACT_MB_HIGH_WATER = 0.25
+
+
+@dataclass(frozen=True)
+class MemoryBreakdown:
+    weights: float
+    grads: float
+    optimizer: float
+    activations: float
+    logits: float
+    workspace: float
+
+    def total(self):
+        return (self.weights + self.grads + self.optimizer + self.activations
+                + self.logits + self.workspace)
+
+
+def act_bytes_per_layer(job, v):
+    l = v.layout
+    a = job.arch
+    sbh = float(a.seq * l.mb * a.hidden)
+    t = float(l.tp)
+
+    if l.ckpt:
+        inp = ACT_CKPT_INPUT * sbh
+        return inp / t if l.sp else inp
+
+    serial = ACT_SERIAL_PART
+    if has_rms_kernel(l.kernel):
+        serial -= ACT_RMS_SAVING
+    serial_bytes = serial * sbh / t if l.sp else serial * sbh
+    tp_bytes = ACT_TP_PART * sbh / t
+
+    if is_flash(l.kernel):
+        score_bytes = 0.0
+    else:
+        score_bytes = ATTN_SCORE_BYTES * float(a.heads * a.seq * a.seq * l.mb) / t
+
+    high_water = 1.0 + ACT_MB_HIGH_WATER * (float(l.mb) - 1.0)
+    return (serial_bytes + tp_bytes + score_bytes) * high_water
+
+
+def per_gpu_memory(job, v, hw):
+    a = job.arch
+    l = v.layout
+    n = float(a.param_count())
+    shard = n / float(l.tp * l.pp)
+
+    weights = 2.0 * shard
+    grads = 2.0 * shard
+    optimizer = 12.0 * shard / float(v.topo.dp)
+
+    layers_per_stage = float(a.layers // l.pp)
+    in_flight = float(min(l.pp, v.num_micro))
+    activations = act_bytes_per_layer(job, v) * layers_per_stage * in_flight
+    if l.ckpt:
+        no_ckpt = ValidLayout(
+            Layout(l.tp, l.pp, l.mb, False, l.kernel, l.sp), v.topo, v.num_micro)
+        activations += act_bytes_per_layer(job, no_ckpt)
+
+    if l.pp == 1:
+        logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
+    else:
+        head_acts = act_bytes_per_layer(job, v) * layers_per_stage
+        head_logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
+        head_total = head_acts + head_logits
+        stage0_total = activations
+        if head_total > stage0_total:
+            activations = head_acts
+            logits = head_logits
+        else:
+            logits = 0.0
+
+    return MemoryBreakdown(weights, grads, optimizer, activations, logits,
+                           hw.workspace_bytes)
+
+
+def fits(job, v, hw):
+    return per_gpu_memory(job, v, hw).total() <= hw.hbm_bytes
+
+
+def model_state_bytes(job, v, hw):
+    # Mirrors rust/src/sim/memory.rs::model_state_bytes (new in this PR).
+    shard = float(job.arch.param_count()) / float(v.layout.tp * v.layout.pp)
+    return 2.0 * shard + 2.0 * shard + 12.0 * shard / float(v.topo.dp) + hw.workspace_bytes
+
+# ---------------------------------------------------------------- sim/step_time
+
+DP_EXPOSED_FRACTION = 0.35
+BWD_FACTOR = 2.0
+OPT_FIXED_S = 0.030
+PIPELINE_TAX = 0.10
+
+
+@dataclass(frozen=True)
+class StepBreakdown:
+    compute: float
+    tp_comm: float
+    pp_comm: float
+    bubble: float
+    dp_comm: float
+    optimizer: float
+
+    def total(self):
+        return (self.compute + self.tp_comm + self.pp_comm + self.bubble
+                + self.dp_comm + self.optimizer)
+
+
+def stage_micro_time(job, v, hw):
+    a = job.arch
+    l = v.layout
+    kp = KERNEL_PERF[l.kernel]
+    tokens = l.mb * a.seq
+    layers_per_stage = float(a.layers // l.pp)
+
+    dense_flops = (a.layer_fwd_flops(l.mb, a.seq)
+                   - 4.0 * float(l.mb * a.seq * a.seq) * float(a.hidden))
+    attn_flops = 4.0 * float(l.mb * a.seq * a.seq) * float(a.hidden)
+
+    t_dense = (dense_flops / float(l.tp)
+               / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden)))
+    t_attn = attn_flops / float(l.tp) / (hw.peak_matmul_flops * kp.attn_matmul_eff)
+
+    sbh = float(tokens * a.hidden)
+    norm_bytes = kp.norm_bytes_per_elem * sbh / (float(l.tp) if l.sp else 1.0)
+    softmax_bytes = (kp.softmax_bytes_per_score
+                     * float(a.heads * a.seq * a.seq * l.mb) / float(l.tp))
+    t_mem = (norm_bytes + softmax_bytes) / hw.hbm_bw + hw.launch_overhead_s * 8.0
+
+    ckpt_extra = 1.0 if l.ckpt else 0.0
+    dense_factor = 1.0 + BWD_FACTOR + ckpt_extra
+    attn_factor = 1.0 + BWD_FACTOR + ckpt_extra + (1.0 if is_flash(l.kernel) else 0.0)
+    mem_factor = 1.0 + BWD_FACTOR + ckpt_extra
+    t_stage = layers_per_stage * (t_dense * dense_factor + t_attn * attn_factor
+                                  + t_mem * mem_factor)
+
+    head_flops = a.head_fwd_flops(l.mb, a.seq)
+    t_head = (head_flops / float(l.tp)
+              / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden))
+              * (1.0 + BWD_FACTOR)
+              + 3.0 * 4.0 * float(tokens * a.vocab // l.tp) / hw.hbm_bw)
+    t_stage += t_head
+
+    tax = PIPELINE_TAX
+    t_stage *= 1.0 + tax * (1.0 - 1.0 / float(l.pp))
+
+    if l.tp > 1:
+        bytes_ = 2.0 * sbh
+        per_layer = 4.0 * allreduce_time(bytes_, l.tp, hw.nvlink_bw, hw.coll_latency_s)
+        sp_factor = 0.95 if l.sp else 1.0
+        tp_comm = layers_per_stage * per_layer * sp_factor
+    else:
+        tp_comm = 0.0
+
+    return (t_stage, tp_comm)
+
+
+def step_time(job, v, hw):
+    a = job.arch
+    l = v.layout
+    m = float(v.num_micro)
+
+    t_stage, tp_per_micro = stage_micro_time(job, v, hw)
+
+    if l.pp > 1:
+        bytes_ = 2.0 * float(l.mb * a.seq * a.hidden)
+        bw = hw.ib_bw if v.topo.pp_crosses_node() else hw.nvlink_bw
+        pp_per_micro = 2.0 * p2p_time(bytes_, bw, hw.coll_latency_s)
+    else:
+        pp_per_micro = 0.0
+
+    steady_slots = m
+    bubble_slots = float(l.pp - 1)
+
+    compute = steady_slots * t_stage
+    tp_comm = steady_slots * tp_per_micro
+    pp_comm = steady_slots * pp_per_micro
+    bubble = bubble_slots * (t_stage + tp_per_micro + pp_per_micro)
+
+    shard_bytes = 2.0 * float(a.param_count()) / float(l.tp * l.pp)
+    dp_bw = hw.ib_bw if v.topo.cluster.nodes() > 1 else hw.nvlink_bw
+    dp_comm = (allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s)
+               * DP_EXPOSED_FRACTION)
+
+    opt_elems = float(a.param_count()) / float(l.tp * l.pp) / float(v.topo.dp)
+    optimizer = (OPT_FIXED_S
+                 + 16.0 * opt_elems / hw.hbm_bw
+                 + allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s) * 0.5)
+
+    return StepBreakdown(compute, tp_comm, pp_comm, bubble, dp_comm, optimizer)
+
+# ---------------------------------------------------------------- sim/mfu
+
+def mfu(arch, gbs, world, peak, step_time_s):
+    tokens_per_second = float(gbs * arch.seq) / step_time_s
+    theoretical_peak_matmul = peak * float(world)
+    theoretical_peak_tokens = theoretical_peak_matmul / arch.model_flops_per_token()
+    return tokens_per_second / theoretical_peak_tokens
+
+
+def step_time_for_mfu(arch, gbs, world, peak, mfu_):
+    tokens = float(gbs * arch.seq)
+    return tokens * arch.model_flops_per_token() / (peak * float(world) * mfu_)
+
+
+def megatron_mfu(params, layers, hidden, seq, gbs, gpus, achieved, peak):
+    tokens = float(gbs * seq)
+    st = 8.0 * tokens * params / (float(gpus) * achieved)
+    tokens_per_second = tokens / st
+    attn_flops = 12.0 * float(layers) * float(hidden) * float(seq)
+    model_flops = 6.0 * params + attn_flops
+    theoretical_peak_tokens = peak * float(gpus) / model_flops
+    return tokens_per_second / theoretical_peak_tokens
+
+
+def llama_meta_mfu(tokens_per_sec_per_gpu, params, layers, hidden, seq, peak):
+    model_flops = 6.0 * params + 12.0 * float(layers) * float(hidden) * float(seq)
+    return tokens_per_sec_per_gpu * model_flops / peak
+
+# ---------------------------------------------------------------- sim evaluate
+
+@dataclass(frozen=True)
+class Outcome:
+    kind: str  # "ok" | "oom" | "unavail"
+    step_time_s: float = 0.0
+    mfu: float = 0.0
+    mem: Optional[MemoryBreakdown] = None
+    step: Optional[StepBreakdown] = None
+    required: float = 0.0
+    budget: float = 0.0
+
+    def mfu_opt(self):
+        return self.mfu if self.kind == "ok" else None
+
+    def step_time_opt(self):
+        return self.step_time_s if self.kind == "ok" else None
+
+    def is_oom(self):
+        return self.kind == "oom"
+
+    def status_label(self):
+        return {"ok": "ok", "oom": "OOM Error", "unavail": "Kernel unavail."}[self.kind]
+
+
+def evaluate(job, v, hw):
+    if not kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb):
+        return Outcome("unavail")
+    mem = per_gpu_memory(job, v, hw)
+    if mem.total() > hw.hbm_bytes:
+        return Outcome("oom", required=mem.total(), budget=hw.hbm_bytes)
+    step = step_time(job, v, hw)
+    t = step.total()
+    m = mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t)
+    return Outcome("ok", step_time_s=t, mfu=m, mem=mem, step=step)
+
+# ---------------------------------------------------------------- sweep presets
+
+@dataclass(frozen=True)
+class SweepPreset:
+    name: str
+    paper_table: str
+    arch: str
+    gpus: int
+    gbs: int
+    tps: tuple
+    pps: tuple
+    mbs: tuple
+    ckpts: tuple
+    kernels: tuple
+    sps: tuple
+
+    def job(self):
+        return Job(PRESETS[self.arch], Cluster.dgx_a100(self.gpus // 8), self.gbs)
+
+
+def main_presets():
+    return [
+        SweepPreset("13b-2k", "Table 4 (B.2)", "llama13b", 64, 2048,
+                    (1, 2), (1, 2), (1, 2, 4, 8), (False, True),
+                    (TORCH, FUSED, FLASH1, FLASH2, FLASH2RMS), (False,)),
+        SweepPreset("13b-8k", "Table 5 (B.3)", "llama13b-8k", 128, 512,
+                    (1, 2, 4), (1, 2, 4), (1, 2, 4), (False, True),
+                    (TORCH, FLASH1, FLASH2, FLASH2RMS), (False,)),
+        SweepPreset("30b-2k", "Table 6 (B.4)", "llama30b", 256, 2048,
+                    (1, 2, 4), (1, 2, 4), (1, 2, 4), (False, True),
+                    (FUSED, FLASH1, FLASH2, FLASH2RMS), (False,)),
+        SweepPreset("30b-8k", "Table 7 (B.5)", "llama30b-8k", 128, 512,
+                    (2, 4), (2, 4, 8, 16), (1, 2, 4), (False, True),
+                    (FLASH1, FLASH2, FLASH2RMS), (False,)),
+        SweepPreset("65b-2k", "Table 8 (B.6)", "llama65b", 128, 2048,
+                    (2, 4, 8), (2, 4, 8), (1, 2, 4), (False, True),
+                    (FLASH1, FLASH2, FLASH2RMS), (False,)),
+    ]
+
+
+def seqpar_presets():
+    def base(name, table, arch, gpus, gbs, tps, pps, mbs):
+        return SweepPreset(name, table, arch, gpus, gbs, tps, pps, mbs,
+                           (False,), (FLASH2RMS,), (False, True))
+    return [
+        base("sp-13b-2k", "Table 10 (C.2)", "llama13b", 32, 2048,
+             (1, 2), (1, 2), (1, 2, 4, 8)),
+        base("sp-13b-8k", "Table 11 (C.3)", "llama13b-8k", 64, 512,
+             (1, 2, 4, 8), (1, 2, 4), (1, 2, 4)),
+        base("sp-30b-2k", "Table 12 (C.4)", "llama30b", 64, 2048,
+             (1, 2, 4), (1, 2, 4), (1, 2, 4)),
+        base("sp-30b-8k", "Table 13 (C.5)", "llama30b-8k", 64, 512,
+             (2, 4), (2, 4, 8, 16), (1, 2, 4)),
+        base("sp-65b-2k", "Table 14 (C.6)", "llama65b", 64, 2048,
+             (2, 4, 8), (2, 4, 8), (1, 2, 4)),
+    ]
+
+
+def by_name(name):
+    for p in main_presets() + seqpar_presets():
+        if p.name == name:
+            return p
+    return None
+
+# ---------------------------------------------------------------- sweep engine
+
+@dataclass
+class Row:
+    v: ValidLayout
+    outcome: Outcome
+
+    def layout(self):
+        return self.v.layout
+
+
+@dataclass
+class SweepResult:
+    preset_name: str
+    job: Job
+    rows: List[Row]
+
+    def sorted(self):
+        def key(r):
+            if r.outcome.kind == "ok":
+                return (0, -r.outcome.mfu)
+            if r.outcome.kind == "oom":
+                return (1, 0.0)
+            return (2, 0.0)
+        return sorted(self.rows, key=key)  # stable, like Rust sort_by
+
+    def best_where(self, f):
+        best = None
+        for r in self.rows:
+            if f(r) and r.outcome.mfu_opt() is not None:
+                # Rust max_by returns the LAST maximal element.
+                if best is None or r.outcome.mfu >= best.outcome.mfu:
+                    best = r
+        return best
+
+    def best(self):
+        return self.best_where(lambda _r: True)
+
+    def count_ok(self):
+        return sum(1 for r in self.rows if r.outcome.mfu_opt() is not None)
+
+    def count_oom(self):
+        return sum(1 for r in self.rows if r.outcome.is_oom())
+
+
+def run(preset_, hw):
+    job = preset_.job()
+    layouts = enumerate_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
+                                preset_.ckpts, preset_.kernels, preset_.sps)
+    rows = [Row(v, evaluate(job, v, hw)) for v in layouts]
+    return SweepResult(preset_.name, job, rows)
+
+# ---------------------------------------------------------------- util/table
+
+def table_render(headers, rows):
+    ncols = len(headers)
+    widths = [len(h) for h in headers]
+    for row in rows:
+        for i, cell in enumerate(row[:ncols]):
+            widths[i] = max(widths[i], len(cell))
+    out = []
+
+    def line(cells):
+        s = ""
+        for i, c in enumerate(cells):
+            if i > 0:
+                s += "  "
+            s += c + " " * (widths[i] - len(c))
+        out.append(s.rstrip(" ") + "\n")
+
+    line(list(headers))
+    rule = sum(widths) + 2 * (ncols - 1)
+    out.append("-" * rule + "\n")
+    for row in rows:
+        line(row)
+    return "".join(out)
+
+
+def pct(x):
+    return f"{100.0 * x:.2f}"
+
+
+def secs(x):
+    return f"{x:.2f}"
+
+# ---------------------------------------------------------------- sweep/report
+
+def report_render(result, with_sp_column):
+    headers = ["Step Time", "MFU", "Activation", "Kernel", "MB", "TP", "PP"]
+    if with_sp_column:
+        headers.append("Seq Parallel")
+    rows = []
+    for r in result.sorted():
+        l = r.layout()
+        if r.outcome.kind == "ok":
+            st, m = secs(r.outcome.step_time_s), pct(r.outcome.mfu)
+        elif r.outcome.kind == "oom":
+            st, m = "OOM Error", ""
+        else:
+            st, m = "Kernel unavail.", ""
+        row = [st, m, "every_layer" if l.ckpt else "disabled", l.kernel,
+               str(l.mb), str(l.tp), str(l.pp)]
+        if with_sp_column:
+            row.append("True" if l.sp else "False")
+        rows.append(row)
+    out = (f"# {result.preset_name} — {result.job.arch.name} on "
+           f"{result.job.cluster.gpus} GPUs, GBS {result.job.gbs} "
+           f"(reproduces {result.preset_name})\n")
+    out += table_render(headers, rows)
+    unavail = len(result.rows) - result.count_ok() - result.count_oom()
+    out += (f"\n{result.count_ok()} runnable, {result.count_oom()} OOM, "
+            f"{unavail} kernel-unavailable of {len(result.rows)} configs\n")
+    return out
+
+# ---------------------------------------------------------------- sweep/table2
+
+def table2_rows(hw):
+    out = []
+    paper_ours = [
+        ("sp-13b-2k", "plx LLAMA 13B (ours)", 0.7057),
+        ("sp-13b-8k", "plx LLAMA 13B 8k (ours)", 0.6278),
+        ("sp-30b-2k", "plx LLAMA 30B (ours)", 0.6198),
+        ("sp-30b-8k", "plx LLAMA 30B 8k (ours)", 0.6022),
+        ("sp-65b-2k", "plx LLAMA 65B (ours)", 0.5962),
+    ]
+    for preset_name, label, paper in paper_ours:
+        p = next(q for q in seqpar_presets() if q.name == preset_name)
+        r = run(p, hw)
+        best = r.best()
+        if best is not None:
+            out.append((label, r.job.cluster.gpus, r.job.arch.seq, r.job.gbs,
+                        best.outcome.mfu, paper))
+
+    peak = 312e12
+    out.append(("MPT 13B", 64, 2048, 2048, 0.525, 0.525))
+    out.append(("Megatron-LM 18B†", 256, 2048, 1024,
+                megatron_mfu(18.4e9, 40, 6144, 2048, 1024, 256, 135e12, peak), 0.3424))
+    out.append(("MPT 13B 8k", 8, 8192, 120, 0.528, 0.528))
+    out.append(("MPT 30B", 64, 2048, 3072, 0.529, 0.529))
+    out.append(("Megatron-DeepSpeed 22B", 8, 2048, 4, 0.415, 0.415))
+    out.append(("Megatron-LM 39B†", 512, 2048, 1536,
+                megatron_mfu(39.1e9, 48, 8192, 2048, 1536, 512, 138e12, peak), 0.3456))
+    out.append(("MPT 30B 8k", 8, 8192, 168, 0.426, 0.426))
+    out.append(("MPT 70B", 64, 2048, 2048, 0.533, 0.533))
+    out.append(("LLAMA 65B by Meta†", 2048, 2048, 2048,
+                llama_meta_mfu(380.0, 65.2e9, 80, 8192, 2048, peak), 0.494))
+    out.append(("Megatron-LM 76B†", 1024, 2048, 1792,
+                megatron_mfu(76.1e9, 60, 10240, 2048, 1792, 1024, 140e12, peak), 0.3476))
+    return out
+
+
+def table2_render(hw):
+    rows = table2_rows(hw)
+    cells = [[system, str(gpus), str(seq), str(gbs), pct(m), pct(paper)]
+             for (system, gpus, seq, gbs, m, paper) in rows]
+    return ("# Table 2 — end-to-end training efficiency "
+            "(† = recomputed per Appendix A)\n"
+            + table_render(["System", "GPUs", "Seq Len", "Batch",
+                            "MFU (sim/derived)", "MFU (paper)"], cells))
+
+# ---------------------------------------------------------------- figures
+
+@dataclass
+class Point:
+    model: str
+    series: str
+    annotation: str
+    mfu: Optional[float]
+
+
+def best_point(r, series, f):
+    row = r.best_where(f)
+    if row is not None:
+        return Point(r.preset_name, series, row.layout().annotation(),
+                     row.outcome.mfu_opt())
+    return Point(r.preset_name, series, "—", None)
+
+
+def figure1(hw):
+    points = []
+    for p in main_presets():
+        r = run(p, hw)
+        for k in ALL_KERNELS:
+            if k not in p.kernels:
+                continue
+            points.append(best_point(r, k, lambda row, k=k: row.layout().kernel == k))
+    return points
+
+
+def figure2(hw):
+    points = []
+    for p in main_presets():
+        r = run(p, hw)
+        no_rms = lambda row: row.layout().kernel != FLASH2RMS
+        points.append(best_point(r, "no checkpointing",
+                                 lambda row: no_rms(row) and not row.layout().ckpt))
+        points.append(best_point(r, "every layer",
+                                 lambda row: no_rms(row) and row.layout().ckpt))
+    return points
+
+
+def figure3(hw):
+    points = []
+    for p in main_presets():
+        r = run(p, hw)
+        for mb in p.mbs:
+            points.append(best_point(
+                r, f"mb={mb}",
+                lambda row, mb=mb: row.layout().mb == mb
+                and row.layout().kernel != FLASH2RMS))
+    return points
+
+
+def figure4(hw):
+    points = []
+    for p in main_presets():
+        if p.name in ("13b-2k", "30b-8k"):
+            continue
+        r = run(p, hw)
+        for tp in p.tps:
+            for pp in p.pps:
+                points.append(best_point(
+                    r, f"tp{tp}/pp{pp}",
+                    lambda row, tp=tp, pp=pp: row.layout().tp == tp
+                    and row.layout().pp == pp and row.layout().mb == 1
+                    and not row.layout().ckpt
+                    and row.layout().kernel == FLASH2RMS))
+    return points
+
+
+def figure5(hw):
+    points = []
+    for p in seqpar_presets():
+        r = run(p, hw)
+        points.append(best_point(r, "sequence parallel", lambda row: row.layout().sp))
+        points.append(best_point(r, "no sequence parallel",
+                                 lambda row: not row.layout().sp))
+    return points
+
+
+def table3(hw):
+    names = []
+    for p in seqpar_presets():
+        r = run(p, hw)
+        b = r.best()
+        if b is not None and b.outcome.kind == "ok":
+            names.append(r.job.arch.name)
+    return names
+
+# ---------------------------------------------------------------- planner
+
+@dataclass(frozen=True)
+class Plan:
+    v: ValidLayout
+    predicted_mfu: float
+    predicted_step_s: float
+
+
+def mp_candidates(max_degree):
+    out = []
+    degree = 1
+    while degree <= max_degree:
+        pairs = []
+        i = 0
+        while (1 << i) <= degree:
+            tp = 1 << i
+            if degree % tp == 0:
+                pairs.append((tp, degree // tp))
+            i += 1
+        pairs.sort(key=lambda x: x[0])
+        out.extend(pairs)
+        degree *= 2
+    return out
+
+
+def plan_by_rules(job, hw):
+    sp_default = job.arch.param_count() > 30_000_000_000 or job.arch.seq > 2048
+
+    for mb in [1, 2, 4, 8]:
+        feasible = []
+        current_degree = 0
+        for (tp, pp) in mp_candidates(min(job.cluster.gpus, 64)):
+            degree = tp * pp
+            if feasible and degree > current_degree:
+                break
+            for sp in ([True, False] if sp_default else [False, True]):
+                l = Layout(tp, pp, mb, False, FLASH2RMS, sp)
+                try:
+                    v = validate(job, l)
+                except ValueError:
+                    continue
+                if not fits(job, v, hw):
+                    continue
+                o = evaluate(job, v, hw)
+                if o.kind == "ok":
+                    feasible.append(Plan(v, o.mfu, o.step_time_s))
+                    current_degree = degree
+        best = None
+        for pl in feasible:
+            if best is None or pl.predicted_mfu >= best.predicted_mfu:
+                best = pl  # max_by: last max wins
+        if best is not None:
+            return best
+    for (tp, pp) in mp_candidates(min(job.cluster.gpus, 64)):
+        l = Layout(tp, pp, 1, True, FLASH2, sp_default)
+        try:
+            v = validate(job, l)
+        except ValueError:
+            continue
+        o = evaluate(job, v, hw)
+        if o.kind == "ok":
+            return Plan(v, o.mfu, o.step_time_s)
+    raise ValueError(f"no feasible layout for {job.arch.name}")
+
+
+def plan_exhaustive(job, hw):
+    tps = [1 << i for i in range(4)]
+    pps = [1 << i for i in range(6)]
+    layouts = enumerate_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
+                                ALL_KERNELS, [False, True])
+    best = None
+    for v in layouts:
+        o = evaluate(job, v, hw)
+        if o.kind == "ok":
+            if best is None or o.mfu > best.predicted_mfu:  # strict: first wins
+                best = Plan(v, o.mfu, o.step_time_s)
+    if best is None:
+        raise ValueError("no feasible layout")
+    return best
