@@ -60,7 +60,10 @@ fn main() {
     println!("{:<14} {:>4} (mb,tp,pp,ck,sp) {:<24} {:>7} {:>7} {:>6}", "model", "gpus", "kernel", "paper", "sim", "delta");
     for a in A {
         let job = Job::new(preset(a.arch).unwrap(), Cluster::dgx_a100(a.gpus / 8), a.gbs);
-        let l = Layout { tp: a.tp, pp: a.pp, mb: a.mb, ckpt: a.ckpt, kernel: a.kernel, sp: a.sp };
+        let l = Layout {
+            tp: a.tp, pp: a.pp, mb: a.mb, ckpt: a.ckpt, kernel: a.kernel, sp: a.sp,
+            sched: plx::layout::Schedule::OneF1B,
+        };
         let line = format!(
             "{:<14} {:>4} ({},{},{},{},{}) {:<24}",
             a.arch, a.gpus, a.mb, a.tp, a.pp, a.ckpt as u8, a.sp as u8, a.kernel.label()

@@ -30,7 +30,10 @@ fn main() {
     let mut rows = Vec::new();
     for tp in [1usize, 2, 4, 8] {
         for pp in [1usize, 2, 4, 8] {
-            let l = Layout { tp, pp, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false };
+            let l = Layout {
+                tp, pp, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false,
+                sched: plx::layout::Schedule::OneF1B,
+            };
             let Ok(v) = validate(&job, &l) else { continue };
             let mem = memory::per_gpu_memory(&job, &v, &A100);
             let verdict = match evaluate(&job, &v, &A100) {

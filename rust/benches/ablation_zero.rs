@@ -18,7 +18,8 @@ fn main() {
     );
     for p in main_presets() {
         let job = p.job();
-        let layouts = enumerate(&job, &p.tps, &p.pps, &p.mbs, &p.ckpts, &p.kernels, &p.sps);
+        let layouts =
+            enumerate(&job, &p.tps, &p.pps, &p.mbs, &p.ckpts, &p.kernels, &p.sps, &p.scheds);
         let count = |stage| {
             layouts
                 .iter()

@@ -92,6 +92,7 @@ fn main() {
         &[false, true],
         &Kernel::ALL,
         &[false, true],
+        &[plx::layout::Schedule::OneF1B],
     );
     println!("\nfixed layout set: {} layouts", layouts.len());
     let m = bench("evaluate() over 65B layout set", 3, 50, || {

@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::TrainerConfig;
+use crate::coordinator::{Schedule, TrainerConfig};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -28,6 +28,9 @@ pub struct RunConfig {
     pub noise: f64,
     pub log_every: usize,
     pub artifacts: PathBuf,
+    /// Pipeline schedule (`1f1b`, `gpipe`; `interleaved:<v>` parses but
+    /// the PJRT trainer rejects it at launch).
+    pub schedule: Schedule,
 }
 
 impl Default for RunConfig {
@@ -45,6 +48,7 @@ impl Default for RunConfig {
             noise: 0.05,
             log_every: 1,
             artifacts: crate::artifacts_root(),
+            schedule: Schedule::OneF1B,
         }
     }
 }
@@ -76,6 +80,11 @@ impl RunConfig {
                 "noise" => self.noise = val.as_f64().context("noise")?,
                 "log_every" => self.log_every = val.as_usize().context("log_every")?,
                 "artifacts" => self.artifacts = PathBuf::from(val.as_str().context("artifacts")?),
+                "schedule" => {
+                    let s = val.as_str().context("schedule")?;
+                    self.schedule = Schedule::parse(s)
+                        .with_context(|| format!("unknown schedule '{s}'"))?;
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -105,6 +114,10 @@ impl RunConfig {
             .map_err(anyhow::Error::msg)?;
         if let Some(a) = args.get("artifacts") {
             self.artifacts = PathBuf::from(a);
+        }
+        if let Some(s) = args.get("schedule") {
+            self.schedule = Schedule::parse(s)
+                .with_context(|| format!("unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)"))?;
         }
         Ok(())
     }
@@ -138,7 +151,7 @@ impl RunConfig {
             artifacts: self.artifacts.clone(),
             save_checkpoint: None,
             resume_from: None,
-            schedule: Default::default(),
+            schedule: self.schedule,
         }
     }
 }
@@ -151,7 +164,7 @@ mod tests {
     const SPEC: Spec = Spec {
         options: &[
             "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed", "noise",
-            "log-every", "artifacts", "config",
+            "log-every", "artifacts", "config", "schedule",
         ],
         flags: &[],
     };
@@ -212,5 +225,25 @@ mod tests {
         assert_eq!(t.steps, 9);
         assert_eq!(t.dp, 2);
         assert_eq!(t.global_batch(), 2 * c.mb * c.num_micro);
+        assert_eq!(t.schedule, Schedule::OneF1B);
+    }
+
+    #[test]
+    fn schedule_parses_from_json_and_cli() {
+        let dir = std::env::temp_dir().join("plx_cfg_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sched.json");
+        std::fs::write(&p, r#"{"schedule": "gpipe"}"#).unwrap();
+        let mut c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.schedule, Schedule::GPipe);
+        // CLI override wins, including the interleaved spelling.
+        let argv: Vec<String> =
+            ["--schedule", "interleaved:2"].iter().map(|s| s.to_string()).collect();
+        c.apply_args(&Args::parse(&argv, &SPEC).unwrap()).unwrap();
+        assert_eq!(c.schedule, Schedule::Interleaved(2));
+        assert_eq!(c.to_trainer().schedule, Schedule::Interleaved(2));
+        // Unknown spellings are rejected.
+        std::fs::write(&p, r#"{"schedule": "2f2b"}"#).unwrap();
+        assert!(RunConfig::from_file(&p).is_err());
     }
 }

@@ -1,19 +1,22 @@
 //! L3 coordinator (S11–S15): the paper's distributed-training runtime.
 //!
 //! * [`collective`] — deterministic in-process collectives (NCCL stand-in)
-//! * [`pipeline`] — 1F1B / GPipe schedule generators + invariants
 //! * [`zero`] — ZeRO-1 sharded AdamW over the AOT `adamw_chunk` artifact
 //! * [`init`] — deterministic flat parameter initialization
 //! * [`trainer`] — DP×PP training over PJRT CPU worker threads
+//!
+//! Pipeline schedule generation lives in [`crate::sim::schedule`] (shared
+//! with the analytic simulator — one op-stream implementation for both);
+//! the historical `coordinator::{one_f1b, gpipe, Op, ...}` names are
+//! re-exported here.
 
 pub mod checkpoint;
 pub mod collective;
 pub mod init;
-pub mod pipeline;
 pub mod trainer;
 pub mod zero;
 
+pub use crate::sim::schedule::{gpipe, one_f1b, peak_in_flight, simulate_slots, Op, Schedule};
 pub use collective::Group;
-pub use pipeline::{gpipe, one_f1b, peak_in_flight, simulate_slots, Op};
 pub use trainer::{train, TrainReport, TrainerConfig};
 pub use zero::Zero1;

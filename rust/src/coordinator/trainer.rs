@@ -9,10 +9,16 @@
 //!   buffers between stages `(d, p) -> (d, p±1)`;
 //! * gradient reduction + ZeRO-1: deterministic collectives over the
 //!   per-stage DP [`Group`]s;
-//! * schedule: true 1F1B from [`pipeline::one_f1b`] (backward recomputes
+//! * schedule: true 1F1B from [`crate::sim::schedule::one_f1b`] — the
+//!   same generator the analytic simulator prices (backward recomputes
 //!   the stage forward, so only stage inputs are kept in flight);
 //! * head-stage forward is a store-only no-op: the loss comes out of the
 //!   backward artifact, avoiding a redundant forward execution.
+//!
+//! Interleaved 1F1B is representable in [`Schedule`] but rejected here:
+//! the AOT artifacts compile one contiguous chunk per rank, so virtual
+//! stages have nothing to execute (the analytic simulator prices them;
+//! see `sim::schedule`).
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -23,20 +29,13 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::collective::Group;
 use crate::coordinator::init::init_flat_params;
-use crate::coordinator::pipeline::{gpipe, one_f1b, Op};
 use crate::coordinator::zero::Zero1;
 use crate::data::SyntheticCorpus;
 use crate::metrics::{StepRecord, TrainLog};
 use crate::runtime::{Engine, FwdOut, Manifest, StageInput, StageRuntime};
+use crate::sim::schedule::{gpipe, one_f1b, Op};
 
-/// Pipeline schedule flavour (S21: GPipe is the naive baseline — same
-/// gradients by construction, larger activation footprint and bubble).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum Schedule {
-    #[default]
-    OneF1B,
-    GPipe,
-}
+pub use crate::sim::schedule::Schedule;
 
 /// Everything needed to launch a training run.
 #[derive(Debug, Clone)]
@@ -99,6 +98,12 @@ enum Up {
 
 /// Run distributed training per the config. Blocks until finished.
 pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
+    if let Schedule::Interleaved(_) = cfg.schedule {
+        bail!(
+            "interleaved schedule needs one artifact chunk per virtual stage; \
+             the PJRT trainer compiles one chunk per rank (use 1f1b or gpipe)"
+        );
+    }
     let manifest = Manifest::locate(&cfg.artifacts, &cfg.model, cfg.pp, cfg.mb)?;
     if manifest.pp != cfg.pp || manifest.mb != cfg.mb {
         bail!("manifest pp/mb mismatch");
@@ -281,6 +286,7 @@ fn worker(
     let ops = match cfg.schedule {
         Schedule::OneF1B => one_f1b(p, cfg.pp, m),
         Schedule::GPipe => gpipe(p, cfg.pp, m),
+        Schedule::Interleaved(_) => bail!("interleaved schedule rejected at launch"),
     };
     let is_head = info.has_head;
     let is_embed = info.has_embed;
@@ -298,7 +304,7 @@ fn worker(
 
         for op in &ops {
             match *op {
-                Op::Fwd(i) => {
+                Op::Fwd { micro: i, .. } => {
                     if is_embed {
                         // Tokens regenerated locally; stash for backward.
                         if !is_head {
@@ -345,7 +351,7 @@ fn worker(
                         }
                     }
                 }
-                Op::Bwd(i) => {
+                Op::Bwd { micro: i, .. } => {
                     let stored = saved[i].take().ok_or_else(|| anyhow!("bwd before fwd"))?;
                     let out = if is_head {
                         let batch = corpus.batch(d, step, i, cfg.mb, manifest.model.seq);

@@ -2,14 +2,18 @@
 //!
 //! A [`Layout`] is one point of Table 1's Cartesian product: (TP, PP,
 //! micro-batch size, activation checkpointing, kernel implementation,
-//! sequence parallelism). [`validate`] encodes the feasibility rules the
-//! paper applies implicitly (head divisibility, layer divisibility, batch
-//! arithmetic, node-local tensor parallelism).
+//! sequence parallelism, pipeline schedule). [`validate`] encodes the
+//! feasibility rules the paper applies implicitly (head divisibility,
+//! layer divisibility, batch arithmetic, node-local tensor parallelism)
+//! plus the schedule rules (virtual stages divide `layers/pp`,
+//! interleaving needs `num_micro % pp == 0`).
 
 use anyhow::{bail, Result};
 
 use crate::model::LlamaArch;
 use crate::topo::{Cluster, Topology};
+
+pub use crate::sim::schedule::Schedule;
 
 /// Attention/kernel implementation (Figure 1's x-axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -74,12 +78,18 @@ pub struct Layout {
     pub kernel: Kernel,
     /// Sequence parallelism (Korthikanti et al.) — only effective with tp>1.
     pub sp: bool,
+    /// Pipeline schedule (1F1B / GPipe / interleaved-1F1B with v chunks).
+    pub sched: Schedule,
 }
 
 impl Layout {
-    /// Paper-style annotation `(mb, tp, pp)` used in Figures 1–5.
+    /// Paper-style annotation `(mb, tp, pp)` used in Figures 1–5; the
+    /// schedule is appended only when it departs from the paper's 1F1B.
     pub fn annotation(&self) -> String {
-        format!("({}, {}, {})", self.mb, self.tp, self.pp)
+        match self.sched {
+            Schedule::OneF1B => format!("({}, {}, {})", self.mb, self.tp, self.pp),
+            s => format!("({}, {}, {}, {})", self.mb, self.tp, self.pp, s.label()),
+        }
     }
 }
 
@@ -151,6 +161,26 @@ pub fn validate(job: &Job, l: &Layout) -> Result<ValidLayout> {
         // Legal but a no-op; keep it representable (Figure 5 includes
         // tp=1 rows where SP "shows no effect").
     }
+    if let Schedule::Interleaved(vst) = l.sched {
+        if vst < 2 {
+            bail!("interleaved schedule needs v >= 2 virtual stages, got {vst}");
+        }
+        if l.pp < 2 {
+            bail!("interleaved schedule needs pp >= 2");
+        }
+        if (job.arch.layers / l.pp) % vst != 0 {
+            bail!(
+                "layers/pp = {} not divisible by virtual stages {vst}",
+                job.arch.layers / l.pp
+            );
+        }
+        if num_micro % l.pp != 0 {
+            bail!(
+                "interleaved schedule needs num_micro ({num_micro}) divisible by pp ({})",
+                l.pp
+            );
+        }
+    }
     Ok(ValidLayout {
         layout: *l,
         topo,
@@ -159,7 +189,9 @@ pub fn validate(job: &Job, l: &Layout) -> Result<ValidLayout> {
 }
 
 /// Enumerate the Cartesian product of the given option sets, keeping only
-/// layouts valid for `job` (Table 1 semantics).
+/// layouts valid for `job` (Table 1 semantics, plus the schedule
+/// dimension this reproduction adds).
+#[allow(clippy::too_many_arguments)]
 pub fn enumerate(
     job: &Job,
     tps: &[usize],
@@ -168,6 +200,7 @@ pub fn enumerate(
     ckpts: &[bool],
     kernels: &[Kernel],
     sps: &[bool],
+    scheds: &[Schedule],
 ) -> Vec<ValidLayout> {
     let mut out = Vec::new();
     for &tp in tps {
@@ -176,15 +209,17 @@ pub fn enumerate(
                 for &ckpt in ckpts {
                     for &kernel in kernels {
                         for &sp in sps {
-                            // Paper: RMSNorm kernel + checkpointing errored
-                            // (Table 1 caption) — that combination is
-                            // omitted from all sweeps.
-                            if ckpt && kernel == Kernel::Flash2Rms {
-                                continue;
-                            }
-                            let l = Layout { tp, pp, mb, ckpt, kernel, sp };
-                            if let Ok(v) = validate(job, &l) {
-                                out.push(v);
+                            for &sched in scheds {
+                                // Paper: RMSNorm kernel + checkpointing
+                                // errored (Table 1 caption) — that
+                                // combination is omitted from all sweeps.
+                                if ckpt && kernel == Kernel::Flash2Rms {
+                                    continue;
+                                }
+                                let l = Layout { tp, pp, mb, ckpt, kernel, sp, sched };
+                                if let Ok(v) = validate(job, &l) {
+                                    out.push(v);
+                                }
                             }
                         }
                     }
@@ -208,7 +243,10 @@ mod tests {
     #[test]
     fn paper_example_derivation() {
         let j = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(16), 2048);
-        let l = Layout { tp: 4, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        let l = Layout {
+            tp: 4, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false,
+            sched: Schedule::OneF1B,
+        };
         let v = validate(&j, &l).unwrap();
         assert_eq!(v.topo.dp, 16);
         assert_eq!(v.num_micro, 2048 / 16);
@@ -218,7 +256,10 @@ mod tests {
     fn heads_divisibility_rejects_tp8_for_30b() {
         // §4.2: 52 heads not divisible by 8.
         let j = Job::new(preset("llama30b").unwrap(), Cluster::dgx_a100(32), 2048);
-        let l = Layout { tp: 8, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        let l = Layout {
+            tp: 8, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false,
+            sched: Schedule::OneF1B,
+        };
         assert!(validate(&j, &l).is_err());
         let l4 = Layout { tp: 4, ..l };
         assert!(validate(&j, &l4).is_ok());
@@ -227,7 +268,10 @@ mod tests {
     #[test]
     fn fused_kernel_rejects_8k() {
         let j = Job::new(preset("llama13b-8k").unwrap(), Cluster::dgx_a100(16), 512);
-        let l = Layout { tp: 1, pp: 1, mb: 1, ckpt: true, kernel: Kernel::Fused, sp: false };
+        let l = Layout {
+            tp: 1, pp: 1, mb: 1, ckpt: true, kernel: Kernel::Fused, sp: false,
+            sched: Schedule::OneF1B,
+        };
         assert!(validate(&j, &l).is_err());
     }
 
@@ -235,8 +279,33 @@ mod tests {
     fn gbs_divisibility() {
         let j = job13b(); // 64 GPUs, gbs 2048
         // dp = 64, mb=3 -> 192 does not divide 2048.
-        let l = Layout { tp: 1, pp: 1, mb: 3, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        let l = Layout {
+            tp: 1, pp: 1, mb: 3, ckpt: false, kernel: Kernel::Flash2, sp: false,
+            sched: Schedule::OneF1B,
+        };
         assert!(validate(&j, &l).is_err());
+    }
+
+    #[test]
+    fn schedule_validation_rules() {
+        let j = job13b(); // llama13b: 40 layers, 64 GPUs
+        let base = Layout {
+            tp: 1, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false,
+            sched: Schedule::Interleaved(2),
+        };
+        // 40/2 = 20 layers per stage: v=2,4,5 divide; v=3 does not.
+        assert!(validate(&j, &base).is_ok());
+        assert!(validate(&j, &Layout { sched: Schedule::Interleaved(4), ..base }).is_ok());
+        assert!(validate(&j, &Layout { sched: Schedule::Interleaved(3), ..base }).is_err());
+        // v < 2 and pp < 2 are rejected.
+        assert!(validate(&j, &Layout { sched: Schedule::Interleaved(1), ..base }).is_err());
+        assert!(validate(&j, &Layout { pp: 1, ..base }).is_err());
+        // GPipe carries no extra constraints.
+        assert!(validate(&j, &Layout { sched: Schedule::GPipe, ..base }).is_ok());
+        // num_micro % pp: 64 GPUs, tp1 pp2 mb8 -> dp=32, m = 2048/256 = 8,
+        // divisible; shrink gbs to force m=1 (not divisible by pp=2).
+        let j1 = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 64);
+        assert!(validate(&j1, &Layout { mb: 2, ..base }).is_err());
     }
 
     #[test]
@@ -252,6 +321,7 @@ mod tests {
             &[true, false],
             &[Kernel::Flash2, Kernel::Flash2Rms],
             &[false],
+            &[Schedule::OneF1B],
         );
         // All combinations are arithmetically valid on 64 GPUs; ckpt+RMS
         // combinations are omitted: 2*2*4 * (2*2 - 1) = 48.
@@ -273,6 +343,7 @@ mod tests {
                 &[false, true],
                 &Kernel::ALL,
                 &[false, true],
+                &[Schedule::OneF1B, Schedule::Interleaved(2)],
             );
             for vl in &v {
                 // world partitioning exact
@@ -282,6 +353,12 @@ mod tests {
                 // divisibility rules hold
                 assert_eq!(arch.heads % vl.layout.tp, 0);
                 assert_eq!(arch.layers % vl.layout.pp, 0);
+                // schedule rules hold
+                if let Schedule::Interleaved(vst) = vl.layout.sched {
+                    assert!(vl.layout.pp >= 2 && vst >= 2);
+                    assert_eq!((arch.layers / vl.layout.pp) % vst, 0);
+                    assert_eq!(vl.num_micro % vl.layout.pp, 0);
+                }
                 // excluded combination never appears
                 assert!(!(vl.layout.ckpt && vl.layout.kernel == Kernel::Flash2Rms));
             }

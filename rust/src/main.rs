@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use plx::config::RunConfig;
 use plx::coordinator::train;
-use plx::layout::{validate, Job, Kernel, Layout};
+use plx::layout::{validate, Job, Kernel, Layout, Schedule};
 use plx::model::arch::{preset, PRESETS};
 use plx::planner::{plan_by_rules, plan_exhaustive};
 use plx::sim::{evaluate, memory, Outcome, A100};
@@ -30,7 +30,7 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
-        "loss-csv", "save", "resume", "jobs",
+        "loss-csv", "save", "resume", "jobs", "schedule",
     ],
     flags: &["all", "ckpt", "sp", "exhaustive", "help", "list"],
 };
@@ -75,13 +75,16 @@ plx — Parallelization Layout eXplorer
 USAGE:
   plx train  [--config cfg.json] [--model M --pp P --mb B --dp D
               --num-micro K --steps N --lr F --seed S --loss-csv FILE
-              --save ckpt.plx --resume ckpt.plx]
+              --save ckpt.plx --resume ckpt.plx
+              --schedule {1f1b,gpipe}]
   plx sweep  --preset NAME [--csv FILE] | --all | --list
+             [--schedule LIST]   e.g. --schedule 1f1b,interleaved:2
   plx table  N            N in {2, 3, 4..8, 10..14}
   plx figure N            N in {1..5}
   plx plan   --model M --nodes K [--gbs G] [--exhaustive]
   plx predict-mem --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
                   [--sp] [--kernel flash2rms]
+                  [--schedule {1f1b,gpipe,interleaved:<v>}]
   plx presets
 
 OPTIONS (all sweep/table/figure/plan commands):
@@ -129,6 +132,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--schedule` value: a single schedule or a comma-separated
+/// list (`1f1b,interleaved:2`).
+fn parse_schedules(s: &str) -> Result<Vec<Schedule>> {
+    s.split(',')
+        .map(|tok| {
+            Schedule::parse(tok.trim()).with_context(|| {
+                format!("unknown schedule '{tok}' (1f1b, gpipe, interleaved:<v>)")
+            })
+        })
+        .collect()
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("list") {
         for p in main_presets().into_iter().chain(seqpar_presets()) {
@@ -139,7 +154,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let presets = if args.flag("all") {
+    let mut presets = if args.flag("all") {
         main_presets().into_iter().chain(seqpar_presets()).collect()
     } else {
         let name = args
@@ -147,6 +162,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .context("need --preset NAME, --all, or --list")?;
         vec![by_name(name).with_context(|| format!("unknown preset '{name}'"))?]
     };
+    // `--schedule` replaces the preset's schedule set (the paper presets
+    // pin 1F1B); invalid layouts for a schedule are dropped by `validate`
+    // exactly like every other dimension.
+    if let Some(s) = args.get("schedule") {
+        let scheds = parse_schedules(s)?;
+        for p in &mut presets {
+            p.scheds = scheds.clone();
+        }
+    }
     for p in presets {
         let result = plx::sweep::run(&p, &A100);
         let with_sp = p.sps.len() > 1;
@@ -221,8 +245,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
         job.arch.name, job.cluster.gpus, job.gbs
     );
     println!(
-        "  mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={}",
-        l.mb, l.tp, l.pp, plan.v.topo.dp, l.ckpt, l.kernel.label(), l.sp
+        "  mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={} sched={}",
+        l.mb, l.tp, l.pp, plan.v.topo.dp, l.ckpt, l.kernel.label(), l.sp, l.sched.label()
     );
     println!(
         "  predicted: {:.2}% MFU, {:.2}s/step, {} micro-batches/step",
@@ -239,6 +263,11 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
         Some(k) => Kernel::parse(k).with_context(|| format!("unknown kernel '{k}'"))?,
         None => Kernel::Flash2Rms,
     };
+    let sched = match args.get("schedule") {
+        Some(s) => Schedule::parse(s)
+            .with_context(|| format!("unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)"))?,
+        None => Schedule::OneF1B,
+    };
     let l = Layout {
         tp: args.get_usize("tp", 1).map_err(anyhow::Error::msg)?,
         pp: args.get_usize("pp", 1).map_err(anyhow::Error::msg)?,
@@ -246,6 +275,7 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
         ckpt: args.flag("ckpt"),
         kernel,
         sp: args.flag("sp"),
+        sched,
     };
     let v = validate(&job, &l)?;
     let mem = memory::per_gpu_memory(&job, &v, &A100);

@@ -44,6 +44,9 @@ struct Key {
     gbs: usize,
     // Hardware constants, by bit pattern (f64 is not Hash/Eq).
     hw_bits: [u64; 8],
+    // The full layout, including the pipeline-schedule dimension (the
+    // `sched` field hashes with the rest — 1F1B, GPipe, and every
+    // interleaved v are distinct keys).
     layout: Layout,
 }
 
@@ -146,9 +149,29 @@ mod tests {
 
     fn sample() -> (Job, ValidLayout) {
         let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
-        let l = Layout { tp: 2, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false };
+        let l = Layout {
+            tp: 2, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false,
+            sched: crate::layout::Schedule::OneF1B,
+        };
         let v = validate(&job, &l).unwrap();
         (job, v)
+    }
+
+    #[test]
+    fn distinct_schedule_is_distinct_key() {
+        use crate::layout::Schedule;
+        let (job, v) = sample();
+        let vi = validate(
+            &job,
+            &Layout { sched: Schedule::Interleaved(2), ..v.layout },
+        )
+        .unwrap();
+        let plain = evaluate_cached(&job, &v, &A100);
+        let inter = evaluate_cached(&job, &vi, &A100);
+        // Interleaving shrinks the bubble: step times must differ, and the
+        // cache must not conflate the two layouts.
+        assert_ne!(plain.step_time(), inter.step_time());
+        assert_eq!(inter, evaluate(&job, &vi, &A100));
     }
 
     #[test]

@@ -3,13 +3,17 @@
 //! Accounting follows Korthikanti et al. 2022 ("Reducing Activation
 //! Recomputation in Large Transformer Models") adapted to the paper's
 //! setup: bf16 weights+grads, ZeRO-1 fp32 optimizer states sharded over
-//! DP, 1F1B in-flight activation multiplicity, FlashAttention's removal of
-//! the O(s²) score matrix, the RMSNorm kernel's removal of norm
+//! DP, schedule-derived in-flight activation multiplicity (the peak of
+//! the *actual* op stream from `sim::schedule`, not a hardcoded 1F1B
+//! bound — so GPipe's `m`-deep and interleaved-1F1B's deeper-than-`pp`
+//! footprints fall out automatically), FlashAttention's removal of the
+//! O(s²) score matrix, the RMSNorm kernel's removal of norm
 //! intermediates, and sequence parallelism dividing the un-tensor-parallel
 //! activations by `tp`.
 
 use crate::layout::{Job, ValidLayout};
 use crate::sim::cluster::Hardware;
+use crate::sim::schedule;
 
 /// Byte-level breakdown of one GPU's memory at peak.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -78,8 +82,12 @@ pub fn act_bytes_per_layer(job: &Job, v: &ValidLayout) -> f64 {
 
 /// Peak per-GPU memory for a validated layout.
 ///
-/// The peak lives on pipeline stage 0, which in 1F1B holds
-/// `min(pp, num_micro)` micro-batches of activations for its layer chunk.
+/// The activation peak lives on pipeline stage 0; its in-flight
+/// multiplicity is the [`schedule::peak_in_flight`] of the stage's
+/// *actual* op stream, in units of one model chunk (`layers/(pp·v)`
+/// layers). For plain 1F1B that reproduces the classic
+/// `min(pp, num_micro)` stage bound; GPipe holds all `m`; interleaved
+/// 1F1B holds more (smaller) chunks than plain.
 pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakdown {
     let a = &job.arch;
     let l = &v.layout;
@@ -90,9 +98,11 @@ pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakd
     let grads = 2.0 * shard; // bf16 accumulation buffers
     let optimizer = 12.0 * shard / v.topo.dp as f64; // ZeRO-1: fp32 master + m + v
 
-    let layers_per_stage = (a.layers / l.pp) as f64;
-    let in_flight = l.pp.min(v.num_micro) as f64;
-    let mut activations = act_bytes_per_layer(job, v) * layers_per_stage * in_flight;
+    let vst = l.sched.vstages();
+    let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
+    let in_flight =
+        schedule::peak_in_flight(&schedule::ops(l.sched, 0, l.pp, v.num_micro)) as f64;
+    let mut activations = act_bytes_per_layer(job, v) * layers_per_chunk * in_flight;
     if l.ckpt {
         // Recompute working set: one layer's worth of full activations.
         let full = {
@@ -109,9 +119,12 @@ pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakd
         2.0 * 4.0 * (l.mb * a.seq * a.vocab) as f64 / l.tp as f64
     } else {
         // Stage 0 (embed) is the memory peak for activations; the head
-        // stage holds logits but fewer in-flight micro-batches (1F1B depth
-        // is 1 on the last stage). Track the max of the two stages.
-        let head_acts = act_bytes_per_layer(job, v) * layers_per_stage;
+        // stage holds logits but fewer in-flight micro-batches (depth 1
+        // on the last stage under 1F1B — but derive it from the actual
+        // stream, GPipe/interleaved differ). Track the max of the two.
+        let head_in_flight =
+            schedule::peak_in_flight(&schedule::ops(l.sched, l.pp - 1, l.pp, v.num_micro)) as f64;
+        let head_acts = act_bytes_per_layer(job, v) * layers_per_chunk * head_in_flight;
         let head_logits = 2.0 * 4.0 * (l.mb * a.seq * a.vocab) as f64 / l.tp as f64;
         let head_total = head_acts + head_logits;
         let stage0_total = activations;
@@ -203,7 +216,7 @@ mod tests {
     }
 
     fn layout(tp: usize, pp: usize, mb: usize, ckpt: bool, kernel: Kernel, sp: bool) -> Layout {
-        Layout { tp, pp, mb, ckpt, kernel, sp }
+        Layout { tp, pp, mb, ckpt, kernel, sp, sched: crate::layout::Schedule::OneF1B }
     }
 
     #[test]
@@ -304,6 +317,7 @@ mod tests {
             &[false, true],
             &Kernel::ALL,
             &[false, true],
+            &[crate::layout::Schedule::OneF1B, crate::layout::Schedule::Interleaved(2)],
         );
         assert!(!layouts.is_empty());
         for v in &layouts {
@@ -311,6 +325,25 @@ mod tests {
             let total = per_gpu_memory(&job, v, &A100).total();
             assert!(bound <= total, "{:?}: bound {bound} > total {total}", v.layout);
         }
+    }
+
+    #[test]
+    fn schedule_drives_in_flight_memory() {
+        use crate::layout::Schedule;
+        // GPipe holds all m micro-batches on stage 0 (m = 2048/32 = 64 at
+        // tp2/pp2): activation memory explodes vs 1F1B's min(pp, m) = 2.
+        let base = layout(2, 2, 1, false, Kernel::Flash2, false);
+        let (job, v1) = v13(base);
+        let (_, vg) = v13(Layout { sched: Schedule::GPipe, ..base });
+        let a1 = per_gpu_memory(&job, &v1, &A100).activations;
+        let ag = per_gpu_memory(&job, &vg, &A100).activations;
+        assert!(ag > 10.0 * a1, "gpipe {ag} vs 1f1b {a1}");
+        // Interleaving trades bubble for activation memory: more (smaller)
+        // chunks in flight than plain 1F1B on stage 0.
+        let (_, vi) = v13(Layout { sched: Schedule::Interleaved(2), ..base });
+        let ai = per_gpu_memory(&job, &vi, &A100).activations;
+        assert!(ai > a1, "interleaved {ai} vs 1f1b {a1}");
+        assert!(ai < ag, "interleaved {ai} vs gpipe {ag}");
     }
 
     #[test]

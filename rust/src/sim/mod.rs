@@ -10,10 +10,12 @@ pub mod cluster;
 pub mod kernels;
 pub mod memory;
 pub mod mfu;
+pub mod schedule;
 pub mod step_time;
 
 pub use cluster::{Hardware, A100, H100};
 pub use memory::MemoryBreakdown;
+pub use schedule::Schedule;
 pub use step_time::StepBreakdown;
 
 use crate::layout::{Job, ValidLayout};
@@ -92,7 +94,10 @@ mod tests {
 
     fn eval13(tp: usize, pp: usize, mb: usize, ckpt: bool, k: Kernel) -> Outcome {
         let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
-        let v = validate(&job, &Layout { tp, pp, mb, ckpt, kernel: k, sp: false }).unwrap();
+        let l = Layout {
+            tp, pp, mb, ckpt, kernel: k, sp: false, sched: crate::layout::Schedule::OneF1B,
+        };
+        let v = validate(&job, &l).unwrap();
         evaluate(&job, &v, &A100)
     }
 
@@ -114,7 +119,10 @@ mod tests {
         let job = Job::new(preset("llama30b").unwrap(), Cluster::dgx_a100(32), 2048);
         let v = validate(
             &job,
-            &Layout { tp: 4, pp: 4, mb: 1, ckpt: false, kernel: Kernel::Fused, sp: false },
+            &Layout {
+                tp: 4, pp: 4, mb: 1, ckpt: false, kernel: Kernel::Fused, sp: false,
+                sched: crate::layout::Schedule::OneF1B,
+            },
         )
         .unwrap();
         assert!(matches!(evaluate(&job, &v, &A100), Outcome::KernelUnavailable));

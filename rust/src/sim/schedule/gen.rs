@@ -1,0 +1,284 @@
+//! Schedule generators: per-stage op streams for 1F1B, GPipe, and
+//! interleaved 1F1B (moved here from `coordinator::pipeline` so the
+//! trainer and the analytic simulator consume one implementation).
+//!
+//! Properties (proved by tests below):
+//! * every stage runs each (micro, chunk) unit exactly once fwd and once
+//!   bwd;
+//! * the in-flight activation count on 1F1B stage `p` never exceeds
+//!   `min(pp - p, m)` (the classic 1F1B memory bound);
+//! * every generated stream is deadlock-free given FIFO channels
+//!   (simulated execution, `makespan::simulate_slots`).
+
+use super::{Op, Schedule};
+
+/// The op stream of `sched` for physical stage `p` of `pp` with `m`
+/// micro-batches.
+pub fn ops(sched: Schedule, p: usize, pp: usize, m: usize) -> Vec<Op> {
+    match sched {
+        Schedule::OneF1B => one_f1b(p, pp, m),
+        Schedule::GPipe => gpipe(p, pp, m),
+        Schedule::Interleaved(v) => interleaved_1f1b(p, pp, m, v),
+    }
+}
+
+/// The 1F1B (PipeDream-flush) schedule for stage `p` of `pp` with `m`
+/// micro-batches.
+pub fn one_f1b(p: usize, pp: usize, m: usize) -> Vec<Op> {
+    assert!(p < pp, "stage {p} out of range for pp={pp}");
+    let warmup = (pp - 1 - p).min(m);
+    let mut ops = Vec::with_capacity(2 * m);
+    for i in 0..warmup {
+        ops.push(Op::Fwd { micro: i, chunk: 0 });
+    }
+    // Steady state: one forward, one backward.
+    for i in warmup..m {
+        ops.push(Op::Fwd { micro: i, chunk: 0 });
+        ops.push(Op::Bwd { micro: i - warmup, chunk: 0 });
+    }
+    // Drain remaining backwards.
+    for i in (m - warmup.min(m))..m {
+        ops.push(Op::Bwd { micro: i, chunk: 0 });
+    }
+    ops
+}
+
+/// GPipe-style baseline (all forwards then all backwards) — the
+/// "naive schedule" comparator (S21). With unbounded memory it pipelines
+/// as well as 1F1B (same makespan under the event-driven model); its
+/// real-world penalty is activation memory — all `m` micro-batches stay
+/// in flight (`sim::memory` prices that, and it is why GPipe rows OOM).
+pub fn gpipe(p: usize, pp: usize, m: usize) -> Vec<Op> {
+    assert!(p < pp);
+    let mut ops = Vec::with_capacity(2 * m);
+    for i in 0..m {
+        ops.push(Op::Fwd { micro: i, chunk: 0 });
+    }
+    for i in (0..m).rev() {
+        ops.push(Op::Bwd { micro: i, chunk: 0 });
+    }
+    ops
+}
+
+/// Interleaved 1F1B (Narayanan et al. 2021, Megatron-LM): each rank holds
+/// `v` model chunks; chunk `c` on rank `p` is virtual stage `c * pp + p`.
+/// Forward units are issued in groups of `pp` micro-batches cycling
+/// through the chunks; backwards mirror the order with chunks reversed.
+/// Requires `m % pp == 0` (enforced by `layout::validate`).
+pub fn interleaved_1f1b(p: usize, pp: usize, m: usize, v: usize) -> Vec<Op> {
+    assert!(p < pp, "stage {p} out of range for pp={pp}");
+    assert!(v >= 1, "need at least one virtual stage");
+    assert!(m % pp == 0, "interleaved 1F1B needs m ({m}) divisible by pp ({pp})");
+    let group = pp * v;
+    let total = m * v;
+
+    // The k-th forward unit issued by any rank: micro-batches advance in
+    // blocks of `pp`, cycling chunk 0..v within each block.
+    let fwd_unit = |k: usize| -> (usize, usize) {
+        let within = k % group;
+        ((k / group) * pp + within % pp, within / pp)
+    };
+    // Backwards mirror the forward order with the chunk index reversed
+    // (the last virtual stage's backward runs first).
+    let bwd_unit = |k: usize| -> (usize, usize) {
+        let within = k % group;
+        ((k / group) * pp + within % pp, v - 1 - within / pp)
+    };
+
+    let warmup = ((pp - p - 1) * 2 + (v - 1) * pp).min(total);
+    let mut ops = Vec::with_capacity(2 * total);
+    let mut fk = 0usize;
+    let mut bk = 0usize;
+    for _ in 0..warmup {
+        let (micro, chunk) = fwd_unit(fk);
+        ops.push(Op::Fwd { micro, chunk });
+        fk += 1;
+    }
+    for _ in 0..(total - warmup) {
+        let (micro, chunk) = fwd_unit(fk);
+        ops.push(Op::Fwd { micro, chunk });
+        fk += 1;
+        let (micro, chunk) = bwd_unit(bk);
+        ops.push(Op::Bwd { micro, chunk });
+        bk += 1;
+    }
+    while bk < total {
+        let (micro, chunk) = bwd_unit(bk);
+        ops.push(Op::Bwd { micro, chunk });
+        bk += 1;
+    }
+    ops
+}
+
+/// Peak number of in-flight activations (fwd done, bwd not yet) a
+/// schedule holds on one stage, in units of one model chunk.
+pub fn peak_in_flight(ops: &[Op]) -> usize {
+    let mut live = 0usize;
+    let mut peak = 0usize;
+    for op in ops {
+        match op {
+            Op::Fwd { .. } => {
+                live += 1;
+                peak = peak.max(live);
+            }
+            Op::Bwd { .. } => live -= 1,
+        }
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::simulate_slots;
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn every_micro_exactly_once_each_direction() {
+        for pp in 1..=8 {
+            for m in 1..=16 {
+                for p in 0..pp {
+                    let ops = one_f1b(p, pp, m);
+                    assert_eq!(ops.len(), 2 * m);
+                    for i in 0..m {
+                        assert_eq!(ops.iter().filter(|o| **o == Op::Fwd { micro: i, chunk: 0 }).count(), 1);
+                        assert_eq!(ops.iter().filter(|o| **o == Op::Bwd { micro: i, chunk: 0 }).count(), 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_unit_exactly_once_interleaved() {
+        for pp in 2..=4usize {
+            for v in 2..=4usize {
+                for m in [pp, 2 * pp, 4 * pp] {
+                    for p in 0..pp {
+                        let ops = interleaved_1f1b(p, pp, m, v);
+                        assert_eq!(ops.len(), 2 * m * v);
+                        for i in 0..m {
+                            for c in 0..v {
+                                let f = ops.iter().filter(|o| **o == Op::Fwd { micro: i, chunk: c }).count();
+                                let b = ops.iter().filter(|o| **o == Op::Bwd { micro: i, chunk: c }).count();
+                                assert_eq!((f, b), (1, 1), "pp={pp} v={v} m={m} p={p} i={i} c={c}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwd_precedes_bwd_per_micro() {
+        for pp in 1..=6 {
+            for p in 0..pp {
+                let ops = one_f1b(p, pp, 8);
+                for i in 0..8 {
+                    let fpos = ops.iter().position(|o| *o == Op::Fwd { micro: i, chunk: 0 }).unwrap();
+                    let bpos = ops.iter().position(|o| *o == Op::Bwd { micro: i, chunk: 0 }).unwrap();
+                    assert!(fpos < bpos);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_bounded_by_stage_depth() {
+        // The whole point of 1F1B (paper §2): stage p keeps at most
+        // pp - p in-flight micro-batches, vs GPipe's m.
+        for pp in 1..=8usize {
+            for m in 1..=32usize {
+                for p in 0..pp {
+                    let bound = (pp - p).min(m);
+                    assert!(
+                        peak_in_flight(&one_f1b(p, pp, m)) <= bound,
+                        "pp={pp} m={m} p={p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpipe_holds_all_micros() {
+        assert_eq!(peak_in_flight(&gpipe(0, 4, 16)), 16);
+        assert_eq!(peak_in_flight(&one_f1b(0, 4, 16)), 4);
+    }
+
+    #[test]
+    fn interleaved_holds_more_than_plain_on_stage0() {
+        // The §2 trade-off: interleaving shrinks the bubble but raises the
+        // in-flight activation count (each unit is 1/v of a stage, and the
+        // deeper virtual pipeline keeps more of them live).
+        for (pp, v) in [(2usize, 2usize), (4, 2), (2, 4), (4, 4)] {
+            let m = 4 * pp;
+            let plain = peak_in_flight(&one_f1b(0, pp, m));
+            let inter = peak_in_flight(&interleaved_1f1b(0, pp, m, v));
+            assert!(inter > plain, "pp={pp} v={v}: {inter} <= {plain}");
+        }
+    }
+
+    #[test]
+    fn deadlock_free_and_bubble_matches_formula() {
+        for pp in 1..=6usize {
+            for m in pp..=24 {
+                let slots = simulate_slots(pp, 1, m, |p| one_f1b(p, pp, m)).expect("deadlock");
+                // ideal 1F1B makespan (unit fwd == unit bwd): 2m + 2(pp-1)
+                assert_eq!(slots, 2 * m + 2 * (pp - 1), "pp={pp} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_deadlock_free_and_fewer_slots() {
+        // Unit-cost slot count: interleaving must never be worse than
+        // plain 1F1B once each unit costs 1/v of a stage-slot... in raw
+        // slots each stream has v× the ops, so compare against v× plain.
+        for pp in 2..=4usize {
+            for v in 2..=4usize {
+                for m in [pp, 2 * pp, 4 * pp] {
+                    let inter =
+                        simulate_slots(pp, v, m, |p| interleaved_1f1b(p, pp, m, v)).expect("deadlock");
+                    let plain = simulate_slots(pp, 1, m, |p| one_f1b(p, pp, m)).unwrap();
+                    assert!(
+                        inter < plain * v,
+                        "pp={pp} v={v} m={m}: {inter} slots >= {plain}*{v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpipe_is_never_faster() {
+        for pp in 2..=5usize {
+            for m in pp..=16 {
+                let f1b = simulate_slots(pp, 1, m, |p| one_f1b(p, pp, m)).unwrap();
+                let gp = simulate_slots(pp, 1, m, |p| gpipe(p, pp, m)).unwrap();
+                assert!(gp >= f1b, "pp={pp} m={m}: gpipe {gp} < 1f1b {f1b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatcher_matches_generators() {
+        assert_eq!(ops(Schedule::OneF1B, 1, 4, 8), one_f1b(1, 4, 8));
+        assert_eq!(ops(Schedule::GPipe, 1, 4, 8), gpipe(1, 4, 8));
+        assert_eq!(ops(Schedule::Interleaved(2), 1, 4, 8), interleaved_1f1b(1, 4, 8, 2));
+    }
+
+    #[test]
+    fn property_random_shapes() {
+        prop::check_cases(0x1F1B, 128, |rng| {
+            let pp = rng.range(1, 9);
+            let m = rng.range(1, 33);
+            let p = rng.range(0, pp);
+            let ops = one_f1b(p, pp, m);
+            assert_eq!(ops.len(), 2 * m);
+            assert!(peak_in_flight(&ops) <= (pp - p).min(m).max(1));
+            assert!(simulate_slots(pp, 1, m, |p| one_f1b(p, pp, m)).is_some());
+        });
+    }
+}

@@ -1,0 +1,299 @@
+//! Event-driven schedule execution.
+//!
+//! [`makespan`] replaces the old closed-form `(m + pp − 1)·t_micro`
+//! bubble bound (and the `PIPELINE_TAX` calibration fudge that papered
+//! over its error): it executes the actual per-stage op streams with
+//! distinct forward/backward costs, a non-uniform last virtual stage
+//! (the LM head), and p2p receive costs on cross-stage dependency
+//! edges. Warm-up, drain, and stage-imbalance bubbles *emerge* from the
+//! dependency structure instead of being asserted.
+//!
+//! `tools/pysim.py::makespan` mirrors this function expression for
+//! expression — keep them in lockstep (CI diffs the golden fixtures the
+//! mirror generates).
+
+use super::Op;
+
+/// Wall-time cost model for one op stream execution.
+#[derive(Debug, Clone, Copy)]
+pub struct OpCosts {
+    /// Forward of one model chunk (compute + the chunk's TP collectives).
+    pub fwd: f64,
+    /// Backward of one model chunk (incl. recompute when checkpointing).
+    pub bwd: f64,
+    /// Extra forward cost on the LAST virtual stage only (LM head fwd).
+    pub head_fwd: f64,
+    /// Extra backward cost on the last virtual stage (LM head bwd).
+    pub head_bwd: f64,
+    /// Receive cost charged to an op whose dependency crosses physical
+    /// stages (non-overlapped p2p activation/cotangent transfer).
+    pub p2p: f64,
+}
+
+/// Result of an event-driven execution.
+#[derive(Debug, Clone)]
+pub struct Makespan {
+    /// Wall time until the last op of any stage finishes.
+    pub total: f64,
+    /// Per-physical-stage sum of op costs (the stage's non-idle time).
+    pub busy: Vec<f64>,
+}
+
+/// Execute per-stage op streams (one list per physical stage, as built by
+/// [`gen::ops`]) and return the makespan, or `None` on deadlock.
+///
+/// Dependencies, with `vs = chunk * pp + p` the virtual stage of an op:
+/// * `Fwd` needs the forward of `vs − 1` for the same micro (none for
+///   `vs == 0`);
+/// * `Bwd` needs its own forward plus the backward of `vs + 1` (only its
+///   own forward on the last virtual stage).
+///
+/// Each physical stage executes its ops strictly in stream order; an op
+/// starts at `max(stage free time, dependency finish)` and costs
+/// `base + head extra (last virtual stage) + p2p (cross-stage edge)`.
+pub fn makespan(pp: usize, vstages: usize, m: usize, scheds: &[Vec<Op>], c: &OpCosts) -> Option<Makespan> {
+    let nvs = pp * vstages;
+    let mut fwd_t: Vec<Vec<Option<f64>>> = vec![vec![None; m]; nvs];
+    let mut bwd_t: Vec<Vec<Option<f64>>> = vec![vec![None; m]; nvs];
+    let mut pos = vec![0usize; pp];
+    let mut free = vec![0.0f64; pp];
+    let mut busy = vec![0.0f64; pp];
+    let total_ops: usize = scheds.iter().map(|s| s.len()).sum();
+    let mut done = 0usize;
+
+    while done < total_ops {
+        let mut progressed = false;
+        for p in 0..pp {
+            while pos[p] < scheds[p].len() {
+                let op = scheds[p][pos[p]];
+                let (dep, cost) = match op {
+                    Op::Fwd { micro: i, chunk } => {
+                        let vs = chunk * pp + p;
+                        let (dep, cross) = if vs == 0 {
+                            (0.0, false)
+                        } else {
+                            match fwd_t[vs - 1][i] {
+                                Some(t) => (t, (vs - 1) % pp != p),
+                                None => break,
+                            }
+                        };
+                        let cost = c.fwd
+                            + if vs == nvs - 1 { c.head_fwd } else { 0.0 }
+                            + if cross { c.p2p } else { 0.0 };
+                        (dep, cost)
+                    }
+                    Op::Bwd { micro: i, chunk } => {
+                        let vs = chunk * pp + p;
+                        let Some(own) = fwd_t[vs][i] else { break };
+                        let (dep, cross) = if vs == nvs - 1 {
+                            (own, false)
+                        } else {
+                            match bwd_t[vs + 1][i] {
+                                Some(t) => (if own > t { own } else { t }, (vs + 1) % pp != p),
+                                None => break,
+                            }
+                        };
+                        let cost = c.bwd
+                            + if vs == nvs - 1 { c.head_bwd } else { 0.0 }
+                            + if cross { c.p2p } else { 0.0 };
+                        (dep, cost)
+                    }
+                };
+                let start = if free[p] > dep { free[p] } else { dep };
+                let fin = start + cost;
+                match op {
+                    Op::Fwd { micro: i, chunk } => fwd_t[chunk * pp + p][i] = Some(fin),
+                    Op::Bwd { micro: i, chunk } => bwd_t[chunk * pp + p][i] = Some(fin),
+                }
+                free[p] = fin;
+                busy[p] += cost;
+                pos[p] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return None; // deadlock
+        }
+    }
+    let mut total = 0.0f64;
+    for t in &free {
+        if *t > total {
+            total = *t;
+        }
+    }
+    Some(Makespan { total, busy })
+}
+
+/// Unit-time slot execution (synchronous rounds, infinite channels):
+/// verifies deadlock freedom and ideal bubble sizes without a cost
+/// model. Generalized over virtual stages; `sched(p)` yields stage `p`'s
+/// op stream.
+pub fn simulate_slots(
+    pp: usize,
+    vstages: usize,
+    m: usize,
+    sched: impl Fn(usize) -> Vec<Op>,
+) -> Option<usize> {
+    let nvs = pp * vstages;
+    let scheds: Vec<Vec<Op>> = (0..pp).map(&sched).collect();
+    let mut pos = vec![0usize; pp];
+    let mut fwd_done = vec![vec![false; m]; nvs];
+    let mut bwd_done = vec![vec![false; m]; nvs];
+    let mut slots = 0usize;
+    let total: usize = scheds.iter().map(|s| s.len()).sum();
+    let mut completed = 0usize;
+
+    while completed < total {
+        let mut progressed = false;
+        let mut fired: Vec<(usize, Op)> = Vec::new();
+        // Each slot: every stage may fire its next op if deps are met.
+        for p in 0..pp {
+            if pos[p] >= scheds[p].len() {
+                continue;
+            }
+            let op = scheds[p][pos[p]];
+            let ready = match op {
+                Op::Fwd { micro: i, chunk } => {
+                    let vs = chunk * pp + p;
+                    vs == 0 || fwd_done[vs - 1][i]
+                }
+                Op::Bwd { micro: i, chunk } => {
+                    let vs = chunk * pp + p;
+                    fwd_done[vs][i] && (vs == nvs - 1 || bwd_done[vs + 1][i])
+                }
+            };
+            if ready {
+                fired.push((p, op));
+                pos[p] += 1;
+                progressed = true;
+                completed += 1;
+            }
+        }
+        // Commit completions after the slot (ops in a slot are concurrent).
+        for (p, op) in fired {
+            match op {
+                Op::Fwd { micro: i, chunk } => fwd_done[chunk * pp + p][i] = true,
+                Op::Bwd { micro: i, chunk } => bwd_done[chunk * pp + p][i] = true,
+            }
+        }
+        if !progressed {
+            return None; // deadlock
+        }
+        slots += 1;
+    }
+    Some(slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{gen, Schedule};
+    use super::*;
+    use crate::util::prop;
+
+    fn streams(sched: Schedule, pp: usize, m: usize) -> Vec<Vec<Op>> {
+        (0..pp).map(|p| gen::ops(sched, p, pp, m)).collect()
+    }
+
+    #[test]
+    fn uniform_1f1b_equals_closed_form_bound() {
+        // The refactor provably generalizes the old analytic model: under
+        // uniform op costs, no head, no p2p, plain 1F1B's event-driven
+        // makespan IS the classic (m + pp − 1)·(t_fwd + t_bwd) bound.
+        prop::check_cases(0xC105ED, 96, |rng| {
+            let pp = rng.range(1, 9);
+            let m = rng.range(pp, 33);
+            let tf = 0.1 + rng.range(1, 2000) as f64 / 1000.0;
+            let tb = 0.1 + rng.range(1, 3000) as f64 / 1000.0;
+            let c = OpCosts { fwd: tf, bwd: tb, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+            let ms = makespan(pp, 1, m, &streams(Schedule::OneF1B, pp, m), &c).expect("deadlock");
+            let closed = (m + pp - 1) as f64 * (tf + tb);
+            assert!(
+                (ms.total - closed).abs() / closed < 1e-9,
+                "pp={pp} m={m}: event {} vs closed {closed}",
+                ms.total
+            );
+        });
+    }
+
+    #[test]
+    fn single_stage_has_no_idle_time() {
+        let c = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.5, head_bwd: 1.0, p2p: 0.0 };
+        let ms = makespan(1, 1, 8, &streams(Schedule::OneF1B, 1, 8), &c).unwrap();
+        assert_eq!(ms.total, ms.busy[0]);
+    }
+
+    #[test]
+    fn interleaving_strictly_shrinks_uniform_bubble() {
+        // v virtual stages divide the warm-up/drain bubble by v when each
+        // chunk costs 1/v of a full stage.
+        for pp in [2usize, 4, 8] {
+            for v in [2usize, 4] {
+                let m = 4 * pp;
+                let c1 = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+                let cv = OpCosts {
+                    fwd: 1.0 / v as f64,
+                    bwd: 2.0 / v as f64,
+                    head_fwd: 0.0,
+                    head_bwd: 0.0,
+                    p2p: 0.0,
+                };
+                let plain = makespan(pp, 1, m, &streams(Schedule::OneF1B, pp, m), &c1).unwrap();
+                let inter =
+                    makespan(pp, v, m, &streams(Schedule::Interleaved(v), pp, m), &cv).unwrap();
+                assert!(
+                    inter.total < plain.total,
+                    "pp={pp} v={v}: {} >= {}",
+                    inter.total,
+                    plain.total
+                );
+                // Bubble (idle of the busiest stage) shrinks by exactly v.
+                let bubble = |ms: &Makespan| {
+                    let b = ms.busy.iter().cloned().fold(0.0f64, f64::max);
+                    ms.total - b
+                };
+                let (b1, bv) = (bubble(&plain), bubble(&inter));
+                assert!(
+                    (bv - b1 / v as f64).abs() < 1e-9,
+                    "pp={pp} v={v}: bubble {bv} vs {b1}/{v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2p_and_head_extend_the_critical_path() {
+        let base = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+        let with_p2p = OpCosts { p2p: 0.25, ..base };
+        let with_head = OpCosts { head_fwd: 0.5, head_bwd: 1.0, ..base };
+        let s = streams(Schedule::OneF1B, 4, 8);
+        let t0 = makespan(4, 1, 8, &s, &base).unwrap().total;
+        assert!(makespan(4, 1, 8, &s, &with_p2p).unwrap().total > t0);
+        assert!(makespan(4, 1, 8, &s, &with_head).unwrap().total > t0);
+    }
+
+    #[test]
+    fn gpipe_never_beats_1f1b_makespan() {
+        let c = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.3, head_bwd: 0.6, p2p: 0.1 };
+        for pp in 2..=5usize {
+            for m in [pp, 2 * pp, 4 * pp] {
+                let f = makespan(pp, 1, m, &streams(Schedule::OneF1B, pp, m), &c).unwrap();
+                let g = makespan(pp, 1, m, &streams(Schedule::GPipe, pp, m), &c).unwrap();
+                assert!(g.total >= f.total - 1e-12, "pp={pp} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn busy_accounts_every_op_cost() {
+        let c = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.5, head_bwd: 1.5, p2p: 0.25 };
+        let (pp, m) = (3usize, 6usize);
+        let ms = makespan(pp, 1, m, &streams(Schedule::OneF1B, pp, m), &c).unwrap();
+        // Stage 1 (middle): m fwd (each +p2p), m bwd (each +p2p).
+        let expect = m as f64 * (c.fwd + c.p2p) + m as f64 * (c.bwd + c.p2p);
+        assert!((ms.busy[1] - expect).abs() < 1e-12, "{} vs {expect}", ms.busy[1]);
+        // Last stage: fwd +p2p, bwd has no inbound edge but carries the head.
+        let expect_last = m as f64 * (c.fwd + c.head_fwd + c.p2p) + m as f64 * (c.bwd + c.head_bwd);
+        assert!((ms.busy[2] - expect_last).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,129 @@
+//! Pipeline scheduling (S12/S23): the one shared abstraction behind both
+//! the real trainer and the analytic simulator.
+//!
+//! A [`Schedule`] names an op-stream *shape*; [`gen`] turns it into the
+//! ordered per-stage list of forward/backward micro-batch operations; and
+//! [`makespan`] executes those streams through an event-driven simulator
+//! with distinct fwd/bwd/recompute costs, cross-stage p2p edges, and a
+//! non-uniform last stage (the LM head). Bubble time, in-flight
+//! activation counts, and schedule choice all *emerge* from the same op
+//! streams — there is no closed-form bubble formula and no calibration
+//! tax anywhere downstream.
+//!
+//! Consumers:
+//! * `coordinator::trainer` executes the generated streams on real PJRT
+//!   stage workers (1F1B / GPipe);
+//! * `sim::step_time` prices them with the event-driven makespan;
+//! * `sim::memory` derives per-stage in-flight activation counts from
+//!   [`gen::peak_in_flight`] of the actual stream.
+
+pub mod gen;
+pub mod makespan;
+
+pub use gen::{gpipe, interleaved_1f1b, one_f1b, ops, peak_in_flight};
+pub use makespan::{makespan, simulate_slots, Makespan, OpCosts};
+
+/// One scheduled operation on a physical pipeline stage.
+///
+/// `chunk` indexes the model chunk (virtual stage) held by this stage:
+/// always 0 for 1F1B/GPipe; `0..v` for interleaved 1F1B. Chunk `c` on
+/// stage `p` of `pp` is virtual stage `c * pp + p` (Megatron-LM's
+/// round-robin virtual-stage assignment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Forward of micro-batch `micro` through model chunk `chunk`.
+    Fwd { micro: usize, chunk: usize },
+    /// Backward of micro-batch `micro` through model chunk `chunk`.
+    Bwd { micro: usize, chunk: usize },
+}
+
+impl Op {
+    pub fn micro(&self) -> usize {
+        match self {
+            Op::Fwd { micro, .. } | Op::Bwd { micro, .. } => *micro,
+        }
+    }
+
+    pub fn chunk(&self) -> usize {
+        match self {
+            Op::Fwd { chunk, .. } | Op::Bwd { chunk, .. } => *chunk,
+        }
+    }
+
+    pub fn is_fwd(&self) -> bool {
+        matches!(self, Op::Fwd { .. })
+    }
+}
+
+/// Pipeline schedule flavour — the third layout dimension of §4.3's
+/// bubble discussion. `Interleaved(v)` is Narayanan et al. 2021's
+/// interleaved 1F1B with `v` virtual stages (model chunks) per GPU:
+/// `v`× smaller warm-up/drain bubble, higher in-flight activation count
+/// and `v`× more p2p transfers per micro-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Schedule {
+    /// PipeDream-flush 1F1B (the paper's setting).
+    #[default]
+    OneF1B,
+    /// All forwards then all backwards — the naive baseline (S21).
+    GPipe,
+    /// Interleaved 1F1B with `v` virtual stages per GPU.
+    Interleaved(usize),
+}
+
+impl Schedule {
+    /// Virtual stages (model chunks) per physical stage.
+    pub fn vstages(&self) -> usize {
+        match self {
+            Schedule::Interleaved(v) => *v,
+            _ => 1,
+        }
+    }
+
+    /// CLI spelling: `1f1b`, `gpipe`, `interleaved:<v>`.
+    pub fn label(&self) -> String {
+        match self {
+            Schedule::OneF1B => "1f1b".to_string(),
+            Schedule::GPipe => "gpipe".to_string(),
+            Schedule::Interleaved(v) => format!("interleaved:{v}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "1f1b" => Some(Schedule::OneF1B),
+            "gpipe" => Some(Schedule::GPipe),
+            _ => {
+                let v = s.strip_prefix("interleaved:")?;
+                v.parse().ok().map(Schedule::Interleaved)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_parse_roundtrip() {
+        for s in [Schedule::OneF1B, Schedule::GPipe, Schedule::Interleaved(2), Schedule::Interleaved(5)] {
+            assert_eq!(Schedule::parse(&s.label()), Some(s));
+        }
+        assert!(Schedule::parse("2f2b").is_none());
+        assert!(Schedule::parse("interleaved:x").is_none());
+        assert!(Schedule::parse("interleaved").is_none());
+    }
+
+    #[test]
+    fn vstages() {
+        assert_eq!(Schedule::OneF1B.vstages(), 1);
+        assert_eq!(Schedule::GPipe.vstages(), 1);
+        assert_eq!(Schedule::Interleaved(4).vstages(), 4);
+    }
+
+    #[test]
+    fn default_is_1f1b() {
+        assert_eq!(Schedule::default(), Schedule::OneF1B);
+    }
+}

@@ -1,25 +1,35 @@
-//! Step-time model (S4+S5): compute + communication + pipeline bubble.
+//! Step-time model (S4+S5): compute + communication + schedule makespan.
 //!
-//! `step_time = (m + pp − 1) · t_micro  +  exposed DP comm  +  optimizer`
+//! `step_time = makespan(schedule op streams)  +  exposed DP comm  +  optimizer`
 //!
-//! where `t_micro` is the fwd+bwd wall time of the slowest pipeline stage
-//! for one micro-batch (1F1B keeps every stage busy except the warm-up /
-//! drain ramp of `pp − 1` micro-slots — PipeDream, Narayanan et al. 2021a).
+//! The pipeline portion is priced by `sim::schedule`'s event-driven
+//! [`makespan`] executor: per-chunk forward/backward costs (with
+//! recompute folded into the backward), the LM head on the last virtual
+//! stage only, TP collectives charged per op, and p2p receive costs on
+//! cross-stage dependency edges. Warm-up/drain bubbles and
+//! stage-imbalance stalls *emerge* from the dependency structure — the
+//! old closed-form `(m + pp − 1)·t_micro` bound and its `PIPELINE_TAX`
+//! calibration fudge are gone; what that tax papered over (the head-stage
+//! imbalance, non-overlapped p2p, fwd/bwd asymmetry) is now modeled
+//! directly.
 
 use crate::layout::{Job, ValidLayout};
 use crate::sim::cluster::{allreduce_time, p2p_time, Hardware};
-use crate::sim::kernels::{dense_matmul_eff, perf};
+use crate::sim::kernels::{cal, dense_matmul_eff, perf};
+use crate::sim::schedule::{self, OpCosts};
 
 /// Wall-time breakdown of one global step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StepBreakdown {
-    /// Compute time summed over the steady-state schedule (slowest stage).
+    /// Compute time of the bottleneck stage over the whole schedule
+    /// (`m ×` its per-micro fwd+bwd work, incl. the LM head if it owns it).
     pub compute: f64,
-    /// Tensor-parallel collectives inside the micro-batch critical path.
+    /// Tensor-parallel collectives on the bottleneck stage's op stream.
     pub tp_comm: f64,
-    /// Pipeline p2p activation/grad transfers.
+    /// Pipeline p2p receive time serialized on the bottleneck stage.
     pub pp_comm: f64,
-    /// Warm-up/drain bubble time.
+    /// Idle time of the bottleneck stage across the schedule makespan
+    /// (warm-up, drain, and dependency stalls).
     pub bubble: f64,
     /// Exposed (non-overlapped) data-parallel gradient reduction.
     pub dp_comm: f64,
@@ -35,23 +45,41 @@ impl StepBreakdown {
 
 /// Fraction of the DP gradient all-reduce that cannot be hidden behind
 /// backward compute (bucketed overlap leaves the tail exposed).
-const DP_EXPOSED_FRACTION: f64 = 0.35;
+/// Overridable via `PLX_CAL_DP_EXPOSED` (calibration harness).
+pub const DP_EXPOSED_FRACTION: f64 = 0.35;
 /// Backward costs ~2x forward for matmuls (dgrad + wgrad).
-const BWD_FACTOR: f64 = 2.0;
+/// Overridable via `PLX_CAL_BWD_FACTOR` (calibration harness).
+pub const BWD_FACTOR: f64 = 2.0;
 /// Fixed CPU-side time per optimizer step (launch cascade).
 const OPT_FIXED_S: f64 = 0.030;
-/// Saturating pipelining tax: stage time multiplier approaches
-/// `1 + PIPELINE_TAX` as pp grows (see the comment at the use site).
-const PIPELINE_TAX: f64 = 0.10;
 
-/// Per-micro-batch fwd+bwd time of ONE pipeline stage (the heaviest:
-/// includes the LM head on the last stage; stages are otherwise uniform).
-fn stage_micro_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> (f64, f64) {
+/// Per-op cost model for one layout: everything [`schedule::makespan`]
+/// needs to price the op streams.
+struct StageCosts {
+    /// Forward of one model chunk (`layers/(pp·v)` layers), compute only.
+    chunk_fwd: f64,
+    /// Backward of one chunk: dgrad+wgrad, flash attention recompute, and
+    /// the full-forward recompute when activation checkpointing is on.
+    chunk_bwd: f64,
+    /// LM-head forward extra on the last virtual stage.
+    head_fwd: f64,
+    /// LM-head backward extra on the last virtual stage.
+    head_bwd: f64,
+    /// TP collectives per chunk per direction (2 of Megatron's 4/layer).
+    tp_chunk: f64,
+    /// One cross-stage p2p transfer (activation or cotangent).
+    p2p_hop: f64,
+}
+
+/// Decompose one micro-batch into per-op costs.
+/// (`tools/pysim.py::stage_costs` mirrors this expression for expression.)
+fn stage_costs(job: &Job, v: &ValidLayout, hw: &Hardware) -> StageCosts {
     let a = &job.arch;
     let l = &v.layout;
     let kp = perf(l.kernel);
     let tokens = l.mb * a.seq;
-    let layers_per_stage = (a.layers / l.pp) as f64;
+    let vst = l.sched.vstages();
+    let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
 
     // ---- per-layer compute (one forward pass) ----
     let dense_flops = a.layer_fwd_flops(l.mb, a.seq)
@@ -70,82 +98,115 @@ fn stage_micro_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> (f64, f64) {
         kp.softmax_bytes_per_score * (a.heads * a.seq * a.seq * l.mb) as f64 / l.tp as f64;
     let t_mem = (norm_bytes + softmax_bytes) / hw.hbm_bw + hw.launch_overhead_s * 8.0;
 
-    // fwd + bwd (2x) + full recompute if checkpointing. Flash kernels
-    // additionally recompute the attention forward inside their backward
-    // ("selective activation recomputation", §2) — extra attention FLOPs
-    // that cost wall time but never count as model FLOPs.
+    // Backward: dgrad+wgrad (~2x fwd), plus a full forward recompute when
+    // checkpointing, plus the flash kernels' attention-forward recompute
+    // inside their backward ("selective activation recomputation", §2) —
+    // wall time that never counts as model FLOPs.
+    let bwd_factor = cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR);
     let ckpt_extra = if l.ckpt { 1.0 } else { 0.0 };
-    let dense_factor = 1.0 + BWD_FACTOR + ckpt_extra;
-    let attn_factor =
-        1.0 + BWD_FACTOR + ckpt_extra + if l.kernel.is_flash() { 1.0 } else { 0.0 };
-    let mem_factor = 1.0 + BWD_FACTOR + ckpt_extra;
-    let mut t_stage =
-        layers_per_stage * (t_dense * dense_factor + t_attn * attn_factor + t_mem * mem_factor);
+    let flash_extra = if l.kernel.is_flash() { 1.0 } else { 0.0 };
+    let layer_fwd = t_dense + t_attn + t_mem;
+    let layer_bwd = (bwd_factor + ckpt_extra) * (t_dense + t_mem)
+        + (bwd_factor + ckpt_extra + flash_extra) * t_attn;
+    let chunk_fwd = layers_per_chunk * layer_fwd;
+    let chunk_bwd = layers_per_chunk * layer_bwd;
 
-    // LM head (last stage): fwd+bwd of the vocab matmul + CE traffic.
+    // LM head (last virtual stage only): fwd+bwd of the vocab matmul +
+    // CE traffic, split fwd/bwd in the backward-factor proportion.
     let head_flops = a.head_fwd_flops(l.mb, a.seq);
-    let t_head = head_flops / l.tp as f64
+    let head_total = head_flops / l.tp as f64
         / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden))
-        * (1.0 + BWD_FACTOR)
+        * (1.0 + bwd_factor)
         + 3.0 * 4.0 * (tokens * a.vocab / l.tp) as f64 / hw.hbm_bw;
-    // Pipeline time is set by the slowest stage; the head stage (equal
-    // layer count + the vocab matmul) is the bottleneck in every paper
-    // layout we checked, so charge it to the critical stage.
-    t_stage += t_head;
+    let head_fwd = head_total / (1.0 + bwd_factor);
+    let head_bwd = head_total - head_fwd;
 
-    // Pipelining tax: real 1F1B schedules don't reach the analytic
-    // (m+p−1)·t_max bound — stage-boundary synchronization, uneven stage
-    // times, and non-overlapped p2p cost a roughly fixed fraction once
-    // the model is pipelined at all, saturating with depth (the paper's
-    // 65B pp4→pp8 rows are nearly free while pp1→pp2 on 13B costs ~15%).
-    let tax = crate::sim::kernels::cal("PLX_CAL_PP_TAX", PIPELINE_TAX);
-    t_stage *= 1.0 + tax * (1.0 - 1.0 / l.pp as f64);
-
-    // ---- TP collectives on the micro-batch critical path ----
+    // ---- TP collectives per op ----
     // Megatron: 2 all-reduces fwd + 2 bwd per layer (SP converts them to
     // reduce-scatter + all-gather with the same total bytes).
-    let tp_comm = if l.tp > 1 {
+    let tp_chunk = if l.tp > 1 {
         let bytes = 2.0 * sbh; // bf16 activations
-        let per_layer = 4.0 * allreduce_time(bytes, l.tp, hw.nvlink_bw, hw.coll_latency_s);
+        let ar = allreduce_time(bytes, l.tp, hw.nvlink_bw, hw.coll_latency_s);
         let sp_factor = if l.sp { 0.95 } else { 1.0 }; // SP: same volume, fewer wasted lanes
-        layers_per_stage * per_layer * sp_factor
+        layers_per_chunk * (2.0 * ar) * sp_factor
     } else {
         0.0
     };
 
-    (t_stage, tp_comm)
+    // One cross-stage activation/cotangent transfer.
+    let p2p_hop = if l.pp > 1 {
+        let pbytes = 2.0 * (l.mb * a.seq * a.hidden) as f64;
+        let bw = if v.topo.pp_crosses_node() { hw.ib_bw } else { hw.nvlink_bw };
+        p2p_time(pbytes, bw, hw.coll_latency_s)
+    } else {
+        0.0
+    };
+
+    StageCosts { chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop }
 }
 
-/// Full step-time breakdown for a validated layout.
+/// Full step-time breakdown for a validated layout: event-driven schedule
+/// makespan + DP reduction + optimizer.
 pub fn step_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> StepBreakdown {
     let a = &job.arch;
     let l = &v.layout;
-    let m = v.num_micro as f64;
+    let m = v.num_micro;
+    let vst = l.sched.vstages();
 
-    let (t_stage, tp_per_micro) = stage_micro_time(job, v, hw);
+    let c = stage_costs(job, v, hw);
 
-    // p2p transfers between stages per micro-batch (fwd act + bwd grad).
-    let pp_per_micro = if l.pp > 1 {
-        let bytes = 2.0 * (l.mb * a.seq * a.hidden) as f64;
-        let bw = if v.topo.pp_crosses_node() { hw.ib_bw } else { hw.nvlink_bw };
-        2.0 * p2p_time(bytes, bw, hw.coll_latency_s)
+    let scheds: Vec<Vec<schedule::Op>> =
+        (0..l.pp).map(|p| schedule::ops(l.sched, p, l.pp, m)).collect();
+    let ms = schedule::makespan(
+        l.pp,
+        vst,
+        m,
+        &scheds,
+        &OpCosts {
+            fwd: c.chunk_fwd + c.tp_chunk,
+            bwd: c.chunk_bwd + c.tp_chunk,
+            head_fwd: c.head_fwd,
+            head_bwd: c.head_bwd,
+            p2p: c.p2p_hop,
+        },
+    )
+    .expect("validated schedule deadlocked");
+
+    // Bottleneck stage: the one with the most charged work (the head
+    // stage in every layout we model, but derive it, don't assume it).
+    let mut b = 0usize;
+    for p in 1..l.pp {
+        if ms.busy[p] > ms.busy[b] {
+            b = p;
+        }
+    }
+
+    let mut comp_micro = vst as f64 * (c.chunk_fwd + c.chunk_bwd);
+    if b == l.pp - 1 {
+        comp_micro += c.head_fwd + c.head_bwd;
+    }
+    let tp_micro = 2.0 * vst as f64 * c.tp_chunk;
+    let pp_micro = if l.pp > 1 {
+        // Inbound cross-stage receives per micro at the bottleneck stage:
+        // every chunk's fwd (except virtual stage 0) and every chunk's
+        // bwd (except the last virtual stage, whose dep is its own fwd).
+        let nf = if b > 0 { vst } else { vst - 1 };
+        let nb = if b < l.pp - 1 { vst } else { vst - 1 };
+        (nf + nb) as f64 * c.p2p_hop
     } else {
         0.0
     };
 
-    let steady_slots = m;
-    let bubble_slots = (l.pp - 1) as f64;
-
-    let compute = steady_slots * t_stage;
-    let tp_comm = steady_slots * tp_per_micro;
-    let pp_comm = steady_slots * pp_per_micro;
-    let bubble = bubble_slots * (t_stage + tp_per_micro + pp_per_micro);
+    let compute = m as f64 * comp_micro;
+    let tp_comm = m as f64 * tp_micro;
+    let pp_comm = m as f64 * pp_micro;
+    let bubble = ms.total - ms.busy[b];
 
     // DP gradient reduction: bf16 grads of this GPU's shard, ring over dp.
     let shard_bytes = 2.0 * a.param_count() as f64 / (l.tp * l.pp) as f64;
     let dp_bw = if v.topo.cluster.nodes() > 1 { hw.ib_bw } else { hw.nvlink_bw };
     let dp_comm = allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s)
-        * DP_EXPOSED_FRACTION;
+        * cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION);
 
     // ZeRO-1 optimizer: update fp32 shard + all-gather bf16 params.
     let opt_elems = a.param_count() as f64 / (l.tp * l.pp) as f64 / v.topo.dp as f64;
@@ -159,15 +220,26 @@ pub fn step_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> StepBreakdown {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::layout::{validate, Kernel, Layout};
+    use crate::layout::{validate, Kernel, Layout, Schedule};
     use crate::model::arch::preset;
     use crate::sim::cluster::A100;
     use crate::topo::Cluster;
 
-    fn eval(tp: usize, pp: usize, mb: usize, ckpt: bool, k: Kernel) -> StepBreakdown {
+    fn eval_sched(
+        tp: usize,
+        pp: usize,
+        mb: usize,
+        ckpt: bool,
+        k: Kernel,
+        sched: Schedule,
+    ) -> StepBreakdown {
         let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
-        let v = validate(&job, &Layout { tp, pp, mb, ckpt, kernel: k, sp: false }).unwrap();
+        let v = validate(&job, &Layout { tp, pp, mb, ckpt, kernel: k, sp: false, sched }).unwrap();
         step_time(&job, &v, &A100)
+    }
+
+    fn eval(tp: usize, pp: usize, mb: usize, ckpt: bool, k: Kernel) -> StepBreakdown {
+        eval_sched(tp, pp, mb, ckpt, k, Schedule::OneF1B)
     }
 
     #[test]
@@ -215,5 +287,55 @@ mod tests {
         let t2 = eval(2, 2, 2, false, Kernel::Flash2).total();
         let rel = (t2 - t1).abs() / t1;
         assert!(rel < 0.15, "mb1 {t1} vs mb2 {t2}");
+    }
+
+    #[test]
+    fn interleaving_strictly_reduces_bubble() {
+        // Acceptance criterion: interleaved 1F1B strictly beats plain
+        // 1F1B's bubble at pp >= 2, v >= 2 (Narayanan et al. 2021's
+        // headline property, now emergent from the event-driven model).
+        for (pp, vv) in [(2usize, 2usize), (2, 4), (4, 2), (4, 5)] {
+            let plain = eval_sched(1, pp, 1, false, Kernel::Flash2Rms, Schedule::OneF1B);
+            let inter =
+                eval_sched(1, pp, 1, false, Kernel::Flash2Rms, Schedule::Interleaved(vv));
+            assert!(
+                inter.bubble < plain.bubble,
+                "pp={pp} v={vv}: bubble {} >= {}",
+                inter.bubble,
+                plain.bubble
+            );
+            // And the whole step gets faster (the extra p2p hops cost
+            // less than the reclaimed bubble at these shapes).
+            assert!(inter.total() < plain.total(), "pp={pp} v={vv}");
+        }
+    }
+
+    #[test]
+    fn gpipe_never_faster_than_1f1b() {
+        // With no memory pressure in the TIME model, GPipe pipelines as
+        // well as 1F1B — its totals agree to float-accumulation noise
+        // (the op streams sum the same costs in different orders), so
+        // compare with an epsilon. GPipe's real penalty is activation
+        // memory (sim::memory holds all m micro-batches in flight).
+        for pp in [2usize, 4] {
+            let f1b = eval_sched(1, pp, 1, false, Kernel::Flash2Rms, Schedule::OneF1B).total();
+            let gp = eval_sched(1, pp, 1, false, Kernel::Flash2Rms, Schedule::GPipe).total();
+            assert!(gp >= f1b - 1e-9 * f1b, "pp={pp}: gpipe {gp} < 1f1b {f1b}");
+        }
+    }
+
+    #[test]
+    fn calibration_defaults_unchanged() {
+        // The satellite requirement: routing DP_EXPOSED_FRACTION and
+        // BWD_FACTOR through the env-override hook must not move the
+        // defaults (the shipped calibration). The override path itself is
+        // exercised by the calibration harness across PROCESSES (see the
+        // cache-caveat note in sim::cache) — deliberately not by mutating
+        // this process's environment, which would race other tests'
+        // getenv calls.
+        assert_eq!(cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION), 0.35);
+        assert_eq!(cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR), 2.0);
+        // Unset names fall back to the passed default verbatim.
+        assert_eq!(cal("PLX_CAL_DEFINITELY_UNSET_PROBE", 9.25), 9.25);
     }
 }

@@ -101,6 +101,7 @@ pub fn run_jobs(preset: &SweepPreset, hw: &Hardware, jobs: usize) -> SweepResult
         &preset.ckpts,
         &preset.kernels,
         &preset.sps,
+        &preset.scheds,
     );
     let rows = evaluate_layouts(&job, layouts, hw, jobs);
     SweepResult { preset_name: preset.name.to_string(), job, rows }
@@ -278,6 +279,14 @@ mod tests {
                 ckpts: src.ckpts.clone(),
                 kernels: src.kernels.clone(),
                 sps: src.sps.clone(),
+                // Exercise the schedule dimension through the parallel
+                // engine too: interleaved rows must scatter back into the
+                // same slots as the serial path computes.
+                scheds: if rng.bool() {
+                    vec![crate::layout::Schedule::OneF1B]
+                } else {
+                    vec![crate::layout::Schedule::OneF1B, crate::layout::Schedule::Interleaved(2)]
+                },
             };
             let jobs = rng.range(2, 9);
             let par = run_jobs(&preset, &A100, jobs);

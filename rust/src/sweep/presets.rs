@@ -2,7 +2,7 @@
 //! (main sweep) and Table 9 (sequence-parallelism sweep), one preset per
 //! appendix table.
 
-use crate::layout::{Job, Kernel};
+use crate::layout::{Job, Kernel, Schedule};
 use crate::model::arch::preset as arch_preset;
 use crate::topo::Cluster;
 
@@ -21,6 +21,10 @@ pub struct SweepPreset {
     pub ckpts: Vec<bool>,
     pub kernels: Vec<Kernel>,
     pub sps: Vec<bool>,
+    /// Pipeline schedules to sweep. The paper's tables all ran 1F1B, so
+    /// every paper preset pins this to `[OneF1B]`; `plx sweep --schedule
+    /// 1f1b,interleaved:2` (and custom presets) replace the set.
+    pub scheds: Vec<Schedule>,
 }
 
 impl SweepPreset {
@@ -47,6 +51,7 @@ pub fn main_presets() -> Vec<SweepPreset> {
             ckpts: vec![false, true],
             kernels: vec![Torch, Fused, Flash1, Flash2, Flash2Rms],
             sps: vec![false],
+            scheds: vec![Schedule::OneF1B],
         },
         SweepPreset {
             name: "13b-8k",
@@ -60,6 +65,7 @@ pub fn main_presets() -> Vec<SweepPreset> {
             ckpts: vec![false, true],
             kernels: vec![Torch, Flash1, Flash2, Flash2Rms],
             sps: vec![false],
+            scheds: vec![Schedule::OneF1B],
         },
         SweepPreset {
             name: "30b-2k",
@@ -75,6 +81,7 @@ pub fn main_presets() -> Vec<SweepPreset> {
             // … we excluded it for larger models."
             kernels: vec![Fused, Flash1, Flash2, Flash2Rms],
             sps: vec![false],
+            scheds: vec![Schedule::OneF1B],
         },
         SweepPreset {
             name: "30b-8k",
@@ -88,6 +95,7 @@ pub fn main_presets() -> Vec<SweepPreset> {
             ckpts: vec![false, true],
             kernels: vec![Flash1, Flash2, Flash2Rms],
             sps: vec![false],
+            scheds: vec![Schedule::OneF1B],
         },
         SweepPreset {
             name: "65b-2k",
@@ -101,6 +109,7 @@ pub fn main_presets() -> Vec<SweepPreset> {
             ckpts: vec![false, true],
             kernels: vec![Flash1, Flash2, Flash2Rms],
             sps: vec![false],
+            scheds: vec![Schedule::OneF1B],
         },
     ]
 }
@@ -120,6 +129,7 @@ pub fn seqpar_presets() -> Vec<SweepPreset> {
         ckpts: vec![false],
         kernels: vec![Flash2Rms],
         sps: vec![false, true],
+        scheds: vec![Schedule::OneF1B],
     };
     vec![
         base("sp-13b-2k", "Table 10 (C.2)", "llama13b", 32, 2048,

@@ -5,11 +5,19 @@ use crate::sweep::engine::SweepResult;
 use crate::util::table;
 
 /// Render an appendix-style table (Tables 4–8 / 10–14 format):
-/// `Step Time | MFU | Activation | Kernel | MB | TP | PP [| Seq Par]`.
+/// `Step Time | MFU | Activation | Kernel | MB | TP | PP [| Seq Par]
+/// [| Schedule]`. The Schedule column appears only when the sweep
+/// actually left the paper's 1F1B (keeps the paper-table fixtures
+/// byte-stable).
 pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
+    let with_sched_column =
+        result.rows.iter().any(|r| r.layout().sched != crate::layout::Schedule::OneF1B);
     let mut headers = vec!["Step Time", "MFU", "Activation", "Kernel", "MB", "TP", "PP"];
     if with_sp_column {
         headers.push("Seq Parallel");
+    }
+    if with_sched_column {
+        headers.push("Schedule");
     }
     let rows: Vec<Vec<String>> = result
         .sorted()
@@ -34,6 +42,9 @@ pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
             ];
             if with_sp_column {
                 row.push(if l.sp { "True" } else { "False" }.to_string());
+            }
+            if with_sched_column {
+                row.push(l.sched.label());
             }
             row
         })
@@ -60,7 +71,7 @@ pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
 /// CSV form (for plotting / EXPERIMENTS.md appendices).
 pub fn to_csv(result: &SweepResult) -> String {
     let headers = [
-        "step_time_s", "mfu", "ckpt", "kernel", "mb", "tp", "pp", "sp", "status",
+        "step_time_s", "mfu", "ckpt", "kernel", "mb", "tp", "pp", "sp", "sched", "status",
     ];
     let rows: Vec<Vec<String>> = result
         .sorted()
@@ -82,6 +93,7 @@ pub fn to_csv(result: &SweepResult) -> String {
                 l.tp.to_string(),
                 l.pp.to_string(),
                 l.sp.to_string(),
+                l.sched.label(),
                 r.outcome.status_label(),
             ]
         })
@@ -112,5 +124,20 @@ mod tests {
         let r = run(&main_presets()[0], &A100);
         let csv = to_csv(&r);
         assert_eq!(csv.lines().count(), r.rows.len() + 1);
+        assert!(csv.lines().next().unwrap().contains("sched"));
+    }
+
+    #[test]
+    fn schedule_column_appears_only_when_swept() {
+        use crate::layout::Schedule;
+        let base = main_presets().into_iter().next().unwrap();
+        // Paper preset: pure 1F1B, no Schedule column (fixtures stable).
+        assert!(!render(&run(&base, &A100), false).contains("Schedule"));
+        // Sweeping the new dimension annotates it.
+        let mut widened = base;
+        widened.scheds = vec![Schedule::OneF1B, Schedule::Interleaved(2)];
+        let t = render(&run(&widened, &A100), false);
+        assert!(t.contains("Schedule"));
+        assert!(t.contains("interleaved:2"));
     }
 }

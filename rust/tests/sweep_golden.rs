@@ -164,17 +164,17 @@ fn table2_recomputed_baselines_match_appendix_a() {
     }
 }
 
-#[test]
-fn table2_matches_checked_in_golden() {
-    // The fixture pins the exact bytes of `plx table 2` (CI diffs the CLI
-    // output against it too, so sweep/simulator regressions fail fast).
-    // Re-bless after an intentional recalibration with either
-    //   PLX_UPDATE_GOLDEN=1 cargo test -q table2_matches_checked_in_golden
-    // or `python3 tools/gen_golden.py` (the no-toolchain mirror).
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/table2.txt");
-    let rendered = table2::render(&A100);
+/// Shared golden-fixture gate: the rendered table must match the
+/// checked-in bytes (CI diffs the CLI output against the same files).
+/// Re-bless after an intentional recalibration with either
+/// `PLX_UPDATE_GOLDEN=1 cargo test -q _matches_checked_in_golden` or
+/// `python3 tools/gen_golden.py` (the no-toolchain mirror).
+fn assert_matches_golden(fixture: &str, what: &str, rendered: &str) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(fixture);
     if std::env::var_os("PLX_UPDATE_GOLDEN").is_some() {
-        std::fs::write(&path, &rendered).unwrap();
+        std::fs::write(&path, rendered).unwrap();
         eprintln!("golden fixture re-blessed: {}", path.display());
         return;
     }
@@ -182,9 +182,63 @@ fn table2_matches_checked_in_golden() {
         .unwrap_or_else(|e| panic!("missing golden fixture {}: {e}", path.display()));
     assert_eq!(
         rendered, golden,
-        "`plx table 2` diverged from tests/golden/table2.txt; if the change \
-         is an intentional recalibration, re-bless with PLX_UPDATE_GOLDEN=1"
+        "`{what}` diverged from tests/golden/{fixture}; if the change is an \
+         intentional recalibration, re-bless with PLX_UPDATE_GOLDEN=1"
     );
+}
+
+#[test]
+fn table2_matches_checked_in_golden() {
+    assert_matches_golden("table2.txt", "plx table 2", &table2::render(&A100));
+}
+
+#[test]
+fn table3_matches_checked_in_golden() {
+    // Companion gate to the table 2 fixture: `plx table 3` (the best
+    // end-to-end configuration per model) is pinned byte-for-byte.
+    assert_matches_golden("table3.txt", "plx table 3", &figures::table3(&A100));
+}
+
+#[test]
+fn schedule_dimension_sweeps_deterministically() {
+    // The new layout dimension through the whole engine: widen a paper
+    // preset with interleaved-1F1B, check parallel/serial identity and
+    // that every interleaved row strictly reduces the bubble vs its plain
+    // sibling at the same (tp, pp, mb, ckpt, kernel, sp).
+    use plx::layout::Schedule;
+    let mut p = main_presets().into_iter().next().unwrap();
+    p.scheds = vec![Schedule::OneF1B, Schedule::Interleaved(2)];
+    let ser = run_jobs(&p, &A100, 1);
+    let par = run_jobs(&p, &A100, 6);
+    assert_eq!(report::render(&ser, false), report::render(&par, false));
+    let mut interleaved_rows = 0;
+    for row in &ser.rows {
+        if row.layout().sched != Schedule::Interleaved(2) {
+            continue;
+        }
+        let plain = ser.rows.iter().find(|r| {
+            let (a, b) = (r.layout(), row.layout());
+            r.layout().sched == Schedule::OneF1B
+                && (a.tp, a.pp, a.mb, a.ckpt, a.kernel, a.sp)
+                    == (b.tp, b.pp, b.mb, b.ckpt, b.kernel, b.sp)
+        });
+        let Some(plain) = plain else { continue };
+        if let (
+            Outcome::Ok { step: si, .. },
+            Outcome::Ok { step: sp, .. },
+        ) = (row.outcome, plain.outcome)
+        {
+            interleaved_rows += 1;
+            assert!(
+                si.bubble < sp.bubble,
+                "{}: interleaved bubble {} >= plain {}",
+                row.layout().annotation(),
+                si.bubble,
+                sp.bubble
+            );
+        }
+    }
+    assert!(interleaved_rows > 0, "no runnable interleaved rows swept");
 }
 
 #[test]

@@ -176,3 +176,15 @@ fn missing_artifacts_reports_helpfully() {
     let err = train(&c).unwrap_err();
     assert!(format!("{err:#}").contains("compile.aot"));
 }
+
+#[test]
+fn interleaved_schedule_rejected_before_launch() {
+    // The analytic simulator prices interleaved 1F1B, but the PJRT
+    // trainer compiles one contiguous chunk per rank — launching with it
+    // must fail fast with a pointed message (no artifacts needed: the
+    // check precedes manifest loading).
+    let mut c = cfg(2, 2, 1);
+    c.schedule = plx::coordinator::trainer::Schedule::Interleaved(2);
+    let err = train(&c).unwrap_err();
+    assert!(format!("{err:#}").contains("interleaved"), "{err:#}");
+}

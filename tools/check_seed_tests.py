@@ -4,6 +4,12 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
+Two suites, reported separately:
+  * the SEED suite — the original 53 assertions (reported first, as
+    "PASS 53 / 53", so the historical gate line is stable);
+  * the SCHEDULE suite — the assertions added with the sim/schedule
+    subsystem (event-driven makespan, interleaved 1F1B, planner rule 7).
+
 Run: python3 tools/check_seed_tests.py
 """
 
@@ -581,10 +587,239 @@ CHECKS = [
 ]
 
 
+# ------------------------------------------------------------- schedule suite
+# Mirrors the Rust tests added with the sim/schedule subsystem (PR 2).
+
+def t_sched_uniform_1f1b_equals_closed_form():
+    # rust/src/sim/schedule/makespan.rs::uniform_1f1b_equals_closed_form_bound
+    for pp, m, tf, tb in [(1, 5, 0.7, 1.3), (2, 9, 1.0, 2.0), (8, 32, 1.9, 0.2),
+                          (3, 3, 0.5, 0.5), (6, 24, 0.31, 2.7)]:
+        scheds = [one_f1b(p, pp, m) for p in range(pp)]
+        total, _busy = makespan(pp, 1, m, scheds, tf, tb, 0.0, 0.0, 0.0)
+        closed = (m + pp - 1) * (tf + tb)
+        assert abs(total - closed) / closed < 1e-9, (pp, m, total, closed)
+
+
+def t_sched_interleaved_units_once_and_deadlock_free():
+    # rust/src/sim/schedule/gen.rs::every_unit_exactly_once_interleaved (+ deadlock)
+    for pp in [2, 3, 4]:
+        for v in [2, 3, 4]:
+            for m in [pp, 2 * pp, 4 * pp]:
+                scheds = [interleaved_1f1b(p, pp, m, v) for p in range(pp)]
+                for p in range(pp):
+                    ops = scheds[p]
+                    assert len(ops) == 2 * m * v
+                    fw = sorted((i, c) for (k, i, c) in ops if k == F)
+                    bw = sorted((i, c) for (k, i, c) in ops if k == B)
+                    want = sorted((i, c) for i in range(m) for c in range(v))
+                    assert fw == want and bw == want, (pp, v, m, p)
+                assert makespan(pp, v, m, scheds, 1.0, 2.0, 0.0, 0.0, 0.0) is not None
+
+
+def t_sched_interleaving_shrinks_uniform_bubble():
+    # rust/src/sim/schedule/makespan.rs::interleaving_strictly_shrinks_uniform_bubble
+    for pp in [2, 4, 8]:
+        for v in [2, 4]:
+            m = 4 * pp
+            t1, b1 = makespan(pp, 1, m, [one_f1b(p, pp, m) for p in range(pp)],
+                              1.0, 2.0, 0.0, 0.0, 0.0)
+            tv, bv = makespan(pp, v, m, [interleaved_1f1b(p, pp, m, v) for p in range(pp)],
+                              1.0 / v, 2.0 / v, 0.0, 0.0, 0.0)
+            assert tv < t1, (pp, v)
+            bub1 = t1 - max(b1)
+            bubv = tv - max(bv)
+            assert abs(bubv - bub1 / v) < 1e-9, (pp, v, bubv, bub1)
+
+
+def t_sched_busy_accounts_every_op_cost():
+    # rust/src/sim/schedule/makespan.rs::busy_accounts_every_op_cost
+    f_, b_, hf, hb, p2p = 1.0, 2.0, 0.5, 1.5, 0.25
+    pp, m = 3, 6
+    _total, busy = makespan(pp, 1, m, [one_f1b(p, pp, m) for p in range(pp)],
+                            f_, b_, hf, hb, p2p)
+    assert abs(busy[1] - (m * (f_ + p2p) + m * (b_ + p2p))) < 1e-12
+    assert abs(busy[2] - (m * (f_ + hf + p2p) + m * (b_ + hb))) < 1e-12
+
+
+def t_sched_gpipe_never_beats_1f1b_makespan():
+    # rust/src/sim/schedule/makespan.rs::gpipe_never_beats_1f1b_makespan
+    for pp in range(2, 6):
+        for m in [pp, 2 * pp, 4 * pp]:
+            tf, _ = makespan(pp, 1, m, [one_f1b(p, pp, m) for p in range(pp)],
+                             1.0, 2.0, 0.3, 0.6, 0.1)
+            tg, _ = makespan(pp, 1, m, [gpipe_sched(p, pp, m) for p in range(pp)],
+                             1.0, 2.0, 0.3, 0.6, 0.1)
+            assert tg >= tf - 1e-12, (pp, m, tf, tg)
+
+
+def t_sched_interleaved_holds_more_in_flight():
+    # rust/src/sim/schedule/gen.rs::interleaved_holds_more_than_plain_on_stage0
+    for pp, v in [(2, 2), (4, 2), (2, 4), (4, 4)]:
+        m = 4 * pp
+        assert peak_in_flight(interleaved_1f1b(0, pp, m, v)) > peak_in_flight(one_f1b(0, pp, m))
+
+
+def t_st_interleaving_strictly_reduces_bubble():
+    # rust/src/sim/step_time.rs::interleaving_strictly_reduces_bubble
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    for pp, vv in [(2, 2), (2, 4), (4, 2), (4, 5)]:
+        plain = step_time(job, validate(job, Layout(1, pp, 1, False, FLASH2RMS, False)), A100)
+        inter = step_time(
+            job, validate(job, Layout(1, pp, 1, False, FLASH2RMS, False, sched_interleaved(vv))),
+            A100)
+        assert inter.bubble < plain.bubble, (pp, vv)
+        assert inter.total() < plain.total(), (pp, vv)
+
+
+def t_st_gpipe_never_faster():
+    # rust/src/sim/step_time.rs::gpipe_never_faster_than_1f1b (epsilon: the
+    # two op streams sum the same costs in different float orders)
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    for pp in [2, 4]:
+        f1b = step_time(job, validate(job, Layout(1, pp, 1, False, FLASH2RMS, False)), A100).total()
+        gp = step_time(
+            job, validate(job, Layout(1, pp, 1, False, FLASH2RMS, False, SCHED_GPIPE)), A100).total()
+        assert gp >= f1b - 1e-9 * f1b, (pp, f1b, gp)
+
+
+def t_st_calibration_defaults_unchanged():
+    # rust/src/sim/step_time.rs::calibration_defaults_unchanged
+    assert cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION) == 0.35
+    assert cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR) == 2.0
+    assert cal("PLX_CAL_DEFINITELY_UNSET_PROBE", 9.25) == 9.25
+
+
+def t_mem_schedule_drives_in_flight():
+    # rust/src/sim/memory.rs::schedule_drives_in_flight_memory
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    a1 = per_gpu_memory(job, validate(job, Layout(2, 2, 1, False, FLASH2, False)), A100).activations
+    ag = per_gpu_memory(
+        job, validate(job, Layout(2, 2, 1, False, FLASH2, False, SCHED_GPIPE)), A100).activations
+    ai = per_gpu_memory(
+        job, validate(job, Layout(2, 2, 1, False, FLASH2, False, sched_interleaved(2))),
+        A100).activations
+    assert ag > 10.0 * a1 and a1 < ai < ag, (a1, ai, ag)
+
+
+def t_layout_schedule_validation_rules():
+    # rust/src/layout/mod.rs::schedule_validation_rules
+    j = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+
+    def ok(l):
+        try:
+            validate(j, l)
+            return True
+        except ValueError:
+            return False
+
+    base = Layout(1, 2, 1, False, FLASH2RMS, False, sched_interleaved(2))
+    assert ok(base)
+    assert ok(Layout(1, 2, 1, False, FLASH2RMS, False, sched_interleaved(4)))
+    assert not ok(Layout(1, 2, 1, False, FLASH2RMS, False, sched_interleaved(3)))
+    assert not ok(Layout(1, 2, 1, False, FLASH2RMS, False, sched_interleaved(1)))
+    assert not ok(Layout(1, 1, 1, False, FLASH2RMS, False, sched_interleaved(2)))
+    assert ok(Layout(1, 2, 1, False, FLASH2RMS, False, SCHED_GPIPE))
+    j1 = Job(preset("llama13b"), Cluster.dgx_a100(8), 64)
+    try:
+        validate(j1, Layout(1, 2, 2, False, FLASH2RMS, False, sched_interleaved(2)))
+        raise AssertionError("num_micro % pp should reject m=1")
+    except ValueError:
+        pass
+
+
+def t_eval_distinct_schedule_distinct_outcome():
+    # rust/src/sim/cache.rs::distinct_schedule_is_distinct_key
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    plain = evaluate(job, validate(job, Layout(2, 2, 1, False, FLASH2, False)), A100)
+    inter = evaluate(
+        job, validate(job, Layout(2, 2, 1, False, FLASH2, False, sched_interleaved(2))), A100)
+    assert plain.step_time_opt() != inter.step_time_opt()
+
+
+def t_planner_rule7_small_accumulation():
+    # rust/src/planner/mod.rs::rule7_interleaves_when_bubble_dominates
+    j = Job(preset("llama65b"), Cluster.dgx_a100(16), 128)
+    p = plan_by_rules(j, A100)
+    assert p.v.layout.pp >= 2 and p.v.layout.sched.startswith("interleaved:"), p.v.layout
+    plain = validate(j, Layout(p.v.layout.tp, p.v.layout.pp, p.v.layout.mb,
+                               p.v.layout.ckpt, p.v.layout.kernel, p.v.layout.sp))
+    o = evaluate(j, plain, A100)
+    assert o.kind != "ok" or p.predicted_mfu > o.mfu
+
+
+def t_planner_rule7_paper_jobs_stay_1f1b():
+    # rust/src/planner/mod.rs::rule7_keeps_paper_jobs_on_plain_1f1b
+    for name, nodes in [("llama13b", 8), ("llama65b", 8)]:
+        arch = preset(name)
+        j = Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+        assert plan_by_rules(j, A100).v.layout.sched == SCHED_1F1B, name
+
+
+def t_sweep_interleaved_rows_shrink_bubble():
+    # rust/tests/sweep_golden.rs::schedule_dimension_sweeps_deterministically
+    import dataclasses
+    p = dataclasses.replace(main_presets()[0], scheds=(SCHED_1F1B, sched_interleaved(2)))
+    r = run(p, A100)
+    found = 0
+    for row in r.rows:
+        l = row.layout()
+        if l.sched != "interleaved:2" or row.outcome.kind != "ok":
+            continue
+        sib = next(x for x in r.rows
+                   if x.layout() == Layout(l.tp, l.pp, l.mb, l.ckpt, l.kernel, l.sp))
+        if sib.outcome.kind != "ok":
+            continue
+        found += 1
+        assert row.outcome.step.bubble < sib.outcome.step.bubble, l
+    assert found > 0
+
+
+def t_report_schedule_column_only_when_swept():
+    # rust/src/sweep/report.rs::schedule_column_appears_only_when_swept
+    import dataclasses
+    base = main_presets()[0]
+    assert "Schedule" not in report_render(run(base, A100), False)
+    widened = dataclasses.replace(base, scheds=(SCHED_1F1B, sched_interleaved(2)))
+    t = report_render(run(widened, A100), False)
+    assert "Schedule" in t and "interleaved:2" in t
+
+
+def t_layout_annotation_includes_schedule():
+    # rust/src/layout/mod.rs::Layout::annotation (schedule suffix)
+    assert Layout(1, 2, 1, False, FLASH2RMS, False).annotation() == "(1, 1, 2)"
+    assert Layout(1, 2, 1, False, FLASH2RMS, False,
+                  sched_interleaved(2)).annotation() == "(1, 1, 2, interleaved:2)"
+
+
+SCHEDULE_CHECKS = [
+    ("schedule::uniform_1f1b_equals_closed_form_bound", t_sched_uniform_1f1b_equals_closed_form),
+    ("schedule::every_unit_exactly_once_interleaved", t_sched_interleaved_units_once_and_deadlock_free),
+    ("schedule::interleaving_strictly_shrinks_uniform_bubble", t_sched_interleaving_shrinks_uniform_bubble),
+    ("schedule::busy_accounts_every_op_cost", t_sched_busy_accounts_every_op_cost),
+    ("schedule::gpipe_never_beats_1f1b_makespan", t_sched_gpipe_never_beats_1f1b_makespan),
+    ("schedule::interleaved_holds_more_than_plain_on_stage0", t_sched_interleaved_holds_more_in_flight),
+    ("step_time::interleaving_strictly_reduces_bubble", t_st_interleaving_strictly_reduces_bubble),
+    ("step_time::gpipe_never_faster_than_1f1b", t_st_gpipe_never_faster),
+    ("step_time::calibration_defaults_unchanged", t_st_calibration_defaults_unchanged),
+    ("memory::schedule_drives_in_flight_memory", t_mem_schedule_drives_in_flight),
+    ("layout::schedule_validation_rules", t_layout_schedule_validation_rules),
+    ("layout::annotation_includes_schedule", t_layout_annotation_includes_schedule),
+    ("cache::distinct_schedule_is_distinct_key", t_eval_distinct_schedule_distinct_outcome),
+    ("planner::rule7_interleaves_when_bubble_dominates", t_planner_rule7_small_accumulation),
+    ("planner::rule7_keeps_paper_jobs_on_plain_1f1b", t_planner_rule7_paper_jobs_stay_1f1b),
+    ("sweep_golden::schedule_dimension_sweeps_deterministically", t_sweep_interleaved_rows_shrink_bubble),
+    ("report::schedule_column_appears_only_when_swept", t_report_schedule_column_only_when_swept),
+]
+
+
 def main():
     for name, fn in CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS)} / {len(CHECKS)}")
+    seed_pass = len(PASS)
+    for name, fn in SCHEDULE_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - seed_pass} / {len(SCHEDULE_CHECKS)} (schedule suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

@@ -1,31 +1,33 @@
-"""Regenerate the checked-in golden fixture for `plx table 2`.
+"""Regenerate the checked-in golden fixtures for `plx table 2` and
+`plx table 3`.
 
-Usage: python3 tools/gen_golden.py [out-path]
-Default out-path: rust/tests/golden/table2.txt
+Usage: python3 tools/gen_golden.py [out-dir]
+Default out-dir: rust/tests/golden/
 
-The fixture must stay byte-identical to `cargo run --release -- table 2`;
-tools/pysim.py mirrors the Rust simulator expression-for-expression. When
-the simulator is recalibrated, re-bless either with this script or with
-`PLX_UPDATE_GOLDEN=1 cargo test -q table2_matches_checked_in_golden`.
+Each fixture must stay byte-identical to the corresponding
+`cargo run --release -- table N` output; tools/pysim.py mirrors the Rust
+simulator expression-for-expression. When the simulator is recalibrated,
+re-bless either with this script or with
+`PLX_UPDATE_GOLDEN=1 cargo test -q _matches_checked_in_golden`.
 """
 
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
-from pysim import A100, table2_render
+from pysim import A100, table2_render, table3_render
 
 
 def main():
-    out = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
-        os.path.dirname(__file__), "..", "rust", "tests", "golden", "table2.txt")
-    text = table2_render(A100)
-    out_dir = os.path.dirname(out)
-    if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
-    with open(out, "w") as f:
-        f.write(text)
-    print(f"wrote {out} ({len(text)} bytes)")
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "golden")
+    os.makedirs(out_dir, exist_ok=True)
+    for name, render in [("table2.txt", table2_render), ("table3.txt", table3_render)]:
+        text = render(A100)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} bytes)")
 
 
 if __name__ == "__main__":

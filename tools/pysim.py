@@ -1,8 +1,9 @@
 """Python mirror of the plx analytical simulator (rust/src/{model,sim,layout,topo,sweep,planner}).
 
 Purpose: cross-validation of the Rust implementation in environments
-without a Rust toolchain, and generation of the checked-in golden fixture
-for `plx table 2` (see tools/gen_golden.py and rust/tests/golden/).
+without a Rust toolchain, and generation of the checked-in golden
+fixtures for `plx table 2` and `plx table 3` (see tools/gen_golden.py and
+rust/tests/golden/).
 
 Every arithmetic expression is transcribed from the Rust source with the
 SAME association order, integer/float conversion points, and truncating
@@ -10,24 +11,28 @@ integer divisions, so that IEEE-754 f64 results are bit-identical (modulo
 libm pow/log, which are correctly rounded on glibc >= 2.28).
 
 Rust source of truth:
-  rust/src/model/arch.rs      -> LlamaArch / PRESETS
-  rust/src/sim/cluster.rs     -> Hardware / A100 / H100 / collective times
-  rust/src/sim/kernels.rs     -> KernelPerf / dense_matmul_eff / availability
-  rust/src/sim/memory.rs      -> act_bytes_per_layer / per_gpu_memory
-  rust/src/sim/step_time.rs   -> stage_micro_time / step_time
-  rust/src/sim/mfu.rs         -> mfu / megatron_mfu / llama_meta_mfu
-  rust/src/layout/mod.rs      -> validate / enumerate
-  rust/src/topo/mod.rs        -> Cluster / Topology
-  rust/src/sweep/presets.rs   -> main_presets / seqpar_presets
-  rust/src/sweep/engine.rs    -> run / sorted / best_where
-  rust/src/sweep/report.rs    -> render / to_csv
-  rust/src/sweep/table2.rs    -> rows / render
-  rust/src/sweep/figures.rs   -> figure1..5 / table3
-  rust/src/planner/mod.rs     -> plan_by_rules / plan_exhaustive
-  rust/src/util/table.rs      -> render / pct / secs
+  rust/src/model/arch.rs          -> LlamaArch / PRESETS
+  rust/src/sim/cluster.rs         -> Hardware / A100 / H100 / collective times
+  rust/src/sim/kernels.rs         -> KernelPerf / dense_matmul_eff / cal / availability
+  rust/src/sim/schedule/gen.rs    -> one_f1b / gpipe / interleaved_1f1b / peak_in_flight
+  rust/src/sim/schedule/makespan.rs -> makespan (event-driven executor)
+  rust/src/sim/memory.rs          -> act_bytes_per_layer / per_gpu_memory
+  rust/src/sim/step_time.rs       -> stage_costs / step_time
+  rust/src/sim/mfu.rs             -> mfu / megatron_mfu / llama_meta_mfu
+  rust/src/sim/cache.rs           -> evaluate_cached (the memo on evaluate)
+  rust/src/layout/mod.rs          -> validate / enumerate (incl. schedule rules)
+  rust/src/topo/mod.rs            -> Cluster / Topology
+  rust/src/sweep/presets.rs       -> main_presets / seqpar_presets
+  rust/src/sweep/engine.rs        -> run / sorted / best_where
+  rust/src/sweep/report.rs        -> render / to_csv
+  rust/src/sweep/table2.rs        -> rows / render
+  rust/src/sweep/figures.rs       -> figure1..5 / table3 / table3_render
+  rust/src/planner/mod.rs         -> plan_by_rules / refine_interleaved / plan_exhaustive
+  rust/src/util/table.rs          -> render / pct / secs
 """
 
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
 
@@ -152,12 +157,24 @@ KERNEL_PERF = {
 }
 
 
+def cal(name, default):
+    # Mirrors rust/src/sim/kernels.rs::cal: env override, else default.
+    val = os.environ.get(name)
+    if val is None:
+        return default
+    try:
+        return float(val)
+    except ValueError:
+        return default
+
+
 def dense_matmul_eff(tp, mb, seq, hidden):
-    base = 0.74
+    base = cal("PLX_CAL_EFF_BASE", 0.74)
     seq_comp = math.sqrt(float(seq) / 2048.0)
-    mb_comp = math.pow(float(mb), 0.12)
+    mb_comp = math.pow(float(mb), cal("PLX_CAL_MB_EXP", 0.12))
     shape = math.pow(
-        min(float(hidden) / float(tp) / 5120.0 * seq_comp * mb_comp, 1.0), 0.22)
+        min(float(hidden) / float(tp) / 5120.0 * seq_comp * mb_comp, 1.0),
+        cal("PLX_CAL_SHARD_EXP", 0.22))
     return base * shape
 
 
@@ -165,6 +182,182 @@ def kernel_available(k, heads, tp, mb):
     if k == FUSED:
         return (mb * heads // tp) % 4 == 0
     return True
+
+# ---------------------------------------------------------------- sim/schedule
+
+SCHED_1F1B = "1f1b"
+SCHED_GPIPE = "gpipe"
+
+F, B = 0, 1  # op kinds: forward / backward of (micro, chunk)
+
+
+def sched_interleaved(v):
+    return f"interleaved:{v}"
+
+
+def sched_vstages(sched):
+    if sched.startswith("interleaved:"):
+        return int(sched.split(":", 1)[1])
+    return 1
+
+
+def one_f1b(p, pp, m):
+    assert p < pp
+    warmup = min(pp - 1 - p, m)
+    ops = []
+    for i in range(warmup):
+        ops.append((F, i, 0))
+    for i in range(warmup, m):
+        ops.append((F, i, 0))
+        ops.append((B, i - warmup, 0))
+    for i in range(m - min(warmup, m), m):
+        ops.append((B, i, 0))
+    return ops
+
+
+def gpipe_sched(p, pp, m):
+    assert p < pp
+    ops = []
+    for i in range(m):
+        ops.append((F, i, 0))
+    for i in reversed(range(m)):
+        ops.append((B, i, 0))
+    return ops
+
+
+def interleaved_1f1b(p, pp, m, v):
+    # Megatron-LM interleaved 1F1B (Narayanan et al. 2021): each rank holds
+    # v model chunks; chunk c on rank p is virtual stage c*pp + p. Requires
+    # m % pp == 0 (validate enforces it).
+    assert p < pp and v >= 1 and m % pp == 0
+    group = pp * v
+    total = m * v
+
+    def fwd_unit(k):
+        within = k % group
+        return ((k // group) * pp + within % pp, within // pp)
+
+    def bwd_unit(k):
+        within = k % group
+        return ((k // group) * pp + within % pp, v - 1 - within // pp)
+
+    warmup = min((pp - p - 1) * 2 + (v - 1) * pp, total)
+    ops = []
+    fk = 0
+    bk = 0
+    for _ in range(warmup):
+        i, c = fwd_unit(fk)
+        ops.append((F, i, c))
+        fk += 1
+    for _ in range(total - warmup):
+        i, c = fwd_unit(fk)
+        ops.append((F, i, c))
+        fk += 1
+        i, c = bwd_unit(bk)
+        ops.append((B, i, c))
+        bk += 1
+    while bk < total:
+        i, c = bwd_unit(bk)
+        ops.append((B, i, c))
+        bk += 1
+    return ops
+
+
+def sched_ops(sched, p, pp, m):
+    if sched == SCHED_1F1B:
+        return one_f1b(p, pp, m)
+    if sched == SCHED_GPIPE:
+        return gpipe_sched(p, pp, m)
+    return interleaved_1f1b(p, pp, m, sched_vstages(sched))
+
+
+def peak_in_flight(ops):
+    live = 0
+    peak = 0
+    for kind, _i, _c in ops:
+        if kind == F:
+            live += 1
+            if live > peak:
+                peak = live
+        else:
+            live -= 1
+    return peak
+
+
+def makespan(pp, vst, m, scheds, fwd_cost, bwd_cost, head_fwd, head_bwd, p2p):
+    """Event-driven makespan of per-stage op streams.
+
+    Mirrors rust/src/sim/schedule/makespan.rs::makespan expression for
+    expression. Each physical stage executes its ops in order; an op
+    starts at max(stage free time, dependency finish) and costs
+    base + head extra (last virtual stage only) + p2p (cross-stage
+    dependency only; the receive serializes on the consuming stage).
+    Returns (total, busy[]) or None on deadlock.
+    """
+    nvs = pp * vst
+    fwd_t = [[None] * m for _ in range(nvs)]
+    bwd_t = [[None] * m for _ in range(nvs)]
+    pos = [0] * pp
+    free = [0.0] * pp
+    busy = [0.0] * pp
+    total_ops = 0
+    for s in scheds:
+        total_ops += len(s)
+    done = 0
+    while done < total_ops:
+        progressed = False
+        for p in range(pp):
+            sched = scheds[p]
+            while pos[p] < len(sched):
+                kind, i, c = sched[pos[p]]
+                vs = c * pp + p
+                if kind == F:
+                    if vs == 0:
+                        dep = 0.0
+                        cross = False
+                    else:
+                        t = fwd_t[vs - 1][i]
+                        if t is None:
+                            break
+                        dep = t
+                        cross = (vs - 1) % pp != p
+                    cost = (fwd_cost
+                            + (head_fwd if vs == nvs - 1 else 0.0)
+                            + (p2p if cross else 0.0))
+                else:
+                    own = fwd_t[vs][i]
+                    if own is None:
+                        break
+                    if vs == nvs - 1:
+                        dep = own
+                        cross = False
+                    else:
+                        t = bwd_t[vs + 1][i]
+                        if t is None:
+                            break
+                        dep = own if own > t else t
+                        cross = (vs + 1) % pp != p
+                    cost = (bwd_cost
+                            + (head_bwd if vs == nvs - 1 else 0.0)
+                            + (p2p if cross else 0.0))
+                start = free[p] if free[p] > dep else dep
+                fin = start + cost
+                if kind == F:
+                    fwd_t[vs][i] = fin
+                else:
+                    bwd_t[vs][i] = fin
+                free[p] = fin
+                busy[p] += cost
+                pos[p] += 1
+                done += 1
+                progressed = True
+        if not progressed:
+            return None
+    total = 0.0
+    for t in free:
+        if t > total:
+            total = t
+    return total, busy
 
 # ---------------------------------------------------------------- topo
 
@@ -216,9 +409,12 @@ class Layout:
     ckpt: bool
     kernel: str
     sp: bool
+    sched: str = SCHED_1F1B
 
     def annotation(self):
-        return f"({self.mb}, {self.tp}, {self.pp})"
+        if self.sched == SCHED_1F1B:
+            return f"({self.mb}, {self.tp}, {self.pp})"
+        return f"({self.mb}, {self.tp}, {self.pp}, {self.sched})"
 
 
 @dataclass(frozen=True)
@@ -255,10 +451,20 @@ def validate(job, l):
     if job.gbs % replica_batch != 0:
         raise ValueError("gbs not divisible")
     num_micro = job.gbs // replica_batch
+    if l.sched.startswith("interleaved:"):
+        vst = sched_vstages(l.sched)
+        if vst < 2:
+            raise ValueError("interleaved schedule needs v >= 2 virtual stages")
+        if l.pp < 2:
+            raise ValueError("interleaved schedule needs pp >= 2")
+        if (job.arch.layers // l.pp) % vst != 0:
+            raise ValueError("layers/pp not divisible by virtual stages")
+        if num_micro % l.pp != 0:
+            raise ValueError("interleaved schedule needs num_micro divisible by pp")
     return ValidLayout(l, topo, num_micro)
 
 
-def enumerate_layouts(job, tps, pps, mbs, ckpts, kernels, sps):
+def enumerate_layouts(job, tps, pps, mbs, ckpts, kernels, sps, scheds=(SCHED_1F1B,)):
     out = []
     for tp in tps:
         for pp in pps:
@@ -266,13 +472,14 @@ def enumerate_layouts(job, tps, pps, mbs, ckpts, kernels, sps):
                 for ckpt in ckpts:
                     for kernel in kernels:
                         for sp in sps:
-                            if ckpt and kernel == FLASH2RMS:
-                                continue
-                            l = Layout(tp, pp, mb, ckpt, kernel, sp)
-                            try:
-                                out.append(validate(job, l))
-                            except ValueError:
-                                pass
+                            for sched in scheds:
+                                if ckpt and kernel == FLASH2RMS:
+                                    continue
+                                l = Layout(tp, pp, mb, ckpt, kernel, sp, sched)
+                                try:
+                                    out.append(validate(job, l))
+                                except ValueError:
+                                    pass
     return out
 
 # ---------------------------------------------------------------- sim/memory
@@ -334,18 +541,21 @@ def per_gpu_memory(job, v, hw):
     grads = 2.0 * shard
     optimizer = 12.0 * shard / float(v.topo.dp)
 
-    layers_per_stage = float(a.layers // l.pp)
-    in_flight = float(min(l.pp, v.num_micro))
-    activations = act_bytes_per_layer(job, v) * layers_per_stage * in_flight
+    vst = sched_vstages(l.sched)
+    layers_per_chunk = float(a.layers // (l.pp * vst))
+    in_flight = float(peak_in_flight(sched_ops(l.sched, 0, l.pp, v.num_micro)))
+    activations = act_bytes_per_layer(job, v) * layers_per_chunk * in_flight
     if l.ckpt:
         no_ckpt = ValidLayout(
-            Layout(l.tp, l.pp, l.mb, False, l.kernel, l.sp), v.topo, v.num_micro)
+            Layout(l.tp, l.pp, l.mb, False, l.kernel, l.sp, l.sched), v.topo, v.num_micro)
         activations += act_bytes_per_layer(job, no_ckpt)
 
     if l.pp == 1:
         logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
     else:
-        head_acts = act_bytes_per_layer(job, v) * layers_per_stage
+        head_in_flight = float(
+            peak_in_flight(sched_ops(l.sched, l.pp - 1, l.pp, v.num_micro)))
+        head_acts = act_bytes_per_layer(job, v) * layers_per_chunk * head_in_flight
         head_logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
         head_total = head_acts + head_logits
         stage0_total = activations
@@ -364,7 +574,7 @@ def fits(job, v, hw):
 
 
 def model_state_bytes(job, v, hw):
-    # Mirrors rust/src/sim/memory.rs::model_state_bytes (new in this PR).
+    # Mirrors rust/src/sim/memory.rs::model_state_bytes.
     shard = float(job.arch.param_count()) / float(v.layout.tp * v.layout.pp)
     return 2.0 * shard + 2.0 * shard + 12.0 * shard / float(v.topo.dp) + hw.workspace_bytes
 
@@ -373,7 +583,6 @@ def model_state_bytes(job, v, hw):
 DP_EXPOSED_FRACTION = 0.35
 BWD_FACTOR = 2.0
 OPT_FIXED_S = 0.030
-PIPELINE_TAX = 0.10
 
 
 @dataclass(frozen=True)
@@ -390,12 +599,15 @@ class StepBreakdown:
                 + self.dp_comm + self.optimizer)
 
 
-def stage_micro_time(job, v, hw):
+def stage_costs(job, v, hw):
+    """Per-op cost model: (chunk_fwd, chunk_bwd, head_fwd, head_bwd,
+    tp_chunk, p2p_hop). Mirrors rust/src/sim/step_time.rs::stage_costs."""
     a = job.arch
     l = v.layout
     kp = KERNEL_PERF[l.kernel]
     tokens = l.mb * a.seq
-    layers_per_stage = float(a.layers // l.pp)
+    vst = sched_vstages(l.sched)
+    layers_per_chunk = float(a.layers // (l.pp * vst))
 
     dense_flops = (a.layer_fwd_flops(l.mb, a.seq)
                    - 4.0 * float(l.mb * a.seq * a.seq) * float(a.hidden))
@@ -411,60 +623,82 @@ def stage_micro_time(job, v, hw):
                      * float(a.heads * a.seq * a.seq * l.mb) / float(l.tp))
     t_mem = (norm_bytes + softmax_bytes) / hw.hbm_bw + hw.launch_overhead_s * 8.0
 
+    bwd_factor = cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR)
     ckpt_extra = 1.0 if l.ckpt else 0.0
-    dense_factor = 1.0 + BWD_FACTOR + ckpt_extra
-    attn_factor = 1.0 + BWD_FACTOR + ckpt_extra + (1.0 if is_flash(l.kernel) else 0.0)
-    mem_factor = 1.0 + BWD_FACTOR + ckpt_extra
-    t_stage = layers_per_stage * (t_dense * dense_factor + t_attn * attn_factor
-                                  + t_mem * mem_factor)
+    flash_extra = 1.0 if is_flash(l.kernel) else 0.0
+    layer_fwd = t_dense + t_attn + t_mem
+    layer_bwd = ((bwd_factor + ckpt_extra) * (t_dense + t_mem)
+                 + (bwd_factor + ckpt_extra + flash_extra) * t_attn)
+    chunk_fwd = layers_per_chunk * layer_fwd
+    chunk_bwd = layers_per_chunk * layer_bwd
 
     head_flops = a.head_fwd_flops(l.mb, a.seq)
-    t_head = (head_flops / float(l.tp)
-              / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden))
-              * (1.0 + BWD_FACTOR)
-              + 3.0 * 4.0 * float(tokens * a.vocab // l.tp) / hw.hbm_bw)
-    t_stage += t_head
-
-    tax = PIPELINE_TAX
-    t_stage *= 1.0 + tax * (1.0 - 1.0 / float(l.pp))
+    head_total = (head_flops / float(l.tp)
+                  / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden))
+                  * (1.0 + bwd_factor)
+                  + 3.0 * 4.0 * float(tokens * a.vocab // l.tp) / hw.hbm_bw)
+    head_fwd = head_total / (1.0 + bwd_factor)
+    head_bwd = head_total - head_fwd
 
     if l.tp > 1:
         bytes_ = 2.0 * sbh
-        per_layer = 4.0 * allreduce_time(bytes_, l.tp, hw.nvlink_bw, hw.coll_latency_s)
+        ar = allreduce_time(bytes_, l.tp, hw.nvlink_bw, hw.coll_latency_s)
         sp_factor = 0.95 if l.sp else 1.0
-        tp_comm = layers_per_stage * per_layer * sp_factor
+        tp_chunk = layers_per_chunk * (2.0 * ar) * sp_factor
     else:
-        tp_comm = 0.0
+        tp_chunk = 0.0
 
-    return (t_stage, tp_comm)
+    if l.pp > 1:
+        pbytes = 2.0 * float(l.mb * a.seq * a.hidden)
+        bw = hw.ib_bw if v.topo.pp_crosses_node() else hw.nvlink_bw
+        p2p_hop = p2p_time(pbytes, bw, hw.coll_latency_s)
+    else:
+        p2p_hop = 0.0
+
+    return (chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop)
 
 
 def step_time(job, v, hw):
     a = job.arch
     l = v.layout
-    m = float(v.num_micro)
+    m = v.num_micro
+    vst = sched_vstages(l.sched)
 
-    t_stage, tp_per_micro = stage_micro_time(job, v, hw)
+    chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop = \
+        stage_costs(job, v, hw)
 
+    scheds = [sched_ops(l.sched, p, l.pp, m) for p in range(l.pp)]
+    ms = makespan(l.pp, vst, m, scheds,
+                  chunk_fwd + tp_chunk, chunk_bwd + tp_chunk,
+                  head_fwd, head_bwd, p2p_hop)
+    assert ms is not None, "schedule deadlock"
+    total, busy = ms
+
+    b = 0
+    for p in range(1, l.pp):
+        if busy[p] > busy[b]:
+            b = p
+
+    comp_micro = float(vst) * (chunk_fwd + chunk_bwd)
+    if b == l.pp - 1:
+        comp_micro += head_fwd + head_bwd
+    tp_micro = 2.0 * float(vst) * tp_chunk
     if l.pp > 1:
-        bytes_ = 2.0 * float(l.mb * a.seq * a.hidden)
-        bw = hw.ib_bw if v.topo.pp_crosses_node() else hw.nvlink_bw
-        pp_per_micro = 2.0 * p2p_time(bytes_, bw, hw.coll_latency_s)
+        nf = vst if b > 0 else vst - 1
+        nb = vst if b < l.pp - 1 else vst - 1
+        pp_micro = float(nf + nb) * p2p_hop
     else:
-        pp_per_micro = 0.0
+        pp_micro = 0.0
 
-    steady_slots = m
-    bubble_slots = float(l.pp - 1)
-
-    compute = steady_slots * t_stage
-    tp_comm = steady_slots * tp_per_micro
-    pp_comm = steady_slots * pp_per_micro
-    bubble = bubble_slots * (t_stage + tp_per_micro + pp_per_micro)
+    compute = float(m) * comp_micro
+    tp_comm = float(m) * tp_micro
+    pp_comm = float(m) * pp_micro
+    bubble = total - busy[b]
 
     shard_bytes = 2.0 * float(a.param_count()) / float(l.tp * l.pp)
     dp_bw = hw.ib_bw if v.topo.cluster.nodes() > 1 else hw.nvlink_bw
     dp_comm = (allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s)
-               * DP_EXPOSED_FRACTION)
+               * cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION))
 
     opt_elems = float(a.param_count()) / float(l.tp * l.pp) / float(v.topo.dp)
     optimizer = (OPT_FIXED_S
@@ -526,7 +760,23 @@ class Outcome:
         return {"ok": "ok", "oom": "OOM Error", "unavail": "Kernel unavail."}[self.kind]
 
 
+_EVAL_CACHE = {}
+
+
 def evaluate(job, v, hw):
+    # Memoized like rust/src/sim/cache.rs::evaluate_cached: evaluate is a
+    # pure function of (job, layout, hardware). PLX_CAL_* env overrides
+    # are not part of the key (same caveat as the Rust cache).
+    key = (job, v, hw)
+    hit = _EVAL_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out = _evaluate_uncached(job, v, hw)
+    _EVAL_CACHE[key] = out
+    return out
+
+
+def _evaluate_uncached(job, v, hw):
     if not kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb):
         return Outcome("unavail")
     mem = per_gpu_memory(job, v, hw)
@@ -552,6 +802,7 @@ class SweepPreset:
     ckpts: tuple
     kernels: tuple
     sps: tuple
+    scheds: tuple = (SCHED_1F1B,)
 
     def job(self):
         return Job(PRESETS[self.arch], Cluster.dgx_a100(self.gpus // 8), self.gbs)
@@ -649,7 +900,8 @@ class SweepResult:
 def run(preset_, hw):
     job = preset_.job()
     layouts = enumerate_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
-                                preset_.ckpts, preset_.kernels, preset_.sps)
+                                preset_.ckpts, preset_.kernels, preset_.sps,
+                                preset_.scheds)
     rows = [Row(v, evaluate(job, v, hw)) for v in layouts]
     return SweepResult(preset_.name, job, rows)
 
@@ -689,9 +941,12 @@ def secs(x):
 # ---------------------------------------------------------------- sweep/report
 
 def report_render(result, with_sp_column):
+    with_sched_column = any(r.layout().sched != SCHED_1F1B for r in result.rows)
     headers = ["Step Time", "MFU", "Activation", "Kernel", "MB", "TP", "PP"]
     if with_sp_column:
         headers.append("Seq Parallel")
+    if with_sched_column:
+        headers.append("Schedule")
     rows = []
     for r in result.sorted():
         l = r.layout()
@@ -705,6 +960,8 @@ def report_render(result, with_sp_column):
                str(l.mb), str(l.tp), str(l.pp)]
         if with_sp_column:
             row.append("True" if l.sp else "False")
+        if with_sched_column:
+            row.append(l.sched)
         rows.append(row)
     out = (f"# {result.preset_name} — {result.job.arch.name} on "
            f"{result.job.cluster.gpus} GPUs, GBS {result.job.gbs} "
@@ -850,6 +1107,29 @@ def table3(hw):
             names.append(r.job.arch.name)
     return names
 
+
+def table3_render(hw):
+    # Mirrors rust/src/sweep/figures.rs::table3 byte-for-byte.
+    rows = []
+    for p in seqpar_presets():
+        r = run(p, hw)
+        b = r.best()
+        if b is not None and b.outcome.kind == "ok":
+            l = b.layout()
+            rows.append([
+                r.job.arch.name,
+                str(r.job.cluster.gpus),
+                secs(b.outcome.step_time_s),
+                pct(b.outcome.mfu),
+                str(l.mb),
+                str(l.tp),
+                str(l.pp),
+                "True" if l.sp else "False",
+            ])
+    return ("# Table 3 (B.1) — best configurations per model\n"
+            + table_render(["Model", "GPUs", "Step Time", "MFU", "MB Size",
+                            "TP size", "PP Size", "Seq Par"], rows))
+
 # ---------------------------------------------------------------- planner
 
 @dataclass(frozen=True)
@@ -876,6 +1156,34 @@ def mp_candidates(max_degree):
     return out
 
 
+RULE7_BUBBLE_FRACTION = 0.05
+
+
+def refine_interleaved(job, hw, plan):
+    # Recommendation 7: when pipelined and the warm-up/drain bubble is a
+    # material fraction of the step, interleave v virtual stages per GPU.
+    l = plan.v.layout
+    if l.pp < 2:
+        return plan
+    o = evaluate(job, plan.v, hw)
+    if o.kind != "ok" or o.step.bubble / o.step.total() <= RULE7_BUBBLE_FRACTION:
+        return plan
+    best = plan
+    layers_per_stage = job.arch.layers // l.pp
+    for vv in [2, 3, 4]:
+        if layers_per_stage % vv != 0:
+            continue
+        cand = Layout(l.tp, l.pp, l.mb, l.ckpt, l.kernel, l.sp, sched_interleaved(vv))
+        try:
+            v = validate(job, cand)
+        except ValueError:
+            continue
+        oc = evaluate(job, v, hw)
+        if oc.kind == "ok" and oc.mfu > best.predicted_mfu:
+            best = Plan(v, oc.mfu, oc.step_time_s)
+    return best
+
+
 def plan_by_rules(job, hw):
     sp_default = job.arch.param_count() > 30_000_000_000 or job.arch.seq > 2048
 
@@ -892,8 +1200,8 @@ def plan_by_rules(job, hw):
                     v = validate(job, l)
                 except ValueError:
                     continue
-                if not fits(job, v, hw):
-                    continue
+                # One evaluation decides both feasibility (its Oom variant)
+                # and performance — no separate memory pass.
                 o = evaluate(job, v, hw)
                 if o.kind == "ok":
                     feasible.append(Plan(v, o.mfu, o.step_time_s))
@@ -903,7 +1211,7 @@ def plan_by_rules(job, hw):
             if best is None or pl.predicted_mfu >= best.predicted_mfu:
                 best = pl  # max_by: last max wins
         if best is not None:
-            return best
+            return refine_interleaved(job, hw, best)
     for (tp, pp) in mp_candidates(min(job.cluster.gpus, 64)):
         l = Layout(tp, pp, 1, True, FLASH2, sp_default)
         try:
@@ -912,7 +1220,7 @@ def plan_by_rules(job, hw):
             continue
         o = evaluate(job, v, hw)
         if o.kind == "ok":
-            return Plan(v, o.mfu, o.step_time_s)
+            return refine_interleaved(job, hw, Plan(v, o.mfu, o.step_time_s))
     raise ValueError(f"no feasible layout for {job.arch.name}")
 
 
