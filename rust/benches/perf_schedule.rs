@@ -1,0 +1,125 @@
+//! §Perf — the schedule-pipeline benchmark behind `BENCH_sweep.json`.
+//!
+//! Measures the table-2 preset sweep (the five `sp-*` sequence-parallel
+//! presets that `plx table 2` evaluates) through two value-identical
+//! pipelines in the SAME job, so CI always has a pre-change baseline to
+//! compare against:
+//!
+//! * **baseline** — `sim::evaluate_baseline`: fresh `Vec<Op>` streams per
+//!   consumer and the rescanning O(pp × ops) reference executor (the
+//!   pipeline exactly as it was before the `ScheduleArtifact`);
+//! * **optimized** — `sim::evaluate`: one packed artifact per layout,
+//!   the O(ops) ready-propagation executor, and the makespan memo. The
+//!   caches are cleared before every timed pass, so the numbers are
+//!   honest cold-sweep figures (intra-sweep memo hits included — that IS
+//!   the optimization).
+//!
+//! Emits `BENCH_sweep.json` (path overridable via `PLX_BENCH_JSON`) with
+//! wall time, evaluations/sec for both pipelines, the speedup, and the
+//! makespan-memo hit rate; see `docs/perf.md` for the schema and how CI
+//! applies the advisory ≥ 2× threshold.
+
+use std::io::Write;
+
+use plx::layout::{enumerate, Job, ValidLayout};
+use plx::sim::{cache, evaluate, evaluate_baseline, A100};
+use plx::sweep::{run_jobs, seqpar_presets};
+use plx::util::bench::{bench, section};
+
+/// Advisory regression bar: optimized must evaluate the table-2 preset at
+/// least this many times faster than the in-job baseline.
+const ADVISORY_SPEEDUP: f64 = 2.0;
+
+fn main() {
+    // The table-2 preset: every layout of the five sp-* sweeps.
+    let spaces: Vec<(Job, Vec<ValidLayout>)> = seqpar_presets()
+        .iter()
+        .map(|p| {
+            let job = p.job();
+            let layouts = enumerate(
+                &job, &p.tps, &p.pps, &p.mbs, &p.ckpts, &p.kernels, &p.sps, &p.scheds,
+            );
+            (job, layouts)
+        })
+        .collect();
+    let n_layouts: usize = spaces.iter().map(|(_, l)| l.len()).sum();
+    println!("table-2 preset: {n_layouts} layouts across {} sweeps", spaces.len());
+
+    // Value parity first: the speedup below is only meaningful if the two
+    // pipelines are the same function.
+    for (job, layouts) in &spaces {
+        for v in layouts {
+            assert!(
+                evaluate(job, v, &A100) == evaluate_baseline(job, v, &A100),
+                "pipelines diverge at {:?}",
+                v.layout
+            );
+        }
+    }
+    println!("parity: evaluate == evaluate_baseline on all {n_layouts} layouts");
+
+    section("schedule pipeline: pre-change baseline vs artifact + O(ops) + memo");
+    let base = bench("table-2 sweep via baseline pipeline", 1, 5, || {
+        for (job, layouts) in &spaces {
+            for v in layouts {
+                std::hint::black_box(evaluate_baseline(job, v, &A100));
+            }
+        }
+    });
+    let opt = bench("table-2 sweep via optimized pipeline (cold)", 1, 5, || {
+        cache::clear();
+        for (job, layouts) in &spaces {
+            for v in layouts {
+                std::hint::black_box(evaluate(job, v, &A100));
+            }
+        }
+    });
+    let base_eps = n_layouts as f64 / base.mean.as_secs_f64();
+    let opt_eps = n_layouts as f64 / opt.mean.as_secs_f64();
+    let speedup = base.mean.as_secs_f64() / opt.mean.as_secs_f64();
+    println!(
+        "-> {base_eps:.0} -> {opt_eps:.0} evaluations/sec ({speedup:.2}x, advisory >= {ADVISORY_SPEEDUP}x)"
+    );
+
+    // Memo effectiveness over one cold pass (the figure shipped in JSON).
+    cache::clear();
+    for (job, layouts) in &spaces {
+        for v in layouts {
+            std::hint::black_box(evaluate(job, v, &A100));
+        }
+    }
+    let (ms_hits, ms_misses) = cache::makespan_stats();
+    let ms_rate = ms_hits as f64 / (ms_hits + ms_misses).max(1) as f64;
+    println!("-> makespan memo: {ms_hits} hits / {ms_misses} misses ({:.1}% hit rate)", ms_rate * 100.0);
+
+    // End-to-end engine wall time for the same preset (what `plx table 2`
+    // pays through the cached sweep engine), cold.
+    cache::clear();
+    let engine = bench("table-2 preset via sweep engine (cold, serial)", 0, 1, || {
+        for p in seqpar_presets() {
+            std::hint::black_box(run_jobs(&p, &A100, 1).rows.len());
+        }
+    });
+
+    let json = format!(
+        "{{\n  \"preset\": \"table2 (sp-13b-2k .. sp-65b-2k)\",\n  \"layouts\": {n_layouts},\n  \
+         \"baseline\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
+         \"optimized\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
+         \"speedup\": {:.3},\n  \
+         \"engine_wall_s\": {:.6},\n  \
+         \"cache\": {{ \"makespan_hits\": {ms_hits}, \"makespan_misses\": {ms_misses}, \"makespan_hit_rate\": {:.4} }},\n  \
+         \"advisory_threshold\": {ADVISORY_SPEEDUP},\n  \"pass\": {}\n}}\n",
+        base.mean.as_secs_f64(),
+        base_eps,
+        opt.mean.as_secs_f64(),
+        opt_eps,
+        speedup,
+        engine.mean.as_secs_f64(),
+        ms_rate,
+        speedup >= ADVISORY_SPEEDUP,
+    );
+    let path = std::env::var("PLX_BENCH_JSON").unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_sweep.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_sweep.json");
+    println!("wrote {path}:\n{json}");
+}

@@ -9,9 +9,11 @@
 //!   buffers between stages `(d, p) -> (d, p±1)`;
 //! * gradient reduction + ZeRO-1: deterministic collectives over the
 //!   per-stage DP [`Group`]s;
-//! * schedule: true 1F1B from [`crate::sim::schedule::one_f1b`] — the
-//!   same generator the analytic simulator prices (backward recomputes
-//!   the stage forward, so only stage inputs are kept in flight);
+//! * schedule: one [`ScheduleArtifact`] built per run from the same
+//!   generators the analytic simulator prices — every `(d, p)` rank
+//!   iterates its stage's packed stream off the shared artifact instead
+//!   of regenerating it per worker (backward recomputes the stage
+//!   forward, so only stage inputs are kept in flight);
 //! * head-stage forward is a store-only no-op: the loss comes out of the
 //!   backward artifact, avoiding a redundant forward execution.
 //!
@@ -33,7 +35,7 @@ use crate::coordinator::zero::Zero1;
 use crate::data::SyntheticCorpus;
 use crate::metrics::{StepRecord, TrainLog};
 use crate::runtime::{Engine, FwdOut, Manifest, StageInput, StageRuntime};
-use crate::sim::schedule::{gpipe, one_f1b, Op};
+use crate::sim::schedule::{Op, ScheduleArtifact};
 
 pub use crate::sim::schedule::Schedule;
 
@@ -157,6 +159,10 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     let (up_tx, up_rx) = mpsc::channel::<Up>();
     let first_error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
 
+    // One schedule artifact for the whole run: every (d, p) worker reads
+    // its stage's packed stream from here instead of regenerating it.
+    let artifact = ScheduleArtifact::build(cfg.schedule, cfg.pp, cfg.num_micro);
+
     let t0 = Instant::now();
     std::thread::scope(|scope| -> Result<()> {
         // Spawn workers (reverse so channel receivers are moved correctly).
@@ -172,10 +178,11 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                 let adamw_path = adamw_path.clone();
                 let up = up_tx.clone();
                 let err_slot = first_error.clone();
+                let art = &artifact;
                 scope.spawn(move || {
                     let result = worker(
-                        d, p, &cfg, &manifest, &adamw_path, &init, &corpus, &group, chans.fwd_in,
-                        chans.fwd_out, chans.bwd_in, chans.bwd_out, &up,
+                        d, p, &cfg, &manifest, &adamw_path, &init, &corpus, &group, art,
+                        chans.fwd_in, chans.fwd_out, chans.bwd_in, chans.bwd_out, &up,
                     );
                     if let Err(e) = result {
                         let msg = format!("worker (d={d}, p={p}): {e:#}");
@@ -259,6 +266,7 @@ fn worker(
     init: &Arc<Vec<f32>>,
     corpus: &SyntheticCorpus,
     group: &Arc<Group>,
+    artifact: &ScheduleArtifact,
     fwd_in: Option<mpsc::Receiver<Vec<f32>>>,
     fwd_out: Option<mpsc::Sender<Vec<f32>>>,
     bwd_in: Option<mpsc::Receiver<Vec<f32>>>,
@@ -283,11 +291,9 @@ fn worker(
     )?;
 
     let m = cfg.num_micro;
-    let ops = match cfg.schedule {
-        Schedule::OneF1B => one_f1b(p, cfg.pp, m),
-        Schedule::GPipe => gpipe(p, cfg.pp, m),
-        Schedule::Interleaved(_) => bail!("interleaved schedule rejected at launch"),
-    };
+    // Interleaved configs were rejected by train() before any worker (or
+    // the shared artifact) was created, so chunk is always 0 here.
+    debug_assert!(!matches!(cfg.schedule, Schedule::Interleaved(_)));
     let is_head = info.has_head;
     let is_embed = info.has_embed;
 
@@ -302,8 +308,8 @@ fn worker(
         let mut saved: Vec<Option<Vec<f32>>> = vec![None; m];
         let mut loss_sum = 0.0f64;
 
-        for op in &ops {
-            match *op {
+        for op in artifact.stage_decoded(p) {
+            match op {
                 Op::Fwd { micro: i, .. } => {
                     if is_embed {
                         // Tokens regenerated locally; stash for backward.

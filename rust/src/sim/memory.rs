@@ -83,12 +83,30 @@ pub fn act_bytes_per_layer(job: &Job, v: &ValidLayout) -> f64 {
 /// Peak per-GPU memory for a validated layout.
 ///
 /// The activation peak lives on pipeline stage 0; its in-flight
-/// multiplicity is the [`schedule::peak_in_flight`] of the stage's
-/// *actual* op stream, in units of one model chunk (`layers/(pp·v)`
-/// layers). For plain 1F1B that reproduces the classic
-/// `min(pp, num_micro)` stage bound; GPipe holds all `m`; interleaved
-/// 1F1B holds more (smaller) chunks than plain.
+/// multiplicity is the peak of the stage's *actual* op stream, in units
+/// of one model chunk (`layers/(pp·v)` layers). For plain 1F1B that
+/// reproduces the classic `min(pp, num_micro)` stage bound; GPipe holds
+/// all `m`; interleaved 1F1B holds more (smaller) chunks than plain.
+///
+/// This convenience entry builds (or reuses) the thread-local
+/// [`schedule::ScheduleArtifact`]; `sim::evaluate` calls
+/// [`per_gpu_memory_with`] directly so memory and step time share one
+/// artifact.
 pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakdown {
+    schedule::with_artifact(v.layout.sched, v.layout.pp, v.num_micro, |art| {
+        per_gpu_memory_with(job, v, hw, art)
+    })
+}
+
+/// [`per_gpu_memory`] against a pre-built schedule artifact: the
+/// in-flight multiplicities are read off the artifact's per-stage peaks
+/// (tracked during generation) instead of re-materializing op streams.
+pub fn per_gpu_memory_with(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    art: &schedule::ScheduleArtifact,
+) -> MemoryBreakdown {
     let a = &job.arch;
     let l = &v.layout;
     let n = a.param_count() as f64;
@@ -100,8 +118,7 @@ pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakd
 
     let vst = l.sched.vstages();
     let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
-    let in_flight =
-        schedule::peak_in_flight(&schedule::ops(l.sched, 0, l.pp, v.num_micro)) as f64;
+    let in_flight = art.peak_in_flight(0) as f64;
     let mut activations = act_bytes_per_layer(job, v) * layers_per_chunk * in_flight;
     if l.ckpt {
         // Recompute working set: one layer's worth of full activations.
@@ -122,6 +139,64 @@ pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakd
         // stage holds logits but fewer in-flight micro-batches (depth 1
         // on the last stage under 1F1B — but derive it from the actual
         // stream, GPipe/interleaved differ). Track the max of the two.
+        let head_in_flight = art.peak_in_flight(l.pp - 1) as f64;
+        let head_acts = act_bytes_per_layer(job, v) * layers_per_chunk * head_in_flight;
+        let head_logits = 2.0 * 4.0 * (l.mb * a.seq * a.vocab) as f64 / l.tp as f64;
+        let head_total = head_acts + head_logits;
+        let stage0_total = activations;
+        if head_total > stage0_total {
+            // Report the logits and the head stage's activation load.
+            activations = head_acts;
+            head_logits
+        } else {
+            0.0
+        }
+    };
+
+    MemoryBreakdown {
+        weights,
+        grads,
+        optimizer,
+        activations,
+        logits,
+        workspace: hw.workspace_bytes,
+    }
+}
+
+/// The pre-artifact accounting path, retained verbatim as the in-job
+/// baseline for `benches/perf_schedule.rs` and the equivalence tests:
+/// materializes a fresh `Vec<Op>` stream per consulted stage, exactly
+/// like `per_gpu_memory` did before the artifact existed. Value-identical
+/// to [`per_gpu_memory`] by construction (the artifact's peaks are the
+/// same streams' peaks).
+#[doc(hidden)]
+pub fn per_gpu_memory_baseline(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakdown {
+    let a = &job.arch;
+    let l = &v.layout;
+    let n = a.param_count() as f64;
+    let shard = n / (l.tp * l.pp) as f64;
+
+    let weights = 2.0 * shard;
+    let grads = 2.0 * shard;
+    let optimizer = 12.0 * shard / v.topo.dp as f64;
+
+    let vst = l.sched.vstages();
+    let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
+    let in_flight =
+        schedule::peak_in_flight(&schedule::ops(l.sched, 0, l.pp, v.num_micro)) as f64;
+    let mut activations = act_bytes_per_layer(job, v) * layers_per_chunk * in_flight;
+    if l.ckpt {
+        let full = {
+            let mut no_ckpt = *v;
+            no_ckpt.layout.ckpt = false;
+            act_bytes_per_layer(job, &no_ckpt)
+        };
+        activations += full;
+    }
+
+    let logits = if l.pp == 1 {
+        2.0 * 4.0 * (l.mb * a.seq * a.vocab) as f64 / l.tp as f64
+    } else {
         let head_in_flight =
             schedule::peak_in_flight(&schedule::ops(l.sched, l.pp - 1, l.pp, v.num_micro)) as f64;
         let head_acts = act_bytes_per_layer(job, v) * layers_per_chunk * head_in_flight;
@@ -129,7 +204,6 @@ pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakd
         let head_total = head_acts + head_logits;
         let stage0_total = activations;
         if head_total > stage0_total {
-            // Report the logits and the head stage's activation load.
             activations = head_acts;
             head_logits
         } else {
@@ -344,6 +418,42 @@ mod tests {
         let ai = per_gpu_memory(&job, &vi, &A100).activations;
         assert!(ai > a1, "interleaved {ai} vs 1f1b {a1}");
         assert!(ai < ag, "interleaved {ai} vs gpipe {ag}");
+    }
+
+    #[test]
+    fn artifact_path_matches_baseline_bitwise() {
+        // The tentpole's value-preservation guarantee, memory half: the
+        // artifact-fed accounting must reproduce the stream-materializing
+        // baseline exactly for every enumerable layout.
+        use crate::layout::enumerate;
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let layouts = enumerate(
+            &job,
+            &[1, 2],
+            &[1, 2, 4],
+            &[1, 2, 4],
+            &[false, true],
+            &Kernel::ALL,
+            &[false, true],
+            &[
+                crate::layout::Schedule::OneF1B,
+                crate::layout::Schedule::GPipe,
+                crate::layout::Schedule::Interleaved(2),
+            ],
+        );
+        assert!(!layouts.is_empty());
+        for v in &layouts {
+            let new = per_gpu_memory(&job, v, &A100);
+            let old = per_gpu_memory_baseline(&job, v, &A100);
+            assert_eq!(
+                new.activations.to_bits(),
+                old.activations.to_bits(),
+                "{:?}",
+                v.layout
+            );
+            assert_eq!(new.logits.to_bits(), old.logits.to_bits(), "{:?}", v.layout);
+            assert_eq!(new.total().to_bits(), old.total().to_bits(), "{:?}", v.layout);
+        }
     }
 
     #[test]

@@ -71,15 +71,42 @@ impl Outcome {
 }
 
 /// Simulate one validated layout on the given hardware.
+///
+/// One [`schedule::ScheduleArtifact`] is built (or reused from the
+/// thread-local arena) per call and shared by the memory and step-time
+/// models — the schedule machinery is generated once, not four times.
 pub fn evaluate(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
     if !kernels::kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb) {
         return Outcome::KernelUnavailable;
     }
-    let mem = memory::per_gpu_memory(job, v, hw);
+    schedule::with_artifact(v.layout.sched, v.layout.pp, v.num_micro, |art| {
+        let mem = memory::per_gpu_memory_with(job, v, hw, art);
+        if mem.total() > hw.hbm_bytes {
+            return Outcome::Oom { required: mem.total(), budget: hw.hbm_bytes };
+        }
+        let step = step_time::step_time_with(job, v, hw, art);
+        let t = step.total();
+        let m = mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t);
+        Outcome::Ok { step_time_s: t, mfu: m, mem, step }
+    })
+}
+
+/// The pre-artifact evaluation pipeline, value-identical to [`evaluate`]
+/// (asserted bitwise by `evaluate_matches_baseline_bitwise`): fresh
+/// `Vec<Op>` streams per consumer and the rescanning reference executor,
+/// no artifact, no makespan memo. `benches/perf_schedule.rs` uses it as
+/// the in-job baseline that `BENCH_sweep.json`'s speedup is measured
+/// against.
+#[doc(hidden)]
+pub fn evaluate_baseline(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
+    if !kernels::kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb) {
+        return Outcome::KernelUnavailable;
+    }
+    let mem = memory::per_gpu_memory_baseline(job, v, hw);
     if mem.total() > hw.hbm_bytes {
         return Outcome::Oom { required: mem.total(), budget: hw.hbm_bytes };
     }
-    let step = step_time::step_time(job, v, hw);
+    let step = step_time::step_time_baseline(job, v, hw);
     let t = step.total();
     let m = mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t);
     Outcome::Ok { step_time_s: t, mfu: m, mem, step }
@@ -126,6 +153,49 @@ mod tests {
         )
         .unwrap();
         assert!(matches!(evaluate(&job, &v, &A100), Outcome::KernelUnavailable));
+    }
+
+    #[test]
+    fn evaluate_matches_baseline_bitwise() {
+        // The whole-pipeline value-preservation gate: the artifact +
+        // O(ops) executor + memo path must reproduce the pre-change
+        // pipeline bit for bit across a broad layout space (this is what
+        // keeps the golden fixtures byte-identical by construction).
+        use crate::layout::enumerate;
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let layouts = enumerate(
+            &job,
+            &[1, 2],
+            &[1, 2, 4],
+            &[1, 2, 4],
+            &[false, true],
+            &Kernel::ALL,
+            &[false, true],
+            &[
+                crate::layout::Schedule::OneF1B,
+                crate::layout::Schedule::GPipe,
+                crate::layout::Schedule::Interleaved(2),
+            ],
+        );
+        assert!(layouts.len() > 100, "space too small: {}", layouts.len());
+        for v in &layouts {
+            let new = evaluate(&job, v, &A100);
+            let old = evaluate_baseline(&job, v, &A100);
+            match (new, old) {
+                (
+                    Outcome::Ok { step_time_s: a, mfu: ma, .. },
+                    Outcome::Ok { step_time_s: b, mfu: mb, .. },
+                ) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{:?}", v.layout);
+                    assert_eq!(ma.to_bits(), mb.to_bits(), "{:?}", v.layout);
+                }
+                (Outcome::Oom { required: a, .. }, Outcome::Oom { required: b, .. }) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{:?}", v.layout);
+                }
+                (Outcome::KernelUnavailable, Outcome::KernelUnavailable) => {}
+                (n, o) => panic!("{:?}: variants diverge ({n:?} vs {o:?})", v.layout),
+            }
+        }
     }
 
     #[test]

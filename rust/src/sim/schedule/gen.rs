@@ -2,6 +2,11 @@
 //! interleaved 1F1B (moved here from `coordinator::pipeline` so the
 //! trainer and the analytic simulator consume one implementation).
 //!
+//! Each generator is written against an `emit` sink so the same logic
+//! feeds both the `Vec<Op>` convenience API used by tests and the packed
+//! arena streams of [`super::stream::ScheduleArtifact`] without an
+//! intermediate allocation.
+//!
 //! Properties (proved by tests below):
 //! * every stage runs each (micro, chunk) unit exactly once fwd and once
 //!   bwd;
@@ -12,35 +17,57 @@
 
 use super::{Op, Schedule};
 
-/// The op stream of `sched` for physical stage `p` of `pp` with `m`
-/// micro-batches.
-pub fn ops(sched: Schedule, p: usize, pp: usize, m: usize) -> Vec<Op> {
+/// Stream `sched`'s ops for physical stage `p` of `pp` with `m`
+/// micro-batches into `sink`, in execution order.
+pub fn emit(sched: Schedule, p: usize, pp: usize, m: usize, sink: impl FnMut(Op)) {
     match sched {
-        Schedule::OneF1B => one_f1b(p, pp, m),
-        Schedule::GPipe => gpipe(p, pp, m),
-        Schedule::Interleaved(v) => interleaved_1f1b(p, pp, m, v),
+        Schedule::OneF1B => emit_one_f1b(p, pp, m, sink),
+        Schedule::GPipe => emit_gpipe(p, pp, m, sink),
+        Schedule::Interleaved(v) => emit_interleaved_1f1b(p, pp, m, v, sink),
+    }
+}
+
+/// The op stream of `sched` for physical stage `p` of `pp` with `m`
+/// micro-batches, as an owned list.
+pub fn ops(sched: Schedule, p: usize, pp: usize, m: usize) -> Vec<Op> {
+    let mut out = Vec::with_capacity(2 * m * sched.vstages());
+    emit(sched, p, pp, m, |op| out.push(op));
+    out
+}
+
+fn emit_one_f1b(p: usize, pp: usize, m: usize, mut sink: impl FnMut(Op)) {
+    assert!(p < pp, "stage {p} out of range for pp={pp}");
+    let warmup = (pp - 1 - p).min(m);
+    for i in 0..warmup {
+        sink(Op::Fwd { micro: i, chunk: 0 });
+    }
+    // Steady state: one forward, one backward.
+    for i in warmup..m {
+        sink(Op::Fwd { micro: i, chunk: 0 });
+        sink(Op::Bwd { micro: i - warmup, chunk: 0 });
+    }
+    // Drain remaining backwards.
+    for i in (m - warmup.min(m))..m {
+        sink(Op::Bwd { micro: i, chunk: 0 });
     }
 }
 
 /// The 1F1B (PipeDream-flush) schedule for stage `p` of `pp` with `m`
 /// micro-batches.
 pub fn one_f1b(p: usize, pp: usize, m: usize) -> Vec<Op> {
-    assert!(p < pp, "stage {p} out of range for pp={pp}");
-    let warmup = (pp - 1 - p).min(m);
     let mut ops = Vec::with_capacity(2 * m);
-    for i in 0..warmup {
-        ops.push(Op::Fwd { micro: i, chunk: 0 });
-    }
-    // Steady state: one forward, one backward.
-    for i in warmup..m {
-        ops.push(Op::Fwd { micro: i, chunk: 0 });
-        ops.push(Op::Bwd { micro: i - warmup, chunk: 0 });
-    }
-    // Drain remaining backwards.
-    for i in (m - warmup.min(m))..m {
-        ops.push(Op::Bwd { micro: i, chunk: 0 });
-    }
+    emit_one_f1b(p, pp, m, |op| ops.push(op));
     ops
+}
+
+fn emit_gpipe(p: usize, pp: usize, m: usize, mut sink: impl FnMut(Op)) {
+    assert!(p < pp);
+    for i in 0..m {
+        sink(Op::Fwd { micro: i, chunk: 0 });
+    }
+    for i in (0..m).rev() {
+        sink(Op::Bwd { micro: i, chunk: 0 });
+    }
 }
 
 /// GPipe-style baseline (all forwards then all backwards) — the
@@ -49,23 +76,12 @@ pub fn one_f1b(p: usize, pp: usize, m: usize) -> Vec<Op> {
 /// real-world penalty is activation memory — all `m` micro-batches stay
 /// in flight (`sim::memory` prices that, and it is why GPipe rows OOM).
 pub fn gpipe(p: usize, pp: usize, m: usize) -> Vec<Op> {
-    assert!(p < pp);
     let mut ops = Vec::with_capacity(2 * m);
-    for i in 0..m {
-        ops.push(Op::Fwd { micro: i, chunk: 0 });
-    }
-    for i in (0..m).rev() {
-        ops.push(Op::Bwd { micro: i, chunk: 0 });
-    }
+    emit_gpipe(p, pp, m, |op| ops.push(op));
     ops
 }
 
-/// Interleaved 1F1B (Narayanan et al. 2021, Megatron-LM): each rank holds
-/// `v` model chunks; chunk `c` on rank `p` is virtual stage `c * pp + p`.
-/// Forward units are issued in groups of `pp` micro-batches cycling
-/// through the chunks; backwards mirror the order with chunks reversed.
-/// Requires `m % pp == 0` (enforced by `layout::validate`).
-pub fn interleaved_1f1b(p: usize, pp: usize, m: usize, v: usize) -> Vec<Op> {
+fn emit_interleaved_1f1b(p: usize, pp: usize, m: usize, v: usize, mut sink: impl FnMut(Op)) {
     assert!(p < pp, "stage {p} out of range for pp={pp}");
     assert!(v >= 1, "need at least one virtual stage");
     assert!(m % pp == 0, "interleaved 1F1B needs m ({m}) divisible by pp ({pp})");
@@ -86,27 +102,36 @@ pub fn interleaved_1f1b(p: usize, pp: usize, m: usize, v: usize) -> Vec<Op> {
     };
 
     let warmup = ((pp - p - 1) * 2 + (v - 1) * pp).min(total);
-    let mut ops = Vec::with_capacity(2 * total);
     let mut fk = 0usize;
     let mut bk = 0usize;
     for _ in 0..warmup {
         let (micro, chunk) = fwd_unit(fk);
-        ops.push(Op::Fwd { micro, chunk });
+        sink(Op::Fwd { micro, chunk });
         fk += 1;
     }
     for _ in 0..(total - warmup) {
         let (micro, chunk) = fwd_unit(fk);
-        ops.push(Op::Fwd { micro, chunk });
+        sink(Op::Fwd { micro, chunk });
         fk += 1;
         let (micro, chunk) = bwd_unit(bk);
-        ops.push(Op::Bwd { micro, chunk });
+        sink(Op::Bwd { micro, chunk });
         bk += 1;
     }
     while bk < total {
         let (micro, chunk) = bwd_unit(bk);
-        ops.push(Op::Bwd { micro, chunk });
+        sink(Op::Bwd { micro, chunk });
         bk += 1;
     }
+}
+
+/// Interleaved 1F1B (Narayanan et al. 2021, Megatron-LM): each rank holds
+/// `v` model chunks; chunk `c` on rank `p` is virtual stage `c * pp + p`.
+/// Forward units are issued in groups of `pp` micro-batches cycling
+/// through the chunks; backwards mirror the order with chunks reversed.
+/// Requires `m % pp == 0` (enforced by `layout::validate`).
+pub fn interleaved_1f1b(p: usize, pp: usize, m: usize, v: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(2 * m * v);
+    emit_interleaved_1f1b(p, pp, m, v, |op| ops.push(op));
     ops
 }
 

@@ -8,11 +8,30 @@
 //! edges. Warm-up, drain, and stage-imbalance bubbles *emerge* from the
 //! dependency structure instead of being asserted.
 //!
-//! `tools/pysim.py::makespan` mirrors this function expression for
-//! expression — keep them in lockstep (CI diffs the golden fixtures the
-//! mirror generates).
+//! Two executors, bit-identical by construction and by property test:
+//!
+//! * the production **ready-propagation** executor ([`makespan`],
+//!   [`makespan_artifact`]): dependency-driven over packed op streams —
+//!   each stage advances until its head op blocks, and a completed op
+//!   wakes exactly the stage hosting its consumer, so each op's
+//!   `start = max(free, dep)` is computed **once** and the whole
+//!   execution is O(total_ops) with thread-local scratch (no
+//!   per-evaluation allocation beyond the returned `busy` vector);
+//! * the **reference** rescanning executor ([`makespan_reference`]):
+//!   round-robin passes over the stages, O(pp × total_ops) worst case —
+//!   kept as the executable spec (`tools/pysim.py::makespan` mirrors it
+//!   expression for expression) and as the in-job baseline for
+//!   `benches/perf_schedule.rs`.
+//!
+//! Both executors run every stage's ops in stream order and evaluate the
+//! same float expressions on the same operands, so `total` and every
+//! `busy[p]` agree to the bit (asserted via `f64::to_bits` in the
+//! property suite below) — only the op *visit order across stages*
+//! differs, which the dependency structure makes irrelevant.
 
+use super::stream::{self, PackedOp, ScheduleArtifact};
 use super::Op;
+use std::cell::RefCell;
 
 /// Wall-time cost model for one op stream execution.
 #[derive(Debug, Clone, Copy)]
@@ -28,6 +47,20 @@ pub struct OpCosts {
     /// Receive cost charged to an op whose dependency crosses physical
     /// stages (non-overlapped p2p activation/cotangent transfer).
     pub p2p: f64,
+}
+
+impl OpCosts {
+    /// The five cost fields as bit patterns — the makespan memo's key
+    /// component (`sim::cache`).
+    pub fn bits(&self) -> [u64; 5] {
+        [
+            self.fwd.to_bits(),
+            self.bwd.to_bits(),
+            self.head_fwd.to_bits(),
+            self.head_bwd.to_bits(),
+            self.p2p.to_bits(),
+        ]
+    }
 }
 
 /// Result of an event-driven execution.
@@ -51,7 +84,226 @@ pub struct Makespan {
 /// Each physical stage executes its ops strictly in stream order; an op
 /// starts at `max(stage free time, dependency finish)` and costs
 /// `base + head extra (last virtual stage) + p2p (cross-stage edge)`.
+///
+/// This entry packs the streams and runs the ready-propagation executor;
+/// the sweep hot path skips the packing via [`makespan_artifact`].
 pub fn makespan(pp: usize, vstages: usize, m: usize, scheds: &[Vec<Op>], c: &OpCosts) -> Option<Makespan> {
+    let mut ops: Vec<PackedOp> = Vec::with_capacity(scheds.iter().map(|s| s.len()).sum());
+    let mut bounds: Vec<usize> = Vec::with_capacity(pp + 1);
+    bounds.push(0);
+    for s in scheds {
+        ops.extend(s.iter().map(|&op| stream::pack(op)));
+        bounds.push(ops.len());
+    }
+    execute_packed(pp, vstages, m, &ops, &bounds, c)
+}
+
+/// The sweep hot path: execute a pre-built [`ScheduleArtifact`]'s packed
+/// streams directly (no materialization, thread-local scratch only).
+pub fn makespan_artifact(art: &ScheduleArtifact, c: &OpCosts) -> Option<Makespan> {
+    execute_packed(art.pp(), art.vstages(), art.m(), art.ops(), art.bounds(), c)
+}
+
+/// Reusable executor scratch: dependency tables with explicit done flags
+/// (a sentinel time value would conflate "not finished" with a genuine
+/// NaN finish time from a NaN op cost — the reference's `Option` and the
+/// pysim mirror's `None` distinguish them, so this must too), per-stage
+/// cursors/clocks, and the ready queue. One per thread, cleared (not
+/// freed) between executions.
+struct Scratch {
+    fwd_t: Vec<f64>,
+    bwd_t: Vec<f64>,
+    fwd_set: Vec<bool>,
+    bwd_set: Vec<bool>,
+    pos: Vec<usize>,
+    free: Vec<f64>,
+    busy: Vec<f64>,
+    queue: Vec<usize>,
+    queued: Vec<bool>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch {
+            fwd_t: Vec::new(),
+            bwd_t: Vec::new(),
+            fwd_set: Vec::new(),
+            bwd_set: Vec::new(),
+            pos: Vec::new(),
+            free: Vec::new(),
+            busy: Vec::new(),
+            queue: Vec::new(),
+            queued: Vec::new(),
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+fn execute_packed(
+    pp: usize,
+    vstages: usize,
+    m: usize,
+    ops: &[PackedOp],
+    bounds: &[usize],
+    c: &OpCosts,
+) -> Option<Makespan> {
+    SCRATCH.with(|s| match s.try_borrow_mut() {
+        Ok(mut s) => run_ready(&mut s, pp, vstages, m, ops, bounds, c),
+        // Re-entrant call (never on the sweep path): fresh scratch.
+        Err(_) => run_ready(&mut Scratch::new(), pp, vstages, m, ops, bounds, c),
+    })
+}
+
+/// The ready-propagation executor. Invariants:
+/// * a stage is in the live portion of `queue` iff `queued[p]` — pushed
+///   at seed time and whenever an op completing on another stage might
+///   unblock it (the consumer-stage maps below);
+/// * same-stage consumers need no push: the inner loop re-examines the
+///   stage head right after each completion;
+/// * when the queue drains with `done < total_ops`, no op is runnable —
+///   the same condition the reference executor's no-progress pass
+///   detects — so deadlock verdicts agree.
+fn run_ready(
+    s: &mut Scratch,
+    pp: usize,
+    vstages: usize,
+    m: usize,
+    ops: &[PackedOp],
+    bounds: &[usize],
+    c: &OpCosts,
+) -> Option<Makespan> {
+    let nvs = pp * vstages;
+    s.fwd_t.clear();
+    s.fwd_t.resize(nvs * m, 0.0);
+    s.bwd_t.clear();
+    s.bwd_t.resize(nvs * m, 0.0);
+    s.fwd_set.clear();
+    s.fwd_set.resize(nvs * m, false);
+    s.bwd_set.clear();
+    s.bwd_set.resize(nvs * m, false);
+    s.pos.clear();
+    s.pos.resize(pp, 0);
+    s.free.clear();
+    s.free.resize(pp, 0.0);
+    s.busy.clear();
+    s.busy.resize(pp, 0.0);
+    s.queue.clear();
+    s.queued.clear();
+    s.queued.resize(pp, true);
+    s.queue.extend(0..pp);
+
+    let total_ops = bounds[pp];
+    let mut done = 0usize;
+    let mut qi = 0usize;
+    while qi < s.queue.len() {
+        let p = s.queue[qi];
+        qi += 1;
+        loop {
+            if bounds[p] + s.pos[p] >= bounds[p + 1] {
+                s.queued[p] = false;
+                break;
+            }
+            let op = ops[bounds[p] + s.pos[p]];
+            let i = stream::micro_of(op);
+            let vs = stream::chunk_of(op) * pp + p;
+            let (dep, cost) = if !stream::is_bwd(op) {
+                let (dep, cross) = if vs == 0 {
+                    (0.0, false)
+                } else {
+                    if !s.fwd_set[(vs - 1) * m + i] {
+                        s.queued[p] = false;
+                        break;
+                    }
+                    (s.fwd_t[(vs - 1) * m + i], (vs - 1) % pp != p)
+                };
+                let cost = c.fwd
+                    + if vs == nvs - 1 { c.head_fwd } else { 0.0 }
+                    + if cross { c.p2p } else { 0.0 };
+                (dep, cost)
+            } else {
+                if !s.fwd_set[vs * m + i] {
+                    s.queued[p] = false;
+                    break;
+                }
+                let own = s.fwd_t[vs * m + i];
+                let (dep, cross) = if vs == nvs - 1 {
+                    (own, false)
+                } else {
+                    if !s.bwd_set[(vs + 1) * m + i] {
+                        s.queued[p] = false;
+                        break;
+                    }
+                    let t = s.bwd_t[(vs + 1) * m + i];
+                    (if own > t { own } else { t }, (vs + 1) % pp != p)
+                };
+                let cost = c.bwd
+                    + if vs == nvs - 1 { c.head_bwd } else { 0.0 }
+                    + if cross { c.p2p } else { 0.0 };
+                (dep, cost)
+            };
+            let start = if s.free[p] > dep { s.free[p] } else { dep };
+            let fin = start + cost;
+            // Record the completion and wake the cross-stage consumer (if
+            // any): a finished fwd at vs feeds the fwd at vs+1; a
+            // finished bwd at vs feeds the bwd at vs−1. The co-located
+            // bwd-needs-own-fwd edge is same-stage by definition.
+            if !stream::is_bwd(op) {
+                s.fwd_t[vs * m + i] = fin;
+                s.fwd_set[vs * m + i] = true;
+                if vs + 1 < nvs {
+                    let q = (vs + 1) % pp;
+                    if q != p && !s.queued[q] {
+                        s.queue.push(q);
+                        s.queued[q] = true;
+                    }
+                }
+            } else {
+                s.bwd_t[vs * m + i] = fin;
+                s.bwd_set[vs * m + i] = true;
+                if vs > 0 {
+                    let q = (vs - 1) % pp;
+                    if q != p && !s.queued[q] {
+                        s.queue.push(q);
+                        s.queued[q] = true;
+                    }
+                }
+            }
+            s.free[p] = fin;
+            s.busy[p] += cost;
+            s.pos[p] += 1;
+            done += 1;
+        }
+    }
+    if done < total_ops {
+        return None; // deadlock
+    }
+    let mut total = 0.0f64;
+    for t in &s.free {
+        if *t > total {
+            total = *t;
+        }
+    }
+    Some(Makespan { total, busy: s.busy.clone() })
+}
+
+/// The pre-optimization rescanning executor, retained verbatim as the
+/// executable spec: round-robin passes over the stages, each advancing
+/// greedily until blocked — O(pp × total_ops) worst case. Property tests
+/// assert the ready-propagation executor reproduces its `total` and
+/// `busy` **bit for bit**, and `benches/perf_schedule.rs` uses it as the
+/// in-job baseline for `BENCH_sweep.json` (which is why it is compiled
+/// outside `cfg(test)`). `tools/pysim.py::makespan` mirrors this
+/// function expression for expression — keep them in lockstep.
+pub fn makespan_reference(
+    pp: usize,
+    vstages: usize,
+    m: usize,
+    scheds: &[Vec<Op>],
+    c: &OpCosts,
+) -> Option<Makespan> {
     let nvs = pp * vstages;
     let mut fwd_t: Vec<Vec<Option<f64>>> = vec![vec![None; m]; nvs];
     let mut bwd_t: Vec<Vec<Option<f64>>> = vec![vec![None; m]; nvs];
@@ -295,5 +547,184 @@ mod tests {
         // Last stage: fwd +p2p, bwd has no inbound edge but carries the head.
         let expect_last = m as f64 * (c.fwd + c.head_fwd + c.p2p) + m as f64 * (c.bwd + c.head_bwd);
         assert!((ms.busy[2] - expect_last).abs() < 1e-12);
+    }
+
+    // ------------------------------------------------ executor equivalence
+
+    /// Assert fast and reference agree bit for bit (Some) or both
+    /// deadlock (None).
+    fn assert_executors_agree(pp: usize, v: usize, m: usize, scheds: &[Vec<Op>], c: &OpCosts, ctx: &str) {
+        let fast = makespan(pp, v, m, scheds, c);
+        let refr = makespan_reference(pp, v, m, scheds, c);
+        match (fast, refr) {
+            (None, None) => {}
+            (Some(f), Some(r)) => {
+                assert_eq!(
+                    f.total.to_bits(),
+                    r.total.to_bits(),
+                    "{ctx}: total {} vs {}",
+                    f.total,
+                    r.total
+                );
+                assert_eq!(f.busy.len(), r.busy.len(), "{ctx}");
+                for p in 0..pp {
+                    assert_eq!(
+                        f.busy[p].to_bits(),
+                        r.busy[p].to_bits(),
+                        "{ctx}: busy[{p}] {} vs {}",
+                        f.busy[p],
+                        r.busy[p]
+                    );
+                }
+            }
+            (f, r) => panic!("{ctx}: verdicts diverge (fast {:?}, ref {:?})", f.is_some(), r.is_some()),
+        }
+    }
+
+    fn random_costs(rng: &mut crate::util::prng::Rng) -> OpCosts {
+        let f = |rng: &mut crate::util::prng::Rng, lo: usize, hi: usize| {
+            rng.range(lo, hi) as f64 / 1000.0
+        };
+        OpCosts {
+            fwd: 0.001 + f(rng, 1, 3000),
+            bwd: 0.001 + f(rng, 1, 5000),
+            head_fwd: f(rng, 0, 2000),
+            head_bwd: f(rng, 0, 3000),
+            p2p: f(rng, 0, 500),
+        }
+    }
+
+    #[test]
+    fn ready_propagation_is_bit_identical_to_reference() {
+        // Tentpole acceptance: across random (sched, pp, v, m, costs),
+        // the O(ops) executor reproduces the rescanning reference's
+        // `total` and every `busy[p]` via f64::to_bits.
+        prop::check_cases(0xB17B17, 192, |rng| {
+            let pp = rng.range(1, 9);
+            let sched = match rng.range(0, 3) {
+                0 => Schedule::OneF1B,
+                1 => Schedule::GPipe,
+                _ => Schedule::Interleaved(rng.range(2, 5)),
+            };
+            // Interleaved requires m % pp == 0; use multiples for all.
+            let m = pp * rng.range(1, 9);
+            let c = random_costs(rng);
+            let scheds = streams(sched, pp, m);
+            assert_executors_agree(
+                pp,
+                sched.vstages(),
+                m,
+                &scheds,
+                &c,
+                &format!("{sched:?} pp={pp} m={m}"),
+            );
+        });
+    }
+
+    #[test]
+    fn executors_agree_on_adversarial_random_streams() {
+        // Not just generator output: randomly corrupted streams (swapped
+        // and dropped ops) must produce the same verdict — bit-identical
+        // Some, or None from both.
+        prop::check_cases(0xADE5A1, 192, |rng| {
+            let pp = rng.range(1, 6);
+            let m = rng.range(1, 9);
+            let c = random_costs(rng);
+            let mut scheds = streams(Schedule::OneF1B, pp, m);
+            for s in scheds.iter_mut() {
+                // A few random swaps (possibly breaking fwd-before-bwd).
+                for _ in 0..rng.range(0, 4) {
+                    let a = rng.range(0, s.len());
+                    let b = rng.range(0, s.len());
+                    s.swap(a, b);
+                }
+                // Occasionally truncate (dependents elsewhere then stall).
+                if rng.range(0, 4) == 0 {
+                    s.truncate(rng.range(0, s.len() + 1));
+                }
+            }
+            assert_executors_agree(pp, 1, m, &scheds, &c, &format!("pp={pp} m={m}"));
+        });
+    }
+
+    #[test]
+    fn deadlock_parity() {
+        let c = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+        // Backward before its own forward on stage 0: unrunnable head.
+        let scheds = vec![
+            vec![Op::Bwd { micro: 0, chunk: 0 }, Op::Fwd { micro: 0, chunk: 0 }],
+            gen::ops(Schedule::OneF1B, 1, 2, 1),
+        ];
+        assert_executors_agree(2, 1, 1, &scheds, &c, "bwd-before-fwd");
+        assert!(makespan(2, 1, 1, &scheds, &c).is_none());
+        // Cross-stage cycle: stage 1 waits for a fwd stage 0 never runs
+        // (stage 0's stream starts with a bwd that needs stage 1's bwd).
+        let cyc = vec![
+            vec![Op::Bwd { micro: 0, chunk: 0 }, Op::Fwd { micro: 0, chunk: 0 }],
+            vec![Op::Fwd { micro: 0, chunk: 0 }, Op::Bwd { micro: 0, chunk: 0 }],
+        ];
+        assert_executors_agree(2, 1, 1, &cyc, &c, "cross-stage stall");
+        // Partial progress before the stall must also agree.
+        let partial = vec![
+            vec![
+                Op::Fwd { micro: 0, chunk: 0 },
+                Op::Bwd { micro: 1, chunk: 0 }, // fwd(1) never issued
+                Op::Fwd { micro: 1, chunk: 0 },
+            ],
+            gen::ops(Schedule::OneF1B, 1, 2, 2),
+        ];
+        assert_executors_agree(2, 1, 2, &partial, &c, "partial stall");
+        assert!(makespan(2, 1, 2, &partial, &c).is_none());
+    }
+
+    #[test]
+    fn nan_costs_complete_like_the_reference() {
+        // A NaN op cost (e.g. a pathological PLX_CAL_* override driving a
+        // stage cost to 0/0) must NOT read as a deadlock: the reference
+        // and the pysim mirror distinguish "not finished" from "finished
+        // at time NaN", so the ready-propagation executor's done flags
+        // must too. Both executors complete with NaN totals.
+        let c = OpCosts { fwd: f64::NAN, bwd: 2.0, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+        let scheds = streams(Schedule::OneF1B, 3, 6);
+        let fast = makespan(3, 1, 6, &scheds, &c).expect("fast must complete, not deadlock");
+        let refr = makespan_reference(3, 1, 6, &scheds, &c).expect("reference completes");
+        // Every stage's finish time is NaN, so the `>` fold leaves the
+        // total at 0.0 — identically in both executors — while busy
+        // carries the NaN through.
+        assert_eq!(fast.total.to_bits(), refr.total.to_bits());
+        for p in 0..3 {
+            assert!(fast.busy[p].is_nan(), "busy[{p}] should be NaN");
+            assert!(refr.busy[p].is_nan(), "reference busy[{p}] should be NaN");
+        }
+    }
+
+    #[test]
+    fn artifact_path_matches_vec_path() {
+        // makespan_artifact (packed arena streams) and makespan (Vec<Op>
+        // packing shim) must be the same function.
+        for sched in [Schedule::OneF1B, Schedule::GPipe, Schedule::Interleaved(2)] {
+            for pp in [1usize, 2, 4] {
+                let m = 4 * pp;
+                let c = OpCosts { fwd: 0.9, bwd: 2.1, head_fwd: 0.4, head_bwd: 0.8, p2p: 0.05 };
+                let art = ScheduleArtifact::build(sched, pp, m);
+                let via_art = makespan_artifact(&art, &c).unwrap();
+                let via_vec = makespan(pp, sched.vstages(), m, &streams(sched, pp, m), &c).unwrap();
+                assert_eq!(via_art.total.to_bits(), via_vec.total.to_bits());
+                for p in 0..pp {
+                    assert_eq!(via_art.busy[p].to_bits(), via_vec.busy[p].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_streams_complete_at_zero() {
+        let c = OpCosts { fwd: 1.0, bwd: 1.0, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+        let scheds: Vec<Vec<Op>> = vec![Vec::new(), Vec::new()];
+        let fast = makespan(2, 1, 0, &scheds, &c).unwrap();
+        let refr = makespan_reference(2, 1, 0, &scheds, &c).unwrap();
+        assert_eq!(fast.total.to_bits(), refr.total.to_bits());
+        assert_eq!(fast.total, 0.0);
+        assert_eq!(fast.busy, vec![0.0, 0.0]);
     }
 }

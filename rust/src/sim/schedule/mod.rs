@@ -2,26 +2,32 @@
 //! the real trainer and the analytic simulator.
 //!
 //! A [`Schedule`] names an op-stream *shape*; [`gen`] turns it into the
-//! ordered per-stage list of forward/backward micro-batch operations; and
-//! [`makespan`] executes those streams through an event-driven simulator
-//! with distinct fwd/bwd/recompute costs, cross-stage p2p edges, and a
-//! non-uniform last stage (the LM head). Bubble time, in-flight
-//! activation counts, and schedule choice all *emerge* from the same op
-//! streams — there is no closed-form bubble formula and no calibration
-//! tax anywhere downstream.
+//! ordered per-stage list of forward/backward micro-batch operations;
+//! [`stream`] packs all of a layout's streams into one reusable
+//! [`stream::ScheduleArtifact`]; and [`makespan`] executes those streams
+//! through an event-driven simulator with distinct fwd/bwd/recompute
+//! costs, cross-stage p2p edges, and a non-uniform last stage (the LM
+//! head). Bubble time, in-flight activation counts, and schedule choice
+//! all *emerge* from the same op streams — there is no closed-form
+//! bubble formula and no calibration tax anywhere downstream.
 //!
 //! Consumers:
-//! * `coordinator::trainer` executes the generated streams on real PJRT
-//!   stage workers (1F1B / GPipe);
-//! * `sim::step_time` prices them with the event-driven makespan;
-//! * `sim::memory` derives per-stage in-flight activation counts from
-//!   [`gen::peak_in_flight`] of the actual stream.
+//! * `coordinator::trainer` executes one shared artifact's streams on
+//!   real PJRT stage workers (1F1B / GPipe);
+//! * `sim::step_time` prices the artifact with the O(ops)
+//!   ready-propagation [`makespan`] executor (memoized in `sim::cache`);
+//! * `sim::memory` reads per-stage in-flight activation counts off the
+//!   same artifact ([`stream::ScheduleArtifact::peak_in_flight`]).
 
 pub mod gen;
 pub mod makespan;
+pub mod stream;
 
 pub use gen::{gpipe, interleaved_1f1b, one_f1b, ops, peak_in_flight};
-pub use makespan::{makespan, simulate_slots, Makespan, OpCosts};
+pub use makespan::{
+    makespan, makespan_artifact, makespan_reference, simulate_slots, Makespan, OpCosts,
+};
+pub use stream::{with_artifact, ScheduleArtifact};
 
 /// One scheduled operation on a physical pipeline stage.
 ///

@@ -1,0 +1,299 @@
+//! Compact op streams and the per-evaluation [`ScheduleArtifact`].
+//!
+//! The sweep hot path (S9) evaluates hundreds of layouts per table, and
+//! before this module every evaluation re-materialized `Vec<Op>` streams
+//! up to four times: `sim::memory` generated stage 0 and the head stage
+//! for `peak_in_flight`, and `sim::step_time` generated all `pp` streams
+//! again for the makespan. The artifact collapses that to **one**
+//! generation per `(sched, pp, m)` key, encoded as packed `u32`s inside
+//! a reusable thread-local arena, so the steady sweep path performs no
+//! per-evaluation heap allocation for schedule machinery at all.
+//!
+//! Packed encoding (`PackedOp = u32`):
+//!
+//! ```text
+//! bit 31      1 = backward, 0 = forward
+//! bits 30..23 chunk (virtual-stage index on this rank, < 256)
+//! bits 22..0  micro-batch index (< 2^23)
+//! ```
+//!
+//! Consumers:
+//! * `sim::evaluate` builds one artifact per layout via [`with_artifact`]
+//!   and hands it to both `memory::per_gpu_memory_with` (per-stage
+//!   [`ScheduleArtifact::peak_in_flight`]) and
+//!   `step_time::step_time_with` (the O(ops) executor in
+//!   [`super::makespan`]);
+//! * `coordinator::trainer` builds one owned artifact per run
+//!   ([`ScheduleArtifact::build`]) and every rank iterates its stage via
+//!   [`ScheduleArtifact::stage_decoded`] — one generation for all
+//!   `dp × pp` workers instead of one per worker.
+
+use std::cell::RefCell;
+
+use super::{gen, Op, Schedule};
+
+/// One schedule op packed into 32 bits (see module docs for the layout).
+pub type PackedOp = u32;
+
+const BWD_BIT: u32 = 1 << 31;
+const CHUNK_SHIFT: u32 = 23;
+const CHUNK_LIMIT: usize = 1 << 8;
+const MICRO_LIMIT: usize = 1 << 23;
+const MICRO_MASK: u32 = (1 << CHUNK_SHIFT) - 1;
+
+/// Pack an op. Panics (debug) if micro/chunk exceed the field widths —
+/// `layout::validate` bounds both far below the limits in practice.
+#[inline]
+pub fn pack(op: Op) -> PackedOp {
+    let (tag, micro, chunk) = match op {
+        Op::Fwd { micro, chunk } => (0, micro, chunk),
+        Op::Bwd { micro, chunk } => (BWD_BIT, micro, chunk),
+    };
+    debug_assert!(micro < MICRO_LIMIT, "micro {micro} overflows the packed encoding");
+    debug_assert!(chunk < CHUNK_LIMIT, "chunk {chunk} overflows the packed encoding");
+    tag | ((chunk as u32) << CHUNK_SHIFT & !BWD_BIT) | (micro as u32 & MICRO_MASK)
+}
+
+#[inline]
+pub fn is_bwd(op: PackedOp) -> bool {
+    op & BWD_BIT != 0
+}
+
+#[inline]
+pub fn chunk_of(op: PackedOp) -> usize {
+    ((op & !BWD_BIT) >> CHUNK_SHIFT) as usize
+}
+
+#[inline]
+pub fn micro_of(op: PackedOp) -> usize {
+    (op & MICRO_MASK) as usize
+}
+
+#[inline]
+pub fn unpack(op: PackedOp) -> Op {
+    let (micro, chunk) = (micro_of(op), chunk_of(op));
+    if is_bwd(op) {
+        Op::Bwd { micro, chunk }
+    } else {
+        Op::Fwd { micro, chunk }
+    }
+}
+
+/// The schedule machinery of one layout evaluation, built once and shared
+/// by every consumer: all `pp` per-stage packed op streams (concatenated,
+/// with stage bounds) plus the per-stage peak in-flight counts tracked
+/// during generation (so `sim::memory` pays nothing extra for them).
+#[derive(Debug, Clone)]
+pub struct ScheduleArtifact {
+    sched: Schedule,
+    pp: usize,
+    m: usize,
+    /// All stages' packed streams, stage `p` at `bounds[p]..bounds[p+1]`.
+    ops: Vec<PackedOp>,
+    /// `pp + 1` offsets into `ops`.
+    bounds: Vec<usize>,
+    /// Peak in-flight activations per stage, in model-chunk units.
+    peaks: Vec<usize>,
+}
+
+impl ScheduleArtifact {
+    /// An empty artifact (arena seed); fill with [`ScheduleArtifact::fill`].
+    fn empty() -> ScheduleArtifact {
+        ScheduleArtifact {
+            sched: Schedule::OneF1B,
+            pp: 0,
+            m: 0,
+            ops: Vec::new(),
+            bounds: Vec::new(),
+            peaks: Vec::new(),
+        }
+    }
+
+    /// Build an owned artifact (allocates; the sweep path goes through
+    /// the reusing [`with_artifact`] instead).
+    pub fn build(sched: Schedule, pp: usize, m: usize) -> ScheduleArtifact {
+        let mut a = ScheduleArtifact::empty();
+        a.fill(sched, pp, m);
+        a
+    }
+
+    /// (Re)generate in place, reusing the existing buffers.
+    fn fill(&mut self, sched: Schedule, pp: usize, m: usize) {
+        self.sched = sched;
+        self.pp = pp;
+        self.m = m;
+        self.ops.clear();
+        self.bounds.clear();
+        self.peaks.clear();
+        self.bounds.push(0);
+        for p in 0..pp {
+            // Track the in-flight peak as the stream is generated: one
+            // pass, no intermediate Vec<Op>.
+            let (mut live, mut peak) = (0usize, 0usize);
+            let ops = &mut self.ops;
+            gen::emit(sched, p, pp, m, |op| {
+                match op {
+                    Op::Fwd { .. } => {
+                        live += 1;
+                        peak = peak.max(live);
+                    }
+                    Op::Bwd { .. } => live -= 1,
+                }
+                ops.push(pack(op));
+            });
+            self.peaks.push(peak);
+            self.bounds.push(self.ops.len());
+        }
+    }
+
+    pub fn sched(&self) -> Schedule {
+        self.sched
+    }
+
+    pub fn pp(&self) -> usize {
+        self.pp
+    }
+
+    /// Virtual stages per physical stage (1 except interleaved).
+    pub fn vstages(&self) -> usize {
+        self.sched.vstages()
+    }
+
+    /// Micro-batches per replica per step.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// All stages' packed ops, concatenated (see [`Self::bounds`]).
+    pub fn ops(&self) -> &[PackedOp] {
+        &self.ops
+    }
+
+    /// `pp + 1` offsets delimiting each stage's slice of [`Self::ops`].
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Stage `p`'s packed op stream.
+    pub fn stage_ops(&self, p: usize) -> &[PackedOp] {
+        &self.ops[self.bounds[p]..self.bounds[p + 1]]
+    }
+
+    /// Stage `p`'s stream decoded on the fly (the trainer's view).
+    pub fn stage_decoded(&self, p: usize) -> impl Iterator<Item = Op> + '_ {
+        self.stage_ops(p).iter().map(|&op| unpack(op))
+    }
+
+    /// Peak in-flight activations on stage `p`, in model-chunk units —
+    /// equal to [`gen::peak_in_flight`] of the stage's stream, tracked
+    /// during generation.
+    pub fn peak_in_flight(&self, p: usize) -> usize {
+        self.peaks[p]
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+struct ArenaSlot {
+    key: Option<(Schedule, usize, usize)>,
+    art: ScheduleArtifact,
+}
+
+thread_local! {
+    static ARENA: RefCell<ArenaSlot> =
+        RefCell::new(ArenaSlot { key: None, art: ScheduleArtifact::empty() });
+}
+
+/// Run `f` with the artifact for `(sched, pp, m)` from this thread's
+/// arena: the packed buffers are reused across calls, and a repeated key
+/// (common — consecutive sweep layouts differ only in kernel/ckpt/sp)
+/// skips regeneration entirely. Re-entrant calls fall back to a fresh
+/// owned artifact rather than panicking on the arena borrow.
+pub fn with_artifact<R>(
+    sched: Schedule,
+    pp: usize,
+    m: usize,
+    f: impl FnOnce(&ScheduleArtifact) -> R,
+) -> R {
+    ARENA.with(|slot| match slot.try_borrow_mut() {
+        Ok(mut s) => {
+            if s.key != Some((sched, pp, m)) {
+                s.art.fill(sched, pp, m);
+                s.key = Some((sched, pp, m));
+            }
+            f(&s.art)
+        }
+        Err(_) => f(&ScheduleArtifact::build(sched, pp, m)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gen;
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for op in [
+            Op::Fwd { micro: 0, chunk: 0 },
+            Op::Bwd { micro: 0, chunk: 0 },
+            Op::Fwd { micro: 2047, chunk: 7 },
+            Op::Bwd { micro: MICRO_LIMIT - 1, chunk: CHUNK_LIMIT - 1 },
+            Op::Fwd { micro: 123_456, chunk: 31 },
+        ] {
+            assert_eq!(unpack(pack(op)), op);
+        }
+    }
+
+    #[test]
+    fn artifact_matches_generator_streams() {
+        for sched in [Schedule::OneF1B, Schedule::GPipe, Schedule::Interleaved(2)] {
+            for pp in [1usize, 2, 4] {
+                for m in [pp, 4 * pp, 8 * pp] {
+                    let art = ScheduleArtifact::build(sched, pp, m);
+                    for p in 0..pp {
+                        let want = gen::ops(sched, p, pp, m);
+                        let got: Vec<Op> = art.stage_decoded(p).collect();
+                        assert_eq!(got, want, "{sched:?} pp={pp} m={m} p={p}");
+                        assert_eq!(
+                            art.peak_in_flight(p),
+                            gen::peak_in_flight(&want),
+                            "{sched:?} pp={pp} m={m} p={p}"
+                        );
+                    }
+                    assert_eq!(art.total_ops(), 2 * m * sched.vstages() * pp);
+                    assert_eq!(art.vstages(), sched.vstages());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuses_and_regenerates() {
+        let first = with_artifact(Schedule::OneF1B, 4, 8, |a| a.stage_ops(1).to_vec());
+        // Same key: must serve the identical stream without regenerating
+        // wrongly; different key: must regenerate.
+        let again = with_artifact(Schedule::OneF1B, 4, 8, |a| a.stage_ops(1).to_vec());
+        assert_eq!(first, again);
+        let other = with_artifact(Schedule::GPipe, 4, 8, |a| a.stage_ops(1).to_vec());
+        assert_ne!(first, other);
+        let back = with_artifact(Schedule::OneF1B, 4, 8, |a| a.stage_ops(1).to_vec());
+        assert_eq!(first, back);
+    }
+
+    #[test]
+    fn nested_with_artifact_falls_back() {
+        // Re-entrancy must not panic and must still produce correct
+        // streams for BOTH keys.
+        with_artifact(Schedule::OneF1B, 2, 4, |outer| {
+            let outer_ops: Vec<Op> = outer.stage_decoded(0).collect();
+            with_artifact(Schedule::GPipe, 2, 4, |inner| {
+                let inner_ops: Vec<Op> = inner.stage_decoded(0).collect();
+                assert_eq!(inner_ops, gen::ops(Schedule::GPipe, 0, 2, 4));
+            });
+            assert_eq!(outer_ops, gen::ops(Schedule::OneF1B, 0, 2, 4));
+        });
+    }
+}

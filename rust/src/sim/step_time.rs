@@ -147,19 +147,59 @@ fn stage_costs(job: &Job, v: &ValidLayout, hw: &Hardware) -> StageCosts {
 
 /// Full step-time breakdown for a validated layout: event-driven schedule
 /// makespan + DP reduction + optimizer.
+///
+/// Convenience entry that builds (or reuses) the thread-local schedule
+/// artifact; `sim::evaluate` calls [`step_time_with`] so memory and step
+/// time share one artifact per evaluation.
 pub fn step_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> StepBreakdown {
-    let a = &job.arch;
+    schedule::with_artifact(v.layout.sched, v.layout.pp, v.num_micro, |art| {
+        step_time_with(job, v, hw, art)
+    })
+}
+
+/// [`step_time`] against a pre-built artifact. The makespan goes through
+/// `cache::makespan_cached`: layouts sharing `(sched, pp, m, op costs)`
+/// execute the op streams once, everyone else gets the stored result.
+pub fn step_time_with(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    art: &schedule::ScheduleArtifact,
+) -> StepBreakdown {
+    let c = stage_costs(job, v, hw);
+    let costs = OpCosts {
+        fwd: c.chunk_fwd + c.tp_chunk,
+        bwd: c.chunk_bwd + c.tp_chunk,
+        head_fwd: c.head_fwd,
+        head_bwd: c.head_bwd,
+        p2p: c.p2p_hop,
+    };
+    let ms = crate::sim::cache::makespan_cached(
+        v.layout.sched,
+        v.layout.pp,
+        v.num_micro,
+        &costs,
+        || schedule::makespan_artifact(art, &costs),
+    )
+    .expect("validated schedule deadlocked");
+    finish_breakdown(job, v, hw, &c, &ms)
+}
+
+/// The pre-artifact pricing path, retained verbatim as the in-job
+/// baseline for `benches/perf_schedule.rs`: materializes every stage's
+/// `Vec<Op>` stream and executes them with the rescanning
+/// [`schedule::makespan_reference`] executor, no memo. Value-identical
+/// to [`step_time`] (the executors are bit-equivalent by property test).
+#[doc(hidden)]
+pub fn step_time_baseline(job: &Job, v: &ValidLayout, hw: &Hardware) -> StepBreakdown {
     let l = &v.layout;
     let m = v.num_micro;
-    let vst = l.sched.vstages();
-
     let c = stage_costs(job, v, hw);
-
     let scheds: Vec<Vec<schedule::Op>> =
         (0..l.pp).map(|p| schedule::ops(l.sched, p, l.pp, m)).collect();
-    let ms = schedule::makespan(
+    let ms = schedule::makespan_reference(
         l.pp,
-        vst,
+        l.sched.vstages(),
         m,
         &scheds,
         &OpCosts {
@@ -171,6 +211,22 @@ pub fn step_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> StepBreakdown {
         },
     )
     .expect("validated schedule deadlocked");
+    finish_breakdown(job, v, hw, &c, &ms)
+}
+
+/// Shared tail of every pricing path: bottleneck attribution, DP
+/// reduction, optimizer.
+fn finish_breakdown(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    c: &StageCosts,
+    ms: &schedule::Makespan,
+) -> StepBreakdown {
+    let a = &job.arch;
+    let l = &v.layout;
+    let m = v.num_micro;
+    let vst = l.sched.vstages();
 
     // Bottleneck stage: the one with the most charged work (the head
     // stage in every layout we model, but derive it, don't assume it).
@@ -321,6 +377,40 @@ mod tests {
             let f1b = eval_sched(1, pp, 1, false, Kernel::Flash2Rms, Schedule::OneF1B).total();
             let gp = eval_sched(1, pp, 1, false, Kernel::Flash2Rms, Schedule::GPipe).total();
             assert!(gp >= f1b - 1e-9 * f1b, "pp={pp}: gpipe {gp} < 1f1b {f1b}");
+        }
+    }
+
+    #[test]
+    fn memoized_artifact_path_matches_baseline_bitwise() {
+        // The tentpole's value-preservation guarantee, step-time half:
+        // artifact + ready-propagation executor + makespan memo must
+        // reproduce the stream-materializing reference path exactly —
+        // run twice so the second pass exercises memo hits too.
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        for _round in 0..2 {
+            for (tp, pp, mb, ckpt, k, sched) in [
+                (1, 1, 1, false, Kernel::Flash2Rms, Schedule::OneF1B),
+                (2, 2, 1, false, Kernel::Flash2, Schedule::OneF1B),
+                (1, 2, 2, true, Kernel::Torch, Schedule::OneF1B),
+                (1, 4, 1, false, Kernel::Flash2Rms, Schedule::GPipe),
+                (2, 2, 1, false, Kernel::Flash1, Schedule::Interleaved(2)),
+                (1, 4, 1, false, Kernel::Flash2Rms, Schedule::Interleaved(5)),
+            ] {
+                let v = validate(&job, &Layout { tp, pp, mb, ckpt, kernel: k, sp: false, sched })
+                    .unwrap();
+                let new = step_time(&job, &v, &A100);
+                let old = step_time_baseline(&job, &v, &A100);
+                for (x, y) in [
+                    (new.compute, old.compute),
+                    (new.tp_comm, old.tp_comm),
+                    (new.pp_comm, old.pp_comm),
+                    (new.bubble, old.bubble),
+                    (new.dp_comm, old.dp_comm),
+                    (new.optimizer, old.optimizer),
+                ] {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{:?}: {x} vs {y}", v.layout);
+                }
+            }
         }
     }
 

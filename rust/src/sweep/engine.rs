@@ -32,6 +32,11 @@ impl Row {
     }
 }
 
+/// The MFU of a row already filtered to `Outcome::Ok` (ranking helper).
+fn r_mfu(r: &Row) -> f64 {
+    r.outcome.mfu().expect("ranked row must be runnable")
+}
+
 /// Full sweep result for one preset.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
@@ -43,29 +48,39 @@ pub struct SweepResult {
 impl SweepResult {
     /// Rows sorted the way the paper prints tables: runnable rows by MFU
     /// descending, then OOM rows, then kernel-unavailable rows.
+    ///
+    /// Ordering is total (`f64::total_cmp` on a precomputed key), so a
+    /// NaN MFU — impossible today, but one bad calibration override away
+    /// — can never panic a sweep mid-render. Identical to the old
+    /// `partial_cmp` order for every non-NaN input (sweep MFUs are
+    /// strictly positive, so the `-0.0 < 0.0` refinement of `total_cmp`
+    /// never reorders real rows).
     pub fn sorted(&self) -> Vec<&Row> {
-        let mut rows: Vec<&Row> = self.rows.iter().collect();
-        rows.sort_by(|a, b| {
-            let key = |r: &Row| match r.outcome {
-                Outcome::Ok { mfu, .. } => (0, -mfu),
-                Outcome::Oom { .. } => (1, 0.0),
-                Outcome::KernelUnavailable => (2, 0.0),
-            };
-            key(a).partial_cmp(&key(b)).unwrap()
-        });
-        rows
+        let mut keyed: Vec<(u8, f64, &Row)> = self
+            .rows
+            .iter()
+            .map(|r| match r.outcome {
+                Outcome::Ok { mfu, .. } => (0u8, -mfu, r),
+                Outcome::Oom { .. } => (1, 0.0, r),
+                Outcome::KernelUnavailable => (2, 0.0, r),
+            })
+            .collect();
+        // Stable sort: equal keys keep enumeration order, exactly like
+        // the previous implementation.
+        keyed.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        keyed.into_iter().map(|(_, _, r)| r).collect()
     }
 
-    /// Best runnable row, optionally filtered.
+    /// Best runnable row, optionally filtered. NaN-safe: `total_cmp`
+    /// ranks a (pathological) NaN MFU above every finite one instead of
+    /// panicking; ties keep the last row, like `max_by` always did.
     pub fn best_where<F: Fn(&Row) -> bool>(&self, f: F) -> Option<&Row> {
         self.rows
             .iter()
             .filter(|r| f(r) && r.outcome.mfu().is_some())
             .max_by(|a, b| {
-                a.outcome
-                    .mfu()
-                    .partial_cmp(&b.outcome.mfu())
-                    .unwrap()
+                let (x, y) = (r_mfu(a), r_mfu(b));
+                x.total_cmp(&y)
             })
     }
 
@@ -233,6 +248,37 @@ mod tests {
             let r = run(&p, &A100);
             let best = r.best().unwrap();
             assert_eq!(best.layout().mb, 1, "{}: best mb != 1", p.name);
+        }
+    }
+
+    #[test]
+    fn nan_mfu_never_panics_sorting_or_best() {
+        // Satellite regression gate: a NaN MFU (e.g. a bad PLX_CAL_*
+        // override driving a cost to 0/0) used to panic partial_cmp's
+        // unwrap inside sorted()/best_where(); total_cmp must rank it
+        // deterministically instead.
+        let p = &main_presets()[0];
+        let mut r = run_jobs(p, &A100, 1);
+        let n = r.rows.len();
+        let mut poisoned = 0usize;
+        for (i, row) in r.rows.iter_mut().enumerate() {
+            if i % 6 == 0 {
+                if let Outcome::Ok { mfu, .. } = &mut row.outcome {
+                    *mfu = f64::NAN;
+                    poisoned += 1;
+                }
+            }
+        }
+        assert!(poisoned > 0, "preset must contain runnable rows to poison");
+        let sorted = r.sorted();
+        assert_eq!(sorted.len(), n);
+        let best = r.best();
+        assert!(best.is_some());
+        // Non-NaN ordering must still hold over the runnable suffix.
+        let finite: Vec<f64> =
+            sorted.iter().filter_map(|x| x.outcome.mfu()).filter(|m| !m.is_nan()).collect();
+        for w in finite.windows(2) {
+            assert!(w[0] >= w[1], "{} < {}", w[0], w[1]);
         }
     }
 

@@ -61,6 +61,13 @@ pub struct Pool {
 /// not try to spawn a million OS threads.
 pub const MAX_WORKERS: usize = 256;
 
+/// Minimum items per chunk task on the uncapped path. Dispatching a task
+/// costs a queue lock, a box, and a channel send; below this many ~µs
+/// items per task the dispatch overhead rivals the work itself (measured
+/// on the sweep engine's layout evaluations). The floor yields to
+/// `n / workers` for small batches so every worker still gets work.
+pub const MIN_CHUNK: usize = 16;
+
 impl Pool {
     /// Spawn up to `workers` threads (clamped to `1..=MAX_WORKERS`). If
     /// the OS refuses threads partway (ulimit), the pool degrades to the
@@ -131,9 +138,14 @@ impl Pool {
     /// this call's items concurrently: when the cap binds, the items are
     /// split into exactly `max_parallel` chunk tasks, so no more than
     /// that many workers can ever hold one. Uncapped calls use ~4 chunks
-    /// per worker for stealing granularity. A chunk that panics
-    /// propagates the panic to the caller after the remaining chunks
-    /// finish.
+    /// per worker for stealing granularity, floored at [`MIN_CHUNK`]
+    /// items per task — dispatch (queue lock + channel send) is charged
+    /// once per **chunk**, never once per item, so cheap items (the
+    /// sweep's ~µs layout evaluations) amortize it instead of drowning in
+    /// it. Results are scattered back by index either way, so chunking is
+    /// invisible in the output: index-ordered and bit-identical to
+    /// serial. A chunk that panics propagates the panic to the caller
+    /// after the remaining chunks finish.
     pub fn map_capped<T, R, F>(&self, items: Vec<T>, max_parallel: usize, f: F) -> Vec<R>
     where
         T: Send + Sync + 'static,
@@ -145,14 +157,21 @@ impl Pool {
             return Vec::new();
         }
         let max_parallel = max_parallel.clamp(1, self.workers);
-        let target_chunks = if max_parallel < self.workers {
-            max_parallel
-        } else {
-            self.workers * 4
-        };
         let f = Arc::new(f);
         let items = Arc::new(items);
-        let chunk = n.div_ceil(target_chunks).max(1);
+        let chunk = if max_parallel < self.workers {
+            // Cap semantics: exactly `max_parallel` chunks, so the cap is
+            // enforced by construction.
+            n.div_ceil(max_parallel).max(1)
+        } else {
+            // Uncapped: ~4 chunks per worker for stealing granularity,
+            // but never chunks smaller than MIN_CHUNK items — unless the
+            // batch is so small that the floor would idle workers, in
+            // which case one-item-per-worker wins.
+            let balance = n.div_ceil(self.workers * 4).max(1);
+            let floor = MIN_CHUNK.min(n.div_ceil(self.workers)).max(1);
+            balance.max(floor)
+        };
         // Each chunk ships back `Ok(results)` or the caught panic payload,
         // which the caller re-raises — so `--jobs N` panics read exactly
         // like serial ones.
@@ -343,6 +362,35 @@ mod tests {
         let serial = map_jobs(items.clone(), 1, f);
         let parallel = map_jobs(items, 4, f);
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn chunk_boundaries_are_bit_identical_to_serial() {
+        // Satellite requirement: chunked dispatch must stay index-ordered
+        // and bit-identical to serial for batch sizes straddling every
+        // chunking regime — below MIN_CHUNK, at the floor's edges, around
+        // multiples of it, and into balance-dominated sizes — across both
+        // capped and uncapped job counts. The f64 payload is compared by
+        // bit pattern, the same guarantee the sweep engine's rendered
+        // tables lean on.
+        use crate::util::prop;
+        prop::check_cases(0xC41B0C, 64, |rng| {
+            let base = [1usize, MIN_CHUNK, 2 * MIN_CHUNK, 8 * MIN_CHUNK][rng.range(0, 4)];
+            let n = (base + rng.range(0, 3)).saturating_sub(1).max(1);
+            let jobs = rng.range(2, 10);
+            let items: Vec<u64> = (0..n as u64).collect();
+            let f = |i: usize, &x: &u64| {
+                // Non-associative float mix: any reordering or index slip
+                // changes the bits.
+                (x.wrapping_mul(0x9E3779B97F4A7C15) as f64).sqrt() + (i as f64) * 1e-3
+            };
+            let serial = map_jobs(items.clone(), 1, f);
+            let parallel = map_jobs(items, jobs, f);
+            assert_eq!(serial.len(), parallel.len());
+            for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} jobs={jobs} index {i}");
+            }
+        });
     }
 
     #[test]

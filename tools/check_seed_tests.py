@@ -812,6 +812,163 @@ SCHEDULE_CHECKS = [
 ]
 
 
+# ------------------------------------------------------------- executor suite
+# Mirrors the Rust executor-equivalence tests added with the
+# allocation-free schedule pipeline (ScheduleArtifact + ready-propagation
+# makespan): the optimized Rust path and tools/pysim.py::makespan_fast
+# must both be bit-identical to the reference rescanning executor, so the
+# mirror cannot drift from the optimized Rust path without failing here
+# (and the golden fixtures regenerate through makespan_fast, which CI
+# byte-compares against the committed tables).
+
+import struct
+
+
+def _bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def _assert_executors_agree(pp, v, m, scheds, costs, ctx):
+    fast = makespan_fast(pp, v, m, scheds, *costs)
+    ref = makespan(pp, v, m, scheds, *costs)
+    if fast is None or ref is None:
+        assert fast is None and ref is None, f"{ctx}: verdicts diverge ({fast} vs {ref})"
+        return
+    ft, fb = fast
+    rt, rb = ref
+    assert _bits(ft) == _bits(rt), f"{ctx}: total {ft!r} vs {rt!r}"
+    assert len(fb) == len(rb) == pp, ctx
+    for p in range(pp):
+        assert _bits(fb[p]) == _bits(rb[p]), f"{ctx}: busy[{p}] {fb[p]!r} vs {rb[p]!r}"
+
+
+class _Lcg:
+    """Deterministic PRNG for the adversarial-stream cases (mirrors the
+    spirit of rust/src/util/prng.rs; exact sequence parity not needed —
+    each side proves fast == reference on its own cases)."""
+
+    def __init__(self, seed):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF
+
+    def below(self, n):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return (self.s >> 33) % n
+
+
+def t_exec_fast_matches_reference_on_generators():
+    # rust: makespan::tests::ready_propagation_is_bit_identical_to_reference
+    cost_sets = [
+        (1.0, 2.0, 0.0, 0.0, 0.0),
+        (0.73, 2.19, 0.41, 0.87, 0.063),
+        (2.5, 0.31, 1.7, 0.0, 0.25),
+        (1e-4, 3.3e-3, 7.7e-4, 1.9e-3, 5.5e-5),
+    ]
+    for pp in [1, 2, 3, 4, 6, 8]:
+        for mult in [1, 2, 5]:
+            m = pp * mult
+            cases = [(SCHED_1F1B, 1), (SCHED_GPIPE, 1)]
+            for v in (2, 4):
+                cases.append((sched_interleaved(v), v))
+            for sched, v in cases:
+                scheds = [sched_ops(sched, p, pp, m) for p in range(pp)]
+                for costs in cost_sets:
+                    _assert_executors_agree(pp, v, m, scheds, costs,
+                                            f"{sched} pp={pp} m={m} costs={costs}")
+
+
+def t_exec_fast_matches_reference_on_adversarial_streams():
+    # rust: makespan::tests::executors_agree_on_adversarial_random_streams
+    rng = _Lcg(0xADE5A1)
+    costs = (0.9, 2.1, 0.4, 0.8, 0.05)
+    for _case in range(200):
+        pp = 1 + rng.below(5)
+        m = 1 + rng.below(8)
+        scheds = [one_f1b(p, pp, m) for p in range(pp)]
+        for s in scheds:
+            for _ in range(rng.below(4)):
+                a, b = rng.below(len(s)), rng.below(len(s))
+                s[a], s[b] = s[b], s[a]
+            if rng.below(4) == 0:
+                del s[rng.below(len(s) + 1):]
+        _assert_executors_agree(pp, 1, m, scheds, costs, f"adversarial pp={pp} m={m}")
+
+
+def t_exec_deadlock_parity():
+    # rust: makespan::tests::deadlock_parity
+    costs = (1.0, 2.0, 0.0, 0.0, 0.0)
+    bwd_first = [[(B, 0, 0), (F, 0, 0)], one_f1b(1, 2, 1)]
+    _assert_executors_agree(2, 1, 1, bwd_first, costs, "bwd-before-fwd")
+    assert makespan_fast(2, 1, 1, bwd_first, *costs) is None
+    cyc = [[(B, 0, 0), (F, 0, 0)], [(F, 0, 0), (B, 0, 0)]]
+    _assert_executors_agree(2, 1, 1, cyc, costs, "cross-stage stall")
+    partial = [[(F, 0, 0), (B, 1, 0), (F, 1, 0)], one_f1b(1, 2, 2)]
+    _assert_executors_agree(2, 1, 2, partial, costs, "partial stall")
+    assert makespan_fast(2, 1, 2, partial, *costs) is None
+
+
+def t_exec_production_cost_points_agree():
+    # The equivalence at the exact (sched, pp, m, costs) tuples the
+    # committed goldens are generated from: every runnable layout of the
+    # table-2 presets routes its stage_costs through both executors.
+    checked = 0
+    for p in seqpar_presets():
+        job = p.job()
+        for v in enumerate_layouts(job, p.tps, p.pps, p.mbs, p.ckpts,
+                                   p.kernels, p.sps, p.scheds):
+            l = v.layout
+            if not fits(job, v, A100):
+                continue
+            chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop = \
+                stage_costs(job, v, A100)
+            scheds = [sched_ops(l.sched, q, l.pp, v.num_micro) for q in range(l.pp)]
+            costs = (chunk_fwd + tp_chunk, chunk_bwd + tp_chunk,
+                     head_fwd, head_bwd, p2p_hop)
+            _assert_executors_agree(l.pp, sched_vstages(l.sched), v.num_micro,
+                                    scheds, costs, f"{p.name} {l}")
+            checked += 1
+    assert checked > 100, f"only {checked} production cost points checked"
+
+
+def t_exec_nan_costs_complete_like_reference():
+    # rust: makespan::tests::nan_costs_complete_like_the_reference — a NaN
+    # op cost must not read as a deadlock (the done-markers distinguish
+    # "not finished" from "finished at NaN").
+    costs = (float("nan"), 2.0, 0.0, 0.0, 0.0)
+    scheds = [one_f1b(p, 3, 6) for p in range(3)]
+    fast = makespan_fast(3, 1, 6, scheds, *costs)
+    ref = makespan(3, 1, 6, scheds, *costs)
+    assert fast is not None and ref is not None
+    assert _bits(fast[0]) == _bits(ref[0])  # both 0.0: the > fold skips NaN
+    assert all(math.isnan(b) for b in fast[1])
+    assert all(math.isnan(b) for b in ref[1])
+
+
+def t_exec_total_cmp_key_orders_like_floats():
+    # rust: engine.rs total_cmp keys — the sortable-integer transform must
+    # agree with float order on every non-NaN pair and rank NaN above all.
+    vals = [-float("inf"), -2.5, -0.0, 0.0, 1e-300, 0.7057, 2.5, float("inf")]
+    for a in vals:
+        for b in vals:
+            if (a < b) != (total_cmp_key(a) < total_cmp_key(b)):
+                # The one refinement: total order distinguishes -0.0 < 0.0.
+                assert a == b == 0.0, (a, b)
+    nan_key = total_cmp_key(float("nan"))
+    assert all(total_cmp_key(v) < nan_key for v in vals)
+
+
+EXECUTOR_CHECKS = [
+    ("makespan::ready_propagation_is_bit_identical_to_reference",
+     t_exec_fast_matches_reference_on_generators),
+    ("makespan::executors_agree_on_adversarial_random_streams",
+     t_exec_fast_matches_reference_on_adversarial_streams),
+    ("makespan::deadlock_parity", t_exec_deadlock_parity),
+    ("makespan::production_cost_points_agree_with_goldens",
+     t_exec_production_cost_points_agree),
+    ("makespan::nan_costs_complete_like_reference", t_exec_nan_costs_complete_like_reference),
+    ("engine::total_cmp_key_orders_like_floats", t_exec_total_cmp_key_orders_like_floats),
+]
+
+
 def main():
     for name, fn in CHECKS:
         check(name, fn)
@@ -820,6 +977,10 @@ def main():
     for name, fn in SCHEDULE_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - seed_pass} / {len(SCHEDULE_CHECKS)} (schedule suite)")
+    sched_pass = len(PASS)
+    for name, fn in EXECUTOR_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - sched_pass} / {len(EXECUTOR_CHECKS)} (executor suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

@@ -33,6 +33,7 @@ Rust source of truth:
 
 import math
 import os
+import struct
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
 
@@ -285,14 +286,19 @@ def peak_in_flight(ops):
 
 
 def makespan(pp, vst, m, scheds, fwd_cost, bwd_cost, head_fwd, head_bwd, p2p):
-    """Event-driven makespan of per-stage op streams.
+    """Event-driven makespan of per-stage op streams — the REFERENCE
+    rescanning executor (O(pp x total_ops) worst case).
 
-    Mirrors rust/src/sim/schedule/makespan.rs::makespan expression for
-    expression. Each physical stage executes its ops in order; an op
-    starts at max(stage free time, dependency finish) and costs
-    base + head extra (last virtual stage only) + p2p (cross-stage
-    dependency only; the receive serializes on the consuming stage).
-    Returns (total, busy[]) or None on deadlock.
+    Mirrors rust/src/sim/schedule/makespan.rs::makespan_reference
+    expression for expression; it is the executable spec that the
+    production ready-propagation executor (makespan_fast below,
+    mirroring the Rust `makespan`/`makespan_artifact` hot path) must
+    reproduce bit for bit (tools/check_seed_tests.py, executor suite).
+    Each physical stage executes its ops in order; an op starts at
+    max(stage free time, dependency finish) and costs base + head extra
+    (last virtual stage only) + p2p (cross-stage dependency only; the
+    receive serializes on the consuming stage). Returns (total, busy[])
+    or None on deadlock.
     """
     nvs = pp * vst
     fwd_t = [[None] * m for _ in range(nvs)]
@@ -353,6 +359,102 @@ def makespan(pp, vst, m, scheds, fwd_cost, bwd_cost, head_fwd, head_bwd, p2p):
                 progressed = True
         if not progressed:
             return None
+    total = 0.0
+    for t in free:
+        if t > total:
+            total = t
+    return total, busy
+
+
+def makespan_fast(pp, vst, m, scheds, fwd_cost, bwd_cost, head_fwd, head_bwd, p2p):
+    """The production ready-propagation executor, O(total_ops).
+
+    Mirrors rust/src/sim/schedule/makespan.rs::run_ready expression for
+    expression (minus the u32 packing, which does not touch any float):
+    each stage advances until its head op blocks on a missing dependency,
+    and a completed op wakes exactly the stage hosting its cross-stage
+    consumer, so every op's start = max(free, dep) is computed once.
+    Bit-identical to makespan() by construction — both run each stage's
+    ops in stream order and evaluate the same float expressions on the
+    same operands; only the cross-stage visit order differs.
+    """
+    nvs = pp * vst
+    fwd_t = [None] * (nvs * m)
+    bwd_t = [None] * (nvs * m)
+    pos = [0] * pp
+    free = [0.0] * pp
+    busy = [0.0] * pp
+    total_ops = 0
+    for s in scheds:
+        total_ops += len(s)
+    queue = list(range(pp))
+    queued = [True] * pp
+    qi = 0
+    done = 0
+    while qi < len(queue):
+        p = queue[qi]
+        qi += 1
+        sched = scheds[p]
+        while True:
+            if pos[p] >= len(sched):
+                queued[p] = False
+                break
+            kind, i, c = sched[pos[p]]
+            vs = c * pp + p
+            if kind == F:
+                if vs == 0:
+                    dep = 0.0
+                    cross = False
+                else:
+                    t = fwd_t[(vs - 1) * m + i]
+                    if t is None:
+                        queued[p] = False
+                        break
+                    dep = t
+                    cross = (vs - 1) % pp != p
+                cost = (fwd_cost
+                        + (head_fwd if vs == nvs - 1 else 0.0)
+                        + (p2p if cross else 0.0))
+            else:
+                own = fwd_t[vs * m + i]
+                if own is None:
+                    queued[p] = False
+                    break
+                if vs == nvs - 1:
+                    dep = own
+                    cross = False
+                else:
+                    t = bwd_t[(vs + 1) * m + i]
+                    if t is None:
+                        queued[p] = False
+                        break
+                    dep = own if own > t else t
+                    cross = (vs + 1) % pp != p
+                cost = (bwd_cost
+                        + (head_bwd if vs == nvs - 1 else 0.0)
+                        + (p2p if cross else 0.0))
+            start = free[p] if free[p] > dep else dep
+            fin = start + cost
+            if kind == F:
+                fwd_t[vs * m + i] = fin
+                if vs + 1 < nvs:
+                    q = (vs + 1) % pp
+                    if q != p and not queued[q]:
+                        queue.append(q)
+                        queued[q] = True
+            else:
+                bwd_t[vs * m + i] = fin
+                if vs > 0:
+                    q = (vs - 1) % pp
+                    if q != p and not queued[q]:
+                        queue.append(q)
+                        queued[q] = True
+            free[p] = fin
+            busy[p] += cost
+            pos[p] += 1
+            done += 1
+    if done < total_ops:
+        return None
     total = 0.0
     for t in free:
         if t > total:
@@ -667,10 +769,13 @@ def step_time(job, v, hw):
     chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop = \
         stage_costs(job, v, hw)
 
+    # The production path (mirrors step_time_with): the ready-propagation
+    # executor. Bit-identical to the reference makespan() — asserted by
+    # the executor suite in tools/check_seed_tests.py.
     scheds = [sched_ops(l.sched, p, l.pp, m) for p in range(l.pp)]
-    ms = makespan(l.pp, vst, m, scheds,
-                  chunk_fwd + tp_chunk, chunk_bwd + tp_chunk,
-                  head_fwd, head_bwd, p2p_hop)
+    ms = makespan_fast(l.pp, vst, m, scheds,
+                       chunk_fwd + tp_chunk, chunk_bwd + tp_chunk,
+                       head_fwd, head_bwd, p2p_hop)
     assert ms is not None, "schedule deadlock"
     total, busy = ms
 
@@ -863,6 +968,17 @@ class Row:
         return self.v.layout
 
 
+def total_cmp_key(x):
+    """Rust f64::total_cmp as a sortable integer (IEEE-754 total order).
+
+    Mirrors the NaN-safe ordering in rust/src/sweep/engine.rs: bits of the
+    f64, with negative values' magnitude bits flipped so the integer order
+    matches the float total order. Identical to plain float comparison for
+    every non-NaN, non-signed-zero-tie input."""
+    bits = struct.unpack("<q", struct.pack("<d", x))[0]
+    return bits ^ ((bits >> 63) & 0x7FFFFFFFFFFFFFFF)
+
+
 @dataclass
 class SweepResult:
     preset_name: str
@@ -870,20 +986,23 @@ class SweepResult:
     rows: List[Row]
 
     def sorted(self):
+        # Mirrors engine.rs::sorted: (rank, total_cmp key of -mfu),
+        # stable sort.
         def key(r):
             if r.outcome.kind == "ok":
-                return (0, -r.outcome.mfu)
+                return (0, total_cmp_key(-r.outcome.mfu))
             if r.outcome.kind == "oom":
-                return (1, 0.0)
-            return (2, 0.0)
+                return (1, total_cmp_key(0.0))
+            return (2, total_cmp_key(0.0))
         return sorted(self.rows, key=key)  # stable, like Rust sort_by
 
     def best_where(self, f):
         best = None
         for r in self.rows:
             if f(r) and r.outcome.mfu_opt() is not None:
-                # Rust max_by returns the LAST maximal element.
-                if best is None or r.outcome.mfu >= best.outcome.mfu:
+                # Rust max_by returns the LAST maximal element; total_cmp
+                # makes the comparison NaN-safe like engine.rs.
+                if best is None or total_cmp_key(r.outcome.mfu) >= total_cmp_key(best.outcome.mfu):
                     best = r
         return best
 
