@@ -4,7 +4,7 @@
 
 use plx::layout::Job;
 use plx::model::arch::preset;
-use plx::planner::{plan_by_rules, plan_exhaustive};
+use plx::planner::{plan_by_rules, plan_exhaustive, plan_exhaustive_reference, plan_exhaustive_stats};
 use plx::sim::A100;
 use plx::topo::Cluster;
 use plx::util::bench::{bench, section};
@@ -62,7 +62,20 @@ fn main() {
     bench("plan_by_rules(65B)", 2, 20, || {
         std::hint::black_box(plan_by_rules(&job, &A100).unwrap());
     });
-    bench("plan_exhaustive(65B)", 2, 20, || {
+    // Both exhaustive passes clear the process-wide memos inside the
+    // timed closure: with a warm evaluate memo both variants degenerate
+    // to hash lookups and the pruned-vs-unpruned delta would measure
+    // nothing (perf_schedule.rs does the same for its cold figures).
+    bench("plan_exhaustive(65B, bound-pruned, cold)", 1, 10, || {
+        plx::sim::cache::clear();
         std::hint::black_box(plan_exhaustive(&job, &A100).unwrap());
     });
+    bench("plan_exhaustive_reference(65B, unpruned, cold)", 1, 10, || {
+        plx::sim::cache::clear();
+        std::hint::black_box(plan_exhaustive_reference(&job, &A100).unwrap());
+    });
+    // The branch-and-bound counter (caches do not matter here: the prune
+    // decisions consult only the bounds, never the outcome memo).
+    let (_, stats) = plan_exhaustive_stats(&job, &A100).unwrap();
+    println!("\n{}", stats.log_line());
 }

@@ -91,7 +91,25 @@ impl Layout {
             s => format!("({}, {}, {}, {})", self.mb, self.tp, self.pp, s.label()),
         }
     }
+
+    /// The per-layer-stage memo key dimensions (see `sim::step_time`'s
+    /// keyed [`LayerCosts`](crate::sim::step_time::LayerCosts) stage):
+    /// every per-layer cost and activation-byte quantity is a pure
+    /// function of these five fields plus the (sweep-constant) model
+    /// architecture and hardware — `pp` and `sched` only rescale or
+    /// select the stage outputs in the combine. The sweep engine buckets
+    /// layouts by this key so each distinct stage result is computed
+    /// exactly once per worker dispatch.
+    pub fn stage_key(&self) -> StageKey {
+        (self.tp, self.mb, self.ckpt, self.kernel, self.sp)
+    }
 }
+
+/// Layout dimensions the per-layer cost stage depends on:
+/// `(tp, mb, ckpt, kernel, sp)`. Same-key layouts are NOT adjacent in
+/// enumeration order (`pp`/`sched` sit between these axes), which is why
+/// the engine buckets with a hash map rather than run-length grouping.
+pub type StageKey = (usize, usize, bool, Kernel, bool);
 
 /// Global-batch training job: the fixed quantities of one sweep row.
 #[derive(Debug, Clone, Copy)]
@@ -188,11 +206,152 @@ pub fn validate(job: &Job, l: &Layout) -> Result<ValidLayout> {
     })
 }
 
+/// Lazy axis-product enumeration of the layout search space.
+///
+/// Yields exactly the sequence the historical materializing
+/// [`enumerate`] produced — same nesting order (`tp` outermost, `sched`
+/// innermost), same `ckpt ∧ RMS-kernel` exclusion, same `validate`
+/// filtering — but one layout at a time, with no up-front `Vec`. The
+/// sweep engine consumes this directly (bucketing by [`Layout::stage_key`]
+/// as it goes) and the bound-pruned planner scans it with an incumbent,
+/// so neither ever materializes the full Cartesian product.
+///
+/// Order parity with the old nested loops is pinned by the
+/// `layout_space_matches_materializing_enumerate` property test below
+/// (row order decides every rendered table and CSV byte).
+pub struct LayoutSpace<'a> {
+    job: &'a Job,
+    axes: Axes<'a>,
+    /// Odometer over the seven axes, `idx[6]` (sched) fastest.
+    idx: [usize; 7],
+    exhausted: bool,
+}
+
+#[derive(Clone, Copy)]
+struct Axes<'a> {
+    tps: &'a [usize],
+    pps: &'a [usize],
+    mbs: &'a [usize],
+    ckpts: &'a [bool],
+    kernels: &'a [Kernel],
+    sps: &'a [bool],
+    scheds: &'a [Schedule],
+}
+
+impl<'a> LayoutSpace<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        job: &'a Job,
+        tps: &'a [usize],
+        pps: &'a [usize],
+        mbs: &'a [usize],
+        ckpts: &'a [bool],
+        kernels: &'a [Kernel],
+        sps: &'a [bool],
+        scheds: &'a [Schedule],
+    ) -> LayoutSpace<'a> {
+        let axes = Axes { tps, pps, mbs, ckpts, kernels, sps, scheds };
+        LayoutSpace { job, axes, idx: [0; 7], exhausted: axes.total() == 0 }
+    }
+
+    /// Size of the raw Cartesian product (before the exclusion rule and
+    /// `validate` filtering) — the denominator for pruning statistics.
+    pub fn total_combinations(&self) -> usize {
+        self.axes.total()
+    }
+}
+
+impl Axes<'_> {
+    fn total(&self) -> usize {
+        self.tps.len()
+            * self.pps.len()
+            * self.mbs.len()
+            * self.ckpts.len()
+            * self.kernels.len()
+            * self.sps.len()
+            * self.scheds.len()
+    }
+
+    fn len(&self, axis: usize) -> usize {
+        match axis {
+            0 => self.tps.len(),
+            1 => self.pps.len(),
+            2 => self.mbs.len(),
+            3 => self.ckpts.len(),
+            4 => self.kernels.len(),
+            5 => self.sps.len(),
+            _ => self.scheds.len(),
+        }
+    }
+}
+
+impl Iterator for LayoutSpace<'_> {
+    type Item = ValidLayout;
+
+    fn next(&mut self) -> Option<ValidLayout> {
+        while !self.exhausted {
+            let a = &self.axes;
+            let l = Layout {
+                tp: a.tps[self.idx[0]],
+                pp: a.pps[self.idx[1]],
+                mb: a.mbs[self.idx[2]],
+                ckpt: a.ckpts[self.idx[3]],
+                kernel: a.kernels[self.idx[4]],
+                sp: a.sps[self.idx[5]],
+                sched: a.scheds[self.idx[6]],
+            };
+            // Advance the odometer (innermost axis fastest), exactly the
+            // carry order of the historical nested loops.
+            let mut axis = 6;
+            loop {
+                self.idx[axis] += 1;
+                if self.idx[axis] < self.axes.len(axis) {
+                    break;
+                }
+                self.idx[axis] = 0;
+                if axis == 0 {
+                    self.exhausted = true;
+                    break;
+                }
+                axis -= 1;
+            }
+            // Paper: RMSNorm kernel + checkpointing errored (Table 1
+            // caption) — that combination is omitted from all sweeps.
+            if l.ckpt && l.kernel == Kernel::Flash2Rms {
+                continue;
+            }
+            if let Ok(v) = validate(self.job, &l) {
+                return Some(v);
+            }
+        }
+        None
+    }
+}
+
 /// Enumerate the Cartesian product of the given option sets, keeping only
 /// layouts valid for `job` (Table 1 semantics, plus the schedule
-/// dimension this reproduction adds).
+/// dimension this reproduction adds). Materializing convenience over
+/// [`LayoutSpace`]; hot paths iterate the space lazily instead.
 #[allow(clippy::too_many_arguments)]
 pub fn enumerate(
+    job: &Job,
+    tps: &[usize],
+    pps: &[usize],
+    mbs: &[usize],
+    ckpts: &[bool],
+    kernels: &[Kernel],
+    sps: &[bool],
+    scheds: &[Schedule],
+) -> Vec<ValidLayout> {
+    LayoutSpace::new(job, tps, pps, mbs, ckpts, kernels, sps, scheds).collect()
+}
+
+/// The historical materializing enumeration, retained verbatim as the
+/// order/contents oracle for the `LayoutSpace` parity property test. Not
+/// part of the API surface.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn enumerate_reference(
     job: &Job,
     tps: &[usize],
     pps: &[usize],
@@ -210,9 +369,6 @@ pub fn enumerate(
                     for &kernel in kernels {
                         for &sp in sps {
                             for &sched in scheds {
-                                // Paper: RMSNorm kernel + checkpointing
-                                // errored (Table 1 caption) — that
-                                // combination is omitted from all sweeps.
                                 if ckpt && kernel == Kernel::Flash2Rms {
                                     continue;
                                 }
@@ -363,6 +519,90 @@ mod tests {
                 assert!(!(vl.layout.ckpt && vl.layout.kernel == Kernel::Flash2Rms));
             }
         });
+    }
+
+    /// Satellite gate: the lazy `LayoutSpace` must yield the exact
+    /// sequence (order AND contents) the materializing nested loops
+    /// produce, across random subspaces including empty axes — row
+    /// order decides every rendered table and CSV byte.
+    #[test]
+    fn layout_space_matches_materializing_enumerate() {
+        prop::check_cases(0x5ACE5ACE, 96, |rng| {
+            let archs = ["llama13b", "llama13b-8k", "llama30b", "llama65b"];
+            let arch = preset(archs[rng.range(0, archs.len())]).unwrap();
+            let nodes = 1 << rng.range(0, 6);
+            let gbs = [64, 512, 2048][rng.range(0, 3)];
+            let j = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
+            let pick = |rng: &mut crate::util::prng::Rng, opts: &[usize]| -> Vec<usize> {
+                opts.iter().copied().filter(|_| rng.bool()).collect()
+            };
+            let tps = pick(&mut *rng, &[1, 2, 4, 8]);
+            let pps = pick(&mut *rng, &[1, 2, 4, 8]);
+            let mbs = pick(&mut *rng, &[1, 2, 4, 8]);
+            let ckpts: Vec<bool> =
+                [false, true].into_iter().filter(|_| rng.bool()).collect();
+            let kernels: Vec<Kernel> =
+                Kernel::ALL.into_iter().filter(|_| rng.bool()).collect();
+            let sps: Vec<bool> = [false, true].into_iter().filter(|_| rng.bool()).collect();
+            let scheds: Vec<Schedule> =
+                [Schedule::OneF1B, Schedule::GPipe, Schedule::Interleaved(2)]
+                    .into_iter()
+                    .filter(|_| rng.bool())
+                    .collect();
+            let space = LayoutSpace::new(&j, &tps, &pps, &mbs, &ckpts, &kernels, &sps, &scheds);
+            let lazy: Vec<ValidLayout> = space.collect();
+            let reference =
+                enumerate_reference(&j, &tps, &pps, &mbs, &ckpts, &kernels, &sps, &scheds);
+            assert_eq!(lazy.len(), reference.len());
+            for (a, b) in lazy.iter().zip(&reference) {
+                assert_eq!(a.layout, b.layout, "sequence diverged");
+                assert_eq!(a.num_micro, b.num_micro);
+                assert_eq!(a.topo.dp, b.topo.dp);
+            }
+        });
+    }
+
+    #[test]
+    fn layout_space_total_combinations_counts_raw_product() {
+        let j = job13b();
+        let (tps, pps, mbs) = ([1usize, 2], [1usize, 2], [1usize, 2, 4, 8]);
+        let s = LayoutSpace::new(
+            &j,
+            &tps,
+            &pps,
+            &mbs,
+            &[true, false],
+            &[Kernel::Flash2, Kernel::Flash2Rms],
+            &[false],
+            &[Schedule::OneF1B],
+        );
+        assert_eq!(s.total_combinations(), 2 * 2 * 4 * 2 * 2);
+        // Empty axis: zero combinations, empty iteration.
+        let empty: &[usize] = &[];
+        let s0 = LayoutSpace::new(
+            &j,
+            empty,
+            &pps,
+            &mbs,
+            &[false],
+            &[Kernel::Flash2],
+            &[false],
+            &[Schedule::OneF1B],
+        );
+        assert_eq!(s0.total_combinations(), 0);
+        assert_eq!(s0.count(), 0);
+    }
+
+    #[test]
+    fn stage_key_ignores_pp_and_sched() {
+        let a = Layout {
+            tp: 2, pp: 2, mb: 4, ckpt: true, kernel: Kernel::Flash1, sp: true,
+            sched: Schedule::OneF1B,
+        };
+        let b = Layout { pp: 8, sched: Schedule::GPipe, ..a };
+        assert_eq!(a.stage_key(), b.stage_key());
+        assert_ne!(a.stage_key(), Layout { mb: 2, ..a }.stage_key());
+        assert_ne!(a.stage_key(), Layout { kernel: Kernel::Flash2, ..a }.stage_key());
     }
 
     #[test]

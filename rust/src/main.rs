@@ -19,7 +19,7 @@ use plx::config::RunConfig;
 use plx::coordinator::train;
 use plx::layout::{validate, Job, Kernel, Layout, Schedule};
 use plx::model::arch::{preset, PRESETS};
-use plx::planner::{plan_by_rules, plan_exhaustive};
+use plx::planner::{plan_by_rules, plan_exhaustive_stats};
 use plx::sim::{evaluate, memory, Outcome, A100};
 use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2};
 use plx::topo::Cluster;
@@ -32,7 +32,7 @@ const SPEC: Spec = Spec {
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
         "loss-csv", "save", "resume", "jobs", "schedule",
     ],
-    flags: &["all", "ckpt", "sp", "exhaustive", "help", "list"],
+    flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats"],
 };
 
 fn main() {
@@ -79,6 +79,7 @@ USAGE:
               --schedule {1f1b,gpipe}]
   plx sweep  --preset NAME [--csv FILE] | --all | --list
              [--schedule LIST]   e.g. --schedule 1f1b,interleaved:2
+             [--cache-stats]     print per-level memo hit rates (stderr)
   plx table  N            N in {2, 3, 4..8, 10..14}
   plx figure N            N in {1..5}
   plx plan   --model M --nodes K [--gbs G] [--exhaustive]
@@ -180,6 +181,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             println!("csv written to {csv}");
         }
     }
+    if args.flag("cache-stats") {
+        // Per-level memo effectiveness for this process (stderr, so table
+        // bytes stay comparable with and without the flag).
+        let rate = |h: u64, m: u64| 100.0 * h as f64 / (h + m).max(1) as f64;
+        let (eh, em) = plx::sim::cache::stats();
+        let (sh, sm) = plx::sim::cache::stage_stats();
+        let (mh, mm) = plx::sim::cache::makespan_stats();
+        eprintln!(
+            "cache stats: evaluate {eh} hits / {em} misses ({:.1}%), \
+             stage {sh}/{sm} ({:.1}%), makespan {mh}/{mm} ({:.1}%)",
+            rate(eh, em),
+            rate(sh, sm),
+            rate(mh, mm),
+        );
+    }
     Ok(())
 }
 
@@ -235,7 +251,11 @@ fn job_from_args(args: &Args) -> Result<Job> {
 fn cmd_plan(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
     let plan = if args.flag("exhaustive") {
-        plan_exhaustive(&job, &A100)?
+        let (plan, stats) = plan_exhaustive_stats(&job, &A100)?;
+        // The branch-and-bound counter: how much of the space the
+        // admissible bounds let the planner skip.
+        eprintln!("plx plan: {}", stats.log_line());
+        plan
     } else {
         plan_by_rules(&job, &A100)?
     };

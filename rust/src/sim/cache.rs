@@ -31,9 +31,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::layout::{Job, Layout, ValidLayout};
+use crate::layout::{Job, Layout, StageKey, ValidLayout};
 use crate::sim::cluster::Hardware;
 use crate::sim::schedule::{Makespan, OpCosts, Schedule};
+use crate::sim::step_time::LayerCosts;
 use crate::sim::{evaluate, Outcome};
 
 const SHARDS: usize = 16;
@@ -137,9 +138,10 @@ pub fn len() -> usize {
     cache().shards.iter().map(|s| s.lock().unwrap().len()).sum()
 }
 
-/// Drop every cached outcome **and** memoized makespan, and reset all
-/// counters (used by the perf benches to measure cold paths; unit tests
-/// avoid it because the caches and counters are process-global).
+/// Drop every cached outcome, memoized makespan, **and** layer-stage
+/// result, and reset all counters (used by the perf benches to measure
+/// cold paths; unit tests avoid it because the caches and counters are
+/// process-global).
 pub fn clear() {
     let c = cache();
     for s in &c.shards {
@@ -153,6 +155,116 @@ pub fn clear() {
     }
     m.hits.store(0, Ordering::Relaxed);
     m.misses.store(0, Ordering::Relaxed);
+    let st = stage_cache();
+    for s in &st.shards {
+        s.lock().unwrap().clear();
+    }
+    st.hits.store(0, Ordering::Relaxed);
+    st.misses.store(0, Ordering::Relaxed);
+}
+
+// --------------------------------------------------------- layer-stage memo
+
+/// Everything the per-layer cost stage reads
+/// (`sim::step_time::layer_costs`): the architecture shape, the hardware
+/// constants by bit pattern, and the layout's [`StageKey`] dimensions —
+/// deliberately **no** `pp`, `sched`, cluster size, or global batch, so
+/// layouts differing only in those share one entry (that sharing IS the
+/// factoring's payoff; `stage_key_captures_every_layer_cost_input`
+/// proves it sound).
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct StKey {
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    ffn: usize,
+    vocab: usize,
+    seq: usize,
+    hw_bits: [u64; 8],
+    stage: StageKey,
+}
+
+impl StKey {
+    fn new(job: &Job, layout: &Layout, hw: &Hardware) -> StKey {
+        StKey {
+            layers: job.arch.layers,
+            hidden: job.arch.hidden,
+            heads: job.arch.heads,
+            ffn: job.arch.ffn,
+            vocab: job.arch.vocab,
+            seq: job.arch.seq,
+            hw_bits: [
+                hw.peak_matmul_flops.to_bits(),
+                hw.hbm_bytes.to_bits(),
+                hw.hbm_bw.to_bits(),
+                hw.nvlink_bw.to_bits(),
+                hw.ib_bw.to_bits(),
+                hw.coll_latency_s.to_bits(),
+                hw.launch_overhead_s.to_bits(),
+                hw.workspace_bytes.to_bits(),
+            ],
+            stage: layout.stage_key(),
+        }
+    }
+
+    fn shard(&self) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+}
+
+struct StageCache {
+    shards: Vec<Mutex<HashMap<StKey, LayerCosts>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+fn stage_cache() -> &'static StageCache {
+    static CACHE: OnceLock<StageCache> = OnceLock::new();
+    CACHE.get_or_init(|| StageCache {
+        shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        hits: AtomicU64::new(0),
+        misses: AtomicU64::new(0),
+    })
+}
+
+/// Memoized per-layer cost stage: the first layout of a stage-key group
+/// runs `compute` (the kernel tables, collective models, and activation
+/// accounting); every sibling — any `pp`, any `sched`, any cluster size
+/// whose job shares the architecture — gets the stored [`LayerCosts`]
+/// verbatim (`Copy`, no allocation on hit).
+pub fn layer_costs_cached(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    compute: impl FnOnce() -> LayerCosts,
+) -> LayerCosts {
+    let c = stage_cache();
+    let key = StKey::new(job, &v.layout, hw);
+    let shard = key.shard();
+    if let Some(out) = c.shards[shard].lock().unwrap().get(&key) {
+        c.hits.fetch_add(1, Ordering::Relaxed);
+        return *out;
+    }
+    // Compute outside the lock: misses of the same key may race, but the
+    // stage is pure so last-write-wins stores an identical value.
+    let out = compute();
+    c.misses.fetch_add(1, Ordering::Relaxed);
+    c.shards[shard].lock().unwrap().insert(key, out);
+    out
+}
+
+/// (hits, misses) of the layer-stage memo since process start / [`clear`].
+pub fn stage_stats() -> (u64, u64) {
+    let c = stage_cache();
+    (c.hits.load(Ordering::Relaxed), c.misses.load(Ordering::Relaxed))
+}
+
+/// Layer-stage entry count across all shards.
+pub fn stage_len() -> usize {
+    stage_cache().shards.iter().map(|s| s.lock().unwrap().len()).sum()
 }
 
 // ---------------------------------------------------------- makespan memo
@@ -327,6 +439,26 @@ mod tests {
             assert_eq!(first.busy[p].to_bits(), direct.busy[p].to_bits());
         }
         assert!(makespan_len() > 0);
+    }
+
+    #[test]
+    fn stage_memo_hits_across_pp_and_sched() {
+        use crate::sim::step_time::layer_costs;
+        let (job, v) = sample(); // tp2 pp2
+        let first = layer_costs(&job, &v, &A100);
+        let (h0, _) = stage_stats();
+        // Different pp, same stage key: must HIT and return identical bits.
+        let v4 = validate(&job, &Layout { pp: 4, ..v.layout }).unwrap();
+        let second = layer_costs(&job, &v4, &A100);
+        let (h1, _) = stage_stats();
+        assert!(h1 > h0, "pp-sibling lookup must hit the stage memo");
+        assert_eq!(first.layer_fwd.to_bits(), second.layer_fwd.to_bits());
+        assert_eq!(first.act_bytes.to_bits(), second.act_bytes.to_bits());
+        // Different mb: distinct key, distinct costs.
+        let vmb = validate(&job, &Layout { mb: 2, ..v.layout }).unwrap();
+        let third = layer_costs(&job, &vmb, &A100);
+        assert_ne!(first.layer_fwd.to_bits(), third.layer_fwd.to_bits());
+        assert!(stage_len() > 0);
     }
 
     #[test]

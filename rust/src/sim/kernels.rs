@@ -98,6 +98,31 @@ pub fn kernel_available(k: Kernel, heads: usize, tp: usize, mb: usize) -> bool {
     }
 }
 
+/// The kernel gate's complete input, as a value — the first keyed stage
+/// of the factored evaluation pipeline (see `sim::evaluate`). Layouts
+/// sharing a `GateKey` share the gate verdict; `pp`, `ckpt`, `sp`, and
+/// `sched` cannot flip it. The gate itself is a handful of integer ops,
+/// so it is *keyed* (the factoring is explicit and testable) but not
+/// memoized — recomputing is cheaper than any lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GateKey {
+    pub kernel: Kernel,
+    pub heads: usize,
+    pub tp: usize,
+    pub mb: usize,
+}
+
+impl GateKey {
+    pub fn new(kernel: Kernel, heads: usize, tp: usize, mb: usize) -> GateKey {
+        GateKey { kernel, heads, tp, mb }
+    }
+
+    /// Evaluate the gate for this key (identical to [`kernel_available`]).
+    pub fn open(&self) -> bool {
+        kernel_available(self.kernel, self.heads, self.tp, self.mb)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -101,11 +101,40 @@ pub fn per_gpu_memory(job: &Job, v: &ValidLayout, hw: &Hardware) -> MemoryBreakd
 /// [`per_gpu_memory`] against a pre-built schedule artifact: the
 /// in-flight multiplicities are read off the artifact's per-stage peaks
 /// (tracked during generation) instead of re-materializing op streams.
+/// Computes the per-layer activation bytes inline; the factored
+/// evaluation pipeline calls [`per_gpu_memory_combine`] with the bytes
+/// it already holds from the layer-cost stage.
 pub fn per_gpu_memory_with(
     job: &Job,
     v: &ValidLayout,
     hw: &Hardware,
     art: &schedule::ScheduleArtifact,
+) -> MemoryBreakdown {
+    let acts = act_bytes_per_layer(job, v);
+    let acts_full = {
+        let mut no_ckpt = *v;
+        no_ckpt.layout.ckpt = false;
+        act_bytes_per_layer(job, &no_ckpt)
+    };
+    per_gpu_memory_combine(job, v, hw, art, acts, acts_full)
+}
+
+/// The **memory combine** stage of the factored evaluation pipeline:
+/// pure arithmetic over the parameter shard, the artifact's per-stage
+/// in-flight peaks (keyed `(sched, pp, m)`), and the per-layer
+/// activation bytes handed in from the layer-cost stage (keyed on the
+/// layout's [`crate::layout::Layout::stage_key`]). `acts` /
+/// `acts_full` must equal [`act_bytes_per_layer`] for `v` and its
+/// ckpt-off twin — `sim::evaluate` feeds them from
+/// `step_time::LayerCosts`, so the bytes are computed once per stage-key
+/// group instead of once per layout.
+pub fn per_gpu_memory_combine(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    art: &schedule::ScheduleArtifact,
+    acts: f64,
+    acts_full: f64,
 ) -> MemoryBreakdown {
     let a = &job.arch;
     let l = &v.layout;
@@ -119,15 +148,10 @@ pub fn per_gpu_memory_with(
     let vst = l.sched.vstages();
     let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
     let in_flight = art.peak_in_flight(0) as f64;
-    let mut activations = act_bytes_per_layer(job, v) * layers_per_chunk * in_flight;
+    let mut activations = acts * layers_per_chunk * in_flight;
     if l.ckpt {
         // Recompute working set: one layer's worth of full activations.
-        let full = {
-            let mut no_ckpt = *v;
-            no_ckpt.layout.ckpt = false;
-            act_bytes_per_layer(job, &no_ckpt)
-        };
-        activations += full;
+        activations += acts_full;
     }
 
     // Last pipeline stage materializes fp32 logits (+ CE workspace ≈ 2x).
@@ -140,7 +164,7 @@ pub fn per_gpu_memory_with(
         // on the last stage under 1F1B — but derive it from the actual
         // stream, GPipe/interleaved differ). Track the max of the two.
         let head_in_flight = art.peak_in_flight(l.pp - 1) as f64;
-        let head_acts = act_bytes_per_layer(job, v) * layers_per_chunk * head_in_flight;
+        let head_acts = acts * layers_per_chunk * head_in_flight;
         let head_logits = 2.0 * 4.0 * (l.mb * a.seq * a.vocab) as f64 / l.tp as f64;
         let head_total = head_acts + head_logits;
         let stage0_total = activations;

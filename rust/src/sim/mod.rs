@@ -70,12 +70,56 @@ impl Outcome {
     }
 }
 
-/// Simulate one validated layout on the given hardware.
+/// Simulate one validated layout on the given hardware — the **factored**
+/// evaluation pipeline, a chain of explicitly keyed pure stages:
 ///
-/// One [`schedule::ScheduleArtifact`] is built (or reused from the
-/// thread-local arena) per call and shared by the memory and step-time
-/// models — the schedule machinery is generated once, not four times.
+/// 1. **kernel gate**, keyed `(kernel, heads, tp, mb)`
+///    ([`kernels::GateKey`]) — a few integer ops, keyed but not memoized;
+/// 2. **per-layer costs**, keyed `(arch, tp, sp, mb, kernel, ckpt, hw)`
+///    ([`step_time::layer_costs`], memoized in `cache`) — the kernel
+///    tables, collective models, and activation-byte accounting;
+/// 3. **schedule artifact**, keyed `(sched, pp, m)` (the thread-local
+///    arena) — op streams + per-stage in-flight peaks;
+/// 4. **memory combine** ([`memory::per_gpu_memory_combine`]) — shard
+///    arithmetic over stage 2's bytes and stage 3's peaks;
+/// 5. **makespan**, keyed `(sched, pp, m, cost bits)` (the memo in
+///    `cache`) — the only O(ops) stage, shared by every cost-coincident
+///    layout;
+/// 6. **MFU** — closed form.
+///
+/// Layouts differing only in `pp`/`sched` share stage 2; layouts
+/// differing only in memory-relevant dimensions share stage 5. The
+/// result is bit-identical to both the pre-artifact
+/// [`evaluate_baseline`] and the PR-3 [`evaluate_unfactored`] pipelines
+/// (asserted bitwise in `evaluate_matches_baseline_bitwise`), so golden
+/// fixtures cannot move.
 pub fn evaluate(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
+    let gate = kernels::GateKey::new(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb);
+    if !gate.open() {
+        return Outcome::KernelUnavailable;
+    }
+    let lc = step_time::layer_costs(job, v, hw);
+    schedule::with_artifact(v.layout.sched, v.layout.pp, v.num_micro, |art| {
+        let mem = memory::per_gpu_memory_combine(job, v, hw, art, lc.act_bytes, lc.act_bytes_full);
+        if mem.total() > hw.hbm_bytes {
+            return Outcome::Oom { required: mem.total(), budget: hw.hbm_bytes };
+        }
+        let c = step_time::combine_layer_costs(&lc, job, v);
+        let step = step_time::step_time_from_costs(job, v, hw, art, &c);
+        let t = step.total();
+        let m = mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t);
+        Outcome::Ok { step_time_s: t, mfu: m, mem, step }
+    })
+}
+
+/// The PR-3 artifact pipeline exactly as it shipped: monolithic
+/// per-layout cost construction (no layer-stage memo), artifact arena,
+/// O(ops) executor, makespan memo. Value-identical to [`evaluate`];
+/// retained as the in-job comparison point for
+/// `benches/perf_schedule.rs`'s factored-vs-PR3 speedup and the
+/// three-way equivalence test.
+#[doc(hidden)]
+pub fn evaluate_unfactored(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
     if !kernels::kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb) {
         return Outcome::KernelUnavailable;
     }
@@ -84,11 +128,23 @@ pub fn evaluate(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
         if mem.total() > hw.hbm_bytes {
             return Outcome::Oom { required: mem.total(), budget: hw.hbm_bytes };
         }
-        let step = step_time::step_time_with(job, v, hw, art);
+        let step = step_time::step_time_with_monolithic(job, v, hw, art);
         let t = step.total();
         let m = mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t);
         Outcome::Ok { step_time_s: t, mfu: m, mem, step }
     })
+}
+
+/// Admissible **upper bound** on the MFU [`evaluate`] would report for a
+/// runnable layout, with no schedule execution: MFU is strictly
+/// decreasing in step time and
+/// [`step_time::step_time_lower_bound`] never exceeds the true step time
+/// (bitwise), so `mfu(lower_bound) ≥ mfu(true)` — IEEE-754 division is
+/// monotone. `planner::plan_exhaustive` prunes every layout whose bound
+/// cannot beat the incumbent; full-table sweeps never consult it.
+pub fn mfu_upper_bound(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    let lb = step_time::step_time_lower_bound(job, v, hw);
+    mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, lb)
 }
 
 /// The pre-artifact evaluation pipeline, value-identical to [`evaluate`]
@@ -178,23 +234,59 @@ mod tests {
             ],
         );
         assert!(layouts.len() > 100, "space too small: {}", layouts.len());
-        for v in &layouts {
-            let new = evaluate(&job, v, &A100);
-            let old = evaluate_baseline(&job, v, &A100);
+        let pairwise = |new: Outcome, old: Outcome, which: &str, l: &crate::layout::Layout| {
             match (new, old) {
                 (
                     Outcome::Ok { step_time_s: a, mfu: ma, .. },
                     Outcome::Ok { step_time_s: b, mfu: mb, .. },
                 ) => {
-                    assert_eq!(a.to_bits(), b.to_bits(), "{:?}", v.layout);
-                    assert_eq!(ma.to_bits(), mb.to_bits(), "{:?}", v.layout);
+                    assert_eq!(a.to_bits(), b.to_bits(), "{which} {l:?}");
+                    assert_eq!(ma.to_bits(), mb.to_bits(), "{which} {l:?}");
                 }
                 (Outcome::Oom { required: a, .. }, Outcome::Oom { required: b, .. }) => {
-                    assert_eq!(a.to_bits(), b.to_bits(), "{:?}", v.layout);
+                    assert_eq!(a.to_bits(), b.to_bits(), "{which} {l:?}");
                 }
                 (Outcome::KernelUnavailable, Outcome::KernelUnavailable) => {}
-                (n, o) => panic!("{:?}: variants diverge ({n:?} vs {o:?})", v.layout),
+                (n, o) => panic!("{which} {l:?}: variants diverge ({n:?} vs {o:?})"),
             }
+        };
+        for v in &layouts {
+            let factored = evaluate(&job, v, &A100);
+            // Three generations of the pipeline, one value: the factored
+            // stages vs the PR-3 artifact path vs the pre-artifact
+            // baseline.
+            pairwise(factored, evaluate_unfactored(&job, v, &A100), "vs-pr3", &v.layout);
+            pairwise(factored, evaluate_baseline(&job, v, &A100), "vs-baseline", &v.layout);
+        }
+    }
+
+    #[test]
+    fn mfu_upper_bound_is_admissible() {
+        // Branch-and-bound soundness at the MFU level: the bound must
+        // dominate the true MFU for every runnable enumerable layout
+        // (bitwise >=; pruning on it can then never discard the argmax).
+        use crate::layout::enumerate;
+        for (name, nodes) in [("llama13b", 8usize), ("llama65b", 16)] {
+            let job = Job::new(preset(name).unwrap(), Cluster::dgx_a100(nodes), 2048);
+            let layouts = enumerate(
+                &job,
+                &[1, 2, 4],
+                &[1, 2, 4, 8],
+                &[1, 2, 4],
+                &[false, true],
+                &Kernel::ALL,
+                &[false, true],
+                &[crate::layout::Schedule::OneF1B, crate::layout::Schedule::Interleaved(2)],
+            );
+            let mut runnable = 0usize;
+            for v in &layouts {
+                if let Outcome::Ok { mfu, .. } = evaluate(&job, v, &A100) {
+                    let ub = mfu_upper_bound(&job, v, &A100);
+                    assert!(ub >= mfu, "{:?}: bound {ub} < mfu {mfu}", v.layout);
+                    runnable += 1;
+                }
+            }
+            assert!(runnable > 20, "{name}: only {runnable} runnable layouts");
         }
     }
 

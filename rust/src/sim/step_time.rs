@@ -55,23 +55,196 @@ const OPT_FIXED_S: f64 = 0.030;
 
 /// Per-op cost model for one layout: everything [`schedule::makespan`]
 /// needs to price the op streams.
-struct StageCosts {
+#[derive(Debug, Clone, Copy)]
+pub struct StageCosts {
     /// Forward of one model chunk (`layers/(pp·v)` layers), compute only.
-    chunk_fwd: f64,
+    pub chunk_fwd: f64,
     /// Backward of one chunk: dgrad+wgrad, flash attention recompute, and
     /// the full-forward recompute when activation checkpointing is on.
-    chunk_bwd: f64,
+    pub chunk_bwd: f64,
     /// LM-head forward extra on the last virtual stage.
-    head_fwd: f64,
+    pub head_fwd: f64,
     /// LM-head backward extra on the last virtual stage.
-    head_bwd: f64,
+    pub head_bwd: f64,
     /// TP collectives per chunk per direction (2 of Megatron's 4/layer).
-    tp_chunk: f64,
+    pub tp_chunk: f64,
     /// One cross-stage p2p transfer (activation or cotangent).
-    p2p_hop: f64,
+    pub p2p_hop: f64,
 }
 
-/// Decompose one micro-batch into per-op costs.
+/// Output of the **per-layer cost stage** — the keyed pure stage of the
+/// factored evaluation pipeline (see `sim::evaluate`). Every field is a
+/// function of `(arch, tp, sp, mb, kernel, ckpt, hw)` only
+/// ([`crate::layout::Layout::stage_key`] plus the sweep-constant job and
+/// hardware): `pp` and `sched` enter later, in
+/// [`combine_layer_costs`], by *rescaling* (layers per chunk) or
+/// *selecting* (which p2p bandwidth) — never by recomputing. Layouts
+/// differing only in `pp`/`sched` therefore share one stage result via
+/// the `sim::cache` stage memo, and the combine is a handful of
+/// multiplies.
+///
+/// The activation-byte terms ride along because they have exactly the
+/// same key (`sim::memory::act_bytes_per_layer` never reads `pp` or
+/// `sched`), which lets `evaluate` feed the memory combine without a
+/// second per-layout traversal of the kernel tables.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCosts {
+    /// One layer's forward wall time (dense + attention + elementwise).
+    pub layer_fwd: f64,
+    /// One layer's backward (dgrad+wgrad, recompute terms folded in).
+    pub layer_bwd: f64,
+    /// LM-head forward extra (last virtual stage only).
+    pub head_fwd: f64,
+    /// LM-head backward extra.
+    pub head_bwd: f64,
+    /// TP collective time per layer per direction (`2·allreduce`); 0 at
+    /// `tp == 1`.
+    pub tp_per_layer: f64,
+    /// Sequence-parallel collective discount (0.95 with SP, else 1.0).
+    pub sp_factor: f64,
+    /// One cross-stage hop priced at NVLink (intra-node PP).
+    pub p2p_intra: f64,
+    /// One cross-stage hop priced at InfiniBand (cross-node PP).
+    pub p2p_inter: f64,
+    /// `memory::act_bytes_per_layer` for this key.
+    pub act_bytes: f64,
+    /// Same with checkpointing off (the recompute working set).
+    pub act_bytes_full: f64,
+}
+
+/// Compute the per-layer stage for one layout (uncached; the production
+/// entry is [`layer_costs`], which memoizes by the stage key). Every
+/// expression is transcribed from [`stage_costs`] at per-layer
+/// granularity with identical association order, so the factored combine
+/// reproduces the monolithic costs bit for bit (property-tested in
+/// `factored_stage_costs_match_monolithic_bitwise`).
+fn layer_costs_uncached(job: &Job, v: &ValidLayout, hw: &Hardware) -> LayerCosts {
+    let a = &job.arch;
+    let l = &v.layout;
+    let kp = perf(l.kernel);
+    let tokens = l.mb * a.seq;
+
+    // ---- per-layer compute (one forward pass) ----
+    let dense_flops = a.layer_fwd_flops(l.mb, a.seq)
+        - 4.0 * (l.mb * a.seq * a.seq) as f64 * a.hidden as f64;
+    let attn_flops = 4.0 * (l.mb * a.seq * a.seq) as f64 * a.hidden as f64;
+
+    let t_dense = dense_flops / l.tp as f64
+        / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden));
+    let t_attn = attn_flops / l.tp as f64 / (hw.peak_matmul_flops * kp.attn_matmul_eff);
+
+    let sbh = (tokens * a.hidden) as f64;
+    let norm_bytes = kp.norm_bytes_per_elem * sbh / if l.sp { l.tp as f64 } else { 1.0 };
+    let softmax_bytes =
+        kp.softmax_bytes_per_score * (a.heads * a.seq * a.seq * l.mb) as f64 / l.tp as f64;
+    let t_mem = (norm_bytes + softmax_bytes) / hw.hbm_bw + hw.launch_overhead_s * 8.0;
+
+    let bwd_factor = cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR);
+    let ckpt_extra = if l.ckpt { 1.0 } else { 0.0 };
+    let flash_extra = if l.kernel.is_flash() { 1.0 } else { 0.0 };
+    let layer_fwd = t_dense + t_attn + t_mem;
+    let layer_bwd = (bwd_factor + ckpt_extra) * (t_dense + t_mem)
+        + (bwd_factor + ckpt_extra + flash_extra) * t_attn;
+
+    let head_flops = a.head_fwd_flops(l.mb, a.seq);
+    let head_total = head_flops / l.tp as f64
+        / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden))
+        * (1.0 + bwd_factor)
+        + 3.0 * 4.0 * (tokens * a.vocab / l.tp) as f64 / hw.hbm_bw;
+    let head_fwd = head_total / (1.0 + bwd_factor);
+    let head_bwd = head_total - head_fwd;
+
+    let (tp_per_layer, sp_factor) = if l.tp > 1 {
+        let bytes = 2.0 * sbh; // bf16 activations
+        let ar = allreduce_time(bytes, l.tp, hw.nvlink_bw, hw.coll_latency_s);
+        (2.0 * ar, if l.sp { 0.95 } else { 1.0 })
+    } else {
+        (0.0, 1.0)
+    };
+
+    // Price one hop at BOTH bandwidths; the combine selects by whether
+    // this layout's PP groups cross the node boundary (a pp-dependent
+    // fact, so it cannot live in the stage).
+    let pbytes = 2.0 * (l.mb * a.seq * a.hidden) as f64;
+    let p2p_intra = p2p_time(pbytes, hw.nvlink_bw, hw.coll_latency_s);
+    let p2p_inter = p2p_time(pbytes, hw.ib_bw, hw.coll_latency_s);
+
+    let act_bytes = crate::sim::memory::act_bytes_per_layer(job, v);
+    let act_bytes_full = {
+        let mut no_ckpt = *v;
+        no_ckpt.layout.ckpt = false;
+        crate::sim::memory::act_bytes_per_layer(job, &no_ckpt)
+    };
+
+    LayerCosts {
+        layer_fwd,
+        layer_bwd,
+        head_fwd,
+        head_bwd,
+        tp_per_layer,
+        sp_factor,
+        p2p_intra,
+        p2p_inter,
+        act_bytes,
+        act_bytes_full,
+    }
+}
+
+/// The per-layer stage, memoized in the process-wide stage memo
+/// (`sim::cache::layer_costs_cached`, keyed on the stage key + arch +
+/// hardware bits): the first layout of a stage-key group computes it,
+/// every sibling — different `pp`, different `sched` — reuses it.
+pub fn layer_costs(job: &Job, v: &ValidLayout, hw: &Hardware) -> LayerCosts {
+    crate::sim::cache::layer_costs_cached(job, v, hw, || layer_costs_uncached(job, v, hw))
+}
+
+/// The **combine** half of the factored cost construction: rescale the
+/// per-layer stage outputs by this layout's `layers/(pp·v)` chunk depth
+/// and select its p2p bandwidth. Pure arithmetic, no kernel tables, no
+/// collectives — cheap enough to run per layout without memoization.
+pub fn combine_layer_costs(lc: &LayerCosts, job: &Job, v: &ValidLayout) -> StageCosts {
+    let a = &job.arch;
+    let l = &v.layout;
+    let vst = l.sched.vstages();
+    let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
+    let chunk_fwd = layers_per_chunk * lc.layer_fwd;
+    let chunk_bwd = layers_per_chunk * lc.layer_bwd;
+    let tp_chunk = if l.tp > 1 {
+        layers_per_chunk * lc.tp_per_layer * lc.sp_factor
+    } else {
+        0.0
+    };
+    let p2p_hop = if l.pp > 1 {
+        if v.topo.pp_crosses_node() {
+            lc.p2p_inter
+        } else {
+            lc.p2p_intra
+        }
+    } else {
+        0.0
+    };
+    StageCosts {
+        chunk_fwd,
+        chunk_bwd,
+        head_fwd: lc.head_fwd,
+        head_bwd: lc.head_bwd,
+        tp_chunk,
+        p2p_hop,
+    }
+}
+
+/// Factored per-op costs: stage (memoized) + combine. Bit-identical to
+/// the monolithic [`stage_costs`] by construction — the stage computes
+/// the same expressions on the same operands and the combine multiplies
+/// in the same association order.
+pub fn stage_costs_factored(job: &Job, v: &ValidLayout, hw: &Hardware) -> StageCosts {
+    combine_layer_costs(&layer_costs(job, v, hw), job, v)
+}
+
+/// Decompose one micro-batch into per-op costs — the MONOLITHIC
+/// construction, retained verbatim as the bitwise oracle for the factored
+/// stage + combine above and as part of the pre-change baseline pipeline
+/// (`step_time_baseline`).
 /// (`tools/pysim.py::stage_costs` mirrors this expression for expression.)
 fn stage_costs(job: &Job, v: &ValidLayout, hw: &Hardware) -> StageCosts {
     let a = &job.arch;
@@ -157,7 +330,8 @@ pub fn step_time(job: &Job, v: &ValidLayout, hw: &Hardware) -> StepBreakdown {
     })
 }
 
-/// [`step_time`] against a pre-built artifact. The makespan goes through
+/// [`step_time`] against a pre-built artifact, via the factored cost
+/// stages ([`stage_costs_factored`]). The makespan goes through
 /// `cache::makespan_cached`: layouts sharing `(sched, pp, m, op costs)`
 /// execute the op streams once, everyone else gets the stored result.
 pub fn step_time_with(
@@ -166,7 +340,21 @@ pub fn step_time_with(
     hw: &Hardware,
     art: &schedule::ScheduleArtifact,
 ) -> StepBreakdown {
-    let c = stage_costs(job, v, hw);
+    let c = stage_costs_factored(job, v, hw);
+    step_time_from_costs(job, v, hw, art, &c)
+}
+
+/// Price a layout from already-constructed per-op costs: memoized
+/// makespan + the shared breakdown tail. Both the factored production
+/// path and the retained PR-3 monolithic path (`sim::evaluate_unfactored`)
+/// end here, so they can only differ in how `c` was built.
+pub(crate) fn step_time_from_costs(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    art: &schedule::ScheduleArtifact,
+    c: &StageCosts,
+) -> StepBreakdown {
     let costs = OpCosts {
         fwd: c.chunk_fwd + c.tp_chunk,
         bwd: c.chunk_bwd + c.tp_chunk,
@@ -182,7 +370,23 @@ pub fn step_time_with(
         || schedule::makespan_artifact(art, &costs),
     )
     .expect("validated schedule deadlocked");
-    finish_breakdown(job, v, hw, &c, &ms)
+    finish_breakdown(job, v, hw, c, &ms)
+}
+
+/// The PR-3 pipeline's cost construction (monolithic [`stage_costs`],
+/// no stage memo) against a pre-built artifact — retained as the in-job
+/// comparison point for `benches/perf_schedule.rs`'s
+/// factored-vs-artifact-path speedup. Value-identical to
+/// [`step_time_with`].
+#[doc(hidden)]
+pub fn step_time_with_monolithic(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    art: &schedule::ScheduleArtifact,
+) -> StepBreakdown {
+    let c = stage_costs(job, v, hw);
+    step_time_from_costs(job, v, hw, art, &c)
 }
 
 /// The pre-artifact pricing path, retained verbatim as the in-job
@@ -223,7 +427,6 @@ fn finish_breakdown(
     c: &StageCosts,
     ms: &schedule::Makespan,
 ) -> StepBreakdown {
-    let a = &job.arch;
     let l = &v.layout;
     let m = v.num_micro;
     let vst = l.sched.vstages();
@@ -258,6 +461,20 @@ fn finish_breakdown(
     let pp_comm = m as f64 * pp_micro;
     let bubble = ms.total - ms.busy[b];
 
+    let (dp_comm, optimizer) = dp_and_optimizer(job, v, hw);
+
+    StepBreakdown { compute, tp_comm, pp_comm, bubble, dp_comm, optimizer }
+}
+
+/// The schedule-independent closing terms of every pricing path: exposed
+/// DP gradient reduction and the ZeRO-1 optimizer step. Extracted so
+/// [`finish_breakdown`] and the admissible [`step_time_lower_bound`]
+/// evaluate one expression — the bound's `compute + dp + opt` partial
+/// sums then match the full total's bit for bit whenever the bounded
+/// terms are zero.
+fn dp_and_optimizer(job: &Job, v: &ValidLayout, hw: &Hardware) -> (f64, f64) {
+    let a = &job.arch;
+    let l = &v.layout;
     // DP gradient reduction: bf16 grads of this GPU's shard, ring over dp.
     let shard_bytes = 2.0 * a.param_count() as f64 / (l.tp * l.pp) as f64;
     let dp_bw = if v.topo.cluster.nodes() > 1 { hw.ib_bw } else { hw.nvlink_bw };
@@ -269,8 +486,32 @@ fn finish_breakdown(
     let optimizer = OPT_FIXED_S
         + 16.0 * opt_elems / hw.hbm_bw
         + allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s) * 0.5;
+    (dp_comm, optimizer)
+}
 
-    StepBreakdown { compute, tp_comm, pp_comm, bubble, dp_comm, optimizer }
+/// Admissible lower bound on `step_time(..).total()` — **no schedule
+/// execution**, just the factored cost stage plus closed forms.
+///
+/// `total()` sums six non-negative terms; this bound keeps the three that
+/// have closed forms (head-less compute, DP reduction, optimizer) and
+/// drops the three that need the makespan (TP/PP comm, bubble — each
+/// ≥ 0, and the bottleneck's compute only gains the LM-head extra). The
+/// partial sums are ordered exactly like `StepBreakdown::total()` with
+/// the dropped terms at zero, and IEEE-754 addition/division are
+/// monotone, so `bound ≤ total` holds **bitwise**, not just
+/// approximately (property-tested here and in
+/// `tools/check_seed_tests.py`'s factored suite).
+///
+/// The planner turns this into an MFU *upper* bound
+/// (`sim::mfu_upper_bound`) to prune dominated layouts from the
+/// exhaustive argmax without evaluating them.
+pub fn step_time_lower_bound(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    let c = stage_costs_factored(job, v, hw);
+    let vst = v.layout.sched.vstages();
+    let comp_micro = vst as f64 * (c.chunk_fwd + c.chunk_bwd);
+    let compute = v.num_micro as f64 * comp_micro;
+    let (dp_comm, optimizer) = dp_and_optimizer(job, v, hw);
+    compute + dp_comm + optimizer
 }
 
 #[cfg(test)]
@@ -427,5 +668,120 @@ mod tests {
         assert_eq!(cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR), 2.0);
         // Unset names fall back to the passed default verbatim.
         assert_eq!(cal("PLX_CAL_DEFINITELY_UNSET_PROBE", 9.25), 9.25);
+    }
+
+    /// Broad enumeration across two jobs for the stage-factoring tests.
+    fn factoring_space() -> Vec<(Job, Vec<crate::layout::ValidLayout>)> {
+        use crate::layout::enumerate;
+        let scheds = [
+            Schedule::OneF1B,
+            Schedule::GPipe,
+            Schedule::Interleaved(2),
+        ];
+        [
+            Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048),
+            Job::new(preset("llama65b").unwrap(), Cluster::dgx_a100(16), 2048),
+        ]
+        .into_iter()
+        .map(|job| {
+            let ls = enumerate(
+                &job,
+                &[1, 2, 4],
+                &[1, 2, 4],
+                &[1, 2, 4],
+                &[false, true],
+                &Kernel::ALL,
+                &[false, true],
+                &scheds,
+            );
+            assert!(ls.len() > 50, "space too small: {}", ls.len());
+            (job, ls)
+        })
+        .collect()
+    }
+
+    #[test]
+    fn factored_stage_costs_match_monolithic_bitwise() {
+        // The tentpole's cost-construction guarantee: stage (memoized) +
+        // combine must reproduce the monolithic construction bit for bit
+        // for every enumerable layout — this is what keeps `evaluate`
+        // (and therefore the golden fixtures) byte-identical after the
+        // factoring. Two rounds so the second exercises stage-memo hits.
+        for _round in 0..2 {
+            for (job, layouts) in factoring_space() {
+                for v in &layouts {
+                    let mono = stage_costs(&job, v, &A100);
+                    let fact = stage_costs_factored(&job, v, &A100);
+                    for (name, a, b) in [
+                        ("chunk_fwd", fact.chunk_fwd, mono.chunk_fwd),
+                        ("chunk_bwd", fact.chunk_bwd, mono.chunk_bwd),
+                        ("head_fwd", fact.head_fwd, mono.head_fwd),
+                        ("head_bwd", fact.head_bwd, mono.head_bwd),
+                        ("tp_chunk", fact.tp_chunk, mono.tp_chunk),
+                        ("p2p_hop", fact.p2p_hop, mono.p2p_hop),
+                    ] {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{name} {:?}: {a} vs {b}", v.layout);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stage_key_captures_every_layer_cost_input() {
+        // Key-completeness: two layouts sharing a stage key (same tp, mb,
+        // ckpt, kernel, sp) but different pp / sched must produce
+        // bit-identical LAYER costs — otherwise the stage memo would
+        // silently serve one layout's numbers to the other.
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let a = validate(
+            &job,
+            &Layout {
+                tp: 2, pp: 1, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: true,
+                sched: Schedule::OneF1B,
+            },
+        )
+        .unwrap();
+        for (pp, sched) in [(2usize, Schedule::OneF1B), (4, Schedule::GPipe), (2, Schedule::Interleaved(2))] {
+            let b = validate(&job, &Layout { pp, sched, ..a.layout }).unwrap();
+            assert_eq!(a.layout.stage_key(), b.layout.stage_key());
+            // The UNCACHED stage on both layouts — the memoized entry
+            // would trivially return the stored value and prove nothing.
+            let (ca, cb) =
+                (layer_costs_uncached(&job, &a, &A100), layer_costs_uncached(&job, &b, &A100));
+            for (x, y) in [
+                (ca.layer_fwd, cb.layer_fwd),
+                (ca.layer_bwd, cb.layer_bwd),
+                (ca.head_fwd, cb.head_fwd),
+                (ca.head_bwd, cb.head_bwd),
+                (ca.tp_per_layer, cb.tp_per_layer),
+                (ca.sp_factor, cb.sp_factor),
+                (ca.p2p_intra, cb.p2p_intra),
+                (ca.p2p_inter, cb.p2p_inter),
+                (ca.act_bytes, cb.act_bytes),
+                (ca.act_bytes_full, cb.act_bytes_full),
+            ] {
+                assert_eq!(x.to_bits(), y.to_bits(), "pp={pp} {sched:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_time_lower_bound_is_admissible_bitwise() {
+        // The branch-and-bound soundness gate: the closed-form bound must
+        // never exceed the true step time (bitwise `<=`, not epsilon),
+        // for every enumerable layout — otherwise pruning could discard
+        // the argmax.
+        for (job, layouts) in factoring_space() {
+            let mut checked = 0usize;
+            for v in &layouts {
+                let lb = step_time_lower_bound(&job, v, &A100);
+                let t = step_time(&job, v, &A100).total();
+                assert!(lb <= t, "{:?}: bound {lb} > total {t}", v.layout);
+                assert!(lb > 0.0, "{:?}: bound must be positive", v.layout);
+                checked += 1;
+            }
+            assert!(checked > 50);
+        }
     }
 }

@@ -1,21 +1,33 @@
 //! Sweep engine (S9): Cartesian-product evaluation + paper-style ranking.
 //!
-//! Evaluation is **parallel, pruned, and cached** while staying
-//! bit-identical to a serial sweep:
+//! Evaluation is **lazy, group-factored, parallel, and cached** while
+//! staying bit-identical to a serial sweep:
 //!
+//! * the layout space is consumed lazily from
+//!   [`crate::layout::LayoutSpace`] — no separate materialize-then-regroup
+//!   pass: the serial path streams rows one at a time, and the parallel
+//!   path's only space-sized storage is the group buckets it dispatches
+//!   (the planner's bound-pruned scan streams outright);
 //! * every layout's outcome comes from [`crate::sim::cache::evaluate_cached`]
 //!   — a pure memoization of `sim::evaluate`, shared with the planner and
 //!   the figure/table generators;
-//! * a pre-pruning pass resolves layouts whose parameter-state lower bound
-//!   ([`crate::sim::memory::model_state_bytes`]) already overflows HBM on
-//!   the coordinating thread (their full evaluation short-circuits to OOM
-//!   without touching the step-time model), and dispatches only plausible
-//!   layouts to the work-stealing pool ([`crate::util::pool`]);
+//! * every layout is **bucketed by its
+//!   [`crate::layout::Layout::stage_key`]** and each bucket is dispatched
+//!   as one coarse task ([`crate::util::pool::map_jobs_coarse`]): the
+//!   bucket's first evaluation computes the per-layer cost stage once and
+//!   every sibling's evaluation is a cheap combine off the stage memo —
+//!   no two workers ever race to compute the same layer-stage result,
+//!   and a bucket's cost-coincident makespans execute once within it
+//!   (identical costs across *different* buckets still share through the
+//!   makespan memo, modulo benign racing recomputation);
 //! * results are scattered back by enumeration index, so row order — and
-//!   therefore every rendered table and CSV — is independent of `--jobs`.
+//!   therefore every rendered table and CSV — is independent of `--jobs`
+//!   and of the grouping.
 
-use crate::layout::{enumerate, Job, Layout, ValidLayout};
-use crate::sim::{cache, memory, Hardware, Outcome};
+use std::collections::HashMap;
+
+use crate::layout::{Job, Layout, LayoutSpace, StageKey, ValidLayout};
+use crate::sim::{cache, Hardware, Outcome};
 use crate::sweep::presets::SweepPreset;
 use crate::util::pool;
 
@@ -108,7 +120,7 @@ pub fn run(preset: &SweepPreset, hw: &Hardware) -> SweepResult {
 /// rows are identical (same outcomes, same order) for every `jobs` value.
 pub fn run_jobs(preset: &SweepPreset, hw: &Hardware, jobs: usize) -> SweepResult {
     let job = preset.job();
-    let layouts = enumerate(
+    let space = LayoutSpace::new(
         &job,
         &preset.tps,
         &preset.pps,
@@ -118,53 +130,83 @@ pub fn run_jobs(preset: &SweepPreset, hw: &Hardware, jobs: usize) -> SweepResult
         &preset.sps,
         &preset.scheds,
     );
-    let rows = evaluate_layouts(&job, layouts, hw, jobs);
+    let rows = evaluate_space(&job, space, hw, jobs);
     SweepResult { preset_name: preset.name.to_string(), job, rows }
 }
 
-/// Evaluate a layout list into rows, preserving input order.
-///
-/// Shared by the sweep engine and `planner::plan_exhaustive`. The
-/// pre-pruning pass keeps cheap, guaranteed-OOM layouts off the pool:
-/// when the parameter-state lower bound alone exceeds the HBM budget,
-/// `evaluate` is guaranteed to stop at its memory check (never reaching
-/// the step-time model), so running it inline costs a handful of flops
-/// and saves a task dispatch. All outcomes flow through the shared
-/// evaluation cache either way, so the result is bit-identical to the
-/// serial path by construction.
+/// Evaluate a materialized layout list into rows, preserving input order.
+/// Thin wrapper over [`evaluate_space`] for callers that already hold a
+/// `Vec` (the planner's grids, tests).
 pub fn evaluate_layouts(
     job: &Job,
     layouts: Vec<ValidLayout>,
     hw: &Hardware,
     jobs: usize,
 ) -> Vec<Row> {
+    evaluate_space(job, layouts.into_iter(), hw, jobs)
+}
+
+/// Evaluate a (lazy) layout stream into rows, preserving stream order —
+/// the group-factored dispatch core shared by the sweep engine and
+/// `planner`.
+///
+/// The coordinating thread does nothing but bucket: every layout —
+/// including guaranteed-OOM ones — goes to the pool inside its
+/// stage-key group. (The old per-item dispatch settled
+/// `model_state_bytes`-hopeless rows inline because a dispatch per row
+/// was the cost being avoided; with coarse group tasks a hopeless row
+/// rides its group for free, and evaluating it inline would now run the
+/// factored pipeline's layer-cost stage and artifact generation
+/// serially on the coordinator — exactly the work the grouping keeps in
+/// the pool. `memory::model_state_bytes` remains the planner's memory
+/// prune.) Buckets are dispatched in first-seen order with members in
+/// stream order, so each distinct per-layer stage result is computed
+/// exactly once, in the pool, by the group's first evaluation. All
+/// outcomes flow through the shared evaluation cache either way, so the
+/// result is bit-identical to the serial path by construction.
+pub fn evaluate_space(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hw: &Hardware,
+    jobs: usize,
+) -> Vec<Row> {
     let jobs = if jobs == 0 { pool::effective_jobs() } else { jobs };
-    if jobs <= 1 || layouts.len() <= 1 {
+    if jobs <= 1 {
         return layouts
-            .into_iter()
             .map(|v| Row { outcome: cache::evaluate_cached(job, &v, hw), v })
             .collect();
     }
 
-    // Pre-pruning: settle hopeless rows inline, queue the rest.
-    let n = layouts.len();
-    let mut slots: Vec<Option<Row>> = (0..n).map(|_| None).collect();
-    let mut plausible: Vec<(usize, ValidLayout)> = Vec::with_capacity(n);
-    for (i, v) in layouts.into_iter().enumerate() {
-        if memory::model_state_bytes(job, &v, hw) > hw.hbm_bytes {
-            slots[i] = Some(Row { outcome: cache::evaluate_cached(job, &v, hw), v });
-        } else {
-            plausible.push((i, v));
-        }
+    // Single pass over the lazy stream: bucket by stage key.
+    let mut n = 0usize;
+    let mut group_index: HashMap<StageKey, usize> = HashMap::new();
+    let mut groups: Vec<Vec<(usize, ValidLayout)>> = Vec::new();
+    for (i, v) in layouts.enumerate() {
+        n = i + 1;
+        let gi = *group_index.entry(v.layout.stage_key()).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[gi].push((i, v));
     }
+    let mut slots: Vec<Option<Row>> = (0..n).map(|_| None).collect();
 
     let job_copy = *job;
     let hw_copy = *hw;
-    let computed = pool::map_jobs(plausible, jobs, move |_idx, (i, v)| {
-        (*i, Row { outcome: cache::evaluate_cached(&job_copy, v, &hw_copy), v: *v })
+    let computed = pool::map_jobs_coarse(groups, jobs, move |_gi, group| {
+        // The first member's evaluation computes the group's layer-cost
+        // stage (one memo miss); every sibling combines off the hit.
+        group
+            .iter()
+            .map(|(i, v)| {
+                (*i, Row { outcome: cache::evaluate_cached(&job_copy, v, &hw_copy), v: *v })
+            })
+            .collect::<Vec<_>>()
     });
-    for (i, row) in computed {
-        slots[i] = Some(row);
+    for part in computed {
+        for (i, row) in part {
+            slots[i] = Some(row);
+        }
     }
     slots
         .into_iter()
@@ -354,9 +396,10 @@ mod tests {
     }
 
     #[test]
-    fn pruned_rows_report_full_oom_numbers() {
-        // Pre-pruned layouts must still carry the exact `required` bytes
-        // the full memory model reports (the paper tables print them).
+    fn oom_rows_report_full_memory_numbers() {
+        // Every OOM row — wherever its group was dispatched — must carry
+        // the exact `required` bytes the full memory model reports (the
+        // paper tables print them).
         let p = &main_presets()[0];
         let job = p.job();
         let r = run_jobs(p, &A100, 4);

@@ -157,8 +157,6 @@ impl Pool {
             return Vec::new();
         }
         let max_parallel = max_parallel.clamp(1, self.workers);
-        let f = Arc::new(f);
-        let items = Arc::new(items);
         let chunk = if max_parallel < self.workers {
             // Cap semantics: exactly `max_parallel` chunks, so the cap is
             // enforced by construction.
@@ -172,6 +170,44 @@ impl Pool {
             let floor = MIN_CHUNK.min(n.div_ceil(self.workers)).max(1);
             balance.max(floor)
         };
+        self.run_chunked(items, chunk, f)
+    }
+
+    /// Like [`Pool::map_capped`] but every item is dispatched as its own
+    /// task — no `MIN_CHUNK` floor, no ~4×-per-worker balancing. For
+    /// items that are *already coarse* work units of uneven size (the
+    /// sweep engine's stage-key group buckets: one group may hold one
+    /// layout, its neighbor thirty): lumping `MIN_CHUNK` of them into one
+    /// task would undo exactly the load balancing that work stealing
+    /// provides. When the cap binds, items are still merged into
+    /// `max_parallel` chunks so the concurrency bound holds by
+    /// construction. Results are index-ordered like every other map.
+    pub fn map_coarse<T, R, F>(&self, items: Vec<T>, max_parallel: usize, f: F) -> Vec<R>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+        F: Fn(usize, &T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let max_parallel = max_parallel.clamp(1, self.workers);
+        let chunk = if max_parallel < self.workers { n.div_ceil(max_parallel).max(1) } else { 1 };
+        self.run_chunked(items, chunk, f)
+    }
+
+    /// Shared dispatch tail of [`Pool::map_capped`] / [`Pool::map_coarse`]:
+    /// split into `chunk`-sized tasks, scatter results back by index.
+    fn run_chunked<T, R, F>(&self, items: Vec<T>, chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+        F: Fn(usize, &T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let items = Arc::new(items);
         // Each chunk ships back `Ok(results)` or the caught panic payload,
         // which the caller re-raises — so `--jobs N` panics read exactly
         // like serial ones.
@@ -340,6 +376,24 @@ where
     global().map_capped(items, jobs, f)
 }
 
+/// [`map_jobs`] for pre-coarsened work units: one task per item
+/// ([`Pool::map_coarse`]), so uneven items — the sweep engine's
+/// stage-key groups — balance via stealing instead of being lumped
+/// `MIN_CHUNK` at a time. Same jobs semantics and index-ordered,
+/// serial-identical results.
+pub fn map_jobs_coarse<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(usize, &T) -> R + Send + Sync + 'static,
+{
+    let jobs = if jobs == 0 { effective_jobs() } else { jobs };
+    if jobs <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    global().map_coarse(items, jobs, f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,6 +445,39 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "n={n} jobs={jobs} index {i}");
             }
         });
+    }
+
+    #[test]
+    fn coarse_map_is_bit_identical_and_balances_uneven_groups() {
+        // map_jobs_coarse must return serial-identical, index-ordered
+        // results for uneven work units at every jobs value (the sweep
+        // engine's group dispatch leans on this exactly like map_jobs).
+        use crate::util::prop;
+        prop::check_cases(0xC0A25E, 48, |rng| {
+            let n = 1 + rng.range(0, 40);
+            let jobs = rng.range(1, 10);
+            // Uneven "groups": item i carries i%7+1 sub-units.
+            let items: Vec<u64> = (0..n as u64).collect();
+            let f = |i: usize, &x: &u64| -> f64 {
+                let mut acc = 0.0f64;
+                for k in 0..(x % 7 + 1) {
+                    acc += ((x + k).wrapping_mul(0x9E3779B97F4A7C15) as f64).sqrt() + i as f64;
+                }
+                acc
+            };
+            let serial = map_jobs_coarse(items.clone(), 1, f);
+            let parallel = map_jobs_coarse(items, jobs, f);
+            assert_eq!(serial.len(), parallel.len());
+            for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} jobs={jobs} index {i}");
+            }
+        });
+        // Direct pool entry too, across caps.
+        let pool = Pool::new(4);
+        for cap in [1usize, 2, 4, 9] {
+            let out = pool.map_coarse((0..37).collect::<Vec<usize>>(), cap, |_i, &x| x * 3);
+            assert_eq!(out, (0..37).map(|x| x * 3).collect::<Vec<_>>(), "cap {cap}");
+        }
     }
 
     #[test]

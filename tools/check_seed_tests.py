@@ -4,11 +4,16 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Two suites, reported separately:
+Four suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
-    subsystem (event-driven makespan, interleaved 1F1B, planner rule 7).
+    subsystem (event-driven makespan, interleaved 1F1B, planner rule 7);
+  * the EXECUTOR suite — ready-propagation makespan bit-identical to the
+    rescanning reference (allocation-free schedule pipeline);
+  * the FACTORED suite — factored stage/combine bitwise-equal to the
+    monolithic spec, bound admissibility, lazy-enumeration parity, and
+    pruned-vs-unpruned exhaustive-plan identity.
 
 Run: python3 tools/check_seed_tests.py
 """
@@ -969,6 +974,159 @@ EXECUTOR_CHECKS = [
 ]
 
 
+# ------------------------------------------------------------- factored suite
+# Mirrors the Rust tests added with the factored sweep evaluation (keyed
+# stage memos, lazy layout enumeration, bound-pruned exhaustive planning):
+# the factored pipeline must be bitwise-equal to the monolithic spec, the
+# bounds admissible on every sampled layout, the lazy enumeration
+# order-identical to the materializing reference, and the pruned argmax
+# identical to the unpruned one while evaluating < 60% of the space.
+
+
+def _factored_jobs():
+    return [
+        Job(preset("llama13b"), Cluster.dgx_a100(8), 2048),
+        Job(preset("llama65b"), Cluster.dgx_a100(16), 2048),
+    ]
+
+
+def _factored_space(job):
+    return enumerate_layouts(job, [1, 2, 4], [1, 2, 4], [1, 2, 4],
+                             [False, True], ALL_KERNELS, [False, True],
+                             (SCHED_1F1B, SCHED_GPIPE, sched_interleaved(2)))
+
+
+def t_fact_stage_costs_bitwise():
+    # rust: step_time::factored_stage_costs_match_monolithic_bitwise
+    names = ["chunk_fwd", "chunk_bwd", "head_fwd", "head_bwd", "tp_chunk", "p2p_hop"]
+    checked = 0
+    for job in _factored_jobs():
+        for v in _factored_space(job):
+            mono = stage_costs(job, v, A100)
+            fact = stage_costs_factored(job, v, A100)
+            for name, a, b in zip(names, fact, mono):
+                assert _bits(a) == _bits(b), f"{name} {v.layout}: {a!r} vs {b!r}"
+            checked += 1
+    assert checked > 100, f"only {checked} layouts checked"
+
+
+def t_fact_evaluate_bitwise():
+    # rust: sim::evaluate_matches_baseline_bitwise (vs-pr3 arm)
+    for job in _factored_jobs():
+        for v in _factored_space(job):
+            new = evaluate(job, v, A100)
+            old = evaluate_unfactored(job, v, A100)
+            assert new.kind == old.kind, f"{v.layout}: {new.kind} vs {old.kind}"
+            if new.kind == "ok":
+                assert _bits(new.step_time_s) == _bits(old.step_time_s), v.layout
+                assert _bits(new.mfu) == _bits(old.mfu), v.layout
+                assert _bits(new.mem.total()) == _bits(old.mem.total()), v.layout
+            elif new.kind == "oom":
+                assert _bits(new.required) == _bits(old.required), v.layout
+
+
+def t_fact_stage_key_completeness():
+    # rust: step_time::stage_key_captures_every_layer_cost_input — same
+    # stage key, different pp/sched => identical LAYER costs bitwise.
+    import pysim
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    a = validate(job, Layout(2, 1, 1, False, FLASH2, True))
+    for pp, sched in [(2, SCHED_1F1B), (4, SCHED_GPIPE), (2, sched_interleaved(2))]:
+        b = validate(job, Layout(2, pp, 1, False, FLASH2, True, sched))
+        assert stage_key(a.layout) == stage_key(b.layout)
+        # The UNCACHED stage on both layouts — the memoized entry would
+        # trivially return the same object and prove nothing.
+        ca = pysim._layer_costs_uncached(job, a, A100)
+        cb = pysim._layer_costs_uncached(job, b, A100)
+        for fa, fb in zip(
+                (ca.layer_fwd, ca.layer_bwd, ca.head_fwd, ca.head_bwd, ca.tp_per_layer,
+                 ca.sp_factor, ca.p2p_intra, ca.p2p_inter, ca.act_bytes, ca.act_bytes_full),
+                (cb.layer_fwd, cb.layer_bwd, cb.head_fwd, cb.head_bwd, cb.tp_per_layer,
+                 cb.sp_factor, cb.p2p_intra, cb.p2p_inter, cb.act_bytes, cb.act_bytes_full)):
+            assert _bits(fa) == _bits(fb), (pp, sched)
+
+
+def t_fact_step_time_bound_admissible():
+    # rust: step_time::step_time_lower_bound_is_admissible_bitwise
+    checked = 0
+    for job in _factored_jobs():
+        for v in _factored_space(job):
+            lb = step_time_lower_bound(job, v, A100)
+            t = step_time(job, v, A100).total()
+            assert lb <= t, f"{v.layout}: bound {lb!r} > total {t!r}"
+            assert lb > 0.0, v.layout
+            checked += 1
+    assert checked > 100
+
+
+def t_fact_mfu_bound_admissible():
+    # rust: sim::mfu_upper_bound_is_admissible — on runnable layouts only
+    # (the bound is consulted by the planner before the OOM check, but
+    # its guarantee is about layouts that COULD win the argmax).
+    runnable = 0
+    for job in _factored_jobs():
+        for v in _factored_space(job):
+            o = evaluate(job, v, A100)
+            if o.kind == "ok":
+                ub = mfu_upper_bound(job, v, A100)
+                assert ub >= o.mfu, f"{v.layout}: bound {ub!r} < mfu {o.mfu!r}"
+                runnable += 1
+    assert runnable > 40, f"only {runnable} runnable layouts"
+
+
+def t_fact_lazy_enumeration_parity():
+    # rust: layout::layout_space_matches_materializing_enumerate — the
+    # lazy space must yield the exact sequence (order and contents) of
+    # the historical nested loops, including empty-axis subspaces.
+    cases = [
+        ([1, 2, 4, 8], [1, 2, 4, 8], [1, 2, 4], [False, True], ALL_KERNELS,
+         [False, True], (SCHED_1F1B, sched_interleaved(2))),
+        ([2, 4], [2, 8], [1, 4], [False], [FLASH2RMS], [False, True], (SCHED_1F1B,)),
+        ([], [1, 2], [1], [False], [FLASH2], [False], (SCHED_1F1B,)),
+        ([1], [1], [1, 2, 4, 8], [True], ALL_KERNELS, [False],
+         (SCHED_1F1B, SCHED_GPIPE)),
+    ]
+    for name, nodes in [("llama13b", 8), ("llama30b-8k", 8), ("llama65b", 16)]:
+        arch = preset(name)
+        job = Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+        for (tps, pps, mbs, ckpts, kernels, sps, scheds) in cases:
+            lazy = list(iter_layouts(job, tps, pps, mbs, ckpts, kernels, sps, scheds))
+            ref = enumerate_layouts_reference(job, tps, pps, mbs, ckpts, kernels,
+                                              sps, scheds)
+            assert len(lazy) == len(ref), (name, len(lazy), len(ref))
+            for a, b in zip(lazy, ref):
+                assert a == b, (name, a.layout, b.layout)
+
+
+def t_fact_pruned_plan_identical_and_bounded():
+    # rust: planner::pruned_exhaustive_matches_reference_argmax +
+    # planner::pruned_exhaustive_evaluates_under_60_percent
+    for name, nodes in [("llama13b", 8), ("llama30b", 8), ("llama65b", 8)]:
+        arch = preset(name)
+        job = Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+        pruned, stats = plan_exhaustive_stats(job, A100)
+        ref = plan_exhaustive_reference(job, A100)
+        assert pruned.v == ref.v, f"{name}: {pruned.v.layout} vs {ref.v.layout}"
+        assert _bits(pruned.predicted_mfu) == _bits(ref.predicted_mfu), name
+        assert _bits(pruned.predicted_step_s) == _bits(ref.predicted_step_s), name
+        assert stats.total == (stats.gate_pruned + stats.mem_pruned
+                               + stats.bound_pruned + stats.evaluated), name
+        frac = stats.evaluated_fraction()
+        assert frac < 0.60, f"{name}: evaluated {frac:.1%} of the space"
+        assert stats.bound_pruned > 0, f"{name}: bound never fired"
+
+
+FACTORED_CHECKS = [
+    ("step_time::factored_stage_costs_match_monolithic_bitwise", t_fact_stage_costs_bitwise),
+    ("sim::factored_evaluate_matches_unfactored_bitwise", t_fact_evaluate_bitwise),
+    ("step_time::stage_key_captures_every_layer_cost_input", t_fact_stage_key_completeness),
+    ("step_time::step_time_lower_bound_is_admissible_bitwise", t_fact_step_time_bound_admissible),
+    ("sim::mfu_upper_bound_is_admissible", t_fact_mfu_bound_admissible),
+    ("layout::layout_space_matches_materializing_enumerate", t_fact_lazy_enumeration_parity),
+    ("planner::pruned_exhaustive_matches_reference_argmax", t_fact_pruned_plan_identical_and_bounded),
+]
+
+
 def main():
     for name, fn in CHECKS:
         check(name, fn)
@@ -981,6 +1139,10 @@ def main():
     for name, fn in EXECUTOR_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - sched_pass} / {len(EXECUTOR_CHECKS)} (executor suite)")
+    exec_pass = len(PASS)
+    for name, fn in FACTORED_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - exec_pass} / {len(FACTORED_CHECKS)} (factored suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

@@ -17,17 +17,25 @@ Rust source of truth:
   rust/src/sim/schedule/gen.rs    -> one_f1b / gpipe / interleaved_1f1b / peak_in_flight
   rust/src/sim/schedule/makespan.rs -> makespan (event-driven executor)
   rust/src/sim/memory.rs          -> act_bytes_per_layer / per_gpu_memory
-  rust/src/sim/step_time.rs       -> stage_costs / step_time
+                                     / per_gpu_memory_combine
+  rust/src/sim/step_time.rs       -> stage_costs (monolithic spec) /
+                                     layer_costs + combine_layer_costs
+                                     (factored production) / step_time /
+                                     step_time_lower_bound
   rust/src/sim/mfu.rs             -> mfu / megatron_mfu / llama_meta_mfu
-  rust/src/sim/cache.rs           -> evaluate_cached (the memo on evaluate)
-  rust/src/layout/mod.rs          -> validate / enumerate (incl. schedule rules)
+  rust/src/sim/mod.rs             -> evaluate (factored) /
+                                     evaluate_unfactored / mfu_upper_bound
+  rust/src/sim/cache.rs           -> evaluate_cached / layer_costs_cached
+  rust/src/layout/mod.rs          -> validate / LayoutSpace (iter_layouts)
+                                     / enumerate / stage_key
   rust/src/topo/mod.rs            -> Cluster / Topology
   rust/src/sweep/presets.rs       -> main_presets / seqpar_presets
   rust/src/sweep/engine.rs        -> run / sorted / best_where
   rust/src/sweep/report.rs        -> render / to_csv
   rust/src/sweep/table2.rs        -> rows / render
   rust/src/sweep/figures.rs       -> figure1..5 / table3 / table3_render
-  rust/src/planner/mod.rs         -> plan_by_rules / refine_interleaved / plan_exhaustive
+  rust/src/planner/mod.rs         -> plan_by_rules / refine_interleaved /
+                                     plan_exhaustive_stats (bound-pruned)
   rust/src/util/table.rs          -> render / pct / secs
 """
 
@@ -566,7 +574,47 @@ def validate(job, l):
     return ValidLayout(l, topo, num_micro)
 
 
+def iter_layouts(job, tps, pps, mbs, ckpts, kernels, sps, scheds=(SCHED_1F1B,)):
+    """Lazy enumeration — mirrors rust/src/layout/mod.rs::LayoutSpace:
+    same nesting order (tp outermost, sched innermost), same ckpt∧RMS
+    exclusion, same validate filtering, one layout at a time."""
+    for tp in tps:
+        for pp in pps:
+            for mb in mbs:
+                for ckpt in ckpts:
+                    for kernel in kernels:
+                        for sp in sps:
+                            for sched in scheds:
+                                if ckpt and kernel == FLASH2RMS:
+                                    continue
+                                l = Layout(tp, pp, mb, ckpt, kernel, sp, sched)
+                                try:
+                                    yield validate(job, l)
+                                except ValueError:
+                                    pass
+
+
+def layout_space_total(tps, pps, mbs, ckpts, kernels, sps, scheds=(SCHED_1F1B,)):
+    # Mirrors LayoutSpace::total_combinations (raw product).
+    return (len(tps) * len(pps) * len(mbs) * len(ckpts) * len(kernels)
+            * len(sps) * len(scheds))
+
+
+def stage_key(l):
+    # Mirrors rust/src/layout/mod.rs::Layout::stage_key.
+    return (l.tp, l.mb, l.ckpt, l.kernel, l.sp)
+
+
 def enumerate_layouts(job, tps, pps, mbs, ckpts, kernels, sps, scheds=(SCHED_1F1B,)):
+    # Mirrors layout::enumerate: materialize the lazy space.
+    return list(iter_layouts(job, tps, pps, mbs, ckpts, kernels, sps, scheds))
+
+
+def enumerate_layouts_reference(job, tps, pps, mbs, ckpts, kernels, sps,
+                                scheds=(SCHED_1F1B,)):
+    """The historical materializing nested loops, retained verbatim as the
+    order/contents oracle for the lazy-enumeration parity check (mirrors
+    rust/src/layout/mod.rs::enumerate_reference)."""
     out = []
     for tp in tps:
         for pp in pps:
@@ -634,6 +682,21 @@ def act_bytes_per_layer(job, v):
 
 
 def per_gpu_memory(job, v, hw):
+    # Mirrors rust/src/sim/memory.rs::per_gpu_memory_with: compute the
+    # per-layer activation bytes inline, then the shared combine.
+    acts = act_bytes_per_layer(job, v)
+    l = v.layout
+    no_ckpt = ValidLayout(
+        Layout(l.tp, l.pp, l.mb, False, l.kernel, l.sp, l.sched), v.topo, v.num_micro)
+    acts_full = act_bytes_per_layer(job, no_ckpt)
+    return per_gpu_memory_combine(job, v, hw, acts, acts_full)
+
+
+def per_gpu_memory_combine(job, v, hw, acts, acts_full):
+    """The memory-combine stage of the factored pipeline (mirrors
+    rust/src/sim/memory.rs::per_gpu_memory_combine): shard arithmetic
+    over the schedule's in-flight peaks and the stage-provided per-layer
+    activation bytes."""
     a = job.arch
     l = v.layout
     n = float(a.param_count())
@@ -646,18 +709,16 @@ def per_gpu_memory(job, v, hw):
     vst = sched_vstages(l.sched)
     layers_per_chunk = float(a.layers // (l.pp * vst))
     in_flight = float(peak_in_flight(sched_ops(l.sched, 0, l.pp, v.num_micro)))
-    activations = act_bytes_per_layer(job, v) * layers_per_chunk * in_flight
+    activations = acts * layers_per_chunk * in_flight
     if l.ckpt:
-        no_ckpt = ValidLayout(
-            Layout(l.tp, l.pp, l.mb, False, l.kernel, l.sp, l.sched), v.topo, v.num_micro)
-        activations += act_bytes_per_layer(job, no_ckpt)
+        activations += acts_full
 
     if l.pp == 1:
         logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
     else:
         head_in_flight = float(
             peak_in_flight(sched_ops(l.sched, l.pp - 1, l.pp, v.num_micro)))
-        head_acts = act_bytes_per_layer(job, v) * layers_per_chunk * head_in_flight
+        head_acts = acts * layers_per_chunk * head_in_flight
         head_logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
         head_total = head_acts + head_logits
         stage0_total = activations
@@ -760,14 +821,174 @@ def stage_costs(job, v, hw):
     return (chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop)
 
 
+# -------------------------------------------------- factored cost stages
+
+@dataclass(frozen=True)
+class LayerCosts:
+    """Per-layer cost stage output (mirrors
+    rust/src/sim/step_time.rs::LayerCosts): a pure function of
+    (arch, tp, sp, mb, kernel, ckpt, hw) — pp and sched only rescale or
+    select these in combine_layer_costs."""
+    layer_fwd: float
+    layer_bwd: float
+    head_fwd: float
+    head_bwd: float
+    tp_per_layer: float
+    sp_factor: float
+    p2p_intra: float
+    p2p_inter: float
+    act_bytes: float
+    act_bytes_full: float
+
+
+_STAGE_CACHE = {}
+
+
+def layer_costs(job, v, hw):
+    """The keyed per-layer cost stage, memoized like
+    rust/src/sim/cache.rs::layer_costs_cached (key: arch + hw + stage
+    key; deliberately no pp/sched/cluster/gbs)."""
+    key = (job.arch, hw, stage_key(v.layout))
+    hit = _STAGE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out = _layer_costs_uncached(job, v, hw)
+    _STAGE_CACHE[key] = out
+    return out
+
+
+def _layer_costs_uncached(job, v, hw):
+    # Mirrors rust/src/sim/step_time.rs::layer_costs_uncached expression
+    # for expression (the monolithic stage_costs at per-layer granularity).
+    a = job.arch
+    l = v.layout
+    kp = KERNEL_PERF[l.kernel]
+    tokens = l.mb * a.seq
+
+    dense_flops = (a.layer_fwd_flops(l.mb, a.seq)
+                   - 4.0 * float(l.mb * a.seq * a.seq) * float(a.hidden))
+    attn_flops = 4.0 * float(l.mb * a.seq * a.seq) * float(a.hidden)
+
+    t_dense = (dense_flops / float(l.tp)
+               / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden)))
+    t_attn = attn_flops / float(l.tp) / (hw.peak_matmul_flops * kp.attn_matmul_eff)
+
+    sbh = float(tokens * a.hidden)
+    norm_bytes = kp.norm_bytes_per_elem * sbh / (float(l.tp) if l.sp else 1.0)
+    softmax_bytes = (kp.softmax_bytes_per_score
+                     * float(a.heads * a.seq * a.seq * l.mb) / float(l.tp))
+    t_mem = (norm_bytes + softmax_bytes) / hw.hbm_bw + hw.launch_overhead_s * 8.0
+
+    bwd_factor = cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR)
+    ckpt_extra = 1.0 if l.ckpt else 0.0
+    flash_extra = 1.0 if is_flash(l.kernel) else 0.0
+    layer_fwd = t_dense + t_attn + t_mem
+    layer_bwd = ((bwd_factor + ckpt_extra) * (t_dense + t_mem)
+                 + (bwd_factor + ckpt_extra + flash_extra) * t_attn)
+
+    head_flops = a.head_fwd_flops(l.mb, a.seq)
+    head_total = (head_flops / float(l.tp)
+                  / (hw.peak_matmul_flops * dense_matmul_eff(l.tp, l.mb, a.seq, a.hidden))
+                  * (1.0 + bwd_factor)
+                  + 3.0 * 4.0 * float(tokens * a.vocab // l.tp) / hw.hbm_bw)
+    head_fwd = head_total / (1.0 + bwd_factor)
+    head_bwd = head_total - head_fwd
+
+    if l.tp > 1:
+        bytes_ = 2.0 * sbh
+        ar = allreduce_time(bytes_, l.tp, hw.nvlink_bw, hw.coll_latency_s)
+        tp_per_layer = 2.0 * ar
+        sp_factor = 0.95 if l.sp else 1.0
+    else:
+        tp_per_layer = 0.0
+        sp_factor = 1.0
+
+    pbytes = 2.0 * float(l.mb * a.seq * a.hidden)
+    p2p_intra = p2p_time(pbytes, hw.nvlink_bw, hw.coll_latency_s)
+    p2p_inter = p2p_time(pbytes, hw.ib_bw, hw.coll_latency_s)
+
+    act_bytes = act_bytes_per_layer(job, v)
+    no_ckpt = ValidLayout(
+        Layout(l.tp, l.pp, l.mb, False, l.kernel, l.sp, l.sched), v.topo, v.num_micro)
+    act_bytes_full = act_bytes_per_layer(job, no_ckpt)
+
+    return LayerCosts(layer_fwd, layer_bwd, head_fwd, head_bwd, tp_per_layer,
+                      sp_factor, p2p_intra, p2p_inter, act_bytes, act_bytes_full)
+
+
+def combine_layer_costs(lc, job, v):
+    """Combine half of the factored cost construction (mirrors
+    rust/src/sim/step_time.rs::combine_layer_costs): rescale by
+    layers/(pp·v), select the p2p bandwidth. Bit-identical to the
+    monolithic stage_costs by construction (factored suite asserts it)."""
+    a = job.arch
+    l = v.layout
+    vst = sched_vstages(l.sched)
+    layers_per_chunk = float(a.layers // (l.pp * vst))
+    chunk_fwd = layers_per_chunk * lc.layer_fwd
+    chunk_bwd = layers_per_chunk * lc.layer_bwd
+    tp_chunk = (layers_per_chunk * lc.tp_per_layer * lc.sp_factor
+                if l.tp > 1 else 0.0)
+    if l.pp > 1:
+        p2p_hop = lc.p2p_inter if v.topo.pp_crosses_node() else lc.p2p_intra
+    else:
+        p2p_hop = 0.0
+    return (chunk_fwd, chunk_bwd, lc.head_fwd, lc.head_bwd, tp_chunk, p2p_hop)
+
+
+def stage_costs_factored(job, v, hw):
+    # Mirrors rust/src/sim/step_time.rs::stage_costs_factored.
+    return combine_layer_costs(layer_costs(job, v, hw), job, v)
+
+
+def _dp_and_optimizer(job, v, hw):
+    # Mirrors rust/src/sim/step_time.rs::dp_and_optimizer (extracted so
+    # the bound and the breakdown share one expression).
+    a = job.arch
+    l = v.layout
+    shard_bytes = 2.0 * float(a.param_count()) / float(l.tp * l.pp)
+    dp_bw = hw.ib_bw if v.topo.cluster.nodes() > 1 else hw.nvlink_bw
+    dp_comm = (allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s)
+               * cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION))
+    opt_elems = float(a.param_count()) / float(l.tp * l.pp) / float(v.topo.dp)
+    optimizer = (OPT_FIXED_S
+                 + 16.0 * opt_elems / hw.hbm_bw
+                 + allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s) * 0.5)
+    return dp_comm, optimizer
+
+
+def step_time_lower_bound(job, v, hw):
+    """Admissible lower bound on step_time(...).total() — no schedule
+    execution (mirrors rust/src/sim/step_time.rs::step_time_lower_bound):
+    head-less compute + DP reduction + optimizer, each of the dropped
+    terms being >= 0, with partial sums ordered like total() so the bound
+    holds bitwise."""
+    chunk_fwd, chunk_bwd, _hf, _hb, _tp, _p2p = stage_costs_factored(job, v, hw)
+    vst = sched_vstages(v.layout.sched)
+    comp_micro = float(vst) * (chunk_fwd + chunk_bwd)
+    compute = float(v.num_micro) * comp_micro
+    dp_comm, optimizer = _dp_and_optimizer(job, v, hw)
+    return compute + dp_comm + optimizer
+
+
+def mfu_upper_bound(job, v, hw):
+    # Mirrors rust/src/sim/mod.rs::mfu_upper_bound: MFU is monotone
+    # decreasing in step time, so the step-time lower bound gives an MFU
+    # upper bound.
+    return mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops,
+               step_time_lower_bound(job, v, hw))
+
+
 def step_time(job, v, hw):
     a = job.arch
     l = v.layout
     m = v.num_micro
     vst = sched_vstages(l.sched)
 
+    # Production path: factored stage + combine (mirrors step_time_with);
+    # the monolithic stage_costs above is the retained bitwise spec.
     chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop = \
-        stage_costs(job, v, hw)
+        stage_costs_factored(job, v, hw)
 
     # The production path (mirrors step_time_with): the ready-propagation
     # executor. Bit-identical to the reference makespan() — asserted by
@@ -800,15 +1021,7 @@ def step_time(job, v, hw):
     pp_comm = float(m) * pp_micro
     bubble = total - busy[b]
 
-    shard_bytes = 2.0 * float(a.param_count()) / float(l.tp * l.pp)
-    dp_bw = hw.ib_bw if v.topo.cluster.nodes() > 1 else hw.nvlink_bw
-    dp_comm = (allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s)
-               * cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION))
-
-    opt_elems = float(a.param_count()) / float(l.tp * l.pp) / float(v.topo.dp)
-    optimizer = (OPT_FIXED_S
-                 + 16.0 * opt_elems / hw.hbm_bw
-                 + allreduce_time(shard_bytes, v.topo.dp, dp_bw, hw.coll_latency_s) * 0.5)
+    dp_comm, optimizer = _dp_and_optimizer(job, v, hw)
 
     return StepBreakdown(compute, tp_comm, pp_comm, bubble, dp_comm, optimizer)
 
@@ -882,12 +1095,57 @@ def evaluate(job, v, hw):
 
 
 def _evaluate_uncached(job, v, hw):
+    # The factored pipeline (mirrors rust/src/sim/mod.rs::evaluate):
+    # kernel gate -> layer-cost stage -> memory combine -> makespan -> MFU.
+    if not kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb):
+        return Outcome("unavail")
+    lc = layer_costs(job, v, hw)
+    mem = per_gpu_memory_combine(job, v, hw, lc.act_bytes, lc.act_bytes_full)
+    if mem.total() > hw.hbm_bytes:
+        return Outcome("oom", required=mem.total(), budget=hw.hbm_bytes)
+    step = step_time(job, v, hw)
+    t = step.total()
+    m = mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t)
+    return Outcome("ok", step_time_s=t, mfu=m, mem=mem, step=step)
+
+
+def evaluate_unfactored(job, v, hw):
+    """The PR-3 pipeline: monolithic costs, inline activation bytes
+    (mirrors rust/src/sim/mod.rs::evaluate_unfactored). Value-identical
+    to evaluate — the factored suite asserts it bitwise."""
     if not kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb):
         return Outcome("unavail")
     mem = per_gpu_memory(job, v, hw)
     if mem.total() > hw.hbm_bytes:
         return Outcome("oom", required=mem.total(), budget=hw.hbm_bytes)
-    step = step_time(job, v, hw)
+    chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop = stage_costs(job, v, hw)
+    l = v.layout
+    vst = sched_vstages(l.sched)
+    scheds = [sched_ops(l.sched, p, l.pp, v.num_micro) for p in range(l.pp)]
+    ms = makespan_fast(l.pp, vst, v.num_micro, scheds,
+                       chunk_fwd + tp_chunk, chunk_bwd + tp_chunk,
+                       head_fwd, head_bwd, p2p_hop)
+    assert ms is not None, "schedule deadlock"
+    total, busy = ms
+    b = 0
+    for p in range(1, l.pp):
+        if busy[p] > busy[b]:
+            b = p
+    comp_micro = float(vst) * (chunk_fwd + chunk_bwd)
+    if b == l.pp - 1:
+        comp_micro += head_fwd + head_bwd
+    tp_micro = 2.0 * float(vst) * tp_chunk
+    if l.pp > 1:
+        nf = vst if b > 0 else vst - 1
+        nb = vst if b < l.pp - 1 else vst - 1
+        pp_micro = float(nf + nb) * p2p_hop
+    else:
+        pp_micro = 0.0
+    step = StepBreakdown(float(v.num_micro) * comp_micro,
+                         float(v.num_micro) * tp_micro,
+                         float(v.num_micro) * pp_micro,
+                         total - busy[b],
+                         *_dp_and_optimizer(job, v, hw))
     t = step.total()
     m = mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t)
     return Outcome("ok", step_time_s=t, mfu=m, mem=mem, step=step)
@@ -1343,7 +1601,77 @@ def plan_by_rules(job, hw):
     raise ValueError(f"no feasible layout for {job.arch.name}")
 
 
+@dataclass(frozen=True)
+class PruneStats:
+    # Mirrors rust/src/planner/mod.rs::PruneStats.
+    total: int
+    gate_pruned: int
+    mem_pruned: int
+    bound_pruned: int
+    evaluated: int
+
+    def evaluated_fraction(self):
+        return self.evaluated / self.total if self.total else 0.0
+
+
+PRUNE_WINDOW = 32  # mirrors rust/src/planner/mod.rs::PRUNE_WINDOW
+
+
+def plan_exhaustive_stats(job, hw):
+    """Bound-pruned exhaustive argmax (mirrors
+    rust/src/planner/mod.rs::plan_exhaustive_stats): scan the lazy space
+    in enumeration order with an incumbent; skip layouts only on a
+    provable dominance (kernel gate / memory lower bound / admissible
+    MFU upper bound). Survivors batch into PRUNE_WINDOW-sized windows
+    (Rust evaluates each window on the pool; the mirror evaluates it
+    serially — same outcomes, and the fold applies strict-> in
+    enumeration order either way, so the evaluated COUNT and the plan
+    match Rust exactly). Returns (plan, PruneStats); the plan is
+    identical to plan_exhaustive_reference's, layout and bits."""
+    tps = [1 << i for i in range(4)]
+    pps = [1 << i for i in range(6)]
+    best = None
+    total = gated = memp = boundp = evaluated = 0
+    window = []
+
+    def flush(best):
+        for w in window:
+            o = evaluate(job, w, hw)
+            if o.kind == "ok" and (best is None or o.mfu > best.predicted_mfu):
+                best = Plan(w, o.mfu, o.step_time_s)
+        window.clear()
+        return best
+
+    for v in iter_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
+                          ALL_KERNELS, [False, True]):
+        total += 1
+        l = v.layout
+        if not kernel_available(l.kernel, job.arch.heads, l.tp, l.mb):
+            gated += 1
+            continue
+        if model_state_bytes(job, v, hw) > hw.hbm_bytes:
+            memp += 1
+            continue
+        if best is not None and mfu_upper_bound(job, v, hw) <= best.predicted_mfu:
+            boundp += 1
+            continue
+        evaluated += 1
+        window.append(v)
+        if len(window) >= PRUNE_WINDOW:
+            best = flush(best)
+    best = flush(best)
+    if best is None:
+        raise ValueError("no feasible layout")
+    return best, PruneStats(total, gated, memp, boundp, evaluated)
+
+
 def plan_exhaustive(job, hw):
+    return plan_exhaustive_stats(job, hw)[0]
+
+
+def plan_exhaustive_reference(job, hw):
+    # The historical unpruned argmax, retained as the identity oracle
+    # (mirrors rust/src/planner/mod.rs::plan_exhaustive_reference).
     tps = [1 << i for i in range(4)]
     pps = [1 << i for i in range(6)]
     layouts = enumerate_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
