@@ -23,17 +23,23 @@
 //! honest cold-sweep numbers (intra-sweep memo hits included — they ARE
 //! the optimization).
 //!
-//! Emits `BENCH_sweep.json` **schema_version 2** (path overridable via
+//! A **per-hardware** section then re-runs the same presets through the
+//! engine once per `HW_PRESETS` entry (the `--hw` axis's hot path) and
+//! records each sweep's wall time, throughput, and best sp-13b-2k MFU.
+//!
+//! Emits `BENCH_sweep.json` **schema_version 3** (path overridable via
 //! `PLX_BENCH_JSON`): wall time + evals/sec for all four pipelines, a
 //! per-phase breakdown of the factored path (enumerate / stage-compute /
-//! combine / rank), per-level memo hit rates, and the speedup fields;
-//! see `docs/perf.md` for the schema and how CI reads it.
+//! combine / rank), per-level memo hit rates, the speedup fields, and
+//! the per-hardware `hw_sweeps` object; see `docs/perf.md` for the
+//! schema and how CI reads it. All timing thresholds stay advisory —
+//! CI gates only the schema fields and deterministic invariants.
 
 use std::io::Write;
 use std::time::Instant;
 
 use plx::layout::{enumerate, Job, LayoutSpace, ValidLayout};
-use plx::sim::{cache, evaluate, evaluate_baseline, evaluate_unfactored, step_time, A100};
+use plx::sim::{cache, evaluate, evaluate_baseline, evaluate_unfactored, step_time, A100, HW_PRESETS};
 use plx::sweep::{evaluate_space, seqpar_presets};
 use plx::util::bench::{bench, section};
 use plx::util::pool;
@@ -225,13 +231,49 @@ fn main() {
          ({engine_speedup_vs_pr3:.2}x vs pr3 serial artifact path, advisory >= {ADVISORY_SPEEDUP_VS_PR3}x)"
     );
 
+    section("per-hardware sweeps (the --hw axis through the factored engine)");
+    // One cold engine pass per registry entry. The layout grid is
+    // hardware-independent (memory uses the same 80 GB budget on both
+    // presets today), so evals/sec differences are pure cost-model
+    // arithmetic + memo-shape effects — worth trending as the registry
+    // grows. `best_mfu_sp13b` anchors each sweep's output
+    // deterministically (same bits every run, any --jobs).
+    let mut hw_json_entries: Vec<String> = Vec::new();
+    for (hw_name, hw) in HW_PRESETS {
+        let m = bench(&format!("table-2 preset via engine on {hw_name} (cold)"), 1, 3, || {
+            cache::clear();
+            let mut rows = 0usize;
+            for p in &presets {
+                let job = p.job();
+                let space = LayoutSpace::new(
+                    &job, &p.tps, &p.pps, &p.mbs, &p.ckpts, &p.kernels, &p.sps, &p.scheds,
+                );
+                rows += evaluate_space(&job, space, &hw, jobs).len();
+            }
+            assert_eq!(rows, n_layouts);
+        });
+        let wall = m.mean.as_secs_f64();
+        let hw_eps = n_layouts as f64 / wall;
+        let best_mfu = plx::sweep::run_jobs(&presets[0], &hw, 1)
+            .best()
+            .and_then(|r| r.outcome.mfu())
+            .expect("sp-13b-2k must have a runnable best row on every preset");
+        println!("-> {hw_name}: {hw_eps:.0} evaluations/sec, best sp-13b-2k MFU {:.4}", best_mfu);
+        hw_json_entries.push(format!(
+            "\"{hw_name}\": {{ \"wall_s\": {wall:.6}, \"evals_per_sec\": {hw_eps:.1}, \
+             \"best_mfu_sp13b\": {best_mfu:.6} }}"
+        ));
+    }
+    let hw_sweeps_json = hw_json_entries.join(", ");
+
     let json = format!(
-        "{{\n  \"schema_version\": 2,\n  \
+        "{{\n  \"schema_version\": 3,\n  \
          \"preset\": \"table2 (sp-13b-2k .. sp-65b-2k)\",\n  \"layouts\": {n_layouts},\n  \
          \"baseline\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
          \"pr3\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
          \"factored\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
          \"engine\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1}, \"jobs\": {jobs} }},\n  \
+         \"hw_sweeps\": {{ {hw_sweeps_json} }},\n  \
          \"phases\": {{ \"enumerate_s\": {enumerate_s:.6}, \"stage_s\": {stage_s:.6}, \
          \"combine_s\": {combine_s:.6}, \"rank_s\": {rank_s:.6} }},\n  \
          \"speedup\": {speedup:.3},\n  \

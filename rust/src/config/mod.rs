@@ -31,6 +31,11 @@ pub struct RunConfig {
     /// Pipeline schedule (`1f1b`, `gpipe`; `interleaved:<v>` parses but
     /// the PJRT trainer rejects it at launch).
     pub schedule: Schedule,
+    /// Hardware preset name for the analytic side of a run; must name a
+    /// `sim::cluster` registry entry. The PJRT trainer itself runs
+    /// wherever it runs — this key only steers the simulator's view of
+    /// the run (e.g. `plx train`'s achieved-MFU-vs-peak line).
+    pub hw: String,
 }
 
 impl Default for RunConfig {
@@ -49,6 +54,7 @@ impl Default for RunConfig {
             log_every: 1,
             artifacts: crate::artifacts_root(),
             schedule: Schedule::OneF1B,
+            hw: "a100".into(),
         }
     }
 }
@@ -85,6 +91,7 @@ impl RunConfig {
                     self.schedule = Schedule::parse(s)
                         .with_context(|| format!("unknown schedule '{s}'"))?;
                 }
+                "hw" => self.hw = val.as_str().context("hw")?.to_string(),
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -119,6 +126,9 @@ impl RunConfig {
             self.schedule = Schedule::parse(s)
                 .with_context(|| format!("unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)"))?;
         }
+        if let Some(h) = args.get("hw") {
+            self.hw = h.to_string();
+        }
         Ok(())
     }
 
@@ -132,7 +142,17 @@ impl RunConfig {
         if !(0.0..=1.0).contains(&self.noise) {
             bail!("noise must be in [0, 1]");
         }
+        // Same clean error the CLI's --hw gives: list the known presets.
+        crate::sim::parse_hw(&self.hw).map_err(anyhow::Error::msg)?;
         Ok(())
+    }
+
+    /// Resolve the `hw` key against the hardware registry (with
+    /// `PLX_HW_*` overrides applied, like the CLI's `--hw`).
+    pub fn hardware(&self) -> Result<crate::sim::Hardware> {
+        Ok(crate::sim::parse_hw(&self.hw)
+            .map_err(anyhow::Error::msg)?
+            .from_overrides())
     }
 
     pub fn to_trainer(&self) -> TrainerConfig {
@@ -164,7 +184,7 @@ mod tests {
     const SPEC: Spec = Spec {
         options: &[
             "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed", "noise",
-            "log-every", "artifacts", "config", "schedule",
+            "log-every", "artifacts", "config", "schedule", "hw",
         ],
         flags: &[],
     };
@@ -226,6 +246,32 @@ mod tests {
         assert_eq!(t.dp, 2);
         assert_eq!(t.global_batch(), 2 * c.mb * c.num_micro);
         assert_eq!(t.schedule, Schedule::OneF1B);
+    }
+
+    #[test]
+    fn hw_key_parses_validates_and_overrides() {
+        let dir = std::env::temp_dir().join("plx_cfg_test_hw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("hw.json");
+        // Default is the paper testbed.
+        assert_eq!(RunConfig::default().hw, "a100");
+        assert!(RunConfig::default().validate().is_ok());
+        // JSON key round-trips into the resolved hardware model.
+        std::fs::write(&p, r#"{"hw": "h100"}"#).unwrap();
+        let mut c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.hw, "h100");
+        assert!(c.validate().is_ok());
+        assert_eq!(c.hardware().unwrap().bits(), crate::sim::H100.bits());
+        // CLI override wins over the file.
+        let argv: Vec<String> = ["--hw", "a100"].iter().map(|s| s.to_string()).collect();
+        c.apply_args(&Args::parse(&argv, &SPEC).unwrap()).unwrap();
+        assert_eq!(c.hw, "a100");
+        assert_eq!(c.hardware().unwrap().bits(), crate::sim::A100.bits());
+        // Unknown names fail validation with the preset-listing error.
+        c.hw = "mi300".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("mi300") && err.contains("a100") && err.contains("h100"), "{err}");
+        assert!(c.hardware().is_err());
     }
 
     #[test]

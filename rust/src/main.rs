@@ -8,8 +8,12 @@
 //! plx figure <1..5>                              # reproduce a paper figure
 //! plx plan   --model llama65b --nodes 8          # §5 recommendations as code
 //! plx predict-mem --model llama30b --nodes 8 --tp 2 --pp 4 [--mb 1 ...]
+//! plx compare --preset 13b-2k --hw a100,h100     # same sweep across hardware
 //! plx presets                                    # list models & sweeps
 //! ```
+//!
+//! Every analytic command takes `--hw <preset>` (default `a100`); see
+//! docs/hardware.md for the hardware model and `PLX_HW_*` overrides.
 
 use std::path::Path;
 
@@ -20,7 +24,7 @@ use plx::coordinator::train;
 use plx::layout::{validate, Job, Kernel, Layout, Schedule};
 use plx::model::arch::{preset, PRESETS};
 use plx::planner::{plan_by_rules, plan_exhaustive_stats};
-use plx::sim::{evaluate, memory, Outcome, A100};
+use plx::sim::{evaluate, memory, parse_hw, Hardware, Outcome};
 use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2};
 use plx::topo::Cluster;
 use plx::util::cli::{Args, Spec};
@@ -30,7 +34,7 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
-        "loss-csv", "save", "resume", "jobs", "schedule",
+        "loss-csv", "save", "resume", "jobs", "schedule", "hw",
     ],
     flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats"],
 };
@@ -59,12 +63,25 @@ fn run(argv: &[String]) -> Result<()> {
         "figure" => cmd_figure(&args),
         "plan" => cmd_plan(&args),
         "predict-mem" => cmd_predict_mem(&args),
+        "compare" => cmd_compare(&args),
         "presets" => cmd_presets(),
         _ => {
             print!("{HELP}");
             Ok(())
         }
     }
+}
+
+/// Resolve `--hw <name>` (default `a100`) to a hardware model, with the
+/// `PLX_HW_*` per-field env overrides applied on top. With no overrides
+/// set this is exactly the named preset, bit for bit — default output
+/// stays byte-identical.
+fn resolve_hw(args: &Args) -> Result<Hardware> {
+    resolve_hw_name(args.get_or("hw", "a100"))
+}
+
+fn resolve_hw_name(name: &str) -> Result<Hardware> {
+    Ok(parse_hw(name).map_err(anyhow::Error::msg)?.from_overrides())
 }
 
 const HELP: &str = "\
@@ -84,14 +101,19 @@ USAGE:
   plx figure N            N in {1..5}
   plx plan   --model M --nodes K [--gbs G] [--exhaustive]
   plx predict-mem --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
-                  [--sp] [--kernel flash2rms]
+                  [--sp] [--kernel flash2rms] [--hw NAME]
                   [--schedule {1f1b,gpipe,interleaved:<v>}]
+  plx compare --preset NAME | --all  [--hw a100,h100]
+             best layout + MFU delta per hardware, side by side
   plx presets
 
-OPTIONS (all sweep/table/figure/plan commands):
+OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
   --jobs N   evaluate layouts on N worker threads (1 = serial,
              0 or 'auto' = all hardware threads; default auto).
              Output is byte-identical for every N.
+  --hw NAME  hardware preset to simulate (a100, h100; default a100;
+             `compare` takes a comma-separated list). Per-field
+             overrides via PLX_HW_* env vars — see docs/hardware.md.
 
 Artifacts for `plx train` come from `make artifacts`
 (python -m compile.aot). See README.md.
@@ -126,6 +148,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         log.steady_tokens_per_sec(),
         report.global_batch * report.seq
     );
+    // The config's `hw` key steers the analytic side of the run: relate
+    // the achieved throughput to the configured hardware's peak (the
+    // simulator's MFU definition over the trainer's world size).
+    if let (Some(arch), Some(step)) = (preset(&cfg.model), log.mean_step_time_paper_protocol()) {
+        let hw = cfg.hardware()?;
+        let m = plx::sim::mfu::mfu(
+            &arch,
+            report.global_batch,
+            cfg.dp * cfg.pp,
+            hw.peak_matmul_flops,
+            step.as_secs_f64(),
+        );
+        println!("achieved MFU vs {} peak: {:.2}%", cfg.hw, 100.0 * m);
+    }
     if let Some(path) = args.get("loss-csv") {
         std::fs::write(path, log.to_csv())?;
         println!("loss curve written to {path}");
@@ -133,16 +169,39 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Parse the `--schedule` value: a single schedule or a comma-separated
-/// list (`1f1b,interleaved:2`).
-fn parse_schedules(s: &str) -> Result<Vec<Schedule>> {
-    s.split(',')
+/// Parse the `--schedule` option — a single schedule or a comma-separated
+/// list (`1f1b,interleaved:2`) — through the shared [`Args::get_list`]
+/// splitting (same trim/empty-segment behavior as `--hw`). `None` when
+/// the option was not given.
+fn schedules_from_args(args: &Args) -> Result<Option<Vec<Schedule>>> {
+    if args.get("schedule").is_none() {
+        return Ok(None);
+    }
+    let scheds: Vec<Schedule> = args
+        .get_list("schedule", "")
+        .iter()
         .map(|tok| {
-            Schedule::parse(tok.trim()).with_context(|| {
+            Schedule::parse(tok).with_context(|| {
                 format!("unknown schedule '{tok}' (1f1b, gpipe, interleaved:<v>)")
             })
         })
-        .collect()
+        .collect::<Result<_>>()?;
+    if scheds.is_empty() {
+        bail!("--schedule needs at least one value");
+    }
+    Ok(Some(scheds))
+}
+
+/// Shared `--preset NAME | --all` selection for sweep-shaped commands
+/// (`plx sweep`, `plx compare`): all presets, or one by name.
+fn presets_from_args(args: &Args, usage: &str) -> Result<Vec<plx::sweep::SweepPreset>> {
+    if args.flag("all") {
+        return Ok(main_presets().into_iter().chain(seqpar_presets()).collect());
+    }
+    let name = args
+        .get("preset")
+        .ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    Ok(vec![by_name(name).with_context(|| format!("unknown preset '{name}'"))?])
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -155,25 +214,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let mut presets = if args.flag("all") {
-        main_presets().into_iter().chain(seqpar_presets()).collect()
-    } else {
-        let name = args
-            .get("preset")
-            .context("need --preset NAME, --all, or --list")?;
-        vec![by_name(name).with_context(|| format!("unknown preset '{name}'"))?]
-    };
+    let mut presets = presets_from_args(args, "need --preset NAME, --all, or --list")?;
     // `--schedule` replaces the preset's schedule set (the paper presets
     // pin 1F1B); invalid layouts for a schedule are dropped by `validate`
     // exactly like every other dimension.
-    if let Some(s) = args.get("schedule") {
-        let scheds = parse_schedules(s)?;
+    if let Some(scheds) = schedules_from_args(args)? {
         for p in &mut presets {
             p.scheds = scheds.clone();
         }
     }
+    let hw = resolve_hw(args)?;
     for p in presets {
-        let result = plx::sweep::run(&p, &A100);
+        let result = plx::sweep::run(&p, &hw);
         let with_sp = p.sps.len() > 1;
         print!("{}", report::render(&result, with_sp));
         if let Some(csv) = args.get("csv") {
@@ -206,12 +258,13 @@ fn cmd_table(args: &Args) -> Result<()> {
         .context("usage: plx table N")?
         .parse()
         .map_err(|_| anyhow::anyhow!("table number must be an integer"))?;
+    let hw = resolve_hw(args)?;
     match n {
-        2 => print!("{}", table2::render(&A100)),
-        3 => print!("{}", figures::table3(&A100)),
+        2 => print!("{}", table2::render(&hw)),
+        3 => print!("{}", figures::table3(&hw)),
         4..=8 | 10..=14 => {
             let p = for_table(n).unwrap();
-            let result = plx::sweep::run(&p, &A100);
+            let result = plx::sweep::run(&p, &hw);
             print!("{}", report::render(&result, n >= 10));
         }
         _ => bail!("no such paper table: {n} (valid: 2, 3, 4..8, 10..14)"),
@@ -226,12 +279,13 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .context("usage: plx figure N")?
         .parse()
         .map_err(|_| anyhow::anyhow!("figure number must be an integer"))?;
+    let hw = resolve_hw(args)?;
     let rendered = match n {
-        1 => figures::figure1(&A100).1,
-        2 => figures::figure2(&A100).1,
-        3 => figures::figure3(&A100).1,
-        4 => figures::figure4(&A100).1,
-        5 => figures::figure5(&A100).1,
+        1 => figures::figure1(&hw).1,
+        2 => figures::figure2(&hw).1,
+        3 => figures::figure3(&hw).1,
+        4 => figures::figure4(&hw).1,
+        5 => figures::figure5(&hw).1,
         _ => bail!("no such paper figure: {n} (valid: 1..5)"),
     };
     print!("{rendered}");
@@ -250,14 +304,15 @@ fn job_from_args(args: &Args) -> Result<Job> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
+    let hw = resolve_hw(args)?;
     let plan = if args.flag("exhaustive") {
-        let (plan, stats) = plan_exhaustive_stats(&job, &A100)?;
+        let (plan, stats) = plan_exhaustive_stats(&job, &hw)?;
         // The branch-and-bound counter: how much of the space the
         // admissible bounds let the planner skip.
         eprintln!("plx plan: {}", stats.log_line());
         plan
     } else {
-        plan_by_rules(&job, &A100)?
+        plan_by_rules(&job, &hw)?
     };
     let l = plan.v.layout;
     println!(
@@ -279,6 +334,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_predict_mem(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
+    let hw = resolve_hw(args)?;
     let kernel = match args.get("kernel") {
         Some(k) => Kernel::parse(k).with_context(|| format!("unknown kernel '{k}'"))?,
         None => Kernel::Flash2Rms,
@@ -298,7 +354,7 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
         sched,
     };
     let v = validate(&job, &l)?;
-    let mem = memory::per_gpu_memory(&job, &v, &A100);
+    let mem = memory::per_gpu_memory(&job, &v, &hw);
     let gb = 1e9;
     let rows = vec![
         vec!["weights (bf16)".to_string(), format!("{:.2}", mem.weights / gb)],
@@ -308,14 +364,23 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
         vec!["logits".to_string(), format!("{:.2}", mem.logits / gb)],
         vec!["workspace".to_string(), format!("{:.2}", mem.workspace / gb)],
         vec!["TOTAL".to_string(), format!("{:.2}", mem.total() / gb)],
-        vec!["budget (A100-80GB)".to_string(), "80.00".to_string()],
+        // "budget (A100-80GB)  80.00" for the default hardware — byte-
+        // identical to the pre---hw output; other presets annotate theirs.
+        vec![
+            format!(
+                "budget ({}-{:.0}GB)",
+                args.get_or("hw", "a100").to_uppercase(),
+                hw.hbm_bytes / gb
+            ),
+            format!("{:.2}", hw.hbm_bytes / gb),
+        ],
     ];
     println!(
         "memory prediction: {} {} dp={}",
         job.arch.name, l.annotation(), v.topo.dp
     );
     print!("{}", table::render(&["component", "GB/GPU"], &rows));
-    match evaluate(&job, &v, &A100) {
+    match evaluate(&job, &v, &hw) {
         Outcome::Ok { mfu, step_time_s, .. } => {
             println!("fits. predicted {:.2}% MFU, {step_time_s:.2}s/step", 100.0 * mfu)
         }
@@ -325,6 +390,26 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
             budget / gb
         ),
         Outcome::KernelUnavailable => println!("kernel unavailable for this layout"),
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let hw_names = args.get_list("hw", "a100,h100");
+    if hw_names.is_empty() {
+        bail!("--hw needs at least one preset name");
+    }
+    let hws: Vec<(String, plx::sim::Hardware)> = hw_names
+        .iter()
+        .map(|n| resolve_hw_name(n).map(|hw| (n.clone(), hw)))
+        .collect::<Result<_>>()?;
+    let presets = presets_from_args(args, "need --preset NAME or --all")?;
+    for p in presets {
+        // One deterministic sweep per hardware; the shared caches make
+        // repeated hardware lists (and repeated presets) nearly free.
+        let results: Vec<(String, plx::sweep::SweepResult)> =
+            hws.iter().map(|(n, hw)| (n.clone(), plx::sweep::run(&p, hw))).collect();
+        print!("{}", report::render_compare(&results));
     }
     Ok(())
 }

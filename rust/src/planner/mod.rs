@@ -495,6 +495,26 @@ mod tests {
     }
 
     #[test]
+    fn pruned_exhaustive_matches_reference_on_h100() {
+        // The admissible bounds are derived from the same hardware model
+        // they prune against, so branch-and-bound losslessness must hold
+        // on every registry entry, not just the paper testbed.
+        use crate::sim::H100;
+        for (name, nodes) in [("llama13b", 8), ("llama65b", 8)] {
+            let j = job(name, nodes);
+            let (pruned, stats) = plan_exhaustive_stats(&j, &H100).unwrap();
+            let reference = plan_exhaustive_reference(&j, &H100).unwrap();
+            assert_eq!(pruned.v.layout, reference.v.layout, "{name}@h100");
+            assert_eq!(
+                pruned.predicted_mfu.to_bits(),
+                reference.predicted_mfu.to_bits(),
+                "{name}@h100"
+            );
+            assert!(stats.evaluated < stats.total, "{name}@h100: bounds never fired");
+        }
+    }
+
+    #[test]
     fn plans_are_feasible() {
         for (name, nodes) in [("llama13b", 4), ("llama30b-8k", 8), ("llama65b", 16)] {
             let j = job(name, nodes);

@@ -21,11 +21,16 @@
 //! hits hand back an `Arc` to the stored [`Makespan`], so the steady
 //! path allocates nothing.
 //!
-//! Caveat: the `PLX_CAL_*` calibration overrides (see `sim::kernels::cal`)
-//! are read from the environment inside `evaluate`; they are part of the
-//! function but not of the key. The calibration harness sweeps them across
-//! *processes*, never within one, so this is safe in practice — call
-//! [`clear`] if a test ever mutates them mid-process.
+//! Every key that can observe a `PLX_CAL_*` calibration override or a
+//! `PLX_HW_*` hardware override incorporates the **resolved bit
+//! patterns**: the hardware constants enter as [`Hardware::bits`] and the
+//! calibration constants as [`crate::sim::kernels::CalKey`] (resolved per
+//! lookup, see [`crate::sim::kernels::cal_key`]). The makespan memo needs
+//! neither directly — everything its executor reads arrives through
+//! `OpCosts`, whose f64 bits are already the key. In-process calibration
+//! sweeps and multi-hardware sweeps are therefore sound by construction;
+//! `tests/cal_override.rs` (Rust) and the gating pysim `HW` suite pin the
+//! X → Y → X override round-trip bit-for-bit.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,6 +38,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::layout::{Job, Layout, StageKey, ValidLayout};
 use crate::sim::cluster::Hardware;
+use crate::sim::kernels::{cal_key, CalKey};
 use crate::sim::schedule::{Makespan, OpCosts, Schedule};
 use crate::sim::step_time::LayerCosts;
 use crate::sim::{evaluate, Outcome};
@@ -55,6 +61,10 @@ struct Key {
     gbs: usize,
     // Hardware constants, by bit pattern (f64 is not Hash/Eq).
     hw_bits: [u64; 8],
+    // Resolved PLX_CAL_* calibration bits — `evaluate` reads them from
+    // the environment, so they are part of the function and must be part
+    // of the key (see the module docs).
+    cal: CalKey,
     // The full layout, including the pipeline-schedule dimension (the
     // `sched` field hashes with the rest — 1F1B, GPipe, and every
     // interleaved v are distinct keys).
@@ -73,16 +83,8 @@ impl Key {
             gpus: job.cluster.gpus,
             gpus_per_node: job.cluster.gpus_per_node,
             gbs: job.gbs,
-            hw_bits: [
-                hw.peak_matmul_flops.to_bits(),
-                hw.hbm_bytes.to_bits(),
-                hw.hbm_bw.to_bits(),
-                hw.nvlink_bw.to_bits(),
-                hw.ib_bw.to_bits(),
-                hw.coll_latency_s.to_bits(),
-                hw.launch_overhead_s.to_bits(),
-                hw.workspace_bytes.to_bits(),
-            ],
+            hw_bits: hw.bits(),
+            cal: cal_key(),
             layout: *layout,
         }
     }
@@ -181,6 +183,11 @@ struct StKey {
     vocab: usize,
     seq: usize,
     hw_bits: [u64; 8],
+    // The stage reads PLX_CAL_EFF_BASE / MB_EXP / SHARD_EXP / BWD_FACTOR
+    // through `kernels::cal`; the full CalKey is included (DP_EXPOSED
+    // rides along — over-keying only costs sharing when that one var
+    // changes, never correctness).
+    cal: CalKey,
     stage: StageKey,
 }
 
@@ -193,16 +200,8 @@ impl StKey {
             ffn: job.arch.ffn,
             vocab: job.arch.vocab,
             seq: job.arch.seq,
-            hw_bits: [
-                hw.peak_matmul_flops.to_bits(),
-                hw.hbm_bytes.to_bits(),
-                hw.hbm_bw.to_bits(),
-                hw.nvlink_bw.to_bits(),
-                hw.ib_bw.to_bits(),
-                hw.coll_latency_s.to_bits(),
-                hw.launch_overhead_s.to_bits(),
-                hw.workspace_bytes.to_bits(),
-            ],
+            hw_bits: hw.bits(),
+            cal: cal_key(),
             stage: layout.stage_key(),
         }
     }
@@ -273,6 +272,9 @@ pub fn stage_len() -> usize {
 /// streams are a pure function of `(sched, pp, m)`, and the executor of
 /// those plus the five cost fields (by bit pattern — `f64` is not
 /// `Hash`/`Eq`). `vstages` is derived from `sched`, so it needs no slot.
+/// No `CalKey`/hardware slot either: calibration and hardware overrides
+/// reach the executor only *through* `OpCosts`, whose bits are already
+/// keyed — the memo observes overrides via the costs, never the env.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct MsKey {
     sched: Schedule,

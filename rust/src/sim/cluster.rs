@@ -1,6 +1,11 @@
 //! Hardware model (S7 numbers): NVIDIA DGX-A100 constants from §3 of the
 //! paper plus public datasheets. All simulator formulas draw peak rates
-//! and capacities from here so "what if H100?" is a one-struct change.
+//! and capacities from here, and hardware is a first-class sweep axis:
+//! [`hw_preset`] resolves a `--hw <name>` CLI value to a preset, every
+//! memo key hashes the hardware's bit patterns ([`Hardware::bits`]), and
+//! [`Hardware::from_overrides`] applies `PLX_HW_*` per-field env
+//! overrides (the hardware-side mirror of the `PLX_CAL_*` calibration
+//! hooks — see docs/hardware.md for fields, numbers, and sources).
 
 /// Accelerator + fabric constants.
 #[derive(Debug, Clone, Copy)]
@@ -36,7 +41,12 @@ pub const A100: Hardware = Hardware {
     workspace_bytes: 5.0 * 1e9,
 };
 
-/// H100 SXM for the "future work" ablation (989 TFLOP/s bf16, 3.35 TB/s).
+/// DGX H100: SXM5 silicon (989.4 TFLOP/s dense bf16, 80 GB HBM3 at
+/// 3.35 TB/s peak — ~2.6 TB/s achievable, same achievable/peak ratio the
+/// A100 numbers use), NVLink4 (900 GB/s aggregate, ~450 GB/s per
+/// collective direction), and NDR-400 InfiniBand (50 GB/s per GPU).
+/// Latency/launch/workspace constants carry over from the A100 testbed —
+/// they are host-side, not accelerator-side.
 pub const H100: Hardware = Hardware {
     peak_matmul_flops: 989.4e12,
     hbm_bytes: 80.0 * 1e9,
@@ -47,6 +57,66 @@ pub const H100: Hardware = Hardware {
     launch_overhead_s: 4.5e-6,
     workspace_bytes: 5.0 * 1e9,
 };
+
+/// The hardware registry behind the `--hw` CLI axis: every named preset,
+/// in the order error messages and docs list them.
+pub const HW_PRESETS: [(&str, Hardware); 2] = [("a100", A100), ("h100", H100)];
+
+/// Look up a hardware preset by its `--hw` name.
+pub fn hw_preset(name: &str) -> Option<Hardware> {
+    HW_PRESETS.iter().find(|(n, _)| *n == name).map(|(_, hw)| *hw)
+}
+
+/// Comma-separated preset names for error messages (`"a100, h100"`).
+pub fn hw_preset_names() -> String {
+    HW_PRESETS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+}
+
+/// [`hw_preset`] with the clean CLI error: unknown names list every
+/// known preset instead of failing bare.
+pub fn parse_hw(name: &str) -> Result<Hardware, String> {
+    hw_preset(name)
+        .ok_or_else(|| format!("unknown hardware '{name}' (known presets: {})", hw_preset_names()))
+}
+
+impl Hardware {
+    /// The constants as f64 bit patterns, field order fixed — the form
+    /// every memo key hashes (`f64` is not `Hash`/`Eq`), so two hardware
+    /// models alias in a cache iff they are bit-identical.
+    pub fn bits(&self) -> [u64; 8] {
+        [
+            self.peak_matmul_flops.to_bits(),
+            self.hbm_bytes.to_bits(),
+            self.hbm_bw.to_bits(),
+            self.nvlink_bw.to_bits(),
+            self.ib_bw.to_bits(),
+            self.coll_latency_s.to_bits(),
+            self.launch_overhead_s.to_bits(),
+            self.workspace_bytes.to_bits(),
+        ]
+    }
+
+    /// Apply `PLX_HW_*` per-field env overrides to this preset — the
+    /// hardware mirror of the `PLX_CAL_*` calibration hooks. Unset (or
+    /// unparsable) variables keep the preset's value, so with a clean
+    /// environment this is the identity and every output byte is
+    /// unchanged. Overridden values flow into [`Hardware::bits`] and
+    /// therefore into every memo key, so in-process hardware sweeps are
+    /// sound by construction.
+    pub fn from_overrides(&self) -> Hardware {
+        use crate::sim::kernels::cal;
+        Hardware {
+            peak_matmul_flops: cal("PLX_HW_PEAK_MATMUL_FLOPS", self.peak_matmul_flops),
+            hbm_bytes: cal("PLX_HW_HBM_BYTES", self.hbm_bytes),
+            hbm_bw: cal("PLX_HW_HBM_BW", self.hbm_bw),
+            nvlink_bw: cal("PLX_HW_NVLINK_BW", self.nvlink_bw),
+            ib_bw: cal("PLX_HW_IB_BW", self.ib_bw),
+            coll_latency_s: cal("PLX_HW_COLL_LATENCY_S", self.coll_latency_s),
+            launch_overhead_s: cal("PLX_HW_LAUNCH_OVERHEAD_S", self.launch_overhead_s),
+            workspace_bytes: cal("PLX_HW_WORKSPACE_BYTES", self.workspace_bytes),
+        }
+    }
+}
 
 /// Ring all-reduce time for `bytes` over `n` ranks at `bw` bytes/s.
 pub fn allreduce_time(bytes: f64, n: usize, bw: f64, latency: f64) -> f64 {
@@ -106,5 +176,59 @@ mod tests {
         assert_eq!(A100.peak_matmul_flops, 312e12);
         assert_eq!(A100.hbm_bytes, 80e9);
         assert!(A100.nvlink_bw > A100.ib_bw);
+    }
+
+    #[test]
+    fn h100_constants_bit_exact() {
+        // The preset is a public contract (the table2_h100 golden and the
+        // pysim mirror both depend on these exact bits).
+        assert_eq!(H100.peak_matmul_flops.to_bits(), 989.4e12_f64.to_bits());
+        assert_eq!(H100.hbm_bytes.to_bits(), (80.0 * 1e9_f64).to_bits());
+        assert_eq!(H100.hbm_bw.to_bits(), 2.6e12_f64.to_bits());
+        assert_eq!(H100.nvlink_bw.to_bits(), 450e9_f64.to_bits());
+        assert_eq!(H100.ib_bw.to_bits(), 50e9_f64.to_bits());
+        // Host-side constants carry over from the A100 testbed.
+        assert_eq!(H100.coll_latency_s.to_bits(), A100.coll_latency_s.to_bits());
+        assert_eq!(H100.launch_overhead_s.to_bits(), A100.launch_overhead_s.to_bits());
+        assert_eq!(H100.workspace_bytes.to_bits(), A100.workspace_bytes.to_bits());
+        // Generation ordering: more FLOPs AND more bandwidth per GPU.
+        assert!(H100.peak_matmul_flops > A100.peak_matmul_flops);
+        assert!(H100.hbm_bw > A100.hbm_bw);
+        assert!(H100.nvlink_bw > A100.nvlink_bw);
+        assert!(H100.ib_bw > A100.ib_bw);
+    }
+
+    #[test]
+    fn hw_preset_registry_resolves_and_rejects() {
+        assert_eq!(hw_preset("a100").unwrap().bits(), A100.bits());
+        assert_eq!(hw_preset("h100").unwrap().bits(), H100.bits());
+        assert!(hw_preset("b200").is_none());
+        assert_eq!(parse_hw("h100").unwrap().bits(), H100.bits());
+        // The satellite contract: the error names every known preset.
+        let err = parse_hw("tpu-v5").unwrap_err();
+        assert!(err.contains("tpu-v5"), "{err}");
+        for (name, _) in HW_PRESETS {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn from_overrides_is_identity_without_env() {
+        // With no PLX_HW_* set, the override hook must not move a single
+        // bit — this is what keeps default output byte-identical. (The
+        // override path itself is exercised in tests/cal_override.rs,
+        // which owns a whole process and can mutate the environment.)
+        assert_eq!(A100.from_overrides().bits(), A100.bits());
+        assert_eq!(H100.from_overrides().bits(), H100.bits());
+    }
+
+    #[test]
+    fn bits_distinguish_presets_fieldwise() {
+        let (a, h) = (A100.bits(), H100.bits());
+        assert_ne!(a, h);
+        // Shared host-side fields still agree slot-for-slot.
+        assert_eq!(a[5], h[5]);
+        assert_eq!(a[6], h[6]);
+        assert_eq!(a[7], h[7]);
     }
 }

@@ -65,6 +65,45 @@ pub(crate) fn cal(name: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
+/// Shipped calibration defaults for the `dense_matmul_eff` shape model
+/// (named so [`CAL_VARS`] and the expressions below share one value).
+pub const EFF_BASE: f64 = 0.74;
+pub const MB_EXP: f64 = 0.12;
+pub const SHARD_EXP: f64 = 0.22;
+
+/// Every `PLX_CAL_*` override the simulator reads, with its shipped
+/// default — the complete calibration surface. [`cal_key`] resolves this
+/// list against the process environment; anything added here is
+/// automatically part of every memo key.
+pub const CAL_VARS: [(&str, f64); 5] = [
+    ("PLX_CAL_EFF_BASE", EFF_BASE),
+    ("PLX_CAL_MB_EXP", MB_EXP),
+    ("PLX_CAL_SHARD_EXP", SHARD_EXP),
+    ("PLX_CAL_BWD_FACTOR", crate::sim::step_time::BWD_FACTOR),
+    ("PLX_CAL_DP_EXPOSED", crate::sim::step_time::DP_EXPOSED_FRACTION),
+];
+
+/// The resolved calibration constants as f64 bit patterns, in
+/// [`CAL_VARS`] order. Two override sets alias iff every resolved value
+/// is bit-identical — in which case the simulator is the same function,
+/// so sharing a memo entry is exactly right. Slots are positional, so
+/// overriding *different* variables to the same value can never collide
+/// (`tests/cal_override.rs` and the pysim `HW` suite pin this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CalKey(pub [u64; CAL_VARS.len()]);
+
+/// Resolve the current process environment into a [`CalKey`]. Called per
+/// memo lookup (a handful of `getenv`s — negligible next to a single
+/// layout evaluation), so a test or harness that mutates `PLX_CAL_*`
+/// mid-process gets correct, distinct cache entries with no `clear()`.
+pub fn cal_key() -> CalKey {
+    let mut bits = [0u64; CAL_VARS.len()];
+    for (i, (name, default)) in CAL_VARS.iter().enumerate() {
+        bits[i] = cal(name, *default).to_bits();
+    }
+    CalKey(bits)
+}
+
 /// Dense (non-attention) matmul efficiency for one GPU's shard.
 ///
 /// Efficiency is driven by the *per-GPU GEMM workload*
@@ -73,7 +112,7 @@ pub(crate) fn cal(name: &str, default: f64) -> f64 {
 /// restores it — this is why the paper's (mb=2, tp=2) rows beat
 /// (mb=1, tp=2) on 13B but mb=1 wins whenever tp stays low.
 pub fn dense_matmul_eff(tp: usize, mb: usize, seq: usize, hidden: usize) -> f64 {
-    let base = cal("PLX_CAL_EFF_BASE", 0.74);
+    let base = cal("PLX_CAL_EFF_BASE", EFF_BASE);
     // GEMM-shape penalty: TP shrinks each weight shard's k/n dims below
     // the well-tiled reference (5120, the 13B hidden). A longer sequence
     // makes the GEMM m-dim taller and compensates strongly (~sqrt) —
@@ -81,10 +120,10 @@ pub fn dense_matmul_eff(tp: usize, mb: usize, seq: usize, hidden: usize) -> f64 
     // micro-batch compensates only weakly (calibrated: the paper's
     // (mb=2, tp=2) rows recover ~a third of the tp=2 penalty at 2k).
     let seq_comp = (seq as f64 / 2048.0).sqrt();
-    let mb_comp = (mb as f64).powf(cal("PLX_CAL_MB_EXP", 0.12));
+    let mb_comp = (mb as f64).powf(cal("PLX_CAL_MB_EXP", MB_EXP));
     let shape = ((hidden as f64 / tp as f64 / 5120.0) * seq_comp * mb_comp)
         .min(1.0)
-        .powf(cal("PLX_CAL_SHARD_EXP", 0.22));
+        .powf(cal("PLX_CAL_SHARD_EXP", SHARD_EXP));
     base * shape
 }
 
@@ -145,6 +184,23 @@ mod tests {
         // RMS kernel shrinks elementwise traffic only
         assert!(perf(Kernel::Flash2Rms).norm_bytes_per_elem < perf(Kernel::Flash2).norm_bytes_per_elem);
         assert_eq!(e(Kernel::Flash2Rms), e(Kernel::Flash2));
+    }
+
+    #[test]
+    fn cal_key_defaults_are_the_shipped_calibration() {
+        // With a clean environment the key is exactly the default bits —
+        // the value every memo entry computed before this PR implicitly
+        // assumed. (Override sensitivity is pinned in
+        // tests/cal_override.rs, which owns its process environment.)
+        let k = cal_key();
+        for (i, (name, default)) in CAL_VARS.iter().enumerate() {
+            assert_eq!(k.0[i], default.to_bits(), "{name}");
+        }
+        // Stable across calls, and equal keys hash/compare equal.
+        assert_eq!(k, cal_key());
+        // Positional slots: two defaults sharing a value still occupy
+        // distinct slots, so distinct-variable overrides cannot alias.
+        assert_eq!(CAL_VARS.len(), 5);
     }
 
     #[test]

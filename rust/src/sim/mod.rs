@@ -13,7 +13,7 @@ pub mod mfu;
 pub mod schedule;
 pub mod step_time;
 
-pub use cluster::{Hardware, A100, H100};
+pub use cluster::{hw_preset, hw_preset_names, parse_hw, Hardware, A100, H100, HW_PRESETS};
 pub use memory::MemoryBreakdown;
 pub use schedule::Schedule;
 pub use step_time::StepBreakdown;

@@ -660,10 +660,10 @@ mod tests {
         // The satellite requirement: routing DP_EXPOSED_FRACTION and
         // BWD_FACTOR through the env-override hook must not move the
         // defaults (the shipped calibration). The override path itself is
-        // exercised by the calibration harness across PROCESSES (see the
-        // cache-caveat note in sim::cache) — deliberately not by mutating
-        // this process's environment, which would race other tests'
-        // getenv calls.
+        // exercised by tests/cal_override.rs, which owns a whole process
+        // (memo keys now carry the resolved calibration bits, so mid-run
+        // mutation is cache-sound there) — deliberately not here, where
+        // it would race other lib tests' getenv calls.
         assert_eq!(cal("PLX_CAL_DP_EXPOSED", DP_EXPOSED_FRACTION), 0.35);
         assert_eq!(cal("PLX_CAL_BWD_FACTOR", BWD_FACTOR), 2.0);
         // Unset names fall back to the passed default verbatim.

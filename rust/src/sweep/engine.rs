@@ -384,6 +384,29 @@ mod tests {
     }
 
     #[test]
+    fn parallel_equals_serial_on_h100() {
+        // The hardware axis through the parallel engine: H100 rows must
+        // scatter back into the same slots the serial path computes, and
+        // the evaluate cache must never hand an A100 outcome to an H100
+        // sweep (distinct hw bits = distinct keys).
+        use crate::sim::H100;
+        let p = &main_presets()[0];
+        let par = run_jobs(p, &H100, 4);
+        let ser = run_jobs(p, &H100, 1);
+        assert_rows_identical(&ser, &par);
+        let a100 = run_jobs(p, &A100, 1);
+        let mut diverged = 0usize;
+        for (h, a) in ser.rows.iter().zip(&a100.rows) {
+            assert_eq!(h.v.layout, a.v.layout);
+            if let (Some(th), Some(ta)) = (h.outcome.step_time(), a.outcome.step_time()) {
+                assert!(th < ta, "{:?}: H100 step {th} >= A100 {ta}", h.v.layout);
+                diverged += 1;
+            }
+        }
+        assert!(diverged > 0, "no runnable rows shared between the hardware sweeps");
+    }
+
+    #[test]
     fn rendered_reports_are_byte_identical_across_jobs() {
         // The user-visible guarantee: `plx sweep --jobs N` output bytes.
         let p = &main_presets()[0];

@@ -68,6 +68,60 @@ pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
     out
 }
 
+/// Side-by-side multi-hardware report for one preset (`plx compare`):
+/// one row per hardware with its best runnable layout and the MFU delta
+/// (in points) against the first listed hardware. Every number comes
+/// from the deterministic sweep engine, so the rendered bytes are
+/// independent of `--jobs` like every other report.
+pub fn render_compare(results: &[(String, SweepResult)]) -> String {
+    let first = &results.first().expect("compare needs at least one hardware").1;
+    let base_mfu = first.best().and_then(|r| r.outcome.mfu());
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(hw_name, r)| match r.best() {
+            Some(best) => {
+                let l = best.layout();
+                let mfu = best.outcome.mfu().unwrap();
+                let delta = match base_mfu {
+                    // The baseline row prints +0.00 so the column is
+                    // self-describing (and stays byte-stable).
+                    Some(b) => format!("{:+.2}", 100.0 * (mfu - b)),
+                    None => "—".to_string(),
+                };
+                vec![
+                    hw_name.clone(),
+                    best.layout().annotation(),
+                    l.kernel.label().to_string(),
+                    if l.sp { "True" } else { "False" }.to_string(),
+                    table::pct(mfu),
+                    table::secs(best.outcome.step_time().unwrap()),
+                    delta,
+                ]
+            }
+            None => vec![
+                hw_name.clone(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                String::new(),
+                "no runnable layout".into(),
+                "—".into(),
+            ],
+        })
+        .collect();
+    let delta_header = format!("MFU vs {}", results[0].0);
+    let headers: [&str; 7] =
+        ["Hardware", "Best Layout", "Kernel", "Seq Par", "MFU", "Step Time", &delta_header];
+    format!(
+        "# compare — {} ({} on {} GPUs, GBS {}) across hardware\n{}",
+        first.preset_name,
+        first.job.arch.name,
+        first.job.cluster.gpus,
+        first.job.gbs,
+        table::render(&headers, &rows)
+    )
+}
+
 /// CSV form (for plotting / EXPERIMENTS.md appendices).
 pub fn to_csv(result: &SweepResult) -> String {
     let headers = [
@@ -125,6 +179,27 @@ mod tests {
         let csv = to_csv(&r);
         assert_eq!(csv.lines().count(), r.rows.len() + 1);
         assert!(csv.lines().next().unwrap().contains("sched"));
+    }
+
+    #[test]
+    fn compare_report_is_deterministic_and_lists_every_hardware() {
+        use crate::sim::H100;
+        use crate::sweep::engine::run_jobs;
+        let p = &main_presets()[0];
+        let render_with = |jobs: usize| {
+            render_compare(&[
+                ("a100".to_string(), run_jobs(p, &A100, jobs)),
+                ("h100".to_string(), run_jobs(p, &H100, jobs)),
+            ])
+        };
+        // The satellite contract: `plx compare` bytes are --jobs-independent.
+        let serial = render_with(1);
+        assert_eq!(serial, render_with(6));
+        assert!(serial.contains("a100") && serial.contains("h100"), "{serial}");
+        assert!(serial.contains("MFU vs a100"));
+        // The baseline row's delta is identically +0.00.
+        let base_row = serial.lines().find(|l| l.starts_with("a100")).unwrap();
+        assert!(base_row.trim_end().ends_with("+0.00"), "{base_row}");
     }
 
     #[test]

@@ -102,6 +102,17 @@ impl Args {
         }
     }
 
+    /// Parse a comma-separated option (`--hw a100,h100`,
+    /// `--schedule 1f1b,gpipe`) into trimmed, non-empty items; `default`
+    /// is parsed the same way when the option is absent.
+    pub fn get_list(&self, name: &str, default: &str) -> Vec<String> {
+        self.get_or(name, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -112,7 +123,7 @@ mod tests {
     use super::*;
 
     const SPEC: Spec = Spec {
-        options: &["model", "steps", "lr", "jobs"],
+        options: &["model", "steps", "lr", "jobs", "hw"],
         flags: &["verbose", "dry-run"],
     };
 
@@ -152,6 +163,16 @@ mod tests {
         assert_eq!(parse(&["--jobs", "0"]).get_jobs().unwrap(), Some(0));
         assert!(parse(&["--jobs", "many"]).get_jobs().is_err());
         assert!(parse(&["--jobs", "-2"]).get_jobs().is_err());
+    }
+
+    #[test]
+    fn list_option_splits_trims_and_defaults() {
+        let parse = |argv: &[&str]| Args::parse(&self::argv(argv), &SPEC).unwrap();
+        assert_eq!(parse(&[]).get_list("hw", "a100"), vec!["a100"]);
+        assert_eq!(parse(&["--hw", "a100,h100"]).get_list("hw", "a100"), vec!["a100", "h100"]);
+        assert_eq!(parse(&["--hw", " h100 , a100 "]).get_list("hw", "a100"), vec!["h100", "a100"]);
+        // Empty segments are dropped, not returned as empty names.
+        assert_eq!(parse(&["--hw", "h100,,"]).get_list("hw", "a100"), vec!["h100"]);
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! Calibration/hardware override round-trip: the property the old
+//! `sim::cache` caveat made untestable.
+//!
+//! Before this PR, `PLX_CAL_*` env overrides were read inside memoized
+//! stages but were not part of any memo key, so mutating them
+//! mid-process silently served stale entries. Now every key that can
+//! observe an override carries the resolved bit patterns
+//! (`kernels::CalKey` + `Hardware::bits`), which makes the following
+//! testable: evaluating under override set X, then Y, then X again
+//! returns results bit-identical to a cold process at each step — "cold
+//! process" being the retained memo-free baseline pipeline
+//! (`evaluate_baseline` / `step_time_baseline`), which recomputes every
+//! expression from the live environment on every call.
+//!
+//! This binary owns its process, so mutating the environment is safe;
+//! everything lives in ONE `#[test]` because libtest runs test fns of a
+//! binary on concurrent threads and `std::env` is process-global.
+
+use plx::layout::{validate, Job, Kernel, Layout, Schedule};
+use plx::model::arch::preset;
+use plx::sim::kernels::{cal_key, CAL_VARS};
+use plx::sim::{cache, evaluate_baseline, step_time, A100};
+use plx::topo::Cluster;
+
+/// The Ok payload's bits; panics on non-Ok (every probe layout runs —
+/// calibration overrides move time, never memory).
+fn ok_bits(o: &plx::sim::Outcome) -> (u64, u64) {
+    match o {
+        plx::sim::Outcome::Ok { step_time_s, mfu, .. } => (step_time_s.to_bits(), mfu.to_bits()),
+        other => panic!("probe layout must be runnable, got {other:?}"),
+    }
+}
+
+fn breakdown_bits(b: &plx::sim::StepBreakdown) -> [u64; 6] {
+    [
+        b.compute.to_bits(),
+        b.tp_comm.to_bits(),
+        b.pp_comm.to_bits(),
+        b.bubble.to_bits(),
+        b.dp_comm.to_bits(),
+        b.optimizer.to_bits(),
+    ]
+}
+
+fn clear_override_env() {
+    for (name, _) in CAL_VARS {
+        std::env::remove_var(name);
+    }
+    for name in [
+        "PLX_HW_PEAK_MATMUL_FLOPS",
+        "PLX_HW_HBM_BYTES",
+        "PLX_HW_HBM_BW",
+        "PLX_HW_NVLINK_BW",
+        "PLX_HW_IB_BW",
+        "PLX_HW_COLL_LATENCY_S",
+        "PLX_HW_LAUNCH_OVERHEAD_S",
+        "PLX_HW_WORKSPACE_BYTES",
+    ] {
+        std::env::remove_var(name);
+    }
+}
+
+#[test]
+fn override_sets_are_memo_keyed_and_roundtrip_bit_identical() {
+    clear_override_env();
+    let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+    // tp > 1 so EFF_BASE/SHARD_EXP matter, pp > 1 so the makespan memo is
+    // in the loop, dp crossing nodes so DP terms see the IB bandwidth.
+    let v = validate(
+        &job,
+        &Layout {
+            tp: 2, pp: 2, mb: 1, ckpt: false, kernel: Kernel::Flash2, sp: false,
+            sched: Schedule::OneF1B,
+        },
+    )
+    .unwrap();
+
+    // The memoized production path vs the memo-free "cold process"
+    // oracle, under whatever environment is currently set.
+    let probe = |ctx: &str| {
+        let hot = cache::evaluate_cached(&job, &v, &A100);
+        let cold = evaluate_baseline(&job, &v, &A100);
+        assert_eq!(ok_bits(&hot), ok_bits(&cold), "{ctx}: memoized != cold process");
+        // Same property one level down: the stage-memo + makespan-memo
+        // pricing path vs the uncached monolithic construction.
+        let hot_st = step_time::step_time(&job, &v, &A100);
+        let cold_st = step_time::step_time_baseline(&job, &v, &A100);
+        assert_eq!(
+            breakdown_bits(&hot_st),
+            breakdown_bits(&cold_st),
+            "{ctx}: memoized step time != cold process"
+        );
+        ok_bits(&hot)
+    };
+
+    let set_y = || {
+        std::env::set_var("PLX_CAL_EFF_BASE", "0.80");
+        std::env::set_var("PLX_CAL_BWD_FACTOR", "2.5");
+    };
+
+    // X (defaults) -> Y -> X -> Y: bit-identical to cold at every step,
+    // and the X repeat returns the ORIGINAL X bits (the Y entries cannot
+    // shadow them — distinct CalKey, distinct memo rows).
+    let key_x = cal_key();
+    let x0 = probe("X cold");
+    set_y();
+    let key_y = cal_key();
+    assert_ne!(key_x, key_y, "override set must change the calibration key");
+    let y0 = probe("Y first");
+    assert_ne!(x0, y0, "EFF_BASE/BWD_FACTOR overrides must move the outcome");
+    clear_override_env();
+    assert_eq!(cal_key(), key_x, "clearing the env must restore the X key");
+    let x1 = probe("X again (memo hit)");
+    assert_eq!(x0, x1, "X re-evaluation served different bits after Y ran");
+    set_y();
+    let y1 = probe("Y again (memo hit)");
+    assert_eq!(y0, y1, "Y re-evaluation served different bits after X ran");
+    clear_override_env();
+
+    // Positional non-aliasing: overriding DIFFERENT variables to the SAME
+    // value yields different keys (slots are per-variable, not a value
+    // soup), so two override sets can never share a memo entry.
+    std::env::set_var("PLX_CAL_EFF_BASE", "0.5");
+    let key_a = cal_key();
+    clear_override_env();
+    std::env::set_var("PLX_CAL_MB_EXP", "0.5");
+    let key_b = cal_key();
+    clear_override_env();
+    assert_ne!(key_a, key_b, "distinct variables at one value must not alias");
+    assert_ne!(key_a, key_x);
+    assert_ne!(key_b, key_x);
+
+    // Hardware overrides take the same round trip: PLX_HW_* flows into
+    // Hardware::bits, which every memo key already hashes.
+    let hw_x = A100.from_overrides();
+    assert_eq!(hw_x.bits(), A100.bits(), "no env set: override hook must be identity");
+    std::env::set_var("PLX_HW_IB_BW", "40e9");
+    let hw_y = A100.from_overrides();
+    assert_eq!(hw_y.ib_bw.to_bits(), 40e9_f64.to_bits());
+    let hot = cache::evaluate_cached(&job, &v, &hw_y);
+    let cold = evaluate_baseline(&job, &v, &hw_y);
+    assert_eq!(ok_bits(&hot), ok_bits(&cold), "overridden hardware: memoized != cold");
+    assert_ne!(ok_bits(&hot), x0, "faster IB must move the DP-exposed terms");
+    std::env::remove_var("PLX_HW_IB_BW");
+    assert_eq!(A100.from_overrides().bits(), A100.bits());
+    let x2 = probe("X after hardware override");
+    assert_eq!(x0, x2);
+}

@@ -5,6 +5,7 @@
 //! loading, shape checks, numeric behaviour of fwd/bwd, ZeRO-1 updates,
 //! and failure injection (corrupted artifacts, wrong shapes).
 
+use plx::config::RunConfig;
 use plx::coordinator::collective::Group;
 use plx::coordinator::init::init_flat_params;
 use plx::coordinator::zero::Zero1;
@@ -142,6 +143,35 @@ fn zero1_two_ranks_equal_unsharded_adamw() {
             );
         }
     }
+}
+
+#[test]
+fn config_hw_key_roundtrips_through_file_and_args() {
+    // The `hw` key follows the same file -> config -> CLI-override path
+    // as every trainer knob, and resolves to the exact registry bits
+    // (needs no artifacts, unlike the PJRT tests around it).
+    let dir = std::env::temp_dir().join("plx_roundtrip_hw");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    std::fs::write(&path, r#"{"model": "tiny", "steps": 3, "hw": "h100"}"#).unwrap();
+    let cfg = RunConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.hw, "h100");
+    cfg.validate().unwrap();
+    assert_eq!(cfg.hardware().unwrap().bits(), plx::sim::H100.bits());
+    // Re-write what the loaded config holds; a second load must agree
+    // (the round-trip half).
+    std::fs::write(&path, format!(r#"{{"hw": "{}"}}"#, cfg.hw)).unwrap();
+    let again = RunConfig::from_file(&path).unwrap();
+    assert_eq!(again.hw, cfg.hw);
+    assert_eq!(
+        again.hardware().unwrap().bits(),
+        cfg.hardware().unwrap().bits()
+    );
+    // Unknown names fail loudly, listing the registry.
+    std::fs::write(&path, r#"{"hw": "trainium"}"#).unwrap();
+    let bad = RunConfig::from_file(&path).unwrap();
+    let err = bad.validate().unwrap_err().to_string();
+    assert!(err.contains("trainium") && err.contains("a100") && err.contains("h100"), "{err}");
 }
 
 #[test]

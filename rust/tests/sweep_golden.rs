@@ -200,6 +200,18 @@ fn table3_matches_checked_in_golden() {
 }
 
 #[test]
+fn table2_h100_matches_checked_in_golden() {
+    // The hardware axis's end-to-end gate: `plx table 2 --hw h100` is
+    // pinned byte-for-byte next to the A100 fixtures. Regenerate with
+    // `python3 tools/gen_golden.py --hw h100` (or PLX_UPDATE_GOLDEN=1).
+    assert_matches_golden(
+        "table2_h100.txt",
+        "plx table 2 --hw h100",
+        &table2::render(&H100),
+    );
+}
+
+#[test]
 fn schedule_dimension_sweeps_deterministically() {
     // The new layout dimension through the whole engine: widen a paper
     // preset with interleaved-1F1B, check parallel/serial identity and

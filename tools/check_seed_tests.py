@@ -4,7 +4,7 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Four suites, reported separately:
+Five suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
@@ -13,12 +13,17 @@ Four suites, reported separately:
     rescanning reference (allocation-free schedule pipeline);
   * the FACTORED suite — factored stage/combine bitwise-equal to the
     monolithic spec, bound admissibility, lazy-enumeration parity, and
-    pruned-vs-unpruned exhaustive-plan identity.
+    pruned-vs-unpruned exhaustive-plan identity;
+  * the HW suite — the H100 preset bit-exact, the --hw registry and
+    PLX_HW_* override hooks, H100 sweep/planner parity, and the
+    calibration-keyed memo property (X -> Y -> X override round trip
+    bit-identical to a cold evaluation at every step).
 
 Run: python3 tools/check_seed_tests.py
 """
 
 import math
+import os
 import sys
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
@@ -1127,6 +1132,193 @@ FACTORED_CHECKS = [
 ]
 
 
+# ------------------------------------------------------------------ HW suite
+# Mirrors the Rust tests added with the hardware sweep axis + the
+# calibration-keyed memos: the H100 preset pinned bit-exact, the --hw
+# registry/override hooks, H100 sweep expectations restated
+# expression-for-expression, and the memo-key sensitivity property the
+# old sim::cache caveat made untestable (X -> Y -> X override round trip
+# bit-identical to a cold, cache-free evaluation at every step).
+
+_HW_ENV = ([n for n, _ in CAL_VARS]
+           + ["PLX_HW_" + f.upper() for f in HW_FIELDS])
+
+
+def _clear_hw_env():
+    for name in _HW_ENV:
+        os.environ.pop(name, None)
+
+
+def t_hw_h100_constants_bit_exact():
+    # rust: cluster::h100_constants_bit_exact — the preset is a public
+    # contract (the table2_h100 golden depends on these exact bits).
+    expect = (989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9)
+    got = hw_bits(H100)
+    for field, want, g in zip(HW_FIELDS, expect, got):
+        assert g == _bits(want), f"{field}: {g} != bits({want})"
+    # Host-side constants carry over from A100; accelerator fields scale up.
+    a = hw_bits(A100)
+    assert got[5:] == a[5:], "latency/launch/workspace must match A100"
+    assert H100.peak_matmul_flops > A100.peak_matmul_flops
+    assert H100.hbm_bw > A100.hbm_bw and H100.nvlink_bw > A100.nvlink_bw
+    assert H100.ib_bw > A100.ib_bw
+
+
+def t_hw_preset_registry():
+    # rust: cluster::hw_preset_registry_resolves_and_rejects
+    assert hw_bits(hw_preset("a100")) == hw_bits(A100)
+    assert hw_bits(hw_preset("h100")) == hw_bits(H100)
+    assert hw_preset("b200") is None
+    assert [n for n, _ in HW_PRESETS] == ["a100", "h100"]
+
+
+def t_hw_from_overrides_identity_and_override():
+    # rust: cluster::from_overrides_is_identity_without_env + the override
+    # half of tests/cal_override.rs.
+    _clear_hw_env()
+    try:
+        assert hw_bits(hardware_from_overrides(A100)) == hw_bits(A100)
+        assert hw_bits(hardware_from_overrides(H100)) == hw_bits(H100)
+        os.environ["PLX_HW_IB_BW"] = "40e9"
+        hw = hardware_from_overrides(A100)
+        assert _bits(hw.ib_bw) == _bits(40e9)
+        # Only the overridden field moves.
+        for f in HW_FIELDS:
+            if f != "ib_bw":
+                assert _bits(getattr(hw, f)) == _bits(getattr(A100, f)), f
+    finally:
+        _clear_hw_env()
+
+
+def t_hw_cal_key_sensitivity():
+    # rust: kernels::cal_key_defaults_are_the_shipped_calibration + the
+    # memo-key sensitivity satellite: two different calibration override
+    # sets can never alias to one memo entry.
+    _clear_hw_env()
+    try:
+        base = cal_key()
+        assert base == tuple(_bits(d) for _n, d in CAL_VARS)
+        seen = {base}
+        # A spread of override sets, including different variables pinned
+        # to the SAME value (positional slots must keep them distinct).
+        cases = [
+            {"PLX_CAL_EFF_BASE": "0.5"},
+            {"PLX_CAL_MB_EXP": "0.5"},
+            {"PLX_CAL_SHARD_EXP": "0.5"},
+            {"PLX_CAL_BWD_FACTOR": "0.5"},
+            {"PLX_CAL_DP_EXPOSED": "0.5"},
+            {"PLX_CAL_EFF_BASE": "0.5", "PLX_CAL_MB_EXP": "0.5"},
+            {"PLX_CAL_EFF_BASE": "0.8", "PLX_CAL_BWD_FACTOR": "2.5"},
+        ]
+        for env in cases:
+            _clear_hw_env()
+            os.environ.update(env)
+            k = cal_key()
+            assert k not in seen, f"{env} aliased an earlier override set"
+            seen.add(k)
+        # An unparsable override resolves to the default — same function,
+        # same key, correctly shared.
+        _clear_hw_env()
+        os.environ["PLX_CAL_EFF_BASE"] = "not-a-number"
+        assert cal_key() == base
+    finally:
+        _clear_hw_env()
+
+
+def t_hw_override_roundtrip_bit_identical():
+    # rust: tests/cal_override.rs — evaluating under override set X, then
+    # Y, then X again returns bit-identical results to a cold process at
+    # each step. "Cold" here is evaluate_unfactored: no memo anywhere on
+    # its path, every expression recomputed from the live environment.
+    _clear_hw_env()
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    v = validate(job, Layout(2, 2, 1, False, FLASH2, False))
+
+    def probe(ctx):
+        hot = evaluate(job, v, A100)          # memoized production path
+        cold = evaluate_unfactored(job, v, A100)  # cache-free oracle
+        assert hot.kind == cold.kind == "ok", ctx
+        assert _bits(hot.step_time_s) == _bits(cold.step_time_s), ctx
+        assert _bits(hot.mfu) == _bits(cold.mfu), ctx
+        return (_bits(hot.step_time_s), _bits(hot.mfu))
+
+    try:
+        x0 = probe("X cold")
+        os.environ["PLX_CAL_EFF_BASE"] = "0.80"
+        os.environ["PLX_CAL_BWD_FACTOR"] = "2.5"
+        y0 = probe("Y first")
+        assert y0 != x0, "overrides must move the outcome"
+        _clear_hw_env()
+        assert probe("X again") == x0, "X served stale bits after Y ran"
+        os.environ["PLX_CAL_EFF_BASE"] = "0.80"
+        os.environ["PLX_CAL_BWD_FACTOR"] = "2.5"
+        assert probe("Y again") == y0, "Y served stale bits after X ran"
+    finally:
+        _clear_hw_env()
+
+
+def t_hw_h100_sweep_parity():
+    # rust: engine::parallel_equals_serial_on_h100 (the hardware-ordering
+    # half — pysim has no thread pool) + sweep expectations under --hw
+    # h100: same layout grid, every shared runnable row strictly faster,
+    # paper-shaped best row.
+    p = main_presets()[0]
+    ra, rh = run(p, A100), run(p, H100)
+    assert len(ra.rows) == len(rh.rows)
+    faster = 0
+    for a, h in zip(ra.rows, rh.rows):
+        assert a.v.layout == h.v.layout, "hardware must not change the grid"
+        ta, th = a.outcome.step_time_opt(), h.outcome.step_time_opt()
+        if ta is not None and th is not None:
+            assert th < ta, f"{a.v.layout}: H100 step {th} >= A100 {ta}"
+            faster += 1
+    assert faster > 0, "no runnable rows shared between hardware sweeps"
+    best = rh.best()
+    assert best.layout().mb == 1 and not best.layout().ckpt, best.layout()
+    # More FLOPs per byte of bandwidth: H100 MFU at the best layout must
+    # drop below A100's even though every step is faster.
+    assert best.outcome.mfu < ra.best().outcome.mfu
+
+
+def t_hw_planner_pruned_matches_reference_on_h100():
+    # rust: planner::pruned_exhaustive_matches_reference_on_h100 — the
+    # admissible bounds stay lossless on every registry entry.
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    pruned, stats = plan_exhaustive_stats(job, H100)
+    ref = plan_exhaustive_reference(job, H100)
+    assert pruned.v == ref.v, (pruned.v.layout, ref.v.layout)
+    assert _bits(pruned.predicted_mfu) == _bits(ref.predicted_mfu)
+    assert stats.evaluated < stats.total, "bounds never fired on h100"
+
+
+def t_hw_table2_h100_renders_distinctly():
+    # The fixture's sanity half (the byte gate is CI's diff of
+    # gen_golden.py --hw h100 output against the committed fixture): the
+    # H100 table renders, differs from the A100 table, and keeps the
+    # external baselines (published A100 literature numbers) untouched.
+    ta, th = table2_render(A100), table2_render(H100)
+    assert th.startswith("# Table 2"), th[:40]
+    assert ta != th
+    rows_a = table2_rows(A100)
+    for r in table2_rows(H100):
+        if "†" in r[0] or r[0].startswith("MPT") or "DeepSpeed" in r[0]:
+            ref = next(x for x in rows_a if x[0] == r[0])
+            assert _bits(r[4]) == _bits(ref[4]), f"{r[0]} must not depend on --hw"
+
+
+HW_CHECKS = [
+    ("cluster::h100_constants_bit_exact", t_hw_h100_constants_bit_exact),
+    ("cluster::hw_preset_registry_resolves_and_rejects", t_hw_preset_registry),
+    ("cluster::from_overrides_identity_and_override", t_hw_from_overrides_identity_and_override),
+    ("kernels::cal_key_sensitivity_never_aliases", t_hw_cal_key_sensitivity),
+    ("cache::override_roundtrip_bit_identical_to_cold", t_hw_override_roundtrip_bit_identical),
+    ("engine::h100_sweep_parity_and_ordering", t_hw_h100_sweep_parity),
+    ("planner::pruned_exhaustive_matches_reference_on_h100",
+     t_hw_planner_pruned_matches_reference_on_h100),
+    ("table2::h100_renders_distinct_with_stable_baselines", t_hw_table2_h100_renders_distinctly),
+]
+
+
 def main():
     for name, fn in CHECKS:
         check(name, fn)
@@ -1143,6 +1335,10 @@ def main():
     for name, fn in FACTORED_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - exec_pass} / {len(FACTORED_CHECKS)} (factored suite)")
+    fact_pass = len(PASS)
+    for name, fn in HW_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - fact_pass} / {len(HW_CHECKS)} (hw suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

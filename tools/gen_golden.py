@@ -1,13 +1,18 @@
 """Regenerate the checked-in golden fixtures for `plx table 2` and
 `plx table 3`.
 
-Usage: python3 tools/gen_golden.py [out-dir]
+Usage: python3 tools/gen_golden.py [--hw NAME] [out-dir]
 Default out-dir: rust/tests/golden/
 
+With no --hw (or --hw a100) this writes the default fixtures
+(table2.txt, table3.txt). With another hardware preset it writes the
+hardware-suffixed table-2 fixture (e.g. --hw h100 -> table2_h100.txt),
+the file `plx table 2 --hw h100` is CI-diffed against.
+
 Each fixture must stay byte-identical to the corresponding
-`cargo run --release -- table N` output; tools/pysim.py mirrors the Rust
-simulator expression-for-expression. When the simulator is recalibrated,
-re-bless either with this script or with
+`cargo run --release -- table N [--hw NAME]` output; tools/pysim.py
+mirrors the Rust simulator expression-for-expression. When the simulator
+is recalibrated, re-bless either with this script or with
 `PLX_UPDATE_GOLDEN=1 cargo test -q _matches_checked_in_golden`.
 """
 
@@ -15,15 +20,32 @@ import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
-from pysim import A100, table2_render, table3_render
+from pysim import HW_PRESETS, hw_preset, table2_render, table3_render
 
 
 def main():
-    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+    args = sys.argv[1:]
+    hw_name = "a100"
+    if "--hw" in args:
+        i = args.index("--hw")
+        try:
+            hw_name = args[i + 1]
+        except IndexError:
+            sys.exit("--hw needs a value")
+        del args[i:i + 2]
+    hw = hw_preset(hw_name)
+    if hw is None:
+        known = ", ".join(n for n, _ in HW_PRESETS)
+        sys.exit(f"unknown hardware '{hw_name}' (known presets: {known})")
+    out_dir = args[0] if args else os.path.join(
         os.path.dirname(__file__), "..", "rust", "tests", "golden")
     os.makedirs(out_dir, exist_ok=True)
-    for name, render in [("table2.txt", table2_render), ("table3.txt", table3_render)]:
-        text = render(A100)
+    if hw_name == "a100":
+        fixtures = [("table2.txt", table2_render), ("table3.txt", table3_render)]
+    else:
+        fixtures = [(f"table2_{hw_name}.txt", table2_render)]
+    for name, render in fixtures:
+        text = render(hw)
         path = os.path.join(out_dir, name)
         with open(path, "w") as f:
             f.write(text)

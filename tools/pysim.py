@@ -12,8 +12,10 @@ libm pow/log, which are correctly rounded on glibc >= 2.28).
 
 Rust source of truth:
   rust/src/model/arch.rs          -> LlamaArch / PRESETS
-  rust/src/sim/cluster.rs         -> Hardware / A100 / H100 / collective times
-  rust/src/sim/kernels.rs         -> KernelPerf / dense_matmul_eff / cal / availability
+  rust/src/sim/cluster.rs         -> Hardware / A100 / H100 / HW_PRESETS /
+                                     hw_preset / from_overrides / collective times
+  rust/src/sim/kernels.rs         -> KernelPerf / dense_matmul_eff / cal /
+                                     CAL_VARS / cal_key / availability
   rust/src/sim/schedule/gen.rs    -> one_f1b / gpipe / interleaved_1f1b / peak_in_flight
   rust/src/sim/schedule/makespan.rs -> makespan (event-driven executor)
   rust/src/sim/memory.rs          -> act_bytes_per_layer / per_gpu_memory
@@ -117,6 +119,34 @@ class Hardware:
 A100 = Hardware(312e12, 80.0 * 1e9, 1.55e12, 250e9, 25e9, 20e-6, 4.5e-6, 5.0 * 1e9)
 H100 = Hardware(989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9)
 
+# Mirrors rust/src/sim/cluster.rs::HW_PRESETS — the `--hw` registry.
+HW_PRESETS = (("a100", A100), ("h100", H100))
+
+HW_FIELDS = ("peak_matmul_flops", "hbm_bytes", "hbm_bw", "nvlink_bw", "ib_bw",
+             "coll_latency_s", "launch_overhead_s", "workspace_bytes")
+
+
+def hw_preset(name):
+    # Mirrors rust/src/sim/cluster.rs::hw_preset.
+    for n, hw in HW_PRESETS:
+        if n == name:
+            return hw
+    return None
+
+
+def hw_bits(hw):
+    # Mirrors rust/src/sim/cluster.rs::Hardware::bits (f64 bit patterns,
+    # fixed field order — the form every memo key hashes).
+    return tuple(struct.unpack("<Q", struct.pack("<d", getattr(hw, f)))[0]
+                 for f in HW_FIELDS)
+
+
+def hardware_from_overrides(base):
+    """Mirrors rust/src/sim/cluster.rs::Hardware::from_overrides: apply
+    PLX_HW_* per-field env overrides (identity with a clean env)."""
+    return Hardware(*(cal("PLX_HW_" + f.upper(), getattr(base, f))
+                      for f in HW_FIELDS))
+
 
 def allreduce_time(bytes_, n, bw, latency):
     if n <= 1:
@@ -175,6 +205,26 @@ def cal(name, default):
         return float(val)
     except ValueError:
         return default
+
+
+# Mirrors rust/src/sim/kernels.rs::CAL_VARS: every PLX_CAL_* override the
+# simulator reads, with its shipped default (BWD_FACTOR / DP_EXPOSED
+# values defined in the step_time section below).
+CAL_VARS = (
+    ("PLX_CAL_EFF_BASE", 0.74),
+    ("PLX_CAL_MB_EXP", 0.12),
+    ("PLX_CAL_SHARD_EXP", 0.22),
+    ("PLX_CAL_BWD_FACTOR", 2.0),
+    ("PLX_CAL_DP_EXPOSED", 0.35),
+)
+
+
+def cal_key():
+    """Mirrors rust/src/sim/kernels.rs::cal_key: the resolved calibration
+    constants as f64 bit patterns, in CAL_VARS order. Part of every
+    evaluate/stage memo key, so in-process override sweeps are sound."""
+    return tuple(struct.unpack("<Q", struct.pack("<d", cal(n, d)))[0]
+                 for n, d in CAL_VARS)
 
 
 def dense_matmul_eff(tp, mb, seq, hidden):
@@ -846,9 +896,9 @@ _STAGE_CACHE = {}
 
 def layer_costs(job, v, hw):
     """The keyed per-layer cost stage, memoized like
-    rust/src/sim/cache.rs::layer_costs_cached (key: arch + hw + stage
-    key; deliberately no pp/sched/cluster/gbs)."""
-    key = (job.arch, hw, stage_key(v.layout))
+    rust/src/sim/cache.rs::layer_costs_cached (key: arch + hw + resolved
+    calibration bits + stage key; deliberately no pp/sched/cluster/gbs)."""
+    key = (job.arch, hw, cal_key(), stage_key(v.layout))
     hit = _STAGE_CACHE.get(key)
     if hit is not None:
         return hit
@@ -1083,9 +1133,10 @@ _EVAL_CACHE = {}
 
 def evaluate(job, v, hw):
     # Memoized like rust/src/sim/cache.rs::evaluate_cached: evaluate is a
-    # pure function of (job, layout, hardware). PLX_CAL_* env overrides
-    # are not part of the key (same caveat as the Rust cache).
-    key = (job, v, hw)
+    # pure function of (job, layout, hardware, resolved PLX_CAL_* bits) —
+    # the calibration key makes in-process override sweeps sound (the old
+    # caveat is gone on both sides; the HW suite pins the round trip).
+    key = (job, v, hw, cal_key())
     hit = _EVAL_CACHE.get(key)
     if hit is not None:
         return hit
