@@ -27,13 +27,18 @@
 //! engine once per `HW_PRESETS` entry (the `--hw` axis's hot path) and
 //! records each sweep's wall time, throughput, and best sp-13b-2k MFU.
 //!
-//! Emits `BENCH_sweep.json` **schema_version 3** (path overridable via
+//! A **compare** section times `plx compare --hw`'s old shape (one
+//! engine sweep per hardware, serially) against the PR-6 fused
+//! `sweep::run_compare` cross-product dispatch.
+//!
+//! Emits `BENCH_sweep.json` **schema_version 4** (path overridable via
 //! `PLX_BENCH_JSON`): wall time + evals/sec for all four pipelines, a
 //! per-phase breakdown of the factored path (enumerate / stage-compute /
-//! combine / rank), per-level memo hit rates, the speedup fields, and
-//! the per-hardware `hw_sweeps` object; see `docs/perf.md` for the
-//! schema and how CI reads it. All timing thresholds stay advisory —
-//! CI gates only the schema fields and deterministic invariants.
+//! combine / rank), per-level memo hit rates, the speedup fields, the
+//! per-hardware `hw_sweeps` object, and the serial-vs-fused `compare`
+//! object; see `docs/perf.md` for the schema and how CI reads it. All
+//! timing thresholds stay advisory — CI gates only the schema fields and
+//! deterministic invariants.
 
 use std::io::Write;
 use std::time::Instant;
@@ -266,14 +271,48 @@ fn main() {
     }
     let hw_sweeps_json = hw_json_entries.join(", ");
 
+    section("plx compare: serial per-hardware sweeps vs one fused cross-product dispatch");
+    // The PR-6 `plx compare --hw` fix: the old command looped
+    // `run(&p, hw)` once per hardware; `run_compare` pushes the whole
+    // (hardware × layout) cross-product through one group-factored
+    // dispatch. Total evaluation work is identical (distinct hw bits =
+    // distinct memo keys either way), so the delta is pure dispatch
+    // shape: one wide pool pass instead of H narrow ones with idle
+    // tails. Value parity is pinned by
+    // `fused_compare_matches_per_hardware_sweeps`; here we time it.
+    let compare_hws: Vec<(String, plx::sim::Hardware)> =
+        HW_PRESETS.iter().map(|(n, hw)| (n.to_string(), *hw)).collect();
+    let cmp_serial = bench("compare sp-13b-2k: one sweep per hardware (cold)", 1, 3, || {
+        cache::clear();
+        let mut rows = 0usize;
+        for (_, hw) in &compare_hws {
+            rows += plx::sweep::run_jobs(&presets[0], hw, jobs).rows.len();
+        }
+        std::hint::black_box(rows);
+    });
+    let cmp_fused = bench("compare sp-13b-2k: fused run_compare (cold)", 1, 3, || {
+        cache::clear();
+        let results = plx::sweep::run_compare(&presets[0], &compare_hws, jobs);
+        std::hint::black_box(results.len());
+    });
+    let compare_speedup = cmp_serial.mean.as_secs_f64() / cmp_fused.mean.as_secs_f64();
+    println!(
+        "-> compare: serial {:.4}s, fused {:.4}s ({compare_speedup:.2}x) across {} hw presets",
+        cmp_serial.mean.as_secs_f64(),
+        cmp_fused.mean.as_secs_f64(),
+        compare_hws.len()
+    );
+
     let json = format!(
-        "{{\n  \"schema_version\": 3,\n  \
+        "{{\n  \"schema_version\": 4,\n  \
          \"preset\": \"table2 (sp-13b-2k .. sp-65b-2k)\",\n  \"layouts\": {n_layouts},\n  \
          \"baseline\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
          \"pr3\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
          \"factored\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1} }},\n  \
          \"engine\": {{ \"wall_s\": {:.6}, \"evals_per_sec\": {:.1}, \"jobs\": {jobs} }},\n  \
          \"hw_sweeps\": {{ {hw_sweeps_json} }},\n  \
+         \"compare\": {{ \"serial_wall_s\": {:.6}, \"fused_wall_s\": {:.6}, \
+         \"speedup\": {compare_speedup:.3}, \"hw_count\": {} }},\n  \
          \"phases\": {{ \"enumerate_s\": {enumerate_s:.6}, \"stage_s\": {stage_s:.6}, \
          \"combine_s\": {combine_s:.6}, \"rank_s\": {rank_s:.6} }},\n  \
          \"speedup\": {speedup:.3},\n  \
@@ -294,6 +333,9 @@ fn main() {
         fact_eps,
         engine.mean.as_secs_f64(),
         engine_eps,
+        cmp_serial.mean.as_secs_f64(),
+        cmp_fused.mean.as_secs_f64(),
+        compare_hws.len(),
         ev_rate,
         st_rate,
         ms_rate,

@@ -19,6 +19,9 @@
 //!   table and figure of the paper's evaluation.
 //! * [`sweep`] / [`planner`] — the Cartesian sweep engine and the paper's
 //!   §5 recommendations as code.
+//! * [`serve`] — the long-running layout-recommendation daemon
+//!   (newline-delimited JSON over TCP, memo persistence via
+//!   [`sim::persist`] under `PLX_CACHE_DIR`).
 
 pub mod config;
 pub mod coordinator;
@@ -28,6 +31,7 @@ pub mod metrics;
 pub mod model;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod topo;

@@ -9,11 +9,14 @@
 //! plx plan   --model llama65b --nodes 8          # §5 recommendations as code
 //! plx predict-mem --model llama30b --nodes 8 --tp 2 --pp 4 [--mb 1 ...]
 //! plx compare --preset 13b-2k --hw a100,h100     # same sweep across hardware
+//! plx serve  [--addr 127.0.0.1:7077]             # layout queries as a daemon
 //! plx presets                                    # list models & sweeps
 //! ```
 //!
 //! Every analytic command takes `--hw <preset>` (default `a100`); see
 //! docs/hardware.md for the hardware model and `PLX_HW_*` overrides.
+//! With `PLX_CACHE_DIR` set, analytic commands and the daemon persist
+//! their memos across processes (docs/cache.md).
 
 use std::path::Path;
 
@@ -34,7 +37,7 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
-        "loss-csv", "save", "resume", "jobs", "schedule", "hw",
+        "loss-csv", "save", "resume", "jobs", "schedule", "hw", "addr", "top",
     ],
     flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats"],
 };
@@ -56,7 +59,15 @@ fn run(argv: &[String]) -> Result<()> {
         plx::util::pool::configure_jobs(jobs);
     }
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    // With PLX_CACHE_DIR set, analytic commands warm the memos from the
+    // previous process's spill files before evaluating, and spill them
+    // back afterwards — loaded entries are bit-exact, so output bytes
+    // cannot change (`sim::persist`). `serve` manages its own lifecycle.
+    let analytic = matches!(cmd, "sweep" | "table" | "figure" | "plan" | "predict-mem" | "compare");
+    if analytic {
+        plx::sim::persist::warm_start_if_configured();
+    }
+    let out = match cmd {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "table" => cmd_table(&args),
@@ -64,12 +75,38 @@ fn run(argv: &[String]) -> Result<()> {
         "plan" => cmd_plan(&args),
         "predict-mem" => cmd_predict_mem(&args),
         "compare" => cmd_compare(&args),
+        "serve" => cmd_serve(&args),
         "presets" => cmd_presets(),
         _ => {
             print!("{HELP}");
             Ok(())
         }
+    };
+    if analytic && out.is_ok() {
+        plx::sim::persist::save_if_configured();
     }
+    out
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = plx::serve::resolve_addr(args.get("addr"));
+    if let Some(stats) = plx::sim::persist::warm_start_if_configured() {
+        eprintln!(
+            "plx serve: warmed {} memo entries from {} ({} evaluate, {} stage, {} makespan)",
+            stats.total(),
+            plx::sim::persist::cache_dir().unwrap().display(),
+            stats.evaluate,
+            stats.stage,
+            stats.makespan,
+        );
+    }
+    let handle = plx::serve::spawn(&addr)?;
+    // The *bound* address (a `:0` bind resolves here) — scripted clients
+    // read this line to find the port.
+    eprintln!("plx serve: listening on {}", handle.addr);
+    handle.join();
+    eprintln!("plx serve: shut down");
+    Ok(())
 }
 
 /// Resolve `--hw <name>` (default `a100`) to a hardware model, with the
@@ -96,6 +133,7 @@ USAGE:
               --schedule {1f1b,gpipe}]
   plx sweep  --preset NAME [--csv FILE] | --all | --list
              [--schedule LIST]   e.g. --schedule 1f1b,interleaved:2
+             [--top N]           table shows only the N best rows
              [--cache-stats]     print per-level memo hit rates (stderr)
   plx table  N            N in {2, 3, 4..8, 10..14}
   plx figure N            N in {1..5}
@@ -105,6 +143,11 @@ USAGE:
                   [--schedule {1f1b,gpipe,interleaved:<v>}]
   plx compare --preset NAME | --all  [--hw a100,h100]
              best layout + MFU delta per hardware, side by side
+  plx serve  [--addr HOST:PORT]
+             long-running daemon: newline-delimited JSON queries over TCP
+             (plan/sweep/compare/stats/shutdown — see docs/serve.md);
+             address from --addr, then $PLX_SERVE_ADDR, then
+             127.0.0.1:7077
   plx presets
 
 OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
@@ -114,6 +157,14 @@ OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
   --hw NAME  hardware preset to simulate (a100, h100; default a100;
              `compare` takes a comma-separated list). Per-field
              overrides via PLX_HW_* env vars — see docs/hardware.md.
+
+ENV:
+  PLX_CACHE_DIR   persist the evaluation memos across processes
+                  (bit-exact; docs/cache.md). Analytic commands warm
+                  from it on start and spill back on success; the
+                  daemon spills after each request that computed
+                  something new.
+  PLX_SERVE_ADDR  default bind address for `plx serve`.
 
 Artifacts for `plx train` come from `make artifacts`
 (python -m compile.aot). See README.md.
@@ -224,10 +275,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
     }
     let hw = resolve_hw(args)?;
+    // `--top N` caps the rendered table at the N best rows (the sweep —
+    // and the CSV — still covers the full space).
+    let top = match args.get("top") {
+        Some(t) => Some(t.parse::<usize>().map_err(|_| anyhow::anyhow!("--top must be an integer"))?),
+        None => None,
+    };
     for p in presets {
         let result = plx::sweep::run(&p, &hw);
         let with_sp = p.sps.len() > 1;
-        print!("{}", report::render(&result, with_sp));
+        print!("{}", report::render_top(&result, with_sp, top));
         if let Some(csv) = args.get("csv") {
             std::fs::write(csv, report::to_csv(&result))?;
             println!("csv written to {csv}");
@@ -314,21 +371,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     } else {
         plan_by_rules(&job, &hw)?
     };
-    let l = plan.v.layout;
-    println!(
-        "plan for {} on {} GPUs (gbs {}):",
-        job.arch.name, job.cluster.gpus, job.gbs
-    );
-    println!(
-        "  mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={} sched={}",
-        l.mb, l.tp, l.pp, plan.v.topo.dp, l.ckpt, l.kernel.label(), l.sp, l.sched.label()
-    );
-    println!(
-        "  predicted: {:.2}% MFU, {:.2}s/step, {} micro-batches/step",
-        100.0 * plan.predicted_mfu,
-        plan.predicted_step_s,
-        plan.v.num_micro
-    );
+    print!("{}", plx::planner::render_plan(&job, &plan));
     Ok(())
 }
 
@@ -405,10 +448,10 @@ fn cmd_compare(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let presets = presets_from_args(args, "need --preset NAME or --all")?;
     for p in presets {
-        // One deterministic sweep per hardware; the shared caches make
-        // repeated hardware lists (and repeated presets) nearly free.
-        let results: Vec<(String, plx::sweep::SweepResult)> =
-            hws.iter().map(|(n, hw)| (n.clone(), plx::sweep::run(&p, hw))).collect();
+        // One fused cross-product dispatch over (hardware × layout) —
+        // bit-identical to a sweep per hardware, without the serial
+        // hardware loop (`sweep::run_compare`).
+        let results = plx::sweep::run_compare(&p, &hws, 0);
         print!("{}", report::render_compare(&results));
     }
     Ok(())

@@ -41,6 +41,33 @@ pub struct Plan {
     pub predicted_step_s: f64,
 }
 
+/// The `plx plan` stdout block for a computed plan — shared verbatim by
+/// the CLI and the serve daemon, which is what makes the serve
+/// byte-identity gate (`serve plan` response == `plx plan` stdout)
+/// hold by construction.
+pub fn render_plan(job: &Job, plan: &Plan) -> String {
+    let l = plan.v.layout;
+    format!(
+        "plan for {} on {} GPUs (gbs {}):\n\
+         \x20 mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={} sched={}\n\
+         \x20 predicted: {:.2}% MFU, {:.2}s/step, {} micro-batches/step\n",
+        job.arch.name,
+        job.cluster.gpus,
+        job.gbs,
+        l.mb,
+        l.tp,
+        l.pp,
+        plan.v.topo.dp,
+        l.ckpt,
+        l.kernel.label(),
+        l.sp,
+        l.sched.label(),
+        100.0 * plan.predicted_mfu,
+        plan.predicted_step_s,
+        plan.v.num_micro
+    )
+}
+
 /// Candidate model-parallel degrees in the paper's preference order:
 /// ascending total degree; at equal degree, higher PP before higher TP
 /// (recommendation 3). TP capped at the node size by `validate`.

@@ -1,0 +1,572 @@
+//! `plx serve` — the long-running layout-recommendation daemon.
+//!
+//! A std-only TCP server (no hyper, no serde — the request layer is
+//! [`crate::util::json`]) speaking **newline-delimited JSON**: one
+//! request object per line in, one response object per line out, over a
+//! plain socket (`printf '...' | nc` is a complete client; see
+//! docs/serve.md for the protocol reference).
+//!
+//! Why a daemon: every analytic answer flows through the process-global
+//! memos of [`crate::sim::cache`], so the thousandth query costs
+//! microseconds instead of the process spawn + cold memo a one-shot CLI
+//! invocation pays. With `PLX_CACHE_DIR` set, the memos additionally
+//! spill to disk ([`crate::sim::persist`]) and a restarted daemon warms
+//! from the previous run's entries.
+//!
+//! Guarantees:
+//!
+//! * **Byte-identity**: the `output` field of a `plan`/`sweep`/`compare`
+//!   response is byte-identical to the stdout of the equivalent one-shot
+//!   CLI invocation — both sides call the same renderer
+//!   ([`crate::planner::render_plan`], [`crate::sweep::report`]), and
+//!   the memos are pure, so there is nothing to drift.
+//! * **Batching**: the layout evaluations behind one request fan out
+//!   through the shared work-stealing pool ([`crate::util::pool`]) — a
+//!   sweep request is one coarse-grouped dispatch, not a serial loop.
+//! * **Dedupe**: identical concurrent requests (same canonical JSON)
+//!   collapse onto one in-flight computation; the late arrivals wait and
+//!   receive the same response bytes. The `stats` command reports how
+//!   many requests were answered this way.
+//!
+//! The dispatch core ([`handle_line`]) is a pure-ish function from a
+//! request line to response bytes, so the protocol is testable without
+//! sockets; the TCP layer ([`spawn`]) is a thin accept loop over it.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::layout::{Job, Schedule};
+use crate::model::arch::preset;
+use crate::planner::{plan_by_rules, plan_exhaustive_stats, render_plan};
+use crate::sim::{cache, parse_hw, persist, Hardware};
+use crate::sweep::{by_name, report, run_compare, run_jobs};
+use crate::topo::Cluster;
+use crate::util::json::Json;
+
+/// Default bind address when neither `--addr` nor `PLX_SERVE_ADDR` is
+/// given. Loopback: the protocol is unauthenticated by design.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7077";
+
+/// The environment variable consulted for the bind address
+/// (`--addr` wins over it; [`DEFAULT_ADDR`] is the fallback).
+pub const ADDR_ENV: &str = "PLX_SERVE_ADDR";
+
+/// Resolve the bind address: explicit argument, then `PLX_SERVE_ADDR`,
+/// then [`DEFAULT_ADDR`].
+pub fn resolve_addr(arg: Option<&str>) -> String {
+    if let Some(a) = arg {
+        return a.to_string();
+    }
+    match std::env::var(ADDR_ENV) {
+        Ok(v) if !v.is_empty() => v,
+        _ => DEFAULT_ADDR.to_string(),
+    }
+}
+
+/// One in-flight computation; followers block on the condvar until the
+/// leader publishes the response bytes.
+struct Slot {
+    done: Mutex<Option<String>>,
+    cv: Condvar,
+}
+
+/// Daemon state: counters for the `stats` command plus the in-flight
+/// dedupe map. One per server; [`handle_line`] takes it explicitly so
+/// tests can drive the protocol without a socket.
+pub struct State {
+    started: Instant,
+    requests: AtomicU64,
+    deduped: AtomicU64,
+    errors: AtomicU64,
+    latency_us: AtomicU64,
+    inflight: Mutex<HashMap<String, Arc<Slot>>>,
+    /// Memo entry counts at the last disk spill, so a request that
+    /// computed nothing new skips the rewrite.
+    spilled: Mutex<(usize, usize, usize)>,
+}
+
+impl Default for State {
+    fn default() -> State {
+        State::new()
+    }
+}
+
+impl State {
+    pub fn new() -> State {
+        State {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            deduped: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latency_us: AtomicU64::new(0),
+            inflight: Mutex::new(HashMap::new()),
+            spilled: Mutex::new((0, 0, 0)),
+        }
+    }
+}
+
+/// A reply: the response line (no trailing newline) and whether the
+/// request asked the daemon to exit.
+pub struct Reply {
+    pub text: String,
+    pub shutdown: bool,
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn ok_output(cmd: &str, output: String) -> String {
+    obj(vec![
+        ("cmd", Json::Str(cmd.to_string())),
+        ("ok", Json::Bool(true)),
+        ("output", Json::Str(output)),
+    ])
+    .write()
+}
+
+/// The error envelope: `{"error":{"code":...,"message":...},"ok":false}`.
+/// Codes: `parse` (not valid JSON / not an object), `bad_request`
+/// (schema or domain errors), `unknown_cmd`.
+fn err(code: &str, message: String) -> String {
+    obj(vec![
+        (
+            "error",
+            obj(vec![
+                ("code", Json::Str(code.to_string())),
+                ("message", Json::Str(message)),
+            ]),
+        ),
+        ("ok", Json::Bool(false)),
+    ])
+    .write()
+}
+
+/// Typed, strict field access over the request object: unknown keys are
+/// rejected (catches typos like `"modle"` instead of silently planning
+/// the default), missing required keys name themselves.
+struct Req<'a> {
+    map: &'a std::collections::BTreeMap<String, Json>,
+}
+
+impl<'a> Req<'a> {
+    fn check_keys(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.map.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown field \"{k}\""));
+            }
+        }
+        Ok(())
+    }
+
+    fn str(&self, key: &str) -> Result<Option<&'a str>, String> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(Json::Str(s)) => Ok(Some(s)),
+            Some(_) => Err(format!("\"{key}\" must be a string")),
+        }
+    }
+
+    fn need_str(&self, key: &str) -> Result<&'a str, String> {
+        self.str(key)?.ok_or_else(|| format!("need \"{key}\""))
+    }
+
+    fn usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(j) => j
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| format!("\"{key}\" must be a non-negative integer")),
+        }
+    }
+
+    fn bool(&self, key: &str) -> Result<bool, String> {
+        match self.map.get(key) {
+            None => Ok(false),
+            Some(Json::Bool(b)) => Ok(*b),
+            Some(_) => Err(format!("\"{key}\" must be a boolean")),
+        }
+    }
+}
+
+/// `--hw` resolution shared with the CLI: named preset + `PLX_HW_*`
+/// overrides on top (identical bits to `plx <cmd> --hw <name>`).
+fn resolve_hw_name(name: &str) -> Result<Hardware, String> {
+    Ok(parse_hw(name)?.from_overrides())
+}
+
+fn parse_schedules(spec: &str) -> Result<Vec<Schedule>, String> {
+    let scheds: Vec<Schedule> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            Schedule::parse(t)
+                .ok_or_else(|| format!("unknown schedule '{t}' (1f1b, gpipe, interleaved:<v>)"))
+        })
+        .collect::<Result<_, _>>()?;
+    if scheds.is_empty() {
+        return Err("\"schedule\" needs at least one value".to_string());
+    }
+    Ok(scheds)
+}
+
+fn do_plan(req: &Req) -> Result<String, String> {
+    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])?;
+    let model = req.need_str("model")?;
+    let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let nodes = req.usize("nodes")?.unwrap_or(8);
+    let gbs = req.usize("gbs")?.unwrap_or_else(|| Job::paper_gbs(&arch));
+    let hw = resolve_hw_name(req.str("hw")?.unwrap_or("a100"))?;
+    let job = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
+    let plan = if req.bool("exhaustive")? {
+        plan_exhaustive_stats(&job, &hw).map_err(|e| e.to_string())?.0
+    } else {
+        plan_by_rules(&job, &hw).map_err(|e| e.to_string())?
+    };
+    Ok(render_plan(&job, &plan))
+}
+
+fn do_sweep(req: &Req) -> Result<String, String> {
+    req.check_keys(&["cmd", "preset", "hw", "schedule", "top"])?;
+    let name = req.need_str("preset")?;
+    let mut p = by_name(name).ok_or_else(|| format!("unknown preset '{name}'"))?;
+    if let Some(spec) = req.str("schedule")? {
+        p.scheds = parse_schedules(spec)?;
+    }
+    let hw = resolve_hw_name(req.str("hw")?.unwrap_or("a100"))?;
+    let top = req.usize("top")?;
+    let with_sp = p.sps.len() > 1;
+    let result = run_jobs(&p, &hw, 0);
+    Ok(report::render_top(&result, with_sp, top))
+}
+
+fn do_compare(req: &Req) -> Result<String, String> {
+    req.check_keys(&["cmd", "preset", "hw"])?;
+    let name = req.need_str("preset")?;
+    let p = by_name(name).ok_or_else(|| format!("unknown preset '{name}'"))?;
+    let hw_spec = req.str("hw")?.unwrap_or("a100,h100");
+    let hws: Vec<(String, Hardware)> = hw_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|n| resolve_hw_name(n).map(|hw| (n.to_string(), hw)))
+        .collect::<Result<_, _>>()?;
+    if hws.is_empty() {
+        return Err("\"hw\" needs at least one preset name".to_string());
+    }
+    let results = run_compare(&p, &hws, 0);
+    Ok(report::render_compare(&results))
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn do_stats(state: &State) -> String {
+    let memo = |(h, m): (u64, u64), entries: usize| {
+        obj(vec![
+            ("entries", num(entries as u64)),
+            ("hits", num(h)),
+            ("misses", num(m)),
+        ])
+    };
+    let (de, ds, dm) = cache::disk_stats();
+    let disk = |d: cache::DiskStats| obj(vec![("hits", num(d.hits)), ("loaded", num(d.loaded))]);
+    let requests = state.requests.load(Ordering::Relaxed);
+    let total_us = state.latency_us.load(Ordering::Relaxed);
+    let stats = obj(vec![
+        ("deduped", num(state.deduped.load(Ordering::Relaxed))),
+        (
+            "disk",
+            obj(vec![
+                ("evaluate", disk(de)),
+                ("makespan", disk(dm)),
+                ("stage", disk(ds)),
+            ]),
+        ),
+        ("errors", num(state.errors.load(Ordering::Relaxed))),
+        (
+            "latency_us",
+            obj(vec![("count", num(requests)), ("total", num(total_us))]),
+        ),
+        (
+            "memos",
+            obj(vec![
+                ("evaluate", memo(cache::stats(), cache::len())),
+                ("makespan", memo(cache::makespan_stats(), cache::makespan_len())),
+                ("stage", memo(cache::stage_stats(), cache::stage_len())),
+            ]),
+        ),
+        ("requests", num(requests)),
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+    ]);
+    obj(vec![
+        ("cmd", Json::Str("stats".to_string())),
+        ("ok", Json::Bool(true)),
+        ("stats", stats),
+    ])
+    .write()
+}
+
+/// Spill the memos if anything new was computed since the last spill
+/// (no-op unless `PLX_CACHE_DIR` is set).
+fn spill_if_dirty(state: &State) {
+    if persist::cache_dir().is_none() {
+        return;
+    }
+    let now = (cache::len(), cache::stage_len(), cache::makespan_len());
+    let mut last = state.spilled.lock().unwrap();
+    if *last != now {
+        persist::save_if_configured();
+        *last = now;
+    }
+}
+
+/// Answer one request line. The returned [`Reply`] carries the response
+/// bytes (newline not included) and the shutdown signal.
+pub fn handle_line(state: &State, line: &str) -> Reply {
+    let start = Instant::now();
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let reply = dispatch(state, line);
+    state
+        .latency_us
+        .fetch_add(start.elapsed().as_micros() as u64, Ordering::Relaxed);
+    // The canonical writer sorts keys, so every error envelope — and
+    // only an error envelope — leads with the "error" member.
+    if reply.text.starts_with("{\"error\"") {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    spill_if_dirty(state);
+    reply
+}
+
+fn dispatch(state: &State, line: &str) -> Reply {
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return Reply { text: err("parse", e.to_string()), shutdown: false },
+    };
+    let Some(map) = parsed.as_obj() else {
+        return Reply {
+            text: err("parse", "request must be a JSON object".to_string()),
+            shutdown: false,
+        };
+    };
+    let req = Req { map };
+    let cmd = match req.str("cmd") {
+        Ok(Some(c)) => c.to_string(),
+        Ok(None) => {
+            return Reply { text: err("bad_request", "need \"cmd\"".to_string()), shutdown: false }
+        }
+        Err(m) => return Reply { text: err("bad_request", m), shutdown: false },
+    };
+    match cmd.as_str() {
+        "stats" => Reply { text: do_stats(state), shutdown: false },
+        "shutdown" => Reply {
+            text: obj(vec![
+                ("cmd", Json::Str("shutdown".to_string())),
+                ("ok", Json::Bool(true)),
+            ])
+            .write(),
+            shutdown: true,
+        },
+        "plan" | "sweep" | "compare" => {
+            // Canonical bytes of the parsed request = the dedupe key:
+            // whitespace/key-order variants of the same query collapse.
+            let key = parsed.write();
+            let text = deduped(state, &key, || {
+                let result = match cmd.as_str() {
+                    "plan" => do_plan(&req),
+                    "sweep" => do_sweep(&req),
+                    _ => do_compare(&req),
+                };
+                match result {
+                    Ok(output) => ok_output(&cmd, output),
+                    Err(m) => err("bad_request", m),
+                }
+            });
+            Reply { text, shutdown: false }
+        }
+        other => Reply {
+            text: err("unknown_cmd", format!("unknown cmd \"{other}\"")),
+            shutdown: false,
+        },
+    }
+}
+
+/// Single-flight execution: the first caller for a canonical request key
+/// computes; concurrent identical requests wait on the slot and return
+/// the leader's bytes (counted in `deduped`).
+fn deduped(state: &State, key: &str, compute: impl FnOnce() -> String) -> String {
+    let slot = {
+        let mut inflight = state.inflight.lock().unwrap();
+        match inflight.get(key) {
+            Some(slot) => {
+                state.deduped.fetch_add(1, Ordering::Relaxed);
+                let slot = slot.clone();
+                drop(inflight);
+                let mut done = slot.done.lock().unwrap();
+                while done.is_none() {
+                    done = slot.cv.wait(done).unwrap();
+                }
+                return done.clone().unwrap();
+            }
+            None => {
+                let slot = Arc::new(Slot { done: Mutex::new(None), cv: Condvar::new() });
+                inflight.insert(key.to_string(), slot.clone());
+                slot
+            }
+        }
+    };
+    let text = compute();
+    *slot.done.lock().unwrap() = Some(text.clone());
+    slot.cv.notify_all();
+    state.inflight.lock().unwrap().remove(key);
+    text
+}
+
+/// A running server: the bound address (useful with a `:0` bind) and the
+/// accept-loop thread.
+pub struct Handle {
+    pub addr: std::net::SocketAddr,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl Handle {
+    /// Block until the daemon exits (a client sent `shutdown`).
+    pub fn join(self) {
+        let _ = self.thread.join();
+    }
+}
+
+/// Bind `addr` and serve in a background thread. Each connection gets a
+/// reader thread; requests on one connection are answered in order,
+/// requests on different connections run concurrently (and dedupe).
+pub fn spawn(addr: &str) -> std::io::Result<Handle> {
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let state = Arc::new(State::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || handle_conn(stream, &state, &stop, addr));
+        }
+        // Final spill so a shutdown never loses the last entries.
+        persist::save_if_configured();
+    });
+    Ok(Handle { addr, thread })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    state: &State,
+    stop: &AtomicBool,
+    addr: std::net::SocketAddr,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(state, &line);
+        if writer
+            .write_all(reply.text.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            break;
+        }
+        if reply.shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // Wake the accept loop so it observes the flag and exits.
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply(state: &State, line: &str) -> String {
+        handle_line(state, line).text
+    }
+
+    #[test]
+    fn plan_response_equals_cli_renderer_bytes() {
+        let state = State::new();
+        let r = reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1}"#);
+        let parsed = Json::parse(&r).unwrap();
+        assert_eq!(parsed.get("ok").as_bool(), Some(true));
+        let arch = preset("llama13b").unwrap();
+        let job = Job::new(arch, Cluster::dgx_a100(1), Job::paper_gbs(&arch));
+        let hw = resolve_hw_name("a100").unwrap();
+        let plan = plan_by_rules(&job, &hw).unwrap();
+        assert_eq!(parsed.get("output").as_str().unwrap(), render_plan(&job, &plan));
+    }
+
+    #[test]
+    fn whitespace_variants_share_one_dedupe_key() {
+        let state = State::new();
+        let a = reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1}"#);
+        let b = reply(&state, r#"{ "nodes" : 1, "model": "llama13b", "cmd" : "plan" }"#);
+        assert_eq!(a, b, "key order and whitespace must not change the response");
+    }
+
+    #[test]
+    fn error_envelopes() {
+        let state = State::new();
+        let r = reply(&state, "{nope");
+        assert!(r.contains(r#""code":"parse""#), "{r}");
+        let r = reply(&state, r#"{"cmd":"warp"}"#);
+        assert!(r.contains(r#""code":"unknown_cmd""#), "{r}");
+        let r = reply(&state, r#"{"cmd":"plan"}"#);
+        assert!(r.contains(r#""code":"bad_request""#), "{r}");
+        assert!(r.contains("need \\\"model\\\""), "{r}");
+        let r = reply(&state, r#"{"cmd":"plan","model":"llama13b","modle":1}"#);
+        assert!(r.contains("unknown field"), "{r}");
+        let r = reply(&state, r#"{"cmd":"sweep","preset":"nope"}"#);
+        assert!(r.contains("unknown preset"), "{r}");
+    }
+
+    #[test]
+    fn stats_reports_counters_and_memo_shapes() {
+        let state = State::new();
+        reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1}"#);
+        let r = reply(&state, r#"{"cmd":"stats"}"#);
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        let s = j.get("stats");
+        assert_eq!(s.get("requests").as_u64(), Some(2));
+        assert_eq!(s.get("deduped").as_u64(), Some(0));
+        assert!(s.path("memos.evaluate.entries").as_u64().is_some());
+        assert!(s.path("disk.evaluate.loaded").as_u64().is_some());
+        assert!(s.path("latency_us.total").as_u64().is_some());
+    }
+
+    #[test]
+    fn shutdown_reply_signals_exit() {
+        let state = State::new();
+        let r = handle_line(&state, r#"{"cmd":"shutdown"}"#);
+        assert!(r.shutdown);
+        assert_eq!(r.text, r#"{"cmd":"shutdown","ok":true}"#);
+    }
+}

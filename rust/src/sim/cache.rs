@@ -45,30 +45,32 @@ use crate::sim::{evaluate, Outcome};
 
 const SHARDS: usize = 16;
 
-/// Everything `evaluate` reads, as a hashable value.
+/// Everything `evaluate` reads, as a hashable value. `pub(crate)` with
+/// open fields so [`super::persist`] can reconstruct keys from disk —
+/// the on-disk line format serializes exactly these fields.
 #[derive(Clone, PartialEq, Eq, Hash)]
-struct Key {
+pub(crate) struct Key {
     // Architecture shape (name is display-only; the numbers decide).
-    layers: usize,
-    hidden: usize,
-    heads: usize,
-    ffn: usize,
-    vocab: usize,
-    seq: usize,
+    pub(crate) layers: usize,
+    pub(crate) hidden: usize,
+    pub(crate) heads: usize,
+    pub(crate) ffn: usize,
+    pub(crate) vocab: usize,
+    pub(crate) seq: usize,
     // Cluster + batch.
-    gpus: usize,
-    gpus_per_node: usize,
-    gbs: usize,
+    pub(crate) gpus: usize,
+    pub(crate) gpus_per_node: usize,
+    pub(crate) gbs: usize,
     // Hardware constants, by bit pattern (f64 is not Hash/Eq).
-    hw_bits: [u64; 8],
+    pub(crate) hw_bits: [u64; 8],
     // Resolved PLX_CAL_* calibration bits — `evaluate` reads them from
     // the environment, so they are part of the function and must be part
     // of the key (see the module docs).
-    cal: CalKey,
+    pub(crate) cal: CalKey,
     // The full layout, including the pipeline-schedule dimension (the
     // `sched` field hashes with the rest — 1F1B, GPipe, and every
     // interleaved v are distinct keys).
-    layout: Layout,
+    pub(crate) layout: Layout,
 }
 
 impl Key {
@@ -97,10 +99,16 @@ impl Key {
     }
 }
 
+/// Map values carry a provenance bit: `true` = loaded from a
+/// `PLX_CACHE_DIR` spill file ([`super::persist`]) rather than computed
+/// in this process. Hits on such entries additionally count as
+/// *disk hits* — the warm-restart observable `plx serve` stats report.
 struct Cache {
-    shards: Vec<Mutex<HashMap<Key, Outcome>>>,
+    shards: Vec<Mutex<HashMap<Key, (Outcome, bool)>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    disk_loaded: AtomicU64,
+    disk_hits: AtomicU64,
 }
 
 fn cache() -> &'static Cache {
@@ -109,6 +117,8 @@ fn cache() -> &'static Cache {
         shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
         hits: AtomicU64::new(0),
         misses: AtomicU64::new(0),
+        disk_loaded: AtomicU64::new(0),
+        disk_hits: AtomicU64::new(0),
     })
 }
 
@@ -117,15 +127,18 @@ pub fn evaluate_cached(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
     let c = cache();
     let key = Key::new(job, &v.layout, hw);
     let shard = key.shard();
-    if let Some(out) = c.shards[shard].lock().unwrap().get(&key) {
+    if let Some((out, from_disk)) = c.shards[shard].lock().unwrap().get(&key) {
         c.hits.fetch_add(1, Ordering::Relaxed);
+        if *from_disk {
+            c.disk_hits.fetch_add(1, Ordering::Relaxed);
+        }
         return *out;
     }
     // Compute outside the lock: misses of the same key may race, but the
     // function is pure so last-write-wins is harmless.
     let out = evaluate(job, v, hw);
     c.misses.fetch_add(1, Ordering::Relaxed);
-    c.shards[shard].lock().unwrap().insert(key, out);
+    c.shards[shard].lock().unwrap().insert(key, (out, false));
     out
 }
 
@@ -151,18 +164,24 @@ pub fn clear() {
     }
     c.hits.store(0, Ordering::Relaxed);
     c.misses.store(0, Ordering::Relaxed);
+    c.disk_loaded.store(0, Ordering::Relaxed);
+    c.disk_hits.store(0, Ordering::Relaxed);
     let m = ms_cache();
     for s in &m.shards {
         s.lock().unwrap().clear();
     }
     m.hits.store(0, Ordering::Relaxed);
     m.misses.store(0, Ordering::Relaxed);
+    m.disk_loaded.store(0, Ordering::Relaxed);
+    m.disk_hits.store(0, Ordering::Relaxed);
     let st = stage_cache();
     for s in &st.shards {
         s.lock().unwrap().clear();
     }
     st.hits.store(0, Ordering::Relaxed);
     st.misses.store(0, Ordering::Relaxed);
+    st.disk_loaded.store(0, Ordering::Relaxed);
+    st.disk_hits.store(0, Ordering::Relaxed);
 }
 
 // --------------------------------------------------------- layer-stage memo
@@ -175,20 +194,20 @@ pub fn clear() {
 /// factoring's payoff; `stage_key_captures_every_layer_cost_input`
 /// proves it sound).
 #[derive(Clone, PartialEq, Eq, Hash)]
-struct StKey {
-    layers: usize,
-    hidden: usize,
-    heads: usize,
-    ffn: usize,
-    vocab: usize,
-    seq: usize,
-    hw_bits: [u64; 8],
+pub(crate) struct StKey {
+    pub(crate) layers: usize,
+    pub(crate) hidden: usize,
+    pub(crate) heads: usize,
+    pub(crate) ffn: usize,
+    pub(crate) vocab: usize,
+    pub(crate) seq: usize,
+    pub(crate) hw_bits: [u64; 8],
     // The stage reads PLX_CAL_EFF_BASE / MB_EXP / SHARD_EXP / BWD_FACTOR
     // through `kernels::cal`; the full CalKey is included (DP_EXPOSED
     // rides along — over-keying only costs sharing when that one var
     // changes, never correctness).
-    cal: CalKey,
-    stage: StageKey,
+    pub(crate) cal: CalKey,
+    pub(crate) stage: StageKey,
 }
 
 impl StKey {
@@ -215,9 +234,11 @@ impl StKey {
 }
 
 struct StageCache {
-    shards: Vec<Mutex<HashMap<StKey, LayerCosts>>>,
+    shards: Vec<Mutex<HashMap<StKey, (LayerCosts, bool)>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    disk_loaded: AtomicU64,
+    disk_hits: AtomicU64,
 }
 
 fn stage_cache() -> &'static StageCache {
@@ -226,6 +247,8 @@ fn stage_cache() -> &'static StageCache {
         shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
         hits: AtomicU64::new(0),
         misses: AtomicU64::new(0),
+        disk_loaded: AtomicU64::new(0),
+        disk_hits: AtomicU64::new(0),
     })
 }
 
@@ -243,15 +266,18 @@ pub fn layer_costs_cached(
     let c = stage_cache();
     let key = StKey::new(job, &v.layout, hw);
     let shard = key.shard();
-    if let Some(out) = c.shards[shard].lock().unwrap().get(&key) {
+    if let Some((out, from_disk)) = c.shards[shard].lock().unwrap().get(&key) {
         c.hits.fetch_add(1, Ordering::Relaxed);
+        if *from_disk {
+            c.disk_hits.fetch_add(1, Ordering::Relaxed);
+        }
         return *out;
     }
     // Compute outside the lock: misses of the same key may race, but the
     // stage is pure so last-write-wins stores an identical value.
     let out = compute();
     c.misses.fetch_add(1, Ordering::Relaxed);
-    c.shards[shard].lock().unwrap().insert(key, out);
+    c.shards[shard].lock().unwrap().insert(key, (out, false));
     out
 }
 
@@ -276,11 +302,11 @@ pub fn stage_len() -> usize {
 /// reach the executor only *through* `OpCosts`, whose bits are already
 /// keyed — the memo observes overrides via the costs, never the env.
 #[derive(Clone, PartialEq, Eq, Hash)]
-struct MsKey {
-    sched: Schedule,
-    pp: usize,
-    m: usize,
-    cost_bits: [u64; 5],
+pub(crate) struct MsKey {
+    pub(crate) sched: Schedule,
+    pub(crate) pp: usize,
+    pub(crate) m: usize,
+    pub(crate) cost_bits: [u64; 5],
 }
 
 impl MsKey {
@@ -295,9 +321,11 @@ impl MsKey {
 struct MsCache {
     /// `None` records a deadlocking key (cannot arise from validated
     /// layouts, but the memo must stay a pure function either way).
-    shards: Vec<Mutex<HashMap<MsKey, Option<Arc<Makespan>>>>>,
+    shards: Vec<Mutex<HashMap<MsKey, (Option<Arc<Makespan>>, bool)>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    disk_loaded: AtomicU64,
+    disk_hits: AtomicU64,
 }
 
 fn ms_cache() -> &'static MsCache {
@@ -306,6 +334,8 @@ fn ms_cache() -> &'static MsCache {
         shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
         hits: AtomicU64::new(0),
         misses: AtomicU64::new(0),
+        disk_loaded: AtomicU64::new(0),
+        disk_hits: AtomicU64::new(0),
     })
 }
 
@@ -324,15 +354,18 @@ pub fn makespan_cached(
     let c = ms_cache();
     let key = MsKey { sched, pp, m, cost_bits: costs.bits() };
     let shard = key.shard();
-    if let Some(hit) = c.shards[shard].lock().unwrap().get(&key) {
+    if let Some((hit, from_disk)) = c.shards[shard].lock().unwrap().get(&key) {
         c.hits.fetch_add(1, Ordering::Relaxed);
+        if *from_disk {
+            c.disk_hits.fetch_add(1, Ordering::Relaxed);
+        }
         return hit.clone();
     }
     // Compute outside the lock: racing misses of the same key both run
     // the pure executor; last write wins with an identical value.
     let out = compute().map(Arc::new);
     c.misses.fetch_add(1, Ordering::Relaxed);
-    c.shards[shard].lock().unwrap().insert(key, out.clone());
+    c.shards[shard].lock().unwrap().insert(key, (out.clone(), false));
     out
 }
 
@@ -345,6 +378,107 @@ pub fn makespan_stats() -> (u64, u64) {
 /// Memoized makespan entry count across all shards.
 pub fn makespan_len() -> usize {
     ms_cache().shards.iter().map(|s| s.lock().unwrap().len()).sum()
+}
+
+// ------------------------------------------------------ disk spill plumbing
+
+/// Per-memo persistence counters: entries loaded from a `PLX_CACHE_DIR`
+/// spill file this process, and hits served by such entries since.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    pub loaded: u64,
+    pub hits: u64,
+}
+
+/// `(evaluate, stage, makespan)` disk counters — the observable behind
+/// the warm-restart acceptance gate (`plx serve` stats report them).
+pub fn disk_stats() -> (DiskStats, DiskStats, DiskStats) {
+    let read = |l: &AtomicU64, h: &AtomicU64| DiskStats {
+        loaded: l.load(Ordering::Relaxed),
+        hits: h.load(Ordering::Relaxed),
+    };
+    let c = cache();
+    let st = stage_cache();
+    let m = ms_cache();
+    (
+        read(&c.disk_loaded, &c.disk_hits),
+        read(&st.disk_loaded, &st.disk_hits),
+        read(&m.disk_loaded, &m.disk_hits),
+    )
+}
+
+/// Insert a spilled evaluate entry. Vacant-only: an entry computed (or
+/// already loaded) in this process is never clobbered, so disk loads
+/// cannot perturb live state even if the file somehow disagreed.
+pub(crate) fn insert_disk_evaluate(key: Key, out: Outcome) {
+    let c = cache();
+    let shard = key.shard();
+    let mut map = c.shards[shard].lock().unwrap();
+    if !map.contains_key(&key) {
+        map.insert(key, (out, true));
+        c.disk_loaded.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Insert a spilled layer-stage entry (vacant-only, like
+/// [`insert_disk_evaluate`]).
+pub(crate) fn insert_disk_stage(key: StKey, costs: LayerCosts) {
+    let c = stage_cache();
+    let shard = key.shard();
+    let mut map = c.shards[shard].lock().unwrap();
+    if !map.contains_key(&key) {
+        map.insert(key, (costs, true));
+        c.disk_loaded.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Insert a spilled makespan entry (vacant-only; `None` preserves a
+/// recorded deadlock verdict).
+pub(crate) fn insert_disk_makespan(key: MsKey, ms: Option<Makespan>) {
+    let c = ms_cache();
+    let shard = key.shard();
+    let mut map = c.shards[shard].lock().unwrap();
+    if !map.contains_key(&key) {
+        map.insert(key, (ms.map(Arc::new), true));
+        c.disk_loaded.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Every evaluate entry (disk-loaded or computed), for spilling.
+pub(crate) fn snapshot_evaluate() -> Vec<(Key, Outcome)> {
+    cache()
+        .shards
+        .iter()
+        .flat_map(|s| {
+            s.lock().unwrap().iter().map(|(k, (v, _))| (k.clone(), *v)).collect::<Vec<_>>()
+        })
+        .collect()
+}
+
+/// Every layer-stage entry, for spilling.
+pub(crate) fn snapshot_stage() -> Vec<(StKey, LayerCosts)> {
+    stage_cache()
+        .shards
+        .iter()
+        .flat_map(|s| {
+            s.lock().unwrap().iter().map(|(k, (v, _))| (k.clone(), *v)).collect::<Vec<_>>()
+        })
+        .collect()
+}
+
+/// Every makespan entry, for spilling (`None` = recorded deadlock).
+pub(crate) fn snapshot_makespan() -> Vec<(MsKey, Option<Arc<Makespan>>)> {
+    ms_cache()
+        .shards
+        .iter()
+        .flat_map(|s| {
+            s.lock()
+                .unwrap()
+                .iter()
+                .map(|(k, (v, _))| (k.clone(), v.clone()))
+                .collect::<Vec<_>>()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -461,6 +595,30 @@ mod tests {
         let third = layer_costs(&job, &vmb, &A100);
         assert_ne!(first.layer_fwd.to_bits(), third.layer_fwd.to_bits());
         assert!(stage_len() > 0);
+    }
+
+    #[test]
+    fn disk_loaded_entries_serve_hits_and_count() {
+        // A gbs no other test uses, so this process has never computed
+        // the key: the fabricated outcome proves the hit came from the
+        // "disk" entry, and the disk counters must both move.
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 1984);
+        let l = Layout {
+            tp: 2, pp: 2, mb: 1, ckpt: true, kernel: Kernel::Flash2, sp: false,
+            sched: crate::layout::Schedule::OneF1B,
+        };
+        let v = validate(&job, &l).unwrap();
+        let fake = Outcome::Oom { required: 123.0, budget: 45.0 };
+        insert_disk_evaluate(Key::new(&job, &l, &A100), fake);
+        let (d0, _, _) = disk_stats();
+        assert!(d0.loaded >= 1);
+        let got = evaluate_cached(&job, &v, &A100);
+        assert_eq!(got, fake, "hit must come from the disk-loaded entry");
+        let (d1, _, _) = disk_stats();
+        assert!(d1.hits > d0.hits, "disk hit must be counted");
+        // Vacant-only: a second insert with a different value is ignored.
+        insert_disk_evaluate(Key::new(&job, &l, &A100), Outcome::KernelUnavailable);
+        assert_eq!(evaluate_cached(&job, &v, &A100), fake);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod cluster;
 pub mod kernels;
 pub mod memory;
 pub mod mfu;
+pub mod persist;
 pub mod schedule;
 pub mod step_time;
 

@@ -1,0 +1,710 @@
+//! Cross-process memo persistence (`PLX_CACHE_DIR`): spill the three
+//! process-global memos of [`super::cache`] to disk and warm-load them on
+//! start, so a cold `plx serve` daemon — or a batch CLI run — answers its
+//! first repeated query from entries an earlier process computed.
+//!
+//! Format (one text file per memo, see docs/cache.md for the full
+//! reference and the non-aliasing argument):
+//!
+//! * `evaluate.plxcache` / `stage.plxcache` / `makespan.plxcache`;
+//! * first line `plxcache v1 <memo>` — any version or memo-name mismatch
+//!   means the whole file is ignored (treated cold, never migrated);
+//! * one entry per line, space-separated tokens: integers in decimal,
+//!   every `f64` as the 16-hex-digit `to_bits` pattern — **bit-exact**,
+//!   so a loaded entry is indistinguishable from a computed one;
+//! * keys serialize the exact fields of the in-memory memo keys —
+//!   including the resolved [`CalKey`](crate::sim::kernels::CalKey)
+//!   calibration bits and the [`Hardware::bits`] patterns — so spilled
+//!   entries can never alias across calibrations or hardware;
+//! * lines sorted lexicographically: same entries, same bytes, from
+//!   either this module or its `tools/pysim.py` mirror;
+//! * writes go to a temp file in the same directory, then `rename` —
+//!   readers never observe a torn file;
+//! * a corrupt line is skipped (the rest of the file still loads).
+//!
+//! Loads are **vacant-only** inserts: a live entry always wins over the
+//! file, so even a stale or hand-edited cache can only miss, never
+//! corrupt. The memos are pure functions of their keys, which is what
+//! makes persistence sound at all: same key, same value, in any process.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::layout::{Job, Kernel, Layout};
+use crate::sim::cache;
+use crate::sim::cluster::Hardware;
+use crate::sim::kernels::{CalKey, CAL_VARS};
+use crate::sim::schedule::{Makespan, Schedule};
+use crate::sim::step_time::LayerCosts;
+use crate::sim::{MemoryBreakdown, Outcome, StepBreakdown};
+
+/// On-disk format version; bumped on any line-format change.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The environment variable that (when set and non-empty) enables
+/// persistence for every analytic command and the serve daemon.
+pub const CACHE_DIR_ENV: &str = "PLX_CACHE_DIR";
+
+/// Entries touched per memo by a load or save.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PersistStats {
+    pub evaluate: usize,
+    pub stage: usize,
+    pub makespan: usize,
+}
+
+impl PersistStats {
+    pub fn total(&self) -> usize {
+        self.evaluate + self.stage + self.makespan
+    }
+}
+
+/// The configured cache directory, if any.
+pub fn cache_dir() -> Option<PathBuf> {
+    match std::env::var(CACHE_DIR_ENV) {
+        Ok(v) if !v.is_empty() => Some(PathBuf::from(v)),
+        _ => None,
+    }
+}
+
+/// Load every memo file under `dir` into the process caches
+/// (vacant-only). Missing or version-mismatched files contribute zero
+/// entries; corrupt lines are skipped.
+pub fn load_all(dir: &Path) -> PersistStats {
+    let read = |name: &str| std::fs::read_to_string(dir.join(name)).unwrap_or_default();
+    let mut stats = PersistStats::default();
+    for (key, out) in parse_evaluate(&read("evaluate.plxcache")) {
+        cache::insert_disk_evaluate(key, out);
+        stats.evaluate += 1;
+    }
+    for (key, costs) in parse_stage(&read("stage.plxcache")) {
+        cache::insert_disk_stage(key, costs);
+        stats.stage += 1;
+    }
+    for (key, ms) in parse_makespan(&read("makespan.plxcache")) {
+        cache::insert_disk_makespan(key, ms);
+        stats.makespan += 1;
+    }
+    stats
+}
+
+/// Spill every memo entry (computed and loaded alike) to `dir`,
+/// atomically per file. Creates the directory if needed.
+pub fn save_all(dir: &Path) -> io::Result<PersistStats> {
+    std::fs::create_dir_all(dir)?;
+    let eval = cache::snapshot_evaluate();
+    let stage = cache::snapshot_stage();
+    let ms = cache::snapshot_makespan();
+    let stats = PersistStats { evaluate: eval.len(), stage: stage.len(), makespan: ms.len() };
+    write_atomic(dir, "evaluate.plxcache", &render_evaluate(&eval))?;
+    write_atomic(dir, "stage.plxcache", &render_stage(&stage))?;
+    write_atomic(dir, "makespan.plxcache", &render_makespan(&ms))?;
+    Ok(stats)
+}
+
+/// [`load_all`] when `PLX_CACHE_DIR` is configured; `None` otherwise.
+pub fn warm_start_if_configured() -> Option<PersistStats> {
+    cache_dir().map(|d| load_all(&d))
+}
+
+/// [`save_all`] when `PLX_CACHE_DIR` is configured. I/O failures are
+/// reported on stderr and swallowed — persistence is an accelerator,
+/// never a correctness dependency.
+pub fn save_if_configured() -> Option<PersistStats> {
+    let dir = cache_dir()?;
+    match save_all(&dir) {
+        Ok(stats) => Some(stats),
+        Err(e) => {
+            eprintln!("plx: warning: failed to write {}: {e}", dir.display());
+            None
+        }
+    }
+}
+
+fn write_atomic(dir: &Path, name: &str, content: &str) -> io::Result<()> {
+    let tmp = dir.join(format!(".{name}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, content)?;
+    std::fs::rename(&tmp, dir.join(name))
+}
+
+// ------------------------------------------------------------- rendering
+
+fn hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn hex_bits(bits: u64) -> String {
+    format!("{bits:016x}")
+}
+
+fn kernel_code(k: Kernel) -> &'static str {
+    match k {
+        Kernel::Torch => "torch",
+        Kernel::Fused => "fused",
+        Kernel::Flash1 => "flash1",
+        Kernel::Flash2 => "flash2",
+        Kernel::Flash2Rms => "flash2rms",
+    }
+}
+
+fn header(memo: &str) -> String {
+    format!("plxcache v{FORMAT_VERSION} {memo}\n")
+}
+
+/// Sorted-line file body: same entry set in, same bytes out, regardless
+/// of shard iteration order (and of which language wrote the file).
+fn body(memo: &str, mut lines: Vec<String>) -> String {
+    lines.sort();
+    let mut out = header(memo);
+    for l in lines {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+fn key_tokens(k: &cache::Key) -> String {
+    let mut t = vec![
+        k.layers.to_string(),
+        k.hidden.to_string(),
+        k.heads.to_string(),
+        k.ffn.to_string(),
+        k.vocab.to_string(),
+        k.seq.to_string(),
+        k.gpus.to_string(),
+        k.gpus_per_node.to_string(),
+        k.gbs.to_string(),
+    ];
+    t.extend(k.hw_bits.iter().map(|b| hex_bits(*b)));
+    t.extend(k.cal.0.iter().map(|b| hex_bits(*b)));
+    let l = &k.layout;
+    t.extend([
+        l.tp.to_string(),
+        l.pp.to_string(),
+        l.mb.to_string(),
+        (l.ckpt as u8).to_string(),
+        kernel_code(l.kernel).to_string(),
+        (l.sp as u8).to_string(),
+        l.sched.label(),
+    ]);
+    t.join(" ")
+}
+
+pub(crate) fn render_evaluate(entries: &[(cache::Key, Outcome)]) -> String {
+    let lines = entries
+        .iter()
+        .map(|(k, out)| {
+            let payload = match out {
+                Outcome::Ok { step_time_s, mfu, mem, step } => {
+                    let mut t = vec!["ok".to_string(), hex(*step_time_s), hex(*mfu)];
+                    t.extend(
+                        [
+                            mem.weights,
+                            mem.grads,
+                            mem.optimizer,
+                            mem.activations,
+                            mem.logits,
+                            mem.workspace,
+                            step.compute,
+                            step.tp_comm,
+                            step.pp_comm,
+                            step.bubble,
+                            step.dp_comm,
+                            step.optimizer,
+                        ]
+                        .iter()
+                        .map(|v| hex(*v)),
+                    );
+                    t.join(" ")
+                }
+                Outcome::Oom { required, budget } => {
+                    format!("oom {} {}", hex(*required), hex(*budget))
+                }
+                Outcome::KernelUnavailable => "unavail".to_string(),
+            };
+            format!("{} {payload}", key_tokens(k))
+        })
+        .collect();
+    body("evaluate", lines)
+}
+
+pub(crate) fn render_stage(entries: &[(cache::StKey, LayerCosts)]) -> String {
+    let lines = entries
+        .iter()
+        .map(|(k, c)| {
+            let mut t = vec![
+                k.layers.to_string(),
+                k.hidden.to_string(),
+                k.heads.to_string(),
+                k.ffn.to_string(),
+                k.vocab.to_string(),
+                k.seq.to_string(),
+            ];
+            t.extend(k.hw_bits.iter().map(|b| hex_bits(*b)));
+            t.extend(k.cal.0.iter().map(|b| hex_bits(*b)));
+            let (tp, mb, ckpt, kernel, sp) = k.stage;
+            t.extend([
+                tp.to_string(),
+                mb.to_string(),
+                (ckpt as u8).to_string(),
+                kernel_code(kernel).to_string(),
+                (sp as u8).to_string(),
+            ]);
+            t.extend(
+                [
+                    c.layer_fwd,
+                    c.layer_bwd,
+                    c.head_fwd,
+                    c.head_bwd,
+                    c.tp_per_layer,
+                    c.sp_factor,
+                    c.p2p_intra,
+                    c.p2p_inter,
+                    c.act_bytes,
+                    c.act_bytes_full,
+                ]
+                .iter()
+                .map(|v| hex(*v)),
+            );
+            t.join(" ")
+        })
+        .collect();
+    body("stage", lines)
+}
+
+pub(crate) fn render_makespan(
+    entries: &[(cache::MsKey, Option<std::sync::Arc<Makespan>>)],
+) -> String {
+    let lines = entries
+        .iter()
+        .map(|(k, ms)| {
+            let mut t = vec![k.sched.label(), k.pp.to_string(), k.m.to_string()];
+            t.extend(k.cost_bits.iter().map(|b| hex_bits(*b)));
+            match ms {
+                Some(ms) => {
+                    t.push(hex(ms.total));
+                    t.extend(ms.busy.iter().map(|v| hex(*v)));
+                }
+                None => t.push("deadlock".to_string()),
+            }
+            t.join(" ")
+        })
+        .collect();
+    body("makespan", lines)
+}
+
+// --------------------------------------------------------------- parsing
+
+/// Positional token cursor over one line.
+struct Toks<'a> {
+    it: std::str::SplitAsciiWhitespace<'a>,
+}
+
+impl<'a> Toks<'a> {
+    fn new(line: &'a str) -> Toks<'a> {
+        Toks { it: line.split_ascii_whitespace() }
+    }
+
+    fn s(&mut self) -> Option<&'a str> {
+        self.it.next()
+    }
+
+    fn usize(&mut self) -> Option<usize> {
+        self.s()?.parse().ok()
+    }
+
+    fn bits(&mut self) -> Option<u64> {
+        let t = self.s()?;
+        if t.len() != 16 {
+            return None;
+        }
+        u64::from_bits_str(t)
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        self.bits().map(f64::from_bits)
+    }
+
+    fn bool01(&mut self) -> Option<bool> {
+        match self.s()? {
+            "0" => Some(false),
+            "1" => Some(true),
+            _ => None,
+        }
+    }
+
+    fn done(&mut self) -> bool {
+        self.it.next().is_none()
+    }
+}
+
+trait FromBitsStr: Sized {
+    fn from_bits_str(s: &str) -> Option<Self>;
+}
+
+impl FromBitsStr for u64 {
+    fn from_bits_str(s: &str) -> Option<u64> {
+        u64::from_str_radix(s, 16).ok()
+    }
+}
+
+/// Validate the header and return the entry lines, or nothing on any
+/// version/name mismatch (the whole file is treated cold).
+fn entry_lines<'a>(text: &'a str, memo: &str) -> Vec<&'a str> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == format!("plxcache v{FORMAT_VERSION} {memo}") => {
+            lines.filter(|l| !l.trim().is_empty()).collect()
+        }
+        _ => Vec::new(),
+    }
+}
+
+fn parse_key(t: &mut Toks) -> Option<cache::Key> {
+    let (layers, hidden, heads, ffn, vocab, seq) =
+        (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
+    let (gpus, gpus_per_node, gbs) = (t.usize()?, t.usize()?, t.usize()?);
+    let mut hw_bits = [0u64; 8];
+    for b in &mut hw_bits {
+        *b = t.bits()?;
+    }
+    let mut cal = [0u64; CAL_VARS.len()];
+    for b in &mut cal {
+        *b = t.bits()?;
+    }
+    let layout = Layout {
+        tp: t.usize()?,
+        pp: t.usize()?,
+        mb: t.usize()?,
+        ckpt: t.bool01()?,
+        kernel: Kernel::parse(t.s()?)?,
+        sp: t.bool01()?,
+        sched: Schedule::parse(t.s()?)?,
+    };
+    Some(cache::Key {
+        layers,
+        hidden,
+        heads,
+        ffn,
+        vocab,
+        seq,
+        gpus,
+        gpus_per_node,
+        gbs,
+        hw_bits,
+        cal: CalKey(cal),
+        layout,
+    })
+}
+
+pub(crate) fn parse_evaluate(text: &str) -> Vec<(cache::Key, Outcome)> {
+    entry_lines(text, "evaluate")
+        .into_iter()
+        .filter_map(|line| {
+            let mut t = Toks::new(line);
+            let key = parse_key(&mut t)?;
+            let out = match t.s()? {
+                "ok" => {
+                    let (step_time_s, mfu) = (t.f64()?, t.f64()?);
+                    let mem = MemoryBreakdown {
+                        weights: t.f64()?,
+                        grads: t.f64()?,
+                        optimizer: t.f64()?,
+                        activations: t.f64()?,
+                        logits: t.f64()?,
+                        workspace: t.f64()?,
+                    };
+                    let step = StepBreakdown {
+                        compute: t.f64()?,
+                        tp_comm: t.f64()?,
+                        pp_comm: t.f64()?,
+                        bubble: t.f64()?,
+                        dp_comm: t.f64()?,
+                        optimizer: t.f64()?,
+                    };
+                    Outcome::Ok { step_time_s, mfu, mem, step }
+                }
+                "oom" => Outcome::Oom { required: t.f64()?, budget: t.f64()? },
+                "unavail" => Outcome::KernelUnavailable,
+                _ => return None,
+            };
+            t.done().then_some((key, out))
+        })
+        .collect()
+}
+
+pub(crate) fn parse_stage(text: &str) -> Vec<(cache::StKey, LayerCosts)> {
+    entry_lines(text, "stage")
+        .into_iter()
+        .filter_map(|line| {
+            let mut t = Toks::new(line);
+            let (layers, hidden, heads, ffn, vocab, seq) =
+                (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
+            let mut hw_bits = [0u64; 8];
+            for b in &mut hw_bits {
+                *b = t.bits()?;
+            }
+            let mut cal = [0u64; CAL_VARS.len()];
+            for b in &mut cal {
+                *b = t.bits()?;
+            }
+            let stage =
+                (t.usize()?, t.usize()?, t.bool01()?, Kernel::parse(t.s()?)?, t.bool01()?);
+            let costs = LayerCosts {
+                layer_fwd: t.f64()?,
+                layer_bwd: t.f64()?,
+                head_fwd: t.f64()?,
+                head_bwd: t.f64()?,
+                tp_per_layer: t.f64()?,
+                sp_factor: t.f64()?,
+                p2p_intra: t.f64()?,
+                p2p_inter: t.f64()?,
+                act_bytes: t.f64()?,
+                act_bytes_full: t.f64()?,
+            };
+            let key = cache::StKey {
+                layers,
+                hidden,
+                heads,
+                ffn,
+                vocab,
+                seq,
+                hw_bits,
+                cal: CalKey(cal),
+                stage,
+            };
+            t.done().then_some((key, costs))
+        })
+        .collect()
+}
+
+pub(crate) fn parse_makespan(text: &str) -> Vec<(cache::MsKey, Option<Makespan>)> {
+    entry_lines(text, "makespan")
+        .into_iter()
+        .filter_map(|line| {
+            let mut t = Toks::new(line);
+            let sched = Schedule::parse(t.s()?)?;
+            let (pp, m) = (t.usize()?, t.usize()?);
+            let mut cost_bits = [0u64; 5];
+            for b in &mut cost_bits {
+                *b = t.bits()?;
+            }
+            let key = cache::MsKey { sched, pp, m, cost_bits };
+            // Peek the payload discriminator without consuming a float.
+            let first = t.s()?;
+            if first == "deadlock" {
+                return t.done().then_some((key, None));
+            }
+            let total = f64::from_bits(u64::from_bits_str(first)?);
+            let mut busy = Vec::with_capacity(pp);
+            for _ in 0..pp {
+                busy.push(t.f64()?);
+            }
+            t.done().then_some((key, Some(Makespan { total, busy })))
+        })
+        .collect()
+}
+
+/// Construct an evaluate-memo key outside the cache module (the serve
+/// tests and the CLI warm-path probes need one without evaluating).
+pub(crate) fn evaluate_key(job: &Job, layout: &Layout, hw: &Hardware) -> cache::Key {
+    cache::Key {
+        layers: job.arch.layers,
+        hidden: job.arch.hidden,
+        heads: job.arch.heads,
+        ffn: job.arch.ffn,
+        vocab: job.arch.vocab,
+        seq: job.arch.seq,
+        gpus: job.cluster.gpus,
+        gpus_per_node: job.cluster.gpus_per_node,
+        gbs: job.gbs,
+        hw_bits: hw.bits(),
+        cal: crate::sim::kernels::cal_key(),
+        layout: *layout,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::preset;
+    use crate::sim::{A100, H100};
+    use crate::topo::Cluster;
+
+    fn sample_key(gbs: usize, hw: &Hardware) -> cache::Key {
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), gbs);
+        let l = Layout {
+            tp: 2,
+            pp: 2,
+            mb: 1,
+            ckpt: false,
+            kernel: Kernel::Flash2Rms,
+            sp: true,
+            sched: Schedule::Interleaved(2),
+        };
+        evaluate_key(&job, &l, hw)
+    }
+
+    fn sample_outcome() -> Outcome {
+        Outcome::Ok {
+            step_time_s: 1.03125,
+            mfu: 0.7057,
+            mem: MemoryBreakdown {
+                weights: 1.0,
+                grads: 2.0,
+                optimizer: 3.5,
+                activations: 4.25,
+                logits: 0.125,
+                workspace: 5e9,
+            },
+            step: StepBreakdown {
+                compute: 0.9,
+                tp_comm: 0.01,
+                pp_comm: 0.02,
+                bubble: 0.1,
+                dp_comm: 0.0,
+                optimizer: 0.001,
+            },
+        }
+    }
+
+    #[test]
+    fn evaluate_roundtrip_is_bit_exact() {
+        let entries = vec![
+            (sample_key(2048, &A100), sample_outcome()),
+            (sample_key(2048, &H100), Outcome::Oom { required: 99e9, budget: 80e9 }),
+            (sample_key(512, &A100), Outcome::KernelUnavailable),
+        ];
+        let text = render_evaluate(&entries);
+        assert!(text.starts_with("plxcache v1 evaluate\n"));
+        let back = parse_evaluate(&text);
+        assert_eq!(back.len(), entries.len());
+        for (k, out) in &entries {
+            let (_, got) =
+                back.iter().find(|(bk, _)| bk == k).expect("key must survive the roundtrip");
+            assert_eq!(got, out);
+        }
+        // Deterministic bytes: rendering the parsed entries reproduces
+        // the file exactly (sorted lines make order irrelevant).
+        assert_eq!(render_evaluate(&back), text);
+    }
+
+    #[test]
+    fn stage_and_makespan_roundtrip() {
+        let st_key = cache::StKey {
+            layers: 40,
+            hidden: 5120,
+            heads: 40,
+            ffn: 13824,
+            vocab: 32000,
+            seq: 2048,
+            hw_bits: A100.bits(),
+            cal: crate::sim::kernels::cal_key(),
+            stage: (2, 1, true, Kernel::Flash2, false),
+        };
+        let costs = LayerCosts {
+            layer_fwd: 0.001,
+            layer_bwd: 0.002,
+            head_fwd: 0.0005,
+            head_bwd: 0.001,
+            tp_per_layer: 1e-4,
+            sp_factor: 0.95,
+            p2p_intra: 1e-5,
+            p2p_inter: 1e-4,
+            act_bytes: 3.2e8,
+            act_bytes_full: 6.4e8,
+        };
+        let text = render_stage(&[(st_key.clone(), costs)]);
+        let back = parse_stage(&text);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].0, st_key);
+        assert_eq!(back[0].1.layer_fwd.to_bits(), costs.layer_fwd.to_bits());
+        assert_eq!(back[0].1.act_bytes_full.to_bits(), costs.act_bytes_full.to_bits());
+
+        let ms_key = cache::MsKey {
+            sched: Schedule::OneF1B,
+            pp: 3,
+            m: 16,
+            cost_bits: [1, 2, 3, 4, 5],
+        };
+        let ms = Makespan { total: 12.5, busy: vec![1.0, 2.0, 3.0] };
+        let dead_key = cache::MsKey { pp: 2, ..ms_key.clone() };
+        let text = render_makespan(&[
+            (ms_key.clone(), Some(std::sync::Arc::new(ms.clone()))),
+            (dead_key.clone(), None),
+        ]);
+        let back = parse_makespan(&text);
+        assert_eq!(back.len(), 2);
+        let (_, got) = back.iter().find(|(k, _)| *k == ms_key).unwrap();
+        let got = got.as_ref().unwrap();
+        assert_eq!(got.total.to_bits(), ms.total.to_bits());
+        assert_eq!(got.busy.len(), 3);
+        let (_, dead) = back.iter().find(|(k, _)| *k == dead_key).unwrap();
+        assert!(dead.is_none());
+    }
+
+    #[test]
+    fn version_or_memo_mismatch_is_cold() {
+        let good = render_evaluate(&[(sample_key(2048, &A100), sample_outcome())]);
+        let entry = good.lines().nth(1).unwrap();
+        for bad_header in ["plxcache v0 evaluate", "plxcache v2 evaluate", "plxcache v1 stage"] {
+            let text = format!("{bad_header}\n{entry}\n");
+            assert!(parse_evaluate(&text).is_empty(), "{bad_header} must be ignored");
+        }
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped_not_fatal() {
+        let good = render_evaluate(&[(sample_key(2048, &A100), sample_outcome())]);
+        let entry = good.lines().nth(1).unwrap();
+        let text = format!(
+            "plxcache v1 evaluate\nnot a line\n{entry}\n{entry} trailing-garbage\n{}\n",
+            &entry[..entry.len() / 2]
+        );
+        let back = parse_evaluate(&text);
+        assert_eq!(back.len(), 1, "exactly the intact line must load");
+    }
+
+    #[test]
+    fn distinct_cal_and_hw_bits_stay_distinct_on_disk() {
+        // The non-aliasing argument made executable: keys that differ
+        // only in hardware bits or calibration bits serialize to
+        // different lines, so a load can never cross-pollinate them.
+        let a = sample_key(2048, &A100);
+        let h = sample_key(2048, &H100);
+        let mut recal = a.clone();
+        recal.cal.0[0] ^= 1; // one calibration var, one ulp apart
+        let text = render_evaluate(&[
+            (a.clone(), sample_outcome()),
+            (h, Outcome::KernelUnavailable),
+            (recal, Outcome::Oom { required: 1.0, budget: 2.0 }),
+        ]);
+        let back = parse_evaluate(&text);
+        assert_eq!(back.len(), 3);
+        let distinct: std::collections::HashSet<String> =
+            text.lines().skip(1).map(|l| l.to_string()).collect();
+        assert_eq!(distinct.len(), 3);
+        // And the A100 entry still maps to exactly its own outcome.
+        let (_, got) = back.iter().find(|(k, _)| *k == a).unwrap();
+        assert_eq!(*got, sample_outcome());
+    }
+
+    #[test]
+    fn save_and_load_through_the_real_caches() {
+        // A gbs unique to this test so the vacant-only load is provable.
+        let key = sample_key(1999, &A100);
+        let out = Outcome::Oom { required: 7.0, budget: 3.0 };
+        cache::insert_disk_evaluate(key.clone(), out);
+        let dir = std::env::temp_dir().join(format!("plxcache-test-{}", std::process::id()));
+        let saved = save_all(&dir).unwrap();
+        assert!(saved.evaluate >= 1);
+        let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
+        let back = parse_evaluate(&text);
+        let (_, got) = back.iter().find(|(k, _)| *k == key).expect("entry must be in the file");
+        assert_eq!(*got, out);
+        // load_all re-inserts without error (everything already present).
+        let loaded = load_all(&dir);
+        assert!(loaded.evaluate >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

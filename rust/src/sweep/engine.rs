@@ -214,6 +214,78 @@ pub fn evaluate_space(
         .collect()
 }
 
+/// Multi-hardware sweep for one preset (`plx compare --hw a,b,...`):
+/// every `(hardware, layout)` pair of the cross-product goes through
+/// **one** group-factored dispatch instead of one full sweep per
+/// hardware. Buckets are `(hardware index, stage key)` — the layer-cost
+/// stage is keyed by hardware bits, so a bucket still computes its stage
+/// exactly once — and rows scatter back into per-hardware slot vectors
+/// by enumeration index. Outcomes flow through the shared evaluation
+/// cache, so the result is bit-identical to running [`run_jobs`] once
+/// per hardware (the serial path literally does; the equivalence test
+/// pins the parallel path against it).
+pub fn run_compare(
+    preset: &SweepPreset,
+    hws: &[(String, Hardware)],
+    jobs: usize,
+) -> Vec<(String, SweepResult)> {
+    let jobs = if jobs == 0 { pool::effective_jobs() } else { jobs };
+    if jobs <= 1 || hws.len() <= 1 {
+        return hws.iter().map(|(n, hw)| (n.clone(), run_jobs(preset, hw, jobs))).collect();
+    }
+    let job = preset.job();
+    let layouts: Vec<ValidLayout> = LayoutSpace::new(
+        &job,
+        &preset.tps,
+        &preset.pps,
+        &preset.mbs,
+        &preset.ckpts,
+        &preset.kernels,
+        &preset.sps,
+        &preset.scheds,
+    )
+    .collect();
+    // One pass over the cross-product: bucket by (hardware, stage key).
+    let mut group_index: HashMap<(usize, StageKey), usize> = HashMap::new();
+    let mut groups: Vec<Vec<(usize, usize, ValidLayout)>> = Vec::new();
+    for (h, _) in hws.iter().enumerate() {
+        for (i, v) in layouts.iter().enumerate() {
+            let gi = *group_index.entry((h, v.layout.stage_key())).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[gi].push((h, i, *v));
+        }
+    }
+    let hw_list: Vec<Hardware> = hws.iter().map(|(_, hw)| *hw).collect();
+    let n = layouts.len();
+    let computed = pool::map_jobs_coarse(groups, jobs, move |_gi, group| {
+        group
+            .iter()
+            .map(|(h, i, v)| {
+                (*h, *i, Row { outcome: cache::evaluate_cached(&job, v, &hw_list[*h]), v: *v })
+            })
+            .collect::<Vec<_>>()
+    });
+    let mut slots: Vec<Vec<Option<Row>>> =
+        hws.iter().map(|_| (0..n).map(|_| None).collect()).collect();
+    for part in computed {
+        for (h, i, row) in part {
+            slots[h][i] = Some(row);
+        }
+    }
+    hws.iter()
+        .zip(slots)
+        .map(|((name, _), rows)| {
+            let rows = rows
+                .into_iter()
+                .map(|s| s.expect("every (hw, layout) pair evaluates to exactly one row"))
+                .collect();
+            (name.clone(), SweepResult { preset_name: preset.name.to_string(), job, rows })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +476,30 @@ mod tests {
             }
         }
         assert!(diverged > 0, "no runnable rows shared between the hardware sweeps");
+    }
+
+    #[test]
+    fn fused_compare_matches_per_hardware_sweeps() {
+        // The `plx compare --hw` fusion gate: one cross-product dispatch
+        // must reproduce the serial one-sweep-per-hardware rows exactly
+        // (same layouts, same order, same outcomes), for every hw.
+        use crate::sim::H100;
+        let p = &main_presets()[0];
+        let hws = vec![("a100".to_string(), A100), ("h100".to_string(), H100)];
+        let fused = run_compare(p, &hws, 4);
+        assert_eq!(fused.len(), 2);
+        for ((name, got), (want_name, hw)) in fused.iter().zip(&hws) {
+            assert_eq!(name, want_name);
+            let serial = run_jobs(p, hw, 1);
+            assert_rows_identical(&serial, got);
+        }
+        // The rendered compare report is identical through either path.
+        let serial_results: Vec<(String, SweepResult)> =
+            hws.iter().map(|(n, hw)| (n.clone(), run_jobs(p, hw, 1))).collect();
+        assert_eq!(
+            crate::sweep::report::render_compare(&fused),
+            crate::sweep::report::render_compare(&serial_results)
+        );
     }
 
     #[test]

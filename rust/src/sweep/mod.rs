@@ -13,5 +13,5 @@ pub mod presets;
 pub mod report;
 pub mod table2;
 
-pub use engine::{evaluate_layouts, evaluate_space, run, run_jobs, Row, SweepResult};
+pub use engine::{evaluate_layouts, evaluate_space, run, run_compare, run_jobs, Row, SweepResult};
 pub use presets::{by_name, for_table, main_presets, seqpar_presets, SweepPreset};

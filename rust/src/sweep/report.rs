@@ -10,6 +10,14 @@ use crate::util::table;
 /// actually left the paper's 1F1B (keeps the paper-table fixtures
 /// byte-stable).
 pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
+    render_top(result, with_sp_column, None)
+}
+
+/// [`render`] with an optional row cap (`plx sweep --top N`, and the
+/// serve protocol's `"top"` field): only the first `N` sorted rows are
+/// printed. The footer keeps the full-space counts — the cap limits the
+/// table, not the sweep.
+pub fn render_top(result: &SweepResult, with_sp_column: bool, top: Option<usize>) -> String {
     let with_sched_column =
         result.rows.iter().any(|r| r.layout().sched != crate::layout::Schedule::OneF1B);
     let mut headers = vec!["Step Time", "MFU", "Activation", "Kernel", "MB", "TP", "PP"];
@@ -19,8 +27,9 @@ pub fn render(result: &SweepResult, with_sp_column: bool) -> String {
     if with_sched_column {
         headers.push("Schedule");
     }
-    let rows: Vec<Vec<String>> = result
-        .sorted()
+    let sorted = result.sorted();
+    let shown = top.unwrap_or(sorted.len()).min(sorted.len());
+    let rows: Vec<Vec<String>> = sorted[..shown]
         .iter()
         .map(|r| {
             let l = r.layout();
@@ -171,6 +180,20 @@ mod tests {
         assert!(t.contains("OOM Error"));
         assert!(t.contains("every_layer"));
         assert!(t.contains("disabled"));
+    }
+
+    #[test]
+    fn top_caps_table_rows_but_not_the_footer() {
+        let r = run(&main_presets()[0], &A100);
+        let full = render_top(&r, false, None);
+        assert_eq!(full, render(&r, false), "top=None must be the plain render");
+        let capped = render_top(&r, false, Some(3));
+        // Header + separator + 3 rows + blank + footer.
+        assert!(capped.lines().count() < full.lines().count());
+        let footer = format!("of {} configs", r.rows.len());
+        assert!(capped.contains(&footer), "footer must keep full-space counts");
+        // An over-large cap is the identity.
+        assert_eq!(render_top(&r, false, Some(r.rows.len() + 10)), full);
     }
 
     #[test]

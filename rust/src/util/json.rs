@@ -1,11 +1,38 @@
-//! Minimal JSON parser (substrate: serde_json is unavailable offline).
+//! Minimal JSON reader/writer (substrate: serde_json is unavailable
+//! offline).
 //!
-//! Supports the full JSON grammar minus exotic number forms; good enough for
-//! `artifacts/*/manifest.json` and the config files under `configs/`.
+//! Two layers:
+//!
+//! * [`Reader`] — a **pull-style event reader** (picojson idiom): one
+//!   token per [`Reader::next`] call, an explicit fixed-size container
+//!   stack instead of recursion (nesting deeper than [`MAX_DEPTH`] is an
+//!   error, not a stack overflow), and borrowed string slices whenever
+//!   the input contains no escapes — no allocation per token on the
+//!   common path. `plx serve` parses every request through it.
+//! * [`Json`] — a tree built iteratively on top of the reader, plus a
+//!   **canonical writer** ([`Json::write`]): object keys sorted (the
+//!   `BTreeMap` order), no insignificant whitespace, and a deterministic
+//!   number form ([`fmt_f64`]) that `tools/pysim.py` mirrors digit for
+//!   digit, so `write(parse(x))` is a canonical form both languages
+//!   agree on byte-exactly.
+//!
+//! Strictness (shared by both layers, mirrored by pysim):
+//! * duplicate object keys are an error (requests must be unambiguous);
+//! * non-finite numerals (`1e999`) are an error — every `Json::Num` is
+//!   finite by construction;
+//! * the full JSON number grammar is enforced (`01`, `1.`, `.5`, `1e`
+//!   are rejected even where `str::parse::<f64>` would accept them).
+//!
 //! Strings support the standard escapes incl. `\uXXXX` (BMP only).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Containers may nest at most this deep (reader stack bound; adversarial
+/// `[[[[...` inputs fail with "nesting too deep" instead of exhausting
+/// the call stack).
+pub const MAX_DEPTH: usize = 32;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,17 +60,447 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
-impl Json {
-    /// Parse a complete JSON document (trailing whitespace allowed).
-    pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
-        p.ws();
-        let v = p.value()?;
-        p.ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing garbage"));
+// ------------------------------------------------------------ pull reader
+
+/// One parse event. `Key`/`Str` borrow from the input when the string
+/// contains no escape sequences.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    BeginObject,
+    EndObject,
+    BeginArray,
+    EndArray,
+    /// An object member key (always followed by the member's value
+    /// events).
+    Key(Cow<'a, str>),
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(Cow<'a, str>),
+}
+
+/// What the state machine expects next.
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    /// A value (document start, after `[`, after `,` in an array, after
+    /// a key's `:`).
+    Value,
+    /// A value or `]` (immediately after `[`).
+    ValueOrEnd,
+    /// A key or `}` (immediately after `{`).
+    KeyOrEnd,
+    /// A key (after `,` inside an object — trailing commas are errors).
+    Key,
+    /// `,` or the container's closing bracket.
+    CommaOrEnd,
+    /// The document is complete; only trailing whitespace may follow.
+    Done,
+}
+
+/// Pull-style JSON tokenizer. Container nesting is tracked in a fixed
+/// `u64` bitset (bit set = object, clear = array) bounded by
+/// [`MAX_DEPTH`]; `next` never recurses and allocates only when a string
+/// token contains escapes.
+pub struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+    /// Bit `d` describes the container at depth `d+1`: 1 = object.
+    objs: u64,
+    state: State,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(s: &'a str) -> Reader<'a> {
+        Reader { b: s.as_bytes(), i: 0, depth: 0, objs: 0, state: State::Value }
+    }
+
+    /// Byte offset of the next unread input (diagnostics).
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { offset: self.i, msg: msg.to_string() }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn in_object(&self) -> bool {
+        self.depth > 0 && (self.objs >> (self.depth - 1)) & 1 == 1
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<(), JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        if is_obj {
+            self.objs |= 1 << self.depth;
+        } else {
+            self.objs &= !(1 << self.depth);
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn pop(&mut self) {
+        self.depth -= 1;
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    /// State entered after a complete value at the current depth.
+    fn after_value(&mut self) {
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    /// Next event, `None` exactly once at the end of a complete document.
+    pub fn next(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        self.ws();
+        match self.state {
+            State::Done => {
+                if self.i != self.b.len() {
+                    return Err(self.err("trailing garbage"));
+                }
+                Ok(None)
+            }
+            State::Value | State::ValueOrEnd => {
+                if self.state == State::ValueOrEnd && self.peek() == Some(b']') {
+                    self.i += 1;
+                    self.pop();
+                    return Ok(Some(Event::EndArray));
+                }
+                self.value_event().map(Some)
+            }
+            State::Key | State::KeyOrEnd => {
+                if self.state == State::KeyOrEnd && self.peek() == Some(b'}') {
+                    self.i += 1;
+                    self.pop();
+                    return Ok(Some(Event::EndObject));
+                }
+                if self.peek() != Some(b'"') {
+                    return Err(self.err("expected '\"' (object key)"));
+                }
+                let key = self.string()?;
+                self.ws();
+                if self.peek() != Some(b':') {
+                    return Err(self.err("expected ':'"));
+                }
+                self.i += 1;
+                self.state = State::Value;
+                Ok(Some(Event::Key(key)))
+            }
+            State::CommaOrEnd => match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                    self.state = if self.in_object() { State::Key } else { State::Value };
+                    self.next()
+                }
+                Some(b'}') if self.in_object() => {
+                    self.i += 1;
+                    self.pop();
+                    Ok(Some(Event::EndObject))
+                }
+                Some(b']') if !self.in_object() => {
+                    self.i += 1;
+                    self.pop();
+                    Ok(Some(Event::EndArray))
+                }
+                _ => Err(self.err(if self.in_object() {
+                    "expected ',' or '}'"
+                } else {
+                    "expected ',' or ']'"
+                })),
+            },
+        }
+    }
+
+    fn lit(&mut self, s: &str, ev: Event<'a>) -> Result<Event<'a>, JsonError> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            self.after_value();
+            Ok(ev)
+        } else {
+            Err(self.err(&format!("expected '{s}'")))
+        }
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.push(true)?;
+                self.state = State::KeyOrEnd;
+                Ok(Event::BeginObject)
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.push(false)?;
+                self.state = State::ValueOrEnd;
+                Ok(Event::BeginArray)
+            }
+            Some(b'"') => {
+                let s = self.string()?;
+                self.after_value();
+                Ok(Event::Str(s))
+            }
+            Some(b't') => self.lit("true", Event::Bool(true)),
+            Some(b'f') => self.lit("false", Event::Bool(false)),
+            Some(b'n') => self.lit("null", Event::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(Event::Num(n))
+            }
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    /// Parse a string token. Escape-free strings are borrowed from the
+    /// input; escapes fall back to an owned decode.
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.i += 1;
+        let start = self.i;
+        // Fast path: scan for the closing quote with no escapes.
+        let mut j = self.i;
+        while j < self.b.len() {
+            match self.b[j] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..j])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    self.i = j + 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                b'\\' => break,
+                _ => j += 1,
+            }
+        }
+        if j >= self.b.len() {
+            self.i = self.b.len();
+            return Err(self.err("unterminated string"));
+        }
+        // Slow path: decode escapes into an owned buffer.
+        let mut out = String::new();
+        out.push_str(
+            std::str::from_utf8(&self.b[start..j]).map_err(|_| self.err("invalid utf-8"))?,
+        );
+        self.i = j;
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(Cow::Owned(out)),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(self.err("short \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                _ => {
+                    // Re-decode UTF-8 starting at c.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    if start + len > self.b.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    let s = std::str::from_utf8(&self.b[start..start + len])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    out.push_str(s);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    /// Full JSON number grammar: `-? (0 | [1-9][0-9]*) (\.[0-9]+)?
+    /// ([eE][+-]?[0-9]+)?`, finite-valued.
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        // Integer part: '0' alone, or a nonzero digit run.
+        match self.peek() {
+            Some(b'0') => {
+                self.i += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zero"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.err("bad number")),
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("bad number"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("bad number"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let v: f64 = s.parse().map_err(|_| self.err("bad number"))?;
+        if !v.is_finite() {
+            return Err(self.err("number overflows f64"));
         }
         Ok(v)
+    }
+}
+
+// ------------------------------------------------------- tree parse/write
+
+impl Json {
+    /// Parse a complete JSON document (trailing whitespace allowed).
+    /// Built iteratively on the pull [`Reader`] — same depth bound, same
+    /// strictness — plus duplicate-key rejection at the tree layer.
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        enum Ctr {
+            Arr(Vec<Json>),
+            Obj(BTreeMap<String, Json>, Option<String>),
+        }
+        let mut r = Reader::new(s);
+        let mut stack: Vec<Ctr> = Vec::new();
+        let mut root: Option<Json> = None;
+        let attach = |stack: &mut Vec<Ctr>, root: &mut Option<Json>, v: Json| match stack
+            .last_mut()
+        {
+            Some(Ctr::Arr(items)) => items.push(v),
+            Some(Ctr::Obj(map, key)) => {
+                let k = key.take().expect("reader emits Key before each member value");
+                map.insert(k, v);
+            }
+            None => *root = Some(v),
+        };
+        while let Some(ev) = r.next()? {
+            match ev {
+                Event::BeginArray => stack.push(Ctr::Arr(Vec::new())),
+                Event::BeginObject => stack.push(Ctr::Obj(BTreeMap::new(), None)),
+                Event::Key(k) => match stack.last_mut() {
+                    Some(Ctr::Obj(map, key)) => {
+                        if map.contains_key(k.as_ref()) {
+                            return Err(JsonError {
+                                offset: r.offset(),
+                                msg: format!("duplicate key \"{k}\""),
+                            });
+                        }
+                        *key = Some(k.into_owned());
+                    }
+                    _ => unreachable!("reader emits Key only inside objects"),
+                },
+                Event::EndArray | Event::EndObject => {
+                    let v = match stack.pop().expect("reader balances containers") {
+                        Ctr::Arr(items) => Json::Arr(items),
+                        Ctr::Obj(map, _) => Json::Obj(map),
+                    };
+                    attach(&mut stack, &mut root, v);
+                }
+                Event::Null => attach(&mut stack, &mut root, Json::Null),
+                Event::Bool(b) => attach(&mut stack, &mut root, Json::Bool(b)),
+                Event::Num(n) => attach(&mut stack, &mut root, Json::Num(n)),
+                Event::Str(s) => attach(&mut stack, &mut root, Json::Str(s.into_owned())),
+            }
+        }
+        root.ok_or(JsonError { offset: 0, msg: "empty document".to_string() })
+    }
+
+    /// Canonical serialization: object keys in `BTreeMap` (byte) order,
+    /// no insignificant whitespace, strings minimally escaped, numbers
+    /// via [`fmt_f64`]. `write(parse(x))` is the canonical form of `x`;
+    /// `parse(write(v)) == v` for every finite tree. Iterative (explicit
+    /// work stack), like the reader. `tools/pysim.py::json_write` mirrors
+    /// the bytes exactly — serve responses and cache files built from
+    /// either side compare byte-for-byte.
+    pub fn write(&self) -> String {
+        enum Task<'a> {
+            Val(&'a Json),
+            Lit(&'static str),
+            Key(&'a str),
+        }
+        let mut out = String::new();
+        let mut work: Vec<Task> = vec![Task::Val(self)];
+        while let Some(t) = work.pop() {
+            match t {
+                Task::Lit(s) => out.push_str(s),
+                Task::Key(k) => {
+                    write_str(&mut out, k);
+                    out.push(':');
+                }
+                Task::Val(v) => match v {
+                    Json::Null => out.push_str("null"),
+                    Json::Bool(true) => out.push_str("true"),
+                    Json::Bool(false) => out.push_str("false"),
+                    Json::Num(n) => out.push_str(&fmt_f64(*n)),
+                    Json::Str(s) => write_str(&mut out, s),
+                    Json::Arr(items) => {
+                        out.push('[');
+                        work.push(Task::Lit("]"));
+                        for (i, item) in items.iter().enumerate().rev() {
+                            work.push(Task::Val(item));
+                            if i > 0 {
+                                work.push(Task::Lit(","));
+                            }
+                        }
+                    }
+                    Json::Obj(map) => {
+                        out.push('{');
+                        work.push(Task::Lit("}"));
+                        for (i, (k, item)) in map.iter().enumerate().rev() {
+                            work.push(Task::Val(item));
+                            work.push(Task::Key(k));
+                            if i > 0 {
+                                work.push(Task::Lit(","));
+                            }
+                        }
+                    }
+                },
+            }
+        }
+        out
     }
 
     // ----- typed accessors (None on type mismatch) -----
@@ -116,186 +573,87 @@ impl Json {
     }
 }
 
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
+/// Append `s` as a JSON string literal: `"` `\` and ASCII control
+/// characters escaped (`\n \r \t \b \f` shorthands, `\u00xx` otherwise),
+/// everything else — including non-ASCII — passed through as UTF-8.
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError { offset: self.i, msg: msg.to_string() }
+/// Deterministic, cross-language canonical decimal form of a finite f64.
+///
+/// * zero: `0` / `-0`;
+/// * integral values below 10^15: plain integer digits;
+/// * everything else: the shortest correctly-rounded scientific mantissa
+///   (minimal precision whose parse round-trips bit-exactly), rendered
+///   positionally for decimal exponents in `[-4, 15]` and as `<mant>e<exp>`
+///   outside.
+///
+/// Both halves use only correctly-rounded fixed-precision conversions, so
+/// `tools/pysim.py::fmt_f64` reproduces the exact bytes — this (not the
+/// diverging `Display`/`repr` shortest forms) is what makes canonical
+/// JSON comparable across the Rust and Python sides.
+///
+/// Non-finite inputs cannot come from [`Json::parse`]; a programmatic one
+/// serializes as `null` (defensive, mirrored by pysim).
+pub fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "null".to_string();
     }
-
-    fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
-            self.i += 1;
+    if v == 0.0 {
+        return if v.is_sign_negative() { "-0".to_string() } else { "0".to_string() };
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        return format!("{}", v as i64);
+    }
+    // Minimal round-trip precision in scientific form.
+    let mut sci = format!("{:.17e}", v);
+    for p in 0..17 {
+        let s = format!("{:.*e}", p, v);
+        if s.parse::<f64>().map(f64::to_bits) == Ok(v.to_bits()) {
+            sci = s;
+            break;
         }
     }
-
-    fn peek(&self) -> Option<u8> {
-        self.b.get(self.i).copied()
+    let (mant, exp) = sci.split_once('e').expect("{:e} always contains an exponent");
+    let exp: i32 = exp.parse().expect("{:e} exponent is an integer");
+    if !(-4..=15).contains(&exp) {
+        return format!("{mant}e{exp}");
     }
-
-    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
+    // Positional rendering: digits of the mantissa with the point moved
+    // `exp` places right of the first digit.
+    let (sign, m) = match mant.strip_prefix('-') {
+        Some(rest) => ("-", rest),
+        None => ("", mant),
+    };
+    let digits: String = m.chars().filter(|c| *c != '.').collect();
+    let body = if exp >= 0 {
+        let ip = exp as usize + 1;
+        if digits.len() <= ip {
+            format!("{digits}{}", "0".repeat(ip - digits.len()))
         } else {
-            Err(self.err(&format!("expected '{}'", c as char)))
+            format!("{}.{}", &digits[..ip], &digits[ip..])
         }
-    }
-
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
-        if self.b[self.i..].starts_with(s.as_bytes()) {
-            self.i += s.len();
-            Ok(v)
-        } else {
-            Err(self.err(&format!("expected '{s}'")))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("expected a JSON value")),
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'{')?;
-        let mut map = BTreeMap::new();
-        self.ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
-            return Ok(Json::Obj(map));
-        }
-        loop {
-            self.ws();
-            let key = self.string()?;
-            self.ws();
-            self.eat(b':')?;
-            self.ws();
-            let val = self.value()?;
-            map.insert(key, val);
-            self.ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(map));
-                }
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'[')?;
-        let mut out = Vec::new();
-        self.ws();
-        if self.peek() == Some(b']') {
-            self.i += 1;
-            return Ok(Json::Arr(out));
-        }
-        loop {
-            self.ws();
-            out.push(self.value()?);
-            self.ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b']') => {
-                    self.i += 1;
-                    return Ok(Json::Arr(out));
-                }
-                _ => return Err(self.err("expected ',' or ']'")),
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
-        let mut out = String::new();
-        loop {
-            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
-            self.i += 1;
-            match c {
-                b'"' => return Ok(out),
-                b'\\' => {
-                    let e = self.peek().ok_or_else(|| self.err("bad escape"))?;
-                    self.i += 1;
-                    match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'b' => out.push('\u{0008}'),
-                        b'f' => out.push('\u{000C}'),
-                        b'n' => out.push('\n'),
-                        b'r' => out.push('\r'),
-                        b't' => out.push('\t'),
-                        b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err(self.err("short \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
-                        }
-                        _ => return Err(self.err("unknown escape")),
-                    }
-                }
-                _ => {
-                    // Re-decode UTF-8 starting at c.
-                    let start = self.i - 1;
-                    let len = utf8_len(c);
-                    if start + len > self.b.len() {
-                        return Err(self.err("truncated utf-8"));
-                    }
-                    let s = std::str::from_utf8(&self.b[start..start + len])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    out.push_str(s);
-                    self.i = start + len;
-                }
-            }
-        }
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
-    }
+    } else {
+        format!("0.{}{digits}", "0".repeat((-exp - 1) as usize))
+    };
+    format!("{sign}{body}")
 }
 
 fn utf8_len(first: u8) -> usize {
@@ -373,5 +731,195 @@ mod tests {
             p.get("shape").as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect::<Vec<_>>(),
             vec![256, 64]
         );
+    }
+
+    // ----- pull reader -----
+
+    #[test]
+    fn reader_emits_expected_event_stream() {
+        let mut r = Reader::new(r#"{"a": [1, true], "b": "x"}"#);
+        let mut evs = Vec::new();
+        while let Some(e) = r.next().unwrap() {
+            evs.push(e);
+        }
+        assert_eq!(
+            evs,
+            vec![
+                Event::BeginObject,
+                Event::Key("a".into()),
+                Event::BeginArray,
+                Event::Num(1.0),
+                Event::Bool(true),
+                Event::EndArray,
+                Event::Key("b".into()),
+                Event::Str("x".into()),
+                Event::EndObject,
+            ]
+        );
+        // Exhausted readers keep returning None.
+        assert_eq!(r.next().unwrap(), None);
+    }
+
+    #[test]
+    fn reader_borrows_escape_free_strings() {
+        let doc = r#"["plain", "esc\n"]"#;
+        let mut r = Reader::new(doc);
+        assert_eq!(r.next().unwrap(), Some(Event::BeginArray));
+        match r.next().unwrap().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected borrowed str, got {other:?}"),
+        }
+        match r.next().unwrap().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\n"),
+            other => panic!("expected owned str, got {other:?}"),
+        }
+    }
+
+    // ----- adversarial inputs (satellite: JSON layer coverage) -----
+
+    #[test]
+    fn rejects_truncated_documents() {
+        for doc in [
+            "", "[", "[1", "[1,", "{", "{\"a\"", "{\"a\":", "{\"a\":1", "\"abc", "12e",
+            "tru", "-",
+        ] {
+            assert!(Json::parse(doc).is_err(), "accepted truncated {doc:?}");
+        }
+    }
+
+    #[test]
+    fn depth_bound_is_exact() {
+        // MAX_DEPTH nested arrays parse; one more is rejected with a
+        // bounded-stack error, not a stack overflow.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        // Same bound through objects.
+        let mut doc = String::new();
+        for _ in 0..MAX_DEPTH + 1 {
+            doc.push_str("{\"k\":");
+        }
+        assert!(Json::parse(&doc).unwrap_err().msg.contains("nesting too deep"));
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        let err = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate key"), "{err}");
+        // Nested objects each get their own key set.
+        assert!(Json::parse(r#"{"a": {"a": 1}, "b": {"a": 2}}"#).is_ok());
+        assert!(Json::parse(r#"{"a": {"x": 1, "x": 2}}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_numerals() {
+        for doc in ["1e999", "-1e999", "1e309", "[1, 2e999]"] {
+            let err = Json::parse(doc).unwrap_err();
+            assert!(err.msg.contains("overflows"), "{doc}: {err}");
+        }
+        // The grammar already excludes the textual non-finite spellings.
+        for doc in ["NaN", "Infinity", "-Infinity", "inf"] {
+            assert!(Json::parse(doc).is_err(), "accepted {doc}");
+        }
+    }
+
+    #[test]
+    fn enforces_number_grammar() {
+        for doc in ["01", "-01", "1.", ".5", "1e", "1e+", "+1", "0x10", "1_000"] {
+            assert!(Json::parse(doc).is_err(), "accepted {doc:?}");
+        }
+        for doc in ["0", "-0", "0.5", "10.25", "1e3", "1E-3", "1.5e+2"] {
+            assert!(Json::parse(doc).is_ok(), "rejected {doc:?}");
+        }
+    }
+
+    // ----- canonical writer -----
+
+    #[test]
+    fn writes_canonical_form() {
+        let v = Json::parse(r#" { "b" : [ 1 , 2.5 , null ] , "a" : true } "#).unwrap();
+        // Keys sorted, whitespace dropped.
+        assert_eq!(v.write(), r#"{"a":true,"b":[1,2.5,null]}"#);
+        assert_eq!(Json::parse("[]").unwrap().write(), "[]");
+        assert_eq!(Json::parse("{}").unwrap().write(), "{}");
+        assert_eq!(
+            Json::parse("\"a\\nb\\u0001\\\"\"").unwrap().write(),
+            r#""a\nb\u0001\"""#
+        );
+    }
+
+    #[test]
+    fn fmt_f64_is_the_documented_canonical_form() {
+        assert_eq!(fmt_f64(0.0), "0");
+        assert_eq!(fmt_f64(-0.0), "-0");
+        assert_eq!(fmt_f64(42.0), "42");
+        assert_eq!(fmt_f64(-7.0), "-7");
+        assert_eq!(fmt_f64(0.5), "0.5");
+        assert_eq!(fmt_f64(-1.25), "-1.25");
+        assert_eq!(fmt_f64(0.1), "0.1");
+        assert_eq!(fmt_f64(1e-4), "0.0001");
+        assert_eq!(fmt_f64(1e-5), "1e-5");
+        assert_eq!(fmt_f64(1.5e-7), "1.5e-7");
+        assert_eq!(fmt_f64(2e15), "2000000000000000");
+        assert_eq!(fmt_f64(1e300), "1e300");
+        assert_eq!(fmt_f64(-2.5e-300), "-2.5e-300");
+    }
+
+    #[test]
+    fn write_parse_roundtrip_property() {
+        use crate::util::{prng::Rng, prop};
+        // Random finite trees: parse(write(v)) == v and write is a fixed
+        // point (write(parse(write(v))) == write(v)) — i.e. write(parse(x))
+        // is canonical.
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool()),
+                2 => {
+                    // Mix integers and dyadic fractions across magnitudes
+                    // (exactly representable, so bit-compares are exact).
+                    let base = rng.range(0, 2_000_001) as f64 - 1_000_000.0;
+                    let frac = [0.0, 0.5, 0.25, 0.125][rng.range(0, 4)];
+                    let scale = [1.0, 1e-6, 1e-3, 1.0, 1e3, 1e12, 1e18][rng.range(0, 7)];
+                    Json::Num((base + frac) * scale)
+                }
+                3 => {
+                    let n = rng.range(0, 8);
+                    Json::Str((0..n).map(|_| {
+                        ['a', 'Z', '0', ' ', '"', '\\', '\n', '\t', 'é', '→',
+                         '\u{0001}'][rng.range(0, 11)]
+                    }).collect())
+                }
+                4 => {
+                    let n = rng.range(0, 4);
+                    Json::Arr((0..n).map(|_| gen(rng, depth - 1)).collect())
+                }
+                _ => {
+                    let n = rng.range(0, 4);
+                    Json::Obj((0..n).map(|i| (format!("k{i}"), gen(rng, depth - 1))).collect())
+                }
+            }
+        }
+        prop::check_cases(0x15053, 200, |rng| {
+            let v = gen(rng, 3);
+            let text = v.write();
+            let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back, v, "roundtrip diverged for {text}");
+            assert_eq!(back.write(), text, "write not a fixed point for {text}");
+        });
+    }
+
+    #[test]
+    fn write_of_parse_canonicalizes_messy_input() {
+        for (messy, canon) in [
+            ("  [ 1 ,  2 ]  ", "[1,2]"),
+            ("{\"z\":1,\"a\":2}", "{\"a\":2,\"z\":1}"),
+            ("[1.50, 0.250e1, 1e2]", "[1.5,2.5,100]"),
+            ("\"\\u0041\"", "\"A\""),
+        ] {
+            assert_eq!(Json::parse(messy).unwrap().write(), canon);
+        }
     }
 }

@@ -1,0 +1,128 @@
+//! End-to-end protocol test for `plx serve`: a real TCP daemon, real
+//! newline-delimited JSON, and byte-equality of every `output` field
+//! against the renderer the one-shot CLI prints from.
+//!
+//! Everything runs in ONE `#[test]` because the test owns its process
+//! environment: it sets `PLX_CACHE_DIR` (to a temp dir) before starting
+//! the daemon, which must stay out of the lib test binary exactly like
+//! `cal_override.rs`. The cross-process warm-restart observable (disk
+//! hits > 0 after a daemon restart) is asserted by the CI serve-smoke
+//! script, which this test complements with the in-process half: the
+//! daemon's spill files appear on disk, carry the versioned header, and
+//! parse back bit-exact.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use plx::layout::Job;
+use plx::model::arch::preset;
+use plx::planner::{plan_by_rules, render_plan};
+use plx::sim::parse_hw;
+use plx::sweep::{by_name, report, run_compare, run_jobs};
+use plx::topo::Cluster;
+use plx::util::json::Json;
+
+/// One request/response exchange on an existing connection.
+fn roundtrip(stream: &mut TcpStream, req: &str) -> Json {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    reader.read_line(&mut line).unwrap();
+    assert!(line.ends_with('\n'), "response must be newline-terminated");
+    Json::parse(line.trim_end()).expect("response must be valid JSON")
+}
+
+fn output_of(resp: &Json) -> &str {
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{}", resp.write());
+    resp.get("output").as_str().expect("ok response carries an output string")
+}
+
+#[test]
+fn serve_protocol_end_to_end() {
+    let cache_dir = std::env::temp_dir().join(format!("plx-serve-test-{}", std::process::id()));
+    std::fs::create_dir_all(&cache_dir).unwrap();
+    std::env::set_var("PLX_CACHE_DIR", &cache_dir);
+
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+    let addr = handle.addr;
+    let mut conn = TcpStream::connect(addr).unwrap();
+
+    // --- plan: response output == the CLI's render_plan bytes ---------
+    let resp = roundtrip(&mut conn, r#"{"cmd":"plan","model":"llama13b","nodes":1,"gbs":512}"#);
+    assert_eq!(resp.get("cmd").as_str(), Some("plan"));
+    let arch = preset("llama13b").unwrap();
+    let job = Job::new(arch, Cluster::dgx_a100(1), 512);
+    let hw = parse_hw("a100").unwrap().from_overrides();
+    let plan = plan_by_rules(&job, &hw).unwrap();
+    assert_eq!(output_of(&resp), render_plan(&job, &plan));
+
+    // --- sweep with a top cap, across both hardware presets -----------
+    let preset_name = "13b-2k";
+    for hw_name in ["a100", "h100"] {
+        let req = format!(
+            r#"{{"cmd":"sweep","preset":"{preset_name}","hw":"{hw_name}","top":5}}"#
+        );
+        let resp = roundtrip(&mut conn, &req);
+        let p = by_name(preset_name).unwrap();
+        let hw = parse_hw(hw_name).unwrap().from_overrides();
+        let want = report::render_top(&run_jobs(&p, &hw, 0), p.sps.len() > 1, Some(5));
+        assert_eq!(output_of(&resp), want, "sweep/{hw_name} must match the CLI bytes");
+    }
+
+    // --- compare: fused multi-hardware pass, CLI renderer bytes -------
+    let resp = roundtrip(
+        &mut conn,
+        r#"{"cmd":"compare","preset":"13b-2k","hw":"a100,h100"}"#,
+    );
+    let p = by_name(preset_name).unwrap();
+    let hws = vec![
+        ("a100".to_string(), parse_hw("a100").unwrap().from_overrides()),
+        ("h100".to_string(), parse_hw("h100").unwrap().from_overrides()),
+    ];
+    assert_eq!(output_of(&resp), report::render_compare(&run_compare(&p, &hws, 0)));
+
+    // --- identical repeat: same bytes, answered from the hot memo -----
+    let again = roundtrip(
+        &mut conn,
+        r#"{"cmd":"compare","preset":"13b-2k","hw":"a100,h100"}"#,
+    );
+    assert_eq!(again.write(), resp.write());
+
+    // --- errors use the envelope, never break the connection ----------
+    let resp = roundtrip(&mut conn, r#"{"cmd":"sweep","preset":"no-such"}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert_eq!(resp.path("error.code").as_str(), Some("bad_request"));
+    let resp = roundtrip(&mut conn, "not json at all");
+    assert_eq!(resp.path("error.code").as_str(), Some("parse"));
+
+    // --- stats: counters moved, memo + disk sections present ----------
+    let resp = roundtrip(&mut conn, r#"{"cmd":"stats"}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(true));
+    let stats = resp.get("stats");
+    let requests = stats.get("requests").as_u64().unwrap();
+    assert!(requests >= 7, "requests {requests}");
+    assert_eq!(stats.get("errors").as_u64(), Some(2));
+    assert!(stats.path("memos.evaluate.entries").as_u64().unwrap() > 0);
+    assert!(stats.path("memos.evaluate.hits").as_u64().is_some());
+    assert!(stats.path("disk.evaluate.loaded").as_u64().is_some());
+    assert!(stats.path("latency_us.total").as_u64().unwrap() > 0);
+
+    // --- the daemon spilled its memos: versioned, parseable files -----
+    let eval_file = cache_dir.join("evaluate.plxcache");
+    let text = std::fs::read_to_string(&eval_file).expect("daemon must spill evaluate memo");
+    assert!(text.starts_with("plxcache v1 evaluate\n"), "versioned header");
+    assert!(text.lines().count() > 1, "spill must carry entries");
+    for name in ["stage.plxcache", "makespan.plxcache"] {
+        assert!(cache_dir.join(name).is_file(), "{name} must exist");
+    }
+
+    // --- shutdown: acknowledged, then the accept loop exits -----------
+    let resp = roundtrip(&mut conn, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(resp.write(), r#"{"cmd":"shutdown","ok":true}"#);
+    // join() returning proves the accept loop observed the stop flag.
+    handle.join();
+
+    std::fs::remove_dir_all(&cache_dir).ok();
+}

@@ -4,7 +4,7 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Five suites, reported separately:
+Six suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
@@ -17,7 +17,13 @@ Five suites, reported separately:
   * the HW suite — the H100 preset bit-exact, the --hw registry and
     PLX_HW_* override hooks, H100 sweep/planner parity, and the
     calibration-keyed memo property (X -> Y -> X override round trip
-    bit-identical to a cold evaluation at every step).
+    bit-identical to a cold evaluation at every step);
+  * the SERVE suite — the `plx serve` stack: the strict JSON
+    reader/canonical writer (grammar, depth bound, duplicate keys,
+    fmt_f64), the PLX_CACHE_DIR persistence format (bit-exact
+    roundtrips, version gating, non-aliasing, warm loads that serve
+    disk hits), and the request protocol (responses byte-identical to
+    the CLI renderers, error envelopes, stats, spill files).
 
 Run: python3 tools/check_seed_tests.py
 """
@@ -28,6 +34,7 @@ import sys
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from pysim import *  # noqa: F401,F403
+from pysim import _DISK_STATS, _EVAL_CACHE  # serve suite pokes the live memos
 
 PASS = []
 FAIL = []
@@ -1319,6 +1326,336 @@ HW_CHECKS = [
 ]
 
 
+# --------------------------------------------------------------- SERVE suite
+# Mirrors the Rust tests added with `plx serve` + its two subsystems:
+# the util/json strict reader/canonical writer (adversarial grammar,
+# depth bound, duplicate keys, fmt_f64), the sim/persist PLX_CACHE_DIR
+# memo format (bit-exact roundtrips, version gating, corrupt-line
+# skipping, non-aliasing, the live-cache save/load cycle), and the serve
+# protocol itself (response output byte-identical to the CLI renderers,
+# error envelopes, strict field checking, stats counters, warm spill).
+
+
+def t_serve_json_grammar_and_depth():
+    # rust: json::rejects_garbage / rejects_truncated_documents /
+    # enforces_number_grammar / depth_bound_is_exact
+    for doc in ["{", "[1,]", "1 2", "{'a': 1}", "nul", "", "[", "[1", "[1,",
+                "{\"a\"", "{\"a\":", "{\"a\":1", "\"abc", "12e", "tru", "-",
+                "01", "-01", "1.", ".5", "1e", "1e+", "+1", "0x10", "1_000"]:
+        try:
+            json_parse(doc)
+            raise AssertionError(f"accepted {doc!r}")
+        except JsonParseError:
+            pass
+    for doc in ["0", "-0", "0.5", "10.25", "1e3", "1E-3", "1.5e+2"]:
+        json_parse(doc)
+    json_parse("[" * JSON_MAX_DEPTH + "1" + "]" * JSON_MAX_DEPTH)
+    try:
+        json_parse("[" * (JSON_MAX_DEPTH + 1) + "1" + "]" * (JSON_MAX_DEPTH + 1))
+        raise AssertionError("depth bound not enforced")
+    except JsonParseError as e:
+        assert "nesting too deep" in str(e)
+
+
+def t_serve_json_duplicate_keys_and_non_finite():
+    # rust: json::rejects_duplicate_keys / rejects_non_finite_numerals
+    try:
+        json_parse('{"a": 1, "a": 2}')
+        raise AssertionError("accepted duplicate key")
+    except JsonParseError as e:
+        assert "duplicate key" in str(e)
+    json_parse('{"a": {"a": 1}, "b": {"a": 2}}')
+    for doc in ["1e999", "-1e999", "1e309", "[1, 2e999]"]:
+        try:
+            json_parse(doc)
+            raise AssertionError(f"accepted {doc}")
+        except JsonParseError as e:
+            assert "overflows" in str(e), doc
+    for doc in ["NaN", "Infinity", "-Infinity", "inf"]:
+        try:
+            json_parse(doc)
+            raise AssertionError(f"accepted {doc}")
+        except JsonParseError:
+            pass
+
+
+def t_serve_json_canonical_writer():
+    # rust: json::writes_canonical_form / write_of_parse_canonicalizes /
+    # fmt_f64_is_the_documented_canonical_form
+    assert json_write(json_parse(' { "b" : [ 1 , 2.5 , null ] , "a" : true } ')) \
+        == '{"a":true,"b":[1,2.5,null]}'
+    for messy, canon in [("  [ 1 ,  2 ]  ", "[1,2]"),
+                         ('{"z":1,"a":2}', '{"a":2,"z":1}'),
+                         ("[1.50, 0.250e1, 1e2]", "[1.5,2.5,100]"),
+                         ('"\\u0041"', '"A"')]:
+        assert json_write(json_parse(messy)) == canon, messy
+    assert json_write(json_parse('"a\\nb\\u0001\\""')) == '"a\\nb\\u0001\\""'
+    for v, want in [(0.0, "0"), (-0.0, "-0"), (42.0, "42"), (-7.0, "-7"),
+                    (0.5, "0.5"), (-1.25, "-1.25"), (0.1, "0.1"),
+                    (1e-4, "0.0001"), (1e-5, "1e-5"), (1.5e-7, "1.5e-7"),
+                    (2e15, "2000000000000000"), (1e300, "1e300"),
+                    (-2.5e-300, "-2.5e-300")]:
+        assert fmt_f64(v) == want, (v, fmt_f64(v), want)
+
+
+def t_serve_json_roundtrip_fixed_point():
+    # rust: json::write_parse_roundtrip_property (deterministic cases:
+    # parse(write(v)) == v and write is a fixed point).
+    trees = [None, True, False, 0.0, -0.0, 1.5, -1e-6, 123456.125, 1e18,
+             "", "a\nb\t\"\\", "héllo→", [], {}, [1, [2, [3, None]]],
+             {"k0": [0.5, {"n": -0.25}], "k1": "x", "k2": [True, False]},
+             {"outer": {"inner": [1e-5, 2e15, "deep"]}}]
+    for v in trees:
+        text = json_write(v)
+        back = json_parse(text)
+        want = float(v) if isinstance(v, (int, float)) and not isinstance(v, bool) else v
+        assert back == want, (text, back)
+        assert json_write(back) == text, text
+
+
+def _serve_sample_eval_key(gbs, hw):
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), gbs)
+    l = Layout(2, 2, 1, False, FLASH2RMS, True, "interleaved:2")
+    a = job.arch
+    return PersistEvalKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab, a.seq,
+                          job.cluster.gpus, job.cluster.gpus_per_node,
+                          job.gbs, hw_bits(hw), cal_key(), l)
+
+
+def _serve_sample_outcome():
+    return Outcome("ok", step_time_s=1.03125, mfu=0.7057,
+                   mem=MemoryBreakdown(1.0, 2.0, 3.5, 4.25, 0.125, 5e9),
+                   step=StepBreakdown(0.9, 0.01, 0.02, 0.1, 0.0, 0.001))
+
+
+def t_serve_persist_evaluate_roundtrip():
+    # rust: persist::evaluate_roundtrip_is_bit_exact
+    entries = [(_serve_sample_eval_key(2048, A100), _serve_sample_outcome()),
+               (_serve_sample_eval_key(2048, H100),
+                Outcome("oom", required=99e9, budget=80e9)),
+               (_serve_sample_eval_key(512, A100), Outcome("unavail"))]
+    text = persist_render_evaluate(entries)
+    assert text.startswith("plxcache v1 evaluate\n")
+    back = persist_parse_evaluate(text)
+    assert len(back) == len(entries)
+    for k, oc in entries:
+        got = next(o for bk, o in back if bk == k)
+        assert got == oc
+    assert persist_render_evaluate(back) == text, "render not a fixed point"
+
+
+def t_serve_persist_stage_and_makespan_roundtrip():
+    # rust: persist::stage_and_makespan_roundtrip
+    a = preset("llama13b")
+    st_key = PersistStageKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab,
+                             a.seq, hw_bits(A100), cal_key(),
+                             (2, 1, True, FLASH2, False))
+    costs = LayerCosts(0.001, 0.002, 0.0005, 0.001, 1e-4, 0.95, 1e-5, 1e-4,
+                       3.2e8, 6.4e8)
+    text = persist_render_stage([(st_key, costs)])
+    back = persist_parse_stage(text)
+    assert len(back) == 1 and back[0][0] == st_key
+    assert _bits(back[0][1].layer_fwd) == _bits(costs.layer_fwd)
+    assert _bits(back[0][1].act_bytes_full) == _bits(costs.act_bytes_full)
+    ms_key = PersistMsKey(SCHED_1F1B, 3, 16, (1, 2, 3, 4, 5))
+    dead_key = PersistMsKey(SCHED_1F1B, 2, 16, (1, 2, 3, 4, 5))
+    text = persist_render_makespan([(ms_key, (12.5, [1.0, 2.0, 3.0])),
+                                    (dead_key, None)])
+    back = persist_parse_makespan(text)
+    assert len(back) == 2
+    got = next(ms for k, ms in back if k == ms_key)
+    assert _bits(got[0]) == _bits(12.5) and len(got[1]) == 3
+    assert next(ms for k, ms in back if k == dead_key) is None
+    assert persist_render_makespan(back) == text
+
+
+def t_serve_persist_version_gate_and_corrupt_lines():
+    # rust: persist::version_or_memo_mismatch_is_cold /
+    # corrupt_lines_are_skipped_not_fatal
+    good = persist_render_evaluate(
+        [(_serve_sample_eval_key(2048, A100), _serve_sample_outcome())])
+    entry = good.splitlines()[1]
+    for bad in ["plxcache v0 evaluate", "plxcache v2 evaluate", "plxcache v1 stage"]:
+        assert persist_parse_evaluate(f"{bad}\n{entry}\n") == [], bad
+    text = ("plxcache v1 evaluate\nnot a line\n"
+            f"{entry}\n{entry} trailing-garbage\n{entry[:len(entry) // 2]}\n")
+    assert len(persist_parse_evaluate(text)) == 1
+
+
+def t_serve_persist_non_aliasing():
+    # rust: persist::distinct_cal_and_hw_bits_stay_distinct_on_disk
+    a = _serve_sample_eval_key(2048, A100)
+    h = _serve_sample_eval_key(2048, H100)
+    recal = replace(a, cal=(a.cal[0] ^ 1,) + a.cal[1:])
+    text = persist_render_evaluate([
+        (a, _serve_sample_outcome()), (h, Outcome("unavail")),
+        (recal, Outcome("oom", required=1.0, budget=2.0))])
+    back = persist_parse_evaluate(text)
+    assert len(back) == 3
+    assert len(set(text.splitlines()[1:])) == 3, "keys must not alias"
+    got = next(o for k, o in back if k == a)
+    assert got == _serve_sample_outcome()
+
+
+def t_serve_persist_save_and_load_live_caches():
+    # rust: persist::save_and_load_through_the_real_caches — plus the
+    # cross-process observable the Rust unit test cannot show: a cleared
+    # cache warm-loads from disk and the repeat lookup is a disk hit.
+    import shutil
+    import tempfile
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 1984)  # unique gbs
+    v = validate(job, Layout(2, 2, 1, False, FLASH2RMS, True))
+    hw = A100
+    k = (job, v, hw, cal_key())
+    oc = Outcome("oom", required=7.0, budget=3.0)
+    _EVAL_CACHE[k] = oc
+    d = tempfile.mkdtemp(prefix="plxcache-check-")
+    try:
+        saved = persist_save_all(d)
+        assert saved["evaluate"] >= 1
+        with open(os.path.join(d, "evaluate.plxcache")) as f:
+            text = f.read()
+        assert text.startswith("plxcache v1 evaluate\n")
+        back = persist_parse_evaluate(text)
+        assert any(bk.gbs == 1984 and o == oc for bk, o in back)
+        # Evict, warm-load, and prove the disk entry serves the lookup.
+        del _EVAL_CACHE[k]
+        hits_before = _DISK_STATS["evaluate"][1]
+        loaded = persist_load_all(d)
+        assert loaded["evaluate"] >= 1
+        assert _EVAL_CACHE[k] == oc, "vacant slot must warm-load"
+        assert evaluate(job, v, hw) == oc
+        assert _DISK_STATS["evaluate"][1] > hits_before, "disk hit must count"
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def t_serve_plan_response_equals_renderer():
+    # rust: serve::plan_response_equals_cli_renderer_bytes
+    state = ServeState()
+    text, shutdown = serve_handle_line(
+        state, '{"cmd":"plan","model":"llama13b","nodes":1}')
+    assert not shutdown
+    r = json_parse(text)
+    assert r["ok"] is True and r["cmd"] == "plan"
+    arch = preset("llama13b")
+    job = Job(arch, Cluster.dgx_a100(1), Job.paper_gbs(arch))
+    plan = plan_by_rules(job, hardware_from_overrides(A100))
+    assert r["output"] == render_plan(job, plan)
+    # Key order and whitespace must not change the response.
+    again, _ = serve_handle_line(
+        state, '{ "nodes" : 1, "model": "llama13b", "cmd" : "plan" }')
+    assert again == text
+
+
+def t_serve_sweep_and_compare_equal_renderers():
+    # rust: tests/serve_protocol.rs sweep/compare byte-equality, via the
+    # pysim renderers (cross-language bytes are pinned by the CI smoke).
+    state = ServeState()
+    p = by_name("13b-2k")
+    for hw_name in ["a100", "h100"]:
+        text, _ = serve_handle_line(
+            state,
+            f'{{"cmd":"sweep","preset":"13b-2k","hw":"{hw_name}","top":5}}')
+        r = json_parse(text)
+        hw = hardware_from_overrides(hw_preset(hw_name))
+        res = run(p, hw)
+        want = report_render_top(res, len(p.sps) > 1, 5)
+        assert r["output"] == want, hw_name
+        assert want.count("\n") < report_render(res, len(p.sps) > 1).count("\n")
+        assert f"of {len(res.rows)} configs" in want  # footer keeps full counts
+    text, _ = serve_handle_line(state, '{"cmd":"compare","preset":"13b-2k"}')
+    r = json_parse(text)
+    hws = [("a100", hardware_from_overrides(A100)),
+           ("h100", hardware_from_overrides(H100))]
+    assert r["output"] == render_compare(run_compare(p, hws))
+    assert "MFU vs a100" in r["output"]
+
+
+def t_serve_error_envelopes():
+    # rust: serve::error_envelopes + shutdown_reply_signals_exit
+    state = ServeState()
+    text, _ = serve_handle_line(state, "{nope")
+    assert '"code":"parse"' in text, text
+    text, _ = serve_handle_line(state, '{"cmd":"warp"}')
+    assert '"code":"unknown_cmd"' in text, text
+    text, _ = serve_handle_line(state, '{"cmd":"plan"}')
+    assert '"code":"bad_request"' in text and 'need \\"model\\"' in text, text
+    text, _ = serve_handle_line(state, '{"cmd":"plan","model":"llama13b","modle":1}')
+    assert 'unknown field \\"modle\\"' in text, text
+    text, _ = serve_handle_line(state, '{"cmd":"sweep","preset":"nope"}')
+    assert "unknown preset" in text, text
+    text, _ = serve_handle_line(state, '[1,2]')
+    assert "request must be a JSON object" in text, text
+    text, shutdown = serve_handle_line(state, '{"cmd":"shutdown"}')
+    assert shutdown and text == '{"cmd":"shutdown","ok":true}'
+    assert state.errors == 6
+
+
+def t_serve_stats_counters_move():
+    # rust: serve::stats_reports_counters_and_memo_shapes
+    state = ServeState()
+    serve_handle_line(state, '{"cmd":"plan","model":"llama13b","nodes":1}')
+    text, _ = serve_handle_line(state, '{"cmd":"stats"}')
+    j = json_parse(text)
+    assert j["ok"] is True
+    s = j["stats"]
+    assert s["requests"] == 2 and s["deduped"] == 0
+    assert s["memos"]["evaluate"]["entries"] > 0
+    assert "hits" in s["memos"]["evaluate"] and "misses" in s["memos"]["evaluate"]
+    assert "loaded" in s["disk"]["evaluate"] and "hits" in s["disk"]["evaluate"]
+    assert s["latency_us"]["count"] == 2
+
+
+def t_serve_warm_spill_writes_versioned_files():
+    # rust: tests/serve_protocol.rs spill-file assertions — a request
+    # under PLX_CACHE_DIR spills all three memo files, versioned and
+    # parseable, and the spill is idempotent through parse -> render.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-serve-check-")
+    old = os.environ.get(PERSIST_CACHE_DIR_ENV)
+    os.environ[PERSIST_CACHE_DIR_ENV] = d
+    try:
+        state = ServeState()
+        serve_handle_line(state, '{"cmd":"plan","model":"llama13b","nodes":1}')
+        for name, memo in [("evaluate.plxcache", "evaluate"),
+                           ("stage.plxcache", "stage"),
+                           ("makespan.plxcache", "makespan")]:
+            with open(os.path.join(d, name)) as f:
+                text = f.read()
+            assert text.startswith(f"plxcache v1 {memo}\n"), name
+        with open(os.path.join(d, "evaluate.plxcache")) as f:
+            text = f.read()
+        back = persist_parse_evaluate(text)
+        assert back, "spill must carry evaluate entries"
+        assert persist_render_evaluate(back) == text, "spill not canonical"
+    finally:
+        if old is None:
+            os.environ.pop(PERSIST_CACHE_DIR_ENV, None)
+        else:
+            os.environ[PERSIST_CACHE_DIR_ENV] = old
+        shutil.rmtree(d, ignore_errors=True)
+
+
+SERVE_CHECKS = [
+    ("json::grammar_depth_and_truncation", t_serve_json_grammar_and_depth),
+    ("json::duplicate_keys_and_non_finite", t_serve_json_duplicate_keys_and_non_finite),
+    ("json::canonical_writer_and_fmt_f64", t_serve_json_canonical_writer),
+    ("json::write_parse_roundtrip_fixed_point", t_serve_json_roundtrip_fixed_point),
+    ("persist::evaluate_roundtrip_is_bit_exact", t_serve_persist_evaluate_roundtrip),
+    ("persist::stage_and_makespan_roundtrip", t_serve_persist_stage_and_makespan_roundtrip),
+    ("persist::version_gate_and_corrupt_lines", t_serve_persist_version_gate_and_corrupt_lines),
+    ("persist::distinct_cal_and_hw_bits_never_alias", t_serve_persist_non_aliasing),
+    ("persist::save_and_load_through_live_caches", t_serve_persist_save_and_load_live_caches),
+    ("serve::plan_response_equals_cli_renderer_bytes", t_serve_plan_response_equals_renderer),
+    ("serve::sweep_and_compare_equal_renderers", t_serve_sweep_and_compare_equal_renderers),
+    ("serve::error_envelopes_and_shutdown", t_serve_error_envelopes),
+    ("serve::stats_reports_counters_and_memo_shapes", t_serve_stats_counters_move),
+    ("serve::spill_writes_versioned_canonical_files", t_serve_warm_spill_writes_versioned_files),
+]
+
+
 def main():
     for name, fn in CHECKS:
         check(name, fn)
@@ -1339,6 +1676,10 @@ def main():
     for name, fn in HW_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - fact_pass} / {len(HW_CHECKS)} (hw suite)")
+    hw_pass = len(PASS)
+    for name, fn in SERVE_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - hw_pass} / {len(SERVE_CHECKS)} (serve suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

@@ -39,12 +39,20 @@ Rust source of truth:
   rust/src/planner/mod.rs         -> plan_by_rules / refine_interleaved /
                                      plan_exhaustive_stats (bound-pruned)
   rust/src/util/table.rs          -> render / pct / secs
+  rust/src/util/json.rs           -> json_parse / json_write / fmt_f64
+  rust/src/sim/persist.rs         -> persist_render_* / persist_parse_* /
+                                     persist_save_all / persist_load_all
+  rust/src/planner/mod.rs         -> render_plan
+  rust/src/sweep/report.rs        -> report_render_top / render_compare
+  rust/src/sweep/engine.rs        -> run_compare
+  rust/src/serve/mod.rs           -> ServeState / serve_handle_line
 """
 
 import math
 import os
 import struct
-from dataclasses import dataclass, field
+import time
+from dataclasses import dataclass, field, replace
 from typing import Callable, List, Optional, Tuple
 
 # ---------------------------------------------------------------- model/arch
@@ -893,6 +901,13 @@ class LayerCosts:
 
 _STAGE_CACHE = {}
 
+# Memo observability, mirroring rust/src/sim/cache.rs::stats /
+# disk_stats: per-memo [hits, misses] plus [loaded, hits] for entries
+# that came from a PLX_CACHE_DIR warm start (persist_load_all below).
+_MEMO_STATS = {"evaluate": [0, 0], "stage": [0, 0]}
+_DISK_STATS = {"evaluate": [0, 0], "stage": [0, 0], "makespan": [0, 0]}
+_DISK_KEYS = {"evaluate": set(), "stage": set()}
+
 
 def layer_costs(job, v, hw):
     """The keyed per-layer cost stage, memoized like
@@ -901,7 +916,11 @@ def layer_costs(job, v, hw):
     key = (job.arch, hw, cal_key(), stage_key(v.layout))
     hit = _STAGE_CACHE.get(key)
     if hit is not None:
+        _MEMO_STATS["stage"][0] += 1
+        if key in _DISK_KEYS["stage"]:
+            _DISK_STATS["stage"][1] += 1
         return hit
+    _MEMO_STATS["stage"][1] += 1
     out = _layer_costs_uncached(job, v, hw)
     _STAGE_CACHE[key] = out
     return out
@@ -1139,7 +1158,11 @@ def evaluate(job, v, hw):
     key = (job, v, hw, cal_key())
     hit = _EVAL_CACHE.get(key)
     if hit is not None:
+        _MEMO_STATS["evaluate"][0] += 1
+        if key in _DISK_KEYS["evaluate"]:
+            _DISK_STATS["evaluate"][1] += 1
         return hit
+    _MEMO_STATS["evaluate"][1] += 1
     out = _evaluate_uncached(job, v, hw)
     _EVAL_CACHE[key] = out
     return out
@@ -1369,14 +1392,23 @@ def secs(x):
 # ---------------------------------------------------------------- sweep/report
 
 def report_render(result, with_sp_column):
+    return report_render_top(result, with_sp_column, None)
+
+
+def report_render_top(result, with_sp_column, top):
+    """Mirrors rust/src/sweep/report.rs::render_top: an optional row cap
+    (`plx sweep --top N`, the serve protocol's "top" field) that limits
+    the table while the footer keeps the full-space counts."""
     with_sched_column = any(r.layout().sched != SCHED_1F1B for r in result.rows)
     headers = ["Step Time", "MFU", "Activation", "Kernel", "MB", "TP", "PP"]
     if with_sp_column:
         headers.append("Seq Parallel")
     if with_sched_column:
         headers.append("Schedule")
+    srt = result.sorted()
+    shown = len(srt) if top is None else min(top, len(srt))
     rows = []
-    for r in result.sorted():
+    for r in srt[:shown]:
         l = r.layout()
         if r.outcome.kind == "ok":
             st, m = secs(r.outcome.step_time_s), pct(r.outcome.mfu)
@@ -1736,3 +1768,1076 @@ def plan_exhaustive_reference(job, hw):
     if best is None:
         raise ValueError("no feasible layout")
     return best
+
+# ---------------------------------------------------------------- util/json
+
+# Mirror of rust/src/util/json.rs: same strict grammar (duplicate keys,
+# leading zeros, non-finite numerals and bad escapes are errors), the
+# same MAX_DEPTH container bound, the same byte offsets and messages in
+# errors, and a canonical writer (sorted keys, no whitespace, fmt_f64
+# numbers) that reproduces Json::write byte for byte.
+
+JSON_MAX_DEPTH = 32
+
+
+class JsonParseError(ValueError):
+    """str(e) matches rust JsonError's Display exactly."""
+
+    def __init__(self, offset, msg):
+        self.offset = offset
+        self.msg = msg
+        super().__init__(f"json error at byte {offset}: {msg}")
+
+
+_JS_VALUE, _JS_VALUE_OR_END, _JS_KEY_OR_END, _JS_KEY, _JS_COMMA_OR_END, _JS_DONE = range(6)
+
+
+def _utf8_len(first):
+    if first <= 0x7F:
+        return 1
+    if 0xC0 <= first <= 0xDF:
+        return 2
+    if 0xE0 <= first <= 0xEF:
+        return 3
+    return 4
+
+
+class _JsonReader:
+    """Port of json.rs::Reader: a pull tokenizer with an explicit state
+    machine, so error offsets land on the same byte as the Rust side."""
+
+    def __init__(self, s):
+        self.b = s.encode("utf-8") if isinstance(s, str) else bytes(s)
+        self.i = 0
+        self.depth = 0
+        self.objs = 0
+        self.state = _JS_VALUE
+
+    def err(self, msg):
+        return JsonParseError(self.i, msg)
+
+    def ws(self):
+        while self.i < len(self.b) and self.b[self.i] in b" \t\n\r":
+            self.i += 1
+
+    def peek(self):
+        return self.b[self.i] if self.i < len(self.b) else None
+
+    def in_object(self):
+        return self.depth > 0 and (self.objs >> (self.depth - 1)) & 1 == 1
+
+    def push(self, is_obj):
+        if self.depth >= JSON_MAX_DEPTH:
+            raise self.err("nesting too deep")
+        if is_obj:
+            self.objs |= 1 << self.depth
+        else:
+            self.objs &= ~(1 << self.depth)
+        self.depth += 1
+
+    def pop(self):
+        self.depth -= 1
+        self.state = _JS_DONE if self.depth == 0 else _JS_COMMA_OR_END
+
+    def after_value(self):
+        self.state = _JS_DONE if self.depth == 0 else _JS_COMMA_OR_END
+
+    def next(self):
+        self.ws()
+        st = self.state
+        if st == _JS_DONE:
+            if self.i != len(self.b):
+                raise self.err("trailing garbage")
+            return None
+        if st in (_JS_VALUE, _JS_VALUE_OR_END):
+            if st == _JS_VALUE_OR_END and self.peek() == 0x5D:  # ]
+                self.i += 1
+                self.pop()
+                return ("end_arr",)
+            return self.value_event()
+        if st in (_JS_KEY, _JS_KEY_OR_END):
+            if st == _JS_KEY_OR_END and self.peek() == 0x7D:  # }
+                self.i += 1
+                self.pop()
+                return ("end_obj",)
+            if self.peek() != 0x22:  # "
+                raise self.err("expected '\"' (object key)")
+            key = self.string()
+            self.ws()
+            if self.peek() != 0x3A:  # :
+                raise self.err("expected ':'")
+            self.i += 1
+            self.state = _JS_VALUE
+            return ("key", key)
+        # _JS_COMMA_OR_END
+        c = self.peek()
+        if c == 0x2C:  # ,
+            self.i += 1
+            self.state = _JS_KEY if self.in_object() else _JS_VALUE
+            return self.next()
+        if c == 0x7D and self.in_object():
+            self.i += 1
+            self.pop()
+            return ("end_obj",)
+        if c == 0x5D and not self.in_object():
+            self.i += 1
+            self.pop()
+            return ("end_arr",)
+        raise self.err("expected ',' or '}'" if self.in_object() else "expected ',' or ']'")
+
+    def lit(self, s, ev):
+        if self.b[self.i:self.i + len(s)] == s.encode():
+            self.i += len(s)
+            self.after_value()
+            return ev
+        raise self.err(f"expected '{s}'")
+
+    def value_event(self):
+        c = self.peek()
+        if c == 0x7B:  # {
+            self.i += 1
+            self.push(True)
+            self.state = _JS_KEY_OR_END
+            return ("begin_obj",)
+        if c == 0x5B:  # [
+            self.i += 1
+            self.push(False)
+            self.state = _JS_VALUE_OR_END
+            return ("begin_arr",)
+        if c == 0x22:  # "
+            s = self.string()
+            self.after_value()
+            return ("str", s)
+        if c == 0x74:  # t
+            return self.lit("true", ("bool", True))
+        if c == 0x66:  # f
+            return self.lit("false", ("bool", False))
+        if c == 0x6E:  # n
+            return self.lit("null", ("null",))
+        if c is not None and (c == 0x2D or 0x30 <= c <= 0x39):
+            n = self.number()
+            self.after_value()
+            return ("num", n)
+        raise self.err("expected a JSON value")
+
+    def string(self):
+        self.i += 1
+        start = self.i
+        j = self.i
+        # Fast path: no escapes before the closing quote.
+        while j < len(self.b):
+            c = self.b[j]
+            if c == 0x22:
+                try:
+                    s = self.b[start:j].decode("utf-8")
+                except UnicodeDecodeError:
+                    raise self.err("invalid utf-8")
+                self.i = j + 1
+                return s
+            if c == 0x5C:
+                break
+            j += 1
+        if j >= len(self.b):
+            self.i = len(self.b)
+            raise self.err("unterminated string")
+        try:
+            out = [self.b[start:j].decode("utf-8")]
+        except UnicodeDecodeError:
+            raise self.err("invalid utf-8")
+        self.i = j
+        while True:
+            c = self.peek()
+            if c is None:
+                raise self.err("unterminated string")
+            self.i += 1
+            if c == 0x22:
+                return "".join(out)
+            if c == 0x5C:
+                e = self.peek()
+                if e is None:
+                    raise self.err("bad escape")
+                self.i += 1
+                simple = {0x22: '"', 0x5C: "\\", 0x2F: "/", 0x62: "\b",
+                          0x66: "\f", 0x6E: "\n", 0x72: "\r", 0x74: "\t"}
+                if e in simple:
+                    out.append(simple[e])
+                elif e == 0x75:  # u
+                    if self.i + 4 > len(self.b):
+                        raise self.err("short \\u escape")
+                    hexs = self.b[self.i:self.i + 4]
+                    try:
+                        cp = int(hexs.decode("ascii"), 16)
+                    except (UnicodeDecodeError, ValueError):
+                        raise self.err("bad \\u escape")
+                    if any(ch in b"+- _" for ch in hexs):
+                        raise self.err("bad \\u escape")
+                    self.i += 4
+                    # char::from_u32 rejects surrogates -> U+FFFD.
+                    out.append("�" if 0xD800 <= cp <= 0xDFFF else chr(cp))
+                else:
+                    raise self.err("unknown escape")
+            else:
+                start2 = self.i - 1
+                ln = _utf8_len(c)
+                if start2 + ln > len(self.b):
+                    raise self.err("truncated utf-8")
+                try:
+                    out.append(self.b[start2:start2 + ln].decode("utf-8"))
+                except UnicodeDecodeError:
+                    raise self.err("invalid utf-8")
+                self.i = start2 + ln
+
+    def number(self):
+        start = self.i
+        if self.peek() == 0x2D:
+            self.i += 1
+        c = self.peek()
+        if c == 0x30:
+            self.i += 1
+            c = self.peek()
+            if c is not None and 0x30 <= c <= 0x39:
+                raise self.err("leading zero")
+        elif c is not None and 0x30 <= c <= 0x39:
+            while (c := self.peek()) is not None and 0x30 <= c <= 0x39:
+                self.i += 1
+        else:
+            raise self.err("bad number")
+        if self.peek() == 0x2E:
+            self.i += 1
+            c = self.peek()
+            if c is None or not 0x30 <= c <= 0x39:
+                raise self.err("bad number")
+            while (c := self.peek()) is not None and 0x30 <= c <= 0x39:
+                self.i += 1
+        if self.peek() in (0x65, 0x45):
+            self.i += 1
+            if self.peek() in (0x2B, 0x2D):
+                self.i += 1
+            c = self.peek()
+            if c is None or not 0x30 <= c <= 0x39:
+                raise self.err("bad number")
+            while (c := self.peek()) is not None and 0x30 <= c <= 0x39:
+                self.i += 1
+        s = self.b[start:self.i].decode("ascii")
+        try:
+            v = float(s)
+        except ValueError:
+            raise self.err("bad number")
+        if math.isinf(v) or math.isnan(v):
+            raise self.err("number overflows f64")
+        return v
+
+
+def json_parse(s):
+    """Mirror of Json::parse: tree built iteratively on the pull reader,
+    plus duplicate-key rejection. Raises JsonParseError."""
+    r = _JsonReader(s)
+    stack = []  # (is_obj, container, pending_key)
+    root = []
+
+    def attach(v):
+        if not stack:
+            root.append(v)
+            return
+        is_obj, cont, key = stack[-1]
+        if is_obj:
+            cont[key[0]] = v
+        else:
+            cont.append(v)
+
+    while (ev := r.next()) is not None:
+        kind = ev[0]
+        if kind == "begin_arr":
+            stack.append((False, [], [None]))
+        elif kind == "begin_obj":
+            stack.append((True, {}, [None]))
+        elif kind == "key":
+            _, cont, key = stack[-1]
+            if ev[1] in cont:
+                raise JsonParseError(r.i, f'duplicate key "{ev[1]}"')
+            key[0] = ev[1]
+        elif kind in ("end_arr", "end_obj"):
+            _, cont, _ = stack.pop()
+            attach(cont)
+        elif kind == "null":
+            attach(None)
+        elif kind in ("bool", "num", "str"):
+            attach(ev[1])
+    if not root:
+        raise JsonParseError(0, "empty document")
+    return root[0]
+
+
+def _json_escape(s):
+    # Mirrors json.rs::write_str byte for byte.
+    out = ['"']
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif c == "\b":
+            out.append("\\b")
+        elif c == "\f":
+            out.append("\\f")
+        elif ord(c) < 0x20:
+            out.append(f"\\u{ord(c):04x}")
+        else:
+            out.append(c)
+    out.append('"')
+    return "".join(out)
+
+
+def _rust_sci(v, p):
+    """f'{v:.{p}e}' in Rust's {:.pe} spelling: no '+', no exponent
+    zero-padding. Both languages correctly round, so digits agree."""
+    mant, _, exp = f"{v:.{p}e}".partition("e")
+    return f"{mant}e{int(exp)}"
+
+
+def fmt_f64(v):
+    """Mirror of json.rs::fmt_f64 — the canonical cross-language decimal
+    form of a finite f64 (digit-for-digit identical to the Rust side)."""
+    v = float(v)
+    if math.isinf(v) or math.isnan(v):
+        return "null"
+    if v == 0.0:
+        return "-0" if math.copysign(1.0, v) < 0 else "0"
+    if abs(v) < 1e15 and v.is_integer():
+        return str(int(v))
+    bits = struct.unpack("<Q", struct.pack("<d", v))[0]
+    sci = _rust_sci(v, 17)
+    for p in range(17):
+        s = _rust_sci(v, p)
+        if struct.unpack("<Q", struct.pack("<d", float(s)))[0] == bits:
+            sci = s
+            break
+    mant, _, exps = sci.partition("e")
+    exp = int(exps)
+    if not -4 <= exp <= 15:
+        return f"{mant}e{exp}"
+    sign, m = ("-", mant[1:]) if mant.startswith("-") else ("", mant)
+    digits = m.replace(".", "")
+    if exp >= 0:
+        ip = exp + 1
+        if len(digits) <= ip:
+            body = digits + "0" * (ip - len(digits))
+        else:
+            body = digits[:ip] + "." + digits[ip:]
+    else:
+        body = "0." + "0" * (-exp - 1) + digits
+    return sign + body
+
+
+def json_write(v):
+    """Mirror of Json::write: canonical serialization — object keys in
+    byte order, no insignificant whitespace, numbers via fmt_f64."""
+    if v is None:
+        return "null"
+    if v is True:
+        return "true"
+    if v is False:
+        return "false"
+    if isinstance(v, (int, float)):
+        return fmt_f64(float(v))
+    if isinstance(v, str):
+        return _json_escape(v)
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(json_write(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(f"{_json_escape(k)}:{json_write(v[k])}"
+                              for k in sorted(v)) + "}"
+    raise TypeError(f"not a JSON value: {type(v)!r}")
+
+# ---------------------------------------------------------------- sim/persist
+
+# Mirror of rust/src/sim/persist.rs: the PLX_CACHE_DIR on-disk memo
+# format (see docs/cache.md). Same header, same token order, same
+# 16-hex-digit f64 bit patterns, same lexicographic line sort — a file
+# written by either language parses bit-exact in the other.
+
+PERSIST_FORMAT_VERSION = 1
+PERSIST_CACHE_DIR_ENV = "PLX_CACHE_DIR"
+
+# Kernel short codes used in cache lines (persist.rs::kernel_code); the
+# in-memory pysim kernel constants are the paper labels, which contain
+# spaces and so never appear inside space-separated entries.
+KERNEL_CODES = {TORCH: "torch", FUSED: "fused", FLASH1: "flash1",
+                FLASH2: "flash2", FLASH2RMS: "flash2rms"}
+
+# Kernel::parse accepts the short codes and the paper labels alike.
+KERNEL_PARSE = {"torch": TORCH, "fused": FUSED,
+                "flash1": FLASH1, "flash_attn1.0.8": FLASH1,
+                "flash2": FLASH2, "flash_attn2": FLASH2,
+                "flash2rms": FLASH2RMS, "flash_attn2+rms": FLASH2RMS,
+                "flash_attn2 + RMS kern.": FLASH2RMS}
+
+
+def sched_parse(s):
+    """Mirror of Schedule::parse -> label: returns the canonical label
+    string, or None. ("interleaved:02" normalizes to "interleaved:2".)"""
+    if s in (SCHED_1F1B, SCHED_GPIPE):
+        return s
+    if s.startswith("interleaved:"):
+        tail = s[len("interleaved:"):]
+        digits = tail[1:] if tail.startswith("+") else tail
+        if digits.isdigit():
+            return f"interleaved:{int(digits)}"
+    return None
+
+
+def f64_hex(v):
+    return format(struct.unpack("<Q", struct.pack("<d", float(v)))[0], "016x")
+
+
+def bits_hex(b):
+    return format(b, "016x")
+
+
+def hardware_from_bits(bits):
+    return Hardware(*(struct.unpack("<d", struct.pack("<Q", b))[0] for b in bits))
+
+
+@dataclass(frozen=True)
+class PersistEvalKey:
+    """Mirrors cache.rs::Key, the evaluate-memo key as spilled."""
+    layers: int
+    hidden: int
+    heads: int
+    ffn: int
+    vocab: int
+    seq: int
+    gpus: int
+    gpus_per_node: int
+    gbs: int
+    hw_bits: tuple
+    cal: tuple
+    layout: Layout
+
+
+@dataclass(frozen=True)
+class PersistStageKey:
+    """Mirrors cache.rs::StKey (stage = (tp, mb, ckpt, kernel, sp))."""
+    layers: int
+    hidden: int
+    heads: int
+    ffn: int
+    vocab: int
+    seq: int
+    hw_bits: tuple
+    cal: tuple
+    stage: tuple
+
+
+@dataclass(frozen=True)
+class PersistMsKey:
+    """Mirrors cache.rs::MsKey (cost_bits: 5 f64 bit patterns)."""
+    sched: str
+    pp: int
+    m: int
+    cost_bits: tuple
+
+
+def _persist_header(memo):
+    return f"plxcache v{PERSIST_FORMAT_VERSION} {memo}\n"
+
+
+def _persist_body(memo, lines):
+    out = [_persist_header(memo)]
+    for l in sorted(lines):
+        out.append(l + "\n")
+    return "".join(out)
+
+
+def _eval_key_tokens(k):
+    t = [str(k.layers), str(k.hidden), str(k.heads), str(k.ffn),
+         str(k.vocab), str(k.seq), str(k.gpus), str(k.gpus_per_node),
+         str(k.gbs)]
+    t += [bits_hex(b) for b in k.hw_bits]
+    t += [bits_hex(b) for b in k.cal]
+    l = k.layout
+    t += [str(l.tp), str(l.pp), str(l.mb), str(int(l.ckpt)),
+          KERNEL_CODES[l.kernel], str(int(l.sp)), l.sched]
+    return " ".join(t)
+
+
+def persist_render_evaluate(entries):
+    lines = []
+    for k, out in entries:
+        if out.kind == "ok":
+            payload = " ".join(
+                ["ok", f64_hex(out.step_time_s), f64_hex(out.mfu)]
+                + [f64_hex(v) for v in (
+                    out.mem.weights, out.mem.grads, out.mem.optimizer,
+                    out.mem.activations, out.mem.logits, out.mem.workspace,
+                    out.step.compute, out.step.tp_comm, out.step.pp_comm,
+                    out.step.bubble, out.step.dp_comm, out.step.optimizer)])
+        elif out.kind == "oom":
+            payload = f"oom {f64_hex(out.required)} {f64_hex(out.budget)}"
+        else:
+            payload = "unavail"
+        lines.append(f"{_eval_key_tokens(k)} {payload}")
+    return _persist_body("evaluate", lines)
+
+
+def persist_render_stage(entries):
+    lines = []
+    for k, c in entries:
+        t = [str(k.layers), str(k.hidden), str(k.heads), str(k.ffn),
+             str(k.vocab), str(k.seq)]
+        t += [bits_hex(b) for b in k.hw_bits]
+        t += [bits_hex(b) for b in k.cal]
+        tp, mb, ckpt, kernel, sp = k.stage
+        t += [str(tp), str(mb), str(int(ckpt)), KERNEL_CODES[kernel], str(int(sp))]
+        t += [f64_hex(v) for v in (
+            c.layer_fwd, c.layer_bwd, c.head_fwd, c.head_bwd,
+            c.tp_per_layer, c.sp_factor, c.p2p_intra, c.p2p_inter,
+            c.act_bytes, c.act_bytes_full)]
+        lines.append(" ".join(t))
+    return _persist_body("stage", lines)
+
+
+def persist_render_makespan(entries):
+    lines = []
+    for k, ms in entries:
+        t = [k.sched, str(k.pp), str(k.m)]
+        t += [bits_hex(b) for b in k.cost_bits]
+        if ms is None:
+            t.append("deadlock")
+        else:
+            total, busy = ms
+            t.append(f64_hex(total))
+            t += [f64_hex(v) for v in busy]
+        lines.append(" ".join(t))
+    return _persist_body("makespan", lines)
+
+
+class _PersistToks:
+    """Mirror of persist.rs::Toks — positional token cursor; every
+    accessor returns None on malformed input (line skipped)."""
+
+    def __init__(self, line):
+        self.t = line.split()
+        self.i = 0
+
+    def s(self):
+        if self.i >= len(self.t):
+            return None
+        v = self.t[self.i]
+        self.i += 1
+        return v
+
+    def usize(self):
+        v = self.s()
+        return int(v) if v is not None and v.isdigit() else None
+
+    def bits(self):
+        v = self.s()
+        if v is None or len(v) != 16:
+            return None
+        try:
+            return int(v, 16)
+        except ValueError:
+            return None
+
+    def f64(self):
+        b = self.bits()
+        return None if b is None else struct.unpack("<d", struct.pack("<Q", b))[0]
+
+    def bool01(self):
+        v = self.s()
+        return {"0": False, "1": True}.get(v)
+
+    def done(self):
+        return self.i >= len(self.t)
+
+
+def _persist_entry_lines(text, memo):
+    lines = text.splitlines()
+    if not lines or lines[0] != f"plxcache v{PERSIST_FORMAT_VERSION} {memo}":
+        return []
+    return [l for l in lines[1:] if l.strip()]
+
+
+def _parse_eval_key(t):
+    nums = [t.usize() for _ in range(9)]
+    if any(v is None for v in nums):
+        return None
+    hw = tuple(t.bits() for _ in range(8))
+    cal = tuple(t.bits() for _ in range(len(CAL_VARS)))
+    if any(b is None for b in hw + cal):
+        return None
+    tp, pp, mb = t.usize(), t.usize(), t.usize()
+    ckpt = t.bool01()
+    kernel = KERNEL_PARSE.get(t.s() or "")
+    sp = t.bool01()
+    sched = sched_parse(t.s() or "")
+    if None in (tp, pp, mb, ckpt, kernel, sp, sched):
+        return None
+    layout = Layout(tp, pp, mb, ckpt, kernel, sp, sched)
+    return PersistEvalKey(*nums, hw, cal, layout)
+
+
+def persist_parse_evaluate(text):
+    out = []
+    for line in _persist_entry_lines(text, "evaluate"):
+        t = _PersistToks(line)
+        key = _parse_eval_key(t)
+        if key is None:
+            continue
+        tag = t.s()
+        if tag == "ok":
+            f = [t.f64() for _ in range(14)]
+            if any(v is None for v in f):
+                continue
+            oc = Outcome("ok", step_time_s=f[0], mfu=f[1],
+                         mem=MemoryBreakdown(*f[2:8]),
+                         step=StepBreakdown(*f[8:14]))
+        elif tag == "oom":
+            req, bud = t.f64(), t.f64()
+            if req is None or bud is None:
+                continue
+            oc = Outcome("oom", required=req, budget=bud)
+        elif tag == "unavail":
+            oc = Outcome("unavail")
+        else:
+            continue
+        if t.done():
+            out.append((key, oc))
+    return out
+
+
+def persist_parse_stage(text):
+    out = []
+    for line in _persist_entry_lines(text, "stage"):
+        t = _PersistToks(line)
+        nums = [t.usize() for _ in range(6)]
+        if any(v is None for v in nums):
+            continue
+        hw = tuple(t.bits() for _ in range(8))
+        cal = tuple(t.bits() for _ in range(len(CAL_VARS)))
+        if any(b is None for b in hw + cal):
+            continue
+        tp, mb = t.usize(), t.usize()
+        ckpt = t.bool01()
+        kernel = KERNEL_PARSE.get(t.s() or "")
+        sp = t.bool01()
+        if None in (tp, mb, ckpt, kernel, sp):
+            continue
+        f = [t.f64() for _ in range(10)]
+        if any(v is None for v in f):
+            continue
+        key = PersistStageKey(*nums, hw, cal, (tp, mb, ckpt, kernel, sp))
+        if t.done():
+            out.append((key, LayerCosts(*f)))
+    return out
+
+
+def persist_parse_makespan(text):
+    out = []
+    for line in _persist_entry_lines(text, "makespan"):
+        t = _PersistToks(line)
+        sched = sched_parse(t.s() or "")
+        pp, m = t.usize(), t.usize()
+        if None in (sched, pp, m):
+            continue
+        cost_bits = tuple(t.bits() for _ in range(5))
+        if any(b is None for b in cost_bits):
+            continue
+        key = PersistMsKey(sched, pp, m, cost_bits)
+        first = t.s()
+        if first is None:
+            continue
+        if first == "deadlock":
+            if t.done():
+                out.append((key, None))
+            continue
+        if len(first) != 16:
+            continue
+        try:
+            total = struct.unpack("<d", struct.pack("<Q", int(first, 16)))[0]
+        except ValueError:
+            continue
+        busy = [t.f64() for _ in range(pp)]
+        if any(v is None for v in busy):
+            continue
+        if t.done():
+            out.append((key, (total, busy)))
+    return out
+
+
+def persist_cache_dir():
+    v = os.environ.get(PERSIST_CACHE_DIR_ENV)
+    return v if v else None
+
+
+def _persist_write_atomic(dirpath, name, content):
+    tmp = os.path.join(dirpath, f".{name}.tmp.{os.getpid()}")
+    with open(tmp, "w") as f:
+        f.write(content)
+    os.replace(tmp, os.path.join(dirpath, name))
+
+
+def persist_save_all(dirpath):
+    """Mirror of persist.rs::save_all. pysim has no makespan memo (the
+    Rust side's Arc<Makespan> cache), so makespan.plxcache is written
+    with whatever a prior load left — typically header-only."""
+    os.makedirs(dirpath, exist_ok=True)
+    eval_entries = []
+    for (job, v, hw, calbits), oc in _EVAL_CACHE.items():
+        a = job.arch
+        key = PersistEvalKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab,
+                             a.seq, job.cluster.gpus,
+                             job.cluster.gpus_per_node, job.gbs,
+                             hw_bits(hw), calbits, v.layout)
+        eval_entries.append((key, oc))
+    stage_entries = []
+    for (a, hw, calbits, st), costs in _STAGE_CACHE.items():
+        key = PersistStageKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab,
+                              a.seq, hw_bits(hw), calbits, st)
+        stage_entries.append((key, costs))
+    stats = {"evaluate": len(eval_entries), "stage": len(stage_entries),
+             "makespan": 0}
+    _persist_write_atomic(dirpath, "evaluate.plxcache",
+                          persist_render_evaluate(eval_entries))
+    _persist_write_atomic(dirpath, "stage.plxcache",
+                          persist_render_stage(stage_entries))
+    _persist_write_atomic(dirpath, "makespan.plxcache",
+                          persist_render_makespan([]))
+    return stats
+
+
+_ARCH_BY_DIMS = {(a.layers, a.hidden, a.heads, a.ffn, a.vocab, a.seq): a
+                 for a in PRESETS.values()}
+
+
+def persist_load_all(dirpath):
+    """Mirror of persist.rs::load_all: vacant-only inserts into the live
+    memos. Counts parsed entries like the Rust side; entries whose arch
+    dimensions match no named preset cannot be keyed in pysim (the
+    in-memory key holds the named arch) and are skipped after counting."""
+
+    def read(name):
+        try:
+            with open(os.path.join(dirpath, name)) as f:
+                return f.read()
+        except OSError:
+            return ""
+
+    stats = {"evaluate": 0, "stage": 0, "makespan": 0}
+    for key, oc in persist_parse_evaluate(read("evaluate.plxcache")):
+        stats["evaluate"] += 1
+        arch = _ARCH_BY_DIMS.get((key.layers, key.hidden, key.heads,
+                                  key.ffn, key.vocab, key.seq))
+        if arch is None:
+            continue
+        job = Job(arch, Cluster(key.gpus, key.gpus_per_node), key.gbs)
+        try:
+            v = validate(job, key.layout)
+        except ValueError:
+            continue
+        k = (job, v, hardware_from_bits(key.hw_bits), key.cal)
+        if k not in _EVAL_CACHE:
+            _EVAL_CACHE[k] = oc
+            _DISK_KEYS["evaluate"].add(k)
+            _DISK_STATS["evaluate"][0] += 1
+    for key, costs in persist_parse_stage(read("stage.plxcache")):
+        stats["stage"] += 1
+        arch = _ARCH_BY_DIMS.get((key.layers, key.hidden, key.heads,
+                                  key.ffn, key.vocab, key.seq))
+        if arch is None:
+            continue
+        k = (arch, hardware_from_bits(key.hw_bits), key.cal, key.stage)
+        if k not in _STAGE_CACHE:
+            _STAGE_CACHE[k] = costs
+            _DISK_KEYS["stage"].add(k)
+            _DISK_STATS["stage"][0] += 1
+    stats["makespan"] = len(persist_parse_makespan(read("makespan.plxcache")))
+    return stats
+
+
+def persist_save_if_configured():
+    d = persist_cache_dir()
+    if d is None:
+        return None
+    try:
+        return persist_save_all(d)
+    except OSError as e:
+        import sys
+        print(f"plx: warning: failed to write {d}: {e}", file=sys.stderr)
+        return None
+
+# ---------------------------------------------------------------- planner/render
+
+def render_plan(job, plan):
+    """Mirror of rust/src/planner/mod.rs::render_plan, byte for byte
+    (Rust bool Display prints "true"/"false")."""
+    l = plan.v.layout
+    return (
+        f"plan for {job.arch.name} on {job.cluster.gpus} GPUs (gbs {job.gbs}):\n"
+        f"  mb={l.mb} tp={l.tp} pp={l.pp} dp={plan.v.topo.dp}"
+        f" ckpt={'true' if l.ckpt else 'false'} kernel={l.kernel}"
+        f" sp={'true' if l.sp else 'false'} sched={l.sched}\n"
+        f"  predicted: {100.0 * plan.predicted_mfu:.2f}% MFU,"
+        f" {plan.predicted_step_s:.2f}s/step,"
+        f" {plan.v.num_micro} micro-batches/step\n")
+
+# ---------------------------------------------------------------- sweep/compare
+
+def run_compare(preset_, hws):
+    """Mirror of rust/src/sweep/engine.rs::run_compare (the serial path;
+    the Rust fused path is bit-identical to it by construction — both go
+    through the pure evaluate memo)."""
+    return [(name, run(preset_, hw)) for name, hw in hws]
+
+
+def render_compare(results):
+    """Mirror of rust/src/sweep/report.rs::render_compare."""
+    first = results[0][1]
+    base = first.best()
+    base_mfu = base.outcome.mfu if base is not None else None
+    rows = []
+    for hw_name, r in results:
+        best = r.best()
+        if best is not None:
+            l = best.layout()
+            m = best.outcome.mfu
+            if base_mfu is not None:
+                delta = f"{100.0 * (m - base_mfu):+.2f}"
+            else:
+                delta = "—"
+            rows.append([hw_name, l.annotation(), l.kernel,
+                         "True" if l.sp else "False", pct(m),
+                         secs(best.outcome.step_time_s), delta])
+        else:
+            rows.append([hw_name, "—", "—", "—", "", "no runnable layout", "—"])
+    headers = ["Hardware", "Best Layout", "Kernel", "Seq Par", "MFU",
+               "Step Time", f"MFU vs {results[0][0]}"]
+    return (f"# compare — {first.preset_name} ({first.job.arch.name} on "
+            f"{first.job.cluster.gpus} GPUs, GBS {first.job.gbs}) across hardware\n"
+            + table_render(headers, rows))
+
+# ---------------------------------------------------------------- serve mirror
+
+# Mirror of rust/src/serve/mod.rs: the request/response semantics of
+# `plx serve` as a pure line -> (response, shutdown) function. Envelopes,
+# error codes, strict field checking, and the output renderers are all
+# shared with the mirrors above, so an ok response's "output" field is
+# byte-identical to the Rust daemon's (and to the one-shot CLI).
+
+SERVE_DEFAULT_ADDR = "127.0.0.1:7077"
+SERVE_ADDR_ENV = "PLX_SERVE_ADDR"
+
+
+class ServeState:
+    def __init__(self):
+        self.started = time.monotonic()
+        self.requests = 0
+        self.deduped = 0  # serial mirror: never bumped (no concurrency)
+        self.errors = 0
+        self.latency_us = 0
+        self.spilled = (0, 0)
+
+
+class _ServeError(Exception):
+    pass
+
+
+def _serve_err(code, message):
+    return json_write({"error": {"code": code, "message": message}, "ok": False})
+
+
+def _serve_check_keys(req, allowed):
+    # BTreeMap iteration is sorted, so the first offender matches.
+    for k in sorted(req):
+        if k not in allowed:
+            raise _ServeError(f'unknown field "{k}"')
+
+
+def _serve_str(req, key):
+    v = req.get(key)
+    if v is None and key not in req:
+        return None
+    if isinstance(v, str):
+        return v
+    raise _ServeError(f'"{key}" must be a string')
+
+
+def _serve_need_str(req, key):
+    v = _serve_str(req, key)
+    if v is None:
+        raise _ServeError(f'need "{key}"')
+    return v
+
+
+def _serve_usize(req, key):
+    if key not in req:
+        return None
+    v = req[key]
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        raise _ServeError(f'"{key}" must be a non-negative integer')
+    f = float(v)
+    if f < 0 or f != int(f):
+        raise _ServeError(f'"{key}" must be a non-negative integer')
+    return int(f)
+
+
+def _serve_bool(req, key):
+    if key not in req:
+        return False
+    v = req[key]
+    if not isinstance(v, bool):
+        raise _ServeError(f'"{key}" must be a boolean')
+    return v
+
+
+def _serve_resolve_hw(name):
+    hw = hw_preset(name)
+    if hw is None:
+        known = ", ".join(n for n, _ in HW_PRESETS)
+        raise _ServeError(f"unknown hardware '{name}' (known presets: {known})")
+    return hardware_from_overrides(hw)
+
+
+def _serve_parse_schedules(spec):
+    scheds = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        s = sched_parse(tok)
+        if s is None:
+            raise _ServeError(
+                f"unknown schedule '{tok}' (1f1b, gpipe, interleaved:<v>)")
+        scheds.append(s)
+    if not scheds:
+        raise _ServeError('"schedule" needs at least one value')
+    return scheds
+
+
+def _serve_do_plan(req):
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])
+    model = _serve_need_str(req, "model")
+    arch = preset(model)
+    if arch is None:
+        raise _ServeError(f"unknown model '{model}'")
+    nodes = _serve_usize(req, "nodes")
+    nodes = 8 if nodes is None else nodes
+    gbs = _serve_usize(req, "gbs")
+    gbs = Job.paper_gbs(arch) if gbs is None else gbs
+    hw = _serve_resolve_hw(_serve_str(req, "hw") or "a100")
+    job = Job(arch, Cluster.dgx_a100(nodes), gbs)
+    try:
+        if _serve_bool(req, "exhaustive"):
+            plan = plan_exhaustive_stats(job, hw)[0]
+        else:
+            plan = plan_by_rules(job, hw)
+    except ValueError as e:
+        raise _ServeError(str(e))
+    return render_plan(job, plan)
+
+
+def _serve_do_sweep(req):
+    _serve_check_keys(req, ["cmd", "preset", "hw", "schedule", "top"])
+    name = _serve_need_str(req, "preset")
+    p = by_name(name)
+    if p is None:
+        raise _ServeError(f"unknown preset '{name}'")
+    spec = _serve_str(req, "schedule")
+    if spec is not None:
+        p = replace(p, scheds=tuple(_serve_parse_schedules(spec)))
+    hw = _serve_resolve_hw(_serve_str(req, "hw") or "a100")
+    top = _serve_usize(req, "top")
+    result = run(p, hw)
+    return report_render_top(result, len(p.sps) > 1, top)
+
+
+def _serve_do_compare(req):
+    _serve_check_keys(req, ["cmd", "preset", "hw"])
+    name = _serve_need_str(req, "preset")
+    p = by_name(name)
+    if p is None:
+        raise _ServeError(f"unknown preset '{name}'")
+    spec = _serve_str(req, "hw") or "a100,h100"
+    hws = [(n.strip(), _serve_resolve_hw(n.strip()))
+           for n in spec.split(",") if n.strip()]
+    if not hws:
+        raise _ServeError('"hw" needs at least one preset name')
+    return render_compare(run_compare(p, hws))
+
+
+def _serve_stats(state):
+    def memo(name, entries):
+        h, m = _MEMO_STATS.get(name, [0, 0])
+        return {"entries": entries, "hits": h, "misses": m}
+
+    def disk(name):
+        loaded, hits = _DISK_STATS[name]
+        return {"hits": hits, "loaded": loaded}
+
+    stats = {
+        "deduped": state.deduped,
+        "disk": {"evaluate": disk("evaluate"), "makespan": disk("makespan"),
+                 "stage": disk("stage")},
+        "errors": state.errors,
+        "latency_us": {"count": state.requests, "total": state.latency_us},
+        "memos": {"evaluate": memo("evaluate", len(_EVAL_CACHE)),
+                  "makespan": memo("makespan", 0),
+                  "stage": memo("stage", len(_STAGE_CACHE))},
+        "requests": state.requests,
+        "uptime_s": time.monotonic() - state.started,
+    }
+    return json_write({"cmd": "stats", "ok": True, "stats": stats})
+
+
+def _serve_dispatch(state, line):
+    try:
+        parsed = json_parse(line)
+    except JsonParseError as e:
+        return _serve_err("parse", str(e)), False
+    if not isinstance(parsed, dict):
+        return _serve_err("parse", "request must be a JSON object"), False
+    try:
+        cmd = _serve_str(parsed, "cmd")
+    except _ServeError as e:
+        return _serve_err("bad_request", str(e)), False
+    if cmd is None:
+        return _serve_err("bad_request", 'need "cmd"'), False
+    if cmd == "stats":
+        return _serve_stats(state), False
+    if cmd == "shutdown":
+        return json_write({"cmd": "shutdown", "ok": True}), True
+    if cmd in ("plan", "sweep", "compare"):
+        do = {"plan": _serve_do_plan, "sweep": _serve_do_sweep,
+              "compare": _serve_do_compare}[cmd]
+        try:
+            output = do(parsed)
+        except _ServeError as e:
+            return _serve_err("bad_request", str(e)), False
+        return json_write({"cmd": cmd, "ok": True, "output": output}), False
+    return _serve_err("unknown_cmd", f'unknown cmd "{cmd}"'), False
+
+
+def serve_handle_line(state, line):
+    """Mirror of serve/mod.rs::handle_line: (response_text, shutdown).
+    The response text carries no trailing newline, like the Rust side."""
+    start = time.perf_counter()
+    state.requests += 1
+    text, shutdown = _serve_dispatch(state, line)
+    state.latency_us += int((time.perf_counter() - start) * 1e6)
+    # Canonical writer sorts keys: every error envelope (and only an
+    # error envelope) leads with the "error" member.
+    if text.startswith('{"error"'):
+        state.errors += 1
+    if persist_cache_dir() is not None:
+        now = (len(_EVAL_CACHE), len(_STAGE_CACHE))
+        if now != state.spilled:
+            persist_save_if_configured()
+            state.spilled = now
+    return text, shutdown

@@ -1,0 +1,185 @@
+#!/usr/bin/env python3
+"""CI smoke test for `plx serve` (the serve-smoke job).
+
+Drives the *real* daemon over the real socket and asserts the protocol
+contract end to end, including the one observable no in-process Rust
+test can show — a warm restart serving disk hits out of PLX_CACHE_DIR:
+
+  1. cold daemon: every `output` field byte-identical to the stdout of
+     the equivalent one-shot CLI invocation (plan / sweep --top /
+     sweep --hw h100 / compare);
+  2. error envelopes for a bad preset and a non-JSON line, with the
+     stats counters moving accordingly;
+  3. clean shutdown, then a cross-language check: the daemon's spilled
+     evaluate.plxcache parses with tools/pysim.py's mirror and
+     re-renders byte-identically (Rust writer <-> Python parser);
+  4. warm restart on the same PLX_CACHE_DIR: the startup banner reports
+     warmed entries, repeated queries answer with the same bytes, and
+     the stats report shows disk.evaluate.loaded > 0 AND
+     disk.evaluate.hits > 0 (the lookups were served by disk entries);
+  5. writes a stats artifact (cold + warm stats responses) for upload.
+
+Usage: python3 tools/serve_smoke.py [--bin PATH] [--artifact PATH]
+"""
+
+import argparse
+import json
+import os
+import shutil
+import socket
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from pysim import persist_parse_evaluate, persist_render_evaluate
+
+
+class Daemon:
+    """`plx serve --addr 127.0.0.1:0` + the stderr line that names the
+    bound port. The daemon exits on its own after a shutdown request."""
+
+    def __init__(self, bin_path, env):
+        self.proc = subprocess.Popen(
+            [bin_path, "serve", "--addr", "127.0.0.1:0"],
+            stderr=subprocess.PIPE, text=True, env=env)
+        self.banner = []
+        while True:
+            line = self.proc.stderr.readline()
+            if not line:
+                raise AssertionError(
+                    f"daemon exited before binding: {self.banner}")
+            self.banner.append(line.rstrip("\n"))
+            if "listening on" in line:
+                self.addr = line.rsplit(" ", 1)[1].strip()
+                break
+        host, port = self.addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=60)
+        self.rfile = self.sock.makefile("r", encoding="utf-8")
+
+    def ask(self, req):
+        line = req if isinstance(req, str) else json.dumps(req)
+        self.sock.sendall(line.encode() + b"\n")
+        resp = self.rfile.readline()
+        assert resp.endswith("\n"), f"unterminated response to {line!r}"
+        return json.loads(resp)
+
+    def shutdown(self):
+        resp = self.ask({"cmd": "shutdown"})
+        assert resp == {"cmd": "shutdown", "ok": True}, resp
+        self.sock.close()
+        code = self.proc.wait(timeout=60)
+        self.proc.stderr.close()
+        assert code == 0, f"daemon exited {code}"
+
+
+def cli(bin_path, env, *args):
+    r = subprocess.run([bin_path, *args], capture_output=True, text=True,
+                       env=env, check=True)
+    return r.stdout
+
+
+def expect_output(daemon, req, want, what):
+    resp = daemon.ask(req)
+    assert resp.get("ok") is True, f"{what}: {resp}"
+    if resp["output"] != want:
+        sys.stderr.write(f"--- CLI ({what})\n{want}+++ serve\n{resp['output']}")
+        raise AssertionError(f"{what}: serve output != CLI stdout")
+    return resp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", default="target/release/plx")
+    ap.add_argument("--artifact", default="serve_smoke_stats.json")
+    opts = ap.parse_args()
+
+    cache_dir = tempfile.mkdtemp(prefix="plx-serve-smoke-")
+    serve_env = dict(os.environ, PLX_CACHE_DIR=cache_dir)
+    # The CLI reference runs stay cold and cacheless: identical bytes
+    # must come from identical computation, not a shared spill file.
+    cli_env = {k: v for k, v in os.environ.items() if k != "PLX_CACHE_DIR"}
+    artifact = {"cache_dir_entries": {}, "cold": {}, "warm": {}}
+
+    queries = [
+        ("plan",
+         {"cmd": "plan", "model": "llama13b", "nodes": 1, "gbs": 512},
+         ["plan", "--model", "llama13b", "--nodes", "1", "--gbs", "512"]),
+        ("sweep-top5",
+         {"cmd": "sweep", "preset": "13b-2k", "top": 5},
+         ["sweep", "--preset", "13b-2k", "--top", "5"]),
+        ("sweep-h100",
+         {"cmd": "sweep", "preset": "13b-2k", "hw": "h100", "top": 5},
+         ["sweep", "--preset", "13b-2k", "--hw", "h100", "--top", "5"]),
+        ("compare",
+         {"cmd": "compare", "preset": "13b-2k", "hw": "a100,h100"},
+         ["compare", "--preset", "13b-2k", "--hw", "a100,h100"]),
+    ]
+
+    try:
+        # ---- cold daemon: byte-equality against the one-shot CLI -----
+        d = Daemon(opts.bin, serve_env)
+        assert not any("warmed" in b for b in d.banner), d.banner
+        cold = {}
+        for name, req, cli_args in queries:
+            want = cli(opts.bin, cli_env, *cli_args)
+            cold[name] = expect_output(d, req, want, name)
+            print(f"serve-smoke: {name} matches the CLI byte-for-byte")
+
+        # ---- error envelopes never break the connection --------------
+        resp = d.ask({"cmd": "sweep", "preset": "no-such"})
+        assert resp["ok"] is False, resp
+        assert resp["error"]["code"] == "bad_request", resp
+        resp = d.ask("not json at all")
+        assert resp["error"]["code"] == "parse", resp
+
+        stats = d.ask({"cmd": "stats"})["stats"]
+        artifact["cold"] = stats
+        assert stats["requests"] >= 7, stats
+        assert stats["errors"] == 2, stats
+        assert stats["memos"]["evaluate"]["entries"] > 0, stats
+        d.shutdown()
+        print("serve-smoke: errors + stats + shutdown OK")
+
+        # ---- cross-language: Rust spill, pysim parse, re-render ------
+        eval_file = os.path.join(cache_dir, "evaluate.plxcache")
+        with open(eval_file) as f:
+            text = f.read()
+        assert text.startswith("plxcache v1 evaluate\n"), text[:40]
+        entries = persist_parse_evaluate(text)
+        assert entries, "spill carries no evaluate entries"
+        assert persist_render_evaluate(entries) == text, \
+            "pysim re-render of the Rust spill is not byte-identical"
+        artifact["cache_dir_entries"]["evaluate"] = len(entries)
+        print(f"serve-smoke: pysim re-rendered {len(entries)} Rust-spilled "
+              "evaluate entries byte-identically")
+
+        # ---- warm restart: disk entries must serve the lookups -------
+        d = Daemon(opts.bin, serve_env)
+        assert any("warmed" in b for b in d.banner), \
+            f"no warm-start banner: {d.banner}"
+        for name, req, _cli_args in queries:
+            resp = d.ask(req)
+            assert resp["output"] == cold[name]["output"], \
+                f"{name}: warm restart changed the bytes"
+        stats = d.ask({"cmd": "stats"})["stats"]
+        artifact["warm"] = stats
+        d.shutdown()
+        assert stats["disk"]["evaluate"]["loaded"] > 0, stats
+        assert stats["disk"]["evaluate"]["hits"] > 0, \
+            f"warm restart answered no lookup from disk entries: {stats}"
+        print(f"serve-smoke: warm restart loaded "
+              f"{stats['disk']['evaluate']['loaded']} evaluate entries, "
+              f"served {stats['disk']['evaluate']['hits']} disk hits")
+
+        with open(opts.artifact, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"serve-smoke: PASS; stats artifact at {opts.artifact}")
+        return 0
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
