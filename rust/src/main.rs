@@ -16,7 +16,8 @@
 //! Every analytic command takes `--hw <preset>` (default `a100`); see
 //! docs/hardware.md for the hardware model and `PLX_HW_*` overrides.
 //! With `PLX_CACHE_DIR` set, analytic commands and the daemon persist
-//! their memos across processes (docs/cache.md).
+//! their memos across processes (docs/cache.md); `--readonly` (or
+//! `PLX_CACHE_RO=1`) warm-loads that cache without spilling back.
 
 use std::path::Path;
 
@@ -27,11 +28,10 @@ use plx::coordinator::train;
 use plx::layout::{validate, Job, Kernel, Layout, Schedule};
 use plx::model::arch::{preset, PRESETS};
 use plx::planner::{plan_by_rules, plan_exhaustive_stats};
-use plx::sim::{evaluate, memory, parse_hw, Hardware, Outcome};
+use plx::sim::{parse_hw, Hardware};
 use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2};
 use plx::topo::Cluster;
 use plx::util::cli::{Args, Spec};
-use plx::util::table;
 
 const SPEC: Spec = Spec {
     options: &[
@@ -39,7 +39,7 @@ const SPEC: Spec = Spec {
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
         "loss-csv", "save", "resume", "jobs", "schedule", "hw", "addr", "top",
     ],
-    flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats"],
+    flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats", "readonly"],
 };
 
 fn main() {
@@ -57,6 +57,11 @@ fn run(argv: &[String]) -> Result<()> {
     // identical for any value (sweep::engine's determinism guarantee).
     if let Some(jobs) = args.get_jobs().map_err(anyhow::Error::msg)? {
         plx::util::pool::configure_jobs(jobs);
+    }
+    // `--readonly` (or PLX_CACHE_RO=1): warm-load the configured cache
+    // but never spill back — for shared, pre-baked cache directories.
+    if args.flag("readonly") {
+        plx::sim::persist::set_readonly(true);
     }
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     // With PLX_CACHE_DIR set, analytic commands warm the memos from the
@@ -145,9 +150,9 @@ USAGE:
              best layout + MFU delta per hardware, side by side
   plx serve  [--addr HOST:PORT]
              long-running daemon: newline-delimited JSON queries over TCP
-             (plan/sweep/compare/stats/shutdown — see docs/serve.md);
-             address from --addr, then $PLX_SERVE_ADDR, then
-             127.0.0.1:7077
+             (plan — single or batched — /sweep/compare/predict-mem/
+             stats/shutdown — see docs/serve.md); address from --addr,
+             then $PLX_SERVE_ADDR, then 127.0.0.1:7077
   plx presets
 
 OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
@@ -157,6 +162,8 @@ OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
   --hw NAME  hardware preset to simulate (a100, h100; default a100;
              `compare` takes a comma-separated list). Per-field
              overrides via PLX_HW_* env vars — see docs/hardware.md.
+  --readonly warm-load the PLX_CACHE_DIR cache but never spill back
+             (same as PLX_CACHE_RO=1; docs/cache.md).
 
 ENV:
   PLX_CACHE_DIR   persist the evaluation memos across processes
@@ -164,6 +171,8 @@ ENV:
                   from it on start and spill back on success; the
                   daemon spills after each request that computed
                   something new.
+  PLX_CACHE_RO    read-only cache: warm-load only, suppress spills
+                  (any value except empty or 0).
   PLX_SERVE_ADDR  default bind address for `plx serve`.
 
 Artifacts for `plx train` come from `make artifacts`
@@ -397,43 +406,12 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
         sched,
     };
     let v = validate(&job, &l)?;
-    let mem = memory::per_gpu_memory(&job, &v, &hw);
-    let gb = 1e9;
-    let rows = vec![
-        vec!["weights (bf16)".to_string(), format!("{:.2}", mem.weights / gb)],
-        vec!["gradients (bf16)".to_string(), format!("{:.2}", mem.grads / gb)],
-        vec!["optimizer (ZeRO-1 fp32)".to_string(), format!("{:.2}", mem.optimizer / gb)],
-        vec!["activations".to_string(), format!("{:.2}", mem.activations / gb)],
-        vec!["logits".to_string(), format!("{:.2}", mem.logits / gb)],
-        vec!["workspace".to_string(), format!("{:.2}", mem.workspace / gb)],
-        vec!["TOTAL".to_string(), format!("{:.2}", mem.total() / gb)],
-        // "budget (A100-80GB)  80.00" for the default hardware — byte-
-        // identical to the pre---hw output; other presets annotate theirs.
-        vec![
-            format!(
-                "budget ({}-{:.0}GB)",
-                args.get_or("hw", "a100").to_uppercase(),
-                hw.hbm_bytes / gb
-            ),
-            format!("{:.2}", hw.hbm_bytes / gb),
-        ],
-    ];
-    println!(
-        "memory prediction: {} {} dp={}",
-        job.arch.name, l.annotation(), v.topo.dp
+    // The full report (table + verdict) comes from the shared renderer —
+    // the serve protocol's `predict-mem` returns these exact bytes.
+    print!(
+        "{}",
+        plx::sim::render_predict_mem(&job, &v, &hw, args.get_or("hw", "a100"))
     );
-    print!("{}", table::render(&["component", "GB/GPU"], &rows));
-    match evaluate(&job, &v, &hw) {
-        Outcome::Ok { mfu, step_time_s, .. } => {
-            println!("fits. predicted {:.2}% MFU, {step_time_s:.2}s/step", 100.0 * mfu)
-        }
-        Outcome::Oom { required, budget } => println!(
-            "OOM: needs {:.1} GB of {:.1} GB",
-            required / gb,
-            budget / gb
-        ),
-        Outcome::KernelUnavailable => println!("kernel unavailable for this layout"),
-    }
     Ok(())
 }
 
@@ -448,11 +426,13 @@ fn cmd_compare(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let presets = presets_from_args(args, "need --preset NAME or --all")?;
     for p in presets {
-        // One fused cross-product dispatch over (hardware × layout) —
-        // bit-identical to a sweep per hardware, without the serial
-        // hardware loop (`sweep::run_compare`).
-        let results = plx::sweep::run_compare(&p, &hws, 0);
-        print!("{}", report::render_compare(&results));
+        // Bound-driven per-hardware winners (`sweep::argmax::compare_best`)
+        // — never materializes the sweep tables, prunes every layout whose
+        // MFU upper bound cannot beat the incumbent, and renders through
+        // the same body as the materializing path (bit-identity asserted
+        // by `compare_best_matches_run_compare_winners`).
+        let winners = plx::sweep::compare_best(&p, &hws, 0);
+        print!("{}", report::render_compare_best(p.name, &p.job(), &winners));
     }
     Ok(())
 }

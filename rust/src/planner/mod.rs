@@ -18,8 +18,9 @@
 //!
 //! [`plan_exhaustive`] is the ground truth (argmax over the full layout
 //! space via the simulator, at the paper's 1F1B schedule). It scans the
-//! lazy layout space with **branch-and-bound pruning**: the kernel gate,
-//! the parameter-state memory lower bound, and the admissible MFU upper
+//! lazy layout space with **branch-and-bound pruning** through the
+//! generic [`crate::sweep::argmax`] engine: the kernel gate, the
+//! parameter-state memory lower bound, and the admissible MFU upper
 //! bound (`sim::mfu_upper_bound`) provably discard dominated layouts
 //! before the simulator runs, so the argmax — identical to the unpruned
 //! scan's, to the bit — typically costs a fraction of the space
@@ -246,40 +247,21 @@ pub fn plan_exhaustive(job: &Job, hw: &Hardware) -> Result<Plan> {
     plan_exhaustive_stats(job, hw).map(|(p, _)| p)
 }
 
-/// Candidates per parallel evaluation window of the bound-pruned scan.
-/// Smaller windows refresh the incumbent more often (tighter pruning —
-/// at 32 every paper job stays under half the space); larger windows
-/// feed the pool bigger batches. 32 candidates across a handful of
-/// stage-key groups keeps a typical pool busy while adding at most a
-/// window's worth of over-evaluation per incumbent improvement.
-const PRUNE_WINDOW: usize = 32;
-
 /// [`plan_exhaustive`] plus the pruning counters.
 ///
-/// Scans [`crate::layout::LayoutSpace`] lazily **in enumeration order**
-/// with an incumbent, per layout:
-///
-/// 1. kernel gate — unavailable layouts can never be `Ok`;
-/// 2. memory lower bound — if `model_state_bytes` alone overflows HBM
-///    the outcome is `Oom`;
-/// 3. MFU upper bound ([`crate::sim::mfu_upper_bound`], admissible
-///    bitwise) — if it cannot *strictly* beat the incumbent, the layout
-///    cannot change the argmax (ties keep the earlier row, exactly like
-///    the historical strict-`>` loop);
-/// 4. otherwise the layout joins the current evaluation **window**;
-///    every [`PRUNE_WINDOW`] survivors are evaluated together on the
-///    pool (through the sweep engine's group-factored dispatch and the
-///    shared cache) and folded into the incumbent in enumeration order.
-///
-/// Windowing keeps the scan parallel without touching the argmax: a
-/// layout is only ever *skipped* against an incumbent derived from
-/// strictly preceding layouts (`mfu ≤ ub ≤ incumbent` ⇒ it loses the
-/// strict-`>` race at its position), and *extra* evaluations inside a
-/// window are harmless because outcomes are pure and the fold applies
-/// the same strict-`>` rule in the same order. The returned plan —
-/// layout AND predicted numbers, to the bit — therefore equals the
-/// unpruned scan's, while typically evaluating well under half the
-/// space (the acceptance gate asserts < 60%).
+/// Since the branch-and-bound scan was extracted into the reusable
+/// [`crate::sweep::argmax`] engine, this is a thin query over it:
+/// the exhaustive planner grid as the lazy [`crate::layout::LayoutSpace`],
+/// a trivial predicate, and [`crate::sweep::Tie::KeepFirst`] — the
+/// historical strict-`>` fold, so ties keep the earliest enumerated
+/// layout exactly like [`plan_exhaustive_reference`]. The scan prunes
+/// with the kernel gate, the parameter-state memory lower bound, and the
+/// admissible MFU upper bound, evaluating survivors in pool-batched
+/// windows folded in enumeration order (see `sweep::argmax` for the
+/// losslessness argument). The returned plan — layout AND predicted
+/// numbers, to the bit — equals the unpruned scan's, while typically
+/// evaluating well under half the space (the acceptance gate asserts
+/// < 60%).
 pub fn plan_exhaustive_stats(job: &Job, hw: &Hardware) -> Result<(Plan, PruneStats)> {
     let (tps, pps) = exhaustive_axes();
     let space = crate::layout::LayoutSpace::new(
@@ -292,56 +274,19 @@ pub fn plan_exhaustive_stats(job: &Job, hw: &Hardware) -> Result<(Plan, PruneSta
         &[false, true],
         &[Schedule::OneF1B],
     );
-    let mut best: Option<Plan> = None;
-    let mut stats = PruneStats::default();
-    let mut window: Vec<ValidLayout> = Vec::with_capacity(PRUNE_WINDOW);
-    let mut flush = |window: &mut Vec<ValidLayout>, best: &mut Option<Plan>| {
-        let batch = std::mem::take(window);
-        // Parallel, group-factored, cached — then folded serially in
-        // enumeration order so first-max tie-breaking is untouched.
-        for row in crate::sweep::engine::evaluate_layouts(job, batch, hw, 0) {
-            if let Outcome::Ok { mfu, step_time_s, .. } = row.outcome {
-                if best.as_ref().map(|b| mfu > b.predicted_mfu).unwrap_or(true) {
-                    *best =
-                        Some(Plan { v: row.v, predicted_mfu: mfu, predicted_step_s: step_time_s });
-                }
-            }
-        }
+    let (best, q) =
+        crate::sweep::argmax::argmax_mfu(job, space, hw, |_| true, crate::sweep::Tie::KeepFirst, 0);
+    let stats = PruneStats {
+        total: q.total,
+        gate_pruned: q.gate_pruned,
+        mem_pruned: q.mem_pruned,
+        bound_pruned: q.bound_pruned,
+        evaluated: q.evaluated,
     };
-    for v in space {
-        stats.total += 1;
-        let gate = crate::sim::kernels::GateKey::new(
-            v.layout.kernel,
-            job.arch.heads,
-            v.layout.tp,
-            v.layout.mb,
-        );
-        if !gate.open() {
-            stats.gate_pruned += 1;
-            continue;
-        }
-        if crate::sim::memory::model_state_bytes(job, &v, hw) > hw.hbm_bytes {
-            stats.mem_pruned += 1;
-            continue;
-        }
-        if let Some(b) = &best {
-            // NaN-safe: a pathological NaN bound fails this comparison
-            // and falls through to a full evaluation — pruning is only
-            // ever taken on a provable dominance.
-            if crate::sim::mfu_upper_bound(job, &v, hw) <= b.predicted_mfu {
-                stats.bound_pruned += 1;
-                continue;
-            }
-        }
-        stats.evaluated += 1;
-        window.push(v);
-        if window.len() >= PRUNE_WINDOW {
-            flush(&mut window, &mut best);
-        }
-    }
-    flush(&mut window, &mut best);
     match best {
-        Some(b) => Ok((b, stats)),
+        Some(b) => {
+            Ok((Plan { v: b.v, predicted_mfu: b.mfu, predicted_step_s: b.step_time_s }, stats))
+        }
         None => bail!("no feasible layout for {} on {} GPUs", job.arch.name, job.cluster.gpus),
     }
 }

@@ -15,14 +15,20 @@
 //!
 //! Guarantees:
 //!
-//! * **Byte-identity**: the `output` field of a `plan`/`sweep`/`compare`
-//!   response is byte-identical to the stdout of the equivalent one-shot
-//!   CLI invocation — both sides call the same renderer
-//!   ([`crate::planner::render_plan`], [`crate::sweep::report`]), and
+//! * **Byte-identity**: the `output` field of a `plan`/`sweep`/
+//!   `compare`/`predict-mem` response — and every element of a batched
+//!   plan's `outputs` — is byte-identical to the stdout of the
+//!   equivalent one-shot CLI invocation: both sides call the same
+//!   renderer ([`crate::planner::render_plan`],
+//!   [`crate::sim::render_predict_mem`], [`crate::sweep::report`]), and
 //!   the memos are pure, so there is nothing to drift.
 //! * **Batching**: the layout evaluations behind one request fan out
 //!   through the shared work-stealing pool ([`crate::util::pool`]) — a
 //!   sweep request is one coarse-grouped dispatch, not a serial loop.
+//!   The batched plan form (`{"cmd":"plan","jobs":[...]}`) answers N
+//!   planning jobs in one request: every job's branch-and-bound scan
+//!   runs against the same warm process memos, and the daemon spills to
+//!   disk once per batch instead of once per job.
 //! * **Dedupe**: identical concurrent requests (same canonical JSON)
 //!   collapse onto one in-flight computation; the late arrivals wait and
 //!   receive the same response bytes. The `stats` command reports how
@@ -39,11 +45,11 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::layout::{Job, Schedule};
+use crate::layout::{validate, Job, Kernel, Layout, Schedule};
 use crate::model::arch::preset;
 use crate::planner::{plan_by_rules, plan_exhaustive_stats, render_plan};
-use crate::sim::{cache, parse_hw, persist, Hardware};
-use crate::sweep::{by_name, report, run_compare, run_jobs};
+use crate::sim::{cache, parse_hw, persist, render_predict_mem, Hardware};
+use crate::sweep::{by_name, compare_best, report, run_jobs};
 use crate::topo::Cluster;
 use crate::util::json::Json;
 
@@ -216,8 +222,9 @@ fn parse_schedules(spec: &str) -> Result<Vec<Schedule>, String> {
     Ok(scheds)
 }
 
-fn do_plan(req: &Req) -> Result<String, String> {
-    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])?;
+/// One planning job — the shared core of the single and batched `plan`
+/// forms (the caller has already checked the allowed key set).
+fn plan_one(req: &Req) -> Result<String, String> {
     let model = req.need_str("model")?;
     let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
     let nodes = req.usize("nodes")?.unwrap_or(8);
@@ -230,6 +237,81 @@ fn do_plan(req: &Req) -> Result<String, String> {
         plan_by_rules(&job, &hw).map_err(|e| e.to_string())?
     };
     Ok(render_plan(&job, &plan))
+}
+
+fn do_plan(req: &Req) -> Result<String, String> {
+    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])?;
+    plan_one(req)
+}
+
+/// The batched plan form: `{"cmd":"plan","jobs":[{...}, ...]}` — each
+/// element takes the same fields as a single plan request (minus
+/// `"cmd"`). All jobs run inside one request against the same warm
+/// process memos (an exhaustive job's branch-and-bound scan is itself
+/// pool-batched), and the daemon spills once per batch. Each element of
+/// the returned `outputs` array is byte-identical to the `output` of
+/// the equivalent one-shot request. Any invalid job fails the whole
+/// request — a partial batch would be ambiguous to resume.
+fn do_plan_batch(req: &Req) -> Result<Json, String> {
+    req.check_keys(&["cmd", "jobs"])?;
+    let jobs = match req.map.get("jobs") {
+        Some(Json::Arr(a)) => a,
+        Some(_) => return Err("\"jobs\" must be an array".to_string()),
+        None => return Err("need \"jobs\"".to_string()),
+    };
+    if jobs.is_empty() {
+        return Err("\"jobs\" needs at least one job".to_string());
+    }
+    let mut outputs = Vec::with_capacity(jobs.len());
+    for (i, j) in jobs.iter().enumerate() {
+        let Some(map) = j.as_obj() else {
+            return Err(format!("jobs[{i}] must be an object"));
+        };
+        let r = Req { map };
+        let out = r
+            .check_keys(&["model", "nodes", "gbs", "hw", "exhaustive"])
+            .and_then(|()| plan_one(&r))
+            .map_err(|m| format!("jobs[{i}]: {m}"))?;
+        outputs.push(Json::Str(out));
+    }
+    Ok(Json::Arr(outputs))
+}
+
+/// `predict-mem` over the wire: the same per-component memory table and
+/// fits/OOM verdict as `plx predict-mem`, rendered by the shared
+/// [`render_predict_mem`] — response `output` bytes equal CLI stdout.
+fn do_predict_mem(req: &Req) -> Result<String, String> {
+    req.check_keys(&[
+        "cmd", "model", "nodes", "gbs", "hw", "tp", "pp", "mb", "ckpt", "sp", "kernel",
+        "schedule",
+    ])?;
+    let model = req.need_str("model")?;
+    let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let nodes = req.usize("nodes")?.unwrap_or(8);
+    let gbs = req.usize("gbs")?.unwrap_or_else(|| Job::paper_gbs(&arch));
+    let hw_name = req.str("hw")?.unwrap_or("a100");
+    let hw = resolve_hw_name(hw_name)?;
+    let kernel = match req.str("kernel")? {
+        Some(k) => Kernel::parse(k).ok_or_else(|| format!("unknown kernel '{k}'"))?,
+        None => Kernel::Flash2Rms,
+    };
+    let sched = match req.str("schedule")? {
+        Some(s) => Schedule::parse(s)
+            .ok_or_else(|| format!("unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)"))?,
+        None => Schedule::OneF1B,
+    };
+    let l = Layout {
+        tp: req.usize("tp")?.unwrap_or(1),
+        pp: req.usize("pp")?.unwrap_or(1),
+        mb: req.usize("mb")?.unwrap_or(1),
+        ckpt: req.bool("ckpt")?,
+        kernel,
+        sp: req.bool("sp")?,
+        sched,
+    };
+    let job = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
+    let v = validate(&job, &l).map_err(|e| e.to_string())?;
+    Ok(render_predict_mem(&job, &v, &hw, hw_name))
 }
 
 fn do_sweep(req: &Req) -> Result<String, String> {
@@ -260,8 +342,10 @@ fn do_compare(req: &Req) -> Result<String, String> {
     if hws.is_empty() {
         return Err("\"hw\" needs at least one preset name".to_string());
     }
-    let results = run_compare(&p, &hws, 0);
-    Ok(report::render_compare(&results))
+    // Bound-driven winners, same as the CLI: prune instead of
+    // materializing each hardware's sweep table.
+    let winners = compare_best(&p, &hws, 0);
+    Ok(report::render_compare_best(p.name, &p.job(), &winners))
 }
 
 fn num(v: u64) -> Json {
@@ -375,14 +459,28 @@ fn dispatch(state: &State, line: &str) -> Reply {
             .write(),
             shutdown: true,
         },
-        "plan" | "sweep" | "compare" => {
+        "plan" | "sweep" | "compare" | "predict-mem" => {
             // Canonical bytes of the parsed request = the dedupe key:
             // whitespace/key-order variants of the same query collapse.
             let key = parsed.write();
             let text = deduped(state, &key, || {
+                // The batched plan form replies with an `outputs` array
+                // (one rendered plan per job) instead of `output`.
+                if cmd == "plan" && req.map.contains_key("jobs") {
+                    return match do_plan_batch(&req) {
+                        Ok(outputs) => obj(vec![
+                            ("cmd", Json::Str("plan".to_string())),
+                            ("ok", Json::Bool(true)),
+                            ("outputs", outputs),
+                        ])
+                        .write(),
+                        Err(m) => err("bad_request", m),
+                    };
+                }
                 let result = match cmd.as_str() {
                     "plan" => do_plan(&req),
                     "sweep" => do_sweep(&req),
+                    "predict-mem" => do_predict_mem(&req),
                     _ => do_compare(&req),
                 };
                 match result {
@@ -521,6 +619,82 @@ mod tests {
         let hw = resolve_hw_name("a100").unwrap();
         let plan = plan_by_rules(&job, &hw).unwrap();
         assert_eq!(parsed.get("output").as_str().unwrap(), render_plan(&job, &plan));
+    }
+
+    #[test]
+    fn batched_plan_outputs_equal_single_shot_responses() {
+        let state = State::new();
+        let batch = reply(
+            &state,
+            r#"{"cmd":"plan","jobs":[{"model":"llama13b","nodes":1},{"model":"llama30b","nodes":2},{"model":"llama13b","nodes":1,"hw":"h100"}]}"#,
+        );
+        let parsed = Json::parse(&batch).unwrap();
+        assert_eq!(parsed.get("ok").as_bool(), Some(true));
+        let outputs = parsed.get("outputs").as_arr().expect("batched reply carries outputs");
+        assert_eq!(outputs.len(), 3);
+        // Element i is byte-identical to the single-shot `output`.
+        for (i, single) in [
+            r#"{"cmd":"plan","model":"llama13b","nodes":1}"#,
+            r#"{"cmd":"plan","model":"llama30b","nodes":2}"#,
+            r#"{"cmd":"plan","model":"llama13b","nodes":1,"hw":"h100"}"#,
+        ]
+        .iter()
+        .enumerate()
+        {
+            let one = Json::parse(&reply(&state, single)).unwrap();
+            assert_eq!(
+                outputs[i].as_str().unwrap(),
+                one.get("output").as_str().unwrap(),
+                "jobs[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_plan_rejects_bad_jobs_whole() {
+        let state = State::new();
+        let r = reply(&state, r#"{"cmd":"plan","jobs":[]}"#);
+        assert!(r.contains("at least one job"), "{r}");
+        let r = reply(&state, r#"{"cmd":"plan","jobs":[{"model":"llama13b"},{"nodes":2}]}"#);
+        assert!(r.contains(r#"jobs[1]: need \"model\""#), "{r}");
+        let r = reply(&state, r#"{"cmd":"plan","jobs":[{"model":"llama13b","cmd":"plan"}]}"#);
+        assert!(r.contains("unknown field"), "{r}");
+        let r = reply(&state, r#"{"cmd":"plan","jobs":7}"#);
+        assert!(r.contains("must be an array"), "{r}");
+        // The batched form takes no other top-level fields.
+        let r = reply(&state, r#"{"cmd":"plan","jobs":[{"model":"llama13b"}],"model":"x"}"#);
+        assert!(r.contains("unknown field"), "{r}");
+    }
+
+    #[test]
+    fn predict_mem_response_equals_cli_renderer_bytes() {
+        let state = State::new();
+        let r = reply(
+            &state,
+            r#"{"cmd":"predict-mem","model":"llama30b","nodes":8,"tp":2,"pp":4,"sp":true}"#,
+        );
+        let parsed = Json::parse(&r).unwrap();
+        assert_eq!(parsed.get("ok").as_bool(), Some(true));
+        let arch = preset("llama30b").unwrap();
+        let job = Job::new(arch, Cluster::dgx_a100(8), Job::paper_gbs(&arch));
+        let hw = resolve_hw_name("a100").unwrap();
+        let l = Layout {
+            tp: 2,
+            pp: 4,
+            mb: 1,
+            ckpt: false,
+            kernel: Kernel::Flash2Rms,
+            sp: true,
+            sched: Schedule::OneF1B,
+        };
+        let v = validate(&job, &l).unwrap();
+        assert_eq!(
+            parsed.get("output").as_str().unwrap(),
+            render_predict_mem(&job, &v, &hw, "a100")
+        );
+        // Domain errors use the standard envelope.
+        let r = reply(&state, r#"{"cmd":"predict-mem","model":"llama30b","kernel":"warp"}"#);
+        assert!(r.contains("unknown kernel"), "{r}");
     }
 
     #[test]

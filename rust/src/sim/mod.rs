@@ -113,6 +113,49 @@ pub fn evaluate(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
     })
 }
 
+/// The `plx predict-mem` report: per-component memory table plus the
+/// fits/OOM/unavailable verdict for one validated layout. One renderer
+/// shared by the CLI (`cmd_predict_mem`) and the serve protocol's
+/// `predict-mem` command, so the daemon's output is byte-identical to
+/// the CLI's stdout by construction. `hw_label` is the user-spelled
+/// hardware name (`a100` → the `budget (A100-80GB)` row).
+pub fn render_predict_mem(job: &Job, v: &ValidLayout, hw: &Hardware, hw_label: &str) -> String {
+    let mem = memory::per_gpu_memory(job, v, hw);
+    let gb = 1e9;
+    let rows = vec![
+        vec!["weights (bf16)".to_string(), format!("{:.2}", mem.weights / gb)],
+        vec!["gradients (bf16)".to_string(), format!("{:.2}", mem.grads / gb)],
+        vec!["optimizer (ZeRO-1 fp32)".to_string(), format!("{:.2}", mem.optimizer / gb)],
+        vec!["activations".to_string(), format!("{:.2}", mem.activations / gb)],
+        vec!["logits".to_string(), format!("{:.2}", mem.logits / gb)],
+        vec!["workspace".to_string(), format!("{:.2}", mem.workspace / gb)],
+        vec!["TOTAL".to_string(), format!("{:.2}", mem.total() / gb)],
+        // "budget (A100-80GB)  80.00" for the default hardware — byte-
+        // identical to the pre---hw output; other presets annotate theirs.
+        vec![
+            format!("budget ({}-{:.0}GB)", hw_label.to_uppercase(), hw.hbm_bytes / gb),
+            format!("{:.2}", hw.hbm_bytes / gb),
+        ],
+    ];
+    let mut out = format!(
+        "memory prediction: {} {} dp={}\n",
+        job.arch.name,
+        v.layout.annotation(),
+        v.topo.dp
+    );
+    out.push_str(&crate::util::table::render(&["component", "GB/GPU"], &rows));
+    out.push_str(&match evaluate(job, v, hw) {
+        Outcome::Ok { mfu, step_time_s, .. } => {
+            format!("fits. predicted {:.2}% MFU, {step_time_s:.2}s/step\n", 100.0 * mfu)
+        }
+        Outcome::Oom { required, budget } => {
+            format!("OOM: needs {:.1} GB of {:.1} GB\n", required / gb, budget / gb)
+        }
+        Outcome::KernelUnavailable => "kernel unavailable for this layout\n".to_string(),
+    });
+    out
+}
+
 /// The PR-3 artifact pipeline exactly as it shipped: monolithic
 /// per-layout cost construction (no layer-stage memo), artifact arena,
 /// O(ops) executor, makespan memo. Value-identical to [`evaluate`];
@@ -141,10 +184,21 @@ pub fn evaluate_unfactored(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome
 /// decreasing in step time and
 /// [`step_time::step_time_lower_bound`] never exceeds the true step time
 /// (bitwise), so `mfu(lower_bound) ≥ mfu(true)` — IEEE-754 division is
-/// monotone. `planner::plan_exhaustive` prunes every layout whose bound
-/// cannot beat the incumbent; full-table sweeps never consult it.
+/// monotone. `sweep::argmax` (and through it `planner::plan_exhaustive`,
+/// the figure/table best-of-slice queries, and `plx compare`) prunes
+/// every layout whose bound cannot beat the incumbent; full-table sweeps
+/// never consult it.
 pub fn mfu_upper_bound(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
     let lb = step_time::step_time_lower_bound(job, v, hw);
+    mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, lb)
+}
+
+/// [`mfu_upper_bound`] over the PR-4 loose step-time bound (no TP term).
+/// Retained only so `benches/perf_schedule.rs` can measure how much of
+/// the space the tighter bound prunes that the loose one could not.
+#[doc(hidden)]
+pub fn mfu_upper_bound_loose(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    let lb = step_time::step_time_lower_bound_loose(job, v, hw);
     mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, lb)
 }
 

@@ -45,6 +45,32 @@ pub const FORMAT_VERSION: u32 = 1;
 /// persistence for every analytic command and the serve daemon.
 pub const CACHE_DIR_ENV: &str = "PLX_CACHE_DIR";
 
+/// Read-only cache mode: `PLX_CACHE_RO=1` (or `plx ... --readonly`)
+/// warm-loads the configured cache as usual but never spills back —
+/// useful when the cache directory is a shared, pre-baked artifact
+/// (CI fixture, read-only volume) that concurrent processes must not
+/// rewrite. Any value other than empty or `0` enables it.
+pub const READONLY_ENV: &str = "PLX_CACHE_RO";
+
+/// Process-wide read-only override, set by the `--readonly` CLI flag
+/// (the env var works without it, so a daemon launched under
+/// `PLX_CACHE_RO=1` is covered with no flag plumbing).
+static READONLY: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Mark this process's cache as read-only (warm-load only, no spill).
+pub fn set_readonly(on: bool) {
+    READONLY.store(on, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Whether spills are suppressed — by [`set_readonly`] or the
+/// [`READONLY_ENV`] environment variable.
+pub fn readonly() -> bool {
+    if READONLY.load(std::sync::atomic::Ordering::Relaxed) {
+        return true;
+    }
+    matches!(std::env::var(READONLY_ENV), Ok(v) if !v.is_empty() && v != "0")
+}
+
 /// Entries touched per memo by a load or save.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PersistStats {
@@ -107,10 +133,14 @@ pub fn warm_start_if_configured() -> Option<PersistStats> {
     cache_dir().map(|d| load_all(&d))
 }
 
-/// [`save_all`] when `PLX_CACHE_DIR` is configured. I/O failures are
-/// reported on stderr and swallowed — persistence is an accelerator,
-/// never a correctness dependency.
+/// [`save_all`] when `PLX_CACHE_DIR` is configured and the process is
+/// not in read-only mode ([`readonly`]). I/O failures are reported on
+/// stderr and swallowed — persistence is an accelerator, never a
+/// correctness dependency.
 pub fn save_if_configured() -> Option<PersistStats> {
+    if readonly() {
+        return None;
+    }
     let dir = cache_dir()?;
     match save_all(&dir) {
         Ok(stats) => Some(stats),
@@ -687,6 +717,20 @@ mod tests {
         // And the A100 entry still maps to exactly its own outcome.
         let (_, got) = back.iter().find(|(k, _)| *k == a).unwrap();
         assert_eq!(*got, sample_outcome());
+    }
+
+    #[test]
+    fn readonly_mode_suppresses_spills_but_not_loads() {
+        // The flag side (env side is covered by the serve smoke): with
+        // read-only set, the configured-save entry point is inert —
+        // `save_if_configured` bails before even resolving the cache
+        // directory — while the load path is untouched.
+        assert!(!readonly(), "tests must start writable");
+        set_readonly(true);
+        assert!(readonly());
+        assert_eq!(save_if_configured(), None);
+        set_readonly(false);
+        assert!(!readonly());
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! Bound-driven argmax queries over a layout space (S30).
+//!
+//! [`argmax_mfu`] is the branch-and-bound scan extracted from
+//! `planner::plan_exhaustive_stats`, generalized into a reusable query
+//! primitive: a predicate + the MFU objective over any lazy layout
+//! stream. Three provably lossless filters discard dominated layouts
+//! before the simulator runs:
+//!
+//! 1. the kernel gate ([`crate::sim::kernels::GateKey`]) — gated layouts
+//!    can only be `KernelUnavailable`, which no argmax can pick;
+//! 2. the parameter-state memory lower bound
+//!    ([`crate::sim::memory::model_state_bytes`]) — if parameters +
+//!    optimizer state alone overflow HBM the outcome is `Oom`;
+//! 3. the admissible MFU upper bound ([`crate::sim::mfu_upper_bound`],
+//!    bitwise ≥ the true MFU) against the running incumbent.
+//!
+//! Survivors are evaluated in pool-batched **windows** of
+//! [`PRUNE_WINDOW`] (through the sweep engine's group-factored dispatch
+//! and the shared evaluation cache) and folded into the incumbent in
+//! enumeration order, so the returned row — layout AND numbers, to the
+//! bit — equals the materializing reference it replaces
+//! (`SweepResult::best_where`, or the planner's historical unpruned
+//! argmax), while typically evaluating a fraction of the space.
+//!
+//! The one semantic degree of freedom between those references is
+//! tie-breaking, captured by [`Tie`]; pruning strictness follows from it
+//! (see the variant docs — pruning a tie is only sound when a tie could
+//! never win).
+
+use std::cmp::Ordering;
+
+use crate::layout::{Job, LayoutSpace, ValidLayout};
+use crate::sim::{Hardware, Outcome};
+use crate::sweep::presets::SweepPreset;
+
+/// Tie-breaking discipline of the argmax fold: which of two rows with
+/// bit-equal MFU wins. This must match the materializing reference a
+/// query replaces, and it dictates how aggressively the bound may prune.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tie {
+    /// First maximum wins — the planner's historical strict-`>` fold
+    /// (`plan_exhaustive_reference`). A later layout whose upper bound
+    /// merely *equals* the incumbent can never displace it, so the bound
+    /// prunes on `ub <= incumbent`.
+    KeepFirst,
+    /// Last maximum wins — `SweepResult::best_where`'s
+    /// `max_by(f64::total_cmp)`. A later layout whose true MFU ties the
+    /// incumbent *replaces* it, so ties must not be pruned: the bound
+    /// prunes only on strictly `ub < incumbent`. (Plain `<`, so a
+    /// pathological NaN bound falls through to a full evaluation, and the
+    /// fold's `total_cmp` ranks a NaN MFU exactly like the reference.)
+    KeepLast,
+}
+
+/// How a bound-driven query disposed of the predicate-matching layouts.
+///
+/// `total = gate_pruned + mem_pruned + bound_pruned + evaluated`; only
+/// `evaluated` layouts ran the full simulator. Layouts rejected by the
+/// query predicate are not counted — they are out of the query's space,
+/// not pruned from it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueryStats {
+    /// Predicate-matching layouts scanned.
+    pub total: usize,
+    /// Skipped by the kernel gate.
+    pub gate_pruned: usize,
+    /// Skipped by the parameter-state memory lower bound.
+    pub mem_pruned: usize,
+    /// Skipped because the MFU upper bound cannot beat the incumbent.
+    pub bound_pruned: usize,
+    /// Fully evaluated through the simulator.
+    pub evaluated: usize,
+}
+
+/// The argmax row: the winning layout with its evaluated numbers (bitwise
+/// the same `mfu`/`step_time_s` the materializing sweep row carries).
+#[derive(Debug, Clone, Copy)]
+pub struct Best {
+    pub v: ValidLayout,
+    pub mfu: f64,
+    pub step_time_s: f64,
+}
+
+/// Candidates per parallel evaluation window of the bound-pruned scan.
+/// Smaller windows refresh the incumbent more often (tighter pruning —
+/// at 32 every paper job stays under half the space); larger windows
+/// feed the pool bigger batches. 32 candidates across a handful of
+/// stage-key groups keeps a typical pool busy while adding at most a
+/// window's worth of over-evaluation per incumbent improvement.
+pub(crate) const PRUNE_WINDOW: usize = 32;
+
+/// Best runnable layout of a stream under a predicate, via the
+/// bound-pruned scan. `jobs` as everywhere: `0` = auto, `1` = serial.
+///
+/// Windowing keeps the scan parallel without touching the argmax: a
+/// layout is only ever *skipped* against an incumbent derived from
+/// strictly preceding layouts (its true MFU cannot win the fold at its
+/// position under the chosen [`Tie`]), and *extra* evaluations inside a
+/// window are harmless because outcomes are pure and the fold applies
+/// the reference tie rule in the reference (enumeration) order.
+pub fn argmax_mfu(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hw: &Hardware,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+) -> (Option<Best>, QueryStats) {
+    argmax_mfu_with_bound(job, layouts, hw, pred, tie, jobs, crate::sim::mfu_upper_bound)
+}
+
+/// [`argmax_mfu`] with an explicit admissible bound — the bench harness
+/// runs the same scan under `mfu_upper_bound_loose` to report how much
+/// the tightened TP term shrinks the evaluated fraction.
+#[doc(hidden)]
+pub fn argmax_mfu_with_bound(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hw: &Hardware,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+    bound: fn(&Job, &ValidLayout, &Hardware) -> f64,
+) -> (Option<Best>, QueryStats) {
+    let mut best: Option<Best> = None;
+    let mut stats = QueryStats::default();
+    let mut window: Vec<ValidLayout> = Vec::with_capacity(PRUNE_WINDOW);
+    let mut flush = |window: &mut Vec<ValidLayout>, best: &mut Option<Best>| {
+        let batch = std::mem::take(window);
+        // Parallel, group-factored, cached — then folded serially in
+        // enumeration order so the reference tie-breaking is untouched.
+        for row in crate::sweep::engine::evaluate_layouts(job, batch, hw, jobs) {
+            if let Outcome::Ok { mfu, step_time_s, .. } = row.outcome {
+                let wins = match (&*best, tie) {
+                    (None, _) => true,
+                    (Some(b), Tie::KeepFirst) => mfu > b.mfu,
+                    (Some(b), Tie::KeepLast) => mfu.total_cmp(&b.mfu) != Ordering::Less,
+                };
+                if wins {
+                    *best = Some(Best { v: row.v, mfu, step_time_s });
+                }
+            }
+        }
+    };
+    for v in layouts {
+        if !pred(&v) {
+            continue;
+        }
+        stats.total += 1;
+        let gate = crate::sim::kernels::GateKey::new(
+            v.layout.kernel,
+            job.arch.heads,
+            v.layout.tp,
+            v.layout.mb,
+        );
+        if !gate.open() {
+            stats.gate_pruned += 1;
+            continue;
+        }
+        if crate::sim::memory::model_state_bytes(job, &v, hw) > hw.hbm_bytes {
+            stats.mem_pruned += 1;
+            continue;
+        }
+        if let Some(b) = &best {
+            let ub = bound(job, &v, hw);
+            // NaN-safe in both modes: a pathological NaN bound fails the
+            // comparison and falls through to a full evaluation — pruning
+            // is only ever taken on a provable dominance.
+            let dominated = match tie {
+                Tie::KeepFirst => ub <= b.mfu,
+                Tie::KeepLast => ub < b.mfu,
+            };
+            if dominated {
+                stats.bound_pruned += 1;
+                continue;
+            }
+        }
+        stats.evaluated += 1;
+        window.push(v);
+        if window.len() >= PRUNE_WINDOW {
+            flush(&mut window, &mut best);
+        }
+    }
+    flush(&mut window, &mut best);
+    (best, stats)
+}
+
+/// Per-hardware winners for `plx compare`, through the pruned argmax —
+/// no full sweep table is materialized per hardware; each registry entry
+/// gets one bound-pruned scan (sharing the process evaluation cache, so
+/// repeated queries stay warm).
+pub fn compare_best(
+    preset: &SweepPreset,
+    hws: &[(String, Hardware)],
+    jobs: usize,
+) -> Vec<(String, Option<Best>)> {
+    let job = preset.job();
+    hws.iter()
+        .map(|(name, hw)| {
+            let space = LayoutSpace::new(
+                &job,
+                &preset.tps,
+                &preset.pps,
+                &preset.mbs,
+                &preset.ckpts,
+                &preset.kernels,
+                &preset.sps,
+                &preset.scheds,
+            );
+            let (best, _) = argmax_mfu(&job, space, hw, |_| true, Tie::KeepLast, jobs);
+            (name.clone(), best)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{Layout, Schedule};
+    use crate::sim::{A100, H100};
+    use crate::sweep::engine::{run_compare, run_jobs, Row, SweepResult};
+    use crate::sweep::presets::{main_presets, seqpar_presets};
+    use crate::util::prop;
+
+    fn space_of(preset: &SweepPreset) -> LayoutSpace {
+        LayoutSpace::new(
+            &preset.job(),
+            &preset.tps,
+            &preset.pps,
+            &preset.mbs,
+            &preset.ckpts,
+            &preset.kernels,
+            &preset.sps,
+            &preset.scheds,
+        )
+    }
+
+    fn assert_best_matches_row(best: &Option<Best>, row: Option<&Row>, ctx: &str) {
+        match (best, row) {
+            (Some(b), Some(r)) => {
+                assert_eq!(b.v.layout, r.v.layout, "{ctx}: layout diverged");
+                assert_eq!(b.v.num_micro, r.v.num_micro, "{ctx}");
+                assert_eq!(
+                    b.mfu.to_bits(),
+                    r.outcome.mfu().unwrap().to_bits(),
+                    "{ctx}: mfu bits diverged"
+                );
+                assert_eq!(
+                    b.step_time_s.to_bits(),
+                    r.outcome.step_time().unwrap().to_bits(),
+                    "{ctx}: step bits diverged"
+                );
+            }
+            (None, None) => {}
+            (b, r) => panic!("{ctx}: pruned {b:?} vs reference {:?}", r.map(|r| &r.v.layout)),
+        }
+    }
+
+    #[test]
+    fn keep_last_matches_best_where_for_every_paper_preset() {
+        // The tentpole identity gate: a trivial-predicate KeepLast scan
+        // must reproduce `SweepResult::best()` — bitwise — for every
+        // preset the figures and tables query, on both registry entries.
+        for preset in main_presets().into_iter().chain(seqpar_presets()) {
+            for (hw_name, hw) in [("a100", A100), ("h100", H100)] {
+                let r = run_jobs(&preset, &hw, 0);
+                let (best, stats) = argmax_mfu(
+                    &preset.job(),
+                    space_of(&preset),
+                    &hw,
+                    |_| true,
+                    Tie::KeepLast,
+                    0,
+                );
+                assert_best_matches_row(&best, r.best(), &format!("{}@{hw_name}", preset.name));
+                assert_eq!(
+                    stats.total,
+                    stats.gate_pruned + stats.mem_pruned + stats.bound_pruned + stats.evaluated,
+                    "{}@{hw_name}: {stats:?}",
+                    preset.name
+                );
+                assert!(
+                    stats.evaluated < stats.total,
+                    "{}@{hw_name}: bounds never fired",
+                    preset.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn keep_last_matches_best_where_property_random_predicates() {
+        // Random subspaces AND random slice predicates — the shapes the
+        // figure queries actually use (kernel / mb / tp / pp / ckpt / sp
+        // conjunctions), including slices that are entirely infeasible
+        // (both sides must agree on None).
+        let base = main_presets();
+        prop::check_cases(0xA26A1, 32, |rng| {
+            let src = &base[rng.range(0, base.len())];
+            let pick = |rng: &mut crate::util::prng::Rng, opts: &[usize]| {
+                let mut v: Vec<usize> = opts.iter().copied().filter(|_| rng.bool()).collect();
+                if v.is_empty() {
+                    v.push(opts[rng.range(0, opts.len())]);
+                }
+                v
+            };
+            let preset = SweepPreset {
+                name: src.name,
+                paper_table: src.paper_table,
+                arch: src.arch,
+                gpus: src.gpus,
+                gbs: src.gbs,
+                tps: pick(&mut *rng, &src.tps),
+                pps: pick(&mut *rng, &src.pps),
+                mbs: pick(&mut *rng, &src.mbs),
+                ckpts: src.ckpts.clone(),
+                kernels: src.kernels.clone(),
+                sps: src.sps.clone(),
+                scheds: if rng.bool() {
+                    vec![Schedule::OneF1B]
+                } else {
+                    vec![Schedule::OneF1B, Schedule::Interleaved(2)]
+                },
+            };
+            // A random conjunction of the figure-style slice axes.
+            let want_kernel =
+                if rng.bool() { Some(preset.kernels[rng.range(0, preset.kernels.len())]) } else { None };
+            let want_mb = if rng.bool() { Some(preset.mbs[rng.range(0, preset.mbs.len())]) } else { None };
+            let want_tp = if rng.bool() { Some(preset.tps[rng.range(0, preset.tps.len())]) } else { None };
+            let want_ckpt = if rng.bool() { Some(rng.bool()) } else { None };
+            let want_sp = if rng.bool() { Some(rng.bool()) } else { None };
+            let pred = |l: &Layout| {
+                want_kernel.map(|k| l.kernel == k).unwrap_or(true)
+                    && want_mb.map(|m| l.mb == m).unwrap_or(true)
+                    && want_tp.map(|t| l.tp == t).unwrap_or(true)
+                    && want_ckpt.map(|c| l.ckpt == c).unwrap_or(true)
+                    && want_sp.map(|s| l.sp == s).unwrap_or(true)
+            };
+            let jobs = rng.range(1, 9);
+            let (best, _) = argmax_mfu(
+                &preset.job(),
+                space_of(&preset),
+                &A100,
+                |v| pred(&v.layout),
+                Tie::KeepLast,
+                jobs,
+            );
+            let r = run_jobs(&preset, &A100, 1);
+            assert_best_matches_row(&best, r.best_where(|row| pred(row.layout())), preset.name);
+        });
+    }
+
+    #[test]
+    fn keep_first_ties_keep_the_earlier_layout() {
+        // At tp=1 the sp axis is a bitwise no-op (every sp division is by
+        // t = 1.0 and tp_chunk is 0 either way): the (sp=false, sp=true)
+        // siblings of the tp=1 optimum carry bit-equal MFUs, so a tp==1
+        // slice of an SP sweep contains a real tie at its maximum.
+        // KeepFirst must return the earlier enumeration (sp=false is
+        // enumerated before sp=true), KeepLast the later — and both must
+        // match their materializing references on the same stream.
+        let preset = seqpar_presets().into_iter().find(|p| p.name == "sp-13b-2k").unwrap();
+        let job = preset.job();
+        let pred = |v: &ValidLayout| v.layout.tp == 1;
+        let (first, _) = argmax_mfu(&job, space_of(&preset), &A100, pred, Tie::KeepFirst, 0);
+        let (last, _) = argmax_mfu(&job, space_of(&preset), &A100, pred, Tie::KeepLast, 0);
+        let rows = run_jobs(&preset, &A100, 1);
+        // Reference keep-first: strict-> fold in enumeration order.
+        let mut want_first: Option<&Row> = None;
+        for row in &rows.rows {
+            if row.v.layout.tp != 1 {
+                continue;
+            }
+            if let Some(m) = row.outcome.mfu() {
+                if want_first.map(|b| m > b.outcome.mfu().unwrap()).unwrap_or(true) {
+                    want_first = Some(row);
+                }
+            }
+        }
+        assert_best_matches_row(&first, want_first, "keep-first");
+        assert_best_matches_row(&last, rows.best_where(|r| r.layout().tp == 1), "keep-last");
+        let (f, l) = (first.unwrap(), last.unwrap());
+        assert_eq!(f.mfu.to_bits(), l.mfu.to_bits(), "tie modes must agree on the value");
+        assert!(!f.v.layout.sp && l.v.layout.sp, "{:?} vs {:?}", f.v.layout, l.v.layout);
+    }
+
+    #[test]
+    fn loose_bound_scan_is_identical_but_evaluates_more() {
+        // The bench's before/after comparison is itself lossless: the
+        // loose (pre-PR) bound must return the same argmax, only with a
+        // larger (or equal) evaluated count.
+        let preset = main_presets().into_iter().next().unwrap();
+        let job = preset.job();
+        let (tight, st) = argmax_mfu(&job, space_of(&preset), &A100, |_| true, Tie::KeepLast, 0);
+        let (loose, sl) = argmax_mfu_with_bound(
+            &job,
+            space_of(&preset),
+            &A100,
+            |_| true,
+            Tie::KeepLast,
+            0,
+            crate::sim::mfu_upper_bound_loose,
+        );
+        assert_best_matches_row(
+            &tight,
+            loose.map(|b| Row { v: b.v, outcome: crate::sim::cache::evaluate_cached(&job, &b.v, &A100) })
+                .as_ref(),
+            "tight vs loose",
+        );
+        assert!(st.evaluated <= sl.evaluated, "tight {st:?} vs loose {sl:?}");
+    }
+
+    #[test]
+    fn compare_best_matches_run_compare_winners() {
+        // `plx compare` retarget gate: pruned per-hardware winners must
+        // equal the materializing `run_compare` winners bitwise, and the
+        // rendered report must be byte-identical through either path.
+        let p = &main_presets()[0];
+        let hws = vec![("a100".to_string(), A100), ("h100".to_string(), H100)];
+        let pruned = compare_best(p, &hws, 0);
+        let full: Vec<(String, SweepResult)> = run_compare(p, &hws, 0);
+        assert_eq!(pruned.len(), full.len());
+        for ((name, best), (want_name, r)) in pruned.iter().zip(&full) {
+            assert_eq!(name, want_name);
+            assert_best_matches_row(best, r.best(), name);
+        }
+        assert_eq!(
+            crate::sweep::report::render_compare_best(p.name, &p.job(), &pruned),
+            crate::sweep::report::render_compare(&full),
+        );
+    }
+}

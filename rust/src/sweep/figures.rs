@@ -3,11 +3,20 @@
 //! Each `figure_N` returns the data series (and a rendered table); the
 //! benches print them next to the paper's published values so the *shape*
 //! (ordering, winners, deltas) can be compared directly.
+//!
+//! Every series is a best-of-slice query, so since PR 7 the generators go
+//! through the bound-driven [`crate::sweep::argmax`] engine instead of
+//! materializing one full sweep table per preset: each slice runs its own
+//! pruned scan over a fresh lazy [`LayoutSpace`] (evaluations that
+//! several slices share are one memo hit apart through the evaluation
+//! cache), and the points — annotation string and MFU bits — are
+//! identical to the historical `run()` + `best_where` path, which the
+//! tests below keep as the reference.
 
-use crate::layout::Kernel;
-use crate::sim::{Hardware, Outcome};
-use crate::sweep::engine::{run, Row, SweepResult};
-use crate::sweep::presets::{main_presets, seqpar_presets};
+use crate::layout::{Kernel, Layout, LayoutSpace};
+use crate::sim::Hardware;
+use crate::sweep::argmax::{argmax_mfu, Tie};
+use crate::sweep::presets::{main_presets, seqpar_presets, SweepPreset};
 use crate::util::table;
 
 /// A labeled (configuration, MFU) point in a figure.
@@ -20,16 +29,36 @@ pub struct Point {
     pub mfu: Option<f64>,
 }
 
-fn best_point(r: &SweepResult, series: &str, f: impl Fn(&Row) -> bool) -> Point {
-    match r.best_where(f) {
-        Some(row) => Point {
-            model: r.preset_name.clone(),
+/// Best-of-slice query through the pruned argmax: the slice predicate
+/// runs over the preset's lazy layout space, `KeepLast` ties matching
+/// `SweepResult::best_where`'s `max_by` exactly.
+pub fn best_point_pruned(
+    preset: &SweepPreset,
+    hw: &Hardware,
+    series: &str,
+    pred: impl Fn(&Layout) -> bool,
+) -> Point {
+    let job = preset.job();
+    let space = LayoutSpace::new(
+        &job,
+        &preset.tps,
+        &preset.pps,
+        &preset.mbs,
+        &preset.ckpts,
+        &preset.kernels,
+        &preset.sps,
+        &preset.scheds,
+    );
+    let (best, _) = argmax_mfu(&job, space, hw, |v| pred(&v.layout), Tie::KeepLast, 0);
+    match best {
+        Some(b) => Point {
+            model: preset.name.to_string(),
             series: series.to_string(),
-            annotation: row.layout().annotation(),
-            mfu: row.outcome.mfu(),
+            annotation: b.v.layout.annotation(),
+            mfu: Some(b.mfu),
         },
         None => Point {
-            model: r.preset_name.clone(),
+            model: preset.name.to_string(),
             series: series.to_string(),
             annotation: "—".into(),
             mfu: None,
@@ -56,12 +85,11 @@ fn render_points(title: &str, points: &[Point]) -> String {
 pub fn figure1(hw: &Hardware) -> (Vec<Point>, String) {
     let mut points = Vec::new();
     for preset in main_presets() {
-        let r = run(&preset, hw);
         for k in Kernel::ALL {
             if !preset.kernels.contains(&k) {
                 continue;
             }
-            points.push(best_point(&r, k.label(), |row| row.layout().kernel == k));
+            points.push(best_point_pruned(&preset, hw, k.label(), |l| l.kernel == k));
         }
     }
     let rendered = render_points("Figure 1 — MFU by attention kernel (optimal 3D layout each)", &points);
@@ -73,10 +101,9 @@ pub fn figure1(hw: &Hardware) -> (Vec<Point>, String) {
 pub fn figure2(hw: &Hardware) -> (Vec<Point>, String) {
     let mut points = Vec::new();
     for preset in main_presets() {
-        let r = run(&preset, hw);
-        let no_rms = |row: &Row| row.layout().kernel != Kernel::Flash2Rms;
-        points.push(best_point(&r, "no checkpointing", |row| no_rms(row) && !row.layout().ckpt));
-        points.push(best_point(&r, "every layer", |row| no_rms(row) && row.layout().ckpt));
+        let no_rms = |l: &Layout| l.kernel != Kernel::Flash2Rms;
+        points.push(best_point_pruned(&preset, hw, "no checkpointing", |l| no_rms(l) && !l.ckpt));
+        points.push(best_point_pruned(&preset, hw, "every layer", |l| no_rms(l) && l.ckpt));
     }
     let rendered = render_points(
         "Figure 2 — activation checkpointing (no RMSNorm kernel rows)",
@@ -89,11 +116,10 @@ pub fn figure2(hw: &Hardware) -> (Vec<Point>, String) {
 pub fn figure3(hw: &Hardware) -> (Vec<Point>, String) {
     let mut points = Vec::new();
     for preset in main_presets() {
-        let r = run(&preset, hw);
         for mb in &preset.mbs {
             let mb = *mb;
-            points.push(best_point(&r, &format!("mb={mb}"), |row| {
-                row.layout().mb == mb && row.layout().kernel != Kernel::Flash2Rms
+            points.push(best_point_pruned(&preset, hw, &format!("mb={mb}"), |l| {
+                l.mb == mb && l.kernel != Kernel::Flash2Rms
             }));
         }
     }
@@ -109,11 +135,9 @@ pub fn figure4(hw: &Hardware) -> (Vec<Point>, String) {
         if preset.name == "13b-2k" || preset.name == "30b-8k" {
             continue;
         }
-        let r = run(&preset, hw);
         for &tp in &preset.tps {
             for &pp in &preset.pps {
-                let p = best_point(&r, &format!("tp{tp}/pp{pp}"), |row| {
-                    let l = row.layout();
+                let p = best_point_pruned(&preset, hw, &format!("tp{tp}/pp{pp}"), |l| {
                     l.tp == tp && l.pp == pp && l.mb == 1 && !l.ckpt && l.kernel == Kernel::Flash2Rms
                 });
                 points.push(p);
@@ -131,34 +155,43 @@ pub fn figure4(hw: &Hardware) -> (Vec<Point>, String) {
 pub fn figure5(hw: &Hardware) -> (Vec<Point>, String) {
     let mut points = Vec::new();
     for preset in seqpar_presets() {
-        let r = run(&preset, hw);
-        points.push(best_point(&r, "sequence parallel", |row| row.layout().sp));
-        points.push(best_point(&r, "no sequence parallel", |row| !row.layout().sp));
+        points.push(best_point_pruned(&preset, hw, "sequence parallel", |l| l.sp));
+        points.push(best_point_pruned(&preset, hw, "no sequence parallel", |l| !l.sp));
     }
     let rendered = render_points("Figure 5 — sequence parallelism (FA2+RMS, no ckpt)", &points);
     (points, rendered)
 }
 
 /// Table 3 (B.1): the best end-to-end configuration per model, from the
-/// SP sweeps (the paper's Table 3 draws from those runs).
+/// SP sweeps (the paper's Table 3 draws from those runs) — one pruned
+/// argmax per preset instead of a materialized sweep each.
 pub fn table3(hw: &Hardware) -> String {
     let mut rows = Vec::new();
     for preset in seqpar_presets() {
-        let r = run(&preset, hw);
-        if let Some(best) = r.best() {
-            if let Outcome::Ok { step_time_s, mfu, .. } = best.outcome {
-                let l = best.layout();
-                rows.push(vec![
-                    r.job.arch.name.to_string(),
-                    r.job.cluster.gpus.to_string(),
-                    table::secs(step_time_s),
-                    table::pct(mfu),
-                    l.mb.to_string(),
-                    l.tp.to_string(),
-                    l.pp.to_string(),
-                    if l.sp { "True" } else { "False" }.to_string(),
-                ]);
-            }
+        let job = preset.job();
+        let space = LayoutSpace::new(
+            &job,
+            &preset.tps,
+            &preset.pps,
+            &preset.mbs,
+            &preset.ckpts,
+            &preset.kernels,
+            &preset.sps,
+            &preset.scheds,
+        );
+        let (best, _) = argmax_mfu(&job, space, hw, |_| true, Tie::KeepLast, 0);
+        if let Some(b) = best {
+            let l = b.v.layout;
+            rows.push(vec![
+                job.arch.name.to_string(),
+                job.cluster.gpus.to_string(),
+                table::secs(b.step_time_s),
+                table::pct(b.mfu),
+                l.mb.to_string(),
+                l.tp.to_string(),
+                l.pp.to_string(),
+                if l.sp { "True" } else { "False" }.to_string(),
+            ]);
         }
     }
     format!(
@@ -173,7 +206,123 @@ pub fn table3(hw: &Hardware) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::A100;
+    use crate::sim::{Outcome, A100};
+    use crate::sweep::engine::{run, Row, SweepResult};
+
+    /// The historical materializing query, retained as the bit-identity
+    /// reference for [`best_point_pruned`].
+    fn best_point(r: &SweepResult, series: &str, f: impl Fn(&Row) -> bool) -> Point {
+        match r.best_where(f) {
+            Some(row) => Point {
+                model: r.preset_name.clone(),
+                series: series.to_string(),
+                annotation: row.layout().annotation(),
+                mfu: row.outcome.mfu(),
+            },
+            None => Point {
+                model: r.preset_name.clone(),
+                series: series.to_string(),
+                annotation: "—".into(),
+                mfu: None,
+            },
+        }
+    }
+
+    fn assert_points_identical(got: &Point, want: &Point, ctx: &str) {
+        assert_eq!(got.model, want.model, "{ctx}");
+        assert_eq!(got.series, want.series, "{ctx}");
+        assert_eq!(got.annotation, want.annotation, "{ctx}");
+        match (got.mfu, want.mfu) {
+            (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: mfu bits"),
+            (None, None) => {}
+            (a, b) => panic!("{ctx}: pruned {a:?} vs reference {b:?}"),
+        }
+    }
+
+    #[test]
+    fn pruned_points_match_materializing_best_where() {
+        // The figure-retarget identity gate: every slice family a figure
+        // queries (kernel, mb, tp/pp, ckpt×no-RMS, sp) must produce the
+        // same Point — annotation string and MFU bits — through the
+        // pruned argmax as through run() + best_where, on every preset,
+        // including slices with no runnable row (both sides None).
+        for preset in main_presets().into_iter().chain(seqpar_presets()) {
+            let r = run(&preset, &A100);
+            let mut cases: Vec<(String, Box<dyn Fn(&Layout) -> bool>)> = Vec::new();
+            for k in Kernel::ALL {
+                if preset.kernels.contains(&k) {
+                    cases.push((k.label().to_string(), Box::new(move |l: &Layout| l.kernel == k)));
+                }
+            }
+            for &mb in &preset.mbs {
+                cases.push((
+                    format!("mb={mb}"),
+                    Box::new(move |l: &Layout| l.mb == mb && l.kernel != Kernel::Flash2Rms),
+                ));
+            }
+            for &tp in &preset.tps {
+                for &pp in &preset.pps {
+                    cases.push((
+                        format!("tp{tp}/pp{pp}"),
+                        Box::new(move |l: &Layout| {
+                            l.tp == tp
+                                && l.pp == pp
+                                && l.mb == 1
+                                && !l.ckpt
+                                && l.kernel == Kernel::Flash2Rms
+                        }),
+                    ));
+                }
+            }
+            for ckpt in [false, true] {
+                cases.push((
+                    format!("ckpt={ckpt}"),
+                    Box::new(move |l: &Layout| l.ckpt == ckpt && l.kernel != Kernel::Flash2Rms),
+                ));
+            }
+            for sp in [false, true] {
+                cases.push((format!("sp={sp}"), Box::new(move |l: &Layout| l.sp == sp)));
+            }
+            for (series, pred) in cases {
+                let got = best_point_pruned(&preset, &A100, &series, &*pred);
+                let want = best_point(&r, &series, |row| pred(row.layout()));
+                assert_points_identical(&got, &want, &format!("{} / {series}", preset.name));
+            }
+        }
+    }
+
+    #[test]
+    fn table3_matches_materializing_reference() {
+        // The table 3 golden is regenerated through the pruned path; it
+        // must be byte-identical to the historical run() + best() render.
+        let mut rows = Vec::new();
+        for preset in seqpar_presets() {
+            let r = run(&preset, &A100);
+            if let Some(best) = r.best() {
+                if let Outcome::Ok { step_time_s, mfu, .. } = best.outcome {
+                    let l = best.layout();
+                    rows.push(vec![
+                        r.job.arch.name.to_string(),
+                        r.job.cluster.gpus.to_string(),
+                        table::secs(step_time_s),
+                        table::pct(mfu),
+                        l.mb.to_string(),
+                        l.tp.to_string(),
+                        l.pp.to_string(),
+                        if l.sp { "True" } else { "False" }.to_string(),
+                    ]);
+                }
+            }
+        }
+        let reference = format!(
+            "# Table 3 (B.1) — best configurations per model\n{}",
+            table::render(
+                &["Model", "GPUs", "Step Time", "MFU", "MB Size", "TP size", "PP Size", "Seq Par"],
+                &rows
+            )
+        );
+        assert_eq!(table3(&A100), reference);
+    }
 
     #[test]
     fn figure1_kernel_ordering_holds_per_model() {

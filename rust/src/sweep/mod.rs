@@ -2,16 +2,20 @@
 //!
 //! * [`presets`] — the exact search spaces of Tables 1 and 9
 //! * [`engine`] — Cartesian evaluation over the simulator
+//! * [`argmax`] — bound-driven best-of-space queries (branch-and-bound
+//!   pruning, bit-identical to the materializing `best_where`)
 //! * [`report`] — appendix-style tables (4–8, 10–14) + CSV
 //! * [`figures`] — Figures 1–5 and Table 3 data series
 //! * [`table2`] — the end-to-end SOTA comparison (with Appendix A
 //!   recomputation of external baselines)
 
+pub mod argmax;
 pub mod engine;
 pub mod figures;
 pub mod presets;
 pub mod report;
 pub mod table2;
 
+pub use argmax::{argmax_mfu, compare_best, Best, QueryStats, Tie};
 pub use engine::{evaluate_layouts, evaluate_space, run, run_compare, run_jobs, Row, SweepResult};
 pub use presets::{by_name, for_table, main_presets, seqpar_presets, SweepPreset};

@@ -1,6 +1,7 @@
 //! Paper-style table rendering for sweep results.
 
 use crate::sim::Outcome;
+use crate::sweep::argmax::Best;
 use crate::sweep::engine::SweepResult;
 use crate::util::table;
 
@@ -77,33 +78,37 @@ pub fn render_top(result: &SweepResult, with_sp_column: bool, top: Option<usize>
     out
 }
 
-/// Side-by-side multi-hardware report for one preset (`plx compare`):
-/// one row per hardware with its best runnable layout and the MFU delta
-/// (in points) against the first listed hardware. Every number comes
-/// from the deterministic sweep engine, so the rendered bytes are
-/// independent of `--jobs` like every other report.
-pub fn render_compare(results: &[(String, SweepResult)]) -> String {
-    let first = &results.first().expect("compare needs at least one hardware").1;
-    let base_mfu = first.best().and_then(|r| r.outcome.mfu());
-    let rows: Vec<Vec<String>> = results
+/// The `plx compare` report body, from per-hardware winners alone — the
+/// rendering core shared by the materializing [`render_compare`] and the
+/// bound-driven path (`sweep::argmax::compare_best`), which never holds
+/// a sweep table to render from. One row per hardware with its best
+/// runnable layout and the MFU delta (in points) against the first
+/// listed hardware.
+pub fn render_compare_best(
+    preset_name: &str,
+    job: &crate::layout::Job,
+    winners: &[(String, Option<Best>)],
+) -> String {
+    let base_mfu =
+        winners.first().expect("compare needs at least one hardware").1.map(|b| b.mfu);
+    let rows: Vec<Vec<String>> = winners
         .iter()
-        .map(|(hw_name, r)| match r.best() {
+        .map(|(hw_name, w)| match w {
             Some(best) => {
-                let l = best.layout();
-                let mfu = best.outcome.mfu().unwrap();
+                let l = best.v.layout;
                 let delta = match base_mfu {
                     // The baseline row prints +0.00 so the column is
                     // self-describing (and stays byte-stable).
-                    Some(b) => format!("{:+.2}", 100.0 * (mfu - b)),
+                    Some(b) => format!("{:+.2}", 100.0 * (best.mfu - b)),
                     None => "—".to_string(),
                 };
                 vec![
                     hw_name.clone(),
-                    best.layout().annotation(),
+                    l.annotation(),
                     l.kernel.label().to_string(),
                     if l.sp { "True" } else { "False" }.to_string(),
-                    table::pct(mfu),
-                    table::secs(best.outcome.step_time().unwrap()),
+                    table::pct(best.mfu),
+                    table::secs(best.step_time_s),
                     delta,
                 ]
             }
@@ -118,17 +123,39 @@ pub fn render_compare(results: &[(String, SweepResult)]) -> String {
             ],
         })
         .collect();
-    let delta_header = format!("MFU vs {}", results[0].0);
+    let delta_header = format!("MFU vs {}", winners[0].0);
     let headers: [&str; 7] =
         ["Hardware", "Best Layout", "Kernel", "Seq Par", "MFU", "Step Time", &delta_header];
     format!(
         "# compare — {} ({} on {} GPUs, GBS {}) across hardware\n{}",
-        first.preset_name,
-        first.job.arch.name,
-        first.job.cluster.gpus,
-        first.job.gbs,
+        preset_name,
+        job.arch.name,
+        job.cluster.gpus,
+        job.gbs,
         table::render(&headers, &rows)
     )
+}
+
+/// Side-by-side multi-hardware report for materialized sweep results —
+/// extracts each hardware's winner and delegates to
+/// [`render_compare_best`], so the two query paths render through one
+/// body and stay byte-identical by construction. Every number comes
+/// from the deterministic sweep engine, so the rendered bytes are
+/// independent of `--jobs` like every other report.
+pub fn render_compare(results: &[(String, SweepResult)]) -> String {
+    let first = &results.first().expect("compare needs at least one hardware").1;
+    let winners: Vec<(String, Option<Best>)> = results
+        .iter()
+        .map(|(name, r)| {
+            let w = r.best().map(|row| Best {
+                v: row.v,
+                mfu: row.outcome.mfu().unwrap(),
+                step_time_s: row.outcome.step_time().unwrap(),
+            });
+            (name.clone(), w)
+        })
+        .collect();
+    render_compare_best(&first.preset_name, &first.job, &winners)
 }
 
 /// CSV form (for plotting / EXPERIMENTS.md appendices).

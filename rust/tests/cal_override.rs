@@ -42,6 +42,52 @@ fn breakdown_bits(b: &plx::sim::StepBreakdown) -> [u64; 6] {
     ]
 }
 
+/// Bound admissibility under the CURRENT environment: for every
+/// runnable layout of a probe space, on both hardware presets (with
+/// whatever `PLX_HW_*`/`PLX_CAL_*` overrides are live), bitwise
+/// `loose ≤ tight ≤ true step time` — the tighter TP-collective bound
+/// can never over-prune at any calibration point, which is what lets
+/// `sweep::argmax` prune under overrides without a soundness caveat.
+fn assert_bounds_admissible(ctx: &str) {
+    let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+    for (hw_name, hw) in
+        [("a100", A100.from_overrides()), ("h100", plx::sim::H100.from_overrides())]
+    {
+        let layouts = plx::layout::enumerate(
+            &job,
+            &[1, 2, 4],
+            &[1, 2, 4],
+            &[1, 2],
+            &[false, true],
+            &Kernel::ALL,
+            &[false, true],
+            &[Schedule::OneF1B, Schedule::Interleaved(2)],
+        );
+        let mut runnable = 0usize;
+        for v in &layouts {
+            if let plx::sim::Outcome::Ok { step_time_s, mfu, .. } = plx::sim::evaluate(&job, v, &hw)
+            {
+                let tight = step_time::step_time_lower_bound(&job, v, &hw);
+                let loose = step_time::step_time_lower_bound_loose(&job, v, &hw);
+                assert!(
+                    loose <= tight,
+                    "{ctx}/{hw_name} {:?}: loose {loose} > tight {tight}",
+                    v.layout
+                );
+                assert!(
+                    tight <= step_time_s,
+                    "{ctx}/{hw_name} {:?}: bound {tight} > true {step_time_s}",
+                    v.layout
+                );
+                let ub = plx::sim::mfu_upper_bound(&job, v, &hw);
+                assert!(ub >= mfu, "{ctx}/{hw_name} {:?}: ub {ub} < mfu {mfu}", v.layout);
+                runnable += 1;
+            }
+        }
+        assert!(runnable > 10, "{ctx}/{hw_name}: only {runnable} runnable layouts");
+    }
+}
+
 fn clear_override_env() {
     for (name, _) in CAL_VARS {
         std::env::remove_var(name);
@@ -103,10 +149,15 @@ fn override_sets_are_memo_keyed_and_roundtrip_bit_identical() {
     // shadow them — distinct CalKey, distinct memo rows).
     let key_x = cal_key();
     let x0 = probe("X cold");
+    assert_bounds_admissible("X");
     set_y();
     let key_y = cal_key();
     assert_ne!(key_x, key_y, "override set must change the calibration key");
     let y0 = probe("Y first");
+    // The same admissibility ordering must hold at the overridden
+    // calibration point — the bound is derived from the same stage
+    // costs the true step time prices, so overrides move both together.
+    assert_bounds_admissible("Y");
     assert_ne!(x0, y0, "EFF_BASE/BWD_FACTOR overrides must move the outcome");
     clear_override_env();
     assert_eq!(cal_key(), key_x, "clearing the env must restore the X key");
@@ -137,6 +188,7 @@ fn override_sets_are_memo_keyed_and_roundtrip_bit_identical() {
     std::env::set_var("PLX_HW_IB_BW", "40e9");
     let hw_y = A100.from_overrides();
     assert_eq!(hw_y.ib_bw.to_bits(), 40e9_f64.to_bits());
+    assert_bounds_admissible("HW override");
     let hot = cache::evaluate_cached(&job, &v, &hw_y);
     let cold = evaluate_baseline(&job, &v, &hw_y);
     assert_eq!(ok_bits(&hot), ok_bits(&cold), "overridden hardware: memoized != cold");

@@ -58,6 +58,38 @@ fn serve_protocol_end_to_end() {
     let plan = plan_by_rules(&job, &hw).unwrap();
     assert_eq!(output_of(&resp), render_plan(&job, &plan));
 
+    // --- batched plan: one request, outputs == one-shot bytes ---------
+    let resp = roundtrip(
+        &mut conn,
+        r#"{"cmd":"plan","jobs":[{"model":"llama13b","nodes":1,"gbs":512},{"model":"llama30b","nodes":2}]}"#,
+    );
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{}", resp.write());
+    let outputs = resp.get("outputs").as_arr().expect("batched plan carries outputs");
+    assert_eq!(outputs.len(), 2);
+    assert_eq!(outputs[0].as_str(), Some(render_plan(&job, &plan).as_str()));
+    let arch30 = preset("llama30b").unwrap();
+    let job30 = Job::new(arch30, Cluster::dgx_a100(2), Job::paper_gbs(&arch30));
+    let plan30 = plan_by_rules(&job30, &hw).unwrap();
+    assert_eq!(outputs[1].as_str(), Some(render_plan(&job30, &plan30).as_str()));
+
+    // --- predict-mem: response output == the CLI renderer bytes -------
+    let resp = roundtrip(
+        &mut conn,
+        r#"{"cmd":"predict-mem","model":"llama13b","nodes":1,"tp":2,"pp":2,"gbs":512}"#,
+    );
+    assert_eq!(resp.get("cmd").as_str(), Some("predict-mem"));
+    let l = plx::layout::Layout {
+        tp: 2,
+        pp: 2,
+        mb: 1,
+        ckpt: false,
+        kernel: plx::layout::Kernel::Flash2Rms,
+        sp: false,
+        sched: plx::layout::Schedule::OneF1B,
+    };
+    let v = plx::layout::validate(&job, &l).unwrap();
+    assert_eq!(output_of(&resp), plx::sim::render_predict_mem(&job, &v, &hw, "a100"));
+
     // --- sweep with a top cap, across both hardware presets -----------
     let preset_name = "13b-2k";
     for hw_name in ["a100", "h100"] {

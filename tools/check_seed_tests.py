@@ -4,7 +4,7 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Six suites, reported separately:
+Seven suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
@@ -23,7 +23,15 @@ Six suites, reported separately:
     fmt_f64), the PLX_CACHE_DIR persistence format (bit-exact
     roundtrips, version gating, non-aliasing, warm loads that serve
     disk hits), and the request protocol (responses byte-identical to
-    the CLI renderers, error envelopes, stats, spill files).
+    the CLI renderers, error envelopes, stats, spill files), now
+    including the batched plan form, predict-mem bytes, and the
+    read-only cache mode;
+  * the ARGMAX suite — the bound-driven query engine (sweep/argmax):
+    every retargeted query (planner, figures, table 3, compare) returns
+    the same row — layout and bits — as the materializing reference it
+    replaced, tie-breaking disciplines are exact, and the tightened
+    TP-collective bound prunes strictly more than the loose one under
+    the CI gating fraction.
 
 Run: python3 tools/check_seed_tests.py
 """
@@ -1313,6 +1321,47 @@ def t_hw_table2_h100_renders_distinctly():
             assert _bits(r[4]) == _bits(ref[4]), f"{r[0]} must not depend on --hw"
 
 
+def t_hw_bounds_admissible_under_overrides():
+    # rust: tests/cal_override.rs::assert_bounds_admissible — bound
+    # admissibility must hold at every calibration point the env can
+    # express, on both hardware presets: bitwise loose <= tight <= true
+    # step time and mfu_upper_bound >= mfu for every runnable layout, so
+    # the argmax engine can prune under PLX_CAL_*/PLX_HW_* overrides
+    # without a soundness caveat.
+    def probe(ctx):
+        job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+        for hw_name, hw in [("a100", hardware_from_overrides(A100)),
+                            ("h100", hardware_from_overrides(H100))]:
+            runnable = 0
+            for v in enumerate_layouts(job, [1, 2, 4], [1, 2, 4], [1, 2],
+                                       [False, True], ALL_KERNELS,
+                                       [False, True],
+                                       [SCHED_1F1B, sched_interleaved(2)]):
+                o = evaluate(job, v, hw)
+                if o.kind != "ok":
+                    continue
+                tight = step_time_lower_bound(job, v, hw)
+                loose = step_time_lower_bound_loose(job, v, hw)
+                assert loose <= tight, (ctx, hw_name, v.layout, loose, tight)
+                assert tight <= o.step_time_s, \
+                    (ctx, hw_name, v.layout, tight, o.step_time_s)
+                ub = mfu_upper_bound(job, v, hw)
+                assert ub >= o.mfu, (ctx, hw_name, v.layout, ub, o.mfu)
+                runnable += 1
+            assert runnable > 10, (ctx, hw_name, runnable)
+
+    _clear_hw_env()
+    try:
+        probe("defaults")
+        os.environ["PLX_CAL_EFF_BASE"] = "0.80"
+        os.environ["PLX_CAL_BWD_FACTOR"] = "2.5"
+        probe("cal override")
+        os.environ["PLX_HW_IB_BW"] = "40e9"
+        probe("hw override")
+    finally:
+        _clear_hw_env()
+
+
 HW_CHECKS = [
     ("cluster::h100_constants_bit_exact", t_hw_h100_constants_bit_exact),
     ("cluster::hw_preset_registry_resolves_and_rejects", t_hw_preset_registry),
@@ -1323,6 +1372,8 @@ HW_CHECKS = [
     ("planner::pruned_exhaustive_matches_reference_on_h100",
      t_hw_planner_pruned_matches_reference_on_h100),
     ("table2::h100_renders_distinct_with_stable_baselines", t_hw_table2_h100_renders_distinctly),
+    ("cal_override::bounds_admissible_on_both_hw_and_overrides",
+     t_hw_bounds_admissible_under_overrides),
 ]
 
 
@@ -1638,6 +1689,114 @@ def t_serve_warm_spill_writes_versioned_files():
         shutil.rmtree(d, ignore_errors=True)
 
 
+def t_serve_batched_plan_equals_single_shots():
+    # rust: serve::batched_plan_outputs_equal_single_shot_responses — one
+    # {"cmd":"plan","jobs":[...]} request whose outputs elements equal
+    # the matching one-shot responses' output bytes.
+    state = ServeState()
+    singles = []
+    for q in ['{"cmd":"plan","model":"llama13b","nodes":1,"gbs":512}',
+              '{"cmd":"plan","model":"llama30b","nodes":2}',
+              '{"cmd":"plan","model":"llama13b","nodes":1,"hw":"h100"}']:
+        text, _ = serve_handle_line(state, q)
+        singles.append(json_parse(text)["output"])
+    batch = ('{"cmd":"plan","jobs":['
+             '{"model":"llama13b","nodes":1,"gbs":512},'
+             '{"model":"llama30b","nodes":2},'
+             '{"model":"llama13b","nodes":1,"hw":"h100"}]}')
+    text, shutdown = serve_handle_line(state, batch)
+    assert not shutdown
+    r = json_parse(text)
+    assert r["ok"] is True and r["cmd"] == "plan", text
+    assert "output" not in r, "batched form must use outputs, not output"
+    assert r["outputs"] == singles, "batched outputs != one-shot outputs"
+
+
+def t_serve_batched_plan_rejects_bad_jobs_whole():
+    # rust: serve::batched_plan_rejects_bad_jobs_whole — any invalid job
+    # fails the whole request with a jobs[i]-prefixed message.
+    state = ServeState()
+    cases = [
+        ('{"cmd":"plan","jobs":[]}', '\\"jobs\\" needs at least one job'),
+        ('{"cmd":"plan","jobs":7}', '\\"jobs\\" must be an array'),
+        ('{"cmd":"plan","jobs":[3]}', 'jobs[0] must be an object'),
+        ('{"cmd":"plan","jobs":[{"model":"llama13b"},{"nodes":2}]}',
+         'jobs[1]: need \\"model\\"'),
+        ('{"cmd":"plan","jobs":[{"cmd":"plan","model":"llama13b"}]}',
+         'jobs[0]: unknown field \\"cmd\\"'),
+        ('{"cmd":"plan","model":"llama13b","jobs":[{"model":"llama13b"}]}',
+         'unknown field \\"model\\"'),
+    ]
+    for req, want in cases:
+        text, _ = serve_handle_line(state, req)
+        assert '"code":"bad_request"' in text and want in text, (req, text)
+    assert state.errors == len(cases)
+
+
+def t_serve_predict_mem_equals_renderer():
+    # rust: serve::predict_mem_response_equals_cli_renderer_bytes — the
+    # response output is byte-identical to the shared render_predict_mem
+    # (which IS the CLI's stdout).
+    state = ServeState()
+    text, _ = serve_handle_line(
+        state, '{"cmd":"predict-mem","model":"llama30b","nodes":8,'
+               '"tp":2,"pp":4,"sp":true}')
+    r = json_parse(text)
+    assert r["ok"] is True and r["cmd"] == "predict-mem", text
+    arch = preset("llama30b")
+    job = Job(arch, Cluster.dgx_a100(8), Job.paper_gbs(arch))
+    v = validate(job, Layout(2, 4, 1, False, FLASH2RMS, True))
+    assert r["output"] == render_predict_mem(
+        job, v, hardware_from_overrides(A100), "a100")
+    assert "budget (A100-80GB)" in r["output"]
+    text, _ = serve_handle_line(
+        state, '{"cmd":"predict-mem","model":"llama13b","kernel":"warp"}')
+    assert '"code":"bad_request"' in text and "unknown kernel 'warp'" in text
+
+
+def t_serve_readonly_suppresses_spills_but_not_results():
+    # rust: persist::readonly_mode_suppresses_spills_but_not_loads + the
+    # --readonly / PLX_CACHE_RO plumbing: read-only mode changes
+    # persistence, never results — a configured cache dir stays
+    # untouched while requests still answer.
+    import shutil
+    import tempfile
+    assert not persist_readonly(), "readonly must default off"
+    persist_set_readonly(True)
+    try:
+        assert persist_readonly()
+        assert persist_save_if_configured() is None
+    finally:
+        persist_set_readonly(False)
+    assert not persist_readonly()
+    d = tempfile.mkdtemp(prefix="plx-ro-check-")
+    old_dir = os.environ.get(PERSIST_CACHE_DIR_ENV)
+    old_ro = os.environ.get(PERSIST_READONLY_ENV)
+    try:
+        os.environ[PERSIST_CACHE_DIR_ENV] = d
+        os.environ[PERSIST_READONLY_ENV] = "1"
+        state = ServeState()
+        text, _ = serve_handle_line(
+            state, '{"cmd":"plan","model":"llama13b","nodes":1}')
+        assert json_parse(text)["ok"] is True
+        assert os.listdir(d) == [], "read-only request must not spill"
+        os.environ[PERSIST_READONLY_ENV] = "0"  # "0" means off
+        assert not persist_readonly()
+        state = ServeState()
+        serve_handle_line(state, '{"cmd":"plan","model":"llama13b","nodes":1}')
+        assert sorted(os.listdir(d)) == [
+            "evaluate.plxcache", "makespan.plxcache", "stage.plxcache"
+        ], "writable mode must spill all three memo files"
+    finally:
+        for env, old in [(PERSIST_CACHE_DIR_ENV, old_dir),
+                         (PERSIST_READONLY_ENV, old_ro)]:
+            if old is None:
+                os.environ.pop(env, None)
+            else:
+                os.environ[env] = old
+        shutil.rmtree(d, ignore_errors=True)
+
+
 SERVE_CHECKS = [
     ("json::grammar_depth_and_truncation", t_serve_json_grammar_and_depth),
     ("json::duplicate_keys_and_non_finite", t_serve_json_duplicate_keys_and_non_finite),
@@ -1653,6 +1812,206 @@ SERVE_CHECKS = [
     ("serve::error_envelopes_and_shutdown", t_serve_error_envelopes),
     ("serve::stats_reports_counters_and_memo_shapes", t_serve_stats_counters_move),
     ("serve::spill_writes_versioned_canonical_files", t_serve_warm_spill_writes_versioned_files),
+    ("serve::batched_plan_outputs_equal_single_shots", t_serve_batched_plan_equals_single_shots),
+    ("serve::batched_plan_rejects_bad_jobs_whole", t_serve_batched_plan_rejects_bad_jobs_whole),
+    ("serve::predict_mem_equals_cli_renderer_bytes", t_serve_predict_mem_equals_renderer),
+    ("persist::readonly_suppresses_spills_not_results", t_serve_readonly_suppresses_spills_but_not_results),
+]
+
+# ------------------------------------------------------------------ ARGMAX
+# The bound-driven argmax engine (rust/src/sweep/argmax.rs and its pysim
+# mirror): every retargeted query — planner, figures, table 3, compare —
+# must return the same row, layout AND numbers to the bit, as the
+# materializing reference it replaced, while evaluating strictly fewer
+# layouts than it enumerates.
+
+
+def _argmax_space(p):
+    return iter_layouts(p.job(), p.tps, p.pps, p.mbs, p.ckpts, p.kernels,
+                        p.sps, p.scheds)
+
+
+def _assert_best_matches_row(best, row, ctx):
+    if row is None:
+        assert best is None, f"{ctx}: argmax found a winner, reference none"
+        return
+    assert best is not None, f"{ctx}: reference found a winner, argmax none"
+    assert best.v.layout == row.layout(), ctx
+    assert best.v.num_micro == row.v.num_micro, ctx
+    assert _bits(best.mfu) == _bits(row.outcome.mfu), ctx
+    assert _bits(best.step_time_s) == _bits(row.outcome.step_time_s), ctx
+
+
+def t_argmax_keep_last_matches_best_where_every_preset():
+    # rust: argmax::keep_last_matches_materialized_best_on_all_presets —
+    # the pruned scan equals SweepResult::best() for every preset on
+    # both hardware presets, and the counters partition the space.
+    skipped = 0
+    for p in main_presets() + seqpar_presets():
+        job = p.job()
+        for hw_name, ov in [("a100", A100), ("h100", H100)]:
+            hw = hardware_from_overrides(ov)
+            best, q = argmax_mfu(job, _argmax_space(p), hw,
+                                 lambda _v: True, TIE_KEEP_LAST)
+            _assert_best_matches_row(best, run(p, hw).best(),
+                                     f"{p.name}/{hw_name}")
+            assert (q.gate_pruned + q.mem_pruned + q.bound_pruned
+                    + q.evaluated == q.total), (p.name, hw_name, q)
+            skipped += q.total - q.evaluated
+    # Tiny spaces (sp-13b-2k: 32 layouts, one window) may evaluate
+    # everything; across the preset roster the filters must still bite.
+    assert skipped > 0, "no preset pruned a single layout"
+
+
+def t_argmax_pruned_points_match_best_point():
+    # rust: figures::pruned_points_match_materialized_points — every
+    # slice family the figures use, checked field-wise against the
+    # retained materializing best_point.
+    hw = hardware_from_overrides(A100)
+    for p in main_presets() + seqpar_presets():
+        r = run(p, hw)
+        slices = [("all", lambda l: True)]
+        for k in p.kernels:
+            slices.append((f"kernel={k}", lambda l, k=k: l.kernel == k))
+        for mb in p.mbs:
+            slices.append((f"mb={mb}", lambda l, mb=mb: l.mb == mb
+                           and l.kernel != FLASH2RMS))
+        for tp in p.tps:
+            for pp in p.pps:
+                slices.append((f"tp{tp}/pp{pp}",
+                               lambda l, tp=tp, pp=pp: l.tp == tp
+                               and l.pp == pp and l.mb == 1 and not l.ckpt
+                               and l.kernel == FLASH2RMS))
+        for ck in p.ckpts:
+            slices.append((f"ckpt={ck}", lambda l, ck=ck: l.ckpt == ck
+                           and l.kernel != FLASH2RMS))
+        for sp in p.sps:
+            slices.append((f"sp={sp}", lambda l, sp=sp: l.sp == sp))
+        for series, pred in slices:
+            want = best_point(r, series, lambda row: pred(row.layout()))
+            got = best_point_pruned(p, hw, series, pred)
+            ctx = f"{p.name}/{series}"
+            assert got.model == want.model and got.series == want.series, ctx
+            assert got.annotation == want.annotation, \
+                f"{ctx}: {got.annotation} != {want.annotation}"
+            if want.mfu is None:
+                assert got.mfu is None, ctx
+            else:
+                assert _bits(got.mfu) == _bits(want.mfu), ctx
+
+
+def t_argmax_keep_first_ties_keep_earlier_layout():
+    # rust: argmax::tie_breaking_keep_first_vs_keep_last — at tp=1,
+    # sequence parallelism is a bitwise no-op, so the sp=False/sp=True
+    # siblings tie exactly; KeepFirst must keep the earlier-enumerated
+    # sp=False row, KeepLast the later sp=True row, same MFU bits.
+    p = next(x for x in seqpar_presets() if x.name == "sp-13b-2k")
+    job = p.job()
+    hw = hardware_from_overrides(A100)
+    pred = lambda v: v.layout.tp == 1
+    first, _ = argmax_mfu(job, _argmax_space(p), hw, pred, TIE_KEEP_FIRST)
+    last, _ = argmax_mfu(job, _argmax_space(p), hw, pred, TIE_KEEP_LAST)
+    # Reference fold over the materialized rows, strict-> (first wins).
+    ref = None
+    for row in run(p, hw).rows:
+        if row.layout().tp != 1 or row.outcome.mfu_opt() is None:
+            continue
+        if ref is None or row.outcome.mfu > ref.outcome.mfu:
+            ref = row
+    _assert_best_matches_row(first, ref, "keep-first vs strict fold")
+    assert first.v.layout.sp is False, "KeepFirst must keep sp=False"
+    assert last.v.layout.sp is True, "KeepLast must keep sp=True"
+    assert _bits(first.mfu) == _bits(last.mfu), "not actually a tie"
+
+
+def t_argmax_tight_bound_prunes_strictly_more_on_30b8k():
+    # rust: argmax::tight_bound_prunes_strictly_more_than_loose + the CI
+    # bench gate: on the 30b-8k planning grid at 8 nodes the tightened
+    # TP-collective bound must evaluate strictly fewer layouts than the
+    # loose bound, under the gating fraction (<0.47).
+    arch = preset("llama30b-8k")
+    job = Job(arch, Cluster.dgx_a100(8), Job.paper_gbs(arch))
+    hw = hardware_from_overrides(A100)
+
+    def space():
+        return iter_layouts(job, [1, 2, 4, 8], [1, 2, 4, 8, 16, 32],
+                            [1, 2, 4, 8], [False, True], ALL_KERNELS,
+                            [False, True])
+    bl, ql = argmax_mfu_with_bound(job, space(), hw, lambda _v: True,
+                                   TIE_KEEP_FIRST, mfu_upper_bound_loose)
+    bt, qt = argmax_mfu_with_bound(job, space(), hw, lambda _v: True,
+                                   TIE_KEEP_FIRST, mfu_upper_bound)
+    assert bt.v.layout == bl.v.layout and _bits(bt.mfu) == _bits(bl.mfu), \
+        "bound choice changed the winner"
+    assert qt.total == ql.total, (qt, ql)
+    assert qt.evaluated < ql.evaluated, \
+        f"tight bound must prune strictly more: {qt} vs {ql}"
+    assert qt.evaluated / qt.total < 0.47, \
+        f"gating fraction regressed: {qt.evaluated}/{qt.total}"
+
+
+def t_argmax_planner_delegates_bit_identically():
+    # rust: planner::exhaustive_stats_equals_reference_after_extraction —
+    # plan_exhaustive_stats through the argmax engine vs the retained
+    # unpruned oracle.
+    for name, nodes in [("llama13b", 1), ("llama30b", 4)]:
+        arch = preset(name)
+        job = Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+        hw = hardware_from_overrides(A100)
+        plan, stats = plan_exhaustive_stats(job, hw)
+        ref = plan_exhaustive_reference(job, hw)
+        assert plan.v.layout == ref.v.layout, name
+        assert _bits(plan.predicted_mfu) == _bits(ref.predicted_mfu), name
+        assert _bits(plan.predicted_step_s) == _bits(ref.predicted_step_s), name
+        assert stats.evaluated < stats.total, (name, stats)
+
+
+def t_argmax_compare_best_matches_run_compare():
+    # rust: argmax::compare_best_matches_materialized_compare — the
+    # winner-only compare path equals the materializing one, and both
+    # render through render_compare_best to identical bytes.
+    p = main_presets()[0]
+    hws = [("a100", hardware_from_overrides(A100)),
+           ("h100", hardware_from_overrides(H100))]
+    pruned = compare_best(p, hws)
+    full = run_compare(p, hws)
+    for (pn, pb), (fn, fr) in zip(pruned, full):
+        assert pn == fn
+        _assert_best_matches_row(pb, fr.best(), f"compare/{pn}")
+    assert render_compare_best(p.name, p.job(), pruned) == \
+        render_compare(full), "the two compare paths render differently"
+
+
+def t_argmax_table3_render_matches_materializing():
+    # rust: figures::table3_through_argmax_is_byte_identical — table 3
+    # rendered from one pruned argmax per preset vs an inline
+    # materializing reference built from run().best().
+    hw = hardware_from_overrides(A100)
+    rows = []
+    for p in seqpar_presets():
+        job = p.job()
+        b = run(p, hw).best()
+        if b is None:
+            continue
+        l = b.layout()
+        rows.append([job.arch.name, str(job.cluster.gpus),
+                     secs(b.outcome.step_time_s), pct(b.outcome.mfu),
+                     str(l.mb), str(l.tp), str(l.pp),
+                     "True" if l.sp else "False"])
+    want = ("# Table 3 (B.1) — best configurations per model\n"
+            + table_render(["Model", "GPUs", "Step Time", "MFU", "MB Size",
+                            "TP size", "PP Size", "Seq Par"], rows))
+    assert table3_render(hw) == want, "table3 bytes changed under argmax"
+
+
+ARGMAX_CHECKS = [
+    ("argmax::keep_last_matches_best_where_every_preset", t_argmax_keep_last_matches_best_where_every_preset),
+    ("argmax::pruned_points_match_best_point_all_slices", t_argmax_pruned_points_match_best_point),
+    ("argmax::keep_first_ties_keep_earlier_layout", t_argmax_keep_first_ties_keep_earlier_layout),
+    ("argmax::tight_bound_prunes_strictly_more_on_30b8k", t_argmax_tight_bound_prunes_strictly_more_on_30b8k),
+    ("argmax::planner_delegates_bit_identically", t_argmax_planner_delegates_bit_identically),
+    ("argmax::compare_best_matches_run_compare", t_argmax_compare_best_matches_run_compare),
+    ("argmax::table3_render_matches_materializing", t_argmax_table3_render_matches_materializing),
 ]
 
 
@@ -1680,6 +2039,10 @@ def main():
     for name, fn in SERVE_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - hw_pass} / {len(SERVE_CHECKS)} (serve suite)")
+    serve_pass = len(PASS)
+    for name, fn in ARGMAX_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - serve_pass} / {len(ARGMAX_CHECKS)} (argmax suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

@@ -1029,9 +1029,26 @@ def _dp_and_optimizer(job, v, hw):
 def step_time_lower_bound(job, v, hw):
     """Admissible lower bound on step_time(...).total() — no schedule
     execution (mirrors rust/src/sim/step_time.rs::step_time_lower_bound):
-    head-less compute + DP reduction + optimizer, each of the dropped
-    terms being >= 0, with partial sums ordered like total() so the bound
-    holds bitwise."""
+    head-less compute + the schedule-independent TP collective + DP
+    reduction + optimizer. The TP term is exact, not an estimate —
+    finish_breakdown charges m*2*vstages*tp_chunk from the stage costs
+    alone, never the makespan. Partial sums are ordered like total()
+    with pp_comm/bubble at 0.0, and IEEE-754 addition is monotone, so
+    the bound holds bitwise."""
+    chunk_fwd, chunk_bwd, _hf, _hb, tp_chunk, _p2p = stage_costs_factored(job, v, hw)
+    vst = sched_vstages(v.layout.sched)
+    comp_micro = float(vst) * (chunk_fwd + chunk_bwd)
+    compute = float(v.num_micro) * comp_micro
+    tp_micro = 2.0 * float(vst) * tp_chunk
+    tp_comm = float(v.num_micro) * tp_micro
+    dp_comm, optimizer = _dp_and_optimizer(job, v, hw)
+    return compute + tp_comm + dp_comm + optimizer
+
+
+def step_time_lower_bound_loose(job, v, hw):
+    # The PR-4 bound without the TP term (mirrors
+    # step_time_lower_bound_loose): retained for the bench's
+    # evaluated-fraction before/after and the loose<=tight property.
     chunk_fwd, chunk_bwd, _hf, _hb, _tp, _p2p = stage_costs_factored(job, v, hw)
     vst = sched_vstages(v.layout.sched)
     comp_micro = float(vst) * (chunk_fwd + chunk_bwd)
@@ -1046,6 +1063,12 @@ def mfu_upper_bound(job, v, hw):
     # upper bound.
     return mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops,
                step_time_lower_bound(job, v, hw))
+
+
+def mfu_upper_bound_loose(job, v, hw):
+    # Mirrors rust/src/sim/mod.rs::mfu_upper_bound_loose (bench-only).
+    return mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops,
+               step_time_lower_bound_loose(job, v, hw))
 
 
 def step_time(job, v, hw):
@@ -1356,6 +1379,112 @@ def run(preset_, hw):
     rows = [Row(v, evaluate(job, v, hw)) for v in layouts]
     return SweepResult(preset_.name, job, rows)
 
+# ---------------------------------------------------------------- sweep/argmax
+
+# Mirror of rust/src/sweep/argmax.rs: bound-driven argmax queries over a
+# lazy layout stream. Three provably lossless filters (kernel gate,
+# parameter-state memory lower bound, admissible MFU upper bound against
+# the running incumbent) discard dominated layouts before the simulator
+# runs; survivors are evaluated in PRUNE_WINDOW-sized windows and folded
+# in enumeration order, so the returned row — layout AND numbers, to the
+# bit — equals the materializing reference it replaces. (Rust evaluates
+# each window on the pool; this mirror evaluates serially — same
+# outcomes, same fold order, so counts and winners match Rust exactly.)
+
+# Tie-breaking discipline of the fold; pruning strictness follows from it
+# (pruning a tie is only sound when a tie could never win).
+TIE_KEEP_FIRST = "keep-first"  # planner's strict-> fold; prune ub <= incumbent
+TIE_KEEP_LAST = "keep-last"    # best_where's total_cmp last-max; prune ub < incumbent
+
+PRUNE_WINDOW = 32  # mirrors rust/src/sweep/argmax.rs::PRUNE_WINDOW
+
+
+@dataclass(frozen=True)
+class QueryStats:
+    # Mirrors rust/src/sweep/argmax.rs::QueryStats; predicate-rejected
+    # layouts are not counted — they are out of the query's space.
+    total: int
+    gate_pruned: int
+    mem_pruned: int
+    bound_pruned: int
+    evaluated: int
+
+
+@dataclass(frozen=True)
+class Best:
+    v: ValidLayout
+    mfu: float
+    step_time_s: float
+
+
+def argmax_mfu(job, layouts, hw, pred, tie):
+    return argmax_mfu_with_bound(job, layouts, hw, pred, tie, mfu_upper_bound)
+
+
+def argmax_mfu_with_bound(job, layouts, hw, pred, tie, bound):
+    """argmax_mfu with an explicit admissible bound — the bench harness
+    runs the same scan under mfu_upper_bound_loose to report how much
+    the tightened TP term shrinks the evaluated fraction."""
+    best = None
+    total = gated = memp = boundp = evaluated = 0
+    window = []
+
+    def flush(best):
+        for w in window:
+            o = evaluate(job, w, hw)
+            if o.kind == "ok":
+                if best is None:
+                    wins = True
+                elif tie == TIE_KEEP_FIRST:
+                    wins = o.mfu > best.mfu
+                else:
+                    wins = total_cmp_key(o.mfu) >= total_cmp_key(best.mfu)
+                if wins:
+                    best = Best(w, o.mfu, o.step_time_s)
+        window.clear()
+        return best
+
+    for v in layouts:
+        if not pred(v):
+            continue
+        total += 1
+        l = v.layout
+        if not kernel_available(l.kernel, job.arch.heads, l.tp, l.mb):
+            gated += 1
+            continue
+        if model_state_bytes(job, v, hw) > hw.hbm_bytes:
+            memp += 1
+            continue
+        if best is not None:
+            ub = bound(job, v, hw)
+            # NaN-safe in both modes: a pathological NaN bound fails the
+            # comparison and falls through to a full evaluation.
+            dominated = ub <= best.mfu if tie == TIE_KEEP_FIRST else ub < best.mfu
+            if dominated:
+                boundp += 1
+                continue
+        evaluated += 1
+        window.append(v)
+        if len(window) >= PRUNE_WINDOW:
+            best = flush(best)
+    best = flush(best)
+    return best, QueryStats(total, gated, memp, boundp, evaluated)
+
+
+def compare_best(preset_, hws):
+    """Per-hardware winners for `plx compare` through the pruned argmax
+    (mirrors rust/src/sweep/argmax.rs::compare_best) — no full sweep
+    table is materialized per hardware."""
+    job = preset_.job()
+    out = []
+    for name, hw in hws:
+        layouts = iter_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
+                               preset_.ckpts, preset_.kernels, preset_.sps,
+                               preset_.scheds)
+        best, _ = argmax_mfu(job, layouts, hw, lambda _v: True, TIE_KEEP_LAST)
+        out.append((name, best))
+    return out
+
 # ---------------------------------------------------------------- util/table
 
 def table_render(headers, rows):
@@ -1489,6 +1618,8 @@ class Point:
 
 
 def best_point(r, series, f):
+    # The historical materializing query, retained as the bit-identity
+    # reference for best_point_pruned (the ARGMAX suite compares them).
     row = r.best_where(f)
     if row is not None:
         return Point(r.preset_name, series, row.layout().annotation(),
@@ -1496,38 +1627,54 @@ def best_point(r, series, f):
     return Point(r.preset_name, series, "—", None)
 
 
+def best_point_pruned(preset_, hw, series, pred):
+    """Best-of-slice query through the pruned argmax (mirrors
+    rust/src/sweep/figures.rs::best_point_pruned): the slice predicate
+    runs over the preset's lazy layout space, TIE_KEEP_LAST ties
+    matching SweepResult.best_where's max_by exactly, so the Point —
+    annotation string and MFU bits — is identical to best_point over a
+    materialized run()."""
+    job = preset_.job()
+    layouts = iter_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
+                           preset_.ckpts, preset_.kernels, preset_.sps,
+                           preset_.scheds)
+    best, _ = argmax_mfu(job, layouts, hw, lambda v: pred(v.layout),
+                         TIE_KEEP_LAST)
+    if best is not None:
+        return Point(preset_.name, series, best.v.layout.annotation(),
+                     best.mfu)
+    return Point(preset_.name, series, "—", None)
+
+
 def figure1(hw):
     points = []
     for p in main_presets():
-        r = run(p, hw)
         for k in ALL_KERNELS:
             if k not in p.kernels:
                 continue
-            points.append(best_point(r, k, lambda row, k=k: row.layout().kernel == k))
+            points.append(best_point_pruned(p, hw, k,
+                                            lambda l, k=k: l.kernel == k))
     return points
 
 
 def figure2(hw):
     points = []
     for p in main_presets():
-        r = run(p, hw)
-        no_rms = lambda row: row.layout().kernel != FLASH2RMS
-        points.append(best_point(r, "no checkpointing",
-                                 lambda row: no_rms(row) and not row.layout().ckpt))
-        points.append(best_point(r, "every layer",
-                                 lambda row: no_rms(row) and row.layout().ckpt))
+        no_rms = lambda l: l.kernel != FLASH2RMS
+        points.append(best_point_pruned(p, hw, "no checkpointing",
+                                        lambda l: no_rms(l) and not l.ckpt))
+        points.append(best_point_pruned(p, hw, "every layer",
+                                        lambda l: no_rms(l) and l.ckpt))
     return points
 
 
 def figure3(hw):
     points = []
     for p in main_presets():
-        r = run(p, hw)
         for mb in p.mbs:
-            points.append(best_point(
-                r, f"mb={mb}",
-                lambda row, mb=mb: row.layout().mb == mb
-                and row.layout().kernel != FLASH2RMS))
+            points.append(best_point_pruned(
+                p, hw, f"mb={mb}",
+                lambda l, mb=mb: l.mb == mb and l.kernel != FLASH2RMS))
     return points
 
 
@@ -1536,56 +1683,58 @@ def figure4(hw):
     for p in main_presets():
         if p.name in ("13b-2k", "30b-8k"):
             continue
-        r = run(p, hw)
         for tp in p.tps:
             for pp in p.pps:
-                points.append(best_point(
-                    r, f"tp{tp}/pp{pp}",
-                    lambda row, tp=tp, pp=pp: row.layout().tp == tp
-                    and row.layout().pp == pp and row.layout().mb == 1
-                    and not row.layout().ckpt
-                    and row.layout().kernel == FLASH2RMS))
+                points.append(best_point_pruned(
+                    p, hw, f"tp{tp}/pp{pp}",
+                    lambda l, tp=tp, pp=pp: l.tp == tp and l.pp == pp
+                    and l.mb == 1 and not l.ckpt and l.kernel == FLASH2RMS))
     return points
 
 
 def figure5(hw):
     points = []
     for p in seqpar_presets():
-        r = run(p, hw)
-        points.append(best_point(r, "sequence parallel", lambda row: row.layout().sp))
-        points.append(best_point(r, "no sequence parallel",
-                                 lambda row: not row.layout().sp))
+        points.append(best_point_pruned(p, hw, "sequence parallel",
+                                        lambda l: l.sp))
+        points.append(best_point_pruned(p, hw, "no sequence parallel",
+                                        lambda l: not l.sp))
     return points
 
 
-def table3(hw):
-    names = []
+def _table3_winners(hw):
+    # One pruned argmax per SP preset instead of a materialized sweep
+    # each (mirrors rust/src/sweep/figures.rs::table3's scan).
+    out = []
     for p in seqpar_presets():
-        r = run(p, hw)
-        b = r.best()
-        if b is not None and b.outcome.kind == "ok":
-            names.append(r.job.arch.name)
-    return names
+        job = p.job()
+        layouts = iter_layouts(job, p.tps, p.pps, p.mbs, p.ckpts, p.kernels,
+                               p.sps, p.scheds)
+        best, _ = argmax_mfu(job, layouts, hw, lambda _v: True, TIE_KEEP_LAST)
+        if best is not None:
+            out.append((job, best))
+    return out
+
+
+def table3(hw):
+    return [job.arch.name for job, _best in _table3_winners(hw)]
 
 
 def table3_render(hw):
     # Mirrors rust/src/sweep/figures.rs::table3 byte-for-byte.
     rows = []
-    for p in seqpar_presets():
-        r = run(p, hw)
-        b = r.best()
-        if b is not None and b.outcome.kind == "ok":
-            l = b.layout()
-            rows.append([
-                r.job.arch.name,
-                str(r.job.cluster.gpus),
-                secs(b.outcome.step_time_s),
-                pct(b.outcome.mfu),
-                str(l.mb),
-                str(l.tp),
-                str(l.pp),
-                "True" if l.sp else "False",
-            ])
+    for job, b in _table3_winners(hw):
+        l = b.v.layout
+        rows.append([
+            job.arch.name,
+            str(job.cluster.gpus),
+            secs(b.step_time_s),
+            pct(b.mfu),
+            str(l.mb),
+            str(l.tp),
+            str(l.pp),
+            "True" if l.sp else "False",
+        ])
     return ("# Table 3 (B.1) — best configurations per model\n"
             + table_render(["Model", "GPUs", "Step Time", "MFU", "MB Size",
                             "TP size", "PP Size", "Seq Par"], rows))
@@ -1697,55 +1846,26 @@ class PruneStats:
         return self.evaluated / self.total if self.total else 0.0
 
 
-PRUNE_WINDOW = 32  # mirrors rust/src/planner/mod.rs::PRUNE_WINDOW
-
-
 def plan_exhaustive_stats(job, hw):
     """Bound-pruned exhaustive argmax (mirrors
-    rust/src/planner/mod.rs::plan_exhaustive_stats): scan the lazy space
-    in enumeration order with an incumbent; skip layouts only on a
-    provable dominance (kernel gate / memory lower bound / admissible
-    MFU upper bound). Survivors batch into PRUNE_WINDOW-sized windows
-    (Rust evaluates each window on the pool; the mirror evaluates it
-    serially — same outcomes, and the fold applies strict-> in
-    enumeration order either way, so the evaluated COUNT and the plan
-    match Rust exactly). Returns (plan, PruneStats); the plan is
-    identical to plan_exhaustive_reference's, layout and bits."""
+    rust/src/planner/mod.rs::plan_exhaustive_stats): since the
+    branch-and-bound scan was extracted into the reusable argmax engine,
+    this is a thin query over it — the exhaustive planner grid as the
+    lazy layout stream, a trivial predicate, and TIE_KEEP_FIRST (the
+    historical strict-> fold, so ties keep the earliest enumerated
+    layout exactly like plan_exhaustive_reference). Returns
+    (plan, PruneStats); the plan is identical to the reference's,
+    layout and bits."""
     tps = [1 << i for i in range(4)]
     pps = [1 << i for i in range(6)]
-    best = None
-    total = gated = memp = boundp = evaluated = 0
-    window = []
-
-    def flush(best):
-        for w in window:
-            o = evaluate(job, w, hw)
-            if o.kind == "ok" and (best is None or o.mfu > best.predicted_mfu):
-                best = Plan(w, o.mfu, o.step_time_s)
-        window.clear()
-        return best
-
-    for v in iter_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
-                          ALL_KERNELS, [False, True]):
-        total += 1
-        l = v.layout
-        if not kernel_available(l.kernel, job.arch.heads, l.tp, l.mb):
-            gated += 1
-            continue
-        if model_state_bytes(job, v, hw) > hw.hbm_bytes:
-            memp += 1
-            continue
-        if best is not None and mfu_upper_bound(job, v, hw) <= best.predicted_mfu:
-            boundp += 1
-            continue
-        evaluated += 1
-        window.append(v)
-        if len(window) >= PRUNE_WINDOW:
-            best = flush(best)
-    best = flush(best)
+    layouts = iter_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
+                           ALL_KERNELS, [False, True])
+    best, q = argmax_mfu(job, layouts, hw, lambda _v: True, TIE_KEEP_FIRST)
     if best is None:
         raise ValueError("no feasible layout")
-    return best, PruneStats(total, gated, memp, boundp, evaluated)
+    return (Plan(best.v, best.mfu, best.step_time_s),
+            PruneStats(q.total, q.gate_pruned, q.mem_pruned,
+                       q.bound_pruned, q.evaluated))
 
 
 def plan_exhaustive(job, hw):
@@ -2477,6 +2597,24 @@ def persist_cache_dir():
     return v if v else None
 
 
+PERSIST_READONLY_ENV = "PLX_CACHE_RO"  # mirrors persist.rs::READONLY_ENV
+_PERSIST_READONLY = [False]  # the --readonly CLI flag (persist.rs::READONLY)
+
+
+def persist_set_readonly(on):
+    _PERSIST_READONLY[0] = bool(on)
+
+
+def persist_readonly():
+    """Mirror of rust/src/sim/persist.rs::readonly: read-only cache mode
+    is on when the --readonly flag was set or PLX_CACHE_RO is non-empty
+    and not "0". Warm loads still happen; spills are suppressed."""
+    if _PERSIST_READONLY[0]:
+        return True
+    v = os.environ.get(PERSIST_READONLY_ENV)
+    return v is not None and v != "" and v != "0"
+
+
 def _persist_write_atomic(dirpath, name, content):
     tmp = os.path.join(dirpath, f".{name}.tmp.{os.getpid()}")
     with open(tmp, "w") as f:
@@ -2563,6 +2701,11 @@ def persist_load_all(dirpath):
 
 
 def persist_save_if_configured():
+    # Read-only mode suppresses every spill at this single choke point
+    # (CLI post-command, serve's per-request spill_if_dirty, the final
+    # daemon spill) — exactly like persist.rs::save_if_configured.
+    if persist_readonly():
+        return None
     d = persist_cache_dir()
     if d is None:
         return None
@@ -2597,31 +2740,80 @@ def run_compare(preset_, hws):
     return [(name, run(preset_, hw)) for name, hw in hws]
 
 
-def render_compare(results):
-    """Mirror of rust/src/sweep/report.rs::render_compare."""
-    first = results[0][1]
-    base = first.best()
-    base_mfu = base.outcome.mfu if base is not None else None
+def render_compare_best(preset_name, job, winners):
+    """The compare report body from per-hardware winners alone (mirror
+    of rust/src/sweep/report.rs::render_compare_best) — the rendering
+    core shared by the materializing render_compare and the bound-driven
+    compare_best path, which never holds a sweep table to render from."""
+    base_mfu = winners[0][1].mfu if winners[0][1] is not None else None
     rows = []
-    for hw_name, r in results:
-        best = r.best()
+    for hw_name, best in winners:
         if best is not None:
-            l = best.layout()
-            m = best.outcome.mfu
+            l = best.v.layout
             if base_mfu is not None:
-                delta = f"{100.0 * (m - base_mfu):+.2f}"
+                # The baseline row prints +0.00 so the column is
+                # self-describing (and stays byte-stable).
+                delta = f"{100.0 * (best.mfu - base_mfu):+.2f}"
             else:
                 delta = "—"
             rows.append([hw_name, l.annotation(), l.kernel,
-                         "True" if l.sp else "False", pct(m),
-                         secs(best.outcome.step_time_s), delta])
+                         "True" if l.sp else "False", pct(best.mfu),
+                         secs(best.step_time_s), delta])
         else:
             rows.append([hw_name, "—", "—", "—", "", "no runnable layout", "—"])
     headers = ["Hardware", "Best Layout", "Kernel", "Seq Par", "MFU",
-               "Step Time", f"MFU vs {results[0][0]}"]
-    return (f"# compare — {first.preset_name} ({first.job.arch.name} on "
-            f"{first.job.cluster.gpus} GPUs, GBS {first.job.gbs}) across hardware\n"
+               "Step Time", f"MFU vs {winners[0][0]}"]
+    return (f"# compare — {preset_name} ({job.arch.name} on "
+            f"{job.cluster.gpus} GPUs, GBS {job.gbs}) across hardware\n"
             + table_render(headers, rows))
+
+
+def render_compare(results):
+    """Mirror of rust/src/sweep/report.rs::render_compare — extracts
+    each hardware's winner and delegates to render_compare_best, so the
+    two query paths render through one body and stay byte-identical by
+    construction."""
+    first = results[0][1]
+    winners = []
+    for hw_name, r in results:
+        b = r.best()
+        winners.append((hw_name, None if b is None else
+                        Best(b.v, b.outcome.mfu, b.outcome.step_time_s)))
+    return render_compare_best(first.preset_name, first.job, winners)
+
+# ------------------------------------------------------------ sim/predict-mem
+
+def render_predict_mem(job, v, hw, hw_label):
+    """Mirror of rust/src/sim/mod.rs::render_predict_mem: the
+    `plx predict-mem` report — per-component memory table plus the
+    fits/OOM/unavailable verdict — shared by the CLI and the serve
+    protocol so both emit identical bytes. `hw_label` is the
+    user-spelled hardware name (`a100` → the `budget (A100-80GB)` row)."""
+    mem = per_gpu_memory(job, v, hw)
+    gb = 1e9
+    rows = [
+        ["weights (bf16)", f"{mem.weights / gb:.2f}"],
+        ["gradients (bf16)", f"{mem.grads / gb:.2f}"],
+        ["optimizer (ZeRO-1 fp32)", f"{mem.optimizer / gb:.2f}"],
+        ["activations", f"{mem.activations / gb:.2f}"],
+        ["logits", f"{mem.logits / gb:.2f}"],
+        ["workspace", f"{mem.workspace / gb:.2f}"],
+        ["TOTAL", f"{mem.total() / gb:.2f}"],
+        [f"budget ({hw_label.upper()}-{hw.hbm_bytes / gb:.0f}GB)",
+         f"{hw.hbm_bytes / gb:.2f}"],
+    ]
+    out = (f"memory prediction: {job.arch.name} {v.layout.annotation()} "
+           f"dp={v.topo.dp}\n")
+    out += table_render(["component", "GB/GPU"], rows)
+    o = evaluate(job, v, hw)
+    if o.kind == "ok":
+        out += (f"fits. predicted {100.0 * o.mfu:.2f}% MFU, "
+                f"{o.step_time_s:.2f}s/step\n")
+    elif o.kind == "oom":
+        out += f"OOM: needs {o.required / gb:.1f} GB of {o.budget / gb:.1f} GB\n"
+    else:
+        out += "kernel unavailable for this layout\n"
+    return out
 
 # ---------------------------------------------------------------- serve mirror
 
@@ -2721,8 +2913,9 @@ def _serve_parse_schedules(spec):
     return scheds
 
 
-def _serve_do_plan(req):
-    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])
+def _serve_plan_one(req):
+    # One plan job, sans key check — shared by the one-shot form (which
+    # allows "cmd") and the batched form's elements (which do not).
     model = _serve_need_str(req, "model")
     arch = preset(model)
     if arch is None:
@@ -2741,6 +2934,82 @@ def _serve_do_plan(req):
     except ValueError as e:
         raise _ServeError(str(e))
     return render_plan(job, plan)
+
+
+def _serve_do_plan(req):
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])
+    return _serve_plan_one(req)
+
+
+def _serve_do_plan_batch(req):
+    """Mirror of rust/src/serve/mod.rs::do_plan_batch: the batched plan
+    form {"cmd":"plan","jobs":[{...}, ...]} — each element takes the
+    same fields as a single plan request (minus "cmd"); all jobs run
+    inside one request against the same warm process memos, and any
+    invalid job fails the whole request."""
+    _serve_check_keys(req, ["cmd", "jobs"])
+    if "jobs" not in req:
+        raise _ServeError('need "jobs"')
+    jobs = req["jobs"]
+    if not isinstance(jobs, list):
+        raise _ServeError('"jobs" must be an array')
+    if not jobs:
+        raise _ServeError('"jobs" needs at least one job')
+    outputs = []
+    for i, j in enumerate(jobs):
+        if not isinstance(j, dict):
+            raise _ServeError(f"jobs[{i}] must be an object")
+        try:
+            _serve_check_keys(j, ["model", "nodes", "gbs", "hw", "exhaustive"])
+            outputs.append(_serve_plan_one(j))
+        except _ServeError as e:
+            raise _ServeError(f"jobs[{i}]: {e}")
+    return outputs
+
+
+def _serve_do_predict_mem(req):
+    """Mirror of rust/src/serve/mod.rs::do_predict_mem: the same
+    per-component memory table and fits/OOM verdict as
+    `plx predict-mem`, rendered by the shared render_predict_mem."""
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "tp", "pp",
+                            "mb", "ckpt", "sp", "kernel", "schedule"])
+    model = _serve_need_str(req, "model")
+    arch = preset(model)
+    if arch is None:
+        raise _ServeError(f"unknown model '{model}'")
+    nodes = _serve_usize(req, "nodes")
+    nodes = 8 if nodes is None else nodes
+    gbs = _serve_usize(req, "gbs")
+    gbs = Job.paper_gbs(arch) if gbs is None else gbs
+    hw_name = _serve_str(req, "hw") or "a100"
+    hw = _serve_resolve_hw(hw_name)
+    k = _serve_str(req, "kernel")
+    if k is None:
+        kernel = FLASH2RMS
+    else:
+        kernel = KERNEL_PARSE.get(k)
+        if kernel is None:
+            raise _ServeError(f"unknown kernel '{k}'")
+    s = _serve_str(req, "schedule")
+    if s is None:
+        sched = SCHED_1F1B
+    else:
+        sched = sched_parse(s)
+        if sched is None:
+            raise _ServeError(
+                f"unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)")
+    tp = _serve_usize(req, "tp")
+    pp = _serve_usize(req, "pp")
+    mb = _serve_usize(req, "mb")
+    l = Layout(1 if tp is None else tp, 1 if pp is None else pp,
+               1 if mb is None else mb, _serve_bool(req, "ckpt"), kernel,
+               _serve_bool(req, "sp"), sched)
+    job = Job(arch, Cluster.dgx_a100(nodes), gbs)
+    try:
+        v = validate(job, l)
+    except ValueError as e:
+        raise _ServeError(str(e))
+    return render_predict_mem(job, v, hw, hw_name)
 
 
 def _serve_do_sweep(req):
@@ -2769,7 +3038,8 @@ def _serve_do_compare(req):
            for n in spec.split(",") if n.strip()]
     if not hws:
         raise _ServeError('"hw" needs at least one preset name')
-    return render_compare(run_compare(p, hws))
+    winners = compare_best(p, hws)
+    return render_compare_best(p.name, p.job(), winners)
 
 
 def _serve_stats(state):
@@ -2813,9 +3083,19 @@ def _serve_dispatch(state, line):
         return _serve_stats(state), False
     if cmd == "shutdown":
         return json_write({"cmd": "shutdown", "ok": True}), True
-    if cmd in ("plan", "sweep", "compare"):
+    if cmd in ("plan", "sweep", "compare", "predict-mem"):
+        # The batched plan form returns an "outputs" array instead of a
+        # single "output" string (mirrors serve/mod.rs's dispatch).
+        if cmd == "plan" and "jobs" in parsed:
+            try:
+                outputs = _serve_do_plan_batch(parsed)
+            except _ServeError as e:
+                return _serve_err("bad_request", str(e)), False
+            return json_write({"cmd": "plan", "ok": True,
+                               "outputs": outputs}), False
         do = {"plan": _serve_do_plan, "sweep": _serve_do_sweep,
-              "compare": _serve_do_compare}[cmd]
+              "compare": _serve_do_compare,
+              "predict-mem": _serve_do_predict_mem}[cmd]
         try:
             output = do(parsed)
         except _ServeError as e:

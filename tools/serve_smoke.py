@@ -7,17 +7,24 @@ test can show — a warm restart serving disk hits out of PLX_CACHE_DIR:
 
   1. cold daemon: every `output` field byte-identical to the stdout of
      the equivalent one-shot CLI invocation (plan / sweep --top /
-     sweep --hw h100 / compare);
-  2. error envelopes for a bad preset and a non-JSON line, with the
+     sweep --hw h100 / compare / predict-mem);
+  2. batched plan: one {"cmd":"plan","jobs":[...]} request whose
+     `outputs` elements each equal the matching one-shot CLI stdout
+     byte-for-byte;
+  3. error envelopes for a bad preset and a non-JSON line, with the
      stats counters moving accordingly;
-  3. clean shutdown, then a cross-language check: the daemon's spilled
+  4. clean shutdown, then a cross-language check: the daemon's spilled
      evaluate.plxcache parses with tools/pysim.py's mirror and
      re-renders byte-identically (Rust writer <-> Python parser);
-  4. warm restart on the same PLX_CACHE_DIR: the startup banner reports
+  5. read-only cache: a CLI run with --readonly and a daemon under
+     PLX_CACHE_RO=1, both computing entries the cache does not hold,
+     must leave every .plxcache file byte-identical (warm-load only,
+     no spill) while still answering with the cacheless bytes;
+  6. warm restart on the same PLX_CACHE_DIR: the startup banner reports
      warmed entries, repeated queries answer with the same bytes, and
      the stats report shows disk.evaluate.loaded > 0 AND
      disk.evaluate.hits > 0 (the lookups were served by disk entries);
-  5. writes a stats artifact (cold + warm stats responses) for upload.
+  7. writes a stats artifact (cold + warm stats responses) for upload.
 
 Usage: python3 tools/serve_smoke.py [--bin PATH] [--artifact PATH]
 """
@@ -114,6 +121,24 @@ def main():
         ("compare",
          {"cmd": "compare", "preset": "13b-2k", "hw": "a100,h100"},
          ["compare", "--preset", "13b-2k", "--hw", "a100,h100"]),
+        ("predict-mem",
+         {"cmd": "predict-mem", "model": "llama13b", "nodes": 1,
+          "gbs": 512, "tp": 2, "pp": 2},
+         ["predict-mem", "--model", "llama13b", "--nodes", "1",
+          "--gbs", "512", "--tp", "2", "--pp", "2"]),
+    ]
+
+    # The batched plan: one request, three jobs; outputs[i] must equal
+    # the stdout of the matching one-shot CLI invocation byte-for-byte.
+    batch_jobs = [
+        {"model": "llama13b", "nodes": 1, "gbs": 512},
+        {"model": "llama30b", "nodes": 2},
+        {"model": "llama13b", "nodes": 1, "hw": "h100"},
+    ]
+    batch_cli = [
+        ["plan", "--model", "llama13b", "--nodes", "1", "--gbs", "512"],
+        ["plan", "--model", "llama30b", "--nodes", "2"],
+        ["plan", "--model", "llama13b", "--nodes", "1", "--hw", "h100"],
     ]
 
     try:
@@ -125,6 +150,20 @@ def main():
             want = cli(opts.bin, cli_env, *cli_args)
             cold[name] = expect_output(d, req, want, name)
             print(f"serve-smoke: {name} matches the CLI byte-for-byte")
+
+        # ---- batched plan == three one-shot CLI runs -----------------
+        resp = d.ask({"cmd": "plan", "jobs": batch_jobs})
+        assert resp.get("ok") is True, f"batched plan: {resp}"
+        outs = resp["outputs"]
+        assert len(outs) == len(batch_jobs), resp
+        for i, cli_args in enumerate(batch_cli):
+            want = cli(opts.bin, cli_env, *cli_args)
+            if outs[i] != want:
+                sys.stderr.write(
+                    f"--- CLI (jobs[{i}])\n{want}+++ serve\n{outs[i]}")
+                raise AssertionError(f"batched plan jobs[{i}] != CLI stdout")
+        print(f"serve-smoke: {len(outs)}-job batched plan matches "
+              "three one-shot CLI runs byte-for-byte")
 
         # ---- error envelopes never break the connection --------------
         resp = d.ask({"cmd": "sweep", "preset": "no-such"})
@@ -153,6 +192,36 @@ def main():
         artifact["cache_dir_entries"]["evaluate"] = len(entries)
         print(f"serve-smoke: pysim re-rendered {len(entries)} Rust-spilled "
               "evaluate entries byte-identically")
+
+        # ---- read-only: warm-load only, the spill files never move ---
+        def cache_bytes():
+            files = {}
+            for name in ("evaluate.plxcache", "stage.plxcache",
+                         "makespan.plxcache"):
+                with open(os.path.join(cache_dir, name), "rb") as f:
+                    files[name] = f.read()
+            return files
+        before = cache_bytes()
+        # A query the cache does not hold yet, so a (forbidden) spill
+        # would definitely change the files. Output must still equal the
+        # cacheless CLI's — read-only changes persistence, not results.
+        ro_args = ["plan", "--model", "llama65b", "--nodes", "2"]
+        want = cli(opts.bin, cli_env, *ro_args)
+        got = cli(opts.bin, serve_env, *ro_args, "--readonly")
+        assert got == want, "--readonly changed the plan bytes"
+        assert cache_bytes() == before, \
+            "--readonly CLI run rewrote the cache files"
+        ro_daemon = Daemon(opts.bin, dict(serve_env, PLX_CACHE_RO="1"))
+        assert any("warmed" in b for b in ro_daemon.banner), \
+            f"read-only daemon must still warm-load: {ro_daemon.banner}"
+        resp = ro_daemon.ask(
+            {"cmd": "plan", "model": "llama65b", "nodes": 2})
+        assert resp.get("ok") is True and resp["output"] == want, resp
+        ro_daemon.shutdown()
+        assert cache_bytes() == before, \
+            "PLX_CACHE_RO=1 daemon rewrote the cache files"
+        print("serve-smoke: --readonly CLI and PLX_CACHE_RO=1 daemon "
+              "left the cache byte-identical")
 
         # ---- warm restart: disk entries must serve the lookups -------
         d = Daemon(opts.bin, serve_env)
