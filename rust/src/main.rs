@@ -109,8 +109,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // The *bound* address (a `:0` bind resolves here) — scripted clients
     // read this line to find the port.
     eprintln!("plx serve: listening on {}", handle.addr);
-    handle.join();
-    eprintln!("plx serve: shut down");
+    let drained = handle.join();
+    eprintln!("plx serve: shut down ({drained} connections drained)");
     Ok(())
 }
 
@@ -173,7 +173,24 @@ ENV:
                   something new.
   PLX_CACHE_RO    read-only cache: warm-load only, suppress spills
                   (any value except empty or 0).
+  PLX_CACHE_MAX_BYTES
+                  cap each cache file at this many bytes on spill;
+                  oldest-generation entries are evicted first
+                  (docs/cache.md; unset or 0 = unbounded).
   PLX_SERVE_ADDR  default bind address for `plx serve`.
+  PLX_SERVE_TIMEOUT_MS
+                  per-connection read deadline for `plx serve`
+                  (timeout envelope, then close; 0/unset = none).
+  PLX_SERVE_MAX_LINE
+                  max request-line bytes before a too_large envelope
+                  (default 65536; connection stays usable).
+  PLX_SERVE_MAX_CONNS
+                  max concurrent connections; excess arrivals are shed
+                  with an overloaded envelope (default 64).
+  PLX_FAULT_SEED  arm deterministic fault injection (u64 seed) for
+                  robustness testing; PLX_FAULT_IO_P / PLX_FAULT_TRUNC_P
+                  set the per-write probabilities of a hard IO error /
+                  torn write at the persist and serve write points.
 
 Artifacts for `plx train` come from `make artifacts`
 (python -m compile.aot). See README.md.
@@ -312,6 +329,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             rate(eh, em),
             rate(sh, sm),
             rate(mh, mm),
+        );
+        // Disk-cache health (only interesting with PLX_CACHE_DIR set):
+        // entries warm-loaded/hit, plus damage counters — lines skipped
+        // inside otherwise-healthy files and files quarantined to .bad.
+        let (de, ds, dm) = plx::sim::cache::disk_stats();
+        let sum = |f: fn(&plx::sim::cache::DiskStats) -> u64| f(&de) + f(&ds) + f(&dm);
+        eprintln!(
+            "disk cache: {} loaded, {} hits, {} skipped, {} quarantined",
+            sum(|d| d.loaded),
+            sum(|d| d.hits),
+            sum(|d| d.skipped),
+            sum(|d| d.quarantined),
         );
     }
     Ok(())

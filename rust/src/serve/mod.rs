@@ -37,13 +37,33 @@
 //! The dispatch core ([`handle_line`]) is a pure-ish function from a
 //! request line to response bytes, so the protocol is testable without
 //! sockets; the TCP layer ([`spawn`]) is a thin accept loop over it.
+//!
+//! Operational hardening (see docs/serve.md §Limits):
+//!
+//! * **Read deadline** (`PLX_SERVE_TIMEOUT_MS`): a connection that does
+//!   not complete a request line within the deadline gets a `timeout`
+//!   envelope and is closed.
+//! * **Bounded request lines** (`PLX_SERVE_MAX_LINE`): an oversized line
+//!   is discarded at the newline without buffering it, answered with a
+//!   `too_large` envelope, and the connection stays usable.
+//! * **Bounded concurrency** (`PLX_SERVE_MAX_CONNS`): connections over
+//!   the budget are shed immediately with an `overloaded` envelope —
+//!   the daemon never queues unboundedly.
+//! * **Graceful drain**: `shutdown` stops the accept loop, unblocks
+//!   idle readers, lets in-flight requests finish (bounded wait), and
+//!   spills dirty memos before exit.
+//!
+//! All four are counted in `stats` (`too_large`/`timeouts`/`rejected`/
+//! `drained`), and socket writes run through the seeded
+//! [`crate::util::fault`] injection points (`serve.write`) so stress
+//! runs are reproducible.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::layout::{validate, Job, Kernel, Layout, Schedule};
 use crate::model::arch::preset;
@@ -51,6 +71,7 @@ use crate::planner::{plan_by_rules, plan_exhaustive_stats, render_plan};
 use crate::sim::{cache, parse_hw, persist, render_predict_mem, Hardware};
 use crate::sweep::{by_name, compare_best, report, run_jobs};
 use crate::topo::Cluster;
+use crate::util::fault;
 use crate::util::json::Json;
 
 /// Default bind address when neither `--addr` nor `PLX_SERVE_ADDR` is
@@ -73,6 +94,59 @@ pub fn resolve_addr(arg: Option<&str>) -> String {
     }
 }
 
+/// Per-connection read deadline in milliseconds; `0`, unset, empty, or
+/// unparseable means no deadline.
+pub const TIMEOUT_ENV: &str = "PLX_SERVE_TIMEOUT_MS";
+
+/// Maximum request-line bytes before the daemon answers `too_large`
+/// (and discards the rest of the line without buffering it).
+pub const MAX_LINE_ENV: &str = "PLX_SERVE_MAX_LINE";
+
+/// Maximum concurrent connections; arrivals beyond the budget are shed
+/// with an `overloaded` envelope instead of queuing unboundedly.
+pub const MAX_CONNS_ENV: &str = "PLX_SERVE_MAX_CONNS";
+
+/// Default [`MAX_LINE_ENV`]: generous for hand-written queries, small
+/// enough that a garbage firehose cannot balloon the reader.
+pub const DEFAULT_MAX_LINE: usize = 65536;
+
+/// Default [`MAX_CONNS_ENV`].
+pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// How long a drain waits for in-flight connections before exiting
+/// anyway (a blocked peer must not hold the shutdown hostage).
+const DRAIN_WAIT_MS: u64 = 5000;
+
+/// The daemon's operational limits, resolved once at startup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Limits {
+    /// Read deadline per connection, ms; 0 = none.
+    pub timeout_ms: u64,
+    /// Max request-line bytes.
+    pub max_line: usize,
+    /// Max concurrent connections (at least 1).
+    pub max_conns: usize,
+}
+
+impl Limits {
+    /// Resolve from the environment; unparseable values fall back to
+    /// the default rather than erroring (a daemon that refuses to start
+    /// over a typo'd limit is worse than one running with defaults).
+    pub fn from_env() -> Limits {
+        fn env_u64(name: &str, default: u64) -> u64 {
+            match std::env::var(name) {
+                Ok(v) if !v.is_empty() => v.parse().unwrap_or(default),
+                _ => default,
+            }
+        }
+        Limits {
+            timeout_ms: env_u64(TIMEOUT_ENV, 0),
+            max_line: env_u64(MAX_LINE_ENV, DEFAULT_MAX_LINE as u64) as usize,
+            max_conns: (env_u64(MAX_CONNS_ENV, DEFAULT_MAX_CONNS as u64) as usize).max(1),
+        }
+    }
+}
+
 /// One in-flight computation; followers block on the condvar until the
 /// leader publishes the response bytes.
 struct Slot {
@@ -85,9 +159,19 @@ struct Slot {
 /// tests can drive the protocol without a socket.
 pub struct State {
     started: Instant,
+    limits: Limits,
     requests: AtomicU64,
     deduped: AtomicU64,
     errors: AtomicU64,
+    /// Socket-layer incidents, orthogonal to dispatch `errors`: a
+    /// request that never reached [`handle_line`] is not an error there.
+    too_large: AtomicU64,
+    timeouts: AtomicU64,
+    rejected: AtomicU64,
+    drained: AtomicU64,
+    /// Set by the connection that handled `shutdown`; every loop in the
+    /// server checks it and winds down.
+    draining: AtomicBool,
     latency_us: AtomicU64,
     inflight: Mutex<HashMap<String, Arc<Slot>>>,
     /// Memo entry counts at the last disk spill, so a request that
@@ -103,15 +187,37 @@ impl Default for State {
 
 impl State {
     pub fn new() -> State {
+        State::with_limits(Limits::from_env())
+    }
+
+    /// Explicit limits, bypassing the environment — for tests that pin
+    /// a budget without process-global env mutation.
+    pub fn with_limits(limits: Limits) -> State {
         State {
             started: Instant::now(),
+            limits,
             requests: AtomicU64::new(0),
             deduped: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            too_large: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
             latency_us: AtomicU64::new(0),
             inflight: Mutex::new(HashMap::new()),
             spilled: Mutex::new((0, 0, 0)),
         }
+    }
+
+    pub fn limits(&self) -> Limits {
+        self.limits
+    }
+
+    /// Whether a `shutdown` has been accepted and the daemon is winding
+    /// down (no new connections, in-flight ones finishing).
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
     }
 }
 
@@ -137,7 +243,10 @@ fn ok_output(cmd: &str, output: String) -> String {
 
 /// The error envelope: `{"error":{"code":...,"message":...},"ok":false}`.
 /// Codes: `parse` (not valid JSON / not an object), `bad_request`
-/// (schema or domain errors), `unknown_cmd`.
+/// (schema or domain errors), `unknown_cmd`, plus the socket-layer
+/// codes `too_large` (request line over [`Limits::max_line`]),
+/// `timeout` (read deadline hit; connection closes after the reply),
+/// and `overloaded` (connection shed over [`Limits::max_conns`]).
 fn err(code: &str, message: String) -> String {
     obj(vec![
         (
@@ -150,6 +259,21 @@ fn err(code: &str, message: String) -> String {
         ("ok", Json::Bool(false)),
     ])
     .write()
+}
+
+/// `too_large` envelope bytes (pinned by pysim's STRESS suite).
+pub fn too_large_reply(max_line: usize) -> String {
+    err("too_large", format!("request line exceeds {max_line} bytes"))
+}
+
+/// `timeout` envelope bytes (pinned by pysim's STRESS suite).
+pub fn timeout_reply(timeout_ms: u64) -> String {
+    err("timeout", format!("no complete request within {timeout_ms} ms"))
+}
+
+/// `overloaded` envelope bytes (pinned by pysim's STRESS suite).
+pub fn overloaded_reply(max_conns: usize) -> String {
+    err("overloaded", format!("connection budget exhausted ({max_conns} active connections)"))
 }
 
 /// Typed, strict field access over the request object: unknown keys are
@@ -361,7 +485,14 @@ fn do_stats(state: &State) -> String {
         ])
     };
     let (de, ds, dm) = cache::disk_stats();
-    let disk = |d: cache::DiskStats| obj(vec![("hits", num(d.hits)), ("loaded", num(d.loaded))]);
+    let disk = |d: cache::DiskStats| {
+        obj(vec![
+            ("hits", num(d.hits)),
+            ("loaded", num(d.loaded)),
+            ("quarantined", num(d.quarantined)),
+            ("skipped", num(d.skipped)),
+        ])
+    };
     let requests = state.requests.load(Ordering::Relaxed);
     let total_us = state.latency_us.load(Ordering::Relaxed);
     let stats = obj(vec![
@@ -374,10 +505,19 @@ fn do_stats(state: &State) -> String {
                 ("stage", disk(ds)),
             ]),
         ),
+        ("drained", num(state.drained.load(Ordering::Relaxed))),
         ("errors", num(state.errors.load(Ordering::Relaxed))),
         (
             "latency_us",
             obj(vec![("count", num(requests)), ("total", num(total_us))]),
+        ),
+        (
+            "limits",
+            obj(vec![
+                ("max_conns", num(state.limits.max_conns as u64)),
+                ("max_line", num(state.limits.max_line as u64)),
+                ("timeout_ms", num(state.limits.timeout_ms)),
+            ]),
         ),
         (
             "memos",
@@ -387,7 +527,10 @@ fn do_stats(state: &State) -> String {
                 ("stage", memo(cache::stage_stats(), cache::stage_len())),
             ]),
         ),
+        ("rejected", num(state.rejected.load(Ordering::Relaxed))),
         ("requests", num(requests)),
+        ("timeouts", num(state.timeouts.load(Ordering::Relaxed))),
+        ("too_large", num(state.too_large.load(Ordering::Relaxed))),
         ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
     ]);
     obj(vec![
@@ -428,6 +571,23 @@ pub fn handle_line(state: &State, line: &str) -> Reply {
     }
     spill_if_dirty(state);
     reply
+}
+
+/// Socket-layer gate in front of [`handle_line`]: the max-line check
+/// and blank-line skip. `None` means no reply is sent. Kept separate so
+/// the byte-level behavior of an oversized request is testable without
+/// a socket and mirrorable by pysim's `serve_handle_raw_line` (over a
+/// socket, an oversized line is normally caught by the bounded reader
+/// before it is ever materialized — same counter, same envelope).
+pub fn handle_raw_line(state: &State, line: &str) -> Option<Reply> {
+    if line.len() > state.limits.max_line {
+        state.too_large.fetch_add(1, Ordering::Relaxed);
+        return Some(Reply { text: too_large_reply(state.limits.max_line), shutdown: false });
+    }
+    if line.trim().is_empty() {
+        return None;
+    }
+    Some(handle_line(state, line))
 }
 
 fn dispatch(state: &State, line: &str) -> Reply {
@@ -528,73 +688,226 @@ fn deduped(state: &State, key: &str, compute: impl FnOnce() -> String) -> String
     text
 }
 
-/// A running server: the bound address (useful with a `:0` bind) and the
-/// accept-loop thread.
+/// A running server: the bound address (useful with a `:0` bind), the
+/// accept-loop thread, and the shared state.
 pub struct Handle {
     pub addr: std::net::SocketAddr,
     thread: std::thread::JoinHandle<()>,
+    state: Arc<State>,
 }
 
 impl Handle {
-    /// Block until the daemon exits (a client sent `shutdown`).
-    pub fn join(self) {
+    /// Block until the daemon exits (a client sent `shutdown`); returns
+    /// how many connections the graceful drain closed (the one that
+    /// sent `shutdown` counts itself).
+    pub fn join(self) -> u64 {
         let _ = self.thread.join();
+        self.state.drained.load(Ordering::Relaxed)
     }
+}
+
+/// One request line, bounded: [`read_line_bounded`]'s verdict.
+enum ReadLine {
+    /// A complete line within the budget (newline stripped, plus one
+    /// trailing `\r` if present, matching `BufRead::lines`).
+    Line(String),
+    /// The line exceeded the budget; the excess was discarded up to the
+    /// newline, so the stream is resynced and the connection usable.
+    TooLarge,
+    /// The read deadline expired before a full line arrived.
+    TimedOut,
+    /// Peer closed (or an unrecoverable read error).
+    Eof,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than
+/// `max + 1` bytes of it: past the budget, bytes are drained and
+/// dropped until the newline. `BufRead::read_line` would happily grow a
+/// `String` to an attacker-chosen size; this is the bounded
+/// replacement.
+fn read_line_bounded(reader: &mut impl BufRead, max: usize) -> ReadLine {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut over = false;
+    loop {
+        let (consumed, done) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return ReadLine::TimedOut;
+                }
+                Err(_) => return ReadLine::Eof,
+            };
+            if chunk.is_empty() {
+                // EOF. A partial line without a newline is dropped —
+                // the peer walked away mid-request.
+                return ReadLine::Eof;
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if !over {
+                        buf.extend_from_slice(&chunk[..pos]);
+                    }
+                    (pos + 1, true)
+                }
+                None => {
+                    if !over {
+                        buf.extend_from_slice(chunk);
+                    }
+                    (chunk.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        if buf.len() > max {
+            // Over budget: stop accumulating, keep draining to the
+            // newline so the next request on this connection parses.
+            buf.clear();
+            over = true;
+        }
+        if done {
+            if over {
+                return ReadLine::TooLarge;
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return match String::from_utf8(buf) {
+                Ok(s) => ReadLine::Line(s),
+                // Non-UTF-8 garbage: surface as a line the JSON parser
+                // rejects with a `parse` envelope rather than killing
+                // the connection.
+                Err(e) => ReadLine::Line(String::from_utf8_lossy(e.as_bytes()).into_owned()),
+            };
+        }
+    }
+}
+
+/// Write one response line. All serve socket writes funnel through
+/// here, which is also the `serve.write` fault-injection point: an
+/// injected hard error skips the write entirely; an injected torn
+/// write sends a strict prefix and then fails, so the client sees
+/// garbage-then-EOF — exactly what a crashed daemon looks like.
+fn write_reply(w: &mut TcpStream, text: &str) -> std::io::Result<()> {
+    if fault::io_error("serve.write") {
+        return Err(std::io::Error::new(ErrorKind::Other, "injected fault: serve.write"));
+    }
+    if let Some(cut) = fault::trunc_len("serve.write", text.len()) {
+        let _ = w.write_all(&text.as_bytes()[..cut]);
+        let _ = w.flush();
+        return Err(std::io::Error::new(ErrorKind::Other, "injected torn write: serve.write"));
+    }
+    w.write_all(text.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
 }
 
 /// Bind `addr` and serve in a background thread. Each connection gets a
 /// reader thread; requests on one connection are answered in order,
 /// requests on different connections run concurrently (and dedupe).
+/// Connections beyond [`Limits::max_conns`] are shed with an
+/// `overloaded` envelope — never queued.
 pub fn spawn(addr: &str) -> std::io::Result<Handle> {
     let listener = TcpListener::bind(addr)?;
     let addr = listener.local_addr()?;
     let state = Arc::new(State::new());
-    let stop = Arc::new(AtomicBool::new(false));
-    let thread = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            if stop.load(Ordering::SeqCst) {
-                break;
-            }
-            let Ok(stream) = stream else { continue };
-            let state = state.clone();
-            let stop = stop.clone();
-            std::thread::spawn(move || handle_conn(stream, &state, &stop, addr));
-        }
-        // Final spill so a shutdown never loses the last entries.
-        persist::save_if_configured();
-    });
-    Ok(Handle { addr, thread })
+    let thread = {
+        let state = state.clone();
+        std::thread::spawn(move || accept_loop(listener, addr, state))
+    };
+    Ok(Handle { addr, thread, state })
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    state: &State,
-    stop: &AtomicBool,
-    addr: std::net::SocketAddr,
-) {
+fn accept_loop(listener: TcpListener, addr: SocketAddr, state: Arc<State>) {
+    let conns = Arc::new(AtomicUsize::new(0));
+    // Read-halves of live connections, so a drain can unblock idle
+    // readers (their threads would otherwise sit in a blocking read and
+    // outlive the daemon). Entries remove themselves on exit.
+    let registry: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut next_id: u64 = 0;
+    for stream in listener.incoming() {
+        if state.draining() {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        // Shed over-budget arrivals. Only this thread increments the
+        // count, so the check-then-add cannot overshoot the budget.
+        if conns.load(Ordering::SeqCst) >= state.limits.max_conns {
+            state.rejected.fetch_add(1, Ordering::Relaxed);
+            let mut stream = stream;
+            let _ = write_reply(&mut stream, &overloaded_reply(state.limits.max_conns));
+            continue;
+        }
+        conns.fetch_add(1, Ordering::SeqCst);
+        let id = next_id;
+        next_id += 1;
+        if let Ok(clone) = stream.try_clone() {
+            registry.lock().unwrap().insert(id, clone);
+        }
+        let state = state.clone();
+        let conns = conns.clone();
+        let registry = registry.clone();
+        std::thread::spawn(move || {
+            handle_conn(stream, &state, addr);
+            if state.draining() {
+                state.drained.fetch_add(1, Ordering::Relaxed);
+            }
+            registry.lock().unwrap().remove(&id);
+            conns.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+    // Graceful drain: accepting has stopped (the loop broke). Shut the
+    // read half of every live connection so idle readers wake with EOF
+    // — their write halves stay open, so in-flight replies still land.
+    for s in registry.lock().unwrap().values() {
+        let _ = s.shutdown(std::net::Shutdown::Read);
+    }
+    // Bounded wait for in-flight requests to finish.
+    let deadline = Instant::now() + Duration::from_millis(DRAIN_WAIT_MS);
+    while conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Final spill so a shutdown never loses the last entries.
+    persist::save_if_configured();
+}
+
+fn handle_conn(stream: TcpStream, state: &State, addr: SocketAddr) {
+    if state.limits.timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(state.limits.timeout_ms)));
+    }
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = handle_line(state, &line);
-        if writer
-            .write_all(reply.text.as_bytes())
-            .and_then(|_| writer.write_all(b"\n"))
-            .and_then(|_| writer.flush())
-            .is_err()
-        {
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_bounded(&mut reader, state.limits.max_line) {
+            ReadLine::Line(l) => l,
+            ReadLine::TooLarge => {
+                state.too_large.fetch_add(1, Ordering::Relaxed);
+                if write_reply(&mut writer, &too_large_reply(state.limits.max_line)).is_err() {
+                    break;
+                }
+                continue;
+            }
+            ReadLine::TimedOut => {
+                state.timeouts.fetch_add(1, Ordering::Relaxed);
+                let _ = write_reply(&mut writer, &timeout_reply(state.limits.timeout_ms));
+                break;
+            }
+            ReadLine::Eof => break,
+        };
+        let Some(reply) = handle_raw_line(state, &line) else { continue };
+        let sent = write_reply(&mut writer, &reply.text);
+        // The shutdown signal must win over a (possibly injected) write
+        // failure: a daemon that dropped a shutdown because the ack
+        // write failed would never drain.
+        if reply.shutdown {
+            state.draining.store(true, Ordering::SeqCst);
+            // Wake the accept loop so it observes the flag and drains.
+            let _ = TcpStream::connect(addr);
             break;
         }
-        if reply.shutdown {
-            stop.store(true, Ordering::SeqCst);
-            // Wake the accept loop so it observes the flag and exits.
-            let _ = TcpStream::connect(addr);
+        if sent.is_err() || state.draining() {
             break;
         }
     }
@@ -733,7 +1046,89 @@ mod tests {
         assert_eq!(s.get("deduped").as_u64(), Some(0));
         assert!(s.path("memos.evaluate.entries").as_u64().is_some());
         assert!(s.path("disk.evaluate.loaded").as_u64().is_some());
+        assert!(s.path("disk.evaluate.quarantined").as_u64().is_some());
+        assert!(s.path("disk.stage.skipped").as_u64().is_some());
         assert!(s.path("latency_us.total").as_u64().is_some());
+        // Hardening counters and the resolved limits are always present.
+        assert_eq!(s.get("too_large").as_u64(), Some(0));
+        assert_eq!(s.get("timeouts").as_u64(), Some(0));
+        assert_eq!(s.get("rejected").as_u64(), Some(0));
+        assert_eq!(s.get("drained").as_u64(), Some(0));
+        let lim = state.limits();
+        assert_eq!(s.path("limits.max_line").as_u64(), Some(lim.max_line as u64));
+        assert_eq!(s.path("limits.max_conns").as_u64(), Some(lim.max_conns as u64));
+        assert_eq!(s.path("limits.timeout_ms").as_u64(), Some(lim.timeout_ms));
+    }
+
+    #[test]
+    fn oversized_raw_line_gets_too_large_envelope_and_counts() {
+        let state = State::with_limits(Limits { timeout_ms: 0, max_line: 64, max_conns: 4 });
+        let big = format!(r#"{{"cmd":"plan","model":"{}"}}"#, "x".repeat(200));
+        let r = handle_raw_line(&state, &big).expect("oversized line replies");
+        assert!(!r.shutdown);
+        assert_eq!(r.text, too_large_reply(64));
+        assert!(r.text.contains(r#""code":"too_large""#), "{}", r.text);
+        assert!(r.text.contains("request line exceeds 64 bytes"), "{}", r.text);
+        // Socket-layer incident: counted in too_large, not in
+        // requests/errors (it never reached dispatch).
+        let s = Json::parse(&reply(&state, r#"{"cmd":"stats"}"#)).unwrap();
+        assert_eq!(s.path("stats.too_large").as_u64(), Some(1));
+        assert_eq!(s.path("stats.errors").as_u64(), Some(0));
+        assert_eq!(s.path("stats.requests").as_u64(), Some(1), "only the stats request");
+        // A line of exactly max_line bytes still dispatches.
+        let skeleton = r#"{"cmd":"warp","pad":""}"#.len();
+        let exact = format!(r#"{{"cmd":"warp","pad":"{}"}}"#, "y".repeat(64 - skeleton));
+        assert_eq!(exact.len(), 64);
+        let r = handle_raw_line(&state, &exact).unwrap();
+        assert!(r.text.contains("unknown_cmd"), "{}", r.text);
+        // Blank lines get no reply at all.
+        assert!(handle_raw_line(&state, "   ").is_none());
+    }
+
+    #[test]
+    fn timeout_and_overloaded_envelopes_are_standard_errors() {
+        for text in [timeout_reply(250), overloaded_reply(2)] {
+            let j = Json::parse(&text).unwrap();
+            assert_eq!(j.get("ok").as_bool(), Some(false));
+            assert!(j.path("error.message").as_str().is_some());
+            assert!(text.starts_with("{\"error\""), "envelopes lead with error: {text}");
+        }
+        assert!(timeout_reply(250).contains("no complete request within 250 ms"));
+        assert!(overloaded_reply(2).contains("connection budget exhausted (2 active connections)"));
+    }
+
+    #[test]
+    fn bounded_reader_resyncs_after_oversized_lines() {
+        use std::io::Cursor;
+        let mut r = BufReader::new(Cursor::new(b"short\r\n0123456789ABCDEF-overflow\nnext\n".to_vec()));
+        match read_line_bounded(&mut r, 8) {
+            ReadLine::Line(l) => assert_eq!(l, "short"),
+            _ => panic!("first line fits"),
+        }
+        assert!(matches!(read_line_bounded(&mut r, 8), ReadLine::TooLarge));
+        // The oversized line was drained to its newline: the stream is
+        // resynced and the next request parses normally.
+        match read_line_bounded(&mut r, 8) {
+            ReadLine::Line(l) => assert_eq!(l, "next"),
+            _ => panic!("reader must resync after an oversized line"),
+        }
+        assert!(matches!(read_line_bounded(&mut r, 8), ReadLine::Eof));
+        // Exactly max bytes is not too large.
+        let mut r = BufReader::new(Cursor::new(b"12345678\n".to_vec()));
+        assert!(matches!(read_line_bounded(&mut r, 8), ReadLine::Line(l) if l == "12345678"));
+        // A partial line with no newline before EOF is EOF, not a request.
+        let mut r = BufReader::new(Cursor::new(b"dangling".to_vec()));
+        assert!(matches!(read_line_bounded(&mut r, 8), ReadLine::Eof));
+    }
+
+    #[test]
+    fn limits_from_env_defaults_are_sane() {
+        // The test environment does not set the PLX_SERVE_* knobs, so
+        // from_env() must resolve the documented defaults.
+        let lim = Limits::from_env();
+        assert_eq!(lim.timeout_ms, 0);
+        assert_eq!(lim.max_line, DEFAULT_MAX_LINE);
+        assert_eq!(lim.max_conns, DEFAULT_MAX_CONNS);
     }
 
     #[test]

@@ -109,6 +109,8 @@ struct Cache {
     misses: AtomicU64,
     disk_loaded: AtomicU64,
     disk_hits: AtomicU64,
+    disk_skipped: AtomicU64,
+    disk_quarantined: AtomicU64,
 }
 
 fn cache() -> &'static Cache {
@@ -119,6 +121,8 @@ fn cache() -> &'static Cache {
         misses: AtomicU64::new(0),
         disk_loaded: AtomicU64::new(0),
         disk_hits: AtomicU64::new(0),
+        disk_skipped: AtomicU64::new(0),
+        disk_quarantined: AtomicU64::new(0),
     })
 }
 
@@ -166,6 +170,8 @@ pub fn clear() {
     c.misses.store(0, Ordering::Relaxed);
     c.disk_loaded.store(0, Ordering::Relaxed);
     c.disk_hits.store(0, Ordering::Relaxed);
+    c.disk_skipped.store(0, Ordering::Relaxed);
+    c.disk_quarantined.store(0, Ordering::Relaxed);
     let m = ms_cache();
     for s in &m.shards {
         s.lock().unwrap().clear();
@@ -174,6 +180,8 @@ pub fn clear() {
     m.misses.store(0, Ordering::Relaxed);
     m.disk_loaded.store(0, Ordering::Relaxed);
     m.disk_hits.store(0, Ordering::Relaxed);
+    m.disk_skipped.store(0, Ordering::Relaxed);
+    m.disk_quarantined.store(0, Ordering::Relaxed);
     let st = stage_cache();
     for s in &st.shards {
         s.lock().unwrap().clear();
@@ -182,6 +190,8 @@ pub fn clear() {
     st.misses.store(0, Ordering::Relaxed);
     st.disk_loaded.store(0, Ordering::Relaxed);
     st.disk_hits.store(0, Ordering::Relaxed);
+    st.disk_skipped.store(0, Ordering::Relaxed);
+    st.disk_quarantined.store(0, Ordering::Relaxed);
 }
 
 // --------------------------------------------------------- layer-stage memo
@@ -239,6 +249,8 @@ struct StageCache {
     misses: AtomicU64,
     disk_loaded: AtomicU64,
     disk_hits: AtomicU64,
+    disk_skipped: AtomicU64,
+    disk_quarantined: AtomicU64,
 }
 
 fn stage_cache() -> &'static StageCache {
@@ -249,6 +261,8 @@ fn stage_cache() -> &'static StageCache {
         misses: AtomicU64::new(0),
         disk_loaded: AtomicU64::new(0),
         disk_hits: AtomicU64::new(0),
+        disk_skipped: AtomicU64::new(0),
+        disk_quarantined: AtomicU64::new(0),
     })
 }
 
@@ -326,6 +340,8 @@ struct MsCache {
     misses: AtomicU64,
     disk_loaded: AtomicU64,
     disk_hits: AtomicU64,
+    disk_skipped: AtomicU64,
+    disk_quarantined: AtomicU64,
 }
 
 fn ms_cache() -> &'static MsCache {
@@ -336,6 +352,8 @@ fn ms_cache() -> &'static MsCache {
         misses: AtomicU64::new(0),
         disk_loaded: AtomicU64::new(0),
         disk_hits: AtomicU64::new(0),
+        disk_skipped: AtomicU64::new(0),
+        disk_quarantined: AtomicU64::new(0),
     })
 }
 
@@ -383,28 +401,56 @@ pub fn makespan_len() -> usize {
 // ------------------------------------------------------ disk spill plumbing
 
 /// Per-memo persistence counters: entries loaded from a `PLX_CACHE_DIR`
-/// spill file this process, and hits served by such entries since.
+/// spill file this process, hits served by such entries since, plus the
+/// damage accounting `persist` reports when a file is less than intact —
+/// corrupt lines skipped and whole files quarantined (renamed `.bad`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DiskStats {
     pub loaded: u64,
     pub hits: u64,
+    pub skipped: u64,
+    pub quarantined: u64,
 }
 
 /// `(evaluate, stage, makespan)` disk counters — the observable behind
 /// the warm-restart acceptance gate (`plx serve` stats report them).
 pub fn disk_stats() -> (DiskStats, DiskStats, DiskStats) {
-    let read = |l: &AtomicU64, h: &AtomicU64| DiskStats {
+    let read = |l: &AtomicU64, h: &AtomicU64, s: &AtomicU64, q: &AtomicU64| DiskStats {
         loaded: l.load(Ordering::Relaxed),
         hits: h.load(Ordering::Relaxed),
+        skipped: s.load(Ordering::Relaxed),
+        quarantined: q.load(Ordering::Relaxed),
     };
     let c = cache();
     let st = stage_cache();
     let m = ms_cache();
     (
-        read(&c.disk_loaded, &c.disk_hits),
-        read(&st.disk_loaded, &st.disk_hits),
-        read(&m.disk_loaded, &m.disk_hits),
+        read(&c.disk_loaded, &c.disk_hits, &c.disk_skipped, &c.disk_quarantined),
+        read(&st.disk_loaded, &st.disk_hits, &st.disk_skipped, &st.disk_quarantined),
+        read(&m.disk_loaded, &m.disk_hits, &m.disk_skipped, &m.disk_quarantined),
     )
+}
+
+/// Record load-time damage on the evaluate memo's spill file: corrupt
+/// lines skipped and (0 or 1 per load) files quarantined.
+pub(crate) fn note_disk_damage_evaluate(skipped: u64, quarantined: u64) {
+    let c = cache();
+    c.disk_skipped.fetch_add(skipped, Ordering::Relaxed);
+    c.disk_quarantined.fetch_add(quarantined, Ordering::Relaxed);
+}
+
+/// Record load-time damage on the stage memo's spill file.
+pub(crate) fn note_disk_damage_stage(skipped: u64, quarantined: u64) {
+    let c = stage_cache();
+    c.disk_skipped.fetch_add(skipped, Ordering::Relaxed);
+    c.disk_quarantined.fetch_add(quarantined, Ordering::Relaxed);
+}
+
+/// Record load-time damage on the makespan memo's spill file.
+pub(crate) fn note_disk_damage_makespan(skipped: u64, quarantined: u64) {
+    let c = ms_cache();
+    c.disk_skipped.fetch_add(skipped, Ordering::Relaxed);
+    c.disk_quarantined.fetch_add(quarantined, Ordering::Relaxed);
 }
 
 /// Insert a spilled evaluate entry. Vacant-only: an entry computed (or

@@ -7,11 +7,18 @@
 //! reference and the non-aliasing argument):
 //!
 //! * `evaluate.plxcache` / `stage.plxcache` / `makespan.plxcache`;
-//! * first line `plxcache v1 <memo>` — any version or memo-name mismatch
-//!   means the whole file is ignored (treated cold, never migrated);
-//! * one entry per line, space-separated tokens: integers in decimal,
-//!   every `f64` as the 16-hex-digit `to_bits` pattern — **bit-exact**,
-//!   so a loaded entry is indistinguishable from a computed one;
+//! * first line `plxcache v2 <memo> <gen>` — `gen` is the file's
+//!   generation counter, bumped by one on every spill. Version-1 files
+//!   (`plxcache v1 <memo>`) still **warm-load byte-compatibly** (every
+//!   entry at generation 1); any other recognized header (unknown
+//!   version, wrong memo name) means the file is treated cold, never
+//!   migrated;
+//! * one entry per line: an 8-hex-digit generation prefix (the spill at
+//!   which the entry first reached disk — fixed width, so lexicographic
+//!   line order is generation order), then space-separated tokens:
+//!   integers in decimal, every `f64` as the 16-hex-digit `to_bits`
+//!   pattern — **bit-exact**, so a loaded entry is indistinguishable
+//!   from a computed one;
 //! * keys serialize the exact fields of the in-memory memo keys —
 //!   including the resolved [`CalKey`](crate::sim::kernels::CalKey)
 //!   calibration bits and the [`Hardware::bits`] patterns — so spilled
@@ -20,13 +27,27 @@
 //!   either this module or its `tools/pysim.py` mirror;
 //! * writes go to a temp file in the same directory, then `rename` —
 //!   readers never observe a torn file;
-//! * a corrupt line is skipped (the rest of the file still loads).
+//! * `PLX_CACHE_MAX_BYTES` caps each file at spill time by evicting
+//!   oldest-generation entries first (within a generation,
+//!   lexicographically first) until the rendered file fits;
+//! * a corrupt entry line is skipped (the rest of the file still
+//!   loads), **counted** in [`cache::disk_stats`], and the damaged file
+//!   is quarantined — renamed to `<name>.bad` — so the next spill
+//!   starts clean and the operator can inspect what was lost. A file
+//!   whose first line is not a plxcache header at all is quarantined
+//!   whole. Read-only mode skips the rename (never mutates the dir)
+//!   but still counts the damage.
 //!
 //! Loads are **vacant-only** inserts: a live entry always wins over the
 //! file, so even a stale or hand-edited cache can only miss, never
 //! corrupt. The memos are pure functions of their keys, which is what
 //! makes persistence sound at all: same key, same value, in any process.
+//!
+//! File IO runs through the [`crate::util::fault`] injection points
+//! (`persist.write`), so seeded stress runs exercise hard IO errors and
+//! torn writes deterministically.
 
+use std::collections::HashMap;
 use std::io;
 use std::path::{Path, PathBuf};
 
@@ -37,9 +58,11 @@ use crate::sim::kernels::{CalKey, CAL_VARS};
 use crate::sim::schedule::{Makespan, Schedule};
 use crate::sim::step_time::LayerCosts;
 use crate::sim::{MemoryBreakdown, Outcome, StepBreakdown};
+use crate::util::fault;
 
-/// On-disk format version; bumped on any line-format change.
-pub const FORMAT_VERSION: u32 = 1;
+/// On-disk format version; bumped on any line-format change. Version 1
+/// files (no generation counter) still warm-load; see the module docs.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// The environment variable that (when set and non-empty) enables
 /// persistence for every analytic command and the serve daemon.
@@ -51,6 +74,10 @@ pub const CACHE_DIR_ENV: &str = "PLX_CACHE_DIR";
 /// (CI fixture, read-only volume) that concurrent processes must not
 /// rewrite. Any value other than empty or `0` enables it.
 pub const READONLY_ENV: &str = "PLX_CACHE_RO";
+
+/// Per-file byte cap enforced at spill time by oldest-generation
+/// eviction. Unset, empty, unparseable, or `0` means unlimited.
+pub const MAX_BYTES_ENV: &str = "PLX_CACHE_MAX_BYTES";
 
 /// Process-wide read-only override, set by the `--readonly` CLI flag
 /// (the env var works without it, so a daemon launched under
@@ -71,12 +98,22 @@ pub fn readonly() -> bool {
     matches!(std::env::var(READONLY_ENV), Ok(v) if !v.is_empty() && v != "0")
 }
 
-/// Entries touched per memo by a load or save.
+/// The configured per-file spill cap, if any ([`MAX_BYTES_ENV`]).
+pub fn max_bytes() -> Option<usize> {
+    match std::env::var(MAX_BYTES_ENV) {
+        Ok(v) if !v.is_empty() => v.parse().ok().filter(|&n| n > 0),
+        _ => None,
+    }
+}
+
+/// Entries touched per memo by a load or save, plus entries evicted by
+/// the [`MAX_BYTES_ENV`] cap (saves only; always 0 on loads).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PersistStats {
     pub evaluate: usize,
     pub stage: usize,
     pub makespan: usize,
+    pub evicted: usize,
 }
 
 impl PersistStats {
@@ -95,37 +132,87 @@ pub fn cache_dir() -> Option<PathBuf> {
 
 /// Load every memo file under `dir` into the process caches
 /// (vacant-only). Missing or version-mismatched files contribute zero
-/// entries; corrupt lines are skipped.
+/// entries; corrupt lines are skipped, counted, and quarantine the file
+/// (see the module docs).
 pub fn load_all(dir: &Path) -> PersistStats {
-    let read = |name: &str| std::fs::read_to_string(dir.join(name)).unwrap_or_default();
     let mut stats = PersistStats::default();
-    for (key, out) in parse_evaluate(&read("evaluate.plxcache")) {
-        cache::insert_disk_evaluate(key, out);
-        stats.evaluate += 1;
-    }
-    for (key, costs) in parse_stage(&read("stage.plxcache")) {
-        cache::insert_disk_stage(key, costs);
-        stats.stage += 1;
-    }
-    for (key, ms) in parse_makespan(&read("makespan.plxcache")) {
-        cache::insert_disk_makespan(key, ms);
-        stats.makespan += 1;
-    }
+    stats.evaluate = load_memo(
+        dir,
+        "evaluate.plxcache",
+        parse_evaluate,
+        |(key, out)| cache::insert_disk_evaluate(key, out),
+        cache::note_disk_damage_evaluate,
+    );
+    stats.stage = load_memo(
+        dir,
+        "stage.plxcache",
+        parse_stage,
+        |(key, costs)| cache::insert_disk_stage(key, costs),
+        cache::note_disk_damage_stage,
+    );
+    stats.makespan = load_memo(
+        dir,
+        "makespan.plxcache",
+        parse_makespan,
+        |(key, ms)| cache::insert_disk_makespan(key, ms),
+        cache::note_disk_damage_makespan,
+    );
     stats
 }
 
+/// One memo file: read, parse, insert, and quarantine on damage.
+fn load_memo<E>(
+    dir: &Path,
+    name: &str,
+    parse: impl Fn(&str) -> Loaded<E>,
+    mut insert: impl FnMut(E),
+    damage: impl Fn(u64, u64),
+) -> usize {
+    let text = std::fs::read_to_string(dir.join(name)).unwrap_or_default();
+    if text.is_empty() {
+        return 0; // missing or empty file: silently cold, not damage
+    }
+    let loaded = parse(&text);
+    let n = loaded.entries.len();
+    for (_gen, entry) in loaded.entries {
+        insert(entry);
+    }
+    if loaded.damaged() {
+        damage(loaded.skipped as u64, 1);
+        if !readonly() {
+            // Quarantine: move the damaged file aside so the next spill
+            // starts clean and the operator can inspect what was lost.
+            // Read-only mode must not mutate the directory, so it only
+            // counts.
+            let _ = std::fs::rename(dir.join(name), dir.join(format!("{name}.bad")));
+        }
+    }
+    n
+}
+
 /// Spill every memo entry (computed and loaded alike) to `dir`,
-/// atomically per file. Creates the directory if needed.
+/// atomically per file. Creates the directory if needed. Entry
+/// generations from the existing files are preserved; new entries are
+/// stamped with the new file generation, and the `PLX_CACHE_MAX_BYTES`
+/// cap (if set) evicts oldest-generation entries until each file fits.
 pub fn save_all(dir: &Path) -> io::Result<PersistStats> {
     std::fs::create_dir_all(dir)?;
-    let eval = cache::snapshot_evaluate();
-    let stage = cache::snapshot_stage();
-    let ms = cache::snapshot_makespan();
-    let stats = PersistStats { evaluate: eval.len(), stage: stage.len(), makespan: ms.len() };
-    write_atomic(dir, "evaluate.plxcache", &render_evaluate(&eval))?;
-    write_atomic(dir, "stage.plxcache", &render_stage(&stage))?;
-    write_atomic(dir, "makespan.plxcache", &render_makespan(&ms))?;
-    Ok(stats)
+    let cap = max_bytes();
+    let eval: Vec<String> =
+        cache::snapshot_evaluate().iter().map(|(k, out)| evaluate_line(k, out)).collect();
+    let stage: Vec<String> =
+        cache::snapshot_stage().iter().map(|(k, c)| stage_line(k, c)).collect();
+    let ms: Vec<String> =
+        cache::snapshot_makespan().iter().map(|(k, m)| makespan_line(k, m.as_deref())).collect();
+    let e = save_memo(dir, "evaluate.plxcache", "evaluate", eval, cap)?;
+    let s = save_memo(dir, "stage.plxcache", "stage", stage, cap)?;
+    let m = save_memo(dir, "makespan.plxcache", "makespan", ms, cap)?;
+    Ok(PersistStats {
+        evaluate: e.written,
+        stage: s.written,
+        makespan: m.written,
+        evicted: e.evicted + s.evicted + m.evicted,
+    })
 }
 
 /// [`load_all`] when `PLX_CACHE_DIR` is configured; `None` otherwise.
@@ -136,14 +223,23 @@ pub fn warm_start_if_configured() -> Option<PersistStats> {
 /// [`save_all`] when `PLX_CACHE_DIR` is configured and the process is
 /// not in read-only mode ([`readonly`]). I/O failures are reported on
 /// stderr and swallowed — persistence is an accelerator, never a
-/// correctness dependency.
+/// correctness dependency. Cap evictions are reported too: a silently
+/// shrinking cache would read as "covered everything" when it wasn't.
 pub fn save_if_configured() -> Option<PersistStats> {
     if readonly() {
         return None;
     }
     let dir = cache_dir()?;
     match save_all(&dir) {
-        Ok(stats) => Some(stats),
+        Ok(stats) => {
+            if stats.evicted > 0 {
+                eprintln!(
+                    "plx: cache cap: evicted {} oldest-generation entries ({MAX_BYTES_ENV})",
+                    stats.evicted
+                );
+            }
+            Some(stats)
+        }
         Err(e) => {
             eprintln!("plx: warning: failed to write {}: {e}", dir.display());
             None
@@ -151,9 +247,102 @@ pub fn save_if_configured() -> Option<PersistStats> {
     }
 }
 
+struct SaveOutcome {
+    written: usize,
+    evicted: usize,
+}
+
+/// Render and atomically replace one memo file. The old file (if any,
+/// either version) contributes two things: its generation counter
+/// (the new file's is one higher) and the generation each surviving
+/// entry first appeared at — so generations track *age on disk*, not
+/// last-write time, and oldest-first eviction is FIFO.
+fn save_memo(
+    dir: &Path,
+    name: &str,
+    memo: &str,
+    entry_tokens: Vec<String>,
+    cap: Option<usize>,
+) -> io::Result<SaveOutcome> {
+    let old = std::fs::read_to_string(dir.join(name)).unwrap_or_default();
+    let (old_gen, gens) = line_generations(&old, memo);
+    let file_gen = old_gen.saturating_add(1);
+    let mut lines: Vec<String> = entry_tokens
+        .into_iter()
+        .map(|t| {
+            let g = gens.get(&t).copied().unwrap_or(file_gen);
+            format!("{g:08x} {t}")
+        })
+        .collect();
+    lines.sort();
+    let header = format!("plxcache v{FORMAT_VERSION} {memo} {file_gen}\n");
+    let mut evicted = 0;
+    if let Some(cap) = cap {
+        // The fixed-width generation prefix makes sorted order =
+        // generation order, so "drop from the front until it fits" is
+        // exactly oldest-generation eviction. The header always
+        // survives (the cap is an entry budget, not a hard file limit).
+        let mut total = header.len() + lines.iter().map(|l| l.len() + 1).sum::<usize>();
+        while total > cap && evicted < lines.len() {
+            total -= lines[evicted].len() + 1;
+            evicted += 1;
+        }
+        lines.drain(..evicted);
+    }
+    let mut out = header;
+    for l in &lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    write_atomic(dir, name, &out)?;
+    Ok(SaveOutcome { written: lines.len(), evicted })
+}
+
+/// The old file's generation counter and each surviving entry's
+/// generation, keyed by the entry tokens (without the prefix). Corrupt
+/// or alien files contribute nothing — every entry restarts at the new
+/// generation.
+fn line_generations(text: &str, memo: &str) -> (u32, HashMap<String, u32>) {
+    let mut gens = HashMap::new();
+    let mut lines = text.lines();
+    let header = match lines.next() {
+        Some(h) => parse_header(h, memo),
+        None => return (0, gens),
+    };
+    match header {
+        Header::V1 => {
+            for l in lines.filter(|l| !l.trim().is_empty()) {
+                gens.insert(l.to_string(), 1);
+            }
+            (1, gens)
+        }
+        Header::V2(g) => {
+            for l in lines.filter(|l| !l.trim().is_empty()) {
+                if let Some((lg, rest)) = split_gen_line(l) {
+                    gens.insert(rest.to_string(), lg);
+                }
+            }
+            (g, gens)
+        }
+        Header::Cold | Header::Corrupt => (0, gens),
+    }
+}
+
 fn write_atomic(dir: &Path, name: &str, content: &str) -> io::Result<()> {
+    // Fault injection (seeded, deterministic): a hard error surfaces to
+    // the caller like any real IO failure; a torn write cuts the payload
+    // at a random byte — the quarantine path then proves the reader
+    // survives it.
+    if fault::io_error("persist.write") {
+        return Err(io::Error::new(io::ErrorKind::Other, format!("injected fault: {name}")));
+    }
+    let bytes = content.as_bytes();
+    let data = match fault::trunc_len("persist.write", bytes.len()) {
+        Some(cut) => &bytes[..cut],
+        None => bytes,
+    };
     let tmp = dir.join(format!(".{name}.tmp.{}", std::process::id()));
-    std::fs::write(&tmp, content)?;
+    std::fs::write(&tmp, data)?;
     std::fs::rename(&tmp, dir.join(name))
 }
 
@@ -177,15 +366,13 @@ fn kernel_code(k: Kernel) -> &'static str {
     }
 }
 
-fn header(memo: &str) -> String {
-    format!("plxcache v{FORMAT_VERSION} {memo}\n")
-}
-
-/// Sorted-line file body: same entry set in, same bytes out, regardless
-/// of shard iteration order (and of which language wrote the file).
-fn body(memo: &str, mut lines: Vec<String>) -> String {
+/// Sorted-line v2 file: same (generation, entry) set in, same bytes
+/// out, regardless of shard iteration order (and of which language
+/// wrote the file).
+fn render_file(memo: &str, file_gen: u32, tagged: Vec<String>) -> String {
+    let mut lines = tagged;
     lines.sort();
-    let mut out = header(memo);
+    let mut out = format!("plxcache v{FORMAT_VERSION} {memo} {file_gen}\n");
     for l in lines {
         out.push_str(&l);
         out.push('\n');
@@ -220,110 +407,232 @@ fn key_tokens(k: &cache::Key) -> String {
     t.join(" ")
 }
 
-pub(crate) fn render_evaluate(entries: &[(cache::Key, Outcome)]) -> String {
-    let lines = entries
-        .iter()
-        .map(|(k, out)| {
-            let payload = match out {
-                Outcome::Ok { step_time_s, mfu, mem, step } => {
-                    let mut t = vec!["ok".to_string(), hex(*step_time_s), hex(*mfu)];
-                    t.extend(
-                        [
-                            mem.weights,
-                            mem.grads,
-                            mem.optimizer,
-                            mem.activations,
-                            mem.logits,
-                            mem.workspace,
-                            step.compute,
-                            step.tp_comm,
-                            step.pp_comm,
-                            step.bubble,
-                            step.dp_comm,
-                            step.optimizer,
-                        ]
-                        .iter()
-                        .map(|v| hex(*v)),
-                    );
-                    t.join(" ")
-                }
-                Outcome::Oom { required, budget } => {
-                    format!("oom {} {}", hex(*required), hex(*budget))
-                }
-                Outcome::KernelUnavailable => "unavail".to_string(),
-            };
-            format!("{} {payload}", key_tokens(k))
-        })
-        .collect();
-    body("evaluate", lines)
-}
-
-pub(crate) fn render_stage(entries: &[(cache::StKey, LayerCosts)]) -> String {
-    let lines = entries
-        .iter()
-        .map(|(k, c)| {
-            let mut t = vec![
-                k.layers.to_string(),
-                k.hidden.to_string(),
-                k.heads.to_string(),
-                k.ffn.to_string(),
-                k.vocab.to_string(),
-                k.seq.to_string(),
-            ];
-            t.extend(k.hw_bits.iter().map(|b| hex_bits(*b)));
-            t.extend(k.cal.0.iter().map(|b| hex_bits(*b)));
-            let (tp, mb, ckpt, kernel, sp) = k.stage;
-            t.extend([
-                tp.to_string(),
-                mb.to_string(),
-                (ckpt as u8).to_string(),
-                kernel_code(kernel).to_string(),
-                (sp as u8).to_string(),
-            ]);
+/// One evaluate entry's tokens (no generation prefix).
+fn evaluate_line(k: &cache::Key, out: &Outcome) -> String {
+    let payload = match out {
+        Outcome::Ok { step_time_s, mfu, mem, step } => {
+            let mut t = vec!["ok".to_string(), hex(*step_time_s), hex(*mfu)];
             t.extend(
                 [
-                    c.layer_fwd,
-                    c.layer_bwd,
-                    c.head_fwd,
-                    c.head_bwd,
-                    c.tp_per_layer,
-                    c.sp_factor,
-                    c.p2p_intra,
-                    c.p2p_inter,
-                    c.act_bytes,
-                    c.act_bytes_full,
+                    mem.weights,
+                    mem.grads,
+                    mem.optimizer,
+                    mem.activations,
+                    mem.logits,
+                    mem.workspace,
+                    step.compute,
+                    step.tp_comm,
+                    step.pp_comm,
+                    step.bubble,
+                    step.dp_comm,
+                    step.optimizer,
                 ]
                 .iter()
                 .map(|v| hex(*v)),
             );
             t.join(" ")
-        })
-        .collect();
-    body("stage", lines)
+        }
+        Outcome::Oom { required, budget } => {
+            format!("oom {} {}", hex(*required), hex(*budget))
+        }
+        Outcome::KernelUnavailable => "unavail".to_string(),
+    };
+    format!("{} {payload}", key_tokens(k))
+}
+
+/// One layer-stage entry's tokens (no generation prefix).
+fn stage_line(k: &cache::StKey, c: &LayerCosts) -> String {
+    let mut t = vec![
+        k.layers.to_string(),
+        k.hidden.to_string(),
+        k.heads.to_string(),
+        k.ffn.to_string(),
+        k.vocab.to_string(),
+        k.seq.to_string(),
+    ];
+    t.extend(k.hw_bits.iter().map(|b| hex_bits(*b)));
+    t.extend(k.cal.0.iter().map(|b| hex_bits(*b)));
+    let (tp, mb, ckpt, kernel, sp) = k.stage;
+    t.extend([
+        tp.to_string(),
+        mb.to_string(),
+        (ckpt as u8).to_string(),
+        kernel_code(kernel).to_string(),
+        (sp as u8).to_string(),
+    ]);
+    t.extend(
+        [
+            c.layer_fwd,
+            c.layer_bwd,
+            c.head_fwd,
+            c.head_bwd,
+            c.tp_per_layer,
+            c.sp_factor,
+            c.p2p_intra,
+            c.p2p_inter,
+            c.act_bytes,
+            c.act_bytes_full,
+        ]
+        .iter()
+        .map(|v| hex(*v)),
+    );
+    t.join(" ")
+}
+
+/// One makespan entry's tokens (no generation prefix).
+fn makespan_line(k: &cache::MsKey, ms: Option<&Makespan>) -> String {
+    let mut t = vec![k.sched.label(), k.pp.to_string(), k.m.to_string()];
+    t.extend(k.cost_bits.iter().map(|b| hex_bits(*b)));
+    match ms {
+        Some(ms) => {
+            t.push(hex(ms.total));
+            t.extend(ms.busy.iter().map(|v| hex(*v)));
+        }
+        None => t.push("deadlock".to_string()),
+    }
+    t.join(" ")
+}
+
+pub(crate) fn render_evaluate(
+    entries: &[(u32, (cache::Key, Outcome))],
+    file_gen: u32,
+) -> String {
+    render_file(
+        "evaluate",
+        file_gen,
+        entries.iter().map(|(g, (k, out))| format!("{g:08x} {}", evaluate_line(k, out))).collect(),
+    )
+}
+
+pub(crate) fn render_stage(entries: &[(u32, (cache::StKey, LayerCosts))], file_gen: u32) -> String {
+    render_file(
+        "stage",
+        file_gen,
+        entries.iter().map(|(g, (k, c))| format!("{g:08x} {}", stage_line(k, c))).collect(),
+    )
 }
 
 pub(crate) fn render_makespan(
-    entries: &[(cache::MsKey, Option<std::sync::Arc<Makespan>>)],
+    entries: &[(u32, (cache::MsKey, Option<Makespan>))],
+    file_gen: u32,
 ) -> String {
-    let lines = entries
-        .iter()
-        .map(|(k, ms)| {
-            let mut t = vec![k.sched.label(), k.pp.to_string(), k.m.to_string()];
-            t.extend(k.cost_bits.iter().map(|b| hex_bits(*b)));
-            match ms {
-                Some(ms) => {
-                    t.push(hex(ms.total));
-                    t.extend(ms.busy.iter().map(|v| hex(*v)));
-                }
-                None => t.push("deadlock".to_string()),
-            }
-            t.join(" ")
-        })
-        .collect();
-    body("makespan", lines)
+    render_file(
+        "makespan",
+        file_gen,
+        entries
+            .iter()
+            .map(|(g, (k, ms))| format!("{g:08x} {}", makespan_line(k, ms.as_ref())))
+            .collect(),
+    )
 }
 
 // --------------------------------------------------------------- parsing
+
+/// A parsed memo file: entries tagged with the generation they first
+/// reached disk at, plus the damage accounting the quarantine decision
+/// needs.
+pub(crate) struct Loaded<E> {
+    pub entries: Vec<(u32, E)>,
+    /// The file's generation counter (1 for v1 files, 0 when cold).
+    pub file_gen: u32,
+    /// Corrupt entry lines skipped (the rest of the file still loads).
+    pub skipped: usize,
+    /// The first line is not a plxcache header at all.
+    pub unrecognized: bool,
+}
+
+impl<E> Loaded<E> {
+    fn cold() -> Loaded<E> {
+        Loaded { entries: Vec::new(), file_gen: 0, skipped: 0, unrecognized: false }
+    }
+
+    fn corrupt() -> Loaded<E> {
+        Loaded { unrecognized: true, ..Loaded::cold() }
+    }
+
+    /// Whether the on-disk file was damaged (unusable header or at
+    /// least one corrupt entry line) and should be quarantined.
+    pub fn damaged(&self) -> bool {
+        self.unrecognized || self.skipped > 0
+    }
+}
+
+enum Header {
+    V1,
+    V2(u32),
+    /// A recognized plxcache header that is not ours: unknown version or
+    /// wrong memo name. Cold, untouched — it may belong to a future plx.
+    Cold,
+    /// Not a plxcache header at all.
+    Corrupt,
+}
+
+fn parse_header(first: &str, memo: &str) -> Header {
+    let t: Vec<&str> = first.split_ascii_whitespace().collect();
+    if t.len() < 2 || t[0] != "plxcache" {
+        return Header::Corrupt;
+    }
+    match t[1] {
+        "v1" if t.len() == 3 && t[2] == memo => Header::V1,
+        "v2" if t.len() == 4 && t[2] == memo => match parse_gen_dec(t[3]) {
+            Some(g) => Header::V2(g),
+            None => Header::Corrupt,
+        },
+        _ => Header::Cold,
+    }
+}
+
+/// Strict decimal u32 (digits only — no sign, matching the pysim
+/// mirror token for token).
+fn parse_gen_dec(s: &str) -> Option<u32> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    s.parse().ok()
+}
+
+/// Split a v2 entry line into its generation prefix and entry tokens.
+fn split_gen_line(line: &str) -> Option<(u32, &str)> {
+    let mut it = line.splitn(2, ' ');
+    let g = it.next()?;
+    let rest = it.next()?;
+    if g.len() != 8 || !g.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    Some((u32::from_str_radix(g, 16).ok()?, rest))
+}
+
+/// Shared file walk: validate the header, then parse every entry line
+/// (v2 lines carry a generation prefix; v1 lines are all generation 1).
+fn parse_file<E>(text: &str, memo: &str, parse_entry: impl Fn(&str) -> Option<E>) -> Loaded<E> {
+    let mut lines = text.lines();
+    let header = match lines.next() {
+        Some(h) => parse_header(h, memo),
+        None => return Loaded::cold(),
+    };
+    let (v2, file_gen) = match header {
+        Header::V1 => (false, 1),
+        Header::V2(g) => (true, g),
+        Header::Cold => return Loaded::cold(),
+        Header::Corrupt => return Loaded::corrupt(),
+    };
+    let mut out = Loaded { entries: Vec::new(), file_gen, skipped: 0, unrecognized: false };
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = if v2 {
+            split_gen_line(line).and_then(|(g, rest)| parse_entry(rest).map(|e| (g, e)))
+        } else {
+            parse_entry(line).map(|e| (1, e))
+        };
+        match parsed {
+            Some(tagged) => out.entries.push(tagged),
+            None => out.skipped += 1,
+        }
+    }
+    out
+}
 
 /// Positional token cursor over one line.
 struct Toks<'a> {
@@ -378,18 +687,6 @@ impl FromBitsStr for u64 {
     }
 }
 
-/// Validate the header and return the entry lines, or nothing on any
-/// version/name mismatch (the whole file is treated cold).
-fn entry_lines<'a>(text: &'a str, memo: &str) -> Vec<&'a str> {
-    let mut lines = text.lines();
-    match lines.next() {
-        Some(h) if h == format!("plxcache v{FORMAT_VERSION} {memo}") => {
-            lines.filter(|l| !l.trim().is_empty()).collect()
-        }
-        _ => Vec::new(),
-    }
-}
-
 fn parse_key(t: &mut Toks) -> Option<cache::Key> {
     let (layers, hidden, heads, ffn, vocab, seq) =
         (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
@@ -427,112 +724,108 @@ fn parse_key(t: &mut Toks) -> Option<cache::Key> {
     })
 }
 
-pub(crate) fn parse_evaluate(text: &str) -> Vec<(cache::Key, Outcome)> {
-    entry_lines(text, "evaluate")
-        .into_iter()
-        .filter_map(|line| {
-            let mut t = Toks::new(line);
-            let key = parse_key(&mut t)?;
-            let out = match t.s()? {
-                "ok" => {
-                    let (step_time_s, mfu) = (t.f64()?, t.f64()?);
-                    let mem = MemoryBreakdown {
-                        weights: t.f64()?,
-                        grads: t.f64()?,
-                        optimizer: t.f64()?,
-                        activations: t.f64()?,
-                        logits: t.f64()?,
-                        workspace: t.f64()?,
-                    };
-                    let step = StepBreakdown {
-                        compute: t.f64()?,
-                        tp_comm: t.f64()?,
-                        pp_comm: t.f64()?,
-                        bubble: t.f64()?,
-                        dp_comm: t.f64()?,
-                        optimizer: t.f64()?,
-                    };
-                    Outcome::Ok { step_time_s, mfu, mem, step }
-                }
-                "oom" => Outcome::Oom { required: t.f64()?, budget: t.f64()? },
-                "unavail" => Outcome::KernelUnavailable,
-                _ => return None,
+fn parse_evaluate_entry(line: &str) -> Option<(cache::Key, Outcome)> {
+    let mut t = Toks::new(line);
+    let key = parse_key(&mut t)?;
+    let out = match t.s()? {
+        "ok" => {
+            let (step_time_s, mfu) = (t.f64()?, t.f64()?);
+            let mem = MemoryBreakdown {
+                weights: t.f64()?,
+                grads: t.f64()?,
+                optimizer: t.f64()?,
+                activations: t.f64()?,
+                logits: t.f64()?,
+                workspace: t.f64()?,
             };
-            t.done().then_some((key, out))
-        })
-        .collect()
+            let step = StepBreakdown {
+                compute: t.f64()?,
+                tp_comm: t.f64()?,
+                pp_comm: t.f64()?,
+                bubble: t.f64()?,
+                dp_comm: t.f64()?,
+                optimizer: t.f64()?,
+            };
+            Outcome::Ok { step_time_s, mfu, mem, step }
+        }
+        "oom" => Outcome::Oom { required: t.f64()?, budget: t.f64()? },
+        "unavail" => Outcome::KernelUnavailable,
+        _ => return None,
+    };
+    t.done().then_some((key, out))
 }
 
-pub(crate) fn parse_stage(text: &str) -> Vec<(cache::StKey, LayerCosts)> {
-    entry_lines(text, "stage")
-        .into_iter()
-        .filter_map(|line| {
-            let mut t = Toks::new(line);
-            let (layers, hidden, heads, ffn, vocab, seq) =
-                (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
-            let mut hw_bits = [0u64; 8];
-            for b in &mut hw_bits {
-                *b = t.bits()?;
-            }
-            let mut cal = [0u64; CAL_VARS.len()];
-            for b in &mut cal {
-                *b = t.bits()?;
-            }
-            let stage =
-                (t.usize()?, t.usize()?, t.bool01()?, Kernel::parse(t.s()?)?, t.bool01()?);
-            let costs = LayerCosts {
-                layer_fwd: t.f64()?,
-                layer_bwd: t.f64()?,
-                head_fwd: t.f64()?,
-                head_bwd: t.f64()?,
-                tp_per_layer: t.f64()?,
-                sp_factor: t.f64()?,
-                p2p_intra: t.f64()?,
-                p2p_inter: t.f64()?,
-                act_bytes: t.f64()?,
-                act_bytes_full: t.f64()?,
-            };
-            let key = cache::StKey {
-                layers,
-                hidden,
-                heads,
-                ffn,
-                vocab,
-                seq,
-                hw_bits,
-                cal: CalKey(cal),
-                stage,
-            };
-            t.done().then_some((key, costs))
-        })
-        .collect()
+fn parse_stage_entry(line: &str) -> Option<(cache::StKey, LayerCosts)> {
+    let mut t = Toks::new(line);
+    let (layers, hidden, heads, ffn, vocab, seq) =
+        (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
+    let mut hw_bits = [0u64; 8];
+    for b in &mut hw_bits {
+        *b = t.bits()?;
+    }
+    let mut cal = [0u64; CAL_VARS.len()];
+    for b in &mut cal {
+        *b = t.bits()?;
+    }
+    let stage = (t.usize()?, t.usize()?, t.bool01()?, Kernel::parse(t.s()?)?, t.bool01()?);
+    let costs = LayerCosts {
+        layer_fwd: t.f64()?,
+        layer_bwd: t.f64()?,
+        head_fwd: t.f64()?,
+        head_bwd: t.f64()?,
+        tp_per_layer: t.f64()?,
+        sp_factor: t.f64()?,
+        p2p_intra: t.f64()?,
+        p2p_inter: t.f64()?,
+        act_bytes: t.f64()?,
+        act_bytes_full: t.f64()?,
+    };
+    let key = cache::StKey {
+        layers,
+        hidden,
+        heads,
+        ffn,
+        vocab,
+        seq,
+        hw_bits,
+        cal: CalKey(cal),
+        stage,
+    };
+    t.done().then_some((key, costs))
 }
 
-pub(crate) fn parse_makespan(text: &str) -> Vec<(cache::MsKey, Option<Makespan>)> {
-    entry_lines(text, "makespan")
-        .into_iter()
-        .filter_map(|line| {
-            let mut t = Toks::new(line);
-            let sched = Schedule::parse(t.s()?)?;
-            let (pp, m) = (t.usize()?, t.usize()?);
-            let mut cost_bits = [0u64; 5];
-            for b in &mut cost_bits {
-                *b = t.bits()?;
-            }
-            let key = cache::MsKey { sched, pp, m, cost_bits };
-            // Peek the payload discriminator without consuming a float.
-            let first = t.s()?;
-            if first == "deadlock" {
-                return t.done().then_some((key, None));
-            }
-            let total = f64::from_bits(u64::from_bits_str(first)?);
-            let mut busy = Vec::with_capacity(pp);
-            for _ in 0..pp {
-                busy.push(t.f64()?);
-            }
-            t.done().then_some((key, Some(Makespan { total, busy })))
-        })
-        .collect()
+fn parse_makespan_entry(line: &str) -> Option<(cache::MsKey, Option<Makespan>)> {
+    let mut t = Toks::new(line);
+    let sched = Schedule::parse(t.s()?)?;
+    let (pp, m) = (t.usize()?, t.usize()?);
+    let mut cost_bits = [0u64; 5];
+    for b in &mut cost_bits {
+        *b = t.bits()?;
+    }
+    let key = cache::MsKey { sched, pp, m, cost_bits };
+    // Peek the payload discriminator without consuming a float.
+    let first = t.s()?;
+    if first == "deadlock" {
+        return t.done().then_some((key, None));
+    }
+    let total = f64::from_bits(u64::from_bits_str(first)?);
+    let mut busy = Vec::with_capacity(pp);
+    for _ in 0..pp {
+        busy.push(t.f64()?);
+    }
+    t.done().then_some((key, Some(Makespan { total, busy })))
+}
+
+pub(crate) fn parse_evaluate(text: &str) -> Loaded<(cache::Key, Outcome)> {
+    parse_file(text, "evaluate", parse_evaluate_entry)
+}
+
+pub(crate) fn parse_stage(text: &str) -> Loaded<(cache::StKey, LayerCosts)> {
+    parse_file(text, "stage", parse_stage_entry)
+}
+
+pub(crate) fn parse_makespan(text: &str) -> Loaded<(cache::MsKey, Option<Makespan>)> {
+    parse_file(text, "makespan", parse_makespan_entry)
 }
 
 /// Construct an evaluate-memo key outside the cache module (the serve
@@ -560,6 +853,10 @@ mod tests {
     use crate::model::arch::preset;
     use crate::sim::{A100, H100};
     use crate::topo::Cluster;
+
+    // Tests that toggle or observe the process-global read-only flag
+    // must not interleave (cargo runs tests in parallel threads).
+    static RO_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     fn sample_key(gbs: usize, hw: &Hardware) -> cache::Key {
         let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), gbs);
@@ -601,22 +898,45 @@ mod tests {
     #[test]
     fn evaluate_roundtrip_is_bit_exact() {
         let entries = vec![
-            (sample_key(2048, &A100), sample_outcome()),
-            (sample_key(2048, &H100), Outcome::Oom { required: 99e9, budget: 80e9 }),
-            (sample_key(512, &A100), Outcome::KernelUnavailable),
+            (1u32, (sample_key(2048, &A100), sample_outcome())),
+            (2u32, (sample_key(2048, &H100), Outcome::Oom { required: 99e9, budget: 80e9 })),
+            (2u32, (sample_key(512, &A100), Outcome::KernelUnavailable)),
         ];
-        let text = render_evaluate(&entries);
-        assert!(text.starts_with("plxcache v1 evaluate\n"));
+        let text = render_evaluate(&entries, 2);
+        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
         let back = parse_evaluate(&text);
-        assert_eq!(back.len(), entries.len());
-        for (k, out) in &entries {
-            let (_, got) =
-                back.iter().find(|(bk, _)| bk == k).expect("key must survive the roundtrip");
+        assert!(!back.damaged());
+        assert_eq!(back.file_gen, 2);
+        assert_eq!(back.entries.len(), entries.len());
+        for (g, (k, out)) in &entries {
+            let (bg, (_, got)) = back
+                .entries
+                .iter()
+                .find(|(_, (bk, _))| bk == k)
+                .expect("key must survive the roundtrip");
+            assert_eq!(bg, g, "generation must survive the roundtrip");
             assert_eq!(got, out);
         }
         // Deterministic bytes: rendering the parsed entries reproduces
         // the file exactly (sorted lines make order irrelevant).
-        assert_eq!(render_evaluate(&back), text);
+        assert_eq!(render_evaluate(&back.entries, back.file_gen), text);
+    }
+
+    #[test]
+    fn v1_files_warm_load_byte_compatibly() {
+        // A version-1 file (no generation prefixes) still loads every
+        // entry bit-exact, tagged generation 1, with no damage flagged.
+        let key = sample_key(2048, &A100);
+        let out = sample_outcome();
+        let text = format!("plxcache v1 evaluate\n{}\n", evaluate_line(&key, &out));
+        let back = parse_evaluate(&text);
+        assert!(!back.damaged());
+        assert_eq!(back.file_gen, 1);
+        assert_eq!(back.entries.len(), 1);
+        let (g, (k, o)) = &back.entries[0];
+        assert_eq!(*g, 1);
+        assert_eq!(k, &key);
+        assert_eq!(o, &out);
     }
 
     #[test]
@@ -644,12 +964,15 @@ mod tests {
             act_bytes: 3.2e8,
             act_bytes_full: 6.4e8,
         };
-        let text = render_stage(&[(st_key.clone(), costs)]);
+        let text = render_stage(&[(3, (st_key.clone(), costs))], 3);
+        assert!(text.starts_with("plxcache v2 stage 3\n"));
         let back = parse_stage(&text);
-        assert_eq!(back.len(), 1);
-        assert_eq!(back[0].0, st_key);
-        assert_eq!(back[0].1.layer_fwd.to_bits(), costs.layer_fwd.to_bits());
-        assert_eq!(back[0].1.act_bytes_full.to_bits(), costs.act_bytes_full.to_bits());
+        assert!(!back.damaged());
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(back.entries[0].0, 3);
+        assert_eq!(back.entries[0].1 .0, st_key);
+        assert_eq!(back.entries[0].1 .1.layer_fwd.to_bits(), costs.layer_fwd.to_bits());
+        assert_eq!(back.entries[0].1 .1.act_bytes_full.to_bits(), costs.act_bytes_full.to_bits());
 
         let ms_key = cache::MsKey {
             sched: Schedule::OneF1B,
@@ -659,40 +982,58 @@ mod tests {
         };
         let ms = Makespan { total: 12.5, busy: vec![1.0, 2.0, 3.0] };
         let dead_key = cache::MsKey { pp: 2, ..ms_key.clone() };
-        let text = render_makespan(&[
-            (ms_key.clone(), Some(std::sync::Arc::new(ms.clone()))),
-            (dead_key.clone(), None),
-        ]);
+        let text = render_makespan(
+            &[(1, (ms_key.clone(), Some(ms.clone()))), (2, (dead_key.clone(), None))],
+            2,
+        );
         let back = parse_makespan(&text);
-        assert_eq!(back.len(), 2);
-        let (_, got) = back.iter().find(|(k, _)| *k == ms_key).unwrap();
+        assert!(!back.damaged());
+        assert_eq!(back.entries.len(), 2);
+        let (_, (_, got)) = back.entries.iter().find(|(_, (k, _))| *k == ms_key).unwrap();
         let got = got.as_ref().unwrap();
         assert_eq!(got.total.to_bits(), ms.total.to_bits());
         assert_eq!(got.busy.len(), 3);
-        let (_, dead) = back.iter().find(|(k, _)| *k == dead_key).unwrap();
+        let (_, (_, dead)) = back.entries.iter().find(|(_, (k, _))| *k == dead_key).unwrap();
         assert!(dead.is_none());
     }
 
     #[test]
-    fn version_or_memo_mismatch_is_cold() {
-        let good = render_evaluate(&[(sample_key(2048, &A100), sample_outcome())]);
+    fn version_or_memo_mismatch_is_cold_not_damaged() {
+        let good = render_evaluate(&[(1, (sample_key(2048, &A100), sample_outcome()))], 1);
         let entry = good.lines().nth(1).unwrap();
-        for bad_header in ["plxcache v0 evaluate", "plxcache v2 evaluate", "plxcache v1 stage"] {
-            let text = format!("{bad_header}\n{entry}\n");
-            assert!(parse_evaluate(&text).is_empty(), "{bad_header} must be ignored");
+        for alien in
+            ["plxcache v0 evaluate", "plxcache v3 evaluate 7", "plxcache v1 stage", "plxcache v2 stage 1"]
+        {
+            let text = format!("{alien}\n{entry}\n");
+            let back = parse_evaluate(&text);
+            assert!(back.entries.is_empty(), "{alien} must be ignored");
+            assert!(!back.damaged(), "{alien} is alien, not damage — never quarantined");
         }
     }
 
     #[test]
-    fn corrupt_lines_are_skipped_not_fatal() {
-        let good = render_evaluate(&[(sample_key(2048, &A100), sample_outcome())]);
+    fn corrupt_header_or_lines_flag_damage() {
+        let good = render_evaluate(&[(1, (sample_key(2048, &A100), sample_outcome()))], 1);
         let entry = good.lines().nth(1).unwrap();
+        // Garbage header: nothing loads, the whole file is quarantined.
+        let back = parse_evaluate(&format!("not a cache file\n{entry}\n"));
+        assert!(back.entries.is_empty());
+        assert!(back.unrecognized && back.damaged());
+        // A v2 header whose generation does not parse is damage too.
+        let back = parse_evaluate(&format!("plxcache v2 evaluate nope\n{entry}\n"));
+        assert!(back.unrecognized && back.damaged());
+        // Valid header, mixed lines: the intact line loads, the corrupt
+        // ones are counted (bad tokens, trailing garbage, truncation,
+        // and a missing/short generation prefix).
         let text = format!(
-            "plxcache v1 evaluate\nnot a line\n{entry}\n{entry} trailing-garbage\n{}\n",
-            &entry[..entry.len() / 2]
+            "plxcache v2 evaluate 1\nnot a line\n{entry}\n{entry} trailing-garbage\n{}\nzz {}\n",
+            &entry[..entry.len() / 2],
+            &entry[9..],
         );
         let back = parse_evaluate(&text);
-        assert_eq!(back.len(), 1, "exactly the intact line must load");
+        assert_eq!(back.entries.len(), 1, "exactly the intact line must load");
+        assert_eq!(back.skipped, 4);
+        assert!(back.damaged());
     }
 
     #[test]
@@ -704,19 +1045,86 @@ mod tests {
         let h = sample_key(2048, &H100);
         let mut recal = a.clone();
         recal.cal.0[0] ^= 1; // one calibration var, one ulp apart
-        let text = render_evaluate(&[
-            (a.clone(), sample_outcome()),
-            (h, Outcome::KernelUnavailable),
-            (recal, Outcome::Oom { required: 1.0, budget: 2.0 }),
-        ]);
+        let text = render_evaluate(
+            &[
+                (1, (a.clone(), sample_outcome())),
+                (1, (h, Outcome::KernelUnavailable)),
+                (1, (recal, Outcome::Oom { required: 1.0, budget: 2.0 })),
+            ],
+            1,
+        );
         let back = parse_evaluate(&text);
-        assert_eq!(back.len(), 3);
+        assert_eq!(back.entries.len(), 3);
         let distinct: std::collections::HashSet<String> =
             text.lines().skip(1).map(|l| l.to_string()).collect();
         assert_eq!(distinct.len(), 3);
         // And the A100 entry still maps to exactly its own outcome.
-        let (_, got) = back.iter().find(|(k, _)| *k == a).unwrap();
+        let (_, (_, got)) = back.entries.iter().find(|(_, (k, _))| *k == a).unwrap();
         assert_eq!(*got, sample_outcome());
+    }
+
+    #[test]
+    fn save_preserves_generations_and_bumps_file_gen() {
+        let dir = std::env::temp_dir().join(format!("plxcache-gen-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = evaluate_line(&sample_key(2048, &A100), &sample_outcome());
+        let b = evaluate_line(&sample_key(512, &A100), &Outcome::KernelUnavailable);
+        let first = save_memo(&dir, "evaluate.plxcache", "evaluate", vec![a.clone()], None).unwrap();
+        assert_eq!((first.written, first.evicted), (1, 0));
+        let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
+        assert!(text.starts_with("plxcache v2 evaluate 1\n"));
+        assert!(text.contains(&format!("00000001 {a}")));
+        // Second spill: the surviving entry keeps generation 1, the new
+        // entry is stamped 2, and the file generation bumps to 2.
+        let second =
+            save_memo(&dir, "evaluate.plxcache", "evaluate", vec![a.clone(), b.clone()], None)
+                .unwrap();
+        assert_eq!((second.written, second.evicted), (2, 0));
+        let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
+        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(text.contains(&format!("00000001 {a}")));
+        assert!(text.contains(&format!("00000002 {b}")));
+        // A v1 file counts as generation 1: its entries stay gen 1 and
+        // the next spill is generation 2.
+        std::fs::write(dir.join("evaluate.plxcache"), format!("plxcache v1 evaluate\n{a}\n"))
+            .unwrap();
+        save_memo(&dir, "evaluate.plxcache", "evaluate", vec![a.clone(), b.clone()], None).unwrap();
+        let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
+        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(text.contains(&format!("00000001 {a}")));
+        assert!(text.contains(&format!("00000002 {b}")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn max_bytes_cap_evicts_oldest_generation_first() {
+        let dir = std::env::temp_dir().join(format!("plxcache-cap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = evaluate_line(&sample_key(2048, &A100), &sample_outcome());
+        let new = evaluate_line(&sample_key(512, &A100), &Outcome::KernelUnavailable);
+        save_memo(&dir, "evaluate.plxcache", "evaluate", vec![old.clone()], None).unwrap();
+        // Cap far below two entries but above one: the generation-1
+        // entry must be the one evicted, regardless of sort order.
+        let header = "plxcache v2 evaluate 2\n".len();
+        let cap = header + 9 + new.len() + 1;
+        let out = save_memo(
+            &dir,
+            "evaluate.plxcache",
+            "evaluate",
+            vec![old.clone(), new.clone()],
+            Some(cap),
+        )
+        .unwrap();
+        assert_eq!((out.written, out.evicted), (1, 1));
+        let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
+        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(!text.contains(&old), "the older generation must be evicted");
+        assert!(text.contains(&format!("00000002 {new}")));
+        // The survivor reloads bit-exact.
+        let back = parse_evaluate(&text);
+        assert!(!back.damaged());
+        assert_eq!(back.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -725,6 +1133,7 @@ mod tests {
         // read-only set, the configured-save entry point is inert —
         // `save_if_configured` bails before even resolving the cache
         // directory — while the load path is untouched.
+        let _guard = RO_LOCK.lock().unwrap();
         assert!(!readonly(), "tests must start writable");
         set_readonly(true);
         assert!(readonly());
@@ -744,11 +1153,45 @@ mod tests {
         assert!(saved.evaluate >= 1);
         let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
         let back = parse_evaluate(&text);
-        let (_, got) = back.iter().find(|(k, _)| *k == key).expect("entry must be in the file");
+        assert!(!back.damaged());
+        let (_, (_, got)) = back
+            .entries
+            .iter()
+            .find(|(_, (k, _))| *k == key)
+            .expect("entry must be in the file");
         assert_eq!(*got, out);
         // load_all re-inserts without error (everything already present).
         let loaded = load_all(&dir);
         assert!(loaded.evaluate >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_renames_damaged_files_and_counts() {
+        // The quarantine rename is gated on !readonly(), so hold the
+        // same lock as the read-only toggle test.
+        let _guard = RO_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join(format!("plxcache-quar-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let entry = evaluate_line(&sample_key(1777, &A100), &Outcome::KernelUnavailable);
+        std::fs::write(
+            dir.join("evaluate.plxcache"),
+            format!("plxcache v2 evaluate 1\n00000001 {entry}\ngarbage line\n"),
+        )
+        .unwrap();
+        let (d0, _, _) = cache::disk_stats();
+        let stats = load_all(&dir);
+        assert_eq!(stats.evaluate, 1, "the intact line still loads");
+        let (d1, _, _) = cache::disk_stats();
+        assert_eq!(d1.skipped, d0.skipped + 1);
+        assert_eq!(d1.quarantined, d0.quarantined + 1);
+        assert!(!dir.join("evaluate.plxcache").exists(), "damaged file must be moved aside");
+        assert!(dir.join("evaluate.plxcache.bad").exists(), "…to <name>.bad");
+        // The next load finds no file: silently cold, no double count.
+        let stats = load_all(&dir);
+        assert_eq!(stats.evaluate, 0);
+        let (d2, _, _) = cache::disk_stats();
+        assert_eq!(d2.quarantined, d1.quarantined);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

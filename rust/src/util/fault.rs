@@ -1,0 +1,179 @@
+//! Deterministic fault injection for robustness testing.
+//!
+//! Injection points wrap the two places plx touches the outside world —
+//! persist file IO ([`crate::sim::persist`]) and serve socket writes
+//! ([`crate::serve`]) — and decide, per call, whether to inject a
+//! failure: a hard IO error, or a truncated ("torn") write cut at a
+//! random byte. Everything is driven by [`crate::util::prng`] streams,
+//! so a stress run is **reproducible by seed**: same `PLX_FAULT_SEED`,
+//! same sequence of injected faults, in this crate and in the
+//! `tools/pysim.py` mirror (expression-for-expression, pinned by the
+//! gating STRESS suite).
+//!
+//! Environment:
+//!
+//! * `PLX_FAULT_SEED` — u64 seed; unset/empty/unparseable = injection
+//!   disabled (the zero-cost default for every normal run).
+//! * `PLX_FAULT_IO_P` — probability in `[0,1]` that an injection point
+//!   returns a hard IO error (default `0`).
+//! * `PLX_FAULT_TRUNC_P` — probability in `[0,1]` that a write is torn
+//!   at a uniformly random byte offset (default `0`).
+//!
+//! Determinism does not depend on thread interleaving: each **site**
+//! (a short static label like `"persist.write"` or `"serve.write"`)
+//! draws from its own PRNG stream, seeded `seed ^ fnv1a64(site)` — the
+//! order of draws *within* a site is the order of calls at that site,
+//! and sites never perturb each other. Every gate consumes exactly one
+//! uniform draw, and a torn write consumes one more for the cut offset,
+//! so the decision sequence is a pure function of (seed, site, call
+//! index).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::prng::Rng;
+
+/// u64 seed enabling injection; unset/empty/unparseable disables it.
+pub const SEED_ENV: &str = "PLX_FAULT_SEED";
+
+/// Probability of a hard IO error per injection point (default 0).
+pub const IO_P_ENV: &str = "PLX_FAULT_IO_P";
+
+/// Probability of a torn (truncated) write per write point (default 0).
+pub const TRUNC_P_ENV: &str = "PLX_FAULT_TRUNC_P";
+
+struct Config {
+    seed: Option<u64>,
+    io_p: f64,
+    trunc_p: f64,
+    streams: HashMap<&'static str, Rng>,
+}
+
+static FAULTS: Mutex<Option<Config>> = Mutex::new(None);
+
+fn env_prob(name: &str) -> f64 {
+    let p = match std::env::var(name) {
+        Ok(v) if !v.is_empty() => v.parse().unwrap_or(0.0),
+        _ => 0.0,
+    };
+    p.clamp(0.0, 1.0)
+}
+
+fn with_config<T>(f: impl FnOnce(&mut Config) -> T) -> T {
+    let mut guard = FAULTS.lock().unwrap();
+    let cfg = guard.get_or_insert_with(|| Config {
+        seed: std::env::var(SEED_ENV).ok().filter(|v| !v.is_empty()).and_then(|v| v.parse().ok()),
+        io_p: env_prob(IO_P_ENV),
+        trunc_p: env_prob(TRUNC_P_ENV),
+        streams: HashMap::new(),
+    });
+    f(cfg)
+}
+
+/// FNV-1a over the site label: a stable, dependency-free way to derive
+/// per-site stream seeds (any collision would merely share a stream,
+/// never break determinism).
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn stream<'a>(cfg: &'a mut Config, site: &'static str, seed: u64) -> &'a mut Rng {
+    cfg.streams.entry(site).or_insert_with(|| Rng::new(seed ^ fnv1a64(site)))
+}
+
+/// Drop the cached config and all stream positions; the next call
+/// re-reads the environment. Tests use this to run multiple seeded
+/// scenarios in one process.
+pub fn reset() {
+    *FAULTS.lock().unwrap() = None;
+}
+
+/// Whether injection is armed (`PLX_FAULT_SEED` parsed to a u64).
+pub fn enabled() -> bool {
+    with_config(|c| c.seed.is_some())
+}
+
+/// Gate for a hard IO error at `site`. Consumes exactly one draw from
+/// the site's stream when armed; always `false` when disarmed.
+pub fn io_error(site: &'static str) -> bool {
+    with_config(|c| {
+        let Some(seed) = c.seed else { return false };
+        let p = c.io_p;
+        stream(c, site, seed).f64() < p
+    })
+}
+
+/// Gate for a torn write of a `len`-byte payload at `site`: `Some(cut)`
+/// means "write only the first `cut` bytes". Consumes one draw for the
+/// gate and, when it fires on a non-empty payload, one more for the cut
+/// offset (`0 <= cut < len` — a torn write never completes).
+pub fn trunc_len(site: &'static str, len: usize) -> Option<usize> {
+    with_config(|c| {
+        let seed = c.seed?;
+        let p = c.trunc_p;
+        let rng = stream(c, site, seed);
+        if rng.f64() >= p || len == 0 {
+            return None;
+        }
+        Some(rng.below(len as u64) as usize)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The env-driven config is process-global, so these tests drive the
+    // PRNG machinery directly (env mutation lives in tests/serve_stress.rs,
+    // which owns its process).
+
+    #[test]
+    fn per_site_streams_are_deterministic_and_independent() {
+        let seed = 42u64;
+        let mut a1 = Rng::new(seed ^ fnv1a64("persist.write"));
+        let mut a2 = Rng::new(seed ^ fnv1a64("persist.write"));
+        let mut b = Rng::new(seed ^ fnv1a64("serve.write"));
+        let sa1: Vec<u64> = (0..16).map(|_| a1.next_u64()).collect();
+        let sa2: Vec<u64> = (0..16).map(|_| a2.next_u64()).collect();
+        let sb: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(sa1, sa2, "same seed + site must replay the same stream");
+        assert_ne!(sa1, sb, "distinct sites must draw from distinct streams");
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Canonical FNV-1a test vectors; the pysim mirror pins the same.
+        assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn disarmed_gates_never_fire() {
+        // Without PLX_FAULT_SEED in the test environment the cached
+        // config is disarmed, and the gates are pure no-ops.
+        if !enabled() {
+            for _ in 0..8 {
+                assert!(!io_error("persist.write"));
+                assert_eq!(trunc_len("persist.write", 128), None);
+            }
+        }
+    }
+
+    #[test]
+    fn trunc_cut_is_always_a_strict_prefix() {
+        // Drive the same expressions the armed gate uses: gate draw,
+        // then a cut strictly below len.
+        let mut rng = Rng::new(7 ^ fnv1a64("persist.write"));
+        for len in [1u64, 2, 3, 100, 65536] {
+            let _gate = rng.f64();
+            let cut = rng.below(len);
+            assert!(cut < len);
+        }
+    }
+}

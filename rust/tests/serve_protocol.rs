@@ -144,17 +144,19 @@ fn serve_protocol_end_to_end() {
     // --- the daemon spilled its memos: versioned, parseable files -----
     let eval_file = cache_dir.join("evaluate.plxcache");
     let text = std::fs::read_to_string(&eval_file).expect("daemon must spill evaluate memo");
-    assert!(text.starts_with("plxcache v1 evaluate\n"), "versioned header");
+    assert!(text.starts_with("plxcache v2 evaluate "), "versioned header with generation");
     assert!(text.lines().count() > 1, "spill must carry entries");
     for name in ["stage.plxcache", "makespan.plxcache"] {
         assert!(cache_dir.join(name).is_file(), "{name} must exist");
     }
 
-    // --- shutdown: acknowledged, then the accept loop exits -----------
+    // --- shutdown: acknowledged, then the accept loop drains ----------
     let resp = roundtrip(&mut conn, r#"{"cmd":"shutdown"}"#);
     assert_eq!(resp.write(), r#"{"cmd":"shutdown","ok":true}"#);
-    // join() returning proves the accept loop observed the stop flag.
-    handle.join();
+    // join() returning proves the accept loop observed the drain flag;
+    // the connection that sent shutdown counts itself as drained.
+    let drained = handle.join();
+    assert!(drained >= 1, "drained {drained}");
 
     std::fs::remove_dir_all(&cache_dir).ok();
 }

@@ -1,0 +1,265 @@
+//! Stress and hardening test for `plx serve`: limits, graceful drain,
+//! multi-client byte-identity, and survival under a seeded fault corpus.
+//!
+//! Everything runs in ONE `#[test]` because the test owns its process
+//! environment (PLX_SERVE_* limits, PLX_FAULT_* injection, and
+//! PLX_CACHE_DIR all live in env vars, exactly like `cal_override.rs` /
+//! `serve_protocol.rs` — env-mutating tests stay out of the lib test
+//! binary). Phases run sequentially, each with its own daemon spawned
+//! under the environment it needs; `fault::reset()` re-reads the fault
+//! env between phases.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Duration;
+
+use plx::util::fault;
+use plx::util::json::Json;
+
+/// Client-side read deadline so a daemon bug fails the test instead of
+/// hanging it.
+const CLIENT_READ: Duration = Duration::from_secs(20);
+
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(CLIENT_READ)).unwrap();
+    s
+}
+
+fn send_line(s: &mut TcpStream, line: &str) {
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+}
+
+/// Read one response line; `None` on EOF or a torn (newline-less) tail.
+fn read_line(s: &TcpStream) -> Option<String> {
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => None,
+        Ok(_) if line.ends_with('\n') => Some(line.trim_end().to_string()),
+        _ => None,
+    }
+}
+
+fn roundtrip(s: &mut TcpStream, req: &str) -> Json {
+    send_line(s, req);
+    let line = read_line(s).expect("response line");
+    Json::parse(&line).expect("response must be valid JSON")
+}
+
+#[test]
+fn serve_survives_limits_contention_and_faults() {
+    phase_limits();
+    phase_timeout();
+    phase_overload();
+    phase_multi_client();
+    phase_fault_corpus();
+}
+
+/// Oversized request lines: `too_large` envelope, counted, and the
+/// connection resyncs — the next request on the same socket works.
+fn phase_limits() {
+    std::env::set_var(plx::serve::MAX_LINE_ENV, "256");
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+    let mut c = connect(handle.addr);
+
+    let big = format!(r#"{{"cmd":"plan","model":"{}"}}"#, "x".repeat(512));
+    let resp = roundtrip(&mut c, &big);
+    assert_eq!(resp.path("error.code").as_str(), Some("too_large"), "{}", resp.write());
+    assert_eq!(
+        resp.path("error.message").as_str(),
+        Some("request line exceeds 256 bytes")
+    );
+
+    // Same connection, next request: the oversized line was drained to
+    // its newline, so this parses and answers normally.
+    let resp = roundtrip(&mut c, r#"{"cmd":"plan","model":"llama13b","nodes":1}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{}", resp.write());
+
+    let stats = roundtrip(&mut c, r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.path("stats.too_large").as_u64(), Some(1));
+    assert_eq!(stats.path("stats.limits.max_line").as_u64(), Some(256));
+    assert_eq!(stats.path("stats.errors").as_u64(), Some(0), "socket-layer incident only");
+
+    let resp = roundtrip(&mut c, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(resp.write(), r#"{"cmd":"shutdown","ok":true}"#);
+    assert!(handle.join() >= 1, "the shutdown connection drains itself");
+    std::env::remove_var(plx::serve::MAX_LINE_ENV);
+}
+
+/// Read deadline: a silent connection gets a `timeout` envelope, then
+/// the daemon closes it.
+fn phase_timeout() {
+    std::env::set_var(plx::serve::TIMEOUT_ENV, "200");
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+
+    let idle = connect(handle.addr);
+    let line = read_line(&idle).expect("timeout envelope before close");
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.path("error.code").as_str(), Some("timeout"), "{line}");
+    assert_eq!(resp.path("error.message").as_str(), Some("no complete request within 200 ms"));
+    // And then EOF — a timed-out connection does not linger.
+    let mut rest = Vec::new();
+    assert_eq!(idle.try_clone().unwrap().read_to_end(&mut rest).unwrap_or(0), 0);
+
+    let mut c = connect(handle.addr);
+    let stats = roundtrip(&mut c, r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.path("stats.timeouts").as_u64(), Some(1));
+    roundtrip(&mut c, r#"{"cmd":"shutdown"}"#);
+    handle.join();
+    std::env::remove_var(plx::serve::TIMEOUT_ENV);
+}
+
+/// Connection budget: arrivals beyond `max_conns` are shed with an
+/// `overloaded` envelope, never queued.
+fn phase_overload() {
+    std::env::set_var(plx::serve::MAX_CONNS_ENV, "1");
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+
+    // Occupy the single slot, and prove it is registered by finishing a
+    // full roundtrip on it.
+    let mut c1 = connect(handle.addr);
+    roundtrip(&mut c1, r#"{"cmd":"stats"}"#);
+
+    let c2 = connect(handle.addr);
+    let line = read_line(&c2).expect("overloaded envelope");
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.path("error.code").as_str(), Some("overloaded"), "{line}");
+    assert_eq!(
+        resp.path("error.message").as_str(),
+        Some("connection budget exhausted (1 active connections)")
+    );
+    let mut rest = Vec::new();
+    assert_eq!(c2.try_clone().unwrap().read_to_end(&mut rest).unwrap_or(0), 0, "shed = closed");
+
+    let stats = roundtrip(&mut c1, r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.path("stats.rejected").as_u64(), Some(1));
+    assert_eq!(stats.path("stats.limits.max_conns").as_u64(), Some(1));
+    roundtrip(&mut c1, r#"{"cmd":"shutdown"}"#);
+    handle.join();
+    std::env::remove_var(plx::serve::MAX_CONNS_ENV);
+}
+
+/// Many concurrent clients firing the same request: every response is
+/// byte-identical (single-flight dedupe and the pure memos guarantee
+/// it), and the daemon's counters stay coherent.
+fn phase_multi_client() {
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+    let addr = handle.addr;
+    const CLIENTS: usize = 8;
+    const REQ: &str = r#"{"cmd":"sweep","preset":"13b-2k","top":3}"#;
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = connect(addr);
+                send_line(&mut c, REQ);
+                read_line(&c).expect("response")
+            })
+        })
+        .collect();
+    let replies: Vec<String> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    assert_eq!(replies.len(), CLIENTS);
+    for r in &replies {
+        assert_eq!(r, &replies[0], "interleaved identical requests must answer identical bytes");
+    }
+    // And the contended bytes equal a fresh single-shot of the same
+    // request (dedupe followers got the leader's bytes, not a rerun).
+    let mut c = connect(addr);
+    let single = roundtrip(&mut c, REQ);
+    assert_eq!(single.write(), Json::parse(&replies[0]).unwrap().write());
+
+    let stats = roundtrip(&mut c, r#"{"cmd":"stats"}"#);
+    let requests = stats.path("stats.requests").as_u64().unwrap();
+    assert!(requests >= (CLIENTS + 1) as u64, "requests {requests}");
+    assert!(stats.path("stats.deduped").as_u64().is_some());
+    roundtrip(&mut c, r#"{"cmd":"shutdown"}"#);
+    handle.join();
+}
+
+/// Seeded fault corpus: with IO-error and torn-write injection armed,
+/// the daemon must never panic, every *complete* response line must be
+/// a valid JSON envelope, shutdown must still drain, and whatever the
+/// faulted spills left on disk must warm-load (quarantining damage)
+/// rather than crash a restart.
+fn phase_fault_corpus() {
+    let dir = std::env::temp_dir().join(format!("plx-serve-stress-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::env::set_var("PLX_CACHE_DIR", &dir);
+    std::env::set_var(fault::SEED_ENV, "20260808");
+    std::env::set_var(fault::IO_P_ENV, "0.25");
+    std::env::set_var(fault::TRUNC_P_ENV, "0.25");
+    fault::reset();
+
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+    let corpus = [
+        r#"{"cmd":"plan","model":"llama13b","nodes":1}"#,
+        r#"{"cmd":"plan","model":"llama30b","nodes":2}"#,
+        "{torn garbage",
+        r#"{"cmd":"warp"}"#,
+        r#"{"cmd":"plan"}"#,
+        r#"{"cmd":"predict-mem","model":"llama13b","nodes":1,"tp":2,"pp":2}"#,
+        r#"{"cmd":"stats"}"#,
+        "[1,2,3]",
+        r#"{"cmd":"plan","model":"llama13b","nodes":1,"hw":"h100"}"#,
+        r#"{"cmd":"plan","jobs":[{"model":"llama13b","nodes":1}]}"#,
+        r#"{"cmd":"compare","preset":"13b-2k","hw":"a100"}"#,
+        r#"{"cmd":"sweep","preset":"nope"}"#,
+    ];
+    let mut complete = 0usize;
+    for round in 0..3 {
+        for req in corpus {
+            // Fresh connection per request: an injected torn write kills
+            // the previous one by design.
+            let mut c = connect(handle.addr);
+            send_line(&mut c, req);
+            if let Some(line) = read_line(&c) {
+                let j = Json::parse(&line)
+                    .unwrap_or_else(|e| panic!("round {round}: invalid envelope {line:?}: {e}"));
+                assert!(
+                    j.get("ok").as_bool().is_some(),
+                    "round {round}: envelope must carry ok: {line}"
+                );
+                complete += 1;
+            }
+        }
+    }
+    assert!(complete > 0, "with p=0.25 some responses must get through");
+
+    // Shutdown must drain even if the ack write is the faulted one.
+    let mut c = connect(handle.addr);
+    send_line(&mut c, r#"{"cmd":"shutdown"}"#);
+    let _ = read_line(&c);
+    handle.join();
+
+    // Disarm and restart cold: whatever the faulted spills left behind
+    // must load without panicking — torn files quarantine to .bad.
+    std::env::remove_var(fault::SEED_ENV);
+    std::env::remove_var(fault::IO_P_ENV);
+    std::env::remove_var(fault::TRUNC_P_ENV);
+    fault::reset();
+    plx::sim::cache::clear();
+    let _stats = plx::sim::persist::load_all(Path::new(&dir));
+    let (de, ds, dm) = plx::sim::cache::disk_stats();
+    let quarantined = de.quarantined + ds.quarantined + dm.quarantined;
+    let bad = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".bad"))
+        .count() as u64;
+    assert_eq!(bad, quarantined, "every quarantine renames exactly one file to .bad");
+
+    // A post-fault daemon over the same dir serves normally.
+    let handle = plx::serve::spawn("127.0.0.1:0").expect("bind :0");
+    let mut c = connect(handle.addr);
+    let resp = roundtrip(&mut c, r#"{"cmd":"plan","model":"llama13b","nodes":1}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{}", resp.write());
+    roundtrip(&mut c, r#"{"cmd":"shutdown"}"#);
+    handle.join();
+
+    std::env::remove_var("PLX_CACHE_DIR");
+    std::fs::remove_dir_all(&dir).ok();
+}

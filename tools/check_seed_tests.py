@@ -4,7 +4,7 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Seven suites, reported separately:
+Eight suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
@@ -31,7 +31,14 @@ Seven suites, reported separately:
     the same row — layout and bits — as the materializing reference it
     replaced, tie-breaking disciplines are exact, and the tightened
     TP-collective bound prunes strictly more than the loose one under
-    the CI gating fraction.
+    the CI gating fraction;
+  * the STRESS suite — the hardening layer: the seeded fault-injection
+    PRNG streams (xoshiro256** pinned to the published reference
+    vectors, FNV-1a site seeds), torn-write quarantine and bit-exact
+    recovery, v2 cache generations preserved across spills,
+    PLX_CACHE_MAX_BYTES oldest-first eviction, and the serve
+    socket-layer limits (too_large/timeout/overloaded envelope bytes,
+    counters, env fallbacks) — all byte-matched to the Rust daemon.
 
 Run: python3 tools/check_seed_tests.py
 """
@@ -43,6 +50,7 @@ import sys
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from pysim import *  # noqa: F401,F403
 from pysim import _DISK_STATS, _EVAL_CACHE  # serve suite pokes the live memos
+from pysim import _STAGE_CACHE, _fnv1a64  # stress suite: hermetic caches, fnv pins
 
 PASS = []
 FAIL = []
@@ -1481,18 +1489,22 @@ def _serve_sample_outcome():
 
 def t_serve_persist_evaluate_roundtrip():
     # rust: persist::evaluate_roundtrip_is_bit_exact
-    entries = [(_serve_sample_eval_key(2048, A100), _serve_sample_outcome()),
-               (_serve_sample_eval_key(2048, H100),
-                Outcome("oom", required=99e9, budget=80e9)),
-               (_serve_sample_eval_key(512, A100), Outcome("unavail"))]
-    text = persist_render_evaluate(entries)
-    assert text.startswith("plxcache v1 evaluate\n")
+    entries = [(1, (_serve_sample_eval_key(2048, A100),
+                    _serve_sample_outcome())),
+               (2, (_serve_sample_eval_key(2048, H100),
+                    Outcome("oom", required=99e9, budget=80e9))),
+               (2, (_serve_sample_eval_key(512, A100), Outcome("unavail")))]
+    text = persist_render_evaluate(entries, 2)
+    assert text.startswith("plxcache v2 evaluate 2\n")
     back = persist_parse_evaluate(text)
-    assert len(back) == len(entries)
-    for k, oc in entries:
-        got = next(o for bk, o in back if bk == k)
-        assert got == oc
-    assert persist_render_evaluate(back) == text, "render not a fixed point"
+    assert back["file_gen"] == 2 and not back["unrecognized"]
+    assert back["skipped"] == 0
+    assert len(back["entries"]) == len(entries)
+    for g, (k, oc) in entries:
+        bg, got = next((bg, o) for bg, (bk, o) in back["entries"] if bk == k)
+        assert got == oc and bg == g
+    assert persist_render_evaluate(back["entries"], back["file_gen"]) == text, \
+        "render not a fixed point"
 
 
 def t_serve_persist_stage_and_makespan_roundtrip():
@@ -1503,34 +1515,69 @@ def t_serve_persist_stage_and_makespan_roundtrip():
                              (2, 1, True, FLASH2, False))
     costs = LayerCosts(0.001, 0.002, 0.0005, 0.001, 1e-4, 0.95, 1e-5, 1e-4,
                        3.2e8, 6.4e8)
-    text = persist_render_stage([(st_key, costs)])
+    text = persist_render_stage([(1, (st_key, costs))], 1)
     back = persist_parse_stage(text)
-    assert len(back) == 1 and back[0][0] == st_key
-    assert _bits(back[0][1].layer_fwd) == _bits(costs.layer_fwd)
-    assert _bits(back[0][1].act_bytes_full) == _bits(costs.act_bytes_full)
+    assert len(back["entries"]) == 1 and back["entries"][0][1][0] == st_key
+    got_costs = back["entries"][0][1][1]
+    assert _bits(got_costs.layer_fwd) == _bits(costs.layer_fwd)
+    assert _bits(got_costs.act_bytes_full) == _bits(costs.act_bytes_full)
     ms_key = PersistMsKey(SCHED_1F1B, 3, 16, (1, 2, 3, 4, 5))
     dead_key = PersistMsKey(SCHED_1F1B, 2, 16, (1, 2, 3, 4, 5))
-    text = persist_render_makespan([(ms_key, (12.5, [1.0, 2.0, 3.0])),
-                                    (dead_key, None)])
+    text = persist_render_makespan([(1, (ms_key, (12.5, [1.0, 2.0, 3.0]))),
+                                    (1, (dead_key, None))], 1)
     back = persist_parse_makespan(text)
-    assert len(back) == 2
-    got = next(ms for k, ms in back if k == ms_key)
+    assert len(back["entries"]) == 2
+    got = next(ms for _g, (k, ms) in back["entries"] if k == ms_key)
     assert _bits(got[0]) == _bits(12.5) and len(got[1]) == 3
-    assert next(ms for k, ms in back if k == dead_key) is None
-    assert persist_render_makespan(back) == text
+    assert next(ms for _g, (k, ms) in back["entries"] if k == dead_key) is None
+    assert persist_render_makespan(back["entries"], back["file_gen"]) == text
 
 
 def t_serve_persist_version_gate_and_corrupt_lines():
-    # rust: persist::version_or_memo_mismatch_is_cold /
-    # corrupt_lines_are_skipped_not_fatal
+    # rust: persist::version_or_memo_mismatch_is_cold_not_damaged /
+    # corrupt_header_or_lines_flag_damage
     good = persist_render_evaluate(
-        [(_serve_sample_eval_key(2048, A100), _serve_sample_outcome())])
-    entry = good.splitlines()[1]
-    for bad in ["plxcache v0 evaluate", "plxcache v2 evaluate", "plxcache v1 stage"]:
-        assert persist_parse_evaluate(f"{bad}\n{entry}\n") == [], bad
+        [(1, (_serve_sample_eval_key(2048, A100), _serve_sample_outcome()))],
+        1)
+    tagged = good.splitlines()[1]
+    entry = tagged.split(" ", 1)[1]
+    # Alien headers (unknown version, wrong memo) are cold, not damage.
+    for bad in ["plxcache v0 evaluate", "plxcache v3 evaluate 1",
+                "plxcache v1 stage", "plxcache v2 stage 1"]:
+        back = persist_parse_evaluate(f"{bad}\n{tagged}\n")
+        assert back["entries"] == [] and not back["unrecognized"], bad
+        assert back["skipped"] == 0, bad
+    # Not a plxcache header at all: unrecognized (quarantine-worthy).
+    back = persist_parse_evaluate(f"garbage\n{tagged}\n")
+    assert back["entries"] == [] and back["unrecognized"]
+    # A v2 header with a malformed generation is corrupt too.
+    assert persist_parse_evaluate(f"plxcache v2 evaluate x\n{tagged}\n")[
+        "unrecognized"]
+    # Corrupt entry lines are skipped (and counted), not fatal.
     text = ("plxcache v1 evaluate\nnot a line\n"
             f"{entry}\n{entry} trailing-garbage\n{entry[:len(entry) // 2]}\n")
-    assert len(persist_parse_evaluate(text)) == 1
+    back = persist_parse_evaluate(text)
+    assert len(back["entries"]) == 1 and back["skipped"] == 3
+    # Same through a v2 file: a bad generation prefix skips the line.
+    text = (f"plxcache v2 evaluate 5\n{tagged}\nzz000001 {entry}\n")
+    back = persist_parse_evaluate(text)
+    assert back["file_gen"] == 5
+    assert len(back["entries"]) == 1 and back["skipped"] == 1
+
+
+def t_serve_persist_v1_files_warm_load():
+    # rust: persist::v1_files_warm_load_byte_compatibly — a v1 file
+    # parses with every entry at generation 1, and re-renders to the
+    # canonical v2 bytes.
+    key, oc = _serve_sample_eval_key(2048, A100), _serve_sample_outcome()
+    v2 = persist_render_evaluate([(1, (key, oc))], 1)
+    entry = v2.splitlines()[1].split(" ", 1)[1]
+    v1 = f"plxcache v1 evaluate\n{entry}\n"
+    back = persist_parse_evaluate(v1)
+    assert back["file_gen"] == 1 and not back["unrecognized"]
+    assert back["skipped"] == 0
+    assert [(g, k) for g, (k, _o) in back["entries"]] == [(1, key)]
+    assert persist_render_evaluate(back["entries"], back["file_gen"]) == v2
 
 
 def t_serve_persist_non_aliasing():
@@ -1539,12 +1586,12 @@ def t_serve_persist_non_aliasing():
     h = _serve_sample_eval_key(2048, H100)
     recal = replace(a, cal=(a.cal[0] ^ 1,) + a.cal[1:])
     text = persist_render_evaluate([
-        (a, _serve_sample_outcome()), (h, Outcome("unavail")),
-        (recal, Outcome("oom", required=1.0, budget=2.0))])
+        (1, (a, _serve_sample_outcome())), (1, (h, Outcome("unavail"))),
+        (1, (recal, Outcome("oom", required=1.0, budget=2.0)))], 1)
     back = persist_parse_evaluate(text)
-    assert len(back) == 3
+    assert len(back["entries"]) == 3
     assert len(set(text.splitlines()[1:])) == 3, "keys must not alias"
-    got = next(o for k, o in back if k == a)
+    got = next(o for _g, (k, o) in back["entries"] if k == a)
     assert got == _serve_sample_outcome()
 
 
@@ -1566,9 +1613,10 @@ def t_serve_persist_save_and_load_live_caches():
         assert saved["evaluate"] >= 1
         with open(os.path.join(d, "evaluate.plxcache")) as f:
             text = f.read()
-        assert text.startswith("plxcache v1 evaluate\n")
+        assert text.startswith("plxcache v2 evaluate 1\n")
         back = persist_parse_evaluate(text)
-        assert any(bk.gbs == 1984 and o == oc for bk, o in back)
+        assert any(bk.gbs == 1984 and o == oc
+                   for _g, (bk, o) in back["entries"])
         # Evict, warm-load, and prove the disk entry serves the lookup.
         del _EVAL_CACHE[k]
         hits_before = _DISK_STATS["evaluate"][1]
@@ -1655,7 +1703,15 @@ def t_serve_stats_counters_move():
     assert s["memos"]["evaluate"]["entries"] > 0
     assert "hits" in s["memos"]["evaluate"] and "misses" in s["memos"]["evaluate"]
     assert "loaded" in s["disk"]["evaluate"] and "hits" in s["disk"]["evaluate"]
+    assert "skipped" in s["disk"]["evaluate"], "damage counters in stats"
+    assert "quarantined" in s["disk"]["evaluate"]
     assert s["latency_us"]["count"] == 2
+    # Hardening counters and the resolved limits are part of the shape.
+    assert s["too_large"] == 0 and s["timeouts"] == 0
+    assert s["rejected"] == 0 and s["drained"] == 0
+    assert s["limits"]["max_line"] == SERVE_DEFAULT_MAX_LINE
+    assert s["limits"]["max_conns"] == SERVE_DEFAULT_MAX_CONNS
+    assert s["limits"]["timeout_ms"] == 0
 
 
 def t_serve_warm_spill_writes_versioned_files():
@@ -1675,12 +1731,14 @@ def t_serve_warm_spill_writes_versioned_files():
                            ("makespan.plxcache", "makespan")]:
             with open(os.path.join(d, name)) as f:
                 text = f.read()
-            assert text.startswith(f"plxcache v1 {memo}\n"), name
+            assert text.startswith(f"plxcache v2 {memo} "), name
         with open(os.path.join(d, "evaluate.plxcache")) as f:
             text = f.read()
         back = persist_parse_evaluate(text)
-        assert back, "spill must carry evaluate entries"
-        assert persist_render_evaluate(back) == text, "spill not canonical"
+        assert back["entries"], "spill must carry evaluate entries"
+        assert persist_render_evaluate(back["entries"],
+                                       back["file_gen"]) == text, \
+            "spill not canonical"
     finally:
         if old is None:
             os.environ.pop(PERSIST_CACHE_DIR_ENV, None)
@@ -1805,6 +1863,7 @@ SERVE_CHECKS = [
     ("persist::evaluate_roundtrip_is_bit_exact", t_serve_persist_evaluate_roundtrip),
     ("persist::stage_and_makespan_roundtrip", t_serve_persist_stage_and_makespan_roundtrip),
     ("persist::version_gate_and_corrupt_lines", t_serve_persist_version_gate_and_corrupt_lines),
+    ("persist::v1_files_warm_load_byte_compatibly", t_serve_persist_v1_files_warm_load),
     ("persist::distinct_cal_and_hw_bits_never_alias", t_serve_persist_non_aliasing),
     ("persist::save_and_load_through_live_caches", t_serve_persist_save_and_load_live_caches),
     ("serve::plan_response_equals_cli_renderer_bytes", t_serve_plan_response_equals_renderer),
@@ -2014,6 +2073,389 @@ ARGMAX_CHECKS = [
     ("argmax::table3_render_matches_materializing", t_argmax_table3_render_matches_materializing),
 ]
 
+# ------------------------------------------------------------------ STRESS
+# The hardening layer (PR 8): deterministic fault injection
+# (rust/src/util/fault.rs), the v2 cache format with generations,
+# PLX_CACHE_MAX_BYTES eviction and quarantine (rust/src/sim/persist.rs),
+# and the serve socket-layer limits (rust/src/serve/mod.rs). The fault
+# PRNG streams are pinned cross-language: same seed, same site, same
+# draw index => same decision in Rust and Python.
+
+
+class _stress_env:
+    """Set env vars for one check, restore on exit, reset fault state."""
+
+    def __init__(self, **kv):
+        self.kv = {k.upper(): v for k, v in kv.items()}
+        self.old = {}
+
+    def __enter__(self):
+        for k, v in self.kv.items():
+            self.old[k] = os.environ.get(k)
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        fault_reset()
+        return self
+
+    def __exit__(self, *exc):
+        for k, v in self.old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        fault_reset()
+        return False
+
+
+def _stress_reset_disk_stats():
+    for k in _DISK_STATS:
+        _DISK_STATS[k][:] = [0, 0, 0, 0]
+
+
+class _stress_caches:
+    """Run one check against empty live memos, restoring the previous
+    contents on exit. The injected cut offset depends on the spilled
+    byte length, so fault-schedule determinism needs cache hermeticity
+    regardless of which suites ran before this one."""
+
+    def __enter__(self):
+        self.ev, self.st = dict(_EVAL_CACHE), dict(_STAGE_CACHE)
+        _EVAL_CACHE.clear()
+        _STAGE_CACHE.clear()
+        return self
+
+    def __exit__(self, *exc):
+        _EVAL_CACHE.clear()
+        _EVAL_CACHE.update(self.ev)
+        _STAGE_CACHE.clear()
+        _STAGE_CACHE.update(self.st)
+        return False
+
+
+def t_stress_prng_reference_vectors():
+    # rust: util/prng — xoshiro256** seeded via SplitMix64. The seed-0
+    # sequence below is the published rand_xoshiro reference vector, so
+    # this pins both mirrors to the upstream algorithm, not just to each
+    # other.
+    r = XoshiroRng(0)
+    assert [r.next_u64() for _ in range(4)] == [
+        0x99ec5f36cb75f2b4, 0xbf6e1f784956452a,
+        0x1a5f849d4933e6e0, 0x6aa594f1262d2d2c]
+    # The serve_stress.rs corpus seed, pinned so a cross-language replay
+    # of the fault schedule is byte-for-byte reproducible.
+    r = XoshiroRng(20260808)
+    assert r.next_u64() == 0xdff718f9cc65aad8
+    assert 0.0 <= XoshiroRng(1).f64() < 1.0
+    for n in (1, 2, 10, 65536):
+        assert XoshiroRng(3).below(n) < n
+
+
+def t_stress_fnv_and_site_streams():
+    # rust: fault::fnv1a64_matches_reference_vectors /
+    # per_site_streams_are_deterministic_and_independent
+    assert _fnv1a64("") == 0xcbf29ce484222325
+    assert _fnv1a64("a") == 0xaf63dc4c8601ec8c
+    assert _fnv1a64("foobar") == 0x85944171f73967e8
+    assert _fnv1a64("persist.write") == 0x42ab0e32f9c4349a
+    assert _fnv1a64("serve.write") == 0xf5ddecf973339969
+    seed = 42
+    a1 = XoshiroRng(seed ^ _fnv1a64("persist.write"))
+    a2 = XoshiroRng(seed ^ _fnv1a64("persist.write"))
+    b = XoshiroRng(seed ^ _fnv1a64("serve.write"))
+    sa1 = [a1.next_u64() for _ in range(16)]
+    sa2 = [a2.next_u64() for _ in range(16)]
+    sb = [b.next_u64() for _ in range(16)]
+    assert sa1 == sa2, "same seed + site must replay the same stream"
+    assert sa1 != sb, "distinct sites must draw from distinct streams"
+
+
+def t_stress_fault_gates_mirror_expressions():
+    # rust: fault::io_error / trunc_len — the armed gates consume
+    # exactly one draw (plus one for a firing cut), replayable by
+    # driving the same stream expressions by hand. Disarmed gates are
+    # pure no-ops.
+    with _stress_env(plx_fault_seed=None, plx_fault_io_p="1.0",
+                     plx_fault_trunc_p="1.0"):
+        assert not fault_enabled(), "no seed => disarmed"
+        for _ in range(4):
+            assert fault_io_error("persist.write") is False
+            assert fault_trunc_len("persist.write", 128) is None
+    with _stress_env(plx_fault_seed="7", plx_fault_io_p="0.5",
+                     plx_fault_trunc_p="0.5"):
+        assert fault_enabled()
+        replay = XoshiroRng(7 ^ _fnv1a64("persist.write"))
+        for _ in range(8):
+            assert fault_io_error("persist.write") == (replay.f64() < 0.5)
+        for length in (1, 100, 65536):
+            got = fault_trunc_len("persist.write", length)
+            if replay.f64() < 0.5:
+                want = replay.below(length)
+                assert got == want and got < length
+            else:
+                assert got is None
+        # Zero-length payloads never produce a cut, but the gate draw
+        # still advances the stream (matching Rust's || short-circuit).
+        before = [v for v in [fault_trunc_len("persist.write", 0)]]
+        assert before == [None]
+
+
+def t_stress_torn_write_quarantines_then_recovers():
+    # rust: tests/serve_stress.rs phase_fault_corpus (persist half) —
+    # a torn spill still renames into place; the next load quarantines
+    # the damaged file to .bad, counts it, and a clean re-spill then
+    # warm-loads bit-exact.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-stress-torn-")
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 1728)
+    v = validate(job, Layout(2, 2, 1, False, FLASH2RMS, True))
+    k = (job, v, A100, cal_key())
+    oc = Outcome("oom", required=9.0, budget=4.0)
+    _stress_reset_disk_stats()
+    try:
+        with _stress_caches():
+            _EVAL_CACHE[k] = oc
+            with _stress_env(plx_fault_seed="1", plx_fault_io_p="0",
+                             plx_fault_trunc_p="1.0"):
+                persist_save_all(d)  # every write torn at a seeded offset
+            with open(os.path.join(d, "evaluate.plxcache")) as f:
+                torn = f.read()
+            full = persist_render_evaluate(
+                [(1, (key, o)) for key, o in _stress_eval_entries()], 1)
+            assert torn != full and full.startswith(torn), \
+                "torn write must leave a strict prefix"
+            del _EVAL_CACHE[k]
+            persist_load_all(d)
+            bad = [n for n in os.listdir(d) if n.endswith(".bad")]
+            assert bad, "damaged files must quarantine to .bad"
+            total_quarantined = sum(_DISK_STATS[m][3] for m in _DISK_STATS)
+            assert total_quarantined == len(bad)
+            # Clean re-spill and reload: bit-exact recovery.
+            _EVAL_CACHE[k] = oc
+            persist_save_all(d)
+            del _EVAL_CACHE[k]
+            loaded = persist_load_all(d)
+            assert loaded["evaluate"] >= 1 and _EVAL_CACHE[k] == oc
+    finally:
+        _stress_reset_disk_stats()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _stress_eval_entries():
+    entries = []
+    for (job, v, hw, calbits), oc in _EVAL_CACHE.items():
+        a = job.arch
+        key = PersistEvalKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab,
+                             a.seq, job.cluster.gpus,
+                             job.cluster.gpus_per_node, job.gbs,
+                             hw_bits(hw), calbits, v.layout)
+        entries.append((key, oc))
+    return entries
+
+
+def t_stress_generations_preserved_across_saves():
+    # rust: persist::save_preserves_generations_and_bumps_file_gen — an
+    # entry keeps the generation it first reached disk at; the file
+    # counter bumps every spill; new entries stamp the new generation.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-stress-gen-")
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 1728)
+    v1l = validate(job, Layout(2, 2, 1, False, FLASH2RMS, True))
+    v2l = validate(job, Layout(2, 4, 1, False, FLASH2RMS, True))
+    k1 = (job, v1l, A100, cal_key())
+    k2 = (job, v2l, A100, cal_key())
+    try:
+        with _stress_caches():
+            _EVAL_CACHE[k1] = Outcome("unavail")
+            persist_save_all(d)
+            with open(os.path.join(d, "evaluate.plxcache")) as f:
+                t1 = f.read()
+            assert t1.startswith("plxcache v2 evaluate 1\n")
+            assert all(l.startswith("00000001 ")
+                       for l in t1.splitlines()[1:])
+            _EVAL_CACHE[k2] = Outcome("oom", required=2.0, budget=1.0)
+            persist_save_all(d)
+            with open(os.path.join(d, "evaluate.plxcache")) as f:
+                t2 = f.read()
+            assert t2.startswith("plxcache v2 evaluate 2\n")
+            gens = sorted(l.split(" ", 1)[0] for l in t2.splitlines()[1:])
+            assert gens == ["00000001", "00000002"], gens
+            # The surviving line's tokens are unchanged from spill one.
+            old_entry = t1.splitlines()[1].split(" ", 1)[1]
+            assert any(l == f"00000001 {old_entry}"
+                       for l in t2.splitlines()[1:])
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def t_stress_cap_evicts_oldest_generation_first():
+    # rust: persist::max_bytes_cap_evicts_oldest_generation_first — with
+    # PLX_CACHE_MAX_BYTES set, the oldest-generation entries are dropped
+    # first, the newest survive, and the header always survives.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-stress-cap-")
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 1792)
+    v1l = validate(job, Layout(2, 2, 1, False, FLASH2RMS, True))
+    v2l = validate(job, Layout(2, 4, 1, False, FLASH2RMS, True))
+    k1 = (job, v1l, A100, cal_key())
+    k2 = (job, v2l, A100, cal_key())
+    try:
+        with _stress_caches():
+            assert persist_max_bytes() is None, "cap must default off"
+            _EVAL_CACHE[k1] = Outcome("unavail")
+            persist_save_all(d)  # gen-1 entry on disk
+            _EVAL_CACHE[k2] = Outcome("unavail")
+            with open(os.path.join(d, "evaluate.plxcache")) as f:
+                line_len = len(f.read().splitlines()[1]) + 1
+            header_len = len("plxcache v2 evaluate 2\n")
+            # Both entries render to equal-length lines (same model,
+            # same digit widths), so this cap fits exactly one.
+            cap = header_len + line_len
+            with _stress_env(plx_cache_max_bytes=str(cap)):
+                stats = persist_save_all(d)
+            assert stats["evicted"] >= 1, stats
+            with open(os.path.join(d, "evaluate.plxcache")) as f:
+                t = f.read()
+            assert len(t.encode()) <= cap
+            kept = t.splitlines()[1:]
+            assert len(kept) == 1 and kept[0].startswith("00000002 "), \
+                "newest generation must survive, oldest must go"
+            # An absurdly small cap still writes a valid header-only
+            # file: the header always survives.
+            with _stress_env(plx_cache_max_bytes="1"):
+                persist_save_all(d)
+            with open(os.path.join(d, "evaluate.plxcache")) as f:
+                t = f.read()
+            assert t == "plxcache v2 evaluate 3\n", repr(t)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def t_stress_oversized_line_envelope_and_recovery():
+    # rust: serve::oversized_raw_line_gets_too_large_envelope_and_counts
+    # + tests/serve_stress.rs phase_limits — exact envelope bytes, the
+    # socket-layer counter (not dispatch errors), and recovery on the
+    # same state.
+    with _stress_env(plx_serve_max_line="64"):
+        state = ServeState()
+        assert state.limits["max_line"] == 64
+        long_line = '{"cmd":"plan","model":"' + "x" * 64 + '"}'
+        reply = serve_handle_raw_line(state, long_line)
+        assert reply == (serve_too_large_reply(64), False)
+        assert reply[0] == ('{"error":{"code":"too_large","message":'
+                            '"request line exceeds 64 bytes"},"ok":false}')
+        assert state.too_large == 1 and state.errors == 0
+        assert serve_handle_raw_line(state, "   ") is None, "blank => no reply"
+        # A line of exactly max_line bytes is NOT too large.
+        pad = 64 - len('{"cmd":"warp","pad":""}')
+        exact = '{"cmd":"warp","pad":"' + "y" * pad + '"}'
+        assert len(exact.encode()) == 64
+        text, shutdown = serve_handle_raw_line(state, exact)
+        assert not shutdown and '"code":"unknown_cmd"' in text
+        assert state.too_large == 1 and state.errors == 1
+        # Multi-byte characters count in bytes, like the Rust reader:
+        # "ééé" is 3 chars but 6 bytes, over a 4-byte limit.
+        state2 = ServeState(limits={"timeout_ms": 0, "max_line": 4,
+                                    "max_conns": 1})
+        assert serve_handle_raw_line(state2, "ééé") == \
+            (serve_too_large_reply(4), False)
+        assert state2.too_large == 1
+
+
+def t_stress_timeout_and_overloaded_envelope_bytes():
+    # rust: serve::timeout_and_overloaded_envelopes_are_standard_errors
+    # — the exact bytes phase_timeout/phase_overload assert over a real
+    # socket, pinned here without one.
+    assert serve_timeout_reply(200) == (
+        '{"error":{"code":"timeout","message":'
+        '"no complete request within 200 ms"},"ok":false}')
+    assert serve_overloaded_reply(1) == (
+        '{"error":{"code":"overloaded","message":'
+        '"connection budget exhausted (1 active connections)"},"ok":false}')
+    for text in (serve_timeout_reply(0), serve_overloaded_reply(64),
+                 serve_too_large_reply(65536)):
+        j = json_parse(text)
+        assert j["ok"] is False and j["error"]["code"] in (
+            "timeout", "overloaded", "too_large")
+    # Limits resolve from env with safe fallbacks (Limits::from_env).
+    with _stress_env(plx_serve_timeout_ms="250", plx_serve_max_line="bogus",
+                     plx_serve_max_conns="0"):
+        limits = serve_limits_from_env()
+        assert limits["timeout_ms"] == 250
+        assert limits["max_line"] == SERVE_DEFAULT_MAX_LINE, \
+            "unparseable => default, never an error"
+        assert limits["max_conns"] == 1, "max_conns clamps to at least 1"
+
+
+def t_stress_fault_corpus_envelopes_stay_valid():
+    # rust: tests/serve_stress.rs phase_fault_corpus (dispatch half) —
+    # with IO-error and torn-write injection armed around the spill
+    # path, every response is still a valid envelope, the mirror never
+    # raises, and a disarmed warm restart loads whatever survived.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-stress-corpus-")
+    corpus = [
+        '{"cmd":"plan","model":"llama13b","nodes":1}',
+        '{torn garbage',
+        '{"cmd":"warp"}',
+        '{"cmd":"plan"}',
+        '{"cmd":"predict-mem","model":"llama13b","nodes":1,"tp":2,"pp":2}',
+        '{"cmd":"stats"}',
+        '[1,2,3]',
+        '{"cmd":"plan","jobs":[{"model":"llama13b","nodes":1}]}',
+        '{"cmd":"sweep","preset":"nope"}',
+    ]
+    _stress_reset_disk_stats()
+    try:
+        with _stress_caches():
+            with _stress_env(plx_cache_dir=d, plx_fault_seed="20260808",
+                             plx_fault_io_p="0.25", plx_fault_trunc_p="0.25"):
+                state = ServeState()
+                for round_i in range(3):
+                    for req in corpus:
+                        out = serve_handle_raw_line(state, req)
+                        assert out is not None
+                        text, shutdown = out
+                        assert not shutdown
+                        j = json_parse(text)  # must never be torn/invalid
+                        assert "ok" in j, (round_i, req, text)
+                sd_text, sd = serve_handle_raw_line(state,
+                                                    '{"cmd":"shutdown"}')
+                assert sd and json_parse(sd_text)["ok"] is True
+            # Disarmed warm restart: quarantine counts match .bad files
+            # and a fresh request still answers.
+            _EVAL_CACHE.clear()
+            _STAGE_CACHE.clear()
+            persist_load_all(d)
+            bad = [n for n in os.listdir(d) if n.endswith(".bad")]
+            total_quarantined = sum(_DISK_STATS[m][3] for m in _DISK_STATS)
+            assert total_quarantined == len(bad), (bad, dict(_DISK_STATS))
+            state = ServeState()
+            text, _ = serve_handle_line(
+                state, '{"cmd":"plan","model":"llama13b","nodes":1}')
+            assert json_parse(text)["ok"] is True
+    finally:
+        _stress_reset_disk_stats()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+STRESS_CHECKS = [
+    ("prng::xoshiro_reference_vectors_pinned", t_stress_prng_reference_vectors),
+    ("fault::fnv_vectors_and_site_streams", t_stress_fnv_and_site_streams),
+    ("fault::gates_mirror_stream_expressions", t_stress_fault_gates_mirror_expressions),
+    ("persist::torn_write_quarantines_then_recovers", t_stress_torn_write_quarantines_then_recovers),
+    ("persist::generations_preserved_across_saves", t_stress_generations_preserved_across_saves),
+    ("persist::cap_evicts_oldest_generation_first", t_stress_cap_evicts_oldest_generation_first),
+    ("serve::oversized_line_envelope_and_recovery", t_stress_oversized_line_envelope_and_recovery),
+    ("serve::timeout_overloaded_envelope_bytes", t_stress_timeout_and_overloaded_envelope_bytes),
+    ("serve::fault_corpus_envelopes_stay_valid", t_stress_fault_corpus_envelopes_stay_valid),
+]
+
 
 def main():
     for name, fn in CHECKS:
@@ -2043,6 +2485,10 @@ def main():
     for name, fn in ARGMAX_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - serve_pass} / {len(ARGMAX_CHECKS)} (argmax suite)")
+    argmax_pass = len(PASS)
+    for name, fn in STRESS_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - argmax_pass} / {len(STRESS_CHECKS)} (stress suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

@@ -902,10 +902,13 @@ class LayerCosts:
 _STAGE_CACHE = {}
 
 # Memo observability, mirroring rust/src/sim/cache.rs::stats /
-# disk_stats: per-memo [hits, misses] plus [loaded, hits] for entries
-# that came from a PLX_CACHE_DIR warm start (persist_load_all below).
+# disk_stats: per-memo [hits, misses] plus, for the PLX_CACHE_DIR warm
+# start (persist_load_all below), per-memo
+# [loaded, hits, skipped, quarantined] — skipped counts corrupt entry
+# lines, quarantined counts damaged files renamed to `.bad`.
 _MEMO_STATS = {"evaluate": [0, 0], "stage": [0, 0]}
-_DISK_STATS = {"evaluate": [0, 0], "stage": [0, 0], "makespan": [0, 0]}
+_DISK_STATS = {"evaluate": [0, 0, 0, 0], "stage": [0, 0, 0, 0],
+               "makespan": [0, 0, 0, 0]}
 _DISK_KEYS = {"evaluate": set(), "stage": set()}
 
 
@@ -2275,15 +2278,172 @@ def json_write(v):
                               for k in sorted(v)) + "}"
     raise TypeError(f"not a JSON value: {type(v)!r}")
 
+# ---------------------------------------------------------------- util/fault
+
+# Mirror of rust/src/util/fault.rs: deterministic, seeded fault
+# injection for the persist file writes and (on the Rust side) serve
+# socket writes. Each site draws from its own xoshiro256** stream
+# seeded `seed ^ fnv1a64(site)`, so the decision sequence is a pure
+# function of (PLX_FAULT_SEED, site, call index) — identical in both
+# languages, pinned by the STRESS suite.
+
+_MASK64 = (1 << 64) - 1
+
+
+class XoshiroRng:
+    """Mirror of rust/src/util/prng.rs::Rng: xoshiro256** seeded via
+    SplitMix64, expression for expression with explicit u64 wrap."""
+
+    def __init__(self, seed):
+        x = seed & _MASK64
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & _MASK64
+            z = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    @staticmethod
+    def _rotl(v, k):
+        return ((v << k) | (v >> (64 - k))) & _MASK64
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & _MASK64, 7) * 9) & _MASK64
+        t = (s[1] << 17) & _MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        # Unbiased via rejection, like prng.rs::below.
+        zone = _MASK64 - (_MASK64 % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def _fnv1a64(s):
+    """FNV-1a over the utf-8 bytes of `s` (fault.rs::fnv1a64)."""
+    h = 0xcbf29ce484222325
+    for b in s.encode():
+        h ^= b
+        h = (h * 0x100000001b3) & _MASK64
+    return h
+
+
+def _parse_u64(v):
+    """Mirror of Rust's `str::parse::<u64>`: optional leading '+',
+    ASCII digits, and a u64 range check — None on anything else."""
+    t = v[1:] if v.startswith("+") else v
+    if not t or not all("0" <= c <= "9" for c in t):
+        return None
+    n = int(t)
+    return n if n <= _MASK64 else None
+
+
+FAULT_SEED_ENV = "PLX_FAULT_SEED"
+FAULT_IO_P_ENV = "PLX_FAULT_IO_P"
+FAULT_TRUNC_P_ENV = "PLX_FAULT_TRUNC_P"
+
+_FAULT = [None]  # lazily env-initialized config (fault.rs::FAULTS)
+
+
+def _fault_env_prob(name):
+    v = os.environ.get(name)
+    if not v:
+        return 0.0
+    try:
+        p = float(v)
+    except ValueError:
+        p = 0.0
+    return min(max(p, 0.0), 1.0)
+
+
+def _fault_config():
+    if _FAULT[0] is None:
+        v = os.environ.get(FAULT_SEED_ENV) or ""
+        _FAULT[0] = {
+            "seed": _parse_u64(v) if v else None,
+            "io_p": _fault_env_prob(FAULT_IO_P_ENV),
+            "trunc_p": _fault_env_prob(FAULT_TRUNC_P_ENV),
+            "streams": {},
+        }
+    return _FAULT[0]
+
+
+def fault_reset():
+    """Drop the cached config and stream positions; the next call
+    re-reads the environment (fault.rs::reset)."""
+    _FAULT[0] = None
+
+
+def fault_enabled():
+    return _fault_config()["seed"] is not None
+
+
+def _fault_stream(cfg, site):
+    rng = cfg["streams"].get(site)
+    if rng is None:
+        rng = XoshiroRng(cfg["seed"] ^ _fnv1a64(site))
+        cfg["streams"][site] = rng
+    return rng
+
+
+def fault_io_error(site):
+    """One gate draw from the site's stream when armed (fault.rs::io_error)."""
+    cfg = _fault_config()
+    if cfg["seed"] is None:
+        return False
+    return _fault_stream(cfg, site).f64() < cfg["io_p"]
+
+
+def fault_trunc_len(site, length):
+    """Torn-write gate: None, or a cut offset in [0, length)
+    (fault.rs::trunc_len — gate draw, then the offset draw)."""
+    cfg = _fault_config()
+    if cfg["seed"] is None:
+        return None
+    rng = _fault_stream(cfg, site)
+    if rng.f64() >= cfg["trunc_p"] or length == 0:
+        return None
+    return rng.below(length)
+
 # ---------------------------------------------------------------- sim/persist
 
 # Mirror of rust/src/sim/persist.rs: the PLX_CACHE_DIR on-disk memo
 # format (see docs/cache.md). Same header, same token order, same
 # 16-hex-digit f64 bit patterns, same lexicographic line sort — a file
-# written by either language parses bit-exact in the other.
+# written by either language parses bit-exact in the other. Format v2
+# adds a per-file generation counter and a fixed-width per-entry
+# generation prefix (the spill at which the entry first reached disk);
+# v1 files still warm-load byte-compatibly at generation 1.
 
-PERSIST_FORMAT_VERSION = 1
+PERSIST_FORMAT_VERSION = 2
 PERSIST_CACHE_DIR_ENV = "PLX_CACHE_DIR"
+PERSIST_MAX_BYTES_ENV = "PLX_CACHE_MAX_BYTES"  # persist.rs::MAX_BYTES_ENV
+
+
+def persist_max_bytes():
+    """Mirror of persist.rs::max_bytes: the per-file spill cap, or None
+    when unset/empty/unparseable/zero."""
+    v = os.environ.get(PERSIST_MAX_BYTES_ENV)
+    if not v:
+        return None
+    try:
+        n = int(v)
+    except ValueError:
+        return None
+    return n if n > 0 else None
 
 # Kernel short codes used in cache lines (persist.rs::kernel_code); the
 # in-memory pysim kernel constants are the paper labels, which contain
@@ -2364,13 +2524,16 @@ class PersistMsKey:
     cost_bits: tuple
 
 
-def _persist_header(memo):
-    return f"plxcache v{PERSIST_FORMAT_VERSION} {memo}\n"
+def _persist_header(memo, file_gen):
+    return f"plxcache v{PERSIST_FORMAT_VERSION} {memo} {file_gen}\n"
 
 
-def _persist_body(memo, lines):
-    out = [_persist_header(memo)]
-    for l in sorted(lines):
+def _persist_render_file(memo, file_gen, tagged):
+    """Mirror of persist.rs::render_file: sorted-line v2 file — same
+    (generation, entry) set in, same bytes out, regardless of which
+    language wrote it."""
+    out = [_persist_header(memo, file_gen)]
+    for l in sorted(tagged):
         out.append(l + "\n")
     return "".join(out)
 
@@ -2387,55 +2550,68 @@ def _eval_key_tokens(k):
     return " ".join(t)
 
 
-def persist_render_evaluate(entries):
-    lines = []
-    for k, out in entries:
-        if out.kind == "ok":
-            payload = " ".join(
-                ["ok", f64_hex(out.step_time_s), f64_hex(out.mfu)]
-                + [f64_hex(v) for v in (
-                    out.mem.weights, out.mem.grads, out.mem.optimizer,
-                    out.mem.activations, out.mem.logits, out.mem.workspace,
-                    out.step.compute, out.step.tp_comm, out.step.pp_comm,
-                    out.step.bubble, out.step.dp_comm, out.step.optimizer)])
-        elif out.kind == "oom":
-            payload = f"oom {f64_hex(out.required)} {f64_hex(out.budget)}"
-        else:
-            payload = "unavail"
-        lines.append(f"{_eval_key_tokens(k)} {payload}")
-    return _persist_body("evaluate", lines)
+def _persist_evaluate_line(k, out):
+    if out.kind == "ok":
+        payload = " ".join(
+            ["ok", f64_hex(out.step_time_s), f64_hex(out.mfu)]
+            + [f64_hex(v) for v in (
+                out.mem.weights, out.mem.grads, out.mem.optimizer,
+                out.mem.activations, out.mem.logits, out.mem.workspace,
+                out.step.compute, out.step.tp_comm, out.step.pp_comm,
+                out.step.bubble, out.step.dp_comm, out.step.optimizer)])
+    elif out.kind == "oom":
+        payload = f"oom {f64_hex(out.required)} {f64_hex(out.budget)}"
+    else:
+        payload = "unavail"
+    return f"{_eval_key_tokens(k)} {payload}"
 
 
-def persist_render_stage(entries):
-    lines = []
-    for k, c in entries:
-        t = [str(k.layers), str(k.hidden), str(k.heads), str(k.ffn),
-             str(k.vocab), str(k.seq)]
-        t += [bits_hex(b) for b in k.hw_bits]
-        t += [bits_hex(b) for b in k.cal]
-        tp, mb, ckpt, kernel, sp = k.stage
-        t += [str(tp), str(mb), str(int(ckpt)), KERNEL_CODES[kernel], str(int(sp))]
-        t += [f64_hex(v) for v in (
-            c.layer_fwd, c.layer_bwd, c.head_fwd, c.head_bwd,
-            c.tp_per_layer, c.sp_factor, c.p2p_intra, c.p2p_inter,
-            c.act_bytes, c.act_bytes_full)]
-        lines.append(" ".join(t))
-    return _persist_body("stage", lines)
+def _persist_stage_line(k, c):
+    t = [str(k.layers), str(k.hidden), str(k.heads), str(k.ffn),
+         str(k.vocab), str(k.seq)]
+    t += [bits_hex(b) for b in k.hw_bits]
+    t += [bits_hex(b) for b in k.cal]
+    tp, mb, ckpt, kernel, sp = k.stage
+    t += [str(tp), str(mb), str(int(ckpt)), KERNEL_CODES[kernel], str(int(sp))]
+    t += [f64_hex(v) for v in (
+        c.layer_fwd, c.layer_bwd, c.head_fwd, c.head_bwd,
+        c.tp_per_layer, c.sp_factor, c.p2p_intra, c.p2p_inter,
+        c.act_bytes, c.act_bytes_full)]
+    return " ".join(t)
 
 
-def persist_render_makespan(entries):
-    lines = []
-    for k, ms in entries:
-        t = [k.sched, str(k.pp), str(k.m)]
-        t += [bits_hex(b) for b in k.cost_bits]
-        if ms is None:
-            t.append("deadlock")
-        else:
-            total, busy = ms
-            t.append(f64_hex(total))
-            t += [f64_hex(v) for v in busy]
-        lines.append(" ".join(t))
-    return _persist_body("makespan", lines)
+def _persist_makespan_line(k, ms):
+    t = [k.sched, str(k.pp), str(k.m)]
+    t += [bits_hex(b) for b in k.cost_bits]
+    if ms is None:
+        t.append("deadlock")
+    else:
+        total, busy = ms
+        t.append(f64_hex(total))
+        t += [f64_hex(v) for v in busy]
+    return " ".join(t)
+
+
+# Tagged renderers (persist.rs::render_evaluate/stage/makespan):
+# `entries` is [(gen, (key, value))] and `file_gen` is the file's
+# generation counter.
+
+def persist_render_evaluate(entries, file_gen):
+    return _persist_render_file(
+        "evaluate", file_gen,
+        [f"{g:08x} {_persist_evaluate_line(k, out)}" for g, (k, out) in entries])
+
+
+def persist_render_stage(entries, file_gen):
+    return _persist_render_file(
+        "stage", file_gen,
+        [f"{g:08x} {_persist_stage_line(k, c)}" for g, (k, c) in entries])
+
+
+def persist_render_makespan(entries, file_gen):
+    return _persist_render_file(
+        "makespan", file_gen,
+        [f"{g:08x} {_persist_makespan_line(k, ms)}" for g, (k, ms) in entries])
 
 
 class _PersistToks:
@@ -2478,11 +2654,80 @@ class _PersistToks:
         return self.i >= len(self.t)
 
 
-def _persist_entry_lines(text, memo):
+def _persist_parse_gen(s):
+    """Mirror of persist.rs::parse_gen_dec: strict decimal u32 —
+    digits only, no sign."""
+    if not s or not all("0" <= c <= "9" for c in s):
+        return None
+    n = int(s)
+    return n if n <= 0xFFFFFFFF else None
+
+
+def _persist_parse_header(first, memo):
+    """Mirror of persist.rs::parse_header. Returns "v1", ("v2", gen),
+    "cold" (a recognized plxcache header that is not ours — unknown
+    version or wrong memo), or "corrupt" (not a plxcache header)."""
+    t = first.split()
+    if len(t) < 2 or t[0] != "plxcache":
+        return "corrupt"
+    if t[1] == "v1" and len(t) == 3 and t[2] == memo:
+        return "v1"
+    if t[1] == "v2" and len(t) == 4 and t[2] == memo:
+        g = _persist_parse_gen(t[3])
+        return ("v2", g) if g is not None else "corrupt"
+    return "cold"
+
+
+def _persist_split_gen_line(line):
+    """Mirror of persist.rs::split_gen_line: (gen, entry tokens), or
+    None if the 8-hex-digit generation prefix is malformed."""
+    parts = line.split(" ", 1)
+    if len(parts) != 2:
+        return None
+    g, rest = parts
+    if len(g) != 8 or not all(c in "0123456789abcdefABCDEF" for c in g):
+        return None
+    return (int(g, 16), rest)
+
+
+def _persist_parse_file(text, memo, parse_entry):
+    """Mirror of persist.rs::parse_file -> Loaded: a dict with
+    "entries" ([(gen, entry)]), "file_gen" (1 for v1 files, 0 when
+    cold), "skipped" (corrupt entry lines), and "unrecognized" (the
+    first line is not a plxcache header at all)."""
+    cold = {"entries": [], "file_gen": 0, "skipped": 0, "unrecognized": False}
     lines = text.splitlines()
-    if not lines or lines[0] != f"plxcache v{PERSIST_FORMAT_VERSION} {memo}":
-        return []
-    return [l for l in lines[1:] if l.strip()]
+    if not lines:
+        return cold
+    header = _persist_parse_header(lines[0], memo)
+    if header == "cold":
+        return cold
+    if header == "corrupt":
+        return dict(cold, unrecognized=True)
+    v2 = header != "v1"
+    out = {"entries": [], "file_gen": header[1] if v2 else 1,
+           "skipped": 0, "unrecognized": False}
+    for line in lines[1:]:
+        if not line.strip():
+            continue
+        if v2:
+            split = _persist_split_gen_line(line)
+            parsed = None
+            if split is not None:
+                e = parse_entry(split[1])
+                parsed = (split[0], e) if e is not None else None
+        else:
+            e = parse_entry(line)
+            parsed = (1, e) if e is not None else None
+        if parsed is not None:
+            out["entries"].append(parsed)
+        else:
+            out["skipped"] += 1
+    return out
+
+
+def _persist_damaged(loaded):
+    return loaded["unrecognized"] or loaded["skipped"] > 0
 
 
 def _parse_eval_key(t):
@@ -2504,92 +2749,90 @@ def _parse_eval_key(t):
     return PersistEvalKey(*nums, hw, cal, layout)
 
 
+def _persist_parse_evaluate_entry(line):
+    t = _PersistToks(line)
+    key = _parse_eval_key(t)
+    if key is None:
+        return None
+    tag = t.s()
+    if tag == "ok":
+        f = [t.f64() for _ in range(14)]
+        if any(v is None for v in f):
+            return None
+        oc = Outcome("ok", step_time_s=f[0], mfu=f[1],
+                     mem=MemoryBreakdown(*f[2:8]),
+                     step=StepBreakdown(*f[8:14]))
+    elif tag == "oom":
+        req, bud = t.f64(), t.f64()
+        if req is None or bud is None:
+            return None
+        oc = Outcome("oom", required=req, budget=bud)
+    elif tag == "unavail":
+        oc = Outcome("unavail")
+    else:
+        return None
+    return (key, oc) if t.done() else None
+
+
+def _persist_parse_stage_entry(line):
+    t = _PersistToks(line)
+    nums = [t.usize() for _ in range(6)]
+    if any(v is None for v in nums):
+        return None
+    hw = tuple(t.bits() for _ in range(8))
+    cal = tuple(t.bits() for _ in range(len(CAL_VARS)))
+    if any(b is None for b in hw + cal):
+        return None
+    tp, mb = t.usize(), t.usize()
+    ckpt = t.bool01()
+    kernel = KERNEL_PARSE.get(t.s() or "")
+    sp = t.bool01()
+    if None in (tp, mb, ckpt, kernel, sp):
+        return None
+    f = [t.f64() for _ in range(10)]
+    if any(v is None for v in f):
+        return None
+    key = PersistStageKey(*nums, hw, cal, (tp, mb, ckpt, kernel, sp))
+    return (key, LayerCosts(*f)) if t.done() else None
+
+
+def _persist_parse_makespan_entry(line):
+    t = _PersistToks(line)
+    sched = sched_parse(t.s() or "")
+    pp, m = t.usize(), t.usize()
+    if None in (sched, pp, m):
+        return None
+    cost_bits = tuple(t.bits() for _ in range(5))
+    if any(b is None for b in cost_bits):
+        return None
+    key = PersistMsKey(sched, pp, m, cost_bits)
+    first = t.s()
+    if first is None:
+        return None
+    if first == "deadlock":
+        return (key, None) if t.done() else None
+    if len(first) != 16:
+        return None
+    try:
+        total = struct.unpack("<d", struct.pack("<Q", int(first, 16)))[0]
+    except ValueError:
+        return None
+    busy = [t.f64() for _ in range(pp)]
+    if any(v is None for v in busy):
+        return None
+    return (key, (total, busy)) if t.done() else None
+
+
 def persist_parse_evaluate(text):
-    out = []
-    for line in _persist_entry_lines(text, "evaluate"):
-        t = _PersistToks(line)
-        key = _parse_eval_key(t)
-        if key is None:
-            continue
-        tag = t.s()
-        if tag == "ok":
-            f = [t.f64() for _ in range(14)]
-            if any(v is None for v in f):
-                continue
-            oc = Outcome("ok", step_time_s=f[0], mfu=f[1],
-                         mem=MemoryBreakdown(*f[2:8]),
-                         step=StepBreakdown(*f[8:14]))
-        elif tag == "oom":
-            req, bud = t.f64(), t.f64()
-            if req is None or bud is None:
-                continue
-            oc = Outcome("oom", required=req, budget=bud)
-        elif tag == "unavail":
-            oc = Outcome("unavail")
-        else:
-            continue
-        if t.done():
-            out.append((key, oc))
-    return out
+    return _persist_parse_file(text, "evaluate", _persist_parse_evaluate_entry)
 
 
 def persist_parse_stage(text):
-    out = []
-    for line in _persist_entry_lines(text, "stage"):
-        t = _PersistToks(line)
-        nums = [t.usize() for _ in range(6)]
-        if any(v is None for v in nums):
-            continue
-        hw = tuple(t.bits() for _ in range(8))
-        cal = tuple(t.bits() for _ in range(len(CAL_VARS)))
-        if any(b is None for b in hw + cal):
-            continue
-        tp, mb = t.usize(), t.usize()
-        ckpt = t.bool01()
-        kernel = KERNEL_PARSE.get(t.s() or "")
-        sp = t.bool01()
-        if None in (tp, mb, ckpt, kernel, sp):
-            continue
-        f = [t.f64() for _ in range(10)]
-        if any(v is None for v in f):
-            continue
-        key = PersistStageKey(*nums, hw, cal, (tp, mb, ckpt, kernel, sp))
-        if t.done():
-            out.append((key, LayerCosts(*f)))
-    return out
+    return _persist_parse_file(text, "stage", _persist_parse_stage_entry)
 
 
 def persist_parse_makespan(text):
-    out = []
-    for line in _persist_entry_lines(text, "makespan"):
-        t = _PersistToks(line)
-        sched = sched_parse(t.s() or "")
-        pp, m = t.usize(), t.usize()
-        if None in (sched, pp, m):
-            continue
-        cost_bits = tuple(t.bits() for _ in range(5))
-        if any(b is None for b in cost_bits):
-            continue
-        key = PersistMsKey(sched, pp, m, cost_bits)
-        first = t.s()
-        if first is None:
-            continue
-        if first == "deadlock":
-            if t.done():
-                out.append((key, None))
-            continue
-        if len(first) != 16:
-            continue
-        try:
-            total = struct.unpack("<d", struct.pack("<Q", int(first, 16)))[0]
-        except ValueError:
-            continue
-        busy = [t.f64() for _ in range(pp)]
-        if any(v is None for v in busy):
-            continue
-        if t.done():
-            out.append((key, (total, busy)))
-    return out
+    return _persist_parse_file(text, "makespan", _persist_parse_makespan_entry)
 
 
 def persist_cache_dir():
@@ -2616,50 +2859,132 @@ def persist_readonly():
 
 
 def _persist_write_atomic(dirpath, name, content):
+    """Mirror of persist.rs::write_atomic, fault gates included: a hard
+    injected error raises like any real IO failure; a torn write cuts
+    the payload at a random byte and still renames into place (the
+    quarantine path then proves the reader survives it)."""
+    if fault_io_error("persist.write"):
+        raise OSError(f"injected fault: {name}")
+    data = content.encode()
+    cut = fault_trunc_len("persist.write", len(data))
+    if cut is not None:
+        data = data[:cut]
     tmp = os.path.join(dirpath, f".{name}.tmp.{os.getpid()}")
-    with open(tmp, "w") as f:
-        f.write(content)
+    with open(tmp, "wb") as f:
+        f.write(data)
     os.replace(tmp, os.path.join(dirpath, name))
+
+
+def _persist_line_generations(text, memo):
+    """Mirror of persist.rs::line_generations: the old file's generation
+    counter and each surviving entry's generation, keyed by the entry
+    tokens (without the prefix). Corrupt or alien files contribute
+    nothing — every entry restarts at the new generation."""
+    gens = {}
+    lines = text.splitlines()
+    if not lines:
+        return (0, gens)
+    header = _persist_parse_header(lines[0], memo)
+    if header == "v1":
+        for l in lines[1:]:
+            if l.strip():
+                gens[l] = 1
+        return (1, gens)
+    if header in ("cold", "corrupt"):
+        return (0, gens)
+    for l in lines[1:]:
+        if not l.strip():
+            continue
+        split = _persist_split_gen_line(l)
+        if split is not None:
+            gens[split[1]] = split[0]
+    return (header[1], gens)
+
+
+def _persist_save_memo(dirpath, name, memo, entry_tokens, cap):
+    """Mirror of persist.rs::save_memo: render and atomically replace
+    one memo file, preserving each surviving entry's generation from the
+    old file (so generations track age on disk and oldest-first eviction
+    is FIFO), then evict from the sorted front until the cap fits."""
+    try:
+        with open(os.path.join(dirpath, name)) as f:
+            old = f.read()
+    except OSError:
+        old = ""
+    old_gen, gens = _persist_line_generations(old, memo)
+    file_gen = min(old_gen + 1, 0xFFFFFFFF)
+    lines = sorted(f"{gens.get(t, file_gen):08x} {t}" for t in entry_tokens)
+    header = _persist_header(memo, file_gen)
+    evicted = 0
+    if cap is not None:
+        # Fixed-width generation prefix: sorted order = generation
+        # order, so dropping from the front is oldest-generation
+        # eviction. The header always survives.
+        total = len(header) + sum(len(l) + 1 for l in lines)
+        while total > cap and evicted < len(lines):
+            total -= len(lines[evicted]) + 1
+            evicted += 1
+        lines = lines[evicted:]
+    _persist_write_atomic(dirpath, name, header + "".join(l + "\n" for l in lines))
+    return {"written": len(lines), "evicted": evicted}
 
 
 def persist_save_all(dirpath):
     """Mirror of persist.rs::save_all. pysim has no makespan memo (the
     Rust side's Arc<Makespan> cache), so makespan.plxcache is written
-    with whatever a prior load left — typically header-only."""
+    with no entries of its own — generations of a prior file's lines are
+    not preserved for entries we do not hold."""
     os.makedirs(dirpath, exist_ok=True)
-    eval_entries = []
+    cap = persist_max_bytes()
+    eval_tokens = []
     for (job, v, hw, calbits), oc in _EVAL_CACHE.items():
         a = job.arch
         key = PersistEvalKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab,
                              a.seq, job.cluster.gpus,
                              job.cluster.gpus_per_node, job.gbs,
                              hw_bits(hw), calbits, v.layout)
-        eval_entries.append((key, oc))
-    stage_entries = []
+        eval_tokens.append(_persist_evaluate_line(key, oc))
+    stage_tokens = []
     for (a, hw, calbits, st), costs in _STAGE_CACHE.items():
         key = PersistStageKey(a.layers, a.hidden, a.heads, a.ffn, a.vocab,
                               a.seq, hw_bits(hw), calbits, st)
-        stage_entries.append((key, costs))
-    stats = {"evaluate": len(eval_entries), "stage": len(stage_entries),
-             "makespan": 0}
-    _persist_write_atomic(dirpath, "evaluate.plxcache",
-                          persist_render_evaluate(eval_entries))
-    _persist_write_atomic(dirpath, "stage.plxcache",
-                          persist_render_stage(stage_entries))
-    _persist_write_atomic(dirpath, "makespan.plxcache",
-                          persist_render_makespan([]))
-    return stats
+        stage_tokens.append(_persist_stage_line(key, costs))
+    e = _persist_save_memo(dirpath, "evaluate.plxcache", "evaluate",
+                           eval_tokens, cap)
+    s = _persist_save_memo(dirpath, "stage.plxcache", "stage",
+                           stage_tokens, cap)
+    m = _persist_save_memo(dirpath, "makespan.plxcache", "makespan", [], cap)
+    return {"evaluate": e["written"], "stage": s["written"],
+            "makespan": m["written"],
+            "evicted": e["evicted"] + s["evicted"] + m["evicted"]}
 
 
 _ARCH_BY_DIMS = {(a.layers, a.hidden, a.heads, a.ffn, a.vocab, a.seq): a
                  for a in PRESETS.values()}
 
 
+def _persist_note_damage(dirpath, name, memo, loaded):
+    """Quarantine half of persist.rs::load_memo: count the damage and
+    (outside read-only mode) rename the file to `<name>.bad` so the next
+    spill starts clean and the operator can inspect what was lost."""
+    if not _persist_damaged(loaded):
+        return
+    _DISK_STATS[memo][2] += loaded["skipped"]
+    _DISK_STATS[memo][3] += 1
+    if not persist_readonly():
+        try:
+            os.replace(os.path.join(dirpath, name),
+                       os.path.join(dirpath, name + ".bad"))
+        except OSError:
+            pass
+
+
 def persist_load_all(dirpath):
     """Mirror of persist.rs::load_all: vacant-only inserts into the live
-    memos. Counts parsed entries like the Rust side; entries whose arch
-    dimensions match no named preset cannot be keyed in pysim (the
-    in-memory key holds the named arch) and are skipped after counting."""
+    memos, damage quarantined. Counts parsed entries like the Rust side;
+    entries whose arch dimensions match no named preset cannot be keyed
+    in pysim (the in-memory key holds the named arch) and are skipped
+    after counting."""
 
     def read(name):
         try:
@@ -2669,34 +2994,46 @@ def persist_load_all(dirpath):
             return ""
 
     stats = {"evaluate": 0, "stage": 0, "makespan": 0}
-    for key, oc in persist_parse_evaluate(read("evaluate.plxcache")):
-        stats["evaluate"] += 1
-        arch = _ARCH_BY_DIMS.get((key.layers, key.hidden, key.heads,
-                                  key.ffn, key.vocab, key.seq))
-        if arch is None:
-            continue
-        job = Job(arch, Cluster(key.gpus, key.gpus_per_node), key.gbs)
-        try:
-            v = validate(job, key.layout)
-        except ValueError:
-            continue
-        k = (job, v, hardware_from_bits(key.hw_bits), key.cal)
-        if k not in _EVAL_CACHE:
-            _EVAL_CACHE[k] = oc
-            _DISK_KEYS["evaluate"].add(k)
-            _DISK_STATS["evaluate"][0] += 1
-    for key, costs in persist_parse_stage(read("stage.plxcache")):
-        stats["stage"] += 1
-        arch = _ARCH_BY_DIMS.get((key.layers, key.hidden, key.heads,
-                                  key.ffn, key.vocab, key.seq))
-        if arch is None:
-            continue
-        k = (arch, hardware_from_bits(key.hw_bits), key.cal, key.stage)
-        if k not in _STAGE_CACHE:
-            _STAGE_CACHE[k] = costs
-            _DISK_KEYS["stage"].add(k)
-            _DISK_STATS["stage"][0] += 1
-    stats["makespan"] = len(persist_parse_makespan(read("makespan.plxcache")))
+    text = read("evaluate.plxcache")
+    if text:
+        loaded = persist_parse_evaluate(text)
+        stats["evaluate"] = len(loaded["entries"])
+        _persist_note_damage(dirpath, "evaluate.plxcache", "evaluate", loaded)
+        for _gen, (key, oc) in loaded["entries"]:
+            arch = _ARCH_BY_DIMS.get((key.layers, key.hidden, key.heads,
+                                      key.ffn, key.vocab, key.seq))
+            if arch is None:
+                continue
+            job = Job(arch, Cluster(key.gpus, key.gpus_per_node), key.gbs)
+            try:
+                v = validate(job, key.layout)
+            except ValueError:
+                continue
+            k = (job, v, hardware_from_bits(key.hw_bits), key.cal)
+            if k not in _EVAL_CACHE:
+                _EVAL_CACHE[k] = oc
+                _DISK_KEYS["evaluate"].add(k)
+                _DISK_STATS["evaluate"][0] += 1
+    text = read("stage.plxcache")
+    if text:
+        loaded = persist_parse_stage(text)
+        stats["stage"] = len(loaded["entries"])
+        _persist_note_damage(dirpath, "stage.plxcache", "stage", loaded)
+        for _gen, (key, costs) in loaded["entries"]:
+            arch = _ARCH_BY_DIMS.get((key.layers, key.hidden, key.heads,
+                                      key.ffn, key.vocab, key.seq))
+            if arch is None:
+                continue
+            k = (arch, hardware_from_bits(key.hw_bits), key.cal, key.stage)
+            if k not in _STAGE_CACHE:
+                _STAGE_CACHE[k] = costs
+                _DISK_KEYS["stage"].add(k)
+                _DISK_STATS["stage"][0] += 1
+    text = read("makespan.plxcache")
+    if text:
+        loaded = persist_parse_makespan(text)
+        stats["makespan"] = len(loaded["entries"])
+        _persist_note_damage(dirpath, "makespan.plxcache", "makespan", loaded)
     return stats
 
 
@@ -2710,11 +3047,17 @@ def persist_save_if_configured():
     if d is None:
         return None
     try:
-        return persist_save_all(d)
+        stats = persist_save_all(d)
     except OSError as e:
         import sys
         print(f"plx: warning: failed to write {d}: {e}", file=sys.stderr)
         return None
+    if stats["evicted"] > 0:
+        import sys
+        print(f"plx: cache cap: evicted {stats['evicted']} "
+              f"oldest-generation entries ({PERSIST_MAX_BYTES_ENV})",
+              file=sys.stderr)
+    return stats
 
 # ---------------------------------------------------------------- planner/render
 
@@ -2825,16 +3168,66 @@ def render_predict_mem(job, v, hw, hw_label):
 
 SERVE_DEFAULT_ADDR = "127.0.0.1:7077"
 SERVE_ADDR_ENV = "PLX_SERVE_ADDR"
+SERVE_TIMEOUT_ENV = "PLX_SERVE_TIMEOUT_MS"
+SERVE_MAX_LINE_ENV = "PLX_SERVE_MAX_LINE"
+SERVE_MAX_CONNS_ENV = "PLX_SERVE_MAX_CONNS"
+SERVE_DEFAULT_MAX_LINE = 65536
+SERVE_DEFAULT_MAX_CONNS = 64
+
+
+def serve_limits_from_env():
+    """Mirror of serve/mod.rs::Limits::from_env: unparseable values fall
+    back to the default rather than erroring; max_conns is clamped to at
+    least 1. Returns {"timeout_ms", "max_line", "max_conns"}."""
+    def env_u64(name, default):
+        v = os.environ.get(name)
+        if not v:
+            return default
+        n = _parse_u64(v)
+        return default if n is None else n
+
+    return {
+        "timeout_ms": env_u64(SERVE_TIMEOUT_ENV, 0),
+        "max_line": env_u64(SERVE_MAX_LINE_ENV, SERVE_DEFAULT_MAX_LINE),
+        "max_conns": max(1, env_u64(SERVE_MAX_CONNS_ENV,
+                                    SERVE_DEFAULT_MAX_CONNS)),
+    }
 
 
 class ServeState:
-    def __init__(self):
+    def __init__(self, limits=None):
         self.started = time.monotonic()
+        self.limits = serve_limits_from_env() if limits is None else limits
         self.requests = 0
         self.deduped = 0  # serial mirror: never bumped (no concurrency)
         self.errors = 0
+        # Socket-layer incidents, orthogonal to dispatch errors: a
+        # request that never reached serve_handle_line is not an error
+        # there (serve/mod.rs::State).
+        self.too_large = 0
+        self.timeouts = 0
+        self.rejected = 0
+        self.drained = 0
         self.latency_us = 0
         self.spilled = (0, 0)
+
+
+# Envelope bytes for the socket-layer incidents (serve/mod.rs's
+# too_large_reply / timeout_reply / overloaded_reply — pinned by the
+# STRESS suite and the Rust unit tests alike).
+
+def serve_too_large_reply(max_line):
+    return _serve_err("too_large", f"request line exceeds {max_line} bytes")
+
+
+def serve_timeout_reply(timeout_ms):
+    return _serve_err("timeout", f"no complete request within {timeout_ms} ms")
+
+
+def serve_overloaded_reply(max_conns):
+    return _serve_err(
+        "overloaded",
+        f"connection budget exhausted ({max_conns} active connections)")
 
 
 class _ServeError(Exception):
@@ -3048,19 +3441,27 @@ def _serve_stats(state):
         return {"entries": entries, "hits": h, "misses": m}
 
     def disk(name):
-        loaded, hits = _DISK_STATS[name]
-        return {"hits": hits, "loaded": loaded}
+        loaded, hits, skipped, quarantined = _DISK_STATS[name]
+        return {"hits": hits, "loaded": loaded,
+                "quarantined": quarantined, "skipped": skipped}
 
     stats = {
         "deduped": state.deduped,
         "disk": {"evaluate": disk("evaluate"), "makespan": disk("makespan"),
                  "stage": disk("stage")},
+        "drained": state.drained,
         "errors": state.errors,
         "latency_us": {"count": state.requests, "total": state.latency_us},
+        "limits": {"max_conns": state.limits["max_conns"],
+                   "max_line": state.limits["max_line"],
+                   "timeout_ms": state.limits["timeout_ms"]},
         "memos": {"evaluate": memo("evaluate", len(_EVAL_CACHE)),
                   "makespan": memo("makespan", 0),
                   "stage": memo("stage", len(_STAGE_CACHE))},
+        "rejected": state.rejected,
         "requests": state.requests,
+        "timeouts": state.timeouts,
+        "too_large": state.too_large,
         "uptime_s": time.monotonic() - state.started,
     }
     return json_write({"cmd": "stats", "ok": True, "stats": stats})
@@ -3121,3 +3522,15 @@ def serve_handle_line(state, line):
             persist_save_if_configured()
             state.spilled = now
     return text, shutdown
+
+
+def serve_handle_raw_line(state, line):
+    """Mirror of serve/mod.rs::handle_raw_line, the socket-layer gate in
+    front of serve_handle_line: the max-line check (in bytes) and the
+    blank-line skip. None means no reply is sent."""
+    if len(line.encode()) > state.limits["max_line"]:
+        state.too_large += 1
+        return (serve_too_large_reply(state.limits["max_line"]), False)
+    if not line.strip():
+        return None
+    return serve_handle_line(state, line)

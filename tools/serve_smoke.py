@@ -24,7 +24,20 @@ test can show — a warm restart serving disk hits out of PLX_CACHE_DIR:
      warmed entries, repeated queries answer with the same bytes, and
      the stats report shows disk.evaluate.loaded > 0 AND
      disk.evaluate.hits > 0 (the lookups were served by disk entries);
-  7. writes a stats artifact (cold + warm stats responses) for upload.
+  7. socket-layer limits: an oversized request line draws the
+     `too_large` envelope and the connection recovers; a silent
+     connection under PLX_SERVE_TIMEOUT_MS draws `timeout` then EOF; a
+     connection beyond PLX_SERVE_MAX_CONNS=1 is shed with `overloaded`
+     then EOF — each counted in stats, none counted as dispatch errors;
+  8. fault injection + quarantine: a CLI run with PLX_FAULT_SEED and
+     PLX_FAULT_TRUNC_P=1.0 tears every spill (the kill-mid-spill
+     analog) yet still prints the cacheless bytes; the next, disarmed
+     run quarantines damage to `.bad` (reported by --cache-stats),
+     recomputes, and respills; a third run warm-loads with disk hits;
+  9. writes a stats artifact (cold + warm stats responses) for upload.
+
+Every daemon shutdown also asserts the graceful-drain report on
+stderr ("N connections drained").
 
 Usage: python3 tools/serve_smoke.py [--bin PATH] [--artifact PATH]
 """
@@ -32,6 +45,7 @@ Usage: python3 tools/serve_smoke.py [--bin PATH] [--artifact PATH]
 import argparse
 import json
 import os
+import re
 import shutil
 import socket
 import subprocess
@@ -75,9 +89,29 @@ class Daemon:
         resp = self.ask({"cmd": "shutdown"})
         assert resp == {"cmd": "shutdown", "ok": True}, resp
         self.sock.close()
-        code = self.proc.wait(timeout=60)
-        self.proc.stderr.close()
-        assert code == 0, f"daemon exited {code}"
+        wait_drained(self.proc)
+
+
+def wait_drained(proc):
+    """The daemon must exit 0 AND report the graceful drain on stderr."""
+    code = proc.wait(timeout=60)
+    tail = proc.stderr.read()
+    proc.stderr.close()
+    assert code == 0, f"daemon exited {code}"
+    assert "connections drained" in tail, f"no drain report: {tail!r}"
+
+
+def raw_roundtrip(addr, *reqs):
+    """One fresh connection; send each request, return the JSON replies."""
+    host, port = addr.rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=60) as s:
+        f = s.makefile("r", encoding="utf-8")
+        out = []
+        for req in reqs:
+            line = req if isinstance(req, str) else json.dumps(req)
+            s.sendall(line.encode() + b"\n")
+            out.append(json.loads(f.readline()))
+        return out
 
 
 def cli(bin_path, env, *args):
@@ -184,10 +218,12 @@ def main():
         eval_file = os.path.join(cache_dir, "evaluate.plxcache")
         with open(eval_file) as f:
             text = f.read()
-        assert text.startswith("plxcache v1 evaluate\n"), text[:40]
-        entries = persist_parse_evaluate(text)
+        assert text.startswith("plxcache v2 evaluate "), text[:40]
+        loaded = persist_parse_evaluate(text)
+        entries = loaded["entries"]
         assert entries, "spill carries no evaluate entries"
-        assert persist_render_evaluate(entries) == text, \
+        assert not loaded["skipped"] and not loaded["unrecognized"], loaded
+        assert persist_render_evaluate(entries, loaded["file_gen"]) == text, \
             "pysim re-render of the Rust spill is not byte-identical"
         artifact["cache_dir_entries"]["evaluate"] = len(entries)
         print(f"serve-smoke: pysim re-rendered {len(entries)} Rust-spilled "
@@ -240,6 +276,99 @@ def main():
         print(f"serve-smoke: warm restart loaded "
               f"{stats['disk']['evaluate']['loaded']} evaluate entries, "
               f"served {stats['disk']['evaluate']['hits']} disk hits")
+
+        # ---- socket-layer limits: too_large / timeout / overloaded ---
+        # Each envelope is pinned byte-exactly in the Rust and pysim
+        # STRESS suites; here we assert the live daemon emits them and
+        # counts them separately from dispatch errors.
+        d_lim = Daemon(opts.bin, dict(cli_env, PLX_SERVE_MAX_LINE="256"))
+        resp = d_lim.ask(json.dumps({"cmd": "plan", "model": "x" * 512}))
+        assert resp["ok"] is False, resp
+        assert resp["error"]["code"] == "too_large", resp
+        assert resp["error"]["message"] == "request line exceeds 256 bytes"
+        resp = d_lim.ask({"cmd": "plan", "model": "llama13b", "nodes": 1})
+        assert resp.get("ok") is True, \
+            f"connection must recover after too_large: {resp}"
+        stats = d_lim.ask({"cmd": "stats"})["stats"]
+        assert stats["too_large"] == 1 and stats["errors"] == 0, stats
+        assert stats["limits"]["max_line"] == 256, stats
+        d_lim.shutdown()
+
+        d_to = Daemon(opts.bin, dict(cli_env, PLX_SERVE_TIMEOUT_MS="400"))
+        # The persistent connection stays silent: it must draw the
+        # timeout envelope and then EOF.
+        resp = json.loads(d_to.rfile.readline())
+        assert resp["error"]["code"] == "timeout", resp
+        assert resp["error"]["message"] == "no complete request within 400 ms"
+        assert d_to.rfile.readline() == "", "timed-out connection lingers"
+        stats, ack = raw_roundtrip(
+            d_to.addr, {"cmd": "stats"}, {"cmd": "shutdown"})
+        assert stats["stats"]["timeouts"] == 1, stats
+        assert stats["stats"]["limits"]["timeout_ms"] == 400, stats
+        assert ack == {"cmd": "shutdown", "ok": True}, ack
+        d_to.sock.close()
+        wait_drained(d_to.proc)
+
+        d_ov = Daemon(opts.bin, dict(cli_env, PLX_SERVE_MAX_CONNS="1"))
+        d_ov.ask({"cmd": "stats"})  # prove the one slot is registered
+        host, port = d_ov.addr.rsplit(":", 1)
+        with socket.create_connection((host, int(port)), timeout=60) as s2:
+            f2 = s2.makefile("r", encoding="utf-8")
+            resp = json.loads(f2.readline())  # shed on arrival
+            assert resp["error"]["code"] == "overloaded", resp
+            assert resp["error"]["message"] == \
+                "connection budget exhausted (1 active connections)", resp
+            assert f2.readline() == "", "shed connection lingers"
+        stats = d_ov.ask({"cmd": "stats"})["stats"]
+        assert stats["rejected"] == 1, stats
+        assert stats["limits"]["max_conns"] == 1, stats
+        d_ov.shutdown()
+        print("serve-smoke: too_large / timeout / overloaded envelopes "
+              "and counters OK")
+
+        # ---- fault injection: torn spills never change the bytes -----
+        fault_dir = tempfile.mkdtemp(prefix="plx-fault-smoke-")
+        try:
+            sweep_args = ["sweep", "--preset", "13b-2k", "--top", "3"]
+            want = cli(opts.bin, cli_env, *sweep_args)
+            torn_env = dict(cli_env, PLX_CACHE_DIR=fault_dir,
+                            PLX_FAULT_SEED="20260808",
+                            PLX_FAULT_TRUNC_P="1.0")
+            assert cli(opts.bin, torn_env, *sweep_args) == want, \
+                "a torn spill changed the sweep bytes"
+            # Deterministic quarantine bait alongside whatever the torn
+            # writes left behind: a file no parser recognizes.
+            with open(os.path.join(fault_dir, "stage.plxcache"), "w") as f:
+                f.write("garbage, definitely not a plxcache file\n")
+            clean_env = dict(cli_env, PLX_CACHE_DIR=fault_dir)
+            r = subprocess.run([opts.bin, *sweep_args, "--cache-stats"],
+                               capture_output=True, text=True,
+                               env=clean_env, check=True)
+            assert r.stdout == want, "recovery run changed the sweep bytes"
+            assert os.path.exists(
+                os.path.join(fault_dir, "stage.plxcache.bad")), \
+                "damaged file was not quarantined to .bad"
+            m = re.search(r"disk cache: (\d+) loaded, (\d+) hits, "
+                          r"(\d+) skipped, (\d+) quarantined", r.stderr)
+            assert m and int(m.group(4)) >= 1, \
+                f"no quarantine report: {r.stderr!r}"
+            # The recovery run respilled clean v2 files; a third run
+            # warm-loads them and serves disk hits.
+            with open(os.path.join(fault_dir, "evaluate.plxcache")) as f:
+                assert f.readline().startswith("plxcache v2 evaluate "), \
+                    "respilled cache is not plxcache v2"
+            r = subprocess.run([opts.bin, *sweep_args, "--cache-stats"],
+                               capture_output=True, text=True,
+                               env=clean_env, check=True)
+            assert r.stdout == want, "warm run changed the sweep bytes"
+            m = re.search(r"disk cache: (\d+) loaded, (\d+) hits", r.stderr)
+            assert m and int(m.group(1)) > 0 and int(m.group(2)) > 0, \
+                f"post-fault warm run served no disk hits: {r.stderr!r}"
+            print("serve-smoke: torn spills quarantined to .bad, clean "
+                  f"respill warm-loaded {m.group(1)} entries with "
+                  f"{m.group(2)} disk hits")
+        finally:
+            shutil.rmtree(fault_dir, ignore_errors=True)
 
         with open(opts.artifact, "w") as f:
             json.dump(artifact, f, indent=2, sort_keys=True)
