@@ -27,9 +27,9 @@ use plx::config::RunConfig;
 use plx::coordinator::train;
 use plx::layout::{validate, Job, Kernel, Layout, Schedule};
 use plx::model::arch::{preset, PRESETS};
-use plx::planner::{plan_by_rules, plan_exhaustive_stats};
+use plx::planner::{plan_by_rules, plan_exhaustive_stats_ranked};
 use plx::sim::{parse_hw, Hardware};
-use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2};
+use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2, Rank};
 use plx::topo::Cluster;
 use plx::util::cli::{Args, Spec};
 
@@ -37,7 +37,8 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
-        "loss-csv", "save", "resume", "jobs", "schedule", "hw", "addr", "top",
+        "loss-csv", "save", "resume", "jobs", "schedule", "hw", "addr", "top", "rank",
+        "lost", "days",
     ],
     flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats", "readonly"],
 };
@@ -68,7 +69,11 @@ fn run(argv: &[String]) -> Result<()> {
     // previous process's spill files before evaluating, and spill them
     // back afterwards — loaded entries are bit-exact, so output bytes
     // cannot change (`sim::persist`). `serve` manages its own lifecycle.
-    let analytic = matches!(cmd, "sweep" | "table" | "figure" | "plan" | "predict-mem" | "compare");
+    let analytic = matches!(
+        cmd,
+        "sweep" | "table" | "figure" | "plan" | "predict-mem" | "compare" | "replan"
+            | "simulate-run"
+    );
     if analytic {
         plx::sim::persist::warm_start_if_configured();
     }
@@ -80,6 +85,8 @@ fn run(argv: &[String]) -> Result<()> {
         "plan" => cmd_plan(&args),
         "predict-mem" => cmd_predict_mem(&args),
         "compare" => cmd_compare(&args),
+        "replan" => cmd_replan(&args),
+        "simulate-run" => cmd_simulate_run(&args),
         "serve" => cmd_serve(&args),
         "presets" => cmd_presets(),
         _ => {
@@ -126,6 +133,13 @@ fn resolve_hw_name(name: &str) -> Result<Hardware> {
     Ok(parse_hw(name).map_err(anyhow::Error::msg)?.from_overrides())
 }
 
+/// Resolve `--rank {mfu,effective-mfu}` (default `mfu` — the historical
+/// objective, so default output bytes cannot move).
+fn rank_from_args(args: &Args) -> Result<Rank> {
+    let name = args.get_or("rank", "mfu");
+    Rank::parse(name).with_context(|| format!("unknown rank '{name}' (mfu, effective-mfu)"))
+}
+
 const HELP: &str = "\
 plx — Parallelization Layout eXplorer
   (reproduction of 'Efficient Parallelization Layouts for Large-Scale
@@ -143,16 +157,27 @@ USAGE:
   plx table  N            N in {2, 3, 4..8, 10..14}
   plx figure N            N in {1..5}
   plx plan   --model M --nodes K [--gbs G] [--exhaustive]
+             [--rank {mfu,effective-mfu}]
   plx predict-mem --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
                   [--sp] [--kernel flash2rms] [--hw NAME]
                   [--schedule {1f1b,gpipe,interleaved:<v>}]
   plx compare --preset NAME | --all  [--hw a100,h100]
              best layout + MFU delta per hardware, side by side
+  plx replan --model M --nodes K --lost N [--gbs G] [--hw NAME]
+             [--rank {mfu,effective-mfu}]
+             best surviving layout after losing N GPUs (whole-node
+             granularity) + state-migration estimate
+  plx simulate-run --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
+                   [--sp] [--kernel K] [--schedule S] [--days D]
+                   [--seed S] [--hw NAME]
+             deterministic failure-trace replay: failures, checkpoints,
+             downtime, lost work, achieved goodput over D days
+             (default 30; seed from --seed, then $PLX_FAULT_SEED, then 0)
   plx serve  [--addr HOST:PORT]
              long-running daemon: newline-delimited JSON queries over TCP
              (plan — single or batched — /sweep/compare/predict-mem/
-             stats/shutdown — see docs/serve.md); address from --addr,
-             then $PLX_SERVE_ADDR, then 127.0.0.1:7077
+             replan/simulate-run/stats/shutdown — see docs/serve.md);
+             address from --addr, then $PLX_SERVE_ADDR, then 127.0.0.1:7077
   plx presets
 
 OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
@@ -164,6 +189,10 @@ OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
              overrides via PLX_HW_* env vars — see docs/hardware.md.
   --readonly warm-load the PLX_CACHE_DIR cache but never spill back
              (same as PLX_CACHE_RO=1; docs/cache.md).
+  --rank R   objective for sweep/plan/compare/replan: mfu (default;
+             historical output, byte-identical) or effective-mfu —
+             MFU × expected availability under the hardware's failure
+             model (docs/failures.md).
 
 ENV:
   PLX_CACHE_DIR   persist the evaluation memos across processes
@@ -190,7 +219,19 @@ ENV:
   PLX_FAULT_SEED  arm deterministic fault injection (u64 seed) for
                   robustness testing; PLX_FAULT_IO_P / PLX_FAULT_TRUNC_P
                   set the per-write probabilities of a hard IO error /
-                  torn write at the persist and serve write points.
+                  torn write at the persist and serve write points
+                  (values are clamped to [0,1], with a warning). The
+                  seed also defaults `plx simulate-run --seed`.
+  PLX_PERSIST_RETRIES
+                  bounded retries per cache spill write before giving up
+                  (default 2; retries show in --cache-stats and serve
+                  stats.disk).
+  PLX_HW_MTBF_H   per-GPU mean time between failures, hours (failure
+                  model input; 0 disables the model). See
+                  docs/failures.md.
+  PLX_HW_STORAGE_BW
+                  per-GPU checkpoint write bandwidth, bytes/s (0
+                  disables the failure model).
 
 Artifacts for `plx train` come from `make artifacts`
 (python -m compile.aot). See README.md.
@@ -307,10 +348,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(t) => Some(t.parse::<usize>().map_err(|_| anyhow::anyhow!("--top must be an integer"))?),
         None => None,
     };
+    // `--rank effective-mfu` re-sorts by failure-discounted MFU and adds
+    // the Eff. MFU column; the default renders byte-identically to the
+    // historical tables (render_top_ranked delegates).
+    let rank = rank_from_args(args)?;
     for p in presets {
         let result = plx::sweep::run(&p, &hw);
         let with_sp = p.sps.len() > 1;
-        print!("{}", report::render_top(&result, with_sp, top));
+        print!("{}", report::render_top_ranked(&result, with_sp, top, &hw, rank));
         if let Some(csv) = args.get("csv") {
             std::fs::write(csv, report::to_csv(&result))?;
             println!("csv written to {csv}");
@@ -336,11 +381,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let (de, ds, dm) = plx::sim::cache::disk_stats();
         let sum = |f: fn(&plx::sim::cache::DiskStats) -> u64| f(&de) + f(&ds) + f(&dm);
         eprintln!(
-            "disk cache: {} loaded, {} hits, {} skipped, {} quarantined",
+            "disk cache: {} loaded, {} hits, {} skipped, {} quarantined, {} write retries",
             sum(|d| d.loaded),
             sum(|d| d.hits),
             sum(|d| d.skipped),
             sum(|d| d.quarantined),
+            sum(|d| d.retries),
         );
     }
     Ok(())
@@ -400,16 +446,81 @@ fn job_from_args(args: &Args) -> Result<Job> {
 fn cmd_plan(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
     let hw = resolve_hw(args)?;
+    let rank = rank_from_args(args)?;
     let plan = if args.flag("exhaustive") {
-        let (plan, stats) = plan_exhaustive_stats(&job, &hw)?;
+        // The exhaustive argmax ranks by the chosen objective; the
+        // default rank is the exact historical scan.
+        let (plan, stats) = plan_exhaustive_stats_ranked(&job, &hw, rank)?;
         // The branch-and-bound counter: how much of the space the
         // admissible bounds let the planner skip.
         eprintln!("plx plan: {}", stats.log_line());
         plan
     } else {
+        // The §5 rules are rank-independent (they encode the paper's
+        // throughput recommendations); the ranked render still reports
+        // the effective numbers when asked.
         plan_by_rules(&job, &hw)?
     };
-    print!("{}", plx::planner::render_plan(&job, &plan));
+    print!("{}", plx::planner::render_plan_ranked(&job, &plan, &hw, rank));
+    Ok(())
+}
+
+fn cmd_replan(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let hw = resolve_hw(args)?;
+    let rank = rank_from_args(args)?;
+    let lost = args
+        .get("lost")
+        .context("need --lost N (GPUs lost)")?
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("--lost must be an integer"))?;
+    let rep = plx::planner::replan(&job, lost, &hw, rank, 0)?;
+    print!("{}", plx::planner::render_replan(&rep));
+    Ok(())
+}
+
+fn cmd_simulate_run(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let hw = resolve_hw(args)?;
+    let kernel = match args.get("kernel") {
+        Some(k) => Kernel::parse(k).with_context(|| format!("unknown kernel '{k}'"))?,
+        None => Kernel::Flash2Rms,
+    };
+    let sched = match args.get("schedule") {
+        Some(s) => Schedule::parse(s)
+            .with_context(|| format!("unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)"))?,
+        None => Schedule::OneF1B,
+    };
+    let l = Layout {
+        tp: args.get_usize("tp", 1).map_err(anyhow::Error::msg)?,
+        pp: args.get_usize("pp", 1).map_err(anyhow::Error::msg)?,
+        mb: args.get_usize("mb", 1).map_err(anyhow::Error::msg)?,
+        ckpt: args.flag("ckpt"),
+        kernel,
+        sp: args.flag("sp"),
+        sched,
+    };
+    let v = validate(&job, &l)?;
+    let days = match args.get("days") {
+        Some(d) => d.parse::<u64>().map_err(|_| anyhow::anyhow!("--days must be an integer"))?,
+        None => 30,
+    };
+    // Seed precedence: --seed, else the armed PLX_FAULT_SEED (same
+    // discipline as the fault-injection harness), else 0.
+    let seed = match args.get("seed") {
+        Some(s) => s.parse::<u64>().map_err(|_| anyhow::anyhow!("--seed must be a u64"))?,
+        None => plx::util::fault::env_seed().unwrap_or(0),
+    };
+    let out = plx::sim::failure::simulate_run_report(
+        &job,
+        &v,
+        &hw,
+        args.get_or("hw", "a100"),
+        days,
+        seed,
+    )
+    .map_err(anyhow::Error::msg)?;
+    print!("{out}");
     Ok(())
 }
 
@@ -454,13 +565,14 @@ fn cmd_compare(args: &Args) -> Result<()> {
         .map(|n| resolve_hw_name(n).map(|hw| (n.clone(), hw)))
         .collect::<Result<_>>()?;
     let presets = presets_from_args(args, "need --preset NAME or --all")?;
+    let rank = rank_from_args(args)?;
     for p in presets {
         // Bound-driven per-hardware winners (`sweep::argmax::compare_best`)
         // — never materializes the sweep tables, prunes every layout whose
         // MFU upper bound cannot beat the incumbent, and renders through
         // the same body as the materializing path (bit-identity asserted
         // by `compare_best_matches_run_compare_winners`).
-        let winners = plx::sweep::compare_best(&p, &hws, 0);
+        let winners = plx::sweep::compare_best_ranked(&p, &hws, 0, rank);
         print!("{}", report::render_compare_best(p.name, &p.job(), &winners));
     }
     Ok(())

@@ -32,7 +32,9 @@ use anyhow::{bail, Result};
 
 use crate::layout::{validate, Job, Kernel, Layout, Schedule, ValidLayout};
 use crate::sim::cache::evaluate_cached;
-use crate::sim::{Hardware, Outcome};
+use crate::sim::{failure, Hardware, Outcome};
+use crate::sweep::{Best, Rank, Tie};
+use crate::topo::Cluster;
 
 /// A planned layout with its predicted performance.
 #[derive(Debug, Clone, Copy)]
@@ -67,6 +69,25 @@ pub fn render_plan(job: &Job, plan: &Plan) -> String {
         plan.predicted_step_s,
         plan.v.num_micro
     )
+}
+
+/// [`render_plan`] under an explicit [`Rank`] — shared by `plx plan
+/// --rank ...` and the serve daemon. The default rank renders
+/// byte-identically through [`render_plan`]; `effective-mfu` appends one
+/// line with the failure-discounted numbers the argmax actually ranked
+/// on, so the choice is explainable from the output alone.
+pub fn render_plan_ranked(job: &Job, plan: &Plan, hw: &Hardware, rank: Rank) -> String {
+    let mut out = render_plan(job, plan);
+    if rank == Rank::EffectiveMfu {
+        let avail = failure::availability_of(job, &plan.v, hw);
+        let eff = failure::effective_mfu(job, &plan.v, hw, plan.predicted_mfu);
+        out.push_str(&format!(
+            "\x20 effective: {:.2}% MFU at {:.2}% availability\n",
+            100.0 * eff,
+            100.0 * avail
+        ));
+    }
+    out
 }
 
 /// Candidate model-parallel degrees in the paper's preference order:
@@ -263,6 +284,32 @@ pub fn plan_exhaustive(job: &Job, hw: &Hardware) -> Result<Plan> {
 /// evaluating well under half the space (the acceptance gate asserts
 /// < 60%).
 pub fn plan_exhaustive_stats(job: &Job, hw: &Hardware) -> Result<(Plan, PruneStats)> {
+    plan_exhaustive_stats_ranked(job, hw, Rank::Mfu)
+}
+
+/// [`plan_exhaustive_stats`] under an explicit [`Rank`]. `Rank::Mfu` is
+/// the historical scan (same delegation chain, same bits);
+/// `Rank::EffectiveMfu` plugs the failure-discounted (bound, score) pair
+/// into the same lossless branch-and-bound query, so `plx plan
+/// --exhaustive --rank effective-mfu` picks the layout that maximizes
+/// expected goodput, not raw throughput.
+pub fn plan_exhaustive_stats_ranked(
+    job: &Job,
+    hw: &Hardware,
+    rank: Rank,
+) -> Result<(Plan, PruneStats)> {
+    let (best, stats) = exhaustive_best(job, hw, rank, 0);
+    match best {
+        Some(b) => {
+            Ok((Plan { v: b.v, predicted_mfu: b.mfu, predicted_step_s: b.step_time_s }, stats))
+        }
+        None => bail!("no feasible layout for {} on {} GPUs", job.arch.name, job.cluster.gpus),
+    }
+}
+
+/// The exhaustive-grid argmax under a rank: the shared query behind
+/// [`plan_exhaustive_stats_ranked`] and [`replan`].
+fn exhaustive_best(job: &Job, hw: &Hardware, rank: Rank, jobs: usize) -> (Option<Best>, PruneStats) {
     let (tps, pps) = exhaustive_axes();
     let space = crate::layout::LayoutSpace::new(
         job,
@@ -274,8 +321,15 @@ pub fn plan_exhaustive_stats(job: &Job, hw: &Hardware) -> Result<(Plan, PruneSta
         &[false, true],
         &[Schedule::OneF1B],
     );
-    let (best, q) =
-        crate::sweep::argmax::argmax_mfu(job, space, hw, |_| true, crate::sweep::Tie::KeepFirst, 0);
+    let (best, q) = crate::sweep::argmax::argmax_ranked(
+        job,
+        space,
+        hw,
+        |_| true,
+        Tie::KeepFirst,
+        jobs,
+        rank,
+    );
     let stats = PruneStats {
         total: q.total,
         gate_pruned: q.gate_pruned,
@@ -283,12 +337,136 @@ pub fn plan_exhaustive_stats(job: &Job, hw: &Hardware) -> Result<(Plan, PruneSta
         bound_pruned: q.bound_pruned,
         evaluated: q.evaluated,
     };
-    match best {
-        Some(b) => {
-            Ok((Plan { v: b.v, predicted_mfu: b.mfu, predicted_step_s: b.step_time_s }, stats))
-        }
-        None => bail!("no feasible layout for {} on {} GPUs", job.arch.name, job.cluster.gpus),
+    (best, stats)
+}
+
+/// A degraded-cluster replanning decision: the best layout before and
+/// after losing `lost` GPUs, plus a first-order estimate of the state
+/// migration the switch implies.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplanReport {
+    /// GPUs reported lost.
+    pub lost: usize,
+    /// The original job (full cluster).
+    pub full: Job,
+    /// The job on the surviving whole nodes (same arch, same gbs).
+    pub degraded: Job,
+    /// Best layout on the full cluster (the "was" row).
+    pub old: Option<Best>,
+    /// Best layout on the surviving cluster, or `None` if nothing runs.
+    pub new: Option<Best>,
+    /// Model-state bytes that must move to re-shard onto the survivors.
+    pub moved_bytes: f64,
+    /// Migration time estimate: `moved_bytes` over the survivors'
+    /// aggregate cross-node bandwidth.
+    pub migration_s: f64,
+}
+
+/// Re-plan after losing `lost` GPUs (`plx replan --lost N`).
+///
+/// Failed GPUs take their whole node out of the usable set — the
+/// simulator's topology model assumes uniform nodes, and real schedulers
+/// drain the host anyway — so the surviving cluster is
+/// `(gpus - lost) / gpus_per_node` whole nodes. The best layout on that
+/// cluster is found by the same exhaustive bound-pruned argmax as
+/// `plx plan --exhaustive`, under the caller's [`Rank`].
+///
+/// The migration estimate is deliberately first-order: if the new layout
+/// keeps the old `(tp, pp)` model-parallel shape, only the evicted
+/// replicas' owners re-fetch — `state_bytes_per_gpu × lost-GPU count`;
+/// any shape change re-shards everything — `state_bytes_per_gpu(new) ×
+/// surviving world`. Either volume crosses the survivors' aggregate IB.
+pub fn replan(
+    job: &Job,
+    lost: usize,
+    hw: &Hardware,
+    rank: Rank,
+    jobs: usize,
+) -> Result<ReplanReport> {
+    if lost == 0 {
+        bail!("replan needs --lost >= 1");
     }
+    if lost >= job.cluster.gpus {
+        bail!("lost {} of {} GPUs — nothing left to plan for", lost, job.cluster.gpus);
+    }
+    let per_node = job.cluster.gpus_per_node;
+    let deg_nodes = (job.cluster.gpus - lost) / per_node;
+    if deg_nodes == 0 {
+        bail!(
+            "losing {} GPUs leaves no whole {}-GPU node usable",
+            lost,
+            per_node
+        );
+    }
+    let degraded =
+        Job::new(job.arch, Cluster { gpus: deg_nodes * per_node, gpus_per_node: per_node }, job.gbs);
+    let (old, _) = exhaustive_best(job, hw, rank, jobs);
+    let (new, _) = exhaustive_best(&degraded, hw, rank, jobs);
+    let deg_gpus = degraded.cluster.gpus;
+    let (moved_bytes, migration_s) = match (&old, &new) {
+        (Some(o), Some(n)) => {
+            let same_shape =
+                o.v.layout.tp == n.v.layout.tp && o.v.layout.pp == n.v.layout.pp;
+            let moved = if same_shape {
+                failure::state_bytes_per_gpu(job, &o.v) * (job.cluster.gpus - deg_gpus) as f64
+            } else {
+                deg_gpus as f64 * failure::state_bytes_per_gpu(&degraded, &n.v)
+            };
+            (moved, moved / (hw.ib_bw * deg_gpus as f64))
+        }
+        (None, Some(n)) => {
+            let moved = deg_gpus as f64 * failure::state_bytes_per_gpu(&degraded, &n.v);
+            (moved, moved / (hw.ib_bw * deg_gpus as f64))
+        }
+        _ => (0.0, 0.0),
+    };
+    Ok(ReplanReport { lost, full: *job, degraded, old, new, moved_bytes, migration_s })
+}
+
+/// The `plx replan` stdout block — shared verbatim by the CLI and the
+/// serve daemon (`{"cmd":"replan"}`), which is what keeps the two paths
+/// byte-identical by construction.
+pub fn render_replan(rep: &ReplanReport) -> String {
+    let row = |best: &Option<Best>, missing: &str| match best {
+        Some(b) => {
+            let l = b.v.layout;
+            format!(
+                "mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={} sched={}  predicted {:.2}% MFU, {:.2}s/step",
+                l.mb,
+                l.tp,
+                l.pp,
+                b.v.topo.dp,
+                l.ckpt,
+                l.kernel.label(),
+                l.sp,
+                l.sched.label(),
+                100.0 * b.mfu,
+                b.step_time_s
+            )
+        }
+        None => missing.to_string(),
+    };
+    let mut out = format!(
+        "replan for {} after losing {} GPUs: {} -> {} usable GPUs ({} whole nodes, gbs {})\n\
+         \x20 was: {}\n\
+         \x20 now: {}\n",
+        rep.full.arch.name,
+        rep.lost,
+        rep.full.cluster.gpus,
+        rep.degraded.cluster.gpus,
+        rep.degraded.cluster.gpus / rep.degraded.cluster.gpus_per_node,
+        rep.full.gbs,
+        row(&rep.old, "no runnable layout"),
+        row(&rep.new, "no runnable layout on the surviving cluster"),
+    );
+    if rep.new.is_some() {
+        out.push_str(&format!(
+            "\x20 migration: {:.2} GB re-sharded, ~{:.1}s over IB\n",
+            rep.moved_bytes / 1e9,
+            rep.migration_s
+        ));
+    }
+    out
 }
 
 /// The historical unpruned exhaustive argmax (parallel grid evaluation
@@ -494,6 +672,84 @@ mod tests {
             assert!(memory::fits(&j, &p.v, &A100));
             assert!(p.predicted_mfu > 0.2, "{name}: {}", p.predicted_mfu);
         }
+    }
+
+    #[test]
+    fn ranked_exhaustive_default_is_the_historical_plan() {
+        // Rank::Mfu must delegate to the exact historical scan: same
+        // layout, same bits, same prune counters.
+        let j = job("llama13b", 8);
+        let (plain, sp) = plan_exhaustive_stats(&j, &A100).unwrap();
+        let (ranked, sr) = plan_exhaustive_stats_ranked(&j, &A100, Rank::Mfu).unwrap();
+        assert_eq!(plain.v.layout, ranked.v.layout);
+        assert_eq!(plain.predicted_mfu.to_bits(), ranked.predicted_mfu.to_bits());
+        assert_eq!(sp.evaluated, sr.evaluated);
+    }
+
+    #[test]
+    fn effective_rank_never_beats_raw_mfu_but_stays_runnable() {
+        // The effective-MFU plan trades raw throughput for availability:
+        // its raw MFU can only be ≤ the MFU-ranked optimum, and its
+        // effective score can only be ≥ the MFU-ranked plan's.
+        for (name, nodes) in [("llama13b", 8), ("llama65b", 16)] {
+            let j = job(name, nodes);
+            let (raw, _) = plan_exhaustive_stats_ranked(&j, &A100, Rank::Mfu).unwrap();
+            let (eff, _) = plan_exhaustive_stats_ranked(&j, &A100, Rank::EffectiveMfu).unwrap();
+            assert!(eff.predicted_mfu <= raw.predicted_mfu, "{name}");
+            let score = |p: &Plan| failure::effective_mfu(&j, &p.v, &A100, p.predicted_mfu);
+            assert!(score(&eff) >= score(&raw), "{name}: {} < {}", score(&eff), score(&raw));
+            // The ranked render explains the choice; default stays plain.
+            let txt = render_plan_ranked(&j, &eff, &A100, Rank::EffectiveMfu);
+            assert!(txt.contains("effective:"), "{txt}");
+            assert!(txt.contains("% availability"), "{txt}");
+            assert_eq!(render_plan_ranked(&j, &raw, &A100, Rank::Mfu), render_plan(&j, &raw));
+        }
+    }
+
+    #[test]
+    fn replan_shrinks_to_whole_nodes_and_finds_a_layout() {
+        // Lose 3 GPUs of a 64-GPU cluster: 61 usable -> 7 whole nodes.
+        // 56 GPUs force a factor of 7 into dp, which can never divide
+        // gbs 2048 — an honest "no runnable layout" report, not an error.
+        let j = job("llama65b", 8);
+        let rep = replan(&j, 3, &A100, Rank::Mfu, 0).unwrap();
+        assert_eq!(rep.degraded.cluster.gpus, 56);
+        assert_eq!(rep.full.cluster.gpus, 64);
+        assert!(rep.new.is_none(), "gbs 2048 is indivisible on 7 nodes");
+        // The "was" row is exactly the full-cluster exhaustive plan.
+        let (full_plan, _) = plan_exhaustive_stats(&j, &A100).unwrap();
+        assert_eq!(rep.old.unwrap().v.layout, full_plan.v.layout);
+        let txt = render_replan(&rep);
+        assert!(txt.contains("64 -> 56 usable GPUs (7 whole nodes"), "{txt}");
+        assert!(txt.contains("no runnable layout on the surviving cluster"), "{txt}");
+        assert!(!txt.contains("migration: "), "{txt}");
+        // Losing 4 whole nodes lands on a power-of-two cluster where a
+        // layout does exist, with a positive, finite migration estimate.
+        let rep = replan(&j, 32, &A100, Rank::Mfu, 0).unwrap();
+        assert_eq!(rep.degraded.cluster.gpus, 32);
+        let new = rep.new.expect("65B must still run on 4 nodes");
+        assert!(new.mfu > 0.2);
+        assert!(rep.moved_bytes > 0.0 && rep.moved_bytes.is_finite());
+        assert!(rep.migration_s > 0.0 && rep.migration_s.is_finite());
+        let txt = render_replan(&rep);
+        assert!(txt.contains("64 -> 32 usable GPUs (4 whole nodes"), "{txt}");
+        assert!(txt.contains("was: "), "{txt}");
+        assert!(txt.contains("now: "), "{txt}");
+        assert!(txt.contains("migration: "), "{txt}");
+    }
+
+    #[test]
+    fn replan_render_is_jobs_independent_and_validates_inputs() {
+        let j = job("llama65b", 8);
+        // Determinism across the worker-count axis — the serve/CLI byte
+        // contract rests on this.
+        let a = render_replan(&replan(&j, 9, &A100, Rank::EffectiveMfu, 1).unwrap());
+        let b = render_replan(&replan(&j, 9, &A100, Rank::EffectiveMfu, 6).unwrap());
+        assert_eq!(a, b);
+        assert!(replan(&j, 0, &A100, Rank::Mfu, 0).is_err(), "--lost 0 must be rejected");
+        assert!(replan(&j, 64, &A100, Rank::Mfu, 0).is_err(), "losing everything");
+        // 57 lost of 64 leaves 7 GPUs: no whole node survives.
+        assert!(replan(&j, 57, &A100, Rank::Mfu, 0).is_err());
     }
 
     #[test]

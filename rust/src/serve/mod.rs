@@ -16,12 +16,15 @@
 //! Guarantees:
 //!
 //! * **Byte-identity**: the `output` field of a `plan`/`sweep`/
-//!   `compare`/`predict-mem` response — and every element of a batched
-//!   plan's `outputs` — is byte-identical to the stdout of the
-//!   equivalent one-shot CLI invocation: both sides call the same
-//!   renderer ([`crate::planner::render_plan`],
-//!   [`crate::sim::render_predict_mem`], [`crate::sweep::report`]), and
-//!   the memos are pure, so there is nothing to drift.
+//!   `compare`/`predict-mem`/`replan`/`simulate-run` response — and
+//!   every element of a batched plan's `outputs` — is byte-identical to
+//!   the stdout of the equivalent one-shot CLI invocation: both sides
+//!   call the same renderer ([`crate::planner::render_plan`],
+//!   [`crate::planner::render_replan`],
+//!   [`crate::sim::render_predict_mem`],
+//!   [`crate::sim::failure::simulate_run_report`],
+//!   [`crate::sweep::report`]), and the memos are pure, so there is
+//!   nothing to drift.
 //! * **Batching**: the layout evaluations behind one request fan out
 //!   through the shared work-stealing pool ([`crate::util::pool`]) — a
 //!   sweep request is one coarse-grouped dispatch, not a serial loop.
@@ -67,9 +70,9 @@ use std::time::{Duration, Instant};
 
 use crate::layout::{validate, Job, Kernel, Layout, Schedule};
 use crate::model::arch::preset;
-use crate::planner::{plan_by_rules, plan_exhaustive_stats, render_plan};
-use crate::sim::{cache, parse_hw, persist, render_predict_mem, Hardware};
-use crate::sweep::{by_name, compare_best, report, run_jobs};
+use crate::planner::{plan_by_rules, plan_exhaustive_stats, render_plan, render_replan, replan};
+use crate::sim::{cache, failure, parse_hw, persist, render_predict_mem, Hardware};
+use crate::sweep::{by_name, compare_best, report, run_jobs, Rank};
 use crate::topo::Cluster;
 use crate::util::fault;
 use crate::util::json::Json;
@@ -438,6 +441,68 @@ fn do_predict_mem(req: &Req) -> Result<String, String> {
     Ok(render_predict_mem(&job, &v, &hw, hw_name))
 }
 
+/// `replan` over the wire — same renderer as `plx replan`, so response
+/// `output` bytes equal CLI stdout.
+fn do_replan(req: &Req) -> Result<String, String> {
+    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "lost", "rank"])?;
+    let model = req.need_str("model")?;
+    let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let nodes = req.usize("nodes")?.unwrap_or(8);
+    let gbs = req.usize("gbs")?.unwrap_or_else(|| Job::paper_gbs(&arch));
+    let hw = resolve_hw_name(req.str("hw")?.unwrap_or("a100"))?;
+    let rank = match req.str("rank")? {
+        Some(r) => Rank::parse(r).ok_or_else(|| format!("unknown rank '{r}' (mfu, effective-mfu)"))?,
+        None => Rank::Mfu,
+    };
+    let lost = req.usize("lost")?.ok_or_else(|| "need \"lost\"".to_string())?;
+    let job = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
+    let rep = replan(&job, lost, &hw, rank, 0).map_err(|e| e.to_string())?;
+    Ok(render_replan(&rep))
+}
+
+/// `simulate-run` over the wire — the shared
+/// [`failure::simulate_run_report`] orchestration, so response `output`
+/// bytes equal CLI stdout. The seed defaults to the armed
+/// `PLX_FAULT_SEED`, then 0, exactly like the CLI.
+fn do_simulate_run(req: &Req) -> Result<String, String> {
+    req.check_keys(&[
+        "cmd", "model", "nodes", "gbs", "hw", "tp", "pp", "mb", "ckpt", "sp", "kernel",
+        "schedule", "days", "seed",
+    ])?;
+    let model = req.need_str("model")?;
+    let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let nodes = req.usize("nodes")?.unwrap_or(8);
+    let gbs = req.usize("gbs")?.unwrap_or_else(|| Job::paper_gbs(&arch));
+    let hw_name = req.str("hw")?.unwrap_or("a100");
+    let hw = resolve_hw_name(hw_name)?;
+    let kernel = match req.str("kernel")? {
+        Some(k) => Kernel::parse(k).ok_or_else(|| format!("unknown kernel '{k}'"))?,
+        None => Kernel::Flash2Rms,
+    };
+    let sched = match req.str("schedule")? {
+        Some(s) => Schedule::parse(s)
+            .ok_or_else(|| format!("unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)"))?,
+        None => Schedule::OneF1B,
+    };
+    let l = Layout {
+        tp: req.usize("tp")?.unwrap_or(1),
+        pp: req.usize("pp")?.unwrap_or(1),
+        mb: req.usize("mb")?.unwrap_or(1),
+        ckpt: req.bool("ckpt")?,
+        kernel,
+        sp: req.bool("sp")?,
+        sched,
+    };
+    let days = req.usize("days")?.unwrap_or(30) as u64;
+    let seed = match req.usize("seed")? {
+        Some(s) => s as u64,
+        None => fault::env_seed().unwrap_or(0),
+    };
+    let job = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
+    let v = validate(&job, &l).map_err(|e| e.to_string())?;
+    failure::simulate_run_report(&job, &v, &hw, hw_name, days, seed)
+}
+
 fn do_sweep(req: &Req) -> Result<String, String> {
     req.check_keys(&["cmd", "preset", "hw", "schedule", "top"])?;
     let name = req.need_str("preset")?;
@@ -490,6 +555,7 @@ fn do_stats(state: &State) -> String {
             ("hits", num(d.hits)),
             ("loaded", num(d.loaded)),
             ("quarantined", num(d.quarantined)),
+            ("retries", num(d.retries)),
             ("skipped", num(d.skipped)),
         ])
     };
@@ -619,7 +685,7 @@ fn dispatch(state: &State, line: &str) -> Reply {
             .write(),
             shutdown: true,
         },
-        "plan" | "sweep" | "compare" | "predict-mem" => {
+        "plan" | "sweep" | "compare" | "predict-mem" | "replan" | "simulate-run" => {
             // Canonical bytes of the parsed request = the dedupe key:
             // whitespace/key-order variants of the same query collapse.
             let key = parsed.write();
@@ -641,6 +707,8 @@ fn dispatch(state: &State, line: &str) -> Reply {
                     "plan" => do_plan(&req),
                     "sweep" => do_sweep(&req),
                     "predict-mem" => do_predict_mem(&req),
+                    "replan" => do_replan(&req),
+                    "simulate-run" => do_simulate_run(&req),
                     _ => do_compare(&req),
                 };
                 match result {
@@ -1011,6 +1079,59 @@ mod tests {
     }
 
     #[test]
+    fn replan_response_equals_cli_renderer_bytes() {
+        let state = State::new();
+        let r = reply(&state, r#"{"cmd":"replan","model":"llama65b","nodes":8,"lost":3}"#);
+        let parsed = Json::parse(&r).unwrap();
+        assert_eq!(parsed.get("ok").as_bool(), Some(true));
+        let arch = preset("llama65b").unwrap();
+        let job = Job::new(arch, Cluster::dgx_a100(8), Job::paper_gbs(&arch));
+        let hw = resolve_hw_name("a100").unwrap();
+        let rep = replan(&job, 3, &hw, Rank::Mfu, 0).unwrap();
+        assert_eq!(parsed.get("output").as_str().unwrap(), render_replan(&rep));
+        // Domain errors use the standard envelope.
+        let r = reply(&state, r#"{"cmd":"replan","model":"llama65b","nodes":8}"#);
+        assert!(r.contains("need \\\"lost\\\""), "{r}");
+        let r = reply(&state, r#"{"cmd":"replan","model":"llama65b","nodes":8,"lost":0}"#);
+        assert!(r.contains("replan needs"), "{r}");
+        let r =
+            reply(&state, r#"{"cmd":"replan","model":"llama65b","nodes":8,"lost":3,"rank":"x"}"#);
+        assert!(r.contains("unknown rank"), "{r}");
+    }
+
+    #[test]
+    fn simulate_run_response_equals_cli_renderer_bytes() {
+        let state = State::new();
+        let r = reply(
+            &state,
+            r#"{"cmd":"simulate-run","model":"llama13b","nodes":1,"tp":2,"pp":2,"mb":2,"days":7,"seed":42}"#,
+        );
+        let parsed = Json::parse(&r).unwrap();
+        assert_eq!(parsed.get("ok").as_bool(), Some(true));
+        let arch = preset("llama13b").unwrap();
+        let job = Job::new(arch, Cluster::dgx_a100(1), Job::paper_gbs(&arch));
+        let hw = resolve_hw_name("a100").unwrap();
+        let l = Layout {
+            tp: 2,
+            pp: 2,
+            mb: 2,
+            ckpt: false,
+            kernel: Kernel::Flash2Rms,
+            sp: false,
+            sched: Schedule::OneF1B,
+        };
+        let v = validate(&job, &l).unwrap();
+        let expect = failure::simulate_run_report(&job, &v, &hw, "a100", 7, 42).unwrap();
+        assert_eq!(parsed.get("output").as_str().unwrap(), expect);
+        // The same request is deterministic: a second reply is byte-identical.
+        let again = reply(
+            &state,
+            r#"{"cmd":"simulate-run","model":"llama13b","nodes":1,"tp":2,"pp":2,"mb":2,"days":7,"seed":42}"#,
+        );
+        assert_eq!(r, again);
+    }
+
+    #[test]
     fn whitespace_variants_share_one_dedupe_key() {
         let state = State::new();
         let a = reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1}"#);
@@ -1047,6 +1168,7 @@ mod tests {
         assert!(s.path("memos.evaluate.entries").as_u64().is_some());
         assert!(s.path("disk.evaluate.loaded").as_u64().is_some());
         assert!(s.path("disk.evaluate.quarantined").as_u64().is_some());
+        assert!(s.path("disk.evaluate.retries").as_u64().is_some());
         assert!(s.path("disk.stage.skipped").as_u64().is_some());
         assert!(s.path("latency_us.total").as_u64().is_some());
         // Hardening counters and the resolved limits are always present.

@@ -62,7 +62,7 @@ pub(crate) struct Key {
     pub(crate) gpus_per_node: usize,
     pub(crate) gbs: usize,
     // Hardware constants, by bit pattern (f64 is not Hash/Eq).
-    pub(crate) hw_bits: [u64; 8],
+    pub(crate) hw_bits: [u64; 10],
     // Resolved PLX_CAL_* calibration bits — `evaluate` reads them from
     // the environment, so they are part of the function and must be part
     // of the key (see the module docs).
@@ -111,6 +111,7 @@ struct Cache {
     disk_hits: AtomicU64,
     disk_skipped: AtomicU64,
     disk_quarantined: AtomicU64,
+    disk_retries: AtomicU64,
 }
 
 fn cache() -> &'static Cache {
@@ -123,6 +124,7 @@ fn cache() -> &'static Cache {
         disk_hits: AtomicU64::new(0),
         disk_skipped: AtomicU64::new(0),
         disk_quarantined: AtomicU64::new(0),
+        disk_retries: AtomicU64::new(0),
     })
 }
 
@@ -172,6 +174,7 @@ pub fn clear() {
     c.disk_hits.store(0, Ordering::Relaxed);
     c.disk_skipped.store(0, Ordering::Relaxed);
     c.disk_quarantined.store(0, Ordering::Relaxed);
+    c.disk_retries.store(0, Ordering::Relaxed);
     let m = ms_cache();
     for s in &m.shards {
         s.lock().unwrap().clear();
@@ -182,6 +185,7 @@ pub fn clear() {
     m.disk_hits.store(0, Ordering::Relaxed);
     m.disk_skipped.store(0, Ordering::Relaxed);
     m.disk_quarantined.store(0, Ordering::Relaxed);
+    m.disk_retries.store(0, Ordering::Relaxed);
     let st = stage_cache();
     for s in &st.shards {
         s.lock().unwrap().clear();
@@ -192,6 +196,7 @@ pub fn clear() {
     st.disk_hits.store(0, Ordering::Relaxed);
     st.disk_skipped.store(0, Ordering::Relaxed);
     st.disk_quarantined.store(0, Ordering::Relaxed);
+    st.disk_retries.store(0, Ordering::Relaxed);
 }
 
 // --------------------------------------------------------- layer-stage memo
@@ -211,7 +216,7 @@ pub(crate) struct StKey {
     pub(crate) ffn: usize,
     pub(crate) vocab: usize,
     pub(crate) seq: usize,
-    pub(crate) hw_bits: [u64; 8],
+    pub(crate) hw_bits: [u64; 10],
     // The stage reads PLX_CAL_EFF_BASE / MB_EXP / SHARD_EXP / BWD_FACTOR
     // through `kernels::cal`; the full CalKey is included (DP_EXPOSED
     // rides along — over-keying only costs sharing when that one var
@@ -251,6 +256,7 @@ struct StageCache {
     disk_hits: AtomicU64,
     disk_skipped: AtomicU64,
     disk_quarantined: AtomicU64,
+    disk_retries: AtomicU64,
 }
 
 fn stage_cache() -> &'static StageCache {
@@ -263,6 +269,7 @@ fn stage_cache() -> &'static StageCache {
         disk_hits: AtomicU64::new(0),
         disk_skipped: AtomicU64::new(0),
         disk_quarantined: AtomicU64::new(0),
+        disk_retries: AtomicU64::new(0),
     })
 }
 
@@ -342,6 +349,7 @@ struct MsCache {
     disk_hits: AtomicU64,
     disk_skipped: AtomicU64,
     disk_quarantined: AtomicU64,
+    disk_retries: AtomicU64,
 }
 
 fn ms_cache() -> &'static MsCache {
@@ -354,6 +362,7 @@ fn ms_cache() -> &'static MsCache {
         disk_hits: AtomicU64::new(0),
         disk_skipped: AtomicU64::new(0),
         disk_quarantined: AtomicU64::new(0),
+        disk_retries: AtomicU64::new(0),
     })
 }
 
@@ -401,34 +410,60 @@ pub fn makespan_len() -> usize {
 // ------------------------------------------------------ disk spill plumbing
 
 /// Per-memo persistence counters: entries loaded from a `PLX_CACHE_DIR`
-/// spill file this process, hits served by such entries since, plus the
+/// spill file this process, hits served by such entries since, the
 /// damage accounting `persist` reports when a file is less than intact —
-/// corrupt lines skipped and whole files quarantined (renamed `.bad`).
+/// corrupt lines skipped and whole files quarantined (renamed `.bad`) —
+/// and write attempts retried after an injected/transient IO error
+/// (`PLX_PERSIST_RETRIES`, see [`super::persist`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DiskStats {
     pub loaded: u64,
     pub hits: u64,
     pub skipped: u64,
     pub quarantined: u64,
+    pub retries: u64,
 }
 
 /// `(evaluate, stage, makespan)` disk counters — the observable behind
 /// the warm-restart acceptance gate (`plx serve` stats report them).
 pub fn disk_stats() -> (DiskStats, DiskStats, DiskStats) {
-    let read = |l: &AtomicU64, h: &AtomicU64, s: &AtomicU64, q: &AtomicU64| DiskStats {
-        loaded: l.load(Ordering::Relaxed),
-        hits: h.load(Ordering::Relaxed),
-        skipped: s.load(Ordering::Relaxed),
-        quarantined: q.load(Ordering::Relaxed),
+    let read = |c: &[&AtomicU64; 5]| DiskStats {
+        loaded: c[0].load(Ordering::Relaxed),
+        hits: c[1].load(Ordering::Relaxed),
+        skipped: c[2].load(Ordering::Relaxed),
+        quarantined: c[3].load(Ordering::Relaxed),
+        retries: c[4].load(Ordering::Relaxed),
     };
     let c = cache();
     let st = stage_cache();
     let m = ms_cache();
     (
-        read(&c.disk_loaded, &c.disk_hits, &c.disk_skipped, &c.disk_quarantined),
-        read(&st.disk_loaded, &st.disk_hits, &st.disk_skipped, &st.disk_quarantined),
-        read(&m.disk_loaded, &m.disk_hits, &m.disk_skipped, &m.disk_quarantined),
+        read(&[&c.disk_loaded, &c.disk_hits, &c.disk_skipped, &c.disk_quarantined, &c.disk_retries]),
+        read(&[
+            &st.disk_loaded,
+            &st.disk_hits,
+            &st.disk_skipped,
+            &st.disk_quarantined,
+            &st.disk_retries,
+        ]),
+        read(&[&m.disk_loaded, &m.disk_hits, &m.disk_skipped, &m.disk_quarantined, &m.disk_retries]),
     )
+}
+
+/// Record write retries on the evaluate memo's spill file (one count per
+/// re-attempt after an injected/transient write failure).
+pub(crate) fn note_disk_retries_evaluate(retries: u64) {
+    cache().disk_retries.fetch_add(retries, Ordering::Relaxed);
+}
+
+/// Record write retries on the stage memo's spill file.
+pub(crate) fn note_disk_retries_stage(retries: u64) {
+    stage_cache().disk_retries.fetch_add(retries, Ordering::Relaxed);
+}
+
+/// Record write retries on the makespan memo's spill file.
+pub(crate) fn note_disk_retries_makespan(retries: u64) {
+    ms_cache().disk_retries.fetch_add(retries, Ordering::Relaxed);
 }
 
 /// Record load-time damage on the evaluate memo's spill file: corrupt

@@ -27,6 +27,17 @@ pub struct Hardware {
     pub launch_overhead_s: f64,
     /// Memory reserved by CUDA context / NCCL / framework + fragmentation.
     pub workspace_bytes: f64,
+    /// Mean time between failures per GPU, in hours — the reliability
+    /// input of `sim::failure`. Large-scale training reports (OPT: ~1
+    /// failure/day on 1024 GPUs; Frontier runs similar) put a single
+    /// accelerator around 2.5–3.5 years MTBF; both presets use 30000 h.
+    /// `<= 0` disables the failure model (availability = 1).
+    pub mtbf_h: f64,
+    /// Achievable per-GPU checkpoint write bandwidth to durable storage
+    /// (parallel filesystem / object store), bytes/s. Sets the
+    /// checkpoint cost `C` in the Young–Daly model. `<= 0` disables the
+    /// failure model.
+    pub storage_bw: f64,
 }
 
 /// The paper's testbed: DGX A100-80GB nodes, NVLink3 + HDR InfiniBand.
@@ -39,6 +50,8 @@ pub const A100: Hardware = Hardware {
     coll_latency_s: 20e-6,
     launch_overhead_s: 4.5e-6,
     workspace_bytes: 5.0 * 1e9,
+    mtbf_h: 30000.0,
+    storage_bw: 2.0e9,
 };
 
 /// DGX H100: SXM5 silicon (989.4 TFLOP/s dense bf16, 80 GB HBM3 at
@@ -56,6 +69,8 @@ pub const H100: Hardware = Hardware {
     coll_latency_s: 20e-6,
     launch_overhead_s: 4.5e-6,
     workspace_bytes: 5.0 * 1e9,
+    mtbf_h: 30000.0,
+    storage_bw: 2.0e9,
 };
 
 /// The hardware registry behind the `--hw` CLI axis: every named preset,
@@ -83,7 +98,7 @@ impl Hardware {
     /// The constants as f64 bit patterns, field order fixed — the form
     /// every memo key hashes (`f64` is not `Hash`/`Eq`), so two hardware
     /// models alias in a cache iff they are bit-identical.
-    pub fn bits(&self) -> [u64; 8] {
+    pub fn bits(&self) -> [u64; 10] {
         [
             self.peak_matmul_flops.to_bits(),
             self.hbm_bytes.to_bits(),
@@ -93,6 +108,8 @@ impl Hardware {
             self.coll_latency_s.to_bits(),
             self.launch_overhead_s.to_bits(),
             self.workspace_bytes.to_bits(),
+            self.mtbf_h.to_bits(),
+            self.storage_bw.to_bits(),
         ]
     }
 
@@ -114,6 +131,8 @@ impl Hardware {
             coll_latency_s: cal("PLX_HW_COLL_LATENCY_S", self.coll_latency_s),
             launch_overhead_s: cal("PLX_HW_LAUNCH_OVERHEAD_S", self.launch_overhead_s),
             workspace_bytes: cal("PLX_HW_WORKSPACE_BYTES", self.workspace_bytes),
+            mtbf_h: cal("PLX_HW_MTBF_H", self.mtbf_h),
+            storage_bw: cal("PLX_HW_STORAGE_BW", self.storage_bw),
         }
     }
 }
@@ -191,6 +210,11 @@ mod tests {
         assert_eq!(H100.coll_latency_s.to_bits(), A100.coll_latency_s.to_bits());
         assert_eq!(H100.launch_overhead_s.to_bits(), A100.launch_overhead_s.to_bits());
         assert_eq!(H100.workspace_bytes.to_bits(), A100.workspace_bytes.to_bits());
+        // Reliability + storage constants are testbed-side too.
+        assert_eq!(H100.mtbf_h.to_bits(), A100.mtbf_h.to_bits());
+        assert_eq!(H100.storage_bw.to_bits(), A100.storage_bw.to_bits());
+        assert_eq!(A100.mtbf_h.to_bits(), 30000.0_f64.to_bits());
+        assert_eq!(A100.storage_bw.to_bits(), 2.0e9_f64.to_bits());
         // Generation ordering: more FLOPs AND more bandwidth per GPU.
         assert!(H100.peak_matmul_flops > A100.peak_matmul_flops);
         assert!(H100.hbm_bw > A100.hbm_bw);
@@ -230,5 +254,8 @@ mod tests {
         assert_eq!(a[5], h[5]);
         assert_eq!(a[6], h[6]);
         assert_eq!(a[7], h[7]);
+        // ...including the reliability/storage slots of `sim::failure`.
+        assert_eq!(a[8], h[8]);
+        assert_eq!(a[9], h[9]);
     }
 }

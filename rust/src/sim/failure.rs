@@ -1,0 +1,545 @@
+//! Failure-aware evaluation (S34): MTBF/checkpoint cost model, the
+//! Young–Daly optimal checkpoint interval, **effective MFU**, and a
+//! deterministic failure-trace simulator.
+//!
+//! At paper scale (hundreds of accelerators) hardware failures and
+//! checkpoint/restart overhead materially reorder which layout trains
+//! fastest in wall-clock terms. This module prices that in:
+//!
+//! * **Checkpoint cost** `C(v)` — the per-GPU model-state bytes a
+//!   checkpoint must persist (bf16 weights + ZeRO-1 fp32 optimizer
+//!   shard, the same accounting as [`crate::sim::memory`]) over the
+//!   hardware's achievable storage bandwidth. Layout-dependent: more
+//!   model parallelism shrinks the shard each GPU writes.
+//! * **Cluster MTBF** `M` — per-GPU MTBF ([`Hardware::mtbf_h`],
+//!   `PLX_HW_MTBF_H` override) divided by world size: failures arrive
+//!   `world`× faster on the full cluster.
+//! * **Young–Daly interval** `τ = sqrt(2·C·M)` — the checkpoint period
+//!   minimizing expected waste (Young 1974, Daly 2006).
+//! * **Availability** — the expected goodput fraction at the optimal
+//!   interval: `1 − sqrt(2C/M) − R/M` (checkpoint tax + expected lost
+//!   work, plus restart cost per failure), clamped to `[0, 1]`.
+//! * **Effective MFU** = MFU × availability — the `--rank effective-mfu`
+//!   objective on `sweep`/`plan`/`compare`, with a bitwise-admissible
+//!   upper bound ([`effective_mfu_upper_bound`]) so `sweep::argmax`
+//!   pruning carries over losslessly.
+//! * **Trace replay** ([`simulate_run`]) — an event-driven, seeded
+//!   deterministic failure trace over a wall-clock horizon, reporting
+//!   downtime, lost work, checkpoints written, and achieved goodput.
+//!   Same `PLX_FAULT_SEED` discipline as [`crate::util::fault`]; the
+//!   arithmetic avoids transcendentals entirely (only `+ − × ÷ sqrt`,
+//!   all IEEE correctly-rounded) so `tools/pysim.py` replays the same
+//!   seed to the same bits.
+//!
+//! See docs/failures.md for the model derivation and the protocol
+//! schemas of `plx replan` / `plx simulate-run`.
+
+use crate::layout::{Job, ValidLayout};
+use crate::sim::Hardware;
+use crate::util::fault::fnv1a64;
+use crate::util::prng::Rng;
+
+/// Fixed restart overhead beyond re-reading the checkpoint: failure
+/// detection, reschedule, process relaunch, NCCL re-rendezvous. The
+/// total restart cost is `R = C + RESTART_OVERHEAD_S`.
+pub const RESTART_OVERHEAD_S: f64 = 120.0;
+
+/// The per-site PRNG stream label of the trace simulator (the same
+/// `seed ^ fnv1a64(site)` derivation as the fault-injection sites, so
+/// trace draws never perturb — and are never perturbed by — the
+/// `persist.write` / `serve.write` streams).
+pub const TRACE_SITE: &str = "sim.failure";
+
+/// Whether the failure model is active for this hardware: a
+/// non-positive MTBF or storage bandwidth disables it (availability 1,
+/// effective MFU == MFU, traces replay failure-free).
+pub fn model_enabled(hw: &Hardware) -> bool {
+    hw.mtbf_h > 0.0 && hw.storage_bw > 0.0
+}
+
+/// Per-GPU **durable** model-state bytes a checkpoint writes (and a
+/// migration moves): bf16 weights `2·shard` plus the ZeRO-1 fp32
+/// optimizer shard `12·shard/dp`, with `shard = params/(tp·pp)` — the
+/// same shard arithmetic as `memory::model_state_bytes`, minus
+/// gradients (transient) and workspace (not state).
+pub fn state_bytes_per_gpu(job: &Job, v: &ValidLayout) -> f64 {
+    let n = job.arch.param_count() as f64;
+    let shard = n / (v.layout.tp * v.layout.pp) as f64;
+    2.0 * shard + 12.0 * shard / v.topo.dp as f64
+}
+
+/// Checkpoint cost `C(v)` in seconds: every GPU writes its own state
+/// slice in parallel, so the wall-clock cost is the per-GPU bytes over
+/// the per-GPU storage bandwidth.
+pub fn checkpoint_cost_s(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    state_bytes_per_gpu(job, v) / hw.storage_bw
+}
+
+/// Cluster MTBF `M` in seconds: `world` GPUs fail `world`× as often as
+/// one.
+pub fn cluster_mtbf_s(hw: &Hardware, world: usize) -> f64 {
+    hw.mtbf_h * 3600.0 / world as f64
+}
+
+/// The Young–Daly optimal checkpoint interval `τ = sqrt(2·C·M)`
+/// (first-order optimum of waste `C/τ + (τ/2 + R)/M` in `τ`).
+pub fn young_daly_interval_s(c: f64, m: f64) -> f64 {
+    (2.0 * c * m).sqrt()
+}
+
+/// Expected goodput fraction at the Young–Daly interval:
+/// `1 − sqrt(2C/M) − R/M`, clamped to `[0, 1]`.
+///
+/// This single expression is shared by the exact per-layout availability
+/// and the pruning bound, which is what makes the bound bitwise
+/// admissible: every step (`×`/`÷` by a positive value, `sqrt`,
+/// addition, `1 − x`) is monotone under IEEE-754 round-to-nearest, so
+/// `c' ≤ c` and `r' ≤ r` imply `availability(c', r', m) ≥
+/// availability(c, r, m)` — to the bit, not just approximately.
+pub fn availability(c: f64, r: f64, m: f64) -> f64 {
+    let waste = (2.0 * c / m).sqrt() + r / m;
+    if waste >= 1.0 {
+        0.0
+    } else {
+        1.0 - waste
+    }
+}
+
+/// Availability of one layout on one hardware model (1.0 when the
+/// failure model is disabled).
+pub fn availability_of(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    if !model_enabled(hw) {
+        return 1.0;
+    }
+    let c = checkpoint_cost_s(job, v, hw);
+    availability(c, c + RESTART_OVERHEAD_S, cluster_mtbf_s(hw, v.topo.world()))
+}
+
+/// **Effective MFU** = MFU × availability: the failure-aware ranking
+/// objective (`--rank effective-mfu`).
+pub fn effective_mfu(job: &Job, v: &ValidLayout, hw: &Hardware, mfu: f64) -> f64 {
+    mfu * availability_of(job, v, hw)
+}
+
+/// Layout-independent **upper bound** on [`availability_of`] across
+/// every layout of a `world`-GPU job: the checkpoint cost is minimized
+/// by the largest model-parallel degree (`tp·pp = world`, so `shard =
+/// params/world`) at `dp = 1` — `C(v) ≥ C_min` for every valid layout,
+/// and availability is monotone decreasing in `C` (and in `R = C +
+/// const`) through the shared [`availability`] expression.
+pub fn availability_upper_bound(job: &Job, world: usize, hw: &Hardware) -> f64 {
+    if !model_enabled(hw) {
+        return 1.0;
+    }
+    let n = job.arch.param_count() as f64;
+    let shard = n / world as f64;
+    // Same expression shape as `state_bytes_per_gpu` with dp = 1, so the
+    // tp·pp = world, dp = 1 corner is bit-equal (not merely close) and
+    // every other layout's bytes exceed these by whole shards.
+    let bytes = 2.0 * shard + 12.0 * shard / 1.0;
+    let c = bytes / hw.storage_bw;
+    availability(c, c + RESTART_OVERHEAD_S, cluster_mtbf_s(hw, world))
+}
+
+/// Admissible upper bound on [`effective_mfu`]: the product of the MFU
+/// upper bound ([`crate::sim::mfu_upper_bound`], bitwise ≥ the true
+/// MFU) and the availability upper bound (bitwise ≥ the true
+/// availability). Both factors are non-negative, and IEEE
+/// multiplication is monotone, so the product dominates the true
+/// effective MFU bitwise — `sweep::argmax` pruning on it is lossless.
+pub fn effective_mfu_upper_bound(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
+    crate::sim::mfu_upper_bound(job, v, hw) * availability_upper_bound(job, v.topo.world(), hw)
+}
+
+/// One deterministic failure-trace replay: the accounting
+/// [`simulate_run`] reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceReport {
+    /// Whether the failure model was active (false = failure-free replay).
+    pub enabled: bool,
+    /// Simulated wall-clock horizon (s).
+    pub horizon_s: f64,
+    /// Trace seed (resolved from `--seed` / `PLX_FAULT_SEED` / 0).
+    pub seed: u64,
+    /// Horizon length in whole days, as requested.
+    pub days: u64,
+    /// Checkpoint write cost `C` (s).
+    pub ckpt_s: f64,
+    /// Young–Daly checkpoint interval `τ` (s).
+    pub interval_s: f64,
+    /// Restart cost `R = C + RESTART_OVERHEAD_S` (s).
+    pub restart_s: f64,
+    /// Cluster MTBF `M` (s).
+    pub mtbf_s: f64,
+    /// Failures struck.
+    pub failures: u64,
+    /// Checkpoints completed.
+    pub checkpoints: u64,
+    /// Wall-clock spent restarting (s).
+    pub downtime_s: f64,
+    /// Work computed and then lost to a failure (s).
+    pub lost_s: f64,
+    /// Work computed and kept (s); goodput = `good_s / horizon_s`.
+    pub good_s: f64,
+}
+
+/// Event-driven deterministic failure-trace replay over `days` of wall
+/// clock.
+///
+/// Time advances in segments of `τ + C` (work, then checkpoint). Per
+/// segment the site stream [`TRACE_SITE`] is consulted exactly like a
+/// fault-injection gate: one uniform draw decides whether a failure
+/// strikes inside the segment (probability `min(window/M, 1)` — the
+/// discretized hazard; no `exp`/`ln`, so the arithmetic is bit-portable
+/// across languages), and, when it does, one more draw places it
+/// uniformly in the window. Work since the last completed checkpoint is
+/// lost; the restart costs `R`; the final partial segment keeps its
+/// work (it would only be lost to a later failure). The whole replay is
+/// a pure function of `(job, layout, hardware, days, seed)`.
+pub fn simulate_run(job: &Job, v: &ValidLayout, hw: &Hardware, days: u64, seed: u64) -> TraceReport {
+    let horizon = days as f64 * 86400.0;
+    let mut rep = TraceReport {
+        enabled: model_enabled(hw),
+        horizon_s: horizon,
+        seed,
+        days,
+        ckpt_s: 0.0,
+        interval_s: 0.0,
+        restart_s: 0.0,
+        mtbf_s: 0.0,
+        failures: 0,
+        checkpoints: 0,
+        downtime_s: 0.0,
+        lost_s: 0.0,
+        good_s: 0.0,
+    };
+    if !rep.enabled {
+        rep.good_s = horizon;
+        return rep;
+    }
+    let c = checkpoint_cost_s(job, v, hw);
+    let m = cluster_mtbf_s(hw, v.topo.world());
+    let tau = young_daly_interval_s(c, m);
+    rep.ckpt_s = c;
+    rep.interval_s = tau;
+    rep.restart_s = c + RESTART_OVERHEAD_S;
+    rep.mtbf_s = m;
+    let seg = tau + c;
+    let mut rng = Rng::new(seed ^ fnv1a64(TRACE_SITE));
+    let mut t = 0.0;
+    while t < horizon {
+        let window = seg.min(horizon - t);
+        let p = (window / m).min(1.0);
+        if rng.f64() < p {
+            // A failure strikes, uniformly placed in the window. All
+            // work since the last completed checkpoint is lost (a
+            // failure past `τ` lands mid-checkpoint-write: the full
+            // interval's work was not yet durable).
+            let at = rng.f64() * window;
+            rep.failures += 1;
+            rep.lost_s += at.min(tau);
+            t += at;
+            let down = rep.restart_s.min(horizon - t);
+            rep.downtime_s += down;
+            t += down;
+        } else if window < seg {
+            // Horizon ends mid-segment: keep the work done so far.
+            rep.good_s += window.min(tau);
+            t = horizon;
+        } else {
+            rep.good_s += tau;
+            rep.checkpoints += 1;
+            t += seg;
+        }
+    }
+    rep
+}
+
+/// The `plx simulate-run` stdout block — shared verbatim by the CLI and
+/// the serve protocol's `simulate-run` command (byte-identity by
+/// construction, like every other shared renderer). `mfu`/`step_time_s`
+/// are the layout's evaluated numbers; `hw_label` the user-spelled
+/// hardware name.
+pub fn render_simulate_run(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    hw_label: &str,
+    mfu: f64,
+    step_time_s: f64,
+    rep: &TraceReport,
+) -> String {
+    let l = v.layout;
+    let mut out = format!(
+        "simulate-run for {} on {} GPUs (gbs {}, hw {}):\n\
+         \x20 layout: mb={} tp={} pp={} dp={} ckpt={} kernel={} sp={} sched={}\n",
+        job.arch.name,
+        job.cluster.gpus,
+        job.gbs,
+        hw_label,
+        l.mb,
+        l.tp,
+        l.pp,
+        v.topo.dp,
+        l.ckpt,
+        l.kernel.label(),
+        l.sp,
+        l.sched.label(),
+    );
+    if rep.enabled {
+        out.push_str(&format!(
+            "\x20 model: per-GPU MTBF {:.0} h, cluster MTBF {:.2} h, \
+             checkpoint {:.2}s every {:.1}s, restart {:.2}s\n",
+            hw.mtbf_h,
+            rep.mtbf_s / 3600.0,
+            rep.ckpt_s,
+            rep.interval_s,
+            rep.restart_s,
+        ));
+    } else {
+        out.push_str("\x20 model: failure model disabled (mtbf_h or storage_bw <= 0)\n");
+    }
+    let avail = availability_of(job, v, hw);
+    out.push_str(&format!(
+        "\x20 predicted: {:.2}s/step, {:.2}% MFU, {:.2}% availability, {:.2}% effective MFU\n\
+         \x20 trace (seed {}, {} days): {} failures, {} checkpoints\n\
+         \x20 totals: {:.2} h good work, {:.2} h lost, {:.2} h downtime, {:.2}% goodput\n",
+        step_time_s,
+        100.0 * mfu,
+        100.0 * avail,
+        100.0 * (mfu * avail),
+        rep.seed,
+        rep.days,
+        rep.failures,
+        rep.checkpoints,
+        rep.good_s / 3600.0,
+        rep.lost_s / 3600.0,
+        rep.downtime_s / 3600.0,
+        100.0 * rep.good_s / rep.horizon_s,
+    ));
+    out
+}
+
+/// Evaluate the layout, replay the trace, and render the full
+/// `simulate-run` report — the orchestration shared by `plx
+/// simulate-run` and the serve daemon's `{"cmd":"simulate-run"}`, so the
+/// two paths are byte-identical by construction. `Err` carries the
+/// user-facing reason when the layout cannot run at all.
+pub fn simulate_run_report(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    hw_label: &str,
+    days: u64,
+    seed: u64,
+) -> Result<String, String> {
+    match crate::sim::cache::evaluate_cached(job, v, hw) {
+        crate::sim::Outcome::Ok { mfu, step_time_s, .. } => {
+            let rep = simulate_run(job, v, hw, days, seed);
+            Ok(render_simulate_run(job, v, hw, hw_label, mfu, step_time_s, &rep))
+        }
+        crate::sim::Outcome::Oom { required, budget } => Err(format!(
+            "layout does not fit: needs {:.1} GB of {:.1} GB HBM",
+            required / 1e9,
+            budget / 1e9
+        )),
+        crate::sim::Outcome::KernelUnavailable => {
+            Err("kernel unavailable for this layout".to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{enumerate, validate, Kernel, Layout, Schedule};
+    use crate::model::arch::preset;
+    use crate::sim::{evaluate, Outcome, A100, H100};
+    use crate::topo::Cluster;
+
+    fn job(name: &str, nodes: usize) -> Job {
+        let arch = preset(name).unwrap();
+        Job::new(arch, Cluster::dgx_a100(nodes), Job::paper_gbs(&arch))
+    }
+
+    fn layout13(job: &Job) -> ValidLayout {
+        let l = Layout {
+            tp: 1, pp: 1, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false,
+            sched: Schedule::OneF1B,
+        };
+        validate(job, &l).unwrap()
+    }
+
+    #[test]
+    fn young_daly_is_the_closed_form() {
+        let (c, m) = (30.0, 50_000.0);
+        let tau = young_daly_interval_s(c, m);
+        assert_eq!(tau.to_bits(), (2.0 * c * m).sqrt().to_bits());
+        // Second-order sanity: the optimum beats its neighbors on the
+        // exact waste function C/τ + (τ/2 + R)/M.
+        let waste = |t: f64| c / t + (t / 2.0 + c + RESTART_OVERHEAD_S) / m;
+        assert!(waste(tau) <= waste(tau * 0.7));
+        assert!(waste(tau) <= waste(tau * 1.4));
+    }
+
+    #[test]
+    fn availability_is_a_fraction_and_shrinks_with_scale() {
+        let j8 = job("llama13b", 8);
+        let v8 = layout13(&j8);
+        let a8 = availability_of(&j8, &v8, &A100);
+        assert!(a8 > 0.0 && a8 < 1.0, "{a8}");
+        // 4× the cluster fails 4× as often: availability must drop.
+        let j32 = job("llama13b", 32);
+        let v32 = layout13(&j32);
+        let a32 = availability_of(&j32, &v32, &A100);
+        assert!(a32 < a8, "{a32} !< {a8}");
+        // Degenerate MTBF disables the model exactly.
+        let dead = Hardware { mtbf_h: 0.0, ..A100 };
+        assert_eq!(availability_of(&j8, &v8, &dead).to_bits(), 1.0f64.to_bits());
+        assert_eq!(
+            effective_mfu(&j8, &v8, &dead, 0.7).to_bits(),
+            0.7f64.to_bits(),
+            "disabled model must be the exact identity"
+        );
+    }
+
+    #[test]
+    fn effective_mfu_bound_is_admissible_bitwise() {
+        // The pruning-soundness gate (mirrors mfu_upper_bound_is_admissible):
+        // for every runnable enumerable layout on both registry entries,
+        // the bound must dominate the exact effective MFU with zero
+        // tolerance.
+        for (name, nodes) in [("llama13b", 8usize), ("llama65b", 16)] {
+            let j = job(name, nodes);
+            let layouts = enumerate(
+                &j,
+                &[1, 2, 4],
+                &[1, 2, 4, 8],
+                &[1, 2, 4],
+                &[false, true],
+                &Kernel::ALL,
+                &[false, true],
+                &[Schedule::OneF1B, Schedule::Interleaved(2)],
+            );
+            for hw in [A100, H100] {
+                let mut runnable = 0usize;
+                for v in &layouts {
+                    if let Outcome::Ok { mfu, .. } = evaluate(&j, v, &hw) {
+                        let eff = effective_mfu(&j, v, &hw, mfu);
+                        let ub = effective_mfu_upper_bound(&j, v, &hw);
+                        assert!(ub >= eff, "{:?}: bound {ub} < effective {eff}", v.layout);
+                        assert!(eff <= mfu, "{:?}: availability must not exceed 1", v.layout);
+                        runnable += 1;
+                    }
+                }
+                assert!(runnable > 20, "{name}: only {runnable} runnable layouts");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_cost_shrinks_with_model_parallelism() {
+        let j = job("llama65b", 8);
+        let v1 = validate(
+            &j,
+            &Layout {
+                tp: 8, pp: 1, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: true,
+                sched: Schedule::OneF1B,
+            },
+        )
+        .unwrap();
+        let v2 = validate(
+            &j,
+            &Layout {
+                tp: 1, pp: 1, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false,
+                sched: Schedule::OneF1B,
+            },
+        )
+        .unwrap();
+        assert!(checkpoint_cost_s(&j, &v1, &A100) < checkpoint_cost_s(&j, &v2, &A100));
+        // The bound's C_min is what tp·pp = world, dp = 1 achieves: at
+        // that corner the availability bound is exact to the bit.
+        let v_corner = validate(
+            &j,
+            &Layout {
+                tp: 8, pp: 8, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: true,
+                sched: Schedule::OneF1B,
+            },
+        )
+        .unwrap();
+        assert_eq!(v_corner.topo.dp, 1);
+        assert_eq!(
+            availability_of(&j, &v_corner, &A100).to_bits(),
+            availability_upper_bound(&j, v_corner.topo.world(), &A100).to_bits(),
+        );
+    }
+
+    #[test]
+    fn trace_replay_is_deterministic_and_accounts_time() {
+        let j = job("llama13b", 8);
+        let v = layout13(&j);
+        let a = simulate_run(&j, &v, &A100, 30, 0xC0FFEE);
+        let b = simulate_run(&j, &v, &A100, 30, 0xC0FFEE);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        let other = simulate_run(&j, &v, &A100, 30, 0xC0FFEF);
+        assert_ne!(a, other, "different seeds must diverge");
+        // 30 days on 64 GPUs at 30000 h MTBF ≈ 1.5 expected failures —
+        // over many seeds some strike; this seed's trace is pinned by
+        // the determinism above, so just check the accounting:
+        let slack = a.horizon_s * 1e-9;
+        assert!(
+            a.good_s + a.lost_s + a.downtime_s + a.checkpoints as f64 * a.ckpt_s
+                <= a.horizon_s + slack,
+            "{a:?}"
+        );
+        assert!(a.good_s > 0.0 && a.good_s <= a.horizon_s);
+        assert!(a.interval_s > 0.0 && a.ckpt_s > 0.0);
+        // Failure-free hardware replays the whole horizon as good work.
+        let dead = Hardware { mtbf_h: 0.0, ..A100 };
+        let free = simulate_run(&j, &v, &dead, 30, 0xC0FFEE);
+        assert!(!free.enabled);
+        assert_eq!(free.good_s.to_bits(), free.horizon_s.to_bits());
+        assert_eq!(free.failures, 0);
+    }
+
+    #[test]
+    fn trace_goodput_tracks_predicted_availability_over_long_horizons() {
+        // The replay and the closed form must agree in expectation: over
+        // a year the achieved goodput lands within a few points of the
+        // Young–Daly availability.
+        let j = job("llama13b", 32);
+        let v = layout13(&j);
+        let rep = simulate_run(&j, &v, &A100, 365, 7);
+        let predicted = availability_of(&j, &v, &A100);
+        let achieved = rep.good_s / rep.horizon_s;
+        assert!(rep.failures > 0, "a year on 256 GPUs must see failures");
+        assert!(
+            (achieved - predicted).abs() < 0.05,
+            "achieved {achieved} vs predicted {predicted} ({rep:?})"
+        );
+    }
+
+    #[test]
+    fn render_covers_model_and_trace_lines() {
+        let j = job("llama13b", 8);
+        let v = layout13(&j);
+        let rep = simulate_run(&j, &v, &A100, 30, 0);
+        let (mfu, st) = match evaluate(&j, &v, &A100) {
+            Outcome::Ok { mfu, step_time_s, .. } => (mfu, step_time_s),
+            o => panic!("layout must run: {o:?}"),
+        };
+        let out = render_simulate_run(&j, &v, &A100, "a100", mfu, st, &rep);
+        assert!(out.contains("simulate-run for llama13b on 64 GPUs"), "{out}");
+        assert!(out.contains("per-GPU MTBF 30000 h"), "{out}");
+        assert!(out.contains("trace (seed 0, 30 days)"), "{out}");
+        assert!(out.contains("% goodput"), "{out}");
+        // The shared orchestration returns these exact bytes (the CLI and
+        // the serve daemon both call it).
+        assert_eq!(simulate_run_report(&j, &v, &A100, "a100", 30, 0).unwrap(), out);
+        let dead = Hardware { storage_bw: 0.0, ..A100 };
+        let free = simulate_run(&j, &v, &dead, 30, 0);
+        let out = render_simulate_run(&j, &v, &dead, "a100", mfu, st, &free);
+        assert!(out.contains("failure model disabled"), "{out}");
+        assert!(out.contains("100.00% goodput"), "{out}");
+    }
+}

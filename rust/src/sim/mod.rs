@@ -7,6 +7,7 @@
 
 pub mod cache;
 pub mod cluster;
+pub mod failure;
 pub mod kernels;
 pub mod memory;
 pub mod mfu;

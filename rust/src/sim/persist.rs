@@ -7,12 +7,12 @@
 //! reference and the non-aliasing argument):
 //!
 //! * `evaluate.plxcache` / `stage.plxcache` / `makespan.plxcache`;
-//! * first line `plxcache v2 <memo> <gen>` — `gen` is the file's
-//!   generation counter, bumped by one on every spill. Version-1 files
-//!   (`plxcache v1 <memo>`) still **warm-load byte-compatibly** (every
-//!   entry at generation 1); any other recognized header (unknown
-//!   version, wrong memo name) means the file is treated cold, never
-//!   migrated;
+//! * first line `plxcache v3 <memo> <gen>` — `gen` is the file's
+//!   generation counter, bumped by one on every spill. Older versions
+//!   (v1/v2, written before [`Hardware::bits`] grew its reliability
+//!   slots and the key lines gained two hardware-bit tokens) are
+//!   treated **cold**: recognized, never loaded, never quarantined —
+//!   the next spill simply replaces them at generation 1;
 //! * one entry per line: an 8-hex-digit generation prefix (the spill at
 //!   which the entry first reached disk — fixed width, so lexicographic
 //!   line order is generation order), then space-separated tokens:
@@ -45,7 +45,11 @@
 //!
 //! File IO runs through the [`crate::util::fault`] injection points
 //! (`persist.write`), so seeded stress runs exercise hard IO errors and
-//! torn writes deterministically.
+//! torn writes deterministically. Hard write errors (injected or real)
+//! are retried up to [`RETRIES_ENV`] times (default 2) with a short
+//! backoff — each attempt re-draws the injection gate, so a seeded
+//! stress run exercises the retry path deterministically too; the
+//! retries performed are counted per memo in [`cache::disk_stats`].
 
 use std::collections::HashMap;
 use std::io;
@@ -60,9 +64,11 @@ use crate::sim::step_time::LayerCosts;
 use crate::sim::{MemoryBreakdown, Outcome, StepBreakdown};
 use crate::util::fault;
 
-/// On-disk format version; bumped on any line-format change. Version 1
-/// files (no generation counter) still warm-load; see the module docs.
-pub const FORMAT_VERSION: u32 = 2;
+/// On-disk format version; bumped on any line-format change. v3: the
+/// key lines carry ten hardware-bit tokens ([`Hardware::bits`] gained
+/// `mtbf_h` / `storage_bw`); v1/v2 files are treated cold — see the
+/// module docs.
+pub const FORMAT_VERSION: u32 = 3;
 
 /// The environment variable that (when set and non-empty) enables
 /// persistence for every analytic command and the serve daemon.
@@ -78,6 +84,14 @@ pub const READONLY_ENV: &str = "PLX_CACHE_RO";
 /// Per-file byte cap enforced at spill time by oldest-generation
 /// eviction. Unset, empty, unparseable, or `0` means unlimited.
 pub const MAX_BYTES_ENV: &str = "PLX_CACHE_MAX_BYTES";
+
+/// Bounded retry budget for hard spill-write failures (injected or
+/// real): the write is re-attempted up to this many times before the
+/// error surfaces. Unset, empty, or unparseable means the default of 2.
+pub const RETRIES_ENV: &str = "PLX_PERSIST_RETRIES";
+
+/// Default [`RETRIES_ENV`] budget.
+pub const DEFAULT_RETRIES: u64 = 2;
 
 /// Process-wide read-only override, set by the `--readonly` CLI flag
 /// (the env var works without it, so a daemon launched under
@@ -252,6 +266,26 @@ struct SaveOutcome {
     evicted: usize,
 }
 
+/// The configured [`RETRIES_ENV`] budget (default [`DEFAULT_RETRIES`]).
+fn persist_retries() -> u64 {
+    match std::env::var(RETRIES_ENV) {
+        Ok(v) if !v.is_empty() => v.parse().unwrap_or(DEFAULT_RETRIES),
+        _ => DEFAULT_RETRIES,
+    }
+}
+
+/// Which memo a spill write belongs to, for the per-memo retry counter.
+fn note_retries(memo: &str, retries: u64) {
+    if retries == 0 {
+        return;
+    }
+    match memo {
+        "evaluate" => cache::note_disk_retries_evaluate(retries),
+        "stage" => cache::note_disk_retries_stage(retries),
+        _ => cache::note_disk_retries_makespan(retries),
+    }
+}
+
 /// Render and atomically replace one memo file. The old file (if any,
 /// either version) contributes two things: its generation counter
 /// (the new file's is one higher) and the generation each surviving
@@ -294,14 +328,14 @@ fn save_memo(
         out.push_str(l);
         out.push('\n');
     }
-    write_atomic(dir, name, &out)?;
+    write_atomic(dir, name, memo, &out)?;
     Ok(SaveOutcome { written: lines.len(), evicted })
 }
 
 /// The old file's generation counter and each surviving entry's
-/// generation, keyed by the entry tokens (without the prefix). Corrupt
-/// or alien files contribute nothing — every entry restarts at the new
-/// generation.
+/// generation, keyed by the entry tokens (without the prefix). Corrupt,
+/// alien, or pre-v3 files contribute nothing — every entry restarts at
+/// the new generation.
 fn line_generations(text: &str, memo: &str) -> (u32, HashMap<String, u32>) {
     let mut gens = HashMap::new();
     let mut lines = text.lines();
@@ -310,13 +344,7 @@ fn line_generations(text: &str, memo: &str) -> (u32, HashMap<String, u32>) {
         None => return (0, gens),
     };
     match header {
-        Header::V1 => {
-            for l in lines.filter(|l| !l.trim().is_empty()) {
-                gens.insert(l.to_string(), 1);
-            }
-            (1, gens)
-        }
-        Header::V2(g) => {
+        Header::V3(g) => {
             for l in lines.filter(|l| !l.trim().is_empty()) {
                 if let Some((lg, rest)) = split_gen_line(l) {
                     gens.insert(rest.to_string(), lg);
@@ -328,7 +356,39 @@ fn line_generations(text: &str, memo: &str) -> (u32, HashMap<String, u32>) {
     }
 }
 
-fn write_atomic(dir: &Path, name: &str, content: &str) -> io::Result<()> {
+/// Atomic spill write with a bounded deterministic retry: hard failures
+/// (injected at the `persist.write` fault site, or real filesystem
+/// errors) are re-attempted up to [`persist_retries`] times with a short
+/// exponential backoff. Every attempt re-draws the injection gate —
+/// under a seeded stress run the retry sequence is as reproducible as
+/// the faults themselves. Retries performed are counted per memo
+/// ([`note_retries`]) whether or not the write ultimately succeeds.
+/// Torn writes are not failures here (the write "succeeds"); the
+/// quarantine path on the next load is what proves the reader survives
+/// them.
+fn write_atomic(dir: &Path, name: &str, memo: &str, content: &str) -> io::Result<()> {
+    let budget = persist_retries();
+    let mut retries = 0u64;
+    let result = loop {
+        match write_atomic_once(dir, name, content) {
+            Ok(()) => break Ok(()),
+            Err(e) => {
+                if retries >= budget {
+                    break Err(e);
+                }
+                retries += 1;
+                // Tiny exponential backoff (1, 2, 4… ms): enough to let a
+                // transient condition clear without slowing injected runs.
+                std::thread::sleep(std::time::Duration::from_millis(1 << retries.min(6)));
+            }
+        }
+    };
+    note_retries(memo, retries);
+    result
+}
+
+/// One spill-write attempt.
+fn write_atomic_once(dir: &Path, name: &str, content: &str) -> io::Result<()> {
     // Fault injection (seeded, deterministic): a hard error surfaces to
     // the caller like any real IO failure; a torn write cuts the payload
     // at a random byte — the quarantine path then proves the reader
@@ -366,7 +426,7 @@ fn kernel_code(k: Kernel) -> &'static str {
     }
 }
 
-/// Sorted-line v2 file: same (generation, entry) set in, same bytes
+/// Sorted-line v3 file: same (generation, entry) set in, same bytes
 /// out, regardless of shard iteration order (and of which language
 /// wrote the file).
 fn render_file(memo: &str, file_gen: u32, tagged: Vec<String>) -> String {
@@ -533,7 +593,7 @@ pub(crate) fn render_makespan(
 /// needs.
 pub(crate) struct Loaded<E> {
     pub entries: Vec<(u32, E)>,
-    /// The file's generation counter (1 for v1 files, 0 when cold).
+    /// The file's generation counter (0 when cold).
     pub file_gen: u32,
     /// Corrupt entry lines skipped (the rest of the file still loads).
     pub skipped: usize,
@@ -558,10 +618,11 @@ impl<E> Loaded<E> {
 }
 
 enum Header {
-    V1,
-    V2(u32),
-    /// A recognized plxcache header that is not ours: unknown version or
-    /// wrong memo name. Cold, untouched — it may belong to a future plx.
+    V3(u32),
+    /// A recognized plxcache header that is not ours: a pre-v3 version
+    /// (whose key lines lack the reliability hardware-bit tokens), an
+    /// unknown future version, or the wrong memo name. Cold, untouched —
+    /// never loaded, never quarantined.
     Cold,
     /// Not a plxcache header at all.
     Corrupt,
@@ -573,9 +634,8 @@ fn parse_header(first: &str, memo: &str) -> Header {
         return Header::Corrupt;
     }
     match t[1] {
-        "v1" if t.len() == 3 && t[2] == memo => Header::V1,
-        "v2" if t.len() == 4 && t[2] == memo => match parse_gen_dec(t[3]) {
-            Some(g) => Header::V2(g),
+        "v3" if t.len() == 4 && t[2] == memo => match parse_gen_dec(t[3]) {
+            Some(g) => Header::V3(g),
             None => Header::Corrupt,
         },
         _ => Header::Cold,
@@ -603,16 +663,15 @@ fn split_gen_line(line: &str) -> Option<(u32, &str)> {
 }
 
 /// Shared file walk: validate the header, then parse every entry line
-/// (v2 lines carry a generation prefix; v1 lines are all generation 1).
+/// (each carries a fixed-width generation prefix).
 fn parse_file<E>(text: &str, memo: &str, parse_entry: impl Fn(&str) -> Option<E>) -> Loaded<E> {
     let mut lines = text.lines();
     let header = match lines.next() {
         Some(h) => parse_header(h, memo),
         None => return Loaded::cold(),
     };
-    let (v2, file_gen) = match header {
-        Header::V1 => (false, 1),
-        Header::V2(g) => (true, g),
+    let file_gen = match header {
+        Header::V3(g) => g,
         Header::Cold => return Loaded::cold(),
         Header::Corrupt => return Loaded::corrupt(),
     };
@@ -621,11 +680,7 @@ fn parse_file<E>(text: &str, memo: &str, parse_entry: impl Fn(&str) -> Option<E>
         if line.trim().is_empty() {
             continue;
         }
-        let parsed = if v2 {
-            split_gen_line(line).and_then(|(g, rest)| parse_entry(rest).map(|e| (g, e)))
-        } else {
-            parse_entry(line).map(|e| (1, e))
-        };
+        let parsed = split_gen_line(line).and_then(|(g, rest)| parse_entry(rest).map(|e| (g, e)));
         match parsed {
             Some(tagged) => out.entries.push(tagged),
             None => out.skipped += 1,
@@ -691,7 +746,7 @@ fn parse_key(t: &mut Toks) -> Option<cache::Key> {
     let (layers, hidden, heads, ffn, vocab, seq) =
         (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
     let (gpus, gpus_per_node, gbs) = (t.usize()?, t.usize()?, t.usize()?);
-    let mut hw_bits = [0u64; 8];
+    let mut hw_bits = [0u64; 10];
     for b in &mut hw_bits {
         *b = t.bits()?;
     }
@@ -759,7 +814,7 @@ fn parse_stage_entry(line: &str) -> Option<(cache::StKey, LayerCosts)> {
     let mut t = Toks::new(line);
     let (layers, hidden, heads, ffn, vocab, seq) =
         (t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?, t.usize()?);
-    let mut hw_bits = [0u64; 8];
+    let mut hw_bits = [0u64; 10];
     for b in &mut hw_bits {
         *b = t.bits()?;
     }
@@ -903,7 +958,7 @@ mod tests {
             (2u32, (sample_key(512, &A100), Outcome::KernelUnavailable)),
         ];
         let text = render_evaluate(&entries, 2);
-        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(text.starts_with("plxcache v3 evaluate 2\n"));
         let back = parse_evaluate(&text);
         assert!(!back.damaged());
         assert_eq!(back.file_gen, 2);
@@ -923,20 +978,22 @@ mod tests {
     }
 
     #[test]
-    fn v1_files_warm_load_byte_compatibly() {
-        // A version-1 file (no generation prefixes) still loads every
-        // entry bit-exact, tagged generation 1, with no damage flagged.
+    fn pre_v3_files_are_cold_never_quarantined() {
+        // v1/v2 files predate the reliability hardware-bit tokens: their
+        // key lines would mis-parse under the v3 schema, so both headers
+        // are recognized and treated cold — nothing loads, nothing is
+        // flagged as damage (a quarantine would destroy a file a rollback
+        // plx could still use), and the next spill replaces them at
+        // generation 1.
         let key = sample_key(2048, &A100);
         let out = sample_outcome();
-        let text = format!("plxcache v1 evaluate\n{}\n", evaluate_line(&key, &out));
-        let back = parse_evaluate(&text);
-        assert!(!back.damaged());
-        assert_eq!(back.file_gen, 1);
-        assert_eq!(back.entries.len(), 1);
-        let (g, (k, o)) = &back.entries[0];
-        assert_eq!(*g, 1);
-        assert_eq!(k, &key);
-        assert_eq!(o, &out);
+        let line = evaluate_line(&key, &out);
+        for header in ["plxcache v1 evaluate", "plxcache v2 evaluate 5"] {
+            let back = parse_evaluate(&format!("{header}\n00000001 {line}\n"));
+            assert!(back.entries.is_empty(), "{header} must not load");
+            assert!(!back.damaged(), "{header} is cold, not damage");
+            assert_eq!(back.file_gen, 0);
+        }
     }
 
     #[test]
@@ -965,7 +1022,7 @@ mod tests {
             act_bytes_full: 6.4e8,
         };
         let text = render_stage(&[(3, (st_key.clone(), costs))], 3);
-        assert!(text.starts_with("plxcache v2 stage 3\n"));
+        assert!(text.starts_with("plxcache v3 stage 3\n"));
         let back = parse_stage(&text);
         assert!(!back.damaged());
         assert_eq!(back.entries.len(), 1);
@@ -1001,9 +1058,12 @@ mod tests {
     fn version_or_memo_mismatch_is_cold_not_damaged() {
         let good = render_evaluate(&[(1, (sample_key(2048, &A100), sample_outcome()))], 1);
         let entry = good.lines().nth(1).unwrap();
-        for alien in
-            ["plxcache v0 evaluate", "plxcache v3 evaluate 7", "plxcache v1 stage", "plxcache v2 stage 1"]
-        {
+        for alien in [
+            "plxcache v0 evaluate",
+            "plxcache v4 evaluate 7",
+            "plxcache v1 stage",
+            "plxcache v3 stage 1",
+        ] {
             let text = format!("{alien}\n{entry}\n");
             let back = parse_evaluate(&text);
             assert!(back.entries.is_empty(), "{alien} must be ignored");
@@ -1019,14 +1079,14 @@ mod tests {
         let back = parse_evaluate(&format!("not a cache file\n{entry}\n"));
         assert!(back.entries.is_empty());
         assert!(back.unrecognized && back.damaged());
-        // A v2 header whose generation does not parse is damage too.
-        let back = parse_evaluate(&format!("plxcache v2 evaluate nope\n{entry}\n"));
+        // A v3 header whose generation does not parse is damage too.
+        let back = parse_evaluate(&format!("plxcache v3 evaluate nope\n{entry}\n"));
         assert!(back.unrecognized && back.damaged());
         // Valid header, mixed lines: the intact line loads, the corrupt
         // ones are counted (bad tokens, trailing garbage, truncation,
         // and a missing/short generation prefix).
         let text = format!(
-            "plxcache v2 evaluate 1\nnot a line\n{entry}\n{entry} trailing-garbage\n{}\nzz {}\n",
+            "plxcache v3 evaluate 1\nnot a line\n{entry}\n{entry} trailing-garbage\n{}\nzz {}\n",
             &entry[..entry.len() / 2],
             &entry[9..],
         );
@@ -1072,7 +1132,7 @@ mod tests {
         let first = save_memo(&dir, "evaluate.plxcache", "evaluate", vec![a.clone()], None).unwrap();
         assert_eq!((first.written, first.evicted), (1, 0));
         let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
-        assert!(text.starts_with("plxcache v2 evaluate 1\n"));
+        assert!(text.starts_with("plxcache v3 evaluate 1\n"));
         assert!(text.contains(&format!("00000001 {a}")));
         // Second spill: the surviving entry keeps generation 1, the new
         // entry is stamped 2, and the file generation bumps to 2.
@@ -1081,18 +1141,18 @@ mod tests {
                 .unwrap();
         assert_eq!((second.written, second.evicted), (2, 0));
         let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
-        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(text.starts_with("plxcache v3 evaluate 2\n"));
         assert!(text.contains(&format!("00000001 {a}")));
         assert!(text.contains(&format!("00000002 {b}")));
-        // A v1 file counts as generation 1: its entries stay gen 1 and
-        // the next spill is generation 2.
+        // A pre-v3 file is cold: its generations are discarded and the
+        // next spill starts over at generation 1.
         std::fs::write(dir.join("evaluate.plxcache"), format!("plxcache v1 evaluate\n{a}\n"))
             .unwrap();
         save_memo(&dir, "evaluate.plxcache", "evaluate", vec![a.clone(), b.clone()], None).unwrap();
         let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
-        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(text.starts_with("plxcache v3 evaluate 1\n"));
         assert!(text.contains(&format!("00000001 {a}")));
-        assert!(text.contains(&format!("00000002 {b}")));
+        assert!(text.contains(&format!("00000001 {b}")));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1105,7 +1165,7 @@ mod tests {
         save_memo(&dir, "evaluate.plxcache", "evaluate", vec![old.clone()], None).unwrap();
         // Cap far below two entries but above one: the generation-1
         // entry must be the one evicted, regardless of sort order.
-        let header = "plxcache v2 evaluate 2\n".len();
+        let header = "plxcache v3 evaluate 2\n".len();
         let cap = header + 9 + new.len() + 1;
         let out = save_memo(
             &dir,
@@ -1117,13 +1177,31 @@ mod tests {
         .unwrap();
         assert_eq!((out.written, out.evicted), (1, 1));
         let text = std::fs::read_to_string(dir.join("evaluate.plxcache")).unwrap();
-        assert!(text.starts_with("plxcache v2 evaluate 2\n"));
+        assert!(text.starts_with("plxcache v3 evaluate 2\n"));
         assert!(!text.contains(&old), "the older generation must be evicted");
         assert!(text.contains(&format!("00000002 {new}")));
         // The survivor reloads bit-exact.
         let back = parse_evaluate(&text);
         assert!(!back.damaged());
         assert_eq!(back.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retry_budget_defaults_and_clean_saves_never_retry() {
+        // PLX_PERSIST_RETRIES is unset in the test environment: the
+        // budget is the documented default. (Armed-injection retry
+        // behavior lives in tests/serve_stress.rs, which owns its
+        // process environment.)
+        assert_eq!(persist_retries(), DEFAULT_RETRIES);
+        // An unarmed save succeeds first try and counts zero retries.
+        let dir = std::env::temp_dir().join(format!("plxcache-retry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = evaluate_line(&sample_key(2048, &A100), &sample_outcome());
+        let (d0, _, _) = cache::disk_stats();
+        save_memo(&dir, "evaluate.plxcache", "evaluate", vec![a], None).unwrap();
+        let (d1, _, _) = cache::disk_stats();
+        assert_eq!(d1.retries, d0.retries);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1176,7 +1254,7 @@ mod tests {
         let entry = evaluate_line(&sample_key(1777, &A100), &Outcome::KernelUnavailable);
         std::fs::write(
             dir.join("evaluate.plxcache"),
-            format!("plxcache v2 evaluate 1\n00000001 {entry}\ngarbage line\n"),
+            format!("plxcache v3 evaluate 1\n00000001 {entry}\ngarbage line\n"),
         )
         .unwrap();
         let (d0, _, _) = cache::disk_stats();

@@ -26,11 +26,18 @@
 //! tie-breaking, captured by [`Tie`]; pruning strictness follows from it
 //! (see the variant docs — pruning a tie is only sound when a tie could
 //! never win).
+//!
+//! The objective itself is an axis too ([`Rank`]): the paper's raw MFU,
+//! or the failure-aware **effective MFU** (MFU × expected goodput
+//! fraction, [`crate::sim::failure`]). Each rank pairs with its own
+//! admissible bound, so the same lossless branch-and-bound argument
+//! carries over — under `Rank::Mfu` the scan reduces exactly (same
+//! expressions, same bits) to the historical MFU scan.
 
 use std::cmp::Ordering;
 
 use crate::layout::{Job, LayoutSpace, ValidLayout};
-use crate::sim::{Hardware, Outcome};
+use crate::sim::{failure, Hardware, Outcome};
 use crate::sweep::presets::SweepPreset;
 
 /// Tie-breaking discipline of the argmax fold: which of two rows with
@@ -50,6 +57,50 @@ pub enum Tie {
     /// pathological NaN bound falls through to a full evaluation, and the
     /// fold's `total_cmp` ranks a NaN MFU exactly like the reference.)
     KeepLast,
+}
+
+/// The objective a query ranks layouts by.
+///
+/// `Mfu` is the paper's raw model-FLOPs utilization; `EffectiveMfu`
+/// discounts it by the expected goodput fraction under the hardware's
+/// failure model ([`crate::sim::failure::effective_mfu`]). Both use an
+/// admissible (bitwise ≥) upper bound for pruning, so either rank's scan
+/// is lossless against its materializing reference fold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rank {
+    /// Raw MFU — the historical objective; the default everywhere.
+    Mfu,
+    /// MFU × expected availability (Young–Daly checkpoint/restart waste).
+    EffectiveMfu,
+}
+
+impl Rank {
+    /// Parse a `--rank` CLI value.
+    pub fn parse(s: &str) -> Option<Rank> {
+        match s {
+            "mfu" => Some(Rank::Mfu),
+            "effective-mfu" => Some(Rank::EffectiveMfu),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling, for help text and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Rank::Mfu => "mfu",
+            Rank::EffectiveMfu => "effective-mfu",
+        }
+    }
+
+    /// The rank's score for an evaluated row: identity under `Mfu`
+    /// (bit-for-bit the evaluated MFU), the failure-discounted product
+    /// under `EffectiveMfu`.
+    pub fn score(&self, job: &Job, v: &ValidLayout, hw: &Hardware, mfu: f64) -> f64 {
+        match self {
+            Rank::Mfu => mfu,
+            Rank::EffectiveMfu => failure::effective_mfu(job, v, hw, mfu),
+        }
+    }
 }
 
 /// How a bound-driven query disposed of the predicate-matching layouts.
@@ -74,11 +125,14 @@ pub struct QueryStats {
 
 /// The argmax row: the winning layout with its evaluated numbers (bitwise
 /// the same `mfu`/`step_time_s` the materializing sweep row carries).
+/// `score` is the value the fold compared on — equal to `mfu` to the bit
+/// under [`Rank::Mfu`], the effective MFU under [`Rank::EffectiveMfu`].
 #[derive(Debug, Clone, Copy)]
 pub struct Best {
     pub v: ValidLayout,
     pub mfu: f64,
     pub step_time_s: f64,
+    pub score: f64,
 }
 
 /// Candidates per parallel evaluation window of the bound-pruned scan.
@@ -122,6 +176,53 @@ pub fn argmax_mfu_with_bound(
     jobs: usize,
     bound: fn(&Job, &ValidLayout, &Hardware) -> f64,
 ) -> (Option<Best>, QueryStats) {
+    // The identity score makes this an exact reduction of the historical
+    // MFU scan: `score == mfu` to the bit, so every comparison below is
+    // the same comparison on the same bits.
+    argmax_core(job, layouts, hw, pred, tie, jobs, bound, |_, _, _, mfu| mfu)
+}
+
+/// Best runnable layout under an arbitrary [`Rank`] — the same lossless
+/// windowed scan with the rank's (bound, score) pair plugged in.
+pub fn argmax_ranked(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hw: &Hardware,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+    rank: Rank,
+) -> (Option<Best>, QueryStats) {
+    match rank {
+        Rank::Mfu => argmax_mfu(job, layouts, hw, pred, tie, jobs),
+        Rank::EffectiveMfu => argmax_core(
+            job,
+            layouts,
+            hw,
+            pred,
+            tie,
+            jobs,
+            failure::effective_mfu_upper_bound,
+            |job, v, hw, mfu| failure::effective_mfu(job, v, hw, mfu),
+        ),
+    }
+}
+
+/// The shared windowed branch-and-bound fold, parameterized by the
+/// rank's admissible bound and its score for evaluated rows. All pruning
+/// and tie-breaking compares scores; the lossless-scan argument from the
+/// module docs holds verbatim as long as `bound(v) ≥ score(v)` bitwise
+/// for every layout the predicate admits.
+fn argmax_core(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hw: &Hardware,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+    bound: impl Fn(&Job, &ValidLayout, &Hardware) -> f64,
+    score: impl Fn(&Job, &ValidLayout, &Hardware, f64) -> f64,
+) -> (Option<Best>, QueryStats) {
     let mut best: Option<Best> = None;
     let mut stats = QueryStats::default();
     let mut window: Vec<ValidLayout> = Vec::with_capacity(PRUNE_WINDOW);
@@ -131,13 +232,14 @@ pub fn argmax_mfu_with_bound(
         // enumeration order so the reference tie-breaking is untouched.
         for row in crate::sweep::engine::evaluate_layouts(job, batch, hw, jobs) {
             if let Outcome::Ok { mfu, step_time_s, .. } = row.outcome {
+                let s = score(job, &row.v, hw, mfu);
                 let wins = match (&*best, tie) {
                     (None, _) => true,
-                    (Some(b), Tie::KeepFirst) => mfu > b.mfu,
-                    (Some(b), Tie::KeepLast) => mfu.total_cmp(&b.mfu) != Ordering::Less,
+                    (Some(b), Tie::KeepFirst) => s > b.score,
+                    (Some(b), Tie::KeepLast) => s.total_cmp(&b.score) != Ordering::Less,
                 };
                 if wins {
-                    *best = Some(Best { v: row.v, mfu, step_time_s });
+                    *best = Some(Best { v: row.v, mfu, step_time_s, score: s });
                 }
             }
         }
@@ -167,8 +269,8 @@ pub fn argmax_mfu_with_bound(
             // comparison and falls through to a full evaluation — pruning
             // is only ever taken on a provable dominance.
             let dominated = match tie {
-                Tie::KeepFirst => ub <= b.mfu,
-                Tie::KeepLast => ub < b.mfu,
+                Tie::KeepFirst => ub <= b.score,
+                Tie::KeepLast => ub < b.score,
             };
             if dominated {
                 stats.bound_pruned += 1;
@@ -194,6 +296,18 @@ pub fn compare_best(
     hws: &[(String, Hardware)],
     jobs: usize,
 ) -> Vec<(String, Option<Best>)> {
+    compare_best_ranked(preset, hws, jobs, Rank::Mfu)
+}
+
+/// [`compare_best`] under an explicit [`Rank`] — `plx compare --rank
+/// effective-mfu` picks each hardware's winner by failure-discounted
+/// MFU instead of raw MFU.
+pub fn compare_best_ranked(
+    preset: &SweepPreset,
+    hws: &[(String, Hardware)],
+    jobs: usize,
+    rank: Rank,
+) -> Vec<(String, Option<Best>)> {
     let job = preset.job();
     hws.iter()
         .map(|(name, hw)| {
@@ -207,7 +321,7 @@ pub fn compare_best(
                 &preset.sps,
                 &preset.scheds,
             );
-            let (best, _) = argmax_mfu(&job, space, hw, |_| true, Tie::KeepLast, jobs);
+            let (best, _) = argmax_ranked(&job, space, hw, |_| true, Tie::KeepLast, jobs, rank);
             (name.clone(), best)
         })
         .collect()
@@ -428,5 +542,73 @@ mod tests {
             crate::sweep::report::render_compare_best(p.name, &p.job(), &pruned),
             crate::sweep::report::render_compare(&full),
         );
+    }
+
+    #[test]
+    fn ranked_mfu_is_the_identity_reduction() {
+        // Rank::Mfu must be the *same scan*, not merely an equivalent one:
+        // identical winner, identical numbers, identical prune counters,
+        // and `score` carrying the MFU bits.
+        for preset in main_presets().into_iter().take(2) {
+            let job = preset.job();
+            let (plain, sp) = argmax_mfu(&job, space_of(&preset), &A100, |_| true, Tie::KeepLast, 0);
+            let (ranked, sr) =
+                argmax_ranked(&job, space_of(&preset), &A100, |_| true, Tie::KeepLast, 0, Rank::Mfu);
+            let (p, r) = (plain.unwrap(), ranked.unwrap());
+            assert_eq!(p.v.layout, r.v.layout, "{}", preset.name);
+            assert_eq!(p.mfu.to_bits(), r.mfu.to_bits(), "{}", preset.name);
+            assert_eq!(r.mfu.to_bits(), r.score.to_bits(), "{}: score != mfu", preset.name);
+            assert_eq!(sp.evaluated, sr.evaluated, "{}: {sp:?} vs {sr:?}", preset.name);
+            assert_eq!(sp.bound_pruned, sr.bound_pruned, "{}", preset.name);
+        }
+    }
+
+    #[test]
+    fn ranked_effective_mfu_matches_materializing_reference() {
+        // The effective-MFU scan against its own materializing reference:
+        // fold every evaluated row's `failure::effective_mfu` score with
+        // the KeepLast rule and compare layout + score bits. Both
+        // hardwares, so the MTBF/storage presets are exercised.
+        for preset in main_presets().into_iter().take(2) {
+            let job = preset.job();
+            for (hw_name, hw) in [("a100", A100), ("h100", H100)] {
+                let (best, stats) = argmax_ranked(
+                    &job,
+                    space_of(&preset),
+                    &hw,
+                    |_| true,
+                    Tie::KeepLast,
+                    0,
+                    Rank::EffectiveMfu,
+                );
+                let rows = run_jobs(&preset, &hw, 1);
+                let mut want: Option<(&Row, f64)> = None;
+                for row in &rows.rows {
+                    if let Some(mfu) = row.outcome.mfu() {
+                        let s = failure::effective_mfu(&job, &row.v, &hw, mfu);
+                        if want
+                            .map(|(_, ws)| s.total_cmp(&ws) != Ordering::Less)
+                            .unwrap_or(true)
+                        {
+                            want = Some((row, s));
+                        }
+                    }
+                }
+                let (wrow, wscore) = want.unwrap();
+                let b = best.unwrap();
+                let ctx = format!("{}@{hw_name}", preset.name);
+                assert_eq!(b.v.layout, wrow.v.layout, "{ctx}");
+                assert_eq!(b.score.to_bits(), wscore.to_bits(), "{ctx}: score bits");
+                assert_eq!(
+                    b.mfu.to_bits(),
+                    wrow.outcome.mfu().unwrap().to_bits(),
+                    "{ctx}: mfu bits"
+                );
+                assert!(
+                    stats.evaluated < stats.total,
+                    "{ctx}: effective bound never fired ({stats:?})"
+                );
+            }
+        }
     }
 }

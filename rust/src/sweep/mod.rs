@@ -16,6 +16,8 @@ pub mod presets;
 pub mod report;
 pub mod table2;
 
-pub use argmax::{argmax_mfu, compare_best, Best, QueryStats, Tie};
+pub use argmax::{
+    argmax_mfu, argmax_ranked, compare_best, compare_best_ranked, Best, QueryStats, Rank, Tie,
+};
 pub use engine::{evaluate_layouts, evaluate_space, run, run_compare, run_jobs, Row, SweepResult};
 pub use presets::{by_name, for_table, main_presets, seqpar_presets, SweepPreset};

@@ -1,8 +1,8 @@
 //! Paper-style table rendering for sweep results.
 
-use crate::sim::Outcome;
-use crate::sweep::argmax::Best;
-use crate::sweep::engine::SweepResult;
+use crate::sim::{failure, Hardware, Outcome};
+use crate::sweep::argmax::{Best, Rank};
+use crate::sweep::engine::{Row, SweepResult};
 use crate::util::table;
 
 /// Render an appendix-style table (Tables 4–8 / 10–14 format):
@@ -61,6 +61,98 @@ pub fn render_top(result: &SweepResult, with_sp_column: bool, top: Option<usize>
         .collect();
     let mut out = format!(
         "# {} — {} on {} GPUs, GBS {} (reproduces {})\n",
+        result.preset_name,
+        result.job.arch.name,
+        result.job.cluster.gpus,
+        result.job.gbs,
+        result.preset_name,
+    );
+    out.push_str(&table::render(&headers, &rows));
+    out.push_str(&format!(
+        "\n{} runnable, {} OOM, {} kernel-unavailable of {} configs\n",
+        result.count_ok(),
+        result.count_oom(),
+        result.rows.len() - result.count_ok() - result.count_oom(),
+        result.rows.len()
+    ));
+    out
+}
+
+/// [`render_top`] under an explicit [`Rank`]. `Rank::Mfu` is the plain
+/// renderer, byte-for-byte — callers on the default rank cannot perturb
+/// the golden tables. `Rank::EffectiveMfu` needs the hardware model (the
+/// MTBF/storage parameters live there): runnable rows re-sort by
+/// effective MFU descending and an `Eff. MFU` column appears after
+/// `MFU`, so the table's order matches what `--rank effective-mfu`
+/// argmax queries would pick.
+pub fn render_top_ranked(
+    result: &SweepResult,
+    with_sp_column: bool,
+    top: Option<usize>,
+    hw: &Hardware,
+    rank: Rank,
+) -> String {
+    if rank == Rank::Mfu {
+        return render_top(result, with_sp_column, top);
+    }
+    let with_sched_column =
+        result.rows.iter().any(|r| r.layout().sched != crate::layout::Schedule::OneF1B);
+    let mut headers = vec!["Step Time", "MFU", "Eff. MFU", "Activation", "Kernel", "MB", "TP", "PP"];
+    if with_sp_column {
+        headers.push("Seq Parallel");
+    }
+    if with_sched_column {
+        headers.push("Schedule");
+    }
+    // The same total, stable order discipline as `SweepResult::sorted`,
+    // keyed on the effective score instead of the raw MFU.
+    let mut keyed: Vec<(u8, f64, &Row)> = result
+        .rows
+        .iter()
+        .map(|r| match r.outcome {
+            Outcome::Ok { mfu, .. } => {
+                (0u8, -failure::effective_mfu(&result.job, &r.v, hw, mfu), r)
+            }
+            Outcome::Oom { .. } => (1, 0.0, r),
+            Outcome::KernelUnavailable => (2, 0.0, r),
+        })
+        .collect();
+    keyed.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let shown = top.unwrap_or(keyed.len()).min(keyed.len());
+    let rows: Vec<Vec<String>> = keyed[..shown]
+        .iter()
+        .map(|(_, neg_score, r)| {
+            let l = r.layout();
+            let (st, mfu, eff) = match r.outcome {
+                Outcome::Ok { step_time_s, mfu, .. } => {
+                    (table::secs(step_time_s), table::pct(mfu), table::pct(-neg_score))
+                }
+                Outcome::Oom { .. } => ("OOM Error".into(), String::new(), String::new()),
+                Outcome::KernelUnavailable => {
+                    ("Kernel unavail.".into(), String::new(), String::new())
+                }
+            };
+            let mut row = vec![
+                st,
+                mfu,
+                eff,
+                if l.ckpt { "every_layer" } else { "disabled" }.to_string(),
+                l.kernel.label().to_string(),
+                l.mb.to_string(),
+                l.tp.to_string(),
+                l.pp.to_string(),
+            ];
+            if with_sp_column {
+                row.push(if l.sp { "True" } else { "False" }.to_string());
+            }
+            if with_sched_column {
+                row.push(l.sched.label());
+            }
+            row
+        })
+        .collect();
+    let mut out = format!(
+        "# {} — {} on {} GPUs, GBS {} (reproduces {}, ranked by effective MFU)\n",
         result.preset_name,
         result.job.arch.name,
         result.job.cluster.gpus,
@@ -147,10 +239,11 @@ pub fn render_compare(results: &[(String, SweepResult)]) -> String {
     let winners: Vec<(String, Option<Best>)> = results
         .iter()
         .map(|(name, r)| {
-            let w = r.best().map(|row| Best {
-                v: row.v,
-                mfu: row.outcome.mfu().unwrap(),
-                step_time_s: row.outcome.step_time().unwrap(),
+            let w = r.best().map(|row| {
+                let mfu = row.outcome.mfu().unwrap();
+                // Materialized winners are always MFU-ranked, so the
+                // score is the MFU itself (same bits as the pruned path).
+                Best { v: row.v, mfu, step_time_s: row.outcome.step_time().unwrap(), score: mfu }
             });
             (name.clone(), w)
         })
@@ -250,6 +343,41 @@ mod tests {
         // The baseline row's delta is identically +0.00.
         let base_row = serial.lines().find(|l| l.starts_with("a100")).unwrap();
         assert!(base_row.trim_end().ends_with("+0.00"), "{base_row}");
+    }
+
+    #[test]
+    fn ranked_render_default_is_identity_and_effective_adds_column() {
+        let r = run(&main_presets()[0], &A100);
+        // Default rank: byte-identical to the plain renderer (goldens).
+        assert_eq!(
+            render_top_ranked(&r, false, None, &A100, Rank::Mfu),
+            render_top(&r, false, None)
+        );
+        assert_eq!(
+            render_top_ranked(&r, false, Some(5), &A100, Rank::Mfu),
+            render_top(&r, false, Some(5))
+        );
+        // Effective rank: extra column, effective values monotone down
+        // the runnable prefix, and availability-discounted (≤ raw MFU).
+        let t = render_top_ranked(&r, false, None, &A100, Rank::EffectiveMfu);
+        assert!(t.contains("Eff. MFU"), "{t}");
+        assert!(t.contains("ranked by effective MFU"));
+        let effs: Vec<f64> = r
+            .rows
+            .iter()
+            .filter_map(|row| {
+                row.outcome
+                    .mfu()
+                    .map(|m| crate::sim::failure::effective_mfu(&r.job, &row.v, &A100, m))
+            })
+            .collect();
+        assert!(!effs.is_empty());
+        let raw_best = r.best().unwrap().outcome.mfu().unwrap();
+        let eff_max = effs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!(eff_max < raw_best, "effective must discount: {eff_max} vs {raw_best}");
+        // Same footer either way: the rank re-sorts, it never drops rows.
+        let footer = format!("of {} configs", r.rows.len());
+        assert!(t.contains(&footer));
     }
 
     #[test]

@@ -52,10 +52,19 @@ struct Config {
 static FAULTS: Mutex<Option<Config>> = Mutex::new(None);
 
 fn env_prob(name: &str) -> f64 {
-    let p = match std::env::var(name) {
-        Ok(v) if !v.is_empty() => v.parse().unwrap_or(0.0),
-        _ => 0.0,
+    let raw = match std::env::var(name) {
+        Ok(v) if !v.is_empty() => v,
+        _ => return 0.0,
     };
+    let p: f64 = raw.parse().unwrap_or(f64::NAN);
+    if !(0.0..=1.0).contains(&p) {
+        // Warned once per config load (the parsed config is cached until
+        // `reset`): garbage must not silently become a probability.
+        eprintln!("plx: warning: {name}='{raw}' is not a probability in [0,1]; clamping");
+        if p.is_nan() {
+            return 0.0;
+        }
+    }
     p.clamp(0.0, 1.0)
 }
 
@@ -72,8 +81,9 @@ fn with_config<T>(f: impl FnOnce(&mut Config) -> T) -> T {
 
 /// FNV-1a over the site label: a stable, dependency-free way to derive
 /// per-site stream seeds (any collision would merely share a stream,
-/// never break determinism).
-fn fnv1a64(s: &str) -> u64 {
+/// never break determinism). Public because `sim::failure` derives its
+/// trace-replay stream the same way (`seed ^ fnv1a64("sim.failure")`).
+pub fn fnv1a64(s: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in s.bytes() {
         h ^= b as u64;
@@ -96,6 +106,12 @@ pub fn reset() {
 /// Whether injection is armed (`PLX_FAULT_SEED` parsed to a u64).
 pub fn enabled() -> bool {
     with_config(|c| c.seed.is_some())
+}
+
+/// The armed `PLX_FAULT_SEED`, if any — `plx simulate-run` defaults its
+/// trace seed to this (same env discipline as the injection gates).
+pub fn env_seed() -> Option<u64> {
+    with_config(|c| c.seed)
 }
 
 /// Gate for a hard IO error at `site`. Consumes exactly one draw from

@@ -4,7 +4,7 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Eight suites, reported separately:
+Nine suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
@@ -38,7 +38,14 @@ Eight suites, reported separately:
     recovery, v2 cache generations preserved across spills,
     PLX_CACHE_MAX_BYTES oldest-first eviction, and the serve
     socket-layer limits (too_large/timeout/overloaded envelope bytes,
-    counters, env fallbacks) — all byte-matched to the Rust daemon.
+    counters, env fallbacks) — all byte-matched to the Rust daemon;
+  * the FAILURE suite — the failure-aware planning layer: the
+    MTBF/checkpoint cost model and Young–Daly availability, the
+    effective-MFU rank (admissible bound, ranked argmax/planner/report
+    identities), degraded-cluster replanning, the deterministic
+    failure-trace replay (same PLX_FAULT_SEED => bit-identical trace),
+    bounded persist write retries, clamped fault probabilities, and the
+    serve replan/simulate-run byte contracts.
 
 Run: python3 tools/check_seed_tests.py
 """
@@ -51,6 +58,7 @@ sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from pysim import *  # noqa: F401,F403
 from pysim import _DISK_STATS, _EVAL_CACHE  # serve suite pokes the live memos
 from pysim import _STAGE_CACHE, _fnv1a64  # stress suite: hermetic caches, fnv pins
+from pysim import _fault_config, _persist_write_atomic  # failure suite
 
 PASS = []
 FAIL = []
@@ -1175,13 +1183,19 @@ def _clear_hw_env():
 def t_hw_h100_constants_bit_exact():
     # rust: cluster::h100_constants_bit_exact — the preset is a public
     # contract (the table2_h100 golden depends on these exact bits).
-    expect = (989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9)
+    expect = (989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6,
+              5.0 * 1e9, 30000.0, 2.0e9)
     got = hw_bits(H100)
+    assert len(got) == len(HW_FIELDS) == len(expect)
     for field, want, g in zip(HW_FIELDS, expect, got):
         assert g == _bits(want), f"{field}: {g} != bits({want})"
-    # Host-side constants carry over from A100; accelerator fields scale up.
+    # Host-side constants carry over from A100; accelerator fields scale
+    # up; reliability + storage constants are testbed-side too.
     a = hw_bits(A100)
-    assert got[5:] == a[5:], "latency/launch/workspace must match A100"
+    assert got[5:] == a[5:], \
+        "latency/launch/workspace/mtbf/storage must match A100"
+    assert _bits(A100.mtbf_h) == _bits(30000.0)
+    assert _bits(A100.storage_bw) == _bits(2.0e9)
     assert H100.peak_matmul_flops > A100.peak_matmul_flops
     assert H100.hbm_bw > A100.hbm_bw and H100.nvlink_bw > A100.nvlink_bw
     assert H100.ib_bw > A100.ib_bw
@@ -1495,7 +1509,7 @@ def t_serve_persist_evaluate_roundtrip():
                     Outcome("oom", required=99e9, budget=80e9))),
                (2, (_serve_sample_eval_key(512, A100), Outcome("unavail")))]
     text = persist_render_evaluate(entries, 2)
-    assert text.startswith("plxcache v2 evaluate 2\n")
+    assert text.startswith("plxcache v3 evaluate 2\n")
     back = persist_parse_evaluate(text)
     assert back["file_gen"] == 2 and not back["unrecognized"]
     assert back["skipped"] == 0
@@ -1515,16 +1529,18 @@ def t_serve_persist_stage_and_makespan_roundtrip():
                              (2, 1, True, FLASH2, False))
     costs = LayerCosts(0.001, 0.002, 0.0005, 0.001, 1e-4, 0.95, 1e-5, 1e-4,
                        3.2e8, 6.4e8)
-    text = persist_render_stage([(1, (st_key, costs))], 1)
+    text = persist_render_stage([(3, (st_key, costs))], 3)
+    assert text.startswith("plxcache v3 stage 3\n")
     back = persist_parse_stage(text)
     assert len(back["entries"]) == 1 and back["entries"][0][1][0] == st_key
+    assert back["entries"][0][0] == 3
     got_costs = back["entries"][0][1][1]
     assert _bits(got_costs.layer_fwd) == _bits(costs.layer_fwd)
     assert _bits(got_costs.act_bytes_full) == _bits(costs.act_bytes_full)
     ms_key = PersistMsKey(SCHED_1F1B, 3, 16, (1, 2, 3, 4, 5))
     dead_key = PersistMsKey(SCHED_1F1B, 2, 16, (1, 2, 3, 4, 5))
     text = persist_render_makespan([(1, (ms_key, (12.5, [1.0, 2.0, 3.0]))),
-                                    (1, (dead_key, None))], 1)
+                                    (2, (dead_key, None))], 2)
     back = persist_parse_makespan(text)
     assert len(back["entries"]) == 2
     got = next(ms for _g, (k, ms) in back["entries"] if k == ms_key)
@@ -1542,42 +1558,45 @@ def t_serve_persist_version_gate_and_corrupt_lines():
     tagged = good.splitlines()[1]
     entry = tagged.split(" ", 1)[1]
     # Alien headers (unknown version, wrong memo) are cold, not damage.
-    for bad in ["plxcache v0 evaluate", "plxcache v3 evaluate 1",
-                "plxcache v1 stage", "plxcache v2 stage 1"]:
+    for bad in ["plxcache v0 evaluate", "plxcache v4 evaluate 7",
+                "plxcache v1 stage", "plxcache v3 stage 1"]:
         back = persist_parse_evaluate(f"{bad}\n{tagged}\n")
         assert back["entries"] == [] and not back["unrecognized"], bad
         assert back["skipped"] == 0, bad
     # Not a plxcache header at all: unrecognized (quarantine-worthy).
     back = persist_parse_evaluate(f"garbage\n{tagged}\n")
     assert back["entries"] == [] and back["unrecognized"]
-    # A v2 header with a malformed generation is corrupt too.
-    assert persist_parse_evaluate(f"plxcache v2 evaluate x\n{tagged}\n")[
+    # A v3 header with a malformed generation is corrupt too.
+    assert persist_parse_evaluate(f"plxcache v3 evaluate nope\n{tagged}\n")[
         "unrecognized"]
-    # Corrupt entry lines are skipped (and counted), not fatal.
-    text = ("plxcache v1 evaluate\nnot a line\n"
-            f"{entry}\n{entry} trailing-garbage\n{entry[:len(entry) // 2]}\n")
+    # Corrupt entry lines are skipped (and counted), not fatal: bad
+    # tokens, trailing garbage, truncation, and a short gen prefix.
+    text = ("plxcache v3 evaluate 1\nnot a line\n"
+            f"{tagged}\n{tagged} trailing-garbage\n"
+            f"{tagged[:len(tagged) // 2]}\nzz {entry}\n")
     back = persist_parse_evaluate(text)
-    assert len(back["entries"]) == 1 and back["skipped"] == 3
-    # Same through a v2 file: a bad generation prefix skips the line.
-    text = (f"plxcache v2 evaluate 5\n{tagged}\nzz000001 {entry}\n")
+    assert len(back["entries"]) == 1 and back["skipped"] == 4
+    # Same through another gen: a bad generation prefix skips the line.
+    text = (f"plxcache v3 evaluate 5\n{tagged}\nzz000001 {entry}\n")
     back = persist_parse_evaluate(text)
     assert back["file_gen"] == 5
     assert len(back["entries"]) == 1 and back["skipped"] == 1
 
 
-def t_serve_persist_v1_files_warm_load():
-    # rust: persist::v1_files_warm_load_byte_compatibly — a v1 file
-    # parses with every entry at generation 1, and re-renders to the
-    # canonical v2 bytes.
+def t_serve_persist_pre_v3_files_cold():
+    # rust: persist::pre_v3_files_are_cold_never_quarantined — v1/v2
+    # files predate the reliability hardware-bit tokens; both headers
+    # are recognized and treated cold: nothing loads, nothing is
+    # flagged as damage, and the next spill replaces them at gen 1.
     key, oc = _serve_sample_eval_key(2048, A100), _serve_sample_outcome()
-    v2 = persist_render_evaluate([(1, (key, oc))], 1)
-    entry = v2.splitlines()[1].split(" ", 1)[1]
-    v1 = f"plxcache v1 evaluate\n{entry}\n"
-    back = persist_parse_evaluate(v1)
-    assert back["file_gen"] == 1 and not back["unrecognized"]
-    assert back["skipped"] == 0
-    assert [(g, k) for g, (k, _o) in back["entries"]] == [(1, key)]
-    assert persist_render_evaluate(back["entries"], back["file_gen"]) == v2
+    v3 = persist_render_evaluate([(1, (key, oc))], 1)
+    entry = v3.splitlines()[1].split(" ", 1)[1]
+    for header in ["plxcache v1 evaluate", "plxcache v2 evaluate 5"]:
+        back = persist_parse_evaluate(f"{header}\n00000001 {entry}\n")
+        assert back["entries"] == [], f"{header} must not load"
+        assert not back["unrecognized"] and back["skipped"] == 0, \
+            f"{header} is cold, not damage"
+        assert back["file_gen"] == 0
 
 
 def t_serve_persist_non_aliasing():
@@ -1613,7 +1632,7 @@ def t_serve_persist_save_and_load_live_caches():
         assert saved["evaluate"] >= 1
         with open(os.path.join(d, "evaluate.plxcache")) as f:
             text = f.read()
-        assert text.startswith("plxcache v2 evaluate 1\n")
+        assert text.startswith("plxcache v3 evaluate 1\n")
         back = persist_parse_evaluate(text)
         assert any(bk.gbs == 1984 and o == oc
                    for _g, (bk, o) in back["entries"])
@@ -1705,6 +1724,7 @@ def t_serve_stats_counters_move():
     assert "loaded" in s["disk"]["evaluate"] and "hits" in s["disk"]["evaluate"]
     assert "skipped" in s["disk"]["evaluate"], "damage counters in stats"
     assert "quarantined" in s["disk"]["evaluate"]
+    assert "retries" in s["disk"]["evaluate"], "retry counter in stats"
     assert s["latency_us"]["count"] == 2
     # Hardening counters and the resolved limits are part of the shape.
     assert s["too_large"] == 0 and s["timeouts"] == 0
@@ -1731,7 +1751,7 @@ def t_serve_warm_spill_writes_versioned_files():
                            ("makespan.plxcache", "makespan")]:
             with open(os.path.join(d, name)) as f:
                 text = f.read()
-            assert text.startswith(f"plxcache v2 {memo} "), name
+            assert text.startswith(f"plxcache v3 {memo} "), name
         with open(os.path.join(d, "evaluate.plxcache")) as f:
             text = f.read()
         back = persist_parse_evaluate(text)
@@ -1863,7 +1883,7 @@ SERVE_CHECKS = [
     ("persist::evaluate_roundtrip_is_bit_exact", t_serve_persist_evaluate_roundtrip),
     ("persist::stage_and_makespan_roundtrip", t_serve_persist_stage_and_makespan_roundtrip),
     ("persist::version_gate_and_corrupt_lines", t_serve_persist_version_gate_and_corrupt_lines),
-    ("persist::v1_files_warm_load_byte_compatibly", t_serve_persist_v1_files_warm_load),
+    ("persist::pre_v3_files_are_cold_never_quarantined", t_serve_persist_pre_v3_files_cold),
     ("persist::distinct_cal_and_hw_bits_never_alias", t_serve_persist_non_aliasing),
     ("persist::save_and_load_through_live_caches", t_serve_persist_save_and_load_live_caches),
     ("serve::plan_response_equals_cli_renderer_bytes", t_serve_plan_response_equals_renderer),
@@ -2075,7 +2095,7 @@ ARGMAX_CHECKS = [
 
 # ------------------------------------------------------------------ STRESS
 # The hardening layer (PR 8): deterministic fault injection
-# (rust/src/util/fault.rs), the v2 cache format with generations,
+# (rust/src/util/fault.rs), the generation-tagged cache format,
 # PLX_CACHE_MAX_BYTES eviction and quarantine (rust/src/sim/persist.rs),
 # and the serve socket-layer limits (rust/src/serve/mod.rs). The fault
 # PRNG streams are pinned cross-language: same seed, same site, same
@@ -2111,7 +2131,7 @@ class _stress_env:
 
 def _stress_reset_disk_stats():
     for k in _DISK_STATS:
-        _DISK_STATS[k][:] = [0, 0, 0, 0]
+        _DISK_STATS[k][:] = [0, 0, 0, 0, 0]
 
 
 class _stress_caches:
@@ -2273,14 +2293,14 @@ def t_stress_generations_preserved_across_saves():
             persist_save_all(d)
             with open(os.path.join(d, "evaluate.plxcache")) as f:
                 t1 = f.read()
-            assert t1.startswith("plxcache v2 evaluate 1\n")
+            assert t1.startswith("plxcache v3 evaluate 1\n")
             assert all(l.startswith("00000001 ")
                        for l in t1.splitlines()[1:])
             _EVAL_CACHE[k2] = Outcome("oom", required=2.0, budget=1.0)
             persist_save_all(d)
             with open(os.path.join(d, "evaluate.plxcache")) as f:
                 t2 = f.read()
-            assert t2.startswith("plxcache v2 evaluate 2\n")
+            assert t2.startswith("plxcache v3 evaluate 2\n")
             gens = sorted(l.split(" ", 1)[0] for l in t2.splitlines()[1:])
             assert gens == ["00000001", "00000002"], gens
             # The surviving line's tokens are unchanged from spill one.
@@ -2311,7 +2331,7 @@ def t_stress_cap_evicts_oldest_generation_first():
             _EVAL_CACHE[k2] = Outcome("unavail")
             with open(os.path.join(d, "evaluate.plxcache")) as f:
                 line_len = len(f.read().splitlines()[1]) + 1
-            header_len = len("plxcache v2 evaluate 2\n")
+            header_len = len("plxcache v3 evaluate 2\n")
             # Both entries render to equal-length lines (same model,
             # same digit widths), so this cap fits exactly one.
             cap = header_len + line_len
@@ -2330,7 +2350,7 @@ def t_stress_cap_evicts_oldest_generation_first():
                 persist_save_all(d)
             with open(os.path.join(d, "evaluate.plxcache")) as f:
                 t = f.read()
-            assert t == "plxcache v2 evaluate 3\n", repr(t)
+            assert t == "plxcache v3 evaluate 3\n", repr(t)
     finally:
         shutil.rmtree(d, ignore_errors=True)
 
@@ -2457,6 +2477,510 @@ STRESS_CHECKS = [
 ]
 
 
+# ----------------------------------------------------------------- FAILURE
+# The failure-aware planning layer (rust/src/sim/failure.rs, the ranked
+# argmax/planner/report surfaces, replan, the deterministic trace replay,
+# persist write retries, and the serve replan/simulate-run contracts).
+# The trace PRNG derives from the same xoshiro256**/FNV-1a machinery the
+# stress suite pins cross-language, so same-seed replays are bit-portable
+# between the Rust daemon and this mirror by construction.
+
+
+def _failure_job(name, nodes):
+    arch = preset(name)
+    return Job(arch, Cluster.dgx_a100(nodes), Job.paper_gbs(arch))
+
+
+def _failure_layout13(job):
+    return validate(job, Layout(1, 1, 1, False, FLASH2RMS, False))
+
+
+def t_failure_young_daly_closed_form():
+    # rust: failure::young_daly_is_the_closed_form
+    c, m = 30.0, 50_000.0
+    tau = young_daly_interval_s(c, m)
+    assert _bits(tau) == _bits(math.sqrt(2.0 * c * m))
+    # Second-order sanity: the optimum beats its neighbors on the exact
+    # waste function C/tau + (tau/2 + R)/M.
+    waste = lambda t: c / t + (t / 2.0 + c + RESTART_OVERHEAD_S) / m
+    assert waste(tau) <= waste(tau * 0.7)
+    assert waste(tau) <= waste(tau * 1.4)
+
+
+def t_failure_availability_fraction_shrinks_with_scale():
+    # rust: failure::availability_is_a_fraction_and_shrinks_with_scale
+    j8 = _failure_job("llama13b", 8)
+    v8 = _failure_layout13(j8)
+    a8 = availability_of(j8, v8, A100)
+    assert 0.0 < a8 < 1.0, a8
+    # 4x the cluster fails 4x as often: availability must drop.
+    j32 = _failure_job("llama13b", 32)
+    a32 = availability_of(j32, _failure_layout13(j32), A100)
+    assert a32 < a8, (a32, a8)
+    # Degenerate MTBF disables the model exactly.
+    dead = replace(A100, mtbf_h=0.0)
+    assert _bits(availability_of(j8, v8, dead)) == _bits(1.0)
+    assert _bits(effective_mfu(j8, v8, dead, 0.7)) == _bits(0.7), \
+        "disabled model must be the exact identity"
+
+
+def t_failure_effective_bound_admissible_bitwise():
+    # rust: failure::effective_mfu_bound_is_admissible_bitwise — for
+    # every runnable enumerable layout on both registry entries the
+    # bound must dominate the exact effective MFU with zero tolerance.
+    for name, nodes in [("llama13b", 8), ("llama65b", 16)]:
+        j = _failure_job(name, nodes)
+        layouts = enumerate_layouts(j, [1, 2, 4], [1, 2, 4, 8], [1, 2, 4],
+                                    [False, True], ALL_KERNELS,
+                                    [False, True],
+                                    (SCHED_1F1B, sched_interleaved(2)))
+        for hw in [A100, H100]:
+            runnable = 0
+            for v in layouts:
+                o = evaluate(j, v, hw)
+                if o.kind != "ok":
+                    continue
+                eff = effective_mfu(j, v, hw, o.mfu)
+                ub = effective_mfu_upper_bound(j, v, hw)
+                assert ub >= eff, f"{v.layout}: bound {ub} < effective {eff}"
+                assert eff <= o.mfu, \
+                    f"{v.layout}: availability must not exceed 1"
+                runnable += 1
+            assert runnable > 20, f"{name}: only {runnable} runnable"
+
+
+def t_failure_effective_bound_admissible_under_overrides():
+    # The satellite property: admissibility must survive PLX_CAL_* and
+    # PLX_HW_* overrides (including the new reliability fields), since
+    # the ranked argmax prunes against whatever hardware it is handed.
+    j = _failure_job("llama13b", 8)
+    layouts = enumerate_layouts(j, [1, 2], [1, 2], [1, 2], [False, True],
+                                [FLASH2, FLASH2RMS], [False, True])
+    with _stress_env(plx_cal_bwd_factor="2.5", plx_cal_dp_exposed="0.5",
+                     plx_hw_mtbf_h="12000", plx_hw_storage_bw="1.2e9"):
+        hw = hardware_from_overrides(A100)
+        assert _bits(hw.mtbf_h) == _bits(12000.0)
+        assert _bits(hw.storage_bw) == _bits(1.2e9)
+        runnable = 0
+        for v in layouts:
+            o = evaluate(j, v, hw)
+            if o.kind != "ok":
+                continue
+            eff = effective_mfu(j, v, hw, o.mfu)
+            ub = effective_mfu_upper_bound(j, v, hw)
+            assert ub >= eff, f"{v.layout}: bound {ub} < effective {eff}"
+            runnable += 1
+        assert runnable > 0, "no runnable layouts under overrides"
+
+
+def t_failure_checkpoint_cost_shrinks_with_mp():
+    # rust: failure::checkpoint_cost_shrinks_with_model_parallelism
+    j = _failure_job("llama65b", 8)
+    v1 = validate(j, Layout(8, 1, 1, False, FLASH2RMS, True))
+    v2 = validate(j, Layout(1, 1, 1, False, FLASH2RMS, False))
+    assert checkpoint_cost_s(j, v1, A100) < checkpoint_cost_s(j, v2, A100)
+    # The bound's C_min is what tp*pp = world, dp = 1 achieves: at that
+    # corner the availability bound is exact to the bit.
+    v_corner = validate(j, Layout(8, 8, 1, False, FLASH2RMS, True))
+    assert v_corner.topo.dp == 1
+    assert _bits(availability_of(j, v_corner, A100)) == \
+        _bits(availability_upper_bound(j, v_corner.topo.world(), A100))
+
+
+def t_failure_trace_replay_deterministic():
+    # rust: failure::trace_replay_is_deterministic_and_accounts_time
+    j = _failure_job("llama13b", 8)
+    v = _failure_layout13(j)
+    a = simulate_run(j, v, A100, 30, 0xC0FFEE)
+    b = simulate_run(j, v, A100, 30, 0xC0FFEE)
+    assert a == b, "same seed must replay the same trace"
+    other = simulate_run(j, v, A100, 30, 0xC0FFEF)
+    assert a != other, "different seeds must diverge"
+    slack = a.horizon_s * 1e-9
+    assert (a.good_s + a.lost_s + a.downtime_s
+            + a.checkpoints * a.ckpt_s) <= a.horizon_s + slack, a
+    assert 0.0 < a.good_s <= a.horizon_s
+    assert a.interval_s > 0.0 and a.ckpt_s > 0.0
+    # Failure-free hardware replays the whole horizon as good work.
+    dead = replace(A100, mtbf_h=0.0)
+    free = simulate_run(j, v, dead, 30, 0xC0FFEE)
+    assert not free.enabled
+    assert _bits(free.good_s) == _bits(free.horizon_s)
+    assert free.failures == 0
+
+
+def t_failure_trace_goodput_tracks_availability():
+    # rust: failure::trace_goodput_tracks_predicted_availability_over
+    # _long_horizons — the replay and the closed form agree in
+    # expectation over a year.
+    j = _failure_job("llama13b", 32)
+    v = _failure_layout13(j)
+    rep = simulate_run(j, v, A100, 365, 7)
+    predicted = availability_of(j, v, A100)
+    achieved = rep.good_s / rep.horizon_s
+    assert rep.failures > 0, "a year on 256 GPUs must see failures"
+    assert abs(achieved - predicted) < 0.05, (achieved, predicted, rep)
+
+
+def t_failure_render_covers_model_and_trace_lines():
+    # rust: failure::render_covers_model_and_trace_lines
+    j = _failure_job("llama13b", 8)
+    v = _failure_layout13(j)
+    rep = simulate_run(j, v, A100, 30, 0)
+    o = evaluate(j, v, A100)
+    assert o.kind == "ok"
+    out = render_simulate_run(j, v, A100, "a100", o.mfu, o.step_time_s, rep)
+    assert "simulate-run for llama13b on 64 GPUs" in out, out
+    assert "per-GPU MTBF 30000 h" in out, out
+    assert "trace (seed 0, 30 days)" in out, out
+    assert "% goodput" in out, out
+    # The shared orchestration returns these exact bytes (the CLI and
+    # the serve daemon both call it).
+    assert simulate_run_report(j, v, A100, "a100", 30, 0) == out
+    dead = replace(A100, storage_bw=0.0)
+    free = simulate_run(j, v, dead, 30, 0)
+    out = render_simulate_run(j, v, dead, "a100", o.mfu, o.step_time_s, free)
+    assert "failure model disabled" in out, out
+    assert "100.00% goodput" in out, out
+
+
+def t_failure_ranked_mfu_identity_reduction():
+    # rust: argmax::ranked_mfu_is_the_identity_reduction — identical
+    # winner, identical numbers, identical prune counters, and `score`
+    # carrying the MFU bits.
+    for p in main_presets()[:2]:
+        job = p.job()
+        plain, sp = argmax_mfu(job, _argmax_space(p), A100,
+                               lambda _v: True, TIE_KEEP_LAST)
+        ranked, sr = argmax_ranked(job, _argmax_space(p), A100,
+                                   lambda _v: True, TIE_KEEP_LAST, RANK_MFU)
+        assert plain.v.layout == ranked.v.layout, p.name
+        assert _bits(plain.mfu) == _bits(ranked.mfu), p.name
+        assert _bits(ranked.mfu) == _bits(ranked.score), \
+            f"{p.name}: score != mfu"
+        assert sp.evaluated == sr.evaluated, (p.name, sp, sr)
+        assert sp.bound_pruned == sr.bound_pruned, p.name
+
+
+def t_failure_ranked_effective_matches_reference():
+    # rust: argmax::ranked_effective_mfu_matches_materializing_reference
+    # — fold every evaluated row's effective_mfu score with the KeepLast
+    # rule and compare layout + score bits, on both hardwares.
+    for p in main_presets()[:2]:
+        job = p.job()
+        for hw_name, hw in [("a100", A100), ("h100", H100)]:
+            best, stats = argmax_ranked(job, _argmax_space(p), hw,
+                                        lambda _v: True, TIE_KEEP_LAST,
+                                        RANK_EFFECTIVE_MFU)
+            want = None
+            for row in run(p, hw).rows:
+                if row.outcome.mfu_opt() is None:
+                    continue
+                s = effective_mfu(job, row.v, hw, row.outcome.mfu)
+                if want is None or total_cmp_key(s) >= total_cmp_key(want[1]):
+                    want = (row, s)
+            wrow, wscore = want
+            ctx = f"{p.name}@{hw_name}"
+            assert best.v.layout == wrow.layout(), ctx
+            assert _bits(best.score) == _bits(wscore), f"{ctx}: score bits"
+            assert _bits(best.mfu) == _bits(wrow.outcome.mfu), \
+                f"{ctx}: mfu bits"
+            assert stats.evaluated < stats.total, \
+                f"{ctx}: effective bound never fired ({stats})"
+
+
+def t_failure_ranked_plan_default_is_historical():
+    # rust: planner::ranked_exhaustive_default_is_the_historical_plan
+    j = _failure_job("llama13b", 8)
+    plain, sp = plan_exhaustive_stats(j, A100)
+    ranked, sr = plan_exhaustive_stats_ranked(j, A100, RANK_MFU)
+    assert plain.v.layout == ranked.v.layout
+    assert _bits(plain.predicted_mfu) == _bits(ranked.predicted_mfu)
+    assert sp.evaluated == sr.evaluated
+
+
+def t_failure_effective_rank_trades_mfu_for_availability():
+    # rust: planner::effective_rank_never_beats_raw_mfu_but_stays_runnable
+    for name, nodes in [("llama13b", 8), ("llama65b", 16)]:
+        j = _failure_job(name, nodes)
+        raw, _ = plan_exhaustive_stats_ranked(j, A100, RANK_MFU)
+        eff, _ = plan_exhaustive_stats_ranked(j, A100, RANK_EFFECTIVE_MFU)
+        assert eff.predicted_mfu <= raw.predicted_mfu, name
+        score = lambda p: effective_mfu(j, p.v, A100, p.predicted_mfu)
+        assert score(eff) >= score(raw), \
+            f"{name}: {score(eff)} < {score(raw)}"
+        # The ranked render explains the choice; default stays plain.
+        txt = render_plan_ranked(j, eff, A100, RANK_EFFECTIVE_MFU)
+        assert "effective:" in txt, txt
+        assert "% availability" in txt, txt
+        assert render_plan_ranked(j, raw, A100, RANK_MFU) == \
+            render_plan(j, raw)
+
+
+def t_failure_replan_shrinks_to_whole_nodes():
+    # rust: planner::replan_shrinks_to_whole_nodes_and_finds_a_layout —
+    # lose 3 GPUs of a 64-GPU cluster: 61 usable -> 7 whole nodes.
+    # 56 GPUs force a factor of 7 into dp, which can never divide
+    # gbs 2048 — an honest "no runnable layout" report, not an error.
+    j = _failure_job("llama65b", 8)
+    rep = replan(j, 3, A100, RANK_MFU)
+    assert rep.degraded.cluster.gpus == 56
+    assert rep.full.cluster.gpus == 64
+    assert rep.new is None, "gbs 2048 is indivisible on 7 nodes"
+    # The "was" row is exactly the full-cluster exhaustive plan.
+    full_plan, _ = plan_exhaustive_stats(j, A100)
+    assert rep.old.v.layout == full_plan.v.layout
+    txt = render_replan(rep)
+    assert "64 -> 56 usable GPUs (7 whole nodes" in txt, txt
+    assert "no runnable layout on the surviving cluster" in txt, txt
+    assert "migration: " not in txt, txt
+    # Losing 4 whole nodes lands on a power-of-two cluster where a
+    # layout does exist, with a positive, finite migration estimate.
+    rep = replan(j, 32, A100, RANK_MFU)
+    assert rep.degraded.cluster.gpus == 32
+    assert rep.new is not None, "65B must still run on 4 nodes"
+    assert rep.new.mfu > 0.2
+    assert rep.moved_bytes > 0.0 and math.isfinite(rep.moved_bytes)
+    assert rep.migration_s > 0.0 and math.isfinite(rep.migration_s)
+    txt = render_replan(rep)
+    assert "64 -> 32 usable GPUs (4 whole nodes" in txt, txt
+    assert "was: " in txt and "now: " in txt, txt
+    assert "migration: " in txt, txt
+
+
+def t_failure_replan_deterministic_and_validates():
+    # rust: planner::replan_render_is_jobs_independent_and_validates
+    # _inputs — determinism (the serve/CLI byte contract rests on it)
+    # and the three rejection cases.
+    j = _failure_job("llama65b", 8)
+    a = render_replan(replan(j, 9, A100, RANK_EFFECTIVE_MFU))
+    b = render_replan(replan(j, 9, A100, RANK_EFFECTIVE_MFU))
+    assert a == b
+    for lost, frag in [(0, "replan needs --lost >= 1"),
+                       (64, "nothing left to plan for"),
+                       (57, "leaves no whole")]:
+        try:
+            replan(j, lost, A100, RANK_MFU)
+            raise AssertionError(f"lost={lost} must be rejected")
+        except ValueError as e:
+            assert frag in str(e), (lost, str(e))
+
+
+def t_failure_ranked_report_identity_and_column():
+    # rust: report::ranked_render_default_is_identity_and_effective
+    # _adds_column
+    r = run(main_presets()[0], A100)
+    assert report_render_top_ranked(r, False, None, A100, RANK_MFU) == \
+        report_render_top(r, False, None)
+    assert report_render_top_ranked(r, False, 5, A100, RANK_MFU) == \
+        report_render_top(r, False, 5)
+    t = report_render_top_ranked(r, False, None, A100, RANK_EFFECTIVE_MFU)
+    assert "Eff. MFU" in t, t
+    assert "ranked by effective MFU" in t
+    effs = [effective_mfu(r.job, row.v, A100, row.outcome.mfu)
+            for row in r.rows if row.outcome.mfu_opt() is not None]
+    assert effs
+    raw_best = r.best().outcome.mfu
+    assert max(effs) < raw_best, "effective must discount"
+    # Same footer either way: the rank re-sorts, it never drops rows.
+    assert f"of {len(r.rows)} configs" in t
+
+
+def t_failure_persist_retry_budget_and_clean_saves():
+    # rust: persist::retry_budget_defaults_and_clean_saves_never_retry
+    # + the env hook: unset => default 2, unparseable => default.
+    with _stress_env(plx_persist_retries=None):
+        assert persist_retries() == PERSIST_DEFAULT_RETRIES == 2
+    with _stress_env(plx_persist_retries="5"):
+        assert persist_retries() == 5
+    with _stress_env(plx_persist_retries="bogus"):
+        assert persist_retries() == PERSIST_DEFAULT_RETRIES
+    # An unarmed save succeeds first try and counts zero retries.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-failure-retry-")
+    try:
+        with _stress_caches():
+            with _stress_env(plx_fault_seed=None):
+                job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+                v = validate(job, Layout(2, 2, 1, False, FLASH2RMS, True))
+                _EVAL_CACHE[(job, v, A100, cal_key())] = Outcome("unavail")
+                before = _DISK_STATS["evaluate"][4]
+                persist_save_all(d)
+                assert _DISK_STATS["evaluate"][4] == before, \
+                    "clean save must not count retries"
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def t_failure_persist_injected_errors_retry_and_count():
+    # The bounded-retry satellite under armed injection: with the IO
+    # gate certain to fire, the write re-attempts exactly the budget,
+    # counts every retry in the per-memo disk stats, and still
+    # surfaces the final error.
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="plx-failure-inject-")
+    try:
+        _stress_reset_disk_stats()
+        with _stress_env(plx_fault_seed="7", plx_fault_io_p="1.0",
+                         plx_persist_retries="3"):
+            try:
+                _persist_write_atomic(d, "evaluate.plxcache", "evaluate",
+                                      "plxcache v3 evaluate 1\n")
+                raise AssertionError("p=1.0 must fail every attempt")
+            except OSError as e:
+                assert "injected fault" in str(e), e
+            assert _DISK_STATS["evaluate"][4] == 3, dict(_DISK_STATS)
+        # Disarmed, the same write lands first try and counts nothing.
+        with _stress_env(plx_fault_seed=None):
+            _persist_write_atomic(d, "evaluate.plxcache", "evaluate",
+                                  "plxcache v3 evaluate 1\n")
+            assert _DISK_STATS["evaluate"][4] == 3, "no new retries"
+        with open(os.path.join(d, "evaluate.plxcache")) as f:
+            assert f.read() == "plxcache v3 evaluate 1\n"
+    finally:
+        _stress_reset_disk_stats()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def t_failure_fault_probs_clamp_with_one_warning():
+    # rust: fault::env_prob — out-of-range or unparseable probabilities
+    # warn once per config load on stderr and clamp (NaN => 0.0), so
+    # garbage never silently becomes a probability.
+    import contextlib
+    import io
+    with _stress_env(plx_fault_seed="1", plx_fault_io_p="1.5",
+                     plx_fault_trunc_p="abc"):
+        buf = io.StringIO()
+        with contextlib.redirect_stderr(buf):
+            cfg = _fault_config()
+        warnings = buf.getvalue().splitlines()
+        assert ("plx: warning: PLX_FAULT_IO_P='1.5' is not a probability"
+                " in [0,1]; clamping") in warnings, warnings
+        assert any("PLX_FAULT_TRUNC_P='abc'" in w for w in warnings)
+        assert len(warnings) == 2, warnings
+        assert _bits(cfg["io_p"]) == _bits(1.0), "over-range clamps to 1"
+        assert _bits(cfg["trunc_p"]) == _bits(0.0), "NaN clamps to 0"
+        # The parsed config is cached: a second read warns nothing.
+        buf2 = io.StringIO()
+        with contextlib.redirect_stderr(buf2):
+            _fault_config()
+        assert buf2.getvalue() == ""
+    # In-range values never warn.
+    with _stress_env(plx_fault_seed="1", plx_fault_io_p="0.25",
+                     plx_fault_trunc_p="1.0"):
+        buf = io.StringIO()
+        with contextlib.redirect_stderr(buf):
+            cfg = _fault_config()
+        assert buf.getvalue() == ""
+        assert _bits(cfg["io_p"]) == _bits(0.25)
+
+
+def t_failure_serve_replan_equals_renderer():
+    # rust: serve::replan_response_equals_cli_renderer_bytes
+    state = ServeState()
+    text, _ = serve_handle_line(
+        state, '{"cmd":"replan","model":"llama65b","nodes":8,"lost":3}')
+    r = json_parse(text)
+    assert r["ok"] is True and r["cmd"] == "replan"
+    job = _failure_job("llama65b", 8)
+    hw = hardware_from_overrides(A100)
+    assert r["output"] == render_replan(replan(job, 3, hw, RANK_MFU))
+    # The ranked form routes through the same renderer.
+    text, _ = serve_handle_line(
+        state, '{"cmd":"replan","model":"llama65b","nodes":8,"lost":3,'
+               '"rank":"effective-mfu"}')
+    r = json_parse(text)
+    assert r["output"] == render_replan(
+        replan(job, 3, hw, RANK_EFFECTIVE_MFU))
+    # Domain errors use the standard envelope.
+    text, _ = serve_handle_line(
+        state, '{"cmd":"replan","model":"llama65b","nodes":8}')
+    assert 'need \\"lost\\"' in text, text
+    text, _ = serve_handle_line(
+        state, '{"cmd":"replan","model":"llama65b","nodes":8,"lost":0}')
+    assert "replan needs" in text, text
+    text, _ = serve_handle_line(
+        state,
+        '{"cmd":"replan","model":"llama65b","nodes":8,"lost":3,"rank":"x"}')
+    assert "unknown rank" in text, text
+
+
+def t_failure_serve_simulate_run_equals_renderer():
+    # rust: serve::simulate_run_response_equals_cli_renderer_bytes +
+    # the seed default from the armed PLX_FAULT_SEED.
+    state = ServeState()
+    req = ('{"cmd":"simulate-run","model":"llama13b","nodes":1,"tp":2,'
+           '"pp":2,"mb":2,"days":7,"seed":42}')
+    text, _ = serve_handle_line(state, req)
+    r = json_parse(text)
+    assert r["ok"] is True and r["cmd"] == "simulate-run"
+    job = _failure_job("llama13b", 1)
+    hw = hardware_from_overrides(A100)
+    v = validate(job, Layout(2, 2, 2, False, FLASH2RMS, False))
+    assert r["output"] == simulate_run_report(job, v, hw, "a100", 7, 42)
+    # The same request is deterministic: a second reply is identical.
+    again, _ = serve_handle_line(state, req)
+    assert again == text
+    # Without an explicit seed, the armed PLX_FAULT_SEED is the trace
+    # seed, exactly like the CLI.
+    with _stress_env(plx_fault_seed="99"):
+        noseed = ('{"cmd":"simulate-run","model":"llama13b","nodes":1,'
+                  '"tp":2,"pp":2,"mb":2,"days":7}')
+        text, _ = serve_handle_line(state, noseed)
+        r = json_parse(text)
+        assert r["output"] == simulate_run_report(job, v, hw, "a100", 7, 99)
+    # Unrunnable layouts surface the evaluation verdict as bad_request.
+    text, _ = serve_handle_line(
+        state, '{"cmd":"simulate-run","model":"llama65b","nodes":1}')
+    assert '"code":"bad_request"' in text, text
+    assert "layout does not fit" in text, text
+
+
+FAILURE_CHECKS = [
+    ("failure::young_daly_is_the_closed_form", t_failure_young_daly_closed_form),
+    ("failure::availability_is_a_fraction_and_shrinks_with_scale",
+     t_failure_availability_fraction_shrinks_with_scale),
+    ("failure::effective_mfu_bound_is_admissible_bitwise",
+     t_failure_effective_bound_admissible_bitwise),
+    ("failure::effective_bound_admissible_under_cal_and_hw_overrides",
+     t_failure_effective_bound_admissible_under_overrides),
+    ("failure::checkpoint_cost_shrinks_with_model_parallelism",
+     t_failure_checkpoint_cost_shrinks_with_mp),
+    ("failure::trace_replay_is_deterministic_and_accounts_time",
+     t_failure_trace_replay_deterministic),
+    ("failure::trace_goodput_tracks_predicted_availability",
+     t_failure_trace_goodput_tracks_availability),
+    ("failure::render_covers_model_and_trace_lines",
+     t_failure_render_covers_model_and_trace_lines),
+    ("argmax::ranked_mfu_is_the_identity_reduction",
+     t_failure_ranked_mfu_identity_reduction),
+    ("argmax::ranked_effective_mfu_matches_materializing_reference",
+     t_failure_ranked_effective_matches_reference),
+    ("planner::ranked_exhaustive_default_is_the_historical_plan",
+     t_failure_ranked_plan_default_is_historical),
+    ("planner::effective_rank_never_beats_raw_mfu_but_stays_runnable",
+     t_failure_effective_rank_trades_mfu_for_availability),
+    ("planner::replan_shrinks_to_whole_nodes_and_finds_a_layout",
+     t_failure_replan_shrinks_to_whole_nodes),
+    ("planner::replan_deterministic_and_validates_inputs",
+     t_failure_replan_deterministic_and_validates),
+    ("report::ranked_render_default_identity_effective_adds_column",
+     t_failure_ranked_report_identity_and_column),
+    ("persist::retry_budget_defaults_and_clean_saves_never_retry",
+     t_failure_persist_retry_budget_and_clean_saves),
+    ("persist::injected_write_errors_retry_and_count",
+     t_failure_persist_injected_errors_retry_and_count),
+    ("fault::env_probs_clamp_with_one_warning",
+     t_failure_fault_probs_clamp_with_one_warning),
+    ("serve::replan_response_equals_cli_renderer_bytes",
+     t_failure_serve_replan_equals_renderer),
+    ("serve::simulate_run_response_equals_cli_renderer_bytes",
+     t_failure_serve_simulate_run_equals_renderer),
+]
+
+
 def main():
     for name, fn in CHECKS:
         check(name, fn)
@@ -2489,6 +3013,10 @@ def main():
     for name, fn in STRESS_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - argmax_pass} / {len(STRESS_CHECKS)} (stress suite)")
+    stress_pass = len(PASS)
+    for name, fn in FAILURE_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - stress_pass} / {len(FAILURE_CHECKS)} (failure suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

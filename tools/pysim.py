@@ -42,15 +42,21 @@ Rust source of truth:
   rust/src/util/json.rs           -> json_parse / json_write / fmt_f64
   rust/src/sim/persist.rs         -> persist_render_* / persist_parse_* /
                                      persist_save_all / persist_load_all
-  rust/src/planner/mod.rs         -> render_plan
-  rust/src/sweep/report.rs        -> report_render_top / render_compare
+  rust/src/planner/mod.rs         -> render_plan / render_plan_ranked /
+                                     replan / render_replan
+  rust/src/sweep/report.rs        -> report_render_top / render_top_ranked /
+                                     render_compare
   rust/src/sweep/engine.rs        -> run_compare
+  rust/src/sweep/argmax.rs        -> argmax_mfu / argmax_ranked / compare_best
+  rust/src/sim/failure.rs         -> failure model / effective MFU /
+                                     simulate_run / render_simulate_run
   rust/src/serve/mod.rs           -> ServeState / serve_handle_line
 """
 
 import math
 import os
 import struct
+import sys
 import time
 from dataclasses import dataclass, field, replace
 from typing import Callable, List, Optional, Tuple
@@ -122,16 +128,21 @@ class Hardware:
     coll_latency_s: float
     launch_overhead_s: float
     workspace_bytes: float
+    mtbf_h: float
+    storage_bw: float
 
 
-A100 = Hardware(312e12, 80.0 * 1e9, 1.55e12, 250e9, 25e9, 20e-6, 4.5e-6, 5.0 * 1e9)
-H100 = Hardware(989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9)
+A100 = Hardware(312e12, 80.0 * 1e9, 1.55e12, 250e9, 25e9, 20e-6, 4.5e-6, 5.0 * 1e9,
+                30000.0, 2.0e9)
+H100 = Hardware(989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9,
+                30000.0, 2.0e9)
 
 # Mirrors rust/src/sim/cluster.rs::HW_PRESETS — the `--hw` registry.
 HW_PRESETS = (("a100", A100), ("h100", H100))
 
 HW_FIELDS = ("peak_matmul_flops", "hbm_bytes", "hbm_bw", "nvlink_bw", "ib_bw",
-             "coll_latency_s", "launch_overhead_s", "workspace_bytes")
+             "coll_latency_s", "launch_overhead_s", "workspace_bytes",
+             "mtbf_h", "storage_bw")
 
 
 def hw_preset(name):
@@ -904,11 +915,12 @@ _STAGE_CACHE = {}
 # Memo observability, mirroring rust/src/sim/cache.rs::stats /
 # disk_stats: per-memo [hits, misses] plus, for the PLX_CACHE_DIR warm
 # start (persist_load_all below), per-memo
-# [loaded, hits, skipped, quarantined] — skipped counts corrupt entry
-# lines, quarantined counts damaged files renamed to `.bad`.
+# [loaded, hits, skipped, quarantined, retries] — skipped counts corrupt
+# entry lines, quarantined counts damaged files renamed to `.bad`,
+# retries counts bounded spill-write re-attempts (persist.write).
 _MEMO_STATS = {"evaluate": [0, 0], "stage": [0, 0]}
-_DISK_STATS = {"evaluate": [0, 0, 0, 0], "stage": [0, 0, 0, 0],
-               "makespan": [0, 0, 0, 0]}
+_DISK_STATS = {"evaluate": [0, 0, 0, 0, 0], "stage": [0, 0, 0, 0, 0],
+               "makespan": [0, 0, 0, 0, 0]}
 _DISK_KEYS = {"evaluate": set(), "stage": set()}
 
 
@@ -1415,9 +1427,34 @@ class QueryStats:
 
 @dataclass(frozen=True)
 class Best:
+    # `score` is the value the fold compared on — equal to `mfu` to the
+    # bit under RANK_MFU, the effective MFU under RANK_EFFECTIVE_MFU
+    # (mirrors rust/src/sweep/argmax.rs::Best).
     v: ValidLayout
     mfu: float
     step_time_s: float
+    score: float
+
+
+# The objective a query ranks layouts by (argmax.rs::Rank): the paper's
+# raw MFU, or the failure-aware effective MFU (MFU × expected goodput
+# fraction). Each rank pairs with its own admissible bound, so the
+# lossless branch-and-bound argument carries over.
+RANK_MFU = "mfu"
+RANK_EFFECTIVE_MFU = "effective-mfu"
+
+
+def rank_parse(s):
+    """Mirror of Rank::parse — the canonical rank string, or None."""
+    return s if s in (RANK_MFU, RANK_EFFECTIVE_MFU) else None
+
+
+def rank_score(rank, job, v, hw, mfu_):
+    """Mirror of Rank::score: identity under RANK_MFU (bit-for-bit the
+    evaluated MFU), the failure-discounted product otherwise."""
+    if rank == RANK_MFU:
+        return mfu_
+    return effective_mfu(job, v, hw, mfu_)
 
 
 def argmax_mfu(job, layouts, hw, pred, tie):
@@ -1427,7 +1464,28 @@ def argmax_mfu(job, layouts, hw, pred, tie):
 def argmax_mfu_with_bound(job, layouts, hw, pred, tie, bound):
     """argmax_mfu with an explicit admissible bound — the bench harness
     runs the same scan under mfu_upper_bound_loose to report how much
-    the tightened TP term shrinks the evaluated fraction."""
+    the tightened TP term shrinks the evaluated fraction. The identity
+    score makes this an exact reduction of the historical MFU scan."""
+    return _argmax_core(job, layouts, hw, pred, tie, bound,
+                        lambda _j, _v, _h, m: m)
+
+
+def argmax_ranked(job, layouts, hw, pred, tie, rank):
+    """Best runnable layout under a rank (argmax.rs::argmax_ranked) —
+    the same lossless windowed scan with the rank's (bound, score) pair
+    plugged in."""
+    if rank == RANK_MFU:
+        return argmax_mfu(job, layouts, hw, pred, tie)
+    return _argmax_core(job, layouts, hw, pred, tie,
+                        effective_mfu_upper_bound, effective_mfu)
+
+
+def _argmax_core(job, layouts, hw, pred, tie, bound, score):
+    """The shared windowed branch-and-bound fold (argmax.rs::argmax_core),
+    parameterized by the rank's admissible bound and its score for
+    evaluated rows. All pruning and tie-breaking compares scores; the
+    lossless-scan argument holds as long as bound(v) >= score(v) bitwise
+    for every layout the predicate admits."""
     best = None
     total = gated = memp = boundp = evaluated = 0
     window = []
@@ -1436,14 +1494,15 @@ def argmax_mfu_with_bound(job, layouts, hw, pred, tie, bound):
         for w in window:
             o = evaluate(job, w, hw)
             if o.kind == "ok":
+                s = score(job, w, hw, o.mfu)
                 if best is None:
                     wins = True
                 elif tie == TIE_KEEP_FIRST:
-                    wins = o.mfu > best.mfu
+                    wins = s > best.score
                 else:
-                    wins = total_cmp_key(o.mfu) >= total_cmp_key(best.mfu)
+                    wins = total_cmp_key(s) >= total_cmp_key(best.score)
                 if wins:
-                    best = Best(w, o.mfu, o.step_time_s)
+                    best = Best(w, o.mfu, o.step_time_s, s)
         window.clear()
         return best
 
@@ -1462,7 +1521,8 @@ def argmax_mfu_with_bound(job, layouts, hw, pred, tie, bound):
             ub = bound(job, v, hw)
             # NaN-safe in both modes: a pathological NaN bound fails the
             # comparison and falls through to a full evaluation.
-            dominated = ub <= best.mfu if tie == TIE_KEEP_FIRST else ub < best.mfu
+            dominated = (ub <= best.score if tie == TIE_KEEP_FIRST
+                         else ub < best.score)
             if dominated:
                 boundp += 1
                 continue
@@ -1478,13 +1538,21 @@ def compare_best(preset_, hws):
     """Per-hardware winners for `plx compare` through the pruned argmax
     (mirrors rust/src/sweep/argmax.rs::compare_best) — no full sweep
     table is materialized per hardware."""
+    return compare_best_ranked(preset_, hws, RANK_MFU)
+
+
+def compare_best_ranked(preset_, hws, rank):
+    """compare_best under an explicit rank (argmax.rs::compare_best_ranked)
+    — `plx compare --rank effective-mfu` picks each hardware's winner by
+    failure-discounted MFU instead of raw MFU."""
     job = preset_.job()
     out = []
     for name, hw in hws:
         layouts = iter_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
                                preset_.ckpts, preset_.kernels, preset_.sps,
                                preset_.scheds)
-        best, _ = argmax_mfu(job, layouts, hw, lambda _v: True, TIE_KEEP_LAST)
+        best, _ = argmax_ranked(job, layouts, hw, lambda _v: True,
+                                TIE_KEEP_LAST, rank)
         out.append((name, best))
     return out
 
@@ -1558,6 +1626,61 @@ def report_render_top(result, with_sp_column, top):
     out = (f"# {result.preset_name} — {result.job.arch.name} on "
            f"{result.job.cluster.gpus} GPUs, GBS {result.job.gbs} "
            f"(reproduces {result.preset_name})\n")
+    out += table_render(headers, rows)
+    unavail = len(result.rows) - result.count_ok() - result.count_oom()
+    out += (f"\n{result.count_ok()} runnable, {result.count_oom()} OOM, "
+            f"{unavail} kernel-unavailable of {len(result.rows)} configs\n")
+    return out
+
+
+def report_render_top_ranked(result, with_sp_column, top, hw, rank):
+    """Mirrors rust/src/sweep/report.rs::render_top_ranked. RANK_MFU is
+    the plain renderer, byte-for-byte; RANK_EFFECTIVE_MFU re-sorts
+    runnable rows by effective MFU descending and adds an `Eff. MFU`
+    column after `MFU`."""
+    if rank == RANK_MFU:
+        return report_render_top(result, with_sp_column, top)
+    with_sched_column = any(r.layout().sched != SCHED_1F1B for r in result.rows)
+    headers = ["Step Time", "MFU", "Eff. MFU", "Activation", "Kernel",
+               "MB", "TP", "PP"]
+    if with_sp_column:
+        headers.append("Seq Parallel")
+    if with_sched_column:
+        headers.append("Schedule")
+    # The same total, stable order discipline as SweepResult.sorted,
+    # keyed on the effective score instead of the raw MFU.
+    keyed = []
+    for r in result.rows:
+        if r.outcome.kind == "ok":
+            keyed.append((0, -effective_mfu(result.job, r.v, hw,
+                                            r.outcome.mfu), r))
+        elif r.outcome.kind == "oom":
+            keyed.append((1, 0.0, r))
+        else:
+            keyed.append((2, 0.0, r))
+    keyed.sort(key=lambda t: (t[0], total_cmp_key(t[1])))
+    shown = len(keyed) if top is None else min(top, len(keyed))
+    rows = []
+    for _kind, neg_score, r in keyed[:shown]:
+        l = r.layout()
+        if r.outcome.kind == "ok":
+            # -(-x) is bitwise x, so the cell carries the exact score.
+            st, m, eff = (secs(r.outcome.step_time_s), pct(r.outcome.mfu),
+                          pct(-neg_score))
+        elif r.outcome.kind == "oom":
+            st, m, eff = "OOM Error", "", ""
+        else:
+            st, m, eff = "Kernel unavail.", "", ""
+        row = [st, m, eff, "every_layer" if l.ckpt else "disabled", l.kernel,
+               str(l.mb), str(l.tp), str(l.pp)]
+        if with_sp_column:
+            row.append("True" if l.sp else "False")
+        if with_sched_column:
+            row.append(l.sched)
+        rows.append(row)
+    out = (f"# {result.preset_name} — {result.job.arch.name} on "
+           f"{result.job.cluster.gpus} GPUs, GBS {result.job.gbs} "
+           f"(reproduces {result.preset_name}, ranked by effective MFU)\n")
     out += table_render(headers, rows)
     unavail = len(result.rows) - result.count_ok() - result.count_oom()
     out += (f"\n{result.count_ok()} runnable, {result.count_oom()} OOM, "
@@ -1859,16 +1982,34 @@ def plan_exhaustive_stats(job, hw):
     layout exactly like plan_exhaustive_reference). Returns
     (plan, PruneStats); the plan is identical to the reference's,
     layout and bits."""
+    return plan_exhaustive_stats_ranked(job, hw, RANK_MFU)
+
+
+def plan_exhaustive_stats_ranked(job, hw, rank):
+    """plan_exhaustive_stats under an explicit rank (mirrors
+    rust/src/planner/mod.rs::plan_exhaustive_stats_ranked): RANK_MFU is
+    the historical scan (same delegation chain, same bits);
+    RANK_EFFECTIVE_MFU plugs the failure-discounted (bound, score) pair
+    into the same lossless branch-and-bound query."""
+    best, q = exhaustive_best(job, hw, rank)
+    if best is None:
+        raise ValueError(f"no feasible layout for {job.arch.name} on "
+                         f"{job.cluster.gpus} GPUs")
+    return (Plan(best.v, best.mfu, best.step_time_s),
+            PruneStats(q.total, q.gate_pruned, q.mem_pruned,
+                       q.bound_pruned, q.evaluated))
+
+
+def exhaustive_best(job, hw, rank):
+    """The exhaustive-grid argmax under a rank (mirrors
+    rust/src/planner/mod.rs::exhaustive_best): the shared query behind
+    plan_exhaustive_stats_ranked and replan."""
     tps = [1 << i for i in range(4)]
     pps = [1 << i for i in range(6)]
     layouts = iter_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
                            ALL_KERNELS, [False, True])
-    best, q = argmax_mfu(job, layouts, hw, lambda _v: True, TIE_KEEP_FIRST)
-    if best is None:
-        raise ValueError("no feasible layout")
-    return (Plan(best.v, best.mfu, best.step_time_s),
-            PruneStats(q.total, q.gate_pruned, q.mem_pruned,
-                       q.bound_pruned, q.evaluated))
+    return argmax_ranked(job, layouts, hw, lambda _v: True,
+                         TIE_KEEP_FIRST, rank)
 
 
 def plan_exhaustive(job, hw):
@@ -2365,7 +2506,15 @@ def _fault_env_prob(name):
     try:
         p = float(v)
     except ValueError:
-        p = 0.0
+        p = float("nan")
+    if not (0.0 <= p <= 1.0):
+        # Warned once per config load (the parsed config is cached until
+        # fault_reset): garbage must not silently become a probability
+        # (fault.rs::env_prob).
+        print(f"plx: warning: {name}='{v}' is not a probability in [0,1];"
+              " clamping", file=sys.stderr)
+        if p != p:
+            return 0.0
     return min(max(p, 0.0), 1.0)
 
 
@@ -2389,6 +2538,12 @@ def fault_reset():
 
 def fault_enabled():
     return _fault_config()["seed"] is not None
+
+
+def fault_env_seed():
+    """The armed PLX_FAULT_SEED, if any — `plx simulate-run` defaults
+    its trace seed to this (fault.rs::env_seed)."""
+    return _fault_config()["seed"]
 
 
 def _fault_stream(cfg, site):
@@ -2418,17 +2573,226 @@ def fault_trunc_len(site, length):
         return None
     return rng.below(length)
 
+# ---------------------------------------------------------------- sim/failure
+
+# Mirror of rust/src/sim/failure.rs: MTBF/checkpoint cost model, the
+# Young–Daly optimal checkpoint interval, effective MFU, and the
+# deterministic failure-trace simulator. The trace arithmetic avoids
+# transcendentals entirely (only + - * / sqrt, all IEEE correctly
+# rounded), so the same seed replays to the same bits here and in Rust.
+
+RESTART_OVERHEAD_S = 120.0  # failure.rs::RESTART_OVERHEAD_S
+TRACE_SITE = "sim.failure"  # failure.rs::TRACE_SITE
+
+
+def failure_model_enabled(hw):
+    """Mirror of failure.rs::model_enabled: a non-positive MTBF or
+    storage bandwidth disables the model (availability 1, effective
+    MFU == MFU, traces replay failure-free)."""
+    return hw.mtbf_h > 0.0 and hw.storage_bw > 0.0
+
+
+def state_bytes_per_gpu(job, v):
+    """Per-GPU durable model-state bytes a checkpoint writes (and a
+    migration moves): bf16 weights 2*shard plus the ZeRO-1 fp32
+    optimizer shard 12*shard/dp (failure.rs::state_bytes_per_gpu)."""
+    n = float(job.arch.param_count())
+    shard = n / float(v.layout.tp * v.layout.pp)
+    return 2.0 * shard + 12.0 * shard / float(v.topo.dp)
+
+
+def checkpoint_cost_s(job, v, hw):
+    return state_bytes_per_gpu(job, v) / hw.storage_bw
+
+
+def cluster_mtbf_s(hw, world):
+    return hw.mtbf_h * 3600.0 / float(world)
+
+
+def young_daly_interval_s(c, m):
+    """tau = sqrt(2*C*M) (Young 1974, Daly 2006)."""
+    return math.sqrt(2.0 * c * m)
+
+
+def availability(c, r, m):
+    """Expected goodput fraction at the Young–Daly interval:
+    1 - sqrt(2C/M) - R/M, clamped to [0, 1]. Shared by the exact
+    per-layout availability and the pruning bound — every step is
+    monotone under IEEE-754 round-to-nearest, which is what makes the
+    bound bitwise admissible (failure.rs::availability)."""
+    waste = math.sqrt(2.0 * c / m) + r / m
+    return 0.0 if waste >= 1.0 else 1.0 - waste
+
+
+def availability_of(job, v, hw):
+    if not failure_model_enabled(hw):
+        return 1.0
+    c = checkpoint_cost_s(job, v, hw)
+    return availability(c, c + RESTART_OVERHEAD_S,
+                        cluster_mtbf_s(hw, v.topo.world()))
+
+
+def effective_mfu(job, v, hw, mfu_):
+    """Effective MFU = MFU × availability: the failure-aware ranking
+    objective (`--rank effective-mfu`)."""
+    return mfu_ * availability_of(job, v, hw)
+
+
+def availability_upper_bound(job, world, hw):
+    """Layout-independent upper bound on availability_of across every
+    layout of a `world`-GPU job (failure.rs::availability_upper_bound):
+    checkpoint cost is minimized at tp*pp = world, dp = 1."""
+    if not failure_model_enabled(hw):
+        return 1.0
+    n = float(job.arch.param_count())
+    shard = n / float(world)
+    # Same expression shape as state_bytes_per_gpu with dp = 1, so the
+    # tp*pp = world, dp = 1 corner is bit-equal (not merely close).
+    bytes_ = 2.0 * shard + 12.0 * shard / 1.0
+    c = bytes_ / hw.storage_bw
+    return availability(c, c + RESTART_OVERHEAD_S, cluster_mtbf_s(hw, world))
+
+
+def effective_mfu_upper_bound(job, v, hw):
+    """Admissible upper bound on effective_mfu: the product of the MFU
+    upper bound and the availability upper bound, both bitwise >= their
+    true values (failure.rs::effective_mfu_upper_bound)."""
+    return (mfu_upper_bound(job, v, hw)
+            * availability_upper_bound(job, v.topo.world(), hw))
+
+
+@dataclass
+class TraceReport:
+    """Mirrors failure.rs::TraceReport — one deterministic trace replay."""
+    enabled: bool
+    horizon_s: float
+    seed: int
+    days: int
+    ckpt_s: float
+    interval_s: float
+    restart_s: float
+    mtbf_s: float
+    failures: int
+    checkpoints: int
+    downtime_s: float
+    lost_s: float
+    good_s: float
+
+
+def simulate_run(job, v, hw, days, seed):
+    """Event-driven deterministic failure-trace replay over `days` of
+    wall clock (failure.rs::simulate_run, expression for expression).
+    Time advances in segments of tau + C; per segment one uniform draw
+    decides whether a failure strikes (probability min(window/M, 1) —
+    the discretized hazard; no exp/ln, so the arithmetic is bit-portable
+    across languages), and, when it does, one more draw places it
+    uniformly in the window."""
+    horizon = float(days) * 86400.0
+    rep = TraceReport(failure_model_enabled(hw), horizon, seed, days,
+                      0.0, 0.0, 0.0, 0.0, 0, 0, 0.0, 0.0, 0.0)
+    if not rep.enabled:
+        rep.good_s = horizon
+        return rep
+    c = checkpoint_cost_s(job, v, hw)
+    m = cluster_mtbf_s(hw, v.topo.world())
+    tau = young_daly_interval_s(c, m)
+    rep.ckpt_s = c
+    rep.interval_s = tau
+    rep.restart_s = c + RESTART_OVERHEAD_S
+    rep.mtbf_s = m
+    seg = tau + c
+    rng = XoshiroRng(seed ^ _fnv1a64(TRACE_SITE))
+    t = 0.0
+    while t < horizon:
+        window = min(seg, horizon - t)
+        p = min(window / m, 1.0)
+        if rng.f64() < p:
+            # A failure strikes, uniformly placed in the window. All
+            # work since the last completed checkpoint is lost.
+            at = rng.f64() * window
+            rep.failures += 1
+            rep.lost_s += min(at, tau)
+            t += at
+            down = min(rep.restart_s, horizon - t)
+            rep.downtime_s += down
+            t += down
+        elif window < seg:
+            # Horizon ends mid-segment: keep the work done so far.
+            rep.good_s += min(window, tau)
+            t = horizon
+        else:
+            rep.good_s += tau
+            rep.checkpoints += 1
+            t += seg
+    return rep
+
+
+def render_simulate_run(job, v, hw, hw_label, mfu_, step_time_s, rep):
+    """Mirror of failure.rs::render_simulate_run — the `plx simulate-run`
+    stdout block, byte for byte."""
+    l = v.layout
+    out = (f"simulate-run for {job.arch.name} on {job.cluster.gpus} GPUs "
+           f"(gbs {job.gbs}, hw {hw_label}):\n"
+           f"  layout: mb={l.mb} tp={l.tp} pp={l.pp} dp={v.topo.dp}"
+           f" ckpt={'true' if l.ckpt else 'false'} kernel={l.kernel}"
+           f" sp={'true' if l.sp else 'false'} sched={l.sched}\n")
+    if rep.enabled:
+        out += (f"  model: per-GPU MTBF {hw.mtbf_h:.0f} h, cluster MTBF "
+                f"{rep.mtbf_s / 3600.0:.2f} h, checkpoint {rep.ckpt_s:.2f}s "
+                f"every {rep.interval_s:.1f}s, restart {rep.restart_s:.2f}s\n")
+    else:
+        out += "  model: failure model disabled (mtbf_h or storage_bw <= 0)\n"
+    avail = availability_of(job, v, hw)
+    out += (f"  predicted: {step_time_s:.2f}s/step, {100.0 * mfu_:.2f}% MFU, "
+            f"{100.0 * avail:.2f}% availability, "
+            f"{100.0 * (mfu_ * avail):.2f}% effective MFU\n"
+            f"  trace (seed {rep.seed}, {rep.days} days): "
+            f"{rep.failures} failures, {rep.checkpoints} checkpoints\n"
+            f"  totals: {rep.good_s / 3600.0:.2f} h good work, "
+            f"{rep.lost_s / 3600.0:.2f} h lost, "
+            f"{rep.downtime_s / 3600.0:.2f} h downtime, "
+            f"{100.0 * rep.good_s / rep.horizon_s:.2f}% goodput\n")
+    return out
+
+
+def simulate_run_report(job, v, hw, hw_label, days, seed):
+    """Mirror of failure.rs::simulate_run_report: evaluate the layout,
+    replay the trace, and render the full report — raises ValueError
+    with the Rust Err string when the layout cannot run at all."""
+    o = evaluate(job, v, hw)
+    if o.kind == "ok":
+        rep = simulate_run(job, v, hw, days, seed)
+        return render_simulate_run(job, v, hw, hw_label, o.mfu,
+                                   o.step_time_s, rep)
+    if o.kind == "oom":
+        raise ValueError(f"layout does not fit: needs "
+                         f"{o.required / 1e9:.1f} GB of "
+                         f"{o.budget / 1e9:.1f} GB HBM")
+    raise ValueError("kernel unavailable for this layout")
+
 # ---------------------------------------------------------------- sim/persist
 
 # Mirror of rust/src/sim/persist.rs: the PLX_CACHE_DIR on-disk memo
 # format (see docs/cache.md). Same header, same token order, same
 # 16-hex-digit f64 bit patterns, same lexicographic line sort — a file
-# written by either language parses bit-exact in the other. Format v2
-# adds a per-file generation counter and a fixed-width per-entry
-# generation prefix (the spill at which the entry first reached disk);
-# v1 files still warm-load byte-compatibly at generation 1.
+# written by either language parses bit-exact in the other. Format v3
+# widens the hardware-bit block to 10 tokens (mtbf_h, storage_bw join
+# the key); pre-v3 files are recognized but cold — never loaded, never
+# quarantined — because their key lines lack the reliability tokens.
 
-PERSIST_FORMAT_VERSION = 2
+PERSIST_FORMAT_VERSION = 3
+PERSIST_RETRIES_ENV = "PLX_PERSIST_RETRIES"  # persist.rs::RETRIES_ENV
+PERSIST_DEFAULT_RETRIES = 2
+
+
+def persist_retries():
+    """Mirror of persist.rs::persist_retries: the bounded spill-write
+    retry budget (default 2; unparseable values fall back)."""
+    v = os.environ.get(PERSIST_RETRIES_ENV)
+    if not v:
+        return PERSIST_DEFAULT_RETRIES
+    n = _parse_u64(v)
+    return PERSIST_DEFAULT_RETRIES if n is None else n
 PERSIST_CACHE_DIR_ENV = "PLX_CACHE_DIR"
 PERSIST_MAX_BYTES_ENV = "PLX_CACHE_MAX_BYTES"  # persist.rs::MAX_BYTES_ENV
 
@@ -2664,17 +3028,17 @@ def _persist_parse_gen(s):
 
 
 def _persist_parse_header(first, memo):
-    """Mirror of persist.rs::parse_header. Returns "v1", ("v2", gen),
-    "cold" (a recognized plxcache header that is not ours — unknown
-    version or wrong memo), or "corrupt" (not a plxcache header)."""
+    """Mirror of persist.rs::parse_header. Returns ("v3", gen), "cold"
+    (a recognized plxcache header that is not ours — a pre-v3 version
+    whose key lines lack the reliability hardware-bit tokens, an unknown
+    future version, or the wrong memo), or "corrupt" (not a plxcache
+    header at all)."""
     t = first.split()
     if len(t) < 2 or t[0] != "plxcache":
         return "corrupt"
-    if t[1] == "v1" and len(t) == 3 and t[2] == memo:
-        return "v1"
-    if t[1] == "v2" and len(t) == 4 and t[2] == memo:
+    if t[1] == "v3" and len(t) == 4 and t[2] == memo:
         g = _persist_parse_gen(t[3])
-        return ("v2", g) if g is not None else "corrupt"
+        return ("v3", g) if g is not None else "corrupt"
     return "cold"
 
 
@@ -2692,9 +3056,9 @@ def _persist_split_gen_line(line):
 
 def _persist_parse_file(text, memo, parse_entry):
     """Mirror of persist.rs::parse_file -> Loaded: a dict with
-    "entries" ([(gen, entry)]), "file_gen" (1 for v1 files, 0 when
-    cold), "skipped" (corrupt entry lines), and "unrecognized" (the
-    first line is not a plxcache header at all)."""
+    "entries" ([(gen, entry)]), "file_gen" (0 when cold), "skipped"
+    (corrupt entry lines), and "unrecognized" (the first line is not a
+    plxcache header at all)."""
     cold = {"entries": [], "file_gen": 0, "skipped": 0, "unrecognized": False}
     lines = text.splitlines()
     if not lines:
@@ -2704,21 +3068,16 @@ def _persist_parse_file(text, memo, parse_entry):
         return cold
     if header == "corrupt":
         return dict(cold, unrecognized=True)
-    v2 = header != "v1"
-    out = {"entries": [], "file_gen": header[1] if v2 else 1,
+    out = {"entries": [], "file_gen": header[1],
            "skipped": 0, "unrecognized": False}
     for line in lines[1:]:
         if not line.strip():
             continue
-        if v2:
-            split = _persist_split_gen_line(line)
-            parsed = None
-            if split is not None:
-                e = parse_entry(split[1])
-                parsed = (split[0], e) if e is not None else None
-        else:
-            e = parse_entry(line)
-            parsed = (1, e) if e is not None else None
+        split = _persist_split_gen_line(line)
+        parsed = None
+        if split is not None:
+            e = parse_entry(split[1])
+            parsed = (split[0], e) if e is not None else None
         if parsed is not None:
             out["entries"].append(parsed)
         else:
@@ -2734,7 +3093,7 @@ def _parse_eval_key(t):
     nums = [t.usize() for _ in range(9)]
     if any(v is None for v in nums):
         return None
-    hw = tuple(t.bits() for _ in range(8))
+    hw = tuple(t.bits() for _ in range(len(HW_FIELDS)))
     cal = tuple(t.bits() for _ in range(len(CAL_VARS)))
     if any(b is None for b in hw + cal):
         return None
@@ -2779,7 +3138,7 @@ def _persist_parse_stage_entry(line):
     nums = [t.usize() for _ in range(6)]
     if any(v is None for v in nums):
         return None
-    hw = tuple(t.bits() for _ in range(8))
+    hw = tuple(t.bits() for _ in range(len(HW_FIELDS)))
     cal = tuple(t.bits() for _ in range(len(CAL_VARS)))
     if any(b is None for b in hw + cal):
         return None
@@ -2858,10 +3217,48 @@ def persist_readonly():
     return v is not None and v != "" and v != "0"
 
 
-def _persist_write_atomic(dirpath, name, content):
-    """Mirror of persist.rs::write_atomic, fault gates included: a hard
-    injected error raises like any real IO failure; a torn write cuts
-    the payload at a random byte and still renames into place (the
+def _persist_note_retries(memo, retries):
+    # persist.rs::note_retries: per-memo retry counter; unknown memo
+    # names land on makespan, like the Rust match's `_` arm.
+    if retries == 0:
+        return
+    key = memo if memo in ("evaluate", "stage") else "makespan"
+    _DISK_STATS[key][4] += retries
+
+
+def _persist_write_atomic(dirpath, name, memo, content):
+    """Mirror of persist.rs::write_atomic: a bounded deterministic retry
+    around the single-attempt write. Hard failures (injected or real)
+    are re-attempted up to persist_retries() times with a short
+    exponential backoff; every attempt re-draws the injection gate, so
+    under a seeded stress run the retry sequence is as reproducible as
+    the faults themselves. Retries performed are counted per memo
+    whether or not the write ultimately succeeds."""
+    budget = persist_retries()
+    retries = 0
+    err = None
+    while True:
+        try:
+            _persist_write_atomic_once(dirpath, name, content)
+            err = None
+            break
+        except OSError as e:
+            if retries >= budget:
+                err = e
+                break
+            retries += 1
+            # Tiny exponential backoff (2, 4, 8... ms), capped like the
+            # Rust side's 1 << retries.min(6).
+            time.sleep((1 << min(retries, 6)) / 1000.0)
+    _persist_note_retries(memo, retries)
+    if err is not None:
+        raise err
+
+
+def _persist_write_atomic_once(dirpath, name, content):
+    """Mirror of persist.rs::write_atomic_once, fault gates included: a
+    hard injected error raises like any real IO failure; a torn write
+    cuts the payload at a random byte and still renames into place (the
     quarantine path then proves the reader survives it)."""
     if fault_io_error("persist.write"):
         raise OSError(f"injected fault: {name}")
@@ -2878,18 +3275,13 @@ def _persist_write_atomic(dirpath, name, content):
 def _persist_line_generations(text, memo):
     """Mirror of persist.rs::line_generations: the old file's generation
     counter and each surviving entry's generation, keyed by the entry
-    tokens (without the prefix). Corrupt or alien files contribute
-    nothing — every entry restarts at the new generation."""
+    tokens (without the prefix). Corrupt, alien, or pre-v3 files
+    contribute nothing — every entry restarts at the new generation."""
     gens = {}
     lines = text.splitlines()
     if not lines:
         return (0, gens)
     header = _persist_parse_header(lines[0], memo)
-    if header == "v1":
-        for l in lines[1:]:
-            if l.strip():
-                gens[l] = 1
-        return (1, gens)
     if header in ("cold", "corrupt"):
         return (0, gens)
     for l in lines[1:]:
@@ -2925,7 +3317,8 @@ def _persist_save_memo(dirpath, name, memo, entry_tokens, cap):
             total -= len(lines[evicted]) + 1
             evicted += 1
         lines = lines[evicted:]
-    _persist_write_atomic(dirpath, name, header + "".join(l + "\n" for l in lines))
+    _persist_write_atomic(dirpath, name, memo,
+                          header + "".join(l + "\n" for l in lines))
     return {"written": len(lines), "evicted": evicted}
 
 
@@ -3074,6 +3467,96 @@ def render_plan(job, plan):
         f" {plan.predicted_step_s:.2f}s/step,"
         f" {plan.v.num_micro} micro-batches/step\n")
 
+
+def render_plan_ranked(job, plan, hw, rank):
+    """Mirror of rust/src/planner/mod.rs::render_plan_ranked: the
+    default rank renders byte-identically through render_plan;
+    effective-mfu appends one line with the failure-discounted numbers
+    the argmax actually ranked on."""
+    out = render_plan(job, plan)
+    if rank == RANK_EFFECTIVE_MFU:
+        avail = availability_of(job, plan.v, hw)
+        eff = effective_mfu(job, plan.v, hw, plan.predicted_mfu)
+        out += (f"  effective: {100.0 * eff:.2f}% MFU at"
+                f" {100.0 * avail:.2f}% availability\n")
+    return out
+
+# ---------------------------------------------------------------- planner/replan
+
+@dataclass(frozen=True)
+class ReplanReport:
+    """Mirrors rust/src/planner/mod.rs::ReplanReport: the best layout
+    before and after losing `lost` GPUs, plus a first-order estimate of
+    the state migration the switch implies."""
+    lost: int
+    full: Job
+    degraded: Job
+    old: Optional[Best]
+    new: Optional[Best]
+    moved_bytes: float
+    migration_s: float
+
+
+def replan(job, lost, hw, rank):
+    """Mirror of rust/src/planner/mod.rs::replan: failed GPUs take their
+    whole node out of the usable set, the surviving cluster is
+    (gpus - lost) // gpus_per_node whole nodes, and the best layout on
+    it is found by the same exhaustive bound-pruned argmax as
+    `plx plan --exhaustive`, under the caller's rank."""
+    if lost == 0:
+        raise ValueError("replan needs --lost >= 1")
+    if lost >= job.cluster.gpus:
+        raise ValueError(f"lost {lost} of {job.cluster.gpus} GPUs — "
+                         "nothing left to plan for")
+    per_node = job.cluster.gpus_per_node
+    deg_nodes = (job.cluster.gpus - lost) // per_node
+    if deg_nodes == 0:
+        raise ValueError(f"losing {lost} GPUs leaves no whole "
+                         f"{per_node}-GPU node usable")
+    degraded = Job(job.arch, Cluster(deg_nodes * per_node, per_node), job.gbs)
+    old, _ = exhaustive_best(job, hw, rank)
+    new, _ = exhaustive_best(degraded, hw, rank)
+    deg_gpus = degraded.cluster.gpus
+    if new is not None:
+        if (old is not None and old.v.layout.tp == new.v.layout.tp
+                and old.v.layout.pp == new.v.layout.pp):
+            # Same (tp, pp) shape: only the evicted replicas' owners
+            # re-fetch their shards.
+            moved = (state_bytes_per_gpu(job, old.v)
+                     * float(job.cluster.gpus - deg_gpus))
+        else:
+            moved = float(deg_gpus) * state_bytes_per_gpu(degraded, new.v)
+        migration = moved / (hw.ib_bw * float(deg_gpus))
+    else:
+        moved, migration = 0.0, 0.0
+    return ReplanReport(lost, job, degraded, old, new, moved, migration)
+
+
+def render_replan(rep):
+    """Mirror of rust/src/planner/mod.rs::render_replan — the
+    `plx replan` stdout block, shared verbatim by the CLI and the serve
+    daemon's {"cmd":"replan"}."""
+    def row(best, missing):
+        if best is None:
+            return missing
+        l = best.v.layout
+        return (f"mb={l.mb} tp={l.tp} pp={l.pp} dp={best.v.topo.dp}"
+                f" ckpt={'true' if l.ckpt else 'false'} kernel={l.kernel}"
+                f" sp={'true' if l.sp else 'false'} sched={l.sched}"
+                f"  predicted {100.0 * best.mfu:.2f}% MFU,"
+                f" {best.step_time_s:.2f}s/step")
+
+    nodes = rep.degraded.cluster.gpus // rep.degraded.cluster.gpus_per_node
+    out = (f"replan for {rep.full.arch.name} after losing {rep.lost} GPUs: "
+           f"{rep.full.cluster.gpus} -> {rep.degraded.cluster.gpus} usable "
+           f"GPUs ({nodes} whole nodes, gbs {rep.full.gbs})\n"
+           f"  was: {row(rep.old, 'no runnable layout')}\n"
+           f"  now: {row(rep.new, 'no runnable layout on the surviving cluster')}\n")
+    if rep.new is not None:
+        out += (f"  migration: {rep.moved_bytes / 1e9:.2f} GB re-sharded, "
+                f"~{rep.migration_s:.1f}s over IB\n")
+    return out
+
 # ---------------------------------------------------------------- sweep/compare
 
 def run_compare(preset_, hws):
@@ -3120,8 +3603,11 @@ def render_compare(results):
     winners = []
     for hw_name, r in results:
         b = r.best()
+        # Materialized winners are always MFU-ranked, so the score is
+        # the MFU itself (same bits as the pruned path).
         winners.append((hw_name, None if b is None else
-                        Best(b.v, b.outcome.mfu, b.outcome.step_time_s)))
+                        Best(b.v, b.outcome.mfu, b.outcome.step_time_s,
+                             b.outcome.mfu)))
     return render_compare_best(first.preset_name, first.job, winners)
 
 # ------------------------------------------------------------ sim/predict-mem
@@ -3405,6 +3891,95 @@ def _serve_do_predict_mem(req):
     return render_predict_mem(job, v, hw, hw_name)
 
 
+def _serve_do_replan(req):
+    """Mirror of rust/src/serve/mod.rs::do_replan: `replan` over the
+    wire — same renderer as `plx replan`, so response `output` bytes
+    equal CLI stdout."""
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "lost",
+                            "rank"])
+    model = _serve_need_str(req, "model")
+    arch = preset(model)
+    if arch is None:
+        raise _ServeError(f"unknown model '{model}'")
+    nodes = _serve_usize(req, "nodes")
+    nodes = 8 if nodes is None else nodes
+    gbs = _serve_usize(req, "gbs")
+    gbs = Job.paper_gbs(arch) if gbs is None else gbs
+    hw = _serve_resolve_hw(_serve_str(req, "hw") or "a100")
+    r = _serve_str(req, "rank")
+    if r is None:
+        rank = RANK_MFU
+    else:
+        rank = rank_parse(r)
+        if rank is None:
+            raise _ServeError(f"unknown rank '{r}' (mfu, effective-mfu)")
+    lost = _serve_usize(req, "lost")
+    if lost is None:
+        raise _ServeError('need "lost"')
+    job = Job(arch, Cluster.dgx_a100(nodes), gbs)
+    try:
+        rep = replan(job, lost, hw, rank)
+    except ValueError as e:
+        raise _ServeError(str(e))
+    return render_replan(rep)
+
+
+def _serve_do_simulate_run(req):
+    """Mirror of rust/src/serve/mod.rs::do_simulate_run: the shared
+    simulate_run_report orchestration, so response `output` bytes equal
+    CLI stdout. The seed defaults to the armed PLX_FAULT_SEED, then 0,
+    exactly like the CLI."""
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "tp", "pp",
+                            "mb", "ckpt", "sp", "kernel", "schedule", "days",
+                            "seed"])
+    model = _serve_need_str(req, "model")
+    arch = preset(model)
+    if arch is None:
+        raise _ServeError(f"unknown model '{model}'")
+    nodes = _serve_usize(req, "nodes")
+    nodes = 8 if nodes is None else nodes
+    gbs = _serve_usize(req, "gbs")
+    gbs = Job.paper_gbs(arch) if gbs is None else gbs
+    hw_name = _serve_str(req, "hw") or "a100"
+    hw = _serve_resolve_hw(hw_name)
+    k = _serve_str(req, "kernel")
+    if k is None:
+        kernel = FLASH2RMS
+    else:
+        kernel = KERNEL_PARSE.get(k)
+        if kernel is None:
+            raise _ServeError(f"unknown kernel '{k}'")
+    s = _serve_str(req, "schedule")
+    if s is None:
+        sched = SCHED_1F1B
+    else:
+        sched = sched_parse(s)
+        if sched is None:
+            raise _ServeError(
+                f"unknown schedule '{s}' (1f1b, gpipe, interleaved:<v>)")
+    tp = _serve_usize(req, "tp")
+    pp = _serve_usize(req, "pp")
+    mb = _serve_usize(req, "mb")
+    l = Layout(1 if tp is None else tp, 1 if pp is None else pp,
+               1 if mb is None else mb, _serve_bool(req, "ckpt"), kernel,
+               _serve_bool(req, "sp"), sched)
+    days = _serve_usize(req, "days")
+    days = 30 if days is None else days
+    seed = _serve_usize(req, "seed")
+    if seed is None:
+        armed = fault_env_seed()
+        seed = 0 if armed is None else armed
+    job = Job(arch, Cluster.dgx_a100(nodes), gbs)
+    try:
+        v = validate(job, l)
+    except ValueError as e:
+        raise _ServeError(str(e))
+    try:
+        return simulate_run_report(job, v, hw, hw_name, days, seed)
+    except ValueError as e:
+        raise _ServeError(str(e))
+
+
 def _serve_do_sweep(req):
     _serve_check_keys(req, ["cmd", "preset", "hw", "schedule", "top"])
     name = _serve_need_str(req, "preset")
@@ -3441,9 +4016,10 @@ def _serve_stats(state):
         return {"entries": entries, "hits": h, "misses": m}
 
     def disk(name):
-        loaded, hits, skipped, quarantined = _DISK_STATS[name]
+        loaded, hits, skipped, quarantined, retries = _DISK_STATS[name]
         return {"hits": hits, "loaded": loaded,
-                "quarantined": quarantined, "skipped": skipped}
+                "quarantined": quarantined, "retries": retries,
+                "skipped": skipped}
 
     stats = {
         "deduped": state.deduped,
@@ -3484,7 +4060,8 @@ def _serve_dispatch(state, line):
         return _serve_stats(state), False
     if cmd == "shutdown":
         return json_write({"cmd": "shutdown", "ok": True}), True
-    if cmd in ("plan", "sweep", "compare", "predict-mem"):
+    if cmd in ("plan", "sweep", "compare", "predict-mem", "replan",
+               "simulate-run"):
         # The batched plan form returns an "outputs" array instead of a
         # single "output" string (mirrors serve/mod.rs's dispatch).
         if cmd == "plan" and "jobs" in parsed:
@@ -3496,7 +4073,9 @@ def _serve_dispatch(state, line):
                                "outputs": outputs}), False
         do = {"plan": _serve_do_plan, "sweep": _serve_do_sweep,
               "compare": _serve_do_compare,
-              "predict-mem": _serve_do_predict_mem}[cmd]
+              "predict-mem": _serve_do_predict_mem,
+              "replan": _serve_do_replan,
+              "simulate-run": _serve_do_simulate_run}[cmd]
         try:
             output = do(parsed)
         except _ServeError as e:

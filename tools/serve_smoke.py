@@ -7,7 +7,8 @@ test can show — a warm restart serving disk hits out of PLX_CACHE_DIR:
 
   1. cold daemon: every `output` field byte-identical to the stdout of
      the equivalent one-shot CLI invocation (plan / sweep --top /
-     sweep --hw h100 / compare / predict-mem);
+     sweep --hw h100 / compare / predict-mem / replan --rank
+     effective-mfu / simulate-run --seed);
   2. batched plan: one {"cmd":"plan","jobs":[...]} request whose
      `outputs` elements each equal the matching one-shot CLI stdout
      byte-for-byte;
@@ -160,6 +161,17 @@ def main():
           "gbs": 512, "tp": 2, "pp": 2},
          ["predict-mem", "--model", "llama13b", "--nodes", "1",
           "--gbs", "512", "--tp", "2", "--pp", "2"]),
+        ("replan",
+         {"cmd": "replan", "model": "llama65b", "nodes": 8, "lost": 32,
+          "rank": "effective-mfu"},
+         ["replan", "--model", "llama65b", "--nodes", "8", "--lost",
+          "32", "--rank", "effective-mfu"]),
+        ("simulate-run",
+         {"cmd": "simulate-run", "model": "llama13b", "nodes": 1,
+          "tp": 2, "pp": 2, "mb": 2, "days": 7, "seed": 42},
+         ["simulate-run", "--model", "llama13b", "--nodes", "1",
+          "--tp", "2", "--pp", "2", "--mb", "2", "--days", "7",
+          "--seed", "42"]),
     ]
 
     # The batched plan: one request, three jobs; outputs[i] must equal
@@ -211,6 +223,8 @@ def main():
         assert stats["requests"] >= 7, stats
         assert stats["errors"] == 2, stats
         assert stats["memos"]["evaluate"]["entries"] > 0, stats
+        assert stats["disk"]["evaluate"]["retries"] == 0, \
+            f"unarmed daemon counted write retries: {stats}"
         d.shutdown()
         print("serve-smoke: errors + stats + shutdown OK")
 
@@ -218,7 +232,7 @@ def main():
         eval_file = os.path.join(cache_dir, "evaluate.plxcache")
         with open(eval_file) as f:
             text = f.read()
-        assert text.startswith("plxcache v2 evaluate "), text[:40]
+        assert text.startswith("plxcache v3 evaluate "), text[:40]
         loaded = persist_parse_evaluate(text)
         entries = loaded["entries"]
         assert entries, "spill carries no evaluate entries"
@@ -349,14 +363,15 @@ def main():
                 os.path.join(fault_dir, "stage.plxcache.bad")), \
                 "damaged file was not quarantined to .bad"
             m = re.search(r"disk cache: (\d+) loaded, (\d+) hits, "
-                          r"(\d+) skipped, (\d+) quarantined", r.stderr)
+                          r"(\d+) skipped, (\d+) quarantined, "
+                          r"(\d+) write retries", r.stderr)
             assert m and int(m.group(4)) >= 1, \
                 f"no quarantine report: {r.stderr!r}"
-            # The recovery run respilled clean v2 files; a third run
+            # The recovery run respilled clean v3 files; a third run
             # warm-loads them and serves disk hits.
             with open(os.path.join(fault_dir, "evaluate.plxcache")) as f:
-                assert f.readline().startswith("plxcache v2 evaluate "), \
-                    "respilled cache is not plxcache v2"
+                assert f.readline().startswith("plxcache v3 evaluate "), \
+                    "respilled cache is not plxcache v3"
             r = subprocess.run([opts.bin, *sweep_args, "--cache-stats"],
                                capture_output=True, text=True,
                                env=clean_env, check=True)
