@@ -27,8 +27,8 @@ use plx::config::RunConfig;
 use plx::coordinator::train;
 use plx::layout::{validate, Job, Kernel, Layout, Schedule};
 use plx::model::arch::{preset, PRESETS};
-use plx::planner::{plan_by_rules, plan_exhaustive_stats_ranked};
-use plx::sim::{parse_hw, Hardware};
+use plx::planner::{plan_by_rules, plan_exhaustive_stats_assigned, plan_exhaustive_stats_ranked};
+use plx::sim::{parse_hw, Hardware, HwAssignment};
 use plx::sweep::{by_name, figures, for_table, main_presets, report, seqpar_presets, table2, Rank};
 use plx::topo::Cluster;
 use plx::util::cli::{Args, Spec};
@@ -37,8 +37,8 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "model", "pp", "mb", "dp", "num-micro", "steps", "lr", "warmup", "seed",
         "noise", "log-every", "artifacts", "preset", "csv", "nodes", "tp", "gbs", "kernel",
-        "loss-csv", "save", "resume", "jobs", "schedule", "hw", "addr", "top", "rank",
-        "lost", "days",
+        "loss-csv", "save", "resume", "jobs", "schedule", "hw", "hw-map", "addr", "top",
+        "rank", "lost", "days",
     ],
     flags: &["all", "ckpt", "sp", "exhaustive", "help", "list", "cache-stats", "readonly"],
 };
@@ -133,6 +133,20 @@ fn resolve_hw_name(name: &str) -> Result<Hardware> {
     Ok(parse_hw(name).map_err(anyhow::Error::msg)?.from_overrides())
 }
 
+/// Resolve the per-stage hardware assignment for the commands that take
+/// the heterogeneous axis (`sweep`, `plan`, `replan`, `compare`).
+/// Precedence: `--hw-map SPEC`, then `--hw SPEC`, then `a100`. A bare
+/// preset name (`--hw a100`) parses to a homogeneous assignment whose
+/// every consumer delegates to the legacy single-hardware path, bit for
+/// bit; `a100:4,h100:4` assigns pipeline-stage ranges to named presets
+/// (docs/hardware.md).
+fn resolve_hw_assignment(args: &Args) -> Result<HwAssignment> {
+    let spec = args.get("hw-map").unwrap_or_else(|| args.get_or("hw", "a100"));
+    Ok(HwAssignment::parse(spec)
+        .map_err(anyhow::Error::msg)?
+        .from_overrides())
+}
+
 /// Resolve `--rank {mfu,effective-mfu}` (default `mfu` — the historical
 /// objective, so default output bytes cannot move).
 fn rank_from_args(args: &Args) -> Result<Rank> {
@@ -158,15 +172,23 @@ USAGE:
   plx figure N            N in {1..5}
   plx plan   --model M --nodes K [--gbs G] [--exhaustive]
              [--rank {mfu,effective-mfu}]
+             (a heterogeneous --hw/--hw-map needs --exhaustive; the
+             search also picks the best stage placement of the fleet)
   plx predict-mem --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
                   [--sp] [--kernel flash2rms] [--hw NAME]
                   [--schedule {1f1b,gpipe,interleaved:<v>}]
   plx compare --preset NAME | --all  [--hw a100,h100]
              best layout + MFU delta per hardware, side by side
+             (consecutive name:count tokens form one heterogeneous
+             entry: --hw a100,h100:4,mi250x:4 compares a100 against
+             the mixed fleet)
   plx replan --model M --nodes K --lost N [--gbs G] [--hw NAME]
              [--rank {mfu,effective-mfu}]
              best surviving layout after losing N GPUs (whole-node
-             granularity) + state-migration estimate
+             granularity) + state-migration estimate; when the full
+             surviving cluster has no runnable layout, falls back to
+             the largest runnable node subset and reports the idled
+             survivors
   plx simulate-run --model M --nodes K --tp T --pp P [--mb B] [--ckpt]
                    [--sp] [--kernel K] [--schedule S] [--days D]
                    [--seed S] [--hw NAME]
@@ -184,9 +206,15 @@ OPTIONS (all analytic commands — sweep/table/figure/plan/predict-mem/compare):
   --jobs N   evaluate layouts on N worker threads (1 = serial,
              0 or 'auto' = all hardware threads; default auto).
              Output is byte-identical for every N.
-  --hw NAME  hardware preset to simulate (a100, h100; default a100;
-             `compare` takes a comma-separated list). Per-field
-             overrides via PLX_HW_* env vars — see docs/hardware.md.
+  --hw SPEC  hardware to simulate (a100, h100, mi250x; default a100;
+             `compare` takes a comma-separated list). sweep/plan/
+             replan/compare also take a per-pipeline-stage assignment:
+             `--hw a100:4,h100:4` maps stage ranges to presets by GPU
+             count (docs/hardware.md). Per-field overrides via
+             PLX_HW_* env vars.
+  --hw-map SPEC
+             explicit per-stage assignment (same syntax; wins over
+             --hw; always a single `compare` entry).
   --readonly warm-load the PLX_CACHE_DIR cache but never spill back
              (same as PLX_CACHE_RO=1; docs/cache.md).
   --rank R   objective for sweep/plan/compare/replan: mfu (default;
@@ -341,7 +369,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             p.scheds = scheds.clone();
         }
     }
-    let hw = resolve_hw(args)?;
+    let hwa = resolve_hw_assignment(args)?;
     // `--top N` caps the rendered table at the N best rows (the sweep —
     // and the CSV — still covers the full space).
     let top = match args.get("top") {
@@ -353,9 +381,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // historical tables (render_top_ranked delegates).
     let rank = rank_from_args(args)?;
     for p in presets {
-        let result = plx::sweep::run(&p, &hw);
+        // A homogeneous assignment takes the legacy single-hardware path
+        // inside `run_jobs_assigned` — `--hw a100` output bytes cannot
+        // move; a per-stage spec evaluates each layout on its stage map.
+        let result = plx::sweep::run_jobs_assigned(&p, &hwa, 0);
         let with_sp = p.sps.len() > 1;
-        print!("{}", report::render_top_ranked(&result, with_sp, top, &hw, rank));
+        print!("{}", report::render_top_ranked_assigned(&result, with_sp, top, &hwa, rank));
         if let Some(csv) = args.get("csv") {
             std::fs::write(csv, report::to_csv(&result))?;
             println!("csv written to {csv}");
@@ -445,8 +476,27 @@ fn job_from_args(args: &Args) -> Result<Job> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
-    let hw = resolve_hw(args)?;
+    let hwa = resolve_hw_assignment(args)?;
     let rank = rank_from_args(args)?;
+    let Some(hw) = hwa.as_homogeneous() else {
+        // Per-stage fleets: the §5 rules assume one hardware, so the
+        // heterogeneous axis is exhaustive-only. The search also places
+        // the fleet — every distinct segment order is tried and the best
+        // (layout, placement) pair wins (`sweep::argmax::argmax_placed`).
+        if !args.flag("exhaustive") {
+            bail!(
+                "a heterogeneous --hw assignment needs --exhaustive \
+                 (the rule-based planner assumes a homogeneous fleet)"
+            );
+        }
+        let (plan, placement, stats) = plan_exhaustive_stats_assigned(&job, &hwa, rank, 0)?;
+        eprintln!("plx plan: {}", stats.log_line());
+        print!(
+            "{}",
+            plx::planner::render_plan_assigned(&job, &plan, &hwa, &placement, rank)
+        );
+        return Ok(());
+    };
     let plan = if args.flag("exhaustive") {
         // The exhaustive argmax ranks by the chosen objective; the
         // default rank is the exact historical scan.
@@ -467,14 +517,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_replan(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
-    let hw = resolve_hw(args)?;
+    let hwa = resolve_hw_assignment(args)?;
     let rank = rank_from_args(args)?;
     let lost = args
         .get("lost")
         .context("need --lost N (GPUs lost)")?
         .parse::<usize>()
         .map_err(|_| anyhow::anyhow!("--lost must be an integer"))?;
-    let rep = plx::planner::replan(&job, lost, &hw, rank, 0)?;
+    let rep = plx::planner::replan_assigned(&job, lost, &hwa, rank, 0)?;
     print!("{}", plx::planner::render_replan(&rep));
     Ok(())
 }
@@ -555,15 +605,29 @@ fn cmd_predict_mem(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_compare(args: &Args) -> Result<()> {
-    let hw_names = args.get_list("hw", "a100,h100");
-    if hw_names.is_empty() {
+/// Group the comma-split `--hw` tokens of `plx compare` into assignment
+/// specs: consecutive `:`-bearing tokens are one per-stage entry, bare
+/// names stand alone. `a100,h100` compares two presets (the historical
+/// reading); `a100:4,h100:4` is a single heterogeneous entry;
+/// `a100,h100:4,mi250x:4` compares `a100` against the mixed fleet. An
+/// explicit `--hw-map SPEC` is always a single entry.
+fn compare_entries(args: &Args) -> Result<Vec<(String, HwAssignment)>> {
+    let parsed: Vec<HwAssignment> = match args.get("hw-map") {
+        Some(spec) => vec![HwAssignment::parse(spec).map_err(anyhow::Error::msg)?],
+        None => HwAssignment::parse_list(args.get_or("hw", "a100,h100"))
+            .map_err(anyhow::Error::msg)?,
+    };
+    if parsed.is_empty() {
         bail!("--hw needs at least one preset name");
     }
-    let hws: Vec<(String, plx::sim::Hardware)> = hw_names
-        .iter()
-        .map(|n| resolve_hw_name(n).map(|hw| (n.clone(), hw)))
-        .collect::<Result<_>>()?;
+    Ok(parsed
+        .into_iter()
+        .map(|hwa| (hwa.label(), hwa.from_overrides()))
+        .collect())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let entries = compare_entries(args)?;
     let presets = presets_from_args(args, "need --preset NAME or --all")?;
     let rank = rank_from_args(args)?;
     for p in presets {
@@ -571,8 +635,10 @@ fn cmd_compare(args: &Args) -> Result<()> {
         // — never materializes the sweep tables, prunes every layout whose
         // MFU upper bound cannot beat the incumbent, and renders through
         // the same body as the materializing path (bit-identity asserted
-        // by `compare_best_matches_run_compare_winners`).
-        let winners = plx::sweep::compare_best_ranked(&p, &hws, 0, rank);
+        // by `compare_best_matches_run_compare_winners`). Heterogeneous
+        // entries evaluate on their per-stage assignment; all-homogeneous
+        // entry lists reduce to the historical fused scan.
+        let winners = plx::sweep::compare_best_assigned(&p, &entries, 0, rank);
         print!("{}", report::render_compare_best(p.name, &p.job(), &winners));
     }
     Ok(())

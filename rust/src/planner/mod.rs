@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 
 use crate::layout::{validate, Job, Kernel, Layout, Schedule, ValidLayout};
 use crate::sim::cache::evaluate_cached;
-use crate::sim::{failure, Hardware, Outcome};
+use crate::sim::{failure, Hardware, HwAssignment, Outcome};
 use crate::sweep::{Best, Rank, Tie};
 use crate::topo::Cluster;
 
@@ -340,6 +340,127 @@ fn exhaustive_best(job: &Job, hw: &Hardware, rank: Rank, jobs: usize) -> (Option
     (best, stats)
 }
 
+/// [`exhaustive_best`] over a per-stage hardware assignment (homogeneous
+/// assignments reduce to the legacy scan inside the argmax engine).
+fn exhaustive_best_assigned(
+    job: &Job,
+    hwa: &HwAssignment,
+    rank: Rank,
+    jobs: usize,
+) -> (Option<Best>, PruneStats) {
+    let (tps, pps) = exhaustive_axes();
+    let space = crate::layout::LayoutSpace::new(
+        job,
+        &tps,
+        &pps,
+        &[1, 2, 4, 8],
+        &[false, true],
+        &Kernel::ALL,
+        &[false, true],
+        &[Schedule::OneF1B],
+    );
+    let (best, q) = crate::sweep::argmax::argmax_ranked_assigned(
+        job,
+        space,
+        hwa,
+        |_| true,
+        Tie::KeepFirst,
+        jobs,
+        rank,
+    );
+    let stats = PruneStats {
+        total: q.total,
+        gate_pruned: q.gate_pruned,
+        mem_pruned: q.mem_pruned,
+        bound_pruned: q.bound_pruned,
+        evaluated: q.evaluated,
+    };
+    (best, stats)
+}
+
+/// `plx plan --exhaustive` over a per-stage hardware assignment, with
+/// placement search: every unique reordering of the assignment's
+/// segments is scanned and the best-scoring placement wins (keep-first
+/// over the lexicographic permutation walk, so the user-spelled order
+/// wins ties). A homogeneous assignment has one placement — itself —
+/// and the scan is bit-identical to [`plan_exhaustive_stats_ranked`].
+/// Returns the plan, the winning placement, and the summed prune
+/// counters.
+pub fn plan_exhaustive_stats_assigned(
+    job: &Job,
+    hwa: &HwAssignment,
+    rank: Rank,
+    jobs: usize,
+) -> Result<(Plan, HwAssignment, PruneStats)> {
+    let (tps, pps) = exhaustive_axes();
+    let space = || {
+        crate::layout::LayoutSpace::new(
+            job,
+            &tps,
+            &pps,
+            &[1, 2, 4, 8],
+            &[false, true],
+            &Kernel::ALL,
+            &[false, true],
+            &[Schedule::OneF1B],
+        )
+    };
+    let (winner, q) = crate::sweep::argmax::argmax_placed(
+        job,
+        space,
+        hwa,
+        |_| true,
+        Tie::KeepFirst,
+        jobs,
+        rank,
+    );
+    let stats = PruneStats {
+        total: q.total,
+        gate_pruned: q.gate_pruned,
+        mem_pruned: q.mem_pruned,
+        bound_pruned: q.bound_pruned,
+        evaluated: q.evaluated,
+    };
+    match winner {
+        Some((placement, b)) => Ok((
+            Plan { v: b.v, predicted_mfu: b.mfu, predicted_step_s: b.step_time_s },
+            placement,
+            stats,
+        )),
+        None => bail!("no feasible layout for {} on {} GPUs", job.arch.name, job.cluster.gpus),
+    }
+}
+
+/// [`render_plan_ranked`] for an assignment-planned layout: homogeneous
+/// assignments render byte-identically through the legacy path; a mixed
+/// assignment adds one `placement:` line naming the winning
+/// stage-to-silicon order, and the effective-MFU line (when ranked)
+/// uses the weakest-node availability of that placement.
+pub fn render_plan_assigned(
+    job: &Job,
+    plan: &Plan,
+    hwa: &HwAssignment,
+    placement: &HwAssignment,
+    rank: Rank,
+) -> String {
+    if let Some(hw) = hwa.as_homogeneous() {
+        return render_plan_ranked(job, plan, &hw, rank);
+    }
+    let mut out = render_plan(job, plan);
+    out.push_str(&format!("\x20 placement: {}\n", placement.label()));
+    if rank == Rank::EffectiveMfu {
+        let hws = placement.stage_hardwares(plan.v.layout.pp);
+        let avail = failure::availability_of_assigned(job, &plan.v, &hws);
+        let eff = failure::effective_mfu_assigned(job, &plan.v, &hws, plan.predicted_mfu);
+        out.push_str(&format!(
+            "\x20 effective: {:.2}% MFU at {:.2}% availability\n",
+            100.0 * eff,
+            100.0 * avail
+        ));
+    }
+    out
+}
+
 /// A degraded-cluster replanning decision: the best layout before and
 /// after losing `lost` GPUs, plus a first-order estimate of the state
 /// migration the switch implies.
@@ -349,11 +470,18 @@ pub struct ReplanReport {
     pub lost: usize,
     /// The original job (full cluster).
     pub full: Job,
-    /// The job on the surviving whole nodes (same arch, same gbs).
+    /// The job the replan actually runs on. When the largest surviving
+    /// node set admits no layout this is the largest *runnable* subset
+    /// (see [`replan`]'s fallback); equal to the usable set otherwise.
     pub degraded: Job,
+    /// GPUs on surviving whole nodes — the upper bound the fallback
+    /// scanned down from. `degraded.cluster.gpus < usable_gpus` means
+    /// survivors were idled to make the job runnable.
+    pub usable_gpus: usize,
     /// Best layout on the full cluster (the "was" row).
     pub old: Option<Best>,
-    /// Best layout on the surviving cluster, or `None` if nothing runs.
+    /// Best layout on the chosen surviving subset, or `None` if no
+    /// subset of the survivors runs at all.
     pub new: Option<Best>,
     /// Model-state bytes that must move to re-shard onto the survivors.
     pub moved_bytes: f64,
@@ -366,10 +494,17 @@ pub struct ReplanReport {
 ///
 /// Failed GPUs take their whole node out of the usable set — the
 /// simulator's topology model assumes uniform nodes, and real schedulers
-/// drain the host anyway — so the surviving cluster is
-/// `(gpus - lost) / gpus_per_node` whole nodes. The best layout on that
-/// cluster is found by the same exhaustive bound-pruned argmax as
-/// `plx plan --exhaustive`, under the caller's [`Rank`].
+/// drain the host anyway — so the survivors are
+/// `(gpus - lost) / gpus_per_node` whole nodes. The best layout is found
+/// by the same exhaustive bound-pruned argmax as `plx plan --exhaustive`,
+/// under the caller's [`Rank`].
+///
+/// When the largest surviving node set admits **no** layout (a prime
+/// node count whose factor can never divide the global batch, say), the
+/// replan does not give up: it scans node counts downward and runs on
+/// the largest *runnable* subset, reporting the idled survivors. Only
+/// when no subset of the survivors runs at all does the report carry
+/// `new: None`.
 ///
 /// The migration estimate is deliberately first-order: if the new layout
 /// keeps the old `(tp, pp)` model-parallel shape, only the evicted
@@ -383,6 +518,42 @@ pub fn replan(
     rank: Rank,
     jobs: usize,
 ) -> Result<ReplanReport> {
+    replan_with(job, lost, hw.ib_bw, |j| exhaustive_best(j, hw, rank, jobs).0)
+}
+
+/// [`replan`] over a per-stage hardware assignment: the same fallback
+/// scan with the assignment-aware argmax, and the migration estimate
+/// priced at the *slowest* segment's cross-node bandwidth (a re-shard is
+/// only done when its slowest participant is). Homogeneous assignments
+/// reduce to [`replan`] exactly.
+pub fn replan_assigned(
+    job: &Job,
+    lost: usize,
+    hwa: &HwAssignment,
+    rank: Rank,
+    jobs: usize,
+) -> Result<ReplanReport> {
+    if let Some(hw) = hwa.as_homogeneous() {
+        return replan(job, lost, &hw, rank, jobs);
+    }
+    let mut ib = hwa.segments[0].1.ib_bw;
+    for (_, hw, _) in &hwa.segments[1..] {
+        if hw.ib_bw < ib {
+            ib = hw.ib_bw;
+        }
+    }
+    replan_with(job, lost, ib, |j| exhaustive_best_assigned(j, hwa, rank, jobs).0)
+}
+
+/// The shared replan orchestration: input validation, the
+/// largest-runnable-subset fallback scan, and the migration estimate,
+/// parameterized by the per-cluster argmax and the migration bandwidth.
+fn replan_with(
+    job: &Job,
+    lost: usize,
+    ib_bw: f64,
+    best_of: impl Fn(&Job) -> Option<Best>,
+) -> Result<ReplanReport> {
     if lost == 0 {
         bail!("replan needs --lost >= 1");
     }
@@ -390,18 +561,33 @@ pub fn replan(
         bail!("lost {} of {} GPUs — nothing left to plan for", lost, job.cluster.gpus);
     }
     let per_node = job.cluster.gpus_per_node;
-    let deg_nodes = (job.cluster.gpus - lost) / per_node;
-    if deg_nodes == 0 {
+    let usable_nodes = (job.cluster.gpus - lost) / per_node;
+    if usable_nodes == 0 {
         bail!(
             "losing {} GPUs leaves no whole {}-GPU node usable",
             lost,
             per_node
         );
     }
-    let degraded =
-        Job::new(job.arch, Cluster { gpus: deg_nodes * per_node, gpus_per_node: per_node }, job.gbs);
-    let (old, _) = exhaustive_best(job, hw, rank, jobs);
-    let (new, _) = exhaustive_best(&degraded, hw, rank, jobs);
+    let job_on = |nodes: usize| {
+        Job::new(job.arch, Cluster { gpus: nodes * per_node, gpus_per_node: per_node }, job.gbs)
+    };
+    let old = best_of(job);
+    // Largest-runnable-subset fallback: the usable set first; if nothing
+    // runs there, idle one node at a time until a subset runs.
+    let mut degraded = job_on(usable_nodes);
+    let mut new = best_of(&degraded);
+    if new.is_none() {
+        for nodes in (1..usable_nodes).rev() {
+            let cand = job_on(nodes);
+            let b = best_of(&cand);
+            if b.is_some() {
+                degraded = cand;
+                new = b;
+                break;
+            }
+        }
+    }
     let deg_gpus = degraded.cluster.gpus;
     let (moved_bytes, migration_s) = match (&old, &new) {
         (Some(o), Some(n)) => {
@@ -412,15 +598,24 @@ pub fn replan(
             } else {
                 deg_gpus as f64 * failure::state_bytes_per_gpu(&degraded, &n.v)
             };
-            (moved, moved / (hw.ib_bw * deg_gpus as f64))
+            (moved, moved / (ib_bw * deg_gpus as f64))
         }
         (None, Some(n)) => {
             let moved = deg_gpus as f64 * failure::state_bytes_per_gpu(&degraded, &n.v);
-            (moved, moved / (hw.ib_bw * deg_gpus as f64))
+            (moved, moved / (ib_bw * deg_gpus as f64))
         }
         _ => (0.0, 0.0),
     };
-    Ok(ReplanReport { lost, full: *job, degraded, old, new, moved_bytes, migration_s })
+    Ok(ReplanReport {
+        lost,
+        full: *job,
+        degraded,
+        usable_gpus: usable_nodes * per_node,
+        old,
+        new,
+        moved_bytes,
+        migration_s,
+    })
 }
 
 /// The `plx replan` stdout block — shared verbatim by the CLI and the
@@ -446,6 +641,7 @@ pub fn render_replan(rep: &ReplanReport) -> String {
         }
         None => missing.to_string(),
     };
+    let per_node = rep.degraded.cluster.gpus_per_node;
     let mut out = format!(
         "replan for {} after losing {} GPUs: {} -> {} usable GPUs ({} whole nodes, gbs {})\n\
          \x20 was: {}\n\
@@ -453,12 +649,20 @@ pub fn render_replan(rep: &ReplanReport) -> String {
         rep.full.arch.name,
         rep.lost,
         rep.full.cluster.gpus,
-        rep.degraded.cluster.gpus,
-        rep.degraded.cluster.gpus / rep.degraded.cluster.gpus_per_node,
+        rep.usable_gpus,
+        rep.usable_gpus / per_node,
         rep.full.gbs,
         row(&rep.old, "no runnable layout"),
-        row(&rep.new, "no runnable layout on the surviving cluster"),
+        row(&rep.new, "no runnable layout on any subset of the survivors"),
     );
+    if rep.degraded.cluster.gpus < rep.usable_gpus {
+        out.push_str(&format!(
+            "\x20 fallback: running on {} of {} usable nodes, {} surviving GPUs idled\n",
+            rep.degraded.cluster.gpus / per_node,
+            rep.usable_gpus / per_node,
+            rep.usable_gpus - rep.degraded.cluster.gpus,
+        ));
+    }
     if rep.new.is_some() {
         out.push_str(&format!(
             "\x20 migration: {:.2} GB re-sharded, ~{:.1}s over IB\n",
@@ -707,26 +911,36 @@ mod tests {
     }
 
     #[test]
-    fn replan_shrinks_to_whole_nodes_and_finds_a_layout() {
+    fn replan_shrinks_to_whole_nodes_and_falls_back_to_runnable_subset() {
         // Lose 3 GPUs of a 64-GPU cluster: 61 usable -> 7 whole nodes.
         // 56 GPUs force a factor of 7 into dp, which can never divide
-        // gbs 2048 — an honest "no runnable layout" report, not an error.
+        // gbs 2048; 6 and 5 nodes are just as hopeless (factors 3 and 5).
+        // The fallback must land on 4 nodes — the largest runnable
+        // subset — and report the 3 idled survivors' worth of nodes.
         let j = job("llama65b", 8);
         let rep = replan(&j, 3, &A100, Rank::Mfu, 0).unwrap();
-        assert_eq!(rep.degraded.cluster.gpus, 56);
         assert_eq!(rep.full.cluster.gpus, 64);
-        assert!(rep.new.is_none(), "gbs 2048 is indivisible on 7 nodes");
+        assert_eq!(rep.usable_gpus, 56);
+        assert_eq!(rep.degraded.cluster.gpus, 32, "largest runnable subset is 4 nodes");
+        let new = rep.new.expect("the fallback must find the 4-node plan");
+        assert!(new.mfu > 0.2);
+        // The fallback plan IS the 32-GPU exhaustive plan, bit for bit.
+        let j32 = job("llama65b", 4);
+        let (plan32, _) = plan_exhaustive_stats(&j32, &A100).unwrap();
+        assert_eq!(new.v.layout, plan32.v.layout);
+        assert_eq!(new.mfu.to_bits(), plan32.predicted_mfu.to_bits());
         // The "was" row is exactly the full-cluster exhaustive plan.
         let (full_plan, _) = plan_exhaustive_stats(&j, &A100).unwrap();
         assert_eq!(rep.old.unwrap().v.layout, full_plan.v.layout);
         let txt = render_replan(&rep);
         assert!(txt.contains("64 -> 56 usable GPUs (7 whole nodes"), "{txt}");
-        assert!(txt.contains("no runnable layout on the surviving cluster"), "{txt}");
-        assert!(!txt.contains("migration: "), "{txt}");
-        // Losing 4 whole nodes lands on a power-of-two cluster where a
-        // layout does exist, with a positive, finite migration estimate.
+        assert!(txt.contains("fallback: running on 4 of 7 usable nodes, 24 surviving GPUs idled"), "{txt}");
+        assert!(txt.contains("migration: "), "{txt}");
+        // Losing 4 whole nodes lands directly on a power-of-two cluster:
+        // no fallback, no fallback line — the legacy report bytes.
         let rep = replan(&j, 32, &A100, Rank::Mfu, 0).unwrap();
         assert_eq!(rep.degraded.cluster.gpus, 32);
+        assert_eq!(rep.usable_gpus, 32);
         let new = rep.new.expect("65B must still run on 4 nodes");
         assert!(new.mfu > 0.2);
         assert!(rep.moved_bytes > 0.0 && rep.moved_bytes.is_finite());
@@ -735,7 +949,65 @@ mod tests {
         assert!(txt.contains("64 -> 32 usable GPUs (4 whole nodes"), "{txt}");
         assert!(txt.contains("was: "), "{txt}");
         assert!(txt.contains("now: "), "{txt}");
+        assert!(!txt.contains("fallback: "), "{txt}");
         assert!(txt.contains("migration: "), "{txt}");
+    }
+
+    #[test]
+    fn assigned_plan_reduces_homogeneous_and_places_mixed_fleets() {
+        use crate::sim::H100;
+        let j = job("llama65b", 8);
+        // Homogeneous assignment: identical plan bits and render bytes.
+        let hwa = HwAssignment::parse("a100").unwrap();
+        let (legacy, _) = plan_exhaustive_stats_ranked(&j, &A100, Rank::Mfu).unwrap();
+        let (via, placement, _) =
+            plan_exhaustive_stats_assigned(&j, &hwa, Rank::Mfu, 0).unwrap();
+        assert_eq!(legacy.v.layout, via.v.layout);
+        assert_eq!(legacy.predicted_mfu.to_bits(), via.predicted_mfu.to_bits());
+        assert_eq!(
+            render_plan_assigned(&j, &via, &hwa, &placement, Rank::Mfu),
+            render_plan_ranked(&j, &legacy, &A100, Rank::Mfu),
+        );
+        // Mixed assignment: the plan sits between the homogeneous ends,
+        // and the render names the winning placement.
+        let mixed = HwAssignment::parse("a100:4,h100:4").unwrap();
+        let (mplan, mplacement, stats) =
+            plan_exhaustive_stats_assigned(&j, &mixed, Rank::Mfu, 0).unwrap();
+        let (h100_plan, _) = plan_exhaustive_stats_ranked(&j, &H100, Rank::Mfu).unwrap();
+        // Placement search scanned both orders, so stats cover >= 2x one
+        // scan's space.
+        assert!(stats.total > 0);
+        let txt = render_plan_assigned(&j, &mplan, &mixed, &mplacement, Rank::Mfu);
+        assert!(txt.contains("placement: "), "{txt}");
+        assert!(
+            txt.contains("placement: a100:4,h100:4") || txt.contains("placement: h100:4,a100:4"),
+            "{txt}"
+        );
+        // Best mixed step time can't beat all-H100's optimum.
+        assert!(mplan.predicted_step_s >= h100_plan.predicted_step_s);
+        // The effective rank renders its extra line under the assignment.
+        let (eplan, eplace, _) =
+            plan_exhaustive_stats_assigned(&j, &mixed, Rank::EffectiveMfu, 0).unwrap();
+        let etxt = render_plan_assigned(&j, &eplan, &mixed, &eplace, Rank::EffectiveMfu);
+        assert!(etxt.contains("effective:"), "{etxt}");
+        assert!(etxt.contains("% availability"), "{etxt}");
+    }
+
+    #[test]
+    fn assigned_replan_reduces_homogeneous_and_handles_mixed() {
+        let j = job("llama65b", 8);
+        let hwa = HwAssignment::parse("a100").unwrap();
+        let a = render_replan(&replan(&j, 32, &A100, Rank::Mfu, 0).unwrap());
+        let b = render_replan(&replan_assigned(&j, 32, &hwa, Rank::Mfu, 0).unwrap());
+        assert_eq!(a, b, "homogeneous assignment must reduce to the legacy replan");
+        // Mixed: same fallback discipline, assignment-aware argmax.
+        let mixed = HwAssignment::parse("a100:4,h100:4").unwrap();
+        let rep = replan_assigned(&j, 3, &mixed, Rank::Mfu, 0).unwrap();
+        assert_eq!(rep.usable_gpus, 56);
+        assert_eq!(rep.degraded.cluster.gpus, 32, "fallback to the largest runnable subset");
+        assert!(rep.new.is_some());
+        let txt = render_replan(&rep);
+        assert!(txt.contains("fallback: running on 4 of 7 usable nodes"), "{txt}");
     }
 
     #[test]

@@ -70,9 +70,12 @@ use std::time::{Duration, Instant};
 
 use crate::layout::{validate, Job, Kernel, Layout, Schedule};
 use crate::model::arch::preset;
-use crate::planner::{plan_by_rules, plan_exhaustive_stats, render_plan, render_replan, replan};
-use crate::sim::{cache, failure, parse_hw, persist, render_predict_mem, Hardware};
-use crate::sweep::{by_name, compare_best, report, run_jobs, Rank};
+use crate::planner::{
+    plan_by_rules, plan_exhaustive_stats, plan_exhaustive_stats_assigned, render_plan,
+    render_plan_assigned, render_replan, replan, replan_assigned,
+};
+use crate::sim::{cache, failure, parse_hw, persist, render_predict_mem, Hardware, HwAssignment};
+use crate::sweep::{by_name, compare_best_assigned, report, run_jobs_assigned, Rank};
 use crate::topo::Cluster;
 use crate::util::fault;
 use crate::util::json::Json;
@@ -333,6 +336,19 @@ fn resolve_hw_name(name: &str) -> Result<Hardware, String> {
     Ok(parse_hw(name)?.from_overrides())
 }
 
+/// Per-stage assignment resolution for the commands that take the
+/// heterogeneous axis (`plan`/`sweep`/`compare`/`replan`), mirroring the
+/// CLI's `--hw-map`/`--hw` precedence: `"hw_map"` wins over `"hw"`,
+/// default `a100`. A bare preset name stays on the homogeneous
+/// (bit-identical legacy) path in every consumer.
+fn resolve_hw_map(req: &Req) -> Result<HwAssignment, String> {
+    let spec = match req.str("hw_map")? {
+        Some(s) => s,
+        None => req.str("hw")?.unwrap_or("a100"),
+    };
+    Ok(HwAssignment::parse(spec)?.from_overrides())
+}
+
 fn parse_schedules(spec: &str) -> Result<Vec<Schedule>, String> {
     let scheds: Vec<Schedule> = spec
         .split(',')
@@ -356,8 +372,20 @@ fn plan_one(req: &Req) -> Result<String, String> {
     let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
     let nodes = req.usize("nodes")?.unwrap_or(8);
     let gbs = req.usize("gbs")?.unwrap_or_else(|| Job::paper_gbs(&arch));
-    let hw = resolve_hw_name(req.str("hw")?.unwrap_or("a100"))?;
+    let hwa = resolve_hw_map(req)?;
     let job = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
+    let Some(hw) = hwa.as_homogeneous() else {
+        // Per-stage fleets are exhaustive-only (the §5 rules assume one
+        // hardware) — same constraint and renderer as the CLI.
+        if !req.bool("exhaustive")? {
+            return Err(
+                "a heterogeneous hardware assignment needs \"exhaustive\": true".to_string()
+            );
+        }
+        let (plan, placement, _) =
+            plan_exhaustive_stats_assigned(&job, &hwa, Rank::Mfu, 0).map_err(|e| e.to_string())?;
+        return Ok(render_plan_assigned(&job, &plan, &hwa, &placement, Rank::Mfu));
+    };
     let plan = if req.bool("exhaustive")? {
         plan_exhaustive_stats(&job, &hw).map_err(|e| e.to_string())?.0
     } else {
@@ -367,7 +395,7 @@ fn plan_one(req: &Req) -> Result<String, String> {
 }
 
 fn do_plan(req: &Req) -> Result<String, String> {
-    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])?;
+    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "hw_map", "exhaustive"])?;
     plan_one(req)
 }
 
@@ -396,7 +424,7 @@ fn do_plan_batch(req: &Req) -> Result<Json, String> {
         };
         let r = Req { map };
         let out = r
-            .check_keys(&["model", "nodes", "gbs", "hw", "exhaustive"])
+            .check_keys(&["model", "nodes", "gbs", "hw", "hw_map", "exhaustive"])
             .and_then(|()| plan_one(&r))
             .map_err(|m| format!("jobs[{i}]: {m}"))?;
         outputs.push(Json::Str(out));
@@ -444,19 +472,19 @@ fn do_predict_mem(req: &Req) -> Result<String, String> {
 /// `replan` over the wire — same renderer as `plx replan`, so response
 /// `output` bytes equal CLI stdout.
 fn do_replan(req: &Req) -> Result<String, String> {
-    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "lost", "rank"])?;
+    req.check_keys(&["cmd", "model", "nodes", "gbs", "hw", "hw_map", "lost", "rank"])?;
     let model = req.need_str("model")?;
     let arch = preset(model).ok_or_else(|| format!("unknown model '{model}'"))?;
     let nodes = req.usize("nodes")?.unwrap_or(8);
     let gbs = req.usize("gbs")?.unwrap_or_else(|| Job::paper_gbs(&arch));
-    let hw = resolve_hw_name(req.str("hw")?.unwrap_or("a100"))?;
+    let hwa = resolve_hw_map(req)?;
     let rank = match req.str("rank")? {
         Some(r) => Rank::parse(r).ok_or_else(|| format!("unknown rank '{r}' (mfu, effective-mfu)"))?,
         None => Rank::Mfu,
     };
     let lost = req.usize("lost")?.ok_or_else(|| "need \"lost\"".to_string())?;
     let job = Job::new(arch, Cluster::dgx_a100(nodes), gbs);
-    let rep = replan(&job, lost, &hw, rank, 0).map_err(|e| e.to_string())?;
+    let rep = replan_assigned(&job, lost, &hwa, rank, 0).map_err(|e| e.to_string())?;
     Ok(render_replan(&rep))
 }
 
@@ -504,36 +532,42 @@ fn do_simulate_run(req: &Req) -> Result<String, String> {
 }
 
 fn do_sweep(req: &Req) -> Result<String, String> {
-    req.check_keys(&["cmd", "preset", "hw", "schedule", "top"])?;
+    req.check_keys(&["cmd", "preset", "hw", "hw_map", "schedule", "top"])?;
     let name = req.need_str("preset")?;
     let mut p = by_name(name).ok_or_else(|| format!("unknown preset '{name}'"))?;
     if let Some(spec) = req.str("schedule")? {
         p.scheds = parse_schedules(spec)?;
     }
-    let hw = resolve_hw_name(req.str("hw")?.unwrap_or("a100"))?;
+    let hwa = resolve_hw_map(req)?;
     let top = req.usize("top")?;
     let with_sp = p.sps.len() > 1;
-    let result = run_jobs(&p, &hw, 0);
+    // A homogeneous assignment delegates to the legacy single-hardware
+    // scan inside `run_jobs_assigned` — default bytes cannot move.
+    let result = run_jobs_assigned(&p, &hwa, 0);
     Ok(report::render_top(&result, with_sp, top))
 }
 
 fn do_compare(req: &Req) -> Result<String, String> {
-    req.check_keys(&["cmd", "preset", "hw"])?;
+    req.check_keys(&["cmd", "preset", "hw", "hw_map"])?;
     let name = req.need_str("preset")?;
     let p = by_name(name).ok_or_else(|| format!("unknown preset '{name}'"))?;
-    let hw_spec = req.str("hw")?.unwrap_or("a100,h100");
-    let hws: Vec<(String, Hardware)> = hw_spec
-        .split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(|n| resolve_hw_name(n).map(|hw| (n.to_string(), hw)))
-        .collect::<Result<_, _>>()?;
-    if hws.is_empty() {
+    // Same list reading as `plx compare`: consecutive `name:count`
+    // tokens in `"hw"` form one heterogeneous entry; an explicit
+    // `"hw_map"` is always a single entry.
+    let parsed: Vec<HwAssignment> = match req.str("hw_map")? {
+        Some(spec) => vec![HwAssignment::parse(spec)?],
+        None => HwAssignment::parse_list(req.str("hw")?.unwrap_or("a100,h100"))?,
+    };
+    let entries: Vec<(String, HwAssignment)> = parsed
+        .into_iter()
+        .map(|hwa| (hwa.label(), hwa.from_overrides()))
+        .collect();
+    if entries.is_empty() {
         return Err("\"hw\" needs at least one preset name".to_string());
     }
     // Bound-driven winners, same as the CLI: prune instead of
     // materializing each hardware's sweep table.
-    let winners = compare_best(&p, &hws, 0);
+    let winners = compare_best_assigned(&p, &entries, 0, Rank::Mfu);
     Ok(report::render_compare_best(p.name, &p.job(), &winners))
 }
 
@@ -1129,6 +1163,38 @@ mod tests {
             r#"{"cmd":"simulate-run","model":"llama13b","nodes":1,"tp":2,"pp":2,"mb":2,"days":7,"seed":42}"#,
         );
         assert_eq!(r, again);
+    }
+
+    #[test]
+    fn hw_map_requests_take_the_assignment_axis() {
+        let state = State::new();
+        // A homogeneous "hw_map" is byte-identical to the plain "hw"
+        // request (both reduce to the legacy single-hardware path).
+        let a = reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1,"hw":"a100"}"#);
+        let b = reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1,"hw_map":"a100"}"#);
+        let ja = Json::parse(&a).unwrap();
+        let jb = Json::parse(&b).unwrap();
+        assert_eq!(ja.get("output").as_str().unwrap(), jb.get("output").as_str().unwrap());
+        // A heterogeneous assignment without "exhaustive" is a
+        // bad_request (the rule-based planner assumes one hardware).
+        let r = reply(&state, r#"{"cmd":"plan","model":"llama13b","nodes":1,"hw":"a100:4,h100:4"}"#);
+        assert!(r.contains("exhaustive"), "{r}");
+        // With "exhaustive" it plans and reports the chosen placement.
+        let r = reply(
+            &state,
+            r#"{"cmd":"plan","model":"llama13b","nodes":1,"hw":"a100:4,h100:4","exhaustive":true}"#,
+        );
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true), "{r}");
+        assert!(j.get("output").as_str().unwrap().contains("placement: "), "{r}");
+        // replan and sweep take the axis too; bad specs error cleanly.
+        let r = reply(
+            &state,
+            r#"{"cmd":"replan","model":"llama13b","nodes":2,"lost":1,"hw_map":"a100:8,h100:8"}"#,
+        );
+        assert_eq!(Json::parse(&r).unwrap().get("ok").as_bool(), Some(true), "{r}");
+        let r = reply(&state, r#"{"cmd":"sweep","preset":"13b-2k","hw_map":"warp"}"#);
+        assert!(r.contains("unknown hardware"), "{r}");
     }
 
     #[test]

@@ -73,9 +73,32 @@ pub const H100: Hardware = Hardware {
     storage_bw: 2.0e9,
 };
 
+/// Frontier's AMD MI250X, modeled at GCD granularity (one GCD is the
+/// scheduling unit, matching how Dash et al., arXiv 2312.12705, port
+/// Megatron-style training to Frontier): ~191 TFLOP/s dense bf16 per
+/// GCD, 64 GB HBM2e at 1.6 TB/s peak (~1.3 TB/s achievable, the same
+/// achievable/peak ratio the NVIDIA presets use), Infinity Fabric
+/// intra-node (~100 GB/s per collective direction between GCDs), and
+/// Slingshot-11 inter-node (200 Gb/s NIC => 25 GB/s per GPU pair =
+/// 12.5 GB/s per GCD). Host-side latency/launch/workspace and the
+/// reliability/storage constants carry over from the A100 testbed.
+pub const MI250X: Hardware = Hardware {
+    peak_matmul_flops: 191e12,
+    hbm_bytes: 64.0 * 1e9,
+    hbm_bw: 1.3e12,
+    nvlink_bw: 100e9,
+    ib_bw: 12.5e9,
+    coll_latency_s: 20e-6,
+    launch_overhead_s: 4.5e-6,
+    workspace_bytes: 5.0 * 1e9,
+    mtbf_h: 30000.0,
+    storage_bw: 2.0e9,
+};
+
 /// The hardware registry behind the `--hw` CLI axis: every named preset,
 /// in the order error messages and docs list them.
-pub const HW_PRESETS: [(&str, Hardware); 2] = [("a100", A100), ("h100", H100)];
+pub const HW_PRESETS: [(&str, Hardware); 3] =
+    [("a100", A100), ("h100", H100), ("mi250x", MI250X)];
 
 /// Look up a hardware preset by its `--hw` name.
 pub fn hw_preset(name: &str) -> Option<Hardware> {
@@ -135,6 +158,172 @@ impl Hardware {
             storage_bw: cal("PLX_HW_STORAGE_BW", self.storage_bw),
         }
     }
+}
+
+/// A per-pipeline-stage hardware assignment: an ordered list of
+/// `(name, hardware, count)` segments, e.g. `a100:4,h100:4`. Stage `s`
+/// of a `pp`-stage pipeline maps to the segment containing slot
+/// `floor(s·total/pp)` of the concatenated counts, so any `pp` divides
+/// proportionally over the segments (8 slots over pp=4 gives two slots
+/// per stage). A single count-less name (`--hw a100`) is the
+/// homogeneous assignment and [`HwAssignment::as_homogeneous`] lets
+/// every caller delegate to the bit-identical single-`Hardware` path.
+#[derive(Debug, Clone)]
+pub struct HwAssignment {
+    /// Ordered `(preset name, resolved hardware, slot count)` segments.
+    pub segments: Vec<(String, Hardware, usize)>,
+}
+
+impl HwAssignment {
+    /// The single-segment assignment equivalent to a plain `--hw name`.
+    pub fn homogeneous(name: &str, hw: Hardware) -> HwAssignment {
+        HwAssignment { segments: vec![(name.to_string(), hw, 1)] }
+    }
+
+    /// Parse an assignment spec: `name` (homogeneous), or a
+    /// comma-separated list of `name[:count]` segments. Counts default
+    /// to 1 and must be positive; names resolve via [`parse_hw`].
+    pub fn parse(spec: &str) -> Result<HwAssignment, String> {
+        let mut segments = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty segment in hardware assignment '{spec}'"));
+            }
+            let (name, count) = match part.split_once(':') {
+                Some((n, c)) => {
+                    let count: usize = c.parse().map_err(|_| {
+                        format!("bad stage count '{c}' in hardware assignment '{spec}'")
+                    })?;
+                    (n, count)
+                }
+                None => (part, 1),
+            };
+            if count == 0 {
+                return Err(format!("zero stage count in hardware assignment '{spec}'"));
+            }
+            segments.push((name.to_string(), parse_hw(name)?, count));
+        }
+        if segments.is_empty() {
+            return Err(format!("empty hardware assignment '{spec}'"));
+        }
+        Ok(HwAssignment { segments })
+    }
+
+    /// Apply `PLX_HW_*` env overrides to every segment (the assignment
+    /// mirror of [`Hardware::from_overrides`]; identity with a clean
+    /// environment).
+    pub fn from_overrides(&self) -> HwAssignment {
+        HwAssignment {
+            segments: self
+                .segments
+                .iter()
+                .map(|(n, hw, c)| (n.clone(), hw.from_overrides(), *c))
+                .collect(),
+        }
+    }
+
+    /// Total slot count across segments.
+    pub fn total_slots(&self) -> usize {
+        self.segments.iter().map(|(_, _, c)| c).sum()
+    }
+
+    /// `Some(hw)` iff every segment's hardware is bit-identical — the
+    /// delegation test that keeps homogeneous assignments on the legacy
+    /// single-`Hardware` path (and therefore byte-identical).
+    pub fn as_homogeneous(&self) -> Option<Hardware> {
+        let first = self.segments[0].1;
+        if self.segments.iter().all(|(_, hw, _)| hw.bits() == first.bits()) {
+            Some(first)
+        } else {
+            None
+        }
+    }
+
+    /// The hardware of pipeline stage `s` of `pp` (proportional slot
+    /// mapping: stage `s` reads the segment owning slot
+    /// `floor(s·total/pp)`).
+    pub fn stage_hw(&self, s: usize, pp: usize) -> Hardware {
+        let total = self.total_slots();
+        let idx = s * total / pp;
+        let mut cum = 0usize;
+        for (_, hw, c) in &self.segments {
+            cum += c;
+            if idx < cum {
+                return *hw;
+            }
+        }
+        self.segments[self.segments.len() - 1].1
+    }
+
+    /// The full per-stage hardware vector for a `pp`-stage pipeline.
+    pub fn stage_hardwares(&self, pp: usize) -> Vec<Hardware> {
+        (0..pp).map(|s| self.stage_hw(s, pp)).collect()
+    }
+
+    /// Canonical spec string (`a100`, or `a100:4,h100:4`).
+    pub fn label(&self) -> String {
+        if self.segments.len() == 1 && self.segments[0].2 == 1 {
+            return self.segments[0].0.clone();
+        }
+        self.segments
+            .iter()
+            .map(|(n, _, c)| format!("{n}:{c}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Same reordered segments, new order — the placement-search helper.
+    /// Returns a new assignment whose segments follow `order` (indices
+    /// into `self.segments`).
+    pub fn permuted(&self, order: &[usize]) -> HwAssignment {
+        HwAssignment { segments: order.iter().map(|&i| self.segments[i].clone()).collect() }
+    }
+
+    /// Split a `compare`-style comma list into assignment entries:
+    /// consecutive `name:count` tokens merge into one heterogeneous
+    /// entry, bare names stand alone — `a100,h100` is two entries,
+    /// `a100:4,h100:4` is one mixed fleet, `a100,h100:4,mi250x:4` is
+    /// `a100` plus the mixed fleet. Shared by `plx compare` and the
+    /// serve protocol so both read a spec identically.
+    pub fn parse_list(spec: &str) -> Result<Vec<HwAssignment>, String> {
+        let mut specs: Vec<String> = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                return Err(format!("empty segment in hardware list '{spec}'"));
+            }
+            if tok.contains(':') {
+                if let Some(last) = specs.last_mut() {
+                    if last.contains(':') {
+                        last.push(',');
+                        last.push_str(tok);
+                        continue;
+                    }
+                }
+            }
+            specs.push(tok.to_string());
+        }
+        specs.iter().map(|s| HwAssignment::parse(s)).collect()
+    }
+}
+
+/// Mean per-GPU peak matmul rate across a per-stage assignment — the
+/// heterogeneous MFU denominator (achieved FLOPs over the *fleet's*
+/// aggregate peak). An all-bit-equal vector returns the common value
+/// directly: the mean of `pp` equal floats rounds when `pp` is not a
+/// power of two, and the all-equal reduction must be exact for the
+/// homogeneous-delegation property to hold bitwise.
+pub fn assigned_peak_mean(hws: &[Hardware]) -> f64 {
+    let p0 = hws[0].peak_matmul_flops;
+    if hws.iter().all(|h| h.peak_matmul_flops.to_bits() == p0.to_bits()) {
+        return p0;
+    }
+    let mut sum = 0.0f64;
+    for h in hws {
+        sum += h.peak_matmul_flops;
+    }
+    sum / hws.len() as f64
 }
 
 /// Ring all-reduce time for `bytes` over `n` ranks at `bw` bytes/s.
@@ -244,6 +433,86 @@ mod tests {
         // which owns a whole process and can mutate the environment.)
         assert_eq!(A100.from_overrides().bits(), A100.bits());
         assert_eq!(H100.from_overrides().bits(), H100.bits());
+    }
+
+    #[test]
+    fn mi250x_constants_bit_exact() {
+        // GCD-level numbers from the Frontier port (Dash et al.,
+        // arXiv 2312.12705); a public contract like the other presets
+        // (table2_mi250x golden + pysim mirror).
+        assert_eq!(MI250X.peak_matmul_flops.to_bits(), 191e12_f64.to_bits());
+        assert_eq!(MI250X.hbm_bytes.to_bits(), (64.0 * 1e9_f64).to_bits());
+        assert_eq!(MI250X.hbm_bw.to_bits(), 1.3e12_f64.to_bits());
+        assert_eq!(MI250X.nvlink_bw.to_bits(), 100e9_f64.to_bits());
+        assert_eq!(MI250X.ib_bw.to_bits(), 12.5e9_f64.to_bits());
+        // Host-side + reliability constants carry over from the testbed.
+        assert_eq!(MI250X.coll_latency_s.to_bits(), A100.coll_latency_s.to_bits());
+        assert_eq!(MI250X.launch_overhead_s.to_bits(), A100.launch_overhead_s.to_bits());
+        assert_eq!(MI250X.workspace_bytes.to_bits(), A100.workspace_bytes.to_bits());
+        assert_eq!(MI250X.mtbf_h.to_bits(), A100.mtbf_h.to_bits());
+        assert_eq!(MI250X.storage_bw.to_bits(), A100.storage_bw.to_bits());
+        // A GCD is slower and smaller than an A100 on every axis.
+        assert!(MI250X.peak_matmul_flops < A100.peak_matmul_flops);
+        assert!(MI250X.hbm_bytes < A100.hbm_bytes);
+        assert!(MI250X.nvlink_bw < A100.nvlink_bw);
+        assert!(MI250X.ib_bw < A100.ib_bw);
+        assert_eq!(hw_preset("mi250x").unwrap().bits(), MI250X.bits());
+    }
+
+    #[test]
+    fn hw_assignment_parses_and_labels() {
+        let homo = HwAssignment::parse("a100").unwrap();
+        assert_eq!(homo.label(), "a100");
+        assert_eq!(homo.as_homogeneous().unwrap().bits(), A100.bits());
+
+        let het = HwAssignment::parse("a100:4,h100:4").unwrap();
+        assert_eq!(het.label(), "a100:4,h100:4");
+        assert!(het.as_homogeneous().is_none());
+        assert_eq!(het.total_slots(), 8);
+
+        // Equal silicon under different names is still homogeneous —
+        // delegation keys on bits, not labels.
+        let same = HwAssignment::parse("a100:2,a100:6").unwrap();
+        assert_eq!(same.as_homogeneous().unwrap().bits(), A100.bits());
+
+        assert!(HwAssignment::parse("a100:0,h100:4").is_err());
+        assert!(HwAssignment::parse("a100:x").is_err());
+        assert!(HwAssignment::parse("b200:4").is_err());
+        assert!(HwAssignment::parse("").is_err());
+    }
+
+    #[test]
+    fn hw_assignment_stage_mapping_is_proportional() {
+        let het = HwAssignment::parse("a100:4,h100:4").unwrap();
+        // pp == total slots: 1:1.
+        let hws = het.stage_hardwares(8);
+        for s in 0..4 {
+            assert_eq!(hws[s].bits(), A100.bits());
+            assert_eq!(hws[s + 4].bits(), H100.bits());
+        }
+        // pp < total: proportional split (2 slots per stage).
+        let hws = het.stage_hardwares(4);
+        assert_eq!(hws[0].bits(), A100.bits());
+        assert_eq!(hws[1].bits(), A100.bits());
+        assert_eq!(hws[2].bits(), H100.bits());
+        assert_eq!(hws[3].bits(), H100.bits());
+        // pp > total: slots stretch (stage s reads slot floor(s*8/16)).
+        let hws = het.stage_hardwares(16);
+        for s in 0..8 {
+            assert_eq!(hws[s].bits(), A100.bits());
+            assert_eq!(hws[s + 8].bits(), H100.bits());
+        }
+        // Count-less multi-segment spec: counts default to 1.
+        let pair = HwAssignment::parse("a100,h100").unwrap();
+        let hws = pair.stage_hardwares(4);
+        assert_eq!(hws[0].bits(), A100.bits());
+        assert_eq!(hws[1].bits(), A100.bits());
+        assert_eq!(hws[2].bits(), H100.bits());
+        assert_eq!(hws[3].bits(), H100.bits());
+        // Permutation reorders segments.
+        let rev = het.permuted(&[1, 0]);
+        assert_eq!(rev.label(), "h100:4,a100:4");
+        assert_eq!(rev.stage_hw(0, 8).bits(), H100.bits());
     }
 
     #[test]

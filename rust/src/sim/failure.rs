@@ -151,6 +151,54 @@ pub fn effective_mfu_upper_bound(job: &Job, v: &ValidLayout, hw: &Hardware) -> f
     crate::sim::mfu_upper_bound(job, v, hw) * availability_upper_bound(job, v.topo.world(), hw)
 }
 
+/// The weakest-node failure profile of a per-stage hardware assignment:
+/// the minimum `mtbf_h` and minimum `storage_bw` across the stage
+/// hardwares (keep-first strict `<` folds, so an all-equal assignment
+/// returns `hws[0]`'s exact bits). A mixed fleet fails at its
+/// least-reliable node's rate, and a checkpoint is only durable once the
+/// slowest writer finishes — both are min-reductions, not means.
+///
+/// The other fields are copied from `hws[0]` so the result can flow
+/// through the unchanged homogeneous expressions ([`availability_of`],
+/// [`availability_upper_bound`]); only `mtbf_h`/`storage_bw` are read by
+/// the failure model.
+pub fn weakest_hw(hws: &[Hardware]) -> Hardware {
+    let mut mtbf_h = hws[0].mtbf_h;
+    let mut storage_bw = hws[0].storage_bw;
+    for hw in &hws[1..] {
+        if hw.mtbf_h < mtbf_h {
+            mtbf_h = hw.mtbf_h;
+        }
+        if hw.storage_bw < storage_bw {
+            storage_bw = hw.storage_bw;
+        }
+    }
+    Hardware { mtbf_h, storage_bw, ..hws[0] }
+}
+
+/// [`availability_of`] under a per-stage assignment: the weakest node's
+/// rate and bandwidth through the identical homogeneous expressions, so
+/// all-equal assignments reduce to the homogeneous path bit for bit.
+pub fn availability_of_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> f64 {
+    availability_of(job, v, &weakest_hw(hws))
+}
+
+/// [`effective_mfu`] under a per-stage assignment.
+pub fn effective_mfu_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware], mfu: f64) -> f64 {
+    mfu * availability_of_assigned(job, v, hws)
+}
+
+/// Admissible upper bound on [`effective_mfu_assigned`]: the assigned
+/// MFU bound times the availability bound at the weakest node. Both
+/// factors dominate their exact counterparts bitwise (the second via
+/// the same monotone [`availability`] expression), and IEEE
+/// multiplication of non-negative values is monotone, so pruning on the
+/// product stays lossless.
+pub fn effective_mfu_upper_bound_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> f64 {
+    crate::sim::mfu_upper_bound_assigned(job, v, hws)
+        * availability_upper_bound(job, v.topo.world(), &weakest_hw(hws))
+}
+
 /// One deterministic failure-trace replay: the accounting
 /// [`simulate_run`] reports.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -434,6 +482,58 @@ mod tests {
                 }
                 assert!(runnable > 20, "{name}: only {runnable} runnable layouts");
             }
+        }
+    }
+
+    #[test]
+    fn assigned_failure_model_is_the_weakest_node() {
+        use crate::sim::MI250X;
+        let j = job("llama13b", 8);
+        let v = layout13(&j);
+        // All-equal assignments reduce to the homogeneous path bitwise.
+        for hw in [A100, H100, MI250X] {
+            let hws = vec![hw; 4];
+            assert_eq!(
+                availability_of_assigned(&j, &v, &hws).to_bits(),
+                availability_of(&j, &v, &hw).to_bits(),
+            );
+            assert_eq!(
+                effective_mfu_assigned(&j, &v, &hws, 0.47).to_bits(),
+                effective_mfu(&j, &v, &hw, 0.47).to_bits(),
+            );
+        }
+        // A mixed fleet inherits the worst MTBF and the worst storage
+        // bandwidth, regardless of which stage holds them.
+        let flaky = Hardware { mtbf_h: 5000.0, ..A100 };
+        let slow_disk = Hardware { storage_bw: 0.5e9, ..H100 };
+        let weak = weakest_hw(&[A100, flaky, slow_disk, H100]);
+        assert_eq!(weak.mtbf_h.to_bits(), 5000.0f64.to_bits());
+        assert_eq!(weak.storage_bw.to_bits(), 0.5e9f64.to_bits());
+        let worst = Hardware { mtbf_h: 5000.0, storage_bw: 0.5e9, ..A100 };
+        assert_eq!(
+            availability_of_assigned(&j, &v, &[A100, flaky, slow_disk, H100]).to_bits(),
+            availability_of(&j, &v, &worst).to_bits(),
+        );
+        // One dead node disables the model for the whole assignment.
+        let dead = Hardware { mtbf_h: 0.0, ..A100 };
+        assert_eq!(
+            availability_of_assigned(&j, &v, &[A100, A100, dead, A100]).to_bits(),
+            1.0f64.to_bits(),
+        );
+        // The assigned effective-MFU bound dominates the assigned exact
+        // value on a genuinely mixed assignment.
+        let l = Layout {
+            tp: 1, pp: 4, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false,
+            sched: Schedule::OneF1B,
+        };
+        let v4 = validate(&j, &l).unwrap();
+        let mixed = [A100, H100, MI250X, A100];
+        if let Outcome::Ok { mfu, .. } = crate::sim::evaluate_assigned(&j, &v4, &mixed) {
+            let eff = effective_mfu_assigned(&j, &v4, &mixed, mfu);
+            let ub = effective_mfu_upper_bound_assigned(&j, &v4, &mixed);
+            assert!(ub >= eff, "bound {ub} < effective {eff}");
+        } else {
+            panic!("mixed llama13b pp=4 layout must run");
         }
     }
 

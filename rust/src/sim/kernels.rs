@@ -55,14 +55,48 @@ pub fn perf(k: Kernel) -> KernelPerf {
     }
 }
 
+/// Names already warned about by [`cal`] — one stderr line per variable
+/// per config load (same precedent as the fault-probability clamp
+/// warning in `util::fault`), so a typo like `PLX_HW_IB_BW=25GB` cannot
+/// silently fall back to the default on every one of the thousands of
+/// lookups a sweep performs.
+static CAL_WARNED: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
+
+/// Drop the warned-variable registry so the next unparseable lookup
+/// warns again — "per config load" for harnesses that mutate the
+/// environment mid-process (tests, the calibration sweep).
+pub fn cal_warn_reset() {
+    CAL_WARNED.lock().unwrap().clear();
+}
+
+/// How many distinct variables have warned since the last reset
+/// (observability hook for the warn-once tests).
+pub fn cal_warn_count() -> usize {
+    CAL_WARNED.lock().unwrap().len()
+}
+
 /// Calibration override hook: constants can be swept from the shell
-/// (`PLX_CAL_*`) by the calibration harness; defaults are the shipped
-/// calibration (EXPERIMENTS.md §Calibration).
+/// (`PLX_CAL_*`, and `PLX_HW_*` via `Hardware::from_overrides`) by the
+/// calibration harness; defaults are the shipped calibration
+/// (EXPERIMENTS.md §Calibration). A variable that is set but does not
+/// parse as a number keeps the default and warns once per variable per
+/// config load ([`cal_warn_reset`]).
 pub(crate) fn cal(name: &str, default: f64) -> f64 {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    let raw = match std::env::var(name) {
+        Ok(v) => v,
+        Err(_) => return default,
+    };
+    match raw.parse() {
+        Ok(v) => v,
+        Err(_) => {
+            let mut warned = CAL_WARNED.lock().unwrap();
+            if !warned.iter().any(|n| n == name) {
+                eprintln!("plx: warning: {name}='{raw}' is not a number; using default");
+                warned.push(name.to_string());
+            }
+            default
+        }
+    }
 }
 
 /// Shipped calibration defaults for the `dense_matmul_eff` shape model

@@ -187,6 +187,102 @@ pub fn per_gpu_memory_combine(
     }
 }
 
+/// One pipeline stage's memory breakdown: statics are stage-independent
+/// (the parameter shard is uniform), activations follow the stage's own
+/// in-flight peak, logits live on the head stage only, and the
+/// checkpointing recompute working set is charged where the homogeneous
+/// model charges it (the stage-0 payload). `workspace` comes from the
+/// stage's *own* hardware — the per-stage capacity check compares this
+/// total against that hardware's `hbm_bytes`.
+pub fn per_gpu_memory_stage(
+    job: &Job,
+    v: &ValidLayout,
+    hw: &Hardware,
+    art: &schedule::ScheduleArtifact,
+    acts: f64,
+    acts_full: f64,
+    s: usize,
+) -> MemoryBreakdown {
+    let a = &job.arch;
+    let l = &v.layout;
+    let n = a.param_count() as f64;
+    let shard = n / (l.tp * l.pp) as f64;
+
+    let weights = 2.0 * shard;
+    let grads = 2.0 * shard;
+    let optimizer = 12.0 * shard / v.topo.dp as f64;
+
+    let vst = l.sched.vstages();
+    let layers_per_chunk = (a.layers / (l.pp * vst)) as f64;
+    let in_flight = art.peak_in_flight(s) as f64;
+    let mut activations = acts * layers_per_chunk * in_flight;
+    if l.ckpt && s == 0 {
+        activations += acts_full;
+    }
+
+    let logits = if s == l.pp - 1 {
+        2.0 * 4.0 * (l.mb * a.seq * a.vocab) as f64 / l.tp as f64
+    } else {
+        0.0
+    };
+
+    MemoryBreakdown {
+        weights,
+        grads,
+        optimizer,
+        activations,
+        logits,
+        workspace: hw.workspace_bytes,
+    }
+}
+
+/// Per-stage capacity check for a heterogeneous assignment (`hws[s]` is
+/// stage `s`'s hardware): `Ok` carries the breakdown of the
+/// heaviest-activation stage (keep-first strict-`>` argmax over
+/// `activations + logits`, reproducing the homogeneous stage-0-vs-head
+/// comparison bitwise when the assignment is all-equal); `Err` carries
+/// `(required, budget)` of the worst offender — the keep-first
+/// largest-total stage among those exceeding their own `hbm_bytes`.
+pub fn per_gpu_memory_assigned_with(
+    job: &Job,
+    v: &ValidLayout,
+    hws: &[Hardware],
+    art: &schedule::ScheduleArtifact,
+    acts: f64,
+    acts_full: f64,
+) -> Result<MemoryBreakdown, (f64, f64)> {
+    assert_eq!(hws.len(), v.layout.pp, "one Hardware per pipeline stage");
+    let mut report = per_gpu_memory_stage(job, v, &hws[0], art, acts, acts_full, 0);
+    let mut report_metric = report.activations + report.logits;
+    let mut oom: Option<(f64, f64)> = None;
+    for (s, hw) in hws.iter().enumerate() {
+        let mem = if s == 0 {
+            report
+        } else {
+            per_gpu_memory_stage(job, v, hw, art, acts, acts_full, s)
+        };
+        let metric = mem.activations + mem.logits;
+        if metric > report_metric {
+            report = mem;
+            report_metric = metric;
+        }
+        let total = mem.total();
+        if total > hw.hbm_bytes {
+            let worse = match oom {
+                Some((req, _)) => total > req,
+                None => true,
+            };
+            if worse {
+                oom = Some((total, hw.hbm_bytes));
+            }
+        }
+    }
+    match oom {
+        Some((required, budget)) => Err((required, budget)),
+        None => Ok(report),
+    }
+}
+
 /// The pre-artifact accounting path, retained verbatim as the in-job
 /// baseline for `benches/perf_schedule.rs` and the equivalence tests:
 /// materializes a fresh `Vec<Op>` stream per consulted stage, exactly

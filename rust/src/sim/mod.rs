@@ -15,7 +15,10 @@ pub mod persist;
 pub mod schedule;
 pub mod step_time;
 
-pub use cluster::{hw_preset, hw_preset_names, parse_hw, Hardware, A100, H100, HW_PRESETS};
+pub use cluster::{
+    assigned_peak_mean, hw_preset, hw_preset_names, parse_hw, Hardware, HwAssignment, A100, H100,
+    HW_PRESETS, MI250X,
+};
 pub use memory::MemoryBreakdown;
 pub use schedule::Schedule;
 pub use step_time::StepBreakdown;
@@ -112,6 +115,65 @@ pub fn evaluate(job: &Job, v: &ValidLayout, hw: &Hardware) -> Outcome {
         let m = mfu::mfu(&job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t);
         Outcome::Ok { step_time_s: t, mfu: m, mem, step }
     })
+}
+
+/// Evaluate one layout under a per-pipeline-stage hardware assignment.
+///
+/// A homogeneous assignment (every segment bit-equal) **delegates to
+/// [`evaluate`]** — the untouched legacy path, so `--hw a100` output
+/// stays byte-identical and keeps flowing through the evaluate-outcome
+/// memo. A heterogeneous one runs [`evaluate_assigned`] on the
+/// stage-mapped hardware vector.
+pub fn evaluate_with_assignment(job: &Job, v: &ValidLayout, hwa: &HwAssignment) -> Outcome {
+    match hwa.as_homogeneous() {
+        Some(hw) => evaluate(job, v, &hw),
+        None => evaluate_assigned(job, v, &hwa.stage_hardwares(v.layout.pp)),
+    }
+}
+
+/// The heterogeneous evaluation core (`hws[p]` is stage `p`'s hardware,
+/// `hws.len() == pp`): the same factored pipeline as [`evaluate`] with a
+/// per-stage layer-cost stage (one memoized entry per *distinct*
+/// hardware — mixed fleets multiply stage-memo reuse), per-stage memory
+/// capacity checks, the heterogeneous makespan executor, and the
+/// fleet-mean peak in the MFU denominator. Not routed through the
+/// evaluate-outcome memo (the persisted cache key is a single hardware's
+/// bits); the layer-stage and schedule artifacts still share.
+///
+/// With an all-equal `hws` every expression reduces exactly to the
+/// homogeneous path's — the delegation property test calls this core
+/// directly and asserts bitwise equality against [`evaluate`].
+pub fn evaluate_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> Outcome {
+    let gate = kernels::GateKey::new(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb);
+    if !gate.open() {
+        return Outcome::KernelUnavailable;
+    }
+    // Activation bytes are hardware-independent; read them off stage 0's
+    // layer-cost entry (memoized like every other stage lookup).
+    let lc = step_time::layer_costs(job, v, &hws[0]);
+    schedule::with_artifact(v.layout.sched, v.layout.pp, v.num_micro, |art| {
+        match memory::per_gpu_memory_assigned_with(job, v, hws, art, lc.act_bytes, lc.act_bytes_full)
+        {
+            Err((required, budget)) => Outcome::Oom { required, budget },
+            Ok(mem) => {
+                let step = step_time::step_time_assigned_with(job, v, hws, art);
+                let t = step.total();
+                let m =
+                    mfu::mfu(&job.arch, job.gbs, v.topo.world(), assigned_peak_mean(hws), t);
+                Outcome::Ok { step_time_s: t, mfu: m, mem, step }
+            }
+        }
+    })
+}
+
+/// [`mfu_upper_bound`] for a per-stage assignment: the admissible
+/// [`step_time::step_time_lower_bound_assigned`] through the same
+/// fleet-mean-peak MFU as [`evaluate_assigned`] (MFU is monotone
+/// decreasing in step time at a fixed peak, so bound ≤ exact step time
+/// gives bound-MFU ≥ exact MFU, bitwise).
+pub fn mfu_upper_bound_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> f64 {
+    let lb = step_time::step_time_lower_bound_assigned(job, v, hws);
+    mfu::mfu(&job.arch, job.gbs, v.topo.world(), assigned_peak_mean(hws), lb)
 }
 
 /// The `plx predict-mem` report: per-component memory table plus the
@@ -344,6 +406,129 @@ mod tests {
             }
             assert!(runnable > 20, "{name}: only {runnable} runnable layouts");
         }
+    }
+
+    fn hetero_space(job: &Job) -> Vec<ValidLayout> {
+        use crate::layout::enumerate;
+        enumerate(
+            job,
+            &[1, 2],
+            &[1, 2, 3, 4],
+            &[1, 2],
+            &[false, true],
+            &[Kernel::Flash2Rms, Kernel::Flash2, Kernel::Torch],
+            &[false, true],
+            &[crate::layout::Schedule::OneF1B, crate::layout::Schedule::Interleaved(2)],
+        )
+    }
+
+    #[test]
+    fn all_equal_assignment_is_bitwise_identical_to_homogeneous() {
+        // Satellite acceptance: the heterogeneous core with an all-equal
+        // per-stage vector must reproduce the homogeneous path bit for
+        // bit — evaluate (every Outcome payload), memory, step breakdown,
+        // and both bounds — on all three presets. pp=3 is in the space on
+        // purpose: a mean-of-peaks denominator would round there.
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let layouts = hetero_space(&job);
+        assert!(layouts.len() > 100, "space too small: {}", layouts.len());
+        for hw in [A100, H100, MI250X] {
+            for v in &layouts {
+                let hws = vec![hw; v.layout.pp];
+                let homo = evaluate(&job, v, &hw);
+                let het = evaluate_assigned(&job, v, &hws);
+                match (homo, het) {
+                    (
+                        Outcome::Ok { step_time_s: a, mfu: ma, mem: mema, step: stepa },
+                        Outcome::Ok { step_time_s: b, mfu: mb, mem: memb, step: stepb },
+                    ) => {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{:?}", v.layout);
+                        assert_eq!(ma.to_bits(), mb.to_bits(), "{:?}", v.layout);
+                        assert_eq!(mema.total().to_bits(), memb.total().to_bits(), "{:?}", v.layout);
+                        assert_eq!(
+                            mema.activations.to_bits(),
+                            memb.activations.to_bits(),
+                            "{:?}",
+                            v.layout
+                        );
+                        assert_eq!(mema.logits.to_bits(), memb.logits.to_bits(), "{:?}", v.layout);
+                        for (x, y) in [
+                            (stepa.compute, stepb.compute),
+                            (stepa.tp_comm, stepb.tp_comm),
+                            (stepa.pp_comm, stepb.pp_comm),
+                            (stepa.bubble, stepb.bubble),
+                            (stepa.dp_comm, stepb.dp_comm),
+                            (stepa.optimizer, stepb.optimizer),
+                        ] {
+                            assert_eq!(x.to_bits(), y.to_bits(), "{:?}", v.layout);
+                        }
+                    }
+                    (
+                        Outcome::Oom { required: a, budget: ba },
+                        Outcome::Oom { required: b, budget: bb },
+                    ) => {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{:?}", v.layout);
+                        assert_eq!(ba.to_bits(), bb.to_bits(), "{:?}", v.layout);
+                    }
+                    (Outcome::KernelUnavailable, Outcome::KernelUnavailable) => {}
+                    (h, e) => panic!("{:?}: variants diverge ({h:?} vs {e:?})", v.layout),
+                }
+                // Bounds reduce exactly too.
+                let lb_homo = step_time::step_time_lower_bound(&job, v, &hw);
+                let lb_het = step_time::step_time_lower_bound_assigned(&job, v, &hws);
+                assert_eq!(lb_homo.to_bits(), lb_het.to_bits(), "{:?}", v.layout);
+                let ub_homo = mfu_upper_bound(&job, v, &hw);
+                let ub_het = mfu_upper_bound_assigned(&job, v, &hws);
+                assert_eq!(ub_homo.to_bits(), ub_het.to_bits(), "{:?}", v.layout);
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_lower_bound_is_admissible_bitwise() {
+        // Tentpole acceptance: across mixed a100/h100/mi250x per-stage
+        // assignments, the per-stage-minimum bound never exceeds the
+        // heterogeneous step time (bitwise <=, not epsilon).
+        let presets = [A100, H100, MI250X];
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let mut runnable = 0usize;
+        for v in &hetero_space(&job) {
+            // Deterministic mixed assignment: rotate the preset list.
+            for offset in 0..presets.len() {
+                let hws: Vec<Hardware> =
+                    (0..v.layout.pp).map(|p| presets[(p + offset) % presets.len()]).collect();
+                if let Outcome::Ok { step_time_s, mfu, .. } = evaluate_assigned(&job, v, &hws) {
+                    let lb = step_time::step_time_lower_bound_assigned(&job, v, &hws);
+                    assert!(lb <= step_time_s, "{:?}: bound {lb} > total {step_time_s}", v.layout);
+                    let ub = mfu_upper_bound_assigned(&job, v, &hws);
+                    assert!(ub >= mfu, "{:?}: mfu bound {ub} < mfu {mfu}", v.layout);
+                    runnable += 1;
+                }
+            }
+        }
+        assert!(runnable > 50, "only {runnable} runnable mixed evaluations");
+    }
+
+    #[test]
+    fn slow_silicon_stage_drags_the_assignment() {
+        // A mixed a100/mi250x pipeline must be slower than all-A100 and
+        // faster than all-MI250X (the straggler stage dominates, but
+        // fast stages still help the closing terms).
+        let job = Job::new(preset("llama13b").unwrap(), Cluster::dgx_a100(8), 2048);
+        let l = Layout {
+            tp: 1, pp: 4, mb: 1, ckpt: false, kernel: Kernel::Flash2Rms, sp: false,
+            sched: crate::layout::Schedule::OneF1B,
+        };
+        let v = validate(&job, &l).unwrap();
+        let t = |hws: &[Hardware]| match evaluate_assigned(&job, &v, hws) {
+            Outcome::Ok { step_time_s, .. } => step_time_s,
+            o => panic!("not runnable: {o:?}"),
+        };
+        let all_fast = t(&vec![A100; 4]);
+        let all_slow = t(&vec![MI250X; 4]);
+        let mixed = t(&[A100, A100, MI250X, MI250X]);
+        assert!(all_fast < mixed, "{all_fast} vs {mixed}");
+        assert!(mixed < all_slow, "{mixed} vs {all_slow}");
     }
 
     #[test]

@@ -95,13 +95,43 @@ pub fn makespan(pp: usize, vstages: usize, m: usize, scheds: &[Vec<Op>], c: &OpC
         ops.extend(s.iter().map(|&op| stream::pack(op)));
         bounds.push(ops.len());
     }
-    execute_packed(pp, vstages, m, &ops, &bounds, c)
+    execute_packed(pp, vstages, m, &ops, &bounds, |_| *c)
 }
 
 /// The sweep hot path: execute a pre-built [`ScheduleArtifact`]'s packed
 /// streams directly (no materialization, thread-local scratch only).
 pub fn makespan_artifact(art: &ScheduleArtifact, c: &OpCosts) -> Option<Makespan> {
-    execute_packed(art.pp(), art.vstages(), art.m(), art.ops(), art.bounds(), c)
+    execute_packed(art.pp(), art.vstages(), art.m(), art.ops(), art.bounds(), |_| *c)
+}
+
+/// Heterogeneous execution: physical stage `p`'s ops are priced from
+/// `cs[p]` (one [`OpCosts`] per stage — the slow-silicon stage becomes
+/// the visible straggler). The dependency structure, visit order, and
+/// float expressions are those of [`makespan`]; with all-equal `cs` the
+/// result is bit-identical to the uniform executor (both run through
+/// the same [`run_ready`] body, property-tested below).
+pub fn makespan_stages(
+    pp: usize,
+    vstages: usize,
+    m: usize,
+    scheds: &[Vec<Op>],
+    cs: &[OpCosts],
+) -> Option<Makespan> {
+    assert_eq!(cs.len(), pp, "one OpCosts per physical stage");
+    let mut ops: Vec<PackedOp> = Vec::with_capacity(scheds.iter().map(|s| s.len()).sum());
+    let mut bounds: Vec<usize> = Vec::with_capacity(pp + 1);
+    bounds.push(0);
+    for s in scheds {
+        ops.extend(s.iter().map(|&op| stream::pack(op)));
+        bounds.push(ops.len());
+    }
+    execute_packed(pp, vstages, m, &ops, &bounds, |p| cs[p])
+}
+
+/// [`makespan_stages`] over a pre-built artifact (the hetero sweep path).
+pub fn makespan_artifact_stages(art: &ScheduleArtifact, cs: &[OpCosts]) -> Option<Makespan> {
+    assert_eq!(cs.len(), art.pp(), "one OpCosts per physical stage");
+    execute_packed(art.pp(), art.vstages(), art.m(), art.ops(), art.bounds(), |p| cs[p])
 }
 
 /// Reusable executor scratch: dependency tables with explicit done flags
@@ -148,12 +178,12 @@ fn execute_packed(
     m: usize,
     ops: &[PackedOp],
     bounds: &[usize],
-    c: &OpCosts,
+    cost_of: impl Fn(usize) -> OpCosts,
 ) -> Option<Makespan> {
     SCRATCH.with(|s| match s.try_borrow_mut() {
-        Ok(mut s) => run_ready(&mut s, pp, vstages, m, ops, bounds, c),
+        Ok(mut s) => run_ready(&mut s, pp, vstages, m, ops, bounds, &cost_of),
         // Re-entrant call (never on the sweep path): fresh scratch.
-        Err(_) => run_ready(&mut Scratch::new(), pp, vstages, m, ops, bounds, c),
+        Err(_) => run_ready(&mut Scratch::new(), pp, vstages, m, ops, bounds, &cost_of),
     })
 }
 
@@ -173,7 +203,7 @@ fn run_ready(
     m: usize,
     ops: &[PackedOp],
     bounds: &[usize],
-    c: &OpCosts,
+    cost_of: &impl Fn(usize) -> OpCosts,
 ) -> Option<Makespan> {
     let nvs = pp * vstages;
     s.fwd_t.clear();
@@ -201,6 +231,9 @@ fn run_ready(
     while qi < s.queue.len() {
         let p = s.queue[qi];
         qi += 1;
+        // Per-stage cost model (uniform callers return the same value
+        // for every p, so the expressions below are unchanged).
+        let c = cost_of(p);
         loop {
             if bounds[p] + s.pos[p] >= bounds[p + 1] {
                 s.queued[p] = false;
@@ -709,6 +742,81 @@ mod tests {
                 let art = ScheduleArtifact::build(sched, pp, m);
                 let via_art = makespan_artifact(&art, &c).unwrap();
                 let via_vec = makespan(pp, sched.vstages(), m, &streams(sched, pp, m), &c).unwrap();
+                assert_eq!(via_art.total.to_bits(), via_vec.total.to_bits());
+                for p in 0..pp {
+                    assert_eq!(via_art.busy[p].to_bits(), via_vec.busy[p].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_equal_stage_costs_match_uniform_executor_bitwise() {
+        // The hetero entry with one identical OpCosts per stage must be
+        // the same function as the uniform executor — the delegation
+        // property the homogeneous goldens rest on.
+        prop::check_cases(0x4E7E60, 128, |rng| {
+            let pp = rng.range(1, 9);
+            let sched = match rng.range(0, 3) {
+                0 => Schedule::OneF1B,
+                1 => Schedule::GPipe,
+                _ => Schedule::Interleaved(rng.range(2, 5)),
+            };
+            let m = pp * rng.range(1, 9);
+            let c = random_costs(rng);
+            let scheds = streams(sched, pp, m);
+            let uni = makespan(pp, sched.vstages(), m, &scheds, &c);
+            let het = makespan_stages(pp, sched.vstages(), m, &scheds, &vec![c; pp]);
+            match (uni, het) {
+                (Some(u), Some(h)) => {
+                    assert_eq!(u.total.to_bits(), h.total.to_bits());
+                    for p in 0..pp {
+                        assert_eq!(u.busy[p].to_bits(), h.busy[p].to_bits());
+                    }
+                }
+                (u, h) => panic!("verdicts diverge: {:?} vs {:?}", u.is_some(), h.is_some()),
+            }
+        });
+    }
+
+    #[test]
+    fn slow_stage_is_the_visible_straggler() {
+        // One stage priced 3x slower dominates busy time and stretches
+        // the makespan beyond the uniform run.
+        let fast = OpCosts { fwd: 1.0, bwd: 2.0, head_fwd: 0.0, head_bwd: 0.0, p2p: 0.0 };
+        let slow = OpCosts { fwd: 3.0, bwd: 6.0, ..fast };
+        let (pp, m) = (4usize, 8usize);
+        let scheds = streams(Schedule::OneF1B, pp, m);
+        let uni = makespan(pp, 1, m, &scheds, &fast).unwrap();
+        for straggler in 0..pp {
+            let mut cs = vec![fast; pp];
+            cs[straggler] = slow;
+            let het = makespan_stages(pp, 1, m, &scheds, &cs).unwrap();
+            assert!(het.total > uni.total, "straggler {straggler}");
+            let busiest =
+                (0..pp).max_by(|&a, &b| het.busy[a].partial_cmp(&het.busy[b]).unwrap()).unwrap();
+            assert_eq!(busiest, straggler);
+        }
+    }
+
+    #[test]
+    fn artifact_stages_path_matches_vec_stages_path() {
+        for sched in [Schedule::OneF1B, Schedule::GPipe, Schedule::Interleaved(2)] {
+            for pp in [1usize, 2, 4] {
+                let m = 4 * pp;
+                let cs: Vec<OpCosts> = (0..pp)
+                    .map(|p| OpCosts {
+                        fwd: 0.9 + p as f64 * 0.3,
+                        bwd: 2.1 + p as f64 * 0.5,
+                        head_fwd: 0.4,
+                        head_bwd: 0.8,
+                        p2p: 0.05,
+                    })
+                    .collect();
+                let art = ScheduleArtifact::build(sched, pp, m);
+                let via_art = makespan_artifact_stages(&art, &cs).unwrap();
+                let via_vec =
+                    makespan_stages(pp, sched.vstages(), m, &streams(sched, pp, m), &cs).unwrap();
                 assert_eq!(via_art.total.to_bits(), via_vec.total.to_bits());
                 for p in 0..pp {
                     assert_eq!(via_art.busy[p].to_bits(), via_vec.busy[p].to_bits());

@@ -25,7 +25,8 @@ pub mod stream;
 
 pub use gen::{gpipe, interleaved_1f1b, one_f1b, ops, peak_in_flight};
 pub use makespan::{
-    makespan, makespan_artifact, makespan_reference, simulate_slots, Makespan, OpCosts,
+    makespan, makespan_artifact, makespan_artifact_stages, makespan_reference, makespan_stages,
+    simulate_slots, Makespan, OpCosts,
 };
 pub use stream::{with_artifact, ScheduleArtifact};
 

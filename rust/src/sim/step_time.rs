@@ -535,6 +535,161 @@ pub fn step_time_lower_bound(job: &Job, v: &ValidLayout, hw: &Hardware) -> f64 {
     compute + tp_comm + dp_comm + optimizer
 }
 
+/// Per-stage factored costs for a heterogeneous assignment: stage `p`'s
+/// chunk/head/TP/p2p costs are priced on `hws[p]` (one memoized
+/// [`layer_costs`] call per *distinct* hardware — heterogeneity
+/// multiplies stage-memo reuse, it does not defeat it). The p2p hop is
+/// priced at the receiving stage's fabric, matching how the makespan
+/// charges the receive to the consumer's stream.
+pub fn stage_costs_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> Vec<StageCosts> {
+    hws.iter().map(|hw| combine_layer_costs(&layer_costs(job, v, hw), job, v)).collect()
+}
+
+/// [`step_time`] for a per-stage hardware assignment (`hws[p]` is the
+/// hardware of physical stage `p`; `hws.len() == pp`). Runs the
+/// heterogeneous makespan executor (unmemoized — the per-stage cost
+/// vector is not a [`crate::sim::cache`] key) and closes with the
+/// bottleneck attribution over the straggler stage's own costs. With an
+/// all-equal `hws` every expression reduces to the homogeneous path's —
+/// bit-identity is property-tested here and in the pysim HETERO suite.
+pub fn step_time_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> StepBreakdown {
+    schedule::with_artifact(v.layout.sched, v.layout.pp, v.num_micro, |art| {
+        step_time_assigned_with(job, v, hws, art)
+    })
+}
+
+/// [`step_time_assigned`] against a pre-built artifact (so the hetero
+/// evaluate pipeline shares one artifact between memory and step time,
+/// like the homogeneous path does).
+pub fn step_time_assigned_with(
+    job: &Job,
+    v: &ValidLayout,
+    hws: &[Hardware],
+    art: &schedule::ScheduleArtifact,
+) -> StepBreakdown {
+    assert_eq!(hws.len(), v.layout.pp, "one Hardware per pipeline stage");
+    let cs = stage_costs_assigned(job, v, hws);
+    let costs: Vec<OpCosts> = cs
+        .iter()
+        .map(|c| OpCosts {
+            fwd: c.chunk_fwd + c.tp_chunk,
+            bwd: c.chunk_bwd + c.tp_chunk,
+            head_fwd: c.head_fwd,
+            head_bwd: c.head_bwd,
+            p2p: c.p2p_hop,
+        })
+        .collect();
+    let ms = schedule::makespan_artifact_stages(art, &costs)
+        .expect("validated schedule deadlocked");
+    finish_breakdown_assigned(job, v, hws, &cs, &ms)
+}
+
+/// The heterogeneous breakdown tail: bottleneck attribution over the
+/// straggler's own per-stage costs, then each schedule-independent
+/// closing term (DP reduction, optimizer) charged at its *slowest*
+/// stage — a data-parallel collective completes when the weakest
+/// participant does. Keep-first strict-`>` folds throughout, so
+/// all-equal inputs reproduce the homogeneous expressions bitwise.
+fn finish_breakdown_assigned(
+    job: &Job,
+    v: &ValidLayout,
+    hws: &[Hardware],
+    cs: &[StageCosts],
+    ms: &schedule::Makespan,
+) -> StepBreakdown {
+    let l = &v.layout;
+    let m = v.num_micro;
+    let vst = l.sched.vstages();
+
+    let mut b = 0usize;
+    for p in 1..l.pp {
+        if ms.busy[p] > ms.busy[b] {
+            b = p;
+        }
+    }
+    let c = &cs[b];
+
+    let mut comp_micro = vst as f64 * (c.chunk_fwd + c.chunk_bwd);
+    if b == l.pp - 1 {
+        comp_micro += c.head_fwd + c.head_bwd;
+    }
+    let tp_micro = 2.0 * vst as f64 * c.tp_chunk;
+    let pp_micro = if l.pp > 1 {
+        let nf = if b > 0 { vst } else { vst - 1 };
+        let nb = if b < l.pp - 1 { vst } else { vst - 1 };
+        (nf + nb) as f64 * c.p2p_hop
+    } else {
+        0.0
+    };
+
+    let compute = m as f64 * comp_micro;
+    let tp_comm = m as f64 * tp_micro;
+    let pp_comm = m as f64 * pp_micro;
+    let bubble = ms.total - ms.busy[b];
+
+    let (mut dp_comm, mut optimizer) = dp_and_optimizer(job, v, &hws[0]);
+    for hw in &hws[1..] {
+        let (d, o) = dp_and_optimizer(job, v, hw);
+        if d > dp_comm {
+            dp_comm = d;
+        }
+        if o > optimizer {
+            optimizer = o;
+        }
+    }
+
+    StepBreakdown { compute, tp_comm, pp_comm, bubble, dp_comm, optimizer }
+}
+
+/// Admissible lower bound on `step_time_assigned(..).total()`: every
+/// closed-form term is taken at its per-stage **minimum**-cost hardware,
+/// so no bottleneck assignment can undercut it.
+///
+/// Admissibility chain, term by term (all keep-first strict-`<` folds):
+/// * compute: `min_p (chunk_fwd+chunk_bwd) ≤` the bottleneck stage's
+///   value, multiplication by `m·vst ≥ 0` is monotone, and the
+///   breakdown's compute only ever *adds* the LM-head extra;
+/// * tp_comm: same argument on `tp_chunk` (charged schedule-free);
+/// * dp/optimizer: the breakdown charges the per-stage **max**; the
+///   bound takes the per-stage min, and `min ≤ max`;
+/// * the partial sums associate exactly like `total()` with `pp_comm`
+///   and `bubble` at zero, and IEEE-754 addition is monotone — so
+///   `bound ≤ total` holds bitwise (property-tested across mixed
+///   a100/h100/mi250x in Rust and the gating pysim HETERO suite).
+///
+/// With an all-equal assignment every fold keeps the first of equal
+/// values, reducing each expression to [`step_time_lower_bound`]'s.
+pub fn step_time_lower_bound_assigned(job: &Job, v: &ValidLayout, hws: &[Hardware]) -> f64 {
+    let cs = stage_costs_assigned(job, v, hws);
+    let vst = v.layout.sched.vstages();
+    let mut comp_min = cs[0].chunk_fwd + cs[0].chunk_bwd;
+    let mut tp_min = cs[0].tp_chunk;
+    for c in &cs[1..] {
+        let comp = c.chunk_fwd + c.chunk_bwd;
+        if comp < comp_min {
+            comp_min = comp;
+        }
+        if c.tp_chunk < tp_min {
+            tp_min = c.tp_chunk;
+        }
+    }
+    let comp_micro = vst as f64 * comp_min;
+    let compute = v.num_micro as f64 * comp_micro;
+    let tp_micro = 2.0 * vst as f64 * tp_min;
+    let tp_comm = v.num_micro as f64 * tp_micro;
+    let (mut dp_min, mut opt_min) = dp_and_optimizer(job, v, &hws[0]);
+    for hw in &hws[1..] {
+        let (d, o) = dp_and_optimizer(job, v, hw);
+        if d < dp_min {
+            dp_min = d;
+        }
+        if o < opt_min {
+            opt_min = o;
+        }
+    }
+    compute + tp_comm + dp_min + opt_min
+}
+
 /// The PR-4 bound without the TP term, retained verbatim so
 /// `benches/perf_schedule.rs` can report the evaluated-fraction
 /// improvement of the tighter bound (and so the `loose ≤ tight` ordering

@@ -37,7 +37,7 @@
 use std::cmp::Ordering;
 
 use crate::layout::{Job, LayoutSpace, ValidLayout};
-use crate::sim::{failure, Hardware, Outcome};
+use crate::sim::{failure, Hardware, HwAssignment, Outcome};
 use crate::sweep::presets::SweepPreset;
 
 /// Tie-breaking discipline of the argmax fold: which of two rows with
@@ -285,6 +285,239 @@ fn argmax_core(
     }
     flush(&mut window, &mut best);
     (best, stats)
+}
+
+/// [`argmax_ranked`] over a per-stage hardware assignment. A homogeneous
+/// assignment takes the legacy scan verbatim (same bound, same memoized
+/// outcomes, same bits); a mixed one runs the same windowed
+/// branch-and-bound fold with the assignment-aware (bound, score) pair:
+///
+/// * memory prune: if parameters + optimizer state alone overflow *any*
+///   stage's HBM, that stage OOMs and the whole layout is `Oom` —
+///   `model_state_bytes` is a lower bound on every stage's total for
+///   that stage's hardware, so the prune stays lossless;
+/// * MFU bound: [`crate::sim::mfu_upper_bound_assigned`] — per-stage
+///   *minimum* op costs through the homogeneous bound expressions, ≥
+///   the true assigned MFU bitwise (no stage is cheaper than the
+///   cheapest stage);
+/// * effective-MFU bound: the above × the weakest-node availability
+///   bound ([`failure::effective_mfu_upper_bound_assigned`]).
+pub fn argmax_ranked_assigned(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hwa: &HwAssignment,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+    rank: Rank,
+) -> (Option<Best>, QueryStats) {
+    if let Some(hw) = hwa.as_homogeneous() {
+        return argmax_ranked(job, layouts, &hw, pred, tie, jobs, rank);
+    }
+    match rank {
+        Rank::Mfu => argmax_core_assigned(
+            job,
+            layouts,
+            hwa,
+            pred,
+            tie,
+            jobs,
+            crate::sim::mfu_upper_bound_assigned,
+            |_, _, _, mfu| mfu,
+        ),
+        Rank::EffectiveMfu => argmax_core_assigned(
+            job,
+            layouts,
+            hwa,
+            pred,
+            tie,
+            jobs,
+            failure::effective_mfu_upper_bound_assigned,
+            failure::effective_mfu_assigned,
+        ),
+    }
+}
+
+/// The assignment-aware twin of [`argmax_core`]: the identical windowed
+/// fold with per-layout stage hardware vectors (`pp` varies per layout,
+/// so the vector is materialized per candidate). The lossless-scan
+/// argument holds verbatim: `bound(v, hws) ≥ score(v, hws)` bitwise for
+/// every admitted layout.
+#[allow(clippy::too_many_arguments)]
+fn argmax_core_assigned(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hwa: &HwAssignment,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+    bound: impl Fn(&Job, &ValidLayout, &[Hardware]) -> f64,
+    score: impl Fn(&Job, &ValidLayout, &[Hardware], f64) -> f64,
+) -> (Option<Best>, QueryStats) {
+    let mut best: Option<Best> = None;
+    let mut stats = QueryStats::default();
+    let mut window: Vec<ValidLayout> = Vec::with_capacity(PRUNE_WINDOW);
+    let mut flush = |window: &mut Vec<ValidLayout>, best: &mut Option<Best>| {
+        let batch = std::mem::take(window);
+        for row in crate::sweep::engine::evaluate_space_assigned(job, batch.into_iter(), hwa, jobs)
+        {
+            if let Outcome::Ok { mfu, step_time_s, .. } = row.outcome {
+                let hws = hwa.stage_hardwares(row.v.layout.pp);
+                let s = score(job, &row.v, &hws, mfu);
+                let wins = match (&*best, tie) {
+                    (None, _) => true,
+                    (Some(b), Tie::KeepFirst) => s > b.score,
+                    (Some(b), Tie::KeepLast) => s.total_cmp(&b.score) != Ordering::Less,
+                };
+                if wins {
+                    *best = Some(Best { v: row.v, mfu, step_time_s, score: s });
+                }
+            }
+        }
+    };
+    for v in layouts {
+        if !pred(&v) {
+            continue;
+        }
+        stats.total += 1;
+        let gate = crate::sim::kernels::GateKey::new(
+            v.layout.kernel,
+            job.arch.heads,
+            v.layout.tp,
+            v.layout.mb,
+        );
+        if !gate.open() {
+            stats.gate_pruned += 1;
+            continue;
+        }
+        let hws = hwa.stage_hardwares(v.layout.pp);
+        if hws
+            .iter()
+            .any(|hw| crate::sim::memory::model_state_bytes(job, &v, hw) > hw.hbm_bytes)
+        {
+            stats.mem_pruned += 1;
+            continue;
+        }
+        if let Some(b) = &best {
+            let ub = bound(job, &v, &hws);
+            let dominated = match tie {
+                Tie::KeepFirst => ub <= b.score,
+                Tie::KeepLast => ub < b.score,
+            };
+            if dominated {
+                stats.bound_pruned += 1;
+                continue;
+            }
+        }
+        stats.evaluated += 1;
+        window.push(v);
+        if window.len() >= PRUNE_WINDOW {
+            flush(&mut window, &mut best);
+        }
+    }
+    flush(&mut window, &mut best);
+    (best, stats)
+}
+
+/// The distinct stage-to-silicon placements of an assignment: every
+/// unique reordering of its segments, in lexicographic index order with
+/// first-occurrence dedup (two segments with the same preset produce the
+/// same assignment — only distinct labels survive). A homogeneous or
+/// single-segment assignment has exactly one placement: itself.
+pub fn placements(hwa: &HwAssignment) -> Vec<HwAssignment> {
+    let k = hwa.segments.len();
+    if k <= 1 || hwa.as_homogeneous().is_some() {
+        return vec![hwa.clone()];
+    }
+    let mut order: Vec<usize> = (0..k).collect();
+    let mut seen: Vec<String> = Vec::new();
+    let mut out = Vec::new();
+    // Lexicographic permutation walk (next_permutation), starting from
+    // the identity so the user-spelled placement is always first.
+    loop {
+        let candidate = hwa.permuted(&order);
+        let label = candidate.label();
+        if !seen.contains(&label) {
+            seen.push(label);
+            out.push(candidate);
+        }
+        // Advance `order` to the next lexicographic permutation.
+        let Some(i) = (0..k - 1).rev().find(|&i| order[i] < order[i + 1]) else {
+            break;
+        };
+        let j = (i + 1..k).rev().find(|&j| order[j] > order[i]).unwrap();
+        order.swap(i, j);
+        order[i + 1..].reverse();
+    }
+    out
+}
+
+/// Placement search: run the assigned argmax once per unique segment
+/// reordering and keep the best-scoring placement (keep-first strict
+/// `>` over the placement walk, so the user-spelled order wins ties —
+/// including the homogeneous case, where there is exactly one
+/// placement and this is a plain [`argmax_ranked_assigned`] call).
+/// Returns the winning placement with its winner, plus summed stats.
+pub fn argmax_placed<I: Iterator<Item = ValidLayout>>(
+    job: &Job,
+    space: impl Fn() -> I,
+    hwa: &HwAssignment,
+    pred: impl Fn(&ValidLayout) -> bool,
+    tie: Tie,
+    jobs: usize,
+    rank: Rank,
+) -> (Option<(HwAssignment, Best)>, QueryStats) {
+    let mut winner: Option<(HwAssignment, Best)> = None;
+    let mut stats = QueryStats::default();
+    for placement in placements(hwa) {
+        let (best, st) =
+            argmax_ranked_assigned(job, space(), &placement, &pred, tie, jobs, rank);
+        stats.total += st.total;
+        stats.gate_pruned += st.gate_pruned;
+        stats.mem_pruned += st.mem_pruned;
+        stats.bound_pruned += st.bound_pruned;
+        stats.evaluated += st.evaluated;
+        if let Some(b) = best {
+            let wins = match &winner {
+                None => true,
+                Some((_, w)) => b.score > w.score,
+            };
+            if wins {
+                winner = Some((placement, b));
+            }
+        }
+    }
+    (winner, stats)
+}
+
+/// [`compare_best_ranked`] where each entry is a per-stage assignment —
+/// homogeneous entries reduce to the legacy per-hardware scan inside
+/// [`argmax_ranked_assigned`].
+pub fn compare_best_assigned(
+    preset: &SweepPreset,
+    entries: &[(String, HwAssignment)],
+    jobs: usize,
+    rank: Rank,
+) -> Vec<(String, Option<Best>)> {
+    let job = preset.job();
+    entries
+        .iter()
+        .map(|(name, hwa)| {
+            let space = LayoutSpace::new(
+                &job,
+                &preset.tps,
+                &preset.pps,
+                &preset.mbs,
+                &preset.ckpts,
+                &preset.kernels,
+                &preset.sps,
+                &preset.scheds,
+            );
+            let (best, _) =
+                argmax_ranked_assigned(&job, space, hwa, |_| true, Tie::KeepLast, jobs, rank);
+            (name.clone(), best)
+        })
+        .collect()
 }
 
 /// Per-hardware winners for `plx compare`, through the pruned argmax —
@@ -561,6 +794,97 @@ mod tests {
             assert_eq!(sp.evaluated, sr.evaluated, "{}: {sp:?} vs {sr:?}", preset.name);
             assert_eq!(sp.bound_pruned, sr.bound_pruned, "{}", preset.name);
         }
+    }
+
+    #[test]
+    fn assigned_scan_is_lossless_and_homogeneous_reduces_exactly() {
+        use crate::sweep::engine::run_jobs_assigned;
+        let p = &main_presets()[0];
+        let job = p.job();
+        // Homogeneous assignment: the same scan — winner, bits, counters.
+        let hwa = HwAssignment::parse("a100").unwrap();
+        let (legacy, sl) =
+            argmax_ranked(&job, space_of(p), &A100, |_| true, Tie::KeepLast, 0, Rank::Mfu);
+        let (via, sa) =
+            argmax_ranked_assigned(&job, space_of(p), &hwa, |_| true, Tie::KeepLast, 0, Rank::Mfu);
+        let (l, a) = (legacy.unwrap(), via.unwrap());
+        assert_eq!(l.v.layout, a.v.layout);
+        assert_eq!(l.mfu.to_bits(), a.mfu.to_bits());
+        assert_eq!(sl.evaluated, sa.evaluated);
+        assert_eq!(sl.bound_pruned, sa.bound_pruned);
+        // Mixed assignment: pruned scan vs the materializing fold, both
+        // ranks.
+        let mixed = HwAssignment::parse("a100:4,h100:4").unwrap();
+        let rows = run_jobs_assigned(p, &mixed, 1);
+        let (best, stats) = argmax_ranked_assigned(
+            &job,
+            space_of(p),
+            &mixed,
+            |_| true,
+            Tie::KeepLast,
+            0,
+            Rank::Mfu,
+        );
+        assert_best_matches_row(&best, rows.best(), "mixed mfu");
+        assert!(stats.evaluated < stats.total, "assigned bound never fired: {stats:?}");
+        let (eff, _) = argmax_ranked_assigned(
+            &job,
+            space_of(p),
+            &mixed,
+            |_| true,
+            Tie::KeepLast,
+            0,
+            Rank::EffectiveMfu,
+        );
+        let mut want: Option<(&Row, f64)> = None;
+        for row in &rows.rows {
+            if let Some(mfu) = row.outcome.mfu() {
+                let hws = mixed.stage_hardwares(row.v.layout.pp);
+                let s = failure::effective_mfu_assigned(&job, &row.v, &hws, mfu);
+                if want.map(|(_, ws)| s.total_cmp(&ws) != Ordering::Less).unwrap_or(true) {
+                    want = Some((row, s));
+                }
+            }
+        }
+        let (wrow, wscore) = want.unwrap();
+        let b = eff.unwrap();
+        assert_eq!(b.v.layout, wrow.v.layout, "effective-mfu winner diverged");
+        assert_eq!(b.score.to_bits(), wscore.to_bits());
+    }
+
+    #[test]
+    fn placement_search_covers_unique_orders_and_never_loses() {
+        let p = &main_presets()[0];
+        let job = p.job();
+        // Unique-permutation enumeration: identity first, duplicates
+        // collapsed, homogeneous = singleton.
+        let mixed = HwAssignment::parse("a100:4,h100:4").unwrap();
+        let ps = placements(&mixed);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].label(), "a100:4,h100:4");
+        assert_eq!(ps[1].label(), "h100:4,a100:4");
+        assert_eq!(placements(&HwAssignment::parse("a100").unwrap()).len(), 1);
+        assert_eq!(placements(&HwAssignment::parse("a100:2,a100:6").unwrap()).len(), 1);
+        let three = HwAssignment::parse("a100:2,h100:2,a100:4").unwrap();
+        // 3! = 6 orders, but the two a100 segments are distinct labels
+        // (a100:2 vs a100:4) so all 6 survive... except orders that spell
+        // the same label. Here all 6 labels are distinct.
+        assert_eq!(placements(&three).len(), 6);
+        // The search never returns a placement worse than the spelled one.
+        let (spelled, _) = argmax_ranked_assigned(
+            &job,
+            space_of(p),
+            &mixed,
+            |_| true,
+            Tie::KeepLast,
+            0,
+            Rank::Mfu,
+        );
+        let (placed, _) =
+            argmax_placed(&job, || space_of(p), &mixed, |_| true, Tie::KeepLast, 0, Rank::Mfu);
+        let (pl, b) = placed.unwrap();
+        assert!(b.score >= spelled.unwrap().score);
+        assert!(ps.iter().any(|cand| cand.label() == pl.label()));
     }
 
     #[test]

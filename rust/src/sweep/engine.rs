@@ -27,7 +27,7 @@
 use std::collections::HashMap;
 
 use crate::layout::{Job, Layout, LayoutSpace, StageKey, ValidLayout};
-use crate::sim::{cache, Hardware, Outcome};
+use crate::sim::{cache, Hardware, HwAssignment, Outcome};
 use crate::sweep::presets::SweepPreset;
 use crate::util::pool;
 
@@ -212,6 +212,112 @@ pub fn evaluate_space(
         .into_iter()
         .map(|s| s.expect("every layout evaluates to exactly one row"))
         .collect()
+}
+
+/// [`run_jobs`] over a per-stage hardware assignment. A homogeneous
+/// assignment (all segments bit-equal) delegates to the legacy
+/// single-hardware path outright — same memoized outcomes, same bytes;
+/// only genuinely mixed assignments take the per-stage evaluator.
+pub fn run_jobs_assigned(preset: &SweepPreset, hwa: &HwAssignment, jobs: usize) -> SweepResult {
+    if let Some(hw) = hwa.as_homogeneous() {
+        return run_jobs(preset, &hw, jobs);
+    }
+    let job = preset.job();
+    let space = LayoutSpace::new(
+        &job,
+        &preset.tps,
+        &preset.pps,
+        &preset.mbs,
+        &preset.ckpts,
+        &preset.kernels,
+        &preset.sps,
+        &preset.scheds,
+    );
+    let rows = evaluate_space_assigned(&job, space, hwa, jobs);
+    SweepResult { preset_name: preset.name.to_string(), job, rows }
+}
+
+/// [`evaluate_space`] over a per-stage hardware assignment: the same
+/// stage-key bucketing and index scatter, with
+/// [`crate::sim::evaluate_assigned`] as the per-row evaluator (hetero
+/// outcomes are not routed through the persisted outcome memo — its key
+/// is one hardware's bits — but the layer-cost and makespan memos
+/// underneath are keyed by full analytic input, so parallel dispatch
+/// stays bit-identical to the serial scan by construction).
+pub fn evaluate_space_assigned(
+    job: &Job,
+    layouts: impl Iterator<Item = ValidLayout>,
+    hwa: &HwAssignment,
+    jobs: usize,
+) -> Vec<Row> {
+    if let Some(hw) = hwa.as_homogeneous() {
+        return evaluate_space(job, layouts, &hw, jobs);
+    }
+    let jobs = if jobs == 0 { pool::effective_jobs() } else { jobs };
+    if jobs <= 1 {
+        return layouts
+            .map(|v| {
+                let hws = hwa.stage_hardwares(v.layout.pp);
+                Row { outcome: crate::sim::evaluate_assigned(job, &v, &hws), v }
+            })
+            .collect();
+    }
+    let mut n = 0usize;
+    let mut group_index: HashMap<StageKey, usize> = HashMap::new();
+    let mut groups: Vec<Vec<(usize, ValidLayout)>> = Vec::new();
+    for (i, v) in layouts.enumerate() {
+        n = i + 1;
+        let gi = *group_index.entry(v.layout.stage_key()).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[gi].push((i, v));
+    }
+    let mut slots: Vec<Option<Row>> = (0..n).map(|_| None).collect();
+    let job_copy = *job;
+    let hwa_copy = hwa.clone();
+    let computed = pool::map_jobs_coarse(groups, jobs, move |_gi, group| {
+        group
+            .iter()
+            .map(|(i, v)| {
+                let hws = hwa_copy.stage_hardwares(v.layout.pp);
+                (*i, Row { outcome: crate::sim::evaluate_assigned(&job_copy, v, &hws), v: *v })
+            })
+            .collect::<Vec<_>>()
+    });
+    for part in computed {
+        for (i, row) in part {
+            slots[i] = Some(row);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every layout evaluates to exactly one row"))
+        .collect()
+}
+
+/// Multi-entry compare where each entry is a (possibly heterogeneous)
+/// per-stage assignment. When every entry is homogeneous this is exactly
+/// the fused [`run_compare`] cross-product dispatch — byte-identical to
+/// the pre-assignment CLI. Any mixed entry switches to one
+/// [`run_jobs_assigned`] per entry (each of which still delegates its
+/// own homogeneous entries to the legacy path).
+pub fn run_compare_assigned(
+    preset: &SweepPreset,
+    entries: &[(String, HwAssignment)],
+    jobs: usize,
+) -> Vec<(String, SweepResult)> {
+    let homogeneous: Option<Vec<(String, Hardware)>> = entries
+        .iter()
+        .map(|(n, hwa)| hwa.as_homogeneous().map(|hw| (n.clone(), hw)))
+        .collect();
+    match homogeneous {
+        Some(hws) => run_compare(preset, &hws, jobs),
+        None => entries
+            .iter()
+            .map(|(n, hwa)| (n.clone(), run_jobs_assigned(preset, hwa, jobs)))
+            .collect(),
+    }
 }
 
 /// Multi-hardware sweep for one preset (`plx compare --hw a,b,...`):
@@ -543,6 +649,50 @@ mod tests {
         let (h1, _) = crate::sim::cache::stats();
         assert!(h1 - h0 >= rows, "second sweep should hit the cache for every row");
         assert!(crate::sim::cache::len() > 0);
+    }
+
+    #[test]
+    fn assigned_sweep_homogeneous_delegates_and_mixed_is_jobs_deterministic() {
+        use crate::sim::H100;
+        let p = &main_presets()[0];
+        // Homogeneous assignment = the legacy path, row for row.
+        let hwa = HwAssignment::parse("a100").unwrap();
+        assert_rows_identical(&run_jobs(p, &A100, 1), &run_jobs_assigned(p, &hwa, 1));
+        // Mixed assignment: `--jobs 1` and `--jobs N` must produce
+        // identical rows (ordering and bits), cold through the pool.
+        let mixed = HwAssignment::parse("a100:4,h100:4").unwrap();
+        let par = run_jobs_assigned(p, &mixed, 4);
+        let ser = run_jobs_assigned(p, &mixed, 1);
+        assert_rows_identical(&ser, &par);
+        // And the mixed rows genuinely differ from both homogeneous ends
+        // on multi-stage layouts.
+        let a100 = run_jobs(p, &A100, 1);
+        let h100 = run_jobs(p, &H100, 1);
+        let mut diverged = 0usize;
+        for ((m, a), h) in ser.rows.iter().zip(&a100.rows).zip(&h100.rows) {
+            if m.v.layout.pp > 1 {
+                if let (Some(tm), Some(ta), Some(th)) =
+                    (m.outcome.step_time(), a.outcome.step_time(), h.outcome.step_time())
+                {
+                    assert!(tm != ta && tm != th, "{:?}", m.v.layout);
+                    assert!(th < tm && tm < ta, "{:?}: {th} {tm} {ta}", m.v.layout);
+                    diverged += 1;
+                }
+            }
+        }
+        assert!(diverged > 0, "no runnable pp>1 rows to distinguish the assignment");
+        // compare over all-homogeneous entries is exactly the fused path.
+        let entries = vec![
+            ("a100".to_string(), HwAssignment::parse("a100").unwrap()),
+            ("h100".to_string(), HwAssignment::parse("h100").unwrap()),
+        ];
+        let hws = vec![("a100".to_string(), A100), ("h100".to_string(), H100)];
+        let via_assigned = run_compare_assigned(p, &entries, 4);
+        let via_legacy = run_compare(p, &hws, 4);
+        for ((na, ra), (nl, rl)) in via_assigned.iter().zip(&via_legacy) {
+            assert_eq!(na, nl);
+            assert_rows_identical(rl, ra);
+        }
     }
 
     #[test]

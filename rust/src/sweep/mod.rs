@@ -17,7 +17,11 @@ pub mod report;
 pub mod table2;
 
 pub use argmax::{
-    argmax_mfu, argmax_ranked, compare_best, compare_best_ranked, Best, QueryStats, Rank, Tie,
+    argmax_mfu, argmax_placed, argmax_ranked, argmax_ranked_assigned, compare_best,
+    compare_best_assigned, compare_best_ranked, placements, Best, QueryStats, Rank, Tie,
 };
-pub use engine::{evaluate_layouts, evaluate_space, run, run_compare, run_jobs, Row, SweepResult};
+pub use engine::{
+    evaluate_layouts, evaluate_space, evaluate_space_assigned, run, run_compare,
+    run_compare_assigned, run_jobs, run_jobs_assigned, Row, SweepResult,
+};
 pub use presets::{by_name, for_table, main_presets, seqpar_presets, SweepPreset};

@@ -1,6 +1,6 @@
 //! Paper-style table rendering for sweep results.
 
-use crate::sim::{failure, Hardware, Outcome};
+use crate::sim::{failure, Hardware, HwAssignment, Outcome};
 use crate::sweep::argmax::{Best, Rank};
 use crate::sweep::engine::{Row, SweepResult};
 use crate::util::table;
@@ -95,6 +95,43 @@ pub fn render_top_ranked(
     if rank == Rank::Mfu {
         return render_top(result, with_sp_column, top);
     }
+    render_top_effective(result, with_sp_column, top, |r, mfu| {
+        failure::effective_mfu(&result.job, &r.v, hw, mfu)
+    })
+}
+
+/// [`render_top_ranked`] over a per-stage hardware assignment:
+/// homogeneous assignments render through the legacy body (same
+/// expressions, same bytes); a mixed assignment scores each runnable
+/// row with the weakest-node effective MFU of its own per-stage
+/// hardware vector.
+pub fn render_top_ranked_assigned(
+    result: &SweepResult,
+    with_sp_column: bool,
+    top: Option<usize>,
+    hwa: &HwAssignment,
+    rank: Rank,
+) -> String {
+    if rank == Rank::Mfu {
+        return render_top(result, with_sp_column, top);
+    }
+    if let Some(hw) = hwa.as_homogeneous() {
+        return render_top_ranked(result, with_sp_column, top, &hw, rank);
+    }
+    render_top_effective(result, with_sp_column, top, |r, mfu| {
+        let hws = hwa.stage_hardwares(r.v.layout.pp);
+        failure::effective_mfu_assigned(&result.job, &r.v, &hws, mfu)
+    })
+}
+
+/// The shared effective-MFU table body, parameterized by the per-row
+/// score (homogeneous or assignment-aware).
+fn render_top_effective(
+    result: &SweepResult,
+    with_sp_column: bool,
+    top: Option<usize>,
+    effective: impl Fn(&Row, f64) -> f64,
+) -> String {
     let with_sched_column =
         result.rows.iter().any(|r| r.layout().sched != crate::layout::Schedule::OneF1B);
     let mut headers = vec!["Step Time", "MFU", "Eff. MFU", "Activation", "Kernel", "MB", "TP", "PP"];
@@ -110,9 +147,7 @@ pub fn render_top_ranked(
         .rows
         .iter()
         .map(|r| match r.outcome {
-            Outcome::Ok { mfu, .. } => {
-                (0u8, -failure::effective_mfu(&result.job, &r.v, hw, mfu), r)
-            }
+            Outcome::Ok { mfu, .. } => (0u8, -effective(r, mfu), r),
             Outcome::Oom { .. } => (1, 0.0, r),
             Outcome::KernelUnavailable => (2, 0.0, r),
         })

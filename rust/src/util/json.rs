@@ -311,15 +311,47 @@ impl<'a> Reader<'a> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err(self.err("short \\u escape"));
+                            // Offset of the backslash, so surrogate
+                            // errors point at the escape that broke.
+                            let esc_at = self.i - 2;
+                            let hi = self.hex4()?;
+                            if (0xDC00..=0xDFFF).contains(&hi) {
+                                return Err(JsonError {
+                                    offset: esc_at,
+                                    msg: format!("unpaired low surrogate \\u{hi:04X}"),
+                                });
                             }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                            if (0xD800..=0xDBFF).contains(&hi) {
+                                // A high surrogate must be immediately
+                                // followed by an escaped low surrogate;
+                                // the pair names one supplementary-plane
+                                // scalar (RFC 8259 §7).
+                                if self.b.get(self.i) != Some(&b'\\')
+                                    || self.b.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err(JsonError {
+                                        offset: esc_at,
+                                        msg: format!("unpaired high surrogate \\u{hi:04X}"),
+                                    });
+                                }
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err(JsonError {
+                                        offset: esc_at,
+                                        msg: format!(
+                                            "high surrogate \\u{hi:04X} not followed by a \
+                                             low surrogate (got \\u{lo:04X})"
+                                        ),
+                                    });
+                                }
+                                let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                // cp is in 0x10000..=0x10FFFF by construction.
+                                out.push(char::from_u32(cp).unwrap());
+                            } else {
+                                // Non-surrogate BMP scalars are always chars.
+                                out.push(char::from_u32(hi).unwrap());
+                            }
                         }
                         _ => return Err(self.err("unknown escape")),
                     }
@@ -338,6 +370,18 @@ impl<'a> Reader<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape, consumed.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("short \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
     }
 
     /// Full JSON number grammar: `-? (0 | [1-9][0-9]*) (\.[0-9]+)?
@@ -909,6 +953,41 @@ mod tests {
             assert_eq!(back, v, "roundtrip diverged for {text}");
             assert_eq!(back.write(), text, "write not a fixed point for {text}");
         });
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_and_unpaired_halves_are_rejected() {
+        // A valid pair decodes to the supplementary-plane scalar:
+        // U+D83D U+DE00 -> U+1F600.
+        let v = Json::parse("\"\\uD83D\\uDE00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // The writer emits raw UTF-8 for it, and the roundtrip holds.
+        assert_eq!(Json::parse(&v.write()).unwrap(), v);
+        // Boundary pairs of the supplementary planes.
+        assert_eq!(Json::parse("\"\\uD800\\uDC00\"").unwrap().as_str(), Some("\u{10000}"));
+        assert_eq!(Json::parse("\"\\uDBFF\\uDFFF\"").unwrap().as_str(), Some("\u{10FFFF}"));
+        // Unpaired halves are errors, not U+FFFD — with the byte offset
+        // of the offending backslash.
+        let e = Json::parse("\"\\uDE00\"").unwrap_err();
+        assert!(e.msg.contains("unpaired low surrogate \\uDE00"), "{e}");
+        assert_eq!(e.offset, 1);
+        let e = Json::parse("\"\\uD83Dx\"").unwrap_err();
+        assert!(e.msg.contains("unpaired high surrogate \\uD83D"), "{e}");
+        assert_eq!(e.offset, 1);
+        // High surrogate followed by a non-\u escape: still unpaired.
+        let e = Json::parse("\"\\uD83D\\n\"").unwrap_err();
+        assert!(e.msg.contains("unpaired high surrogate"), "{e}");
+        // High surrogate followed by an escaped non-low scalar.
+        let e = Json::parse("\"ab\\uD83D\\u0041\"").unwrap_err();
+        assert!(e.msg.contains("not followed by a low surrogate (got \\u0041)"), "{e}");
+        assert_eq!(e.offset, 3, "offset names the high surrogate's backslash");
+        // Two high surrogates in a row are just as unpaired.
+        assert!(Json::parse("\"\\uD83D\\uD83D\"").is_err());
+        // A truncated second escape is the short-escape error.
+        let e = Json::parse("\"\\uD83D\\uDE\"").unwrap_err();
+        assert!(e.msg.contains("bad \\u escape") || e.msg.contains("short"), "{e}");
+        // Plain BMP escapes are untouched by the pairing rules.
+        assert_eq!(Json::parse("\"\\uFFFD\"").unwrap().as_str(), Some("\u{FFFD}"));
     }
 
     #[test]

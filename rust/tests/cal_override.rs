@@ -197,4 +197,56 @@ fn override_sets_are_memo_keyed_and_roundtrip_bit_identical() {
     assert_eq!(A100.from_overrides().bits(), A100.bits());
     let x2 = probe("X after hardware override");
     assert_eq!(x0, x2);
+
+    // An override that is set but does not parse keeps the default and
+    // warns ONCE per variable per config load — a typo'd
+    // `PLX_HW_IB_BW=25GB` must not silently fall back thousands of
+    // times, nor spam stderr once per lookup.
+    use plx::sim::kernels::{cal_warn_count, cal_warn_reset};
+    cal_warn_reset();
+    std::env::set_var("PLX_HW_IB_BW", "25GB");
+    std::env::set_var("PLX_CAL_EFF_BASE", "fast");
+    let hw_bad = A100.from_overrides();
+    assert_eq!(hw_bad.bits(), A100.bits(), "unparseable PLX_HW_* must keep the preset value");
+    assert_eq!(cal_warn_count(), 1, "one warning for the one bad HW var");
+    let _ = A100.from_overrides();
+    assert_eq!(cal_warn_count(), 1, "a second config load must not warn again");
+    assert_eq!(cal_key(), key_x, "unparseable PLX_CAL_* keeps the default calibration");
+    assert_eq!(cal_warn_count(), 2, "the CAL var warns on its first read");
+    cal_warn_reset();
+    let _ = A100.from_overrides();
+    assert_eq!(cal_warn_count(), 1, "reset re-arms the per-config-load warning");
+    clear_override_env();
+    cal_warn_reset();
+
+    // The heterogeneous reduction property under LIVE overrides: an
+    // all-equal per-stage assignment evaluates bit-identically to the
+    // homogeneous path with the same overrides applied —
+    // `HwAssignment::from_overrides` runs the same per-field hook on
+    // every segment, so the all-bits-equal delegation still fires.
+    std::env::set_var("PLX_HW_IB_BW", "40e9");
+    std::env::set_var("PLX_CAL_EFF_BASE", "0.80");
+    let hwa = plx::sim::HwAssignment::parse("a100:4,a100:4").unwrap().from_overrides();
+    let hw_ov = A100.from_overrides();
+    assert_eq!(
+        hwa.as_homogeneous().map(|h| h.bits()),
+        Some(hw_ov.bits()),
+        "all-equal assignment under overrides must still read as homogeneous"
+    );
+    let hws = hwa.stage_hardwares(v.layout.pp);
+    let het = plx::sim::evaluate_assigned(&job, &v, &hws);
+    let hom = plx::sim::evaluate(&job, &v, &hw_ov);
+    assert_eq!(ok_bits(&het), ok_bits(&hom), "all-equal assignment diverged under overrides");
+    assert_eq!(
+        step_time::step_time_lower_bound_assigned(&job, &v, &hws).to_bits(),
+        step_time::step_time_lower_bound(&job, &v, &hw_ov).to_bits(),
+        "assigned bound diverged under overrides"
+    );
+    assert_eq!(
+        plx::sim::mfu_upper_bound_assigned(&job, &v, &hws).to_bits(),
+        plx::sim::mfu_upper_bound(&job, &v, &hw_ov).to_bits(),
+        "assigned MFU bound diverged under overrides"
+    );
+    clear_override_env();
+    cal_warn_reset();
 }

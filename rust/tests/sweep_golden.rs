@@ -212,6 +212,19 @@ fn table2_h100_matches_checked_in_golden() {
 }
 
 #[test]
+fn table2_mi250x_matches_checked_in_golden() {
+    // Third point on the hardware axis: `plx table 2 --hw mi250x` is
+    // pinned byte-for-byte next to the A100/H100 fixtures. Regenerate
+    // with `python3 tools/gen_golden.py --hw mi250x` (or
+    // PLX_UPDATE_GOLDEN=1).
+    assert_matches_golden(
+        "table2_mi250x.txt",
+        "plx table 2 --hw mi250x",
+        &table2::render(&plx::sim::MI250X),
+    );
+}
+
+#[test]
 fn schedule_dimension_sweeps_deterministically() {
     // The new layout dimension through the whole engine: widen a paper
     // preset with interleaved-1F1B, check parallel/serial identity and

@@ -4,7 +4,7 @@ This is the no-toolchain cross-check: every sim/sweep/planner assertion
 from the Rust `#[test]`s is re-stated here against the Python mirror of
 the simulator. A failure here predicts a failure in `cargo test`.
 
-Nine suites, reported separately:
+Ten suites, reported separately:
   * the SEED suite — the original 53 assertions (reported first, as
     "PASS 53 / 53", so the historical gate line is stable);
   * the SCHEDULE suite — the assertions added with the sim/schedule
@@ -45,7 +45,15 @@ Nine suites, reported separately:
     identities), degraded-cluster replanning, the deterministic
     failure-trace replay (same PLX_FAULT_SEED => bit-identical trace),
     bounded persist write retries, clamped fault probabilities, and the
-    serve replan/simulate-run byte contracts.
+    serve replan/simulate-run byte contracts;
+  * the HETERO suite — hardware as a per-pipeline-stage property: the
+    mi250x preset bit-exact, HwAssignment parsing/stage mapping, the
+    all-equal-assignment bitwise-identity property (on all three presets
+    and under live overrides), the admissible heterogeneous step-time
+    bound, the weakest-node failure model, the assignment-aware
+    argmax/placement search/planner/replan, the serve hw_map axis, the
+    strict-JSON surrogate-pair handling, and the warn-once override
+    diagnostics.
 
 Run: python3 tools/check_seed_tests.py
 """
@@ -1206,7 +1214,17 @@ def t_hw_preset_registry():
     assert hw_bits(hw_preset("a100")) == hw_bits(A100)
     assert hw_bits(hw_preset("h100")) == hw_bits(H100)
     assert hw_preset("b200") is None
-    assert [n for n, _ in HW_PRESETS] == ["a100", "h100"]
+    assert [n for n, _ in HW_PRESETS] == ["a100", "h100", "mi250x"]
+    assert hw_bits(parse_hw("h100")) == hw_bits(H100)
+    # The satellite contract: the error names every known preset.
+    try:
+        parse_hw("tpu-v5")
+        raise AssertionError("unknown preset must be rejected")
+    except ValueError as e:
+        err = str(e)
+        assert "tpu-v5" in err, err
+        for name, _ in HW_PRESETS:
+            assert name in err, f"error must list '{name}': {err}"
 
 
 def t_hw_from_overrides_identity_and_override():
@@ -2718,26 +2736,37 @@ def t_failure_effective_rank_trades_mfu_for_availability():
 
 
 def t_failure_replan_shrinks_to_whole_nodes():
-    # rust: planner::replan_shrinks_to_whole_nodes_and_finds_a_layout —
-    # lose 3 GPUs of a 64-GPU cluster: 61 usable -> 7 whole nodes.
-    # 56 GPUs force a factor of 7 into dp, which can never divide
-    # gbs 2048 — an honest "no runnable layout" report, not an error.
+    # rust: planner::replan_shrinks_to_whole_nodes_and_falls_back_to_
+    # runnable_subset — lose 3 GPUs of a 64-GPU cluster: 61 usable -> 7
+    # whole nodes. 56 GPUs force a factor of 7 into dp, which can never
+    # divide gbs 2048; 6 and 5 nodes are just as hopeless (factors 3 and
+    # 5). The fallback must land on 4 nodes — the largest runnable
+    # subset — and report the idled survivors.
     j = _failure_job("llama65b", 8)
     rep = replan(j, 3, A100, RANK_MFU)
-    assert rep.degraded.cluster.gpus == 56
     assert rep.full.cluster.gpus == 64
-    assert rep.new is None, "gbs 2048 is indivisible on 7 nodes"
+    assert rep.usable_gpus == 56
+    assert rep.degraded.cluster.gpus == 32, "largest runnable subset is 4 nodes"
+    assert rep.new is not None, "the fallback must find the 4-node plan"
+    assert rep.new.mfu > 0.2
+    # The fallback plan IS the 32-GPU exhaustive plan, bit for bit.
+    j32 = _failure_job("llama65b", 4)
+    plan32, _ = plan_exhaustive_stats(j32, A100)
+    assert rep.new.v.layout == plan32.v.layout
+    assert _bits(rep.new.mfu) == _bits(plan32.predicted_mfu)
     # The "was" row is exactly the full-cluster exhaustive plan.
     full_plan, _ = plan_exhaustive_stats(j, A100)
     assert rep.old.v.layout == full_plan.v.layout
     txt = render_replan(rep)
     assert "64 -> 56 usable GPUs (7 whole nodes" in txt, txt
-    assert "no runnable layout on the surviving cluster" in txt, txt
-    assert "migration: " not in txt, txt
-    # Losing 4 whole nodes lands on a power-of-two cluster where a
-    # layout does exist, with a positive, finite migration estimate.
+    assert ("fallback: running on 4 of 7 usable nodes, "
+            "24 surviving GPUs idled") in txt, txt
+    assert "migration: " in txt, txt
+    # Losing 4 whole nodes lands directly on a power-of-two cluster: no
+    # fallback, no fallback line — the legacy report bytes.
     rep = replan(j, 32, A100, RANK_MFU)
     assert rep.degraded.cluster.gpus == 32
+    assert rep.usable_gpus == 32
     assert rep.new is not None, "65B must still run on 4 nodes"
     assert rep.new.mfu > 0.2
     assert rep.moved_bytes > 0.0 and math.isfinite(rep.moved_bytes)
@@ -2745,6 +2774,7 @@ def t_failure_replan_shrinks_to_whole_nodes():
     txt = render_replan(rep)
     assert "64 -> 32 usable GPUs (4 whole nodes" in txt, txt
     assert "was: " in txt and "now: " in txt, txt
+    assert "fallback: " not in txt, txt
     assert "migration: " in txt, txt
 
 
@@ -2962,7 +2992,7 @@ FAILURE_CHECKS = [
      t_failure_ranked_plan_default_is_historical),
     ("planner::effective_rank_never_beats_raw_mfu_but_stays_runnable",
      t_failure_effective_rank_trades_mfu_for_availability),
-    ("planner::replan_shrinks_to_whole_nodes_and_finds_a_layout",
+    ("planner::replan_shrinks_to_whole_nodes_and_falls_back_to_runnable_subset",
      t_failure_replan_shrinks_to_whole_nodes),
     ("planner::replan_deterministic_and_validates_inputs",
      t_failure_replan_deterministic_and_validates),
@@ -2978,6 +3008,548 @@ FAILURE_CHECKS = [
      t_failure_serve_replan_equals_renderer),
     ("serve::simulate_run_response_equals_cli_renderer_bytes",
      t_failure_serve_simulate_run_equals_renderer),
+]
+
+
+# ------------------------------------------------------------------ HETERO
+# The heterogeneous-cluster layer (PR 10): hardware as a per-pipeline-
+# stage property. The mi250x preset, HwAssignment parsing/mapping, the
+# assigned evaluate/bound/failure-model/argmax/placement/planner/replan
+# mirrors, the serve hw_map axis, the strict-JSON surrogate handling,
+# and the warn-once override diagnostics — each re-stated bit-for-bit
+# against the Rust tests they predict.
+
+
+def _hetero_space(job):
+    # rust/src/sim/mod.rs::tests::hetero_space
+    return enumerate_layouts(job, [1, 2], [1, 2, 3, 4], [1, 2],
+                             [False, True], [FLASH2RMS, FLASH2, TORCH],
+                             [False, True],
+                             [SCHED_1F1B, sched_interleaved(2)])
+
+
+def t_hetero_mi250x_constants_bit_exact():
+    # rust: cluster::mi250x_constants_bit_exact — GCD-level numbers from
+    # the Frontier port (Dash et al., arXiv 2312.12705); a public
+    # contract like the other presets.
+    assert _bits(MI250X.peak_matmul_flops) == _bits(191e12)
+    assert _bits(MI250X.hbm_bytes) == _bits(64.0 * 1e9)
+    assert _bits(MI250X.hbm_bw) == _bits(1.3e12)
+    assert _bits(MI250X.nvlink_bw) == _bits(100e9)
+    assert _bits(MI250X.ib_bw) == _bits(12.5e9)
+    # Host-side + reliability constants carry over from the testbed.
+    assert _bits(MI250X.coll_latency_s) == _bits(A100.coll_latency_s)
+    assert _bits(MI250X.launch_overhead_s) == _bits(A100.launch_overhead_s)
+    assert _bits(MI250X.workspace_bytes) == _bits(A100.workspace_bytes)
+    assert _bits(MI250X.mtbf_h) == _bits(A100.mtbf_h)
+    assert _bits(MI250X.storage_bw) == _bits(A100.storage_bw)
+    # A GCD is slower and smaller than an A100 on every axis.
+    assert MI250X.peak_matmul_flops < A100.peak_matmul_flops
+    assert MI250X.hbm_bytes < A100.hbm_bytes
+    assert MI250X.nvlink_bw < A100.nvlink_bw
+    assert MI250X.ib_bw < A100.ib_bw
+    assert hw_bits(hw_preset("mi250x")) == hw_bits(MI250X)
+
+
+def t_hetero_assignment_parses_and_labels():
+    # rust: cluster::hw_assignment_parses_and_labels
+    homo = HwAssignment.parse("a100")
+    assert homo.label() == "a100"
+    assert hw_bits(homo.as_homogeneous()) == hw_bits(A100)
+    het = HwAssignment.parse("a100:4,h100:4")
+    assert het.label() == "a100:4,h100:4"
+    assert het.as_homogeneous() is None
+    assert het.total_slots() == 8
+    # Equal silicon under different names is still homogeneous —
+    # delegation keys on bits, not labels.
+    same = HwAssignment.parse("a100:2,a100:6")
+    assert hw_bits(same.as_homogeneous()) == hw_bits(A100)
+    for bad in ["a100:0,h100:4", "a100:x", "b200:4", ""]:
+        try:
+            HwAssignment.parse(bad)
+            raise AssertionError(f"{bad!r} must be rejected")
+        except ValueError:
+            pass
+    # parse_list: consecutive name:count tokens form ONE entry.
+    lst = HwAssignment.parse_list("a100,h100:4,mi250x:4")
+    assert [e.label() for e in lst] == ["a100", "h100:4,mi250x:4"]
+
+
+def t_hetero_assignment_stage_mapping_proportional():
+    # rust: cluster::hw_assignment_stage_mapping_is_proportional
+    het = HwAssignment.parse("a100:4,h100:4")
+    hws = het.stage_hardwares(8)  # pp == total slots: 1:1
+    for s in range(4):
+        assert hw_bits(hws[s]) == hw_bits(A100)
+        assert hw_bits(hws[s + 4]) == hw_bits(H100)
+    hws = het.stage_hardwares(4)  # pp < total: 2 slots per stage
+    assert [hw_bits(h) for h in hws] == \
+        [hw_bits(A100), hw_bits(A100), hw_bits(H100), hw_bits(H100)]
+    hws = het.stage_hardwares(16)  # pp > total: slots stretch
+    for s in range(8):
+        assert hw_bits(hws[s]) == hw_bits(A100)
+        assert hw_bits(hws[s + 8]) == hw_bits(H100)
+    # Count-less multi-segment spec: counts default to 1.
+    pair = HwAssignment.parse("a100,h100")
+    hws = pair.stage_hardwares(4)
+    assert [hw_bits(h) for h in hws] == \
+        [hw_bits(A100), hw_bits(A100), hw_bits(H100), hw_bits(H100)]
+    # Permutation reorders segments.
+    rev = het.permuted([1, 0])
+    assert rev.label() == "h100:4,a100:4"
+    assert hw_bits(rev.stage_hw(0, 8)) == hw_bits(H100)
+
+
+def t_hetero_all_equal_bitwise_identical_to_homogeneous():
+    # rust: sim::all_equal_assignment_is_bitwise_identical_to_homogeneous
+    # — the tentpole delegation property on all three presets, every
+    # outcome variant, the memory/step breakdowns and both bounds. pp=3
+    # is in the space on purpose: a mean-of-peaks denominator would
+    # round there.
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    layouts = _hetero_space(job)
+    assert len(layouts) > 100, f"space too small: {len(layouts)}"
+    for hw in [A100, H100, MI250X]:
+        for v in layouts:
+            hws = [hw] * v.layout.pp
+            homo = evaluate(job, v, hw)
+            het = evaluate_assigned(job, v, hws)
+            assert homo.kind == het.kind, v.layout
+            if homo.kind == "ok":
+                assert _bits(homo.step_time_s) == _bits(het.step_time_s), v.layout
+                assert _bits(homo.mfu) == _bits(het.mfu), v.layout
+                assert _bits(homo.mem.total()) == _bits(het.mem.total()), v.layout
+                assert _bits(homo.mem.activations) == _bits(het.mem.activations)
+                assert _bits(homo.mem.logits) == _bits(het.mem.logits)
+                for f in ["compute", "tp_comm", "pp_comm", "bubble",
+                          "dp_comm", "optimizer"]:
+                    assert _bits(getattr(homo.step, f)) == \
+                        _bits(getattr(het.step, f)), (v.layout, f)
+            elif homo.kind == "oom":
+                assert _bits(homo.required) == _bits(het.required), v.layout
+                assert _bits(homo.budget) == _bits(het.budget), v.layout
+            # Bounds reduce exactly too.
+            assert _bits(step_time_lower_bound(job, v, hw)) == \
+                _bits(step_time_lower_bound_assigned(job, v, hws)), v.layout
+            assert _bits(mfu_upper_bound(job, v, hw)) == \
+                _bits(mfu_upper_bound_assigned(job, v, hws)), v.layout
+
+
+def t_hetero_lower_bound_admissible_bitwise():
+    # rust: sim::hetero_lower_bound_is_admissible_bitwise — tentpole
+    # acceptance: across mixed a100/h100/mi250x per-stage assignments,
+    # the per-stage-minimum bound never exceeds the heterogeneous step
+    # time (bitwise <=, not epsilon).
+    presets_ = [A100, H100, MI250X]
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    runnable = 0
+    for v in _hetero_space(job):
+        for offset in range(len(presets_)):
+            hws = [presets_[(p + offset) % len(presets_)]
+                   for p in range(v.layout.pp)]
+            o = evaluate_assigned(job, v, hws)
+            if o.kind == "ok":
+                lb = step_time_lower_bound_assigned(job, v, hws)
+                assert lb <= o.step_time_s, \
+                    (v.layout, lb, o.step_time_s)
+                ub = mfu_upper_bound_assigned(job, v, hws)
+                assert ub >= o.mfu, (v.layout, ub, o.mfu)
+                runnable += 1
+    assert runnable > 50, f"only {runnable} runnable mixed evaluations"
+
+
+def t_hetero_slow_stage_drags_the_assignment():
+    # rust: sim::slow_silicon_stage_drags_the_assignment — a mixed
+    # a100/mi250x pipeline must be slower than all-A100 and faster than
+    # all-MI250X.
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    v = validate(job, Layout(1, 4, 1, False, FLASH2RMS, False))
+
+    def t(hws):
+        o = evaluate_assigned(job, v, hws)
+        assert o.kind == "ok", o.kind
+        return o.step_time_s
+
+    all_fast = t([A100] * 4)
+    all_slow = t([MI250X] * 4)
+    mixed = t([A100, A100, MI250X, MI250X])
+    assert all_fast < mixed < all_slow, (all_fast, mixed, all_slow)
+
+
+def t_hetero_failure_model_is_weakest_node():
+    # rust: failure::assigned_failure_model_is_the_weakest_node
+    j = _failure_job("llama13b", 8)
+    v = validate(j, Layout(2, 2, 2, False, FLASH2RMS, False))
+    for hw in [A100, H100, MI250X]:
+        hws = [hw] * 4
+        assert _bits(availability_of_assigned(j, v, hws)) == \
+            _bits(availability_of(j, v, hw))
+        assert _bits(effective_mfu_assigned(j, v, hws, 0.47)) == \
+            _bits(effective_mfu(j, v, hw, 0.47))
+    # A mixed fleet inherits the worst MTBF and the worst storage
+    # bandwidth, regardless of which stage holds them.
+    flaky = replace(A100, mtbf_h=5000.0)
+    slow_disk = replace(H100, storage_bw=0.5e9)
+    weak = weakest_hw([A100, flaky, slow_disk, H100])
+    assert _bits(weak.mtbf_h) == _bits(5000.0)
+    assert _bits(weak.storage_bw) == _bits(0.5e9)
+    worst = replace(A100, mtbf_h=5000.0, storage_bw=0.5e9)
+    assert _bits(availability_of_assigned(j, v, [A100, flaky, slow_disk, H100])) == \
+        _bits(availability_of(j, v, worst))
+    # One dead node disables the model for the whole assignment.
+    dead = replace(A100, mtbf_h=0.0)
+    assert _bits(availability_of_assigned(j, v, [A100, A100, dead, A100])) == \
+        _bits(1.0)
+    # The assigned effective-MFU bound dominates the assigned exact
+    # value on a genuinely mixed assignment.
+    v4 = validate(j, Layout(1, 4, 1, False, FLASH2RMS, False))
+    mixed = [A100, H100, MI250X, A100]
+    o = evaluate_assigned(j, v4, mixed)
+    assert o.kind == "ok", "mixed llama13b pp=4 layout must run"
+    eff = effective_mfu_assigned(j, v4, mixed, o.mfu)
+    ub = effective_mfu_upper_bound_assigned(j, v4, mixed)
+    assert ub >= eff, (ub, eff)
+
+
+def _hetero_space_of(p):
+    return iter_layouts(p.job(), p.tps, p.pps, p.mbs, p.ckpts, p.kernels,
+                        p.sps, p.scheds)
+
+
+def t_hetero_assigned_scan_lossless_and_reduces():
+    # rust: argmax::assigned_scan_is_lossless_and_homogeneous_reduces_
+    # exactly — homogeneous assignment = the same scan (winner, bits,
+    # counters); mixed assignment = pruned scan vs the materializing
+    # fold, both ranks.
+    p = main_presets()[0]
+    job = p.job()
+    hwa = HwAssignment.parse("a100")
+    legacy, sl = argmax_ranked(job, _hetero_space_of(p), A100,
+                               lambda _v: True, TIE_KEEP_LAST, RANK_MFU)
+    via, sa = argmax_ranked_assigned(job, _hetero_space_of(p), hwa,
+                                     lambda _v: True, TIE_KEEP_LAST,
+                                     RANK_MFU)
+    assert legacy.v.layout == via.v.layout
+    assert _bits(legacy.mfu) == _bits(via.mfu)
+    assert sl.evaluated == sa.evaluated
+    assert sl.bound_pruned == sa.bound_pruned
+    mixed = HwAssignment.parse("a100:4,h100:4")
+    rows = run_jobs_assigned(p, mixed)
+    best, stats = argmax_ranked_assigned(job, _hetero_space_of(p), mixed,
+                                         lambda _v: True, TIE_KEEP_LAST,
+                                         RANK_MFU)
+    _assert_best_matches_row(best, rows.best(), "mixed mfu")
+    assert stats.evaluated < stats.total, f"assigned bound never fired: {stats}"
+    eff, _ = argmax_ranked_assigned(job, _hetero_space_of(p), mixed,
+                                    lambda _v: True, TIE_KEEP_LAST,
+                                    RANK_EFFECTIVE_MFU)
+    want = None
+    for row in rows.rows:
+        mfu = row.outcome.mfu_opt()
+        if mfu is not None:
+            hws = mixed.stage_hardwares(row.v.layout.pp)
+            s = effective_mfu_assigned(job, row.v, hws, mfu)
+            if want is None or total_cmp_key(s) >= total_cmp_key(want[1]):
+                want = (row, s)
+    wrow, wscore = want
+    assert eff.v.layout == wrow.v.layout, "effective-mfu winner diverged"
+    assert _bits(eff.score) == _bits(wscore)
+
+
+def t_hetero_placement_search_covers_unique_orders():
+    # rust: argmax::placement_search_covers_unique_orders_and_never_loses
+    p = main_presets()[0]
+    job = p.job()
+    mixed = HwAssignment.parse("a100:4,h100:4")
+    ps = placements(mixed)
+    assert [c.label() for c in ps] == ["a100:4,h100:4", "h100:4,a100:4"]
+    assert len(placements(HwAssignment.parse("a100"))) == 1
+    assert len(placements(HwAssignment.parse("a100:2,a100:6"))) == 1
+    three = HwAssignment.parse("a100:2,h100:2,a100:4")
+    assert len(placements(three)) == 6
+    # The search never returns a placement worse than the spelled one.
+    spelled, _ = argmax_ranked_assigned(job, _hetero_space_of(p), mixed,
+                                        lambda _v: True, TIE_KEEP_LAST,
+                                        RANK_MFU)
+    placed, _ = argmax_placed(job, lambda: _hetero_space_of(p), mixed,
+                              lambda _v: True, TIE_KEEP_LAST, RANK_MFU)
+    pl, b = placed
+    assert b.score >= spelled.score
+    assert any(c.label() == pl.label() for c in ps)
+
+
+def t_hetero_sweep_homogeneous_delegates_mixed_diverges():
+    # rust: engine::assigned_sweep_homogeneous_delegates_and_mixed_is_
+    # jobs_deterministic (the ordering half — pysim has no thread pool).
+    p = main_presets()[0]
+    hwa = HwAssignment.parse("a100")
+    legacy, via = run(p, A100), run_jobs_assigned(p, hwa)
+    assert len(legacy.rows) == len(via.rows)
+    for a, b in zip(legacy.rows, via.rows):
+        assert a.v.layout == b.v.layout
+        assert a.outcome == b.outcome
+    # Mixed rows genuinely differ from both homogeneous ends on
+    # multi-stage layouts: h100 < mixed < a100 step time.
+    mixed = HwAssignment.parse("a100:4,h100:4")
+    ser = run_jobs_assigned(p, mixed)
+    a100_r, h100_r = run(p, A100), run(p, H100)
+    diverged = 0
+    for m, a, h in zip(ser.rows, a100_r.rows, h100_r.rows):
+        if m.v.layout.pp > 1:
+            tm, ta, th = (m.outcome.step_time_opt(), a.outcome.step_time_opt(),
+                          h.outcome.step_time_opt())
+            if tm is not None and ta is not None and th is not None:
+                assert th < tm < ta, (m.v.layout, th, tm, ta)
+                diverged += 1
+    assert diverged > 0, "no runnable pp>1 rows to distinguish the assignment"
+    # compare over all-homogeneous entries is exactly the fused path.
+    entries = [("a100", HwAssignment.parse("a100")),
+               ("h100", HwAssignment.parse("h100"))]
+    hws = [("a100", A100), ("h100", H100)]
+    for (na, ra), (nl, rl) in zip(run_compare_assigned(p, entries),
+                                  run_compare(p, hws)):
+        assert na == nl
+        for x, y in zip(rl.rows, ra.rows):
+            assert x.v.layout == y.v.layout and x.outcome == y.outcome
+
+
+def t_hetero_plan_reduces_and_places_mixed_fleets():
+    # rust: planner::assigned_plan_reduces_homogeneous_and_places_mixed
+    # _fleets
+    j = _failure_job("llama65b", 8)
+    hwa = HwAssignment.parse("a100")
+    legacy, _ = plan_exhaustive_stats_ranked(j, A100, RANK_MFU)
+    via, placement, _ = plan_exhaustive_stats_assigned(j, hwa, RANK_MFU)
+    assert legacy.v.layout == via.v.layout
+    assert _bits(legacy.predicted_mfu) == _bits(via.predicted_mfu)
+    assert render_plan_assigned(j, via, hwa, placement, RANK_MFU) == \
+        render_plan_ranked(j, legacy, A100, RANK_MFU)
+    mixed = HwAssignment.parse("a100:4,h100:4")
+    mplan, mplacement, stats = plan_exhaustive_stats_assigned(
+        j, mixed, RANK_MFU)
+    h100_plan, _ = plan_exhaustive_stats_ranked(j, H100, RANK_MFU)
+    assert stats.total > 0
+    txt = render_plan_assigned(j, mplan, mixed, mplacement, RANK_MFU)
+    assert "placement: " in txt, txt
+    assert ("placement: a100:4,h100:4" in txt
+            or "placement: h100:4,a100:4" in txt), txt
+    # Best mixed step time can't beat all-H100's optimum.
+    assert mplan.predicted_step_s >= h100_plan.predicted_step_s
+    # The effective rank renders its extra line under the assignment.
+    eplan, eplace, _ = plan_exhaustive_stats_assigned(
+        j, mixed, RANK_EFFECTIVE_MFU)
+    etxt = render_plan_assigned(j, eplan, mixed, eplace, RANK_EFFECTIVE_MFU)
+    assert "effective:" in etxt and "% availability" in etxt, etxt
+
+
+def t_hetero_replan_reduces_and_handles_mixed():
+    # rust: planner::assigned_replan_reduces_homogeneous_and_handles
+    # _mixed
+    j = _failure_job("llama65b", 8)
+    hwa = HwAssignment.parse("a100")
+    a = render_replan(replan(j, 32, A100, RANK_MFU))
+    b = render_replan(replan_assigned(j, 32, hwa, RANK_MFU))
+    assert a == b, "homogeneous assignment must reduce to the legacy replan"
+    mixed = HwAssignment.parse("a100:4,h100:4")
+    rep = replan_assigned(j, 3, mixed, RANK_MFU)
+    assert rep.usable_gpus == 56
+    assert rep.degraded.cluster.gpus == 32, \
+        "fallback to the largest runnable subset"
+    assert rep.new is not None
+    txt = render_replan(rep)
+    assert "fallback: running on 4 of 7 usable nodes" in txt, txt
+
+
+def t_hetero_serve_hw_map_takes_assignment_axis():
+    # rust: serve::hw_map_requests_take_the_assignment_axis
+    state = ServeState()
+    a, _ = serve_handle_line(
+        state, '{"cmd":"plan","model":"llama13b","nodes":1,"hw":"a100"}')
+    b, _ = serve_handle_line(
+        state, '{"cmd":"plan","model":"llama13b","nodes":1,"hw_map":"a100"}')
+    assert json_parse(a)["output"] == json_parse(b)["output"]
+    # A heterogeneous assignment without "exhaustive" is a bad_request.
+    r, _ = serve_handle_line(
+        state,
+        '{"cmd":"plan","model":"llama13b","nodes":1,"hw":"a100:4,h100:4"}')
+    assert "exhaustive" in r, r
+    # With "exhaustive" it plans and reports the chosen placement.
+    r, _ = serve_handle_line(
+        state, '{"cmd":"plan","model":"llama13b","nodes":1,'
+               '"hw":"a100:4,h100:4","exhaustive":true}')
+    rj = json_parse(r)
+    assert rj["ok"] is True, r
+    assert "placement: " in rj["output"], r
+    # replan and sweep take the axis too; bad specs error cleanly.
+    r, _ = serve_handle_line(
+        state, '{"cmd":"replan","model":"llama13b","nodes":2,"lost":1,'
+               '"hw_map":"a100:8,h100:8"}')
+    assert json_parse(r)["ok"] is True, r
+    r, _ = serve_handle_line(
+        state, '{"cmd":"sweep","preset":"13b-2k","hw_map":"warp"}')
+    assert "unknown hardware" in r, r
+    # compare groups consecutive name:count tokens into one mixed entry.
+    r, _ = serve_handle_line(
+        state, '{"cmd":"compare","preset":"13b-2k","hw":"a100,h100:4,a100:4"}')
+    rj = json_parse(r)
+    assert rj["ok"] is True, r
+    assert "h100:4,a100:4" in rj["output"], r
+
+
+def t_hetero_json_surrogates_decode_and_reject():
+    # rust: json::surrogate_pairs_decode_and_unpaired_halves_are_rejected
+    assert json_parse('"\\uD83D\\uDE00"') == "\U0001F600"
+    assert json_parse('"\\uD800\\uDC00"') == "\U00010000"
+    assert json_parse('"\\uDBFF\\uDFFF"') == "\U0010FFFF"
+    try:
+        json_parse('"\\uDE00"')
+        raise AssertionError("lone low surrogate must be rejected")
+    except JsonParseError as e:
+        assert "unpaired low surrogate \\uDE00" in e.msg, e.msg
+    try:
+        json_parse('"\\uD83Dx"')
+        raise AssertionError("unpaired high surrogate must be rejected")
+    except JsonParseError as e:
+        assert "unpaired high surrogate \\uD83D" in e.msg, e.msg
+    # High surrogate followed by a non-\u escape: still unpaired.
+    try:
+        json_parse('"\\uD83D\\n"')
+        raise AssertionError("high surrogate + \\n must be rejected")
+    except JsonParseError as e:
+        assert "unpaired high surrogate" in e.msg, e.msg
+    # High surrogate followed by an escaped non-low scalar; the offset
+    # names the high surrogate's backslash.
+    try:
+        json_parse('"ab\\uD83D\\u0041"')
+        raise AssertionError("high + BMP scalar must be rejected")
+    except JsonParseError as e:
+        assert "not followed by a low surrogate (got \\u0041)" in e.msg, e.msg
+        assert e.offset == 3, e.offset
+    # Two high surrogates in a row are just as unpaired.
+    try:
+        json_parse('"\\uD83D\\uD83D"')
+        raise AssertionError("double high surrogate must be rejected")
+    except JsonParseError:
+        pass
+    # A short second escape reports the escape error, not a pair error.
+    try:
+        json_parse('"\\uD83D\\uDE"')
+        raise AssertionError("short low escape must be rejected")
+    except JsonParseError as e:
+        assert "bad \\u escape" in e.msg or "short" in e.msg, e.msg
+    assert json_parse('"\\uFFFD"') == "�"
+
+
+def t_hetero_unparseable_override_warns_once():
+    # rust: tests/cal_override.rs (warn-once leg) — an override that is
+    # set but does not parse keeps the default and warns ONCE per
+    # variable per config load.
+    _clear_hw_env()
+    cal_warn_reset()
+    key_x = cal_key()
+    try:
+        os.environ["PLX_HW_IB_BW"] = "25GB"
+        os.environ["PLX_CAL_EFF_BASE"] = "fast"
+        hw_bad = hardware_from_overrides(A100)
+        assert hw_bits(hw_bad) == hw_bits(A100), \
+            "unparseable PLX_HW_* must keep the preset value"
+        assert cal_warn_count() == 1, "one warning for the one bad HW var"
+        hardware_from_overrides(A100)
+        assert cal_warn_count() == 1, "a second config load must not warn again"
+        assert cal_key() == key_x, \
+            "unparseable PLX_CAL_* keeps the default calibration"
+        assert cal_warn_count() == 2, "the CAL var warns on its first read"
+        cal_warn_reset()
+        hardware_from_overrides(A100)
+        assert cal_warn_count() == 1, "reset re-arms the per-config-load warning"
+    finally:
+        _clear_hw_env()
+        cal_warn_reset()
+
+
+def t_hetero_all_equal_property_holds_under_overrides():
+    # rust: tests/cal_override.rs (hetero leg) — the all-equal reduction
+    # property under LIVE PLX_HW_*/PLX_CAL_* overrides:
+    # HwAssignment.from_overrides runs the same per-field hook on every
+    # segment, so the all-bits-equal delegation still fires.
+    _clear_hw_env()
+    cal_warn_reset()
+    job = Job(preset("llama13b"), Cluster.dgx_a100(8), 2048)
+    v = validate(job, Layout(2, 2, 1, False, FLASH2, False))
+    try:
+        os.environ["PLX_HW_IB_BW"] = "40e9"
+        os.environ["PLX_CAL_EFF_BASE"] = "0.80"
+        hwa = HwAssignment.parse("a100:4,a100:4").from_overrides()
+        hw_ov = hardware_from_overrides(A100)
+        hom_hw = hwa.as_homogeneous()
+        assert hom_hw is not None and hw_bits(hom_hw) == hw_bits(hw_ov), \
+            "all-equal assignment under overrides must still read as homogeneous"
+        hws = hwa.stage_hardwares(v.layout.pp)
+        het = evaluate_assigned(job, v, hws)
+        hom = evaluate(job, v, hw_ov)
+        assert het.kind == hom.kind == "ok"
+        assert _bits(het.step_time_s) == _bits(hom.step_time_s), \
+            "all-equal assignment diverged under overrides"
+        assert _bits(het.mfu) == _bits(hom.mfu)
+        assert _bits(step_time_lower_bound_assigned(job, v, hws)) == \
+            _bits(step_time_lower_bound(job, v, hw_ov)), \
+            "assigned bound diverged under overrides"
+        assert _bits(mfu_upper_bound_assigned(job, v, hws)) == \
+            _bits(mfu_upper_bound(job, v, hw_ov)), \
+            "assigned MFU bound diverged under overrides"
+    finally:
+        _clear_hw_env()
+        cal_warn_reset()
+
+
+def t_hetero_table2_mi250x_renders_distinctly():
+    # The fixture's sanity half (the byte gate is CI's diff of
+    # gen_golden.py --hw mi250x output against the committed fixture):
+    # the MI250X table renders, differs from both existing tables, and
+    # keeps the external baselines untouched.
+    ta, tm = table2_render(A100), table2_render(MI250X)
+    assert tm.startswith("# Table 2"), tm[:40]
+    assert ta != tm and table2_render(H100) != tm
+    rows_a = table2_rows(A100)
+    for r in table2_rows(MI250X):
+        if "†" in r[0] or r[0].startswith("MPT") or "DeepSpeed" in r[0]:
+            ref = next(x for x in rows_a if x[0] == r[0])
+            assert _bits(r[4]) == _bits(ref[4]), f"{r[0]} must not depend on --hw"
+
+
+HETERO_CHECKS = [
+    ("cluster::mi250x_constants_bit_exact", t_hetero_mi250x_constants_bit_exact),
+    ("cluster::hw_assignment_parses_and_labels", t_hetero_assignment_parses_and_labels),
+    ("cluster::hw_assignment_stage_mapping_is_proportional",
+     t_hetero_assignment_stage_mapping_proportional),
+    ("sim::all_equal_assignment_is_bitwise_identical_to_homogeneous",
+     t_hetero_all_equal_bitwise_identical_to_homogeneous),
+    ("sim::hetero_lower_bound_is_admissible_bitwise",
+     t_hetero_lower_bound_admissible_bitwise),
+    ("sim::slow_silicon_stage_drags_the_assignment",
+     t_hetero_slow_stage_drags_the_assignment),
+    ("failure::assigned_failure_model_is_the_weakest_node",
+     t_hetero_failure_model_is_weakest_node),
+    ("argmax::assigned_scan_is_lossless_and_homogeneous_reduces_exactly",
+     t_hetero_assigned_scan_lossless_and_reduces),
+    ("argmax::placement_search_covers_unique_orders_and_never_loses",
+     t_hetero_placement_search_covers_unique_orders),
+    ("engine::assigned_sweep_homogeneous_delegates_and_mixed_diverges",
+     t_hetero_sweep_homogeneous_delegates_mixed_diverges),
+    ("planner::assigned_plan_reduces_homogeneous_and_places_mixed_fleets",
+     t_hetero_plan_reduces_and_places_mixed_fleets),
+    ("planner::assigned_replan_reduces_homogeneous_and_handles_mixed",
+     t_hetero_replan_reduces_and_handles_mixed),
+    ("serve::hw_map_requests_take_the_assignment_axis",
+     t_hetero_serve_hw_map_takes_assignment_axis),
+    ("json::surrogate_pairs_decode_and_unpaired_halves_are_rejected",
+     t_hetero_json_surrogates_decode_and_reject),
+    ("cal_override::unparseable_override_warns_once_per_config_load",
+     t_hetero_unparseable_override_warns_once),
+    ("cal_override::all_equal_assignment_reduces_under_live_overrides",
+     t_hetero_all_equal_property_holds_under_overrides),
+    ("table2::mi250x_renders_distinct_with_stable_baselines",
+     t_hetero_table2_mi250x_renders_distinctly),
 ]
 
 
@@ -3017,6 +3589,10 @@ def main():
     for name, fn in FAILURE_CHECKS:
         check(name, fn)
     print(f"PASS {len(PASS) - stress_pass} / {len(FAILURE_CHECKS)} (failure suite)")
+    failure_pass = len(PASS)
+    for name, fn in HETERO_CHECKS:
+        check(name, fn)
+    print(f"PASS {len(PASS) - failure_pass} / {len(HETERO_CHECKS)} (hetero suite)")
     for name, msg in FAIL:
         print(f"FAIL {name}\n     {msg}")
     return 1 if FAIL else 0

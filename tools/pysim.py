@@ -136,9 +136,12 @@ A100 = Hardware(312e12, 80.0 * 1e9, 1.55e12, 250e9, 25e9, 20e-6, 4.5e-6, 5.0 * 1
                 30000.0, 2.0e9)
 H100 = Hardware(989.4e12, 80.0 * 1e9, 2.6e12, 450e9, 50e9, 20e-6, 4.5e-6, 5.0 * 1e9,
                 30000.0, 2.0e9)
+# Frontier MI250X at GCD granularity (Dash et al., arXiv 2312.12705).
+MI250X = Hardware(191e12, 64.0 * 1e9, 1.3e12, 100e9, 12.5e9, 20e-6, 4.5e-6, 5.0 * 1e9,
+                  30000.0, 2.0e9)
 
 # Mirrors rust/src/sim/cluster.rs::HW_PRESETS — the `--hw` registry.
-HW_PRESETS = (("a100", A100), ("h100", H100))
+HW_PRESETS = (("a100", A100), ("h100", H100), ("mi250x", MI250X))
 
 HW_FIELDS = ("peak_matmul_flops", "hbm_bytes", "hbm_bw", "nvlink_bw", "ib_bw",
              "coll_latency_s", "launch_overhead_s", "workspace_bytes",
@@ -165,6 +168,128 @@ def hardware_from_overrides(base):
     PLX_HW_* per-field env overrides (identity with a clean env)."""
     return Hardware(*(cal("PLX_HW_" + f.upper(), getattr(base, f))
                       for f in HW_FIELDS))
+
+
+def hw_preset_names():
+    # Mirrors rust/src/sim/cluster.rs::hw_preset_names.
+    return ", ".join(n for n, _ in HW_PRESETS)
+
+
+def parse_hw(name):
+    """Mirrors rust/src/sim/cluster.rs::parse_hw: hw_preset with the
+    clean CLI error. Raises ValueError on unknown names."""
+    hw = hw_preset(name)
+    if hw is None:
+        raise ValueError(
+            f"unknown hardware '{name}' (known presets: {hw_preset_names()})")
+    return hw
+
+
+class HwAssignment:
+    """Mirrors rust/src/sim/cluster.rs::HwAssignment: a per-pipeline-stage
+    hardware assignment as ordered (name, hardware, count) segments.
+    Stage s of a pp-stage pipeline maps to the segment containing slot
+    floor(s*total/pp); a single count-1 segment is the homogeneous
+    assignment and as_homogeneous() keys the delegation on hw_bits."""
+
+    def __init__(self, segments):
+        self.segments = list(segments)
+
+    @staticmethod
+    def homogeneous(name, hw):
+        return HwAssignment([(name, hw, 1)])
+
+    @staticmethod
+    def parse(spec):
+        segments = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                raise ValueError(
+                    f"empty segment in hardware assignment '{spec}'")
+            if ":" in part:
+                name, c = part.split(":", 1)
+                # Rust's usize FromStr: digits with an optional leading
+                # '+' — no whitespace, sign, or underscore liberties.
+                digits = c[1:] if c.startswith("+") else c
+                if not digits or not digits.isascii() or not digits.isdigit():
+                    raise ValueError(
+                        f"bad stage count '{c}' in hardware assignment '{spec}'")
+                count = int(digits)
+            else:
+                name, count = part, 1
+            if count == 0:
+                raise ValueError(
+                    f"zero stage count in hardware assignment '{spec}'")
+            segments.append((name, parse_hw(name), count))
+        if not segments:
+            raise ValueError(f"empty hardware assignment '{spec}'")
+        return HwAssignment(segments)
+
+    def from_overrides(self):
+        return HwAssignment([(n, hardware_from_overrides(hw), c)
+                             for n, hw, c in self.segments])
+
+    def total_slots(self):
+        return sum(c for _, _, c in self.segments)
+
+    def as_homogeneous(self):
+        first = self.segments[0][1]
+        fb = hw_bits(first)
+        if all(hw_bits(hw) == fb for _, hw, _ in self.segments):
+            return first
+        return None
+
+    def stage_hw(self, s, pp):
+        total = self.total_slots()
+        idx = s * total // pp
+        cum = 0
+        for _, hw, c in self.segments:
+            cum += c
+            if idx < cum:
+                return hw
+        return self.segments[-1][1]
+
+    def stage_hardwares(self, pp):
+        return [self.stage_hw(s, pp) for s in range(pp)]
+
+    def label(self):
+        if len(self.segments) == 1 and self.segments[0][2] == 1:
+            return self.segments[0][0]
+        return ",".join(f"{n}:{c}" for n, _, c in self.segments)
+
+    def permuted(self, order):
+        return HwAssignment([self.segments[i] for i in order])
+
+    @staticmethod
+    def parse_list(spec):
+        """Mirrors HwAssignment::parse_list: split a compare-style comma
+        list into assignment entries — consecutive name:count tokens
+        merge into one heterogeneous entry, bare names stand alone."""
+        specs = []
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                raise ValueError(f"empty segment in hardware list '{spec}'")
+            if ":" in tok and specs and ":" in specs[-1]:
+                specs[-1] = specs[-1] + "," + tok
+                continue
+            specs.append(tok)
+        return [HwAssignment.parse(s) for s in specs]
+
+
+def assigned_peak_mean(hws):
+    """Mirrors rust/src/sim/cluster.rs::assigned_peak_mean: the
+    heterogeneous MFU denominator. An all-bit-equal vector returns the
+    common value directly so the homogeneous delegation stays bitwise."""
+    p0 = hws[0].peak_matmul_flops
+    b0 = struct.pack("<d", p0)
+    if all(struct.pack("<d", h.peak_matmul_flops) == b0 for h in hws):
+        return p0
+    total = 0.0
+    for h in hws:
+        total += h.peak_matmul_flops
+    return total / float(len(hws))
 
 
 def allreduce_time(bytes_, n, bw, latency):
@@ -215,14 +340,35 @@ KERNEL_PERF = {
 }
 
 
+# Mirrors rust/src/sim/kernels.rs::CAL_WARNED: variables that already
+# warned about an unparseable value since the last cal_warn_reset().
+_CAL_WARNED = []
+
+
+def cal_warn_reset():
+    # Mirrors rust/src/sim/kernels.rs::cal_warn_reset.
+    del _CAL_WARNED[:]
+
+
+def cal_warn_count():
+    # Mirrors rust/src/sim/kernels.rs::cal_warn_count.
+    return len(_CAL_WARNED)
+
+
 def cal(name, default):
     # Mirrors rust/src/sim/kernels.rs::cal: env override, else default.
+    # A set-but-unparseable variable keeps the default and warns once
+    # per variable per config load (cal_warn_reset re-arms).
     val = os.environ.get(name)
     if val is None:
         return default
     try:
         return float(val)
     except ValueError:
+        if name not in _CAL_WARNED:
+            print(f"plx: warning: {name}='{val}' is not a number; using default",
+                  file=sys.stderr)
+            _CAL_WARNED.append(name)
         return default
 
 
@@ -472,6 +618,99 @@ def makespan_fast(pp, vst, m, scheds, fwd_cost, bwd_cost, head_fwd, head_bwd, p2
         p = queue[qi]
         qi += 1
         sched = scheds[p]
+        while True:
+            if pos[p] >= len(sched):
+                queued[p] = False
+                break
+            kind, i, c = sched[pos[p]]
+            vs = c * pp + p
+            if kind == F:
+                if vs == 0:
+                    dep = 0.0
+                    cross = False
+                else:
+                    t = fwd_t[(vs - 1) * m + i]
+                    if t is None:
+                        queued[p] = False
+                        break
+                    dep = t
+                    cross = (vs - 1) % pp != p
+                cost = (fwd_cost
+                        + (head_fwd if vs == nvs - 1 else 0.0)
+                        + (p2p if cross else 0.0))
+            else:
+                own = fwd_t[vs * m + i]
+                if own is None:
+                    queued[p] = False
+                    break
+                if vs == nvs - 1:
+                    dep = own
+                    cross = False
+                else:
+                    t = bwd_t[(vs + 1) * m + i]
+                    if t is None:
+                        queued[p] = False
+                        break
+                    dep = own if own > t else t
+                    cross = (vs + 1) % pp != p
+                cost = (bwd_cost
+                        + (head_bwd if vs == nvs - 1 else 0.0)
+                        + (p2p if cross else 0.0))
+            start = free[p] if free[p] > dep else dep
+            fin = start + cost
+            if kind == F:
+                fwd_t[vs * m + i] = fin
+                if vs + 1 < nvs:
+                    q = (vs + 1) % pp
+                    if q != p and not queued[q]:
+                        queue.append(q)
+                        queued[q] = True
+            else:
+                bwd_t[vs * m + i] = fin
+                if vs > 0:
+                    q = (vs - 1) % pp
+                    if q != p and not queued[q]:
+                        queue.append(q)
+                        queued[q] = True
+            free[p] = fin
+            busy[p] += cost
+            pos[p] += 1
+            done += 1
+    if done < total_ops:
+        return None
+    total = 0.0
+    for t in free:
+        if t > total:
+            total = t
+    return total, busy
+
+
+def makespan_stages(pp, vst, m, scheds, cs):
+    """Heterogeneous execution, mirroring
+    rust/src/sim/schedule/makespan.rs::makespan_stages /
+    makespan_artifact_stages: physical stage p's ops are priced from
+    cs[p] = (fwd, bwd, head_fwd, head_bwd, p2p). Same ready-propagation
+    body as makespan_fast — with all-equal cs the result is
+    bit-identical to the uniform executor."""
+    assert len(cs) == pp, "one OpCosts per physical stage"
+    nvs = pp * vst
+    fwd_t = [None] * (nvs * m)
+    bwd_t = [None] * (nvs * m)
+    pos = [0] * pp
+    free = [0.0] * pp
+    busy = [0.0] * pp
+    total_ops = 0
+    for s in scheds:
+        total_ops += len(s)
+    queue = list(range(pp))
+    queued = [True] * pp
+    qi = 0
+    done = 0
+    while qi < len(queue):
+        p = queue[qi]
+        qi += 1
+        sched = scheds[p]
+        fwd_cost, bwd_cost, head_fwd, head_bwd, p2p = cs[p]
         while True:
             if pos[p] >= len(sched):
                 queued[p] = False
@@ -799,6 +1038,68 @@ def per_gpu_memory_combine(job, v, hw, acts, acts_full):
 
     return MemoryBreakdown(weights, grads, optimizer, activations, logits,
                            hw.workspace_bytes)
+
+
+def per_gpu_memory_stage(job, v, hw, acts, acts_full, s):
+    """One pipeline stage's memory breakdown (mirrors
+    rust/src/sim/memory.rs::per_gpu_memory_stage): statics are
+    stage-independent, activations follow stage s's own in-flight peak,
+    logits live on the head stage only, the ckpt recompute working set
+    is charged on stage 0, and workspace comes from the stage's own
+    hardware."""
+    a = job.arch
+    l = v.layout
+    n = float(a.param_count())
+    shard = n / float(l.tp * l.pp)
+
+    weights = 2.0 * shard
+    grads = 2.0 * shard
+    optimizer = 12.0 * shard / float(v.topo.dp)
+
+    vst = sched_vstages(l.sched)
+    layers_per_chunk = float(a.layers // (l.pp * vst))
+    in_flight = float(peak_in_flight(sched_ops(l.sched, s, l.pp, v.num_micro)))
+    activations = acts * layers_per_chunk * in_flight
+    if l.ckpt and s == 0:
+        activations += acts_full
+
+    if s == l.pp - 1:
+        logits = 2.0 * 4.0 * float(l.mb * a.seq * a.vocab) / float(l.tp)
+    else:
+        logits = 0.0
+
+    return MemoryBreakdown(weights, grads, optimizer, activations, logits,
+                           hw.workspace_bytes)
+
+
+def per_gpu_memory_assigned(job, v, hws, acts, acts_full):
+    """Per-stage capacity check for a heterogeneous assignment (mirrors
+    rust/src/sim/memory.rs::per_gpu_memory_assigned_with). Returns
+    (mem, None) with the heaviest-activation stage's breakdown
+    (keep-first strict-> argmax over activations + logits) when every
+    stage fits, else (None, (required, budget)) of the worst offender
+    (keep-first largest total among stages exceeding their own HBM)."""
+    assert len(hws) == v.layout.pp, "one Hardware per pipeline stage"
+    report = per_gpu_memory_stage(job, v, hws[0], acts, acts_full, 0)
+    report_metric = report.activations + report.logits
+    oom = None
+    for s, hw in enumerate(hws):
+        if s == 0:
+            mem = report
+        else:
+            mem = per_gpu_memory_stage(job, v, hw, acts, acts_full, s)
+        metric = mem.activations + mem.logits
+        if metric > report_metric:
+            report = mem
+            report_metric = metric
+        total = mem.total()
+        if total > hw.hbm_bytes:
+            worse = total > oom[0] if oom is not None else True
+            if worse:
+                oom = (total, hw.hbm_bytes)
+    if oom is not None:
+        return None, oom
+    return report, None
 
 
 def fits(job, v, hw):
@@ -1132,6 +1433,106 @@ def step_time(job, v, hw):
 
     return StepBreakdown(compute, tp_comm, pp_comm, bubble, dp_comm, optimizer)
 
+
+def stage_costs_assigned(job, v, hws):
+    """Mirrors rust/src/sim/step_time.rs::stage_costs_assigned: stage
+    p's costs priced on hws[p] (one memoized layer_costs entry per
+    distinct hardware)."""
+    return [combine_layer_costs(layer_costs(job, v, hw), job, v) for hw in hws]
+
+
+def step_time_assigned(job, v, hws):
+    """step_time for a per-stage hardware assignment (mirrors
+    rust/src/sim/step_time.rs::step_time_assigned_with +
+    finish_breakdown_assigned): the heterogeneous makespan executor,
+    bottleneck attribution over the straggler stage's own costs, and the
+    schedule-independent closing terms charged at their slowest stage
+    (keep-first strict-> folds, so all-equal inputs reproduce the
+    homogeneous expressions bitwise)."""
+    assert len(hws) == v.layout.pp, "one Hardware per pipeline stage"
+    l = v.layout
+    m = v.num_micro
+    vst = sched_vstages(l.sched)
+    cs = stage_costs_assigned(job, v, hws)
+    costs = [(chunk_fwd + tp_chunk, chunk_bwd + tp_chunk, head_fwd, head_bwd,
+              p2p_hop)
+             for chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop
+             in cs]
+    scheds = [sched_ops(l.sched, p, l.pp, m) for p in range(l.pp)]
+    ms = makespan_stages(l.pp, vst, m, scheds, costs)
+    assert ms is not None, "validated schedule deadlocked"
+    total, busy = ms
+
+    b = 0
+    for p in range(1, l.pp):
+        if busy[p] > busy[b]:
+            b = p
+    chunk_fwd, chunk_bwd, head_fwd, head_bwd, tp_chunk, p2p_hop = cs[b]
+
+    comp_micro = float(vst) * (chunk_fwd + chunk_bwd)
+    if b == l.pp - 1:
+        comp_micro += head_fwd + head_bwd
+    tp_micro = 2.0 * float(vst) * tp_chunk
+    if l.pp > 1:
+        nf = vst if b > 0 else vst - 1
+        nb = vst if b < l.pp - 1 else vst - 1
+        pp_micro = float(nf + nb) * p2p_hop
+    else:
+        pp_micro = 0.0
+
+    compute = float(m) * comp_micro
+    tp_comm = float(m) * tp_micro
+    pp_comm = float(m) * pp_micro
+    bubble = total - busy[b]
+
+    dp_comm, optimizer = _dp_and_optimizer(job, v, hws[0])
+    for hw in hws[1:]:
+        d, o = _dp_and_optimizer(job, v, hw)
+        if d > dp_comm:
+            dp_comm = d
+        if o > optimizer:
+            optimizer = o
+
+    return StepBreakdown(compute, tp_comm, pp_comm, bubble, dp_comm, optimizer)
+
+
+def step_time_lower_bound_assigned(job, v, hws):
+    """Admissible lower bound on step_time_assigned(...).total()
+    (mirrors rust/src/sim/step_time.rs::step_time_lower_bound_assigned):
+    every closed-form term at its per-stage minimum-cost hardware,
+    keep-first strict-< folds, partial sums associated like the
+    homogeneous bound — with an all-equal assignment every expression
+    reduces to step_time_lower_bound's."""
+    cs = stage_costs_assigned(job, v, hws)
+    vst = sched_vstages(v.layout.sched)
+    comp_min = cs[0][0] + cs[0][1]
+    tp_min = cs[0][4]
+    for c in cs[1:]:
+        comp = c[0] + c[1]
+        if comp < comp_min:
+            comp_min = comp
+        if c[4] < tp_min:
+            tp_min = c[4]
+    comp_micro = float(vst) * comp_min
+    compute = float(v.num_micro) * comp_micro
+    tp_micro = 2.0 * float(vst) * tp_min
+    tp_comm = float(v.num_micro) * tp_micro
+    dp_min, opt_min = _dp_and_optimizer(job, v, hws[0])
+    for hw in hws[1:]:
+        d, o = _dp_and_optimizer(job, v, hw)
+        if d < dp_min:
+            dp_min = d
+        if o < opt_min:
+            opt_min = o
+    return compute + tp_comm + dp_min + opt_min
+
+
+def mfu_upper_bound_assigned(job, v, hws):
+    # Mirrors rust/src/sim/mod.rs::mfu_upper_bound_assigned: the
+    # assigned step-time bound through the fleet-mean-peak MFU.
+    return mfu(job.arch, job.gbs, v.topo.world(), assigned_peak_mean(hws),
+               step_time_lower_bound_assigned(job, v, hws))
+
 # ---------------------------------------------------------------- sim/mfu
 
 def mfu(arch, gbs, world, peak, step_time_s):
@@ -1218,6 +1619,39 @@ def _evaluate_uncached(job, v, hw):
     step = step_time(job, v, hw)
     t = step.total()
     m = mfu(job.arch, job.gbs, v.topo.world(), hw.peak_matmul_flops, t)
+    return Outcome("ok", step_time_s=t, mfu=m, mem=mem, step=step)
+
+
+def evaluate_with_assignment(job, v, hwa):
+    """Mirrors rust/src/sim/mod.rs::evaluate_with_assignment: a
+    homogeneous assignment delegates to evaluate (the untouched legacy
+    path, memo included); a heterogeneous one runs evaluate_assigned on
+    the stage-mapped hardware vector."""
+    hw = hwa.as_homogeneous()
+    if hw is not None:
+        return evaluate(job, v, hw)
+    return evaluate_assigned(job, v, hwa.stage_hardwares(v.layout.pp))
+
+
+def evaluate_assigned(job, v, hws):
+    """The heterogeneous evaluation core (mirrors
+    rust/src/sim/mod.rs::evaluate_assigned): per-stage layer costs,
+    per-stage memory capacity checks, the heterogeneous makespan
+    executor, and the fleet-mean peak in the MFU denominator. Not
+    routed through the evaluate-outcome memo (its key is a single
+    hardware's bits); the layer-cost stage memo still shares."""
+    if not kernel_available(v.layout.kernel, job.arch.heads, v.layout.tp, v.layout.mb):
+        return Outcome("unavail")
+    # Activation bytes are hardware-independent; read them off stage 0's
+    # layer-cost entry (memoized like every other stage lookup).
+    lc = layer_costs(job, v, hws[0])
+    mem, oom = per_gpu_memory_assigned(job, v, hws, lc.act_bytes, lc.act_bytes_full)
+    if oom is not None:
+        required, budget = oom
+        return Outcome("oom", required=required, budget=budget)
+    step = step_time_assigned(job, v, hws)
+    t = step.total()
+    m = mfu(job.arch, job.gbs, v.topo.world(), assigned_peak_mean(hws), t)
     return Outcome("ok", step_time_s=t, mfu=m, mem=mem, step=step)
 
 
@@ -1394,6 +1828,30 @@ def run(preset_, hw):
     rows = [Row(v, evaluate(job, v, hw)) for v in layouts]
     return SweepResult(preset_.name, job, rows)
 
+
+def run_jobs_assigned(preset_, hwa):
+    """Mirrors rust/src/sweep/engine.rs::run_jobs_assigned: a
+    homogeneous assignment delegates to the legacy single-hardware
+    sweep (same rows, same bits); a mixed one evaluates every layout
+    with evaluate_assigned on its own stage-hardware vector."""
+    hw = hwa.as_homogeneous()
+    if hw is not None:
+        return run(preset_, hw)
+    job = preset_.job()
+    layouts = enumerate_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
+                                preset_.ckpts, preset_.kernels, preset_.sps,
+                                preset_.scheds)
+    rows = [Row(v, evaluate_assigned(job, v, hwa.stage_hardwares(v.layout.pp)))
+            for v in layouts]
+    return SweepResult(preset_.name, job, rows)
+
+
+def run_compare_assigned(preset_, entries):
+    """Mirrors rust/src/sweep/engine.rs::run_compare_assigned: one
+    labeled sweep per assignment entry (homogeneous entries delegate
+    inside run_jobs_assigned)."""
+    return [(name, run_jobs_assigned(preset_, hwa)) for name, hwa in entries]
+
 # ---------------------------------------------------------------- sweep/argmax
 
 # Mirror of rust/src/sweep/argmax.rs: bound-driven argmax queries over a
@@ -1534,6 +1992,145 @@ def _argmax_core(job, layouts, hw, pred, tie, bound, score):
     return best, QueryStats(total, gated, memp, boundp, evaluated)
 
 
+def argmax_ranked_assigned(job, layouts, hwa, pred, tie, rank):
+    """argmax_ranked over a per-stage hardware assignment (mirrors
+    rust/src/sweep/argmax.rs::argmax_ranked_assigned): a homogeneous
+    assignment takes the legacy scan verbatim; a mixed one runs the
+    same windowed fold with the assignment-aware (bound, score) pair."""
+    hw = hwa.as_homogeneous()
+    if hw is not None:
+        return argmax_ranked(job, layouts, hw, pred, tie, rank)
+    if rank == RANK_MFU:
+        return _argmax_core_assigned(job, layouts, hwa, pred, tie,
+                                     mfu_upper_bound_assigned,
+                                     lambda _j, _v, _h, m: m)
+    return _argmax_core_assigned(job, layouts, hwa, pred, tie,
+                                 effective_mfu_upper_bound_assigned,
+                                 effective_mfu_assigned)
+
+
+def _argmax_core_assigned(job, layouts, hwa, pred, tie, bound, score):
+    """The assignment-aware twin of _argmax_core
+    (argmax.rs::argmax_core_assigned): the identical windowed fold with
+    per-layout stage hardware vectors (pp varies per layout). The
+    memory prune checks every stage's own HBM; the lossless-scan
+    argument holds verbatim."""
+    best = None
+    total = gated = memp = boundp = evaluated = 0
+    window = []
+
+    def flush(best):
+        for w in window:
+            o = evaluate_assigned(job, w, hwa.stage_hardwares(w.layout.pp))
+            if o.kind == "ok":
+                hws = hwa.stage_hardwares(w.layout.pp)
+                s = score(job, w, hws, o.mfu)
+                if best is None:
+                    wins = True
+                elif tie == TIE_KEEP_FIRST:
+                    wins = s > best.score
+                else:
+                    wins = total_cmp_key(s) >= total_cmp_key(best.score)
+                if wins:
+                    best = Best(w, o.mfu, o.step_time_s, s)
+        window.clear()
+        return best
+
+    for v in layouts:
+        if not pred(v):
+            continue
+        total += 1
+        l = v.layout
+        if not kernel_available(l.kernel, job.arch.heads, l.tp, l.mb):
+            gated += 1
+            continue
+        hws = hwa.stage_hardwares(l.pp)
+        if any(model_state_bytes(job, v, hw) > hw.hbm_bytes for hw in hws):
+            memp += 1
+            continue
+        if best is not None:
+            ub = bound(job, v, hws)
+            dominated = (ub <= best.score if tie == TIE_KEEP_FIRST
+                         else ub < best.score)
+            if dominated:
+                boundp += 1
+                continue
+        evaluated += 1
+        window.append(v)
+        if len(window) >= PRUNE_WINDOW:
+            best = flush(best)
+    best = flush(best)
+    return best, QueryStats(total, gated, memp, boundp, evaluated)
+
+
+def placements(hwa):
+    """Mirrors rust/src/sweep/argmax.rs::placements: every unique
+    reordering of the assignment's segments, lexicographic
+    next_permutation walk from the identity with first-occurrence dedup
+    by label. A homogeneous or single-segment assignment has exactly
+    one placement: itself."""
+    k = len(hwa.segments)
+    if k <= 1 or hwa.as_homogeneous() is not None:
+        return [hwa]
+    order = list(range(k))
+    seen = []
+    out = []
+    while True:
+        candidate = hwa.permuted(order)
+        label = candidate.label()
+        if label not in seen:
+            seen.append(label)
+            out.append(candidate)
+        i = None
+        for j in range(k - 2, -1, -1):
+            if order[j] < order[j + 1]:
+                i = j
+                break
+        if i is None:
+            break
+        j = next(j for j in range(k - 1, i, -1) if order[j] > order[i])
+        order[i], order[j] = order[j], order[i]
+        order[i + 1:] = reversed(order[i + 1:])
+    return out
+
+
+def argmax_placed(job, space, hwa, pred, tie, rank):
+    """Placement search (argmax.rs::argmax_placed): the assigned argmax
+    once per unique segment reordering, keep-first strict-> over the
+    placement walk (the user-spelled order wins ties). `space` is a
+    zero-argument callable yielding a fresh layout stream."""
+    winner = None
+    total = gated = memp = boundp = evaluated = 0
+    for placement in placements(hwa):
+        best, st = argmax_ranked_assigned(job, space(), placement, pred, tie,
+                                          rank)
+        total += st.total
+        gated += st.gate_pruned
+        memp += st.mem_pruned
+        boundp += st.bound_pruned
+        evaluated += st.evaluated
+        if best is not None:
+            if winner is None or best.score > winner[1].score:
+                winner = (placement, best)
+    return winner, QueryStats(total, gated, memp, boundp, evaluated)
+
+
+def compare_best_assigned(preset_, entries, rank):
+    """compare_best_ranked where each entry is a per-stage assignment
+    (argmax.rs::compare_best_assigned) — homogeneous entries reduce to
+    the legacy per-hardware scan inside argmax_ranked_assigned."""
+    job = preset_.job()
+    out = []
+    for name, hwa in entries:
+        layouts = iter_layouts(job, preset_.tps, preset_.pps, preset_.mbs,
+                               preset_.ckpts, preset_.kernels, preset_.sps,
+                               preset_.scheds)
+        best, _ = argmax_ranked_assigned(job, layouts, hwa,
+                                         lambda _v: True, TIE_KEEP_LAST, rank)
+        out.append((name, best))
+    return out
+
+
 def compare_best(preset_, hws):
     """Per-hardware winners for `plx compare` through the pruned argmax
     (mirrors rust/src/sweep/argmax.rs::compare_best) — no full sweep
@@ -1640,6 +2237,31 @@ def report_render_top_ranked(result, with_sp_column, top, hw, rank):
     column after `MFU`."""
     if rank == RANK_MFU:
         return report_render_top(result, with_sp_column, top)
+    return _report_render_top_effective(
+        result, with_sp_column, top,
+        lambda r, m: effective_mfu(result.job, r.v, hw, m))
+
+
+def report_render_top_ranked_assigned(result, with_sp_column, top, hwa, rank):
+    """Mirrors rust/src/sweep/report.rs::render_top_ranked_assigned:
+    homogeneous assignments render through the legacy body (same bytes);
+    a mixed assignment scores each runnable row with the weakest-node
+    effective MFU of its own per-stage hardware vector."""
+    if rank == RANK_MFU:
+        return report_render_top(result, with_sp_column, top)
+    hw = hwa.as_homogeneous()
+    if hw is not None:
+        return report_render_top_ranked(result, with_sp_column, top, hw, rank)
+    return _report_render_top_effective(
+        result, with_sp_column, top,
+        lambda r, m: effective_mfu_assigned(
+            result.job, r.v, hwa.stage_hardwares(r.v.layout.pp), m))
+
+
+def _report_render_top_effective(result, with_sp_column, top, effective):
+    """The shared effective-MFU table body
+    (report.rs::render_top_effective), parameterized by the per-row
+    score."""
     with_sched_column = any(r.layout().sched != SCHED_1F1B for r in result.rows)
     headers = ["Step Time", "MFU", "Eff. MFU", "Activation", "Kernel",
                "MB", "TP", "PP"]
@@ -1652,8 +2274,7 @@ def report_render_top_ranked(result, with_sp_column, top, hw, rank):
     keyed = []
     for r in result.rows:
         if r.outcome.kind == "ok":
-            keyed.append((0, -effective_mfu(result.job, r.v, hw,
-                                            r.outcome.mfu), r))
+            keyed.append((0, -effective(r, r.outcome.mfu), r))
         elif r.outcome.kind == "oom":
             keyed.append((1, 0.0, r))
         else:
@@ -2012,6 +2633,44 @@ def exhaustive_best(job, hw, rank):
                          TIE_KEEP_FIRST, rank)
 
 
+def exhaustive_best_assigned(job, hwa, rank):
+    """exhaustive_best over a per-stage hardware assignment (mirrors
+    rust/src/planner/mod.rs::exhaustive_best_assigned): homogeneous
+    assignments reduce to the legacy scan inside the argmax engine."""
+    tps = [1 << i for i in range(4)]
+    pps = [1 << i for i in range(6)]
+    layouts = iter_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
+                           ALL_KERNELS, [False, True])
+    return argmax_ranked_assigned(job, layouts, hwa, lambda _v: True,
+                                  TIE_KEEP_FIRST, rank)
+
+
+def plan_exhaustive_stats_assigned(job, hwa, rank):
+    """`plx plan --exhaustive` over a per-stage hardware assignment with
+    placement search (mirrors
+    rust/src/planner/mod.rs::plan_exhaustive_stats_assigned): every
+    unique reordering of the assignment's segments is scanned and the
+    best-scoring placement wins (keep-first over the lexicographic
+    permutation walk, so the user-spelled order wins ties). Returns
+    (plan, placement, PruneStats)."""
+    tps = [1 << i for i in range(4)]
+    pps = [1 << i for i in range(6)]
+
+    def space():
+        return iter_layouts(job, tps, pps, [1, 2, 4, 8], [False, True],
+                            ALL_KERNELS, [False, True])
+
+    winner, q = argmax_placed(job, space, hwa, lambda _v: True,
+                              TIE_KEEP_FIRST, rank)
+    stats = PruneStats(q.total, q.gate_pruned, q.mem_pruned,
+                       q.bound_pruned, q.evaluated)
+    if winner is None:
+        raise ValueError(f"no feasible layout for {job.arch.name} on "
+                         f"{job.cluster.gpus} GPUs")
+    placement, b = winner
+    return Plan(b.v, b.mfu, b.step_time_s), placement, stats
+
+
 def plan_exhaustive(job, hw):
     return plan_exhaustive_stats(job, hw)[0]
 
@@ -2226,18 +2885,34 @@ class _JsonReader:
                 if e in simple:
                     out.append(simple[e])
                 elif e == 0x75:  # u
-                    if self.i + 4 > len(self.b):
-                        raise self.err("short \\u escape")
-                    hexs = self.b[self.i:self.i + 4]
-                    try:
-                        cp = int(hexs.decode("ascii"), 16)
-                    except (UnicodeDecodeError, ValueError):
-                        raise self.err("bad \\u escape")
-                    if any(ch in b"+- _" for ch in hexs):
-                        raise self.err("bad \\u escape")
-                    self.i += 4
-                    # char::from_u32 rejects surrogates -> U+FFFD.
-                    out.append("�" if 0xD800 <= cp <= 0xDFFF else chr(cp))
+                    # Offset of the backslash, so surrogate errors point
+                    # at the escape that broke.
+                    esc_at = self.i - 2
+                    hi = self.hex4()
+                    if 0xDC00 <= hi <= 0xDFFF:
+                        raise JsonParseError(
+                            esc_at, f"unpaired low surrogate \\u{hi:04X}")
+                    if 0xD800 <= hi <= 0xDBFF:
+                        # A high surrogate must be immediately followed
+                        # by an escaped low surrogate; the pair names one
+                        # supplementary-plane scalar (RFC 8259 §7).
+                        if (self.i + 1 >= len(self.b)
+                                or self.b[self.i] != 0x5C
+                                or self.b[self.i + 1] != 0x75):
+                            raise JsonParseError(
+                                esc_at, f"unpaired high surrogate \\u{hi:04X}")
+                        self.i += 2
+                        lo = self.hex4()
+                        if not 0xDC00 <= lo <= 0xDFFF:
+                            raise JsonParseError(
+                                esc_at,
+                                f"high surrogate \\u{hi:04X} not followed "
+                                f"by a low surrogate (got \\u{lo:04X})")
+                        out.append(chr(0x10000 + ((hi - 0xD800) << 10)
+                                       + (lo - 0xDC00)))
+                    else:
+                        # Non-surrogate BMP scalars are always chars.
+                        out.append(chr(hi))
                 else:
                     raise self.err("unknown escape")
             else:
@@ -2250,6 +2925,20 @@ class _JsonReader:
                 except UnicodeDecodeError:
                     raise self.err("invalid utf-8")
                 self.i = start2 + ln
+
+    def hex4(self):
+        """Four hex digits of a \\u escape, consumed (json.rs::hex4)."""
+        if self.i + 4 > len(self.b):
+            raise self.err("short \\u escape")
+        hexs = self.b[self.i:self.i + 4]
+        try:
+            cp = int(hexs.decode("ascii"), 16)
+        except (UnicodeDecodeError, ValueError):
+            raise self.err("bad \\u escape")
+        if any(ch in b"+- _" for ch in hexs):
+            raise self.err("bad \\u escape")
+        self.i += 4
+        return cp
 
     def number(self):
         start = self.i
@@ -2659,6 +3348,37 @@ def effective_mfu_upper_bound(job, v, hw):
     true values (failure.rs::effective_mfu_upper_bound)."""
     return (mfu_upper_bound(job, v, hw)
             * availability_upper_bound(job, v.topo.world(), hw))
+
+
+def weakest_hw(hws):
+    """Mirrors failure.rs::weakest_hw: the minimum mtbf_h and minimum
+    storage_bw across the stage hardwares (keep-first strict-< folds);
+    other fields copied from hws[0] so the result flows through the
+    unchanged homogeneous expressions."""
+    mtbf_h = hws[0].mtbf_h
+    storage_bw = hws[0].storage_bw
+    for hw in hws[1:]:
+        if hw.mtbf_h < mtbf_h:
+            mtbf_h = hw.mtbf_h
+        if hw.storage_bw < storage_bw:
+            storage_bw = hw.storage_bw
+    return replace(hws[0], mtbf_h=mtbf_h, storage_bw=storage_bw)
+
+
+def availability_of_assigned(job, v, hws):
+    # Mirrors failure.rs::availability_of_assigned.
+    return availability_of(job, v, weakest_hw(hws))
+
+
+def effective_mfu_assigned(job, v, hws, mfu_):
+    # Mirrors failure.rs::effective_mfu_assigned.
+    return mfu_ * availability_of_assigned(job, v, hws)
+
+
+def effective_mfu_upper_bound_assigned(job, v, hws):
+    # Mirrors failure.rs::effective_mfu_upper_bound_assigned.
+    return (mfu_upper_bound_assigned(job, v, hws)
+            * availability_upper_bound(job, v.topo.world(), weakest_hw(hws)))
 
 
 @dataclass
@@ -3481,6 +4201,26 @@ def render_plan_ranked(job, plan, hw, rank):
                 f" {100.0 * avail:.2f}% availability\n")
     return out
 
+
+def render_plan_assigned(job, plan, hwa, placement, rank):
+    """Mirror of rust/src/planner/mod.rs::render_plan_assigned:
+    homogeneous assignments render byte-identically through the legacy
+    path; a mixed assignment adds one `placement:` line naming the
+    winning stage-to-silicon order, and the effective-MFU line (when
+    ranked) uses the weakest-node availability of that placement."""
+    hw = hwa.as_homogeneous()
+    if hw is not None:
+        return render_plan_ranked(job, plan, hw, rank)
+    out = render_plan(job, plan)
+    out += f"  placement: {placement.label()}\n"
+    if rank == RANK_EFFECTIVE_MFU:
+        hws = placement.stage_hardwares(plan.v.layout.pp)
+        avail = availability_of_assigned(job, plan.v, hws)
+        eff = effective_mfu_assigned(job, plan.v, hws, plan.predicted_mfu)
+        out += (f"  effective: {100.0 * eff:.2f}% MFU at"
+                f" {100.0 * avail:.2f}% availability\n")
+    return out
+
 # ---------------------------------------------------------------- planner/replan
 
 @dataclass(frozen=True)
@@ -3491,6 +4231,7 @@ class ReplanReport:
     lost: int
     full: Job
     degraded: Job
+    usable_gpus: int
     old: Optional[Best]
     new: Optional[Best]
     moved_bytes: float
@@ -3503,19 +4244,59 @@ def replan(job, lost, hw, rank):
     (gpus - lost) // gpus_per_node whole nodes, and the best layout on
     it is found by the same exhaustive bound-pruned argmax as
     `plx plan --exhaustive`, under the caller's rank."""
+    return _replan_with(job, lost, hw.ib_bw,
+                        lambda j: exhaustive_best(j, hw, rank)[0])
+
+
+def replan_assigned(job, lost, hwa, rank):
+    """Mirror of rust/src/planner/mod.rs::replan_assigned: the same
+    fallback scan with the assignment-aware argmax, and the migration
+    estimate priced at the *slowest* segment's cross-node bandwidth (a
+    re-shard is only done when its slowest participant is). Homogeneous
+    assignments reduce to replan exactly."""
+    hw = hwa.as_homogeneous()
+    if hw is not None:
+        return replan(job, lost, hw, rank)
+    ib = hwa.segments[0][1].ib_bw
+    for _, seg_hw, _ in hwa.segments[1:]:
+        if seg_hw.ib_bw < ib:
+            ib = seg_hw.ib_bw
+    return _replan_with(job, lost, ib,
+                        lambda j: exhaustive_best_assigned(j, hwa, rank)[0])
+
+
+def _replan_with(job, lost, ib_bw, best_of):
+    """The shared replan orchestration (mirrors
+    rust/src/planner/mod.rs::replan_with): input validation, the
+    largest-runnable-subset fallback scan, and the migration estimate,
+    parameterized by the per-cluster argmax and migration bandwidth."""
     if lost == 0:
         raise ValueError("replan needs --lost >= 1")
     if lost >= job.cluster.gpus:
         raise ValueError(f"lost {lost} of {job.cluster.gpus} GPUs — "
                          "nothing left to plan for")
     per_node = job.cluster.gpus_per_node
-    deg_nodes = (job.cluster.gpus - lost) // per_node
-    if deg_nodes == 0:
+    usable_nodes = (job.cluster.gpus - lost) // per_node
+    if usable_nodes == 0:
         raise ValueError(f"losing {lost} GPUs leaves no whole "
                          f"{per_node}-GPU node usable")
-    degraded = Job(job.arch, Cluster(deg_nodes * per_node, per_node), job.gbs)
-    old, _ = exhaustive_best(job, hw, rank)
-    new, _ = exhaustive_best(degraded, hw, rank)
+
+    def job_on(nodes):
+        return Job(job.arch, Cluster(nodes * per_node, per_node), job.gbs)
+
+    old = best_of(job)
+    # Largest-runnable-subset fallback: the usable set first; if nothing
+    # runs there, idle one node at a time until a subset runs.
+    degraded = job_on(usable_nodes)
+    new = best_of(degraded)
+    if new is None:
+        for nodes in range(usable_nodes - 1, 0, -1):
+            cand = job_on(nodes)
+            b = best_of(cand)
+            if b is not None:
+                degraded = cand
+                new = b
+                break
     deg_gpus = degraded.cluster.gpus
     if new is not None:
         if (old is not None and old.v.layout.tp == new.v.layout.tp
@@ -3526,10 +4307,11 @@ def replan(job, lost, hw, rank):
                      * float(job.cluster.gpus - deg_gpus))
         else:
             moved = float(deg_gpus) * state_bytes_per_gpu(degraded, new.v)
-        migration = moved / (hw.ib_bw * float(deg_gpus))
+        migration = moved / (ib_bw * float(deg_gpus))
     else:
         moved, migration = 0.0, 0.0
-    return ReplanReport(lost, job, degraded, old, new, moved, migration)
+    return ReplanReport(lost, job, degraded, usable_nodes * per_node,
+                        old, new, moved, migration)
 
 
 def render_replan(rep):
@@ -3546,12 +4328,18 @@ def render_replan(rep):
                 f"  predicted {100.0 * best.mfu:.2f}% MFU,"
                 f" {best.step_time_s:.2f}s/step")
 
-    nodes = rep.degraded.cluster.gpus // rep.degraded.cluster.gpus_per_node
+    per_node = rep.degraded.cluster.gpus_per_node
     out = (f"replan for {rep.full.arch.name} after losing {rep.lost} GPUs: "
-           f"{rep.full.cluster.gpus} -> {rep.degraded.cluster.gpus} usable "
-           f"GPUs ({nodes} whole nodes, gbs {rep.full.gbs})\n"
+           f"{rep.full.cluster.gpus} -> {rep.usable_gpus} usable "
+           f"GPUs ({rep.usable_gpus // per_node} whole nodes, gbs {rep.full.gbs})\n"
            f"  was: {row(rep.old, 'no runnable layout')}\n"
-           f"  now: {row(rep.new, 'no runnable layout on the surviving cluster')}\n")
+           f"  now: {row(rep.new, 'no runnable layout on any subset of the survivors')}\n")
+    if rep.degraded.cluster.gpus < rep.usable_gpus:
+        out += (f"  fallback: running on "
+                f"{rep.degraded.cluster.gpus // per_node} of "
+                f"{rep.usable_gpus // per_node} usable nodes, "
+                f"{rep.usable_gpus - rep.degraded.cluster.gpus} "
+                f"surviving GPUs idled\n")
     if rep.new is not None:
         out += (f"  migration: {rep.moved_bytes / 1e9:.2f} GB re-sharded, "
                 f"~{rep.migration_s:.1f}s over IB\n")
@@ -3776,6 +4564,20 @@ def _serve_resolve_hw(name):
     return hardware_from_overrides(hw)
 
 
+def _serve_resolve_hw_map(req):
+    """Mirror of rust/src/serve/mod.rs::resolve_hw_map: per-stage
+    assignment resolution for plan/sweep/compare/replan — "hw_map" wins
+    over "hw", default a100. A bare preset name stays on the homogeneous
+    (bit-identical legacy) path in every consumer."""
+    spec = _serve_str(req, "hw_map")
+    if spec is None:
+        spec = _serve_str(req, "hw") or "a100"
+    try:
+        return HwAssignment.parse(spec).from_overrides()
+    except ValueError as e:
+        raise _ServeError(str(e))
+
+
 def _serve_parse_schedules(spec):
     scheds = []
     for tok in spec.split(","):
@@ -3803,8 +4605,21 @@ def _serve_plan_one(req):
     nodes = 8 if nodes is None else nodes
     gbs = _serve_usize(req, "gbs")
     gbs = Job.paper_gbs(arch) if gbs is None else gbs
-    hw = _serve_resolve_hw(_serve_str(req, "hw") or "a100")
+    hwa = _serve_resolve_hw_map(req)
     job = Job(arch, Cluster.dgx_a100(nodes), gbs)
+    hw = hwa.as_homogeneous()
+    if hw is None:
+        # Per-stage fleets are exhaustive-only (the §5 rules assume one
+        # hardware) — same constraint and renderer as the CLI.
+        if not _serve_bool(req, "exhaustive"):
+            raise _ServeError(
+                'a heterogeneous hardware assignment needs "exhaustive": true')
+        try:
+            plan, placement, _ = plan_exhaustive_stats_assigned(
+                job, hwa, RANK_MFU)
+        except ValueError as e:
+            raise _ServeError(str(e))
+        return render_plan_assigned(job, plan, hwa, placement, RANK_MFU)
     try:
         if _serve_bool(req, "exhaustive"):
             plan = plan_exhaustive_stats(job, hw)[0]
@@ -3816,7 +4631,8 @@ def _serve_plan_one(req):
 
 
 def _serve_do_plan(req):
-    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "exhaustive"])
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "hw_map",
+                            "exhaustive"])
     return _serve_plan_one(req)
 
 
@@ -3839,7 +4655,8 @@ def _serve_do_plan_batch(req):
         if not isinstance(j, dict):
             raise _ServeError(f"jobs[{i}] must be an object")
         try:
-            _serve_check_keys(j, ["model", "nodes", "gbs", "hw", "exhaustive"])
+            _serve_check_keys(j, ["model", "nodes", "gbs", "hw", "hw_map",
+                                  "exhaustive"])
             outputs.append(_serve_plan_one(j))
         except _ServeError as e:
             raise _ServeError(f"jobs[{i}]: {e}")
@@ -3895,8 +4712,8 @@ def _serve_do_replan(req):
     """Mirror of rust/src/serve/mod.rs::do_replan: `replan` over the
     wire — same renderer as `plx replan`, so response `output` bytes
     equal CLI stdout."""
-    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "lost",
-                            "rank"])
+    _serve_check_keys(req, ["cmd", "model", "nodes", "gbs", "hw", "hw_map",
+                            "lost", "rank"])
     model = _serve_need_str(req, "model")
     arch = preset(model)
     if arch is None:
@@ -3905,7 +4722,7 @@ def _serve_do_replan(req):
     nodes = 8 if nodes is None else nodes
     gbs = _serve_usize(req, "gbs")
     gbs = Job.paper_gbs(arch) if gbs is None else gbs
-    hw = _serve_resolve_hw(_serve_str(req, "hw") or "a100")
+    hwa = _serve_resolve_hw_map(req)
     r = _serve_str(req, "rank")
     if r is None:
         rank = RANK_MFU
@@ -3918,7 +4735,7 @@ def _serve_do_replan(req):
         raise _ServeError('need "lost"')
     job = Job(arch, Cluster.dgx_a100(nodes), gbs)
     try:
-        rep = replan(job, lost, hw, rank)
+        rep = replan_assigned(job, lost, hwa, rank)
     except ValueError as e:
         raise _ServeError(str(e))
     return render_replan(rep)
@@ -3981,7 +4798,7 @@ def _serve_do_simulate_run(req):
 
 
 def _serve_do_sweep(req):
-    _serve_check_keys(req, ["cmd", "preset", "hw", "schedule", "top"])
+    _serve_check_keys(req, ["cmd", "preset", "hw", "hw_map", "schedule", "top"])
     name = _serve_need_str(req, "preset")
     p = by_name(name)
     if p is None:
@@ -3989,24 +4806,38 @@ def _serve_do_sweep(req):
     spec = _serve_str(req, "schedule")
     if spec is not None:
         p = replace(p, scheds=tuple(_serve_parse_schedules(spec)))
-    hw = _serve_resolve_hw(_serve_str(req, "hw") or "a100")
+    hwa = _serve_resolve_hw_map(req)
     top = _serve_usize(req, "top")
-    result = run(p, hw)
+    # A homogeneous assignment delegates to the legacy single-hardware
+    # scan inside run_jobs_assigned — default bytes cannot move.
+    result = run_jobs_assigned(p, hwa)
     return report_render_top(result, len(p.sps) > 1, top)
 
 
 def _serve_do_compare(req):
-    _serve_check_keys(req, ["cmd", "preset", "hw"])
+    _serve_check_keys(req, ["cmd", "preset", "hw", "hw_map"])
     name = _serve_need_str(req, "preset")
     p = by_name(name)
     if p is None:
         raise _ServeError(f"unknown preset '{name}'")
-    spec = _serve_str(req, "hw") or "a100,h100"
-    hws = [(n.strip(), _serve_resolve_hw(n.strip()))
-           for n in spec.split(",") if n.strip()]
-    if not hws:
+    # Same list reading as `plx compare`: consecutive name:count tokens
+    # in "hw" form one heterogeneous entry; an explicit "hw_map" is
+    # always a single entry.
+    try:
+        spec = _serve_str(req, "hw_map")
+        if spec is not None:
+            parsed = [HwAssignment.parse(spec)]
+        else:
+            parsed = HwAssignment.parse_list(_serve_str(req, "hw")
+                                             or "a100,h100")
+    except ValueError as e:
+        raise _ServeError(str(e))
+    entries = [(hwa.label(), hwa.from_overrides()) for hwa in parsed]
+    if not entries:
         raise _ServeError('"hw" needs at least one preset name')
-    winners = compare_best(p, hws)
+    # Bound-driven winners, same as the CLI: prune instead of
+    # materializing each hardware's sweep table.
+    winners = compare_best_assigned(p, entries, RANK_MFU)
     return render_compare_best(p.name, p.job(), winners)
 
 
